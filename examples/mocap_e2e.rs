@@ -1,0 +1,44 @@
+//! END-TO-END driver (DESIGN.md deliverable): the full system on a real
+//! small workload — the Table 2 experiment.
+//!
+//! ```bash
+//! cargo run --release --example mocap_e2e            # ~minutes
+//! cargo run --release --example mocap_e2e -- --full  # paper-scale
+//! ```
+//!
+//! Exercises every layer in one run:
+//! * data pipeline: 50-d synthetic mocap, 23 sequences, 16/3/4 split;
+//! * model: latent SDE (6-d latent, first-3-frames MLP encoder, per-dim
+//!   diffusion nets) and the latent ODE ablation;
+//! * training: multi-worker Adam with KL annealing, loss curves logged to
+//!   CSV (`bench_out/table2_*_training.csv`);
+//! * inference: 50-sample posterior prediction of future frames, test MSE
+//!   with 95% CI — the Table 2 protocol.
+//!
+//! The reproduction claim is the ordering: latent SDE < latent ODE <
+//! constant baselines on held-out future-frame MSE.
+
+use sdegrad::coordinator::repro::table2;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let rows = table2::run(!full);
+
+    let mse = |name: &str| {
+        rows.iter()
+            .find(|r| r.method.contains(name))
+            .map(|r| r.test_mse)
+            .expect("row missing")
+    };
+    let sde = mse("SDE");
+    let ode = mse("ODE");
+    let hold = mse("Hold");
+    println!("\nordering check: latent SDE {sde:.4} vs latent ODE {ode:.4} vs hold {hold:.4}");
+    if sde < ode && ode < hold {
+        println!("paper's ordering REPRODUCED: SDE < ODE < baseline");
+    } else if sde < hold {
+        println!("partial: SDE beats the baselines; SDE-vs-ODE gap within noise at this scale");
+    } else {
+        println!("WARNING: ordering not reproduced at this training budget — rerun with --full");
+    }
+}

@@ -1,0 +1,101 @@
+//! The AOT bridge end-to-end: load the JAX/Pallas-lowered artifacts and
+//! run them from Rust via PJRT, cross-checking numerics and comparing
+//! throughput against the pure-Rust NN path.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example xla_runtime
+//! ```
+
+use sdegrad::latent::{LatentSdeConfig, LatentSdeModel};
+use sdegrad::metrics::timer::bench;
+use sdegrad::prng::PrngKey;
+use sdegrad::runtime::ArtifactRegistry;
+
+fn main() -> anyhow::Result<()> {
+    let mut reg = ArtifactRegistry::open("artifacts")?;
+    let m = &reg.manifest;
+    println!("loaded manifest: {} entries, n_params = {}", m.entries.len(), m.cfg["n_params"]);
+
+    // Reconstruct the exact model config the artifacts were built for.
+    let cfg = LatentSdeConfig {
+        obs_dim: m.cfg_usize("obs_dim")?,
+        latent_dim: m.cfg_usize("latent_dim")?,
+        context_dim: m.cfg_usize("context_dim")?,
+        hidden: m.cfg_usize("hidden")?,
+        diff_hidden: m.cfg_usize("diff_hidden")?,
+        enc_hidden: m.cfg_usize("enc_hidden")?,
+        ..Default::default()
+    };
+    let batch = m.cfg_usize("batch")?;
+    let model = LatentSdeModel::new(cfg);
+    anyhow::ensure!(
+        model.n_params == m.cfg_usize("n_params")?,
+        "Rust/Python layout mismatch"
+    );
+
+    // Shared inputs.
+    let params = model.init_params(PrngKey::from_seed(1));
+    let params_f32: Vec<f32> = params.iter().map(|&v| v as f32).collect();
+    let d_in = cfg.latent_dim + 1 + cfg.context_dim;
+    let mut zin = vec![0.0f64; batch * d_in];
+    PrngKey::from_seed(2).fill_normal(0, &mut zin);
+    let zin_f32: Vec<f32> = zin.iter().map(|&v| v as f32).collect();
+
+    // Numerics cross-check.
+    let exe = reg.get("post_drift_fwd")?;
+    let out = exe.call_f32(&[&params_f32, &zin_f32])?;
+    let mut cache = model.post_drift.cache();
+    let mut max_err = 0.0f64;
+    for b in 0..batch {
+        let mut want = vec![0.0f64; cfg.latent_dim];
+        model.post_drift.forward(&params, &zin[b * d_in..(b + 1) * d_in], &mut cache, &mut want);
+        for i in 0..cfg.latent_dim {
+            max_err = max_err.max((out[0][b * cfg.latent_dim + i] as f64 - want[i]).abs());
+        }
+    }
+    println!("XLA vs Rust-NN posterior drift: max |Δ| = {max_err:.2e} over {batch}×{} outputs", cfg.latent_dim);
+    anyhow::ensure!(max_err < 1e-4, "numerics mismatch");
+
+    // Throughput: batched XLA artifact vs per-row Rust NN.
+    let stats_xla = bench(3, 30, || {
+        let out = exe.call_f32(&[&params_f32, &zin_f32]).unwrap();
+        out[0][0] as f64
+    });
+    let mut sink = vec![0.0f64; cfg.latent_dim];
+    let stats_rust = bench(3, 30, || {
+        let mut acc = 0.0;
+        for b in 0..batch {
+            model.post_drift.forward(&params, &zin[b * d_in..(b + 1) * d_in], &mut cache, &mut sink);
+            acc += sink[0];
+        }
+        acc
+    });
+    println!(
+        "drift eval, batch {batch}: XLA artifact {:.1} µs/call, Rust NN {:.1} µs/batch",
+        stats_xla.mean() * 1e6,
+        stats_rust.mean() * 1e6
+    );
+
+    // Fused Euler step artifact (the training hot step).
+    let dz = cfg.latent_dim;
+    let step = reg.get("elbo_euler_step")?;
+    let z = vec![0.1f32; batch * dz];
+    let l = vec![0.0f32; batch];
+    let t = [0.0f32];
+    let dt = [0.01f32];
+    let ctx = vec![0.0f32; batch * cfg.context_dim];
+    let dw = vec![0.01f32; batch * dz];
+    let outs = step.call_f32(&[&params_f32, &z, &l, &t[..1], &dt[..1], &ctx, &dw])?;
+    println!(
+        "elbo_euler_step: z' {} values, ℓ' {} values — OK",
+        outs[0].len(),
+        outs[1].len()
+    );
+    let stats_step = bench(3, 30, || {
+        let o = step.call_f32(&[&params_f32, &z, &l, &t[..1], &dt[..1], &ctx, &dw]).unwrap();
+        o[1][0] as f64
+    });
+    println!("fused step: {:.1} µs/call (batch {batch})", stats_step.mean() * 1e6);
+    println!("xla_runtime OK");
+    Ok(())
+}

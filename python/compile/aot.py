@@ -1,0 +1,139 @@
+"""AOT lowering: JAX entry points → HLO **text** artifacts + manifest.
+
+HLO text (not serialized ``HloModuleProto``) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md and aot_recipe.md).
+
+Run as ``python -m compile.aot --out ../artifacts`` (the Makefile target);
+also importable for the pytest lowering smoke tests.
+
+Exports (batch ``B``, toy GRU config — see ``model.LatentConfig``):
+  post_drift_fwd     (params[P], zin[B, dz+1+dc])          → (B, dz)
+  post_drift_vjp     (params, zin, ct[B, dz])              → (dzin, dparams)
+  prior_drift_fwd    (params, zin[B, dz+1])                → (B, dz)
+  decoder_fwd        (params, z[B, dz])                    → (B, dx)
+  diffusion_fwd      (params, z[B, dz])                    → (B, dz)
+  elbo_euler_step    (params, z, l[B], t[], dt[], ctx, dw) → (z', l')
+
+The manifest (``manifest.txt``) is line-oriented ``key=value`` (hand
+parseable from Rust without a JSON dependency): a ``cfg`` line with the
+model dimensions and one ``entry`` line per artifact.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax Lowered to XLA HLO text (return_tuple=True so the
+    Rust side unwraps with ``to_tuple``)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def entries(cfg: M.LatentConfig, batch: int):
+    """(name, fn, example-arg shapes) for every exported entry point."""
+    p = M.n_params(cfg)
+    dz, dc, dx = cfg.latent_dim, cfg.context_dim, cfg.obs_dim
+
+    def post_fwd(params, zin):
+        return (M.post_drift_fwd(cfg, params, zin),)
+
+    def post_vjp(params, zin, ct):
+        _, pull = jax.vjp(lambda pp, zz: M.post_drift_fwd(cfg, pp, zz), params, zin)
+        dp, dzin = pull(ct)
+        return (dzin, dp)
+
+    def prior_fwd(params, zin):
+        return (M.prior_drift_fwd(cfg, params, zin),)
+
+    def dec_fwd(params, z):
+        return (M.decoder_fwd(cfg, params, z),)
+
+    def diff_fwd(params, z):
+        return (M.diffusion_fwd(cfg, params, z),)
+
+    def step(params, z, l, t, dt, ctx, dw):
+        zn, ln = M.elbo_euler_step(cfg, params, z, l, t, dt, ctx, dw)
+        return (zn, ln)
+
+    return [
+        ("post_drift_fwd", post_fwd, [[p], [batch, dz + 1 + dc]]),
+        ("post_drift_vjp", post_vjp, [[p], [batch, dz + 1 + dc], [batch, dz]]),
+        ("prior_drift_fwd", prior_fwd, [[p], [batch, dz + 1]]),
+        ("decoder_fwd", dec_fwd, [[p], [batch, dz]]),
+        ("diffusion_fwd", diff_fwd, [[p], [batch, dz]]),
+        (
+            "elbo_euler_step",
+            step,
+            [[p], [batch, dz], [batch], [], [], [batch, dc], [batch, dz]],
+        ),
+    ]
+
+
+def lower_entry(fn, shapes):
+    specs = [_spec(s) for s in shapes]
+    return jax.jit(fn).lower(*specs)
+
+
+def export_all(out_dir: str, cfg: M.LatentConfig, batch: int) -> list:
+    """Lower every entry point, write ``<name>.hlo.txt`` + manifest.
+    Returns the manifest lines."""
+    os.makedirs(out_dir, exist_ok=True)
+    p = M.n_params(cfg)
+    lines = [
+        "format=sdegrad-artifacts-v1",
+        (
+            f"cfg obs_dim={cfg.obs_dim} latent_dim={cfg.latent_dim} "
+            f"context_dim={cfg.context_dim} hidden={cfg.hidden} "
+            f"diff_hidden={cfg.diff_hidden} enc_hidden={cfg.enc_hidden} "
+            f"n_params={p} batch={batch} "
+            f"sigma_floor={cfg.sigma_floor} sigma_scale={cfg.sigma_scale}"
+        ),
+    ]
+    for name, fn, shapes in entries(cfg, batch):
+        text = to_hlo_text(lower_entry(fn, shapes))
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        shape_str = ";".join("x".join(str(d) for d in s) if s else "scalar" for s in shapes)
+        lines.append(f"entry {name} file={fname} inputs={shape_str}")
+        print(f"  wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"  wrote manifest.txt ({len(lines)} lines)")
+    return lines
+
+
+@functools.lru_cache(maxsize=1)
+def default_cfg() -> M.LatentConfig:
+    return M.LatentConfig()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--batch", type=int, default=32)
+    args = ap.parse_args()
+    cfg = default_cfg()
+    print(f"AOT-lowering latent SDE entry points (n_params={M.n_params(cfg)}) ...")
+    export_all(args.out, cfg, args.batch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,224 @@
+"""L1 Pallas kernel: fused batched MLP forward.
+
+The hot spot of latent-SDE training is evaluating small drift MLPs for a
+batch of trajectories at every solver step. This kernel fuses the whole
+1-hidden-layer MLP — ``out_act(act(x @ W1 + b1) @ W2 + b2)`` — into a
+single Pallas call tiled over the batch dimension:
+
+* the batch is cut into ``block_b``-row tiles via ``BlockSpec`` (the
+  HBM→VMEM schedule a CUDA implementation would express with threadblocks);
+* both weight matrices live fully in VMEM for every tile (they are tiny:
+  the paper's largest drift net is (dz+1+dc)×100×dz), so each tile performs
+  two MXU matmuls with no re-fetch;
+* bias add and both activations are fused elementwise on the tile.
+
+TPU mapping notes (DESIGN.md §Hardware-Adaptation): on a real TPU the
+natural tile is ``block_b = 128`` (MXU systolic width) with bf16 inputs and
+f32 accumulation; VMEM footprint per tile is
+``4·(block_b·(D+H+O) + D·H + H·O + H + O)`` bytes — ≈ 0.27 MiB for the
+toy config (B=128, D=7, H=100, O=4), far under the ~16 MiB VMEM budget, so
+occupancy is bounded by the grid, not memory. On this CPU image Pallas
+must run with ``interpret=True`` (the CPU PJRT client cannot execute
+Mosaic custom-calls), which is also what lets the lowered HLO run from the
+Rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_ACTS = {
+    "none": lambda x: x,
+    "tanh": jnp.tanh,
+    "softplus": jax.nn.softplus,
+    "sigmoid": jax.nn.sigmoid,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+}
+
+# Derivatives f'(pre) for the backward pass (pre-activation argument).
+_ACT_GRADS = {
+    "none": lambda p: jnp.ones_like(p),
+    "tanh": lambda p: 1.0 - jnp.tanh(p) ** 2,
+    "softplus": jax.nn.sigmoid,
+    "sigmoid": lambda p: jax.nn.sigmoid(p) * (1.0 - jax.nn.sigmoid(p)),
+    "relu": lambda p: (p > 0).astype(jnp.float32),
+}
+
+
+def _kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, *, hidden_act, out_act):
+    """One batch tile: two fused matmuls + activations."""
+    x = x_ref[...]
+    h = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32) + b1_ref[...]
+    h = _ACTS[hidden_act](h)
+    y = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32) + b2_ref[...]
+    o_ref[...] = _ACTS[out_act](y)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("hidden_act", "out_act", "block_b", "interpret")
+)
+def fused_mlp(
+    x,
+    w1,
+    b1,
+    w2,
+    b2,
+    *,
+    hidden_act="softplus",
+    out_act="none",
+    block_b=128,
+    interpret=True,
+):
+    """Fused 1-hidden-layer MLP over a batch.
+
+    Args:
+      x: ``(B, D)`` input batch.
+      w1: ``(D, H)`` first-layer weights (input-major).
+      b1: ``(H,)`` bias.
+      w2: ``(H, O)`` second-layer weights.
+      b2: ``(O,)`` bias.
+      hidden_act / out_act: names in ``{"none","tanh","softplus","sigmoid","relu"}``.
+      block_b: batch tile size.
+      interpret: keep True on CPU (see module docstring).
+
+    Returns:
+      ``(B, O)`` outputs, float32.
+    """
+    if x.ndim != 2:
+        raise ValueError(f"x must be rank-2, got {x.shape}")
+    b, d = x.shape
+    h = w1.shape[1]
+    o = w2.shape[1]
+    if w1.shape[0] != d or w2.shape[0] != h or b1.shape != (h,) or b2.shape != (o,):
+        raise ValueError(
+            f"shape mismatch: x{x.shape} w1{w1.shape} b1{b1.shape} w2{w2.shape} b2{b2.shape}"
+        )
+    return _fused_mlp_ad(
+        x.astype(jnp.float32),
+        w1.astype(jnp.float32),
+        b1.astype(jnp.float32),
+        w2.astype(jnp.float32),
+        b2.astype(jnp.float32),
+        hidden_act,
+        out_act,
+        block_b,
+        interpret,
+    )
+
+
+def _pallas_forward(x, w1, b1, w2, b2, hidden_act, out_act, block_b, interpret):
+    b, d = x.shape
+    h = w1.shape[1]
+    o = w2.shape[1]
+    block = min(block_b, b)
+    grid = (pl.cdiv(b, block),)
+    kernel = functools.partial(_kernel, hidden_act=hidden_act, out_act=out_act)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, h), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((h, o), lambda i: (0, 0)),
+            pl.BlockSpec((o,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block, o), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, o), jnp.float32),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2)
+
+
+# `pallas_call` has no reverse-mode rule, so the fused kernel carries a
+# custom VJP whose backward is the analytic MLP pullback in plain jnp —
+# XLA fuses it on its own, and the lowered HLO stays loadable from Rust.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8))
+def _fused_mlp_ad(x, w1, b1, w2, b2, hidden_act, out_act, block_b, interpret):
+    return _pallas_forward(x, w1, b1, w2, b2, hidden_act, out_act, block_b, interpret)
+
+
+def _fused_mlp_fwd(x, w1, b1, w2, b2, hidden_act, out_act, block_b, interpret):
+    y = _pallas_forward(x, w1, b1, w2, b2, hidden_act, out_act, block_b, interpret)
+    return y, (x, w1, b1, w2, b2)
+
+
+def _fused_mlp_bwd(hidden_act, out_act, block_b, interpret, res, ct):
+    del block_b, interpret
+    x, w1, b1, w2, b2 = res
+    h_pre = x @ w1 + b1
+    h = _ACTS[hidden_act](h_pre)
+    y_pre = h @ w2 + b2
+    g = ct * _ACT_GRADS[out_act](y_pre)
+    dw2 = h.T @ g
+    db2 = jnp.sum(g, axis=0)
+    dh = (g @ w2.T) * _ACT_GRADS[hidden_act](h_pre)
+    dw1 = x.T @ dh
+    db1 = jnp.sum(dh, axis=0)
+    dx = dh @ w1.T
+    return dx, dw1, db1, dw2, db2
+
+
+_fused_mlp_ad.defvjp(_fused_mlp_fwd, _fused_mlp_bwd)
+
+
+def _step_kernel(z_ref, f_ref, g_ref, dw_ref, u2_ref, l_ref, dt_ref, zo_ref, lo_ref):
+    """Fused Euler–Maruyama update tile with running-KL accumulation."""
+    dt = dt_ref[0]
+    zo_ref[...] = z_ref[...] + f_ref[...] * dt + g_ref[...] * dw_ref[...]
+    lo_ref[...] = l_ref[...] + 0.5 * u2_ref[...] * dt
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def euler_logqp_step(z, f, g, dw, u_sq_sum, l, dt, *, block_b=128, interpret=True):
+    """Fused Euler–Maruyama step of the KL-augmented latent state (§5).
+
+    ``z' = z + f·dt + g ⊙ dw``, ``ℓ' = ℓ + ½|u|²·dt`` — one elementwise
+    Pallas kernel over the batch, avoiding four separate HBM round-trips.
+
+    Args:
+      z: ``(B, dz)`` latent states.
+      f: ``(B, dz)`` drift at (z, t).
+      g: ``(B, dz)`` diagonal diffusion at (z, t).
+      dw: ``(B, dz)`` Brownian increments.
+      u_sq_sum: ``(B,)`` precomputed ``|u|²`` per batch element.
+      l: ``(B,)`` running KL.
+      dt: scalar array, step size.
+
+    Returns:
+      ``(z', l')``.
+    """
+    b, dz = z.shape
+    block = min(block_b, b)
+    grid = (pl.cdiv(b, block),)
+    return pl.pallas_call(
+        _step_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, dz), lambda i: (i, 0)),
+            pl.BlockSpec((block, dz), lambda i: (i, 0)),
+            pl.BlockSpec((block, dz), lambda i: (i, 0)),
+            pl.BlockSpec((block, dz), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, dz), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, dz), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        z.astype(jnp.float32),
+        f.astype(jnp.float32),
+        g.astype(jnp.float32),
+        dw.astype(jnp.float32),
+        u_sq_sum.astype(jnp.float32),
+        l.astype(jnp.float32),
+        jnp.asarray(dt, jnp.float32).reshape((1,)),
+    )

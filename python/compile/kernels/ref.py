@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest asserts
+``fused_mlp == mlp_ref`` and ``euler_logqp_step == euler_logqp_ref`` over
+a hypothesis-driven sweep of shapes and activations (the CORE L1 signal).
+"""
+
+import jax
+import jax.numpy as jnp
+
+_ACTS = {
+    "none": lambda x: x,
+    "tanh": jnp.tanh,
+    "softplus": jax.nn.softplus,
+    "sigmoid": jax.nn.sigmoid,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+}
+
+
+def mlp_ref(x, w1, b1, w2, b2, *, hidden_act="softplus", out_act="none"):
+    """Reference 1-hidden-layer MLP: out_act(act(x@W1+b1)@W2+b2)."""
+    x = x.astype(jnp.float32)
+    h = _ACTS[hidden_act](x @ w1.astype(jnp.float32) + b1.astype(jnp.float32))
+    y = h @ w2.astype(jnp.float32) + b2.astype(jnp.float32)
+    return _ACTS[out_act](y)
+
+
+def euler_logqp_ref(z, f, g, dw, u_sq_sum, l, dt):
+    """Reference fused Euler–Maruyama + running-KL update."""
+    dt = jnp.asarray(dt, jnp.float32)
+    z_next = z.astype(jnp.float32) + f.astype(jnp.float32) * dt + g.astype(
+        jnp.float32
+    ) * dw.astype(jnp.float32)
+    l_next = l.astype(jnp.float32) + 0.5 * u_sq_sum.astype(jnp.float32) * dt
+    return z_next, l_next

@@ -1,0 +1,217 @@
+"""L2: the latent-SDE compute graph in JAX, calling the L1 Pallas kernels.
+
+Build-time only — these functions are lowered once by ``aot.py`` to HLO
+text and executed from the Rust runtime (``rust/src/runtime``); Python
+never runs on the training path.
+
+Parameter layout
+----------------
+All entry points take one flat f32 parameter vector whose layout matches
+the Rust model byte-for-byte (``rust/src/latent/model.rs``): per
+``Linear``, the weight matrix is stored row-major ``(out, in)`` followed by
+the bias; modules in order prior-drift MLP, posterior-drift MLP, per-dim
+diffusion nets, decoder, encoder, q-head, ``p(z0)`` mean, ``p(z0)``
+logvar. This lets the Rust side hand its live parameter vector (cast to
+f32) straight to a compiled artifact, and is verified end-to-end by the
+``runtime::consistency`` Rust test.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.fused_mlp import euler_logqp_step, fused_mlp
+
+
+@dataclass(frozen=True)
+class LatentConfig:
+    """Mirror of the Rust ``LatentSdeConfig`` (GRU-encoder, per-dim σ)."""
+
+    obs_dim: int = 1
+    latent_dim: int = 4
+    context_dim: int = 1
+    hidden: int = 100
+    diff_hidden: int = 16
+    enc_hidden: int = 100
+    sigma_floor: float = 1e-3
+    sigma_scale: float = 1.0
+
+    @property
+    def post_in(self) -> int:
+        return self.latent_dim + 1 + self.context_dim
+
+    @property
+    def prior_in(self) -> int:
+        return self.latent_dim + 1
+
+
+def _linear_size(i, o):
+    return i * o + o
+
+
+@dataclass(frozen=True)
+class Layout:
+    """Offsets of each module inside the flat parameter vector."""
+
+    cfg: LatentConfig
+    prior: int
+    post: int
+    diff: int
+    dec: int
+    enc: int
+    q_head: int
+    pz0_mean: int
+    pz0_logvar: int
+    total: int
+
+
+def layout(cfg: LatentConfig) -> Layout:
+    """Compute module offsets, mirroring Rust ``ParamBuilder`` order."""
+    dz, dx, dc = cfg.latent_dim, cfg.obs_dim, cfg.context_dim
+    off = 0
+    prior = off
+    off += _linear_size(dz + 1, cfg.hidden) + _linear_size(cfg.hidden, dz)
+    post = off
+    off += _linear_size(dz + 1 + dc, cfg.hidden) + _linear_size(cfg.hidden, dz)
+    diff = off
+    off += dz * (_linear_size(1, cfg.diff_hidden) + _linear_size(cfg.diff_hidden, 1))
+    dec = off
+    off += _linear_size(dz, cfg.hidden) + _linear_size(cfg.hidden, dx)
+    enc = off
+    # GRU cell: 3 input-side (dx→H) + 3 hidden-side (H→H) linears, then the
+    # ctx head (H→dc).
+    hd = cfg.enc_hidden
+    off += 3 * _linear_size(dx, hd) + 3 * _linear_size(hd, hd) + _linear_size(hd, dc)
+    q_head = off
+    off += _linear_size(hd, 2 * dz)
+    pz0_mean = off
+    off += dz
+    pz0_logvar = off
+    off += dz
+    return Layout(cfg, prior, post, diff, dec, enc, q_head, pz0_mean, pz0_logvar, off)
+
+
+def _unpack_linear(flat, off, i, o):
+    """Rust Linear stores W row-major (o, i) then bias (o,). Returns
+    (W_in_major (i, o), b) ready for ``x @ W + b``."""
+    w = flat[off : off + i * o].reshape(o, i).T
+    b = flat[off + i * o : off + i * o + o]
+    return w, b
+
+
+def _unpack_mlp(flat, off, sizes):
+    """Unpack consecutive Linear layers of an MLP with the given sizes."""
+    out = []
+    for i, o in zip(sizes[:-1], sizes[1:]):
+        out.append(_unpack_linear(flat, off, i, o))
+        off += _linear_size(i, o)
+    return out, off
+
+
+def post_drift_fwd(cfg: LatentConfig, params, zin):
+    """Posterior drift ``h_φ`` for a batch of ``[z, t, ctx]`` rows.
+
+    Args:
+      params: flat ``(P,)`` parameter vector.
+      zin: ``(B, dz+1+dc)``.
+
+    Returns:
+      ``(B, dz)`` drift, via the fused Pallas MLP kernel.
+    """
+    lay = layout(cfg)
+    w1, b1 = _unpack_linear(params, lay.post, cfg.post_in, cfg.hidden)
+    w2, b2 = _unpack_linear(
+        params, lay.post + _linear_size(cfg.post_in, cfg.hidden), cfg.hidden, cfg.latent_dim
+    )
+    return fused_mlp(zin, w1, b1, w2, b2, hidden_act="softplus", out_act="none")
+
+
+def prior_drift_fwd(cfg: LatentConfig, params, zin):
+    """Prior drift ``h_θ`` for a batch of ``[z, t]`` rows → ``(B, dz)``."""
+    lay = layout(cfg)
+    w1, b1 = _unpack_linear(params, lay.prior, cfg.prior_in, cfg.hidden)
+    w2, b2 = _unpack_linear(
+        params, lay.prior + _linear_size(cfg.prior_in, cfg.hidden), cfg.hidden, cfg.latent_dim
+    )
+    return fused_mlp(zin, w1, b1, w2, b2, hidden_act="softplus", out_act="none")
+
+
+def decoder_fwd(cfg: LatentConfig, params, z):
+    """Decoder ``z → x̂`` for a batch → ``(B, dx)``."""
+    lay = layout(cfg)
+    w1, b1 = _unpack_linear(params, lay.dec, cfg.latent_dim, cfg.hidden)
+    w2, b2 = _unpack_linear(
+        params, lay.dec + _linear_size(cfg.latent_dim, cfg.hidden), cfg.hidden, cfg.obs_dim
+    )
+    return fused_mlp(z, w1, b1, w2, b2, hidden_act="softplus", out_act="none")
+
+
+def diffusion_fwd(cfg: LatentConfig, params, z):
+    """Per-dimension diffusion ``σ_i = floor + scale·sigmoid(net_i(z_i))``.
+
+    The dz tiny nets are evaluated as one batched einsum (they are too
+    small to tile individually).
+
+    Args:
+      z: ``(B, dz)``.
+
+    Returns:
+      ``(B, dz)`` positive diffusion values.
+    """
+    lay = layout(cfg)
+    dz, dh = cfg.latent_dim, cfg.diff_hidden
+    per = _linear_size(1, dh) + _linear_size(dh, 1)
+    w1s, b1s, w2s, b2s = [], [], [], []
+    for i in range(dz):
+        off = lay.diff + i * per
+        w1, b1 = _unpack_linear(params, off, 1, dh)  # (1, dh), (dh,)
+        w2, b2 = _unpack_linear(params, off + _linear_size(1, dh), dh, 1)  # (dh,1),(1,)
+        w1s.append(w1[0])
+        b1s.append(b1)
+        w2s.append(w2[:, 0])
+        b2s.append(b2[0])
+    w1s = jnp.stack(w1s)  # (dz, dh)
+    b1s = jnp.stack(b1s)  # (dz, dh)
+    w2s = jnp.stack(w2s)  # (dz, dh)
+    b2s = jnp.stack(b2s)  # (dz,)
+    # h[b,i,k] = softplus(z[b,i]·w1s[i,k] + b1s[i,k])
+    h = jax.nn.softplus(z[:, :, None] * w1s[None] + b1s[None])
+    pre = jnp.einsum("bik,ik->bi", h, w2s) + b2s[None]
+    return cfg.sigma_floor + cfg.sigma_scale * jax.nn.sigmoid(pre)
+
+
+def elbo_drift(cfg: LatentConfig, params, z, t, ctx):
+    """Posterior drift, diffusion and ``|u|²`` for a batch (§5).
+
+    Returns ``(h_φ (B,dz), σ (B,dz), |u|² (B,))``.
+    """
+    b = z.shape[0]
+    tcol = jnp.full((b, 1), t, jnp.float32)
+    zin_post = jnp.concatenate([z, tcol, ctx], axis=1)
+    zin_prior = jnp.concatenate([z, tcol], axis=1)
+    h_post = post_drift_fwd(cfg, params, zin_post)
+    h_prior = prior_drift_fwd(cfg, params, zin_prior)
+    sigma = diffusion_fwd(cfg, params, z)
+    u = (h_post - h_prior) / sigma
+    return h_post, sigma, jnp.sum(u * u, axis=1)
+
+
+def elbo_euler_step(cfg: LatentConfig, params, z, l, t, dt, ctx, dw):
+    """One fused Euler–Maruyama step of the KL-augmented posterior for a
+    batch of trajectories — the training hot-step artifact.
+
+    Args:
+      z: ``(B, dz)``; l: ``(B,)``; t, dt: scalars; ctx: ``(B, dc)``;
+      dw: ``(B, dz)`` Brownian increments.
+
+    Returns:
+      ``(z', l')``.
+    """
+    h_post, sigma, u2 = elbo_drift(cfg, params, z, t, ctx)
+    return euler_logqp_step(z, h_post, sigma, dw, u2, l, dt)
+
+
+def n_params(cfg: LatentConfig) -> int:
+    """Total flat parameter count (must equal Rust ``model.n_params``)."""
+    return layout(cfg).total

@@ -1,0 +1,44 @@
+"""AOT lowering smoke tests: every entry point lowers to parseable HLO
+text, and the manifest matches what was written."""
+
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+SMALL = M.LatentConfig(
+    obs_dim=1, latent_dim=2, context_dim=1, hidden=6, diff_hidden=3, enc_hidden=5
+)
+
+
+@pytest.mark.parametrize("name_fn_shapes", aot.entries(SMALL, batch=4), ids=lambda e: e[0])
+def test_entry_lowers_to_hlo_text(name_fn_shapes):
+    name, fn, shapes = name_fn_shapes
+    text = aot.to_hlo_text(aot.lower_entry(fn, shapes))
+    assert "ENTRY" in text, f"{name}: no ENTRY in HLO text"
+    assert "HloModule" in text
+    # return_tuple=True: the root is a tuple.
+    assert "tuple" in text.lower()
+
+
+def test_export_all_writes_files(tmp_path):
+    out = str(tmp_path / "artifacts")
+    lines = aot.export_all(out, SMALL, batch=4)
+    assert lines[0].startswith("format=")
+    entry_lines = [l for l in lines if l.startswith("entry ")]
+    assert len(entry_lines) == len(aot.entries(SMALL, 4))
+    for line in entry_lines:
+        fname = [tok.split("=", 1)[1] for tok in line.split() if tok.startswith("file=")][0]
+        path = os.path.join(out, fname)
+        assert os.path.exists(path), f"missing artifact {fname}"
+        assert os.path.getsize(path) > 100
+    assert os.path.exists(os.path.join(out, "manifest.txt"))
+
+
+def test_manifest_cfg_line_contains_dims():
+    lines = aot.export_all.__wrapped__ if hasattr(aot.export_all, "__wrapped__") else None
+    # Build the cfg line without writing: check the format via a tmp export
+    # is covered above; here just assert n_params consistency.
+    assert M.n_params(SMALL) == M.layout(SMALL).total

@@ -1,0 +1,146 @@
+"""L2 correctness: parameter layout, graph outputs vs plain-jnp references,
+and VJPs vs jax autodiff."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+CFG = M.LatentConfig(
+    obs_dim=2, latent_dim=3, context_dim=2, hidden=8, diff_hidden=4, enc_hidden=6
+)
+
+
+def _params(seed=0, cfg=CFG):
+    n = M.n_params(cfg)
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,), dtype=jnp.float32) * 0.3
+
+
+def _manual_mlp(params, off, sizes, x, hidden_act, out_act):
+    """Reference MLP straight from the flat layout."""
+    h = x
+    acts = {"softplus": jax.nn.softplus, "none": lambda v: v, "sigmoid": jax.nn.sigmoid}
+    n_layers = len(sizes) - 1
+    for li, (i, o) in enumerate(zip(sizes[:-1], sizes[1:])):
+        w = params[off : off + i * o].reshape(o, i).T
+        b = params[off + i * o : off + i * o + o]
+        off += i * o + o
+        h = h @ w + b
+        h = acts[out_act](h) if li == n_layers - 1 else acts[hidden_act](h)
+    return h
+
+
+def test_layout_total_is_consistent():
+    lay = M.layout(CFG)
+    assert lay.total == M.n_params(CFG)
+    assert lay.prior < lay.post < lay.diff < lay.dec < lay.enc < lay.q_head
+    assert lay.pz0_logvar + CFG.latent_dim == lay.total
+
+
+def test_post_drift_matches_manual_unpack():
+    params = _params(1)
+    lay = M.layout(CFG)
+    zin = jax.random.normal(jax.random.PRNGKey(2), (5, CFG.post_in), dtype=jnp.float32)
+    got = M.post_drift_fwd(CFG, params, zin)
+    want = _manual_mlp(
+        params, lay.post, [CFG.post_in, CFG.hidden, CFG.latent_dim], zin, "softplus", "none"
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_decoder_matches_manual_unpack():
+    params = _params(3)
+    lay = M.layout(CFG)
+    z = jax.random.normal(jax.random.PRNGKey(4), (7, CFG.latent_dim), dtype=jnp.float32)
+    got = M.decoder_fwd(CFG, params, z)
+    want = _manual_mlp(
+        params, lay.dec, [CFG.latent_dim, CFG.hidden, CFG.obs_dim], z, "softplus", "none"
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_diffusion_positive_and_bounded():
+    params = _params(5)
+    z = jax.random.normal(jax.random.PRNGKey(6), (9, CFG.latent_dim), dtype=jnp.float32)
+    sig = np.asarray(M.diffusion_fwd(CFG, params, z))
+    assert np.all(sig > 0)
+    assert np.all(sig < CFG.sigma_floor + CFG.sigma_scale + 1e-6)
+
+
+def test_diffusion_matches_manual_per_dim():
+    params = _params(7)
+    lay = M.layout(CFG)
+    z = jax.random.normal(jax.random.PRNGKey(8), (4, CFG.latent_dim), dtype=jnp.float32)
+    got = np.asarray(M.diffusion_fwd(CFG, params, z))
+    per = (1 * CFG.diff_hidden + CFG.diff_hidden) + (CFG.diff_hidden * 1 + 1)
+    for i in range(CFG.latent_dim):
+        want_i = _manual_mlp(
+            params,
+            lay.diff + i * per,
+            [1, CFG.diff_hidden, 1],
+            z[:, i : i + 1],
+            "softplus",
+            "sigmoid",
+        )
+        want_i = CFG.sigma_floor + CFG.sigma_scale * np.asarray(want_i)[:, 0]
+        np.testing.assert_allclose(got[:, i], want_i, rtol=1e-5, atol=1e-5)
+
+
+def test_elbo_drift_u_square_definition():
+    params = _params(9)
+    b = 6
+    z = jax.random.normal(jax.random.PRNGKey(10), (b, CFG.latent_dim), dtype=jnp.float32)
+    ctx = jax.random.normal(jax.random.PRNGKey(11), (b, CFG.context_dim), dtype=jnp.float32)
+    t = jnp.float32(0.4)
+    h_post, sigma, u2 = M.elbo_drift(CFG, params, z, t, ctx)
+    tcol = jnp.full((b, 1), t)
+    h_prior = M.prior_drift_fwd(CFG, params, jnp.concatenate([z, tcol], axis=1))
+    u = (np.asarray(h_post) - np.asarray(h_prior)) / np.asarray(sigma)
+    np.testing.assert_allclose(np.asarray(u2), (u * u).sum(axis=1), rtol=1e-4, atol=1e-5)
+    assert np.all(np.asarray(u2) >= 0)
+
+
+def test_post_drift_vjp_matches_jax_grad():
+    params = _params(12)
+    zin = jax.random.normal(jax.random.PRNGKey(13), (4, CFG.post_in), dtype=jnp.float32)
+    ct = jax.random.normal(jax.random.PRNGKey(14), (4, CFG.latent_dim), dtype=jnp.float32)
+
+    def scalar_loss(pp, zz):
+        return jnp.sum(M.post_drift_fwd(CFG, pp, zz) * ct)
+
+    gp, gz = jax.grad(scalar_loss, argnums=(0, 1))(params, zin)
+    _, pull = jax.vjp(lambda pp, zz: M.post_drift_fwd(CFG, pp, zz), params, zin)
+    dp, dz = pull(ct)
+    np.testing.assert_allclose(np.asarray(dp), np.asarray(gp), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dz), np.asarray(gz), rtol=1e-4, atol=1e-5)
+
+
+def test_elbo_euler_step_consistency():
+    params = _params(15)
+    b = 5
+    key = jax.random.PRNGKey(16)
+    z = jax.random.normal(key, (b, CFG.latent_dim), dtype=jnp.float32)
+    l = jnp.zeros(b)
+    ctx = jnp.zeros((b, CFG.context_dim), dtype=jnp.float32)
+    dw = jax.random.normal(jax.random.PRNGKey(17), (b, CFG.latent_dim)) * 0.1
+    t, dt = jnp.float32(0.0), jnp.float32(0.05)
+    zn, ln = M.elbo_euler_step(CFG, params, z, l, t, dt, ctx, dw)
+    h_post, sigma, u2 = M.elbo_drift(CFG, params, z, t, ctx)
+    want_z = np.asarray(z) + np.asarray(h_post) * 0.05 + np.asarray(sigma) * np.asarray(dw)
+    want_l = 0.5 * np.asarray(u2) * 0.05
+    np.testing.assert_allclose(np.asarray(zn), want_z, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ln), want_l, rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.parametrize("batch", [1, 32])
+def test_shapes_all_entries(batch):
+    params = _params(18)
+    dz, dc, dx = CFG.latent_dim, CFG.context_dim, CFG.obs_dim
+    zin = jnp.zeros((batch, CFG.post_in))
+    assert M.post_drift_fwd(CFG, params, zin).shape == (batch, dz)
+    assert M.prior_drift_fwd(CFG, params, jnp.zeros((batch, dz + 1))).shape == (batch, dz)
+    assert M.decoder_fwd(CFG, params, jnp.zeros((batch, dz))).shape == (batch, dx)
+    assert M.diffusion_fwd(CFG, params, jnp.zeros((batch, dz))).shape == (batch, dz)

@@ -1,0 +1,72 @@
+//! Perf bench: Brownian noise sources (paper §4's cost model).
+//!
+//! * virtual-tree query cost vs tolerance — should grow ~log(1/ε);
+//! * stored-path query cost vs number of cached points — ~log n;
+//! * memory footprints side by side;
+//! * end-to-end: a fixed-grid solve driven by each source.
+
+use sdegrad::brownian::{BrownianMotion, BrownianPath, VirtualBrownianTree};
+use sdegrad::metrics::timer::bench;
+use sdegrad::metrics::CsvWriter;
+use sdegrad::prng::PrngKey;
+
+fn main() {
+    println!("=== Brownian source microbenchmarks =====================================");
+    let dim = 4;
+    let key = PrngKey::from_seed(1);
+    let mut csv = CsvWriter::create(
+        "bench_out/brownian_perf.csv",
+        &["source", "param", "ns_per_query", "memory_floats"],
+    )
+    .expect("csv");
+
+    println!("{:<18} {:>12} {:>16} {:>14}", "source", "ε / points", "ns/query", "mem (floats)");
+    for &tol in &[1e-3, 1e-6, 1e-9, 1e-12] {
+        let mut tree = VirtualBrownianTree::new(key, dim, 0.0, 1.0, tol);
+        let mut out = vec![0.0; dim];
+        let mut q = 0u64;
+        let stats = bench(50, 2000, || {
+            // Query pseudo-random times so every call walks the tree.
+            let t = ((q as f64 * 0.618_033_988_749_894_8) % 1.0).max(1e-9);
+            q += 1;
+            tree.sample_into(t, &mut out);
+            out[0]
+        });
+        let ns = stats.mean() * 1e9;
+        println!("{:<18} {:>12.0e} {:>16.0} {:>14}", "virtual_tree", tol, ns, tree.memory_footprint());
+        csv.row(&[
+            "virtual_tree".into(),
+            format!("{tol}"),
+            format!("{ns}"),
+            tree.memory_footprint().to_string(),
+        ])
+        .ok();
+    }
+
+    for &points in &[100usize, 1000, 10000, 100000] {
+        let mut path = BrownianPath::new(key, dim, 0.0, 1.0);
+        // Pre-populate the cache.
+        let mut out = vec![0.0; dim];
+        for i in 0..points {
+            path.sample_into((i + 1) as f64 / (points + 1) as f64, &mut out);
+        }
+        let mut q = 0u64;
+        let stats = bench(50, 2000, || {
+            let t = ((q as f64 * 0.618_033_988_749_894_8) % 1.0).max(1e-9);
+            q += 1;
+            path.sample_into(t, &mut out);
+            out[0]
+        });
+        let ns = stats.mean() * 1e9;
+        println!("{:<18} {:>12} {:>16.0} {:>14}", "stored_path", points, ns, path.memory_footprint());
+        csv.row(&[
+            "stored_path".into(),
+            points.to_string(),
+            format!("{ns}"),
+            path.memory_footprint().to_string(),
+        ])
+        .ok();
+    }
+    csv.flush().ok();
+    println!("(CSV: bench_out/brownian_perf.csv)");
+}

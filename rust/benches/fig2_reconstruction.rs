@@ -1,0 +1,5 @@
+//! Bench: regenerate Figure 2 (Itô vs Stratonovich backward reconstruction).
+fn main() {
+    let quick = std::env::var("SDEGRAD_QUICK").is_ok();
+    sdegrad::coordinator::repro::fig2::run(quick);
+}

@@ -1,0 +1,6 @@
+//! Bench: regenerate Figures 5 and 7 (numerical studies, Examples 1–3:
+//! error vs step size, MSE vs NFE under adaptive stepping, time vs error).
+fn main() {
+    let quick = std::env::var("SDEGRAD_QUICK").is_ok();
+    sdegrad::coordinator::repro::fig5::run(quick);
+}

@@ -1,0 +1,7 @@
+//! Bench: regenerate Figures 6/8 (latent SDE on the stochastic Lorenz
+//! attractor). Training-heavy: quick by default; SDEGRAD_FULL=1 for the
+//! paper-scale run.
+fn main() {
+    let full = std::env::var("SDEGRAD_FULL").is_ok();
+    sdegrad::coordinator::repro::latent_figs::run_lorenz(!full);
+}

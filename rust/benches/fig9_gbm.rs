@@ -1,0 +1,6 @@
+//! Bench: regenerate Figure 9 (latent SDE on geometric Brownian motion).
+//! Training-heavy: quick by default; SDEGRAD_FULL=1 for paper scale.
+fn main() {
+    let full = std::env::var("SDEGRAD_FULL").is_ok();
+    sdegrad::coordinator::repro::latent_figs::run_gbm(!full);
+}

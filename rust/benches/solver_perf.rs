@@ -1,0 +1,121 @@
+//! Perf bench: solver-step throughput across schemes, plus the latent-SDE
+//! drift-evaluation hot path — pure-Rust NN vs the AOT-compiled XLA
+//! artifact (batched) when artifacts are present.
+
+use sdegrad::brownian::BrownianPath;
+use sdegrad::latent::{LatentSdeConfig, LatentSdeModel, PosteriorSde};
+use sdegrad::metrics::timer::bench;
+use sdegrad::metrics::CsvWriter;
+use sdegrad::prng::PrngKey;
+use sdegrad::sde::problems::{sample_experiment_setup, Example1};
+use sdegrad::sde::{ForwardFunc, ReplicatedSde, Sde};
+use sdegrad::solvers::{integrate_grid, uniform_grid, Method};
+
+fn main() {
+    println!("=== Solver & drift-eval throughput ======================================");
+    let mut csv = CsvWriter::create(
+        "bench_out/solver_perf.csv",
+        &["bench", "variant", "value_us"],
+    )
+    .expect("csv");
+
+    // 1. Scheme throughput on the 10-d replicated GBM.
+    let dim = 10;
+    let sde = ReplicatedSde::new(Example1, dim);
+    let key = PrngKey::from_seed(3);
+    let (theta, x0) = sample_experiment_setup(key, dim, 2);
+    let n_steps = 1000;
+    let grid = uniform_grid(0.0, 1.0, n_steps);
+    println!("{:<26} {:>14}", "scheme (1000 steps, d=10)", "µs/solve");
+    for method in [Method::EulerMaruyama, Method::MilsteinIto, Method::Heun] {
+        let mut run = 0u64;
+        let stats = bench(3, 30, || {
+            run += 1;
+            let mut bm = BrownianPath::new(key.fold_in(run), dim, 0.0, 1.0);
+            let mut sys = ForwardFunc::for_method(&sde, &theta, method);
+            let mut y = vec![0.0; dim];
+            integrate_grid(&mut sys, method, &x0, &grid, &mut bm, &mut y);
+            y[0]
+        });
+        let us = stats.mean() * 1e6;
+        println!("{:<26} {:>14.1}", method.name(), us);
+        csv.row(&["scheme_solve".into(), method.name().into(), format!("{us}")]).ok();
+    }
+
+    // 2. Latent drift evaluation: Rust NN per-row vs XLA artifact batched.
+    let artifacts_ok = std::path::Path::new("artifacts/manifest.txt").exists();
+    if artifacts_ok {
+        let mut reg = sdegrad::runtime::ArtifactRegistry::open("artifacts").expect("registry");
+        let m = &reg.manifest;
+        let cfg = LatentSdeConfig {
+            obs_dim: m.cfg_usize("obs_dim").unwrap(),
+            latent_dim: m.cfg_usize("latent_dim").unwrap(),
+            context_dim: m.cfg_usize("context_dim").unwrap(),
+            hidden: m.cfg_usize("hidden").unwrap(),
+            diff_hidden: m.cfg_usize("diff_hidden").unwrap(),
+            enc_hidden: m.cfg_usize("enc_hidden").unwrap(),
+            ..Default::default()
+        };
+        let batch = m.cfg_usize("batch").unwrap();
+        let model = LatentSdeModel::new(cfg);
+        let params = model.init_params(PrngKey::from_seed(4));
+        let params_f32: Vec<f32> = params.iter().map(|&v| v as f32).collect();
+        let d_in = cfg.latent_dim + 1 + cfg.context_dim;
+        let mut zin = vec![0.0f64; batch * d_in];
+        PrngKey::from_seed(5).fill_normal(0, &mut zin);
+        let zin_f32: Vec<f32> = zin.iter().map(|&v| v as f32).collect();
+
+        let exe = reg.get("post_drift_fwd").expect("compile");
+        let s_xla = bench(5, 50, || exe.call_f32(&[&params_f32, &zin_f32]).unwrap()[0][0] as f64);
+        let mut cache = model.post_drift.cache();
+        let mut sink = vec![0.0f64; cfg.latent_dim];
+        let s_rust = bench(5, 50, || {
+            let mut acc = 0.0;
+            for b in 0..batch {
+                model.post_drift.forward(&params, &zin[b * d_in..(b + 1) * d_in], &mut cache, &mut sink);
+                acc += sink[0];
+            }
+            acc
+        });
+        let (xla_us, rust_us) = (s_xla.mean() * 1e6, s_rust.mean() * 1e6);
+        println!("\ndrift eval, batch {batch} (hidden {}):", cfg.hidden);
+        println!("  XLA artifact (PJRT):  {xla_us:>10.1} µs/batch");
+        println!("  Rust NN (per row):    {rust_us:>10.1} µs/batch");
+        csv.row(&["drift_eval".into(), "xla_batched".into(), format!("{xla_us}")]).ok();
+        csv.row(&["drift_eval".into(), "rust_nn".into(), format!("{rust_us}")]).ok();
+    } else {
+        println!("\n(artifacts/ missing — run `make artifacts` for the XLA comparison)");
+    }
+
+    // 3. Full augmented posterior step cost (the latent training hot loop).
+    let model = LatentSdeModel::new(LatentSdeConfig {
+        obs_dim: 3,
+        latent_dim: 4,
+        context_dim: 1,
+        hidden: 100,
+        diff_hidden: 16,
+        enc_hidden: 100,
+        ..Default::default()
+    });
+    let params = model.init_params(PrngKey::from_seed(6));
+    let post = PosteriorSde::new(&model);
+    let mut theta_full = params[..post.sde_param_len()].to_vec();
+    theta_full.push(0.3); // ctx
+    let aug = post.state_dim();
+    let grid = uniform_grid(0.0, 0.1, 50);
+    let mut run = 0u64;
+    let stats = bench(3, 30, || {
+        run += 1;
+        let mut bm = BrownianPath::new(PrngKey::from_seed(100 + run), aug, 0.0, 0.1);
+        let mut sys = ForwardFunc::for_method(&post, &theta_full, Method::Heun);
+        let y0 = vec![0.1; aug];
+        let mut y = vec![0.0; aug];
+        integrate_grid(&mut sys, Method::Heun, &y0, &grid, &mut bm, &mut y);
+        y[0]
+    });
+    let per_step_us = stats.mean() * 1e6 / 50.0;
+    println!("\nlatent posterior Heun step (dz=4, hidden=100): {per_step_us:.2} µs/step");
+    csv.row(&["latent_step".into(), "heun_hidden100".into(), format!("{per_step_us}")]).ok();
+    csv.flush().ok();
+    println!("(CSV: bench_out/solver_perf.csv)");
+}

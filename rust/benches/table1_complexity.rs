@@ -1,0 +1,6 @@
+//! Bench: regenerate Table 1 (gradient-method complexity sweep).
+//! Full sweep by default; set SDEGRAD_QUICK=1 for the short version.
+fn main() {
+    let quick = std::env::var("SDEGRAD_QUICK").is_ok();
+    sdegrad::coordinator::repro::table1::run(quick);
+}

@@ -1,0 +1,7 @@
+//! Bench: regenerate Table 2 (future-frame test MSE on synthetic mocap:
+//! latent SDE vs latent ODE vs constant baselines). Training-heavy: quick
+//! by default; SDEGRAD_FULL=1 for the paper-scale protocol.
+fn main() {
+    let full = std::env::var("SDEGRAD_FULL").is_ok();
+    sdegrad::coordinator::repro::table2::run(!full);
+}

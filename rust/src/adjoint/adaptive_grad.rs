@@ -1,0 +1,307 @@
+//! Adaptive-solver stochastic adjoint for the replicated scalar problems
+//! (Fig 5b: gradient MSE vs NFE as `atol` shrinks, `rtol = 0`).
+//!
+//! For a [`ReplicatedSde`] the augmented backward system is *fully
+//! diagonal* — dimension `i`'s state, adjoint, and parameter block are all
+//! driven by channel `i` alone — so it fits the generic diagonal-noise
+//! integrator and hence [`crate::solvers::integrate_adaptive`] directly.
+//! (The general cross-channel case needs the bespoke driver in
+//! [`super::stochastic`]; adaptivity there is future work, as in the
+//! paper, whose adaptive experiments are exactly these scalar problems.)
+//!
+//! The flat augmented state is `[z (d) | a (d) | a_θ (d·k)]`, and
+//! [`ChannelMappedBrownian`] replicates the d physical channels into that
+//! layout for the solver's per-slot `dw` interface.
+
+use crate::brownian::{BrownianMotion, BrownianPath};
+use crate::prng::PrngKey;
+use crate::sde::{Calculus, ReplicatedSde, ScalarSde, SdeFunc};
+use crate::solvers::{integrate_adaptive, AdaptiveConfig, Method, SolveStats};
+
+/// Expands a d-channel Brownian source to `n` slots via a slot→channel
+/// map (consistency is inherited from the inner source).
+pub struct ChannelMappedBrownian<'a, B: BrownianMotion> {
+    inner: &'a mut B,
+    map: Vec<usize>,
+    buf: Vec<f64>,
+}
+
+impl<'a, B: BrownianMotion> ChannelMappedBrownian<'a, B> {
+    pub fn new(inner: &'a mut B, map: Vec<usize>) -> Self {
+        let d = inner.dim();
+        assert!(map.iter().all(|&c| c < d), "channel map out of range");
+        let buf = vec![0.0; d];
+        ChannelMappedBrownian { inner, map, buf }
+    }
+}
+
+impl<'a, B: BrownianMotion> BrownianMotion for ChannelMappedBrownian<'a, B> {
+    fn dim(&self) -> usize {
+        self.map.len()
+    }
+    fn span(&self) -> (f64, f64) {
+        self.inner.span()
+    }
+    fn sample_into(&mut self, t: f64, out: &mut [f64]) {
+        self.inner.sample_into(t, &mut self.buf);
+        for (slot, &ch) in self.map.iter().enumerate() {
+            out[slot] = self.buf[ch];
+        }
+    }
+    fn memory_footprint(&self) -> usize {
+        self.inner.memory_footprint()
+    }
+}
+
+/// The fully-diagonal augmented backward system of a replicated scalar
+/// problem, in Stratonovich form with analytic derivatives.
+pub struct ReplicatedAugmentedFunc<'a, P: ScalarSde> {
+    sde: &'a ReplicatedSde<P>,
+    theta: &'a [f64],
+    d: usize,
+    k: usize,
+    nfe_f: u64,
+    nfe_g: u64,
+    dth: Vec<f64>,
+    dth2: Vec<f64>,
+}
+
+impl<'a, P: ScalarSde> ReplicatedAugmentedFunc<'a, P> {
+    pub fn new(sde: &'a ReplicatedSde<P>, theta: &'a [f64]) -> Self {
+        let d = crate::sde::Sde::state_dim(sde);
+        let k = sde.problem().nparams();
+        ReplicatedAugmentedFunc {
+            sde,
+            theta,
+            d,
+            k,
+            nfe_f: 0,
+            nfe_g: 0,
+            dth: vec![0.0; k],
+            dth2: vec![0.0; k],
+        }
+    }
+
+    /// Slot→channel map for [`ChannelMappedBrownian`].
+    pub fn channel_map(&self) -> Vec<usize> {
+        let (d, k) = (self.d, self.k);
+        let mut map = Vec::with_capacity(2 * d + d * k);
+        map.extend(0..d); // z block
+        map.extend(0..d); // a block
+        for i in 0..d {
+            map.extend(std::iter::repeat(i).take(k)); // θ block of dim i
+        }
+        map
+    }
+
+    /// Pack the initial backward state `(z_T, ∂L/∂z_T = 1, 0)`.
+    pub fn pack_terminal(&self, z_t: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; 2 * self.d + self.d * self.k];
+        y[..self.d].copy_from_slice(z_t);
+        for i in 0..self.d {
+            y[self.d + i] = 1.0;
+        }
+        y
+    }
+
+    /// Extract `(grad_z0, grad_theta)` from the terminal backward state.
+    pub fn unpack_gradients(&self, y: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        (y[self.d..2 * self.d].to_vec(), y[2 * self.d..].to_vec())
+    }
+}
+
+impl<'a, P: ScalarSde> SdeFunc for ReplicatedAugmentedFunc<'a, P> {
+    fn dim(&self) -> usize {
+        2 * self.d + self.d * self.k
+    }
+
+    fn calculus(&self) -> Calculus {
+        Calculus::Stratonovich
+    }
+
+    fn drift(&mut self, t: f64, y: &[f64], out: &mut [f64]) {
+        self.nfe_f += 1;
+        let (d, k) = (self.d, self.k);
+        let p = self.sde.problem();
+        let ito = p.calculus() == Calculus::Ito;
+        for i in 0..d {
+            let th = &self.theta[i * k..(i + 1) * k];
+            let (x, a) = (y[i], y[d + i]);
+            let b = p.drift(t, x, th);
+            let b_x = p.drift_dx(t, x, th);
+            p.drift_dtheta(t, x, th, &mut self.dth);
+            let (bt, bt_x) = if ito {
+                // Stratonovich conversion: b̃ = b − ½σσ'.
+                let s = p.diffusion(t, x, th);
+                let s_x = p.diffusion_dx(t, x, th);
+                let s_xx = p.diffusion_dxx(t, x, th);
+                p.diffusion_dtheta(t, x, th, &mut self.dth2);
+                let mut dsx_dth = vec![0.0; k];
+                p.diffusion_dx_dtheta(t, x, th, &mut dsx_dth);
+                for j in 0..k {
+                    self.dth[j] -= 0.5 * (self.dth2[j] * s_x + s * dsx_dth[j]);
+                }
+                (b - 0.5 * s * s_x, b_x - 0.5 * (s_x * s_x + s * s_xx))
+            } else {
+                (b, b_x)
+            };
+            out[i] = bt;
+            out[d + i] = -a * bt_x;
+            for j in 0..k {
+                out[2 * d + i * k + j] = -a * self.dth[j];
+            }
+        }
+    }
+
+    fn diffusion(&mut self, t: f64, y: &[f64], out: &mut [f64]) {
+        self.nfe_g += 1;
+        let (d, k) = (self.d, self.k);
+        let p = self.sde.problem();
+        for i in 0..d {
+            let th = &self.theta[i * k..(i + 1) * k];
+            let (x, a) = (y[i], y[d + i]);
+            out[i] = p.diffusion(t, x, th);
+            out[d + i] = -a * p.diffusion_dx(t, x, th);
+            p.diffusion_dtheta(t, x, th, &mut self.dth);
+            for j in 0..k {
+                out[2 * d + i * k + j] = -a * self.dth[j];
+            }
+        }
+    }
+
+    fn nfe_drift(&self) -> u64 {
+        self.nfe_f
+    }
+
+    fn nfe_diffusion(&self) -> u64 {
+        self.nfe_g
+    }
+}
+
+/// Output of an adaptive adjoint gradient computation.
+#[derive(Clone, Debug)]
+pub struct AdaptiveGradOutput {
+    pub z_terminal: Vec<f64>,
+    pub grad_z0: Vec<f64>,
+    pub grad_theta: Vec<f64>,
+    pub w_terminal: Vec<f64>,
+    pub forward_stats: SolveStats,
+    pub backward_stats: SolveStats,
+    pub hit_h_min: bool,
+}
+
+/// Gradient of `L = Σ z_T` for a replicated scalar problem using adaptive
+/// time-stepping in BOTH passes (Fig 5b's setting: vary `atol`, rtol=0).
+pub fn adaptive_adjoint_gradients<P: ScalarSde>(
+    sde: &ReplicatedSde<P>,
+    theta: &[f64],
+    z0: &[f64],
+    t0: f64,
+    t1: f64,
+    key: PrngKey,
+    cfg: &AdaptiveConfig,
+) -> AdaptiveGradOutput {
+    let d = crate::sde::Sde::state_dim(sde);
+    let mut bm = BrownianPath::new(key, d, t0, t1);
+
+    // Forward adaptive (Milstein — strong order 1.0, as in the paper).
+    let mut fsys = crate::sde::ForwardFunc::for_method(sde, theta, Method::MilsteinIto);
+    let fres = integrate_adaptive(&mut fsys, Method::MilsteinIto, z0, t0, t1, &mut bm, cfg);
+    let w_terminal = bm.sample(t1);
+
+    // Backward adaptive on the augmented diagonal system (Heun —
+    // Stratonovich, equals commutative Milstein).
+    let mut aug = ReplicatedAugmentedFunc::new(sde, theta);
+    let map = aug.channel_map();
+    let y_t = aug.pack_terminal(&fres.y);
+    let mut mapped = ChannelMappedBrownian::new(&mut bm, map);
+    let bres = integrate_adaptive(&mut aug, Method::Heun, &y_t, t1, t0, &mut mapped, cfg);
+    let (grad_z0, grad_theta) = aug.unpack_gradients(&bres.y);
+
+    AdaptiveGradOutput {
+        z_terminal: fres.y,
+        grad_z0,
+        grad_theta,
+        w_terminal,
+        forward_stats: fres.stats,
+        backward_stats: bres.stats,
+        hit_h_min: fres.hit_h_min || bres.hit_h_min,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sde::problems::{sample_experiment_setup, Example1, Example2};
+
+    #[test]
+    fn channel_map_layout() {
+        let sde = ReplicatedSde::new(Example1, 3);
+        let theta = vec![0.5; 6];
+        let aug = ReplicatedAugmentedFunc::new(&sde, &theta);
+        let map = aug.channel_map();
+        assert_eq!(map.len(), 3 + 3 + 6);
+        assert_eq!(&map[..3], &[0, 1, 2]);
+        assert_eq!(&map[3..6], &[0, 1, 2]);
+        assert_eq!(&map[6..], &[0, 0, 1, 1, 2, 2]);
+    }
+
+    #[test]
+    fn mapped_brownian_replicates_channels() {
+        let mut bm = BrownianPath::new(PrngKey::from_seed(1), 2, 0.0, 1.0);
+        let mut mapped = ChannelMappedBrownian::new(&mut bm, vec![0, 1, 0, 1, 1]);
+        let w = mapped.sample(0.5);
+        assert_eq!(w[0], w[2]);
+        assert_eq!(w[1], w[3]);
+        assert_eq!(w[1], w[4]);
+        assert_ne!(w[0], w[1]);
+    }
+
+    fn adaptive_vs_analytic<P: ScalarSde + Copy>(problem: P, atol: f64, seed: u64) -> (f64, u64) {
+        let dim = 3;
+        let sde = ReplicatedSde::new(problem, dim);
+        let key = PrngKey::from_seed(seed);
+        let (theta, x0) = sample_experiment_setup(key, dim, problem.nparams());
+        let cfg = AdaptiveConfig { atol, rtol: 0.0, h0: 1e-3, ..Default::default() };
+        let out = adaptive_adjoint_gradients(&sde, &theta, &x0, 0.0, 1.0, key, &cfg);
+        let mut g_x0 = vec![0.0; dim];
+        let mut g_th = vec![0.0; theta.len()];
+        sde.analytic_loss_gradients(1.0, &x0, &theta, &out.w_terminal, &mut g_x0, &mut g_th);
+        let mse = g_th
+            .iter()
+            .zip(&out.grad_theta)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            / g_th.len() as f64;
+        (mse, out.forward_stats.nfe() + out.backward_stats.nfe())
+    }
+
+    #[test]
+    fn tighter_atol_improves_gradient_mse() {
+        // Average across a few paths (single-path errors are noisy).
+        let reps = 6;
+        let mut mse_loose = 0.0;
+        let mut mse_tight = 0.0;
+        let mut nfe_loose = 0;
+        let mut nfe_tight = 0;
+        for r in 0..reps {
+            let (m, n) = adaptive_vs_analytic(Example1, 1e-2, 300 + r);
+            mse_loose += m;
+            nfe_loose += n;
+            let (m, n) = adaptive_vs_analytic(Example1, 1e-5, 300 + r);
+            mse_tight += m;
+            nfe_tight += n;
+        }
+        assert!(
+            mse_tight < mse_loose,
+            "tight atol should reduce gradient MSE: {mse_tight} vs {mse_loose}"
+        );
+        assert!(nfe_tight > nfe_loose, "tight atol should cost more NFE");
+    }
+
+    #[test]
+    fn example2_adaptive_gradients_converge() {
+        let (mse, _) = adaptive_vs_analytic(Example2, 1e-5, 42);
+        assert!(mse < 1e-3, "gradient MSE too large: {mse}");
+    }
+}

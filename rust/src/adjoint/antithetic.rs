@@ -1,0 +1,155 @@
+//! Antithetic-path gradient estimation (§8: "we may adopt techniques such
+//! as control variates or antithetic paths" — implemented here as the
+//! paper's named future-work extension).
+//!
+//! For a Monte-Carlo objective `E_W[L(Z_T(W))]`, the antithetic estimator
+//! averages the pathwise gradient over a Brownian path and its mirror
+//! `−W`. Both are valid samples of the Wiener measure, and for losses with
+//! approximately odd dependence on the noise their gradient errors
+//! anticorrelate, cutting estimator variance at zero extra variance cost
+//! (two correlated samples for the price of two independent ones, minus
+//! the shared-seed bookkeeping).
+
+use super::stochastic::{stochastic_adjoint_gradients, AdjointConfig, GradientOutput};
+use crate::prng::PrngKey;
+use crate::sde::SdeVjp;
+
+/// Result of one antithetic pair.
+#[derive(Clone, Debug)]
+pub struct AntitheticOutput {
+    /// Gradient averaged over the (W, −W) pair.
+    pub grad_theta: Vec<f64>,
+    pub grad_z0: Vec<f64>,
+    /// The two raw outputs (plus-path first).
+    pub plus: GradientOutput,
+    pub minus: GradientOutput,
+}
+
+/// Gradients of `L = Σ z_T` averaged over an antithetic Brownian pair.
+#[allow(clippy::too_many_arguments)]
+pub fn antithetic_adjoint_gradients<S: SdeVjp + ?Sized>(
+    sde: &S,
+    theta: &[f64],
+    z0: &[f64],
+    t0: f64,
+    t1: f64,
+    n_steps: usize,
+    key: PrngKey,
+    cfg: &AdjointConfig,
+) -> AntitheticOutput {
+    let plus = stochastic_adjoint_gradients(sde, theta, z0, t0, t1, n_steps, key, cfg);
+    let minus_cfg = AdjointConfig { mirror: !cfg.mirror, ..*cfg };
+    let minus = stochastic_adjoint_gradients(sde, theta, z0, t0, t1, n_steps, key, &minus_cfg);
+    let grad_theta = plus
+        .grad_theta
+        .iter()
+        .zip(&minus.grad_theta)
+        .map(|(a, b)| 0.5 * (a + b))
+        .collect();
+    let grad_z0 = plus
+        .grad_z0
+        .iter()
+        .zip(&minus.grad_z0)
+        .map(|(a, b)| 0.5 * (a + b))
+        .collect();
+    AntitheticOutput { grad_theta, grad_z0, plus, minus }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sde::problems::{sample_experiment_setup, Example1};
+    use crate::sde::ReplicatedSde;
+
+    #[test]
+    fn mirror_pair_uses_mirrored_noise() {
+        let sde = ReplicatedSde::new(Example1, 2);
+        let key = PrngKey::from_seed(3);
+        let (theta, x0) = sample_experiment_setup(key, 2, 2);
+        let out = antithetic_adjoint_gradients(
+            &sde,
+            &theta,
+            &x0,
+            0.0,
+            1.0,
+            200,
+            key,
+            &AdjointConfig::default(),
+        );
+        for i in 0..2 {
+            assert!(
+                (out.plus.w_terminal[i] + out.minus.w_terminal[i]).abs() < 1e-12,
+                "minus path must be the mirror of plus"
+            );
+        }
+        assert_ne!(out.plus.grad_theta, out.minus.grad_theta);
+    }
+
+    #[test]
+    fn antithetic_estimator_reduces_variance() {
+        // Compare the variance of the θ-gradient estimator across seeds:
+        // mean of 2 independent paths vs one antithetic pair (same total
+        // number of solves). GBM's gradient has a strong odd component in
+        // W_T, so antithetic coupling should shrink variance noticeably.
+        let dim = 1;
+        let sde = ReplicatedSde::new(Example1, dim);
+        let base = PrngKey::from_seed(4);
+        let (theta, x0) = sample_experiment_setup(base, dim, 2);
+        let cfg = AdjointConfig::default();
+        let n = 200;
+        let reps = 60;
+
+        let mut var = |antithetic: bool| -> f64 {
+            let mut samples = Vec::new();
+            for r in 0..reps {
+                let g = if antithetic {
+                    let out = antithetic_adjoint_gradients(
+                        &sde,
+                        &theta,
+                        &x0,
+                        0.0,
+                        1.0,
+                        n,
+                        base.fold_in(r),
+                        &cfg,
+                    );
+                    out.grad_theta[0]
+                } else {
+                    let a = stochastic_adjoint_gradients(
+                        &sde,
+                        &theta,
+                        &x0,
+                        0.0,
+                        1.0,
+                        n,
+                        base.fold_in(10_000 + 2 * r),
+                        &cfg,
+                    );
+                    let b = stochastic_adjoint_gradients(
+                        &sde,
+                        &theta,
+                        &x0,
+                        0.0,
+                        1.0,
+                        n,
+                        base.fold_in(10_001 + 2 * r),
+                        &cfg,
+                    );
+                    0.5 * (a.grad_theta[0] + b.grad_theta[0])
+                };
+                samples.push(g);
+            }
+            let m = samples.iter().sum::<f64>() / reps as f64;
+            samples.iter().map(|s| (s - m) * (s - m)).sum::<f64>() / (reps - 1) as f64
+        };
+
+        let v_indep = var(false);
+        let v_anti = var(true);
+        // ∂L/∂α = t·X_T is strictly monotone in W, the textbook case for
+        // antithetic coupling; require a clear (≥25%) variance cut.
+        assert!(
+            v_anti < 0.75 * v_indep,
+            "antithetic variance {v_anti:.3e} not < 0.75× independent {v_indep:.3e}"
+        );
+    }
+}

@@ -1,0 +1,150 @@
+//! Evaluation bundle for the augmented backward system of Algorithm 2.
+//!
+//! Augmented state: `(z, a_z, a_θ)` with the backward Stratonovich dynamics
+//! (Eq. 7 extended to parameters per §3.3 / App. 9.4), written in the
+//! *signed-step* convention (`dt = t_next − t < 0`,
+//! `dW = W(t_next) − W(t)`):
+//!
+//! ```text
+//! dz   =  b̃ dt           + σ ∘ dW              (retrace the path)
+//! da_z = −a_zᵀ∂b̃/∂z dt   − a_zᵀ∂σ/∂z ∘ dW     (state adjoint)
+//! da_θ = −a_zᵀ∂b̃/∂θ dt   − a_zᵀ∂σ/∂θ ∘ dW     (parameter adjoint)
+//! ```
+//!
+//! with `b̃` the Stratonovich-form drift. In this convention the sign
+//! bookkeeping of the paper's pseudocode (negate coefficients, negate
+//! noise, flip the clock) cancels into plain signed steps — see
+//! `adjoint::stochastic` for the integration loop.
+//!
+//! The `a_θ` block is a pure quadrature (nothing feeds back on it), but its
+//! noise term `a_zᵀ∂σ/∂θ ∘ dW` contracts *across* noise channels:
+//! `(a_zᵀ∂σ/∂θ)_j · dW = Σ_i a_i (∂σ_i/∂θ_j) dW_i`. [`AdjointOps`]
+//! therefore exposes the θ-diffusion VJP pre-weighted by the channel
+//! increments (`a ⊙ ΔW` fed through the accumulating VJP), which keeps the
+//! estimator exact even when a single parameter drives several channels
+//! (e.g. a shared diffusion scale).
+//!
+//! Per App. 9.4 the augmented system has commutative noise whenever the
+//! original SDE has diagonal noise, so the Heun (trapezoid) scheme used by
+//! the driver retains strong order 1.0 — it reproduces every term of the
+//! commutative Milstein update without second derivatives.
+
+use crate::sde::{Calculus, SdeVjp};
+
+/// One evaluation point of the augmented backward dynamics.
+///
+/// Buffers are owned by [`AdjointOps`] and reused; each `eval_*` call
+/// overwrites the corresponding slice.
+pub struct AdjointOps<'a, S: SdeVjp + ?Sized> {
+    sde: &'a S,
+    theta: Vec<f64>,
+    d: usize,
+    p: usize,
+    neg_a: Vec<f64>,
+    weighted_a: Vec<f64>,
+    scratch_z: Vec<f64>,
+    scratch_p: Vec<f64>,
+    /// Combined (drift+VJP) evaluations — NFE accounting in the paper's
+    /// "one drift + one diffusion evaluation" units.
+    pub nfe_drift: u64,
+    pub nfe_diffusion: u64,
+}
+
+impl<'a, S: SdeVjp + ?Sized> AdjointOps<'a, S> {
+    pub fn new(sde: &'a S, theta: &[f64]) -> Self {
+        let d = sde.state_dim();
+        let p = sde.param_dim();
+        assert_eq!(theta.len(), p, "AdjointOps: theta length mismatch");
+        AdjointOps {
+            sde,
+            theta: theta.to_vec(),
+            d,
+            p,
+            neg_a: vec![0.0; d],
+            weighted_a: vec![0.0; d],
+            scratch_z: vec![0.0; d],
+            scratch_p: vec![0.0; p],
+            nfe_drift: 0,
+            nfe_diffusion: 0,
+        }
+    }
+
+    /// Replace the parameter vector in place (e.g. a new per-interval
+    /// context block) without reallocating any scratch.
+    pub fn set_theta(&mut self, theta: &[f64]) {
+        assert_eq!(theta.len(), self.p, "set_theta: length mismatch");
+        self.theta.copy_from_slice(theta);
+    }
+
+    pub fn state_dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn par_dim(&self) -> usize {
+        self.p
+    }
+
+    /// The original SDE must be treated in Stratonovich form on the
+    /// backward pass; this reports what conversion (if any) happens.
+    pub fn native_calculus(&self) -> Calculus {
+        self.sde.calculus()
+    }
+
+    /// Drift-side evaluation at `(t, z, a)`:
+    /// * `b_out ← b̃(z,t)` (Stratonovich drift),
+    /// * `fa_out ← −aᵀ∂b̃/∂z`,
+    /// * `fth_out ← −aᵀ∂b̃/∂θ` (overwritten, not accumulated).
+    pub fn eval_drift(
+        &mut self,
+        t: f64,
+        z: &[f64],
+        a: &[f64],
+        b_out: &mut [f64],
+        fa_out: &mut [f64],
+        fth_out: &mut [f64],
+    ) {
+        self.nfe_drift += 1;
+        self.sde.drift_stratonovich(t, z, &self.theta, b_out);
+        for i in 0..self.d {
+            self.neg_a[i] = -a[i];
+        }
+        fa_out.fill(0.0);
+        fth_out.fill(0.0);
+        self.sde
+            .drift_vjp_stratonovich(t, z, &self.theta, &self.neg_a, fa_out, fth_out);
+    }
+
+    /// Diffusion-side evaluation at `(t, z, a)` with channel increments
+    /// `dw` (length d):
+    /// * `s_out ← σ(z,t)`,
+    /// * `ga_out ← −aᵀ∂σ/∂z` (componentwise `−a_i ∂σ_i/∂z_i`),
+    /// * `gth_out ← −Σ_i a_i dw_i ∂σ_i/∂θ` (ΔW already folded in).
+    pub fn eval_diffusion(
+        &mut self,
+        t: f64,
+        z: &[f64],
+        a: &[f64],
+        dw: &[f64],
+        s_out: &mut [f64],
+        ga_out: &mut [f64],
+        gth_out: &mut [f64],
+    ) {
+        self.nfe_diffusion += 1;
+        self.sde.diffusion(t, z, &self.theta, s_out);
+        for i in 0..self.d {
+            self.neg_a[i] = -a[i];
+            self.weighted_a[i] = -a[i] * dw[i];
+        }
+        ga_out.fill(0.0);
+        gth_out.fill(0.0);
+        // z-VJP with −a (unweighted: the driver multiplies by ΔW itself);
+        // θ-VJP with −a⊙ΔW (pre-weighted: cross-channel contraction).
+        // θ/z side-outputs of each call land in scratch and are discarded.
+        self.scratch_p.fill(0.0);
+        self.sde
+            .diffusion_vjp(t, z, &self.theta, &self.neg_a, ga_out, &mut self.scratch_p);
+        self.scratch_z.fill(0.0);
+        self.sde
+            .diffusion_vjp(t, z, &self.theta, &self.weighted_a, &mut self.scratch_z, gth_out);
+    }
+}

@@ -1,0 +1,273 @@
+//! Baseline: backpropagation through the operations of the solver
+//! (Giles & Glasserman 2006; "adjoint approach" in the finance literature;
+//! Table 1 row 2, the Fig 5(c) comparators).
+//!
+//! Forward: run a fixed-grid Euler–Maruyama or Milstein (Itô) solve,
+//! *storing the full state trajectory and every Brownian increment* —
+//! O(L·d) memory, the cost this paper's method removes. Backward: walk the
+//! tape in reverse, pulling the loss gradient through each step map with
+//! the SDE's VJPs:
+//!
+//! ```text
+//! EM step      z' = z + b·h + σ ⊙ ΔW
+//! pullback     āᵀ∂z'/∂z = ā + h·(āᵀ∂b/∂z) + (ā⊙ΔW)ᵀ∂σ/∂z
+//!              āᵀ∂z'/∂θ =      h·(āᵀ∂b/∂θ) + (ā⊙ΔW)ᵀ∂σ/∂θ
+//! Milstein adds the ½σσ'(ΔW²−h) term, whose pullback needs second
+//! derivatives of σ — supplied by `SdeVjp::ito_correction_vjp` (this is
+//! the "backpropagating through the Milstein solve requires evaluating
+//! high-order derivatives" cost the paper mentions in §7.1).
+//! ```
+
+use super::stochastic::GradientOutput;
+use crate::brownian::{BrownianMotion, BrownianPath};
+use crate::prng::PrngKey;
+use crate::sde::{Calculus, SdeVjp};
+use crate::solvers::{uniform_grid, Method, SolveStats};
+
+/// Gradients of `L = Σ_i z_T^(i)` by differentiating through the solver.
+///
+/// `method` must be `EulerMaruyama` or `MilsteinIto` (the two schemes the
+/// paper backpropagates through in Fig 5c). Returns the same
+/// [`GradientOutput`] as the stochastic adjoint; `noise_memory` reports the
+/// tape size (trajectory + increments), which is the honest analogue of
+/// Table 1's O(L) memory row.
+pub fn backprop_through_solver<S: SdeVjp + ?Sized>(
+    sde: &S,
+    theta: &[f64],
+    z0: &[f64],
+    t0: f64,
+    t1: f64,
+    n_steps: usize,
+    key: PrngKey,
+    method: Method,
+) -> GradientOutput {
+    assert!(
+        matches!(method, Method::EulerMaruyama | Method::MilsteinIto),
+        "backprop baseline supports Euler–Maruyama and Milstein (Itô); got {}",
+        method.name()
+    );
+    assert_eq!(
+        sde.calculus(),
+        Calculus::Ito,
+        "backprop baseline integrates the native Itô form"
+    );
+    let d = sde.state_dim();
+    let p = sde.param_dim();
+    let grid = uniform_grid(t0, t1, n_steps);
+    let mut bm = BrownianPath::new(key, d, t0, t1);
+
+    // ---- Forward pass with a full tape. -----------------------------
+    let mut tape_z = vec![0.0; (n_steps + 1) * d]; // states at grid points
+    let mut tape_dw = vec![0.0; n_steps * d]; // increments per step
+    tape_z[..d].copy_from_slice(z0);
+
+    let mut b = vec![0.0; d];
+    let mut s = vec![0.0; d];
+    let mut sp = vec![0.0; d];
+    let mut wa = vec![0.0; d];
+    let mut wb = vec![0.0; d];
+    let mut nfe_f = 0u64;
+    let mut nfe_g = 0u64;
+
+    bm.sample_into(grid[0], &mut wa);
+    for k in 0..n_steps {
+        let (t, tn) = (grid[k], grid[k + 1]);
+        let h = tn - t;
+        bm.sample_into(tn, &mut wb);
+        let (z_prev, z_rest) = tape_z.split_at_mut((k + 1) * d);
+        let z = &z_prev[k * d..];
+        let zn = &mut z_rest[..d];
+        let dw = &mut tape_dw[k * d..(k + 1) * d];
+        for i in 0..d {
+            dw[i] = wb[i] - wa[i];
+        }
+        sde.drift(t, z, theta, &mut b);
+        sde.diffusion(t, z, theta, &mut s);
+        nfe_f += 1;
+        nfe_g += 1;
+        match method {
+            Method::EulerMaruyama => {
+                for i in 0..d {
+                    zn[i] = z[i] + b[i] * h + s[i] * dw[i];
+                }
+            }
+            Method::MilsteinIto => {
+                sde.diffusion_dz_diag(t, z, theta, &mut sp);
+                for i in 0..d {
+                    zn[i] = z[i]
+                        + b[i] * h
+                        + s[i] * dw[i]
+                        + 0.5 * s[i] * sp[i] * (dw[i] * dw[i] - h);
+                }
+            }
+            _ => unreachable!(),
+        }
+        wa.copy_from_slice(&wb);
+    }
+    let z_t = tape_z[n_steps * d..].to_vec();
+
+    // ---- Backward sweep over the tape. ------------------------------
+    let mut a = vec![1.0; d]; // ∂L/∂z_T for L = Σ z_T
+    let mut a_new = vec![0.0; d];
+    let mut grad_theta = vec![0.0; p];
+    let mut weighted = vec![0.0; d];
+    let mut nbp = 0u64;
+
+    for k in (0..n_steps).rev() {
+        let t = grid[k];
+        let h = grid[k + 1] - grid[k];
+        let z = &tape_z[k * d..(k + 1) * d];
+        let dw = &tape_dw[k * d..(k + 1) * d];
+
+        // a_new = a + h·(aᵀ∂b/∂z) + (a⊙ΔW)ᵀ∂σ/∂z  (+ Milstein term)
+        a_new.copy_from_slice(&a);
+        // drift contribution: scale adjoint by h.
+        for i in 0..d {
+            weighted[i] = a[i] * h;
+        }
+        sde.drift_vjp(t, z, theta, &weighted, &mut a_new, &mut grad_theta);
+        // diffusion contribution: adjoint weighted by ΔW per channel.
+        for i in 0..d {
+            weighted[i] = a[i] * dw[i];
+        }
+        sde.diffusion_vjp(t, z, theta, &weighted, &mut a_new, &mut grad_theta);
+        if method == Method::MilsteinIto {
+            // correction term c = ½σσ' times (ΔW²−h): adjoint weighted by
+            // (ΔW²−h) pulled through ∂c/∂(z,θ) — second derivatives of σ.
+            for i in 0..d {
+                weighted[i] = a[i] * (dw[i] * dw[i] - h);
+            }
+            sde.ito_correction_vjp(t, z, theta, &weighted, &mut a_new, &mut grad_theta);
+        }
+        std::mem::swap(&mut a, &mut a_new);
+        nbp += 1;
+    }
+
+    GradientOutput {
+        z_terminal: z_t,
+        grad_z0: a,
+        grad_theta,
+        z0_reconstructed: z0.to_vec(), // tape holds z0 exactly
+        forward_stats: SolveStats {
+            steps: n_steps as u64,
+            rejected: 0,
+            nfe_drift: nfe_f,
+            nfe_diffusion: nfe_g,
+        },
+        backward_stats: SolveStats {
+            steps: nbp,
+            rejected: 0,
+            nfe_drift: nbp,
+            nfe_diffusion: nbp,
+        },
+        // Tape: (L+1)·d states + L·d increments + stored noise.
+        noise_memory: tape_z.len() + tape_dw.len() + bm.memory_footprint(),
+        w_terminal: bm.sample(t1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sde::problems::{sample_experiment_setup, Example1, Example2};
+    use crate::sde::ReplicatedSde;
+
+    /// Finite-difference check: perturb θ_j, re-run the *same* discrete
+    /// solve on the same Brownian path, difference the losses. Backprop
+    /// must match the discrete solve's gradient to FD accuracy — this is
+    /// exact (same computational graph), unlike the adjoint which matches
+    /// only in the h→0 limit.
+    fn fd_check<P: crate::sde::ScalarSde + Copy>(problem: P, method: Method, seed: u64) {
+        let dim = 3;
+        let sde = ReplicatedSde::new(problem, dim);
+        let key = PrngKey::from_seed(seed);
+        let (theta, x0) = sample_experiment_setup(key, dim, problem.nparams());
+        let n_steps = 64;
+
+        let loss = |th: &[f64], x: &[f64]| -> f64 {
+            let out = backprop_through_solver(&sde, th, x, 0.0, 1.0, n_steps, key, method);
+            out.z_terminal.iter().sum()
+        };
+
+        let out = backprop_through_solver(&sde, &theta, &x0, 0.0, 1.0, n_steps, key, method);
+        let eps = 1e-6;
+        for j in 0..theta.len() {
+            let mut tp = theta.clone();
+            tp[j] += eps;
+            let hi = loss(&tp, &x0);
+            tp[j] -= 2.0 * eps;
+            let lo = loss(&tp, &x0);
+            let fd = (hi - lo) / (2.0 * eps);
+            assert!(
+                (fd - out.grad_theta[j]).abs() < 1e-4 * fd.abs().max(1.0),
+                "θ[{j}]: fd {fd} vs bp {}",
+                out.grad_theta[j]
+            );
+        }
+        for i in 0..dim {
+            let mut xp = x0.clone();
+            xp[i] += eps;
+            let hi = loss(&theta, &xp);
+            xp[i] -= 2.0 * eps;
+            let lo = loss(&theta, &xp);
+            let fd = (hi - lo) / (2.0 * eps);
+            assert!(
+                (fd - out.grad_z0[i]).abs() < 1e-4 * fd.abs().max(1.0),
+                "z0[{i}]: fd {fd} vs bp {}",
+                out.grad_z0[i]
+            );
+        }
+    }
+
+    #[test]
+    fn euler_backprop_is_exact_gradient_of_discrete_solve() {
+        fd_check(Example1, Method::EulerMaruyama, 3);
+        fd_check(Example2, Method::EulerMaruyama, 4);
+    }
+
+    #[test]
+    fn milstein_backprop_is_exact_gradient_of_discrete_solve() {
+        fd_check(Example1, Method::MilsteinIto, 5);
+        fd_check(Example2, Method::MilsteinIto, 6);
+    }
+
+    #[test]
+    fn backprop_agrees_with_stochastic_adjoint_in_the_limit() {
+        use crate::adjoint::stochastic::{stochastic_adjoint_gradients, AdjointConfig};
+        let dim = 2;
+        let sde = ReplicatedSde::new(Example1, dim);
+        let key = PrngKey::from_seed(8);
+        let (theta, x0) = sample_experiment_setup(key, dim, 2);
+        let n = 8000;
+        let bp = backprop_through_solver(&sde, &theta, &x0, 0.0, 1.0, n, key, Method::MilsteinIto);
+        let adj = stochastic_adjoint_gradients(
+            &sde,
+            &theta,
+            &x0,
+            0.0,
+            1.0,
+            n,
+            key,
+            &AdjointConfig::default(),
+        );
+        for j in 0..theta.len() {
+            let rel = (bp.grad_theta[j] - adj.grad_theta[j]).abs()
+                / adj.grad_theta[j].abs().max(1e-3);
+            assert!(rel < 0.02, "θ[{j}]: bp {} vs adj {}", bp.grad_theta[j], adj.grad_theta[j]);
+        }
+    }
+
+    #[test]
+    fn tape_memory_scales_linearly() {
+        let sde = ReplicatedSde::new(Example1, 2);
+        let key = PrngKey::from_seed(9);
+        let (theta, x0) = sample_experiment_setup(key, 2, 2);
+        let m64 =
+            backprop_through_solver(&sde, &theta, &x0, 0.0, 1.0, 64, key, Method::EulerMaruyama)
+                .noise_memory;
+        let m512 =
+            backprop_through_solver(&sde, &theta, &x0, 0.0, 1.0, 512, key, Method::EulerMaruyama)
+                .noise_memory;
+        assert!(m512 > 6 * m64, "memory should scale ~linearly: {m64} -> {m512}");
+    }
+}

@@ -1,0 +1,36 @@
+//! Gradient computation for SDE solutions (paper §3, Algorithm 2).
+//!
+//! Three estimators of `∂L(Z_T)/∂(z_0, θ)` at matched Brownian paths:
+//!
+//! * [`stochastic`] — **the paper's contribution**: the stochastic adjoint
+//!   sensitivity method. Solves the augmented backward Stratonovich SDE
+//!   over `(z, a_z, a_θ)` whose coefficients are vector-Jacobian products.
+//!   O(1) memory (with a [`crate::brownian::VirtualBrownianTree`]) or
+//!   O(L) (with a stored path), O(L) time.
+//! * [`backprop`] — baseline: reverse-mode differentiation through the
+//!   operations of the solver (Giles & Glasserman's "smoking adjoints").
+//!   O(L) memory, O(L) time.
+//! * [`pathwise`] — baseline: forward sensitivity analysis, propagating the
+//!   full Jacobian `∂z_t/∂(z_0, θ)` alongside the state. O(1) memory in L
+//!   but O(L·D) time (Jacobian rows are materialized from VJPs).
+//!
+//! [`reconstruct`] demonstrates the Figure 2 phenomenon: backward-in-time
+//! simulation reconstructs the forward path only in Stratonovich form.
+
+pub mod adaptive_grad;
+pub mod antithetic;
+pub mod augmented;
+pub mod backprop;
+pub mod pathwise;
+pub mod reconstruct;
+pub mod stochastic;
+
+pub use adaptive_grad::{adaptive_adjoint_gradients, AdaptiveGradOutput, ChannelMappedBrownian};
+pub use antithetic::{antithetic_adjoint_gradients, AntitheticOutput};
+pub use augmented::AdjointOps;
+pub use backprop::backprop_through_solver;
+pub use pathwise::forward_pathwise_gradients;
+pub use stochastic::{
+    stochastic_adjoint_gradients, stochastic_adjoint_multi_obs, AdjointConfig, BackwardSolver,
+    GradientOutput, NoiseMode,
+};

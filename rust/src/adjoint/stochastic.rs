@@ -1,0 +1,750 @@
+//! The stochastic adjoint sensitivity method (Algorithm 2).
+//!
+//! Forward pass: integrate the SDE from `z_0` to `z_T`, keeping only the
+//! terminal state. Backward pass: integrate the augmented backward
+//! Stratonovich system `(z, a_z, a_θ)` from `T` down to `0` against the
+//! *same* Brownian sample path, starting from
+//! `(z_T, ∂L/∂z_T, 0)`; on arrival, `a_z = ∂L/∂z_0` and `a_θ = ∂L/∂θ`.
+//!
+//! No intermediate state is stored — memory is O(1) in the number of steps
+//! when noise comes from a [`VirtualBrownianTree`], or O(L) when it comes
+//! from a stored [`BrownianPath`] (the paper's Table 1 rows 3 and 4).
+//!
+//! The backward integrator is a Stratonovich Heun scheme hand-unrolled over
+//! the three blocks (see [`super::augmented`] for why that is strong order
+//! 1.0 here and how the cross-channel θ-quadrature is handled exactly).
+
+use super::augmented::AdjointOps;
+use crate::brownian::{BrownianMotion, BrownianPath, VirtualBrownianTree};
+use crate::prng::PrngKey;
+use crate::sde::{ForwardFunc, SdeVjp};
+use crate::solvers::{integrate_grid, uniform_grid, Method, SolveStats};
+
+/// Where the Brownian sample path comes from.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NoiseMode {
+    /// Store every queried value (O(L) memory; the paper's experiments).
+    StoredPath,
+    /// Virtual Brownian tree with the given bisection tolerance
+    /// (O(1) memory, O(log 1/ε) per query; paper §4).
+    VirtualTree { tol: f64 },
+}
+
+/// Configuration of an adjoint gradient computation.
+#[derive(Clone, Copy, Debug)]
+pub struct AdjointConfig {
+    /// Scheme for the forward pass. Itô schemes integrate the native Itô
+    /// form; Stratonovich schemes integrate the converted form. Default:
+    /// Milstein (Itô) — strong order 1.0, as in the paper's Fig 5.
+    pub forward_method: Method,
+    /// Noise source shared by both passes.
+    pub noise: NoiseMode,
+    /// Drive the solve with the mirrored path `−W` (antithetic coupling,
+    /// §8 / [`super::antithetic`]). `−W` is itself a standard Wiener
+    /// process, so everything else is unchanged.
+    pub mirror: bool,
+}
+
+impl Default for AdjointConfig {
+    fn default() -> Self {
+        AdjointConfig {
+            forward_method: Method::MilsteinIto,
+            noise: NoiseMode::StoredPath,
+            mirror: false,
+        }
+    }
+}
+
+/// Result of an adjoint gradient computation.
+#[derive(Clone, Debug)]
+pub struct GradientOutput {
+    /// Terminal state `z_T` of the forward solve.
+    pub z_terminal: Vec<f64>,
+    /// `∂L/∂z_0`.
+    pub grad_z0: Vec<f64>,
+    /// `∂L/∂θ`.
+    pub grad_theta: Vec<f64>,
+    /// The backward pass's reconstruction of `z_0` (diagnostic: should
+    /// match the true `z_0` up to discretization error — Fig 2).
+    pub z0_reconstructed: Vec<f64>,
+    pub forward_stats: SolveStats,
+    pub backward_stats: SolveStats,
+    /// Live f64s held by the noise source at the end (Table 1 memory).
+    pub noise_memory: usize,
+    /// The realized Brownian value `W(t1)` of the path that drove the
+    /// solve. Exposed because closed-form solutions/gradients of the §7.1
+    /// problems are functions of `W_T`, and a stored [`BrownianPath`] is
+    /// query-order dependent — re-creating it from the seed and asking for
+    /// `W(T)` first would reveal a different path.
+    pub w_terminal: Vec<f64>,
+}
+
+enum NoiseInner {
+    Path(BrownianPath),
+    Tree(VirtualBrownianTree),
+}
+
+struct Noise {
+    inner: NoiseInner,
+    /// Negate every sample (antithetic path −W).
+    mirror: bool,
+}
+
+impl Noise {
+    fn new(mode: NoiseMode, key: PrngKey, d: usize, t0: f64, t1: f64, mirror: bool) -> Noise {
+        let inner = match mode {
+            NoiseMode::StoredPath => NoiseInner::Path(BrownianPath::new(key, d, t0, t1)),
+            NoiseMode::VirtualTree { tol } => {
+                NoiseInner::Tree(VirtualBrownianTree::new(key, d, t0, t1, tol))
+            }
+        };
+        Noise { inner, mirror }
+    }
+}
+
+impl BrownianMotion for Noise {
+    fn dim(&self) -> usize {
+        match &self.inner {
+            NoiseInner::Path(p) => p.dim(),
+            NoiseInner::Tree(t) => t.dim(),
+        }
+    }
+    fn span(&self) -> (f64, f64) {
+        match &self.inner {
+            NoiseInner::Path(p) => p.span(),
+            NoiseInner::Tree(t) => t.span(),
+        }
+    }
+    fn sample_into(&mut self, t: f64, out: &mut [f64]) {
+        match &mut self.inner {
+            NoiseInner::Path(p) => p.sample_into(t, out),
+            NoiseInner::Tree(tr) => tr.sample_into(t, out),
+        }
+        if self.mirror {
+            for v in out.iter_mut() {
+                *v = -*v;
+            }
+        }
+    }
+    fn memory_footprint(&self) -> usize {
+        match &self.inner {
+            NoiseInner::Path(p) => p.memory_footprint(),
+            NoiseInner::Tree(t) => t.memory_footprint(),
+        }
+    }
+}
+
+/// Scratch buffers for the hand-unrolled backward Heun step.
+struct BackwardScratch {
+    b0: Vec<f64>,
+    s0: Vec<f64>,
+    fa0: Vec<f64>,
+    ga0: Vec<f64>,
+    fth0: Vec<f64>,
+    gth0: Vec<f64>,
+    b1: Vec<f64>,
+    s1: Vec<f64>,
+    fa1: Vec<f64>,
+    ga1: Vec<f64>,
+    fth1: Vec<f64>,
+    gth1: Vec<f64>,
+    zp: Vec<f64>,
+    ap: Vec<f64>,
+    dw: Vec<f64>,
+    wa: Vec<f64>,
+    wb: Vec<f64>,
+}
+
+impl BackwardScratch {
+    fn new(d: usize, p: usize) -> Self {
+        BackwardScratch {
+            b0: vec![0.0; d],
+            s0: vec![0.0; d],
+            fa0: vec![0.0; d],
+            ga0: vec![0.0; d],
+            fth0: vec![0.0; p],
+            gth0: vec![0.0; p],
+            b1: vec![0.0; d],
+            s1: vec![0.0; d],
+            fa1: vec![0.0; d],
+            ga1: vec![0.0; d],
+            fth1: vec![0.0; p],
+            gth1: vec![0.0; p],
+            zp: vec![0.0; d],
+            ap: vec![0.0; d],
+            dw: vec![0.0; d],
+            wa: vec![0.0; d],
+            wb: vec![0.0; d],
+        }
+    }
+}
+
+/// One backward Heun step from `t` to `tn` (`tn < t`), updating `(z, a,
+/// ath)` in place. `dw = W(tn) − W(t)` must already be in `sc.dw`.
+fn backward_heun_step<S: SdeVjp + ?Sized>(
+    ops: &mut AdjointOps<S>,
+    t: f64,
+    tn: f64,
+    z: &mut [f64],
+    a: &mut [f64],
+    ath: &mut [f64],
+    sc: &mut BackwardScratch,
+) {
+    let d = z.len();
+    let p = ath.len();
+    let h = tn - t; // signed (negative)
+
+    // Evaluate at the left (later-time) point.
+    ops.eval_drift(t, z, a, &mut sc.b0, &mut sc.fa0, &mut sc.fth0);
+    ops.eval_diffusion(t, z, a, &sc.dw, &mut sc.s0, &mut sc.ga0, &mut sc.gth0);
+
+    // Euler predictor for (z, a).
+    for i in 0..d {
+        sc.zp[i] = z[i] + sc.b0[i] * h + sc.s0[i] * sc.dw[i];
+        sc.ap[i] = a[i] + sc.fa0[i] * h + sc.ga0[i] * sc.dw[i];
+    }
+
+    // Evaluate at the predicted (earlier-time) point.
+    ops.eval_drift(tn, &sc.zp, &sc.ap, &mut sc.b1, &mut sc.fa1, &mut sc.fth1);
+    ops.eval_diffusion(tn, &sc.zp, &sc.ap, &sc.dw, &mut sc.s1, &mut sc.ga1, &mut sc.gth1);
+
+    // Trapezoid corrector.
+    for i in 0..d {
+        z[i] += 0.5 * (sc.b0[i] + sc.b1[i]) * h + 0.5 * (sc.s0[i] + sc.s1[i]) * sc.dw[i];
+        a[i] += 0.5 * (sc.fa0[i] + sc.fa1[i]) * h + 0.5 * (sc.ga0[i] + sc.ga1[i]) * sc.dw[i];
+    }
+    for j in 0..p {
+        // gth already carries the ΔW contraction (see AdjointOps).
+        ath[j] += 0.5 * (sc.fth0[j] + sc.fth1[j]) * h + 0.5 * (sc.gth0[j] + sc.gth1[j]);
+    }
+}
+
+/// Reusable backward-pass driver for callers that orchestrate their own
+/// forward pass and loss structure (the latent-SDE trainer integrates
+/// interval-by-interval with per-interval context parameters).
+///
+/// Holds the scratch buffers; `solve_interval` walks one descending grid,
+/// updating `(z, a, ath)` in place against any Brownian source.
+pub struct BackwardSolver<'a, S: SdeVjp + ?Sized> {
+    ops: AdjointOps<'a, S>,
+    sc: BackwardScratch,
+}
+
+impl<'a, S: SdeVjp + ?Sized> BackwardSolver<'a, S> {
+    pub fn new(sde: &'a S, theta: &[f64]) -> Self {
+        let d = sde.state_dim();
+        let p = sde.param_dim();
+        BackwardSolver { ops: AdjointOps::new(sde, theta), sc: BackwardScratch::new(d, p) }
+    }
+
+    /// Swap the parameter vector (e.g. the per-interval context tail)
+    /// without reallocating scratch — the latent trainer calls this once
+    /// per observation interval.
+    pub fn set_theta(&mut self, theta: &[f64]) {
+        self.ops.set_theta(theta);
+    }
+
+    /// Integrate the augmented backward system along `grid` (descending),
+    /// updating `z` (path reconstruction), `a` (state adjoint) and `ath`
+    /// (parameter adjoint, accumulated) in place.
+    pub fn solve_interval<B: BrownianMotion>(
+        &mut self,
+        grid: &[f64],
+        z: &mut [f64],
+        a: &mut [f64],
+        ath: &mut [f64],
+        bm: &mut B,
+        stats: &mut SolveStats,
+    ) {
+        assert!(grid.len() >= 2 && grid.windows(2).all(|w| w[1] < w[0]),
+            "BackwardSolver: grid must be descending");
+        let d = z.len();
+        let nf0 = self.ops.nfe_drift;
+        let ng0 = self.ops.nfe_diffusion;
+        bm.sample_into(grid[0], &mut self.sc.wa);
+        for k in 0..grid.len() - 1 {
+            let (t, tn) = (grid[k], grid[k + 1]);
+            bm.sample_into(tn, &mut self.sc.wb);
+            for i in 0..d {
+                self.sc.dw[i] = self.sc.wb[i] - self.sc.wa[i];
+            }
+            backward_heun_step(&mut self.ops, t, tn, z, a, ath, &mut self.sc);
+            self.sc.wa.copy_from_slice(&self.sc.wb);
+            stats.steps += 1;
+        }
+        stats.nfe_drift += self.ops.nfe_drift - nf0;
+        stats.nfe_diffusion += self.ops.nfe_diffusion - ng0;
+    }
+}
+
+/// Gradient of `L = Σ_i z_T^(i)` via the stochastic adjoint.
+///
+/// The loss used throughout the paper's numerical studies (§7.1): its
+/// gradient at the terminal state is the ones vector.
+pub fn stochastic_adjoint_gradients<S: SdeVjp + ?Sized>(
+    sde: &S,
+    theta: &[f64],
+    z0: &[f64],
+    t0: f64,
+    t1: f64,
+    n_steps: usize,
+    key: PrngKey,
+    cfg: &AdjointConfig,
+) -> GradientOutput {
+    stochastic_adjoint_with_loss(sde, theta, z0, t0, t1, n_steps, key, cfg, |_z| {
+        vec![1.0; z0.len()]
+    })
+}
+
+/// Gradient of an arbitrary scalar loss `L(z_T)` via the stochastic
+/// adjoint: `loss_grad` maps the realized terminal state to `∂L/∂z_T`.
+#[allow(clippy::too_many_arguments)]
+pub fn stochastic_adjoint_with_loss<S, F>(
+    sde: &S,
+    theta: &[f64],
+    z0: &[f64],
+    t0: f64,
+    t1: f64,
+    n_steps: usize,
+    key: PrngKey,
+    cfg: &AdjointConfig,
+    loss_grad: F,
+) -> GradientOutput
+where
+    S: SdeVjp + ?Sized,
+    F: FnOnce(&[f64]) -> Vec<f64>,
+{
+    let d = sde.state_dim();
+    let grid = uniform_grid(t0, t1, n_steps);
+    let mut noise = Noise::new(cfg.noise, key, d, t0, t1, cfg.mirror);
+
+    // Forward pass: terminal state only.
+    let mut z_t = vec![0.0; d];
+    let forward_stats = {
+        let mut sys = ForwardFunc::for_method(sde, theta, cfg.forward_method);
+        integrate_grid(&mut sys, cfg.forward_method, z0, &grid, &mut noise, &mut z_t)
+    };
+
+    let w_terminal = noise.sample(t1);
+
+    // Backward pass over the reversed grid.
+    let grad_l = loss_grad(&z_t);
+    assert_eq!(grad_l.len(), d, "loss gradient has wrong dimension");
+    let (z0_rec, grad_z0, grad_theta, backward_stats) =
+        backward_pass(sde, theta, &z_t, &grad_l, &grid, &mut noise);
+
+    GradientOutput {
+        z_terminal: z_t,
+        grad_z0,
+        grad_theta,
+        z0_reconstructed: z0_rec,
+        forward_stats,
+        backward_stats,
+        noise_memory: noise.memory_footprint(),
+        w_terminal,
+    }
+}
+
+/// Multi-observation adjoint (App. 9.12's loop): the loss is
+/// `L = Σ_k ℓ_k(z_{t_k})` over observation times `obs_times` (ascending,
+/// all in `(t0, t1]`, last one = t1). `loss_grads` receives the forward
+/// states at all observation times (row-major `n_obs × d`) and returns all
+/// `∂L/∂z_{t_k}` in the same layout. The backward pass injects each
+/// gradient when it crosses the corresponding time.
+#[allow(clippy::too_many_arguments)]
+pub fn stochastic_adjoint_multi_obs<S, F>(
+    sde: &S,
+    theta: &[f64],
+    z0: &[f64],
+    t0: f64,
+    obs_times: &[f64],
+    steps_per_interval: usize,
+    key: PrngKey,
+    cfg: &AdjointConfig,
+    loss_grads: F,
+) -> GradientOutput
+where
+    S: SdeVjp + ?Sized,
+    F: FnOnce(&[f64]) -> Vec<f64>,
+{
+    let d = sde.state_dim();
+    let n_obs = obs_times.len();
+    assert!(n_obs > 0, "need at least one observation time");
+    assert!(
+        obs_times.windows(2).all(|w| w[1] > w[0]) && obs_times[0] > t0,
+        "obs_times must be ascending and after t0"
+    );
+    let t1 = obs_times[n_obs - 1];
+    let mut noise = Noise::new(cfg.noise, key, d, t0, t1, cfg.mirror);
+
+    // Forward: integrate interval by interval, saving states at obs times.
+    let mut z_obs = vec![0.0; n_obs * d];
+    let mut z = z0.to_vec();
+    let mut forward_stats = SolveStats::default();
+    let mut t_lo = t0;
+    for (k, &t_hi) in obs_times.iter().enumerate() {
+        let grid = uniform_grid(t_lo, t_hi, steps_per_interval);
+        let mut sys = ForwardFunc::for_method(sde, theta, cfg.forward_method);
+        let mut z_next = vec![0.0; d];
+        let st = integrate_grid(&mut sys, cfg.forward_method, &z, &grid, &mut noise, &mut z_next);
+        accumulate_stats(&mut forward_stats, &st);
+        z.copy_from_slice(&z_next);
+        z_obs[k * d..(k + 1) * d].copy_from_slice(&z);
+        t_lo = t_hi;
+    }
+
+    let w_terminal = noise.sample(t1);
+
+    // Loss gradients at every observation.
+    let grads = loss_grads(&z_obs);
+    assert_eq!(grads.len(), n_obs * d, "loss_grads returned wrong layout");
+
+    // Backward: start at the last obs with its gradient; add each earlier
+    // obs gradient as the solve crosses it.
+    let p = sde.param_dim();
+    let mut ops = AdjointOps::new(sde, theta);
+    let mut sc = BackwardScratch::new(d, p);
+    let mut a = grads[(n_obs - 1) * d..].to_vec();
+    let mut ath = vec![0.0; p];
+    let mut zb = z_obs[(n_obs - 1) * d..].to_vec();
+    let mut backward_stats = SolveStats::default();
+
+    for k in (0..n_obs).rev() {
+        let t_hi = obs_times[k];
+        let t_lo = if k == 0 { t0 } else { obs_times[k - 1] };
+        let grid = uniform_grid(t_hi, t_lo, steps_per_interval); // descending
+        run_backward_grid(&mut ops, &grid, &mut zb, &mut a, &mut ath, &mut sc, &mut noise, &mut backward_stats);
+        if k > 0 {
+            for i in 0..d {
+                a[i] += grads[(k - 1) * d + i];
+            }
+            // Re-anchor the path reconstruction at the stored state to
+            // avoid compounding reconstruction drift across intervals.
+            zb.copy_from_slice(&z_obs[(k - 1) * d..k * d]);
+        }
+    }
+
+    GradientOutput {
+        z_terminal: z_obs[(n_obs - 1) * d..].to_vec(),
+        grad_z0: a,
+        grad_theta: ath,
+        z0_reconstructed: zb,
+        forward_stats,
+        backward_stats,
+        noise_memory: noise.memory_footprint(),
+        w_terminal,
+    }
+}
+
+/// The backward pass over a descending grid; returns
+/// `(z0_reconstructed, grad_z0, grad_theta, stats)`.
+fn backward_pass<S: SdeVjp + ?Sized>(
+    sde: &S,
+    theta: &[f64],
+    z_t: &[f64],
+    grad_l: &[f64],
+    forward_grid: &[f64],
+    noise: &mut Noise,
+) -> (Vec<f64>, Vec<f64>, Vec<f64>, SolveStats) {
+    let d = sde.state_dim();
+    let p = sde.param_dim();
+    let mut ops = AdjointOps::new(sde, theta);
+    let mut sc = BackwardScratch::new(d, p);
+
+    let mut z = z_t.to_vec();
+    let mut a = grad_l.to_vec();
+    let mut ath = vec![0.0; p];
+
+    let grid: Vec<f64> = forward_grid.iter().rev().copied().collect();
+    let mut stats = SolveStats::default();
+    run_backward_grid(&mut ops, &grid, &mut z, &mut a, &mut ath, &mut sc, noise, &mut stats);
+    (z, a, ath, stats)
+}
+
+/// Walk a descending grid with the backward Heun stepper.
+#[allow(clippy::too_many_arguments)]
+fn run_backward_grid<S: SdeVjp + ?Sized>(
+    ops: &mut AdjointOps<S>,
+    grid: &[f64],
+    z: &mut [f64],
+    a: &mut [f64],
+    ath: &mut [f64],
+    sc: &mut BackwardScratch,
+    noise: &mut Noise,
+    stats: &mut SolveStats,
+) {
+    let d = z.len();
+    let nf0 = ops.nfe_drift;
+    let ng0 = ops.nfe_diffusion;
+    noise.sample_into(grid[0], &mut sc.wa);
+    for k in 0..grid.len() - 1 {
+        let (t, tn) = (grid[k], grid[k + 1]);
+        noise.sample_into(tn, &mut sc.wb);
+        for i in 0..d {
+            sc.dw[i] = sc.wb[i] - sc.wa[i];
+        }
+        backward_heun_step(ops, t, tn, z, a, ath, sc);
+        sc.wa.copy_from_slice(&sc.wb);
+        stats.steps += 1;
+    }
+    stats.nfe_drift += ops.nfe_drift - nf0;
+    stats.nfe_diffusion += ops.nfe_diffusion - ng0;
+}
+
+fn accumulate_stats(total: &mut SolveStats, one: &SolveStats) {
+    total.steps += one.steps;
+    total.rejected += one.rejected;
+    total.nfe_drift += one.nfe_drift;
+    total.nfe_diffusion += one.nfe_diffusion;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sde::problems::{sample_experiment_setup, Example1, Example2, Example3};
+    use crate::sde::{ReplicatedSde, ScalarSde};
+
+    /// Shared harness: adjoint gradient vs analytic pathwise gradient for a
+    /// replicated scalar problem. Returns (max_rel_err_x0, max_rel_err_th).
+    fn adjoint_vs_analytic<P: ScalarSde + Copy>(
+        problem: P,
+        dim: usize,
+        n_steps: usize,
+        seed: u64,
+        cfg: &AdjointConfig,
+    ) -> (f64, f64) {
+        let sde = ReplicatedSde::new(problem, dim);
+        let key = PrngKey::from_seed(seed);
+        let (theta, x0) = sample_experiment_setup(key, dim, problem.nparams());
+        let out = stochastic_adjoint_gradients(&sde, &theta, &x0, 0.0, 1.0, n_steps, key, cfg);
+
+        // Ground truth from the closed form at the realized W_T.
+        let w_t = out.w_terminal.clone();
+        let mut g_x0 = vec![0.0; dim];
+        let mut g_th = vec![0.0; theta.len()];
+        sde.analytic_loss_gradients(1.0, &x0, &theta, &w_t, &mut g_x0, &mut g_th);
+
+        let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-3);
+        let e_x0 = (0..dim).map(|i| rel(out.grad_z0[i], g_x0[i])).fold(0.0, f64::max);
+        let e_th = (0..theta.len()).map(|j| rel(out.grad_theta[j], g_th[j])).fold(0.0, f64::max);
+        (e_x0, e_th)
+    }
+
+    #[test]
+    fn example1_gradients_match_analytic() {
+        let cfg = AdjointConfig::default();
+        let (ex0, eth) = adjoint_vs_analytic(Example1, 4, 4000, 42, &cfg);
+        assert!(ex0 < 0.02, "x0 gradient rel err {ex0}");
+        assert!(eth < 0.02, "theta gradient rel err {eth}");
+    }
+
+    #[test]
+    fn example2_gradients_match_analytic() {
+        let cfg = AdjointConfig::default();
+        let (ex0, eth) = adjoint_vs_analytic(Example2, 4, 4000, 43, &cfg);
+        assert!(ex0 < 0.02, "x0 gradient rel err {ex0}");
+        assert!(eth < 0.02, "theta gradient rel err {eth}");
+    }
+
+    #[test]
+    fn example3_gradients_match_analytic() {
+        let cfg = AdjointConfig::default();
+        let (ex0, eth) = adjoint_vs_analytic(Example3, 4, 4000, 44, &cfg);
+        assert!(ex0 < 0.02, "x0 gradient rel err {ex0}");
+        assert!(eth < 0.02, "theta gradient rel err {eth}");
+    }
+
+    #[test]
+    fn virtual_tree_matches_stored_path_gradients() {
+        // With a tight tree tolerance both noise sources realize (almost)
+        // the same sample path law; gradients from the same seed won't be
+        // equal (different path realizations), but each must individually
+        // converge to its own analytic value — covered above. Here we
+        // check the tree path gives finite, consistent results and O(1)
+        // memory.
+        let cfg_tree = AdjointConfig {
+            noise: NoiseMode::VirtualTree { tol: 1e-8 },
+            ..Default::default()
+        };
+        let (ex0, eth) = adjoint_vs_analytic(Example1, 3, 3000, 45, &cfg_tree);
+        assert!(ex0 < 0.03, "x0 gradient rel err {ex0}");
+        assert!(eth < 0.03, "theta gradient rel err {eth}");
+    }
+
+    #[test]
+    fn tree_memory_constant_path_memory_linear() {
+        let sde = ReplicatedSde::new(Example1, 2);
+        let key = PrngKey::from_seed(9);
+        let (theta, x0) = sample_experiment_setup(key, 2, 2);
+        let out_tree = stochastic_adjoint_gradients(
+            &sde,
+            &theta,
+            &x0,
+            0.0,
+            1.0,
+            512,
+            key,
+            &AdjointConfig { noise: NoiseMode::VirtualTree { tol: 1e-7 }, ..Default::default() },
+        );
+        let out_path = stochastic_adjoint_gradients(
+            &sde,
+            &theta,
+            &x0,
+            0.0,
+            1.0,
+            512,
+            key,
+            &AdjointConfig::default(),
+        );
+        assert!(out_tree.noise_memory < 32, "tree memory {}", out_tree.noise_memory);
+        assert!(out_path.noise_memory > 512, "path memory {}", out_path.noise_memory);
+    }
+
+    #[test]
+    fn backward_pass_reconstructs_initial_state() {
+        // The z-block of the backward solve retraces the forward path
+        // (Theorem 2.1b); with Stratonovich stepping both ways the
+        // reconstruction error is small (this is Fig 2's "right" curve).
+        let sde = ReplicatedSde::new(Example1, 3);
+        let key = PrngKey::from_seed(50);
+        let (theta, x0) = sample_experiment_setup(key, 3, 2);
+        let cfg = AdjointConfig { forward_method: Method::Heun, ..Default::default() };
+        let out = stochastic_adjoint_gradients(&sde, &theta, &x0, 0.0, 1.0, 2000, key, &cfg);
+        for i in 0..3 {
+            assert!(
+                (out.z0_reconstructed[i] - x0[i]).abs() < 0.01,
+                "dim {i}: reconstructed {} vs {}",
+                out.z0_reconstructed[i],
+                x0[i]
+            );
+        }
+    }
+
+    #[test]
+    fn gradient_error_decreases_with_step_size() {
+        // Fig 5(a): error vs fixed step size, averaged over Brownian paths
+        // (the figure repeats with 64 sample paths; 16 suffices here).
+        let mut errs = Vec::new();
+        for &n in &[64usize, 512, 4096] {
+            let mut acc = 0.0;
+            for rep in 0..16 {
+                let (_, eth) =
+                    adjoint_vs_analytic(Example2, 2, n, 77 + rep, &AdjointConfig::default());
+                acc += eth;
+            }
+            errs.push(acc / 16.0);
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2], "errors not decreasing: {errs:?}");
+    }
+
+    #[test]
+    fn multi_obs_matches_sum_of_single_obs() {
+        // L = Σ z(t_a) + Σ z(t_b): θ-gradient must equal the sum of two
+        // single-terminal-time adjoint computations on the same path.
+        let sde = ReplicatedSde::new(Example3, 2);
+        let key = PrngKey::from_seed(60);
+        let (theta, x0) = sample_experiment_setup(key, 2, 2);
+        let cfg = AdjointConfig::default();
+        let steps = 1500;
+
+        let multi = stochastic_adjoint_multi_obs(
+            &sde,
+            &theta,
+            &x0,
+            0.0,
+            &[0.5, 1.0],
+            steps,
+            key,
+            &cfg,
+            |z_obs| vec![1.0; z_obs.len()],
+        );
+
+        // Single obs at 1.0 on the same noise: grid differs (one interval
+        // of 2*steps vs two of steps). Use matching per-interval grids so
+        // the Brownian queries align: emulate by multi_obs with zero grad
+        // at 0.5.
+        let only_end = stochastic_adjoint_multi_obs(
+            &sde,
+            &theta,
+            &x0,
+            0.0,
+            &[0.5, 1.0],
+            steps,
+            key,
+            &cfg,
+            |z_obs| {
+                let mut g = vec![0.0; z_obs.len()];
+                for v in g.iter_mut().skip(z_obs.len() / 2) {
+                    *v = 1.0;
+                }
+                g
+            },
+        );
+        let only_mid = stochastic_adjoint_multi_obs(
+            &sde,
+            &theta,
+            &x0,
+            0.0,
+            &[0.5, 1.0],
+            steps,
+            key,
+            &cfg,
+            |z_obs| {
+                let mut g = vec![0.0; z_obs.len()];
+                for v in g.iter_mut().take(z_obs.len() / 2) {
+                    *v = 1.0;
+                }
+                g
+            },
+        );
+        for j in 0..theta.len() {
+            let sum = only_end.grad_theta[j] + only_mid.grad_theta[j];
+            assert!(
+                (multi.grad_theta[j] - sum).abs() < 1e-9,
+                "θ[{j}]: multi {} vs sum {}",
+                multi.grad_theta[j],
+                sum
+            );
+        }
+        for i in 0..2 {
+            let sum = only_end.grad_z0[i] + only_mid.grad_z0[i];
+            assert!((multi.grad_z0[i] - sum).abs() < 1e-9, "z0[{i}]");
+        }
+    }
+
+    #[test]
+    fn multi_obs_gradient_matches_analytic() {
+        // Terminal-only loss expressed through the multi-obs API must match
+        // the closed form too.
+        let dim = 3;
+        let sde = ReplicatedSde::new(Example1, dim);
+        let key = PrngKey::from_seed(61);
+        let (theta, x0) = sample_experiment_setup(key, dim, 2);
+        let out = stochastic_adjoint_multi_obs(
+            &sde,
+            &theta,
+            &x0,
+            0.0,
+            &[0.25, 0.5, 0.75, 1.0],
+            800,
+            key,
+            &AdjointConfig::default(),
+            |z_obs| {
+                let mut g = vec![0.0; z_obs.len()];
+                let n = z_obs.len();
+                for v in g.iter_mut().skip(n - dim) {
+                    *v = 1.0;
+                }
+                g
+            },
+        );
+        let w_t = out.w_terminal.clone();
+        let mut g_x0 = vec![0.0; dim];
+        let mut g_th = vec![0.0; theta.len()];
+        sde.analytic_loss_gradients(1.0, &x0, &theta, &w_t, &mut g_x0, &mut g_th);
+        for j in 0..theta.len() {
+            let rel = (out.grad_theta[j] - g_th[j]).abs() / g_th[j].abs().max(1e-3);
+            assert!(rel < 0.02, "θ[{j}] rel err {rel}");
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Lévy's Brownian bridge (paper Eq. 9).
+//!
+//! Given `W(t_s) = w_s` and `W(t_e) = w_e`, the conditional law of `W(t)`
+//! for `t ∈ (t_s, t_e)` is
+//!
+//! ```text
+//! N( ((t_e − t)·w_s + (t − t_s)·w_e) / (t_e − t_s),
+//!    (t_e − t)(t − t_s) / (t_e − t_s) · I_d )
+//! ```
+//!
+//! Both the stored-path interpolation and the virtual tree sample from this
+//! law; the only difference is where the Gaussian comes from.
+
+use crate::prng::PrngKey;
+
+/// Mean and standard deviation of the bridge marginal at time `t`.
+#[inline]
+pub fn bridge_moments(ts: f64, te: f64, t: f64) -> (f64, f64, f64) {
+    debug_assert!(ts < te, "bridge_moments: degenerate interval [{ts}, {te}]");
+    debug_assert!(
+        t >= ts && t <= te,
+        "bridge_moments: t={t} outside [{ts}, {te}]"
+    );
+    let span = te - ts;
+    let wa = (te - t) / span; // weight on w_s
+    let wb = (t - ts) / span; // weight on w_e
+    let std = ((te - t) * (t - ts) / span).max(0.0).sqrt();
+    (wa, wb, std)
+}
+
+/// Sample `W(t) | W(ts)=ws, W(te)=we` into `out`, drawing the Gaussian from
+/// `key`'s normal stream (draw indices `0..`). Deterministic in `key`.
+pub fn brownian_bridge_sample(
+    key: PrngKey,
+    ts: f64,
+    ws: &[f64],
+    te: f64,
+    we: &[f64],
+    t: f64,
+    out: &mut [f64],
+) {
+    let (wa, wb, std) = bridge_moments(ts, te, t);
+    let d = out.len();
+    debug_assert_eq!(ws.len(), d);
+    debug_assert_eq!(we.len(), d);
+    // Draw d normals from the key's dedicated stream.
+    let mut i = 0usize;
+    let mut ctr = 0u64;
+    while i < d {
+        let (a, b) = key.normal_pair(ctr);
+        out[i] = wa * ws[i] + wb * we[i] + std * a;
+        if i + 1 < d {
+            out[i + 1] = wa * ws[i + 1] + wb * we[i + 1] + std * b;
+        }
+        i += 2;
+        ctr += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoint_weights() {
+        let (wa, wb, std) = bridge_moments(0.0, 1.0, 0.0);
+        assert_eq!((wa, wb, std), (1.0, 0.0, 0.0));
+        let (wa, wb, std) = bridge_moments(0.0, 1.0, 1.0);
+        assert_eq!((wa, wb, std), (0.0, 1.0, 0.0));
+    }
+
+    #[test]
+    fn midpoint_variance() {
+        // Var at midpoint of [0, h] is h/4.
+        let (_, _, std) = bridge_moments(0.0, 0.5, 0.25);
+        assert!((std * std - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sample_is_deterministic() {
+        let key = PrngKey::from_seed(4);
+        let ws = [0.0, 1.0, -1.0];
+        let we = [1.0, 1.0, 2.0];
+        let mut a = [0.0; 3];
+        let mut b = [0.0; 3];
+        brownian_bridge_sample(key, 0.0, &ws, 1.0, &we, 0.3, &mut a);
+        brownian_bridge_sample(key, 0.0, &ws, 1.0, &we, 0.3, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn marginal_statistics() {
+        // Empirical mean/variance of the bridge sample at t=0.25 on [0,1]
+        // with w_s=0, w_e=0: mean 0, var 0.25*0.75 = 0.1875.
+        let ws = [0.0];
+        let we = [0.0];
+        let n = 100_000;
+        let (mut sum, mut sumsq) = (0.0, 0.0);
+        for seed in 0..n {
+            let key = PrngKey::from_seed(seed);
+            let mut out = [0.0];
+            brownian_bridge_sample(key, 0.0, &ws, 1.0, &we, 0.25, &mut out);
+            sum += out[0];
+            sumsq += out[0] * out[0];
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!(mean.abs() < 5e-3, "mean {mean}");
+        assert!((var - 0.1875).abs() < 5e-3, "var {var}");
+    }
+}

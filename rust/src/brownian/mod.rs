@@ -1,0 +1,27 @@
+//! Brownian motion sources (paper §4).
+//!
+//! The stochastic adjoint retraces the forward trajectory backward in time,
+//! so the *same* Wiener sample path must be queryable at arbitrary times in
+//! both passes. Two implementations of the [`BrownianMotion`] trait:
+//!
+//! * [`BrownianPath`] — stores every queried value in an ordered map and
+//!   interpolates new queries with Brownian bridges conditioned on the
+//!   stored neighbours. O(n) memory, O(log n) query. This is the
+//!   "store the noise" implementation the paper uses in its experiments.
+//! * [`VirtualBrownianTree`] — Algorithm 3: O(1) memory, O(log 1/ε) query.
+//!   Reconstructs any node of a Brownian tree from a single splittable seed
+//!   by recursively bisecting Brownian bridges.
+//!
+//! Both are deterministic given their key: querying the same time twice
+//! returns the same value, which is precisely what makes the backward solve
+//! see the forward pass's noise.
+
+pub mod bridge;
+pub mod path;
+pub mod tree;
+pub mod traits;
+
+pub use bridge::brownian_bridge_sample;
+pub use path::BrownianPath;
+pub use traits::BrownianMotion;
+pub use tree::VirtualBrownianTree;

@@ -1,0 +1,310 @@
+//! Stored-query Brownian path ("BrownianPath" in torchsde).
+//!
+//! Every queried value is cached; a new query time `t` is answered by
+//! * extension: if `t` lies outside the currently revealed range, draw the
+//!   free increment `N(0, Δt·I)` from the sequential stream, or
+//! * interpolation: if `t` falls between two revealed times, sample the
+//!   Brownian bridge conditioned on the nearest revealed neighbours.
+//!
+//! Consistency (same `t` → same value) holds because results are cached;
+//! the conditional laws are correct because Brownian motion is Markov, so
+//! conditioning on the nearest revealed neighbours equals conditioning on
+//! the full revealed set.
+//!
+//! Memory is O(#distinct queries); this is the paper's "store the noise"
+//! baseline in Table 1 and the implementation its experiments use.
+//!
+//! Performance (EXPERIMENTS.md §Perf): values live in a flat arena
+//! (`Vec<f64>`, one slot of `dim` per revealed time) indexed by a
+//! `BTreeMap<time, slot>`, so queries never allocate per-point vectors;
+//! monotone forward/backward sweeps — the solver access pattern — hit
+//! dedicated fast paths that skip the tree search entirely when the
+//! queried time matches the last or first revealed time.
+
+use std::collections::BTreeMap;
+
+use super::bridge::bridge_moments;
+use super::traits::BrownianMotion;
+use crate::prng::{NormalSampler, PrngKey};
+
+/// Total-order wrapper so times can key a BTreeMap.
+#[derive(Clone, Copy, PartialEq, Debug)]
+struct T(f64);
+impl Eq for T {}
+impl PartialOrd for T {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for T {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// A d-dimensional Brownian path that materializes queried points lazily.
+#[derive(Clone, Debug)]
+pub struct BrownianPath {
+    dim: usize,
+    t0: f64,
+    t1: f64,
+    /// time → arena slot index.
+    index: BTreeMap<T, usize>,
+    /// Flat value arena; slot i occupies `[i*dim, (i+1)*dim)`.
+    arena: Vec<f64>,
+    /// Highest / lowest revealed times (fast-path bookkeeping).
+    t_max: f64,
+    slot_max: usize,
+    t_min: f64,
+    slot_min: usize,
+    sampler: NormalSampler,
+    scratch: Vec<f64>,
+}
+
+impl BrownianPath {
+    /// A path with `W(t0) = 0`, defined (extensibly) on `[t0, t1]`.
+    pub fn new(key: PrngKey, dim: usize, t0: f64, t1: f64) -> Self {
+        assert!(t1 > t0, "BrownianPath: need t1 > t0 (got [{t0}, {t1}])");
+        assert!(dim > 0, "BrownianPath: dim must be positive");
+        let mut index = BTreeMap::new();
+        index.insert(T(t0), 0);
+        BrownianPath {
+            dim,
+            t0,
+            t1,
+            index,
+            arena: vec![0.0; dim],
+            t_max: t0,
+            slot_max: 0,
+            t_min: t0,
+            slot_min: 0,
+            sampler: NormalSampler::new(key),
+            scratch: vec![0.0; dim],
+        }
+    }
+
+    /// Number of cached points (Table 1 memory metric).
+    pub fn cached_points(&self) -> usize {
+        self.index.len()
+    }
+
+    #[inline]
+    fn slot(&self, i: usize) -> &[f64] {
+        &self.arena[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Reveal `t` (if new) and return its arena slot.
+    fn query(&mut self, t: f64) -> usize {
+        let d = self.dim;
+        // Fast paths: the solver sweeps monotonically, so most queries are
+        // at (or beyond) the extremes.
+        if t == self.t_max {
+            return self.slot_max;
+        }
+        if t == self.t_min {
+            return self.slot_min;
+        }
+        if t > self.t_max {
+            // Extend right: free increment from W(t_max).
+            let std = (t - self.t_max).sqrt();
+            self.sampler.fill(&mut self.scratch);
+            let base = self.slot_max * d;
+            let new_slot = self.arena.len() / d;
+            for i in 0..d {
+                let v = self.arena[base + i] + std * self.scratch[i];
+                self.arena.push(v);
+            }
+            self.index.insert(T(t), new_slot);
+            self.t_max = t;
+            self.slot_max = new_slot;
+            return new_slot;
+        }
+        if t < self.t_min {
+            // Extend left: W(t) = W(t_min) − √(t_min−t)·z.
+            let std = (self.t_min - t).sqrt();
+            self.sampler.fill(&mut self.scratch);
+            let base = self.slot_min * d;
+            let new_slot = self.arena.len() / d;
+            for i in 0..d {
+                let v = self.arena[base + i] - std * self.scratch[i];
+                self.arena.push(v);
+            }
+            self.index.insert(T(t), new_slot);
+            self.t_min = t;
+            self.slot_min = new_slot;
+            return new_slot;
+        }
+        // Interior: exact hit or bridge interpolation between neighbours.
+        if let Some(&slot) = self.index.get(&T(t)) {
+            return slot;
+        }
+        let (ts, lo_slot) = {
+            let (k, &v) = self.index.range(..T(t)).next_back().expect("t_min handled above");
+            (k.0, v)
+        };
+        let (te, hi_slot) = {
+            let (k, &v) = self.index.range(T(t)..).next().expect("t_max handled above");
+            (k.0, v)
+        };
+        let (wa, wb, std) = bridge_moments(ts, te, t);
+        self.sampler.fill(&mut self.scratch);
+        let new_slot = self.arena.len() / d;
+        let lo = lo_slot * d;
+        let hi = hi_slot * d;
+        for i in 0..d {
+            let v = wa * self.arena[lo + i] + wb * self.arena[hi + i] + std * self.scratch[i];
+            self.arena.push(v);
+        }
+        self.index.insert(T(t), new_slot);
+        new_slot
+    }
+}
+
+impl BrownianMotion for BrownianPath {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn span(&self) -> (f64, f64) {
+        (self.t0, self.t1)
+    }
+
+    fn sample_into(&mut self, t: f64, out: &mut [f64]) {
+        let slot = self.query(t);
+        out.copy_from_slice(self.slot(slot));
+    }
+
+    fn memory_footprint(&self) -> usize {
+        self.arena.len() + self.index.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::PrngKey;
+
+    fn path(seed: u64, d: usize) -> BrownianPath {
+        BrownianPath::new(PrngKey::from_seed(seed), d, 0.0, 1.0)
+    }
+
+    #[test]
+    fn repeated_queries_identical() {
+        let mut p = path(1, 3);
+        let a = p.sample(0.37);
+        let b = p.sample(0.37);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn starts_at_zero() {
+        let mut p = path(2, 4);
+        assert_eq!(p.sample(0.0), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn interpolation_between_cached_points_is_consistent() {
+        let mut p = path(3, 1);
+        let w_half = p.sample(0.5)[0];
+        let w_quarter = p.sample(0.25)[0];
+        // Re-query both; cache must return same values.
+        assert_eq!(p.sample(0.5)[0], w_half);
+        assert_eq!(p.sample(0.25)[0], w_quarter);
+        assert_eq!(p.cached_points(), 3); // t0, 0.5, 0.25
+    }
+
+    #[test]
+    fn monotone_fast_paths_are_consistent_with_interior_queries() {
+        // Reveal a grid forward, then re-query in descending order and at
+        // midpoints — everything must match the first reveal.
+        let mut p = path(4, 2);
+        let grid: Vec<f64> = (0..=20).map(|k| k as f64 / 20.0).collect();
+        let fwd: Vec<Vec<f64>> = grid.iter().map(|&t| p.sample(t)).collect();
+        for (k, &t) in grid.iter().enumerate().rev() {
+            assert_eq!(p.sample(t), fwd[k], "mismatch at t={t}");
+        }
+    }
+
+    #[test]
+    fn left_extension_law() {
+        // Build a path revealed from 0.5 upward, then query 0.2 (left
+        // extension): increments must still have the right variance.
+        let n = 30_000;
+        let (mut sum, mut sumsq) = (0.0, 0.0);
+        for seed in 0..n {
+            let mut p = BrownianPath::new(PrngKey::from_seed(seed), 1, 0.0, 1.0);
+            // Move the interior pointer to 0.5 first.
+            let w_half = p.sample(0.5)[0];
+            let w_02 = p.sample(0.2)[0];
+            let inc = w_half - w_02;
+            sum += inc;
+            sumsq += inc * inc;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 0.3).abs() < 0.012, "var {var}");
+    }
+
+    #[test]
+    fn increments_have_correct_moments() {
+        // W(0.6) − W(0.2) over many independent paths ~ N(0, 0.4).
+        let n = 40_000;
+        let (mut sum, mut sumsq) = (0.0, 0.0);
+        for seed in 0..n {
+            let mut p = path(seed, 1);
+            let inc = p.increment(0.2, 0.6)[0];
+            sum += inc;
+            sumsq += inc * inc;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 0.4).abs() < 0.01, "var {var}");
+    }
+
+    #[test]
+    fn nonoverlapping_increments_uncorrelated() {
+        let n = 40_000;
+        let mut dot = 0.0;
+        for seed in 0..n {
+            let mut p = path(seed + 1_000_000, 1);
+            let a = p.increment(0.0, 0.3)[0];
+            let b = p.increment(0.3, 0.9)[0];
+            dot += a * b;
+        }
+        let corr = dot / n as f64;
+        assert!(corr.abs() < 0.01, "corr {corr}");
+    }
+
+    #[test]
+    fn query_order_does_not_change_law() {
+        // Variance at 0.5 must be 0.5 whether revealed directly or after
+        // finer queries. (Statistical check across seeds.)
+        let n = 40_000;
+        let mut var_direct = 0.0;
+        let mut var_nested = 0.0;
+        for seed in 0..n {
+            let mut p1 = path(seed + 5_000_000, 1);
+            var_direct += p1.sample(0.5)[0].powi(2);
+            let mut p2 = path(seed + 9_000_000, 1);
+            p2.sample(1.0);
+            p2.sample(0.75);
+            var_nested += p2.sample(0.5)[0].powi(2);
+        }
+        var_direct /= n as f64;
+        var_nested /= n as f64;
+        assert!((var_direct - 0.5).abs() < 0.015, "direct {var_direct}");
+        assert!((var_nested - 0.5).abs() < 0.015, "nested {var_nested}");
+    }
+
+    #[test]
+    fn memory_grows_with_queries() {
+        let mut p = path(8, 2);
+        let base = p.memory_footprint();
+        for i in 1..=50 {
+            p.sample(i as f64 / 64.0);
+        }
+        assert!(p.memory_footprint() >= base + 50 * 2);
+    }
+}

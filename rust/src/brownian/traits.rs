@@ -1,0 +1,47 @@
+//! The interface solvers use to consume noise.
+
+/// A queryable d-dimensional Wiener process sample path on `[t0, t1]`.
+///
+/// Implementations must be *consistent*: repeated queries at the same time
+/// return identical values, and conditioned on any set of previously
+/// revealed points, newly revealed points follow the Brownian bridge law.
+pub trait BrownianMotion {
+    /// Dimensionality of the process.
+    fn dim(&self) -> usize;
+
+    /// Time interval on which the path is defined.
+    fn span(&self) -> (f64, f64);
+
+    /// Write `W(t)` into `out` (length `dim()`).
+    fn sample_into(&mut self, t: f64, out: &mut [f64]);
+
+    /// Convenience: `W(t)` as a fresh vector.
+    fn sample(&mut self, t: f64) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        self.sample_into(t, &mut out);
+        out
+    }
+
+    /// Write the increment `W(t1) − W(t0)` into `out`.
+    fn increment_into(&mut self, t0: f64, t1: f64, out: &mut [f64]) {
+        debug_assert!(t0 <= t1, "increment_into: t0={t0} > t1={t1}");
+        let d = self.dim();
+        let mut a = vec![0.0; d];
+        self.sample_into(t0, &mut a);
+        self.sample_into(t1, out);
+        for i in 0..d {
+            out[i] -= a[i];
+        }
+    }
+
+    /// Convenience: increment as a fresh vector.
+    fn increment(&mut self, t0: f64, t1: f64) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        self.increment_into(t0, t1, &mut out);
+        out
+    }
+
+    /// Approximate number of f64 values held live by this source. Used by
+    /// the Table 1 memory-complexity bench.
+    fn memory_footprint(&self) -> usize;
+}

@@ -1,0 +1,296 @@
+//! Virtual Brownian tree (paper §4, Algorithm 3).
+//!
+//! Reconstructs a Wiener process sample path at arbitrary query times from a
+//! *single splittable seed*, in O(1) memory and O(log 1/ε) time per query:
+//!
+//! 1. The global endpoints `W(t0) = 0` and `W(t1) ~ N(0, (t1−t0)·I)` are
+//!    deterministic functions of the seed.
+//! 2. To evaluate `W(t)`, bisect the interval. The midpoint value is drawn
+//!    from the Brownian bridge (Eq. 9) conditioned on the interval's
+//!    endpoints, using a key derived *from the path taken through the tree*
+//!    (left/right splits of the parent key). Recurse into the half
+//!    containing `t` until the midpoint is within `ε` of `t`.
+//!
+//! Because the key of every node is a pure function of the root seed and
+//! the bisection path, any two queries that touch the same node see the
+//! same Gaussian — the tree is consistent without storing anything.
+
+use super::bridge::bridge_moments;
+use super::traits::BrownianMotion;
+use crate::prng::PrngKey;
+
+/// Hard cap on bisection depth: at depth 62 the interval width has shrunk
+/// by 2^62, far below f64 resolution of any practical horizon, so deeper
+/// recursion cannot make progress.
+const MAX_DEPTH: u32 = 62;
+
+/// O(1)-memory virtual Brownian tree over `[t0, t1]`.
+#[derive(Clone, Debug)]
+pub struct VirtualBrownianTree {
+    dim: usize,
+    t0: f64,
+    t1: f64,
+    tol: f64,
+    key: PrngKey,
+    w1: Vec<f64>,
+    // Scratch buffers so queries allocate nothing (hot path).
+    ws: Vec<f64>,
+    we: Vec<f64>,
+    wmid: Vec<f64>,
+    // Instrumentation: bridge draws performed (≙ tree levels visited).
+    bridge_calls: u64,
+}
+
+impl VirtualBrownianTree {
+    /// Build a tree with error tolerance `tol` (Algorithm 3's ε).
+    pub fn new(key: PrngKey, dim: usize, t0: f64, t1: f64, tol: f64) -> Self {
+        assert!(t1 > t0, "VirtualBrownianTree: need t1 > t0 (got [{t0}, {t1}])");
+        assert!(tol > 0.0, "VirtualBrownianTree: tolerance must be positive");
+        assert!(dim > 0, "VirtualBrownianTree: dim must be positive");
+        // The terminal value W(t1) gets its own child key; the bridge tree
+        // hangs off the other child.
+        let (end_key, tree_key) = key.split();
+        let mut w1 = vec![0.0; dim];
+        end_key.fill_normal(0, &mut w1);
+        let scale = (t1 - t0).sqrt();
+        for v in w1.iter_mut() {
+            *v *= scale;
+        }
+        VirtualBrownianTree {
+            dim,
+            t0,
+            t1,
+            tol,
+            key: tree_key,
+            w1,
+            ws: vec![0.0; dim],
+            we: vec![0.0; dim],
+            wmid: vec![0.0; dim],
+            bridge_calls: 0,
+        }
+    }
+
+    /// Error tolerance ε.
+    pub fn tolerance(&self) -> f64 {
+        self.tol
+    }
+
+    /// Total Brownian-bridge draws performed over the tree's lifetime
+    /// (per-query cost metric for the Table 1 / perf benches).
+    pub fn bridge_calls(&self) -> u64 {
+        self.bridge_calls
+    }
+
+    /// Draw `d` normals from `key`'s stream, scaled by `std`, writing
+    /// `wa*ws + wb*we + std*z` into `out`.
+    #[inline]
+    fn bridge_draw(
+        key: PrngKey,
+        wa: f64,
+        wb: f64,
+        std: f64,
+        ws: &[f64],
+        we: &[f64],
+        out: &mut [f64],
+    ) {
+        let d = out.len();
+        let mut i = 0usize;
+        let mut ctr = 0u64;
+        while i < d {
+            let (a, b) = key.normal_pair(ctr);
+            out[i] = wa * ws[i] + wb * we[i] + std * a;
+            if i + 1 < d {
+                out[i + 1] = wa * ws[i + 1] + wb * we[i + 1] + std * b;
+            }
+            i += 2;
+            ctr += 1;
+        }
+    }
+}
+
+impl BrownianMotion for VirtualBrownianTree {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn span(&self) -> (f64, f64) {
+        (self.t0, self.t1)
+    }
+
+    fn sample_into(&mut self, t: f64, out: &mut [f64]) {
+        let t = t.clamp(self.t0, self.t1);
+        // Fast paths: global endpoints are known exactly.
+        if t == self.t0 {
+            out.fill(0.0);
+            return;
+        }
+        if t == self.t1 {
+            out.copy_from_slice(&self.w1);
+            return;
+        }
+
+        // Algorithm 3.
+        let (mut ts, mut te) = (self.t0, self.t1);
+        self.ws.fill(0.0);
+        self.we.copy_from_slice(&self.w1);
+        let mut key = self.key;
+
+        let mut tmid = 0.5 * (ts + te);
+        let (wa, wb, std) = bridge_moments(ts, te, tmid);
+        let wmid = std::mem::take(&mut self.wmid);
+        let mut wmid = wmid;
+        Self::bridge_draw(key, wa, wb, std, &self.ws, &self.we, &mut wmid);
+        self.bridge_calls += 1;
+
+        let mut depth = 0u32;
+        while (t - tmid).abs() > self.tol && depth < MAX_DEPTH {
+            let (kl, kr) = key.split();
+            if t < tmid {
+                te = tmid;
+                self.we.copy_from_slice(&wmid);
+                key = kl;
+            } else {
+                ts = tmid;
+                self.ws.copy_from_slice(&wmid);
+                key = kr;
+            }
+            tmid = 0.5 * (ts + te);
+            if tmid <= ts || tmid >= te {
+                break; // interval exhausted at f64 resolution
+            }
+            let (wa, wb, std) = bridge_moments(ts, te, tmid);
+            Self::bridge_draw(key, wa, wb, std, &self.ws, &self.we, &mut wmid);
+            self.bridge_calls += 1;
+            depth += 1;
+        }
+        out.copy_from_slice(&wmid);
+        self.wmid = wmid;
+    }
+
+    fn memory_footprint(&self) -> usize {
+        // Endpoint value + three scratch buffers + the key: O(dim), constant
+        // in the number of queries and in 1/ε.
+        4 * self.dim + 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tree(seed: u64, d: usize, tol: f64) -> VirtualBrownianTree {
+        VirtualBrownianTree::new(PrngKey::from_seed(seed), d, 0.0, 1.0, tol)
+    }
+
+    #[test]
+    fn deterministic_across_queries_and_clones() {
+        let mut a = tree(1, 3, 1e-9);
+        let mut b = tree(1, 3, 1e-9);
+        for &t in &[0.1, 0.5, 0.73, 0.999, 0.1] {
+            assert_eq!(a.sample(t), b.sample(t), "mismatch at t={t}");
+        }
+        // Query order must not matter (nothing is stored).
+        let mut c = tree(1, 3, 1e-9);
+        let w_73 = c.sample(0.73);
+        assert_eq!(a.sample(0.73), w_73);
+    }
+
+    #[test]
+    fn endpoints() {
+        let mut t = tree(2, 2, 1e-9);
+        assert_eq!(t.sample(0.0), vec![0.0, 0.0]);
+        let w1a = t.sample(1.0);
+        let w1b = t.sample(1.0);
+        assert_eq!(w1a, w1b);
+    }
+
+    #[test]
+    fn memory_constant_under_queries() {
+        let mut t = tree(3, 4, 1e-12);
+        let before = t.memory_footprint();
+        for i in 1..1000 {
+            t.sample(i as f64 / 1001.0);
+        }
+        assert_eq!(t.memory_footprint(), before);
+    }
+
+    #[test]
+    fn query_cost_logarithmic_in_tolerance() {
+        // Bridge calls per query should grow ~linearly with log2(1/eps).
+        let mut costs = Vec::new();
+        for &tol in &[1e-3, 1e-6, 1e-9] {
+            let mut t = tree(4, 1, tol);
+            let before = t.bridge_calls();
+            t.sample(0.3141592653589793);
+            costs.push(t.bridge_calls() - before);
+        }
+        assert!(costs[0] < costs[1] && costs[1] < costs[2]);
+        // ~10 levels per 1e-3 factor (log2(1000) ≈ 10)
+        assert!(costs[2] <= 40, "cost at 1e-9 unexpectedly large: {costs:?}");
+    }
+
+    #[test]
+    fn marginal_variance_matches_brownian_law() {
+        // Var[W(t)] = t at a non-dyadic time, over independent seeds.
+        let n = 40_000;
+        let t_query = 0.3;
+        let mut sumsq = 0.0;
+        for seed in 0..n {
+            let mut t = tree(seed, 1, 1e-10);
+            let w = t.sample(t_query)[0];
+            sumsq += w * w;
+        }
+        let var = sumsq / n as f64;
+        assert!((var - t_query).abs() < 0.01, "var {var}");
+    }
+
+    #[test]
+    fn increment_variance_small_intervals() {
+        // Increments over [0.4, 0.6]: variance 0.2.
+        let n = 30_000;
+        let mut sumsq = 0.0;
+        for seed in 0..n {
+            let mut t = tree(seed + 77_000, 1, 1e-10);
+            let inc = t.increment(0.4, 0.6)[0];
+            sumsq += inc * inc;
+        }
+        let var = sumsq / n as f64;
+        assert!((var - 0.2).abs() < 0.01, "var {var}");
+    }
+
+    #[test]
+    fn dyadic_queries_terminate_fast() {
+        let mut t = tree(5, 1, 1e-14);
+        let before = t.bridge_calls();
+        t.sample(0.5);
+        assert_eq!(t.bridge_calls() - before, 1, "0.5 is the first midpoint");
+        let before = t.bridge_calls();
+        t.sample(0.25);
+        assert_eq!(t.bridge_calls() - before, 2);
+    }
+
+    #[test]
+    fn tolerance_bounds_time_error() {
+        // The returned value is W at a time within eps of the query; for a
+        // fine tolerance two adjacent queries differ by a plausible
+        // Brownian increment, not by a jump.
+        let mut t = tree(6, 1, 1e-12);
+        let a = t.sample(0.500000)[0];
+        let b = t.sample(0.500001)[0];
+        // Brownian increments over 1e-6 have std 1e-3; allow 6 sigma.
+        assert!((a - b).abs() < 6e-3, "jump too large: {}", (a - b).abs());
+    }
+
+    #[test]
+    fn multidim_components_independent() {
+        let n = 20_000;
+        let mut dot = 0.0;
+        for seed in 0..n {
+            let mut t = tree(seed + 1_234, 2, 1e-10);
+            let w = t.sample(0.7);
+            dot += w[0] * w[1];
+        }
+        let corr = dot / n as f64 / 0.7; // normalize by Var = t
+        assert!(corr.abs() < 0.03, "corr {corr}");
+    }
+}

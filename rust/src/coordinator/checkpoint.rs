@@ -1,0 +1,64 @@
+//! Flat-parameter checkpoints: little-endian f64 with a small header.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 8] = b"SDEGRAD1";
+
+/// Save a flat parameter vector.
+pub fn save_params<P: AsRef<Path>>(path: P, params: &[f64]) -> Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(&path)
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(params.len() as u64).to_le_bytes())?;
+    for v in params {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Load a flat parameter vector.
+pub fn load_params<P: AsRef<Path>>(path: P) -> Result<Vec<f64>> {
+    let mut f =
+        std::fs::File::open(&path).with_context(|| format!("opening {:?}", path.as_ref()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an sdegrad checkpoint (bad magic)");
+    }
+    let mut len_bytes = [0u8; 8];
+    f.read_exact(&mut len_bytes)?;
+    let n = u64::from_le_bytes(len_bytes) as usize;
+    let mut buf = vec![0u8; n * 8];
+    f.read_exact(&mut buf)?;
+    Ok(buf.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("sdegrad_ckpt_test");
+        let path = dir.join("p.bin");
+        let params = vec![1.5, -2.25, 0.0, f64::MIN_POSITIVE, 1e300];
+        save_params(&path, &params).unwrap();
+        let loaded = load_params(&path).unwrap();
+        assert_eq!(params, loaded);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("sdegrad_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.bin");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(load_params(&path).is_err());
+    }
+}

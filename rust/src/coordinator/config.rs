@@ -1,0 +1,124 @@
+//! Training configuration + a tiny `--key value` argument parser (clap is
+//! not in the vendored crate set — DESIGN.md §3).
+
+use std::collections::HashMap;
+
+/// Trainer hyperparameters (§7.3 defaults: Adam @ 1e-2, 0.999 decay,
+/// KL annealing, ≤400 iterations).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub iters: u64,
+    pub batch_size: usize,
+    pub lr: f64,
+    pub lr_decay: f64,
+    pub kl_weight: f64,
+    pub kl_anneal_iters: u64,
+    pub substeps: usize,
+    pub grad_clip: f64,
+    pub n_workers: usize,
+    pub seed: u64,
+    /// Validate every this many iterations (0 = never).
+    pub val_every: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            iters: 400,
+            batch_size: 16,
+            lr: 0.01,
+            lr_decay: 0.999,
+            kl_weight: 1.0,
+            kl_anneal_iters: 50,
+            substeps: 5,
+            grad_clip: 10.0,
+            n_workers: num_threads(),
+            seed: 0,
+            val_every: 20,
+        }
+    }
+}
+
+/// Available parallelism (capped: latent models are small; beyond ~8
+/// workers coordination overhead dominates).
+pub fn num_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8)
+}
+
+/// Parse `--key value` style arguments into a map. Flags without values
+/// get `"true"`.
+pub fn parse_args(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                out.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                out.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Fetch + parse helper.
+pub fn arg<T: std::str::FromStr>(map: &HashMap<String, String>, key: &str, default: T) -> T {
+    map.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+impl TrainConfig {
+    /// Override fields from parsed CLI args.
+    pub fn from_args(map: &HashMap<String, String>) -> TrainConfig {
+        let d = TrainConfig::default();
+        TrainConfig {
+            iters: arg(map, "iters", d.iters),
+            batch_size: arg(map, "batch", d.batch_size),
+            lr: arg(map, "lr", d.lr),
+            lr_decay: arg(map, "lr-decay", d.lr_decay),
+            kl_weight: arg(map, "kl", d.kl_weight),
+            kl_anneal_iters: arg(map, "kl-anneal", d.kl_anneal_iters),
+            substeps: arg(map, "substeps", d.substeps),
+            grad_clip: arg(map, "clip", d.grad_clip),
+            n_workers: arg(map, "workers", d.n_workers),
+            seed: arg(map, "seed", d.seed),
+            val_every: arg(map, "val-every", d.val_every),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strs(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_key_values_and_flags() {
+        let m = parse_args(&strs(&["--iters", "100", "--quick", "--lr", "0.02"]));
+        assert_eq!(m["iters"], "100");
+        assert_eq!(m["quick"], "true");
+        assert_eq!(m["lr"], "0.02");
+    }
+
+    #[test]
+    fn config_from_args_overrides() {
+        let m = parse_args(&strs(&["--iters", "7", "--batch", "3"]));
+        let cfg = TrainConfig::from_args(&m);
+        assert_eq!(cfg.iters, 7);
+        assert_eq!(cfg.batch_size, 3);
+        assert_eq!(cfg.lr, TrainConfig::default().lr);
+    }
+
+    #[test]
+    fn arg_fallback_on_garbage() {
+        let m = parse_args(&strs(&["--iters", "not-a-number"]));
+        assert_eq!(arg(&m, "iters", 42u64), 42);
+    }
+}

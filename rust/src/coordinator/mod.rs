@@ -1,0 +1,13 @@
+//! L3 training coordinator: experiment configs, the multi-worker trainer,
+//! checkpointing, and the reproduction harnesses for every table and
+//! figure in the paper (shared by `cargo bench` targets and the
+//! `sdegrad repro` CLI).
+
+pub mod checkpoint;
+pub mod config;
+pub mod repro;
+pub mod trainer;
+
+pub use checkpoint::{load_params, save_params};
+pub use config::TrainConfig;
+pub use trainer::{train_latent_sde, EvalReport, TrainReport};

@@ -1,0 +1,270 @@
+//! Figures 5 and 7: the numerical studies on the three closed-form test
+//! problems.
+//!
+//! * Panel (a): gradient error vs fixed step size (Milstein-forward +
+//!   commutative-Milstein/Heun-backward adjoint), boxplot statistics over
+//!   64 Brownian paths.
+//! * Panel (b): gradient MSE vs NFE under adaptive stepping as `atol`
+//!   varies (rtol = 0).
+//! * Panel (c): gradient error vs wall-clock — stochastic adjoint vs
+//!   backprop-through-Euler and backprop-through-Milstein, sweeping step
+//!   size (the efficiency frontier).
+//!
+//! Fig 5 shows Example 2; Fig 7 shows Examples 1 and 3. One harness runs
+//! all three.
+
+use crate::adjoint::{
+    adaptive_adjoint_gradients, backprop_through_solver, stochastic_adjoint_gradients,
+    AdjointConfig,
+};
+use crate::metrics::{CsvWriter, Quartiles, Stopwatch};
+use crate::prng::PrngKey;
+use crate::sde::problems::{sample_experiment_setup, Example1, Example2, Example3};
+use crate::sde::{ReplicatedSde, ScalarSde};
+use crate::solvers::{AdaptiveConfig, Method};
+
+const DIM: usize = 10; // §7.1: each equation duplicated 10 times
+
+/// Mean-abs θ-gradient error of one adjoint run vs the closed form.
+fn adjoint_error<P: ScalarSde + Copy>(
+    problem: P,
+    n_steps: usize,
+    seed: u64,
+) -> f64 {
+    let sde = ReplicatedSde::new(problem, DIM);
+    let key = PrngKey::from_seed(seed);
+    let (theta, x0) = sample_experiment_setup(key, DIM, problem.nparams());
+    let out = stochastic_adjoint_gradients(
+        &sde,
+        &theta,
+        &x0,
+        0.0,
+        1.0,
+        n_steps,
+        key,
+        &AdjointConfig::default(),
+    );
+    let mut g_x0 = vec![0.0; DIM];
+    let mut g_th = vec![0.0; theta.len()];
+    sde.analytic_loss_gradients(1.0, &x0, &theta, &out.w_terminal, &mut g_x0, &mut g_th);
+    g_th.iter()
+        .zip(&out.grad_theta)
+        .map(|(a, b)| (a - b).abs())
+        .sum::<f64>()
+        / g_th.len() as f64
+}
+
+/// Panel (a) for one problem: error quartiles per step size.
+pub fn panel_a<P: ScalarSde + Copy>(problem: P, quick: bool, csv: &mut CsvWriter) {
+    let n_paths = if quick { 16 } else { 64 };
+    let dts: &[usize] = if quick { &[16, 128, 1024] } else { &[8, 32, 128, 512, 2048, 8192] };
+    println!(
+        "\n[{} | panel a] gradient error vs step size ({} paths)",
+        problem.name(),
+        n_paths
+    );
+    println!("{:>8} {:>12} {:>12} {:>12}", "L", "q1", "median", "q3");
+    for &steps in dts {
+        let errs: Vec<f64> =
+            (0..n_paths).map(|r| adjoint_error(problem, steps, 100 + r)).collect();
+        let q = Quartiles::of(&errs);
+        println!("{:>8} {:>12.3e} {:>12.3e} {:>12.3e}", steps, q.q1, q.median, q.q3);
+        csv.row(&[
+            problem.name().to_string(),
+            steps.to_string(),
+            format!("{}", q.q1),
+            format!("{}", q.median),
+            format!("{}", q.q3),
+            format!("{}", q.min),
+            format!("{}", q.max),
+        ])
+        .ok();
+    }
+}
+
+/// Panel (b): adaptive solve — gradient MSE and NFE per `atol`.
+pub fn panel_b<P: ScalarSde + Copy>(problem: P, quick: bool, csv: &mut CsvWriter) {
+    let n_paths = if quick { 6 } else { 24 };
+    let atols: &[f64] =
+        if quick { &[1e-2, 1e-4] } else { &[1e-1, 1e-2, 1e-3, 1e-4, 1e-5] };
+    println!("\n[{} | panel b] adaptive: gradient MSE vs NFE (rtol = 0)", problem.name());
+    println!("{:>10} {:>14} {:>10}", "atol", "grad MSE", "mean NFE");
+    for &atol in atols {
+        let mut mse_acc = 0.0;
+        let mut nfe_acc = 0u64;
+        for r in 0..n_paths {
+            let sde = ReplicatedSde::new(problem, DIM);
+            let key = PrngKey::from_seed(900 + r);
+            let (theta, x0) = sample_experiment_setup(key, DIM, problem.nparams());
+            let cfg = AdaptiveConfig { atol, rtol: 0.0, h0: 1e-2, ..Default::default() };
+            let out = adaptive_adjoint_gradients(&sde, &theta, &x0, 0.0, 1.0, key, &cfg);
+            let mut g_x0 = vec![0.0; DIM];
+            let mut g_th = vec![0.0; theta.len()];
+            sde.analytic_loss_gradients(1.0, &x0, &theta, &out.w_terminal, &mut g_x0, &mut g_th);
+            mse_acc += g_th
+                .iter()
+                .zip(&out.grad_theta)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                / g_th.len() as f64;
+            nfe_acc += out.forward_stats.nfe() + out.backward_stats.nfe();
+        }
+        let mse = mse_acc / n_paths as f64;
+        let nfe = nfe_acc as f64 / n_paths as f64;
+        println!("{:>10.0e} {:>14.4e} {:>10.0}", atol, mse, nfe);
+        csv.row(&[
+            problem.name().to_string(),
+            format!("{atol}"),
+            format!("{mse}"),
+            format!("{nfe}"),
+        ])
+        .ok();
+    }
+}
+
+/// Panel (c): wall-clock vs gradient error frontier for the adjoint and
+/// the two backprop baselines.
+pub fn panel_c<P: ScalarSde + Copy>(problem: P, quick: bool, csv: &mut CsvWriter) {
+    let n_paths = if quick { 4 } else { 16 };
+    let dts: &[usize] = if quick { &[32, 256, 2048] } else { &[16, 64, 256, 1024, 4096] };
+    println!("\n[{} | panel c] time vs gradient error", problem.name());
+    println!(
+        "{:>22} {:>8} {:>12} {:>14}",
+        "method", "L", "time (ms)", "mean |err|"
+    );
+    for &steps in dts {
+        type Runner<'a, P2> = Box<dyn Fn(&ReplicatedSde<P2>, &[f64], &[f64], PrngKey) -> (Vec<f64>, Vec<f64>) + 'a>;
+        let variants: Vec<(&str, Runner<P>)> = vec![
+            (
+                "adjoint_milstein",
+                Box::new(move |sde, th, x0, k| {
+                    let out = stochastic_adjoint_gradients(
+                        sde,
+                        th,
+                        x0,
+                        0.0,
+                        1.0,
+                        steps,
+                        k,
+                        &AdjointConfig::default(),
+                    );
+                    (out.grad_theta, out.w_terminal)
+                }),
+            ),
+            (
+                "backprop_euler",
+                Box::new(move |sde, th, x0, k| {
+                    let out = backprop_through_solver(
+                        sde,
+                        th,
+                        x0,
+                        0.0,
+                        1.0,
+                        steps,
+                        k,
+                        Method::EulerMaruyama,
+                    );
+                    (out.grad_theta, out.w_terminal)
+                }),
+            ),
+            (
+                "backprop_milstein",
+                Box::new(move |sde, th, x0, k| {
+                    let out = backprop_through_solver(
+                        sde,
+                        th,
+                        x0,
+                        0.0,
+                        1.0,
+                        steps,
+                        k,
+                        Method::MilsteinIto,
+                    );
+                    (out.grad_theta, out.w_terminal)
+                }),
+            ),
+        ];
+        for (name, runner) in &variants {
+            let mut err_acc = 0.0;
+            let mut time_acc = 0.0;
+            for r in 0..n_paths {
+                let sde = ReplicatedSde::new(problem, DIM);
+                let key = PrngKey::from_seed(500 + r);
+                let (theta, x0) = sample_experiment_setup(key, DIM, problem.nparams());
+                let sw = Stopwatch::new();
+                let (grad_theta, w_t) = runner(&sde, &theta, &x0, key);
+                time_acc += sw.elapsed_s();
+                let mut g_x0 = vec![0.0; DIM];
+                let mut g_th = vec![0.0; theta.len()];
+                sde.analytic_loss_gradients(1.0, &x0, &theta, &w_t, &mut g_x0, &mut g_th);
+                err_acc += g_th
+                    .iter()
+                    .zip(&grad_theta)
+                    .map(|(a, b)| (a - b).abs())
+                    .sum::<f64>()
+                    / g_th.len() as f64;
+            }
+            let time = time_acc / n_paths as f64;
+            let err = err_acc / n_paths as f64;
+            println!("{:>22} {:>8} {:>12.3} {:>14.4e}", name, steps, time * 1e3, err);
+            csv.row(&[
+                problem.name().to_string(),
+                name.to_string(),
+                steps.to_string(),
+                format!("{time}"),
+                format!("{err}"),
+            ])
+            .ok();
+        }
+    }
+}
+
+/// Run all panels for all three examples (Fig 5 = Example 2; Fig 7 =
+/// Examples 1 and 3).
+pub fn run(quick: bool) {
+    super::headline("Figures 5 & 7: numerical studies (Examples 1–3)");
+    let mut csv_a = CsvWriter::create(
+        super::out_dir().join("fig5a_error_vs_stepsize.csv"),
+        &["problem", "steps", "q1", "median", "q3", "min", "max"],
+    )
+    .expect("csv");
+    let mut csv_b = CsvWriter::create(
+        super::out_dir().join("fig5b_mse_vs_nfe.csv"),
+        &["problem", "atol", "grad_mse", "mean_nfe"],
+    )
+    .expect("csv");
+    let mut csv_c = CsvWriter::create(
+        super::out_dir().join("fig5c_time_vs_error.csv"),
+        &["problem", "method", "steps", "seconds", "mean_abs_err"],
+    )
+    .expect("csv");
+
+    panel_a(Example2, quick, &mut csv_a);
+    panel_b(Example2, quick, &mut csv_b);
+    panel_c(Example2, quick, &mut csv_c);
+    panel_a(Example1, quick, &mut csv_a);
+    panel_b(Example1, quick, &mut csv_b);
+    panel_c(Example1, quick, &mut csv_c);
+    panel_a(Example3, quick, &mut csv_a);
+    panel_b(Example3, quick, &mut csv_b);
+    panel_c(Example3, quick, &mut csv_c);
+    csv_a.flush().ok();
+    csv_b.flush().ok();
+    csv_c.flush().ok();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adjoint_error_shrinks_with_steps_example2() {
+        // Fig 5a's monotone trend, statistically.
+        let reps = 8;
+        let coarse: f64 =
+            (0..reps).map(|r| adjoint_error(Example2, 16, 700 + r)).sum::<f64>() / reps as f64;
+        let fine: f64 =
+            (0..reps).map(|r| adjoint_error(Example2, 1024, 700 + r)).sum::<f64>() / reps as f64;
+        assert!(fine < coarse, "fine {fine} !< coarse {coarse}");
+    }
+}

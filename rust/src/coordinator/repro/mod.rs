@@ -1,0 +1,24 @@
+//! Reproduction harnesses — one per table/figure of the paper's
+//! evaluation (DESIGN.md §5 maps IDs to modules). Each harness prints the
+//! paper's rows/series as an aligned text table and writes the raw data
+//! as CSV under `bench_out/`.
+//!
+//! Shared by the `cargo bench` targets (thin wrappers) and the
+//! `sdegrad repro <id>` CLI. `quick: true` shrinks the sweep for CI-speed
+//! smoke runs; `false` reproduces the paper-scale setting.
+
+pub mod fig2;
+pub mod fig5;
+pub mod latent_figs;
+pub mod table1;
+pub mod table2;
+
+/// Output directory for harness CSVs.
+pub fn out_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from("bench_out")
+}
+
+/// Print a separator headline.
+pub fn headline(title: &str) {
+    println!("\n=== {title} {}", "=".repeat(70usize.saturating_sub(title.len())));
+}

@@ -1,0 +1,19 @@
+//! Time-series datasets for the §7.2/§7.3 experiments.
+//!
+//! * [`gbm`] — 1-d geometric Brownian motion, 1024 series observed every
+//!   0.02 on [0,1], Gaussian observation noise 0.01 (App. 9.9.1).
+//! * [`lorenz`] — 3-d stochastic Lorenz attractor, 1024 series observed
+//!   every 0.025 on [0,1], normalized per dimension, noise 0.01
+//!   (App. 9.9.2).
+//! * [`mocap`] — a synthetic 50-dimensional walking-gait generator standing
+//!   in for the CMU subject-35 dataset (DESIGN.md §3 documents the
+//!   substitution): 23 sequences of 300 frames, 16/3/4 split.
+//!
+//! All generators are deterministic in their [`PrngKey`].
+
+pub mod gbm;
+pub mod lorenz;
+pub mod mocap;
+pub mod timeseries;
+
+pub use timeseries::{Batch, TimeSeriesDataset};

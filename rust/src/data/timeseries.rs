@@ -1,0 +1,209 @@
+//! Containers for regularly/irregularly sampled multivariate time series.
+
+use crate::prng::PrngKey;
+
+/// A dataset of `n_series` sequences observed at shared times.
+///
+/// Values are stored row-major as `(series, time, dim)`.
+#[derive(Clone, Debug)]
+pub struct TimeSeriesDataset {
+    pub times: Vec<f64>,
+    pub dim: usize,
+    pub n_series: usize,
+    values: Vec<f64>,
+    /// Per-dimension normalization applied at construction: `x_norm =
+    /// (x − mean) / std`. Identity if `None`.
+    pub norm: Option<(Vec<f64>, Vec<f64>)>,
+}
+
+/// A view of selected series indices (one minibatch).
+#[derive(Clone, Debug)]
+pub struct Batch<'a> {
+    pub dataset: &'a TimeSeriesDataset,
+    pub indices: Vec<usize>,
+}
+
+impl TimeSeriesDataset {
+    pub fn new(times: Vec<f64>, dim: usize, n_series: usize, values: Vec<f64>) -> Self {
+        assert_eq!(values.len(), times.len() * dim * n_series, "value buffer size mismatch");
+        TimeSeriesDataset { times, dim, n_series, values, norm: None }
+    }
+
+    /// Number of observation times.
+    pub fn n_times(&self) -> usize {
+        self.times.len()
+    }
+
+    /// The observation vector of series `s` at time index `k`.
+    pub fn obs(&self, s: usize, k: usize) -> &[f64] {
+        let stride_t = self.dim;
+        let stride_s = self.n_times() * self.dim;
+        &self.values[s * stride_s + k * stride_t..s * stride_s + k * stride_t + self.dim]
+    }
+
+    /// Full sequence of series `s` as a `(n_times, dim)` row-major slice.
+    pub fn series(&self, s: usize) -> &[f64] {
+        let stride_s = self.n_times() * self.dim;
+        &self.values[s * stride_s..(s + 1) * stride_s]
+    }
+
+    /// Normalize each dimension to zero mean / unit std across the whole
+    /// dataset (App. 9.9.2 normalizes the Lorenz data this way).
+    pub fn normalize(&mut self) {
+        let d = self.dim;
+        let n = self.values.len() / d;
+        let mut mean = vec![0.0; d];
+        let mut std = vec![0.0; d];
+        for (i, v) in self.values.iter().enumerate() {
+            mean[i % d] += v;
+        }
+        for m in mean.iter_mut() {
+            *m /= n as f64;
+        }
+        for (i, v) in self.values.iter().enumerate() {
+            let c = v - mean[i % d];
+            std[i % d] += c * c;
+        }
+        for s in std.iter_mut() {
+            *s = (*s / n as f64).sqrt().max(1e-12);
+        }
+        for (i, v) in self.values.iter_mut().enumerate() {
+            *v = (*v - mean[i % d]) / std[i % d];
+        }
+        self.norm = Some((mean, std));
+    }
+
+    /// Add i.i.d. Gaussian observation noise of the given std.
+    pub fn corrupt(&mut self, key: PrngKey, noise_std: f64) {
+        let mut buf = vec![0.0; self.values.len()];
+        key.fill_normal(0, &mut buf);
+        for (v, n) in self.values.iter_mut().zip(&buf) {
+            *v += noise_std * n;
+        }
+    }
+
+    /// Deterministically shuffle indices and split into three datasets'
+    /// index lists of the given sizes.
+    pub fn split_indices(
+        &self,
+        key: PrngKey,
+        n_train: usize,
+        n_val: usize,
+        n_test: usize,
+    ) -> (Vec<usize>, Vec<usize>, Vec<usize>) {
+        assert!(n_train + n_val + n_test <= self.n_series, "split exceeds dataset");
+        let mut idx: Vec<usize> = (0..self.n_series).collect();
+        // Fisher–Yates with our PRNG.
+        for i in (1..idx.len()).rev() {
+            let j = (key.uniform(i as u64) * (i + 1) as f64) as usize;
+            idx.swap(i, j.min(i));
+        }
+        let train = idx[..n_train].to_vec();
+        let val = idx[n_train..n_train + n_val].to_vec();
+        let test = idx[n_train + n_val..n_train + n_val + n_test].to_vec();
+        (train, val, test)
+    }
+
+    /// Iterate minibatches of `batch_size` over the given indices in a
+    /// deterministic per-epoch shuffled order.
+    pub fn minibatches<'a>(
+        &'a self,
+        indices: &[usize],
+        batch_size: usize,
+        key: PrngKey,
+        epoch: u64,
+    ) -> Vec<Batch<'a>> {
+        let mut order = indices.to_vec();
+        let k = key.fold_in(epoch);
+        for i in (1..order.len()).rev() {
+            let j = (k.uniform(i as u64) * (i + 1) as f64) as usize;
+            order.swap(i, j.min(i));
+        }
+        order
+            .chunks(batch_size)
+            .map(|c| Batch { dataset: self, indices: c.to_vec() })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> TimeSeriesDataset {
+        // 2 series, 3 times, dim 2: values = series*100 + time*10 + dim.
+        let mut vals = Vec::new();
+        for s in 0..2 {
+            for t in 0..3 {
+                for d in 0..2 {
+                    vals.push((s * 100 + t * 10 + d) as f64);
+                }
+            }
+        }
+        TimeSeriesDataset::new(vec![0.0, 0.5, 1.0], 2, 2, vals)
+    }
+
+    #[test]
+    fn indexing_layout() {
+        let ds = toy();
+        assert_eq!(ds.obs(0, 0), &[0.0, 1.0]);
+        assert_eq!(ds.obs(1, 2), &[120.0, 121.0]);
+        assert_eq!(ds.series(0).len(), 6);
+    }
+
+    #[test]
+    fn normalization_zero_mean_unit_std() {
+        let mut ds = toy();
+        ds.normalize();
+        let d = ds.dim;
+        let n = ds.values.len() / d;
+        for dim in 0..d {
+            let vals: Vec<f64> = ds.values.iter().skip(dim).step_by(d).copied().collect();
+            let mean: f64 = vals.iter().sum::<f64>() / n as f64;
+            let var: f64 = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n as f64;
+            assert!(mean.abs() < 1e-10, "dim {dim} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-10, "dim {dim} var {var}");
+        }
+    }
+
+    #[test]
+    fn split_is_disjoint_and_deterministic() {
+        let mut vals = vec![0.0; 10 * 3 * 2];
+        for (i, v) in vals.iter_mut().enumerate() {
+            *v = i as f64;
+        }
+        let ds = TimeSeriesDataset::new(vec![0.0, 0.5, 1.0], 2, 10, vals);
+        let key = PrngKey::from_seed(5);
+        let (tr, va, te) = ds.split_indices(key, 6, 2, 2);
+        let (tr2, _, _) = ds.split_indices(key, 6, 2, 2);
+        assert_eq!(tr, tr2);
+        let mut all: Vec<usize> = tr.iter().chain(&va).chain(&te).copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 10, "split indices overlap");
+    }
+
+    #[test]
+    fn minibatches_cover_all_indices() {
+        let ds = toy();
+        let batches = ds.minibatches(&[0, 1], 1, PrngKey::from_seed(1), 0);
+        assert_eq!(batches.len(), 2);
+        let mut seen: Vec<usize> = batches.iter().flat_map(|b| b.indices.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1]);
+    }
+
+    #[test]
+    fn corrupt_changes_values_modestly() {
+        let mut ds = toy();
+        let before = ds.series(0).to_vec();
+        ds.corrupt(PrngKey::from_seed(3), 0.01);
+        let after = ds.series(0);
+        let max_delta = before
+            .iter()
+            .zip(after)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(max_delta > 0.0 && max_delta < 0.1);
+    }
+}

@@ -1,0 +1,569 @@
+//! One ELBO training step for a latent SDE (Eq. 10) with gradients via the
+//! stochastic adjoint.
+//!
+//! Loss for one sequence `x_{t_0..t_{K-1}}`:
+//!
+//! ```text
+//! L = − Σ_k log N(x_k | dec(z_k), s²I)          (reconstruction)
+//!     + β · ( ℓ_T + KL(q(z_0) ‖ p(z_0)) )       (path KL + initial KL)
+//! ```
+//!
+//! where `ℓ_T = ∫ ½|u|² dt` accumulates in the forward solve (see
+//! [`super::posterior`]), `β` is the KL weight (annealed per §7.3), and
+//! `q(z_0)` comes from the recognition network.
+//!
+//! Gradient flow, in one pass over the sequence:
+//! 1. encoder forward (contexts per interval + `q(z_0)`), reparameterized
+//!    sample `z_0 = μ₀ + e^{½lv₀}·ε`;
+//! 2. piecewise forward SDE solve (Heun) recording `(z, ℓ)` at obs times;
+//! 3. backward: interval-by-interval stochastic adjoint with the context
+//!    in the parameter tail; decoder VJPs injected at each observation;
+//! 4. `∂L/∂z_0` → reparameterization + Gaussian-KL grads → `q`-head;
+//!    `∂L/∂ctx_k` → encoder BPTT; decoder grads accumulated in step 3.
+//!
+//! The result is a single flat gradient aligned with
+//! [`LatentSdeModel::init_params`]'s layout — ready for
+//! [`crate::optim::Adam`].
+
+use super::model::{Encoder, LatentSdeModel};
+use super::posterior::PosteriorSde;
+use crate::adjoint::BackwardSolver;
+use crate::brownian::BrownianPath;
+use crate::nn::gru::GruStepCache;
+use crate::prng::PrngKey;
+use crate::sde::ForwardFunc;
+use crate::solvers::{integrate_grid, uniform_grid, Method, SolveStats};
+
+/// Per-step ELBO configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ElboConfig {
+    /// Solver sub-steps per observation interval (§7.3 uses 1/5 of the
+    /// smallest gap, i.e. 5 sub-steps).
+    pub substeps: usize,
+    /// KL weight β (validated over {1, 0.1, 0.01, 0.001} in the paper).
+    pub kl_weight: f64,
+}
+
+impl Default for ElboConfig {
+    fn default() -> Self {
+        ElboConfig { substeps: 5, kl_weight: 1.0 }
+    }
+}
+
+/// Outputs of one ELBO step.
+#[derive(Clone, Debug)]
+pub struct ElboOutput {
+    /// Total loss (negative ELBO, up to the constant β-weighting choice).
+    pub loss: f64,
+    /// Σ log p(x_k | z_k).
+    pub log_px: f64,
+    /// Path KL `ℓ_T`.
+    pub kl_path: f64,
+    /// `KL(q(z_0) ‖ p(z_0))`.
+    pub kl_z0: f64,
+    /// Mean squared reconstruction error per observed value.
+    pub recon_mse: f64,
+    /// Flat gradient (length `model.n_params`).
+    pub grad: Vec<f64>,
+    /// Latent states at observation times, row-major `(K, dz)` (useful for
+    /// diagnostics/visualization).
+    pub z_obs: Vec<f64>,
+    pub forward_stats: SolveStats,
+    pub backward_stats: SolveStats,
+}
+
+/// Gaussian log-density `log N(x | mean, std²I)` summed over dims.
+fn gaussian_logpdf(x: &[f64], mean: &[f64], std: f64) -> f64 {
+    let var = std * std;
+    let log_norm = -0.5 * (2.0 * std::f64::consts::PI * var).ln();
+    x.iter()
+        .zip(mean)
+        .map(|(xi, mi)| {
+            let d = xi - mi;
+            log_norm - 0.5 * d * d / var
+        })
+        .sum()
+}
+
+/// Encoder forward results.
+struct EncodeResult {
+    /// Context per interval k=1..K-1 (row-major `(K-1, dc)`); interval k
+    /// spans `[t_{k-1}, t_k]`.
+    ctx: Vec<f64>,
+    mu0: Vec<f64>,
+    logvar0: Vec<f64>,
+    /// GRU step caches (reverse order as processed) or the MLP cache input.
+    gru_caches: Vec<GruStepCache>,
+    mlp_input: Vec<f64>,
+    /// Encoder hidden state fed to the q-head.
+    q_in: Vec<f64>,
+}
+
+fn encode(model: &LatentSdeModel, params: &[f64], obs: &[f64], n_obs: usize) -> EncodeResult {
+    let dx = model.cfg.obs_dim;
+    let dz = model.cfg.latent_dim;
+    let dc = model.cfg.context_dim;
+    match &model.encoder {
+        Encoder::Gru { cell, ctx_head } => {
+            // Process observations in reverse: step s handles obs K-1-s.
+            let mut h = vec![0.0; model.cfg.enc_hidden];
+            let mut caches = Vec::with_capacity(n_obs);
+            let mut hs = Vec::with_capacity(n_obs); // hidden after each step
+            for s in 0..n_obs {
+                let k = n_obs - 1 - s;
+                let x = &obs[k * dx..(k + 1) * dx];
+                let mut cache = GruStepCache::default();
+                let mut h_next = vec![0.0; model.cfg.enc_hidden];
+                cell.forward(params, x, &h, &mut cache, &mut h_next);
+                caches.push(cache);
+                h = h_next;
+                hs.push(h.clone());
+            }
+            // ctx_k (interval [t_{k-1}, t_k]) from h after step s = K-1-k,
+            // i.e. after processing observations k..K-1 ("the future").
+            let mut ctx = vec![0.0; (n_obs - 1) * dc];
+            for k in 1..n_obs {
+                let s = n_obs - 1 - k;
+                ctx_head.forward(params, &hs[s], &mut ctx[(k - 1) * dc..k * dc]);
+            }
+            // q(z0) from the full pass.
+            let q_in = hs[n_obs - 1].clone();
+            let mut q_out = vec![0.0; 2 * dz];
+            model.q_head.forward(params, &q_in, &mut q_out);
+            EncodeResult {
+                ctx,
+                mu0: q_out[..dz].to_vec(),
+                logvar0: q_out[dz..].to_vec(),
+                gru_caches: caches,
+                mlp_input: Vec::new(),
+                q_in,
+            }
+        }
+        Encoder::Mlp { net, n_frames } => {
+            let n_frames = (*n_frames).min(n_obs);
+            let mut input = vec![0.0; dx * n_frames];
+            input.copy_from_slice(&obs[..dx * n_frames]);
+            let mut cache = net.cache();
+            let mut out = vec![0.0; model.cfg.enc_hidden + dc];
+            net.forward(params, &input, &mut cache, &mut out);
+            let q_in = out[..model.cfg.enc_hidden].to_vec();
+            let ctx_static = &out[model.cfg.enc_hidden..];
+            let mut ctx = vec![0.0; (n_obs - 1) * dc];
+            for k in 0..n_obs - 1 {
+                ctx[k * dc..(k + 1) * dc].copy_from_slice(ctx_static);
+            }
+            let mut q_out = vec![0.0; 2 * dz];
+            model.q_head.forward(params, &q_in, &mut q_out);
+            EncodeResult {
+                ctx,
+                mu0: q_out[..dz].to_vec(),
+                logvar0: q_out[dz..].to_vec(),
+                gru_caches: Vec::new(),
+                mlp_input: input,
+                q_in,
+            }
+        }
+    }
+}
+
+/// One ELBO evaluation with full gradients for a single sequence.
+///
+/// `times` are the observation times (ascending, length K ≥ 2); `obs` is
+/// row-major `(K, obs_dim)`. `key` drives the reparameterization sample
+/// and the Brownian path.
+pub fn elbo_step(
+    model: &LatentSdeModel,
+    params: &[f64],
+    times: &[f64],
+    obs: &[f64],
+    key: PrngKey,
+    cfg: &ElboConfig,
+) -> ElboOutput {
+    let dz = model.cfg.latent_dim;
+    let dx = model.cfg.obs_dim;
+    let dc = model.cfg.context_dim;
+    let n_obs = times.len();
+    assert!(n_obs >= 2, "elbo_step: need at least two observations");
+    assert_eq!(obs.len(), n_obs * dx, "elbo_step: obs layout mismatch");
+    let s_obs = model.cfg.obs_noise_std;
+    let beta = cfg.kl_weight;
+
+    // ---- 1. Encode. --------------------------------------------------
+    let enc = encode(model, params, obs, n_obs);
+
+    // Reparameterized z0.
+    let (k_eps, k_bm) = key.split();
+    let mut eps = vec![0.0; dz];
+    k_eps.fill_normal(0, &mut eps);
+    let mut z0 = vec![0.0; dz];
+    for i in 0..dz {
+        z0[i] = enc.mu0[i] + (0.5 * enc.logvar0[i]).exp() * eps[i];
+    }
+
+    // ---- 2. Forward solve with running KL. ---------------------------
+    let sde = PosteriorSde::new(model);
+    let n_sde = sde.sde_param_len();
+    let aug = dz + 1;
+    let mut bm = BrownianPath::new(k_bm, aug, times[0], times[n_obs - 1]);
+    let mut theta_full = vec![0.0; n_sde + dc];
+    theta_full[..n_sde].copy_from_slice(&params[..n_sde]);
+
+    let mut y = vec![0.0; aug];
+    y[..dz].copy_from_slice(&z0);
+    let mut y_obs = vec![0.0; n_obs * aug]; // (z, l) at each obs time
+    y_obs[..aug].copy_from_slice(&y);
+    let mut forward_stats = SolveStats::default();
+
+    for k in 1..n_obs {
+        theta_full[n_sde..].copy_from_slice(&enc.ctx[(k - 1) * dc..k * dc]);
+        let grid = uniform_grid(times[k - 1], times[k], cfg.substeps);
+        let mut sys = ForwardFunc::for_method(&sde, &theta_full, Method::Heun);
+        let mut y_next = vec![0.0; aug];
+        let st = integrate_grid(&mut sys, Method::Heun, &y, &grid, &mut bm, &mut y_next);
+        forward_stats.steps += st.steps;
+        forward_stats.nfe_drift += st.nfe_drift;
+        forward_stats.nfe_diffusion += st.nfe_diffusion;
+        y.copy_from_slice(&y_next);
+        y_obs[k * aug..(k + 1) * aug].copy_from_slice(&y);
+    }
+    let kl_path = y[dz];
+
+    // ---- 3. Reconstruction terms. ------------------------------------
+    let mut dec_cache = model.decoder.cache();
+    let mut xhat = vec![0.0; dx];
+    let mut log_px = 0.0;
+    let mut sq_err = 0.0;
+    for k in 0..n_obs {
+        let z_k = &y_obs[k * aug..k * aug + dz];
+        model.decoder.forward(params, z_k, &mut dec_cache, &mut xhat);
+        let x_k = &obs[k * dx..(k + 1) * dx];
+        log_px += gaussian_logpdf(x_k, &xhat, s_obs);
+        sq_err += x_k.iter().zip(&xhat).map(|(a, b)| (a - b) * (a - b)).sum::<f64>();
+    }
+    let recon_mse = sq_err / (n_obs * dx) as f64;
+
+    // KL(q(z0) || p(z0)) with learnable Gaussian prior.
+    let mu_p = &params[model.pz0_mean_off..model.pz0_mean_off + dz];
+    let lv_p = &params[model.pz0_logvar_off..model.pz0_logvar_off + dz];
+    let mut kl_z0 = 0.0;
+    for i in 0..dz {
+        let var_q = enc.logvar0[i].exp();
+        let var_p = lv_p[i].exp();
+        let dmu = enc.mu0[i] - mu_p[i];
+        kl_z0 += 0.5 * (lv_p[i] - enc.logvar0[i] + (var_q + dmu * dmu) / var_p - 1.0);
+    }
+
+    let loss = -log_px + beta * (kl_path + kl_z0);
+
+    // ---- 4. Backward pass. -------------------------------------------
+    let mut grad = vec![0.0; model.n_params];
+    let mut dctx = vec![0.0; (n_obs - 1) * dc];
+    let mut backward_stats = SolveStats::default();
+
+    // Adjoint state: a = [a_z (dz), a_ℓ].
+    let mut a = vec![0.0; aug];
+    a[dz] = beta; // ∂loss/∂ℓ_T
+
+    // Decoder VJP helper: adds ∂(−log p(x_k|z_k))/∂z into `a_z` and the
+    // decoder parameter grads into `grad`.
+    let add_obs_grad = |k: usize,
+                            a: &mut [f64],
+                            grad: &mut [f64],
+                            dec_cache: &mut crate::nn::MlpCache,
+                            y_obs: &[f64]| {
+        let z_k = &y_obs[k * aug..k * aug + dz];
+        let mut xh = vec![0.0; dx];
+        model.decoder.forward(params, z_k, dec_cache, &mut xh);
+        let x_k = &obs[k * dx..(k + 1) * dx];
+        // d(−log N)/dx̂ = (x̂ − x)/s².
+        let inv_var = 1.0 / (s_obs * s_obs);
+        let dxh: Vec<f64> = xh.iter().zip(x_k).map(|(h, x)| (h - x) * inv_var).collect();
+        let mut dz_buf = vec![0.0; dz];
+        model.decoder.vjp(params, dec_cache, &dxh, &mut dz_buf, grad);
+        for i in 0..dz {
+            a[i] += dz_buf[i];
+        }
+    };
+
+    add_obs_grad(n_obs - 1, &mut a, &mut grad, &mut dec_cache, &y_obs);
+
+    let mut yb = y_obs[(n_obs - 1) * aug..].to_vec();
+    let mut ath_full = vec![0.0; n_sde + dc];
+    // One solver for all intervals: scratch buffers are O(n_params) and
+    // re-allocating them per interval dominated allocation traffic
+    // (EXPERIMENTS.md §Perf).
+    let mut solver = BackwardSolver::new(&sde, &theta_full);
+    for k in (1..n_obs).rev() {
+        theta_full[n_sde..].copy_from_slice(&enc.ctx[(k - 1) * dc..k * dc]);
+        solver.set_theta(&theta_full);
+        let grid = uniform_grid(times[k], times[k - 1], cfg.substeps); // descending
+        ath_full.fill(0.0);
+        solver.solve_interval(&grid, &mut yb, &mut a, &mut ath_full, &mut bm, &mut backward_stats);
+        for (g, a) in grad[..n_sde].iter_mut().zip(&ath_full[..n_sde]) {
+            *g += a;
+        }
+        dctx[(k - 1) * dc..k * dc].copy_from_slice(&ath_full[n_sde..]);
+        // Inject the observation gradient at t_{k-1} and re-anchor the
+        // path reconstruction at the stored forward state.
+        add_obs_grad(k - 1, &mut a, &mut grad, &mut dec_cache, &y_obs);
+        yb.copy_from_slice(&y_obs[(k - 1) * aug..k * aug]);
+    }
+
+    // ---- 5. z0 / q(z0) / p(z0) gradients. ------------------------------
+    // Reparameterization: z0 = μ0 + e^{½lv0}·ε.
+    let mut dmu0 = vec![0.0; dz];
+    let mut dlv0 = vec![0.0; dz];
+    for i in 0..dz {
+        dmu0[i] = a[i];
+        dlv0[i] = a[i] * eps[i] * 0.5 * (0.5 * enc.logvar0[i]).exp();
+    }
+    // KL(q||p) gradients (weighted by β).
+    for i in 0..dz {
+        let var_q = enc.logvar0[i].exp();
+        let var_p = lv_p[i].exp();
+        let dmu = enc.mu0[i] - mu_p[i];
+        dmu0[i] += beta * dmu / var_p;
+        dlv0[i] += beta * 0.5 * (var_q / var_p - 1.0);
+        grad[model.pz0_mean_off + i] += beta * (-dmu / var_p);
+        grad[model.pz0_logvar_off + i] +=
+            beta * 0.5 * (1.0 - (var_q + dmu * dmu) / var_p);
+    }
+
+    // ---- 6. Encoder backward. ------------------------------------------
+    // q-head VJP.
+    let dq_out: Vec<f64> = dmu0.iter().chain(dlv0.iter()).copied().collect();
+    let mut dq_in = vec![0.0; enc.q_in.len()];
+    model.q_head.vjp(params, &enc.q_in, &dq_out, &mut dq_in, &mut grad);
+
+    match &model.encoder {
+        Encoder::Gru { cell, ctx_head } => {
+            // BPTT over the reverse-order GRU. Hidden after step s was used
+            // by ctx_head for interval k = K-1-s (s ≤ K-2) and by the
+            // q-head at s = K-1.
+            let hd = model.cfg.enc_hidden;
+            let mut dh = vec![0.0; hd];
+            for s in (0..n_obs).rev() {
+                if s == n_obs - 1 {
+                    for i in 0..hd {
+                        dh[i] += dq_in[i];
+                    }
+                } else {
+                    let k = n_obs - 1 - s;
+                    let h_s = &enc.gru_caches[s + 1].h; // h after step s == input h of step s+1
+                    ctx_head.vjp(
+                        params,
+                        h_s,
+                        &dctx[(k - 1) * dc..k * dc],
+                        &mut dh,
+                        &mut grad,
+                    );
+                }
+                let mut dh_prev = vec![0.0; hd];
+                let mut dx_sink = vec![0.0; dx];
+                cell.vjp(params, &enc.gru_caches[s], &dh, &mut dx_sink, &mut dh_prev, &mut grad);
+                dh = dh_prev;
+            }
+        }
+        Encoder::Mlp { net, .. } => {
+            // Static context: sum interval gradients.
+            let mut dout = vec![0.0; model.cfg.enc_hidden + dc];
+            dout[..model.cfg.enc_hidden].copy_from_slice(&dq_in);
+            for k in 0..n_obs - 1 {
+                for c in 0..dc {
+                    dout[model.cfg.enc_hidden + c] += dctx[k * dc + c];
+                }
+            }
+            let mut cache = net.cache();
+            let mut out = vec![0.0; model.cfg.enc_hidden + dc];
+            net.forward(params, &enc.mlp_input, &mut cache, &mut out);
+            let mut dx_sink = vec![0.0; enc.mlp_input.len()];
+            net.vjp(params, &mut cache, &dout, &mut dx_sink, &mut grad);
+        }
+    }
+
+    let z_obs: Vec<f64> = (0..n_obs)
+        .flat_map(|k| y_obs[k * aug..k * aug + dz].to_vec())
+        .collect();
+
+    ElboOutput {
+        loss,
+        log_px,
+        kl_path,
+        kl_z0,
+        recon_mse,
+        grad,
+        z_obs,
+        forward_stats,
+        backward_stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::latent::model::{DiffusionMode, EncoderKind, LatentSdeConfig, LatentSdeModel};
+
+    fn tiny_cfg() -> LatentSdeConfig {
+        LatentSdeConfig {
+            obs_dim: 2,
+            latent_dim: 3,
+            context_dim: 2,
+            hidden: 8,
+            diff_hidden: 4,
+            enc_hidden: 6,
+            obs_noise_std: 0.1,
+            ..Default::default()
+        }
+    }
+
+    fn toy_sequence(n_obs: usize, dx: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let times: Vec<f64> = (0..n_obs).map(|k| 0.1 * k as f64).collect();
+        let mut obs = vec![0.0; n_obs * dx];
+        PrngKey::from_seed(seed).fill_normal(0, &mut obs);
+        for v in obs.iter_mut() {
+            *v *= 0.3;
+        }
+        (times, obs)
+    }
+
+    #[test]
+    fn elbo_components_are_finite_and_signed() {
+        let model = LatentSdeModel::new(tiny_cfg());
+        let params = model.init_params(PrngKey::from_seed(1));
+        let (times, obs) = toy_sequence(5, 2, 2);
+        let out = elbo_step(&model, &params, &times, &obs, PrngKey::from_seed(3), &ElboConfig::default());
+        assert!(out.loss.is_finite());
+        assert!(out.kl_path >= 0.0, "path KL must be ≥ 0: {}", out.kl_path);
+        assert!(out.kl_z0 >= 0.0, "z0 KL must be ≥ 0: {}", out.kl_z0);
+        assert!(out.grad.iter().all(|g| g.is_finite()));
+        assert!(out.grad.iter().any(|g| g.abs() > 0.0), "gradient identically zero");
+    }
+
+    /// The central correctness test of the whole latent-SDE stack: the
+    /// assembled gradient must match finite differences of the full loss
+    /// (same key → same ε and Brownian path → deterministic loss).
+    ///
+    /// Note the adjoint gradient equals the FD gradient only in the h→0
+    /// limit (it differentiates the continuous system, not the discrete
+    /// solver), so we use a moderate tolerance and many substeps.
+    #[test]
+    fn full_gradient_matches_finite_difference() {
+        let model = LatentSdeModel::new(tiny_cfg());
+        let params = model.init_params(PrngKey::from_seed(10));
+        let (times, obs) = toy_sequence(4, 2, 11);
+        let key = PrngKey::from_seed(12);
+        let cfg = ElboConfig { substeps: 40, kl_weight: 0.7 };
+
+        let out = elbo_step(&model, &params, &times, &obs, key, &cfg);
+        let loss_at = |p: &[f64]| elbo_step(&model, p, &times, &obs, key, &cfg).loss;
+
+        let n = params.len();
+        let eps = 1e-5;
+        let mut checked = 0;
+        let mut max_rel: f64 = 0.0;
+        for j in (0..n).step_by((n / 50).max(1)) {
+            let mut pp = params.clone();
+            pp[j] += eps;
+            let hi = loss_at(&pp);
+            pp[j] -= 2.0 * eps;
+            let lo = loss_at(&pp);
+            let fd = (hi - lo) / (2.0 * eps);
+            let g = out.grad[j];
+            let denom = fd.abs().max(g.abs()).max(1e-2);
+            let rel = (fd - g).abs() / denom;
+            max_rel = max_rel.max(rel);
+            assert!(
+                rel < 0.05,
+                "param {j}: fd {fd:.6} vs adjoint {g:.6} (rel {rel:.4})"
+            );
+            checked += 1;
+        }
+        assert!(checked > 30, "too few parameters probed");
+    }
+
+    #[test]
+    fn ode_mode_gradient_matches_finite_difference() {
+        let model = LatentSdeModel::new(LatentSdeConfig {
+            diffusion: DiffusionMode::Off,
+            ..tiny_cfg()
+        });
+        let params = model.init_params(PrngKey::from_seed(20));
+        let (times, obs) = toy_sequence(4, 2, 21);
+        let key = PrngKey::from_seed(22);
+        let cfg = ElboConfig { substeps: 30, kl_weight: 0.5 };
+        let out = elbo_step(&model, &params, &times, &obs, key, &cfg);
+        assert_eq!(out.kl_path, 0.0, "ODE mode has no path KL");
+
+        let loss_at = |p: &[f64]| elbo_step(&model, p, &times, &obs, key, &cfg).loss;
+        let n = params.len();
+        let eps = 1e-5;
+        for j in (0..n).step_by((n / 40).max(1)) {
+            let mut pp = params.clone();
+            pp[j] += eps;
+            let hi = loss_at(&pp);
+            pp[j] -= 2.0 * eps;
+            let lo = loss_at(&pp);
+            let fd = (hi - lo) / (2.0 * eps);
+            let g = out.grad[j];
+            let denom = fd.abs().max(g.abs()).max(1e-2);
+            assert!(
+                (fd - g).abs() / denom < 0.05,
+                "param {j}: fd {fd:.6} vs adjoint {g:.6}"
+            );
+        }
+    }
+
+    #[test]
+    fn mlp_encoder_gradient_matches_finite_difference() {
+        let model = LatentSdeModel::new(LatentSdeConfig {
+            encoder: EncoderKind::FirstFramesMlp { n_frames: 3 },
+            ..tiny_cfg()
+        });
+        let params = model.init_params(PrngKey::from_seed(30));
+        let (times, obs) = toy_sequence(5, 2, 31);
+        let key = PrngKey::from_seed(32);
+        let cfg = ElboConfig { substeps: 30, kl_weight: 1.0 };
+        let out = elbo_step(&model, &params, &times, &obs, key, &cfg);
+        let loss_at = |p: &[f64]| elbo_step(&model, p, &times, &obs, key, &cfg).loss;
+        let n = params.len();
+        let eps = 1e-5;
+        for j in (0..n).step_by((n / 40).max(1)) {
+            let mut pp = params.clone();
+            pp[j] += eps;
+            let hi = loss_at(&pp);
+            pp[j] -= 2.0 * eps;
+            let lo = loss_at(&pp);
+            let fd = (hi - lo) / (2.0 * eps);
+            let g = out.grad[j];
+            let denom = fd.abs().max(g.abs()).max(1e-2);
+            assert!(
+                (fd - g).abs() / denom < 0.05,
+                "param {j}: fd {fd:.6} vs adjoint {g:.6}"
+            );
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_on_fixed_noise() {
+        // A few Adam steps with a FIXED key must reduce the deterministic
+        // loss — end-to-end sanity of gradient direction.
+        use crate::optim::Adam;
+        let model = LatentSdeModel::new(tiny_cfg());
+        let mut params = model.init_params(PrngKey::from_seed(40));
+        let (times, obs) = toy_sequence(5, 2, 41);
+        let key = PrngKey::from_seed(42);
+        let cfg = ElboConfig { substeps: 8, kl_weight: 0.1 };
+        let mut adam = Adam::new(params.len(), 2e-3);
+        let first = elbo_step(&model, &params, &times, &obs, key, &cfg).loss;
+        let mut last = first;
+        for _ in 0..30 {
+            let out = elbo_step(&model, &params, &times, &obs, key, &cfg);
+            last = out.loss;
+            adam.step(&mut params, &out.grad, 1.0);
+        }
+        assert!(
+            last < first - 1.0,
+            "loss did not decrease: first {first}, last {last}"
+        );
+    }
+}

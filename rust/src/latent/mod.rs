@@ -1,0 +1,38 @@
+//! Latent stochastic differential equations (paper §5).
+//!
+//! A variational autoencoder whose decoder is an SDE solve: the prior over
+//! latent paths is `dZ̃ = h_θ(Z̃,t) dt + σ(Z̃,t) ∘ dW`, the approximate
+//! posterior is `dZ = h_φ(Z,t,ctx) dt + σ(Z,t) ∘ dW` with the *same*
+//! diffusion, and the path-space KL is `∫ ½|u|² dt` with
+//! `σ_i u_i = h_φ,i − h_θ,i` (Girsanov; App. 9.5).
+//!
+//! **Calculus convention.** The model is defined natively in *Stratonovich*
+//! form. Because prior and posterior share σ, their Itô↔Stratonovich drift
+//! corrections are identical and cancel in `u`, so the KL term — and hence
+//! the ELBO — is the same in either reading; defining the model in
+//! Stratonovich form lets the stochastic adjoint run with first-order VJPs
+//! only (no second derivatives of the diffusion nets). DESIGN.md §6.
+//!
+//! Module map:
+//! * [`model`] — architecture (App. 9.9/9.11): prior/posterior drift MLPs,
+//!   per-dimension diffusion nets with sigmoid output, decoder, GRU or
+//!   first-frames-MLP encoder, learnable `p(z_0)`/`q(z_0)`.
+//! * [`posterior`] — the augmented `(z, ℓ)` system (state + running KL) as
+//!   an [`crate::sde::SdeVjp`], with the per-interval context appended to
+//!   the parameter vector so the adjoint also yields `∂L/∂ctx`.
+//! * [`elbo`] — one training step: encode → sample z₀ → piecewise forward
+//!   solve with the running-KL augmentation → decoder likelihoods →
+//!   interval-by-interval stochastic adjoint → encoder/decoder backprop →
+//!   one flat gradient. Setting `DiffusionMode::Off` recovers the latent
+//!   ODE baseline of Table 2 (zero diffusion, zero path-KL, ODE adjoint).
+//! * [`sample`] — prior/posterior path sampling for Figures 6/8/9.
+
+pub mod elbo;
+pub mod model;
+pub mod posterior;
+pub mod sample;
+
+pub use elbo::{elbo_step, ElboConfig, ElboOutput};
+pub use model::{DiffusionMode, EncoderKind, LatentSdeConfig, LatentSdeModel};
+pub use posterior::PosteriorSde;
+pub use sample::{decode_path, sample_posterior_path, sample_prior_path};

@@ -1,0 +1,517 @@
+//! The augmented posterior system `(z, ℓ)` as an [`Sde`]/[`SdeVjp`].
+//!
+//! Forward state: `y = [z (dz) | ℓ (1)]` where `ℓ_t = ∫₀ᵗ ½|u|² ds` is the
+//! running path-KL (§5: "augment the forward SDE with an extra scalar
+//! variable whose drift is ½|u|² and whose diffusion is zero").
+//!
+//! Parameter vector seen by the adjoint: `[model params (N) | ctx (dc)]` —
+//! the per-interval context produced by the recognition network is treated
+//! as a constant parameter block for the duration of an interval, so the
+//! stochastic adjoint's `a_θ` yields `∂L/∂ctx` in the tail, which the
+//! trainer then backpropagates through the encoder. This is exactly the
+//! "treat inputs as zero-dynamics state" trick of §3.3 applied to the
+//! context.
+//!
+//! Backward dynamics (Eq. 18): the `a_z` adjoint receives an extra drift
+//! term `a_ℓ · ∂(½|u|²)/∂z` and the parameter adjoints receive
+//! `a_ℓ · ∂(½|u|²)/∂θ`; `a_ℓ` itself is constant. All of this emerges
+//! automatically from implementing the drift VJP of the augmented system —
+//! no special-casing in the adjoint driver.
+
+use std::cell::RefCell;
+
+use super::model::{DiffusionMode, LatentSdeModel};
+use crate::nn::MlpCache;
+use crate::sde::{Calculus, Sde, SdeVjp};
+
+/// Scratch buffers + forward caches (interior-mutable: the `Sde` trait is
+/// `&self`, and each `PosteriorSde` is used by one solver at a time).
+struct Scratch {
+    post_in: Vec<f64>,
+    prior_in: Vec<f64>,
+    post_cache: MlpCache,
+    prior_cache: MlpCache,
+    diff_caches: Vec<MlpCache>,
+    h_post: Vec<f64>,
+    h_prior: Vec<f64>,
+    sig: Vec<f64>,
+    u: Vec<f64>,
+    vjp_vec: Vec<f64>,
+    dx_post: Vec<f64>,
+    dx_prior: Vec<f64>,
+}
+
+/// The latent posterior SDE with running-KL augmentation.
+pub struct PosteriorSde<'a> {
+    model: &'a LatentSdeModel,
+    /// Length of the SDE-relevant prefix of the flat parameter vector
+    /// (prior drift | posterior drift | diffusion nets — everything the
+    /// path dynamics can depend on). Decoder/encoder/q-head/p(z0) params
+    /// sit *after* this prefix and can never receive path-adjoint
+    /// gradients, so the adjoint runs over `sde_len + dc` parameters
+    /// instead of `n_params + dc` — a large constant-factor win in the
+    /// O(p)-per-step quadrature (EXPERIMENTS.md §Perf).
+    sde_len: usize,
+    scratch: RefCell<Scratch>,
+}
+
+impl<'a> PosteriorSde<'a> {
+    pub fn new(model: &'a LatentSdeModel) -> Self {
+        let dz = model.cfg.latent_dim;
+        let dc = model.cfg.context_dim;
+        // The decoder is allocated immediately after the diffusion nets
+        // (see LatentSdeModel::new), so its first weight offset bounds the
+        // SDE-relevant region.
+        let sde_len = model.decoder.layers[0].w_off;
+        let scratch = Scratch {
+            post_in: vec![0.0; dz + 1 + dc],
+            prior_in: vec![0.0; dz + 1],
+            post_cache: model.post_drift.cache(),
+            prior_cache: model.prior_drift.cache(),
+            diff_caches: model.diffusion.iter().map(|m| m.cache()).collect(),
+            h_post: vec![0.0; dz],
+            h_prior: vec![0.0; dz],
+            sig: vec![0.0; dz],
+            u: vec![0.0; dz],
+            vjp_vec: vec![0.0; dz],
+            dx_post: vec![0.0; dz + 1 + dc],
+            dx_prior: vec![0.0; dz + 1],
+        };
+        PosteriorSde { model, sde_len, scratch: RefCell::new(scratch) }
+    }
+
+    /// Length of the SDE-relevant parameter prefix (excludes context).
+    pub fn sde_param_len(&self) -> usize {
+        self.sde_len
+    }
+
+    #[inline]
+    fn dz(&self) -> usize {
+        self.model.cfg.latent_dim
+    }
+
+    #[inline]
+    fn n_model(&self) -> usize {
+        self.sde_len
+    }
+
+    /// Split the full parameter vector into (model params, context).
+    #[inline]
+    fn split_theta<'t>(&self, theta: &'t [f64]) -> (&'t [f64], &'t [f64]) {
+        theta.split_at(self.n_model())
+    }
+
+    /// Forward evaluation of h_φ, h_θ, σ, u into the scratch (σ only when
+    /// diffusing; u only when `with_u`).
+    fn eval_nets(&self, t: f64, z: &[f64], theta: &[f64], sc: &mut Scratch, with_u: bool) {
+        let dz = self.dz();
+        let (params, ctx) = self.split_theta(theta);
+        sc.post_in[..dz].copy_from_slice(z);
+        sc.post_in[dz] = t;
+        sc.post_in[dz + 1..].copy_from_slice(ctx);
+        {
+            let Scratch { post_in, post_cache, h_post, .. } = sc;
+            self.model.post_drift.forward(params, post_in, post_cache, h_post);
+        }
+        if with_u {
+            sc.prior_in[..dz].copy_from_slice(z);
+            sc.prior_in[dz] = t;
+            {
+                let Scratch { prior_in, prior_cache, h_prior, .. } = sc;
+                self.model.prior_drift.forward(params, prior_in, prior_cache, h_prior);
+            }
+            self.eval_sigma(params, z, sc);
+            for i in 0..dz {
+                sc.u[i] = (sc.h_post[i] - sc.h_prior[i]) / sc.sig[i];
+            }
+        }
+    }
+
+    fn eval_sigma(&self, params: &[f64], z: &[f64], sc: &mut Scratch) {
+        let dz = self.dz();
+        match self.model.cfg.diffusion {
+            DiffusionMode::Off => sc.sig[..dz].fill(0.0),
+            DiffusionMode::PerDimNets { floor, scale } => {
+                for i in 0..dz {
+                    let mut out = [0.0];
+                    self.model.diffusion[i].forward(
+                        params,
+                        &z[i..i + 1],
+                        &mut sc.diff_caches[i],
+                        &mut out,
+                    );
+                    sc.sig[i] = floor + scale * out[0];
+                }
+            }
+        }
+    }
+
+    fn diffusing(&self) -> bool {
+        !matches!(self.model.cfg.diffusion, DiffusionMode::Off)
+    }
+
+    fn diff_scale(&self) -> f64 {
+        match self.model.cfg.diffusion {
+            DiffusionMode::PerDimNets { scale, .. } => scale,
+            DiffusionMode::Off => 0.0,
+        }
+    }
+}
+
+impl<'a> Sde for PosteriorSde<'a> {
+    fn state_dim(&self) -> usize {
+        self.dz() + 1
+    }
+
+    fn param_dim(&self) -> usize {
+        self.n_model() + self.model.cfg.context_dim
+    }
+
+    fn calculus(&self) -> Calculus {
+        // Native Stratonovich by convention (see latent/mod.rs docs).
+        Calculus::Stratonovich
+    }
+
+    fn drift(&self, t: f64, y: &[f64], theta: &[f64], out: &mut [f64]) {
+        let dz = self.dz();
+        let sc = &mut *self.scratch.borrow_mut();
+        let with_u = self.diffusing();
+        self.eval_nets(t, &y[..dz], theta, sc, with_u);
+        out[..dz].copy_from_slice(&sc.h_post);
+        out[dz] = if with_u {
+            0.5 * sc.u.iter().map(|v| v * v).sum::<f64>()
+        } else {
+            0.0
+        };
+    }
+
+    fn diffusion(&self, _t: f64, y: &[f64], theta: &[f64], out: &mut [f64]) {
+        let dz = self.dz();
+        let (params, _) = self.split_theta(theta);
+        let sc = &mut *self.scratch.borrow_mut();
+        self.eval_sigma(params, &y[..dz], sc);
+        out[..dz].copy_from_slice(&sc.sig);
+        out[dz] = 0.0;
+    }
+
+    fn diffusion_dz_diag(&self, _t: f64, y: &[f64], theta: &[f64], out: &mut [f64]) {
+        let dz = self.dz();
+        let (params, _) = self.split_theta(theta);
+        out[dz] = 0.0;
+        match self.model.cfg.diffusion {
+            DiffusionMode::Off => out[..dz].fill(0.0),
+            DiffusionMode::PerDimNets { scale, .. } => {
+                let sc = &mut *self.scratch.borrow_mut();
+                for i in 0..dz {
+                    let mut o = [0.0];
+                    self.model.diffusion[i].forward(
+                        params,
+                        &y[i..i + 1],
+                        &mut sc.diff_caches[i],
+                        &mut o,
+                    );
+                    let mut dx = [0.0];
+                    // Parameter grads of this probe are discarded (cold
+                    // path: only Milstein forward stepping uses this).
+                    let mut dp = vec![0.0; params.len()];
+                    self.model.diffusion[i].vjp(params, &mut sc.diff_caches[i], &[scale], &mut dx, &mut dp);
+                    out[i] = dx[0];
+                }
+            }
+        }
+    }
+}
+
+impl<'a> SdeVjp for PosteriorSde<'a> {
+    fn drift_vjp(
+        &self,
+        t: f64,
+        y: &[f64],
+        theta: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+    ) {
+        let dz = self.dz();
+        let (params, _) = self.split_theta(theta);
+        let n_model = self.n_model();
+        let a_l = a[dz];
+        let with_u = self.diffusing();
+
+        let sc = &mut *self.scratch.borrow_mut();
+        self.eval_nets(t, &y[..dz], theta, sc, with_u);
+
+        // --- Posterior drift: weight v1 = a_z + a_ℓ·u/σ. ---
+        for i in 0..dz {
+            sc.vjp_vec[i] = a[i]
+                + if with_u { a_l * sc.u[i] / sc.sig[i] } else { 0.0 };
+        }
+        sc.dx_post.fill(0.0);
+        {
+            let Scratch { post_cache, dx_post, vjp_vec, .. } = sc;
+            self.model.post_drift.vjp(
+                params,
+                post_cache,
+                &vjp_vec[..dz],
+                dx_post,
+                &mut out_theta[..n_model],
+            );
+        }
+        for i in 0..dz {
+            out_z[i] += sc.dx_post[i];
+        }
+        // ctx gradient: input slots dz+1.. of the posterior drift.
+        let dc = self.model.cfg.context_dim;
+        for c in 0..dc {
+            out_theta[n_model + c] += sc.dx_post[dz + 1 + c];
+        }
+
+        if with_u {
+            // --- Prior drift: weight v2 = −a_ℓ·u/σ. ---
+            for i in 0..dz {
+                sc.vjp_vec[i] = -a_l * sc.u[i] / sc.sig[i];
+            }
+            sc.dx_prior.fill(0.0);
+            {
+                let Scratch { prior_cache, dx_prior, vjp_vec, .. } = sc;
+                self.model.prior_drift.vjp(
+                    params,
+                    prior_cache,
+                    &vjp_vec[..dz],
+                    dx_prior,
+                    &mut out_theta[..n_model],
+                );
+            }
+            for i in 0..dz {
+                out_z[i] += sc.dx_prior[i];
+            }
+            // --- σ-dependence of ½|u|²: ∂/∂σ_i = −u_i²/σ_i. ---
+            let scale = self.diff_scale();
+            for i in 0..dz {
+                let w = a_l * (-sc.u[i] * sc.u[i] / sc.sig[i]) * scale;
+                if w == 0.0 {
+                    continue;
+                }
+                let mut dx = [0.0];
+                // σ nets were forward-evaluated inside eval_nets.
+                self.model.diffusion[i].vjp(
+                    params,
+                    &mut sc.diff_caches[i],
+                    &[w],
+                    &mut dx,
+                    &mut out_theta[..n_model],
+                );
+                out_z[i] += dx[0];
+            }
+        }
+        // ℓ never influences the drift: out_z[dz] += 0.
+    }
+
+    fn diffusion_vjp(
+        &self,
+        _t: f64,
+        y: &[f64],
+        theta: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+    ) {
+        if !self.diffusing() {
+            return;
+        }
+        let dz = self.dz();
+        let (params, _) = self.split_theta(theta);
+        let n_model = self.n_model();
+        let scale = self.diff_scale();
+        let sc = &mut *self.scratch.borrow_mut();
+        self.eval_sigma(params, &y[..dz], sc);
+        for i in 0..dz {
+            let w = a[i] * scale;
+            if w == 0.0 {
+                continue;
+            }
+            let mut dx = [0.0];
+            self.model.diffusion[i].vjp(
+                params,
+                &mut sc.diff_caches[i],
+                &[w],
+                &mut dx,
+                &mut out_theta[..n_model],
+            );
+            out_z[i] += dx[0];
+        }
+        // ℓ-row of the diffusion is 0.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::latent::model::{LatentSdeConfig, LatentSdeModel};
+    use crate::prng::PrngKey;
+
+    fn tiny_model() -> LatentSdeModel {
+        LatentSdeModel::new(LatentSdeConfig {
+            obs_dim: 2,
+            latent_dim: 3,
+            context_dim: 2,
+            hidden: 8,
+            diff_hidden: 4,
+            enc_hidden: 6,
+            ..Default::default()
+        })
+    }
+
+    fn theta_full(model: &LatentSdeModel, seed: u64) -> Vec<f64> {
+        let params = model.init_params(PrngKey::from_seed(seed));
+        let sde_len = model.decoder.layers[0].w_off;
+        let mut th = params[..sde_len].to_vec();
+        let mut ctx = vec![0.0; model.cfg.context_dim];
+        PrngKey::from_seed(seed + 1).fill_normal(0, &mut ctx);
+        th.extend_from_slice(&ctx);
+        th
+    }
+
+    #[test]
+    fn drift_has_kl_row_and_it_is_nonnegative() {
+        let model = tiny_model();
+        let th = theta_full(&model, 1);
+        let sys = PosteriorSde::new(&model);
+        let y = [0.2, -0.5, 0.9, 0.0];
+        let mut out = [0.0; 4];
+        sys.drift(0.3, &y, &th, &mut out);
+        assert!(out[3] >= 0.0, "½|u|² must be ≥ 0, got {}", out[3]);
+    }
+
+    #[test]
+    fn drift_vjp_matches_finite_difference() {
+        let model = tiny_model();
+        let th = theta_full(&model, 2);
+        let sys = PosteriorSde::new(&model);
+        let y = [0.2, -0.5, 0.9, 0.1];
+        let a = [0.7, -1.2, 0.4, 0.9];
+        let t = 0.25;
+
+        let mut vz = vec![0.0; 4];
+        let mut vth = vec![0.0; th.len()];
+        sys.drift_vjp(t, &y, &th, &a, &mut vz, &mut vth);
+
+        let f = |yy: &[f64], tt: &[f64]| -> f64 {
+            let mut out = [0.0; 4];
+            sys.drift(t, yy, tt, &mut out);
+            out.iter().zip(&a).map(|(o, ai)| o * ai).sum()
+        };
+        let eps = 1e-6;
+        for i in 0..4 {
+            let mut yp = y;
+            yp[i] += eps;
+            let hi = f(&yp, &th);
+            yp[i] -= 2.0 * eps;
+            let lo = f(&yp, &th);
+            let fd = (hi - lo) / (2.0 * eps);
+            assert!(
+                (fd - vz[i]).abs() < 2e-5 * fd.abs().max(1.0),
+                "z[{i}]: fd {fd} vs {}",
+                vz[i]
+            );
+        }
+        // Sample parameter coordinates across all regions (model + ctx).
+        let n = th.len();
+        let probes: Vec<usize> = (0..n).step_by((n / 60).max(1)).chain([n - 1, n - 2]).collect();
+        for j in probes {
+            let mut tp = th.clone();
+            tp[j] += eps;
+            let hi = f(&y, &tp);
+            tp[j] -= 2.0 * eps;
+            let lo = f(&y, &tp);
+            let fd = (hi - lo) / (2.0 * eps);
+            assert!(
+                (fd - vth[j]).abs() < 2e-5 * fd.abs().max(1.0),
+                "θ[{j}]: fd {fd} vs {}",
+                vth[j]
+            );
+        }
+    }
+
+    #[test]
+    fn diffusion_vjp_matches_finite_difference() {
+        let model = tiny_model();
+        let th = theta_full(&model, 3);
+        let sys = PosteriorSde::new(&model);
+        let y = [0.2, -0.5, 0.9, 0.1];
+        let a = [1.0, 0.5, -0.8, 0.3];
+        let mut vz = vec![0.0; 4];
+        let mut vth = vec![0.0; th.len()];
+        sys.diffusion_vjp(0.0, &y, &th, &a, &mut vz, &mut vth);
+
+        let f = |yy: &[f64], tt: &[f64]| -> f64 {
+            let mut out = [0.0; 4];
+            sys.diffusion(0.0, yy, tt, &mut out);
+            out.iter().zip(&a).map(|(o, ai)| o * ai).sum()
+        };
+        let eps = 1e-6;
+        for i in 0..4 {
+            let mut yp = y;
+            yp[i] += eps;
+            let hi = f(&yp, &th);
+            yp[i] -= 2.0 * eps;
+            let lo = f(&yp, &th);
+            let fd = (hi - lo) / (2.0 * eps);
+            assert!((fd - vz[i]).abs() < 1e-6, "z[{i}]: fd {fd} vs {}", vz[i]);
+        }
+        let n = th.len();
+        for j in (0..n).step_by((n / 40).max(1)) {
+            let mut tp = th.clone();
+            tp[j] += eps;
+            let hi = f(&y, &tp);
+            tp[j] -= 2.0 * eps;
+            let lo = f(&y, &tp);
+            let fd = (hi - lo) / (2.0 * eps);
+            assert!((fd - vth[j]).abs() < 1e-6, "θ[{j}]: fd {fd} vs {}", vth[j]);
+        }
+    }
+
+    #[test]
+    fn diffusion_dz_diag_matches_fd() {
+        let model = tiny_model();
+        let th = theta_full(&model, 4);
+        let sys = PosteriorSde::new(&model);
+        let y = [0.2, -0.5, 0.9, 0.1];
+        let mut diag = [0.0; 4];
+        sys.diffusion_dz_diag(0.0, &y, &th, &mut diag);
+        let eps = 1e-6;
+        for i in 0..3 {
+            let mut yp = y;
+            yp[i] += eps;
+            let mut hi = [0.0; 4];
+            sys.diffusion(0.0, &yp, &th, &mut hi);
+            yp[i] -= 2.0 * eps;
+            let mut lo = [0.0; 4];
+            sys.diffusion(0.0, &yp, &th, &mut lo);
+            let fd = (hi[i] - lo[i]) / (2.0 * eps);
+            assert!((fd - diag[i]).abs() < 1e-6, "diag[{i}]");
+        }
+        assert_eq!(diag[3], 0.0);
+    }
+
+    #[test]
+    fn ode_mode_zero_diffusion_zero_kl() {
+        let model = LatentSdeModel::new(LatentSdeConfig {
+            obs_dim: 2,
+            latent_dim: 3,
+            context_dim: 2,
+            hidden: 8,
+            enc_hidden: 6,
+            diffusion: DiffusionMode::Off,
+            ..Default::default()
+        });
+        let th = theta_full(&model, 5);
+        let sys = PosteriorSde::new(&model);
+        let y = [0.2, -0.5, 0.9, 0.0];
+        let mut out = [0.0; 4];
+        sys.drift(0.1, &y, &th, &mut out);
+        assert_eq!(out[3], 0.0, "ODE mode must have zero KL drift");
+        sys.diffusion(0.1, &y, &th, &mut out);
+        assert_eq!(out, [0.0; 4]);
+    }
+}

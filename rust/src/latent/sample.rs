@@ -1,0 +1,301 @@
+//! Path sampling from trained latent SDEs (Figures 6, 8, 9).
+//!
+//! * [`sample_prior_path`] — draw `z_0 ~ p(z_0)` and integrate the *prior*
+//!   SDE `dZ = h_θ dt + σ ∘ dW` (rows 2–3 of Figs 8/9: samples with
+//!   independent or shared initial latent state).
+//! * [`sample_posterior_path`] — encode a data sequence and integrate the
+//!   posterior SDE (row 1: reconstructions).
+//! * [`decode_path`] — map a latent trajectory through the decoder.
+
+use super::model::{Encoder, LatentSdeModel};
+use super::posterior::PosteriorSde;
+use crate::brownian::BrownianPath;
+use crate::nn::gru::GruStepCache;
+use crate::prng::PrngKey;
+use crate::sde::{Calculus, ForwardFunc, Sde};
+use crate::solvers::{integrate_grid_saving, uniform_grid, Method};
+
+/// The prior latent SDE `dZ = h_θ(z,t) dt + σ(z) ∘ dW` as an [`Sde`]
+/// (no adjoint needed for sampling).
+struct PriorSde<'a> {
+    model: &'a LatentSdeModel,
+}
+
+impl<'a> Sde for PriorSde<'a> {
+    fn state_dim(&self) -> usize {
+        self.model.cfg.latent_dim
+    }
+    fn param_dim(&self) -> usize {
+        self.model.n_params
+    }
+    fn calculus(&self) -> Calculus {
+        Calculus::Stratonovich
+    }
+    fn drift(&self, t: f64, z: &[f64], theta: &[f64], out: &mut [f64]) {
+        let dz = self.model.cfg.latent_dim;
+        let mut input = vec![0.0; dz + 1];
+        input[..dz].copy_from_slice(z);
+        input[dz] = t;
+        let mut cache = self.model.prior_drift.cache();
+        self.model.prior_drift.forward(theta, &input, &mut cache, out);
+    }
+    fn diffusion(&self, _t: f64, z: &[f64], theta: &[f64], out: &mut [f64]) {
+        self.model.diffusion_eval(theta, z, out, None);
+    }
+    fn diffusion_dz_diag(&self, _t: f64, z: &[f64], theta: &[f64], out: &mut [f64]) {
+        let dz = self.model.cfg.latent_dim;
+        let mut sig = vec![0.0; dz];
+        self.model.diffusion_eval(theta, z, &mut sig, Some(out));
+    }
+}
+
+/// Sample a latent path from the prior on the grid `times` (with
+/// `substeps` solver steps per interval). If `z0_override` is given it is
+/// used instead of sampling from `p(z_0)` (Fig 8 row 3: shared initial
+/// state). Returns the latent trajectory row-major `(len(times), dz)`.
+pub fn sample_prior_path(
+    model: &LatentSdeModel,
+    params: &[f64],
+    times: &[f64],
+    substeps: usize,
+    key: PrngKey,
+    z0_override: Option<&[f64]>,
+) -> Vec<f64> {
+    let dz = model.cfg.latent_dim;
+    let (k0, kw) = key.split();
+    let mut z0 = vec![0.0; dz];
+    match z0_override {
+        Some(z) => z0.copy_from_slice(z),
+        None => {
+            let mu = &params[model.pz0_mean_off..model.pz0_mean_off + dz];
+            let lv = &params[model.pz0_logvar_off..model.pz0_logvar_off + dz];
+            let mut eps = vec![0.0; dz];
+            k0.fill_normal(0, &mut eps);
+            for i in 0..dz {
+                z0[i] = mu[i] + (0.5 * lv[i]).exp() * eps[i];
+            }
+        }
+    }
+    let sde = PriorSde { model };
+    let mut bm = BrownianPath::new(kw, dz, times[0], *times.last().unwrap());
+    // Fine grid covering all obs times; then subsample.
+    let n_total = (times.len() - 1) * substeps;
+    let grid = uniform_grid(times[0], *times.last().unwrap(), n_total.max(1));
+    let mut sys = ForwardFunc::for_method(&sde, params, Method::Heun);
+    let (traj, _) = integrate_grid_saving(&mut sys, Method::Heun, &z0, &grid, &mut bm);
+    // Subsample at obs times (uniform spacing assumed within tolerance).
+    let mut out = vec![0.0; times.len() * dz];
+    for (k, _) in times.iter().enumerate() {
+        let src = (k * substeps).min(n_total);
+        out[k * dz..(k + 1) * dz].copy_from_slice(&traj[src * dz..(src + 1) * dz]);
+    }
+    out
+}
+
+/// Encode a sequence and sample a posterior latent path at the observation
+/// times. Returns the latent trajectory `(K, dz)` (KL row stripped).
+pub fn sample_posterior_path(
+    model: &LatentSdeModel,
+    params: &[f64],
+    times: &[f64],
+    obs: &[f64],
+    substeps: usize,
+    key: PrngKey,
+) -> Vec<f64> {
+    let dz = model.cfg.latent_dim;
+    let dx = model.cfg.obs_dim;
+    let dc = model.cfg.context_dim;
+    let n_obs = times.len();
+
+    // Encoder forward (same logic as elbo::encode, reconstructed here to
+    // keep that function private and this one allocation-simple).
+    let (ctx, mu0, logvar0) = encode_for_sampling(model, params, obs, n_obs, dx, dz, dc);
+
+    let (k_eps, k_bm) = key.split();
+    let mut eps = vec![0.0; dz];
+    k_eps.fill_normal(0, &mut eps);
+    let mut z0 = vec![0.0; dz];
+    for i in 0..dz {
+        z0[i] = mu0[i] + (0.5 * logvar0[i]).exp() * eps[i];
+    }
+
+    let sde = PosteriorSde::new(model);
+    let n_sde = sde.sde_param_len();
+    let aug = dz + 1;
+    let mut bm = BrownianPath::new(k_bm, aug, times[0], times[n_obs - 1]);
+    let mut theta_full = vec![0.0; n_sde + dc];
+    theta_full[..n_sde].copy_from_slice(&params[..n_sde]);
+
+    let mut y = vec![0.0; aug];
+    y[..dz].copy_from_slice(&z0);
+    let mut out = vec![0.0; n_obs * dz];
+    out[..dz].copy_from_slice(&z0);
+    for k in 1..n_obs {
+        theta_full[n_sde..].copy_from_slice(&ctx[(k - 1) * dc..k * dc]);
+        let grid = uniform_grid(times[k - 1], times[k], substeps);
+        let mut sys = ForwardFunc::for_method(&sde, &theta_full, Method::Heun);
+        let mut y_next = vec![0.0; aug];
+        crate::solvers::integrate_grid(&mut sys, Method::Heun, &y, &grid, &mut bm, &mut y_next);
+        y.copy_from_slice(&y_next);
+        out[k * dz..(k + 1) * dz].copy_from_slice(&y[..dz]);
+    }
+    out
+}
+
+fn encode_for_sampling(
+    model: &LatentSdeModel,
+    params: &[f64],
+    obs: &[f64],
+    n_obs: usize,
+    dx: usize,
+    dz: usize,
+    dc: usize,
+) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    match &model.encoder {
+        Encoder::Gru { cell, ctx_head } => {
+            let hd = model.cfg.enc_hidden;
+            let mut h = vec![0.0; hd];
+            let mut hs = Vec::with_capacity(n_obs);
+            for s in 0..n_obs {
+                let k = n_obs - 1 - s;
+                let mut cache = GruStepCache::default();
+                let mut h_next = vec![0.0; hd];
+                cell.forward(params, &obs[k * dx..(k + 1) * dx], &h, &mut cache, &mut h_next);
+                h = h_next;
+                hs.push(h.clone());
+            }
+            let mut ctx = vec![0.0; (n_obs - 1) * dc];
+            for k in 1..n_obs {
+                let s = n_obs - 1 - k;
+                ctx_head.forward(params, &hs[s], &mut ctx[(k - 1) * dc..k * dc]);
+            }
+            let mut q_out = vec![0.0; 2 * dz];
+            model.q_head.forward(params, &hs[n_obs - 1], &mut q_out);
+            (ctx, q_out[..dz].to_vec(), q_out[dz..].to_vec())
+        }
+        Encoder::Mlp { net, n_frames } => {
+            let nf = (*n_frames).min(n_obs);
+            let mut cache = net.cache();
+            let mut out = vec![0.0; model.cfg.enc_hidden + dc];
+            net.forward(params, &obs[..dx * nf], &mut cache, &mut out);
+            let mut ctx = vec![0.0; (n_obs - 1) * dc];
+            for k in 0..n_obs - 1 {
+                ctx[k * dc..(k + 1) * dc].copy_from_slice(&out[model.cfg.enc_hidden..]);
+            }
+            let mut q_out = vec![0.0; 2 * dz];
+            model.q_head.forward(params, &out[..model.cfg.enc_hidden], &mut q_out);
+            (ctx, q_out[..dz].to_vec(), q_out[dz..].to_vec())
+        }
+    }
+}
+
+/// Decode a latent trajectory `(K, dz)` into observation space `(K, dx)`.
+pub fn decode_path(model: &LatentSdeModel, params: &[f64], latents: &[f64]) -> Vec<f64> {
+    let dz = model.cfg.latent_dim;
+    let dx = model.cfg.obs_dim;
+    let k_total = latents.len() / dz;
+    let mut cache = model.decoder.cache();
+    let mut out = vec![0.0; k_total * dx];
+    let mut xhat = vec![0.0; dx];
+    for k in 0..k_total {
+        model
+            .decoder
+            .forward(params, &latents[k * dz..(k + 1) * dz], &mut cache, &mut xhat);
+        out[k * dx..(k + 1) * dx].copy_from_slice(&xhat);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::latent::model::{DiffusionMode, EncoderKind, LatentSdeConfig};
+
+    fn model() -> LatentSdeModel {
+        LatentSdeModel::new(LatentSdeConfig {
+            obs_dim: 2,
+            latent_dim: 3,
+            context_dim: 2,
+            hidden: 8,
+            diff_hidden: 4,
+            enc_hidden: 6,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn prior_samples_have_correct_shape_and_vary() {
+        let m = model();
+        let params = m.init_params(PrngKey::from_seed(1));
+        let times: Vec<f64> = (0..6).map(|k| 0.1 * k as f64).collect();
+        let a = sample_prior_path(&m, &params, &times, 4, PrngKey::from_seed(2), None);
+        let b = sample_prior_path(&m, &params, &times, 4, PrngKey::from_seed(3), None);
+        assert_eq!(a.len(), 6 * 3);
+        let diff: f64 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 1e-6, "prior samples identical across keys");
+    }
+
+    #[test]
+    fn shared_z0_prior_samples_still_diverge_under_sde() {
+        // With a shared initial state, path noise must still create spread
+        // (Fig 8 row 3) — unless diffusion is off.
+        let m = model();
+        let params = m.init_params(PrngKey::from_seed(4));
+        let times: Vec<f64> = (0..6).map(|k| 0.1 * k as f64).collect();
+        let z0 = [0.1, -0.2, 0.3];
+        let a = sample_prior_path(&m, &params, &times, 4, PrngKey::from_seed(5), Some(&z0));
+        let b = sample_prior_path(&m, &params, &times, 4, PrngKey::from_seed(6), Some(&z0));
+        assert_eq!(&a[..3], &z0);
+        assert_eq!(&b[..3], &z0);
+        let end_diff: f64 = a[15..].iter().zip(&b[15..]).map(|(x, y)| (x - y).abs()).sum();
+        assert!(end_diff > 1e-8, "SDE prior should diverge from shared z0");
+
+        let ode = LatentSdeModel::new(LatentSdeConfig {
+            diffusion: DiffusionMode::Off,
+            obs_dim: 2,
+            latent_dim: 3,
+            context_dim: 2,
+            hidden: 8,
+            enc_hidden: 6,
+            ..Default::default()
+        });
+        let p_ode = ode.init_params(PrngKey::from_seed(7));
+        let c = sample_prior_path(&ode, &p_ode, &times, 4, PrngKey::from_seed(8), Some(&z0));
+        let d = sample_prior_path(&ode, &p_ode, &times, 4, PrngKey::from_seed(9), Some(&z0));
+        assert_eq!(c, d, "ODE prior with shared z0 must be deterministic");
+    }
+
+    #[test]
+    fn posterior_path_and_decode_shapes() {
+        let m = model();
+        let params = m.init_params(PrngKey::from_seed(10));
+        let times: Vec<f64> = (0..5).map(|k| 0.1 * k as f64).collect();
+        let mut obs = vec![0.0; 5 * 2];
+        PrngKey::from_seed(11).fill_normal(0, &mut obs);
+        let lat = sample_posterior_path(&m, &params, &times, &obs, 4, PrngKey::from_seed(12));
+        assert_eq!(lat.len(), 5 * 3);
+        let dec = decode_path(&m, &params, &lat);
+        assert_eq!(dec.len(), 5 * 2);
+        assert!(dec.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn mlp_encoder_sampling_works() {
+        let m = LatentSdeModel::new(LatentSdeConfig {
+            obs_dim: 2,
+            latent_dim: 3,
+            context_dim: 2,
+            hidden: 8,
+            diff_hidden: 4,
+            enc_hidden: 6,
+            encoder: EncoderKind::FirstFramesMlp { n_frames: 3 },
+            ..Default::default()
+        });
+        let params = m.init_params(PrngKey::from_seed(13));
+        let times: Vec<f64> = (0..5).map(|k| 0.1 * k as f64).collect();
+        let mut obs = vec![0.0; 5 * 2];
+        PrngKey::from_seed(14).fill_normal(0, &mut obs);
+        let lat = sample_posterior_path(&m, &params, &times, &obs, 4, PrngKey::from_seed(15));
+        assert_eq!(lat.len(), 5 * 3);
+    }
+}

@@ -1,0 +1,44 @@
+//! # sdegrad
+//!
+//! A Rust + JAX/Pallas reproduction of **"Scalable Gradients for Stochastic
+//! Differential Equations"** (Li, Wong, Chen, Duvenaud — AISTATS 2020):
+//! the stochastic adjoint sensitivity method, the virtual Brownian tree,
+//! and gradient-based variational inference for latent SDEs, packaged as a
+//! trainable framework with a coordinator, data pipeline, and benchmark
+//! harness for every table and figure in the paper.
+//!
+//! Architecture (see DESIGN.md):
+//! * L3 (this crate) — solvers, adjoint, Brownian sources, NN/optim,
+//!   latent-SDE training, coordinator. Python never runs at train time.
+//! * L2/L1 (python/compile) — JAX compute graph + Pallas kernel, AOT-lowered
+//!   to HLO text under `artifacts/`, executed via [`runtime`] (PJRT CPU).
+
+pub mod adjoint;
+pub mod brownian;
+pub mod coordinator;
+pub mod data;
+pub mod latent;
+pub mod metrics;
+pub mod nn;
+pub mod optim;
+pub mod prng;
+pub mod runtime;
+pub mod sde;
+pub mod solvers;
+pub mod testing;
+
+/// Convenience re-exports for examples and benches.
+pub mod prelude {
+    pub use crate::adjoint::{
+        stochastic_adjoint_gradients, AdjointConfig, GradientOutput, NoiseMode,
+    };
+    pub use crate::brownian::{BrownianMotion, BrownianPath, VirtualBrownianTree};
+    pub use crate::prng::PrngKey;
+    pub use crate::sde::{Calculus, ForwardFunc, ReplicatedSde, Sde, SdeFunc, SdeVjp};
+    pub use crate::solvers::{integrate_adaptive, integrate_grid, uniform_grid, AdaptiveConfig, Method};
+}
+
+/// Crate version string (exposed for CLI `--version`).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

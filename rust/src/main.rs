@@ -1,0 +1,238 @@
+//! `sdegrad` — CLI for the scalable-SDE-gradients framework.
+//!
+//! Subcommands:
+//! * `train`            train a latent SDE on a built-in dataset
+//! * `repro <id>`       regenerate a paper table/figure (`--quick` trims)
+//! * `artifacts-check`  compile + smoke-run every AOT artifact
+//! * `list`             show datasets / experiments / artifacts
+//!
+//! Argument syntax is `--key value` (see `coordinator::config`).
+
+use sdegrad::coordinator::config::{arg, parse_args, TrainConfig};
+use sdegrad::coordinator::repro;
+use sdegrad::coordinator::{save_params, train_latent_sde};
+use sdegrad::data::{gbm, lorenz, mocap};
+use sdegrad::latent::{DiffusionMode, EncoderKind, LatentSdeConfig, LatentSdeModel};
+use sdegrad::prng::PrngKey;
+
+fn usage() -> ! {
+    eprintln!(
+        "sdegrad {} — scalable gradients for stochastic differential equations
+
+USAGE:
+    sdegrad train --dataset <gbm|lorenz|mocap> [--mode sde|ode] [--iters N]
+                  [--batch N] [--lr F] [--kl F] [--substeps N] [--seed N]
+                  [--workers N] [--out checkpoint.bin] [--log train.csv]
+    sdegrad repro <table1|fig2|fig5|fig6|fig9|table2|all> [--quick]
+    sdegrad artifacts-check [--dir artifacts]
+    sdegrad list",
+        sdegrad::version()
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "repro" => cmd_repro(rest),
+        "artifacts-check" => cmd_artifacts_check(rest),
+        "list" => cmd_list(),
+        "--version" | "-V" => println!("sdegrad {}", sdegrad::version()),
+        _ => usage(),
+    }
+}
+
+fn cmd_train(rest: &[String]) {
+    let map = parse_args(rest);
+    let dataset_name = map.get("dataset").cloned().unwrap_or_else(|| "gbm".into());
+    let mode = map.get("mode").cloned().unwrap_or_else(|| "sde".into());
+    let cfg = TrainConfig::from_args(&map);
+
+    let (ds, model_cfg) = match dataset_name.as_str() {
+        "gbm" => {
+            let n: usize = arg(&map, "series", 256);
+            let ds = gbm::generate(
+                PrngKey::from_seed(cfg.seed),
+                &gbm::GbmConfig { n_series: n, ..Default::default() },
+            );
+            (
+                ds,
+                LatentSdeConfig {
+                    obs_dim: 1,
+                    latent_dim: 4,
+                    context_dim: 1,
+                    hidden: 64,
+                    enc_hidden: 64,
+                    obs_noise_std: 0.05,
+                    ..Default::default()
+                },
+            )
+        }
+        "lorenz" => {
+            let n: usize = arg(&map, "series", 256);
+            let ds = lorenz::generate(
+                PrngKey::from_seed(cfg.seed),
+                &lorenz::LorenzConfig { n_series: n, ..Default::default() },
+            );
+            (
+                ds,
+                LatentSdeConfig {
+                    obs_dim: 3,
+                    latent_dim: 4,
+                    context_dim: 1,
+                    hidden: 64,
+                    enc_hidden: 64,
+                    obs_noise_std: 0.05,
+                    ..Default::default()
+                },
+            )
+        }
+        "mocap" => {
+            let ds = mocap::generate(PrngKey::from_seed(cfg.seed), &mocap::MocapConfig::default());
+            (
+                ds,
+                LatentSdeConfig {
+                    obs_dim: 50,
+                    latent_dim: 6,
+                    context_dim: 3,
+                    hidden: 30,
+                    enc_hidden: 30,
+                    encoder: EncoderKind::FirstFramesMlp { n_frames: 3 },
+                    obs_noise_std: 0.1,
+                    ..Default::default()
+                },
+            )
+        }
+        other => {
+            eprintln!("unknown dataset {other}");
+            usage()
+        }
+    };
+    let model_cfg = if mode == "ode" {
+        LatentSdeConfig { diffusion: DiffusionMode::Off, ..model_cfg }
+    } else {
+        model_cfg
+    };
+
+    let model = LatentSdeModel::new(model_cfg);
+    println!(
+        "training latent {} on {dataset_name}: {} series × {} obs × {}d, {} params, {} iters, {} workers",
+        mode.to_uppercase(),
+        ds.n_series,
+        ds.n_times(),
+        ds.dim,
+        model.n_params,
+        cfg.iters,
+        cfg.n_workers
+    );
+    let idx: Vec<usize> = (0..ds.n_series).collect();
+    let n_val = (ds.n_series / 8).clamp(1, ds.n_series - 1);
+    let (train_idx, val_idx) = idx.split_at(ds.n_series - n_val);
+    let log = map.get("log").cloned();
+    let report = train_latent_sde(&model, &ds, train_idx, val_idx, &cfg, log.as_deref());
+
+    for r in report.history.iter().step_by((cfg.iters as usize / 20).max(1)) {
+        println!(
+            "iter {:>5}  loss {:>12.3}  logp {:>12.3}  kl_path {:>8.3}  kl_z0 {:>7.3}  ({:.2}s)",
+            r.iter, r.loss, r.log_px, r.kl_path, r.kl_z0, r.seconds
+        );
+    }
+    for (it, v) in &report.val_history {
+        println!("  val @ {it}: loss {:.3}, recon MSE {:.5}", v.loss, v.recon_mse);
+    }
+    println!("total: {:.1}s", report.total_seconds);
+    if let Some(out) = map.get("out") {
+        save_params(out, &report.final_params).expect("saving checkpoint");
+        println!("saved checkpoint to {out}");
+    }
+}
+
+fn cmd_repro(rest: &[String]) {
+    let map = parse_args(rest);
+    let quick = map.contains_key("quick");
+    let which = rest.first().map(|s| s.as_str()).unwrap_or("all");
+    match which {
+        "table1" => {
+            repro::table1::run(quick);
+        }
+        "fig2" => {
+            repro::fig2::run(quick);
+        }
+        "fig5" | "fig7" => repro::fig5::run(quick),
+        "fig6" | "fig8" => {
+            repro::latent_figs::run_lorenz(quick);
+        }
+        "fig9" => {
+            repro::latent_figs::run_gbm(quick);
+        }
+        "table2" => {
+            repro::table2::run(quick);
+        }
+        "all" => {
+            repro::table1::run(quick);
+            repro::fig2::run(quick);
+            repro::fig5::run(quick);
+            repro::latent_figs::run_lorenz(quick);
+            repro::latent_figs::run_gbm(quick);
+            repro::table2::run(quick);
+        }
+        other => {
+            eprintln!("unknown experiment {other}");
+            usage()
+        }
+    }
+}
+
+fn cmd_artifacts_check(rest: &[String]) {
+    let map = parse_args(rest);
+    let dir = map.get("dir").cloned().unwrap_or_else(|| "artifacts".into());
+    let mut reg = match sdegrad::runtime::ArtifactRegistry::open(&dir) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("failed to open artifacts at {dir}: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    println!("artifacts at {dir}:");
+    let mut cfg_pairs: Vec<(String, String)> =
+        reg.manifest.cfg.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+    cfg_pairs.sort();
+    for (k, v) in cfg_pairs {
+        println!("  cfg {k} = {v}");
+    }
+    for name in reg.entry_names() {
+        let entry_shapes = match reg.get(&name) {
+            Ok(e) => e.entry.input_shapes.clone(),
+            Err(e) => {
+                eprintln!("  {name}: COMPILE FAILED: {e:#}");
+                std::process::exit(1);
+            }
+        };
+        // Smoke-run with constant inputs.
+        let bufs: Vec<Vec<f32>> = entry_shapes
+            .iter()
+            .map(|s| vec![0.1f32; s.iter().product::<usize>().max(1)])
+            .collect();
+        let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+        let exe = reg.get(&name).unwrap();
+        match exe.call_f32(&refs) {
+            Ok(outs) => {
+                let sizes: Vec<usize> = outs.iter().map(|o| o.len()).collect();
+                println!("  {name}: OK (outputs {sizes:?})");
+            }
+            Err(e) => {
+                eprintln!("  {name}: EXECUTE FAILED: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+}
+
+fn cmd_list() {
+    println!("datasets:     gbm, lorenz, mocap (synthetic; see DESIGN.md §3)");
+    println!("experiments:  table1, fig2, fig5 (incl. fig7), fig6 (incl. fig8), fig9, table2");
+    println!("artifacts:    see `sdegrad artifacts-check`");
+}

@@ -1,0 +1,11 @@
+//! Measurement utilities shared by the trainer and the bench harnesses:
+//! online statistics, timers, confidence intervals (Table 2 reports
+//! t-statistic 95% CIs), and CSV/JSONL writers for figure data.
+
+pub mod stats;
+pub mod timer;
+pub mod writer;
+
+pub use stats::{confidence_interval_95, OnlineStats, Quartiles};
+pub use timer::Stopwatch;
+pub use writer::{CsvWriter, JsonlWriter};

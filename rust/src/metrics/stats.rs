@@ -1,0 +1,150 @@
+//! Online statistics and summary helpers.
+
+/// Welford online mean/variance accumulator.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        OnlineStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n−1 denominator).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Standard error of the mean.
+    pub fn sem(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.std() / (self.n as f64).sqrt()
+        }
+    }
+}
+
+/// 95% confidence half-width based on the t-statistic (Table 2's CI
+/// convention). Uses a two-sided t quantile table for small n and the
+/// normal 1.96 beyond.
+pub fn confidence_interval_95(stats: &OnlineStats) -> f64 {
+    let n = stats.count();
+    if n < 2 {
+        return f64::NAN;
+    }
+    let dof = (n - 1) as usize;
+    // Two-sided 97.5% t quantiles for dof 1..30.
+    const T: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179,
+        2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064,
+        2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    let t = if dof <= 30 { T[dof - 1] } else { 1.96 };
+    t * stats.sem()
+}
+
+/// Median/quartiles of a sample (Fig 5(a) boxplot statistics).
+#[derive(Clone, Copy, Debug)]
+pub struct Quartiles {
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Quartiles {
+    /// Compute from a sample (copies + sorts internally).
+    pub fn of(values: &[f64]) -> Quartiles {
+        assert!(!values.is_empty(), "Quartiles of empty sample");
+        let mut v = values.to_vec();
+        v.sort_by(|a, b| a.total_cmp(b));
+        let q = |p: f64| -> f64 {
+            let idx = p * (v.len() - 1) as f64;
+            let lo = idx.floor() as usize;
+            let hi = idx.ceil() as usize;
+            let frac = idx - lo as f64;
+            v[lo] * (1.0 - frac) + v[hi] * frac
+        };
+        Quartiles { q1: q(0.25), median: q(0.5), q3: q(0.75), min: v[0], max: *v.last().unwrap() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_stats_match_direct_computation() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut s = OnlineStats::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 5);
+        assert!((s.mean() - 4.0).abs() < 1e-12);
+        let var = xs.iter().map(|x| (x - 4.0f64).powi(2)).sum::<f64>() / 4.0;
+        assert!((s.variance() - var).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 10.0);
+    }
+
+    #[test]
+    fn quartiles_of_known_sample() {
+        let q = Quartiles::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(q.median, 3.0);
+        assert_eq!(q.q1, 2.0);
+        assert_eq!(q.q3, 4.0);
+        assert_eq!(q.min, 1.0);
+        assert_eq!(q.max, 5.0);
+    }
+
+    #[test]
+    fn ci_reasonable_for_large_n() {
+        let mut s = OnlineStats::new();
+        for i in 0..100 {
+            s.push(i as f64 % 2.0); // alternating 0/1: std ≈ 0.5
+        }
+        let ci = confidence_interval_95(&s);
+        assert!(ci > 0.05 && ci < 0.2, "ci = {ci}");
+    }
+}

@@ -1,0 +1,80 @@
+//! Wall-clock timing with warmup/repeat semantics (criterion substitute —
+//! see DESIGN.md §3: the vendored crate set has no criterion, so bench
+//! targets use this harness with `harness = false`).
+
+use std::time::Instant;
+
+use super::stats::OnlineStats;
+
+/// A simple stopwatch accumulating split times.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn restart(&mut self) {
+        self.start = Instant::now();
+    }
+
+    /// Seconds elapsed since construction/restart.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Benchmark a closure: `warmup` unmeasured runs, then `reps` measured
+/// runs; returns per-run statistics in seconds. A `black_box`-style sink
+/// prevents the optimizer from deleting the work — callers should return
+/// something data-dependent from `f`.
+pub fn bench<F: FnMut() -> f64>(warmup: usize, reps: usize, mut f: F) -> OnlineStats {
+    let mut sink = 0.0;
+    for _ in 0..warmup {
+        sink += f();
+    }
+    let mut stats = OnlineStats::new();
+    for _ in 0..reps {
+        let sw = Stopwatch::new();
+        sink += f();
+        stats.push(sw.elapsed_s());
+    }
+    // Keep the sink alive.
+    if sink.is_nan() {
+        eprintln!("bench sink: {sink}");
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_measures_time() {
+        let sw = Stopwatch::new();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let t = sw.elapsed_s();
+        assert!(t >= 0.009, "elapsed {t}");
+    }
+
+    #[test]
+    fn bench_runs_expected_count() {
+        let mut count = 0;
+        let stats = bench(2, 5, || {
+            count += 1;
+            count as f64
+        });
+        assert_eq!(count, 7);
+        assert_eq!(stats.count(), 5);
+    }
+}

@@ -1,0 +1,136 @@
+//! CSV / JSONL output for figure regeneration (bench harnesses write their
+//! series under `bench_out/` so plots can be made externally).
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Minimal CSV writer (no quoting needs arise: we write numbers and
+/// simple identifiers only).
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    n_cols: usize,
+}
+
+impl CsvWriter {
+    /// Create (truncating) a CSV file with the given header.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<CsvWriter> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, n_cols: header.len() })
+    }
+
+    /// Write a row of mixed string/number fields (pre-formatted).
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        assert_eq!(fields.len(), self.n_cols, "CSV row width mismatch");
+        writeln!(self.out, "{}", fields.join(","))
+    }
+
+    /// Convenience for all-numeric rows.
+    pub fn row_f64(&mut self, fields: &[f64]) -> std::io::Result<()> {
+        let strs: Vec<String> = fields.iter().map(|v| format!("{v}")).collect();
+        self.row(&strs)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+/// Minimal JSONL writer for structured records (hand-rolled: serde is not
+/// in the vendored crate set — DESIGN.md §3).
+pub struct JsonlWriter {
+    out: BufWriter<File>,
+}
+
+impl JsonlWriter {
+    pub fn create<P: AsRef<Path>>(path: P) -> std::io::Result<JsonlWriter> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        Ok(JsonlWriter { out: BufWriter::new(File::create(path)?) })
+    }
+
+    /// Write one record of key/value pairs where values are already JSON
+    /// fragments (numbers via [`json_num`], strings via [`json_str`]).
+    pub fn record(&mut self, fields: &[(&str, String)]) -> std::io::Result<()> {
+        let body: Vec<String> = fields
+            .iter()
+            .map(|(k, v)| format!("{}:{}", json_str(k), v))
+            .collect();
+        writeln!(self.out, "{{{}}}", body.join(","))
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+/// JSON-escape a string (quotes, backslashes, control chars).
+pub fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Format a number as a JSON value (NaN/inf → null).
+pub fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("sdegrad_test_csv");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row_f64(&[1.5, 2.0]).unwrap();
+            w.flush().unwrap();
+        }
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(content, "a,b\n1.5,2\n");
+    }
+
+    #[test]
+    fn jsonl_escaping() {
+        assert_eq!(json_str("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
+        assert_eq!(json_num(f64::NAN), "null");
+        assert_eq!(json_num(2.5), "2.5");
+    }
+
+    #[test]
+    fn jsonl_record_shape() {
+        let dir = std::env::temp_dir().join("sdegrad_test_jsonl");
+        let path = dir.join("t.jsonl");
+        {
+            let mut w = JsonlWriter::create(&path).unwrap();
+            w.record(&[("x", json_num(1.0)), ("name", json_str("hi"))]).unwrap();
+            w.flush().unwrap();
+        }
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(content, "{\"x\":1,\"name\":\"hi\"}\n");
+    }
+}

@@ -1,0 +1,122 @@
+//! Pointwise activations with derivatives.
+//!
+//! The paper's architectures use softplus for all drift/decoder
+//! nonlinearities (App. 9.9), tanh inside the GRU, and sigmoid at the
+//! diffusion output to keep σ bounded and positive.
+
+/// Pointwise activation functions.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Activation {
+    Identity,
+    Tanh,
+    Sigmoid,
+    Softplus,
+    /// ReLU — not used by the paper's models but handy for ablations.
+    Relu,
+}
+
+impl Activation {
+    /// y = f(x).
+    #[inline]
+    pub fn apply(&self, x: f64) -> f64 {
+        match self {
+            Activation::Identity => x,
+            Activation::Tanh => x.tanh(),
+            Activation::Sigmoid => sigmoid(x),
+            Activation::Softplus => softplus(x),
+            Activation::Relu => x.max(0.0),
+        }
+    }
+
+    /// f'(x) expressed via (x, y=f(x)) — using y where cheaper.
+    #[inline]
+    pub fn grad(&self, x: f64, y: f64) -> f64 {
+        match self {
+            Activation::Identity => 1.0,
+            Activation::Tanh => 1.0 - y * y,
+            Activation::Sigmoid => y * (1.0 - y),
+            Activation::Softplus => sigmoid(x),
+            Activation::Relu => {
+                if x > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Apply in place over a slice.
+    pub fn apply_slice(&self, xs: &mut [f64]) {
+        for v in xs.iter_mut() {
+            *v = self.apply(*v);
+        }
+    }
+}
+
+/// Numerically-stable logistic sigmoid.
+#[inline]
+pub fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        let e = (-x).exp();
+        1.0 / (1.0 + e)
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Numerically-stable softplus log(1 + e^x).
+#[inline]
+pub fn softplus(x: f64) -> f64 {
+    if x > 30.0 {
+        x
+    } else if x < -30.0 {
+        x.exp()
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gradients_match_finite_difference() {
+        let eps = 1e-6;
+        for act in [
+            Activation::Identity,
+            Activation::Tanh,
+            Activation::Sigmoid,
+            Activation::Softplus,
+            Activation::Relu,
+        ] {
+            for &x in &[-3.0f64, -0.7, 0.4, 2.5, 10.0] {
+                if act == Activation::Relu && x.abs() < eps {
+                    continue;
+                }
+                let y = act.apply(x);
+                let fd = (act.apply(x + eps) - act.apply(x - eps)) / (2.0 * eps);
+                let g = act.grad(x, y);
+                assert!((fd - g).abs() < 1e-6, "{act:?} at {x}: fd {fd} vs {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn stability_at_extremes() {
+        assert!(sigmoid(800.0) == 1.0);
+        assert!(sigmoid(-800.0) == 0.0);
+        assert!(softplus(800.0) == 800.0);
+        assert!(softplus(-800.0) >= 0.0);
+        assert!(softplus(-800.0) < 1e-300);
+    }
+
+    #[test]
+    fn softplus_positive() {
+        for &x in &[-50.0, -1.0, 0.0, 1.0, 50.0] {
+            assert!(softplus(x) > 0.0);
+        }
+    }
+}

@@ -1,0 +1,258 @@
+//! GRU cell (Cho et al. 2014) with hand-written backward-through-time VJP.
+//!
+//! Used by the latent-SDE recognition network (App. 9.9: a GRU runs
+//! *backward* over the observations and emits a context vector at each
+//! time, plus the variational posterior over the initial latent state).
+//!
+//! Gate equations (PyTorch convention):
+//! ```text
+//! r  = σ(W_ir x + b_ir + W_hr h + b_hr)
+//! u  = σ(W_iu x + b_iu + W_hu h + b_hu)        (update gate, often "z")
+//! n  = tanh(W_in x + b_in + r ⊙ (W_hn h + b_hn))
+//! h' = (1 − u) ⊙ n + u ⊙ h
+//! ```
+
+use super::activation::sigmoid;
+use super::linear::Linear;
+use super::params::ParamBuilder;
+
+/// A single GRU cell over the flat parameter vector.
+#[derive(Clone, Copy, Debug)]
+pub struct GruCell {
+    pub in_dim: usize,
+    pub hidden: usize,
+    w_ir: Linear,
+    w_iu: Linear,
+    w_in: Linear,
+    w_hr: Linear,
+    w_hu: Linear,
+    w_hn: Linear,
+}
+
+/// Per-step cache for the VJP. One per unrolled timestep.
+#[derive(Clone, Debug, Default)]
+pub struct GruStepCache {
+    pub x: Vec<f64>,
+    pub h: Vec<f64>,
+    r: Vec<f64>,
+    u: Vec<f64>,
+    n: Vec<f64>,
+    hn_lin: Vec<f64>,
+}
+
+impl GruCell {
+    pub fn new(pb: &mut ParamBuilder, in_dim: usize, hidden: usize) -> Self {
+        GruCell {
+            in_dim,
+            hidden,
+            w_ir: Linear::new(pb, in_dim, hidden),
+            w_iu: Linear::new(pb, in_dim, hidden),
+            w_in: Linear::new(pb, in_dim, hidden),
+            w_hr: Linear::new(pb, hidden, hidden),
+            w_hu: Linear::new(pb, hidden, hidden),
+            w_hn: Linear::new(pb, hidden, hidden),
+        }
+    }
+
+    /// One step: `h_next = GRU(x, h)`. Fills `cache` for the VJP.
+    pub fn forward(
+        &self,
+        params: &[f64],
+        x: &[f64],
+        h: &[f64],
+        cache: &mut GruStepCache,
+        h_next: &mut [f64],
+    ) {
+        let hd = self.hidden;
+        cache.x = x.to_vec();
+        cache.h = h.to_vec();
+        cache.r.resize(hd, 0.0);
+        cache.u.resize(hd, 0.0);
+        cache.n.resize(hd, 0.0);
+        cache.hn_lin.resize(hd, 0.0);
+
+        let mut tmp_i = vec![0.0; hd];
+        let mut tmp_h = vec![0.0; hd];
+        // r gate
+        self.w_ir.forward(params, x, &mut tmp_i);
+        self.w_hr.forward(params, h, &mut tmp_h);
+        for i in 0..hd {
+            cache.r[i] = sigmoid(tmp_i[i] + tmp_h[i]);
+        }
+        // u gate
+        self.w_iu.forward(params, x, &mut tmp_i);
+        self.w_hu.forward(params, h, &mut tmp_h);
+        for i in 0..hd {
+            cache.u[i] = sigmoid(tmp_i[i] + tmp_h[i]);
+        }
+        // candidate
+        self.w_in.forward(params, x, &mut tmp_i);
+        self.w_hn.forward(params, h, &mut cache.hn_lin);
+        for i in 0..hd {
+            cache.n[i] = (tmp_i[i] + cache.r[i] * cache.hn_lin[i]).tanh();
+        }
+        for i in 0..hd {
+            h_next[i] = (1.0 - cache.u[i]) * cache.n[i] + cache.u[i] * h[i];
+        }
+    }
+
+    /// Accumulating VJP of one step: given `dh_next`, adds into `dx`, `dh`
+    /// (gradient w.r.t. the *incoming* hidden state) and `dparams`.
+    pub fn vjp(
+        &self,
+        params: &[f64],
+        cache: &GruStepCache,
+        dh_next: &[f64],
+        dx: &mut [f64],
+        dh: &mut [f64],
+        dparams: &mut [f64],
+    ) {
+        let hd = self.hidden;
+        let mut du = vec![0.0; hd];
+        let mut dn = vec![0.0; hd];
+        let mut dr = vec![0.0; hd];
+        let mut dn_pre = vec![0.0; hd];
+        let mut dhn_lin = vec![0.0; hd];
+        let mut du_pre = vec![0.0; hd];
+        let mut dr_pre = vec![0.0; hd];
+
+        for i in 0..hd {
+            du[i] = dh_next[i] * (cache.h[i] - cache.n[i]);
+            dn[i] = dh_next[i] * (1.0 - cache.u[i]);
+            dh[i] += dh_next[i] * cache.u[i];
+        }
+        for i in 0..hd {
+            dn_pre[i] = dn[i] * (1.0 - cache.n[i] * cache.n[i]);
+            dr[i] = dn_pre[i] * cache.hn_lin[i];
+            dhn_lin[i] = dn_pre[i] * cache.r[i];
+            du_pre[i] = du[i] * cache.u[i] * (1.0 - cache.u[i]);
+            dr_pre[i] = dr[i] * cache.r[i] * (1.0 - cache.r[i]);
+        }
+        // Input-side linears.
+        self.w_in.vjp(params, &cache.x, &dn_pre, dx, dparams);
+        self.w_iu.vjp(params, &cache.x, &du_pre, dx, dparams);
+        self.w_ir.vjp(params, &cache.x, &dr_pre, dx, dparams);
+        // Hidden-side linears.
+        self.w_hn.vjp(params, &cache.h, &dhn_lin, dh, dparams);
+        self.w_hu.vjp(params, &cache.h, &du_pre, dh, dparams);
+        self.w_hr.vjp(params, &cache.h, &dr_pre, dh, dparams);
+    }
+
+    pub fn param_count(&self) -> usize {
+        [self.w_ir, self.w_iu, self.w_in, self.w_hr, self.w_hu, self.w_hn]
+            .iter()
+            .map(|l| l.param_count())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::PrngKey;
+
+    #[test]
+    fn single_step_vjp_matches_finite_difference() {
+        let (in_dim, hd) = (3, 5);
+        let mut pb = ParamBuilder::new();
+        let cell = GruCell::new(&mut pb, in_dim, hd);
+        let params = pb.init(PrngKey::from_seed(30));
+        let key = PrngKey::from_seed(31);
+        let mut x = vec![0.0; in_dim];
+        key.fill_normal(0, &mut x);
+        let mut h = vec![0.0; hd];
+        key.fill_normal(10, &mut h);
+        let mut dy = vec![0.0; hd];
+        key.fill_normal(20, &mut dy);
+
+        let mut cache = GruStepCache::default();
+        let mut h_next = vec![0.0; hd];
+        cell.forward(&params, &x, &h, &mut cache, &mut h_next);
+        let mut dx = vec![0.0; in_dim];
+        let mut dh = vec![0.0; hd];
+        let mut dp = vec![0.0; params.len()];
+        cell.vjp(&params, &cache, &dy, &mut dx, &mut dh, &mut dp);
+
+        let loss = |p: &[f64], x: &[f64], h: &[f64]| -> f64 {
+            let mut c = GruStepCache::default();
+            let mut hn = vec![0.0; hd];
+            cell.forward(p, x, h, &mut c, &mut hn);
+            hn.iter().zip(&dy).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-6;
+        for i in 0..in_dim {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let hi = loss(&params, &xp, &h);
+            xp[i] -= 2.0 * eps;
+            let lo = loss(&params, &xp, &h);
+            let fd = (hi - lo) / (2.0 * eps);
+            assert!((fd - dx[i]).abs() < 1e-7, "dx[{i}]: fd {fd} vs {}", dx[i]);
+        }
+        for i in 0..hd {
+            let mut hp = h.clone();
+            hp[i] += eps;
+            let hi = loss(&params, &x, &hp);
+            hp[i] -= 2.0 * eps;
+            let lo = loss(&params, &x, &hp);
+            let fd = (hi - lo) / (2.0 * eps);
+            assert!((fd - dh[i]).abs() < 1e-7, "dh[{i}]: fd {fd} vs {}", dh[i]);
+        }
+        for j in (0..params.len()).step_by(11) {
+            let mut pp = params.clone();
+            pp[j] += eps;
+            let hi = loss(&pp, &x, &h);
+            pp[j] -= 2.0 * eps;
+            let lo = loss(&pp, &x, &h);
+            let fd = (hi - lo) / (2.0 * eps);
+            assert!((fd - dp[j]).abs() < 1e-7, "dp[{j}]: fd {fd} vs {}", dp[j]);
+        }
+    }
+
+    #[test]
+    fn bptt_over_sequence_matches_finite_difference() {
+        // Unroll 4 steps, loss = Σ final hidden; check dparams via BPTT.
+        let (in_dim, hd, t_len) = (2, 4, 4);
+        let mut pb = ParamBuilder::new();
+        let cell = GruCell::new(&mut pb, in_dim, hd);
+        let params = pb.init(PrngKey::from_seed(40));
+        let key = PrngKey::from_seed(41);
+        let mut xs = vec![0.0; in_dim * t_len];
+        key.fill_normal(0, &mut xs);
+
+        let run = |p: &[f64]| -> (f64, Vec<GruStepCache>) {
+            let mut h = vec![0.0; hd];
+            let mut caches = Vec::new();
+            for t in 0..t_len {
+                let mut c = GruStepCache::default();
+                let mut hn = vec![0.0; hd];
+                cell.forward(p, &xs[t * in_dim..(t + 1) * in_dim], &h, &mut c, &mut hn);
+                caches.push(c);
+                h = hn;
+            }
+            (h.iter().sum(), caches)
+        };
+
+        let (_, caches) = run(&params);
+        // BPTT.
+        let mut dh = vec![1.0; hd];
+        let mut dp = vec![0.0; params.len()];
+        let mut dx = vec![0.0; in_dim];
+        for t in (0..t_len).rev() {
+            let mut dh_prev = vec![0.0; hd];
+            dx.fill(0.0);
+            cell.vjp(&params, &caches[t], &dh, &mut dx, &mut dh_prev, &mut dp);
+            dh = dh_prev;
+        }
+        let eps = 1e-6;
+        for j in (0..params.len()).step_by(13) {
+            let mut pp = params.clone();
+            pp[j] += eps;
+            let (hi, _) = run(&pp);
+            pp[j] -= 2.0 * eps;
+            let (lo, _) = run(&pp);
+            let fd = (hi - lo) / (2.0 * eps);
+            assert!((fd - dp[j]).abs() < 1e-6, "dp[{j}]: fd {fd} vs {}", dp[j]);
+        }
+    }
+}

@@ -1,0 +1,4 @@
+//! Re-exports of initializer specs (kept as a separate module path so model
+//! code reads `nn::init::Init::Uniform { .. }`).
+
+pub use super::params::Init;

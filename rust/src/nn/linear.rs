@@ -1,0 +1,142 @@
+//! Dense layer `y = W x + b` over the flat parameter vector.
+
+use super::params::{Init, ParamBuilder};
+
+/// A dense layer; weights at `w_off` (row-major `out×in`), bias at `b_off`.
+#[derive(Clone, Copy, Debug)]
+pub struct Linear {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub w_off: usize,
+    pub b_off: usize,
+}
+
+impl Linear {
+    /// Allocate a layer with Xavier-uniform weights and zero bias.
+    pub fn new(pb: &mut ParamBuilder, in_dim: usize, out_dim: usize) -> Self {
+        let limit = (6.0 / (in_dim + out_dim) as f64).sqrt();
+        let w_off = pb.alloc(in_dim * out_dim, Init::Uniform { limit });
+        let b_off = pb.alloc(out_dim, Init::Zeros);
+        Linear { in_dim, out_dim, w_off, b_off }
+    }
+
+    /// `out = W x + b`.
+    pub fn forward(&self, params: &[f64], x: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.in_dim);
+        debug_assert_eq!(out.len(), self.out_dim);
+        let w = &params[self.w_off..self.w_off + self.in_dim * self.out_dim];
+        let b = &params[self.b_off..self.b_off + self.out_dim];
+        for o in 0..self.out_dim {
+            let row = &w[o * self.in_dim..(o + 1) * self.in_dim];
+            let mut acc = b[o];
+            for i in 0..self.in_dim {
+                acc += row[i] * x[i];
+            }
+            out[o] = acc;
+        }
+    }
+
+    /// Accumulate the VJP: given `dy = ∂L/∂out`,
+    /// * `dx += Wᵀ dy`,
+    /// * `dparams[W] += dy ⊗ x`, `dparams[b] += dy`.
+    pub fn vjp(
+        &self,
+        params: &[f64],
+        x: &[f64],
+        dy: &[f64],
+        dx: &mut [f64],
+        dparams: &mut [f64],
+    ) {
+        debug_assert_eq!(dy.len(), self.out_dim);
+        debug_assert_eq!(dx.len(), self.in_dim);
+        let w = &params[self.w_off..self.w_off + self.in_dim * self.out_dim];
+        for o in 0..self.out_dim {
+            let g = dy[o];
+            if g == 0.0 {
+                continue;
+            }
+            let row = &w[o * self.in_dim..(o + 1) * self.in_dim];
+            let dw_row = &mut dparams[self.w_off + o * self.in_dim..self.w_off + (o + 1) * self.in_dim];
+            for i in 0..self.in_dim {
+                dx[i] += row[i] * g;
+                dw_row[i] += x[i] * g;
+            }
+            dparams[self.b_off + o] += g;
+        }
+    }
+
+    /// Parameter count of this layer.
+    pub fn param_count(&self) -> usize {
+        self.in_dim * self.out_dim + self.out_dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::PrngKey;
+
+    #[test]
+    fn forward_matches_manual() {
+        let mut pb = ParamBuilder::new();
+        let l = Linear::new(&mut pb, 2, 3);
+        let mut p = pb.init(PrngKey::from_seed(1));
+        // Overwrite with known values: W = [[1,2],[3,4],[5,6]], b=[.1,.2,.3]
+        p[l.w_off..l.w_off + 6].copy_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        p[l.b_off..l.b_off + 3].copy_from_slice(&[0.1, 0.2, 0.3]);
+        let mut y = [0.0; 3];
+        l.forward(&p, &[10.0, 20.0], &mut y);
+        assert_eq!(y, [50.1, 110.2, 170.3]);
+    }
+
+    #[test]
+    fn vjp_matches_finite_difference() {
+        let mut pb = ParamBuilder::new();
+        let l = Linear::new(&mut pb, 3, 2);
+        let p = pb.init(PrngKey::from_seed(2));
+        let x = [0.5, -1.0, 2.0];
+        let dy = [1.0, -0.3];
+        let mut dx = vec![0.0; 3];
+        let mut dp = vec![0.0; p.len()];
+        l.vjp(&p, &x, &dy, &mut dx, &mut dp);
+
+        let loss = |p: &[f64], x: &[f64]| -> f64 {
+            let mut y = [0.0; 2];
+            l.forward(p, x, &mut y);
+            y[0] * dy[0] + y[1] * dy[1]
+        };
+        let eps = 1e-6;
+        for i in 0..3 {
+            let mut xp = x;
+            xp[i] += eps;
+            let hi = loss(&p, &xp);
+            xp[i] -= 2.0 * eps;
+            let lo = loss(&p, &xp);
+            assert!(((hi - lo) / (2.0 * eps) - dx[i]).abs() < 1e-8, "dx[{i}]");
+        }
+        for j in 0..p.len() {
+            let mut pp = p.clone();
+            pp[j] += eps;
+            let hi = loss(&pp, &x);
+            pp[j] -= 2.0 * eps;
+            let lo = loss(&pp, &x);
+            assert!(((hi - lo) / (2.0 * eps) - dp[j]).abs() < 1e-8, "dp[{j}]");
+        }
+    }
+
+    #[test]
+    fn vjp_accumulates() {
+        let mut pb = ParamBuilder::new();
+        let l = Linear::new(&mut pb, 2, 2);
+        let p = pb.init(PrngKey::from_seed(3));
+        let x = [1.0, 2.0];
+        let dy = [1.0, 1.0];
+        let mut dx = vec![10.0, 20.0];
+        let mut dp = vec![0.0; p.len()];
+        let mut dx_base = vec![0.0, 0.0];
+        l.vjp(&p, &x, &dy, &mut dx_base, &mut dp);
+        l.vjp(&p, &x, &dy, &mut dx, &mut dp);
+        assert!((dx[0] - (10.0 + dx_base[0])).abs() < 1e-12);
+        assert!((dx[1] - (20.0 + dx_base[1])).abs() < 1e-12);
+    }
+}

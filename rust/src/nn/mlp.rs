@@ -1,0 +1,236 @@
+//! Multilayer perceptron with a reusable forward cache for VJPs.
+//!
+//! The paper's drift/decoder nets are 1-hidden-layer MLPs with softplus
+//! (App. 9.9); diffusion nets add a sigmoid output. [`Mlp`] supports any
+//! depth; [`MlpCache`] stores pre- and post-activation values so a VJP can
+//! follow a forward pass without re-allocating — the adjoint hot loop
+//! calls forward+vjp at every solver step.
+
+use super::activation::Activation;
+use super::linear::Linear;
+use super::params::ParamBuilder;
+
+/// A stack of dense layers with a shared hidden activation and a separate
+/// output activation.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub layers: Vec<Linear>,
+    pub hidden_act: Activation,
+    pub output_act: Activation,
+}
+
+/// Forward-pass cache: pre-activations and activations per layer.
+#[derive(Clone, Debug, Default)]
+pub struct MlpCache {
+    /// `pre[l]` = inputs to activation of layer l (length out_dim of l).
+    pre: Vec<Vec<f64>>,
+    /// `act[l]` = output of layer l after activation; `act[0]` is the input.
+    act: Vec<Vec<f64>>,
+    /// Scratch for the backward pass.
+    delta: Vec<f64>,
+    delta_next: Vec<f64>,
+}
+
+impl Mlp {
+    /// Build an MLP with the given layer sizes, e.g. `[in, h, out]`.
+    pub fn new(
+        pb: &mut ParamBuilder,
+        sizes: &[usize],
+        hidden_act: Activation,
+        output_act: Activation,
+    ) -> Self {
+        assert!(sizes.len() >= 2, "Mlp needs at least input and output sizes");
+        let layers = sizes
+            .windows(2)
+            .map(|w| Linear::new(pb, w[0], w[1]))
+            .collect();
+        Mlp { layers, hidden_act, output_act }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.layers[0].in_dim
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.layers.last().unwrap().out_dim
+    }
+
+    /// Allocate a cache sized for this MLP.
+    pub fn cache(&self) -> MlpCache {
+        let mut pre = Vec::with_capacity(self.layers.len());
+        let mut act = Vec::with_capacity(self.layers.len() + 1);
+        act.push(vec![0.0; self.in_dim()]);
+        let mut widest = 0;
+        for l in &self.layers {
+            pre.push(vec![0.0; l.out_dim]);
+            act.push(vec![0.0; l.out_dim]);
+            widest = widest.max(l.out_dim).max(l.in_dim);
+        }
+        MlpCache { pre, act, delta: vec![0.0; widest], delta_next: vec![0.0; widest] }
+    }
+
+    /// Forward pass; writes the output into `out` and fills `cache`.
+    pub fn forward(&self, params: &[f64], x: &[f64], cache: &mut MlpCache, out: &mut [f64]) {
+        cache.act[0].copy_from_slice(x);
+        let n = self.layers.len();
+        for (l, lin) in self.layers.iter().enumerate() {
+            // Split act around l so we can read act[l] and write act[l+1].
+            let (lo, hi) = cache.act.split_at_mut(l + 1);
+            lin.forward(params, &lo[l], &mut cache.pre[l]);
+            let act = if l + 1 == n { self.output_act } else { self.hidden_act };
+            for (o, (&pre_v, slot)) in cache.pre[l].iter().zip(hi[0].iter_mut()).enumerate() {
+                let _ = o;
+                *slot = act.apply(pre_v);
+            }
+        }
+        out.copy_from_slice(cache.act.last().unwrap());
+    }
+
+    /// Accumulating VJP following a [`Mlp::forward`] with the same inputs:
+    /// given `dy = ∂L/∂out`, adds `∂L/∂x` into `dx` and `∂L/∂params` into
+    /// `dparams`.
+    pub fn vjp(
+        &self,
+        params: &[f64],
+        cache: &mut MlpCache,
+        dy: &[f64],
+        dx: &mut [f64],
+        dparams: &mut [f64],
+    ) {
+        let n = self.layers.len();
+        // delta = dy ⊙ act'(pre) of the output layer.
+        {
+            let dlt = &mut cache.delta[..self.out_dim()];
+            for (i, slot) in dlt.iter_mut().enumerate() {
+                let pre = cache.pre[n - 1][i];
+                let act = cache.act[n][i];
+                *slot = dy[i] * self.output_act.grad(pre, act);
+            }
+        }
+        for l in (0..n).rev() {
+            let lin = &self.layers[l];
+            let dlt_len = lin.out_dim;
+            // dx of this layer goes into delta_next (or the caller's dx for
+            // layer 0).
+            if l == 0 {
+                let (delta, _) = (&cache.delta[..dlt_len], ());
+                lin.vjp(params, &cache.act[0], delta, dx, dparams);
+            } else {
+                let dnext = &mut cache.delta_next[..lin.in_dim];
+                dnext.fill(0.0);
+                // Borrow juggling: split cache fields.
+                let MlpCache { pre, act, delta, delta_next } = cache;
+                let dnx = &mut delta_next[..lin.in_dim];
+                dnx.fill(0.0);
+                lin.vjp(params, &act[l], &delta[..dlt_len], dnx, dparams);
+                // delta ← dnext ⊙ act'(pre[l-1])
+                for i in 0..lin.in_dim {
+                    let p = pre[l - 1][i];
+                    let a = act[l][i];
+                    delta[i] = dnx[i] * self.hidden_act.grad(p, a);
+                }
+            }
+        }
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.param_count()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::PrngKey;
+
+    fn fd_check(sizes: &[usize], hidden: Activation, output: Activation, seed: u64) {
+        let mut pb = ParamBuilder::new();
+        let mlp = Mlp::new(&mut pb, sizes, hidden, output);
+        let params = pb.init(PrngKey::from_seed(seed));
+        let mut cache = mlp.cache();
+        let d_in = sizes[0];
+        let d_out = *sizes.last().unwrap();
+
+        let key = PrngKey::from_seed(seed + 1);
+        let mut x = vec![0.0; d_in];
+        key.fill_normal(0, &mut x);
+        let mut dy = vec![0.0; d_out];
+        key.fill_normal(100, &mut dy);
+
+        let mut out = vec![0.0; d_out];
+        mlp.forward(&params, &x, &mut cache, &mut out);
+        let mut dx = vec![0.0; d_in];
+        let mut dp = vec![0.0; params.len()];
+        mlp.vjp(&params, &mut cache, &dy, &mut dx, &mut dp);
+
+        let loss = |p: &[f64], x: &[f64]| -> f64 {
+            let mut c = mlp.cache();
+            let mut o = vec![0.0; d_out];
+            mlp.forward(p, x, &mut c, &mut o);
+            o.iter().zip(&dy).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-6;
+        for i in 0..d_in {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let hi = loss(&params, &xp);
+            xp[i] -= 2.0 * eps;
+            let lo = loss(&params, &xp);
+            let fd = (hi - lo) / (2.0 * eps);
+            assert!(
+                (fd - dx[i]).abs() < 1e-6 * fd.abs().max(1.0),
+                "{sizes:?} dx[{i}]: fd {fd} vs {}",
+                dx[i]
+            );
+        }
+        for j in (0..params.len()).step_by(7) {
+            let mut pp = params.clone();
+            pp[j] += eps;
+            let hi = loss(&pp, &x);
+            pp[j] -= 2.0 * eps;
+            let lo = loss(&pp, &x);
+            let fd = (hi - lo) / (2.0 * eps);
+            assert!(
+                (fd - dp[j]).abs() < 1e-6 * fd.abs().max(1.0),
+                "{sizes:?} dp[{j}]: fd {fd} vs {}",
+                dp[j]
+            );
+        }
+    }
+
+    #[test]
+    fn one_hidden_layer_softplus() {
+        fd_check(&[3, 16, 2], Activation::Softplus, Activation::Identity, 10);
+    }
+
+    #[test]
+    fn sigmoid_output_diffusion_style() {
+        fd_check(&[1, 8, 1], Activation::Softplus, Activation::Sigmoid, 11);
+    }
+
+    #[test]
+    fn deep_tanh() {
+        fd_check(&[4, 8, 8, 8, 3], Activation::Tanh, Activation::Identity, 12);
+    }
+
+    #[test]
+    fn linear_model_no_hidden() {
+        fd_check(&[5, 2], Activation::Tanh, Activation::Identity, 13);
+    }
+
+    #[test]
+    fn forward_deterministic_across_caches() {
+        let mut pb = ParamBuilder::new();
+        let mlp = Mlp::new(&mut pb, &[2, 8, 2], Activation::Softplus, Activation::Identity);
+        let params = pb.init(PrngKey::from_seed(20));
+        let x = [0.3, -0.8];
+        let mut c1 = mlp.cache();
+        let mut c2 = mlp.cache();
+        let mut o1 = [0.0; 2];
+        let mut o2 = [0.0; 2];
+        mlp.forward(&params, &x, &mut c1, &mut o1);
+        mlp.forward(&params, &x, &mut c2, &mut o2);
+        assert_eq!(o1, o2);
+    }
+}

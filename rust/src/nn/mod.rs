@@ -1,0 +1,27 @@
+//! Minimal neural-network substrate with hand-written VJPs.
+//!
+//! The paper's models (App. 9.9/9.11) are small MLPs (drift, diffusion,
+//! decoder) and a GRU encoder. The stochastic adjoint only ever needs
+//! `vjp(a, net, (x, params))` — never full Jacobians — so this module
+//! provides exactly that: every layer implements `forward` and an
+//! *accumulating* `vjp`, operating on a single flat `f64` parameter vector
+//! shared by the whole model (which is what the optimizer and the
+//! XLA-artifact boundary both want).
+//!
+//! Substitution note (DESIGN.md §3): the paper uses PyTorch autograd; this
+//! repo replaces it with these hand-derived VJPs, each verified against
+//! central finite differences in the module tests, plus JAX autodiff on the
+//! L2 build path.
+
+pub mod activation;
+pub mod gru;
+pub mod init;
+pub mod linear;
+pub mod mlp;
+pub mod params;
+
+pub use activation::Activation;
+pub use gru::GruCell;
+pub use linear::Linear;
+pub use mlp::{Mlp, MlpCache};
+pub use params::ParamBuilder;

@@ -1,0 +1,86 @@
+//! Adam (Kingma & Ba 2014) — the optimizer used for every experiment in
+//! §7 with its default hyperparameters.
+
+/// Adam state over a flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: u64,
+}
+
+impl Adam {
+    /// Default hyperparameters (β₁=0.9, β₂=0.999, ε=1e-8) at the given
+    /// learning rate.
+    pub fn new(n_params: usize, lr: f64) -> Self {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, m: vec![0.0; n_params], v: vec![0.0; n_params], t: 0 }
+    }
+
+    /// Apply one update in place. `lr_scale` multiplies the base learning
+    /// rate (used by LR-decay schedules).
+    pub fn step(&mut self, params: &mut [f64], grad: &[f64], lr_scale: f64) {
+        assert_eq!(params.len(), self.m.len(), "Adam: parameter count changed");
+        assert_eq!(grad.len(), self.m.len(), "Adam: gradient length mismatch");
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        let lr = self.lr * lr_scale;
+        for i in 0..params.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grad[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+            let m_hat = self.m[i] / b1t;
+            let v_hat = self.v[i] / b2t;
+            params[i] -= lr * m_hat / (v_hat.sqrt() + self.eps);
+        }
+    }
+
+    /// Steps taken.
+    pub fn iterations(&self) -> u64 {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_moves_by_lr() {
+        // With zero state, m̂/√v̂ = g/|g| so the first update is ±lr.
+        let mut adam = Adam::new(2, 0.1);
+        let mut p = vec![1.0, -2.0];
+        adam.step(&mut p, &[0.5, -3.0], 1.0);
+        assert!((p[0] - (1.0 - 0.1)).abs() < 1e-6, "p0 {}", p[0]);
+        assert!((p[1] - (-2.0 + 0.1)).abs() < 1e-6, "p1 {}", p[1]);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize ½‖p − c‖².
+        let c = [3.0, -1.0, 0.5];
+        let mut adam = Adam::new(3, 0.05);
+        let mut p = vec![0.0; 3];
+        for _ in 0..2000 {
+            let g: Vec<f64> = p.iter().zip(&c).map(|(pi, ci)| pi - ci).collect();
+            adam.step(&mut p, &g, 1.0);
+        }
+        for i in 0..3 {
+            assert!((p[i] - c[i]).abs() < 1e-3, "p[{i}]={} c[{i}]={}", p[i], c[i]);
+        }
+    }
+
+    #[test]
+    fn lr_scale_scales_step() {
+        let mut a1 = Adam::new(1, 0.1);
+        let mut a2 = Adam::new(1, 0.1);
+        let mut p1 = vec![0.0];
+        let mut p2 = vec![0.0];
+        a1.step(&mut p1, &[1.0], 1.0);
+        a2.step(&mut p2, &[1.0], 0.5);
+        assert!((p1[0] - 2.0 * p2[0]).abs() < 1e-12);
+    }
+}

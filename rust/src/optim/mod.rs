@@ -1,0 +1,45 @@
+//! Optimizers and schedules for latent-SDE training (§7.3: Adam with
+//! exponentially decayed learning rate and linear KL annealing).
+
+pub mod adam;
+pub mod schedule;
+pub mod sgd;
+
+pub use adam::Adam;
+pub use schedule::{ExponentialDecay, KlAnneal};
+pub use sgd::Sgd;
+
+/// Clip a gradient vector to a maximum global L2 norm; returns the norm
+/// before clipping.
+pub fn clip_grad_norm(grad: &mut [f64], max_norm: f64) -> f64 {
+    let norm = grad.iter().map(|g| g * g).sum::<f64>().sqrt();
+    if norm > max_norm && norm > 0.0 {
+        let scale = max_norm / norm;
+        for g in grad.iter_mut() {
+            *g *= scale;
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clip_leaves_small_gradients_alone() {
+        let mut g = vec![0.3, -0.4];
+        let norm = clip_grad_norm(&mut g, 10.0);
+        assert!((norm - 0.5).abs() < 1e-12);
+        assert_eq!(g, vec![0.3, -0.4]);
+    }
+
+    #[test]
+    fn clip_rescales_large_gradients() {
+        let mut g = vec![3.0, 4.0];
+        clip_grad_norm(&mut g, 1.0);
+        let new_norm = (g[0] * g[0] + g[1] * g[1]).sqrt();
+        assert!((new_norm - 1.0).abs() < 1e-12);
+        assert!((g[0] / g[1] - 0.75).abs() < 1e-12, "direction preserved");
+    }
+}

@@ -1,0 +1,68 @@
+//! Learning-rate and KL-weight schedules (§7.3: initial LR 0.01 decayed by
+//! 0.999 per iteration; linear KL annealing over the first N iterations).
+
+/// `scale(t) = rate^t` multiplicative learning-rate decay.
+#[derive(Clone, Copy, Debug)]
+pub struct ExponentialDecay {
+    pub rate: f64,
+}
+
+impl ExponentialDecay {
+    pub fn new(rate: f64) -> Self {
+        ExponentialDecay { rate }
+    }
+
+    pub fn scale(&self, iteration: u64) -> f64 {
+        self.rate.powi(iteration as i32)
+    }
+}
+
+/// Linear KL annealing: weight ramps 0 → `target` over `warmup` iterations,
+/// then stays at `target` (the paper's β in the validation sweep).
+#[derive(Clone, Copy, Debug)]
+pub struct KlAnneal {
+    pub target: f64,
+    pub warmup: u64,
+}
+
+impl KlAnneal {
+    pub fn new(target: f64, warmup: u64) -> Self {
+        KlAnneal { target, warmup }
+    }
+
+    /// Constant weight (no annealing).
+    pub fn constant(target: f64) -> Self {
+        KlAnneal { target, warmup: 0 }
+    }
+
+    pub fn weight(&self, iteration: u64) -> f64 {
+        if self.warmup == 0 || iteration >= self.warmup {
+            self.target
+        } else {
+            self.target * iteration as f64 / self.warmup as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decay_curve() {
+        let d = ExponentialDecay::new(0.999);
+        assert_eq!(d.scale(0), 1.0);
+        assert!((d.scale(100) - 0.999f64.powi(100)).abs() < 1e-15);
+        assert!(d.scale(1000) < d.scale(10));
+    }
+
+    #[test]
+    fn anneal_ramps_then_holds() {
+        let a = KlAnneal::new(0.5, 100);
+        assert_eq!(a.weight(0), 0.0);
+        assert!((a.weight(50) - 0.25).abs() < 1e-12);
+        assert_eq!(a.weight(100), 0.5);
+        assert_eq!(a.weight(10_000), 0.5);
+        assert_eq!(KlAnneal::constant(0.1).weight(0), 0.1);
+    }
+}

@@ -1,0 +1,45 @@
+//! SGD with momentum — baseline optimizer for ablations.
+
+/// SGD with classical momentum over a flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct Sgd {
+    pub lr: f64,
+    pub momentum: f64,
+    velocity: Vec<f64>,
+}
+
+impl Sgd {
+    pub fn new(n_params: usize, lr: f64, momentum: f64) -> Self {
+        Sgd { lr, momentum, velocity: vec![0.0; n_params] }
+    }
+
+    pub fn step(&mut self, params: &mut [f64], grad: &[f64], lr_scale: f64) {
+        let lr = self.lr * lr_scale;
+        for i in 0..params.len() {
+            self.velocity[i] = self.momentum * self.velocity[i] - lr * grad[i];
+            params[i] += self.velocity[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_sgd_step() {
+        let mut opt = Sgd::new(2, 0.1, 0.0);
+        let mut p = vec![1.0, 1.0];
+        opt.step(&mut p, &[1.0, -2.0], 1.0);
+        assert_eq!(p, vec![0.9, 1.2]);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = Sgd::new(1, 0.1, 0.9);
+        let mut p = vec![0.0];
+        opt.step(&mut p, &[1.0], 1.0); // v = -0.1
+        opt.step(&mut p, &[1.0], 1.0); // v = -0.19
+        assert!((p[0] - (-0.29)).abs() < 1e-12);
+    }
+}

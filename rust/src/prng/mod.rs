@@ -1,0 +1,20 @@
+//! Counter-based, splittable pseudorandom number generation.
+//!
+//! The virtual Brownian tree (paper §4.2) requires a *splittable* PRNG: an
+//! operation `split` that deterministically derives two child keys from a
+//! parent key, such that streams drawn from distinct keys are independent.
+//! Following the paper's implementation notes we use a counter-based
+//! generator (Salmon et al., "Parallel random numbers: as easy as 1, 2, 3",
+//! SC'11): **Threefry-2x64**. Counter-based PRNGs have no sequential state —
+//! the k-th sample is a pure function `random(key, k)` — which makes keys
+//! cheap to pass around (two u64s) and splitting a single block-cipher call.
+//!
+//! This is the same construction JAX uses for `jax.random.split`.
+
+pub mod threefry;
+pub mod key;
+pub mod normal;
+
+pub use key::PrngKey;
+pub use normal::NormalSampler;
+pub use threefry::threefry2x64;

@@ -1,0 +1,149 @@
+//! Threefry-2x64 block cipher (20 rounds), the core bijection behind the
+//! splittable PRNG.
+//!
+//! Reference: Salmon, Moraes, Dror, Shaw. "Parallel random numbers: as easy
+//! as 1, 2, 3." SC'11. Constants match the Random123 reference
+//! implementation (and therefore JAX's `threefry2x64`).
+
+/// Rotation constants for Threefry-2x64 (from the Skein/Random123 spec).
+const ROTATIONS: [u32; 8] = [16, 42, 12, 31, 16, 32, 24, 21];
+
+/// Key-schedule parity constant for Threefry (Skein's C240).
+const PARITY: u64 = 0x1BD1_1BDA_A9FC_1A22;
+
+/// Number of rounds. 20 is the recommended "crush-resistant" setting used by
+/// Random123 and JAX.
+const ROUNDS: usize = 20;
+
+#[inline(always)]
+fn rotl(x: u64, r: u32) -> u64 {
+    x.rotate_left(r)
+}
+
+/// Apply the Threefry-2x64 bijection to `counter` under `key`.
+///
+/// Deterministic: the same `(key, counter)` always produces the same output
+/// block. Distinct counters under the same key (or the same counter under
+/// distinct keys) yield statistically independent 128-bit blocks.
+#[inline]
+pub fn threefry2x64(key: [u64; 2], counter: [u64; 2]) -> [u64; 2] {
+    let ks = [key[0], key[1], key[0] ^ key[1] ^ PARITY];
+    let mut x0 = counter[0].wrapping_add(ks[0]);
+    let mut x1 = counter[1].wrapping_add(ks[1]);
+
+    // 20 rounds = 5 groups of 4 rounds, with a key injection after each group.
+    for group in 0..(ROUNDS / 4) {
+        for r in 0..4 {
+            x0 = x0.wrapping_add(x1);
+            x1 = rotl(x1, ROTATIONS[(group % 2) * 4 + r]);
+            x1 ^= x0;
+        }
+        let inject = group + 1;
+        x0 = x0.wrapping_add(ks[inject % 3]);
+        x1 = x1.wrapping_add(ks[(inject + 1) % 3]).wrapping_add(inject as u64);
+    }
+    [x0, x1]
+}
+
+/// Convert a u64 to a double uniformly distributed in the half-open interval
+/// `(0, 1]` using the top 53 bits. The open lower endpoint means the value is
+/// safe to pass to `ln()` (Box–Muller).
+#[inline]
+pub fn u64_to_open_unit(x: u64) -> f64 {
+    // Take the top 53 bits, map {0..2^53-1} -> (0,1] via (v+1)/2^53.
+    let v = x >> 11;
+    (v as f64 + 1.0) * (1.0 / 9007199254740992.0) // 2^53
+}
+
+/// Convert a u64 to a double in `[0, 1)`.
+#[inline]
+pub fn u64_to_unit(x: u64) -> f64 {
+    let v = x >> 11;
+    v as f64 * (1.0 / 9007199254740992.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_answer_zero_key_zero_counter() {
+        // Deterministic regression anchor: the bijection must never change,
+        // or every stored experiment seed silently produces different noise.
+        let out = threefry2x64([0, 0], [0, 0]);
+        let again = threefry2x64([0, 0], [0, 0]);
+        assert_eq!(out, again);
+        assert_ne!(out, [0, 0], "bijection should scramble the zero block");
+    }
+
+    #[test]
+    fn random123_reference_vector() {
+        // Known-answer test from the Random123 distribution (threefry2x64,
+        // 20 rounds, zero key and counter).
+        let out = threefry2x64([0, 0], [0, 0]);
+        assert_eq!(out, [0xc2b6e3a8c2c69865, 0x6f81ed42f350084d]);
+    }
+
+    #[test]
+    fn regression_anchors() {
+        // Frozen outputs of this implementation: the bijection must never
+        // change across refactors, or stored experiment seeds silently
+        // reproduce different noise.
+        let out = threefry2x64(
+            [0xffffffffffffffff, 0xffffffffffffffff],
+            [0xffffffffffffffff, 0xffffffffffffffff],
+        );
+        assert_eq!(out, [0xe02cb7c4d95d277a, 0xd06633d0893b8b68]);
+        let out = threefry2x64(
+            [0x452821e638d01377, 0xbe5466cf34e90c6c],
+            [0x243f6a8885a308d3, 0x13198a2e03707344],
+        );
+        assert_eq!(out, [0x830584bde36c471c, 0x1783b99553629002]);
+    }
+
+    #[test]
+    fn counter_sensitivity() {
+        // Flipping one counter bit must change the whole block (avalanche).
+        let a = threefry2x64([1, 2], [0, 0]);
+        let b = threefry2x64([1, 2], [1, 0]);
+        assert_ne!(a[0], b[0]);
+        assert_ne!(a[1], b[1]);
+        let diff = (a[0] ^ b[0]).count_ones() + (a[1] ^ b[1]).count_ones();
+        assert!(diff > 32, "expected avalanche, got {diff} differing bits");
+    }
+
+    #[test]
+    fn key_sensitivity() {
+        let a = threefry2x64([1, 2], [7, 7]);
+        let b = threefry2x64([1, 3], [7, 7]);
+        let diff = (a[0] ^ b[0]).count_ones() + (a[1] ^ b[1]).count_ones();
+        assert!(diff > 32, "expected avalanche, got {diff} differing bits");
+    }
+
+    #[test]
+    fn unit_conversion_ranges() {
+        for &x in &[0u64, 1, u64::MAX, 0x8000_0000_0000_0000, 12345678901234567] {
+            let open = u64_to_open_unit(x);
+            assert!(open > 0.0 && open <= 1.0, "open-unit out of range: {open}");
+            let half = u64_to_unit(x);
+            assert!((0.0..1.0).contains(&half), "unit out of range: {half}");
+        }
+    }
+
+    #[test]
+    fn uniform_moments() {
+        // Mean ~ 1/2, variance ~ 1/12 over a modest sample.
+        let n = 100_000u64;
+        let (mut sum, mut sumsq) = (0.0, 0.0);
+        for i in 0..n {
+            let block = threefry2x64([42, 43], [i, 0]);
+            let u = u64_to_unit(block[0]);
+            sum += u;
+            sumsq += u * u;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 5e-3, "mean {mean}");
+        assert!((var - 1.0 / 12.0).abs() < 5e-3, "var {var}");
+    }
+}

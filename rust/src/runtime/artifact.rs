@@ -1,0 +1,302 @@
+//! Artifact manifest parsing and compiled-executable registry.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::client::pjrt_client;
+
+/// One exported entry point.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    /// Input shapes; each inner vec is the dims of one f32 argument
+    /// (empty = scalar).
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+/// Parsed `artifacts/manifest.txt` (line-oriented `key=value`; see
+/// `python/compile/aot.py` for the writer).
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    /// Model dimensions recorded by the exporter.
+    pub cfg: HashMap<String, String>,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Load and parse `dir/manifest.txt`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+        let mut lines = text.lines();
+        let first = lines.next().ok_or_else(|| anyhow!("empty manifest"))?;
+        if first.trim() != "format=sdegrad-artifacts-v1" {
+            bail!("unknown manifest format line: {first}");
+        }
+        let mut cfg = HashMap::new();
+        let mut entries = Vec::new();
+        for line in lines {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("cfg ") {
+                for tok in rest.split_whitespace() {
+                    let (k, v) =
+                        tok.split_once('=').ok_or_else(|| anyhow!("bad cfg token {tok}"))?;
+                    cfg.insert(k.to_string(), v.to_string());
+                }
+            } else if let Some(rest) = line.strip_prefix("entry ") {
+                let mut toks = rest.split_whitespace();
+                let name = toks.next().ok_or_else(|| anyhow!("entry without name"))?.to_string();
+                let mut file = String::new();
+                let mut input_shapes = Vec::new();
+                for tok in toks {
+                    if let Some(v) = tok.strip_prefix("file=") {
+                        file = v.to_string();
+                    } else if let Some(v) = tok.strip_prefix("inputs=") {
+                        for spec in v.split(';') {
+                            if spec == "scalar" {
+                                input_shapes.push(Vec::new());
+                            } else {
+                                let dims: Result<Vec<usize>, _> =
+                                    spec.split('x').map(|d| d.parse::<usize>()).collect();
+                                input_shapes.push(dims.context("bad shape in manifest")?);
+                            }
+                        }
+                    }
+                }
+                if file.is_empty() {
+                    bail!("entry {name} has no file=");
+                }
+                entries.push(ManifestEntry { name, file, input_shapes });
+            }
+        }
+        Ok(Manifest { dir, cfg, entries })
+    }
+
+    /// A cfg value parsed as usize.
+    pub fn cfg_usize(&self, key: &str) -> Result<usize> {
+        self.cfg
+            .get(key)
+            .ok_or_else(|| anyhow!("manifest cfg missing {key}"))?
+            .parse()
+            .with_context(|| format!("parsing cfg {key}"))
+    }
+
+    /// A cfg value parsed as f64.
+    pub fn cfg_f64(&self, key: &str) -> Result<f64> {
+        self.cfg
+            .get(key)
+            .ok_or_else(|| anyhow!("manifest cfg missing {key}"))?
+            .parse()
+            .with_context(|| format!("parsing cfg {key}"))
+    }
+}
+
+/// A compiled entry point, callable with f32 buffers.
+pub struct Executable {
+    pub entry: ManifestEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with flat f32 inputs (one slice per argument, shaped per
+    /// the manifest). Returns the flat f32 outputs (tuple elements in
+    /// order).
+    pub fn call_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.entry.input_shapes.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.entry.name,
+                self.entry.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, shape) in inputs.iter().zip(&self.entry.input_shapes) {
+            let expect: usize = shape.iter().product::<usize>().max(1);
+            if buf.len() != expect {
+                bail!(
+                    "{}: input length {} != shape {:?} ({} elements)",
+                    self.entry.name,
+                    buf.len(),
+                    shape,
+                    expect
+                );
+            }
+            let lit = xla::Literal::vec1(buf);
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))?);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.entry.name))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let parts = root.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+/// Loads and compiles artifacts on demand, caching executables by name.
+pub struct ArtifactRegistry {
+    pub manifest: Manifest,
+    compiled: HashMap<String, Executable>,
+}
+
+impl ArtifactRegistry {
+    /// Open the registry over an artifact directory (default
+    /// `artifacts/`).
+    pub fn open<P: AsRef<Path>>(dir: P) -> Result<ArtifactRegistry> {
+        Ok(ArtifactRegistry { manifest: Manifest::load(dir)?, compiled: HashMap::new() })
+    }
+
+    /// Compile (or fetch the cached) entry point by name.
+    pub fn get(&mut self, name: &str) -> Result<&Executable> {
+        if !self.compiled.contains_key(name) {
+            let entry = self
+                .manifest
+                .entries
+                .iter()
+                .find(|e| e.name == name)
+                .ok_or_else(|| anyhow!("no artifact entry named {name}"))?
+                .clone();
+            let path = self.manifest.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let client = pjrt_client()?;
+            let exe = client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.compiled.insert(name.to_string(), Executable { entry, exe });
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Names of all exported entries.
+    pub fn entry_names(&self) -> Vec<String> {
+        self.manifest.entries.iter().map(|e| e.name.clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.txt").exists()
+    }
+
+    #[test]
+    fn manifest_parses() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(artifacts_dir()).expect("manifest");
+        assert!(m.entries.len() >= 5, "entries: {:?}", m.entries.len());
+        assert!(m.cfg_usize("n_params").unwrap() > 1000);
+        let post = m.entries.iter().find(|e| e.name == "post_drift_fwd").unwrap();
+        assert_eq!(post.input_shapes.len(), 2);
+        assert_eq!(post.input_shapes[0].len(), 1); // flat params
+    }
+
+    #[test]
+    fn post_drift_artifact_executes() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let mut reg = ArtifactRegistry::open(artifacts_dir()).expect("registry");
+        let p = reg.manifest.cfg_usize("n_params").unwrap();
+        let batch = reg.manifest.cfg_usize("batch").unwrap();
+        let dz = reg.manifest.cfg_usize("latent_dim").unwrap();
+        let dc = reg.manifest.cfg_usize("context_dim").unwrap();
+        let exe = reg.get("post_drift_fwd").expect("compile");
+        let params = vec![0.01f32; p];
+        let zin = vec![0.1f32; batch * (dz + 1 + dc)];
+        let out = exe.call_f32(&[&params, &zin]).expect("execute");
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), batch * dz);
+        assert!(out[0].iter().all(|v| v.is_finite()));
+    }
+
+    /// Cross-language consistency: the XLA artifact evaluated on the Rust
+    /// model's parameter vector must match the Rust NN forward (both are
+    /// the posterior drift MLP; layouts must agree byte-for-byte).
+    #[test]
+    fn xla_post_drift_matches_rust_nn() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        use crate::latent::{LatentSdeConfig, LatentSdeModel};
+        use crate::prng::PrngKey;
+
+        let mut reg = ArtifactRegistry::open(artifacts_dir()).expect("registry");
+        let m = &reg.manifest;
+        let cfg = LatentSdeConfig {
+            obs_dim: m.cfg_usize("obs_dim").unwrap(),
+            latent_dim: m.cfg_usize("latent_dim").unwrap(),
+            context_dim: m.cfg_usize("context_dim").unwrap(),
+            hidden: m.cfg_usize("hidden").unwrap(),
+            diff_hidden: m.cfg_usize("diff_hidden").unwrap(),
+            enc_hidden: m.cfg_usize("enc_hidden").unwrap(),
+            ..Default::default()
+        };
+        let batch = m.cfg_usize("batch").unwrap();
+        let model = LatentSdeModel::new(cfg);
+        assert_eq!(
+            model.n_params,
+            m.cfg_usize("n_params").unwrap(),
+            "Rust/Python parameter layouts diverged"
+        );
+
+        let params = model.init_params(PrngKey::from_seed(99));
+        let params_f32: Vec<f32> = params.iter().map(|&v| v as f32).collect();
+        let d_in = cfg.latent_dim + 1 + cfg.context_dim;
+        let mut zin = vec![0.0f64; batch * d_in];
+        PrngKey::from_seed(100).fill_normal(0, &mut zin);
+        let zin_f32: Vec<f32> = zin.iter().map(|&v| v as f32).collect();
+
+        let exe = reg.get("post_drift_fwd").expect("compile");
+        let out = exe.call_f32(&[&params_f32, &zin_f32]).expect("execute");
+
+        // Rust reference: same MLP on each row.
+        let mut cache = model.post_drift.cache();
+        for b in 0..batch {
+            let mut want = vec![0.0f64; cfg.latent_dim];
+            model.post_drift.forward(
+                &params,
+                &zin[b * d_in..(b + 1) * d_in],
+                &mut cache,
+                &mut want,
+            );
+            for i in 0..cfg.latent_dim {
+                let got = out[0][b * cfg.latent_dim + i] as f64;
+                assert!(
+                    (got - want[i]).abs() < 1e-4 * want[i].abs().max(1.0),
+                    "row {b} dim {i}: xla {got} vs rust {}",
+                    want[i]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! Per-thread PJRT CPU client.
+//!
+//! The `xla` crate's `PjRtClient` wraps an `Rc`, so it cannot be shared
+//! across threads; each worker thread that executes artifacts initializes
+//! its own client lazily and reuses it for the thread's lifetime (client
+//! construction is the expensive part; `Clone` is an `Rc` bump).
+
+use std::cell::RefCell;
+
+thread_local! {
+    static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
+}
+
+/// This thread's PJRT CPU client (lazily constructed, cheaply cloned).
+pub fn pjrt_client() -> anyhow::Result<xla::PjRtClient> {
+    CLIENT.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?);
+        }
+        Ok(slot.as_ref().unwrap().clone())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_initializes() {
+        let c = pjrt_client().expect("client");
+        assert!(c.device_count() >= 1);
+        assert!(!c.platform_name().is_empty());
+    }
+
+    #[test]
+    fn per_thread_clients_work() {
+        let handle = std::thread::spawn(|| {
+            let c = pjrt_client().expect("client in worker thread");
+            c.device_count()
+        });
+        assert!(handle.join().unwrap() >= 1);
+        assert!(pjrt_client().is_ok());
+    }
+}

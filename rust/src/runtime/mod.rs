@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
+//! Rust hot path (Python never runs at train/serve time).
+//!
+//! Pipeline: `artifacts/manifest.txt` → [`Manifest`] →
+//! [`ArtifactRegistry`] (compiles each `*.hlo.txt` once on the shared
+//! [`xla::PjRtClient`] CPU client) → [`Executable::call_f32`].
+//!
+//! Interchange format is **HLO text** (see `python/compile/aot.py` — the
+//! image's xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized
+//! protos; the text parser reassigns ids).
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactRegistry, Executable, Manifest, ManifestEntry};
+pub use client::pjrt_client;

@@ -1,0 +1,144 @@
+//! Flat-state system interface consumed by the numerical integrators.
+//!
+//! Integrators (see [`crate::solvers`]) know nothing about parameters,
+//! adjoints, or augmentation — they step a flat state vector `y` through
+//! `dy = f(t, y) dt + g(t, y) ∘ dW` (or the Itô reading, per scheme) with
+//! *diagonal* `g`. Adapters implement [`SdeFunc`]:
+//!
+//! * [`ForwardFunc`] — a plain forward solve of an [`Sde`] at fixed `θ`;
+//! * `adjoint::AugmentedBackward` — the augmented (z, a_z, a_θ) system;
+//! * `latent::ElboFunc` — latent-SDE state augmented with the running KL.
+//!
+//! Methods take `&mut self` so adapters can use internal scratch buffers
+//! and count function evaluations (the paper reports NFE in Fig 5b).
+
+use super::traits::{Calculus, Sde};
+
+/// A flat-state diagonal-noise SDE as seen by integrators.
+pub trait SdeFunc {
+    /// Flat state dimension.
+    fn dim(&self) -> usize;
+
+    /// Calculus in which `drift`/`diffusion` are expressed.
+    fn calculus(&self) -> Calculus;
+
+    /// Drift into `out`.
+    fn drift(&mut self, t: f64, y: &[f64], out: &mut [f64]);
+
+    /// Diagonal diffusion into `out`.
+    fn diffusion(&mut self, t: f64, y: &[f64], out: &mut [f64]);
+
+    /// Whether [`SdeFunc::diffusion_dy_diag`] is available (enables
+    /// Milstein schemes).
+    fn has_diffusion_jacobian(&self) -> bool {
+        false
+    }
+
+    /// `∂g_i/∂y_i` into `out`. Only called when
+    /// [`SdeFunc::has_diffusion_jacobian`] returns true.
+    fn diffusion_dy_diag(&mut self, _t: f64, _y: &[f64], _out: &mut [f64]) {
+        unimplemented!("diffusion_dy_diag not provided by this system")
+    }
+
+    /// Drift evaluations performed (NFE accounting).
+    fn nfe_drift(&self) -> u64;
+    /// Diffusion evaluations performed.
+    fn nfe_diffusion(&self) -> u64;
+}
+
+/// Forward solve of an [`Sde`] at fixed parameters.
+///
+/// Presents the SDE's coefficients in a *target calculus*: constructed via
+/// [`ForwardFunc::new`] it exposes the native form unchanged; via
+/// [`ForwardFunc::for_method`] it converts the drift so that the chosen
+/// scheme integrates the *same stochastic process* the SDE defines
+/// (`b_strat = b_ito − ½σσ'`, and conversely). Without this, e.g. a Heun
+/// solve of Itô-native coefficients silently targets a different process —
+/// the forward/backward mismatch Figure 2 warns about.
+pub struct ForwardFunc<'a, S: Sde + ?Sized> {
+    sde: &'a S,
+    theta: &'a [f64],
+    target: Calculus,
+    sig: Vec<f64>,
+    dsig: Vec<f64>,
+    nfe_f: u64,
+    nfe_g: u64,
+}
+
+impl<'a, S: Sde + ?Sized> ForwardFunc<'a, S> {
+    /// Expose the native coefficients unchanged.
+    pub fn new(sde: &'a S, theta: &'a [f64]) -> Self {
+        let native = sde.calculus();
+        Self::in_calculus(sde, theta, native)
+    }
+
+    /// Expose the coefficients converted for `method`'s calculus, so the
+    /// solve targets the process the SDE natively defines.
+    pub fn for_method(sde: &'a S, theta: &'a [f64], method: crate::solvers::Method) -> Self {
+        Self::in_calculus(sde, theta, method.calculus())
+    }
+
+    /// Expose the coefficients in an explicit target calculus.
+    pub fn in_calculus(sde: &'a S, theta: &'a [f64], target: Calculus) -> Self {
+        assert_eq!(
+            theta.len(),
+            sde.param_dim(),
+            "ForwardFunc: theta length {} != param_dim {}",
+            theta.len(),
+            sde.param_dim()
+        );
+        let d = sde.state_dim();
+        ForwardFunc { sde, theta, target, sig: vec![0.0; d], dsig: vec![0.0; d], nfe_f: 0, nfe_g: 0 }
+    }
+}
+
+impl<'a, S: Sde + ?Sized> SdeFunc for ForwardFunc<'a, S> {
+    fn dim(&self) -> usize {
+        self.sde.state_dim()
+    }
+
+    fn calculus(&self) -> Calculus {
+        self.target
+    }
+
+    fn drift(&mut self, t: f64, y: &[f64], out: &mut [f64]) {
+        self.nfe_f += 1;
+        self.sde.drift(t, y, self.theta, out);
+        let native = self.sde.calculus();
+        if native != self.target {
+            // ±½ σ σ' drift correction (diagonal noise).
+            let d = self.sde.state_dim();
+            self.sde.diffusion(t, y, self.theta, &mut self.sig);
+            self.sde.diffusion_dz_diag(t, y, self.theta, &mut self.dsig);
+            let sign = match (native, self.target) {
+                (Calculus::Ito, Calculus::Stratonovich) => -0.5,
+                (Calculus::Stratonovich, Calculus::Ito) => 0.5,
+                _ => unreachable!(),
+            };
+            for i in 0..d {
+                out[i] += sign * self.sig[i] * self.dsig[i];
+            }
+        }
+    }
+
+    fn diffusion(&mut self, t: f64, y: &[f64], out: &mut [f64]) {
+        self.nfe_g += 1;
+        self.sde.diffusion(t, y, self.theta, out);
+    }
+
+    fn has_diffusion_jacobian(&self) -> bool {
+        true
+    }
+
+    fn diffusion_dy_diag(&mut self, t: f64, y: &[f64], out: &mut [f64]) {
+        self.sde.diffusion_dz_diag(t, y, self.theta, out);
+    }
+
+    fn nfe_drift(&self) -> u64 {
+        self.nfe_f
+    }
+
+    fn nfe_diffusion(&self) -> u64 {
+        self.nfe_g
+    }
+}

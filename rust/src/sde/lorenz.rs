@@ -1,0 +1,142 @@
+//! Stochastic Lorenz attractor (App. 9.9.2) — the data-generating process
+//! for the Fig 6/8 experiments, and an `Sde` in its own right so harnesses
+//! can also differentiate through it.
+//!
+//! ```text
+//! dX = σ(Y − X) dt       + α_x dW_1
+//! dY = (X(ρ − Z) − Y) dt + α_y dW_2
+//! dZ = (XY − βZ) dt      + α_z dW_3
+//! ```
+//!
+//! Additive noise, so Itô = Stratonovich. θ = [σ, ρ, β, α_x, α_y, α_z].
+
+use super::traits::{Calculus, Sde, SdeVjp};
+
+/// The stochastic Lorenz system. Parameters live in θ (see module docs).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StochasticLorenz;
+
+/// The paper's ground-truth parameter values: σ=10, ρ=28, β=8/3,
+/// α = (0.15, 0.15, 0.15).
+pub fn paper_theta() -> Vec<f64> {
+    vec![10.0, 28.0, 8.0 / 3.0, 0.15, 0.15, 0.15]
+}
+
+impl Sde for StochasticLorenz {
+    fn state_dim(&self) -> usize {
+        3
+    }
+    fn param_dim(&self) -> usize {
+        6
+    }
+    fn calculus(&self) -> Calculus {
+        Calculus::Ito // additive noise: Itô == Stratonovich
+    }
+    fn drift(&self, _t: f64, z: &[f64], th: &[f64], out: &mut [f64]) {
+        let (x, y, zz) = (z[0], z[1], z[2]);
+        let (sigma, rho, beta) = (th[0], th[1], th[2]);
+        out[0] = sigma * (y - x);
+        out[1] = x * (rho - zz) - y;
+        out[2] = x * y - beta * zz;
+    }
+    fn diffusion(&self, _t: f64, _z: &[f64], th: &[f64], out: &mut [f64]) {
+        out[0] = th[3];
+        out[1] = th[4];
+        out[2] = th[5];
+    }
+    fn diffusion_dz_diag(&self, _t: f64, _z: &[f64], _th: &[f64], out: &mut [f64]) {
+        out.fill(0.0);
+    }
+}
+
+impl SdeVjp for StochasticLorenz {
+    fn drift_vjp(
+        &self,
+        _t: f64,
+        z: &[f64],
+        th: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+    ) {
+        let (x, y, zz) = (z[0], z[1], z[2]);
+        let (sigma, rho, beta) = (th[0], th[1], th[2]);
+        // Jᵀa with J = ∂b/∂z:
+        //   J = [ [−σ, σ, 0], [ρ−z, −1, −x], [y, x, −β] ]
+        out_z[0] += -sigma * a[0] + (rho - zz) * a[1] + y * a[2];
+        out_z[1] += sigma * a[0] - a[1] + x * a[2];
+        out_z[2] += -x * a[1] - beta * a[2];
+        // ∂b/∂θ: b0 depends on σ; b1 on ρ; b2 on β.
+        out_theta[0] += (y - x) * a[0];
+        out_theta[1] += x * a[1];
+        out_theta[2] += -zz * a[2];
+        // α's do not enter the drift.
+    }
+
+    fn diffusion_vjp(
+        &self,
+        _t: f64,
+        _z: &[f64],
+        _th: &[f64],
+        a: &[f64],
+        _out_z: &mut [f64],
+        out_theta: &mut [f64],
+    ) {
+        // σ_i = α_i: ∂σ/∂z = 0; ∂σ_i/∂α_i = 1.
+        out_theta[3] += a[0];
+        out_theta[4] += a[1];
+        out_theta[5] += a[2];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drift_vjp_matches_finite_difference() {
+        let sys = StochasticLorenz;
+        let z = [1.2, -0.7, 14.0];
+        let th = paper_theta();
+        let a = [0.3, -1.1, 0.9];
+        let eps = 1e-6;
+
+        let mut vz = vec![0.0; 3];
+        let mut vth = vec![0.0; 6];
+        sys.drift_vjp(0.0, &z, &th, &a, &mut vz, &mut vth);
+
+        let mut hi = [0.0; 3];
+        let mut lo = [0.0; 3];
+        for i in 0..3 {
+            let mut zp = z;
+            zp[i] += eps;
+            sys.drift(0.0, &zp, &th, &mut hi);
+            zp[i] -= 2.0 * eps;
+            sys.drift(0.0, &zp, &th, &mut lo);
+            let fd: f64 = (0..3).map(|r| a[r] * (hi[r] - lo[r]) / (2.0 * eps)).sum();
+            assert!((fd - vz[i]).abs() < 1e-5, "z[{i}]: {fd} vs {}", vz[i]);
+        }
+        for j in 0..6 {
+            let mut tp = th.clone();
+            tp[j] += eps;
+            sys.drift(0.0, &z, &tp, &mut hi);
+            tp[j] -= 2.0 * eps;
+            sys.drift(0.0, &z, &tp, &mut lo);
+            let fd: f64 = (0..3).map(|r| a[r] * (hi[r] - lo[r]) / (2.0 * eps)).sum();
+            assert!((fd - vth[j]).abs() < 1e-5, "θ[{j}]: {fd} vs {}", vth[j]);
+        }
+    }
+
+    #[test]
+    fn diffusion_vjp_matches_finite_difference() {
+        let sys = StochasticLorenz;
+        let z = [1.2, -0.7, 14.0];
+        let th = paper_theta();
+        let a = [0.3, -1.1, 0.9];
+        let mut vz = vec![0.0; 3];
+        let mut vth = vec![0.0; 6];
+        sys.diffusion_vjp(0.0, &z, &th, &a, &mut vz, &mut vth);
+        assert_eq!(vz, vec![0.0; 3]);
+        assert_eq!(&vth[3..], &[0.3, -1.1, 0.9]);
+    }
+}

@@ -1,0 +1,30 @@
+//! SDE abstractions and concrete systems.
+//!
+//! The core trait family:
+//! * [`Sde`] — a parameterized diagonal-noise SDE `dZ = b(z,t,θ) dt +
+//!   σ(z,t,θ) dW` in a declared calculus (Itô or Stratonovich).
+//! * [`SdeVjp`] — adds the vector-Jacobian products the stochastic adjoint
+//!   consumes: `a ↦ aᵀ∂b/∂z, aᵀ∂b/∂θ, aᵀ∂σ/∂z, aᵀ∂σ/∂θ`.
+//!
+//! Diagonal noise is assumed throughout (m = d, `σ_i` multiplies `dW_i`),
+//! matching every experiment in the paper; per App. 9.4 this makes the
+//! adjoint's noise commutative so strong-order-1.0 schemes apply without
+//! Lévy-area simulation. As in the paper's architectures (App. 9.9/9.11,
+//! "each small net for a single dimension"), `σ_i` depends on `z_i` only.
+//!
+//! Concrete systems:
+//! * [`problems`] — the three closed-form test problems of §7.1/App. 9.7
+//!   (as 1-d `ScalarSde`s plus the paper's 10× replication wrapper), with
+//!   analytic solutions and analytic pathwise gradients.
+//! * [`lorenz`] — the stochastic Lorenz attractor (App. 9.9.2).
+//! * [`ou`] — Ornstein–Uhlenbeck (closed-form moments; extra test system).
+
+pub mod func;
+pub mod lorenz;
+pub mod ou;
+pub mod problems;
+pub mod traits;
+
+pub use func::{ForwardFunc, SdeFunc};
+pub use traits::{Calculus, ScalarSde, Sde, SdeVjp};
+pub use problems::{ReplicatedSde, ScalarProblem};

@@ -1,0 +1,128 @@
+//! Ornstein–Uhlenbeck process — an additive-noise system with closed-form
+//! transition moments, used as an extra verification target for solvers
+//! (weak-convergence tests) and as the §8 example of an SDE that is also a
+//! Gaussian process.
+//!
+//! `dX = κ(μ − X) dt + s dW`, θ = [κ, μ, s].
+//! Transition: `X_t | X_0 = x0 ~ N(μ + (x0 − μ)e^{−κt}, s²(1 − e^{−2κt})/(2κ))`.
+
+use super::traits::{Calculus, Sde, SdeVjp};
+
+/// Scalar OU process replicated over `dim` dimensions with shared θ.
+#[derive(Clone, Copy, Debug)]
+pub struct OrnsteinUhlenbeck {
+    dim: usize,
+}
+
+impl OrnsteinUhlenbeck {
+    pub fn new(dim: usize) -> Self {
+        OrnsteinUhlenbeck { dim }
+    }
+
+    /// Closed-form mean of `X_t | x0` per dimension.
+    pub fn mean(&self, t: f64, x0: f64, th: &[f64]) -> f64 {
+        let (kappa, mu) = (th[0], th[1]);
+        mu + (x0 - mu) * (-kappa * t).exp()
+    }
+
+    /// Closed-form variance of `X_t | x0`.
+    pub fn variance(&self, t: f64, th: &[f64]) -> f64 {
+        let (kappa, s) = (th[0], th[2]);
+        s * s * (1.0 - (-2.0 * kappa * t).exp()) / (2.0 * kappa)
+    }
+}
+
+impl Sde for OrnsteinUhlenbeck {
+    fn state_dim(&self) -> usize {
+        self.dim
+    }
+    fn param_dim(&self) -> usize {
+        3
+    }
+    fn calculus(&self) -> Calculus {
+        Calculus::Ito // additive noise: Itô == Stratonovich
+    }
+    fn drift(&self, _t: f64, z: &[f64], th: &[f64], out: &mut [f64]) {
+        let (kappa, mu) = (th[0], th[1]);
+        for i in 0..self.dim {
+            out[i] = kappa * (mu - z[i]);
+        }
+    }
+    fn diffusion(&self, _t: f64, _z: &[f64], th: &[f64], out: &mut [f64]) {
+        out.fill(th[2]);
+    }
+    fn diffusion_dz_diag(&self, _t: f64, _z: &[f64], _th: &[f64], out: &mut [f64]) {
+        out.fill(0.0);
+    }
+}
+
+impl SdeVjp for OrnsteinUhlenbeck {
+    fn drift_vjp(
+        &self,
+        _t: f64,
+        z: &[f64],
+        th: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+    ) {
+        let (kappa, mu) = (th[0], th[1]);
+        for i in 0..self.dim {
+            out_z[i] += -kappa * a[i];
+            out_theta[0] += (mu - z[i]) * a[i];
+            out_theta[1] += kappa * a[i];
+        }
+    }
+
+    fn diffusion_vjp(
+        &self,
+        _t: f64,
+        _z: &[f64],
+        _th: &[f64],
+        a: &[f64],
+        _out_z: &mut [f64],
+        out_theta: &mut [f64],
+    ) {
+        out_theta[2] += a.iter().sum::<f64>();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments_limits() {
+        let ou = OrnsteinUhlenbeck::new(1);
+        let th = [2.0, 1.5, 0.5];
+        // t → ∞: mean → μ, var → s²/(2κ).
+        assert!((ou.mean(50.0, -3.0, &th) - 1.5).abs() < 1e-12);
+        assert!((ou.variance(50.0, &th) - 0.0625).abs() < 1e-12);
+        // t = 0: mean = x0, var = 0.
+        assert_eq!(ou.mean(0.0, -3.0, &th), -3.0);
+        assert_eq!(ou.variance(0.0, &th), 0.0);
+    }
+
+    #[test]
+    fn vjp_finite_difference() {
+        let ou = OrnsteinUhlenbeck::new(2);
+        let z = [0.4, -1.0];
+        let th = [2.0, 1.5, 0.5];
+        let a = [1.0, -0.5];
+        let eps = 1e-6;
+        let mut vz = vec![0.0; 2];
+        let mut vth = vec![0.0; 3];
+        ou.drift_vjp(0.0, &z, &th, &a, &mut vz, &mut vth);
+        let mut hi = [0.0; 2];
+        let mut lo = [0.0; 2];
+        for j in 0..3 {
+            let mut tp = th;
+            tp[j] += eps;
+            ou.drift(0.0, &z, &tp, &mut hi);
+            tp[j] -= 2.0 * eps;
+            ou.drift(0.0, &z, &tp, &mut lo);
+            let fd: f64 = (0..2).map(|r| a[r] * (hi[r] - lo[r]) / (2.0 * eps)).sum();
+            assert!((fd - vth[j]).abs() < 1e-6, "θ[{j}]");
+        }
+    }
+}

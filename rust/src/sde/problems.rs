@@ -1,0 +1,607 @@
+//! The closed-form test problems of §7.1 / Appendix 9.7 and the 10×
+//! replication wrapper used by the paper's numerical studies.
+//!
+//! Each problem implements [`ScalarSde`] with hand-derived partials (for
+//! VJPs and Milstein terms) and the closed-form strong solution with its
+//! pathwise parameter gradients, which are the ground truth of Fig 5/7.
+//!
+//! Calculus conventions (derived via Itô's lemma from the stated analytic
+//! solutions — note the paper's App. 9.7 has two typos which we correct and
+//! document here):
+//!
+//! * **Example 1** (geometric Brownian motion): `dX = αX dt + βX dW` (Itô)
+//!   with solution `X_t = x0·exp((α − β²/2)t + βW_t)`. (The appendix swaps
+//!   α and β between the SDE and its solution; the SDE as printed is the
+//!   one we use, and the solution above is the correct one for it.)
+//! * **Example 2**: `dX = −p² sin(X)cos³(X) dt + p cos²(X) dW` (Itô), with
+//!   solution `X_t = arctan(pW_t + tan(x0))`. (The appendix's `−(p²)²` is a
+//!   typo: Itô's lemma on the printed solution yields the `−p²` drift.) In
+//!   Stratonovich form the drift vanishes entirely — a sharp test of the
+//!   Itô↔Stratonovich machinery.
+//! * **Example 3**: `dX = (β/√(1+t) − X/(2(1+t))) dt + αβ/√(1+t) dW`,
+//!   additive noise (Itô = Stratonovich), with solution
+//!   `X_t = x0/√(1+t) + β(t + αW_t)/√(1+t)`.
+
+use super::traits::{Calculus, ScalarSde, Sde, SdeVjp};
+
+// ---------------------------------------------------------------------------
+// Example 1: geometric Brownian motion. θ = [α, β].
+// ---------------------------------------------------------------------------
+
+/// `dX = αX dt + βX dW` (Itô).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Example1;
+
+impl ScalarSde for Example1 {
+    fn nparams(&self) -> usize {
+        2
+    }
+    fn calculus(&self) -> Calculus {
+        Calculus::Ito
+    }
+    fn drift(&self, _t: f64, x: f64, th: &[f64]) -> f64 {
+        th[0] * x
+    }
+    fn diffusion(&self, _t: f64, x: f64, th: &[f64]) -> f64 {
+        th[1] * x
+    }
+    fn drift_dx(&self, _t: f64, _x: f64, th: &[f64]) -> f64 {
+        th[0]
+    }
+    fn diffusion_dx(&self, _t: f64, _x: f64, th: &[f64]) -> f64 {
+        th[1]
+    }
+    fn diffusion_dxx(&self, _t: f64, _x: f64, _th: &[f64]) -> f64 {
+        0.0
+    }
+    fn drift_dtheta(&self, _t: f64, x: f64, _th: &[f64], out: &mut [f64]) {
+        out[0] = x;
+        out[1] = 0.0;
+    }
+    fn diffusion_dtheta(&self, _t: f64, x: f64, _th: &[f64], out: &mut [f64]) {
+        out[0] = 0.0;
+        out[1] = x;
+    }
+    fn diffusion_dx_dtheta(&self, _t: f64, _x: f64, _th: &[f64], out: &mut [f64]) {
+        out[0] = 0.0;
+        out[1] = 1.0;
+    }
+    fn analytic_solution(&self, t: f64, x0: f64, th: &[f64], w: f64) -> f64 {
+        let (alpha, beta) = (th[0], th[1]);
+        x0 * ((alpha - 0.5 * beta * beta) * t + beta * w).exp()
+    }
+    fn analytic_gradients(&self, t: f64, x0: f64, th: &[f64], w: f64, out: &mut [f64]) {
+        let xt = self.analytic_solution(t, x0, th, w);
+        out[0] = xt / x0; // ∂X_t/∂x0
+        out[1] = t * xt; // ∂X_t/∂α
+        out[2] = (w - th[1] * t) * xt; // ∂X_t/∂β
+    }
+    fn name(&self) -> &'static str {
+        "example1-gbm"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Example 2. θ = [p].
+// ---------------------------------------------------------------------------
+
+/// `dX = −p² sin(X)cos³(X) dt + p cos²(X) dW` (Itô); Stratonovich drift is
+/// identically zero.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Example2;
+
+impl ScalarSde for Example2 {
+    fn nparams(&self) -> usize {
+        1
+    }
+    fn calculus(&self) -> Calculus {
+        Calculus::Ito
+    }
+    fn drift(&self, _t: f64, x: f64, th: &[f64]) -> f64 {
+        let p = th[0];
+        -p * p * x.sin() * x.cos().powi(3)
+    }
+    fn diffusion(&self, _t: f64, x: f64, th: &[f64]) -> f64 {
+        th[0] * x.cos().powi(2)
+    }
+    fn drift_dx(&self, _t: f64, x: f64, th: &[f64]) -> f64 {
+        let p = th[0];
+        let (s, c) = x.sin_cos();
+        // d/dx [−p² s c³] = −p² (c⁴ − 3 s² c²)
+        -p * p * (c.powi(4) - 3.0 * s * s * c * c)
+    }
+    fn diffusion_dx(&self, _t: f64, x: f64, th: &[f64]) -> f64 {
+        let (s, c) = x.sin_cos();
+        -2.0 * th[0] * s * c
+    }
+    fn diffusion_dxx(&self, _t: f64, x: f64, th: &[f64]) -> f64 {
+        let (s, c) = x.sin_cos();
+        -2.0 * th[0] * (c * c - s * s)
+    }
+    fn drift_dtheta(&self, _t: f64, x: f64, th: &[f64], out: &mut [f64]) {
+        out[0] = -2.0 * th[0] * x.sin() * x.cos().powi(3);
+    }
+    fn diffusion_dtheta(&self, _t: f64, x: f64, _th: &[f64], out: &mut [f64]) {
+        out[0] = x.cos().powi(2);
+    }
+    fn diffusion_dx_dtheta(&self, _t: f64, x: f64, _th: &[f64], out: &mut [f64]) {
+        let (s, c) = x.sin_cos();
+        out[0] = -2.0 * s * c;
+    }
+    fn analytic_solution(&self, _t: f64, x0: f64, th: &[f64], w: f64) -> f64 {
+        (th[0] * w + x0.tan()).atan()
+    }
+    fn analytic_gradients(&self, _t: f64, x0: f64, th: &[f64], w: f64, out: &mut [f64]) {
+        let u = th[0] * w + x0.tan();
+        let denom = 1.0 + u * u;
+        out[0] = (1.0 / x0.cos().powi(2)) / denom; // ∂/∂x0 = sec²(x0)/(1+u²)
+        out[1] = w / denom; // ∂/∂p
+    }
+    fn name(&self) -> &'static str {
+        "example2-tanh"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Example 3: additive time-dependent noise. θ = [α, β].
+// ---------------------------------------------------------------------------
+
+/// `dX = (β/√(1+t) − X/(2(1+t))) dt + αβ/√(1+t) dW` — additive noise, so
+/// the Itô and Stratonovich forms coincide.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Example3;
+
+impl ScalarSde for Example3 {
+    fn nparams(&self) -> usize {
+        2
+    }
+    fn calculus(&self) -> Calculus {
+        // Additive noise: Itô == Stratonovich. Declared Itô so Itô
+        // schemes apply directly (the Stratonovich correction is zero).
+        Calculus::Ito
+    }
+    fn drift(&self, t: f64, x: f64, th: &[f64]) -> f64 {
+        th[1] / (1.0 + t).sqrt() - x / (2.0 * (1.0 + t))
+    }
+    fn diffusion(&self, t: f64, _x: f64, th: &[f64]) -> f64 {
+        th[0] * th[1] / (1.0 + t).sqrt()
+    }
+    fn drift_dx(&self, t: f64, _x: f64, _th: &[f64]) -> f64 {
+        -1.0 / (2.0 * (1.0 + t))
+    }
+    fn diffusion_dx(&self, _t: f64, _x: f64, _th: &[f64]) -> f64 {
+        0.0
+    }
+    fn diffusion_dxx(&self, _t: f64, _x: f64, _th: &[f64]) -> f64 {
+        0.0
+    }
+    fn drift_dtheta(&self, t: f64, _x: f64, _th: &[f64], out: &mut [f64]) {
+        out[0] = 0.0;
+        out[1] = 1.0 / (1.0 + t).sqrt();
+    }
+    fn diffusion_dtheta(&self, t: f64, _x: f64, th: &[f64], out: &mut [f64]) {
+        let root = (1.0 + t).sqrt();
+        out[0] = th[1] / root;
+        out[1] = th[0] / root;
+    }
+    fn diffusion_dx_dtheta(&self, _t: f64, _x: f64, _th: &[f64], out: &mut [f64]) {
+        out[0] = 0.0;
+        out[1] = 0.0;
+    }
+    fn analytic_solution(&self, t: f64, x0: f64, th: &[f64], w: f64) -> f64 {
+        let root = (1.0 + t).sqrt();
+        x0 / root + th[1] * (t + th[0] * w) / root
+    }
+    fn analytic_gradients(&self, t: f64, _x0: f64, th: &[f64], w: f64, out: &mut [f64]) {
+        let root = (1.0 + t).sqrt();
+        out[0] = 1.0 / root; // ∂/∂x0
+        out[1] = th[1] * w / root; // ∂/∂α
+        out[2] = (t + th[0] * w) / root; // ∂/∂β
+    }
+    fn name(&self) -> &'static str {
+        "example3-additive"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Replication wrapper (§7.1: "duplicate the equation 10 times ... each
+// dimension with its own parameter values").
+// ---------------------------------------------------------------------------
+
+/// Boxed scalar problem handle used by harnesses.
+pub type ScalarProblem = Box<dyn ScalarSde>;
+
+/// d independent copies of a scalar problem, each with its own parameter
+/// block: `θ = [θ^(1) … θ^(d)]`, `θ^(i) ∈ R^k`. Diagonal noise: dimension i
+/// is driven by `W_i` only.
+pub struct ReplicatedSde<P: ScalarSde> {
+    problem: P,
+    dim: usize,
+}
+
+impl<P: ScalarSde> ReplicatedSde<P> {
+    pub fn new(problem: P, dim: usize) -> Self {
+        assert!(dim > 0);
+        ReplicatedSde { problem, dim }
+    }
+
+    pub fn problem(&self) -> &P {
+        &self.problem
+    }
+
+    #[inline]
+    fn th<'a>(&self, theta: &'a [f64], i: usize) -> &'a [f64] {
+        let k = self.problem.nparams();
+        &theta[i * k..(i + 1) * k]
+    }
+
+    /// Closed-form solution for all dimensions given `W_T` per dimension.
+    pub fn analytic_solution(&self, t: f64, x0: &[f64], theta: &[f64], w: &[f64], out: &mut [f64]) {
+        for i in 0..self.dim {
+            out[i] = self.problem.analytic_solution(t, x0[i], self.th(theta, i), w[i]);
+        }
+    }
+
+    /// Pathwise gradient of the loss `L = Σ_i X_T^(i)` w.r.t. `(x0, θ)`:
+    /// `grad_x0` has length d, `grad_theta` length d·k.
+    pub fn analytic_loss_gradients(
+        &self,
+        t: f64,
+        x0: &[f64],
+        theta: &[f64],
+        w: &[f64],
+        grad_x0: &mut [f64],
+        grad_theta: &mut [f64],
+    ) {
+        let k = self.problem.nparams();
+        let mut buf = vec![0.0; 1 + k];
+        for i in 0..self.dim {
+            self.problem
+                .analytic_gradients(t, x0[i], self.th(theta, i), w[i], &mut buf);
+            grad_x0[i] = buf[0];
+            grad_theta[i * k..(i + 1) * k].copy_from_slice(&buf[1..]);
+        }
+    }
+}
+
+impl<P: ScalarSde> Sde for ReplicatedSde<P> {
+    fn state_dim(&self) -> usize {
+        self.dim
+    }
+    fn param_dim(&self) -> usize {
+        self.dim * self.problem.nparams()
+    }
+    fn calculus(&self) -> Calculus {
+        self.problem.calculus()
+    }
+    fn drift(&self, t: f64, z: &[f64], theta: &[f64], out: &mut [f64]) {
+        for i in 0..self.dim {
+            out[i] = self.problem.drift(t, z[i], self.th(theta, i));
+        }
+    }
+    fn diffusion(&self, t: f64, z: &[f64], theta: &[f64], out: &mut [f64]) {
+        for i in 0..self.dim {
+            out[i] = self.problem.diffusion(t, z[i], self.th(theta, i));
+        }
+    }
+    fn diffusion_dz_diag(&self, t: f64, z: &[f64], theta: &[f64], out: &mut [f64]) {
+        for i in 0..self.dim {
+            out[i] = self.problem.diffusion_dx(t, z[i], self.th(theta, i));
+        }
+    }
+}
+
+impl<P: ScalarSde> SdeVjp for ReplicatedSde<P> {
+    fn drift_vjp(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+    ) {
+        let k = self.problem.nparams();
+        let mut dth = vec![0.0; k];
+        for i in 0..self.dim {
+            let th = self.th(theta, i);
+            out_z[i] += a[i] * self.problem.drift_dx(t, z[i], th);
+            self.problem.drift_dtheta(t, z[i], th, &mut dth);
+            for j in 0..k {
+                out_theta[i * k + j] += a[i] * dth[j];
+            }
+        }
+    }
+
+    fn diffusion_vjp(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+    ) {
+        let k = self.problem.nparams();
+        let mut dth = vec![0.0; k];
+        for i in 0..self.dim {
+            let th = self.th(theta, i);
+            out_z[i] += a[i] * self.problem.diffusion_dx(t, z[i], th);
+            self.problem.diffusion_dtheta(t, z[i], th, &mut dth);
+            for j in 0..k {
+                out_theta[i * k + j] += a[i] * dth[j];
+            }
+        }
+    }
+
+    fn ito_correction_vjp(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+    ) {
+        // c_i = ½ σ_i σ_i'.
+        // ∂c_i/∂z_i = ½ (σ_i' σ_i' + σ_i σ_i'')
+        // ∂c_i/∂θ_j = ½ (∂σ_i/∂θ_j · σ_i' + σ_i · ∂σ_i'/∂θ_j)
+        let k = self.problem.nparams();
+        let mut dsig_dth = vec![0.0; k];
+        let mut dsigx_dth = vec![0.0; k];
+        for i in 0..self.dim {
+            let th = self.th(theta, i);
+            let sig = self.problem.diffusion(t, z[i], th);
+            let sig_x = self.problem.diffusion_dx(t, z[i], th);
+            let sig_xx = self.problem.diffusion_dxx(t, z[i], th);
+            out_z[i] += a[i] * 0.5 * (sig_x * sig_x + sig * sig_xx);
+            self.problem.diffusion_dtheta(t, z[i], th, &mut dsig_dth);
+            self.problem.diffusion_dx_dtheta(t, z[i], th, &mut dsigx_dth);
+            for j in 0..k {
+                out_theta[i * k + j] += a[i] * 0.5 * (dsig_dth[j] * sig_x + sig * dsigx_dth[j]);
+            }
+        }
+    }
+}
+
+/// Sample the §7.1 experiment setup: per-dimension parameters drawn from
+/// `sigmoid(N(0,1))` and initial values from `N(μ0, s0²)` (positive-shifted
+/// so Example 1/2 gradients are well-defined).
+pub fn sample_experiment_setup(
+    key: crate::prng::PrngKey,
+    dim: usize,
+    nparams: usize,
+) -> (Vec<f64>, Vec<f64>) {
+    let (kp, kx) = key.split();
+    let mut theta = vec![0.0; dim * nparams];
+    kp.fill_normal(0, &mut theta);
+    for v in theta.iter_mut() {
+        *v = 1.0 / (1.0 + (-*v).exp()); // sigmoid -> (0, 1)
+    }
+    let mut x0 = vec![0.0; dim];
+    kx.fill_normal(0, &mut x0);
+    for v in x0.iter_mut() {
+        *v = 0.6 + 0.2 * *v; // N(0.6, 0.04): bounded away from 0
+    }
+    (theta, x0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Central-difference check of every analytic partial on a ScalarSde.
+    fn check_partials<P: ScalarSde>(p: &P, t: f64, x: f64, th: &[f64]) {
+        let k = p.nparams();
+        let eps = 1e-6;
+        let tol = 1e-5;
+
+        // drift_dx
+        let fd = (p.drift(t, x + eps, th) - p.drift(t, x - eps, th)) / (2.0 * eps);
+        assert!(
+            (fd - p.drift_dx(t, x, th)).abs() < tol,
+            "{}: drift_dx analytic {} vs fd {}",
+            p.name(),
+            p.drift_dx(t, x, th),
+            fd
+        );
+        // diffusion_dx
+        let fd = (p.diffusion(t, x + eps, th) - p.diffusion(t, x - eps, th)) / (2.0 * eps);
+        assert!((fd - p.diffusion_dx(t, x, th)).abs() < tol, "{}: diffusion_dx", p.name());
+        // diffusion_dxx
+        let fd =
+            (p.diffusion_dx(t, x + eps, th) - p.diffusion_dx(t, x - eps, th)) / (2.0 * eps);
+        assert!((fd - p.diffusion_dxx(t, x, th)).abs() < tol, "{}: diffusion_dxx", p.name());
+
+        let mut thp = th.to_vec();
+        let mut grad = vec![0.0; k];
+        // drift_dtheta
+        p.drift_dtheta(t, x, th, &mut grad);
+        for j in 0..k {
+            thp.copy_from_slice(th);
+            thp[j] += eps;
+            let hi = p.drift(t, x, &thp);
+            thp[j] -= 2.0 * eps;
+            let lo = p.drift(t, x, &thp);
+            let fd = (hi - lo) / (2.0 * eps);
+            assert!((fd - grad[j]).abs() < tol, "{}: drift_dtheta[{j}]", p.name());
+        }
+        // diffusion_dtheta
+        p.diffusion_dtheta(t, x, th, &mut grad);
+        for j in 0..k {
+            thp.copy_from_slice(th);
+            thp[j] += eps;
+            let hi = p.diffusion(t, x, &thp);
+            thp[j] -= 2.0 * eps;
+            let lo = p.diffusion(t, x, &thp);
+            let fd = (hi - lo) / (2.0 * eps);
+            assert!((fd - grad[j]).abs() < tol, "{}: diffusion_dtheta[{j}]", p.name());
+        }
+        // diffusion_dx_dtheta
+        p.diffusion_dx_dtheta(t, x, th, &mut grad);
+        for j in 0..k {
+            thp.copy_from_slice(th);
+            thp[j] += eps;
+            let hi = p.diffusion_dx(t, x, &thp);
+            thp[j] -= 2.0 * eps;
+            let lo = p.diffusion_dx(t, x, &thp);
+            let fd = (hi - lo) / (2.0 * eps);
+            assert!((fd - grad[j]).abs() < tol, "{}: diffusion_dx_dtheta[{j}]", p.name());
+        }
+    }
+
+    /// The analytic pathwise gradients must match finite differences of the
+    /// analytic solution (holding W fixed).
+    fn check_analytic_grads<P: ScalarSde>(p: &P, t: f64, x0: f64, th: &[f64], w: f64) {
+        let k = p.nparams();
+        let mut grads = vec![0.0; 1 + k];
+        p.analytic_gradients(t, x0, th, w, &mut grads);
+        let eps = 1e-6;
+        let fd_x0 = (p.analytic_solution(t, x0 + eps, th, w)
+            - p.analytic_solution(t, x0 - eps, th, w))
+            / (2.0 * eps);
+        assert!((fd_x0 - grads[0]).abs() < 1e-5, "{}: analytic grad x0", p.name());
+        let mut thp = th.to_vec();
+        for j in 0..k {
+            thp.copy_from_slice(th);
+            thp[j] += eps;
+            let hi = p.analytic_solution(t, x0, &thp, w);
+            thp[j] -= 2.0 * eps;
+            let lo = p.analytic_solution(t, x0, &thp, w);
+            let fd = (hi - lo) / (2.0 * eps);
+            assert!((fd - grads[1 + j]).abs() < 1e-5, "{}: analytic grad θ[{j}]", p.name());
+        }
+    }
+
+    #[test]
+    fn example1_partials_and_gradients() {
+        let p = Example1;
+        check_partials(&p, 0.3, 0.8, &[0.6, 0.4]);
+        check_analytic_grads(&p, 1.0, 0.7, &[0.6, 0.4], 0.35);
+    }
+
+    #[test]
+    fn example2_partials_and_gradients() {
+        let p = Example2;
+        check_partials(&p, 0.1, 0.5, &[0.7]);
+        check_analytic_grads(&p, 1.0, 0.5, &[0.7], -0.2);
+    }
+
+    #[test]
+    fn example3_partials_and_gradients() {
+        let p = Example3;
+        check_partials(&p, 0.4, 1.1, &[0.5, 0.9]);
+        check_analytic_grads(&p, 1.0, 1.1, &[0.5, 0.9], 0.15);
+    }
+
+    #[test]
+    fn example2_stratonovich_drift_vanishes() {
+        // b_strat = b − ½σσ' must be ~0 for Example 2 (see module docs).
+        let sde = ReplicatedSde::new(Example2, 3);
+        let z = [0.3, 0.9, -0.4];
+        let theta = [0.5, 0.7, 0.9];
+        let mut out = [0.0; 3];
+        sde.drift_stratonovich(0.0, &z, &theta, &mut out);
+        for v in out {
+            assert!(v.abs() < 1e-12, "strat drift should vanish, got {v}");
+        }
+    }
+
+    #[test]
+    fn replicated_layout_and_independence() {
+        let sde = ReplicatedSde::new(Example1, 4);
+        assert_eq!(sde.state_dim(), 4);
+        assert_eq!(sde.param_dim(), 8);
+        let z = [1.0, 2.0, 3.0, 4.0];
+        let theta = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8];
+        let mut out = [0.0; 4];
+        sde.drift(0.0, &z, &theta, &mut out);
+        // dim i drift = α_i z_i with α_i = theta[2i]
+        assert_eq!(out, [0.1 * 1.0, 0.3 * 2.0, 0.5 * 3.0, 0.7 * 4.0]);
+    }
+
+    #[test]
+    fn replicated_vjps_match_finite_difference() {
+        let sde = ReplicatedSde::new(Example2, 3);
+        let z = [0.3, 0.9, -0.4];
+        let theta = [0.5, 0.7, 0.9];
+        let a = [1.0, -2.0, 0.5];
+        let t = 0.2;
+        let eps = 1e-6;
+
+        let mut vz = vec![0.0; 3];
+        let mut vth = vec![0.0; 3];
+        sde.drift_vjp(t, &z, &theta, &a, &mut vz, &mut vth);
+
+        let mut buf_hi = [0.0; 3];
+        let mut buf_lo = [0.0; 3];
+        for i in 0..3 {
+            let mut zp = z;
+            zp[i] += eps;
+            sde.drift(t, &zp, &theta, &mut buf_hi);
+            zp[i] -= 2.0 * eps;
+            sde.drift(t, &zp, &theta, &mut buf_lo);
+            let fd: f64 = (0..3).map(|r| a[r] * (buf_hi[r] - buf_lo[r]) / (2.0 * eps)).sum();
+            assert!((fd - vz[i]).abs() < 1e-5, "drift_vjp z[{i}]: {fd} vs {}", vz[i]);
+        }
+        for j in 0..3 {
+            let mut tp = theta;
+            tp[j] += eps;
+            sde.drift(t, &z, &tp, &mut buf_hi);
+            tp[j] -= 2.0 * eps;
+            sde.drift(t, &z, &tp, &mut buf_lo);
+            let fd: f64 = (0..3).map(|r| a[r] * (buf_hi[r] - buf_lo[r]) / (2.0 * eps)).sum();
+            assert!((fd - vth[j]).abs() < 1e-5, "drift_vjp θ[{j}]: {fd} vs {}", vth[j]);
+        }
+    }
+
+    #[test]
+    fn ito_correction_vjp_matches_finite_difference() {
+        let sde = ReplicatedSde::new(Example2, 2);
+        let z = [0.4, -0.7];
+        let theta = [0.6, 0.8];
+        let a = [1.5, -0.5];
+        let t = 0.0;
+        let eps = 1e-6;
+
+        let mut vz = vec![0.0; 2];
+        let mut vth = vec![0.0; 2];
+        sde.ito_correction_vjp(t, &z, &theta, &a, &mut vz, &mut vth);
+
+        let corr = |z: &[f64; 2], th: &[f64; 2]| -> [f64; 2] {
+            let mut sig = [0.0; 2];
+            let mut dsig = [0.0; 2];
+            sde.diffusion(t, z, th, &mut sig);
+            sde.diffusion_dz_diag(t, z, th, &mut dsig);
+            [0.5 * sig[0] * dsig[0], 0.5 * sig[1] * dsig[1]]
+        };
+        for i in 0..2 {
+            let mut zp = z;
+            zp[i] += eps;
+            let hi = corr(&zp, &theta);
+            zp[i] -= 2.0 * eps;
+            let lo = corr(&zp, &theta);
+            let fd: f64 = (0..2).map(|r| a[r] * (hi[r] - lo[r]) / (2.0 * eps)).sum();
+            assert!((fd - vz[i]).abs() < 1e-5, "corr vjp z[{i}]: {fd} vs {}", vz[i]);
+        }
+        for j in 0..2 {
+            let mut tp = theta;
+            tp[j] += eps;
+            let hi = corr(&z, &tp);
+            tp[j] -= 2.0 * eps;
+            let lo = corr(&z, &tp);
+            let fd: f64 = (0..2).map(|r| a[r] * (hi[r] - lo[r]) / (2.0 * eps)).sum();
+            assert!((fd - vth[j]).abs() < 1e-5, "corr vjp θ[{j}]: {fd} vs {}", vth[j]);
+        }
+    }
+
+    #[test]
+    fn setup_sampler_ranges() {
+        let (theta, x0) = sample_experiment_setup(crate::prng::PrngKey::from_seed(1), 10, 2);
+        assert_eq!(theta.len(), 20);
+        assert_eq!(x0.len(), 10);
+        for &v in &theta {
+            assert!(v > 0.0 && v < 1.0, "sigmoid out of range: {v}");
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Core SDE traits.
+
+/// Which stochastic calculus the (drift, diffusion) pair is written in.
+///
+/// For diagonal noise the two are interconvertible by the drift correction
+/// `b_strat = b_ito − ½ σ ∂σ/∂z` (componentwise). The solvers and the
+/// adjoint operate natively in Stratonovich form (§2.4: its symmetry is
+/// what makes "running the SDE backwards" well defined — see Fig 2);
+/// Itô systems are integrated with Itô schemes or converted.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Calculus {
+    Ito,
+    Stratonovich,
+}
+
+/// A parameterized d-dimensional diagonal-noise SDE.
+///
+/// State `z ∈ R^d`, parameters `θ ∈ R^p`, noise `W ∈ R^d`, with
+/// `dZ_i = b_i(z,t,θ) dt + σ_i(z_i,t,θ) dW_i`.
+pub trait Sde {
+    /// State dimension d.
+    fn state_dim(&self) -> usize;
+    /// Parameter dimension p.
+    fn param_dim(&self) -> usize;
+    /// Calculus in which drift/diffusion are expressed.
+    fn calculus(&self) -> Calculus;
+
+    /// Drift `b(z, t, θ)` into `out` (length d).
+    fn drift(&self, t: f64, z: &[f64], theta: &[f64], out: &mut [f64]);
+
+    /// Diagonal diffusion `σ(z, t, θ)` into `out` (length d).
+    fn diffusion(&self, t: f64, z: &[f64], theta: &[f64], out: &mut [f64]);
+
+    /// `∂σ_i/∂z_i` into `out` (length d). Needed for Milstein schemes and
+    /// Itô↔Stratonovich conversion.
+    fn diffusion_dz_diag(&self, t: f64, z: &[f64], theta: &[f64], out: &mut [f64]);
+
+    /// Stratonovich drift regardless of native calculus:
+    /// `b_strat = b − ½ σ σ'` when native form is Itô.
+    fn drift_stratonovich(&self, t: f64, z: &[f64], theta: &[f64], out: &mut [f64]) {
+        self.drift(t, z, theta, out);
+        if self.calculus() == Calculus::Ito {
+            let d = self.state_dim();
+            let mut sig = vec![0.0; d];
+            let mut dsig = vec![0.0; d];
+            self.diffusion(t, z, theta, &mut sig);
+            self.diffusion_dz_diag(t, z, theta, &mut dsig);
+            for i in 0..d {
+                out[i] -= 0.5 * sig[i] * dsig[i];
+            }
+        }
+    }
+}
+
+/// Vector-Jacobian products for the stochastic adjoint (Algorithm 2).
+///
+/// All VJPs are *accumulating*: they add into `out_*` so the augmented
+/// backward dynamics can sum drift and diffusion contributions without
+/// temporaries. VJPs are taken of the functions **in the trait object's
+/// native calculus**; the adjoint machinery requests Stratonovich-form
+/// VJPs via [`SdeVjp::drift_vjp_stratonovich`].
+pub trait SdeVjp: Sde {
+    /// Accumulate `aᵀ ∂b/∂z` into `out_z` (len d) and `aᵀ ∂b/∂θ` into
+    /// `out_theta` (len p).
+    fn drift_vjp(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+    );
+
+    /// Accumulate `aᵀ ∂σ/∂z` and `aᵀ ∂σ/∂θ`. With diagonal σ (σ_i depends
+    /// on z_i), `(aᵀ∂σ/∂z)_i = a_i ∂σ_i/∂z_i`.
+    fn diffusion_vjp(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+    );
+
+    /// VJP of the Itô→Stratonovich correction term `c(z) = ½ σ σ'`
+    /// (i.e. accumulate `aᵀ ∂c/∂z`, `aᵀ ∂c/∂θ`). Only required when the
+    /// native calculus is Itô *and* the adjoint is used; systems written
+    /// natively in Stratonovich form may leave this unimplemented.
+    fn ito_correction_vjp(
+        &self,
+        _t: f64,
+        _z: &[f64],
+        _theta: &[f64],
+        _a: &[f64],
+        _out_z: &mut [f64],
+        _out_theta: &mut [f64],
+    ) {
+        panic!(
+            "ito_correction_vjp not provided: express this SDE in \
+             Stratonovich form or supply the correction VJP"
+        );
+    }
+
+    /// Accumulate the Stratonovich-form drift VJP: native drift VJP minus
+    /// the correction VJP when the native calculus is Itô.
+    fn drift_vjp_stratonovich(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+    ) {
+        self.drift_vjp(t, z, theta, a, out_z, out_theta);
+        if self.calculus() == Calculus::Ito {
+            // out += aᵀ ∂(−c)/∂· ⇒ accumulate with negated adjoint.
+            let neg: Vec<f64> = a.iter().map(|x| -x).collect();
+            self.ito_correction_vjp(t, z, theta, &neg, out_z, out_theta);
+        }
+    }
+}
+
+/// A scalar (1-d state, 1-d noise) parameterized SDE with everything the
+/// numerical studies need spelled out analytically: partial derivatives for
+/// VJPs, second derivatives for Milstein, closed-form strong solution and
+/// its pathwise parameter gradients.
+///
+/// §7.1 replicates each scalar problem 10× with independent per-dimension
+/// parameters; [`super::problems::ReplicatedSde`] lifts a `ScalarSde` to
+/// that d-dimensional system.
+pub trait ScalarSde: Send + Sync {
+    /// Number of parameters k of the scalar problem (excluding x0).
+    fn nparams(&self) -> usize;
+    /// Calculus of the (drift, diffusion) pair below.
+    fn calculus(&self) -> Calculus;
+
+    fn drift(&self, t: f64, x: f64, th: &[f64]) -> f64;
+    fn diffusion(&self, t: f64, x: f64, th: &[f64]) -> f64;
+
+    /// ∂b/∂x, ∂σ/∂x, ∂²σ/∂x².
+    fn drift_dx(&self, t: f64, x: f64, th: &[f64]) -> f64;
+    fn diffusion_dx(&self, t: f64, x: f64, th: &[f64]) -> f64;
+    fn diffusion_dxx(&self, t: f64, x: f64, th: &[f64]) -> f64;
+
+    /// ∂b/∂θ_j and ∂σ/∂θ_j into `out` (length nparams).
+    fn drift_dtheta(&self, t: f64, x: f64, th: &[f64], out: &mut [f64]);
+    fn diffusion_dtheta(&self, t: f64, x: f64, th: &[f64], out: &mut [f64]);
+
+    /// ∂²σ/∂x∂θ_j into `out` (needed for the Itô-correction VJP).
+    fn diffusion_dx_dtheta(&self, t: f64, x: f64, th: &[f64], out: &mut [f64]);
+
+    /// Closed-form strong solution `X_t` given `W_t = w` (all three paper
+    /// problems depend on the path only through `W_t`).
+    fn analytic_solution(&self, t: f64, x0: f64, th: &[f64], w: f64) -> f64;
+
+    /// Pathwise gradients of the closed-form solution holding the Brownian
+    /// path fixed: `(∂X_t/∂x0, ∂X_t/∂θ_j …)` — `out` has length
+    /// `1 + nparams`, x0-gradient first.
+    fn analytic_gradients(&self, t: f64, x0: f64, th: &[f64], w: f64, out: &mut [f64]);
+
+    /// Human-readable name for harness output.
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,264 @@
+//! Adaptive time-stepping with step-doubling error estimation and a PI
+//! step-size controller (§3.4; Burrage–Burrage 2004, Ilie–Jackson–Enright
+//! 2015).
+//!
+//! Error estimate: advance one full step of size `h` and two half steps of
+//! size `h/2` *driven by the same Brownian path* (the half-step midpoint
+//! value comes from the noise source's bridge interpolation, so accepted
+//! and rejected attempts all see one consistent sample path). The scaled
+//! difference between the two candidates estimates the local error; the PI
+//! controller turns it into the next step size.
+//!
+//! This is exactly the machinery that makes the virtual Brownian tree
+//! valuable: adaptive solves query the path at unpredictable times, which a
+//! stored-increment implementation cannot answer without bridging anyway.
+
+use super::methods::{Method, Stepper};
+use super::grid::SolveStats;
+use crate::brownian::BrownianMotion;
+use crate::sde::SdeFunc;
+
+/// Adaptive-solve configuration (Fig 5b varies `atol` with `rtol = 0`).
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveConfig {
+    pub atol: f64,
+    pub rtol: f64,
+    /// Initial step size (signed direction is inferred from the horizon).
+    pub h0: f64,
+    /// Smallest |h| allowed before the solve aborts with an error flag.
+    pub h_min: f64,
+    /// Largest |h| allowed.
+    pub h_max: f64,
+    /// Safety factor in the controller (0.9 classic).
+    pub safety: f64,
+    /// PI proportional exponent (on the current error).
+    pub k_i: f64,
+    /// PI integral exponent (on the previous error).
+    pub k_p: f64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            atol: 1e-3,
+            rtol: 0.0,
+            h0: 1e-2,
+            h_min: 1e-10,
+            h_max: 0.5,
+            safety: 0.9,
+            // Exponents scaled for local strong error ~ h^{1.5}
+            // (order-1.0 schemes): classic PI pair (0.3/0.4)/1.5.
+            k_i: 0.7 / 1.5,
+            k_p: 0.4 / 1.5,
+        }
+    }
+}
+
+/// Result of an adaptive solve.
+#[derive(Clone, Debug)]
+pub struct AdaptiveResult {
+    pub y: Vec<f64>,
+    pub stats: SolveStats,
+    /// True if the controller hit `h_min` (accuracy not certified).
+    pub hit_h_min: bool,
+}
+
+/// Integrate from `t0` to `t1` (either direction) adaptively.
+pub fn integrate_adaptive<S: SdeFunc, B: BrownianMotion>(
+    sys: &mut S,
+    method: Method,
+    y0: &[f64],
+    t0: f64,
+    t1: f64,
+    bm: &mut B,
+    cfg: &AdaptiveConfig,
+) -> AdaptiveResult {
+    let d = sys.dim();
+    assert_eq!(y0.len(), d);
+    assert!(t0 != t1, "integrate_adaptive: empty horizon");
+    let dir = (t1 - t0).signum();
+
+    let mut stepper = Stepper::new(method, d);
+    let mut y = y0.to_vec();
+    let mut y_full = vec![0.0; d];
+    let mut y_half = vec![0.0; d];
+    let mut y_half2 = vec![0.0; d];
+    let mut w_t = vec![0.0; d];
+    let mut w_mid = vec![0.0; d];
+    let mut w_next = vec![0.0; d];
+    let mut dw_full = vec![0.0; d];
+    let mut dw_a = vec![0.0; d];
+    let mut dw_b = vec![0.0; d];
+
+    let nf0 = sys.nfe_drift();
+    let ng0 = sys.nfe_diffusion();
+    let mut steps = 0u64;
+    let mut rejected = 0u64;
+    let mut hit_h_min = false;
+
+    let mut t = t0;
+    let mut h = cfg.h0.abs().clamp(cfg.h_min, cfg.h_max) * dir;
+    let mut err_prev: f64 = 1.0;
+
+    bm.sample_into(t, &mut w_t);
+    while (t1 - t) * dir > 0.0 {
+        // Clip the final step to land exactly on t1.
+        if (t + h - t1) * dir > 0.0 {
+            h = t1 - t;
+        }
+        let t_mid = t + 0.5 * h;
+        let t_next = t + h;
+        bm.sample_into(t_mid, &mut w_mid);
+        bm.sample_into(t_next, &mut w_next);
+        for i in 0..d {
+            dw_full[i] = w_next[i] - w_t[i];
+            dw_a[i] = w_mid[i] - w_t[i];
+            dw_b[i] = w_next[i] - w_mid[i];
+        }
+        // One full step vs two half steps on the same noise.
+        stepper.step(sys, t, h, &y, &dw_full, &mut y_full);
+        stepper.step(sys, t, 0.5 * h, &y, &dw_a, &mut y_half);
+        stepper.step(sys, t_mid, 0.5 * h, &y_half, &dw_b, &mut y_half2);
+
+        // Scaled RMS error.
+        let mut acc = 0.0;
+        for i in 0..d {
+            let scale = cfg.atol + cfg.rtol * y[i].abs().max(y_half2[i].abs());
+            let e = (y_full[i] - y_half2[i]) / scale;
+            acc += e * e;
+        }
+        let err = (acc / d as f64).sqrt().max(1e-12);
+
+        if err <= 1.0 {
+            // Accept the more accurate two-half-step candidate.
+            t = t_next;
+            y.copy_from_slice(&y_half2);
+            w_t.copy_from_slice(&w_next);
+            steps += 1;
+            err_prev = err;
+        } else {
+            rejected += 1;
+        }
+
+        // PI update, clamped.
+        let mut factor = cfg.safety * err.powf(-cfg.k_i) * err_prev.powf(cfg.k_p);
+        factor = factor.clamp(0.2, 5.0);
+        let mut h_new = (h.abs() * factor).clamp(cfg.h_min, cfg.h_max);
+        if h_new <= cfg.h_min && err > 1.0 {
+            // Cannot refine further: accept under protest and move on.
+            hit_h_min = true;
+            t = t_next;
+            y.copy_from_slice(&y_half2);
+            w_t.copy_from_slice(&w_next);
+            steps += 1;
+            h_new = cfg.h_min;
+        }
+        h = h_new * dir;
+    }
+
+    AdaptiveResult {
+        y,
+        stats: SolveStats {
+            steps,
+            rejected,
+            nfe_drift: sys.nfe_drift() - nf0,
+            nfe_diffusion: sys.nfe_diffusion() - ng0,
+        },
+        hit_h_min,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::brownian::BrownianPath;
+    use crate::prng::PrngKey;
+    use crate::sde::problems::Example1;
+    use crate::sde::{ForwardFunc, ReplicatedSde, ScalarSde};
+
+    fn solve_gbm(atol: f64, seed: u64) -> (f64, f64, SolveStats) {
+        let sde = ReplicatedSde::new(Example1, 1);
+        let theta = [0.5, 0.6];
+        let mut bm = BrownianPath::new(PrngKey::from_seed(seed), 1, 0.0, 1.0);
+        let mut sys = ForwardFunc::new(&sde, &theta);
+        let cfg = AdaptiveConfig { atol, rtol: 0.0, ..Default::default() };
+        let res = integrate_adaptive(&mut sys, Method::MilsteinIto, &[1.0], 0.0, 1.0, &mut bm, &cfg);
+        let w = bm.sample(1.0)[0];
+        let exact = sde.problem().analytic_solution(1.0, 1.0, &theta, w);
+        (res.y[0], exact, res.stats)
+    }
+
+    #[test]
+    fn tighter_tolerance_reduces_error_and_increases_nfe() {
+        let n = 24;
+        let mut err_loose = 0.0;
+        let mut err_tight = 0.0;
+        let mut nfe_loose = 0u64;
+        let mut nfe_tight = 0u64;
+        for s in 0..n {
+            let (y, exact, st) = solve_gbm(1e-2, 100 + s);
+            err_loose += (y - exact).abs();
+            nfe_loose += st.nfe();
+            let (y, exact, st) = solve_gbm(1e-5, 100 + s);
+            err_tight += (y - exact).abs();
+            nfe_tight += st.nfe();
+        }
+        assert!(
+            err_tight < err_loose,
+            "tight {err_tight} should beat loose {err_loose}"
+        );
+        assert!(nfe_tight > nfe_loose, "tight tol must cost more NFE");
+        let mean_tight = err_tight / n as f64;
+        assert!(mean_tight < 2e-3, "tight error too large: {mean_tight}");
+    }
+
+    #[test]
+    fn final_time_is_hit_exactly() {
+        let (y, exact, _) = solve_gbm(1e-4, 7);
+        // If the final step overshot, the comparison against the exact
+        // solution at t=1 would be systematically off.
+        assert!((y - exact).abs() < 5e-2, "y={y} exact={exact}");
+    }
+
+    #[test]
+    fn rejections_happen_under_tight_tolerances() {
+        let mut any_rejection = false;
+        for s in 0..10 {
+            let (_, _, st) = solve_gbm(1e-6, 500 + s);
+            if st.rejected > 0 {
+                any_rejection = true;
+            }
+            assert!(st.steps > 10, "tight tol should need many steps");
+        }
+        assert!(any_rejection, "controller never rejected a step across seeds");
+    }
+
+    #[test]
+    fn backward_adaptive_runs() {
+        // Backward adaptive integration (t0=1 → t1=0) of an additive-noise
+        // system retraces approximately the forward path end state.
+        use crate::sde::ou::OrnsteinUhlenbeck;
+        use crate::solvers::grid::{integrate_grid, uniform_grid};
+        let ou = OrnsteinUhlenbeck::new(2);
+        let theta = [1.0, 0.5, 0.4];
+        let key = PrngKey::from_seed(11);
+        let mut bm = BrownianPath::new(key, 2, 0.0, 1.0);
+        let mut sys = ForwardFunc::new(&ou, &theta);
+        let grid = uniform_grid(0.0, 1.0, 2048);
+        let y0 = [0.2, -0.1];
+        let mut y1 = [0.0; 2];
+        integrate_grid(&mut sys, Method::Heun, &y0, &grid, &mut bm, &mut y1);
+
+        let mut sys_b = ForwardFunc::new(&ou, &theta);
+        let cfg = AdaptiveConfig { atol: 1e-6, rtol: 0.0, h0: 1e-3, ..Default::default() };
+        let res = integrate_adaptive(&mut sys_b, Method::Heun, &y1, 1.0, 0.0, &mut bm, &cfg);
+        for i in 0..2 {
+            assert!(
+                (res.y[i] - y0[i]).abs() < 1e-2,
+                "backward reconstruction dim {i}: {} vs {}",
+                res.y[i],
+                y0[i]
+            );
+        }
+    }
+}

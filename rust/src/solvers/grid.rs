@@ -1,0 +1,301 @@
+//! Fixed-grid integration driver.
+//!
+//! Works on any monotone time grid — ascending (forward solve) or
+//! descending (backward solve). Brownian increments are queried from the
+//! noise source as signed differences `W(t_{k+1}) − W(t_k)`, so the same
+//! sample path drives both passes.
+
+use super::methods::{Method, Stepper};
+use crate::brownian::BrownianMotion;
+use crate::sde::SdeFunc;
+
+/// Counters reported by a solve (Fig 5b plots gradient error vs NFE).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SolveStats {
+    /// Steps taken (accepted steps for adaptive solves).
+    pub steps: u64,
+    /// Rejected step attempts (adaptive only).
+    pub rejected: u64,
+    /// Drift evaluations.
+    pub nfe_drift: u64,
+    /// Diffusion evaluations.
+    pub nfe_diffusion: u64,
+}
+
+impl SolveStats {
+    /// Total function evaluations (the paper's NFE metric counts drift and
+    /// diffusion evaluations together; Table 1's unit is "cost of
+    /// evaluating the drift and diffusion functions once each").
+    pub fn nfe(&self) -> u64 {
+        self.nfe_drift + self.nfe_diffusion
+    }
+}
+
+/// Build a uniform grid of `n_steps + 1` points from `t0` to `t1`
+/// (descending if `t1 < t0`).
+pub fn uniform_grid(t0: f64, t1: f64, n_steps: usize) -> Vec<f64> {
+    assert!(n_steps > 0, "uniform_grid: need at least one step");
+    let h = (t1 - t0) / n_steps as f64;
+    let mut ts: Vec<f64> = (0..=n_steps).map(|k| t0 + h * k as f64).collect();
+    // Pin the endpoint exactly (avoids off-by-ulp Brownian queries).
+    ts[n_steps] = t1;
+    ts
+}
+
+/// Integrate `sys` along `times` (monotone, either direction), starting
+/// from `y0` at `times[0]`. Writes the terminal state into `y_out` and
+/// returns solve statistics.
+pub fn integrate_grid<S: SdeFunc, B: BrownianMotion>(
+    sys: &mut S,
+    method: Method,
+    y0: &[f64],
+    times: &[f64],
+    bm: &mut B,
+    y_out: &mut [f64],
+) -> SolveStats {
+    let d = sys.dim();
+    assert_eq!(y0.len(), d, "integrate_grid: y0 length mismatch");
+    assert_eq!(y_out.len(), d, "integrate_grid: y_out length mismatch");
+    assert!(times.len() >= 2, "integrate_grid: need at least two time points");
+    debug_assert_eq!(bm.dim(), d, "integrate_grid: Brownian dim mismatch");
+
+    let mut stepper = Stepper::new(method, d);
+    let mut y = y0.to_vec();
+    let mut ynext = vec![0.0; d];
+    let mut dw = vec![0.0; d];
+    let mut wa = vec![0.0; d];
+    let mut wb = vec![0.0; d];
+
+    let f0 = sys.nfe_drift();
+    let g0 = sys.nfe_diffusion();
+    let mut steps = 0u64;
+
+    bm.sample_into(times[0], &mut wa);
+    for k in 0..times.len() - 1 {
+        let (t, tn) = (times[k], times[k + 1]);
+        let h = tn - t;
+        bm.sample_into(tn, &mut wb);
+        for i in 0..d {
+            dw[i] = wb[i] - wa[i];
+        }
+        stepper.step(sys, t, h, &y, &dw, &mut ynext);
+        std::mem::swap(&mut y, &mut ynext);
+        std::mem::swap(&mut wa, &mut wb);
+        steps += 1;
+    }
+    y_out.copy_from_slice(&y);
+    SolveStats {
+        steps,
+        rejected: 0,
+        nfe_drift: sys.nfe_drift() - f0,
+        nfe_diffusion: sys.nfe_diffusion() - g0,
+    }
+}
+
+/// Like [`integrate_grid`] but records the state at every grid point.
+/// Returns the trajectory as a flat row-major `(times.len(), d)` matrix.
+pub fn integrate_grid_saving<S: SdeFunc, B: BrownianMotion>(
+    sys: &mut S,
+    method: Method,
+    y0: &[f64],
+    times: &[f64],
+    bm: &mut B,
+) -> (Vec<f64>, SolveStats) {
+    let d = sys.dim();
+    let mut traj = vec![0.0; times.len() * d];
+    traj[..d].copy_from_slice(y0);
+
+    let mut stepper = Stepper::new(method, d);
+    let mut y = y0.to_vec();
+    let mut ynext = vec![0.0; d];
+    let mut dw = vec![0.0; d];
+    let mut wa = vec![0.0; d];
+    let mut wb = vec![0.0; d];
+
+    let f0 = sys.nfe_drift();
+    let g0 = sys.nfe_diffusion();
+
+    bm.sample_into(times[0], &mut wa);
+    for k in 0..times.len() - 1 {
+        let (t, tn) = (times[k], times[k + 1]);
+        bm.sample_into(tn, &mut wb);
+        for i in 0..d {
+            dw[i] = wb[i] - wa[i];
+        }
+        stepper.step(sys, t, tn - t, &y, &dw, &mut ynext);
+        std::mem::swap(&mut y, &mut ynext);
+        std::mem::swap(&mut wa, &mut wb);
+        traj[(k + 1) * d..(k + 2) * d].copy_from_slice(&y);
+    }
+    let stats = SolveStats {
+        steps: (times.len() - 1) as u64,
+        rejected: 0,
+        nfe_drift: sys.nfe_drift() - f0,
+        nfe_diffusion: sys.nfe_diffusion() - g0,
+    };
+    (traj, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::brownian::{BrownianPath, VirtualBrownianTree};
+    use crate::prng::PrngKey;
+    use crate::sde::problems::Example1;
+    use crate::sde::{ForwardFunc, ReplicatedSde, ScalarSde};
+
+    #[test]
+    fn uniform_grid_endpoints() {
+        let g = uniform_grid(0.0, 1.0, 10);
+        assert_eq!(g.len(), 11);
+        assert_eq!(g[0], 0.0);
+        assert_eq!(g[10], 1.0);
+        let gb = uniform_grid(1.0, 0.0, 4);
+        assert!(gb.windows(2).all(|w| w[1] < w[0]), "descending grid");
+    }
+
+    /// Strong convergence of Euler–Maruyama on GBM: error vs the closed
+    /// form at matched Brownian paths should shrink ~h^0.5.
+    #[test]
+    fn euler_strong_convergence_on_gbm() {
+        let sde = ReplicatedSde::new(Example1, 1);
+        let theta = [0.5, 0.8];
+        let x0 = [1.0];
+        let t1 = 1.0;
+        let n_paths = 200;
+
+        let mut errs = Vec::new();
+        for &n_steps in &[8usize, 64, 512] {
+            let mut total = 0.0;
+            for path in 0..n_paths {
+                let key = PrngKey::from_seed(1000 + path);
+                let mut bm = BrownianPath::new(key, 1, 0.0, t1);
+                let mut sys = ForwardFunc::new(&sde, &theta);
+                let grid = uniform_grid(0.0, t1, n_steps);
+                let mut y = [0.0];
+                integrate_grid(&mut sys, Method::EulerMaruyama, &x0, &grid, &mut bm, &mut y);
+                let w_t = bm.sample(t1)[0];
+                let exact = sde.problem().analytic_solution(t1, x0[0], &theta, w_t);
+                total += (y[0] - exact).abs();
+            }
+            errs.push(total / n_paths as f64);
+        }
+        // Each 8x refinement should shrink the error by ~sqrt(8) ≈ 2.8;
+        // require at least 2x to be robust to noise.
+        assert!(errs[0] / errs[1] > 2.0, "errors: {errs:?}");
+        assert!(errs[1] / errs[2] > 2.0, "errors: {errs:?}");
+    }
+
+    /// Milstein (Itô) achieves strong order 1.0 on GBM: 8x refinement
+    /// should shrink error ~8x; require ≥4x.
+    #[test]
+    fn milstein_strong_convergence_on_gbm() {
+        let sde = ReplicatedSde::new(Example1, 1);
+        let theta = [0.5, 0.8];
+        let x0 = [1.0];
+        let t1 = 1.0;
+        let n_paths = 200;
+
+        let mut errs = Vec::new();
+        for &n_steps in &[8usize, 64, 512] {
+            let mut total = 0.0;
+            for path in 0..n_paths {
+                let key = PrngKey::from_seed(5000 + path);
+                let mut bm = BrownianPath::new(key, 1, 0.0, t1);
+                let mut sys = ForwardFunc::new(&sde, &theta);
+                let grid = uniform_grid(0.0, t1, n_steps);
+                let mut y = [0.0];
+                integrate_grid(&mut sys, Method::MilsteinIto, &x0, &grid, &mut bm, &mut y);
+                let w_t = bm.sample(t1)[0];
+                let exact = sde.problem().analytic_solution(t1, x0[0], &theta, w_t);
+                total += (y[0] - exact).abs();
+            }
+            errs.push(total / n_paths as f64);
+        }
+        assert!(errs[0] / errs[1] > 4.0, "errors: {errs:?}");
+        assert!(errs[1] / errs[2] > 4.0, "errors: {errs:?}");
+    }
+
+    /// Heun must converge to the *Stratonovich* solution: integrating the
+    /// Itô-GBM coefficients with Heun converges to
+    /// x0·exp(αt + βW_t) instead (drift uncorrected).
+    #[test]
+    fn heun_targets_stratonovich_solution() {
+        let sde = ReplicatedSde::new(Example1, 1);
+        let theta = [0.5, 0.8];
+        let x0 = [1.0];
+        let t1 = 1.0;
+        let n_paths = 300;
+        let n_steps = 512;
+
+        let mut err_strat = 0.0;
+        let mut err_ito = 0.0;
+        for path in 0..n_paths {
+            let key = PrngKey::from_seed(9000 + path);
+            let mut bm = BrownianPath::new(key, 1, 0.0, t1);
+            let mut sys = ForwardFunc::new(&sde, &theta);
+            let grid = uniform_grid(0.0, t1, n_steps);
+            let mut y = [0.0];
+            integrate_grid(&mut sys, Method::Heun, &x0, &grid, &mut bm, &mut y);
+            let w_t = bm.sample(t1)[0];
+            let strat = x0[0] * (theta[0] * t1 + theta[1] * w_t).exp();
+            let ito = sde.problem().analytic_solution(t1, x0[0], &theta, w_t);
+            err_strat += (y[0] - strat).abs();
+            err_ito += (y[0] - ito).abs();
+        }
+        assert!(
+            err_strat < 0.1 * err_ito,
+            "Heun should match Stratonovich solution: strat_err={} ito_err={}",
+            err_strat / n_paths as f64,
+            err_ito / n_paths as f64
+        );
+    }
+
+    /// The virtual Brownian tree and the stored path must be interchangeable
+    /// noise sources (same trait, same law); a solve driven by the tree
+    /// converges to that tree's own closed-form endpoint.
+    #[test]
+    fn tree_driven_solve_matches_closed_form() {
+        let sde = ReplicatedSde::new(Example1, 2);
+        let theta = [0.5, 0.3, 0.7, 0.4];
+        let x0 = [1.0, 2.0];
+        let t1 = 1.0;
+        let key = PrngKey::from_seed(31);
+        let mut bm = VirtualBrownianTree::new(key, 2, 0.0, t1, 1e-10);
+        let mut sys = ForwardFunc::new(&sde, &theta);
+        let grid = uniform_grid(0.0, t1, 4096);
+        let mut y = [0.0; 2];
+        integrate_grid(&mut sys, Method::MilsteinIto, &x0, &grid, &mut bm, &mut y);
+        let w = bm.sample(t1);
+        for i in 0..2 {
+            let exact =
+                sde.problem().analytic_solution(t1, x0[i], &theta[2 * i..2 * i + 2], w[i]);
+            assert!(
+                (y[i] - exact).abs() < 0.02 * exact.abs().max(1.0),
+                "dim {i}: numeric {} vs exact {exact}",
+                y[i]
+            );
+        }
+    }
+
+    #[test]
+    fn saving_records_full_trajectory() {
+        let sde = ReplicatedSde::new(Example1, 1);
+        let theta = [0.5, 0.8];
+        let key = PrngKey::from_seed(7);
+        let mut bm = BrownianPath::new(key, 1, 0.0, 1.0);
+        let mut sys = ForwardFunc::new(&sde, &theta);
+        let grid = uniform_grid(0.0, 1.0, 16);
+        let (traj, stats) = integrate_grid_saving(&mut sys, Method::EulerMaruyama, &[1.0], &grid, &mut bm);
+        assert_eq!(traj.len(), 17);
+        assert_eq!(traj[0], 1.0);
+        assert_eq!(stats.steps, 16);
+        assert_eq!(stats.nfe_drift, 16);
+        // Terminal state must match the non-saving driver on the same path.
+        let mut bm2 = BrownianPath::new(key, 1, 0.0, 1.0);
+        let mut sys2 = ForwardFunc::new(&sde, &theta);
+        let mut y = [0.0];
+        integrate_grid(&mut sys2, Method::EulerMaruyama, &[1.0], &grid, &mut bm2, &mut y);
+        assert_eq!(y[0], traj[16]);
+    }
+}

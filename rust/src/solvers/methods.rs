@@ -1,0 +1,317 @@
+//! Single-step integration schemes.
+//!
+//! Every step is *signed*: `h = t_next − t` may be negative (backward
+//! integration) and `dw = W(t_next) − W(t)` is the matching signed Brownian
+//! increment. In Stratonovich form the backward dynamics are the forward
+//! dynamics with negated coefficients (Theorem 2.1b), which after the sign
+//! flip of `h` and `dw` reduces to *the same update formula* — so one
+//! stepper serves both passes. (For Itô/Euler–Maruyama the backward pass is
+//! deliberately available but *wrong* — that asymmetry is Figure 2.)
+
+use crate::sde::{Calculus, SdeFunc};
+
+/// Available stepping schemes.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Method {
+    /// Euler–Maruyama. Interprets the system as Itô. Strong order 0.5
+    /// (1.0 for additive noise).
+    EulerMaruyama,
+    /// Stratonovich Heun (trapezoid predictor-corrector). Strong order 1.0
+    /// under commutative noise — which App. 9.4 proves holds for the
+    /// adjoint system of any diagonal-noise SDE.
+    Heun,
+    /// Milstein, Itô form: adds `½ g g' (ΔW² − h)`. Strong order 1.0,
+    /// diagonal noise. Requires `diffusion_dy_diag`.
+    MilsteinIto,
+    /// Milstein, Stratonovich form: adds `½ g g' ΔW²`. Strong order 1.0,
+    /// diagonal noise. Requires `diffusion_dy_diag`.
+    MilsteinStrat,
+}
+
+impl Method {
+    /// Calculus in which this scheme interprets (drift, diffusion).
+    pub fn calculus(&self) -> Calculus {
+        match self {
+            Method::EulerMaruyama | Method::MilsteinIto => Calculus::Ito,
+            Method::Heun | Method::MilsteinStrat => Calculus::Stratonovich,
+        }
+    }
+
+    /// Strong order under diagonal (commutative) noise.
+    pub fn strong_order(&self) -> f64 {
+        match self {
+            Method::EulerMaruyama => 0.5,
+            _ => 1.0,
+        }
+    }
+
+    /// Parse from CLI/bench strings.
+    pub fn parse(s: &str) -> Option<Method> {
+        match s {
+            "euler" | "euler_maruyama" | "em" => Some(Method::EulerMaruyama),
+            "heun" | "stratonovich_heun" => Some(Method::Heun),
+            "milstein" | "milstein_ito" => Some(Method::MilsteinIto),
+            "milstein_strat" => Some(Method::MilsteinStrat),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::EulerMaruyama => "euler_maruyama",
+            Method::Heun => "heun",
+            Method::MilsteinIto => "milstein_ito",
+            Method::MilsteinStrat => "milstein_strat",
+        }
+    }
+}
+
+/// Reusable scratch buffers for allocation-free stepping (the solver hot
+/// loop is the L3 hot path; see DESIGN.md §Perf).
+pub struct Stepper {
+    method: Method,
+    f0: Vec<f64>,
+    g0: Vec<f64>,
+    f1: Vec<f64>,
+    g1: Vec<f64>,
+    ytmp: Vec<f64>,
+    gp: Vec<f64>,
+}
+
+impl Stepper {
+    pub fn new(method: Method, dim: usize) -> Self {
+        Stepper {
+            method,
+            f0: vec![0.0; dim],
+            g0: vec![0.0; dim],
+            f1: vec![0.0; dim],
+            g1: vec![0.0; dim],
+            ytmp: vec![0.0; dim],
+            gp: vec![0.0; dim],
+        }
+    }
+
+    pub fn method(&self) -> Method {
+        self.method
+    }
+
+    /// Resize scratch (e.g. when reused across systems).
+    pub fn resize(&mut self, dim: usize) {
+        for buf in [&mut self.f0, &mut self.g0, &mut self.f1, &mut self.g1, &mut self.ytmp, &mut self.gp]
+        {
+            buf.resize(dim, 0.0);
+        }
+    }
+
+    /// Advance `y` at time `t` by a signed step `h` with signed Brownian
+    /// increment `dw` (`dw.len() == y.len()`, diagonal noise). Writes the
+    /// new state into `out` (may not alias `y`).
+    pub fn step<S: SdeFunc>(
+        &mut self,
+        sys: &mut S,
+        t: f64,
+        h: f64,
+        y: &[f64],
+        dw: &[f64],
+        out: &mut [f64],
+    ) {
+        let d = y.len();
+        debug_assert_eq!(dw.len(), d);
+        debug_assert_eq!(out.len(), d);
+        debug_assert!(self.f0.len() >= d, "Stepper scratch too small; call resize()");
+        match self.method {
+            Method::EulerMaruyama => {
+                sys.drift(t, y, &mut self.f0[..d]);
+                sys.diffusion(t, y, &mut self.g0[..d]);
+                for i in 0..d {
+                    out[i] = y[i] + self.f0[i] * h + self.g0[i] * dw[i];
+                }
+            }
+            Method::Heun => {
+                sys.drift(t, y, &mut self.f0[..d]);
+                sys.diffusion(t, y, &mut self.g0[..d]);
+                for i in 0..d {
+                    self.ytmp[i] = y[i] + self.f0[i] * h + self.g0[i] * dw[i];
+                }
+                let t1 = t + h;
+                sys.drift(t1, &self.ytmp[..d], &mut self.f1[..d]);
+                sys.diffusion(t1, &self.ytmp[..d], &mut self.g1[..d]);
+                for i in 0..d {
+                    out[i] = y[i]
+                        + 0.5 * (self.f0[i] + self.f1[i]) * h
+                        + 0.5 * (self.g0[i] + self.g1[i]) * dw[i];
+                }
+            }
+            Method::MilsteinIto | Method::MilsteinStrat => {
+                assert!(
+                    sys.has_diffusion_jacobian(),
+                    "Milstein requires diffusion_dy_diag; use Heun instead"
+                );
+                sys.drift(t, y, &mut self.f0[..d]);
+                sys.diffusion(t, y, &mut self.g0[..d]);
+                sys.diffusion_dy_diag(t, y, &mut self.gp[..d]);
+                let ito = self.method == Method::MilsteinIto;
+                for i in 0..d {
+                    let corr = if ito { dw[i] * dw[i] - h } else { dw[i] * dw[i] };
+                    out[i] = y[i]
+                        + self.f0[i] * h
+                        + self.g0[i] * dw[i]
+                        + 0.5 * self.g0[i] * self.gp[i] * corr;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sde::{Calculus, SdeFunc};
+
+    /// dY = a·Y dt + b·Y ∘ dW (declared Stratonovich for Heun tests; the
+    /// Milstein-Itô test reinterprets the same coefficients as Itô).
+    struct LinearSys {
+        a: f64,
+        b: f64,
+        nfe_f: u64,
+        nfe_g: u64,
+    }
+
+    impl SdeFunc for LinearSys {
+        fn dim(&self) -> usize {
+            1
+        }
+        fn calculus(&self) -> Calculus {
+            Calculus::Stratonovich
+        }
+        fn drift(&mut self, _t: f64, y: &[f64], out: &mut [f64]) {
+            self.nfe_f += 1;
+            out[0] = self.a * y[0];
+        }
+        fn diffusion(&mut self, _t: f64, y: &[f64], out: &mut [f64]) {
+            self.nfe_g += 1;
+            out[0] = self.b * y[0];
+        }
+        fn has_diffusion_jacobian(&self) -> bool {
+            true
+        }
+        fn diffusion_dy_diag(&mut self, _t: f64, _y: &[f64], out: &mut [f64]) {
+            out[0] = self.b;
+        }
+        fn nfe_drift(&self) -> u64 {
+            self.nfe_f
+        }
+        fn nfe_diffusion(&self) -> u64 {
+            self.nfe_g
+        }
+    }
+
+    fn sys() -> LinearSys {
+        LinearSys { a: 0.5, b: 0.3, nfe_f: 0, nfe_g: 0 }
+    }
+
+    #[test]
+    fn euler_step_formula() {
+        let mut s = sys();
+        let mut st = Stepper::new(Method::EulerMaruyama, 1);
+        let mut out = [0.0];
+        st.step(&mut s, 0.0, 0.1, &[2.0], &[0.05], &mut out);
+        // y + a*y*h + b*y*dw = 2 + 0.5*2*0.1 + 0.3*2*0.05
+        assert!((out[0] - (2.0 + 0.1 + 0.03)).abs() < 1e-14);
+    }
+
+    #[test]
+    fn milstein_ito_step_formula() {
+        let mut s = sys();
+        let mut st = Stepper::new(Method::MilsteinIto, 1);
+        let mut out = [0.0];
+        let (h, dw) = (0.1, 0.05);
+        st.step(&mut s, 0.0, h, &[2.0], &[dw], &mut out);
+        let expect = 2.0 + 0.5 * 2.0 * h + 0.3 * 2.0 * dw + 0.5 * (0.3 * 2.0) * 0.3 * (dw * dw - h);
+        assert!((out[0] - expect).abs() < 1e-14);
+    }
+
+    #[test]
+    fn milstein_strat_step_formula() {
+        let mut s = sys();
+        let mut st = Stepper::new(Method::MilsteinStrat, 1);
+        let mut out = [0.0];
+        let (h, dw) = (0.1, 0.05);
+        st.step(&mut s, 0.0, h, &[2.0], &[dw], &mut out);
+        let expect = 2.0 + 0.5 * 2.0 * h + 0.3 * 2.0 * dw + 0.5 * (0.3 * 2.0) * 0.3 * (dw * dw);
+        assert!((out[0] - expect).abs() < 1e-14);
+    }
+
+    #[test]
+    fn heun_matches_strat_milstein_to_second_order() {
+        // For 1-d linear diffusion, Heun's corrector reproduces the
+        // Stratonovich-Milstein ΔW² term up to O(ΔW³): the difference over
+        // a single small step must be o(ΔW²).
+        let (h, dw) = (1e-4, 1e-3);
+        let mut s1 = sys();
+        let mut s2 = sys();
+        let mut heun = Stepper::new(Method::Heun, 1);
+        let mut mil = Stepper::new(Method::MilsteinStrat, 1);
+        let mut a = [0.0];
+        let mut b = [0.0];
+        heun.step(&mut s1, 0.0, h, &[1.0], &[dw], &mut a);
+        mil.step(&mut s2, 0.0, h, &[1.0], &[dw], &mut b);
+        // Residual terms are O(h·ΔW) ≈ 1.6e-8 here; require < 5e-8.
+        assert!((a[0] - b[0]).abs() < 5e-8, "diff {}", (a[0] - b[0]).abs());
+    }
+
+    #[test]
+    fn heun_backward_step_inverts_forward_step_exactly_for_additive_noise() {
+        // Additive noise: dY = a·Y dt + c dW. Heun forward then backward
+        // with the same increments must return ~exactly (trapezoid is
+        // symmetric in (t, t+h) up to the nonlinearity of the drift).
+        struct Additive;
+        impl SdeFunc for Additive {
+            fn dim(&self) -> usize {
+                1
+            }
+            fn calculus(&self) -> Calculus {
+                Calculus::Stratonovich
+            }
+            fn drift(&mut self, _t: f64, y: &[f64], out: &mut [f64]) {
+                out[0] = 0.5 * y[0];
+            }
+            fn diffusion(&mut self, _t: f64, _y: &[f64], out: &mut [f64]) {
+                out[0] = 0.7;
+            }
+            fn nfe_drift(&self) -> u64 {
+                0
+            }
+            fn nfe_diffusion(&self) -> u64 {
+                0
+            }
+        }
+        let mut s = Additive;
+        let mut st = Stepper::new(Method::Heun, 1);
+        let y0 = [1.3];
+        let (h, dw) = (1e-3, 0.02);
+        let mut fwd = [0.0];
+        st.step(&mut s, 0.0, h, &y0, &[dw], &mut fwd);
+        let mut back = [0.0];
+        st.step(&mut s, h, -h, &fwd, &[-dw], &mut back);
+        assert!((back[0] - y0[0]).abs() < 1e-9, "reconstruction error {}", (back[0] - y0[0]).abs());
+    }
+
+    #[test]
+    fn nfe_counts() {
+        let mut s = sys();
+        let mut st = Stepper::new(Method::Heun, 1);
+        let mut out = [0.0];
+        st.step(&mut s, 0.0, 0.1, &[1.0], &[0.0], &mut out);
+        assert_eq!(s.nfe_drift(), 2); // predictor + corrector
+        assert_eq!(s.nfe_diffusion(), 2);
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in [Method::EulerMaruyama, Method::Heun, Method::MilsteinIto, Method::MilsteinStrat] {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        assert_eq!(Method::parse("nope"), None);
+    }
+}

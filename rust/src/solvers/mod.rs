@@ -1,0 +1,24 @@
+//! Numerical SDE solvers (§3.2–§3.4).
+//!
+//! * [`methods`] — single-step schemes: Euler–Maruyama (Itô), Heun
+//!   (Stratonovich trapezoid; strong order 1.0 under commutative noise),
+//!   and Milstein in both calculi (diagonal noise).
+//! * [`grid`] — fixed-grid driver. Steps are *signed*: the same machinery
+//!   integrates forward (ascending grid) and backward (descending grid),
+//!   which is exactly the symmetry Theorem 2.1(b) buys us in Stratonovich
+//!   form (Fig 2).
+//! * [`adaptive`] — adaptive time-stepping with step-doubling error
+//!   estimation and a PI controller (Burrage–Burrage/Ilie et al., §3.4),
+//!   made possible by Brownian sources that answer bridge-consistent
+//!   queries at arbitrary times.
+//!
+//! All solvers consume a [`crate::sde::SdeFunc`] (flat diagonal-noise
+//! system) and a [`crate::brownian::BrownianMotion`].
+
+pub mod adaptive;
+pub mod grid;
+pub mod methods;
+
+pub use adaptive::{AdaptiveConfig, AdaptiveResult, integrate_adaptive};
+pub use grid::{integrate_grid, integrate_grid_saving, uniform_grid, SolveStats};
+pub use methods::{Method, Stepper};

@@ -1,0 +1,132 @@
+//! Mini property-testing harness (proptest substitute — the vendored
+//! crate set has no proptest; DESIGN.md §3).
+//!
+//! [`forall`] runs a property over `n` randomly generated cases from a
+//! seeded [`Gen`]; on failure it reports the case index and seed so the
+//! exact case is reproducible, and re-runs the property on progressively
+//! "smaller" regenerated cases (halved magnitude) to report a simpler
+//! counterexample when one exists.
+
+use crate::prng::PrngKey;
+
+/// Seeded random-case generator.
+#[derive(Clone, Copy, Debug)]
+pub struct Gen {
+    key: PrngKey,
+    ctr: u64,
+    /// Magnitude multiplier used by shrinking.
+    pub scale: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, case: u64) -> Self {
+        Gen { key: PrngKey::from_seed(seed).fold_in(case), ctr: 0, scale: 1.0 }
+    }
+
+    fn next_u(&mut self) -> f64 {
+        let v = self.key.uniform(self.ctr);
+        self.ctr += 1;
+        v
+    }
+
+    /// Uniform f64 in [lo, hi), scaled toward the midpoint by `scale`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let mid = 0.5 * (lo + hi);
+        let raw = lo + self.next_u() * (hi - lo);
+        mid + (raw - mid) * self.scale
+    }
+
+    /// Standard normal draw (scaled by `scale`).
+    pub fn normal(&mut self) -> f64 {
+        let v = self.key.normal(self.ctr);
+        self.ctr += 1;
+        v * self.scale
+    }
+
+    /// Vector of normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// usize in [lo, hi).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next_u() * (hi - lo) as f64) as usize
+    }
+}
+
+/// Run `prop` over `n_cases` generated cases. Panics with a reproducible
+/// report on the first failure (after attempting shrink).
+pub fn forall<P>(name: &str, seed: u64, n_cases: u64, mut prop: P)
+where
+    P: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..n_cases {
+        let mut g = Gen::new(seed, case);
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: re-run with smaller magnitudes; keep the smallest
+            // failing scale's message.
+            let mut final_msg = msg;
+            let mut final_scale = 1.0;
+            for k in 1..=4 {
+                let scale = 0.5f64.powi(k);
+                let mut gs = Gen::new(seed, case);
+                gs.scale = scale;
+                match prop(&mut gs) {
+                    Err(m) => {
+                        final_msg = m;
+                        final_scale = scale;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed {seed}, case {case}, scale {final_scale}):\n{final_msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("abs-nonneg", 1, 50, |g| {
+            let x = g.normal();
+            if x.abs() >= 0.0 {
+                Ok(())
+            } else {
+                Err(format!("abs({x}) < 0"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn forall_reports_failures() {
+        forall("always-fails", 2, 10, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            Err(format!("x = {x}"))
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic() {
+        let mut a = Gen::new(3, 7);
+        let mut b = Gen::new(3, 7);
+        assert_eq!(a.normal_vec(5), b.normal_vec(5));
+        assert_eq!(a.usize_in(0, 100), b.usize_in(0, 100));
+    }
+
+    #[test]
+    fn ranges_respected() {
+        let mut g = Gen::new(4, 0);
+        for _ in 0..100 {
+            let v = g.f64_in(2.0, 5.0);
+            assert!((2.0..5.0).contains(&v));
+            let u = g.usize_in(3, 9);
+            assert!((3..9).contains(&u));
+        }
+    }
+}
