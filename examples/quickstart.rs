@@ -1,14 +1,15 @@
-//! Quickstart: gradients of an SDE solution three ways, then a small
-//! parameter-calibration loop driven by the stochastic adjoint.
+//! Quickstart: the problem → solve → sensitivity API in ~15 lines, then a
+//! small parameter-calibration loop driven by the stochastic adjoint.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Part 1 computes `∂(Σ X_T)/∂θ` for a 10-d replicated geometric Brownian
-//! motion with (a) the stochastic adjoint (this paper), (b) backprop
-//! through the solver, and (c) the analytic pathwise gradient, and shows
-//! they agree — while the adjoint keeps O(1) solver state.
+//! Part 1 defines one [`SdeProblem`] (10-d replicated geometric Brownian
+//! motion) and computes `∂(Σ X_T)/∂θ` with three interchangeable
+//! estimators — the stochastic adjoint (this paper), backprop through the
+//! solver, and the analytic pathwise gradient — showing they agree while
+//! the adjoint keeps O(1) solver state with a virtual Brownian tree.
 //!
 //! Part 2 calibrates GBM parameters by pathwise stochastic optimization:
 //! minimize `E[(X_T − X*_T)²]` against a ground-truth model on the *same*
@@ -16,7 +17,6 @@
 //! linear in the terminal loss-gradient, one ones-vector backward pass per
 //! path is rescaled by the residual.
 
-use sdegrad::adjoint::backprop_through_solver;
 use sdegrad::optim::Adam;
 use sdegrad::prelude::*;
 use sdegrad::sde::problems::{sample_experiment_setup, Example1};
@@ -28,53 +28,54 @@ fn main() {
 }
 
 fn part1_gradient_agreement() {
-    println!("── Part 1: three gradient estimators on 10-d GBM ──────────────");
+    println!("── Part 1: one problem, three gradient estimators (10-d GBM) ──");
     let dim = 10;
     let sde = ReplicatedSde::new(Example1, dim);
     let key = PrngKey::from_seed(0);
     let (theta, x0) = sample_experiment_setup(key, dim, 2);
-    let n_steps = 2000;
+    let step = StepControl::Steps(2000);
 
-    let adj = stochastic_adjoint_gradients(
-        &sde,
-        &theta,
-        &x0,
-        0.0,
-        1.0,
-        n_steps,
-        key,
-        &AdjointConfig::default(),
-    );
-    let bp =
-        backprop_through_solver(&sde, &theta, &x0, 0.0, 1.0, n_steps, key, Method::MilsteinIto);
+    // The whole API in one chain: problem → solve → sensitivity.
+    let prob = SdeProblem::new(&sde, &x0, (0.0, 1.0)).params(&theta).key(key);
+    let sol = prob.solve(&SolveOptions::fixed(Method::MilsteinIto, 2000));
+    let adj = prob
+        .sensitivity_sum(&SensAlg::StochasticAdjoint(AdjointConfig::default()), step)
+        .expect("adjoint-compatible problem");
+    let bp = prob
+        .sensitivity_sum(&SensAlg::Backprop { method: Method::MilsteinIto }, step)
+        .expect("backprop-compatible problem");
+    println!("forward solve: z_T[0] = {:.6} in {} steps", sol.final_state()[0], sol.stats.steps);
+
     let mut g_x0 = vec![0.0; dim];
     let mut g_th = vec![0.0; theta.len()];
     sde.analytic_loss_gradients(1.0, &x0, &theta, &adj.w_terminal, &mut g_x0, &mut g_th);
 
     println!("{:>6} {:>14} {:>14} {:>14}", "θ[j]", "adjoint", "backprop", "analytic");
     for j in (0..theta.len()).step_by(5) {
-        println!(
-            "{:>6} {:>14.6} {:>14.6} {:>14.6}",
-            j, adj.grad_theta[j], bp.grad_theta[j], g_th[j]
-        );
+        println!("{:>6} {:>14.6} {:>14.6} {:>14.6}", j, adj.dtheta[j], bp.dtheta[j], g_th[j]);
     }
     let max_rel = g_th
         .iter()
-        .zip(&adj.grad_theta)
+        .zip(&adj.dtheta)
         .map(|(a, b)| (a - b).abs() / a.abs().max(1e-3))
         .fold(0.0f64, f64::max);
     println!("max relative adjoint-vs-analytic error: {max_rel:.2e}");
     println!(
         "noise memory — adjoint stored-path: {} floats; backprop tape: {} floats",
-        adj.noise_memory, bp.noise_memory
+        adj.stats.noise_memory, bp.stats.noise_memory
     );
-    let tree_cfg = AdjointConfig {
-        noise: sdegrad::adjoint::NoiseMode::VirtualTree { tol: 1e-6 },
-        ..Default::default()
-    };
-    let tree =
-        stochastic_adjoint_gradients(&sde, &theta, &x0, 0.0, 1.0, n_steps, key, &tree_cfg);
-    println!("                — adjoint virtual-tree: {} floats (O(1))\n", tree.noise_memory);
+
+    // Same problem, O(1)-memory noise: one builder call, nothing else
+    // changes.
+    let tree = prob
+        .clone()
+        .noise(NoiseSpec::VirtualTree { tol: 1e-6 })
+        .sensitivity_sum(&SensAlg::StochasticAdjoint(AdjointConfig::default()), step)
+        .expect("adjoint-compatible problem");
+    println!(
+        "                — adjoint virtual-tree: {} floats (O(1))\n",
+        tree.stats.noise_memory
+    );
 }
 
 fn part2_calibration() {
@@ -85,33 +86,28 @@ fn part2_calibration() {
     let mut theta = vec![0.3, 0.8]; // deliberately wrong start
     let mut adam = Adam::new(2, 0.05);
     let master = PrngKey::from_seed(7);
-    let n_steps = 200;
+    let step = StepControl::Steps(200);
+    let alg = SensAlg::StochasticAdjoint(AdjointConfig::default());
     let batch = 16;
 
     for iter in 0..60u64 {
         let mut grad = vec![0.0; 2];
         let mut loss_acc = 0.0;
-        for b in 0..batch {
-            let key = master.fold_in(iter * batch + b);
-            // Ones-vector adjoint: grad_theta of Σ X_T on this path.
-            let out = stochastic_adjoint_gradients(
-                &sde,
-                &theta,
-                &x0,
-                0.0,
-                1.0,
-                n_steps,
-                key,
-                &AdjointConfig::default(),
-            );
-            // Loss (X_T − X*_T)² with X*_T the true model's endpoint on
-            // the SAME realized path: d/dθ = 2·resid · dX_T/dθ, and the
+        // A batch of replicates of one problem, each on its own Brownian
+        // stream derived from the master key; solved thread-parallel.
+        let prob = SdeProblem::new(&sde, &x0, (0.0, 1.0)).params(&theta);
+        let replicates = prob.replicates(master.fold_in(iter), batch);
+        for out in sensitivity_batch(&replicates, &alg, step) {
+            // Ones-vector adjoint: dtheta of Σ X_T on this path. Loss
+            // (X_T − X*_T)² with X*_T the true model's endpoint on the
+            // SAME realized path: d/dθ = 2·resid · dX_T/dθ, and the
             // adjoint output is exactly dX_T/dθ (linearity in ∂L/∂z_T).
+            let out = out.expect("adjoint-compatible problem");
             let target = Example1.analytic_solution(1.0, x0[0], &truth, out.w_terminal[0]);
             let resid = out.z_terminal[0] - target;
             loss_acc += resid * resid;
-            grad[0] += 2.0 * resid * out.grad_theta[0];
-            grad[1] += 2.0 * resid * out.grad_theta[1];
+            grad[0] += 2.0 * resid * out.dtheta[0];
+            grad[1] += 2.0 * resid * out.dtheta[1];
         }
         for g in grad.iter_mut() {
             *g /= batch as f64;

@@ -9,9 +9,11 @@
 use sdegrad::latent::{LatentSdeConfig, LatentSdeModel};
 use sdegrad::metrics::timer::bench;
 use sdegrad::prng::PrngKey;
+use sdegrad::ensure;
+use sdegrad::error::Result;
 use sdegrad::runtime::ArtifactRegistry;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let mut reg = ArtifactRegistry::open("artifacts")?;
     let m = &reg.manifest;
     println!("loaded manifest: {} entries, n_params = {}", m.entries.len(), m.cfg["n_params"]);
@@ -28,7 +30,7 @@ fn main() -> anyhow::Result<()> {
     };
     let batch = m.cfg_usize("batch")?;
     let model = LatentSdeModel::new(cfg);
-    anyhow::ensure!(
+    ensure!(
         model.n_params == m.cfg_usize("n_params")?,
         "Rust/Python layout mismatch"
     );
@@ -54,7 +56,7 @@ fn main() -> anyhow::Result<()> {
         }
     }
     println!("XLA vs Rust-NN posterior drift: max |Δ| = {max_err:.2e} over {batch}×{} outputs", cfg.latent_dim);
-    anyhow::ensure!(max_err < 1e-4, "numerics mismatch");
+    ensure!(max_err < 1e-4, "numerics mismatch");
 
     // Throughput: batched XLA artifact vs per-row Rust NN.
     let stats_xla = bench(3, 30, || {

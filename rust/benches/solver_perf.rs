@@ -2,14 +2,15 @@
 //! drift-evaluation hot path — pure-Rust NN vs the AOT-compiled XLA
 //! artifact (batched) when artifacts are present.
 
-use sdegrad::brownian::BrownianPath;
+use sdegrad::api::{solve_batch, SdeProblem, SolveOptions};
 use sdegrad::latent::{LatentSdeConfig, LatentSdeModel, PosteriorSde};
 use sdegrad::metrics::timer::bench;
 use sdegrad::metrics::CsvWriter;
+use sdegrad::metrics::Stopwatch;
 use sdegrad::prng::PrngKey;
 use sdegrad::sde::problems::{sample_experiment_setup, Example1};
-use sdegrad::sde::{ForwardFunc, ReplicatedSde, Sde};
-use sdegrad::solvers::{integrate_grid, uniform_grid, Method};
+use sdegrad::sde::{ReplicatedSde, Sde};
+use sdegrad::solvers::Method;
 
 fn main() {
     println!("=== Solver & drift-eval throughput ======================================");
@@ -25,17 +26,17 @@ fn main() {
     let key = PrngKey::from_seed(3);
     let (theta, x0) = sample_experiment_setup(key, dim, 2);
     let n_steps = 1000;
-    let grid = uniform_grid(0.0, 1.0, n_steps);
+    let prob = SdeProblem::new(&sde, &x0, (0.0, 1.0)).params(&theta);
     println!("{:<26} {:>14}", "scheme (1000 steps, d=10)", "µs/solve");
     for method in [Method::EulerMaruyama, Method::MilsteinIto, Method::Heun] {
         let mut run = 0u64;
         let stats = bench(3, 30, || {
             run += 1;
-            let mut bm = BrownianPath::new(key.fold_in(run), dim, 0.0, 1.0);
-            let mut sys = ForwardFunc::for_method(&sde, &theta, method);
-            let mut y = vec![0.0; dim];
-            integrate_grid(&mut sys, method, &x0, &grid, &mut bm, &mut y);
-            y[0]
+            let sol = prob
+                .clone()
+                .key(key.fold_in(run))
+                .solve(&SolveOptions::fixed(method, n_steps));
+            sol.final_state()[0]
         });
         let us = stats.mean() * 1e6;
         println!("{:<26} {:>14.1}", method.name(), us);
@@ -102,20 +103,52 @@ fn main() {
     let mut theta_full = params[..post.sde_param_len()].to_vec();
     theta_full.push(0.3); // ctx
     let aug = post.state_dim();
-    let grid = uniform_grid(0.0, 0.1, 50);
+    let y0 = vec![0.1; aug];
+    let post_prob = SdeProblem::new(&post, &y0, (0.0, 0.1)).params(&theta_full);
     let mut run = 0u64;
     let stats = bench(3, 30, || {
         run += 1;
-        let mut bm = BrownianPath::new(PrngKey::from_seed(100 + run), aug, 0.0, 0.1);
-        let mut sys = ForwardFunc::for_method(&post, &theta_full, Method::Heun);
-        let y0 = vec![0.1; aug];
-        let mut y = vec![0.0; aug];
-        integrate_grid(&mut sys, Method::Heun, &y0, &grid, &mut bm, &mut y);
-        y[0]
+        let sol = post_prob
+            .clone()
+            .key(PrngKey::from_seed(100 + run))
+            .solve(&SolveOptions::fixed(Method::Heun, 50));
+        sol.final_state()[0]
     });
     let per_step_us = stats.mean() * 1e6 / 50.0;
     println!("\nlatent posterior Heun step (dz=4, hidden=100): {per_step_us:.2} µs/step");
     csv.row(&["latent_step".into(), "heun_hidden100".into(), format!("{per_step_us}")]).ok();
+
+    // 4. Multi-path throughput: solve_batch fans N independent replicates
+    // of one problem across a scoped thread pool (the repro-harness /
+    // traffic-serving path). Compare against the same N paths solved
+    // sequentially.
+    let n_paths = 64;
+    let batch_prob = SdeProblem::new(&sde, &x0, (0.0, 1.0)).params(&theta);
+    let opts = SolveOptions::fixed(Method::MilsteinIto, n_steps);
+    let root = PrngKey::from_seed(77);
+    // Warm-up + measure.
+    let replicates = batch_prob.replicates(root, n_paths);
+    let _ = solve_batch(&replicates, &opts);
+    let sw = Stopwatch::new();
+    let sols = solve_batch(&replicates, &opts);
+    let t_batch = sw.elapsed_s();
+    let sw = Stopwatch::new();
+    let seq: Vec<_> = replicates.iter().map(|pr| pr.solve(&opts)).collect();
+    let t_seq = sw.elapsed_s();
+    assert_eq!(sols.len(), seq.len());
+    // Determinism: batch output must equal the sequential solves exactly.
+    for (a, b) in sols.iter().zip(&seq) {
+        assert_eq!(a.states, b.states, "solve_batch diverged from sequential");
+    }
+    println!(
+        "\nsolve_batch: {n_paths} paths × {n_steps} steps — batch {:.1} ms vs \
+         sequential {:.1} ms ({:.1}x)",
+        t_batch * 1e3,
+        t_seq * 1e3,
+        t_seq / t_batch.max(1e-12)
+    );
+    csv.row(&["solve_batch".into(), "batch_ms".into(), format!("{}", t_batch * 1e3)]).ok();
+    csv.row(&["solve_batch".into(), "sequential_ms".into(), format!("{}", t_seq * 1e3)]).ok();
     csv.flush().ok();
     println!("(CSV: bench_out/solver_perf.csv)");
 }

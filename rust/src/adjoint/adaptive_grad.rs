@@ -16,7 +16,7 @@
 use crate::brownian::{BrownianMotion, BrownianPath};
 use crate::prng::PrngKey;
 use crate::sde::{Calculus, ReplicatedSde, ScalarSde, SdeFunc};
-use crate::solvers::{integrate_adaptive, AdaptiveConfig, Method, SolveStats};
+use crate::solvers::{adaptive_core, AdaptiveConfig, Method, SolveStats};
 
 /// Expands a d-channel Brownian source to `n` slots via a slot→channel
 /// map (consistency is inherited from the inner source).
@@ -192,7 +192,26 @@ pub struct AdaptiveGradOutput {
 
 /// Gradient of `L = Σ z_T` for a replicated scalar problem using adaptive
 /// time-stepping in BOTH passes (Fig 5b's setting: vary `atol`, rtol=0).
+#[deprecated(
+    since = "0.2.0",
+    note = "use crate::api::SdeProblem::sensitivity_adaptive instead"
+)]
 pub fn adaptive_adjoint_gradients<P: ScalarSde>(
+    sde: &ReplicatedSde<P>,
+    theta: &[f64],
+    z0: &[f64],
+    t0: f64,
+    t1: f64,
+    key: PrngKey,
+    cfg: &AdaptiveConfig,
+) -> AdaptiveGradOutput {
+    adaptive_adjoint_core(sde, theta, z0, t0, t1, key, cfg)
+}
+
+/// Adaptive-adjoint engine shared by
+/// [`crate::api::SdeProblem::sensitivity_adaptive`] and the deprecated
+/// shim.
+pub(crate) fn adaptive_adjoint_core<P: ScalarSde>(
     sde: &ReplicatedSde<P>,
     theta: &[f64],
     z0: &[f64],
@@ -206,7 +225,7 @@ pub fn adaptive_adjoint_gradients<P: ScalarSde>(
 
     // Forward adaptive (Milstein — strong order 1.0, as in the paper).
     let mut fsys = crate::sde::ForwardFunc::for_method(sde, theta, Method::MilsteinIto);
-    let fres = integrate_adaptive(&mut fsys, Method::MilsteinIto, z0, t0, t1, &mut bm, cfg);
+    let fres = adaptive_core(&mut fsys, Method::MilsteinIto, z0, t0, t1, &mut bm, cfg);
     let w_terminal = bm.sample(t1);
 
     // Backward adaptive on the augmented diagonal system (Heun —
@@ -215,7 +234,7 @@ pub fn adaptive_adjoint_gradients<P: ScalarSde>(
     let map = aug.channel_map();
     let y_t = aug.pack_terminal(&fres.y);
     let mut mapped = ChannelMappedBrownian::new(&mut bm, map);
-    let bres = integrate_adaptive(&mut aug, Method::Heun, &y_t, t1, t0, &mut mapped, cfg);
+    let bres = adaptive_core(&mut aug, Method::Heun, &y_t, t1, t0, &mut mapped, cfg);
     let (grad_z0, grad_theta) = aug.unpack_gradients(&bres.y);
 
     AdaptiveGradOutput {
@@ -230,6 +249,8 @@ pub fn adaptive_adjoint_gradients<P: ScalarSde>(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // exercises the legacy shims on purpose (API parity is
+                     // pinned separately in tests/api_equivalence.rs)
 mod tests {
     use super::*;
     use crate::sde::problems::{sample_experiment_setup, Example1, Example2};

@@ -10,7 +10,7 @@
 //! (two correlated samples for the price of two independent ones, minus
 //! the shared-seed bookkeeping).
 
-use super::stochastic::{stochastic_adjoint_gradients, AdjointConfig, GradientOutput};
+use super::stochastic::{adjoint_with_loss_core, AdjointConfig, GradientOutput};
 use crate::prng::PrngKey;
 use crate::sde::SdeVjp;
 
@@ -26,6 +26,10 @@ pub struct AntitheticOutput {
 }
 
 /// Gradients of `L = Σ z_T` averaged over an antithetic Brownian pair.
+#[deprecated(
+    since = "0.2.0",
+    note = "use crate::api::SdeProblem::sensitivity_sum with SensAlg::Antithetic instead"
+)]
 #[allow(clippy::too_many_arguments)]
 pub fn antithetic_adjoint_gradients<S: SdeVjp + ?Sized>(
     sde: &S,
@@ -37,9 +41,33 @@ pub fn antithetic_adjoint_gradients<S: SdeVjp + ?Sized>(
     key: PrngKey,
     cfg: &AdjointConfig,
 ) -> AntitheticOutput {
-    let plus = stochastic_adjoint_gradients(sde, theta, z0, t0, t1, n_steps, key, cfg);
+    antithetic_core(sde, theta, z0, t0, t1, n_steps, key, cfg, |z: &[f64]| vec![1.0; z.len()])
+}
+
+/// Antithetic-pair engine shared by
+/// [`crate::api::SdeProblem::sensitivity`] and the deprecated shim. The
+/// loss-gradient closure is evaluated once per branch (each branch realizes
+/// its own terminal state).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn antithetic_core<S, F>(
+    sde: &S,
+    theta: &[f64],
+    z0: &[f64],
+    t0: f64,
+    t1: f64,
+    n_steps: usize,
+    key: PrngKey,
+    cfg: &AdjointConfig,
+    mut loss_grad: F,
+) -> AntitheticOutput
+where
+    S: SdeVjp + ?Sized,
+    F: FnMut(&[f64]) -> Vec<f64>,
+{
+    let plus = adjoint_with_loss_core(sde, theta, z0, t0, t1, n_steps, key, cfg, &mut loss_grad);
     let minus_cfg = AdjointConfig { mirror: !cfg.mirror, ..*cfg };
-    let minus = stochastic_adjoint_gradients(sde, theta, z0, t0, t1, n_steps, key, &minus_cfg);
+    let minus =
+        adjoint_with_loss_core(sde, theta, z0, t0, t1, n_steps, key, &minus_cfg, &mut loss_grad);
     let grad_theta = plus
         .grad_theta
         .iter()
@@ -56,8 +84,11 @@ pub fn antithetic_adjoint_gradients<S: SdeVjp + ?Sized>(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // exercises the legacy shims on purpose (API parity is
+                     // pinned separately in tests/api_equivalence.rs)
 mod tests {
     use super::*;
+    use crate::adjoint::stochastic::stochastic_adjoint_gradients;
     use crate::sde::problems::{sample_experiment_setup, Example1};
     use crate::sde::ReplicatedSde;
 

@@ -31,6 +31,11 @@ use crate::solvers::{uniform_grid, Method, SolveStats};
 /// [`GradientOutput`] as the stochastic adjoint; `noise_memory` reports the
 /// tape size (trajectory + increments), which is the honest analogue of
 /// Table 1's O(L) memory row.
+#[deprecated(
+    since = "0.2.0",
+    note = "use crate::api::SdeProblem::sensitivity_sum with SensAlg::Backprop instead"
+)]
+#[allow(clippy::too_many_arguments)]
 pub fn backprop_through_solver<S: SdeVjp + ?Sized>(
     sde: &S,
     theta: &[f64],
@@ -41,6 +46,28 @@ pub fn backprop_through_solver<S: SdeVjp + ?Sized>(
     key: PrngKey,
     method: Method,
 ) -> GradientOutput {
+    backprop_core(sde, theta, z0, t0, t1, n_steps, key, method, |z| vec![1.0; z.len()])
+}
+
+/// Backprop-through-the-solver engine shared by
+/// [`crate::api::SdeProblem::sensitivity`] and the deprecated shim.
+/// `loss_grad` maps the realized terminal state to `∂L/∂z_T`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn backprop_core<S, F>(
+    sde: &S,
+    theta: &[f64],
+    z0: &[f64],
+    t0: f64,
+    t1: f64,
+    n_steps: usize,
+    key: PrngKey,
+    method: Method,
+    loss_grad: F,
+) -> GradientOutput
+where
+    S: SdeVjp + ?Sized,
+    F: FnOnce(&[f64]) -> Vec<f64>,
+{
     assert!(
         matches!(method, Method::EulerMaruyama | Method::MilsteinIto),
         "backprop baseline supports Euler–Maruyama and Milstein (Itô); got {}",
@@ -107,7 +134,8 @@ pub fn backprop_through_solver<S: SdeVjp + ?Sized>(
     let z_t = tape_z[n_steps * d..].to_vec();
 
     // ---- Backward sweep over the tape. ------------------------------
-    let mut a = vec![1.0; d]; // ∂L/∂z_T for L = Σ z_T
+    let mut a = loss_grad(&z_t); // ∂L/∂z_T
+    assert_eq!(a.len(), d, "loss gradient has wrong dimension");
     let mut a_new = vec![0.0; d];
     let mut grad_theta = vec![0.0; p];
     let mut weighted = vec![0.0; d];
@@ -167,6 +195,8 @@ pub fn backprop_through_solver<S: SdeVjp + ?Sized>(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // exercises the legacy shim on purpose (API parity is
+                     // pinned separately in tests/api_equivalence.rs)
 mod tests {
     use super::*;
     use crate::sde::problems::{sample_experiment_setup, Example1, Example2};

@@ -25,12 +25,17 @@ pub mod pathwise;
 pub mod reconstruct;
 pub mod stochastic;
 
-pub use adaptive_grad::{adaptive_adjoint_gradients, AdaptiveGradOutput, ChannelMappedBrownian};
-pub use antithetic::{antithetic_adjoint_gradients, AntitheticOutput};
+#[allow(deprecated)]
+pub use adaptive_grad::adaptive_adjoint_gradients;
+pub use adaptive_grad::{AdaptiveGradOutput, ChannelMappedBrownian};
+#[allow(deprecated)]
+pub use antithetic::antithetic_adjoint_gradients;
+pub use antithetic::AntitheticOutput;
 pub use augmented::AdjointOps;
+#[allow(deprecated)]
 pub use backprop::backprop_through_solver;
+#[allow(deprecated)]
 pub use pathwise::forward_pathwise_gradients;
-pub use stochastic::{
-    stochastic_adjoint_gradients, stochastic_adjoint_multi_obs, AdjointConfig, BackwardSolver,
-    GradientOutput, NoiseMode,
-};
+#[allow(deprecated)]
+pub use stochastic::{stochastic_adjoint_gradients, stochastic_adjoint_multi_obs};
+pub use stochastic::{AdjointConfig, BackwardSolver, GradientOutput, NoiseMode};

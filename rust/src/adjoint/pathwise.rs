@@ -24,6 +24,10 @@ use crate::solvers::{uniform_grid, SolveStats};
 
 /// Gradients of `L = Σ_i z_T^(i)` by forward sensitivity analysis with
 /// Euler–Maruyama stepping of the augmented `(z, S)` system.
+#[deprecated(
+    since = "0.2.0",
+    note = "use crate::api::SdeProblem::sensitivity_sum with SensAlg::ForwardPathwise instead"
+)]
 pub fn forward_pathwise_gradients<S: SdeVjp + ?Sized>(
     sde: &S,
     theta: &[f64],
@@ -33,6 +37,28 @@ pub fn forward_pathwise_gradients<S: SdeVjp + ?Sized>(
     n_steps: usize,
     key: PrngKey,
 ) -> GradientOutput {
+    pathwise_core(sde, theta, z0, t0, t1, n_steps, key, |z| vec![1.0; z.len()])
+}
+
+/// Forward-sensitivity engine shared by
+/// [`crate::api::SdeProblem::sensitivity`] and the deprecated shim.
+/// `loss_grad` maps the realized terminal state to `∂L/∂z_T`, which is
+/// contracted against the propagated sensitivity matrix.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn pathwise_core<S, F>(
+    sde: &S,
+    theta: &[f64],
+    z0: &[f64],
+    t0: f64,
+    t1: f64,
+    n_steps: usize,
+    key: PrngKey,
+    loss_grad: F,
+) -> GradientOutput
+where
+    S: SdeVjp + ?Sized,
+    F: FnOnce(&[f64]) -> Vec<f64>,
+{
     assert_eq!(
         sde.calculus(),
         Calculus::Ito,
@@ -128,15 +154,18 @@ pub fn forward_pathwise_gradients<S: SdeVjp + ?Sized>(
         wa.copy_from_slice(&wb);
     }
 
-    // ∇L · S with ∇L = 1ᵀ.
+    // ∇L · S.
+    let grad_l = loss_grad(&z);
+    assert_eq!(grad_l.len(), d, "loss gradient has wrong dimension");
     let mut grad_z0 = vec![0.0; d];
     let mut grad_theta = vec![0.0; p];
     for i in 0..d {
+        let gl = grad_l[i];
         for c in 0..d {
-            grad_z0[c] += s_mat[i * cols + c];
+            grad_z0[c] += gl * s_mat[i * cols + c];
         }
         for c in 0..p {
-            grad_theta[c] += s_mat[i * cols + d + c];
+            grad_theta[c] += gl * s_mat[i * cols + d + c];
         }
     }
 
@@ -160,6 +189,8 @@ pub fn forward_pathwise_gradients<S: SdeVjp + ?Sized>(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // exercises the legacy shims on purpose (API parity is
+                     // pinned separately in tests/api_equivalence.rs)
 mod tests {
     use super::*;
     use crate::adjoint::backprop::backprop_through_solver;

@@ -19,7 +19,7 @@
 use crate::brownian::BrownianPath;
 use crate::prng::PrngKey;
 use crate::sde::{Calculus, ForwardFunc, Sde};
-use crate::solvers::{integrate_grid_saving, uniform_grid, Method};
+use crate::solvers::{grid_saving_core, uniform_grid, Method};
 
 /// Outcome of a forward-then-backward reconstruction experiment.
 #[derive(Clone, Debug)]
@@ -60,13 +60,13 @@ pub fn reconstruction_experiment<S: Sde + ?Sized>(
 
     // Forward.
     let mut sys = ForwardFunc::for_method(sde, theta, method);
-    let (fwd, _) = integrate_grid_saving(&mut sys, method, z0, &grid, &mut bm);
+    let (fwd, _) = grid_saving_core(&mut sys, method, z0, &grid, &mut bm);
 
     // Backward from the terminal state over the reversed grid.
     let rgrid: Vec<f64> = grid.iter().rev().copied().collect();
     let z_t = &fwd[n_steps * d..];
     let mut sys_b = ForwardFunc::for_method(sde, theta, method);
-    let (bwd_rev, _) = integrate_grid_saving(&mut sys_b, method, z_t, &rgrid, &mut bm);
+    let (bwd_rev, _) = grid_saving_core(&mut sys_b, method, z_t, &rgrid, &mut bm);
 
     // Re-order backward trajectory to ascending time.
     let n_pts = grid.len();

@@ -18,7 +18,7 @@ use super::augmented::AdjointOps;
 use crate::brownian::{BrownianMotion, BrownianPath, VirtualBrownianTree};
 use crate::prng::PrngKey;
 use crate::sde::{ForwardFunc, SdeVjp};
-use crate::solvers::{integrate_grid, uniform_grid, Method, SolveStats};
+use crate::solvers::{grid_core, uniform_grid, Method, SolveStats};
 
 /// Where the Brownian sample path comes from.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -79,19 +79,30 @@ pub struct GradientOutput {
     pub w_terminal: Vec<f64>,
 }
 
-enum NoiseInner {
+pub(crate) enum NoiseInner {
     Path(BrownianPath),
     Tree(VirtualBrownianTree),
 }
 
-struct Noise {
+/// Noise source assembled from a [`NoiseMode`]: a stored path or a virtual
+/// tree, optionally mirrored (−W). Shared by the adjoint engines and the
+/// problem API ([`crate::api::SdeProblem`]), whose solutions hand it back
+/// as the replay handle.
+pub(crate) struct Noise {
     inner: NoiseInner,
     /// Negate every sample (antithetic path −W).
     mirror: bool,
 }
 
 impl Noise {
-    fn new(mode: NoiseMode, key: PrngKey, d: usize, t0: f64, t1: f64, mirror: bool) -> Noise {
+    pub(crate) fn new(
+        mode: NoiseMode,
+        key: PrngKey,
+        d: usize,
+        t0: f64,
+        t1: f64,
+        mirror: bool,
+    ) -> Noise {
         let inner = match mode {
             NoiseMode::StoredPath => NoiseInner::Path(BrownianPath::new(key, d, t0, t1)),
             NoiseMode::VirtualTree { tol } => {
@@ -281,6 +292,11 @@ impl<'a, S: SdeVjp + ?Sized> BackwardSolver<'a, S> {
 ///
 /// The loss used throughout the paper's numerical studies (§7.1): its
 /// gradient at the terminal state is the ones vector.
+#[deprecated(
+    since = "0.2.0",
+    note = "use crate::api::SdeProblem::sensitivity_sum with SensAlg::StochasticAdjoint instead"
+)]
+#[allow(clippy::too_many_arguments)]
 pub fn stochastic_adjoint_gradients<S: SdeVjp + ?Sized>(
     sde: &S,
     theta: &[f64],
@@ -291,15 +307,39 @@ pub fn stochastic_adjoint_gradients<S: SdeVjp + ?Sized>(
     key: PrngKey,
     cfg: &AdjointConfig,
 ) -> GradientOutput {
-    stochastic_adjoint_with_loss(sde, theta, z0, t0, t1, n_steps, key, cfg, |_z| {
-        vec![1.0; z0.len()]
-    })
+    adjoint_with_loss_core(sde, theta, z0, t0, t1, n_steps, key, cfg, |_z| vec![1.0; z0.len()])
 }
 
 /// Gradient of an arbitrary scalar loss `L(z_T)` via the stochastic
 /// adjoint: `loss_grad` maps the realized terminal state to `∂L/∂z_T`.
+#[deprecated(
+    since = "0.2.0",
+    note = "use crate::api::SdeProblem::sensitivity with SensAlg::StochasticAdjoint instead"
+)]
 #[allow(clippy::too_many_arguments)]
 pub fn stochastic_adjoint_with_loss<S, F>(
+    sde: &S,
+    theta: &[f64],
+    z0: &[f64],
+    t0: f64,
+    t1: f64,
+    n_steps: usize,
+    key: PrngKey,
+    cfg: &AdjointConfig,
+    loss_grad: F,
+) -> GradientOutput
+where
+    S: SdeVjp + ?Sized,
+    F: FnOnce(&[f64]) -> Vec<f64>,
+{
+    adjoint_with_loss_core(sde, theta, z0, t0, t1, n_steps, key, cfg, loss_grad)
+}
+
+/// Stochastic-adjoint engine (Algorithm 2) shared by
+/// [`crate::api::SdeProblem::sensitivity`] and the deprecated free-function
+/// shims above.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn adjoint_with_loss_core<S, F>(
     sde: &S,
     theta: &[f64],
     z0: &[f64],
@@ -322,7 +362,7 @@ where
     let mut z_t = vec![0.0; d];
     let forward_stats = {
         let mut sys = ForwardFunc::for_method(sde, theta, cfg.forward_method);
-        integrate_grid(&mut sys, cfg.forward_method, z0, &grid, &mut noise, &mut z_t)
+        grid_core(&mut sys, cfg.forward_method, z0, &grid, &mut noise, &mut z_t)
     };
 
     let w_terminal = noise.sample(t1);
@@ -351,8 +391,33 @@ where
 /// states at all observation times (row-major `n_obs × d`) and returns all
 /// `∂L/∂z_{t_k}` in the same layout. The backward pass injects each
 /// gradient when it crosses the corresponding time.
+#[deprecated(
+    since = "0.2.0",
+    note = "use crate::api::SdeProblem::sensitivity_at instead"
+)]
 #[allow(clippy::too_many_arguments)]
 pub fn stochastic_adjoint_multi_obs<S, F>(
+    sde: &S,
+    theta: &[f64],
+    z0: &[f64],
+    t0: f64,
+    obs_times: &[f64],
+    steps_per_interval: usize,
+    key: PrngKey,
+    cfg: &AdjointConfig,
+    loss_grads: F,
+) -> GradientOutput
+where
+    S: SdeVjp + ?Sized,
+    F: FnOnce(&[f64]) -> Vec<f64>,
+{
+    adjoint_multi_obs_core(sde, theta, z0, t0, obs_times, steps_per_interval, key, cfg, loss_grads)
+}
+
+/// Multi-observation adjoint engine shared by
+/// [`crate::api::SdeProblem::sensitivity_at`] and the deprecated shim.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn adjoint_multi_obs_core<S, F>(
     sde: &S,
     theta: &[f64],
     z0: &[f64],
@@ -386,7 +451,7 @@ where
         let grid = uniform_grid(t_lo, t_hi, steps_per_interval);
         let mut sys = ForwardFunc::for_method(sde, theta, cfg.forward_method);
         let mut z_next = vec![0.0; d];
-        let st = integrate_grid(&mut sys, cfg.forward_method, &z, &grid, &mut noise, &mut z_next);
+        let st = grid_core(&mut sys, cfg.forward_method, &z, &grid, &mut noise, &mut z_next);
         accumulate_stats(&mut forward_stats, &st);
         z.copy_from_slice(&z_next);
         z_obs[k * d..(k + 1) * d].copy_from_slice(&z);
@@ -501,11 +566,13 @@ fn accumulate_stats(total: &mut SolveStats, one: &SolveStats) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::{SdeProblem, SensAlg, StepControl};
     use crate::sde::problems::{sample_experiment_setup, Example1, Example2, Example3};
     use crate::sde::{ReplicatedSde, ScalarSde};
 
     /// Shared harness: adjoint gradient vs analytic pathwise gradient for a
-    /// replicated scalar problem. Returns (max_rel_err_x0, max_rel_err_th).
+    /// replicated scalar problem, driven through the problem API. Returns
+    /// (max_rel_err_x0, max_rel_err_th).
     fn adjoint_vs_analytic<P: ScalarSde + Copy>(
         problem: P,
         dim: usize,
@@ -516,7 +583,13 @@ mod tests {
         let sde = ReplicatedSde::new(problem, dim);
         let key = PrngKey::from_seed(seed);
         let (theta, x0) = sample_experiment_setup(key, dim, problem.nparams());
-        let out = stochastic_adjoint_gradients(&sde, &theta, &x0, 0.0, 1.0, n_steps, key, cfg);
+        let out = SdeProblem::new(&sde, &x0, (0.0, 1.0))
+            .params(&theta)
+            .key(key)
+            .noise(cfg.noise)
+            .mirror(cfg.mirror)
+            .sensitivity_sum(&SensAlg::StochasticAdjoint(*cfg), StepControl::Steps(n_steps))
+            .expect("valid adjoint problem");
 
         // Ground truth from the closed form at the realized W_T.
         let w_t = out.w_terminal.clone();
@@ -525,8 +598,8 @@ mod tests {
         sde.analytic_loss_gradients(1.0, &x0, &theta, &w_t, &mut g_x0, &mut g_th);
 
         let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1e-3);
-        let e_x0 = (0..dim).map(|i| rel(out.grad_z0[i], g_x0[i])).fold(0.0, f64::max);
-        let e_th = (0..theta.len()).map(|j| rel(out.grad_theta[j], g_th[j])).fold(0.0, f64::max);
+        let e_x0 = (0..dim).map(|i| rel(out.dz0[i], g_x0[i])).fold(0.0, f64::max);
+        let e_th = (0..theta.len()).map(|j| rel(out.dtheta[j], g_th[j])).fold(0.0, f64::max);
         (e_x0, e_th)
     }
 
@@ -576,28 +649,23 @@ mod tests {
         let sde = ReplicatedSde::new(Example1, 2);
         let key = PrngKey::from_seed(9);
         let (theta, x0) = sample_experiment_setup(key, 2, 2);
-        let out_tree = stochastic_adjoint_gradients(
-            &sde,
-            &theta,
-            &x0,
-            0.0,
-            1.0,
-            512,
-            key,
-            &AdjointConfig { noise: NoiseMode::VirtualTree { tol: 1e-7 }, ..Default::default() },
-        );
-        let out_path = stochastic_adjoint_gradients(
-            &sde,
-            &theta,
-            &x0,
-            0.0,
-            1.0,
-            512,
-            key,
-            &AdjointConfig::default(),
-        );
-        assert!(out_tree.noise_memory < 32, "tree memory {}", out_tree.noise_memory);
-        assert!(out_path.noise_memory > 512, "path memory {}", out_path.noise_memory);
+        let prob = SdeProblem::new(&sde, &x0, (0.0, 1.0)).params(&theta).key(key);
+        let out_tree = prob
+            .clone()
+            .noise(NoiseMode::VirtualTree { tol: 1e-7 })
+            .sensitivity_sum(
+                &SensAlg::StochasticAdjoint(AdjointConfig::default()),
+                StepControl::Steps(512),
+            )
+            .unwrap();
+        let out_path = prob
+            .sensitivity_sum(
+                &SensAlg::StochasticAdjoint(AdjointConfig::default()),
+                StepControl::Steps(512),
+            )
+            .unwrap();
+        assert!(out_tree.stats.noise_memory < 32, "tree memory {}", out_tree.stats.noise_memory);
+        assert!(out_path.stats.noise_memory > 512, "path memory {}", out_path.stats.noise_memory);
     }
 
     #[test]
@@ -609,7 +677,11 @@ mod tests {
         let key = PrngKey::from_seed(50);
         let (theta, x0) = sample_experiment_setup(key, 3, 2);
         let cfg = AdjointConfig { forward_method: Method::Heun, ..Default::default() };
-        let out = stochastic_adjoint_gradients(&sde, &theta, &x0, 0.0, 1.0, 2000, key, &cfg);
+        let out = SdeProblem::new(&sde, &x0, (0.0, 1.0))
+            .params(&theta)
+            .key(key)
+            .sensitivity_sum(&SensAlg::StochasticAdjoint(cfg), StepControl::Steps(2000))
+            .unwrap();
         for i in 0..3 {
             assert!(
                 (out.z0_reconstructed[i] - x0[i]).abs() < 0.01,
@@ -646,69 +718,46 @@ mod tests {
         let (theta, x0) = sample_experiment_setup(key, 2, 2);
         let cfg = AdjointConfig::default();
         let steps = 1500;
+        let prob = SdeProblem::new(&sde, &x0, (0.0, 1.0)).params(&theta).key(key);
 
-        let multi = stochastic_adjoint_multi_obs(
-            &sde,
-            &theta,
-            &x0,
-            0.0,
-            &[0.5, 1.0],
-            steps,
-            key,
-            &cfg,
-            |z_obs| vec![1.0; z_obs.len()],
-        );
+        let multi = prob
+            .sensitivity_at(&[0.5, 1.0], steps, &cfg, |z_obs| vec![1.0; z_obs.len()])
+            .unwrap();
 
         // Single obs at 1.0 on the same noise: grid differs (one interval
         // of 2*steps vs two of steps). Use matching per-interval grids so
         // the Brownian queries align: emulate by multi_obs with zero grad
         // at 0.5.
-        let only_end = stochastic_adjoint_multi_obs(
-            &sde,
-            &theta,
-            &x0,
-            0.0,
-            &[0.5, 1.0],
-            steps,
-            key,
-            &cfg,
-            |z_obs| {
+        let only_end = prob
+            .sensitivity_at(&[0.5, 1.0], steps, &cfg, |z_obs| {
                 let mut g = vec![0.0; z_obs.len()];
                 for v in g.iter_mut().skip(z_obs.len() / 2) {
                     *v = 1.0;
                 }
                 g
-            },
-        );
-        let only_mid = stochastic_adjoint_multi_obs(
-            &sde,
-            &theta,
-            &x0,
-            0.0,
-            &[0.5, 1.0],
-            steps,
-            key,
-            &cfg,
-            |z_obs| {
+            })
+            .unwrap();
+        let only_mid = prob
+            .sensitivity_at(&[0.5, 1.0], steps, &cfg, |z_obs| {
                 let mut g = vec![0.0; z_obs.len()];
                 for v in g.iter_mut().take(z_obs.len() / 2) {
                     *v = 1.0;
                 }
                 g
-            },
-        );
+            })
+            .unwrap();
         for j in 0..theta.len() {
-            let sum = only_end.grad_theta[j] + only_mid.grad_theta[j];
+            let sum = only_end.dtheta[j] + only_mid.dtheta[j];
             assert!(
-                (multi.grad_theta[j] - sum).abs() < 1e-9,
+                (multi.dtheta[j] - sum).abs() < 1e-9,
                 "θ[{j}]: multi {} vs sum {}",
-                multi.grad_theta[j],
+                multi.dtheta[j],
                 sum
             );
         }
         for i in 0..2 {
-            let sum = only_end.grad_z0[i] + only_mid.grad_z0[i];
-            assert!((multi.grad_z0[i] - sum).abs() < 1e-9, "z0[{i}]");
+            let sum = only_end.dz0[i] + only_mid.dz0[i];
+            assert!((multi.dz0[i] - sum).abs() < 1e-9, "z0[{i}]");
         }
     }
 
@@ -720,30 +769,29 @@ mod tests {
         let sde = ReplicatedSde::new(Example1, dim);
         let key = PrngKey::from_seed(61);
         let (theta, x0) = sample_experiment_setup(key, dim, 2);
-        let out = stochastic_adjoint_multi_obs(
-            &sde,
-            &theta,
-            &x0,
-            0.0,
-            &[0.25, 0.5, 0.75, 1.0],
-            800,
-            key,
-            &AdjointConfig::default(),
-            |z_obs| {
-                let mut g = vec![0.0; z_obs.len()];
-                let n = z_obs.len();
-                for v in g.iter_mut().skip(n - dim) {
-                    *v = 1.0;
-                }
-                g
-            },
-        );
+        let out = SdeProblem::new(&sde, &x0, (0.0, 1.0))
+            .params(&theta)
+            .key(key)
+            .sensitivity_at(
+                &[0.25, 0.5, 0.75, 1.0],
+                800,
+                &AdjointConfig::default(),
+                |z_obs| {
+                    let mut g = vec![0.0; z_obs.len()];
+                    let n = z_obs.len();
+                    for v in g.iter_mut().skip(n - dim) {
+                        *v = 1.0;
+                    }
+                    g
+                },
+            )
+            .unwrap();
         let w_t = out.w_terminal.clone();
         let mut g_x0 = vec![0.0; dim];
         let mut g_th = vec![0.0; theta.len()];
         sde.analytic_loss_gradients(1.0, &x0, &theta, &w_t, &mut g_x0, &mut g_th);
         for j in 0..theta.len() {
-            let rel = (out.grad_theta[j] - g_th[j]).abs() / g_th[j].abs().max(1e-3);
+            let rel = (out.dtheta[j] - g_th[j]).abs() / g_th[j].abs().max(1e-3);
             assert!(rel < 0.02, "θ[{j}] rel err {rel}");
         }
     }

@@ -1,0 +1,233 @@
+//! [`SdeProblem`]: the problem half of the problem–solver–solution API.
+//!
+//! A problem bundles everything that *defines* a stochastic initial-value
+//! problem — the SDE, the initial state, the horizon, the parameter
+//! vector, and the Brownian source specification — and leaves everything
+//! about *how* to solve it to [`super::SolveOptions`] /
+//! [`super::SensAlg`]. One problem value can therefore be solved forward,
+//! differentiated with any sensitivity algorithm, or replicated into a
+//! batch, always against the same defining data.
+
+use crate::prng::PrngKey;
+use crate::sde::{Calculus, Sde};
+use crate::solvers::Method;
+use std::fmt;
+
+/// Where the Brownian sample path comes from (the API-level name for
+/// [`crate::adjoint::NoiseMode`]; the two are the same type, so a problem
+/// spec can be dropped directly into an
+/// [`crate::adjoint::AdjointConfig`]).
+pub use crate::adjoint::NoiseMode as NoiseSpec;
+
+/// Validation failure surfaced *before* any integration starts.
+///
+/// The legacy free functions panicked mid-solve on these conditions (most
+/// notoriously `SdeVjp::ito_correction_vjp`'s unimplemented default);
+/// [`SdeProblem`] checks them up front and returns an error instead.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ProblemError {
+    /// The SDE is Itô-native but does not implement
+    /// `SdeVjp::ito_correction_vjp`, which the requested algorithm needs.
+    MissingItoCorrectionVjp { algorithm: &'static str },
+    /// The requested algorithm does not support this stepping scheme.
+    UnsupportedMethod { algorithm: &'static str, method: Method },
+    /// The requested algorithm requires the SDE's native calculus to be
+    /// `required`.
+    CalculusMismatch { algorithm: &'static str, required: Calculus },
+    /// Adaptive stepping is only available for forward solves and (via
+    /// `SdeProblem::sensitivity_adaptive`) replicated scalar problems.
+    AdaptiveSensitivityUnsupported,
+    /// The requested algorithm only supports the default noise spec
+    /// (stored path, unmirrored): its engine tapes its own path, so a
+    /// virtual-tree or mirrored problem spec cannot be honored.
+    UnsupportedNoise { algorithm: &'static str },
+}
+
+impl fmt::Display for ProblemError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProblemError::MissingItoCorrectionVjp { algorithm } => write!(
+                f,
+                "{algorithm}: SDE is Itô-native but does not provide \
+                 ito_correction_vjp — express it in Stratonovich form or \
+                 implement the correction VJP (and override \
+                 has_ito_correction_vjp)"
+            ),
+            ProblemError::UnsupportedMethod { algorithm, method } => {
+                write!(f, "{algorithm}: stepping scheme {} is not supported", method.name())
+            }
+            ProblemError::CalculusMismatch { algorithm, required } => {
+                write!(f, "{algorithm}: requires a {required:?}-native SDE")
+            }
+            ProblemError::AdaptiveSensitivityUnsupported => write!(
+                f,
+                "adaptive step control is not supported by generic sensitivity \
+                 algorithms; use fixed steps, or sensitivity_adaptive on a \
+                 replicated scalar problem"
+            ),
+            ProblemError::UnsupportedNoise { algorithm } => write!(
+                f,
+                "{algorithm}: only the default noise spec (stored path, \
+                 unmirrored) is supported — this estimator tapes its own \
+                 Brownian path"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ProblemError {}
+
+/// A stochastic initial-value problem `dZ = b dt + σ dW`, `Z(t0) = z0`,
+/// on the horizon `(t0, t1)`.
+///
+/// Built with a chained constructor and consumed by
+/// [`SdeProblem::solve`], [`SdeProblem::sensitivity`] (and friends), or
+/// the batch entry points [`super::solve_batch`] /
+/// [`super::sensitivity_batch`]:
+///
+/// ```ignore
+/// let sol = SdeProblem::new(&sde, &z0, (0.0, 1.0))
+///     .params(&theta)
+///     .key(PrngKey::from_seed(7))
+///     .noise(NoiseSpec::VirtualTree { tol: 1e-8 })
+///     .solve(&SolveOptions::fixed(Method::MilsteinIto, 1000));
+/// ```
+///
+/// The problem owns copies of `z0` and `theta` (cheap relative to any
+/// solve) so it can be cloned per batch replicate; the SDE itself is
+/// borrowed.
+pub struct SdeProblem<'a, S: Sde + ?Sized> {
+    pub(crate) sde: &'a S,
+    pub(crate) z0: Vec<f64>,
+    pub(crate) t0: f64,
+    pub(crate) t1: f64,
+    pub(crate) theta: Vec<f64>,
+    pub(crate) key: PrngKey,
+    pub(crate) noise: NoiseSpec,
+    pub(crate) mirror: bool,
+}
+
+impl<'a, S: Sde + ?Sized> Clone for SdeProblem<'a, S> {
+    fn clone(&self) -> Self {
+        SdeProblem {
+            sde: self.sde,
+            z0: self.z0.clone(),
+            t0: self.t0,
+            t1: self.t1,
+            theta: self.theta.clone(),
+            key: self.key,
+            noise: self.noise,
+            mirror: self.mirror,
+        }
+    }
+}
+
+impl<'a, S: Sde + ?Sized> SdeProblem<'a, S> {
+    /// A problem with zero parameters-vector default, stored-path noise
+    /// from seed 0, and no mirroring. `span` is `(t0, t1)`; a descending
+    /// span integrates backward.
+    pub fn new(sde: &'a S, z0: &[f64], span: (f64, f64)) -> Self {
+        assert_eq!(
+            z0.len(),
+            sde.state_dim(),
+            "SdeProblem: z0 length {} != state_dim {}",
+            z0.len(),
+            sde.state_dim()
+        );
+        assert!(span.0 != span.1, "SdeProblem: empty horizon");
+        SdeProblem {
+            sde,
+            z0: z0.to_vec(),
+            t0: span.0,
+            t1: span.1,
+            theta: vec![0.0; sde.param_dim()],
+            key: PrngKey::from_seed(0),
+            noise: NoiseSpec::StoredPath,
+            mirror: false,
+        }
+    }
+
+    /// Set the parameter vector θ (length must equal `param_dim`).
+    pub fn params(mut self, theta: &[f64]) -> Self {
+        assert_eq!(
+            theta.len(),
+            self.sde.param_dim(),
+            "SdeProblem: theta length {} != param_dim {}",
+            theta.len(),
+            self.sde.param_dim()
+        );
+        self.theta.clear();
+        self.theta.extend_from_slice(theta);
+        self
+    }
+
+    /// Set the PRNG key that seeds the Brownian source.
+    pub fn key(mut self, key: PrngKey) -> Self {
+        self.key = key;
+        self
+    }
+
+    /// Choose the Brownian source (stored path or virtual tree). This is
+    /// authoritative for [`SdeProblem::solve`] and the adjoint-family
+    /// estimators (it overrides the `noise` field of any `AdjointConfig`
+    /// passed via `SensAlg`). `Backprop`/`ForwardPathwise` tape their own
+    /// stored path and return [`ProblemError::UnsupportedNoise`] for any
+    /// other spec rather than silently diverging from the problem's path.
+    pub fn noise(mut self, spec: NoiseSpec) -> Self {
+        self.noise = spec;
+        self
+    }
+
+    /// Drive the solve with the mirrored path `−W` (antithetic coupling).
+    pub fn mirror(mut self, mirror: bool) -> Self {
+        self.mirror = mirror;
+        self
+    }
+
+    /// The underlying SDE.
+    pub fn sde(&self) -> &'a S {
+        self.sde
+    }
+
+    /// State dimension d.
+    pub fn dim(&self) -> usize {
+        self.sde.state_dim()
+    }
+
+    /// The `(t0, t1)` horizon.
+    pub fn span(&self) -> (f64, f64) {
+        (self.t0, self.t1)
+    }
+
+    /// Initial state.
+    pub fn initial_state(&self) -> &[f64] {
+        &self.z0
+    }
+
+    /// Parameter vector θ.
+    pub fn theta(&self) -> &[f64] {
+        &self.theta
+    }
+
+    /// PRNG key seeding the Brownian source.
+    pub fn prng_key(&self) -> PrngKey {
+        self.key
+    }
+
+    /// Brownian source specification.
+    pub fn noise_spec(&self) -> NoiseSpec {
+        self.noise
+    }
+
+    /// Whether the path is mirrored.
+    pub fn is_mirrored(&self) -> bool {
+        self.mirror
+    }
+
+    /// `n` clones of this problem with independent Brownian streams
+    /// derived from `root` (replicate `i` gets `root.fold_in(i)`), ready
+    /// for [`super::solve_batch`] / [`super::sensitivity_batch`].
+    pub fn replicates(&self, root: PrngKey, n: usize) -> Vec<Self> {
+        (0..n).map(|i| self.clone().key(root.fold_in(i as u64))).collect()
+    }
+}

@@ -1,0 +1,356 @@
+//! Sensitivity algorithms: [`SensAlg`] → [`Gradients`].
+//!
+//! Estimator choice is orthogonal to everything else: the same
+//! [`SdeProblem`] can be differentiated with the paper's stochastic
+//! adjoint, the backprop-through-solver baseline, forward pathwise
+//! sensitivity, or an antithetic adjoint pair. The problem's key and
+//! noise spec are authoritative: the adjoint family honors them
+//! directly, while `Backprop`/`ForwardPathwise` (which tape their own
+//! stored path) reject any non-default spec with
+//! [`ProblemError::UnsupportedNoise`] rather than silently realizing a
+//! different path.
+
+use super::problem::{ProblemError, SdeProblem};
+use super::solve::{add_stats, par_map, StepControl};
+use crate::adjoint::adaptive_grad::adaptive_adjoint_core;
+use crate::adjoint::antithetic::{antithetic_core, AntitheticOutput};
+use crate::adjoint::backprop::backprop_core;
+use crate::adjoint::pathwise::pathwise_core;
+use crate::adjoint::stochastic::{adjoint_multi_obs_core, adjoint_with_loss_core, GradientOutput};
+use crate::adjoint::AdjointConfig;
+use crate::sde::{Calculus, ReplicatedSde, ScalarSde, SdeVjp};
+use crate::solvers::{AdaptiveConfig, Method, SolveStats};
+
+/// Which gradient estimator to run (paper §3 / Table 1).
+#[derive(Clone, Copy, Debug)]
+pub enum SensAlg {
+    /// The paper's stochastic adjoint sensitivity method: O(1) memory
+    /// with a virtual-tree noise spec, O(L) with a stored path.
+    StochasticAdjoint(AdjointConfig),
+    /// Reverse-mode differentiation through the solver operations
+    /// (`method` must be `EulerMaruyama` or `MilsteinIto`). O(L) memory.
+    Backprop { method: Method },
+    /// Forward sensitivity analysis propagating the full Jacobian.
+    /// O(L·D) time.
+    ForwardPathwise,
+    /// The stochastic adjoint averaged over an antithetic pair `(W, −W)`
+    /// — two coupled solves, lower-variance estimate.
+    Antithetic { base: AdjointConfig },
+}
+
+impl SensAlg {
+    fn name(&self) -> &'static str {
+        match self {
+            SensAlg::StochasticAdjoint(_) => "StochasticAdjoint",
+            SensAlg::Backprop { .. } => "Backprop",
+            SensAlg::ForwardPathwise => "ForwardPathwise",
+            SensAlg::Antithetic { .. } => "Antithetic",
+        }
+    }
+}
+
+/// Solver accounting for a gradient computation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GradStats {
+    pub forward: SolveStats,
+    pub backward: SolveStats,
+    /// Live f64s held by the noise source / tape at the end (Table 1's
+    /// memory column).
+    pub noise_memory: usize,
+    /// True if an adaptive controller hit `h_min`.
+    pub hit_h_min: bool,
+}
+
+impl GradStats {
+    /// Total function evaluations across both passes.
+    pub fn nfe(&self) -> u64 {
+        self.forward.nfe() + self.backward.nfe()
+    }
+}
+
+/// Unified gradient result: `∂L/∂z0`, `∂L/∂θ`, and diagnostics.
+#[derive(Clone, Debug)]
+pub struct Gradients {
+    /// `∂L/∂z_0`.
+    pub dz0: Vec<f64>,
+    /// `∂L/∂θ`.
+    pub dtheta: Vec<f64>,
+    /// Terminal state `z_T` of the forward solve.
+    pub z_terminal: Vec<f64>,
+    /// The backward pass's reconstruction of `z_0` (empty for algorithms
+    /// that don't retrace the path).
+    pub z0_reconstructed: Vec<f64>,
+    /// Realized `W(t1)` of the driving path (closed-form ground truths of
+    /// the §7.1 problems are functions of `W_T`).
+    pub w_terminal: Vec<f64>,
+    pub stats: GradStats,
+}
+
+impl From<GradientOutput> for Gradients {
+    fn from(o: GradientOutput) -> Gradients {
+        Gradients {
+            dz0: o.grad_z0,
+            dtheta: o.grad_theta,
+            z_terminal: o.z_terminal,
+            z0_reconstructed: o.z0_reconstructed,
+            w_terminal: o.w_terminal,
+            stats: GradStats {
+                forward: o.forward_stats,
+                backward: o.backward_stats,
+                noise_memory: o.noise_memory,
+                hit_h_min: false,
+            },
+        }
+    }
+}
+
+fn from_antithetic(pair: AntitheticOutput) -> Gradients {
+    let AntitheticOutput { grad_theta, grad_z0, plus, minus } = pair;
+    let mut forward = plus.forward_stats;
+    let mut backward = plus.backward_stats;
+    add_stats(&mut forward, &minus.forward_stats);
+    add_stats(&mut backward, &minus.backward_stats);
+    Gradients {
+        dz0: grad_z0,
+        dtheta: grad_theta,
+        z_terminal: plus.z_terminal,
+        z0_reconstructed: plus.z0_reconstructed,
+        w_terminal: plus.w_terminal,
+        stats: GradStats {
+            forward,
+            backward,
+            noise_memory: plus.noise_memory + minus.noise_memory,
+            hit_h_min: false,
+        },
+    }
+}
+
+/// Calculus/VJP/noise compatibility check, run before any integration.
+/// This is where the old mid-solve `ito_correction_vjp` panic surfaces as
+/// a [`ProblemError`] instead.
+fn validate_alg<S: SdeVjp + ?Sized>(
+    prob: &SdeProblem<'_, S>,
+    alg: &SensAlg,
+) -> Result<(), ProblemError> {
+    use crate::adjoint::NoiseMode;
+
+    let sde = prob.sde();
+    let name = alg.name();
+    match alg {
+        SensAlg::StochasticAdjoint(_) | SensAlg::Antithetic { .. } => {
+            // The backward Stratonovich dynamics need the correction VJP
+            // for Itô-native systems.
+            if sde.check_adjoint_compatible().is_err() {
+                return Err(ProblemError::MissingItoCorrectionVjp { algorithm: name });
+            }
+        }
+        SensAlg::Backprop { method } => {
+            if !matches!(method, Method::EulerMaruyama | Method::MilsteinIto) {
+                return Err(ProblemError::UnsupportedMethod { algorithm: name, method: *method });
+            }
+            if sde.calculus() != Calculus::Ito {
+                return Err(ProblemError::CalculusMismatch {
+                    algorithm: name,
+                    required: Calculus::Ito,
+                });
+            }
+            // The Milstein correction term's pullback needs second
+            // derivatives of σ.
+            if *method == Method::MilsteinIto && !sde.has_ito_correction_vjp() {
+                return Err(ProblemError::MissingItoCorrectionVjp { algorithm: name });
+            }
+        }
+        SensAlg::ForwardPathwise => {
+            if sde.calculus() != Calculus::Ito {
+                return Err(ProblemError::CalculusMismatch {
+                    algorithm: name,
+                    required: Calculus::Ito,
+                });
+            }
+        }
+    }
+    // Backprop and pathwise tape their own stored Brownian path: a
+    // virtual-tree or mirrored problem spec cannot be honored, so reject
+    // it instead of silently realizing a different path from the same
+    // key.
+    if matches!(alg, SensAlg::Backprop { .. } | SensAlg::ForwardPathwise)
+        && (prob.is_mirrored() || !matches!(prob.noise_spec(), NoiseMode::StoredPath))
+    {
+        return Err(ProblemError::UnsupportedNoise { algorithm: name });
+    }
+    Ok(())
+}
+
+impl<'a, S: SdeVjp + ?Sized> SdeProblem<'a, S> {
+    /// Gradients of an arbitrary scalar terminal loss `L(z_T)`:
+    /// `loss_grad` maps the realized terminal state to `∂L/∂z_T`. (For
+    /// [`SensAlg::Antithetic`] the closure runs once per branch.)
+    ///
+    /// For the adjoint family, the problem's noise spec and mirror flag
+    /// override the corresponding `AdjointConfig` fields.
+    /// `Backprop`/`ForwardPathwise` support only the default spec
+    /// (stored path, unmirrored) and return
+    /// [`ProblemError::UnsupportedNoise`] otherwise.
+    pub fn sensitivity<F>(
+        &self,
+        alg: &SensAlg,
+        step: StepControl,
+        mut loss_grad: F,
+    ) -> Result<Gradients, ProblemError>
+    where
+        F: FnMut(&[f64]) -> Vec<f64>,
+    {
+        validate_alg(self, alg)?;
+        let n_steps = match step {
+            StepControl::Adaptive(_) => return Err(ProblemError::AdaptiveSensitivityUnsupported),
+            other => other.resolve_steps(self.t0, self.t1),
+        };
+        let out = match alg {
+            SensAlg::StochasticAdjoint(cfg) => {
+                let eff = self.effective_adjoint_config(cfg);
+                adjoint_with_loss_core(
+                    self.sde,
+                    &self.theta,
+                    &self.z0,
+                    self.t0,
+                    self.t1,
+                    n_steps,
+                    self.key,
+                    &eff,
+                    &mut loss_grad,
+                )
+                .into()
+            }
+            SensAlg::Backprop { method } => backprop_core(
+                self.sde,
+                &self.theta,
+                &self.z0,
+                self.t0,
+                self.t1,
+                n_steps,
+                self.key,
+                *method,
+                &mut loss_grad,
+            )
+            .into(),
+            SensAlg::ForwardPathwise => pathwise_core(
+                self.sde,
+                &self.theta,
+                &self.z0,
+                self.t0,
+                self.t1,
+                n_steps,
+                self.key,
+                &mut loss_grad,
+            )
+            .into(),
+            SensAlg::Antithetic { base } => {
+                let eff = self.effective_adjoint_config(base);
+                from_antithetic(antithetic_core(
+                    self.sde,
+                    &self.theta,
+                    &self.z0,
+                    self.t0,
+                    self.t1,
+                    n_steps,
+                    self.key,
+                    &eff,
+                    &mut loss_grad,
+                ))
+            }
+        };
+        Ok(out)
+    }
+
+    /// Gradients of the paper's numerical-study loss `L = Σ_i z_T^(i)`
+    /// (its terminal gradient is the ones vector).
+    pub fn sensitivity_sum(
+        &self,
+        alg: &SensAlg,
+        step: StepControl,
+    ) -> Result<Gradients, ProblemError> {
+        self.sensitivity(alg, step, |z: &[f64]| vec![1.0; z.len()])
+    }
+
+    /// Multi-observation stochastic adjoint (App. 9.12): the loss is
+    /// `L = Σ_k ℓ_k(z_{t_k})` over `obs_times` (ascending, last equal to
+    /// the problem's `t1`). `loss_grads` receives the forward states at
+    /// all observation times (row-major `n_obs × d`) and returns every
+    /// `∂L/∂z_{t_k}` in the same layout; the backward pass injects each
+    /// gradient as it crosses the corresponding time.
+    pub fn sensitivity_at<F>(
+        &self,
+        obs_times: &[f64],
+        steps_per_interval: usize,
+        cfg: &AdjointConfig,
+        loss_grads: F,
+    ) -> Result<Gradients, ProblemError>
+    where
+        F: FnOnce(&[f64]) -> Vec<f64>,
+    {
+        validate_alg(self, &SensAlg::StochasticAdjoint(*cfg))?;
+        assert!(!obs_times.is_empty(), "sensitivity_at: need at least one observation time");
+        assert_eq!(
+            obs_times[obs_times.len() - 1],
+            self.t1,
+            "sensitivity_at: last observation time must equal the problem horizon"
+        );
+        let eff = self.effective_adjoint_config(cfg);
+        Ok(adjoint_multi_obs_core(
+            self.sde,
+            &self.theta,
+            &self.z0,
+            self.t0,
+            obs_times,
+            steps_per_interval,
+            self.key,
+            &eff,
+            loss_grads,
+        )
+        .into())
+    }
+
+    fn effective_adjoint_config(&self, cfg: &AdjointConfig) -> AdjointConfig {
+        AdjointConfig { noise: self.noise, mirror: self.mirror, ..*cfg }
+    }
+}
+
+impl<'a, P: ScalarSde> SdeProblem<'a, ReplicatedSde<P>> {
+    /// Stochastic adjoint with adaptive time-stepping in *both* passes
+    /// (Fig 5b's setting), available for replicated scalar problems whose
+    /// augmented backward system is fully diagonal. Uses a stored-path
+    /// noise source regardless of the problem's noise spec (adaptive
+    /// solves query at unpredictable times either way).
+    pub fn sensitivity_adaptive(&self, cfg: &AdaptiveConfig) -> Gradients {
+        let out =
+            adaptive_adjoint_core(self.sde, &self.theta, &self.z0, self.t0, self.t1, self.key, cfg);
+        Gradients {
+            dz0: out.grad_z0,
+            dtheta: out.grad_theta,
+            z_terminal: out.z_terminal,
+            z0_reconstructed: Vec::new(),
+            w_terminal: out.w_terminal,
+            stats: GradStats {
+                forward: out.forward_stats,
+                backward: out.backward_stats,
+                noise_memory: 0,
+                hit_h_min: out.hit_h_min,
+            },
+        }
+    }
+}
+
+/// Batch analogue of [`solve_batch`](super::solve_batch) for the summed
+/// loss `L = Σ z_T`: each problem is differentiated on its own key, in
+/// parallel, with results in input order (deterministic regardless of
+/// thread count).
+pub fn sensitivity_batch<'a, S>(
+    problems: &[SdeProblem<'a, S>],
+    alg: &SensAlg,
+    step: StepControl,
+) -> Vec<Result<Gradients, ProblemError>>
+where
+    S: SdeVjp + Sync + ?Sized,
+{
+    par_map(problems.len(), |i| problems[i].sensitivity_sum(alg, step))
+}

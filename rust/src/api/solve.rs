@@ -1,0 +1,409 @@
+//! Forward solves: [`SolveOptions`] → [`SdeSolution`], plus the
+//! thread-parallel [`solve_batch`] entry point.
+
+use super::problem::SdeProblem;
+use crate::adjoint::stochastic::Noise;
+use crate::brownian::BrownianMotion;
+use crate::sde::{ForwardFunc, Sde};
+use crate::solvers::{
+    adaptive_core, grid_core, grid_saving_core, uniform_grid, AdaptiveConfig, Method, SolveStats,
+};
+
+/// How the solver advances time.
+#[derive(Clone, Copy, Debug)]
+pub enum StepControl {
+    /// Fixed step size `dt`; the horizon is divided into
+    /// `round(|t1 − t0| / dt)` uniform steps (at least one).
+    Fixed(f64),
+    /// Exactly `n` uniform steps across the horizon (per save interval
+    /// when combined with [`SaveAt::Grid`]).
+    Steps(usize),
+    /// Adaptive step-doubling with a PI controller (forward solves only;
+    /// saves the final state).
+    Adaptive(AdaptiveConfig),
+}
+
+impl StepControl {
+    /// Number of uniform steps across `(t0, t1)` for the fixed variants.
+    pub(crate) fn resolve_steps(&self, t0: f64, t1: f64) -> usize {
+        match self {
+            StepControl::Fixed(dt) => (((t1 - t0) / dt).abs().round() as usize).max(1),
+            StepControl::Steps(n) => (*n).max(1),
+            StepControl::Adaptive(_) => {
+                unreachable!("resolve_steps called with adaptive step control")
+            }
+        }
+    }
+}
+
+/// Which states the solution records.
+#[derive(Clone, Copy, Debug, Default)]
+pub enum SaveAt<'t> {
+    /// Only the state at `t1` (cheapest; the default).
+    #[default]
+    Final,
+    /// The state at each listed time (must start at `t0` and end at `t1`;
+    /// the solver steps uniformly *within* each interval, so the listed
+    /// times are hit exactly).
+    Grid(&'t [f64]),
+    /// The state at every solver step.
+    Dense,
+}
+
+/// Everything about *how* to solve (nothing about *what* — that is the
+/// problem's job).
+#[derive(Clone, Copy, Debug)]
+pub struct SolveOptions<'t> {
+    /// Single-step scheme. Itô schemes integrate the Itô reading of the
+    /// coefficients, Stratonovich schemes the converted form — either way
+    /// the solve targets the process the SDE natively defines.
+    pub method: Method,
+    pub step: StepControl,
+    pub save: SaveAt<'t>,
+}
+
+impl Default for SolveOptions<'static> {
+    fn default() -> Self {
+        SolveOptions {
+            method: Method::MilsteinIto,
+            step: StepControl::Steps(100),
+            save: SaveAt::Final,
+        }
+    }
+}
+
+impl SolveOptions<'static> {
+    /// Fixed-grid options: `n_steps` uniform steps, final state only.
+    pub fn fixed(method: Method, n_steps: usize) -> Self {
+        SolveOptions { method, step: StepControl::Steps(n_steps), save: SaveAt::Final }
+    }
+
+    /// Adaptive options: PI-controlled stepping, final state only.
+    pub fn adaptive(method: Method, cfg: AdaptiveConfig) -> Self {
+        SolveOptions { method, step: StepControl::Adaptive(cfg), save: SaveAt::Final }
+    }
+}
+
+impl<'t> SolveOptions<'t> {
+    /// Replace the save specification (changes the lifetime parameter, so
+    /// it rebuilds rather than mutates).
+    pub fn save<'u>(self, save: SaveAt<'u>) -> SolveOptions<'u> {
+        SolveOptions { method: self.method, step: self.step, save }
+    }
+}
+
+/// The realized Brownian source of a finished solve, handed back so the
+/// *same* sample path can be replayed — e.g. to query `W(t)` for
+/// closed-form comparisons, or to drive a backward pass. (A stored
+/// [`crate::brownian::BrownianPath`] is query-order dependent, so
+/// re-creating it from the seed would reveal a different path; the handle
+/// is the only faithful replay mechanism.)
+pub struct NoiseHandle {
+    pub(crate) inner: Noise,
+}
+
+impl BrownianMotion for NoiseHandle {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+    fn span(&self) -> (f64, f64) {
+        self.inner.span()
+    }
+    fn sample_into(&mut self, t: f64, out: &mut [f64]) {
+        self.inner.sample_into(t, out)
+    }
+    fn memory_footprint(&self) -> usize {
+        self.inner.memory_footprint()
+    }
+}
+
+/// The solution half of the API: saved states, solver statistics, and the
+/// noise handle needed for replay.
+pub struct SdeSolution {
+    /// Times at which states were saved (a single entry `t1` for
+    /// [`SaveAt::Final`]).
+    pub times: Vec<f64>,
+    /// Saved states, row-major `(times.len(), d)`.
+    pub states: Vec<f64>,
+    pub stats: SolveStats,
+    /// True if an adaptive controller hit `h_min` (accuracy not
+    /// certified).
+    pub hit_h_min: bool,
+    /// The Brownian source that drove the solve (replayable).
+    pub noise: NoiseHandle,
+    pub(crate) d: usize,
+}
+
+impl SdeSolution {
+    /// State dimension d.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Saved state at save-index `k`.
+    pub fn state(&self, k: usize) -> &[f64] {
+        &self.states[k * self.d..(k + 1) * self.d]
+    }
+
+    /// The state at the end of the horizon.
+    pub fn final_state(&self) -> &[f64] {
+        self.state(self.times.len() - 1)
+    }
+
+    /// Time of the last saved state.
+    pub fn final_time(&self) -> f64 {
+        *self.times.last().expect("solution has at least one saved state")
+    }
+
+    /// Linear interpolation of the saved trajectory at `t` (clamped to
+    /// the saved range; exact at saved times).
+    pub fn at(&self, t: f64) -> Vec<f64> {
+        let n = self.times.len();
+        let d = self.d;
+        if n == 1 {
+            return self.states[..d].to_vec();
+        }
+        let ascending = self.times[n - 1] >= self.times[0];
+        let (mut lo, mut hi) = (0usize, n - 1);
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            let below = if ascending { self.times[mid] <= t } else { self.times[mid] >= t };
+            if below {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let (ta, tb) = (self.times[lo], self.times[hi]);
+        let w = if tb == ta { 0.0 } else { ((t - ta) / (tb - ta)).clamp(0.0, 1.0) };
+        let a = self.state(lo);
+        let b = self.state(hi);
+        a.iter().zip(b).map(|(x, y)| x + w * (y - x)).collect()
+    }
+
+    /// Replay the realized Brownian path at `t`.
+    pub fn w(&mut self, t: f64) -> Vec<f64> {
+        self.noise.sample(t)
+    }
+}
+
+impl<'a, S: Sde + ?Sized> SdeProblem<'a, S> {
+    /// Solve the problem forward according to `opts`.
+    ///
+    /// Panics on structurally invalid combinations (adaptive stepping
+    /// with non-final saves; a save grid that does not span the horizon);
+    /// everything value-dependent was validated at construction.
+    pub fn solve(&self, opts: &SolveOptions<'_>) -> SdeSolution {
+        let d = self.dim();
+        let mut noise = Noise::new(self.noise, self.key, d, self.t0, self.t1, self.mirror);
+
+        if let StepControl::Adaptive(cfg) = opts.step {
+            assert!(
+                matches!(opts.save, SaveAt::Final),
+                "SdeProblem::solve: adaptive stepping only supports SaveAt::Final"
+            );
+            let mut sys = ForwardFunc::for_method(self.sde, &self.theta, opts.method);
+            let res =
+                adaptive_core(&mut sys, opts.method, &self.z0, self.t0, self.t1, &mut noise, &cfg);
+            return SdeSolution {
+                times: vec![self.t1],
+                states: res.y,
+                stats: res.stats,
+                hit_h_min: res.hit_h_min,
+                noise: NoiseHandle { inner: noise },
+                d,
+            };
+        }
+
+        match opts.save {
+            SaveAt::Final => {
+                let n = opts.step.resolve_steps(self.t0, self.t1);
+                let grid = uniform_grid(self.t0, self.t1, n);
+                let mut sys = ForwardFunc::for_method(self.sde, &self.theta, opts.method);
+                let mut y = vec![0.0; d];
+                let stats = grid_core(&mut sys, opts.method, &self.z0, &grid, &mut noise, &mut y);
+                SdeSolution {
+                    times: vec![self.t1],
+                    states: y,
+                    stats,
+                    hit_h_min: false,
+                    noise: NoiseHandle { inner: noise },
+                    d,
+                }
+            }
+            SaveAt::Dense => {
+                let n = opts.step.resolve_steps(self.t0, self.t1);
+                let grid = uniform_grid(self.t0, self.t1, n);
+                let mut sys = ForwardFunc::for_method(self.sde, &self.theta, opts.method);
+                let (states, stats) =
+                    grid_saving_core(&mut sys, opts.method, &self.z0, &grid, &mut noise);
+                SdeSolution {
+                    times: grid,
+                    states,
+                    stats,
+                    hit_h_min: false,
+                    noise: NoiseHandle { inner: noise },
+                    d,
+                }
+            }
+            SaveAt::Grid(ts) => {
+                assert!(ts.len() >= 2, "SaveAt::Grid: need at least two save times");
+                assert_eq!(ts[0], self.t0, "SaveAt::Grid: first save time must be t0");
+                assert_eq!(ts[ts.len() - 1], self.t1, "SaveAt::Grid: last save time must be t1");
+                let mut y = self.z0.clone();
+                let mut states = vec![0.0; ts.len() * d];
+                states[..d].copy_from_slice(&y);
+                let mut stats = SolveStats::default();
+                let mut sys = ForwardFunc::for_method(self.sde, &self.theta, opts.method);
+                for k in 1..ts.len() {
+                    let n_k = match opts.step {
+                        StepControl::Steps(n) => n.max(1),
+                        StepControl::Fixed(dt) => {
+                            (((ts[k] - ts[k - 1]) / dt).abs().round() as usize).max(1)
+                        }
+                        StepControl::Adaptive(_) => unreachable!(),
+                    };
+                    let grid = uniform_grid(ts[k - 1], ts[k], n_k);
+                    let mut y_next = vec![0.0; d];
+                    let st = grid_core(&mut sys, opts.method, &y, &grid, &mut noise, &mut y_next);
+                    add_stats(&mut stats, &st);
+                    y = y_next;
+                    states[k * d..(k + 1) * d].copy_from_slice(&y);
+                }
+                SdeSolution {
+                    times: ts.to_vec(),
+                    states,
+                    stats,
+                    hit_h_min: false,
+                    noise: NoiseHandle { inner: noise },
+                    d,
+                }
+            }
+        }
+    }
+
+    /// Piecewise solve over the save times `ts` (ascending, spanning the
+    /// horizon) with `substeps` uniform solver steps per interval and a
+    /// per-interval parameter override: before integrating interval `k`
+    /// (from `ts[k]` to `ts[k+1]`), `theta_for` may rewrite the working
+    /// parameter vector in place (it starts as the problem's θ).
+    ///
+    /// This is the primitive behind context-conditioned solves — the
+    /// latent-SDE posterior integrates each observation interval with the
+    /// encoder context appended to θ — while sharing one Brownian source
+    /// across intervals, exactly as a single continuous solve would.
+    pub fn solve_intervals<F>(
+        &self,
+        ts: &[f64],
+        substeps: usize,
+        method: Method,
+        mut theta_for: F,
+    ) -> SdeSolution
+    where
+        F: FnMut(usize, &mut [f64]),
+    {
+        let d = self.dim();
+        assert!(ts.len() >= 2, "solve_intervals: need at least two save times");
+        assert_eq!(ts[0], self.t0, "solve_intervals: first save time must be t0");
+        assert_eq!(ts[ts.len() - 1], self.t1, "solve_intervals: last save time must be t1");
+        let mut noise = Noise::new(self.noise, self.key, d, self.t0, self.t1, self.mirror);
+
+        let mut theta = self.theta.clone();
+        let mut y = self.z0.clone();
+        let mut states = vec![0.0; ts.len() * d];
+        states[..d].copy_from_slice(&y);
+        let mut stats = SolveStats::default();
+        for k in 1..ts.len() {
+            theta_for(k - 1, &mut theta);
+            let grid = uniform_grid(ts[k - 1], ts[k], substeps.max(1));
+            let mut sys = ForwardFunc::for_method(self.sde, &theta, method);
+            let mut y_next = vec![0.0; d];
+            let st = grid_core(&mut sys, method, &y, &grid, &mut noise, &mut y_next);
+            add_stats(&mut stats, &st);
+            y = y_next;
+            states[k * d..(k + 1) * d].copy_from_slice(&y);
+        }
+        SdeSolution {
+            times: ts.to_vec(),
+            states,
+            stats,
+            hit_h_min: false,
+            noise: NoiseHandle { inner: noise },
+            d,
+        }
+    }
+}
+
+pub(crate) fn add_stats(total: &mut SolveStats, one: &SolveStats) {
+    total.steps += one.steps;
+    total.rejected += one.rejected;
+    total.nfe_drift += one.nfe_drift;
+    total.nfe_diffusion += one.nfe_diffusion;
+}
+
+/// Solve many problems concurrently on a `std::thread::scope` pool (the
+/// vendored crate set has no rayon; see `coordinator::trainer` for the
+/// same idiom). Results are returned in input order and are *identical*
+/// to sequential solving regardless of thread count: each problem is a
+/// pure function of its own key, so parallelism only affects scheduling.
+///
+/// Give each replicate its own key (e.g. via
+/// [`SdeProblem::replicates`]) — problems sharing a key realize the same
+/// Brownian path.
+pub fn solve_batch<'a, S>(
+    problems: &[SdeProblem<'a, S>],
+    opts: &SolveOptions<'_>,
+) -> Vec<SdeSolution>
+where
+    S: Sde + Sync + ?Sized,
+{
+    par_map(problems.len(), |i| problems[i].solve(opts))
+}
+
+/// Order-preserving parallel map over `0..n` on scoped threads.
+pub(crate) fn par_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers =
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(n);
+    if workers <= 1 {
+        return (0..n).map(f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let results: Vec<Vec<(usize, T)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let next = &next;
+                let f = &f;
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        out.push((i, f(i)));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("batch worker panicked")).collect()
+    });
+
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for chunk in results {
+        for (i, v) in chunk {
+            slots[i] = Some(v);
+        }
+    }
+    slots.into_iter().map(|s| s.expect("batch worker covered every index")).collect()
+}

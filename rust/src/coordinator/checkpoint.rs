@@ -3,7 +3,8 @@
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 
 const MAGIC: &[u8; 8] = b"SDEGRAD1";
 

@@ -13,10 +13,8 @@
 //! Fig 5 shows Example 2; Fig 7 shows Examples 1 and 3. One harness runs
 //! all three.
 
-use crate::adjoint::{
-    adaptive_adjoint_gradients, backprop_through_solver, stochastic_adjoint_gradients,
-    AdjointConfig,
-};
+use crate::adjoint::AdjointConfig;
+use crate::api::{SdeProblem, SensAlg, StepControl};
 use crate::metrics::{CsvWriter, Quartiles, Stopwatch};
 use crate::prng::PrngKey;
 use crate::sde::problems::{sample_experiment_setup, Example1, Example2, Example3};
@@ -34,21 +32,19 @@ fn adjoint_error<P: ScalarSde + Copy>(
     let sde = ReplicatedSde::new(problem, DIM);
     let key = PrngKey::from_seed(seed);
     let (theta, x0) = sample_experiment_setup(key, DIM, problem.nparams());
-    let out = stochastic_adjoint_gradients(
-        &sde,
-        &theta,
-        &x0,
-        0.0,
-        1.0,
-        n_steps,
-        key,
-        &AdjointConfig::default(),
-    );
+    let out = SdeProblem::new(&sde, &x0, (0.0, 1.0))
+        .params(&theta)
+        .key(key)
+        .sensitivity_sum(
+            &SensAlg::StochasticAdjoint(AdjointConfig::default()),
+            StepControl::Steps(n_steps),
+        )
+        .expect("adjoint-compatible problem");
     let mut g_x0 = vec![0.0; DIM];
     let mut g_th = vec![0.0; theta.len()];
     sde.analytic_loss_gradients(1.0, &x0, &theta, &out.w_terminal, &mut g_x0, &mut g_th);
     g_th.iter()
-        .zip(&out.grad_theta)
+        .zip(&out.dtheta)
         .map(|(a, b)| (a - b).abs())
         .sum::<f64>()
         / g_th.len() as f64
@@ -97,17 +93,20 @@ pub fn panel_b<P: ScalarSde + Copy>(problem: P, quick: bool, csv: &mut CsvWriter
             let key = PrngKey::from_seed(900 + r);
             let (theta, x0) = sample_experiment_setup(key, DIM, problem.nparams());
             let cfg = AdaptiveConfig { atol, rtol: 0.0, h0: 1e-2, ..Default::default() };
-            let out = adaptive_adjoint_gradients(&sde, &theta, &x0, 0.0, 1.0, key, &cfg);
+            let out = SdeProblem::new(&sde, &x0, (0.0, 1.0))
+                .params(&theta)
+                .key(key)
+                .sensitivity_adaptive(&cfg);
             let mut g_x0 = vec![0.0; DIM];
             let mut g_th = vec![0.0; theta.len()];
             sde.analytic_loss_gradients(1.0, &x0, &theta, &out.w_terminal, &mut g_x0, &mut g_th);
             mse_acc += g_th
                 .iter()
-                .zip(&out.grad_theta)
+                .zip(&out.dtheta)
                 .map(|(a, b)| (a - b) * (a - b))
                 .sum::<f64>()
                 / g_th.len() as f64;
-            nfe_acc += out.forward_stats.nfe() + out.backward_stats.nfe();
+            nfe_acc += out.stats.nfe();
         }
         let mse = mse_acc / n_paths as f64;
         let nfe = nfe_acc as f64 / n_paths as f64;
@@ -133,58 +132,12 @@ pub fn panel_c<P: ScalarSde + Copy>(problem: P, quick: bool, csv: &mut CsvWriter
         "method", "L", "time (ms)", "mean |err|"
     );
     for &steps in dts {
-        type Runner<'a, P2> = Box<dyn Fn(&ReplicatedSde<P2>, &[f64], &[f64], PrngKey) -> (Vec<f64>, Vec<f64>) + 'a>;
-        let variants: Vec<(&str, Runner<P>)> = vec![
-            (
-                "adjoint_milstein",
-                Box::new(move |sde, th, x0, k| {
-                    let out = stochastic_adjoint_gradients(
-                        sde,
-                        th,
-                        x0,
-                        0.0,
-                        1.0,
-                        steps,
-                        k,
-                        &AdjointConfig::default(),
-                    );
-                    (out.grad_theta, out.w_terminal)
-                }),
-            ),
-            (
-                "backprop_euler",
-                Box::new(move |sde, th, x0, k| {
-                    let out = backprop_through_solver(
-                        sde,
-                        th,
-                        x0,
-                        0.0,
-                        1.0,
-                        steps,
-                        k,
-                        Method::EulerMaruyama,
-                    );
-                    (out.grad_theta, out.w_terminal)
-                }),
-            ),
-            (
-                "backprop_milstein",
-                Box::new(move |sde, th, x0, k| {
-                    let out = backprop_through_solver(
-                        sde,
-                        th,
-                        x0,
-                        0.0,
-                        1.0,
-                        steps,
-                        k,
-                        Method::MilsteinIto,
-                    );
-                    (out.grad_theta, out.w_terminal)
-                }),
-            ),
+        let variants: Vec<(&str, SensAlg)> = vec![
+            ("adjoint_milstein", SensAlg::StochasticAdjoint(AdjointConfig::default())),
+            ("backprop_euler", SensAlg::Backprop { method: Method::EulerMaruyama }),
+            ("backprop_milstein", SensAlg::Backprop { method: Method::MilsteinIto }),
         ];
-        for (name, runner) in &variants {
+        for (name, alg) in &variants {
             let mut err_acc = 0.0;
             let mut time_acc = 0.0;
             for r in 0..n_paths {
@@ -192,14 +145,25 @@ pub fn panel_c<P: ScalarSde + Copy>(problem: P, quick: bool, csv: &mut CsvWriter
                 let key = PrngKey::from_seed(500 + r);
                 let (theta, x0) = sample_experiment_setup(key, DIM, problem.nparams());
                 let sw = Stopwatch::new();
-                let (grad_theta, w_t) = runner(&sde, &theta, &x0, key);
+                let out = SdeProblem::new(&sde, &x0, (0.0, 1.0))
+                    .params(&theta)
+                    .key(key)
+                    .sensitivity_sum(alg, StepControl::Steps(steps))
+                    .expect("estimator validated for this SDE");
                 time_acc += sw.elapsed_s();
                 let mut g_x0 = vec![0.0; DIM];
                 let mut g_th = vec![0.0; theta.len()];
-                sde.analytic_loss_gradients(1.0, &x0, &theta, &w_t, &mut g_x0, &mut g_th);
+                sde.analytic_loss_gradients(
+                    1.0,
+                    &x0,
+                    &theta,
+                    &out.w_terminal,
+                    &mut g_x0,
+                    &mut g_th,
+                );
                 err_acc += g_th
                     .iter()
-                    .zip(&grad_theta)
+                    .zip(&out.dtheta)
                     .map(|(a, b)| (a - b).abs())
                     .sum::<f64>()
                     / g_th.len() as f64;

@@ -14,10 +14,8 @@
 //! as in §7.1). The *shape* — growth exponents and who wins — is the
 //! reproduction target.
 
-use crate::adjoint::{
-    backprop_through_solver, forward_pathwise_gradients, stochastic_adjoint_gradients,
-    AdjointConfig, NoiseMode,
-};
+use crate::adjoint::{AdjointConfig, NoiseMode};
+use crate::api::{sensitivity_batch, SdeProblem, SensAlg, StepControl};
 use crate::metrics::{CsvWriter, Stopwatch};
 use crate::prng::PrngKey;
 use crate::sde::problems::{sample_experiment_setup, Example1};
@@ -29,6 +27,10 @@ use crate::solvers::Method;
 pub struct Row {
     pub method: &'static str,
     pub steps: usize,
+    /// Amortized batch wall-clock per run (reps fan across threads via
+    /// `sensitivity_batch` — multi-path throughput, not single-run
+    /// latency; contention can shift method ratios vs the paper's
+    /// per-run timing, so compare growth exponents, not absolutes).
     pub seconds: f64,
     pub memory_floats: usize,
     pub nfe: u64,
@@ -48,113 +50,66 @@ pub fn run(quick: bool) -> Vec<Row> {
     let mut rows = Vec::new();
     let mut csv = CsvWriter::create(
         super::out_dir().join("table1_complexity.csv"),
-        &["method", "steps", "seconds", "memory_floats", "nfe"],
+        &["method", "steps", "seconds_amortized_batch", "memory_floats", "nfe"],
     )
     .expect("csv");
 
     println!(
         "{:<22} {:>7} {:>12} {:>14} {:>10}",
-        "method", "L", "time (ms)", "mem (floats)", "NFE"
+        "method", "L", "ms/run*", "mem (floats)", "NFE"
     );
+    println!("(*amortized batch wall-clock per run — reps fan across threads)");
+    // Every estimator runs through one problem definition; only the
+    // SensAlg value (and the virtual-tree noise spec) changes. The reps
+    // fan across threads via sensitivity_batch, so reported time is
+    // amortized batch wall-clock per run (multi-path throughput — the
+    // quantity a traffic-serving deployment cares about).
     for &steps in steps_sweep {
-        type Runner<'a> = Box<dyn Fn(PrngKey) -> (f64, usize, u64) + 'a>;
-        let runners: Vec<(&'static str, Runner)> = vec![
-            (
-                "forward_pathwise",
-                Box::new(|k| {
-                    let sw = Stopwatch::new();
-                    let out = forward_pathwise_gradients(&sde, &theta, &x0, 0.0, 1.0, steps, k);
-                    (sw.elapsed_s(), out.noise_memory, out.forward_stats.nfe())
-                }),
-            ),
+        let variants: Vec<(&'static str, SensAlg, NoiseMode)> = vec![
+            ("forward_pathwise", SensAlg::ForwardPathwise, NoiseMode::StoredPath),
             (
                 "backprop_solver",
-                Box::new(|k| {
-                    let sw = Stopwatch::new();
-                    let out = backprop_through_solver(
-                        &sde,
-                        &theta,
-                        &x0,
-                        0.0,
-                        1.0,
-                        steps,
-                        k,
-                        Method::MilsteinIto,
-                    );
-                    (
-                        sw.elapsed_s(),
-                        out.noise_memory,
-                        out.forward_stats.nfe() + out.backward_stats.nfe(),
-                    )
-                }),
+                SensAlg::Backprop { method: Method::MilsteinIto },
+                NoiseMode::StoredPath,
             ),
             (
                 "adjoint_stored_path",
-                Box::new(|k| {
-                    let sw = Stopwatch::new();
-                    let out = stochastic_adjoint_gradients(
-                        &sde,
-                        &theta,
-                        &x0,
-                        0.0,
-                        1.0,
-                        steps,
-                        k,
-                        &AdjointConfig::default(),
-                    );
-                    (
-                        sw.elapsed_s(),
-                        out.noise_memory,
-                        out.forward_stats.nfe() + out.backward_stats.nfe(),
-                    )
-                }),
+                SensAlg::StochasticAdjoint(AdjointConfig::default()),
+                NoiseMode::StoredPath,
             ),
             (
                 "adjoint_virtual_tree",
-                Box::new(|k| {
-                    let sw = Stopwatch::new();
-                    let cfg = AdjointConfig {
-                        noise: NoiseMode::VirtualTree { tol: 0.1 / steps as f64 },
-                        ..Default::default()
-                    };
-                    let out = stochastic_adjoint_gradients(
-                        &sde, &theta, &x0, 0.0, 1.0, steps, k, &cfg,
-                    );
-                    (
-                        sw.elapsed_s(),
-                        out.noise_memory,
-                        out.forward_stats.nfe() + out.backward_stats.nfe(),
-                    )
-                }),
+                SensAlg::StochasticAdjoint(AdjointConfig::default()),
+                NoiseMode::VirtualTree { tol: 0.1 / steps as f64 },
             ),
         ];
-        for (name, runner) in &runners {
-            let mut best = f64::INFINITY;
-            let mut mem = 0;
-            let mut nfe = 0;
-            for r in 0..reps {
-                let (t, m, n) = runner(key.fold_in(1000 + r as u64));
-                best = best.min(t);
-                mem = m;
-                nfe = n;
-            }
+        for (name, alg, noise) in &variants {
+            let base = SdeProblem::new(&sde, &x0, (0.0, 1.0)).params(&theta).noise(*noise);
+            let problems: Vec<_> =
+                (0..reps).map(|r| base.clone().key(key.fold_in(1000 + r as u64))).collect();
+            let sw = Stopwatch::new();
+            let outs = sensitivity_batch(&problems, alg, StepControl::Steps(steps));
+            let per_run = sw.elapsed_s() / reps as f64;
+            let first = outs[0].as_ref().expect("algorithm validated for this SDE");
+            let mem = first.stats.noise_memory;
+            let nfe = first.stats.nfe();
             println!(
                 "{:<22} {:>7} {:>12.3} {:>14} {:>10}",
                 name,
                 steps,
-                best * 1e3,
+                per_run * 1e3,
                 mem,
                 nfe
             );
             csv.row(&[
                 name.to_string(),
                 steps.to_string(),
-                format!("{best}"),
+                format!("{per_run}"),
                 mem.to_string(),
                 nfe.to_string(),
             ])
             .ok();
-            rows.push(Row { method: name, steps, seconds: best, memory_floats: mem, nfe });
+            rows.push(Row { method: *name, steps, seconds: per_run, memory_floats: mem, nfe });
         }
     }
     csv.flush().ok();

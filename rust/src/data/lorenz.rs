@@ -6,11 +6,10 @@
 //! dimension; Gaussian observation noise 0.01.
 
 use super::timeseries::TimeSeriesDataset;
-use crate::brownian::BrownianPath;
+use crate::api::{SaveAt, SdeProblem, SolveOptions, StepControl};
 use crate::prng::PrngKey;
 use crate::sde::lorenz::{paper_theta, StochasticLorenz};
-use crate::sde::ForwardFunc;
-use crate::solvers::{integrate_grid_saving, uniform_grid, Method};
+use crate::solvers::Method;
 
 /// Configuration for the Lorenz dataset generator.
 #[derive(Clone, Copy, Debug)]
@@ -45,21 +44,35 @@ pub fn generate(key: PrngKey, cfg: &LorenzConfig) -> TimeSeriesDataset {
     let theta = paper_theta();
     let sde = StochasticLorenz;
     let n_steps = (n_obs - 1) * cfg.substeps;
-    let grid = uniform_grid(0.0, cfg.t1, n_steps);
+    let opts = SolveOptions {
+        method: Method::Heun,
+        step: StepControl::Steps(n_steps),
+        save: SaveAt::Dense,
+    };
+
+    // One problem per series, each on its own Brownian stream; solved in
+    // parallel via the batch API (ground-truth generation is the
+    // dominant cost of dataset construction).
+    let probs: Vec<(Vec<f64>, PrngKey)> = (0..cfg.n_series)
+        .map(|s| {
+            let (kx, kw) = key.fold_in(s as u64).split();
+            let mut z0 = [0.0; 3];
+            kx.fill_normal(0, &mut z0);
+            (z0.to_vec(), kw)
+        })
+        .collect();
+    let problems: Vec<SdeProblem<'_, StochasticLorenz>> = probs
+        .iter()
+        .map(|(z0, kw)| SdeProblem::new(&sde, z0, (0.0, cfg.t1)).params(&theta).key(*kw))
+        .collect();
+    let sols = crate::api::solve_batch(&problems, &opts);
 
     let mut values = vec![0.0; cfg.n_series * n_obs * 3];
-    for s in 0..cfg.n_series {
-        let ks = key.fold_in(s as u64);
-        let (kx, kw) = ks.split();
-        let mut z0 = [0.0; 3];
-        kx.fill_normal(0, &mut z0);
-        let mut bm = BrownianPath::new(kw, 3, 0.0, cfg.t1);
-        let mut sys = ForwardFunc::for_method(&sde, &theta, Method::Heun);
-        let (traj, _) = integrate_grid_saving(&mut sys, Method::Heun, &z0, &grid, &mut bm);
+    for (s, sol) in sols.iter().enumerate() {
         for k in 0..n_obs {
             let src = k * cfg.substeps * 3;
             values[(s * n_obs + k) * 3..(s * n_obs + k + 1) * 3]
-                .copy_from_slice(&traj[src..src + 3]);
+                .copy_from_slice(&sol.states[src..src + 3]);
         }
     }
 

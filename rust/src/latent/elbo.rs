@@ -28,11 +28,10 @@
 use super::model::{Encoder, LatentSdeModel};
 use super::posterior::PosteriorSde;
 use crate::adjoint::BackwardSolver;
-use crate::brownian::BrownianPath;
+use crate::api::SdeProblem;
 use crate::nn::gru::GruStepCache;
 use crate::prng::PrngKey;
-use crate::sde::ForwardFunc;
-use crate::solvers::{integrate_grid, uniform_grid, Method, SolveStats};
+use crate::solvers::{uniform_grid, Method, SolveStats};
 
 /// Per-step ELBO configuration.
 #[derive(Clone, Copy, Debug)]
@@ -201,32 +200,26 @@ pub fn elbo_step(
     }
 
     // ---- 2. Forward solve with running KL. ---------------------------
+    // Piecewise solve through the problem API: one shared Brownian source
+    // across intervals, the encoder context swapped into the parameter
+    // tail per interval, and the (z, ℓ) state saved at each obs time.
     let sde = PosteriorSde::new(model);
     let n_sde = sde.sde_param_len();
     let aug = dz + 1;
-    let mut bm = BrownianPath::new(k_bm, aug, times[0], times[n_obs - 1]);
     let mut theta_full = vec![0.0; n_sde + dc];
     theta_full[..n_sde].copy_from_slice(&params[..n_sde]);
 
-    let mut y = vec![0.0; aug];
-    y[..dz].copy_from_slice(&z0);
-    let mut y_obs = vec![0.0; n_obs * aug]; // (z, l) at each obs time
-    y_obs[..aug].copy_from_slice(&y);
-    let mut forward_stats = SolveStats::default();
-
-    for k in 1..n_obs {
-        theta_full[n_sde..].copy_from_slice(&enc.ctx[(k - 1) * dc..k * dc]);
-        let grid = uniform_grid(times[k - 1], times[k], cfg.substeps);
-        let mut sys = ForwardFunc::for_method(&sde, &theta_full, Method::Heun);
-        let mut y_next = vec![0.0; aug];
-        let st = integrate_grid(&mut sys, Method::Heun, &y, &grid, &mut bm, &mut y_next);
-        forward_stats.steps += st.steps;
-        forward_stats.nfe_drift += st.nfe_drift;
-        forward_stats.nfe_diffusion += st.nfe_diffusion;
-        y.copy_from_slice(&y_next);
-        y_obs[k * aug..(k + 1) * aug].copy_from_slice(&y);
-    }
-    let kl_path = y[dz];
+    let mut y0_aug = vec![0.0; aug];
+    y0_aug[..dz].copy_from_slice(&z0);
+    let mut sol = SdeProblem::new(&sde, &y0_aug, (times[0], times[n_obs - 1]))
+        .params(&theta_full)
+        .key(k_bm)
+        .solve_intervals(times, cfg.substeps, Method::Heun, |k, th| {
+            th[n_sde..].copy_from_slice(&enc.ctx[k * dc..(k + 1) * dc]);
+        });
+    let forward_stats = sol.stats;
+    let y_obs = std::mem::take(&mut sol.states); // (z, l) at each obs time
+    let kl_path = y_obs[(n_obs - 1) * aug + dz];
 
     // ---- 3. Reconstruction terms. ------------------------------------
     let mut dec_cache = model.decoder.cache();
@@ -298,7 +291,16 @@ pub fn elbo_step(
         solver.set_theta(&theta_full);
         let grid = uniform_grid(times[k], times[k - 1], cfg.substeps); // descending
         ath_full.fill(0.0);
-        solver.solve_interval(&grid, &mut yb, &mut a, &mut ath_full, &mut bm, &mut backward_stats);
+        // Replay the forward pass's realized path via the solution's
+        // noise handle.
+        solver.solve_interval(
+            &grid,
+            &mut yb,
+            &mut a,
+            &mut ath_full,
+            &mut sol.noise,
+            &mut backward_stats,
+        );
         for (g, a) in grad[..n_sde].iter_mut().zip(&ath_full[..n_sde]) {
             *g += a;
         }

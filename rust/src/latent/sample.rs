@@ -9,11 +9,11 @@
 
 use super::model::{Encoder, LatentSdeModel};
 use super::posterior::PosteriorSde;
-use crate::brownian::BrownianPath;
+use crate::api::{SaveAt, SdeProblem, SolveOptions, StepControl};
 use crate::nn::gru::GruStepCache;
 use crate::prng::PrngKey;
-use crate::sde::{Calculus, ForwardFunc, Sde};
-use crate::solvers::{integrate_grid_saving, uniform_grid, Method};
+use crate::sde::{Calculus, Sde};
+use crate::solvers::Method;
 
 /// The prior latent SDE `dZ = h_θ(z,t) dt + σ(z) ∘ dW` as an [`Sde`]
 /// (no adjoint needed for sampling).
@@ -77,17 +77,23 @@ pub fn sample_prior_path(
         }
     }
     let sde = PriorSde { model };
-    let mut bm = BrownianPath::new(kw, dz, times[0], *times.last().unwrap());
-    // Fine grid covering all obs times; then subsample.
+    // Fine dense solve covering all obs times; then subsample.
     let n_total = (times.len() - 1) * substeps;
-    let grid = uniform_grid(times[0], *times.last().unwrap(), n_total.max(1));
-    let mut sys = ForwardFunc::for_method(&sde, params, Method::Heun);
-    let (traj, _) = integrate_grid_saving(&mut sys, Method::Heun, &z0, &grid, &mut bm);
+    let sol = SdeProblem::new(&sde, &z0, (times[0], *times.last().unwrap()))
+        .params(params)
+        .key(kw)
+        .solve(
+            &SolveOptions {
+                method: Method::Heun,
+                step: StepControl::Steps(n_total.max(1)),
+                save: SaveAt::Dense,
+            },
+        );
     // Subsample at obs times (uniform spacing assumed within tolerance).
     let mut out = vec![0.0; times.len() * dz];
     for (k, _) in times.iter().enumerate() {
         let src = (k * substeps).min(n_total);
-        out[k * dz..(k + 1) * dz].copy_from_slice(&traj[src * dz..(src + 1) * dz]);
+        out[k * dz..(k + 1) * dz].copy_from_slice(&sol.states[src * dz..(src + 1) * dz]);
     }
     out
 }
@@ -122,22 +128,22 @@ pub fn sample_posterior_path(
     let sde = PosteriorSde::new(model);
     let n_sde = sde.sde_param_len();
     let aug = dz + 1;
-    let mut bm = BrownianPath::new(k_bm, aug, times[0], times[n_obs - 1]);
     let mut theta_full = vec![0.0; n_sde + dc];
     theta_full[..n_sde].copy_from_slice(&params[..n_sde]);
 
-    let mut y = vec![0.0; aug];
-    y[..dz].copy_from_slice(&z0);
+    // Piecewise posterior solve: one shared Brownian source, per-interval
+    // encoder context in the parameter tail.
+    let mut y0 = vec![0.0; aug];
+    y0[..dz].copy_from_slice(&z0);
+    let sol = SdeProblem::new(&sde, &y0, (times[0], times[n_obs - 1]))
+        .params(&theta_full)
+        .key(k_bm)
+        .solve_intervals(times, substeps, Method::Heun, |k, th| {
+            th[n_sde..].copy_from_slice(&ctx[k * dc..(k + 1) * dc]);
+        });
     let mut out = vec![0.0; n_obs * dz];
-    out[..dz].copy_from_slice(&z0);
-    for k in 1..n_obs {
-        theta_full[n_sde..].copy_from_slice(&ctx[(k - 1) * dc..k * dc]);
-        let grid = uniform_grid(times[k - 1], times[k], substeps);
-        let mut sys = ForwardFunc::for_method(&sde, &theta_full, Method::Heun);
-        let mut y_next = vec![0.0; aug];
-        crate::solvers::integrate_grid(&mut sys, Method::Heun, &y, &grid, &mut bm, &mut y_next);
-        y.copy_from_slice(&y_next);
-        out[k * dz..(k + 1) * dz].copy_from_slice(&y[..dz]);
+    for k in 0..n_obs {
+        out[k * dz..(k + 1) * dz].copy_from_slice(&sol.state(k)[..dz]);
     }
     out
 }

@@ -7,16 +7,62 @@
 //! trainable framework with a coordinator, data pipeline, and benchmark
 //! harness for every table and figure in the paper.
 //!
-//! Architecture (see DESIGN.md):
-//! * L3 (this crate) — solvers, adjoint, Brownian sources, NN/optim,
-//!   latent-SDE training, coordinator. Python never runs at train time.
-//! * L2/L1 (python/compile) — JAX compute graph + Pallas kernel, AOT-lowered
-//!   to HLO text under `artifacts/`, executed via [`runtime`] (PJRT CPU).
+//! ## The API: problem → solve → sensitivity
+//!
+//! Everything goes through [`api::SdeProblem`] — define *what* once, then
+//! choose *how* per call:
+//!
+//! ```no_run
+//! use sdegrad::prelude::*;
+//! use sdegrad::sde::problems::Example1;
+//! use sdegrad::sde::ReplicatedSde;
+//!
+//! // 10-d replicated geometric Brownian motion (§7.1).
+//! let sde = ReplicatedSde::new(Example1, 10);
+//! let (theta, z0) = (vec![0.5; 20], vec![1.0; 10]);
+//!
+//! let prob = SdeProblem::new(&sde, &z0, (0.0, 1.0))
+//!     .params(&theta)
+//!     .key(PrngKey::from_seed(7));
+//!
+//! // Forward solve with any scheme / step control / save spec...
+//! let sol = prob.solve(&SolveOptions::fixed(Method::MilsteinIto, 1000));
+//! println!("z_T = {:?}", sol.final_state());
+//!
+//! // ...and gradients with any estimator, at the same Brownian path.
+//! let g = prob
+//!     .sensitivity_sum(
+//!         &SensAlg::StochasticAdjoint(AdjointConfig::default()),
+//!         StepControl::Steps(1000),
+//!     )
+//!     .unwrap();
+//! println!("∂L/∂θ = {:?}", g.dtheta);
+//! ```
+//!
+//! Swap `SensAlg::StochasticAdjoint(..)` for `SensAlg::Backprop { .. }`,
+//! `SensAlg::ForwardPathwise`, or `SensAlg::Antithetic { .. }` to change
+//! the estimator; set `.noise(NoiseSpec::VirtualTree { tol })` for the
+//! paper's O(1)-memory noise source; use [`api::solve_batch`] /
+//! [`api::sensitivity_batch`] for thread-parallel multi-path throughput.
+//! The pre-0.2 free functions (`integrate_grid`,
+//! `stochastic_adjoint_gradients`, …) remain as `#[deprecated]` shims
+//! with bit-identical results.
+//!
+//! ## Architecture (see DESIGN.md)
+//!
+//! * L3 (this crate) — [`api`] over solvers, adjoint, Brownian sources,
+//!   NN/optim, latent-SDE training, coordinator. Python never runs at
+//!   train time.
+//! * L2/L1 (python/compile) — JAX compute graph + Pallas kernel,
+//!   AOT-lowered to HLO text under `artifacts/`, executed via [`runtime`]
+//!   (PJRT CPU; `xla` cargo feature).
 
 pub mod adjoint;
+pub mod api;
 pub mod brownian;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod latent;
 pub mod metrics;
 pub mod nn;
@@ -27,15 +73,18 @@ pub mod sde;
 pub mod solvers;
 pub mod testing;
 
-/// Convenience re-exports for examples and benches.
+/// Convenience re-exports: the problem–solver–solution API plus the core
+/// trait/config vocabulary it is spoken in.
 pub mod prelude {
-    pub use crate::adjoint::{
-        stochastic_adjoint_gradients, AdjointConfig, GradientOutput, NoiseMode,
+    pub use crate::adjoint::{AdjointConfig, NoiseMode};
+    pub use crate::api::{
+        sensitivity_batch, solve_batch, GradStats, Gradients, NoiseSpec, ProblemError, SaveAt,
+        SdeProblem, SdeSolution, SensAlg, SolveOptions, StepControl,
     };
     pub use crate::brownian::{BrownianMotion, BrownianPath, VirtualBrownianTree};
     pub use crate::prng::PrngKey;
-    pub use crate::sde::{Calculus, ForwardFunc, ReplicatedSde, Sde, SdeFunc, SdeVjp};
-    pub use crate::solvers::{integrate_adaptive, integrate_grid, uniform_grid, AdaptiveConfig, Method};
+    pub use crate::sde::{Calculus, ReplicatedSde, Sde, SdeVjp};
+    pub use crate::solvers::{AdaptiveConfig, Method, SolveStats};
 }
 
 /// Crate version string (exposed for CLI `--version`).

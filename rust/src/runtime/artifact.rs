@@ -3,9 +3,8 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
-use super::client::pjrt_client;
+use crate::error::{Context, Result};
+use crate::{bail, err};
 
 /// One exported entry point.
 #[derive(Clone, Debug)]
@@ -35,7 +34,7 @@ impl Manifest {
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
         let mut lines = text.lines();
-        let first = lines.next().ok_or_else(|| anyhow!("empty manifest"))?;
+        let first = lines.next().ok_or_else(|| err!("empty manifest"))?;
         if first.trim() != "format=sdegrad-artifacts-v1" {
             bail!("unknown manifest format line: {first}");
         }
@@ -49,12 +48,12 @@ impl Manifest {
             if let Some(rest) = line.strip_prefix("cfg ") {
                 for tok in rest.split_whitespace() {
                     let (k, v) =
-                        tok.split_once('=').ok_or_else(|| anyhow!("bad cfg token {tok}"))?;
+                        tok.split_once('=').ok_or_else(|| err!("bad cfg token {tok}"))?;
                     cfg.insert(k.to_string(), v.to_string());
                 }
             } else if let Some(rest) = line.strip_prefix("entry ") {
                 let mut toks = rest.split_whitespace();
-                let name = toks.next().ok_or_else(|| anyhow!("entry without name"))?.to_string();
+                let name = toks.next().ok_or_else(|| err!("entry without name"))?.to_string();
                 let mut file = String::new();
                 let mut input_shapes = Vec::new();
                 for tok in toks {
@@ -85,7 +84,7 @@ impl Manifest {
     pub fn cfg_usize(&self, key: &str) -> Result<usize> {
         self.cfg
             .get(key)
-            .ok_or_else(|| anyhow!("manifest cfg missing {key}"))?
+            .ok_or_else(|| err!("manifest cfg missing {key}"))?
             .parse()
             .with_context(|| format!("parsing cfg {key}"))
     }
@@ -94,15 +93,20 @@ impl Manifest {
     pub fn cfg_f64(&self, key: &str) -> Result<f64> {
         self.cfg
             .get(key)
-            .ok_or_else(|| anyhow!("manifest cfg missing {key}"))?
+            .ok_or_else(|| err!("manifest cfg missing {key}"))?
             .parse()
             .with_context(|| format!("parsing cfg {key}"))
     }
 }
 
 /// A compiled entry point, callable with f32 buffers.
+///
+/// With the `xla` cargo feature the entry is compiled through PJRT;
+/// without it the manifest metadata is still inspectable but
+/// [`Executable::call_f32`] returns a descriptive error.
 pub struct Executable {
     pub entry: ManifestEntry,
+    #[cfg(feature = "xla")]
     exe: xla::PjRtLoadedExecutable,
 }
 
@@ -110,6 +114,7 @@ impl Executable {
     /// Execute with flat f32 inputs (one slice per argument, shaped per
     /// the manifest). Returns the flat f32 outputs (tuple elements in
     /// order).
+    #[cfg(feature = "xla")]
     pub fn call_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
         if inputs.len() != self.entry.input_shapes.len() {
             bail!(
@@ -133,20 +138,31 @@ impl Executable {
             }
             let lit = xla::Literal::vec1(buf);
             let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            literals.push(lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))?);
+            literals.push(lit.reshape(&dims).map_err(|e| err!("reshape: {e:?}"))?);
         }
         let result = self
             .exe
             .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.entry.name))?;
+            .map_err(|e| err!("execute {}: {e:?}", self.entry.name))?;
         let root = result[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        let parts = root.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+            .map_err(|e| err!("to_literal: {e:?}"))?;
+        let parts = root.to_tuple().map_err(|e| err!("to_tuple: {e:?}"))?;
         parts
             .into_iter()
-            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .map(|p| p.to_vec::<f32>().map_err(|e| err!("to_vec: {e:?}")))
             .collect()
+    }
+
+    /// Stub when the `xla` feature is off: execution is unavailable.
+    #[cfg(not(feature = "xla"))]
+    pub fn call_f32(&self, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        bail!(
+            "{}: sdegrad was built without the `xla` feature — artifact \
+             execution is disabled (rebuild with `--features xla` after \
+             adding the xla crate)",
+            self.entry.name
+        )
     }
 }
 
@@ -171,19 +187,33 @@ impl ArtifactRegistry {
                 .entries
                 .iter()
                 .find(|e| e.name == name)
-                .ok_or_else(|| anyhow!("no artifact entry named {name}"))?
+                .ok_or_else(|| err!("no artifact entry named {name}"))?
                 .clone();
-            let path = self.manifest.dir.join(&entry.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let client = pjrt_client()?;
-            let exe = client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-            self.compiled.insert(name.to_string(), Executable { entry, exe });
+            let exe = Self::compile_entry(&self.manifest.dir, entry)?;
+            self.compiled.insert(name.to_string(), exe);
         }
         Ok(&self.compiled[name])
+    }
+
+    #[cfg(feature = "xla")]
+    fn compile_entry(dir: &Path, entry: ManifestEntry) -> Result<Executable> {
+        use super::client::pjrt_client;
+        let path = dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| err!("non-utf8 path"))?,
+        )
+        .map_err(|e| err!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let client = pjrt_client()?;
+        let exe = client.compile(&comp).map_err(|e| err!("compiling {}: {e:?}", entry.name))?;
+        Ok(Executable { entry, exe })
+    }
+
+    /// Without the `xla` feature, `get` succeeds (so shapes stay
+    /// inspectable) and execution fails in [`Executable::call_f32`].
+    #[cfg(not(feature = "xla"))]
+    fn compile_entry(_dir: &Path, entry: ManifestEntry) -> Result<Executable> {
+        Ok(Executable { entry })
     }
 
     /// Names of all exported entries.
@@ -219,6 +249,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg(feature = "xla")]
     fn post_drift_artifact_executes() {
         if !have_artifacts() {
             eprintln!("skipping: run `make artifacts` first");
@@ -242,6 +273,7 @@ mod tests {
     /// model's parameter vector must match the Rust NN forward (both are
     /// the posterior drift MLP; layouts must agree byte-for-byte).
     #[test]
+    #[cfg(feature = "xla")]
     fn xla_post_drift_matches_rust_nn() {
         if !have_artifacts() {
             eprintln!("skipping: run `make artifacts` first");

@@ -1,28 +1,37 @@
-//! Per-thread PJRT CPU client.
+//! Per-thread PJRT CPU client (requires the `xla` cargo feature).
 //!
 //! The `xla` crate's `PjRtClient` wraps an `Rc`, so it cannot be shared
 //! across threads; each worker thread that executes artifacts initializes
 //! its own client lazily and reuses it for the thread's lifetime (client
 //! construction is the expensive part; `Clone` is an `Rc` bump).
 
+#[cfg(feature = "xla")]
 use std::cell::RefCell;
 
+#[cfg(feature = "xla")]
+use crate::err;
+#[cfg(feature = "xla")]
+use crate::error::Result;
+
+#[cfg(feature = "xla")]
 thread_local! {
     static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
 }
 
 /// This thread's PJRT CPU client (lazily constructed, cheaply cloned).
-pub fn pjrt_client() -> anyhow::Result<xla::PjRtClient> {
+#[cfg(feature = "xla")]
+pub fn pjrt_client() -> Result<xla::PjRtClient> {
     CLIENT.with(|slot| {
         let mut slot = slot.borrow_mut();
         if slot.is_none() {
-            *slot = Some(xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?);
+            *slot =
+                Some(xla::PjRtClient::cpu().map_err(|e| err!("PjRtClient::cpu: {e:?}"))?);
         }
         Ok(slot.as_ref().unwrap().clone())
     })
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "xla"))]
 mod tests {
     use super::*;
 

@@ -13,4 +13,5 @@ pub mod artifact;
 pub mod client;
 
 pub use artifact::{ArtifactRegistry, Executable, Manifest, ManifestEntry};
+#[cfg(feature = "xla")]
 pub use client::pjrt_client;

@@ -87,6 +87,22 @@ impl SdeVjp for StochasticLorenz {
         out_theta[4] += a[1];
         out_theta[5] += a[2];
     }
+
+    fn has_ito_correction_vjp(&self) -> bool {
+        true
+    }
+
+    fn ito_correction_vjp(
+        &self,
+        _t: f64,
+        _z: &[f64],
+        _th: &[f64],
+        _a: &[f64],
+        _out_z: &mut [f64],
+        _out_theta: &mut [f64],
+    ) {
+        // Additive noise: c = ½σσ' ≡ 0, so the VJP accumulates nothing.
+    }
 }
 
 #[cfg(test)]

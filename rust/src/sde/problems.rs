@@ -334,6 +334,10 @@ impl<P: ScalarSde> SdeVjp for ReplicatedSde<P> {
         }
     }
 
+    fn has_ito_correction_vjp(&self) -> bool {
+        true
+    }
+
     fn ito_correction_vjp(
         &self,
         t: f64,

@@ -84,10 +84,35 @@ pub trait SdeVjp: Sde {
         out_theta: &mut [f64],
     );
 
+    /// Whether [`SdeVjp::ito_correction_vjp`] is implemented. Implementors
+    /// that provide the correction VJP must override this to `true`;
+    /// `crate::api::SdeProblem` consults it *before* integrating so an
+    /// Itô-native system without the correction VJP surfaces as a
+    /// [`Result`] error at problem validation instead of a mid-solve
+    /// panic.
+    fn has_ito_correction_vjp(&self) -> bool {
+        false
+    }
+
+    /// Validate that this system can serve a Stratonovich-form drift VJP
+    /// (i.e. the stochastic adjoint): Itô-native systems must implement
+    /// [`SdeVjp::ito_correction_vjp`]. Called by the problem API before
+    /// any integration starts.
+    fn check_adjoint_compatible(&self) -> Result<(), &'static str> {
+        if self.calculus() == Calculus::Ito && !self.has_ito_correction_vjp() {
+            Err("ito_correction_vjp not provided: express this SDE in \
+                 Stratonovich form or supply the correction VJP")
+        } else {
+            Ok(())
+        }
+    }
+
     /// VJP of the Itô→Stratonovich correction term `c(z) = ½ σ σ'`
     /// (i.e. accumulate `aᵀ ∂c/∂z`, `aᵀ ∂c/∂θ`). Only required when the
     /// native calculus is Itô *and* the adjoint is used; systems written
-    /// natively in Stratonovich form may leave this unimplemented.
+    /// natively in Stratonovich form may leave this unimplemented (and
+    /// keep [`SdeVjp::has_ito_correction_vjp`] at `false`, which the
+    /// problem API turns into a construction-time error).
     fn ito_correction_vjp(
         &self,
         _t: f64,
@@ -97,9 +122,13 @@ pub trait SdeVjp: Sde {
         _out_z: &mut [f64],
         _out_theta: &mut [f64],
     ) {
+        // Reached only via the deprecated free-function shims, which skip
+        // the API's construction-time validation.
         panic!(
             "ito_correction_vjp not provided: express this SDE in \
-             Stratonovich form or supply the correction VJP"
+             Stratonovich form or supply the correction VJP (and override \
+             has_ito_correction_vjp) — the crate::api::SdeProblem entry \
+             points surface this as a ProblemError before integrating"
         );
     }
 

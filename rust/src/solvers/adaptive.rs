@@ -64,7 +64,28 @@ pub struct AdaptiveResult {
 }
 
 /// Integrate from `t0` to `t1` (either direction) adaptively.
+///
+/// Deprecated shim; new code should solve through
+/// [`crate::api::SdeProblem`] with `StepControl::Adaptive`.
+#[deprecated(
+    since = "0.2.0",
+    note = "use crate::api::SdeProblem::solve with StepControl::Adaptive instead"
+)]
 pub fn integrate_adaptive<S: SdeFunc, B: BrownianMotion>(
+    sys: &mut S,
+    method: Method,
+    y0: &[f64],
+    t0: f64,
+    t1: f64,
+    bm: &mut B,
+    cfg: &AdaptiveConfig,
+) -> AdaptiveResult {
+    adaptive_core(sys, method, y0, t0, t1, bm, cfg)
+}
+
+/// Adaptive-stepping core shared by [`crate::api::SdeProblem::solve`] and
+/// the deprecated [`integrate_adaptive`] shim.
+pub(crate) fn adaptive_core<S: SdeFunc, B: BrownianMotion>(
     sys: &mut S,
     method: Method,
     y0: &[f64],
@@ -182,7 +203,7 @@ mod tests {
         let mut bm = BrownianPath::new(PrngKey::from_seed(seed), 1, 0.0, 1.0);
         let mut sys = ForwardFunc::new(&sde, &theta);
         let cfg = AdaptiveConfig { atol, rtol: 0.0, ..Default::default() };
-        let res = integrate_adaptive(&mut sys, Method::MilsteinIto, &[1.0], 0.0, 1.0, &mut bm, &cfg);
+        let res = adaptive_core(&mut sys, Method::MilsteinIto, &[1.0], 0.0, 1.0, &mut bm, &cfg);
         let w = bm.sample(1.0)[0];
         let exact = sde.problem().analytic_solution(1.0, 1.0, &theta, w);
         (res.y[0], exact, res.stats)
@@ -238,7 +259,7 @@ mod tests {
         // Backward adaptive integration (t0=1 → t1=0) of an additive-noise
         // system retraces approximately the forward path end state.
         use crate::sde::ou::OrnsteinUhlenbeck;
-        use crate::solvers::grid::{integrate_grid, uniform_grid};
+        use crate::solvers::grid::{grid_core, uniform_grid};
         let ou = OrnsteinUhlenbeck::new(2);
         let theta = [1.0, 0.5, 0.4];
         let key = PrngKey::from_seed(11);
@@ -247,11 +268,11 @@ mod tests {
         let grid = uniform_grid(0.0, 1.0, 2048);
         let y0 = [0.2, -0.1];
         let mut y1 = [0.0; 2];
-        integrate_grid(&mut sys, Method::Heun, &y0, &grid, &mut bm, &mut y1);
+        grid_core(&mut sys, Method::Heun, &y0, &grid, &mut bm, &mut y1);
 
         let mut sys_b = ForwardFunc::new(&ou, &theta);
         let cfg = AdaptiveConfig { atol: 1e-6, rtol: 0.0, h0: 1e-3, ..Default::default() };
-        let res = integrate_adaptive(&mut sys_b, Method::Heun, &y1, 1.0, 0.0, &mut bm, &cfg);
+        let res = adaptive_core(&mut sys_b, Method::Heun, &y1, 1.0, 0.0, &mut bm, &cfg);
         for i in 0..2 {
             assert!(
                 (res.y[i] - y0[i]).abs() < 1e-2,

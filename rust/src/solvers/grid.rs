@@ -45,7 +45,27 @@ pub fn uniform_grid(t0: f64, t1: f64, n_steps: usize) -> Vec<f64> {
 /// Integrate `sys` along `times` (monotone, either direction), starting
 /// from `y0` at `times[0]`. Writes the terminal state into `y_out` and
 /// returns solve statistics.
+///
+/// Deprecated shim over the fixed-grid core; new code should solve through
+/// [`crate::api::SdeProblem`].
+#[deprecated(
+    since = "0.2.0",
+    note = "use crate::api::SdeProblem::solve with SaveAt::Final instead"
+)]
 pub fn integrate_grid<S: SdeFunc, B: BrownianMotion>(
+    sys: &mut S,
+    method: Method,
+    y0: &[f64],
+    times: &[f64],
+    bm: &mut B,
+    y_out: &mut [f64],
+) -> SolveStats {
+    grid_core(sys, method, y0, times, bm, y_out)
+}
+
+/// Fixed-grid integration core shared by [`crate::api::SdeProblem::solve`]
+/// and the deprecated [`integrate_grid`] shim.
+pub(crate) fn grid_core<S: SdeFunc, B: BrownianMotion>(
     sys: &mut S,
     method: Method,
     y0: &[f64],
@@ -94,7 +114,26 @@ pub fn integrate_grid<S: SdeFunc, B: BrownianMotion>(
 
 /// Like [`integrate_grid`] but records the state at every grid point.
 /// Returns the trajectory as a flat row-major `(times.len(), d)` matrix.
+///
+/// Deprecated shim; new code should solve through
+/// [`crate::api::SdeProblem`] with `SaveAt::Dense`.
+#[deprecated(
+    since = "0.2.0",
+    note = "use crate::api::SdeProblem::solve with SaveAt::Dense instead"
+)]
 pub fn integrate_grid_saving<S: SdeFunc, B: BrownianMotion>(
+    sys: &mut S,
+    method: Method,
+    y0: &[f64],
+    times: &[f64],
+    bm: &mut B,
+) -> (Vec<f64>, SolveStats) {
+    grid_saving_core(sys, method, y0, times, bm)
+}
+
+/// Trajectory-saving fixed-grid core shared by the API layer and the
+/// deprecated [`integrate_grid_saving`] shim.
+pub(crate) fn grid_saving_core<S: SdeFunc, B: BrownianMotion>(
     sys: &mut S,
     method: Method,
     y0: &[f64],
@@ -173,7 +212,7 @@ mod tests {
                 let mut sys = ForwardFunc::new(&sde, &theta);
                 let grid = uniform_grid(0.0, t1, n_steps);
                 let mut y = [0.0];
-                integrate_grid(&mut sys, Method::EulerMaruyama, &x0, &grid, &mut bm, &mut y);
+                grid_core(&mut sys, Method::EulerMaruyama, &x0, &grid, &mut bm, &mut y);
                 let w_t = bm.sample(t1)[0];
                 let exact = sde.problem().analytic_solution(t1, x0[0], &theta, w_t);
                 total += (y[0] - exact).abs();
@@ -205,7 +244,7 @@ mod tests {
                 let mut sys = ForwardFunc::new(&sde, &theta);
                 let grid = uniform_grid(0.0, t1, n_steps);
                 let mut y = [0.0];
-                integrate_grid(&mut sys, Method::MilsteinIto, &x0, &grid, &mut bm, &mut y);
+                grid_core(&mut sys, Method::MilsteinIto, &x0, &grid, &mut bm, &mut y);
                 let w_t = bm.sample(t1)[0];
                 let exact = sde.problem().analytic_solution(t1, x0[0], &theta, w_t);
                 total += (y[0] - exact).abs();
@@ -236,7 +275,7 @@ mod tests {
             let mut sys = ForwardFunc::new(&sde, &theta);
             let grid = uniform_grid(0.0, t1, n_steps);
             let mut y = [0.0];
-            integrate_grid(&mut sys, Method::Heun, &x0, &grid, &mut bm, &mut y);
+            grid_core(&mut sys, Method::Heun, &x0, &grid, &mut bm, &mut y);
             let w_t = bm.sample(t1)[0];
             let strat = x0[0] * (theta[0] * t1 + theta[1] * w_t).exp();
             let ito = sde.problem().analytic_solution(t1, x0[0], &theta, w_t);
@@ -265,7 +304,7 @@ mod tests {
         let mut sys = ForwardFunc::new(&sde, &theta);
         let grid = uniform_grid(0.0, t1, 4096);
         let mut y = [0.0; 2];
-        integrate_grid(&mut sys, Method::MilsteinIto, &x0, &grid, &mut bm, &mut y);
+        grid_core(&mut sys, Method::MilsteinIto, &x0, &grid, &mut bm, &mut y);
         let w = bm.sample(t1);
         for i in 0..2 {
             let exact =
@@ -286,7 +325,7 @@ mod tests {
         let mut bm = BrownianPath::new(key, 1, 0.0, 1.0);
         let mut sys = ForwardFunc::new(&sde, &theta);
         let grid = uniform_grid(0.0, 1.0, 16);
-        let (traj, stats) = integrate_grid_saving(&mut sys, Method::EulerMaruyama, &[1.0], &grid, &mut bm);
+        let (traj, stats) = grid_saving_core(&mut sys, Method::EulerMaruyama, &[1.0], &grid, &mut bm);
         assert_eq!(traj.len(), 17);
         assert_eq!(traj[0], 1.0);
         assert_eq!(stats.steps, 16);
@@ -295,7 +334,7 @@ mod tests {
         let mut bm2 = BrownianPath::new(key, 1, 0.0, 1.0);
         let mut sys2 = ForwardFunc::new(&sde, &theta);
         let mut y = [0.0];
-        integrate_grid(&mut sys2, Method::EulerMaruyama, &[1.0], &grid, &mut bm2, &mut y);
+        grid_core(&mut sys2, Method::EulerMaruyama, &[1.0], &grid, &mut bm2, &mut y);
         assert_eq!(y[0], traj[16]);
     }
 }

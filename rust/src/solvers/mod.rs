@@ -19,6 +19,13 @@ pub mod adaptive;
 pub mod grid;
 pub mod methods;
 
-pub use adaptive::{AdaptiveConfig, AdaptiveResult, integrate_adaptive};
-pub use grid::{integrate_grid, integrate_grid_saving, uniform_grid, SolveStats};
+#[allow(deprecated)]
+pub use adaptive::integrate_adaptive;
+pub use adaptive::{AdaptiveConfig, AdaptiveResult};
+#[allow(deprecated)]
+pub use grid::{integrate_grid, integrate_grid_saving};
+pub use grid::{uniform_grid, SolveStats};
 pub use methods::{Method, Stepper};
+
+pub(crate) use adaptive::adaptive_core;
+pub(crate) use grid::{grid_core, grid_saving_core};

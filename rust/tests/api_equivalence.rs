@@ -1,0 +1,392 @@
+//! The new problem–solver–solution API must be *bit-identical* to the
+//! legacy free functions it replaces: same engines, same Brownian query
+//! order, same floats. Every assertion here is `assert_eq!` on f64s — no
+//! tolerances. (The legacy names are `#[deprecated]` shims; calling them
+//! here is the point.)
+#![allow(deprecated)]
+
+use sdegrad::adjoint::{
+    adaptive_adjoint_gradients, antithetic_adjoint_gradients, backprop_through_solver,
+    forward_pathwise_gradients, stochastic_adjoint_gradients, stochastic_adjoint_multi_obs,
+    AdjointConfig, NoiseMode,
+};
+use sdegrad::api::{
+    sensitivity_batch, solve_batch, SaveAt, SdeProblem, SensAlg, SolveOptions, StepControl,
+};
+use sdegrad::brownian::{BrownianMotion, BrownianPath};
+use sdegrad::prng::PrngKey;
+use sdegrad::sde::ou::OrnsteinUhlenbeck;
+use sdegrad::sde::problems::{sample_experiment_setup, Example1, Example2, Example3};
+use sdegrad::sde::{ForwardFunc, ReplicatedSde, ScalarSde};
+use sdegrad::solvers::{
+    integrate_adaptive, integrate_grid, integrate_grid_saving, uniform_grid, AdaptiveConfig,
+    Method,
+};
+
+// ---------------------------------------------------------------------------
+// Forward solves.
+// ---------------------------------------------------------------------------
+
+/// `SdeProblem::solve` with fixed steps + `SaveAt::Final` ==
+/// `integrate_grid` over `uniform_grid` on a stored path, bit for bit.
+#[test]
+fn solve_final_matches_integrate_grid() {
+    let cases = [
+        (1usize, 11u64, Method::EulerMaruyama),
+        (4, 12, Method::MilsteinIto),
+        (3, 13, Method::Heun),
+    ];
+    for (dim, seed, method) in cases {
+        let sde = ReplicatedSde::new(Example1, dim);
+        let key = PrngKey::from_seed(seed);
+        let (theta, x0) = sample_experiment_setup(key, dim, 2);
+        let n = 257;
+
+        let mut bm = BrownianPath::new(key, dim, 0.0, 1.0);
+        let grid = uniform_grid(0.0, 1.0, n);
+        let mut sys = ForwardFunc::for_method(&sde, &theta, method);
+        let mut y_legacy = vec![0.0; dim];
+        let stats_legacy = integrate_grid(&mut sys, method, &x0, &grid, &mut bm, &mut y_legacy);
+
+        let sol = SdeProblem::new(&sde, &x0, (0.0, 1.0))
+            .params(&theta)
+            .key(key)
+            .solve(&SolveOptions::fixed(method, n));
+
+        assert_eq!(sol.final_state(), &y_legacy[..], "method {}", method.name());
+        assert_eq!(sol.stats, stats_legacy);
+    }
+}
+
+/// `SaveAt::Dense` == `integrate_grid_saving`, including on OU.
+#[test]
+fn solve_dense_matches_integrate_grid_saving() {
+    let ou = OrnsteinUhlenbeck::new(3);
+    let theta = [1.2, 0.4, 0.6];
+    let z0 = [0.1, -0.3, 0.8];
+    let key = PrngKey::from_seed(21);
+    let n = 128;
+
+    let mut bm = BrownianPath::new(key, 3, 0.0, 2.0);
+    let grid = uniform_grid(0.0, 2.0, n);
+    let mut sys = ForwardFunc::for_method(&ou, &theta, Method::Heun);
+    let (traj, _) = integrate_grid_saving(&mut sys, Method::Heun, &z0, &grid, &mut bm);
+
+    let sol = SdeProblem::new(&ou, &z0, (0.0, 2.0))
+        .params(&theta)
+        .key(key)
+        .solve(&SolveOptions::fixed(Method::Heun, n).save(SaveAt::Dense));
+
+    assert_eq!(sol.states, traj);
+    assert_eq!(sol.times, grid);
+    // Interpolation is exact at saved points and the replay handle
+    // reveals the same path the legacy bm realized.
+    let mut sol = sol;
+    assert_eq!(sol.at(grid[17]), sol.state(17).to_vec());
+    assert_eq!(sol.w(2.0), bm.sample(2.0));
+}
+
+/// `StepControl::Adaptive` == `integrate_adaptive`.
+#[test]
+fn solve_adaptive_matches_integrate_adaptive() {
+    let sde = ReplicatedSde::new(Example2, 2);
+    let key = PrngKey::from_seed(31);
+    let (theta, x0) = sample_experiment_setup(key, 2, 1);
+    let cfg = AdaptiveConfig { atol: 1e-4, rtol: 0.0, ..Default::default() };
+
+    let mut bm = BrownianPath::new(key, 2, 0.0, 1.0);
+    let mut sys = ForwardFunc::for_method(&sde, &theta, Method::MilsteinIto);
+    let legacy = integrate_adaptive(&mut sys, Method::MilsteinIto, &x0, 0.0, 1.0, &mut bm, &cfg);
+
+    let sol = SdeProblem::new(&sde, &x0, (0.0, 1.0))
+        .params(&theta)
+        .key(key)
+        .solve(&SolveOptions::adaptive(Method::MilsteinIto, cfg));
+
+    assert_eq!(sol.final_state(), &legacy.y[..]);
+    assert_eq!(sol.stats, legacy.stats);
+    assert_eq!(sol.hit_h_min, legacy.hit_h_min);
+}
+
+// ---------------------------------------------------------------------------
+// Sensitivity algorithms, on all three §7.1 problems.
+// ---------------------------------------------------------------------------
+
+fn check_sensitivity_equivalence<P: ScalarSde + Copy>(problem: P, dim: usize, seed: u64) {
+    let sde = ReplicatedSde::new(problem, dim);
+    let key = PrngKey::from_seed(seed);
+    let (theta, x0) = sample_experiment_setup(key, dim, problem.nparams());
+    let n = 400;
+    let prob = SdeProblem::new(&sde, &x0, (0.0, 1.0)).params(&theta).key(key);
+    let step = StepControl::Steps(n);
+
+    // Stochastic adjoint, stored path.
+    let cfg = AdjointConfig::default();
+    let legacy = stochastic_adjoint_gradients(&sde, &theta, &x0, 0.0, 1.0, n, key, &cfg);
+    let new = prob.sensitivity_sum(&SensAlg::StochasticAdjoint(cfg), step).unwrap();
+    assert_eq!(new.dtheta, legacy.grad_theta, "{}: adjoint dtheta", problem.name());
+    assert_eq!(new.dz0, legacy.grad_z0, "{}: adjoint dz0", problem.name());
+    assert_eq!(new.z_terminal, legacy.z_terminal);
+    assert_eq!(new.z0_reconstructed, legacy.z0_reconstructed);
+    assert_eq!(new.w_terminal, legacy.w_terminal);
+    assert_eq!(new.stats.forward, legacy.forward_stats);
+    assert_eq!(new.stats.backward, legacy.backward_stats);
+    assert_eq!(new.stats.noise_memory, legacy.noise_memory);
+
+    // Stochastic adjoint, virtual tree (problem-level noise spec must
+    // reproduce the config-level one).
+    let tree_cfg = AdjointConfig { noise: NoiseMode::VirtualTree { tol: 1e-6 }, ..cfg };
+    let legacy = stochastic_adjoint_gradients(&sde, &theta, &x0, 0.0, 1.0, n, key, &tree_cfg);
+    let new = prob
+        .clone()
+        .noise(NoiseMode::VirtualTree { tol: 1e-6 })
+        .sensitivity_sum(&SensAlg::StochasticAdjoint(cfg), step)
+        .unwrap();
+    assert_eq!(new.dtheta, legacy.grad_theta, "{}: tree adjoint", problem.name());
+
+    // Backprop through the solver, both schemes.
+    for method in [Method::EulerMaruyama, Method::MilsteinIto] {
+        let legacy = backprop_through_solver(&sde, &theta, &x0, 0.0, 1.0, n, key, method);
+        let new = prob.sensitivity_sum(&SensAlg::Backprop { method }, step).unwrap();
+        assert_eq!(new.dtheta, legacy.grad_theta, "{}: backprop {}", problem.name(), method.name());
+        assert_eq!(new.dz0, legacy.grad_z0);
+        assert_eq!(new.stats.noise_memory, legacy.noise_memory);
+    }
+
+    // Forward pathwise.
+    let legacy = forward_pathwise_gradients(&sde, &theta, &x0, 0.0, 1.0, n, key);
+    let new = prob.sensitivity_sum(&SensAlg::ForwardPathwise, step).unwrap();
+    assert_eq!(new.dtheta, legacy.grad_theta, "{}: pathwise", problem.name());
+    assert_eq!(new.dz0, legacy.grad_z0);
+
+    // Antithetic pair.
+    let legacy = antithetic_adjoint_gradients(&sde, &theta, &x0, 0.0, 1.0, n, key, &cfg);
+    let new = prob.sensitivity_sum(&SensAlg::Antithetic { base: cfg }, step).unwrap();
+    assert_eq!(new.dtheta, legacy.grad_theta, "{}: antithetic", problem.name());
+    assert_eq!(new.dz0, legacy.grad_z0);
+
+    // Adaptive adjoint (replicated scalar problems only).
+    let acfg = AdaptiveConfig { atol: 1e-3, rtol: 0.0, h0: 1e-3, ..Default::default() };
+    let legacy = adaptive_adjoint_gradients(&sde, &theta, &x0, 0.0, 1.0, key, &acfg);
+    let new = prob.sensitivity_adaptive(&acfg);
+    assert_eq!(new.dtheta, legacy.grad_theta, "{}: adaptive adjoint", problem.name());
+    assert_eq!(new.dz0, legacy.grad_z0);
+    assert_eq!(new.stats.hit_h_min, legacy.hit_h_min);
+}
+
+#[test]
+fn sensitivity_matches_legacy_example1_gbm() {
+    check_sensitivity_equivalence(Example1, 3, 101);
+}
+
+#[test]
+fn sensitivity_matches_legacy_example2() {
+    check_sensitivity_equivalence(Example2, 2, 102);
+}
+
+#[test]
+fn sensitivity_matches_legacy_example3() {
+    check_sensitivity_equivalence(Example3, 4, 103);
+}
+
+/// The adjoint on OU (Itô-native, additive noise) — the system whose
+/// missing correction VJP used to panic at runtime; now it is implemented
+/// (identically zero) and validated at problem construction.
+#[test]
+fn sensitivity_matches_legacy_on_ou() {
+    let ou = OrnsteinUhlenbeck::new(2);
+    let theta = [1.5, 0.7, 0.3];
+    let z0 = [0.4, -0.2];
+    let key = PrngKey::from_seed(41);
+    let n = 300;
+    let cfg = AdjointConfig::default();
+
+    let legacy = stochastic_adjoint_gradients(&ou, &theta, &z0, 0.0, 1.0, n, key, &cfg);
+    let new = SdeProblem::new(&ou, &z0, (0.0, 1.0))
+        .params(&theta)
+        .key(key)
+        .sensitivity_sum(&SensAlg::StochasticAdjoint(cfg), StepControl::Steps(n))
+        .unwrap();
+    assert_eq!(new.dtheta, legacy.grad_theta);
+    assert_eq!(new.dz0, legacy.grad_z0);
+}
+
+/// Multi-observation adjoint == `stochastic_adjoint_multi_obs`.
+#[test]
+fn sensitivity_at_matches_legacy_multi_obs() {
+    let sde = ReplicatedSde::new(Example3, 2);
+    let key = PrngKey::from_seed(51);
+    let (theta, x0) = sample_experiment_setup(key, 2, 2);
+    let cfg = AdjointConfig::default();
+    let obs = [0.25, 0.5, 1.0];
+
+    let legacy = stochastic_adjoint_multi_obs(&sde, &theta, &x0, 0.0, &obs, 120, key, &cfg, |z| {
+        vec![1.0; z.len()]
+    });
+    let new = SdeProblem::new(&sde, &x0, (0.0, 1.0))
+        .params(&theta)
+        .key(key)
+        .sensitivity_at(&obs, 120, &cfg, |z| vec![1.0; z.len()])
+        .unwrap();
+    assert_eq!(new.dtheta, legacy.grad_theta);
+    assert_eq!(new.dz0, legacy.grad_z0);
+    assert_eq!(new.z_terminal, legacy.z_terminal);
+}
+
+// ---------------------------------------------------------------------------
+// Validation surfaces errors where the legacy path panicked.
+// ---------------------------------------------------------------------------
+
+/// An Itô-native SDE without the correction VJP is rejected at
+/// validation, not mid-solve.
+#[test]
+fn missing_correction_vjp_is_an_error_not_a_panic() {
+    use sdegrad::api::ProblemError;
+    use sdegrad::sde::{Calculus, Sde, SdeVjp};
+
+    struct NoCorrection;
+    impl Sde for NoCorrection {
+        fn state_dim(&self) -> usize {
+            1
+        }
+        fn param_dim(&self) -> usize {
+            1
+        }
+        fn calculus(&self) -> Calculus {
+            Calculus::Ito
+        }
+        fn drift(&self, _t: f64, z: &[f64], th: &[f64], out: &mut [f64]) {
+            out[0] = th[0] * z[0];
+        }
+        fn diffusion(&self, _t: f64, z: &[f64], _th: &[f64], out: &mut [f64]) {
+            out[0] = 0.5 * z[0];
+        }
+        fn diffusion_dz_diag(&self, _t: f64, _z: &[f64], _th: &[f64], out: &mut [f64]) {
+            out[0] = 0.5;
+        }
+    }
+    impl SdeVjp for NoCorrection {
+        fn drift_vjp(
+            &self,
+            _t: f64,
+            z: &[f64],
+            _th: &[f64],
+            a: &[f64],
+            out_z: &mut [f64],
+            out_theta: &mut [f64],
+        ) {
+            out_z[0] += a[0];
+            out_theta[0] += a[0] * z[0];
+        }
+        fn diffusion_vjp(
+            &self,
+            _t: f64,
+            _z: &[f64],
+            _th: &[f64],
+            a: &[f64],
+            out_z: &mut [f64],
+            _out_theta: &mut [f64],
+        ) {
+            out_z[0] += 0.5 * a[0];
+        }
+        // has_ito_correction_vjp stays false.
+    }
+
+    let prob = SdeProblem::new(&NoCorrection, &[1.0], (0.0, 1.0)).params(&[0.3]);
+    let err = prob
+        .sensitivity_sum(
+            &SensAlg::StochasticAdjoint(AdjointConfig::default()),
+            StepControl::Steps(10),
+        )
+        .unwrap_err();
+    assert!(matches!(err, ProblemError::MissingItoCorrectionVjp { .. }), "{err}");
+    // Backprop-Milstein needs it too; Euler does not.
+    let err = prob
+        .sensitivity_sum(&SensAlg::Backprop { method: Method::MilsteinIto }, StepControl::Steps(10))
+        .unwrap_err();
+    assert!(matches!(err, ProblemError::MissingItoCorrectionVjp { .. }), "{err}");
+    prob.sensitivity_sum(
+        &SensAlg::Backprop { method: Method::EulerMaruyama },
+        StepControl::Steps(10),
+    )
+    .expect("Euler backprop needs no correction VJP");
+}
+
+/// Backprop/pathwise tape their own stored path; a virtual-tree or
+/// mirrored problem spec must be rejected rather than silently realizing
+/// a different path from the same key.
+#[test]
+fn taping_estimators_reject_non_default_noise() {
+    use sdegrad::api::ProblemError;
+
+    let sde = ReplicatedSde::new(Example1, 2);
+    let key = PrngKey::from_seed(81);
+    let (theta, x0) = sample_experiment_setup(key, 2, 2);
+    let step = StepControl::Steps(50);
+    let tree = SdeProblem::new(&sde, &x0, (0.0, 1.0))
+        .params(&theta)
+        .key(key)
+        .noise(NoiseMode::VirtualTree { tol: 1e-6 });
+    let mirrored = SdeProblem::new(&sde, &x0, (0.0, 1.0)).params(&theta).key(key).mirror(true);
+
+    for prob in [&tree, &mirrored] {
+        for alg in
+            [SensAlg::Backprop { method: Method::EulerMaruyama }, SensAlg::ForwardPathwise]
+        {
+            let err = prob.sensitivity_sum(&alg, step).unwrap_err();
+            assert!(matches!(err, ProblemError::UnsupportedNoise { .. }), "{err}");
+        }
+        // The adjoint family honors the same specs.
+        prob.sensitivity_sum(&SensAlg::StochasticAdjoint(AdjointConfig::default()), step)
+            .expect("adjoint honors tree/mirror specs");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batch determinism.
+// ---------------------------------------------------------------------------
+
+/// `solve_batch` output is identical to sequential solving (thread count
+/// can only affect scheduling, never results), and replicates with
+/// distinct keys realize distinct paths.
+#[test]
+fn solve_batch_is_deterministic_and_order_preserving() {
+    let sde = ReplicatedSde::new(Example1, 3);
+    let key = PrngKey::from_seed(61);
+    let (theta, x0) = sample_experiment_setup(key, 3, 2);
+    let prob = SdeProblem::new(&sde, &x0, (0.0, 1.0)).params(&theta);
+    let opts = SolveOptions::fixed(Method::MilsteinIto, 200);
+    let root = PrngKey::from_seed(62);
+
+    let replicates = prob.replicates(root, 17);
+    let batch_a = solve_batch(&replicates, &opts);
+    let batch_b = solve_batch(&replicates, &opts);
+    let sequential: Vec<_> = replicates.iter().map(|p| p.solve(&opts)).collect();
+
+    assert_eq!(batch_a.len(), 17);
+    for i in 0..17 {
+        assert_eq!(batch_a[i].states, batch_b[i].states, "run-to-run at {i}");
+        assert_eq!(batch_a[i].states, sequential[i].states, "batch vs sequential at {i}");
+    }
+    assert_ne!(batch_a[0].states, batch_a[1].states, "replicates must differ");
+}
+
+/// Same for gradient batches.
+#[test]
+fn sensitivity_batch_matches_sequential() {
+    let sde = ReplicatedSde::new(Example2, 2);
+    let key = PrngKey::from_seed(71);
+    let (theta, x0) = sample_experiment_setup(key, 2, 1);
+    let prob = SdeProblem::new(&sde, &x0, (0.0, 1.0)).params(&theta);
+    let alg = SensAlg::StochasticAdjoint(AdjointConfig::default());
+    let step = StepControl::Steps(150);
+
+    let replicates = prob.replicates(PrngKey::from_seed(72), 9);
+    let batch = sensitivity_batch(&replicates, &alg, step);
+    for (i, p) in replicates.iter().enumerate() {
+        let seq = p.sensitivity_sum(&alg, step).unwrap();
+        let b = batch[i].as_ref().unwrap();
+        assert_eq!(b.dtheta, seq.dtheta, "batch vs sequential at {i}");
+        assert_eq!(b.dz0, seq.dz0);
+    }
+}

@@ -1,10 +1,8 @@
 //! Cross-module integration tests + randomized property tests (via the
 //! in-repo mini-proptest harness — DESIGN.md §3).
 
-use sdegrad::adjoint::{
-    backprop_through_solver, forward_pathwise_gradients, stochastic_adjoint_gradients,
-    AdjointConfig, NoiseMode,
-};
+use sdegrad::adjoint::{AdjointConfig, NoiseMode};
+use sdegrad::api::{SdeProblem, SensAlg, StepControl};
 use sdegrad::brownian::{BrownianMotion, BrownianPath, VirtualBrownianTree};
 use sdegrad::coordinator::config::TrainConfig;
 use sdegrad::coordinator::{load_params, save_params, train_latent_sde};
@@ -29,38 +27,36 @@ fn property_gradient_estimators_agree() {
         let (theta, x0) = sample_experiment_setup(key, dim, 2);
         let n = 3000;
 
-        let adj = stochastic_adjoint_gradients(
-            &sde,
-            &theta,
-            &x0,
-            0.0,
-            1.0,
-            n,
-            key,
-            &AdjointConfig::default(),
-        );
+        // One problem definition, four estimators — the API keeps the
+        // Brownian path matched across all of them.
+        let prob = SdeProblem::new(&sde, &x0, (0.0, 1.0)).params(&theta).key(key);
+        let step = StepControl::Steps(n);
+        let adj = prob
+            .sensitivity_sum(&SensAlg::StochasticAdjoint(AdjointConfig::default()), step)
+            .unwrap();
         let bp_mil =
-            backprop_through_solver(&sde, &theta, &x0, 0.0, 1.0, n, key, Method::MilsteinIto);
-        let bp_eul =
-            backprop_through_solver(&sde, &theta, &x0, 0.0, 1.0, n, key, Method::EulerMaruyama);
-        let fw = forward_pathwise_gradients(&sde, &theta, &x0, 0.0, 1.0, n, key);
+            prob.sensitivity_sum(&SensAlg::Backprop { method: Method::MilsteinIto }, step).unwrap();
+        let bp_eul = prob
+            .sensitivity_sum(&SensAlg::Backprop { method: Method::EulerMaruyama }, step)
+            .unwrap();
+        let fw = prob.sensitivity_sum(&SensAlg::ForwardPathwise, step).unwrap();
 
         for j in 0..theta.len() {
-            let scale = bp_mil.grad_theta[j].abs().max(1.0);
+            let scale = bp_mil.dtheta[j].abs().max(1.0);
             // Adjoint vs Milstein-backprop: same strong-order-1.0 target,
             // agree up to discretization.
-            if (adj.grad_theta[j] - bp_mil.grad_theta[j]).abs() / scale > 0.05 {
+            if (adj.dtheta[j] - bp_mil.dtheta[j]).abs() / scale > 0.05 {
                 return Err(format!(
                     "seed {seed} dim {dim} θ[{j}]: adjoint {} vs backprop {}",
-                    adj.grad_theta[j], bp_mil.grad_theta[j]
+                    adj.dtheta[j], bp_mil.dtheta[j]
                 ));
             }
             // Pathwise vs Euler-backprop: forward- and reverse-mode of the
             // SAME discrete computation — must agree to round-off.
-            if (fw.grad_theta[j] - bp_eul.grad_theta[j]).abs() / scale > 1e-6 {
+            if (fw.dtheta[j] - bp_eul.dtheta[j]).abs() / scale > 1e-6 {
                 return Err(format!(
                     "seed {seed} θ[{j}]: pathwise {} vs euler-backprop {} (should be exact)",
-                    fw.grad_theta[j], bp_eul.grad_theta[j]
+                    fw.dtheta[j], bp_eul.dtheta[j]
                 ));
             }
         }
@@ -115,26 +111,24 @@ fn property_adjoint_matches_closed_form_all_problems() {
         let sde = ReplicatedSde::new(problem, dim);
         let key = PrngKey::from_seed(seed);
         let (theta, x0) = sample_experiment_setup(key, dim, problem.nparams());
-        let out = stochastic_adjoint_gradients(
-            &sde,
-            &theta,
-            &x0,
-            0.0,
-            1.0,
-            4000,
-            key,
-            &AdjointConfig::default(),
-        );
+        let out = SdeProblem::new(&sde, &x0, (0.0, 1.0))
+            .params(&theta)
+            .key(key)
+            .sensitivity_sum(
+                &SensAlg::StochasticAdjoint(AdjointConfig::default()),
+                StepControl::Steps(4000),
+            )
+            .unwrap();
         let mut g_x0 = vec![0.0; dim];
         let mut g_th = vec![0.0; theta.len()];
         sde.analytic_loss_gradients(1.0, &x0, &theta, &out.w_terminal, &mut g_x0, &mut g_th);
         for j in 0..theta.len() {
-            let rel = (out.grad_theta[j] - g_th[j]).abs() / g_th[j].abs().max(1e-2);
+            let rel = (out.dtheta[j] - g_th[j]).abs() / g_th[j].abs().max(1e-2);
             if rel > 0.03 {
                 return Err(format!(
                     "{} seed {seed} θ[{j}]: {} vs analytic {} (rel {rel:.4})",
                     problem.name(),
-                    out.grad_theta[j],
+                    out.dtheta[j],
                     g_th[j]
                 ));
             }
@@ -198,14 +192,15 @@ fn adjoint_with_tree_is_bit_deterministic() {
     let sde = ReplicatedSde::new(Example2, 4);
     let key = PrngKey::from_seed(17);
     let (theta, x0) = sample_experiment_setup(key, 4, 1);
-    let cfg = AdjointConfig {
-        noise: NoiseMode::VirtualTree { tol: 1e-7 },
-        ..Default::default()
-    };
-    let a = stochastic_adjoint_gradients(&sde, &theta, &x0, 0.0, 1.0, 500, key, &cfg);
-    let b = stochastic_adjoint_gradients(&sde, &theta, &x0, 0.0, 1.0, 500, key, &cfg);
-    assert_eq!(a.grad_theta, b.grad_theta);
-    assert_eq!(a.grad_z0, b.grad_z0);
+    let prob = SdeProblem::new(&sde, &x0, (0.0, 1.0))
+        .params(&theta)
+        .key(key)
+        .noise(NoiseMode::VirtualTree { tol: 1e-7 });
+    let alg = SensAlg::StochasticAdjoint(AdjointConfig::default());
+    let a = prob.sensitivity_sum(&alg, StepControl::Steps(500)).unwrap();
+    let b = prob.sensitivity_sum(&alg, StepControl::Steps(500)).unwrap();
+    assert_eq!(a.dtheta, b.dtheta);
+    assert_eq!(a.dz0, b.dz0);
     assert_eq!(a.z_terminal, b.z_terminal);
 }
 
@@ -217,21 +212,17 @@ fn nonstandard_time_horizons() {
     let key = PrngKey::from_seed(23);
     let (theta, x0) = sample_experiment_setup(key, 2, 2);
     let (t0, t1) = (0.5, 3.0);
-    let out = stochastic_adjoint_gradients(
-        &sde,
-        &theta,
-        &x0,
-        t0,
-        t1,
-        3000,
-        key,
-        &AdjointConfig::default(),
-    );
+    let prob = SdeProblem::new(&sde, &x0, (t0, t1)).params(&theta).key(key);
+    let step = StepControl::Steps(3000);
+    let out = prob
+        .sensitivity_sum(&SensAlg::StochasticAdjoint(AdjointConfig::default()), step)
+        .unwrap();
     // Closed form of Example 3 holds from t0=0; for t0=0.5 compare against
     // backprop (exact for the discretization) instead.
-    let bp = backprop_through_solver(&sde, &theta, &x0, t0, t1, 3000, key, Method::MilsteinIto);
+    let bp =
+        prob.sensitivity_sum(&SensAlg::Backprop { method: Method::MilsteinIto }, step).unwrap();
     for j in 0..theta.len() {
-        let rel = (out.grad_theta[j] - bp.grad_theta[j]).abs() / bp.grad_theta[j].abs().max(1e-2);
-        assert!(rel < 0.05, "θ[{j}]: adjoint {} vs backprop {}", out.grad_theta[j], bp.grad_theta[j]);
+        let rel = (out.dtheta[j] - bp.dtheta[j]).abs() / bp.dtheta[j].abs().max(1e-2);
+        assert!(rel < 0.05, "θ[{j}]: adjoint {} vs backprop {}", out.dtheta[j], bp.dtheta[j]);
     }
 }
