@@ -1,0 +1,6 @@
+//! Bench: regenerate the convergence-order verification table (empirical
+//! strong/weak/gradient orders vs analytic oracles, with bootstrap CIs).
+fn main() {
+    let quick = std::env::var("SDEGRAD_QUICK").is_ok();
+    sdegrad::coordinator::repro::convergence::run(quick);
+}

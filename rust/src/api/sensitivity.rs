@@ -39,7 +39,9 @@ pub enum SensAlg {
 }
 
 impl SensAlg {
-    fn name(&self) -> &'static str {
+    /// Stable identifier used in error messages and harness output (the
+    /// convergence tables key their gradient-order rows on it).
+    pub fn name(&self) -> &'static str {
         match self {
             SensAlg::StochasticAdjoint(_) => "StochasticAdjoint",
             SensAlg::Backprop { .. } => "Backprop",

@@ -108,4 +108,82 @@ mod tests {
         assert!(mean.abs() < 5e-3, "mean {mean}");
         assert!((var - 0.1875).abs() < 5e-3, "var {var}");
     }
+
+    // -- randomized properties (crate::testing::forall) ---------------------
+
+    use crate::testing::forall;
+
+    /// Property: for any random interval and interior time, the bridge
+    /// weights are a convex combination (`wa + wb = 1`, both in [0, 1])
+    /// and the variance matches the closed form `wa·wb·(te − ts)`.
+    #[test]
+    fn property_bridge_moments_identities() {
+        forall("bridge-moment-identities", 104, 128, |g| {
+            let ts = g.f64_in(-2.0, 2.0);
+            let span = g.f64_in(1e-6, 3.0);
+            let te = ts + span;
+            let t = ts + g.f64_in(0.0, 1.0) * span;
+            let (wa, wb, std) = bridge_moments(ts, te, t);
+            if (wa + wb - 1.0).abs() > 1e-12 {
+                return Err(format!("wa + wb = {} != 1 at t={t} in [{ts}, {te}]", wa + wb));
+            }
+            if !(-1e-12..=1.0 + 1e-12).contains(&wa) {
+                return Err(format!("wa = {wa} outside [0, 1]"));
+            }
+            let var_closed = wa * wb * span;
+            if (std * std - var_closed).abs() > 1e-12 * span.max(1.0) {
+                return Err(format!("std² = {} vs wa·wb·span = {var_closed}", std * std));
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: sampling at an endpoint reproduces that endpoint exactly
+    /// (zero variance), for arbitrary endpoint values; the sample is
+    /// deterministic in the key; and an interior sample stays within 8σ
+    /// of the bridge mean (a bound the Gaussian violates with
+    /// probability ~1e-15 — never over this case count).
+    #[test]
+    fn property_bridge_sample_endpoints_and_determinism() {
+        forall("bridge-sample-endpoints", 105, 64, |g| {
+            let seed = g.usize_in(0, 1 << 20) as u64;
+            let key = PrngKey::from_seed(seed);
+            let ts = g.f64_in(-1.0, 1.0);
+            let span = g.f64_in(1e-3, 2.0);
+            let te = ts + span;
+            let ws = [g.normal(), g.normal()];
+            let we = [g.normal(), g.normal()];
+            let mut out = [0.0; 2];
+
+            brownian_bridge_sample(key, ts, &ws, te, &we, ts, &mut out);
+            if out != ws {
+                return Err(format!("sample at ts: {out:?} != {ws:?} (seed {seed})"));
+            }
+            brownian_bridge_sample(key, ts, &ws, te, &we, te, &mut out);
+            if out != we {
+                return Err(format!("sample at te: {out:?} != {we:?} (seed {seed})"));
+            }
+
+            let t = ts + 0.5 * span;
+            let mut a = [0.0; 2];
+            let mut b = [0.0; 2];
+            brownian_bridge_sample(key, ts, &ws, te, &we, t, &mut a);
+            brownian_bridge_sample(key, ts, &ws, te, &we, t, &mut b);
+            if a != b {
+                return Err(format!("nondeterministic sample (seed {seed})"));
+            }
+            let (wa, wb, std) = bridge_moments(ts, te, t);
+            for i in 0..2 {
+                let mean = wa * ws[i] + wb * we[i];
+                if (a[i] - mean).abs() > 8.0 * std {
+                    return Err(format!(
+                        "sample {} is {}σ from bridge mean {mean} (seed {seed})",
+                        a[i],
+                        (a[i] - mean).abs() / std
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
 }

@@ -15,13 +15,20 @@
 //! Both are deterministic given their key: querying the same time twice
 //! returns the same value, which is precisely what makes the backward solve
 //! see the forward pass's noise.
+//!
+//! [`quadrature`] evaluates kernel-weighted Riemann integrals of a
+//! realized path (`∫ f(u)·W(u) du`), the primitive the convergence
+//! subsystem's analytic oracles use to reconstruct exact strong solutions
+//! of additive-noise SDEs from the same noise source the solver consumed.
 
 pub mod bridge;
 pub mod path;
-pub mod tree;
+pub mod quadrature;
 pub mod traits;
+pub mod tree;
 
 pub use bridge::brownian_bridge_sample;
 pub use path::BrownianPath;
+pub use quadrature::weighted_path_integrals;
 pub use traits::BrownianMotion;
 pub use tree::VirtualBrownianTree;

@@ -293,4 +293,112 @@ mod tests {
         let corr = dot / n as f64 / 0.7; // normalize by Var = t
         assert!(corr.abs() < 0.03, "corr {corr}");
     }
+
+    // -- randomized properties (crate::testing::forall) ---------------------
+
+    use crate::brownian::BrownianPath;
+    use crate::testing::forall;
+
+    /// Property: querying the same time twice — with arbitrary other
+    /// queries interleaved — returns bit-identical values, for both the
+    /// virtual tree (a pure function of `(key, t)`) and the stored path
+    /// (a cache).
+    #[test]
+    fn property_same_time_queries_deterministic() {
+        forall("same-t-determinism", 101, 64, |g| {
+            let seed = g.usize_in(0, 1 << 20) as u64;
+            let d = g.usize_in(1, 4);
+            let t = g.f64_in(1e-6, 1.0 - 1e-6);
+            let interleaved: Vec<f64> = (0..3).map(|_| g.f64_in(0.0, 1.0)).collect();
+
+            let mut tr = VirtualBrownianTree::new(PrngKey::from_seed(seed), d, 0.0, 1.0, 1e-11);
+            let mut pa = BrownianPath::new(PrngKey::from_seed(seed), d, 0.0, 1.0);
+            let first_tree = tr.sample(t);
+            let first_path = pa.sample(t);
+            for &u in &interleaved {
+                tr.sample(u);
+                pa.sample(u);
+            }
+            if tr.sample(t) != first_tree {
+                return Err(format!("tree inconsistent at t={t} (seed {seed})"));
+            }
+            if pa.sample(t) != first_path {
+                return Err(format!("stored path inconsistent at t={t} (seed {seed})"));
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: increment additivity `W(s,t) + W(t,u) = W(s,u)` (up to
+    /// float cancellation) for random `s < t < u`, on both sources.
+    #[test]
+    fn property_increment_additivity() {
+        forall("increment-additivity", 102, 64, |g| {
+            let seed = g.usize_in(0, 1 << 20) as u64;
+            let mut ts = [g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0)];
+            ts.sort_by(|a, b| a.total_cmp(b));
+            let [s, t, u] = ts;
+            if t - s < 1e-9 || u - t < 1e-9 {
+                return Ok(()); // degenerate case: nothing to check
+            }
+            let check = |name: &str, bm: &mut dyn BrownianMotion| -> Result<(), String> {
+                let a = bm.increment(s, t)[0];
+                let b = bm.increment(t, u)[0];
+                let c = bm.increment(s, u)[0];
+                if (a + b - c).abs() > 1e-12 {
+                    Err(format!(
+                        "{name}: W({s},{t})+W({t},{u}) = {} != W({s},{u}) = {c} (seed {seed})",
+                        a + b
+                    ))
+                } else {
+                    Ok(())
+                }
+            };
+            check(
+                "tree",
+                &mut VirtualBrownianTree::new(PrngKey::from_seed(seed), 1, 0.0, 1.0, 1e-11),
+            )?;
+            check("path", &mut BrownianPath::new(PrngKey::from_seed(seed), 1, 0.0, 1.0))
+        });
+    }
+
+    /// Property: StoredPath ↔ VirtualTree agreement. The two sources
+    /// realize different sample paths from the same key (different
+    /// algorithms), so agreement is in *law*: over a batch of seeds, the
+    /// empirical variance of the increment over a random interval must
+    /// match `t − s` for both, and hence each other, within statistical
+    /// tolerance.
+    #[test]
+    fn property_stored_path_and_tree_agree_in_law() {
+        forall("path-tree-law-agreement", 103, 12, |g| {
+            let s = g.f64_in(0.0, 0.45);
+            let t = g.f64_in(0.55, 1.0);
+            let span = t - s;
+            let n_seeds = 800u64;
+            let base = g.usize_in(0, 1 << 20) as u64;
+            let mut var = [0.0f64; 2];
+            for seed in 0..n_seeds {
+                let key = PrngKey::from_seed(base + seed);
+                let inc_t =
+                    VirtualBrownianTree::new(key, 1, 0.0, 1.0, 1e-11).increment(s, t)[0];
+                let inc_p = BrownianPath::new(key, 1, 0.0, 1.0).increment(s, t)[0];
+                var[0] += inc_t * inc_t;
+                var[1] += inc_p * inc_p;
+            }
+            for v in var.iter_mut() {
+                *v /= n_seeds as f64;
+            }
+            // √(2/800) ≈ 5% relative noise on a variance estimate; 25%
+            // is a ≥5σ band.
+            for (name, v) in [("tree", var[0]), ("path", var[1])] {
+                if (v - span).abs() > 0.25 * span {
+                    return Err(format!("{name}: Var[W({s},{t})] = {v}, expected {span}"));
+                }
+            }
+            if (var[0] - var[1]).abs() > 0.35 * span {
+                return Err(format!("sources disagree: tree {} vs path {}", var[0], var[1]));
+            }
+            Ok(())
+        });
+    }
 }

@@ -1,0 +1,270 @@
+//! Empirical convergence-order verification (paper §5).
+//!
+//! The paper's numerical claim is that solutions — and, through the
+//! stochastic adjoint, *gradients* — of the discretized SDE converge to
+//! the true ones as the step size shrinks, at the scheme's strong order.
+//! Elsewhere in this crate that claim lives in unverified constants
+//! ([`crate::solvers::Method::strong_order`]) and in loose
+//! "error-shrinks" assertions; this subsystem *measures* the orders
+//! against analytic oracles and attaches bootstrap confidence intervals,
+//! so every future performance PR has a statistical safety net.
+//!
+//! ## How an order is measured
+//!
+//! 1. **Shared path.** A problem is replicated over `n_paths` Brownian
+//!    paths (one [`crate::prng::PrngKey`] per path). Each path is realized
+//!    by a [`crate::brownian::VirtualBrownianTree`], whose value at a time
+//!    is a *pure function* of `(key, t)` — so every rung of a step-size
+//!    ladder, and the analytic oracle, consume literally the same sample
+//!    path. (Estimators that tape their own stored path instead have the
+//!    path replayed query-for-query before the oracle reads it.)
+//! 2. **dt ladder.** [`DtLadder`] halves the step size rung by rung
+//!    (power-of-two step counts, so rung grids are nested bit-exactly and
+//!    dyadic queries terminate in the tree without tolerance error).
+//! 3. **Errors.** Per rung: the strong error (per-path RMS of
+//!    `X^num_T − X^exact_T` over dimensions, averaged across paths), the
+//!    weak error (|mean of the coupled difference| — the coupling makes
+//!    the Monte-Carlo noise scale with the *strong* error instead of the
+//!    solution's standard deviation),
+//!    and the gradient error (mean |∂L^num − ∂L^exact| over components)
+//!    for any [`crate::api::SensAlg`]. Oracles implement
+//!    [`crate::sde::ExactSolution`].
+//! 4. **Fit.** The empirical order is the slope of a log-log least-squares
+//!    fit ([`crate::metrics::fit_loglog`]); its 95% confidence interval
+//!    comes from a paired bootstrap over paths (resampling whole paths
+//!    keeps the across-rung coupling intact).
+//!
+//! Entry points: [`strong_weak_orders`] and [`gradient_orders`]; the
+//! `sdegrad repro convergence` harness
+//! ([`crate::coordinator::repro::convergence`]) prints the full table and
+//! CSVs, and `tests/convergence.rs` pins the measured orders against the
+//! nominal ones with seeded tolerances.
+
+pub mod gradient;
+pub mod ladder;
+
+pub use gradient::{gradient_orders, GradientLadderResult, GradientRung};
+pub use ladder::{
+    strong_weak_orders, strong_weak_orders_multi, RungMeasurement, StrongWeakResult,
+};
+
+use crate::metrics::{fit_loglog, percentile_of_sorted};
+use crate::prng::PrngKey;
+
+/// Tree tolerance used when a problem does not already specify one. Fine
+/// enough that non-dyadic queries carry negligible time-jitter; dyadic
+/// queries (the normal case: power-of-two ladders on unit horizons)
+/// terminate exactly regardless.
+pub const DEFAULT_TREE_TOL: f64 = 1e-12;
+
+/// A halving ladder of step counts: `base_steps · 2^r` for
+/// `r = 0..rungs`. Power-of-two counts keep rung grids nested
+/// bit-exactly (see module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct DtLadder {
+    /// Step count of the coarsest rung.
+    pub base_steps: usize,
+    /// Number of rungs (≥ 2 to fit a slope; ≥ 4 for the acceptance
+    /// criteria of the statistical suite).
+    pub rungs: usize,
+}
+
+impl DtLadder {
+    pub fn new(base_steps: usize, rungs: usize) -> Self {
+        assert!(base_steps > 0, "DtLadder: base_steps must be positive");
+        assert!(rungs >= 2, "DtLadder: need at least two rungs to fit an order");
+        DtLadder { base_steps, rungs }
+    }
+
+    /// Step counts, coarse to fine.
+    pub fn step_counts(&self) -> Vec<usize> {
+        (0..self.rungs).map(|r| self.base_steps << r).collect()
+    }
+
+    /// Step sizes `|t1 − t0| / n`, coarse to fine.
+    pub fn step_sizes(&self, span: (f64, f64)) -> Vec<f64> {
+        let tt = (span.1 - span.0).abs();
+        self.step_counts().iter().map(|&n| tt / n as f64).collect()
+    }
+}
+
+/// How per-path error samples are aggregated into one rung-level error.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorAggregate {
+    /// `sqrt(mean(e²))` — quadratic-mean aggregation. Available for
+    /// re-analysis, but *not* what the strong ladders use: under GBM's
+    /// lognormal error tails the cross-path RMS is ~2× noisier than the
+    /// path-mean at the same convergence order.
+    Rms,
+    /// `mean(|e|)` — strong errors (each sample is already a per-path
+    /// RMS over dimensions) and gradient errors (Fig 5's convention).
+    MeanAbs,
+    /// `|mean(e)|` of *signed* samples — weak (moment) errors.
+    AbsMean,
+}
+
+impl ErrorAggregate {
+    fn apply(&self, vals: impl Iterator<Item = f64>) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        match self {
+            ErrorAggregate::Rms => {
+                for v in vals {
+                    sum += v * v;
+                    n += 1;
+                }
+                (sum / n.max(1) as f64).sqrt()
+            }
+            ErrorAggregate::MeanAbs => {
+                for v in vals {
+                    sum += v.abs();
+                    n += 1;
+                }
+                sum / n.max(1) as f64
+            }
+            ErrorAggregate::AbsMean => {
+                for v in vals {
+                    sum += v;
+                    n += 1;
+                }
+                (sum / n.max(1) as f64).abs()
+            }
+        }
+    }
+}
+
+/// An empirically fitted convergence order with a bootstrap 95% CI.
+#[derive(Clone, Copy, Debug)]
+pub struct OrderEstimate {
+    /// Point estimate (log-log slope over the full path sample).
+    pub order: f64,
+    /// Fitted `ln C` of `error ≈ C·h^order`.
+    pub intercept: f64,
+    /// 2.5% / 97.5% bootstrap percentiles of the slope.
+    pub ci_lo: f64,
+    pub ci_hi: f64,
+    /// Bootstrap resamples that produced a usable fit.
+    pub n_boot: usize,
+}
+
+/// Fit an order from per-path errors and attach a paired-bootstrap CI.
+///
+/// `per_path[r][i]` is path `i`'s error sample at rung `r` (`hs[r]` its
+/// step size). The bootstrap resamples *path indices* — the same resample
+/// is applied to every rung, preserving the shared-path coupling that
+/// makes the rung errors comparable in the first place. Deterministic in
+/// `key`.
+pub fn bootstrap_order(
+    hs: &[f64],
+    per_path: &[Vec<f64>],
+    agg: ErrorAggregate,
+    n_boot: usize,
+    key: PrngKey,
+) -> OrderEstimate {
+    assert_eq!(hs.len(), per_path.len(), "bootstrap_order: rung count mismatch");
+    let n_paths = per_path.first().map_or(0, |v| v.len());
+    assert!(n_paths > 0, "bootstrap_order: need at least one path");
+    assert!(per_path.iter().all(|v| v.len() == n_paths), "bootstrap_order: ragged samples");
+
+    let point: Vec<f64> = per_path.iter().map(|v| agg.apply(v.iter().copied())).collect();
+    let fit = fit_loglog(hs, &point);
+
+    let mut slopes = Vec::with_capacity(n_boot);
+    let mut idx = vec![0usize; n_paths];
+    let mut errs = vec![0.0; hs.len()];
+    for b in 0..n_boot {
+        let kb = key.fold_in(b as u64);
+        for (j, slot) in idx.iter_mut().enumerate() {
+            *slot = ((kb.uniform(j as u64) * n_paths as f64) as usize).min(n_paths - 1);
+        }
+        for (r, rung) in per_path.iter().enumerate() {
+            errs[r] = agg.apply(idx.iter().map(|&i| rung[i]));
+        }
+        let f = fit_loglog(hs, &errs);
+        if f.slope.is_finite() {
+            slopes.push(f.slope);
+        }
+    }
+    let (ci_lo, ci_hi) = if slopes.is_empty() {
+        (f64::NAN, f64::NAN)
+    } else {
+        slopes.sort_by(|a, b| a.total_cmp(b));
+        (percentile_of_sorted(&slopes, 0.025), percentile_of_sorted(&slopes, 0.975))
+    };
+    OrderEstimate {
+        order: fit.slope,
+        intercept: fit.intercept,
+        ci_lo,
+        ci_hi,
+        n_boot: slopes.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_counts_and_sizes() {
+        let l = DtLadder::new(16, 4);
+        assert_eq!(l.step_counts(), vec![16, 32, 64, 128]);
+        let hs = l.step_sizes((0.0, 1.0));
+        assert_eq!(hs, vec![1.0 / 16.0, 1.0 / 32.0, 1.0 / 64.0, 1.0 / 128.0]);
+    }
+
+    #[test]
+    fn aggregates() {
+        let v = [3.0, -4.0];
+        assert!((ErrorAggregate::Rms.apply(v.iter().copied()) - (12.5f64).sqrt()).abs() < 1e-12);
+        assert!((ErrorAggregate::MeanAbs.apply(v.iter().copied()) - 3.5).abs() < 1e-12);
+        assert!((ErrorAggregate::AbsMean.apply(v.iter().copied()) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bootstrap_recovers_noiseless_order() {
+        // Per-path errors exactly C_i · h^0.8: slope is 0.8 for every
+        // resample, so the CI collapses onto the point estimate.
+        let hs = [0.1, 0.05, 0.025];
+        let paths = 20;
+        let per_path: Vec<Vec<f64>> = hs
+            .iter()
+            .map(|h| (0..paths).map(|i| (1.0 + i as f64) * h.powf(0.8)).collect())
+            .collect();
+        let est = bootstrap_order(
+            &hs,
+            &per_path,
+            ErrorAggregate::MeanAbs,
+            200,
+            PrngKey::from_seed(1),
+        );
+        assert!((est.order - 0.8).abs() < 1e-10, "order {}", est.order);
+        assert!((est.ci_lo - 0.8).abs() < 1e-10 && (est.ci_hi - 0.8).abs() < 1e-10);
+        assert_eq!(est.n_boot, 200);
+    }
+
+    #[test]
+    fn bootstrap_ci_brackets_point_estimate_under_noise() {
+        // Heterogeneous constants across paths → nondegenerate CI that
+        // still brackets the point estimate.
+        let hs = [0.2, 0.1, 0.05, 0.025];
+        let key = PrngKey::from_seed(9);
+        let paths = 40;
+        let per_path: Vec<Vec<f64>> = hs
+            .iter()
+            .enumerate()
+            .map(|(r, h)| {
+                (0..paths)
+                    .map(|i| {
+                        let c = 0.5 + key.uniform((r * paths + i) as u64);
+                        c * h
+                    })
+                    .collect()
+            })
+            .collect();
+        let est =
+            bootstrap_order(&hs, &per_path, ErrorAggregate::Rms, 300, PrngKey::from_seed(2));
+        assert!(est.ci_lo <= est.order && est.order <= est.ci_hi, "{est:?}");
+        assert!(est.ci_hi > est.ci_lo, "CI should have positive width: {est:?}");
+        assert!((est.order - 1.0).abs() < 0.2, "order {}", est.order);
+    }
+}

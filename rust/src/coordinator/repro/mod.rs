@@ -1,12 +1,14 @@
 //! Reproduction harnesses — one per table/figure of the paper's
-//! evaluation (DESIGN.md §5 maps IDs to modules). Each harness prints the
-//! paper's rows/series as an aligned text table and writes the raw data
-//! as CSV under `bench_out/`.
+//! evaluation (DESIGN.md §5 maps IDs to modules), plus the
+//! [`convergence`] verification table (empirical strong/weak/gradient
+//! orders vs analytic oracles). Each harness prints its rows/series as an
+//! aligned text table and writes the raw data as CSV under `bench_out/`.
 //!
 //! Shared by the `cargo bench` targets (thin wrappers) and the
 //! `sdegrad repro <id>` CLI. `quick: true` shrinks the sweep for CI-speed
 //! smoke runs; `false` reproduces the paper-scale setting.
 
+pub mod convergence;
 pub mod fig2;
 pub mod fig5;
 pub mod latent_figs;

@@ -48,6 +48,18 @@
 //! `stochastic_adjoint_gradients`, …) remain as `#[deprecated]` shims
 //! with bit-identical results.
 //!
+//! ## Verified convergence orders
+//!
+//! The [`convergence`] subsystem turns the paper's §5 convergence claims
+//! into measurements: dt-ladder runners drive the API across halving step
+//! sizes against analytic oracles ([`sde::ExactSolution`] — closed-form
+//! strong solutions and pathwise gradients consuming the *same* Brownian
+//! path as the solver) and fit empirical strong/weak/gradient orders by
+//! log-log regression with paired-bootstrap confidence intervals.
+//! `sdegrad repro convergence` prints the table;
+//! `cargo test --release --test convergence` pins measured orders to the
+//! nominal ones ([`solvers::Method::strong_order`]) under seeded paths.
+//!
 //! ## Architecture (see DESIGN.md)
 //!
 //! * L3 (this crate) — [`api`] over solvers, adjoint, Brownian sources,
@@ -60,6 +72,7 @@
 pub mod adjoint;
 pub mod api;
 pub mod brownian;
+pub mod convergence;
 pub mod coordinator;
 pub mod data;
 pub mod error;
@@ -83,7 +96,7 @@ pub mod prelude {
     };
     pub use crate::brownian::{BrownianMotion, BrownianPath, VirtualBrownianTree};
     pub use crate::prng::PrngKey;
-    pub use crate::sde::{Calculus, ReplicatedSde, Sde, SdeVjp};
+    pub use crate::sde::{Calculus, ExactSolution, ReplicatedSde, Sde, SdeVjp};
     pub use crate::solvers::{AdaptiveConfig, Method, SolveStats};
 }
 

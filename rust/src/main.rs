@@ -23,7 +23,7 @@ USAGE:
     sdegrad train --dataset <gbm|lorenz|mocap> [--mode sde|ode] [--iters N]
                   [--batch N] [--lr F] [--kl F] [--substeps N] [--seed N]
                   [--workers N] [--out checkpoint.bin] [--log train.csv]
-    sdegrad repro <table1|fig2|fig5|fig6|fig9|table2|all> [--quick]
+    sdegrad repro <table1|fig2|fig5|fig6|fig9|table2|convergence|all> [--quick]
     sdegrad artifacts-check [--dir artifacts]
     sdegrad list",
         sdegrad::version()
@@ -171,6 +171,9 @@ fn cmd_repro(rest: &[String]) {
         "table2" => {
             repro::table2::run(quick);
         }
+        "convergence" => {
+            repro::convergence::run(quick);
+        }
         "all" => {
             repro::table1::run(quick);
             repro::fig2::run(quick);
@@ -178,6 +181,7 @@ fn cmd_repro(rest: &[String]) {
             repro::latent_figs::run_lorenz(quick);
             repro::latent_figs::run_gbm(quick);
             repro::table2::run(quick);
+            repro::convergence::run(quick);
         }
         other => {
             eprintln!("unknown experiment {other}");
@@ -233,6 +237,9 @@ fn cmd_artifacts_check(rest: &[String]) {
 
 fn cmd_list() {
     println!("datasets:     gbm, lorenz, mocap (synthetic; see DESIGN.md §3)");
-    println!("experiments:  table1, fig2, fig5 (incl. fig7), fig6 (incl. fig8), fig9, table2");
+    println!(
+        "experiments:  table1, fig2, fig5 (incl. fig7), fig6 (incl. fig8), fig9, table2, \
+         convergence"
+    );
     println!("artifacts:    see `sdegrad artifacts-check`");
 }

@@ -6,6 +6,8 @@ pub mod stats;
 pub mod timer;
 pub mod writer;
 
-pub use stats::{confidence_interval_95, OnlineStats, Quartiles};
+pub use stats::{
+    confidence_interval_95, fit_loglog, percentile_of_sorted, LogLogFit, OnlineStats, Quartiles,
+};
 pub use timer::Stopwatch;
 pub use writer::{CsvWriter, JsonlWriter};

@@ -82,6 +82,54 @@ pub fn confidence_interval_95(stats: &OnlineStats) -> f64 {
     t * stats.sem()
 }
 
+/// Least-squares fit of `ln y = slope·ln x + intercept` — the estimator
+/// behind every empirical convergence order (`error ≈ C·hᵖ` appears as a
+/// line of slope `p` in log-log coordinates).
+#[derive(Clone, Copy, Debug)]
+pub struct LogLogFit {
+    pub slope: f64,
+    pub intercept: f64,
+    /// Points actually used (non-finite or non-positive pairs are
+    /// dropped — a Monte-Carlo error estimate can legitimately be 0).
+    pub n_used: usize,
+}
+
+/// Ordinary least squares on `(ln x, ln y)`. Pairs where either value is
+/// non-positive or non-finite are skipped; returns NaN slope when fewer
+/// than two usable points remain.
+pub fn fit_loglog(x: &[f64], y: &[f64]) -> LogLogFit {
+    assert_eq!(x.len(), y.len(), "fit_loglog: length mismatch");
+    let pts: Vec<(f64, f64)> = x
+        .iter()
+        .zip(y)
+        .filter(|(&a, &b)| a > 0.0 && b > 0.0 && a.is_finite() && b.is_finite())
+        .map(|(&a, &b)| (a.ln(), b.ln()))
+        .collect();
+    let n = pts.len();
+    if n < 2 {
+        return LogLogFit { slope: f64::NAN, intercept: f64::NAN, n_used: n };
+    }
+    let nf = n as f64;
+    let mx = pts.iter().map(|p| p.0).sum::<f64>() / nf;
+    let my = pts.iter().map(|p| p.1).sum::<f64>() / nf;
+    let sxx: f64 = pts.iter().map(|p| (p.0 - mx) * (p.0 - mx)).sum();
+    let sxy: f64 = pts.iter().map(|p| (p.0 - mx) * (p.1 - my)).sum();
+    let slope = sxy / sxx;
+    LogLogFit { slope, intercept: my - slope * mx, n_used: n }
+}
+
+/// Linear-interpolated percentile of an ascending-sorted sample
+/// (`p ∈ [0, 1]`). Shared by [`Quartiles`] and the convergence
+/// subsystem's bootstrap confidence intervals.
+pub fn percentile_of_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty sample");
+    let idx = p.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = idx.floor() as usize;
+    let hi = idx.ceil() as usize;
+    let frac = idx - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
 /// Median/quartiles of a sample (Fig 5(a) boxplot statistics).
 #[derive(Clone, Copy, Debug)]
 pub struct Quartiles {
@@ -98,13 +146,7 @@ impl Quartiles {
         assert!(!values.is_empty(), "Quartiles of empty sample");
         let mut v = values.to_vec();
         v.sort_by(|a, b| a.total_cmp(b));
-        let q = |p: f64| -> f64 {
-            let idx = p * (v.len() - 1) as f64;
-            let lo = idx.floor() as usize;
-            let hi = idx.ceil() as usize;
-            let frac = idx - lo as f64;
-            v[lo] * (1.0 - frac) + v[hi] * frac
-        };
+        let q = |p: f64| percentile_of_sorted(&v, p);
         Quartiles { q1: q(0.25), median: q(0.5), q3: q(0.75), min: v[0], max: *v.last().unwrap() }
     }
 }
@@ -136,6 +178,36 @@ mod tests {
         assert_eq!(q.q3, 4.0);
         assert_eq!(q.min, 1.0);
         assert_eq!(q.max, 5.0);
+    }
+
+    #[test]
+    fn fit_loglog_recovers_exact_power_law() {
+        let hs = [0.5, 0.25, 0.125, 0.0625];
+        let ys: Vec<f64> = hs.iter().map(|h| 3.0 * h.powf(1.5)).collect();
+        let fit = fit_loglog(&hs, &ys);
+        assert_eq!(fit.n_used, 4);
+        assert!((fit.slope - 1.5).abs() < 1e-12, "slope {}", fit.slope);
+        assert!((fit.intercept - 3.0f64.ln()).abs() < 1e-12, "intercept {}", fit.intercept);
+    }
+
+    #[test]
+    fn fit_loglog_skips_degenerate_points() {
+        let hs = [0.5, 0.25, 0.125, 0.0625];
+        let ys = [1.0, 0.5, 0.0, f64::NAN]; // two usable points
+        let fit = fit_loglog(&hs, &ys);
+        assert_eq!(fit.n_used, 2);
+        assert!((fit.slope - 1.0).abs() < 1e-12, "slope {}", fit.slope);
+        let all_bad = fit_loglog(&hs[..2], &[0.0, -1.0]);
+        assert_eq!(all_bad.n_used, 0);
+        assert!(all_bad.slope.is_nan());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile_of_sorted(&v, 0.0), 1.0);
+        assert_eq!(percentile_of_sorted(&v, 1.0), 4.0);
+        assert_eq!(percentile_of_sorted(&v, 0.5), 2.5);
     }
 
     #[test]

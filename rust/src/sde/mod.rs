@@ -18,6 +18,10 @@
 //!   analytic solutions and analytic pathwise gradients.
 //! * [`lorenz`] — the stochastic Lorenz attractor (App. 9.9.2).
 //! * [`ou`] — Ornstein–Uhlenbeck (closed-form moments; extra test system).
+//!
+//! Systems with a closed-form strong solution additionally implement
+//! [`ExactSolution`] — the pathwise oracle the [`crate::convergence`]
+//! subsystem measures empirical convergence orders against.
 
 pub mod func;
 pub mod lorenz;
@@ -26,5 +30,5 @@ pub mod problems;
 pub mod traits;
 
 pub use func::{ForwardFunc, SdeFunc};
-pub use traits::{Calculus, ScalarSde, Sde, SdeVjp};
 pub use problems::{ReplicatedSde, ScalarProblem};
+pub use traits::{Calculus, ExactSolution, ScalarSde, Sde, SdeVjp};

@@ -22,7 +22,8 @@
 //!   additive noise (Itô = Stratonovich), with solution
 //!   `X_t = x0/√(1+t) + β(t + αW_t)/√(1+t)`.
 
-use super::traits::{Calculus, ScalarSde, Sde, SdeVjp};
+use super::traits::{Calculus, ExactSolution, ScalarSde, Sde, SdeVjp};
+use crate::brownian::BrownianMotion;
 
 // ---------------------------------------------------------------------------
 // Example 1: geometric Brownian motion. θ = [α, β].
@@ -365,6 +366,89 @@ impl<P: ScalarSde> SdeVjp for ReplicatedSde<P> {
                 out_theta[i * k + j] += a[i] * 0.5 * (dsig_dth[j] * sig_x + sig * dsigx_dth[j]);
             }
         }
+    }
+}
+
+/// Every §7.1 scalar problem's closed-form solution depends on the path
+/// only through `W_{t1}`, so the exact-solution oracle for a replicated
+/// problem needs exactly one Brownian query (the endpoint) — this is the
+/// GBM-style oracle of the [`crate::convergence`] subsystem.
+///
+/// The closed forms treat `span.0` as the problem's time origin (elapsed
+/// time `t1 − t0` is what enters `analytic_solution`), which is exact for
+/// the time-homogeneous Examples 1–2 and for Example 3 when `span.0 = 0`
+/// (its coefficients reference absolute time). A nonzero `span.0` on a
+/// time-*inhomogeneous* problem would silently make the oracle describe a
+/// different process than the solver, so it is rejected at run time (see
+/// [`ReplicatedSde::check_time_origin`]).
+impl<P: ScalarSde> ReplicatedSde<P> {
+    /// Panic unless the oracle's time-origin convention is valid for
+    /// `span`: either `span.0 = 0`, or the coefficients don't depend on
+    /// absolute time (probed at the initial state — catches Example 3's
+    /// `1/√(1+t)` factors immediately).
+    fn check_time_origin(&self, span: (f64, f64), z0: &[f64], theta: &[f64]) {
+        let t0 = span.0;
+        if t0 == 0.0 {
+            return;
+        }
+        for i in 0..self.dim {
+            let th = self.th(theta, i);
+            let p = &self.problem;
+            let homogeneous = p.drift(t0, z0[i], th) == p.drift(0.0, z0[i], th)
+                && p.diffusion(t0, z0[i], th) == p.diffusion(0.0, z0[i], th);
+            assert!(
+                homogeneous,
+                "ExactSolution for ReplicatedSde<{}>: closed form assumes the problem starts \
+                 at time 0, but span starts at {t0} and the coefficients depend on absolute \
+                 time — shift the problem to a (0, T) horizon",
+                self.problem.name()
+            );
+        }
+    }
+}
+
+impl<P: ScalarSde> ExactSolution for ReplicatedSde<P> {
+    fn exact_state(
+        &self,
+        span: (f64, f64),
+        z0: &[f64],
+        theta: &[f64],
+        bm: &mut dyn BrownianMotion,
+        out: &mut [f64],
+    ) {
+        self.check_time_origin(span, z0, theta);
+        let (t0, t1) = span;
+        let d = self.dim;
+        let mut w = vec![0.0; d];
+        let mut w0 = vec![0.0; d];
+        bm.sample_into(t0, &mut w0);
+        bm.sample_into(t1, &mut w);
+        for (wi, w0i) in w.iter_mut().zip(&w0) {
+            *wi -= w0i;
+        }
+        self.analytic_solution(t1 - t0, z0, theta, &w, out);
+    }
+
+    fn exact_sum_gradients(
+        &self,
+        span: (f64, f64),
+        z0: &[f64],
+        theta: &[f64],
+        bm: &mut dyn BrownianMotion,
+        grad_z0: &mut [f64],
+        grad_theta: &mut [f64],
+    ) {
+        self.check_time_origin(span, z0, theta);
+        let (t0, t1) = span;
+        let d = self.dim;
+        let mut w = vec![0.0; d];
+        let mut w0 = vec![0.0; d];
+        bm.sample_into(t0, &mut w0);
+        bm.sample_into(t1, &mut w);
+        for (wi, w0i) in w.iter_mut().zip(&w0) {
+            *wi -= w0i;
+        }
+        self.analytic_loss_gradients(t1 - t0, z0, theta, &w, grad_z0, grad_theta);
     }
 }
 

@@ -1,5 +1,7 @@
 //! Core SDE traits.
 
+use crate::brownian::BrownianMotion;
+
 /// Which stochastic calculus the (drift, diffusion) pair is written in.
 ///
 /// For diagonal noise the two are interconvertible by the drift correction
@@ -150,6 +152,51 @@ pub trait SdeVjp: Sde {
             self.ito_correction_vjp(t, z, theta, &neg, out_z, out_theta);
         }
     }
+}
+
+/// An SDE with an exact pathwise strong solution: given query access to
+/// the *same* realized Brownian path that drove a numerical solve, the
+/// implementor reconstructs the true terminal state (and the pathwise
+/// gradients of the §7.1 loss `L = Σ_i X_{t1}^{(i)}`) with no
+/// discretization error in the step size.
+///
+/// This is the oracle side of the [`crate::convergence`] subsystem: the
+/// solver under test and the oracle consume one Brownian source, so their
+/// difference is pure discretization error and the empirical order of
+/// convergence (§5) can be measured against it.
+///
+/// Implementations may query `bm` at times the solver never visited
+/// (e.g. [`crate::sde::ou::OrnsteinUhlenbeck`] evaluates time-weighted
+/// Riemann integrals of the path on a fine grid via
+/// [`crate::brownian::quadrature`]); both Brownian sources interpolate
+/// such queries with the correct bridge law, so the oracle stays
+/// consistent with whatever the solver revealed.
+pub trait ExactSolution: Sde {
+    /// Exact strong solution `X_{t1}` (length `state_dim`) for the
+    /// problem started at `z0` at `span.0`, driven by `bm`. The path is
+    /// read relative to `bm`'s value at `span.0`.
+    fn exact_state(
+        &self,
+        span: (f64, f64),
+        z0: &[f64],
+        theta: &[f64],
+        bm: &mut dyn BrownianMotion,
+        out: &mut [f64],
+    );
+
+    /// Exact pathwise gradients of the summed terminal loss
+    /// `L = Σ_i X_{t1}^{(i)}` holding the realized path fixed:
+    /// `grad_z0` (length `state_dim`) and `grad_theta` (length
+    /// `param_dim`) are *overwritten*.
+    fn exact_sum_gradients(
+        &self,
+        span: (f64, f64),
+        z0: &[f64],
+        theta: &[f64],
+        bm: &mut dyn BrownianMotion,
+        grad_z0: &mut [f64],
+        grad_theta: &mut [f64],
+    );
 }
 
 /// A scalar (1-d state, 1-d noise) parameterized SDE with everything the

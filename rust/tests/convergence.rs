@@ -1,0 +1,326 @@
+//! Statistical convergence-order suite (the acceptance gate of the
+//! convergence subsystem; see `rust/tests/README.md` for how tolerances
+//! and seeds were chosen).
+//!
+//! Every test is deterministic: paths derive from pinned seeds, the
+//! bootstrap is keyed, and thread count cannot change any result (the
+//! batch API is scheduling-independent). Path counts shrink in debug
+//! builds — tier-1 runs this file unoptimized — while the assertions stay
+//! identical; CI runs the full scale via
+//! `cargo test -q --release --test convergence`.
+//!
+//! Measured-vs-nominal bands:
+//! * strong orders: ±0.15 (the ISSUE's acceptance bound) for the schemes
+//!   it names (Euler–Maruyama, Milstein) on GBM/OU; ±0.2 for the
+//!   Stratonovich schemes in the constants sweep,
+//! * weak orders: [0.6, 1.4] around the nominal 1.0 (first-moment
+//!   estimates carry Monte-Carlo noise even with coupled paths),
+//! * gradient orders: family-dependent bands, plus the acceptance
+//!   criterion that the stochastic adjoint's error decreases *strictly
+//!   monotonically* across a ≥4-rung ladder on both GBM and OU.
+
+use sdegrad::adjoint::AdjointConfig;
+use sdegrad::api::{SdeProblem, SensAlg};
+use sdegrad::convergence::{
+    gradient_orders, strong_weak_orders, strong_weak_orders_multi, DtLadder,
+};
+use sdegrad::prng::PrngKey;
+use sdegrad::sde::ou::OrnsteinUhlenbeck;
+use sdegrad::sde::problems::Example1;
+use sdegrad::sde::ReplicatedSde;
+use sdegrad::solvers::Method;
+
+/// Pinned seeds (one stream per test family; paths fold in their index).
+const SEED_STRONG_GBM: u64 = 0xC0DE_0001;
+const SEED_STRONG_OU: u64 = 0xC0DE_0002;
+const SEED_WEAK_GBM: u64 = 0xC0DE_0003;
+const SEED_GRAD_GBM: u64 = 0xC0DE_0004;
+const SEED_GRAD_OU: u64 = 0xC0DE_0005;
+const SEED_CONSTANTS: u64 = 0xC0DE_0006;
+
+const N_BOOT: usize = 300;
+
+/// Debug builds (tier-1 runs unoptimized) use half the paths; the
+/// assertions are identical in both profiles, and every band was sized
+/// (by simulating the estimator across hundreds of seed realizations)
+/// to hold with ≥4σ margin at the *debug* scale.
+fn paths(release: usize) -> usize {
+    if cfg!(debug_assertions) {
+        (release / 2).max(8)
+    } else {
+        release
+    }
+}
+
+fn gbm_problem(
+    sde: &ReplicatedSde<Example1>,
+    seed: u64,
+) -> SdeProblem<'_, ReplicatedSde<Example1>> {
+    // Moderate coefficients keep the coarse rungs inside the asymptotic
+    // regime (large β bends the EM slope upward at coarse h).
+    SdeProblem::new(sde, &[1.0, 0.8], (0.0, 1.0))
+        .params(&[0.4, 0.5, 0.6, 0.3])
+        .key(PrngKey::from_seed(seed))
+}
+
+fn ou_problem(ou: &OrnsteinUhlenbeck, seed: u64) -> SdeProblem<'_, OrnsteinUhlenbeck> {
+    SdeProblem::new(ou, &[0.9, 0.4], (0.0, 1.0))
+        .params(&[1.2, 0.3, 0.5])
+        .key(PrngKey::from_seed(seed))
+}
+
+// ---------------------------------------------------------------------------
+// Strong orders (acceptance: within ±0.15 of nominal on GBM and OU).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn strong_orders_match_nominal_on_gbm() {
+    let sde = ReplicatedSde::new(Example1, 2);
+    let prob = gbm_problem(&sde, SEED_STRONG_GBM);
+    let ladder = DtLadder::new(32, 5); // h = 1/32 … 1/512
+    let n = paths(256);
+    let cases = [(Method::EulerMaruyama, 0.5), (Method::MilsteinIto, 1.0)];
+    let schemes: Vec<Method> = cases.iter().map(|&(m, _)| m).collect();
+    let results = strong_weak_orders_multi(&prob, &schemes, &ladder, n, N_BOOT);
+    for (&(method, nominal), res) in cases.iter().zip(&results) {
+        assert!(
+            (res.strong_fit.order - nominal).abs() <= 0.15,
+            "{}: strong order {} (CI [{}, {}]) vs nominal {nominal}; rungs {:?}",
+            method.name(),
+            res.strong_fit.order,
+            res.strong_fit.ci_lo,
+            res.strong_fit.ci_hi,
+            res.rungs
+        );
+        // Shared-tree coupling ⇒ the error ladder itself is strictly
+        // monotone, not just trending.
+        assert!(res.strong_monotone(), "{}: rungs {:?}", method.name(), res.rungs);
+    }
+}
+
+#[test]
+fn strong_orders_match_nominal_on_ou() {
+    let ou = OrnsteinUhlenbeck::new(2);
+    let prob = ou_problem(&ou, SEED_STRONG_OU);
+    let ladder = DtLadder::new(16, 5); // h = 1/16 … 1/256
+    let n = paths(192);
+    // Additive noise: Euler–Maruyama is strong order 1.0 (the Milstein
+    // correction vanishes identically, so MilsteinIto takes the same
+    // steps and must measure the same).
+    let cases = [(Method::EulerMaruyama, 1.0), (Method::MilsteinIto, 1.0)];
+    let schemes: Vec<Method> = cases.iter().map(|&(m, _)| m).collect();
+    let results = strong_weak_orders_multi(&prob, &schemes, &ladder, n, N_BOOT);
+    for (&(method, nominal), res) in cases.iter().zip(&results) {
+        assert!(
+            (res.strong_fit.order - nominal).abs() <= 0.15,
+            "{}: strong order {} (CI [{}, {}]) vs nominal {nominal}; rungs {:?}",
+            method.name(),
+            res.strong_fit.order,
+            res.strong_fit.ci_lo,
+            res.strong_fit.ci_hi,
+            res.rungs
+        );
+        assert!(res.strong_monotone(), "{}: rungs {:?}", method.name(), res.rungs);
+    }
+}
+
+/// Satellite: the `Method::strong_order()` constants shipped with the
+/// solvers must agree with the empirically measured orders — one
+/// assertion per method, all methods sharing the same seeded paths. The
+/// Stratonovich schemes integrate the converted drift toward the same Itô
+/// process, so GBM's closed form is the oracle for all four.
+#[test]
+fn method_strong_order_constants_agree_with_measurement() {
+    let sde = ReplicatedSde::new(Example1, 2);
+    let prob = gbm_problem(&sde, SEED_CONSTANTS);
+    let ladder = DtLadder::new(32, 5);
+    let n = paths(256);
+    let schemes = [
+        Method::EulerMaruyama,
+        Method::MilsteinIto,
+        Method::Heun,
+        Method::MilsteinStrat,
+    ];
+    let results = strong_weak_orders_multi(&prob, &schemes, &ladder, n, N_BOOT);
+    for (&method, res) in schemes.iter().zip(&results) {
+        let nominal = method.strong_order();
+        // Predictor-corrector (Heun) and Stratonovich-Milstein carry a
+        // slightly wider band: their leading constants are smaller, so
+        // the fine rungs sit closer to the Monte-Carlo floor.
+        let tol = match method {
+            Method::EulerMaruyama | Method::MilsteinIto => 0.15,
+            Method::Heun | Method::MilsteinStrat => 0.2,
+        };
+        assert!(
+            (res.strong_fit.order - nominal).abs() <= tol,
+            "{}: measured {} (CI [{}, {}]) vs strong_order() {nominal}; rungs {:?}",
+            method.name(),
+            res.strong_fit.order,
+            res.strong_fit.ci_lo,
+            res.strong_fit.ci_hi,
+            res.rungs
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Weak orders (nominal 1.0 for every scheme here).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn weak_orders_near_nominal_on_gbm() {
+    let sde = ReplicatedSde::new(Example1, 2);
+    // Larger drift boosts the first-moment bias (the weak signal) while
+    // the path coupling keeps the Monte-Carlo noise at the strong-error
+    // scale.
+    let prob = SdeProblem::new(&sde, &[1.0, 0.8], (0.0, 1.0))
+        .params(&[0.7, 0.4, 0.8, 0.35])
+        .key(PrngKey::from_seed(SEED_WEAK_GBM));
+    let ladder = DtLadder::new(16, 5); // h = 1/16 … 1/256
+    let n = paths(2048);
+    for method in [Method::EulerMaruyama, Method::MilsteinIto] {
+        let res = strong_weak_orders(&prob, method, &ladder, n, N_BOOT);
+        assert!(
+            res.weak_fit.order > 0.6 && res.weak_fit.order < 1.4,
+            "{}: weak order {} (CI [{}, {}]); rungs {:?}",
+            method.name(),
+            res.weak_fit.order,
+            res.weak_fit.ci_lo,
+            res.weak_fit.ci_hi,
+            res.rungs
+        );
+        // The weak error must actually shrink across the ladder ends.
+        let (first, last) = (res.rungs.first().unwrap(), res.rungs.last().unwrap());
+        assert!(last.weak < first.weak, "{}: rungs {:?}", method.name(), res.rungs);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gradient orders (acceptance: stochastic-adjoint error decreases
+// strictly monotonically over a ≥4-rung ladder on GBM and OU).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn adjoint_gradient_error_monotone_and_first_order_on_gbm() {
+    let sde = ReplicatedSde::new(Example1, 2);
+    let prob = gbm_problem(&sde, SEED_GRAD_GBM);
+    let ladder = DtLadder::new(32, 4); // 4 rungs: h = 1/32 … 1/256
+    let res = gradient_orders(
+        &prob,
+        &SensAlg::StochasticAdjoint(AdjointConfig::default()),
+        &ladder,
+        paths(24),
+        N_BOOT,
+    )
+    .expect("GBM is adjoint-compatible");
+    assert!(res.monotone(), "adjoint/GBM not monotone: {:?}", res.rungs);
+    assert!(
+        (res.fit.order - 1.0).abs() <= 0.3,
+        "adjoint/GBM order {} (CI [{}, {}]); rungs {:?}",
+        res.fit.order,
+        res.fit.ci_lo,
+        res.fit.ci_hi,
+        res.rungs
+    );
+}
+
+#[test]
+fn adjoint_gradient_error_monotone_and_first_order_on_ou() {
+    let ou = OrnsteinUhlenbeck::new(2);
+    let prob = ou_problem(&ou, SEED_GRAD_OU);
+    let ladder = DtLadder::new(32, 4);
+    let res = gradient_orders(
+        &prob,
+        &SensAlg::StochasticAdjoint(AdjointConfig::default()),
+        &ladder,
+        paths(24),
+        N_BOOT,
+    )
+    .expect("OU is adjoint-compatible (zero Itô correction)");
+    assert!(res.monotone(), "adjoint/OU not monotone: {:?}", res.rungs);
+    assert!(
+        (res.fit.order - 1.0).abs() <= 0.3,
+        "adjoint/OU order {} (CI [{}, {}]); rungs {:?}",
+        res.fit.order,
+        res.fit.ci_lo,
+        res.fit.ci_hi,
+        res.rungs
+    );
+}
+
+/// Every other estimator converges at its own solver's strong order:
+/// Milstein-backprop and the antithetic adjoint at ≈1, the
+/// Euler-differentiated pair (backprop-Euler ≡ forward pathwise) at ≈½.
+/// The taped family realizes independent paths per rung, so only the
+/// fitted order is asserted (no monotonicity guarantee), with bands wide
+/// enough for the per-rung Monte-Carlo noise.
+#[test]
+fn gradient_orders_for_all_estimators_on_gbm() {
+    let sde = ReplicatedSde::new(Example1, 2);
+    let prob = gbm_problem(&sde, SEED_GRAD_GBM);
+    // 5 rungs and a fixed 48 paths (no debug scaling — these runs are
+    // cheap): the taped family realizes independent paths per rung, so
+    // its slope noise is the binding constraint on the bands below.
+    let ladder = DtLadder::new(32, 5);
+    let n = 48;
+    let cases: Vec<(SensAlg, f64, f64)> = vec![
+        (SensAlg::Antithetic { base: AdjointConfig::default() }, 0.6, 1.4),
+        (SensAlg::Backprop { method: Method::MilsteinIto }, 0.6, 1.4),
+        (SensAlg::Backprop { method: Method::EulerMaruyama }, 0.2, 0.9),
+        (SensAlg::ForwardPathwise, 0.2, 0.9),
+    ];
+    for (alg, lo, hi) in &cases {
+        let res = gradient_orders(&prob, alg, &ladder, n, N_BOOT).expect("supported on GBM");
+        assert!(
+            res.fit.order > *lo && res.fit.order < *hi,
+            "{}: order {} outside [{lo}, {hi}] (CI [{}, {}]); rungs {:?}",
+            res.alg,
+            res.fit.order,
+            res.fit.ci_lo,
+            res.fit.ci_hi,
+            res.rungs
+        );
+        assert!(res.rungs.iter().all(|r| r.mean_abs_err.is_finite() && r.mean_abs_err > 0.0));
+    }
+}
+
+/// The taped-path replay also has to work against the quadrature-based OU
+/// oracle (exact gradients reconstructed from the replayed stored path).
+#[test]
+fn backprop_gradient_converges_on_ou() {
+    let ou = OrnsteinUhlenbeck::new(2);
+    let prob = ou_problem(&ou, SEED_GRAD_OU);
+    let ladder = DtLadder::new(32, 4);
+    let res = gradient_orders(
+        &prob,
+        &SensAlg::Backprop { method: Method::MilsteinIto },
+        &ladder,
+        48, // independent paths per rung: fixed scale, see above
+        N_BOOT,
+    )
+    .expect("OU supports Milstein backprop");
+    assert!(
+        res.fit.order > 0.6 && res.fit.order < 1.4,
+        "backprop/OU order {} (CI [{}, {}]); rungs {:?}",
+        res.fit.order,
+        res.fit.ci_lo,
+        res.fit.ci_hi,
+        res.rungs
+    );
+}
+
+/// Bootstrap sanity on a real measurement: the 95% CI brackets the point
+/// estimate and is informative (finite, sub-unit width for a coupled
+/// strong ladder).
+#[test]
+fn bootstrap_confidence_interval_is_informative() {
+    let sde = ReplicatedSde::new(Example1, 2);
+    let prob = gbm_problem(&sde, SEED_STRONG_GBM);
+    let ladder = DtLadder::new(32, 5);
+    let res = strong_weak_orders(&prob, Method::MilsteinIto, &ladder, paths(128), N_BOOT);
+    let f = res.strong_fit;
+    assert!(f.ci_lo.is_finite() && f.ci_hi.is_finite());
+    assert!(f.ci_lo <= f.order && f.order <= f.ci_hi, "{f:?}");
+    assert!(f.ci_hi - f.ci_lo < 1.0, "uninformative CI: {f:?}");
+    assert!(f.n_boot > 0);
+}

@@ -1,0 +1,281 @@
+//! Coverage for every `ProblemError` path of the sensitivity API: the
+//! validation that replaced the legacy mid-solve panics must fire *before
+//! any integration starts*, with the right variant, for every estimator
+//! family and noise spec.
+
+use sdegrad::adjoint::AdjointConfig;
+use sdegrad::api::{NoiseSpec, ProblemError, SdeProblem, SensAlg, StepControl};
+use sdegrad::prng::PrngKey;
+use sdegrad::sde::{Calculus, Sde, SdeVjp};
+use sdegrad::solvers::{AdaptiveConfig, Method};
+
+/// Itô-native multiplicative-noise SDE that implements the first-order
+/// VJPs but *not* the Itô-correction VJP (`has_ito_correction_vjp`
+/// stays at its `false` default) — the exact shape that used to panic
+/// mid-solve under the legacy free functions.
+struct ItoNoCorrection;
+
+impl Sde for ItoNoCorrection {
+    fn state_dim(&self) -> usize {
+        1
+    }
+    fn param_dim(&self) -> usize {
+        1
+    }
+    fn calculus(&self) -> Calculus {
+        Calculus::Ito
+    }
+    fn drift(&self, _t: f64, z: &[f64], theta: &[f64], out: &mut [f64]) {
+        out[0] = theta[0] * z[0];
+    }
+    fn diffusion(&self, _t: f64, z: &[f64], _theta: &[f64], out: &mut [f64]) {
+        out[0] = 0.3 * z[0];
+    }
+    fn diffusion_dz_diag(&self, _t: f64, _z: &[f64], _theta: &[f64], out: &mut [f64]) {
+        out[0] = 0.3;
+    }
+}
+
+impl SdeVjp for ItoNoCorrection {
+    fn drift_vjp(
+        &self,
+        _t: f64,
+        z: &[f64],
+        theta: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+    ) {
+        out_z[0] += a[0] * theta[0];
+        out_theta[0] += a[0] * z[0];
+    }
+    fn diffusion_vjp(
+        &self,
+        _t: f64,
+        _z: &[f64],
+        _theta: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        _out_theta: &mut [f64],
+    ) {
+        out_z[0] += a[0] * 0.3;
+    }
+}
+
+/// Same system declared Stratonovich-native (additionally claims the
+/// correction VJP so only the calculus check can fire).
+struct StratNative;
+
+impl Sde for StratNative {
+    fn state_dim(&self) -> usize {
+        1
+    }
+    fn param_dim(&self) -> usize {
+        1
+    }
+    fn calculus(&self) -> Calculus {
+        Calculus::Stratonovich
+    }
+    fn drift(&self, _t: f64, z: &[f64], theta: &[f64], out: &mut [f64]) {
+        out[0] = theta[0] * z[0];
+    }
+    fn diffusion(&self, _t: f64, z: &[f64], _theta: &[f64], out: &mut [f64]) {
+        out[0] = 0.3 * z[0];
+    }
+    fn diffusion_dz_diag(&self, _t: f64, _z: &[f64], _theta: &[f64], out: &mut [f64]) {
+        out[0] = 0.3;
+    }
+}
+
+impl SdeVjp for StratNative {
+    fn drift_vjp(
+        &self,
+        _t: f64,
+        z: &[f64],
+        theta: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+    ) {
+        out_z[0] += a[0] * theta[0];
+        out_theta[0] += a[0] * z[0];
+    }
+    fn diffusion_vjp(
+        &self,
+        _t: f64,
+        _z: &[f64],
+        _theta: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        _out_theta: &mut [f64],
+    ) {
+        out_z[0] += a[0] * 0.3;
+    }
+    fn has_ito_correction_vjp(&self) -> bool {
+        true
+    }
+    fn ito_correction_vjp(
+        &self,
+        _t: f64,
+        _z: &[f64],
+        _theta: &[f64],
+        _a: &[f64],
+        _out_z: &mut [f64],
+        _out_theta: &mut [f64],
+    ) {
+    }
+}
+
+fn prob<S: SdeVjp>(sde: &S) -> SdeProblem<'_, S> {
+    SdeProblem::new(sde, &[1.0], (0.0, 1.0)).params(&[0.5]).key(PrngKey::from_seed(1))
+}
+
+const STEPS: StepControl = StepControl::Steps(8);
+
+// ---------------------------------------------------------------------------
+// MissingItoCorrectionVjp — surfaced before integration, not mid-solve.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn adjoint_family_requires_ito_correction_vjp() {
+    let sde = ItoNoCorrection;
+    let p = prob(&sde);
+    for alg in [
+        SensAlg::StochasticAdjoint(AdjointConfig::default()),
+        SensAlg::Antithetic { base: AdjointConfig::default() },
+    ] {
+        let err = p.sensitivity_sum(&alg, STEPS).unwrap_err();
+        assert_eq!(
+            err,
+            ProblemError::MissingItoCorrectionVjp { algorithm: alg.name() },
+            "alg {}",
+            alg.name()
+        );
+        // The message should tell the implementor what to do.
+        assert!(err.to_string().contains("ito_correction_vjp"), "msg: {err}");
+    }
+}
+
+#[test]
+fn milstein_backprop_requires_ito_correction_vjp_but_euler_does_not() {
+    let sde = ItoNoCorrection;
+    let p = prob(&sde);
+    let err = p
+        .sensitivity_sum(&SensAlg::Backprop { method: Method::MilsteinIto }, STEPS)
+        .unwrap_err();
+    assert_eq!(err, ProblemError::MissingItoCorrectionVjp { algorithm: "Backprop" });
+    // Euler backprop never touches second derivatives of σ: it must run.
+    let ok = p.sensitivity_sum(&SensAlg::Backprop { method: Method::EulerMaruyama }, STEPS);
+    assert!(ok.is_ok(), "euler backprop should not need the correction VJP: {ok:?}");
+}
+
+// ---------------------------------------------------------------------------
+// UnsupportedNoise — the taped family cannot honor tree/mirror specs.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn taped_estimators_reject_virtual_tree_noise() {
+    let sde = ItoNoCorrection;
+    let p = prob(&sde).noise(NoiseSpec::VirtualTree { tol: 1e-8 });
+    for alg in [
+        SensAlg::Backprop { method: Method::EulerMaruyama },
+        SensAlg::ForwardPathwise,
+    ] {
+        let err = p.sensitivity_sum(&alg, STEPS).unwrap_err();
+        assert_eq!(
+            err,
+            ProblemError::UnsupportedNoise { algorithm: alg.name() },
+            "alg {}",
+            alg.name()
+        );
+        assert!(err.to_string().contains("stored path"), "msg: {err}");
+    }
+}
+
+#[test]
+fn taped_estimators_reject_mirrored_problems() {
+    let sde = ItoNoCorrection;
+    let p = prob(&sde).mirror(true);
+    for alg in [
+        SensAlg::Backprop { method: Method::EulerMaruyama },
+        SensAlg::ForwardPathwise,
+    ] {
+        let err = p.sensitivity_sum(&alg, STEPS).unwrap_err();
+        assert_eq!(err, ProblemError::UnsupportedNoise { algorithm: alg.name() });
+    }
+}
+
+#[test]
+fn adjoint_family_accepts_virtual_tree_noise() {
+    // The same spec the taped family rejects is the adjoint's O(1)-memory
+    // headline feature — it must pass validation (and run) here. Uses the
+    // Stratonovich-native system so no correction VJP is involved.
+    let sde = StratNative;
+    let p = prob(&sde).noise(NoiseSpec::VirtualTree { tol: 1e-8 });
+    let out = p.sensitivity_sum(&SensAlg::StochasticAdjoint(AdjointConfig::default()), STEPS);
+    assert!(out.is_ok(), "{out:?}");
+}
+
+// ---------------------------------------------------------------------------
+// UnsupportedMethod / CalculusMismatch / AdaptiveSensitivityUnsupported.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn backprop_rejects_non_backproppable_schemes() {
+    let sde = ItoNoCorrection;
+    let p = prob(&sde);
+    for method in [Method::Heun, Method::MilsteinStrat] {
+        let err = p.sensitivity_sum(&SensAlg::Backprop { method }, STEPS).unwrap_err();
+        assert_eq!(err, ProblemError::UnsupportedMethod { algorithm: "Backprop", method });
+        assert!(err.to_string().contains(method.name()), "msg: {err}");
+    }
+}
+
+#[test]
+fn taped_estimators_require_ito_native_systems() {
+    let sde = StratNative;
+    let p = prob(&sde);
+    let err = p
+        .sensitivity_sum(&SensAlg::Backprop { method: Method::EulerMaruyama }, STEPS)
+        .unwrap_err();
+    assert_eq!(
+        err,
+        ProblemError::CalculusMismatch { algorithm: "Backprop", required: Calculus::Ito }
+    );
+    let err = p.sensitivity_sum(&SensAlg::ForwardPathwise, STEPS).unwrap_err();
+    assert_eq!(
+        err,
+        ProblemError::CalculusMismatch { algorithm: "ForwardPathwise", required: Calculus::Ito }
+    );
+}
+
+#[test]
+fn adaptive_step_control_is_rejected_for_generic_sensitivity() {
+    let sde = StratNative;
+    let p = prob(&sde);
+    let err = p
+        .sensitivity_sum(
+            &SensAlg::StochasticAdjoint(AdjointConfig::default()),
+            StepControl::Adaptive(AdaptiveConfig::default()),
+        )
+        .unwrap_err();
+    assert_eq!(err, ProblemError::AdaptiveSensitivityUnsupported);
+}
+
+// ---------------------------------------------------------------------------
+// Validation precedes integration: no partial work, errors are pure.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn validation_errors_are_deterministic_and_cheap() {
+    // Calling twice yields the identical error value (nothing stateful
+    // ran), and a huge step count costs nothing because the request is
+    // rejected up front.
+    let sde = ItoNoCorrection;
+    let p = prob(&sde);
+    let alg = SensAlg::StochasticAdjoint(AdjointConfig::default());
+    let huge = StepControl::Steps(usize::MAX / 2);
+    let a = p.sensitivity_sum(&alg, huge).unwrap_err();
+    let b = p.sensitivity_sum(&alg, huge).unwrap_err();
+    assert_eq!(a, b);
+}
