@@ -2,7 +2,7 @@
 //! drift-evaluation hot path — pure-Rust NN vs the AOT-compiled XLA
 //! artifact (batched) when artifacts are present.
 
-use sdegrad::api::{solve_batch, SdeProblem, SolveOptions};
+use sdegrad::api::{solve_batch, solve_batch_per_path, SdeProblem, SolveOptions};
 use sdegrad::latent::{LatentSdeConfig, LatentSdeModel, PosteriorSde};
 use sdegrad::metrics::timer::bench;
 use sdegrad::metrics::CsvWriter;
@@ -118,10 +118,11 @@ fn main() {
     println!("\nlatent posterior Heun step (dz=4, hidden=100): {per_step_us:.2} µs/step");
     csv.row(&["latent_step".into(), "heun_hidden100".into(), format!("{per_step_us}")]).ok();
 
-    // 4. Multi-path throughput: solve_batch fans N independent replicates
-    // of one problem across a scoped thread pool (the repro-harness /
-    // traffic-serving path). Compare against the same N paths solved
-    // sequentially.
+    // 4. Multi-path throughput: solve_batch chunks N independent
+    // replicates across threads and runs the batched SoA kernel per chunk.
+    // Compare against the pre-0.3 thread-per-path engine and a sequential
+    // loop — all three must agree bit-for-bit (only throughput differs).
+    // The dedicated sweep lives in `sdegrad bench throughput`.
     let n_paths = 64;
     let batch_prob = SdeProblem::new(&sde, &x0, (0.0, 1.0)).params(&theta);
     let opts = SolveOptions::fixed(Method::MilsteinIto, n_steps);
@@ -133,21 +134,27 @@ fn main() {
     let sols = solve_batch(&replicates, &opts);
     let t_batch = sw.elapsed_s();
     let sw = Stopwatch::new();
+    let per_path = solve_batch_per_path(&replicates, &opts);
+    let t_per_path = sw.elapsed_s();
+    let sw = Stopwatch::new();
     let seq: Vec<_> = replicates.iter().map(|pr| pr.solve(&opts)).collect();
     let t_seq = sw.elapsed_s();
     assert_eq!(sols.len(), seq.len());
-    // Determinism: batch output must equal the sequential solves exactly.
-    for (a, b) in sols.iter().zip(&seq) {
-        assert_eq!(a.states, b.states, "solve_batch diverged from sequential");
+    for ((a, b), c) in sols.iter().zip(&per_path).zip(&seq) {
+        assert_eq!(a.states, b.states, "batched engine diverged from per-path engine");
+        assert_eq!(a.states, c.states, "solve_batch diverged from sequential");
     }
     println!(
-        "\nsolve_batch: {n_paths} paths × {n_steps} steps — batch {:.1} ms vs \
-         sequential {:.1} ms ({:.1}x)",
+        "\nsolve_batch: {n_paths} paths × {n_steps} steps — batched {:.1} ms vs \
+         per-path {:.1} ms vs sequential {:.1} ms ({:.1}x vs seq)",
         t_batch * 1e3,
+        t_per_path * 1e3,
         t_seq * 1e3,
         t_seq / t_batch.max(1e-12)
     );
-    csv.row(&["solve_batch".into(), "batch_ms".into(), format!("{}", t_batch * 1e3)]).ok();
+    csv.row(&["solve_batch".into(), "batched_ms".into(), format!("{}", t_batch * 1e3)]).ok();
+    csv.row(&["solve_batch".into(), "per_path_ms".into(), format!("{}", t_per_path * 1e3)])
+        .ok();
     csv.row(&["solve_batch".into(), "sequential_ms".into(), format!("{}", t_seq * 1e3)]).ok();
     csv.flush().ok();
     println!("(CSV: bench_out/solver_perf.csv)");

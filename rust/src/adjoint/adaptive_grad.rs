@@ -4,7 +4,7 @@
 //! For a [`ReplicatedSde`] the augmented backward system is *fully
 //! diagonal* — dimension `i`'s state, adjoint, and parameter block are all
 //! driven by channel `i` alone — so it fits the generic diagonal-noise
-//! integrator and hence [`crate::solvers::integrate_adaptive`] directly.
+//! integrator and hence [`crate::solvers::adaptive`] directly.
 //! (The general cross-channel case needs the bespoke driver in
 //! [`super::stochastic`]; adaptivity there is future work, as in the
 //! paper, whose adaptive experiments are exactly these scalar problems.)
@@ -190,27 +190,10 @@ pub struct AdaptiveGradOutput {
     pub hit_h_min: bool,
 }
 
-/// Gradient of `L = Σ z_T` for a replicated scalar problem using adaptive
+/// Adaptive-adjoint engine behind
+/// [`crate::api::SdeProblem::sensitivity_adaptive`]: gradient of
+/// `L = Σ z_T` for a replicated scalar problem using adaptive
 /// time-stepping in BOTH passes (Fig 5b's setting: vary `atol`, rtol=0).
-#[deprecated(
-    since = "0.2.0",
-    note = "use crate::api::SdeProblem::sensitivity_adaptive instead"
-)]
-pub fn adaptive_adjoint_gradients<P: ScalarSde>(
-    sde: &ReplicatedSde<P>,
-    theta: &[f64],
-    z0: &[f64],
-    t0: f64,
-    t1: f64,
-    key: PrngKey,
-    cfg: &AdaptiveConfig,
-) -> AdaptiveGradOutput {
-    adaptive_adjoint_core(sde, theta, z0, t0, t1, key, cfg)
-}
-
-/// Adaptive-adjoint engine shared by
-/// [`crate::api::SdeProblem::sensitivity_adaptive`] and the deprecated
-/// shim.
 pub(crate) fn adaptive_adjoint_core<P: ScalarSde>(
     sde: &ReplicatedSde<P>,
     theta: &[f64],
@@ -249,8 +232,6 @@ pub(crate) fn adaptive_adjoint_core<P: ScalarSde>(
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // exercises the legacy shims on purpose (API parity is
-                     // pinned separately in tests/api_equivalence.rs)
 mod tests {
     use super::*;
     use crate::sde::problems::{sample_experiment_setup, Example1, Example2};
@@ -284,7 +265,7 @@ mod tests {
         let key = PrngKey::from_seed(seed);
         let (theta, x0) = sample_experiment_setup(key, dim, problem.nparams());
         let cfg = AdaptiveConfig { atol, rtol: 0.0, h0: 1e-3, ..Default::default() };
-        let out = adaptive_adjoint_gradients(&sde, &theta, &x0, 0.0, 1.0, key, &cfg);
+        let out = adaptive_adjoint_core(&sde, &theta, &x0, 0.0, 1.0, key, &cfg);
         let mut g_x0 = vec![0.0; dim];
         let mut g_th = vec![0.0; theta.len()];
         sde.analytic_loss_gradients(1.0, &x0, &theta, &out.w_terminal, &mut g_x0, &mut g_th);

@@ -25,29 +25,9 @@ pub struct AntitheticOutput {
     pub minus: GradientOutput,
 }
 
-/// Gradients of `L = Σ z_T` averaged over an antithetic Brownian pair.
-#[deprecated(
-    since = "0.2.0",
-    note = "use crate::api::SdeProblem::sensitivity_sum with SensAlg::Antithetic instead"
-)]
-#[allow(clippy::too_many_arguments)]
-pub fn antithetic_adjoint_gradients<S: SdeVjp + ?Sized>(
-    sde: &S,
-    theta: &[f64],
-    z0: &[f64],
-    t0: f64,
-    t1: f64,
-    n_steps: usize,
-    key: PrngKey,
-    cfg: &AdjointConfig,
-) -> AntitheticOutput {
-    antithetic_core(sde, theta, z0, t0, t1, n_steps, key, cfg, |z: &[f64]| vec![1.0; z.len()])
-}
-
-/// Antithetic-pair engine shared by
-/// [`crate::api::SdeProblem::sensitivity`] and the deprecated shim. The
-/// loss-gradient closure is evaluated once per branch (each branch realizes
-/// its own terminal state).
+/// Antithetic-pair engine behind [`crate::api::SdeProblem::sensitivity`]
+/// with `SensAlg::Antithetic`. The loss-gradient closure is evaluated once
+/// per branch (each branch realizes its own terminal state).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn antithetic_core<S, F>(
     sde: &S,
@@ -84,29 +64,40 @@ where
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // exercises the legacy shims on purpose (API parity is
-                     // pinned separately in tests/api_equivalence.rs)
 mod tests {
     use super::*;
-    use crate::adjoint::stochastic::stochastic_adjoint_gradients;
+    use crate::adjoint::stochastic::adjoint_with_loss_core;
     use crate::sde::problems::{sample_experiment_setup, Example1};
     use crate::sde::ReplicatedSde;
+
+    fn antithetic_sum<S: SdeVjp + ?Sized>(
+        sde: &S,
+        theta: &[f64],
+        z0: &[f64],
+        n: usize,
+        key: PrngKey,
+        cfg: &AdjointConfig,
+    ) -> AntitheticOutput {
+        antithetic_core(sde, theta, z0, 0.0, 1.0, n, key, cfg, |z: &[f64]| vec![1.0; z.len()])
+    }
+
+    fn adjoint_sum<S: SdeVjp + ?Sized>(
+        sde: &S,
+        theta: &[f64],
+        z0: &[f64],
+        n: usize,
+        key: PrngKey,
+        cfg: &AdjointConfig,
+    ) -> crate::adjoint::GradientOutput {
+        adjoint_with_loss_core(sde, theta, z0, 0.0, 1.0, n, key, cfg, |z| vec![1.0; z.len()])
+    }
 
     #[test]
     fn mirror_pair_uses_mirrored_noise() {
         let sde = ReplicatedSde::new(Example1, 2);
         let key = PrngKey::from_seed(3);
         let (theta, x0) = sample_experiment_setup(key, 2, 2);
-        let out = antithetic_adjoint_gradients(
-            &sde,
-            &theta,
-            &x0,
-            0.0,
-            1.0,
-            200,
-            key,
-            &AdjointConfig::default(),
-        );
+        let out = antithetic_sum(&sde, &theta, &x0, 200, key, &AdjointConfig::default());
         for i in 0..2 {
             assert!(
                 (out.plus.w_terminal[i] + out.minus.w_terminal[i]).abs() < 1e-12,
@@ -134,38 +125,10 @@ mod tests {
             let mut samples = Vec::new();
             for r in 0..reps {
                 let g = if antithetic {
-                    let out = antithetic_adjoint_gradients(
-                        &sde,
-                        &theta,
-                        &x0,
-                        0.0,
-                        1.0,
-                        n,
-                        base.fold_in(r),
-                        &cfg,
-                    );
-                    out.grad_theta[0]
+                    antithetic_sum(&sde, &theta, &x0, n, base.fold_in(r), &cfg).grad_theta[0]
                 } else {
-                    let a = stochastic_adjoint_gradients(
-                        &sde,
-                        &theta,
-                        &x0,
-                        0.0,
-                        1.0,
-                        n,
-                        base.fold_in(10_000 + 2 * r),
-                        &cfg,
-                    );
-                    let b = stochastic_adjoint_gradients(
-                        &sde,
-                        &theta,
-                        &x0,
-                        0.0,
-                        1.0,
-                        n,
-                        base.fold_in(10_001 + 2 * r),
-                        &cfg,
-                    );
+                    let a = adjoint_sum(&sde, &theta, &x0, n, base.fold_in(10_000 + 2 * r), &cfg);
+                    let b = adjoint_sum(&sde, &theta, &x0, n, base.fold_in(10_001 + 2 * r), &cfg);
                     0.5 * (a.grad_theta[0] + b.grad_theta[0])
                 };
                 samples.push(g);

@@ -44,6 +44,8 @@ pub struct AdjointOps<'a, S: SdeVjp + ?Sized> {
     weighted_a: Vec<f64>,
     scratch_z: Vec<f64>,
     scratch_p: Vec<f64>,
+    /// σ/σ′ staging for the Stratonovich drift conversion (len 2d).
+    strat: Vec<f64>,
     /// Combined (drift+VJP) evaluations — NFE accounting in the paper's
     /// "one drift + one diffusion evaluation" units.
     pub nfe_drift: u64,
@@ -64,6 +66,7 @@ impl<'a, S: SdeVjp + ?Sized> AdjointOps<'a, S> {
             weighted_a: vec![0.0; d],
             scratch_z: vec![0.0; d],
             scratch_p: vec![0.0; p],
+            strat: vec![0.0; 2 * d],
             nfe_drift: 0,
             nfe_diffusion: 0,
         }
@@ -104,14 +107,23 @@ impl<'a, S: SdeVjp + ?Sized> AdjointOps<'a, S> {
         fth_out: &mut [f64],
     ) {
         self.nfe_drift += 1;
-        self.sde.drift_stratonovich(t, z, &self.theta, b_out);
+        self.sde.drift_stratonovich(t, z, &self.theta, b_out, &mut self.strat);
         for i in 0..self.d {
             self.neg_a[i] = -a[i];
         }
         fa_out.fill(0.0);
         fth_out.fill(0.0);
-        self.sde
-            .drift_vjp_stratonovich(t, z, &self.theta, &self.neg_a, fa_out, fth_out);
+        // scratch_z is free here (only eval_diffusion uses it), so it
+        // doubles as the VJP's sign-flip staging buffer.
+        self.sde.drift_vjp_stratonovich(
+            t,
+            z,
+            &self.theta,
+            &self.neg_a,
+            fa_out,
+            fth_out,
+            &mut self.scratch_z,
+        );
     }
 
     /// Diffusion-side evaluation at `(t, z, a)` with channel increments
@@ -119,6 +131,7 @@ impl<'a, S: SdeVjp + ?Sized> AdjointOps<'a, S> {
     /// * `s_out ← σ(z,t)`,
     /// * `ga_out ← −aᵀ∂σ/∂z` (componentwise `−a_i ∂σ_i/∂z_i`),
     /// * `gth_out ← −Σ_i a_i dw_i ∂σ_i/∂θ` (ΔW already folded in).
+    #[allow(clippy::too_many_arguments)]
     pub fn eval_diffusion(
         &mut self,
         t: f64,

@@ -24,34 +24,14 @@ use crate::prng::PrngKey;
 use crate::sde::{Calculus, SdeVjp};
 use crate::solvers::{uniform_grid, Method, SolveStats};
 
-/// Gradients of `L = Σ_i z_T^(i)` by differentiating through the solver.
-///
+/// Backprop-through-the-solver engine behind
+/// [`crate::api::SdeProblem::sensitivity`] with `SensAlg::Backprop`.
 /// `method` must be `EulerMaruyama` or `MilsteinIto` (the two schemes the
-/// paper backpropagates through in Fig 5c). Returns the same
-/// [`GradientOutput`] as the stochastic adjoint; `noise_memory` reports the
-/// tape size (trajectory + increments), which is the honest analogue of
-/// Table 1's O(L) memory row.
-#[deprecated(
-    since = "0.2.0",
-    note = "use crate::api::SdeProblem::sensitivity_sum with SensAlg::Backprop instead"
-)]
-#[allow(clippy::too_many_arguments)]
-pub fn backprop_through_solver<S: SdeVjp + ?Sized>(
-    sde: &S,
-    theta: &[f64],
-    z0: &[f64],
-    t0: f64,
-    t1: f64,
-    n_steps: usize,
-    key: PrngKey,
-    method: Method,
-) -> GradientOutput {
-    backprop_core(sde, theta, z0, t0, t1, n_steps, key, method, |z| vec![1.0; z.len()])
-}
-
-/// Backprop-through-the-solver engine shared by
-/// [`crate::api::SdeProblem::sensitivity`] and the deprecated shim.
-/// `loss_grad` maps the realized terminal state to `∂L/∂z_T`.
+/// paper backpropagates through in Fig 5c); `loss_grad` maps the realized
+/// terminal state to `∂L/∂z_T`. Returns the same [`GradientOutput`] as
+/// the stochastic adjoint; `noise_memory` reports the tape size
+/// (trajectory + increments), the honest analogue of Table 1's O(L)
+/// memory row.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn backprop_core<S, F>(
     sde: &S,
@@ -195,12 +175,23 @@ where
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // exercises the legacy shim on purpose (API parity is
-                     // pinned separately in tests/api_equivalence.rs)
 mod tests {
     use super::*;
     use crate::sde::problems::{sample_experiment_setup, Example1, Example2};
     use crate::sde::ReplicatedSde;
+
+    /// Sum-loss convenience over the engine (what `SensAlg::Backprop`
+    /// resolves to).
+    fn backprop_sum<S: SdeVjp + ?Sized>(
+        sde: &S,
+        theta: &[f64],
+        z0: &[f64],
+        n_steps: usize,
+        key: PrngKey,
+        method: Method,
+    ) -> GradientOutput {
+        backprop_core(sde, theta, z0, 0.0, 1.0, n_steps, key, method, |z| vec![1.0; z.len()])
+    }
 
     /// Finite-difference check: perturb θ_j, re-run the *same* discrete
     /// solve on the same Brownian path, difference the losses. Backprop
@@ -215,11 +206,11 @@ mod tests {
         let n_steps = 64;
 
         let loss = |th: &[f64], x: &[f64]| -> f64 {
-            let out = backprop_through_solver(&sde, th, x, 0.0, 1.0, n_steps, key, method);
+            let out = backprop_sum(&sde, th, x, n_steps, key, method);
             out.z_terminal.iter().sum()
         };
 
-        let out = backprop_through_solver(&sde, &theta, &x0, 0.0, 1.0, n_steps, key, method);
+        let out = backprop_sum(&sde, &theta, &x0, n_steps, key, method);
         let eps = 1e-6;
         for j in 0..theta.len() {
             let mut tp = theta.clone();
@@ -263,14 +254,14 @@ mod tests {
 
     #[test]
     fn backprop_agrees_with_stochastic_adjoint_in_the_limit() {
-        use crate::adjoint::stochastic::{stochastic_adjoint_gradients, AdjointConfig};
+        use crate::adjoint::stochastic::{adjoint_with_loss_core, AdjointConfig};
         let dim = 2;
         let sde = ReplicatedSde::new(Example1, dim);
         let key = PrngKey::from_seed(8);
         let (theta, x0) = sample_experiment_setup(key, dim, 2);
         let n = 8000;
-        let bp = backprop_through_solver(&sde, &theta, &x0, 0.0, 1.0, n, key, Method::MilsteinIto);
-        let adj = stochastic_adjoint_gradients(
+        let bp = backprop_sum(&sde, &theta, &x0, n, key, Method::MilsteinIto);
+        let adj = adjoint_with_loss_core(
             &sde,
             &theta,
             &x0,
@@ -279,6 +270,7 @@ mod tests {
             n,
             key,
             &AdjointConfig::default(),
+            |z| vec![1.0; z.len()],
         );
         for j in 0..theta.len() {
             let rel = (bp.grad_theta[j] - adj.grad_theta[j]).abs()
@@ -293,11 +285,9 @@ mod tests {
         let key = PrngKey::from_seed(9);
         let (theta, x0) = sample_experiment_setup(key, 2, 2);
         let m64 =
-            backprop_through_solver(&sde, &theta, &x0, 0.0, 1.0, 64, key, Method::EulerMaruyama)
-                .noise_memory;
+            backprop_sum(&sde, &theta, &x0, 64, key, Method::EulerMaruyama).noise_memory;
         let m512 =
-            backprop_through_solver(&sde, &theta, &x0, 0.0, 1.0, 512, key, Method::EulerMaruyama)
-                .noise_memory;
+            backprop_sum(&sde, &theta, &x0, 512, key, Method::EulerMaruyama).noise_memory;
         assert!(m512 > 6 * m64, "memory should scale ~linearly: {m64} -> {m512}");
     }
 }

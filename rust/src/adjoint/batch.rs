@@ -1,0 +1,316 @@
+//! Batched stochastic adjoint: B augmented backward solves per step.
+//!
+//! The scalar engine ([`super::stochastic`]) integrates one augmented
+//! state `(z, a_z, a_θ)` backward per path. Here all B paths advance
+//! together: the augmented batch state lives in **one contiguous
+//! `[B×(2d+p+1)]` buffer**, partitioned structure-of-arrays so each block
+//! is itself a dense row-major matrix the batched VJP kernels can sweep:
+//!
+//! ```text
+//! ┌──────────┬──────────┬──────────┬─────┐
+//! │ z  [B×d] │ a_z [B×d]│ a_θ [B×p]│ L[B]│   one allocation
+//! └──────────┴──────────┴──────────┴─────┘
+//! ```
+//!
+//! `L` is the per-path terminal loss `L_b = Σ_i z_T^{(i,b)}` — constant
+//! through the backward pass (the loss of a realized path does not change
+//! while we differentiate it) and returned per path, so a batched
+//! gradient call also yields the Monte Carlo loss estimate for free.
+//!
+//! Every per-path float follows the exact evaluation order of the scalar
+//! backward Heun step ([`super::stochastic`]'s `backward_heun_step`), so
+//! a batch of B adjoint solves equals B scalar adjoint solves bit for bit
+//! (pinned by `tests/batch_engine.rs`). Noise comes from one
+//! [`BatchBrownian`] whose per-path sources carry the problem keys (and
+//! per-path mirror flags), shared between the forward and backward sweeps
+//! exactly as in the scalar engine.
+
+use super::stochastic::Noise;
+use crate::brownian::BatchBrownian;
+use crate::sde::BatchSdeVjp;
+use crate::solvers::{batch_grid_core, uniform_grid, BatchForwardFunc, Method, SolveStats};
+
+/// Evaluation bundle for the batched augmented backward dynamics —
+/// [`super::augmented::AdjointOps`] lifted to `[B×d]`/`[B×p]` buffers.
+pub struct BatchAdjointOps<'a, S: BatchSdeVjp + ?Sized> {
+    sde: &'a S,
+    theta: Vec<f64>,
+    d: usize,
+    batch: usize,
+    neg_a: Vec<f64>,
+    weighted_a: Vec<f64>,
+    scratch_z: Vec<f64>,
+    scratch_p: Vec<f64>,
+    /// Row-level σ/σ′ staging for the Stratonovich drift (len 2d).
+    strat: Vec<f64>,
+    /// Row-level sign-flip staging for the Stratonovich drift VJP (len d).
+    vjp_scratch: Vec<f64>,
+    /// Per-path-unit NFE accounting (one batched call = one evaluation).
+    pub nfe_drift: u64,
+    pub nfe_diffusion: u64,
+}
+
+impl<'a, S: BatchSdeVjp + ?Sized> BatchAdjointOps<'a, S> {
+    pub fn new(sde: &'a S, theta: &[f64], batch: usize) -> Self {
+        let d = sde.state_dim();
+        let p = sde.param_dim();
+        assert_eq!(theta.len(), p, "BatchAdjointOps: theta length mismatch");
+        assert!(batch > 0, "BatchAdjointOps: empty batch");
+        BatchAdjointOps {
+            sde,
+            theta: theta.to_vec(),
+            d,
+            batch,
+            neg_a: vec![0.0; batch * d],
+            weighted_a: vec![0.0; batch * d],
+            scratch_z: vec![0.0; batch * d],
+            scratch_p: vec![0.0; batch * p],
+            strat: vec![0.0; 2 * d],
+            vjp_scratch: vec![0.0; d],
+            nfe_drift: 0,
+            nfe_diffusion: 0,
+        }
+    }
+
+    /// Drift-side evaluation at `(t, z, a)` for all paths (see the scalar
+    /// [`super::augmented::AdjointOps::eval_drift`]):
+    /// `b_out[b] ← b̃(z_b,t)`, `fa_out[b] ← −a_bᵀ∂b̃/∂z`,
+    /// `fth_out[b] ← −a_bᵀ∂b̃/∂θ` (overwritten).
+    pub fn eval_drift(
+        &mut self,
+        t: f64,
+        z: &[f64],
+        a: &[f64],
+        b_out: &mut [f64],
+        fa_out: &mut [f64],
+        fth_out: &mut [f64],
+    ) {
+        self.nfe_drift += 1;
+        self.sde.drift_stratonovich_batch(t, z, &self.theta, b_out, &mut self.strat);
+        for (n, v) in self.neg_a.iter_mut().zip(a) {
+            *n = -v;
+        }
+        fa_out.fill(0.0);
+        fth_out.fill(0.0);
+        self.sde.drift_vjp_stratonovich_batch(
+            t,
+            z,
+            &self.theta,
+            &self.neg_a,
+            fa_out,
+            fth_out,
+            &mut self.vjp_scratch,
+        );
+    }
+
+    /// Diffusion-side evaluation at `(t, z, a)` with per-path channel
+    /// increments `dw` (`[B×d]`): `s_out[b] ← σ(z_b,t)`,
+    /// `ga_out[b] ← −a_bᵀ∂σ/∂z`, `gth_out[b] ← −Σ_i a_{b,i} dw_{b,i}
+    /// ∂σ_i/∂θ` (ΔW folded in, as in the scalar engine).
+    #[allow(clippy::too_many_arguments)]
+    pub fn eval_diffusion(
+        &mut self,
+        t: f64,
+        z: &[f64],
+        a: &[f64],
+        dw: &[f64],
+        s_out: &mut [f64],
+        ga_out: &mut [f64],
+        gth_out: &mut [f64],
+    ) {
+        self.nfe_diffusion += 1;
+        self.sde.diffusion_batch(t, z, &self.theta, s_out);
+        for i in 0..self.batch * self.d {
+            self.neg_a[i] = -a[i];
+            self.weighted_a[i] = -a[i] * dw[i];
+        }
+        ga_out.fill(0.0);
+        gth_out.fill(0.0);
+        // z-VJP with −a (unweighted); θ-VJP with −a⊙ΔW. Side outputs of
+        // each call land in scratch and are discarded — same two-call
+        // structure as the scalar AdjointOps.
+        self.scratch_p.fill(0.0);
+        self.sde
+            .diffusion_vjp_batch(t, z, &self.theta, &self.neg_a, ga_out, &mut self.scratch_p);
+        self.scratch_z.fill(0.0);
+        self.sde.diffusion_vjp_batch(
+            t,
+            z,
+            &self.theta,
+            &self.weighted_a,
+            &mut self.scratch_z,
+            gth_out,
+        );
+    }
+}
+
+/// Stage buffers of the batched backward Heun step (`[B×d]`/`[B×p]`).
+struct BatchBackwardScratch {
+    b0: Vec<f64>,
+    s0: Vec<f64>,
+    fa0: Vec<f64>,
+    ga0: Vec<f64>,
+    fth0: Vec<f64>,
+    gth0: Vec<f64>,
+    b1: Vec<f64>,
+    s1: Vec<f64>,
+    fa1: Vec<f64>,
+    ga1: Vec<f64>,
+    fth1: Vec<f64>,
+    gth1: Vec<f64>,
+    zp: Vec<f64>,
+    ap: Vec<f64>,
+    dw: Vec<f64>,
+}
+
+impl BatchBackwardScratch {
+    fn new(d: usize, p: usize, batch: usize) -> Self {
+        let n = batch * d;
+        let np = batch * p;
+        BatchBackwardScratch {
+            b0: vec![0.0; n],
+            s0: vec![0.0; n],
+            fa0: vec![0.0; n],
+            ga0: vec![0.0; n],
+            fth0: vec![0.0; np],
+            gth0: vec![0.0; np],
+            b1: vec![0.0; n],
+            s1: vec![0.0; n],
+            fa1: vec![0.0; n],
+            ga1: vec![0.0; n],
+            fth1: vec![0.0; np],
+            gth1: vec![0.0; np],
+            zp: vec![0.0; n],
+            ap: vec![0.0; n],
+            dw: vec![0.0; n],
+        }
+    }
+}
+
+/// One batched backward Heun step from `t` to `tn` (`tn < t`), updating
+/// the `(z, a, ath)` blocks in place. `sc.dw` must hold
+/// `W_b(tn) − W_b(t)` for every path.
+fn batch_backward_heun_step<S: BatchSdeVjp + ?Sized>(
+    ops: &mut BatchAdjointOps<S>,
+    t: f64,
+    tn: f64,
+    z: &mut [f64],
+    a: &mut [f64],
+    ath: &mut [f64],
+    sc: &mut BatchBackwardScratch,
+) {
+    let n = z.len();
+    let np = ath.len();
+    let h = tn - t; // signed (negative)
+
+    ops.eval_drift(t, z, a, &mut sc.b0, &mut sc.fa0, &mut sc.fth0);
+    ops.eval_diffusion(t, z, a, &sc.dw, &mut sc.s0, &mut sc.ga0, &mut sc.gth0);
+
+    for i in 0..n {
+        sc.zp[i] = z[i] + sc.b0[i] * h + sc.s0[i] * sc.dw[i];
+        sc.ap[i] = a[i] + sc.fa0[i] * h + sc.ga0[i] * sc.dw[i];
+    }
+
+    ops.eval_drift(tn, &sc.zp, &sc.ap, &mut sc.b1, &mut sc.fa1, &mut sc.fth1);
+    ops.eval_diffusion(tn, &sc.zp, &sc.ap, &sc.dw, &mut sc.s1, &mut sc.ga1, &mut sc.gth1);
+
+    for i in 0..n {
+        z[i] += 0.5 * (sc.b0[i] + sc.b1[i]) * h + 0.5 * (sc.s0[i] + sc.s1[i]) * sc.dw[i];
+        a[i] += 0.5 * (sc.fa0[i] + sc.fa1[i]) * h + 0.5 * (sc.ga0[i] + sc.ga1[i]) * sc.dw[i];
+    }
+    for j in 0..np {
+        // gth already carries the ΔW contraction (see BatchAdjointOps).
+        ath[j] += 0.5 * (sc.fth0[j] + sc.fth1[j]) * h + 0.5 * (sc.gth0[j] + sc.gth1[j]);
+    }
+}
+
+/// Result of a batched adjoint computation: per-path rows of everything
+/// the scalar [`super::stochastic::GradientOutput`] reports, plus the
+/// per-path loss carried in the augmented buffer's final block.
+pub(crate) struct BatchGradientOutput {
+    /// Terminal states `[B×d]`.
+    pub z_terminal: Vec<f64>,
+    /// `∂L/∂z_0` per path, `[B×d]`.
+    pub grad_z0: Vec<f64>,
+    /// `∂L/∂θ` per path, `[B×p]`.
+    pub grad_theta: Vec<f64>,
+    /// Backward path reconstructions `[B×d]`.
+    pub z0_reconstructed: Vec<f64>,
+    /// Realized `W_b(t1)` per path, `[B×d]`.
+    pub w_terminal: Vec<f64>,
+    /// Per-path terminal loss `L_b = Σ_i z_T^{(i,b)}` (length B).
+    pub loss: Vec<f64>,
+    /// Per-path solve statistics (uniform across the batch).
+    pub forward_stats: SolveStats,
+    pub backward_stats: SolveStats,
+}
+
+/// Batched Algorithm 2 for the summed loss `L = Σ_i z_T^{(i)}`: forward
+/// batched solve keeping only terminal states, then one batched augmented
+/// backward sweep against the same per-path noise. `z0` is `[B×d]`
+/// (per-path initial states); `noise` carries one source per path.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn batch_adjoint_sum_core<S: BatchSdeVjp + ?Sized>(
+    sde: &S,
+    theta: &[f64],
+    z0: &[f64],
+    t0: f64,
+    t1: f64,
+    n_steps: usize,
+    noise: &mut BatchBrownian<Noise>,
+    forward_method: Method,
+) -> BatchGradientOutput {
+    let d = sde.state_dim();
+    let p = sde.param_dim();
+    let batch = noise.batch();
+    assert_eq!(z0.len(), batch * d, "batch_adjoint_sum_core: z0 layout mismatch");
+    let grid = uniform_grid(t0, t1, n_steps);
+
+    // Forward pass: terminal states only.
+    let mut z_t = vec![0.0; batch * d];
+    let forward_stats = {
+        let mut sys = BatchForwardFunc::for_method(sde, theta, batch, forward_method);
+        batch_grid_core(&mut sys, forward_method, z0, &grid, noise, &mut z_t)
+    };
+
+    let mut w_terminal = vec![0.0; batch * d];
+    noise.sample_all(t1, &mut w_terminal);
+
+    // The augmented batch state: one [B×(2d+p+1)] allocation partitioned
+    // SoA into (z | a_z | a_θ | L) blocks.
+    let mut aug = vec![0.0; batch * (2 * d + p + 1)];
+    let (z_blk, rest) = aug.split_at_mut(batch * d);
+    let (a_blk, rest) = rest.split_at_mut(batch * d);
+    let (ath_blk, loss_blk) = rest.split_at_mut(batch * p);
+    z_blk.copy_from_slice(&z_t);
+    a_blk.fill(1.0); // ∂(Σ z_T)/∂z_T is the ones vector, per path.
+    for (lb, zr) in loss_blk.iter_mut().zip(z_t.chunks_exact(d)) {
+        *lb = zr.iter().sum();
+    }
+
+    // Backward pass over the reversed grid.
+    let mut ops = BatchAdjointOps::new(sde, theta, batch);
+    let mut sc = BatchBackwardScratch::new(d, p, batch);
+    let rgrid: Vec<f64> = grid.iter().rev().copied().collect();
+    let mut backward_stats = SolveStats::default();
+    noise.begin_sweep(rgrid[0]);
+    for k in 0..rgrid.len() - 1 {
+        let (t, tn) = (rgrid[k], rgrid[k + 1]);
+        noise.sweep_increments(tn, &mut sc.dw);
+        batch_backward_heun_step(&mut ops, t, tn, z_blk, a_blk, ath_blk, &mut sc);
+        backward_stats.steps += 1;
+    }
+    backward_stats.nfe_drift = ops.nfe_drift;
+    backward_stats.nfe_diffusion = ops.nfe_diffusion;
+
+    BatchGradientOutput {
+        z_terminal: z_t,
+        grad_z0: a_blk.to_vec(),
+        grad_theta: ath_blk.to_vec(),
+        z0_reconstructed: z_blk.to_vec(),
+        w_terminal,
+        loss: loss_blk.to_vec(),
+        forward_stats,
+        backward_stats,
+    }
+}

@@ -16,26 +16,23 @@
 //!
 //! [`reconstruct`] demonstrates the Figure 2 phenomenon: backward-in-time
 //! simulation reconstructs the forward path only in Stratonovich form.
+//!
+//! [`batch`] lifts the stochastic adjoint to the batched SoA engine: B
+//! augmented backward solves advance together in one `[B×(2d+p+1)]`
+//! buffer, bit-identical per path to B scalar solves — this is what
+//! [`crate::api::sensitivity_batch`] runs on.
 
 pub mod adaptive_grad;
 pub mod antithetic;
 pub mod augmented;
 pub mod backprop;
+pub mod batch;
 pub mod pathwise;
 pub mod reconstruct;
 pub mod stochastic;
 
-#[allow(deprecated)]
-pub use adaptive_grad::adaptive_adjoint_gradients;
 pub use adaptive_grad::{AdaptiveGradOutput, ChannelMappedBrownian};
-#[allow(deprecated)]
-pub use antithetic::antithetic_adjoint_gradients;
 pub use antithetic::AntitheticOutput;
 pub use augmented::AdjointOps;
-#[allow(deprecated)]
-pub use backprop::backprop_through_solver;
-#[allow(deprecated)]
-pub use pathwise::forward_pathwise_gradients;
-#[allow(deprecated)]
-pub use stochastic::{stochastic_adjoint_gradients, stochastic_adjoint_multi_obs};
+pub use batch::BatchAdjointOps;
 pub use stochastic::{AdjointConfig, BackwardSolver, GradientOutput, NoiseMode};

@@ -22,26 +22,9 @@ use crate::prng::PrngKey;
 use crate::sde::{Calculus, SdeVjp};
 use crate::solvers::{uniform_grid, SolveStats};
 
-/// Gradients of `L = Σ_i z_T^(i)` by forward sensitivity analysis with
-/// Euler–Maruyama stepping of the augmented `(z, S)` system.
-#[deprecated(
-    since = "0.2.0",
-    note = "use crate::api::SdeProblem::sensitivity_sum with SensAlg::ForwardPathwise instead"
-)]
-pub fn forward_pathwise_gradients<S: SdeVjp + ?Sized>(
-    sde: &S,
-    theta: &[f64],
-    z0: &[f64],
-    t0: f64,
-    t1: f64,
-    n_steps: usize,
-    key: PrngKey,
-) -> GradientOutput {
-    pathwise_core(sde, theta, z0, t0, t1, n_steps, key, |z| vec![1.0; z.len()])
-}
-
-/// Forward-sensitivity engine shared by
-/// [`crate::api::SdeProblem::sensitivity`] and the deprecated shim.
+/// Forward-sensitivity engine behind
+/// [`crate::api::SdeProblem::sensitivity`] with `SensAlg::ForwardPathwise`
+/// — Euler–Maruyama stepping of the augmented `(z, S)` system.
 /// `loss_grad` maps the realized terminal state to `∂L/∂z_T`, which is
 /// contracted against the propagated sensitivity matrix.
 #[allow(clippy::too_many_arguments)]
@@ -189,14 +172,33 @@ where
 }
 
 #[cfg(test)]
-#[allow(deprecated)] // exercises the legacy shims on purpose (API parity is
-                     // pinned separately in tests/api_equivalence.rs)
 mod tests {
     use super::*;
-    use crate::adjoint::backprop::backprop_through_solver;
+    use crate::adjoint::backprop::backprop_core;
     use crate::sde::problems::{sample_experiment_setup, Example1, Example2};
     use crate::sde::ReplicatedSde;
     use crate::solvers::Method;
+
+    fn pathwise_sum<S: SdeVjp + ?Sized>(
+        sde: &S,
+        theta: &[f64],
+        z0: &[f64],
+        n: usize,
+        key: PrngKey,
+    ) -> GradientOutput {
+        pathwise_core(sde, theta, z0, 0.0, 1.0, n, key, |z| vec![1.0; z.len()])
+    }
+
+    fn backprop_sum<S: SdeVjp + ?Sized>(
+        sde: &S,
+        theta: &[f64],
+        z0: &[f64],
+        n: usize,
+        key: PrngKey,
+        method: Method,
+    ) -> GradientOutput {
+        backprop_core(sde, theta, z0, 0.0, 1.0, n, key, method, |z| vec![1.0; z.len()])
+    }
 
     #[test]
     fn pathwise_matches_backprop_euler_exactly() {
@@ -209,9 +211,9 @@ mod tests {
             let key = PrngKey::from_seed(seed);
             let (theta, x0) = sample_experiment_setup(key, dim, 2);
             let n = 128;
-            let fw = forward_pathwise_gradients(&sde, &theta, &x0, 0.0, 1.0, n, key);
+            let fw = pathwise_sum(&sde, &theta, &x0, n, key);
             let bp =
-                backprop_through_solver(&sde, &theta, &x0, 0.0, 1.0, n, key, Method::EulerMaruyama);
+                backprop_sum(&sde, &theta, &x0, n, key, Method::EulerMaruyama);
             for j in 0..theta.len() {
                 assert!(
                     (fw.grad_theta[j] - bp.grad_theta[j]).abs() < 1e-10,
@@ -237,9 +239,9 @@ mod tests {
         let key = PrngKey::from_seed(23);
         let (theta, x0) = sample_experiment_setup(key, 3, 1);
         let n = 128;
-        let fw = forward_pathwise_gradients(&sde, &theta, &x0, 0.0, 1.0, n, key);
+        let fw = pathwise_sum(&sde, &theta, &x0, n, key);
         let bp =
-            backprop_through_solver(&sde, &theta, &x0, 0.0, 1.0, n, key, Method::EulerMaruyama);
+            backprop_sum(&sde, &theta, &x0, n, key, Method::EulerMaruyama);
         for j in 0..theta.len() {
             assert!(
                 (fw.grad_theta[j] - bp.grad_theta[j]).abs() < 1e-9,
@@ -258,7 +260,7 @@ mod tests {
         for dim in [2usize, 8] {
             let sde = ReplicatedSde::new(Example1, dim);
             let (theta, x0) = sample_experiment_setup(key, dim, 2);
-            let out = forward_pathwise_gradients(&sde, &theta, &x0, 0.0, 1.0, 32, key);
+            let out = pathwise_sum(&sde, &theta, &x0, 32, key);
             nfes.push(out.forward_stats.nfe());
         }
         assert!(nfes[1] >= 3 * nfes[0], "NFE should grow ~linearly with d: {nfes:?}");

@@ -288,56 +288,10 @@ impl<'a, S: SdeVjp + ?Sized> BackwardSolver<'a, S> {
     }
 }
 
-/// Gradient of `L = Σ_i z_T^(i)` via the stochastic adjoint.
-///
-/// The loss used throughout the paper's numerical studies (§7.1): its
-/// gradient at the terminal state is the ones vector.
-#[deprecated(
-    since = "0.2.0",
-    note = "use crate::api::SdeProblem::sensitivity_sum with SensAlg::StochasticAdjoint instead"
-)]
-#[allow(clippy::too_many_arguments)]
-pub fn stochastic_adjoint_gradients<S: SdeVjp + ?Sized>(
-    sde: &S,
-    theta: &[f64],
-    z0: &[f64],
-    t0: f64,
-    t1: f64,
-    n_steps: usize,
-    key: PrngKey,
-    cfg: &AdjointConfig,
-) -> GradientOutput {
-    adjoint_with_loss_core(sde, theta, z0, t0, t1, n_steps, key, cfg, |_z| vec![1.0; z0.len()])
-}
-
-/// Gradient of an arbitrary scalar loss `L(z_T)` via the stochastic
-/// adjoint: `loss_grad` maps the realized terminal state to `∂L/∂z_T`.
-#[deprecated(
-    since = "0.2.0",
-    note = "use crate::api::SdeProblem::sensitivity with SensAlg::StochasticAdjoint instead"
-)]
-#[allow(clippy::too_many_arguments)]
-pub fn stochastic_adjoint_with_loss<S, F>(
-    sde: &S,
-    theta: &[f64],
-    z0: &[f64],
-    t0: f64,
-    t1: f64,
-    n_steps: usize,
-    key: PrngKey,
-    cfg: &AdjointConfig,
-    loss_grad: F,
-) -> GradientOutput
-where
-    S: SdeVjp + ?Sized,
-    F: FnOnce(&[f64]) -> Vec<f64>,
-{
-    adjoint_with_loss_core(sde, theta, z0, t0, t1, n_steps, key, cfg, loss_grad)
-}
-
-/// Stochastic-adjoint engine (Algorithm 2) shared by
-/// [`crate::api::SdeProblem::sensitivity`] and the deprecated free-function
-/// shims above.
+/// Stochastic-adjoint engine (Algorithm 2) behind
+/// [`crate::api::SdeProblem::sensitivity`]: gradient of an arbitrary
+/// scalar loss `L(z_T)`, with `loss_grad` mapping the realized terminal
+/// state to `∂L/∂z_T`.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn adjoint_with_loss_core<S, F>(
     sde: &S,
@@ -385,37 +339,13 @@ where
     }
 }
 
-/// Multi-observation adjoint (App. 9.12's loop): the loss is
+/// Multi-observation adjoint engine (App. 9.12's loop) behind
+/// [`crate::api::SdeProblem::sensitivity_at`]: the loss is
 /// `L = Σ_k ℓ_k(z_{t_k})` over observation times `obs_times` (ascending,
 /// all in `(t0, t1]`, last one = t1). `loss_grads` receives the forward
 /// states at all observation times (row-major `n_obs × d`) and returns all
 /// `∂L/∂z_{t_k}` in the same layout. The backward pass injects each
 /// gradient when it crosses the corresponding time.
-#[deprecated(
-    since = "0.2.0",
-    note = "use crate::api::SdeProblem::sensitivity_at instead"
-)]
-#[allow(clippy::too_many_arguments)]
-pub fn stochastic_adjoint_multi_obs<S, F>(
-    sde: &S,
-    theta: &[f64],
-    z0: &[f64],
-    t0: f64,
-    obs_times: &[f64],
-    steps_per_interval: usize,
-    key: PrngKey,
-    cfg: &AdjointConfig,
-    loss_grads: F,
-) -> GradientOutput
-where
-    S: SdeVjp + ?Sized,
-    F: FnOnce(&[f64]) -> Vec<f64>,
-{
-    adjoint_multi_obs_core(sde, theta, z0, t0, obs_times, steps_per_interval, key, cfg, loss_grads)
-}
-
-/// Multi-observation adjoint engine shared by
-/// [`crate::api::SdeProblem::sensitivity_at`] and the deprecated shim.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn adjoint_multi_obs_core<S, F>(
     sde: &S,

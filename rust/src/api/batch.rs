@@ -1,0 +1,323 @@
+//! Batch entry points: [`solve_batch`] / [`sensitivity_batch`] on the
+//! batched SoA execution engine.
+//!
+//! ## Execution model
+//!
+//! A slice of problems (typically [`SdeProblem::replicates`] of one
+//! problem over independent keys) is split into fixed-size **chunks**;
+//! chunks fan out across a scoped thread pool, and each chunk advances
+//! all of its paths *together* through the batched kernels
+//! ([`crate::solvers::batch`], [`crate::adjoint::batch`]) over
+//! contiguous `[B×d]` buffers. This replaces the pre-0.3 thread-per-path
+//! model: the batched kernel pays one dispatch per solver stage instead
+//! of per path and keeps coefficients/weights hot in cache across the
+//! chunk, while threads still cover the outer batch.
+//!
+//! ## Determinism and exactness
+//!
+//! Each path is a pure function of its own key, and the batched kernels
+//! compute every per-path float in the scalar engine's exact evaluation
+//! order — so results are **bit-identical** to solving each problem
+//! sequentially with [`SdeProblem::solve`] /
+//! [`SdeProblem::sensitivity_sum`], regardless of thread count or chunk
+//! boundaries (pinned by `tests/batch_engine.rs`).
+//!
+//! ## Batchability
+//!
+//! The batched kernel requires the problems to share one SDE instance,
+//! parameter vector, horizon, and noise-spec kind (per-path initial
+//! states, keys, and mirror flags may vary — that is what replicates
+//! vary). Mixed batches, adaptive stepping, [`SaveAt::Grid`] saves, and
+//! the taped/antithetic estimators fall back to the per-path engine
+//! ([`solve_batch_per_path`] / [`sensitivity_batch_per_path`]), which
+//! remains available directly as the throughput-bench baseline.
+
+use super::problem::{ProblemError, SdeProblem};
+use super::sensitivity::{validate_alg, GradStats, Gradients, SensAlg};
+use super::solve::{par_map, NoiseHandle, SaveAt, SdeSolution, SolveOptions, StepControl};
+use crate::adjoint::batch::batch_adjoint_sum_core;
+use crate::adjoint::stochastic::Noise;
+use crate::brownian::{BatchBrownian, BrownianMotion};
+use crate::sde::{BatchSde, BatchSdeVjp};
+use crate::solvers::{batch_grid_core, batch_grid_saving_core, uniform_grid, BatchForwardFunc};
+
+/// Paths per batched-kernel chunk. Large enough to amortize per-stage
+/// dispatch and keep weight rows hot, small enough that `B×d` stage
+/// buffers stay cache-resident and chunks outnumber cores for balance.
+/// Chunk boundaries never affect results (each path's floats are
+/// independent of its neighbours), only scheduling.
+const CHUNK: usize = 32;
+
+/// Can this problem set run on the batched kernel as one fleet?
+fn batchable<S: BatchSde + ?Sized>(problems: &[SdeProblem<'_, S>]) -> bool {
+    let p0 = &problems[0];
+    problems.iter().all(|p| {
+        // Same SDE instance (data pointers compared — metadata stripped so
+        // trait-object batches don't trip over vtable identity).
+        std::ptr::eq((p.sde as *const S).cast::<()>(), (p0.sde as *const S).cast::<()>())
+            && p.theta == p0.theta
+            && p.t0 == p0.t0
+            && p.t1 == p0.t1
+            && p.noise == p0.noise
+    })
+}
+
+/// Chunk index ranges `[start, end)` of `n` items.
+fn chunks(n: usize) -> Vec<(usize, usize)> {
+    (0..n.div_ceil(CHUNK)).map(|c| (c * CHUNK, ((c + 1) * CHUNK).min(n))).collect()
+}
+
+/// Per-path noise sources carrying each problem's key and mirror flag.
+fn noise_fleet<S: BatchSde + ?Sized>(
+    problems: &[SdeProblem<'_, S>],
+    d: usize,
+) -> BatchBrownian<Noise> {
+    BatchBrownian::new(
+        problems
+            .iter()
+            .map(|p| Noise::new(p.noise, p.key, d, p.t0, p.t1, p.mirror))
+            .collect(),
+    )
+}
+
+/// Solve many problems on the batched SoA engine (chunked across scoped
+/// threads). Results are in input order and bit-identical to sequential
+/// per-problem [`SdeProblem::solve`] calls regardless of thread count.
+///
+/// Falls back to the per-path engine for non-batchable sets, adaptive
+/// stepping, and [`SaveAt::Grid`] saves.
+pub fn solve_batch<'a, S>(
+    problems: &[SdeProblem<'a, S>],
+    opts: &SolveOptions<'_>,
+) -> Vec<SdeSolution>
+where
+    S: BatchSde + Sync + ?Sized,
+{
+    if problems.is_empty() {
+        return Vec::new();
+    }
+    let fallback = !batchable(problems)
+        || matches!(opts.step, StepControl::Adaptive(_))
+        || matches!(opts.save, SaveAt::Grid(_));
+    if fallback {
+        return solve_batch_per_path(problems, opts);
+    }
+    let ranges = chunks(problems.len());
+    par_map(ranges.len(), |c| {
+        let (lo, hi) = ranges[c];
+        solve_chunk(&problems[lo..hi], opts)
+    })
+    .into_iter()
+    .flatten()
+    .collect()
+}
+
+/// Single-threaded batched solve for SDEs that are not `Sync` (the
+/// latent posterior carries interior-mutable scratch): every chunk runs
+/// the batched kernel on the calling thread. Results equal
+/// [`solve_batch`]'s exactly — only the scheduling differs.
+pub fn solve_batch_local<'a, S>(
+    problems: &[SdeProblem<'a, S>],
+    opts: &SolveOptions<'_>,
+) -> Vec<SdeSolution>
+where
+    S: BatchSde + ?Sized,
+{
+    if problems.is_empty() {
+        return Vec::new();
+    }
+    let fallback = !batchable(problems)
+        || matches!(opts.step, StepControl::Adaptive(_))
+        || matches!(opts.save, SaveAt::Grid(_));
+    if fallback {
+        return problems.iter().map(|p| p.solve(opts)).collect();
+    }
+    chunks(problems.len())
+        .into_iter()
+        .flat_map(|(lo, hi)| solve_chunk(&problems[lo..hi], opts))
+        .collect()
+}
+
+/// The pre-0.3 thread-per-path engine: each problem solved independently
+/// on the scalar kernel, fanned across scoped threads. Kept public as the
+/// baseline the `sdegrad bench throughput` harness compares against.
+pub fn solve_batch_per_path<'a, S>(
+    problems: &[SdeProblem<'a, S>],
+    opts: &SolveOptions<'_>,
+) -> Vec<SdeSolution>
+where
+    S: BatchSde + Sync + ?Sized,
+{
+    par_map(problems.len(), |i| problems[i].solve(opts))
+}
+
+/// One chunk through the batched forward kernel.
+fn solve_chunk<S: BatchSde + ?Sized>(
+    problems: &[SdeProblem<'_, S>],
+    opts: &SolveOptions<'_>,
+) -> Vec<SdeSolution> {
+    let p0 = &problems[0];
+    let d = p0.dim();
+    let bsz = problems.len();
+    let (t0, t1) = (p0.t0, p0.t1);
+    let n = opts.step.resolve_steps(t0, t1);
+    let grid = uniform_grid(t0, t1, n);
+
+    let mut y0 = vec![0.0; bsz * d];
+    for (row, p) in y0.chunks_exact_mut(d).zip(problems) {
+        row.copy_from_slice(&p.z0);
+    }
+    let mut bm = noise_fleet(problems, d);
+    let mut sys = BatchForwardFunc::for_method(p0.sde, &p0.theta, bsz, opts.method);
+
+    match opts.save {
+        SaveAt::Final => {
+            let mut y_out = vec![0.0; bsz * d];
+            let stats = batch_grid_core(&mut sys, opts.method, &y0, &grid, &mut bm, &mut y_out);
+            bm.into_sources()
+                .into_iter()
+                .enumerate()
+                .map(|(b, src)| SdeSolution {
+                    times: vec![t1],
+                    states: y_out[b * d..(b + 1) * d].to_vec(),
+                    stats,
+                    hit_h_min: false,
+                    noise: NoiseHandle { inner: src },
+                    d,
+                })
+                .collect()
+        }
+        SaveAt::Dense => {
+            let (traj, stats) =
+                batch_grid_saving_core(&mut sys, opts.method, &y0, &grid, &mut bm);
+            bm.into_sources()
+                .into_iter()
+                .enumerate()
+                .map(|(b, src)| {
+                    // Gather path b's rows out of the (times, B, d) buffer.
+                    let mut states = vec![0.0; grid.len() * d];
+                    for k in 0..grid.len() {
+                        states[k * d..(k + 1) * d]
+                            .copy_from_slice(&traj[(k * bsz + b) * d..(k * bsz + b + 1) * d]);
+                    }
+                    SdeSolution {
+                        times: grid.clone(),
+                        states,
+                        stats,
+                        hit_h_min: false,
+                        noise: NoiseHandle { inner: src },
+                        d,
+                    }
+                })
+                .collect()
+        }
+        SaveAt::Grid(_) => unreachable!("grid saves take the per-path fallback"),
+    }
+}
+
+/// Differentiate many problems for the summed loss `L = Σ z_T` on the
+/// batched SoA engine. [`SensAlg::StochasticAdjoint`] runs the batched
+/// augmented adjoint (one `[B×(2d+p+1)]` state per chunk); the taped and
+/// antithetic estimators fall back to the per-path engine. Results are
+/// in input order and bit-identical to per-problem
+/// [`SdeProblem::sensitivity_sum`] calls regardless of thread count.
+pub fn sensitivity_batch<'a, S>(
+    problems: &[SdeProblem<'a, S>],
+    alg: &SensAlg,
+    step: StepControl,
+) -> Vec<Result<Gradients, ProblemError>>
+where
+    S: BatchSdeVjp + Sync + ?Sized,
+{
+    if problems.is_empty() {
+        return Vec::new();
+    }
+    let cfg = match alg {
+        SensAlg::StochasticAdjoint(cfg) if batchable(problems) => *cfg,
+        _ => return sensitivity_batch_per_path(problems, alg, step),
+    };
+    // Validation depends only on the shared SDE and the algorithm.
+    if let Err(e) = validate_alg(&problems[0], alg) {
+        return problems.iter().map(|_| Err(e.clone())).collect();
+    }
+    let n_steps = match step {
+        StepControl::Adaptive(_) => {
+            return problems
+                .iter()
+                .map(|_| Err(ProblemError::AdaptiveSensitivityUnsupported))
+                .collect()
+        }
+        other => other.resolve_steps(problems[0].t0, problems[0].t1),
+    };
+
+    let ranges = chunks(problems.len());
+    par_map(ranges.len(), |c| {
+        let (lo, hi) = ranges[c];
+        sensitivity_chunk(&problems[lo..hi], &cfg, n_steps)
+    })
+    .into_iter()
+    .flatten()
+    .map(Ok)
+    .collect()
+}
+
+/// The pre-0.3 thread-per-path gradient engine (scalar adjoint per
+/// problem, fanned across threads). Baseline for the throughput bench.
+pub fn sensitivity_batch_per_path<'a, S>(
+    problems: &[SdeProblem<'a, S>],
+    alg: &SensAlg,
+    step: StepControl,
+) -> Vec<Result<Gradients, ProblemError>>
+where
+    S: BatchSdeVjp + Sync + ?Sized,
+{
+    par_map(problems.len(), |i| problems[i].sensitivity_sum(alg, step))
+}
+
+/// One chunk through the batched augmented adjoint.
+fn sensitivity_chunk<S: BatchSdeVjp + ?Sized>(
+    problems: &[SdeProblem<'_, S>],
+    cfg: &crate::adjoint::AdjointConfig,
+    n_steps: usize,
+) -> Vec<Gradients> {
+    let p0 = &problems[0];
+    let d = p0.dim();
+    let p = p0.sde.param_dim();
+    let bsz = problems.len();
+
+    let mut z0 = vec![0.0; bsz * d];
+    for (row, pr) in z0.chunks_exact_mut(d).zip(problems) {
+        row.copy_from_slice(&pr.z0);
+    }
+    // The problem's noise spec / mirror flags are authoritative, exactly
+    // as in the scalar path's effective_adjoint_config.
+    let mut bm = noise_fleet(problems, d);
+    let out = batch_adjoint_sum_core(
+        p0.sde,
+        &p0.theta,
+        &z0,
+        p0.t0,
+        p0.t1,
+        n_steps,
+        &mut bm,
+        cfg.forward_method,
+    );
+
+    bm.into_sources()
+        .into_iter()
+        .enumerate()
+        .map(|(b, src)| Gradients {
+            dz0: out.grad_z0[b * d..(b + 1) * d].to_vec(),
+            dtheta: out.grad_theta[b * p..(b + 1) * p].to_vec(),
+            z_terminal: out.z_terminal[b * d..(b + 1) * d].to_vec(),
+            z0_reconstructed: out.z0_reconstructed[b * d..(b + 1) * d].to_vec(),
+            w_terminal: out.w_terminal[b * d..(b + 1) * d].to_vec(),
+            stats: GradStats {
+                forward: out.forward_stats,
+                backward: out.backward_stats,
+                noise_memory: src.memory_footprint(),
+                hit_h_min: false,
+            },
+        })
+        .collect()
+}

@@ -46,22 +46,41 @@
 //! # let _ = (z_mid, w_end);
 //! ```
 //!
-//! Batching rides on the same type: [`solve_batch`] /
-//! [`sensitivity_batch`] fan a slice of problems (typically
-//! [`SdeProblem::replicates`] of one problem with independent keys
-//! derived from a root [`crate::prng::PrngKey`]) across a scoped thread
-//! pool, with results identical to sequential execution regardless of
-//! thread count.
+//! Batching rides on the same type — and runs on a **batched SoA
+//! execution engine**: [`solve_batch`] / [`sensitivity_batch`] take a
+//! slice of problems (typically [`SdeProblem::replicates`] of one
+//! problem with independent keys derived from a root
+//! [`crate::prng::PrngKey`]), split it into chunks across a scoped
+//! thread pool, and advance each chunk's paths *together* through the
+//! batched solver/adjoint kernels. Results are bit-identical to
+//! sequential per-problem execution regardless of thread count (see
+//! [`batch`] for the batchability rules and fallbacks).
 //!
-//! The legacy free functions (`integrate_grid`,
-//! `stochastic_adjoint_gradients`, …) remain as `#[deprecated]` one-line
-//! shims over the same engines, so results are bit-identical across the
-//! two surfaces (pinned by `tests/api_equivalence.rs`).
+//! ## Batch buffer layout convention
+//!
+//! Every batched buffer in this crate is **row-major `[B×d]`**: path
+//! `b`'s state occupies `buf[b*d .. (b+1)*d]`, so a batch is B scalar
+//! state vectors laid end to end ("structure of arrays" at the fleet
+//! level — each quantity (states, adjoints, parameter-gradients) is its
+//! own contiguous matrix, rather than per-path structs). Parameter-side
+//! batches are `[B×p]` in the same convention, trajectories
+//! `(times, B, d)` with the path index in the middle. The batched
+//! augmented adjoint state is a single `[B×(2d+p+1)]` allocation
+//! partitioned into `(z | a_z | a_θ | L)` blocks — see
+//! [`crate::adjoint::batch`].
+//!
+//! (The pre-0.2 deprecated free-function shims were removed in 0.3; the
+//! migration table lives in CHANGES.md.)
 
+pub mod batch;
 pub mod problem;
 pub mod sensitivity;
 pub mod solve;
 
+pub use batch::{
+    sensitivity_batch, sensitivity_batch_per_path, solve_batch, solve_batch_local,
+    solve_batch_per_path,
+};
 pub use problem::{NoiseSpec, ProblemError, SdeProblem};
-pub use sensitivity::{sensitivity_batch, GradStats, Gradients, SensAlg};
-pub use solve::{solve_batch, NoiseHandle, SaveAt, SdeSolution, SolveOptions, StepControl};
+pub use sensitivity::{GradStats, Gradients, SensAlg};
+pub use solve::{NoiseHandle, SaveAt, SdeSolution, SolveOptions, StepControl};

@@ -11,7 +11,7 @@
 //! different path.
 
 use super::problem::{ProblemError, SdeProblem};
-use super::solve::{add_stats, par_map, StepControl};
+use super::solve::{add_stats, StepControl};
 use crate::adjoint::adaptive_grad::adaptive_adjoint_core;
 use crate::adjoint::antithetic::{antithetic_core, AntitheticOutput};
 use crate::adjoint::backprop::backprop_core;
@@ -129,8 +129,9 @@ fn from_antithetic(pair: AntitheticOutput) -> Gradients {
 
 /// Calculus/VJP/noise compatibility check, run before any integration.
 /// This is where the old mid-solve `ito_correction_vjp` panic surfaces as
-/// a [`ProblemError`] instead.
-fn validate_alg<S: SdeVjp + ?Sized>(
+/// a [`ProblemError`] instead. (Shared with [`super::batch`], whose
+/// batched kernel validates once for the whole fleet.)
+pub(crate) fn validate_alg<S: SdeVjp + ?Sized>(
     prob: &SdeProblem<'_, S>,
     alg: &SensAlg,
 ) -> Result<(), ProblemError> {
@@ -342,17 +343,3 @@ impl<'a, P: ScalarSde> SdeProblem<'a, ReplicatedSde<P>> {
     }
 }
 
-/// Batch analogue of [`solve_batch`](super::solve_batch) for the summed
-/// loss `L = Σ z_T`: each problem is differentiated on its own key, in
-/// parallel, with results in input order (deterministic regardless of
-/// thread count).
-pub fn sensitivity_batch<'a, S>(
-    problems: &[SdeProblem<'a, S>],
-    alg: &SensAlg,
-    step: StepControl,
-) -> Vec<Result<Gradients, ProblemError>>
-where
-    S: SdeVjp + Sync + ?Sized,
-{
-    par_map(problems.len(), |i| problems[i].sensitivity_sum(alg, step))
-}

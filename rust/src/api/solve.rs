@@ -1,5 +1,5 @@
-//! Forward solves: [`SolveOptions`] → [`SdeSolution`], plus the
-//! thread-parallel [`solve_batch`] entry point.
+//! Forward solves: [`SolveOptions`] → [`SdeSolution`]. (The batch entry
+//! points live in [`super::batch`].)
 
 use super::problem::SdeProblem;
 use crate::adjoint::stochastic::Noise;
@@ -341,26 +341,10 @@ pub(crate) fn add_stats(total: &mut SolveStats, one: &SolveStats) {
     total.nfe_diffusion += one.nfe_diffusion;
 }
 
-/// Solve many problems concurrently on a `std::thread::scope` pool (the
+/// Order-preserving parallel map over `0..n` on scoped threads (the
 /// vendored crate set has no rayon; see `coordinator::trainer` for the
-/// same idiom). Results are returned in input order and are *identical*
-/// to sequential solving regardless of thread count: each problem is a
-/// pure function of its own key, so parallelism only affects scheduling.
-///
-/// Give each replicate its own key (e.g. via
-/// [`SdeProblem::replicates`]) — problems sharing a key realize the same
-/// Brownian path.
-pub fn solve_batch<'a, S>(
-    problems: &[SdeProblem<'a, S>],
-    opts: &SolveOptions<'_>,
-) -> Vec<SdeSolution>
-where
-    S: Sde + Sync + ?Sized,
-{
-    par_map(problems.len(), |i| problems[i].solve(opts))
-}
-
-/// Order-preserving parallel map over `0..n` on scoped threads.
+/// same idiom). Used by the batch entry points in [`super::batch`] to
+/// fan chunks — and per-path fallbacks — across cores.
 pub(crate) fn par_map<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send,

@@ -1,0 +1,279 @@
+//! Batched Brownian sampling: B independent sample paths queried in one
+//! call, writing into `[B×d]` row-major buffers.
+//!
+//! [`BatchBrownian`] wraps one [`BrownianMotion`] source **per path** —
+//! each with its own key, cache, and (for [`super::BrownianPath`]) its
+//! own sequential RNG stream — and sweeps them together. Per-path query
+//! order is exactly the order a scalar solve would issue, so path `i`'s
+//! noise is bit-identical to what the scalar engine realizes from the
+//! same key (pinned by the property tests below and by
+//! `tests/batch_engine.rs`).
+//!
+//! Two increment APIs, both allocation-free per call:
+//! [`BatchBrownian::fill_increments`] answers one arbitrary `(t0, t1)`
+//! pair per call, while the [`BatchBrownian::begin_sweep`] /
+//! [`BatchBrownian::sweep_increments`] pair serves the solver hot loops —
+//! a rolling previous-`W` buffer means each grid time is queried exactly
+//! once per source, mirroring the scalar drivers' buffer swap (this
+//! matters for the virtual tree, where every query is a bridge descent).
+
+use super::traits::BrownianMotion;
+
+/// B independent Brownian sources swept as one batch.
+pub struct BatchBrownian<B: BrownianMotion> {
+    sources: Vec<B>,
+    dim: usize,
+    scratch: Vec<f64>,
+    /// Rolling previous-W values (`[B×d]`) for monotone grid sweeps — see
+    /// [`BatchBrownian::begin_sweep`].
+    wa: Vec<f64>,
+}
+
+impl<B: BrownianMotion> BatchBrownian<B> {
+    /// Bundle per-path sources (all must share dimension and span).
+    pub fn new(sources: Vec<B>) -> Self {
+        assert!(!sources.is_empty(), "BatchBrownian: need at least one path");
+        let dim = sources[0].dim();
+        let span = sources[0].span();
+        for s in &sources[1..] {
+            assert_eq!(s.dim(), dim, "BatchBrownian: mixed dimensions");
+            assert_eq!(s.span(), span, "BatchBrownian: mixed spans");
+        }
+        let n = sources.len() * dim;
+        BatchBrownian { sources, dim, scratch: vec![0.0; dim], wa: vec![0.0; n] }
+    }
+
+    /// Per-path dimension d.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of paths B.
+    pub fn batch(&self) -> usize {
+        self.sources.len()
+    }
+
+    /// Common time span of all paths.
+    pub fn span(&self) -> (f64, f64) {
+        self.sources[0].span()
+    }
+
+    /// Write `W_b(t)` for every path into `out` (`[B×d]`).
+    pub fn sample_all(&mut self, t: f64, out: &mut [f64]) {
+        let d = self.dim;
+        debug_assert_eq!(out.len(), self.sources.len() * d);
+        for (src, row) in self.sources.iter_mut().zip(out.chunks_exact_mut(d)) {
+            src.sample_into(t, row);
+        }
+    }
+
+    /// Write the signed increments `W_b(t1) − W_b(t0)` for every path into
+    /// `out` (`[B×d]`) in one call. `t0 > t1` is allowed (backward
+    /// sweeps); each source is queried at `t0` then `t1`, the same order a
+    /// scalar grid walk reveals times, so cached sources replay
+    /// identically.
+    pub fn fill_increments(&mut self, t0: f64, t1: f64, out: &mut [f64]) {
+        let d = self.dim;
+        debug_assert_eq!(out.len(), self.sources.len() * d);
+        for (src, row) in self.sources.iter_mut().zip(out.chunks_exact_mut(d)) {
+            src.sample_into(t0, &mut self.scratch);
+            src.sample_into(t1, row);
+            for (r, a) in row.iter_mut().zip(&self.scratch) {
+                *r -= a;
+            }
+        }
+    }
+
+    /// Start a monotone grid sweep at `t`: reveals `W_b(t)` for every
+    /// path into the rolling buffer. Subsequent
+    /// [`BatchBrownian::sweep_increments`] calls then query each grid
+    /// time exactly **once** per source — the batch analogue of the
+    /// scalar drivers' wa/wb buffer swap. (Plain
+    /// [`BatchBrownian::fill_increments`] re-queries its left endpoint;
+    /// that is free for cached sources but costs a full bridge descent
+    /// per path on a [`super::VirtualBrownianTree`], which the solver hot
+    /// loops must not pay twice.)
+    pub fn begin_sweep(&mut self, t: f64) {
+        let d = self.dim;
+        for (src, row) in self.sources.iter_mut().zip(self.wa.chunks_exact_mut(d)) {
+            src.sample_into(t, row);
+        }
+    }
+
+    /// Write the signed increments from the sweep's current position to
+    /// `t_next` into `out` (`[B×d]`), advancing the position. Requires a
+    /// prior [`BatchBrownian::begin_sweep`].
+    pub fn sweep_increments(&mut self, t_next: f64, out: &mut [f64]) {
+        let d = self.dim;
+        debug_assert_eq!(out.len(), self.sources.len() * d);
+        for (src, (row, wa_row)) in self
+            .sources
+            .iter_mut()
+            .zip(out.chunks_exact_mut(d).zip(self.wa.chunks_exact_mut(d)))
+        {
+            src.sample_into(t_next, row);
+            for (r, a) in row.iter_mut().zip(wa_row.iter_mut()) {
+                let w = *r;
+                *r = w - *a;
+                *a = w;
+            }
+        }
+    }
+
+    /// Direct access to one path's source (replay, memory accounting).
+    pub fn source_mut(&mut self, b: usize) -> &mut B {
+        &mut self.sources[b]
+    }
+
+    /// Unbundle into the per-path sources (e.g. to hand each path's
+    /// realized noise back as a replay handle).
+    pub fn into_sources(self) -> Vec<B> {
+        self.sources
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::brownian::{BrownianPath, VirtualBrownianTree};
+    use crate::prng::PrngKey;
+    use crate::testing::forall;
+
+    /// Property (satellite): `fill_increments` agrees with per-path
+    /// queries — on the stored path *and* the virtual tree — for any
+    /// query sequence, including descending and repeated times.
+    #[test]
+    fn fill_increments_matches_per_path_queries_stored_path() {
+        forall("fill_increments stored path", 0xB10C, 40, |g| {
+            let d = g.usize_in(1, 4);
+            let bsz = g.usize_in(1, 6);
+            let sources: Vec<BrownianPath> = (0..bsz)
+                .map(|b| BrownianPath::new(PrngKey::from_seed(900 + b as u64), d, 0.0, 1.0))
+                .collect();
+            let clones = sources.clone();
+            let mut batch = BatchBrownian::new(sources);
+            let mut singles = clones;
+
+            let n_queries = g.usize_in(2, 8);
+            let mut t_prev = g.f64_in(0.0, 1.0);
+            let mut out = vec![0.0; bsz * d];
+            for _ in 0..n_queries {
+                let t_next = g.f64_in(0.0, 1.0);
+                batch.fill_increments(t_prev, t_next, &mut out);
+                for (b, single) in singles.iter_mut().enumerate() {
+                    let mut wa = vec![0.0; d];
+                    let mut wb = vec![0.0; d];
+                    single.sample_into(t_prev, &mut wa);
+                    single.sample_into(t_next, &mut wb);
+                    for i in 0..d {
+                        let want = wb[i] - wa[i];
+                        let got = out[b * d + i];
+                        if got != want {
+                            return Err(format!(
+                                "path {b} dim {i}: batch {got} vs scalar {want}"
+                            ));
+                        }
+                    }
+                }
+                t_prev = t_next;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fill_increments_matches_per_path_queries_virtual_tree() {
+        forall("fill_increments virtual tree", 0x7EE5, 40, |g| {
+            let d = g.usize_in(1, 4);
+            let bsz = g.usize_in(1, 6);
+            let tol = 1e-8;
+            let sources: Vec<VirtualBrownianTree> = (0..bsz)
+                .map(|b| {
+                    VirtualBrownianTree::new(PrngKey::from_seed(40 + b as u64), d, 0.0, 1.0, tol)
+                })
+                .collect();
+            let clones = sources.clone();
+            let mut batch = BatchBrownian::new(sources);
+            let mut singles = clones;
+
+            for _ in 0..g.usize_in(2, 8) {
+                let t0 = g.f64_in(0.0, 1.0);
+                let t1 = g.f64_in(0.0, 1.0);
+                let mut out = vec![0.0; bsz * d];
+                batch.fill_increments(t0, t1, &mut out);
+                for (b, single) in singles.iter_mut().enumerate() {
+                    let mut wa = vec![0.0; d];
+                    let mut wb = vec![0.0; d];
+                    single.sample_into(t0, &mut wa);
+                    single.sample_into(t1, &mut wb);
+                    for i in 0..d {
+                        let want = wb[i] - wa[i];
+                        if out[b * d + i] != want {
+                            return Err(format!("path {b} dim {i} mismatch"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The sweep API agrees with `fill_increments` exactly on a monotone
+    /// grid (same per-source query values, one query per time instead of
+    /// two).
+    #[test]
+    fn sweep_increments_match_fill_increments() {
+        let d = 2;
+        let bsz = 3;
+        let grid: Vec<f64> = (0..=12).map(|k| k as f64 / 12.0).collect();
+        let mk = |b: u64| BrownianPath::new(PrngKey::from_seed(300 + b), d, 0.0, 1.0);
+        let mut swept = BatchBrownian::new((0..bsz as u64).map(mk).collect());
+        let mut filled = BatchBrownian::new((0..bsz as u64).map(mk).collect());
+        let mut a = vec![0.0; bsz * d];
+        let mut b = vec![0.0; bsz * d];
+        swept.begin_sweep(grid[0]);
+        for w in grid.windows(2) {
+            swept.sweep_increments(w[1], &mut a);
+            filled.fill_increments(w[0], w[1], &mut b);
+            assert_eq!(a, b, "at ({}, {})", w[0], w[1]);
+        }
+    }
+
+    /// Monotone grid sweep through the batch reveals the same stored path
+    /// per source as an identically-keyed scalar sweep (RNG-stream
+    /// equality, not just same-law).
+    #[test]
+    fn grid_sweep_is_bit_identical_to_scalar_sweep() {
+        let d = 2;
+        let bsz = 3;
+        let grid: Vec<f64> = (0..=16).map(|k| k as f64 / 16.0).collect();
+        let mk = |b: u64| BrownianPath::new(PrngKey::from_seed(7000 + b), d, 0.0, 1.0);
+
+        let mut batch = BatchBrownian::new((0..bsz as u64).map(mk).collect());
+        let mut dw_batch = Vec::new();
+        let mut out = vec![0.0; bsz * d];
+        batch.begin_sweep(grid[0]);
+        for w in grid.windows(2) {
+            batch.sweep_increments(w[1], &mut out);
+            dw_batch.push(out.clone());
+        }
+
+        for b in 0..bsz {
+            let mut single = mk(b as u64);
+            let mut wa = vec![0.0; d];
+            let mut wb = vec![0.0; d];
+            single.sample_into(grid[0], &mut wa);
+            for (k, w) in grid.windows(2).enumerate() {
+                single.sample_into(w[1], &mut wb);
+                for i in 0..d {
+                    assert_eq!(
+                        dw_batch[k][b * d + i],
+                        wb[i] - wa[i],
+                        "step {k} path {b} dim {i}"
+                    );
+                }
+                wa.copy_from_slice(&wb);
+            }
+        }
+    }
+}

@@ -21,12 +21,14 @@
 //! subsystem's analytic oracles use to reconstruct exact strong solutions
 //! of additive-noise SDEs from the same noise source the solver consumed.
 
+pub mod batch;
 pub mod bridge;
 pub mod path;
 pub mod quadrature;
 pub mod traits;
 pub mod tree;
 
+pub use batch::BatchBrownian;
 pub use bridge::brownian_bridge_sample;
 pub use path::BrownianPath;
 pub use quadrature::weighted_path_integrals;

@@ -24,7 +24,7 @@ use crate::api::solve::par_map;
 use crate::api::{sensitivity_batch, NoiseSpec, ProblemError, SdeProblem, SensAlg, StepControl};
 use crate::brownian::{BrownianMotion, BrownianPath, VirtualBrownianTree};
 use crate::prng::PrngKey;
-use crate::sde::{ExactSolution, SdeVjp};
+use crate::sde::{BatchSdeVjp, ExactSolution, SdeVjp};
 use crate::solvers::uniform_grid;
 
 /// One rung of a gradient ladder.
@@ -143,7 +143,7 @@ pub fn gradient_orders<S>(
     n_boot: usize,
 ) -> Result<GradientLadderResult, ProblemError>
 where
-    S: SdeVjp + ExactSolution + Sync + ?Sized,
+    S: BatchSdeVjp + ExactSolution + Sync + ?Sized,
 {
     assert!(n_paths > 0, "gradient_orders: need at least one path");
     let (t0, t1) = prob.span();

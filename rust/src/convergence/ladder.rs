@@ -10,7 +10,7 @@ use super::{bootstrap_order, DtLadder, ErrorAggregate, OrderEstimate, DEFAULT_TR
 use crate::api::solve::par_map;
 use crate::api::{solve_batch, NoiseSpec, SdeProblem, SolveOptions};
 use crate::brownian::VirtualBrownianTree;
-use crate::sde::{ExactSolution, Sde};
+use crate::sde::{BatchSde, ExactSolution};
 use crate::solvers::Method;
 
 /// One rung of a measured ladder.
@@ -70,7 +70,7 @@ pub fn strong_weak_orders<S>(
     n_boot: usize,
 ) -> StrongWeakResult
 where
-    S: Sde + ExactSolution + Sync + ?Sized,
+    S: BatchSde + ExactSolution + Sync + ?Sized,
 {
     strong_weak_orders_multi(prob, &[method], ladder, n_paths, n_boot)
         .pop()
@@ -89,7 +89,7 @@ pub fn strong_weak_orders_multi<S>(
     n_boot: usize,
 ) -> Vec<StrongWeakResult>
 where
-    S: Sde + ExactSolution + Sync + ?Sized,
+    S: BatchSde + ExactSolution + Sync + ?Sized,
 {
     assert!(n_paths > 0, "strong_weak_orders: need at least one path");
     let (t0, t1) = prob.span();

@@ -1,0 +1,266 @@
+//! `sdegrad bench throughput` — multi-path throughput of the batched SoA
+//! execution engine vs the per-path (thread-per-path) engine.
+//!
+//! Measures **paths/sec** (forward solves) and **grad-paths/sec**
+//! (stochastic-adjoint gradients) on two workloads:
+//!
+//! * the 10-d replicated GBM of §7.1 (cheap coefficients — measures
+//!   engine overhead: dispatch, noise, stepping), and
+//! * a neural-drift SDE (the latent posterior with MLP drift/diffusion —
+//!   measures the batched matrix–matrix win on net-bound dynamics).
+//!
+//! Both engines solve the *same problems from the same seeds* and are
+//! bit-identical path-for-path (asserted here on every run), so the
+//! numbers compare pure execution strategy. Results are printed as a
+//! table and written to `BENCH_throughput.json` (hand-rolled JSON; the
+//! crate set has no serde) for the CI artifact trajectory.
+
+use crate::adjoint::AdjointConfig;
+use crate::api::{
+    sensitivity_batch, sensitivity_batch_per_path, solve_batch, solve_batch_local,
+    solve_batch_per_path, SdeProblem, SensAlg, SolveOptions, StepControl,
+};
+use crate::latent::{LatentSdeConfig, LatentSdeModel, PosteriorSde};
+use crate::metrics::writer::{json_num, json_str};
+use crate::metrics::Stopwatch;
+use crate::prng::PrngKey;
+use crate::sde::problems::{sample_experiment_setup, Example1};
+use crate::sde::{BatchSdeVjp, ReplicatedSde};
+use crate::solvers::Method;
+use std::io::Write;
+
+/// One measured configuration.
+#[derive(Clone, Debug)]
+pub struct ThroughputRow {
+    pub problem: &'static str,
+    pub metric: &'static str,
+    pub engine: &'static str,
+    pub paths: usize,
+    pub steps: usize,
+    pub value_per_sec: f64,
+}
+
+fn time_best_of<F: FnMut() -> f64>(reps: usize, mut f: F) -> f64 {
+    // Best-of-N wall clock (throughput benches want the least-noisy run;
+    // one warmup rep is included and discarded).
+    let mut best = f64::INFINITY;
+    f();
+    for _ in 0..reps {
+        let sw = Stopwatch::new();
+        std::hint::black_box(f());
+        best = best.min(sw.elapsed_s());
+    }
+    best
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_problem<S>(
+    rows: &mut Vec<ThroughputRow>,
+    name: &'static str,
+    prob: &SdeProblem<'_, S>,
+    method: Method,
+    n_paths: usize,
+    n_steps: usize,
+    reps: usize,
+    with_grad: bool,
+) where
+    S: BatchSdeVjp + Sync + ?Sized,
+{
+    let root = PrngKey::from_seed(0x7140);
+    let replicates = prob.replicates(root, n_paths);
+    let opts = SolveOptions::fixed(method, n_steps);
+
+    // Correctness gate: the two engines must agree bit-for-bit before
+    // their times are worth comparing.
+    let batched = solve_batch(&replicates, &opts);
+    let per_path = solve_batch_per_path(&replicates, &opts);
+    for (a, b) in batched.iter().zip(&per_path) {
+        assert_eq!(a.states, b.states, "engines diverged on {name}");
+    }
+
+    let t_batched = time_best_of(reps, || solve_batch(&replicates, &opts)[0].final_state()[0]);
+    let t_scalar =
+        time_best_of(reps, || solve_batch_per_path(&replicates, &opts)[0].final_state()[0]);
+    for (engine, secs) in [("batched", t_batched), ("per_path", t_scalar)] {
+        rows.push(ThroughputRow {
+            problem: name,
+            metric: "paths_per_sec",
+            engine,
+            paths: n_paths,
+            steps: n_steps,
+            value_per_sec: n_paths as f64 / secs,
+        });
+    }
+
+    if with_grad {
+        let alg = SensAlg::StochasticAdjoint(AdjointConfig {
+            forward_method: method,
+            ..Default::default()
+        });
+        let step = StepControl::Steps(n_steps);
+        let g_batched = sensitivity_batch(&replicates, &alg, step);
+        let g_per_path = sensitivity_batch_per_path(&replicates, &alg, step);
+        for (a, b) in g_batched.iter().zip(&g_per_path) {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(a.dtheta, b.dtheta, "gradient engines diverged on {name}");
+        }
+        let t_batched = time_best_of(reps, || {
+            sensitivity_batch(&replicates, &alg, step)[0].as_ref().unwrap().dtheta[0]
+        });
+        let t_scalar = time_best_of(reps, || {
+            sensitivity_batch_per_path(&replicates, &alg, step)[0].as_ref().unwrap().dtheta[0]
+        });
+        for (engine, secs) in [("batched", t_batched), ("per_path", t_scalar)] {
+            rows.push(ThroughputRow {
+                problem: name,
+                metric: "grad_paths_per_sec",
+                engine,
+                paths: n_paths,
+                steps: n_steps,
+                value_per_sec: n_paths as f64 / secs,
+            });
+        }
+    }
+}
+
+/// Run the throughput sweep; prints a table and writes
+/// `BENCH_throughput.json`. `quick` shrinks paths/steps for CI smoke
+/// runs.
+pub fn run_throughput(quick: bool) -> Vec<ThroughputRow> {
+    super::repro::headline("Throughput: batched SoA engine vs per-path engine");
+    let (n_paths, n_steps, reps) = if quick { (256, 200, 3) } else { (2048, 1000, 5) };
+    let mut rows = Vec::new();
+
+    // 1. Replicated GBM, d = 10 (§7.1's system).
+    let dim = 10;
+    let gbm = ReplicatedSde::new(Example1, dim);
+    let key = PrngKey::from_seed(3);
+    let (theta, x0) = sample_experiment_setup(key, dim, 2);
+    let prob = SdeProblem::new(&gbm, &x0, (0.0, 1.0)).params(&theta);
+    run_problem(
+        &mut rows,
+        "gbm_d10",
+        &prob,
+        Method::MilsteinIto,
+        n_paths,
+        n_steps,
+        reps,
+        true,
+    );
+
+    // 2. Neural-drift SDE: the latent posterior (MLP drift + per-dim
+    // diffusion nets) — the workload where batched net evaluation pays.
+    let model = LatentSdeModel::new(LatentSdeConfig {
+        obs_dim: 3,
+        latent_dim: 4,
+        context_dim: 1,
+        hidden: 64,
+        diff_hidden: 16,
+        enc_hidden: 16,
+        ..Default::default()
+    });
+    let params = model.init_params(PrngKey::from_seed(4));
+    let post = PosteriorSde::new(&model);
+    let mut theta_full = params[..post.sde_param_len()].to_vec();
+    theta_full.push(0.3); // static context slot
+    let aug = crate::sde::Sde::state_dim(&post);
+    let y0 = vec![0.1; aug];
+    // PosteriorSde carries interior-mutable scratch (not Sync), so both
+    // engines run single-threaded here: batched kernel vs sequential
+    // scalar solves — a pure engine comparison at equal thread counts.
+    let (nn_paths, nn_steps) = if quick { (64, 50) } else { (256, 200) };
+    let nn_prob = SdeProblem::new(&post, &y0, (0.0, 0.5)).params(&theta_full);
+    let nn_replicates = nn_prob.replicates(PrngKey::from_seed(0x7141), nn_paths);
+    let nn_opts = SolveOptions::fixed(Method::Heun, nn_steps);
+    let batched = solve_batch_local(&nn_replicates, &nn_opts);
+    let sequential: Vec<_> = nn_replicates.iter().map(|p| p.solve(&nn_opts)).collect();
+    for (a, b) in batched.iter().zip(&sequential) {
+        assert_eq!(a.states, b.states, "engines diverged on neural_posterior");
+    }
+    let t_batched =
+        time_best_of(reps, || solve_batch_local(&nn_replicates, &nn_opts)[0].final_state()[0]);
+    let t_scalar = time_best_of(reps, || {
+        nn_replicates.iter().map(|p| p.solve(&nn_opts).final_state()[0]).sum()
+    });
+    for (engine, secs) in [("batched", t_batched), ("per_path", t_scalar)] {
+        rows.push(ThroughputRow {
+            problem: "neural_posterior",
+            metric: "paths_per_sec",
+            engine,
+            paths: nn_paths,
+            steps: nn_steps,
+            value_per_sec: nn_paths as f64 / secs,
+        });
+    }
+
+    println!(
+        "{:<18} {:>20} {:>10} {:>7} {:>7} {:>14}",
+        "problem", "metric", "engine", "paths", "steps", "per_sec"
+    );
+    for r in &rows {
+        println!(
+            "{:<18} {:>20} {:>10} {:>7} {:>7} {:>14.0}",
+            r.problem, r.metric, r.engine, r.paths, r.steps, r.value_per_sec
+        );
+    }
+    for metric in ["paths_per_sec", "grad_paths_per_sec"] {
+        for problem in ["gbm_d10", "neural_posterior"] {
+            let get = |engine: &str| {
+                rows.iter()
+                    .find(|r| r.metric == metric && r.problem == problem && r.engine == engine)
+                    .map(|r| r.value_per_sec)
+            };
+            if let (Some(b), Some(s)) = (get("batched"), get("per_path")) {
+                println!("speedup {problem}/{metric}: {:.2}x", b / s);
+            }
+        }
+    }
+
+    write_json("BENCH_throughput.json", quick, &rows).expect("writing BENCH_throughput.json");
+    println!("(JSON: BENCH_throughput.json)");
+    rows
+}
+
+fn write_json(path: &str, quick: bool, rows: &[ThroughputRow]) -> std::io::Result<()> {
+    let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(out, "{{")?;
+    writeln!(out, "  \"bench\": \"throughput\",")?;
+    writeln!(out, "  \"quick\": {quick},")?;
+    writeln!(out, "  \"root_seed\": {},", 0x7140)?;
+    writeln!(out, "  \"results\": [")?;
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 == rows.len() { "" } else { "," };
+        writeln!(
+            out,
+            "    {{\"problem\": {}, \"metric\": {}, \"engine\": {}, \"paths\": {}, \
+             \"steps\": {}, \"value_per_sec\": {}}}{comma}",
+            json_str(r.problem),
+            json_str(r.metric),
+            json_str(r.engine),
+            r.paths,
+            r.steps,
+            json_num(r.value_per_sec),
+        )?;
+    }
+    writeln!(out, "  ]")?;
+    writeln!(out, "}}")?;
+    out.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The quick sweep runs end-to-end, covers both engines on both
+    /// problems, and leaves the JSON artifact behind.
+    #[test]
+    fn quick_throughput_produces_rows_and_artifact() {
+        let rows = run_throughput(true);
+        // 2 engines × (gbm solve + gbm grad + nn solve) = 6 rows.
+        assert_eq!(rows.len(), 6);
+        assert!(rows.iter().all(|r| r.value_per_sec.is_finite() && r.value_per_sec > 0.0));
+        let json = std::fs::read_to_string("BENCH_throughput.json").expect("artifact written");
+        assert!(json.contains("\"bench\": \"throughput\""));
+        assert!(json.contains("grad_paths_per_sec"));
+    }
+}

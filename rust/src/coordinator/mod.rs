@@ -1,8 +1,10 @@
 //! L3 training coordinator: experiment configs, the multi-worker trainer,
-//! checkpointing, and the reproduction harnesses for every table and
-//! figure in the paper (shared by `cargo bench` targets and the
-//! `sdegrad repro` CLI).
+//! checkpointing, the reproduction harnesses for every table and figure
+//! in the paper (shared by `cargo bench` targets and the `sdegrad repro`
+//! CLI), and the [`bench`] throughput harness (`sdegrad bench
+//! throughput` → `BENCH_throughput.json`).
 
+pub mod bench;
 pub mod checkpoint;
 pub mod config;
 pub mod repro;

@@ -23,7 +23,7 @@ use crate::metrics::CsvWriter;
 use crate::prng::PrngKey;
 use crate::sde::ou::OrnsteinUhlenbeck;
 use crate::sde::problems::Example1;
-use crate::sde::{ExactSolution, ReplicatedSde, SdeVjp};
+use crate::sde::{BatchSde, BatchSdeVjp, ExactSolution, ReplicatedSde};
 use crate::solvers::Method;
 
 /// Root seed of the harness (path `i` of a ladder derives
@@ -41,7 +41,7 @@ fn strong_weak_section<S>(
     csv_rungs: &mut CsvWriter,
     csv_orders: &mut CsvWriter,
 ) where
-    S: ExactSolution + Sync + ?Sized,
+    S: BatchSde + ExactSolution + Sync + ?Sized,
 {
     println!("\n[{problem}] strong/weak orders ({n_paths} shared-tree paths)");
     println!(
@@ -113,7 +113,7 @@ fn gradient_section<S>(
     csv_rungs: &mut CsvWriter,
     csv_orders: &mut CsvWriter,
 ) where
-    S: SdeVjp + ExactSolution + Sync + ?Sized,
+    S: BatchSdeVjp + ExactSolution + Sync + ?Sized,
 {
     println!("\n[{problem}] gradient orders vs closed form ({n_paths} paths)");
     println!(

@@ -61,9 +61,12 @@ pub fn run(quick: bool) -> Vec<Row> {
     println!("(*amortized batch wall-clock per run — reps fan across threads)");
     // Every estimator runs through one problem definition; only the
     // SensAlg value (and the virtual-tree noise spec) changes. The reps
-    // fan across threads via sensitivity_batch, so reported time is
-    // amortized batch wall-clock per run (multi-path throughput — the
-    // quantity a traffic-serving deployment cares about).
+    // go through sensitivity_batch — the adjoint rows ride the batched
+    // SoA kernel, the taped baselines its per-path fallback — so
+    // reported time is amortized batch wall-clock per run (multi-path
+    // throughput, the quantity a traffic-serving deployment cares
+    // about). Per-path memory/NFE numbers are engine-independent
+    // (bit-identical results; see tests/batch_engine.rs).
     for &steps in steps_sweep {
         let variants: Vec<(&'static str, SensAlg, NoiseMode)> = vec![
             ("forward_pathwise", SensAlg::ForwardPathwise, NoiseMode::StoredPath),

@@ -50,9 +50,11 @@ pub fn generate(key: PrngKey, cfg: &LorenzConfig) -> TimeSeriesDataset {
         save: SaveAt::Dense,
     };
 
-    // One problem per series, each on its own Brownian stream; solved in
-    // parallel via the batch API (ground-truth generation is the
-    // dominant cost of dataset construction).
+    // One problem per series, each on its own Brownian stream; solved via
+    // the batch API, which chunks the series across threads and advances
+    // each chunk's paths together on the batched SoA kernel
+    // (ground-truth generation is the dominant cost of dataset
+    // construction).
     let probs: Vec<(Vec<f64>, PrngKey)> = (0..cfg.n_series)
         .map(|s| {
             let (kx, kw) = key.fold_in(s as u64).split();

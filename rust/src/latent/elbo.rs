@@ -29,9 +29,10 @@ use super::model::{Encoder, LatentSdeModel};
 use super::posterior::PosteriorSde;
 use crate::adjoint::BackwardSolver;
 use crate::api::SdeProblem;
+use crate::brownian::{BatchBrownian, BrownianPath};
 use crate::nn::gru::GruStepCache;
 use crate::prng::PrngKey;
-use crate::solvers::{uniform_grid, Method, SolveStats};
+use crate::solvers::{batch_grid_core, uniform_grid, BatchForwardFunc, Method, SolveStats};
 
 /// Per-step ELBO configuration.
 #[derive(Clone, Copy, Debug)]
@@ -400,6 +401,149 @@ pub fn elbo_step(
     }
 }
 
+/// Multi-sample ELBO estimate.
+#[derive(Clone, Debug)]
+pub struct MultiElboOutput {
+    /// Mean loss over samples (the S-sample Monte Carlo ELBO estimate).
+    pub loss: f64,
+    /// Mean `Σ log p(x_k | z_k)` over samples.
+    pub log_px: f64,
+    /// Mean path KL over samples.
+    pub kl_path: f64,
+    /// `KL(q(z_0) ‖ p(z_0))` — shared by all samples (one encoding).
+    pub kl_z0: f64,
+    /// Mean squared reconstruction error per observed value, over samples.
+    pub recon_mse: f64,
+    /// Per-sample losses (length `n_samples`).
+    pub per_sample_loss: Vec<f64>,
+    /// Per-sample forward solve statistics.
+    pub forward_stats: SolveStats,
+}
+
+/// S-sample ELBO *estimate* (loss components only — no gradients) on the
+/// batched SoA engine: one encoder pass, S reparameterized `z_0` draws on
+/// independent Brownian streams, and a **single batched piecewise solve**
+/// advancing all S posterior paths together per interval (batched MLP
+/// forward per stage instead of S scalar net passes).
+///
+/// Sample `s` uses `key.fold_in(s)` split into (ε-draw, Brownian) keys —
+/// independent of `n_samples`, so sample `s`'s loss is the same float in
+/// an S-sample call as in an (S+1)-sample call (pinned by tests). The
+/// single-sample *training* step (with gradients) remains
+/// [`elbo_step`]; this estimator is the cheap way to tighten evaluation
+/// ELBOs (validation curves, model comparison) by averaging S samples.
+pub fn elbo_value_multi(
+    model: &LatentSdeModel,
+    params: &[f64],
+    times: &[f64],
+    obs: &[f64],
+    key: PrngKey,
+    cfg: &ElboConfig,
+    n_samples: usize,
+) -> MultiElboOutput {
+    let dz = model.cfg.latent_dim;
+    let dx = model.cfg.obs_dim;
+    let dc = model.cfg.context_dim;
+    let n_obs = times.len();
+    assert!(n_obs >= 2, "elbo_value_multi: need at least two observations");
+    assert_eq!(obs.len(), n_obs * dx, "elbo_value_multi: obs layout mismatch");
+    assert!(n_samples > 0, "elbo_value_multi: need at least one sample");
+    let s_obs = model.cfg.obs_noise_std;
+    let beta = cfg.kl_weight;
+    let bsz = n_samples;
+
+    // ---- 1. Encode once; S reparameterized z0 draws. -----------------
+    let enc = encode(model, params, obs, n_obs);
+    let sde = PosteriorSde::new(model);
+    let n_sde = sde.sde_param_len();
+    let aug = dz + 1;
+
+    let mut y = vec![0.0; bsz * aug];
+    let mut eps = vec![0.0; dz];
+    let mut bm_sources = Vec::with_capacity(bsz);
+    for s in 0..bsz {
+        let (k_eps, k_bm) = key.fold_in(s as u64).split();
+        k_eps.fill_normal(0, &mut eps);
+        for i in 0..dz {
+            y[s * aug + i] = enc.mu0[i] + (0.5 * enc.logvar0[i]).exp() * eps[i];
+        }
+        bm_sources.push(BrownianPath::new(k_bm, aug, times[0], times[n_obs - 1]));
+    }
+    let mut bm = BatchBrownian::new(bm_sources);
+
+    // ---- 2. Batched piecewise forward solve with running KL. ---------
+    let mut theta_full = vec![0.0; n_sde + dc];
+    theta_full[..n_sde].copy_from_slice(&params[..n_sde]);
+    let mut y_obs = vec![0.0; n_obs * bsz * aug];
+    y_obs[..bsz * aug].copy_from_slice(&y);
+    let mut forward_stats = SolveStats::default();
+    let mut y_next = vec![0.0; bsz * aug];
+    for k in 1..n_obs {
+        theta_full[n_sde..].copy_from_slice(&enc.ctx[(k - 1) * dc..k * dc]);
+        let grid = uniform_grid(times[k - 1], times[k], cfg.substeps.max(1));
+        let mut sys = BatchForwardFunc::for_method(&sde, &theta_full, bsz, Method::Heun);
+        let st = batch_grid_core(&mut sys, Method::Heun, &y, &grid, &mut bm, &mut y_next);
+        forward_stats.steps += st.steps;
+        forward_stats.nfe_drift += st.nfe_drift;
+        forward_stats.nfe_diffusion += st.nfe_diffusion;
+        y.copy_from_slice(&y_next);
+        y_obs[k * bsz * aug..(k + 1) * bsz * aug].copy_from_slice(&y);
+    }
+
+    // ---- 3. Batched decoding + per-sample loss components. -----------
+    let mut dec_cache = model.decoder.batch_cache(bsz);
+    let mut z_in = vec![0.0; bsz * dz];
+    let mut xhat = vec![0.0; bsz * dx];
+    let mut log_px_s = vec![0.0; bsz];
+    let mut sq_err_s = vec![0.0; bsz];
+    for k in 0..n_obs {
+        for s in 0..bsz {
+            z_in[s * dz..(s + 1) * dz]
+                .copy_from_slice(&y_obs[(k * bsz + s) * aug..(k * bsz + s) * aug + dz]);
+        }
+        model.decoder.forward_batch(params, &z_in, &mut dec_cache, &mut xhat);
+        let x_k = &obs[k * dx..(k + 1) * dx];
+        for s in 0..bsz {
+            let xh = &xhat[s * dx..(s + 1) * dx];
+            log_px_s[s] += gaussian_logpdf(x_k, xh, s_obs);
+            sq_err_s[s] += x_k.iter().zip(xh).map(|(a, b)| (a - b) * (a - b)).sum::<f64>();
+        }
+    }
+
+    // KL(q(z0) || p(z0)) — one encoding, shared across samples.
+    let mu_p = &params[model.pz0_mean_off..model.pz0_mean_off + dz];
+    let lv_p = &params[model.pz0_logvar_off..model.pz0_logvar_off + dz];
+    let mut kl_z0 = 0.0;
+    for i in 0..dz {
+        let var_q = enc.logvar0[i].exp();
+        let var_p = lv_p[i].exp();
+        let dmu = enc.mu0[i] - mu_p[i];
+        kl_z0 += 0.5 * (lv_p[i] - enc.logvar0[i] + (var_q + dmu * dmu) / var_p - 1.0);
+    }
+
+    let mut per_sample_loss = vec![0.0; bsz];
+    let (mut loss, mut log_px, mut kl_path, mut recon_mse) = (0.0, 0.0, 0.0, 0.0);
+    for s in 0..bsz {
+        let kl_s = y_obs[((n_obs - 1) * bsz + s) * aug + dz];
+        let l = -log_px_s[s] + beta * (kl_s + kl_z0);
+        per_sample_loss[s] = l;
+        loss += l;
+        log_px += log_px_s[s];
+        kl_path += kl_s;
+        recon_mse += sq_err_s[s] / (n_obs * dx) as f64;
+    }
+    let inv = 1.0 / bsz as f64;
+    MultiElboOutput {
+        loss: loss * inv,
+        log_px: log_px * inv,
+        kl_path: kl_path * inv,
+        kl_z0,
+        recon_mse: recon_mse * inv,
+        per_sample_loss,
+        forward_stats,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -543,6 +687,28 @@ mod tests {
                 "param {j}: fd {fd:.6} vs adjoint {g:.6}"
             );
         }
+    }
+
+    /// Sample s's loss must not depend on how many other samples ride in
+    /// the batch (per-sample keys are `key.fold_in(s)`, and the batched
+    /// kernel computes each path's floats independently).
+    #[test]
+    fn multi_sample_elbo_is_batch_size_independent() {
+        let model = LatentSdeModel::new(tiny_cfg());
+        let params = model.init_params(PrngKey::from_seed(50));
+        let (times, obs) = toy_sequence(5, 2, 51);
+        let key = PrngKey::from_seed(52);
+        let cfg = ElboConfig { substeps: 6, kl_weight: 0.8 };
+
+        let one = elbo_value_multi(&model, &params, &times, &obs, key, &cfg, 1);
+        let four = elbo_value_multi(&model, &params, &times, &obs, key, &cfg, 4);
+        assert_eq!(one.per_sample_loss[0], four.per_sample_loss[0]);
+        assert!(four.per_sample_loss.windows(2).any(|w| w[0] != w[1]), "samples must differ");
+        assert!(four.loss.is_finite());
+        assert!(four.kl_path >= 0.0);
+        let mean: f64 =
+            four.per_sample_loss.iter().sum::<f64>() / four.per_sample_loss.len() as f64;
+        assert!((four.loss - mean).abs() < 1e-12);
     }
 
     #[test]

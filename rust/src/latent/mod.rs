@@ -25,6 +25,8 @@
 //!   interval-by-interval stochastic adjoint → encoder/decoder backprop →
 //!   one flat gradient. Setting `DiffusionMode::Off` recovers the latent
 //!   ODE baseline of Table 2 (zero diffusion, zero path-KL, ODE adjoint).
+//!   [`elbo_value_multi`] computes S-sample ELBO estimates on the batched
+//!   SoA engine (all S posterior paths advance together per interval).
 //! * [`sample`] — prior/posterior path sampling for Figures 6/8/9.
 
 pub mod elbo;
@@ -32,7 +34,7 @@ pub mod model;
 pub mod posterior;
 pub mod sample;
 
-pub use elbo::{elbo_step, ElboConfig, ElboOutput};
+pub use elbo::{elbo_step, elbo_value_multi, ElboConfig, ElboOutput, MultiElboOutput};
 pub use model::{DiffusionMode, EncoderKind, LatentSdeConfig, LatentSdeModel};
 pub use posterior::PosteriorSde;
 pub use sample::{decode_path, sample_posterior_path, sample_prior_path};

@@ -21,8 +21,8 @@
 use std::cell::RefCell;
 
 use super::model::{DiffusionMode, LatentSdeModel};
-use crate::nn::MlpCache;
-use crate::sde::{Calculus, Sde, SdeVjp};
+use crate::nn::{MlpBatchCache, MlpCache};
+use crate::sde::{BatchSde, BatchSdeVjp, Calculus, Sde, SdeVjp};
 
 /// Scratch buffers + forward caches (interior-mutable: the `Sde` trait is
 /// `&self`, and each `PosteriorSde` is used by one solver at a time).
@@ -41,6 +41,23 @@ struct Scratch {
     dx_prior: Vec<f64>,
 }
 
+/// Batched scratch: `[B×·]` net inputs/outputs and batch MLP caches,
+/// (re)allocated only when the batch size changes.
+struct BatchScratch {
+    batch: usize,
+    post_in: Vec<f64>,
+    prior_in: Vec<f64>,
+    post_cache: MlpBatchCache,
+    prior_cache: MlpBatchCache,
+    diff_caches: Vec<MlpBatchCache>,
+    diff_in: Vec<f64>,
+    diff_out: Vec<f64>,
+    h_post: Vec<f64>,
+    h_prior: Vec<f64>,
+    sig: Vec<f64>,
+    u: Vec<f64>,
+}
+
 /// The latent posterior SDE with running-KL augmentation.
 pub struct PosteriorSde<'a> {
     model: &'a LatentSdeModel,
@@ -53,6 +70,7 @@ pub struct PosteriorSde<'a> {
     /// O(p)-per-step quadrature (EXPERIMENTS.md §Perf).
     sde_len: usize,
     scratch: RefCell<Scratch>,
+    batch_scratch: RefCell<Option<BatchScratch>>,
 }
 
 impl<'a> PosteriorSde<'a> {
@@ -77,7 +95,69 @@ impl<'a> PosteriorSde<'a> {
             dx_post: vec![0.0; dz + 1 + dc],
             dx_prior: vec![0.0; dz + 1],
         };
-        PosteriorSde { model, sde_len, scratch: RefCell::new(scratch) }
+        PosteriorSde {
+            model,
+            sde_len,
+            scratch: RefCell::new(scratch),
+            batch_scratch: RefCell::new(None),
+        }
+    }
+
+    /// Get (allocating or resizing on demand) the batched scratch for a
+    /// batch of `bsz` paths.
+    fn ensure_batch_scratch(&self, bsz: usize) -> std::cell::RefMut<'_, BatchScratch> {
+        let dz = self.dz();
+        let dc = self.model.cfg.context_dim;
+        let mut cell = self.batch_scratch.borrow_mut();
+        let stale = match cell.as_ref() {
+            Some(sc) => sc.batch != bsz,
+            None => true,
+        };
+        if stale {
+            *cell = Some(BatchScratch {
+                batch: bsz,
+                post_in: vec![0.0; bsz * (dz + 1 + dc)],
+                prior_in: vec![0.0; bsz * (dz + 1)],
+                post_cache: self.model.post_drift.batch_cache(bsz),
+                prior_cache: self.model.prior_drift.batch_cache(bsz),
+                diff_caches: self.model.diffusion.iter().map(|m| m.batch_cache(bsz)).collect(),
+                diff_in: vec![0.0; bsz],
+                diff_out: vec![0.0; bsz],
+                h_post: vec![0.0; bsz * dz],
+                h_prior: vec![0.0; bsz * dz],
+                sig: vec![0.0; bsz * dz],
+                u: vec![0.0; bsz * dz],
+            });
+        }
+        std::cell::RefMut::map(cell, |o| o.as_mut().expect("just ensured"))
+    }
+
+    /// Batched σ into `sc.sig` (`[B×dz]`): per dimension, one `[B×1]`
+    /// forward through that dimension's net — weight rows hot across all
+    /// B paths. Values per `(b, i)` cell match the scalar `eval_sigma`.
+    fn eval_sigma_batch(&self, params: &[f64], y: &[f64], aug: usize, sc: &mut BatchScratch) {
+        let dz = self.dz();
+        let bsz = sc.batch;
+        match self.model.cfg.diffusion {
+            DiffusionMode::Off => sc.sig.fill(0.0),
+            DiffusionMode::PerDimNets { floor, scale } => {
+                for i in 0..dz {
+                    for b in 0..bsz {
+                        sc.diff_in[b] = y[b * aug + i];
+                    }
+                    let BatchScratch { diff_in, diff_out, diff_caches, .. } = sc;
+                    self.model.diffusion[i].forward_batch(
+                        params,
+                        diff_in,
+                        &mut diff_caches[i],
+                        diff_out,
+                    );
+                    for b in 0..bsz {
+                        sc.sig[b * dz + i] = floor + scale * sc.diff_out[b];
+                    }
+                }
+            }
+        }
     }
 
     /// Length of the SDE-relevant parameter prefix (excludes context).
@@ -344,6 +424,78 @@ impl<'a> SdeVjp for PosteriorSde<'a> {
     }
 }
 
+/// Hand-batched forward evaluation: the MLP passes become blocked
+/// `[B×in]·[in×out]` matrix–matrix products via
+/// [`crate::nn::Mlp::forward_batch`], reusing one batch cache arena —
+/// this is the latent-SDE hot path the batch engine exists for. Per-path
+/// values are bit-identical to the scalar [`Sde`] impl (same per-cell
+/// accumulation order throughout).
+impl<'a> BatchSde for PosteriorSde<'a> {
+    fn drift_batch(&self, t: f64, y: &[f64], theta: &[f64], out: &mut [f64]) {
+        let dz = self.dz();
+        let aug = dz + 1;
+        let bsz = y.len() / aug;
+        let (params, ctx) = self.split_theta(theta);
+        let with_u = self.diffusing();
+        let mut sc = self.ensure_batch_scratch(bsz);
+        let sc = &mut *sc;
+
+        let din = dz + 1 + ctx.len();
+        for b in 0..bsz {
+            let row = &mut sc.post_in[b * din..(b + 1) * din];
+            row[..dz].copy_from_slice(&y[b * aug..b * aug + dz]);
+            row[dz] = t;
+            row[dz + 1..].copy_from_slice(ctx);
+        }
+        {
+            let BatchScratch { post_in, post_cache, h_post, .. } = sc;
+            self.model.post_drift.forward_batch(params, post_in, post_cache, h_post);
+        }
+        if with_u {
+            for b in 0..bsz {
+                let row = &mut sc.prior_in[b * (dz + 1)..(b + 1) * (dz + 1)];
+                row[..dz].copy_from_slice(&y[b * aug..b * aug + dz]);
+                row[dz] = t;
+            }
+            {
+                let BatchScratch { prior_in, prior_cache, h_prior, .. } = sc;
+                self.model.prior_drift.forward_batch(params, prior_in, prior_cache, h_prior);
+            }
+            self.eval_sigma_batch(params, y, aug, sc);
+            for i in 0..bsz * dz {
+                sc.u[i] = (sc.h_post[i] - sc.h_prior[i]) / sc.sig[i];
+            }
+        }
+        for b in 0..bsz {
+            out[b * aug..b * aug + dz].copy_from_slice(&sc.h_post[b * dz..(b + 1) * dz]);
+            out[b * aug + dz] = if with_u {
+                0.5 * sc.u[b * dz..(b + 1) * dz].iter().map(|v| v * v).sum::<f64>()
+            } else {
+                0.0
+            };
+        }
+    }
+
+    fn diffusion_batch(&self, _t: f64, y: &[f64], theta: &[f64], out: &mut [f64]) {
+        let dz = self.dz();
+        let aug = dz + 1;
+        let bsz = y.len() / aug;
+        let (params, _) = self.split_theta(theta);
+        let mut sc = self.ensure_batch_scratch(bsz);
+        let sc = &mut *sc;
+        self.eval_sigma_batch(params, y, aug, sc);
+        for b in 0..bsz {
+            out[b * aug..b * aug + dz].copy_from_slice(&sc.sig[b * dz..(b + 1) * dz]);
+            out[b * aug + dz] = 0.0;
+        }
+    }
+}
+
+// VJPs ride the loop-based defaults (the scalar VJPs already reuse the
+// per-instance scratch); the solve-side forward passes above are where
+// batching pays in the latent workload (B ELBO samples per step).
+impl<'a> BatchSdeVjp for PosteriorSde<'a> {}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -492,6 +644,35 @@ mod tests {
             assert!((fd - diag[i]).abs() < 1e-6, "diag[{i}]");
         }
         assert_eq!(diag[3], 0.0);
+    }
+
+    /// The hand-batched MLP-backed kernels must equal the scalar `Sde`
+    /// impl row-for-row, exactly.
+    #[test]
+    fn batched_drift_and_diffusion_match_scalar_rows_exactly() {
+        use crate::sde::BatchSde;
+        let model = tiny_model();
+        let th = theta_full(&model, 6);
+        let sys = PosteriorSde::new(&model);
+        let aug = sys.state_dim();
+        let bsz = 4;
+        let mut y = vec![0.0; bsz * aug];
+        PrngKey::from_seed(7).fill_normal(0, &mut y);
+        let t = 0.2;
+
+        let mut drift_b = vec![0.0; bsz * aug];
+        sys.drift_batch(t, &y, &th, &mut drift_b);
+        let mut diff_b = vec![0.0; bsz * aug];
+        sys.diffusion_batch(t, &y, &th, &mut diff_b);
+
+        for b in 0..bsz {
+            let row = &y[b * aug..(b + 1) * aug];
+            let mut out = vec![0.0; aug];
+            sys.drift(t, row, &th, &mut out);
+            assert_eq!(&drift_b[b * aug..(b + 1) * aug], &out[..], "drift row {b}");
+            sys.diffusion(t, row, &th, &mut out);
+            assert_eq!(&diff_b[b * aug..(b + 1) * aug], &out[..], "diffusion row {b}");
+        }
     }
 
     #[test]

@@ -42,11 +42,47 @@
 //! Swap `SensAlg::StochasticAdjoint(..)` for `SensAlg::Backprop { .. }`,
 //! `SensAlg::ForwardPathwise`, or `SensAlg::Antithetic { .. }` to change
 //! the estimator; set `.noise(NoiseSpec::VirtualTree { tol })` for the
-//! paper's O(1)-memory noise source; use [`api::solve_batch`] /
-//! [`api::sensitivity_batch`] for thread-parallel multi-path throughput.
-//! The pre-0.2 free functions (`integrate_grid`,
-//! `stochastic_adjoint_gradients`, …) remain as `#[deprecated]` shims
-//! with bit-identical results.
+//! paper's O(1)-memory noise source. (The pre-0.2 deprecated free
+//! functions were removed in 0.3; CHANGES.md has the migration table.)
+//!
+//! ## Batched Monte Carlo: the SoA execution engine
+//!
+//! Multi-path workloads go through [`api::solve_batch`] /
+//! [`api::sensitivity_batch`], which run on a **batched
+//! structure-of-arrays engine**: the batch is chunked across a scoped
+//! thread pool and each chunk's paths advance *together* through batched
+//! solver steps, batched Brownian sampling
+//! ([`brownian::BatchBrownian::fill_increments`]), and a batched
+//! augmented adjoint — over contiguous `[B×d]` buffers with zero heap
+//! allocation per step. For `nn`-backed SDEs the per-step MLP passes
+//! become blocked matrix–matrix products ([`nn::Mlp::forward_batch`]).
+//! Results are bit-identical to per-path sequential execution for any
+//! batch size and thread count (`tests/batch_engine.rs`), and
+//! `sdegrad bench throughput` measures the speedup (paths/sec and
+//! grad-paths/sec, scalar vs batched engine → `BENCH_throughput.json`).
+//!
+//! ```no_run
+//! use sdegrad::prelude::*;
+//! use sdegrad::sde::problems::Example1;
+//! use sdegrad::sde::ReplicatedSde;
+//!
+//! let sde = ReplicatedSde::new(Example1, 10);
+//! let prob = SdeProblem::new(&sde, &vec![1.0; 10], (0.0, 1.0))
+//!     .params(&vec![0.5; 20]);
+//! // 4096 paths, batched per chunk across threads, one call:
+//! let sols = solve_batch(
+//!     &prob.replicates(PrngKey::from_seed(7), 4096),
+//!     &SolveOptions::fixed(Method::MilsteinIto, 1000),
+//! );
+//! let mean: f64 =
+//!     sols.iter().map(|s| s.final_state()[0]).sum::<f64>() / sols.len() as f64;
+//! # let _ = mean;
+//! ```
+//!
+//! Custom systems opt in with one line each — `impl BatchSde for MySde {}`
+//! (and `impl BatchSdeVjp for MySde {}` for gradients) — inheriting
+//! loop-based batch kernels that can be overridden with hand-batched ones
+//! where structure allows (see [`sde::batch`]).
 //!
 //! ## Verified convergence orders
 //!
@@ -94,9 +130,11 @@ pub mod prelude {
         sensitivity_batch, solve_batch, GradStats, Gradients, NoiseSpec, ProblemError, SaveAt,
         SdeProblem, SdeSolution, SensAlg, SolveOptions, StepControl,
     };
-    pub use crate::brownian::{BrownianMotion, BrownianPath, VirtualBrownianTree};
+    pub use crate::brownian::{BatchBrownian, BrownianMotion, BrownianPath, VirtualBrownianTree};
     pub use crate::prng::PrngKey;
-    pub use crate::sde::{Calculus, ExactSolution, ReplicatedSde, Sde, SdeVjp};
+    pub use crate::sde::{
+        BatchSde, BatchSdeVjp, Calculus, ExactSolution, ReplicatedSde, Sde, SdeVjp,
+    };
     pub use crate::solvers::{AdaptiveConfig, Method, SolveStats};
 }
 

@@ -3,6 +3,7 @@
 //! Subcommands:
 //! * `train`            train a latent SDE on a built-in dataset
 //! * `repro <id>`       regenerate a paper table/figure (`--quick` trims)
+//! * `bench <id>`       performance harnesses (`throughput` → BENCH_*.json)
 //! * `artifacts-check`  compile + smoke-run every AOT artifact
 //! * `list`             show datasets / experiments / artifacts
 //!
@@ -24,6 +25,7 @@ USAGE:
                   [--batch N] [--lr F] [--kl F] [--substeps N] [--seed N]
                   [--workers N] [--out checkpoint.bin] [--log train.csv]
     sdegrad repro <table1|fig2|fig5|fig6|fig9|table2|convergence|all> [--quick]
+    sdegrad bench <throughput> [--quick]
     sdegrad artifacts-check [--dir artifacts]
     sdegrad list",
         sdegrad::version()
@@ -38,6 +40,7 @@ fn main() {
     match cmd.as_str() {
         "train" => cmd_train(rest),
         "repro" => cmd_repro(rest),
+        "bench" => cmd_bench(rest),
         "artifacts-check" => cmd_artifacts_check(rest),
         "list" => cmd_list(),
         "--version" | "-V" => println!("sdegrad {}", sdegrad::version()),
@@ -190,6 +193,21 @@ fn cmd_repro(rest: &[String]) {
     }
 }
 
+fn cmd_bench(rest: &[String]) {
+    let map = parse_args(rest);
+    let quick = map.contains_key("quick");
+    let which = rest.first().map(|s| s.as_str()).unwrap_or("throughput");
+    match which {
+        "throughput" => {
+            sdegrad::coordinator::bench::run_throughput(quick);
+        }
+        other => {
+            eprintln!("unknown bench {other}");
+            usage()
+        }
+    }
+}
+
 fn cmd_artifacts_check(rest: &[String]) {
     let map = parse_args(rest);
     let dir = map.get("dir").cloned().unwrap_or_else(|| "artifacts".into());
@@ -241,5 +259,6 @@ fn cmd_list() {
         "experiments:  table1, fig2, fig5 (incl. fig7), fig6 (incl. fig8), fig9, table2, \
          convergence"
     );
+    println!("benches:      throughput (BENCH_throughput.json)");
     println!("artifacts:    see `sdegrad artifacts-check`");
 }

@@ -69,6 +69,80 @@ impl Linear {
     pub fn param_count(&self) -> usize {
         self.in_dim * self.out_dim + self.out_dim
     }
+
+    /// Batched forward: `out[b] = W x[b] + b` for B rows at once
+    /// (`x: [B×in]`, `out: [B×out]`, row-major).
+    ///
+    /// Blocked matrix–matrix walk: the outer loop is over output rows so
+    /// each weight row `W[o,·]` is loaded once and swept across all B
+    /// input rows — the cache win batching exists for. Per `(b, o)` cell
+    /// the accumulation is the scalar [`Linear::forward`] loop verbatim
+    /// (bias first, then `i = 0..in` in order), so batched outputs are
+    /// bit-identical to B scalar calls.
+    pub fn forward_batch(&self, params: &[f64], x: &[f64], out: &mut [f64]) {
+        let (ni, no) = (self.in_dim, self.out_dim);
+        let bsz = x.len() / ni;
+        debug_assert_eq!(x.len(), bsz * ni);
+        debug_assert_eq!(out.len(), bsz * no);
+        let w = &params[self.w_off..self.w_off + ni * no];
+        let b_vec = &params[self.b_off..self.b_off + no];
+        for o in 0..no {
+            let row = &w[o * ni..(o + 1) * ni];
+            let bias = b_vec[o];
+            for b in 0..bsz {
+                let xr = &x[b * ni..(b + 1) * ni];
+                let mut acc = bias;
+                for i in 0..ni {
+                    acc += row[i] * xr[i];
+                }
+                out[b * no + o] = acc;
+            }
+        }
+    }
+
+    /// Batched accumulating VJP over B rows: given `dy: [B×out]`, adds
+    /// `Wᵀ dy[b]` into `dx[b]` and the per-path parameter gradients into
+    /// `dparams[b*pstride ..]` (each path owns a full parameter-gradient
+    /// block of stride `pstride`; offsets within a block match the scalar
+    /// layout).
+    ///
+    /// Same weight-row blocking as [`Linear::forward_batch`]; per path the
+    /// update order over `(o, i)` is the scalar [`Linear::vjp`]'s, so
+    /// results are bit-identical to B scalar calls.
+    pub fn vjp_batch(
+        &self,
+        params: &[f64],
+        x: &[f64],
+        dy: &[f64],
+        dx: &mut [f64],
+        dparams: &mut [f64],
+        pstride: usize,
+    ) {
+        let (ni, no) = (self.in_dim, self.out_dim);
+        let bsz = x.len() / ni;
+        debug_assert_eq!(dy.len(), bsz * no);
+        debug_assert_eq!(dx.len(), bsz * ni);
+        debug_assert_eq!(dparams.len(), bsz * pstride);
+        let w = &params[self.w_off..self.w_off + ni * no];
+        for o in 0..no {
+            let row = &w[o * ni..(o + 1) * ni];
+            for b in 0..bsz {
+                let g = dy[b * no + o];
+                if g == 0.0 {
+                    continue;
+                }
+                let xr = &x[b * ni..(b + 1) * ni];
+                let dxr = &mut dx[b * ni..(b + 1) * ni];
+                let blk = &mut dparams[b * pstride..(b + 1) * pstride];
+                let dw_row = &mut blk[self.w_off + o * ni..self.w_off + (o + 1) * ni];
+                for i in 0..ni {
+                    dxr[i] += row[i] * g;
+                    dw_row[i] += xr[i] * g;
+                }
+                blk[self.b_off + o] += g;
+            }
+        }
+    }
 }
 
 #[cfg(test)]

@@ -137,6 +137,119 @@ impl Mlp {
     pub fn param_count(&self) -> usize {
         self.layers.iter().map(|l| l.param_count()).sum()
     }
+
+    /// Allocate a batched cache for B rows.
+    pub fn batch_cache(&self, batch: usize) -> MlpBatchCache {
+        assert!(batch > 0, "batch_cache: empty batch");
+        let mut pre = Vec::with_capacity(self.layers.len());
+        let mut act = Vec::with_capacity(self.layers.len() + 1);
+        act.push(vec![0.0; batch * self.in_dim()]);
+        let mut widest = 0;
+        for l in &self.layers {
+            pre.push(vec![0.0; batch * l.out_dim]);
+            act.push(vec![0.0; batch * l.out_dim]);
+            widest = widest.max(l.out_dim).max(l.in_dim);
+        }
+        MlpBatchCache {
+            pre,
+            act,
+            delta: vec![0.0; batch * widest],
+            delta_next: vec![0.0; batch * widest],
+            batch,
+        }
+    }
+
+    /// Batched forward over B input rows (`x: [B×in]`, `out: [B×out]`):
+    /// one blocked matrix–matrix pass per layer via
+    /// [`Linear::forward_batch`] instead of B matrix–vector passes, with
+    /// activations applied elementwise. Per row, bit-identical to
+    /// [`Mlp::forward`].
+    pub fn forward_batch(
+        &self,
+        params: &[f64],
+        x: &[f64],
+        cache: &mut MlpBatchCache,
+        out: &mut [f64],
+    ) {
+        debug_assert_eq!(x.len(), cache.batch * self.in_dim());
+        cache.act[0].copy_from_slice(x);
+        let n = self.layers.len();
+        for (l, lin) in self.layers.iter().enumerate() {
+            let (lo, hi) = cache.act.split_at_mut(l + 1);
+            lin.forward_batch(params, &lo[l], &mut cache.pre[l]);
+            let act = if l + 1 == n { self.output_act } else { self.hidden_act };
+            for (&pre_v, slot) in cache.pre[l].iter().zip(hi[0].iter_mut()) {
+                *slot = act.apply(pre_v);
+            }
+        }
+        out.copy_from_slice(cache.act.last().unwrap());
+    }
+
+    /// Batched accumulating VJP following a [`Mlp::forward_batch`] with
+    /// the same inputs: given `dy: [B×out]`, adds `∂L_b/∂x_b` into
+    /// `dx[b]` and each path's parameter gradients into
+    /// `dparams[b*pstride ..]` (per-path blocks, scalar offsets within).
+    /// Per row, bit-identical to [`Mlp::vjp`].
+    pub fn vjp_batch(
+        &self,
+        params: &[f64],
+        cache: &mut MlpBatchCache,
+        dy: &[f64],
+        dx: &mut [f64],
+        dparams: &mut [f64],
+        pstride: usize,
+    ) {
+        let n = self.layers.len();
+        let bsz = cache.batch;
+        let no = self.out_dim();
+        // delta = dy ⊙ act'(pre) of the output layer, all rows.
+        {
+            let dlt = &mut cache.delta[..bsz * no];
+            for (i, slot) in dlt.iter_mut().enumerate() {
+                let pre = cache.pre[n - 1][i];
+                let act = cache.act[n][i];
+                *slot = dy[i] * self.output_act.grad(pre, act);
+            }
+        }
+        for l in (0..n).rev() {
+            let lin = &self.layers[l];
+            let dlt_len = bsz * lin.out_dim;
+            if l == 0 {
+                let delta = &cache.delta[..dlt_len];
+                lin.vjp_batch(params, &cache.act[0], delta, dx, dparams, pstride);
+            } else {
+                let MlpBatchCache { pre, act, delta, delta_next, .. } = cache;
+                let dnx = &mut delta_next[..bsz * lin.in_dim];
+                dnx.fill(0.0);
+                lin.vjp_batch(params, &act[l], &delta[..dlt_len], dnx, dparams, pstride);
+                // delta ← dnext ⊙ act'(pre[l-1]), all rows.
+                for i in 0..bsz * lin.in_dim {
+                    let p = pre[l - 1][i];
+                    let a = act[l][i];
+                    delta[i] = dnx[i] * self.hidden_act.grad(p, a);
+                }
+            }
+        }
+    }
+}
+
+/// Batched forward-pass cache: per-layer `[B×width]` pre-activation and
+/// activation matrices plus backward-stage scratch — the batch analogue
+/// of [`MlpCache`], allocated once per solve and reused every step.
+#[derive(Clone, Debug)]
+pub struct MlpBatchCache {
+    pre: Vec<Vec<f64>>,
+    act: Vec<Vec<f64>>,
+    delta: Vec<f64>,
+    delta_next: Vec<f64>,
+    batch: usize,
+}
+
+impl MlpBatchCache {
+    /// Batch size B this cache was allocated for.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
 }
 
 #[cfg(test)]
@@ -217,6 +330,52 @@ mod tests {
     #[test]
     fn linear_model_no_hidden() {
         fd_check(&[5, 2], Activation::Tanh, Activation::Identity, 13);
+    }
+
+    /// Batched forward/VJP must equal B scalar passes bit-for-bit — the
+    /// guarantee that lets nn-backed SDEs ride the batch engine without
+    /// changing any float.
+    #[test]
+    fn batched_forward_and_vjp_match_scalar_rows_exactly() {
+        for (sizes, hidden, output) in [
+            (&[3usize, 16, 2][..], Activation::Softplus, Activation::Identity),
+            (&[1, 8, 1][..], Activation::Softplus, Activation::Sigmoid),
+            (&[4, 8, 8, 3][..], Activation::Tanh, Activation::Identity),
+        ] {
+            let mut pb = ParamBuilder::new();
+            let mlp = Mlp::new(&mut pb, sizes, hidden, output);
+            let params = pb.init(PrngKey::from_seed(40));
+            let (ni, no) = (mlp.in_dim(), mlp.out_dim());
+            let bsz = 5;
+            let key = PrngKey::from_seed(41);
+            let mut x = vec![0.0; bsz * ni];
+            key.fill_normal(0, &mut x);
+            let mut dy = vec![0.0; bsz * no];
+            key.fill_normal(500, &mut dy);
+
+            let mut bcache = mlp.batch_cache(bsz);
+            let mut out_b = vec![0.0; bsz * no];
+            mlp.forward_batch(&params, &x, &mut bcache, &mut out_b);
+            let mut dx_b = vec![0.0; bsz * ni];
+            let mut dp_b = vec![0.0; bsz * params.len()];
+            mlp.vjp_batch(&params, &mut bcache, &dy, &mut dx_b, &mut dp_b, params.len());
+
+            for b in 0..bsz {
+                let mut cache = mlp.cache();
+                let mut out = vec![0.0; no];
+                mlp.forward(&params, &x[b * ni..(b + 1) * ni], &mut cache, &mut out);
+                assert_eq!(&out_b[b * no..(b + 1) * no], &out[..], "{sizes:?} fwd row {b}");
+                let mut dx = vec![0.0; ni];
+                let mut dp = vec![0.0; params.len()];
+                mlp.vjp(&params, &mut cache, &dy[b * no..(b + 1) * no], &mut dx, &mut dp);
+                assert_eq!(&dx_b[b * ni..(b + 1) * ni], &dx[..], "{sizes:?} dx row {b}");
+                assert_eq!(
+                    &dp_b[b * params.len()..(b + 1) * params.len()],
+                    &dp[..],
+                    "{sizes:?} dparams row {b}"
+                );
+            }
+        }
     }
 
     #[test]

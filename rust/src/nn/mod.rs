@@ -23,5 +23,5 @@ pub mod params;
 pub use activation::Activation;
 pub use gru::GruCell;
 pub use linear::Linear;
-pub use mlp::{Mlp, MlpCache};
+pub use mlp::{Mlp, MlpBatchCache, MlpCache};
 pub use params::ParamBuilder;

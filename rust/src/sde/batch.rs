@@ -1,0 +1,282 @@
+//! Batched structure-of-arrays (SoA) SDE evaluation.
+//!
+//! The scalar [`Sde`]/[`SdeVjp`] traits work on one state vector of length
+//! `d` at a time, which makes every Monte Carlo workload pay B virtual
+//! calls (and B passes over the parameter vector) per solver stage. The
+//! batch traits below evaluate **B sample paths at once** over contiguous
+//! row-major `[B×d]` buffers: path `b` occupies `buf[b*d .. (b+1)*d]`.
+//!
+//! Two-level design:
+//!
+//! * **Loop-based defaults.** Every method has a default body that chunks
+//!   the `[B×d]` buffers into rows and calls the scalar trait method per
+//!   row. Because the per-row arithmetic is *exactly* the scalar
+//!   engine's, results are bit-identical to a per-path loop — the batch
+//!   engine can therefore replace the scalar one without changing a
+//!   single float (pinned by `tests/batch_engine.rs`).
+//! * **Hand-batched overrides.** Systems with structure override the
+//!   defaults: [`super::ReplicatedSde`] hoists the per-dimension
+//!   parameter slicing out of the path loop, and the `nn`-backed
+//!   [`crate::latent::PosteriorSde`] turns B matrix–vector MLP passes
+//!   into one blocked `[B×in]·[in×out]` pass that keeps each weight row
+//!   hot across all B paths. Overrides must preserve the per-path float
+//!   sequence (same additions in the same order) so the bit-identity
+//!   guarantee survives.
+//!
+//! All paths share one parameter vector θ and one evaluation time `t`
+//! (the batch engine is for replicates of a single problem over
+//! independent Brownian paths — see [`crate::api::solve_batch`]); only
+//! state, noise, and adjoint rows vary per path.
+
+use super::traits::{Sde, SdeVjp};
+
+/// Batched evaluation of an [`Sde`] over `[B×d]` state buffers.
+///
+/// Implement with `impl BatchSde for MySde {}` to get the loop-based
+/// defaults; override individual methods for hand-batched kernels. The
+/// batch size is implied by the buffer lengths (`z.len() / state_dim`).
+pub trait BatchSde: Sde {
+    /// Drift of every path: `out[b] = b(z[b], t, θ)` for each row.
+    fn drift_batch(&self, t: f64, z: &[f64], theta: &[f64], out: &mut [f64]) {
+        let d = self.state_dim();
+        debug_assert_eq!(z.len(), out.len());
+        for (zr, or) in z.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+            self.drift(t, zr, theta, or);
+        }
+    }
+
+    /// Diagonal diffusion of every path.
+    fn diffusion_batch(&self, t: f64, z: &[f64], theta: &[f64], out: &mut [f64]) {
+        let d = self.state_dim();
+        debug_assert_eq!(z.len(), out.len());
+        for (zr, or) in z.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+            self.diffusion(t, zr, theta, or);
+        }
+    }
+
+    /// `∂σ_i/∂z_i` of every path (Milstein schemes, Itô↔Stratonovich
+    /// conversion).
+    fn diffusion_dz_diag_batch(&self, t: f64, z: &[f64], theta: &[f64], out: &mut [f64]) {
+        let d = self.state_dim();
+        debug_assert_eq!(z.len(), out.len());
+        for (zr, or) in z.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+            self.diffusion_dz_diag(t, zr, theta, or);
+        }
+    }
+
+    /// Stratonovich drift of every path. `scratch` must hold at least
+    /// `2·d` floats (row-level σ/σ′ staging, reused across rows).
+    fn drift_stratonovich_batch(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        out: &mut [f64],
+        scratch: &mut [f64],
+    ) {
+        let d = self.state_dim();
+        debug_assert_eq!(z.len(), out.len());
+        for (zr, or) in z.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+            self.drift_stratonovich(t, zr, theta, or, scratch);
+        }
+    }
+}
+
+/// Batched vector-Jacobian products for the batched stochastic adjoint.
+///
+/// Adjoint rows `a` are `[B×d]`; the parameter-side outputs are **per
+/// path** (`[B×p]`, row `b` accumulating path `b`'s `aᵀ∂·/∂θ`) so each
+/// path's gradient stays independent, exactly as B scalar adjoint solves
+/// would produce. All VJPs accumulate into their outputs, mirroring the
+/// scalar [`SdeVjp`] convention.
+pub trait BatchSdeVjp: BatchSde + SdeVjp {
+    /// Accumulate `a[b]ᵀ∂b/∂z → out_z[b]` and `a[b]ᵀ∂b/∂θ → out_theta[b]`
+    /// for every path.
+    fn drift_vjp_batch(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+    ) {
+        let d = self.state_dim();
+        let p = self.param_dim();
+        let bsz = z.len() / d;
+        for b in 0..bsz {
+            self.drift_vjp(
+                t,
+                &z[b * d..(b + 1) * d],
+                theta,
+                &a[b * d..(b + 1) * d],
+                &mut out_z[b * d..(b + 1) * d],
+                &mut out_theta[b * p..(b + 1) * p],
+            );
+        }
+    }
+
+    /// Accumulate `a[b]ᵀ∂σ/∂z` and `a[b]ᵀ∂σ/∂θ` for every path.
+    fn diffusion_vjp_batch(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+    ) {
+        let d = self.state_dim();
+        let p = self.param_dim();
+        let bsz = z.len() / d;
+        for b in 0..bsz {
+            self.diffusion_vjp(
+                t,
+                &z[b * d..(b + 1) * d],
+                theta,
+                &a[b * d..(b + 1) * d],
+                &mut out_z[b * d..(b + 1) * d],
+                &mut out_theta[b * p..(b + 1) * p],
+            );
+        }
+    }
+
+    /// Accumulate the Itô→Stratonovich correction VJP for every path.
+    /// Panics (like the scalar default) when the system does not provide
+    /// [`SdeVjp::ito_correction_vjp`]; the problem API validates this
+    /// before integrating.
+    fn ito_correction_vjp_batch(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+    ) {
+        let d = self.state_dim();
+        let p = self.param_dim();
+        let bsz = z.len() / d;
+        for b in 0..bsz {
+            self.ito_correction_vjp(
+                t,
+                &z[b * d..(b + 1) * d],
+                theta,
+                &a[b * d..(b + 1) * d],
+                &mut out_z[b * d..(b + 1) * d],
+                &mut out_theta[b * p..(b + 1) * p],
+            );
+        }
+    }
+
+    /// Accumulate the Stratonovich-form drift VJP for every path.
+    /// `scratch` must hold at least `d` floats (row-level sign-flip
+    /// staging, reused across rows).
+    #[allow(clippy::too_many_arguments)]
+    fn drift_vjp_stratonovich_batch(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+        scratch: &mut [f64],
+    ) {
+        let d = self.state_dim();
+        let p = self.param_dim();
+        let bsz = z.len() / d;
+        for b in 0..bsz {
+            self.drift_vjp_stratonovich(
+                t,
+                &z[b * d..(b + 1) * d],
+                theta,
+                &a[b * d..(b + 1) * d],
+                &mut out_z[b * d..(b + 1) * d],
+                &mut out_theta[b * p..(b + 1) * p],
+                scratch,
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::prng::PrngKey;
+    use crate::sde::problems::{sample_experiment_setup, Example1, Example2};
+    use crate::sde::{BatchSde, BatchSdeVjp, ReplicatedSde, Sde, SdeVjp};
+
+    /// Batched evaluation must equal a per-path scalar loop exactly —
+    /// including for the hand-batched ReplicatedSde overrides.
+    #[test]
+    fn batched_evaluations_match_scalar_rows_exactly() {
+        let dim = 3;
+        let batch = 5;
+        let sde = ReplicatedSde::new(Example2, dim);
+        let key = PrngKey::from_seed(17);
+        let (theta, _) = sample_experiment_setup(key, dim, 1);
+        let mut z = vec![0.0; batch * dim];
+        key.fill_normal(7, &mut z);
+        let mut a = vec![0.0; batch * dim];
+        key.fill_normal(99, &mut a);
+        let t = 0.3;
+        let p = sde.param_dim();
+
+        let mut out_b = vec![0.0; batch * dim];
+        sde.drift_batch(t, &z, &theta, &mut out_b);
+        let mut sig_b = vec![0.0; batch * dim];
+        sde.diffusion_batch(t, &z, &theta, &mut sig_b);
+        let mut dsig_b = vec![0.0; batch * dim];
+        sde.diffusion_dz_diag_batch(t, &z, &theta, &mut dsig_b);
+        let mut strat_b = vec![0.0; batch * dim];
+        let mut scratch = vec![0.0; 2 * dim];
+        sde.drift_stratonovich_batch(t, &z, &theta, &mut strat_b, &mut scratch);
+        let mut vz_b = vec![0.0; batch * dim];
+        let mut vth_b = vec![0.0; batch * p];
+        sde.drift_vjp_batch(t, &z, &theta, &a, &mut vz_b, &mut vth_b);
+        let mut gz_b = vec![0.0; batch * dim];
+        let mut gth_b = vec![0.0; batch * p];
+        sde.diffusion_vjp_batch(t, &z, &theta, &a, &mut gz_b, &mut gth_b);
+
+        for b in 0..batch {
+            let zr = &z[b * dim..(b + 1) * dim];
+            let ar = &a[b * dim..(b + 1) * dim];
+            let mut row = vec![0.0; dim];
+            sde.drift(t, zr, &theta, &mut row);
+            assert_eq!(&out_b[b * dim..(b + 1) * dim], &row[..], "drift row {b}");
+            sde.diffusion(t, zr, &theta, &mut row);
+            assert_eq!(&sig_b[b * dim..(b + 1) * dim], &row[..], "diffusion row {b}");
+            sde.diffusion_dz_diag(t, zr, &theta, &mut row);
+            assert_eq!(&dsig_b[b * dim..(b + 1) * dim], &row[..], "σ′ row {b}");
+            let mut sc = vec![0.0; 2 * dim];
+            sde.drift_stratonovich(t, zr, &theta, &mut row, &mut sc);
+            assert_eq!(&strat_b[b * dim..(b + 1) * dim], &row[..], "strat row {b}");
+            let mut vz = vec![0.0; dim];
+            let mut vth = vec![0.0; p];
+            sde.drift_vjp(t, zr, &theta, ar, &mut vz, &mut vth);
+            assert_eq!(&vz_b[b * dim..(b + 1) * dim], &vz[..], "drift vjp z row {b}");
+            assert_eq!(&vth_b[b * p..(b + 1) * p], &vth[..], "drift vjp θ row {b}");
+            let mut gz = vec![0.0; dim];
+            let mut gth = vec![0.0; p];
+            sde.diffusion_vjp(t, zr, &theta, ar, &mut gz, &mut gth);
+            assert_eq!(&gz_b[b * dim..(b + 1) * dim], &gz[..], "diff vjp z row {b}");
+            assert_eq!(&gth_b[b * p..(b + 1) * p], &gth[..], "diff vjp θ row {b}");
+        }
+    }
+
+    /// Parameter-side VJP rows are independent per path (no cross-path
+    /// accumulation).
+    #[test]
+    fn theta_rows_are_per_path() {
+        let dim = 2;
+        let sde = ReplicatedSde::new(Example1, dim);
+        let theta = [0.4, 0.6, 0.8, 0.2];
+        let z = [1.0, 2.0, 3.0, 4.0]; // two paths
+        let a = [1.0, 0.0, 0.0, 0.0]; // only path 0, dim 0 has adjoint mass
+        let mut vz = vec![0.0; 4];
+        let mut vth = vec![0.0; 2 * 4];
+        sde.drift_vjp_batch(0.0, &z, &theta, &a, &mut vz, &mut vth);
+        assert!(vth[..4].iter().any(|v| *v != 0.0), "path 0 gets gradient");
+        assert!(vth[4..].iter().all(|v| *v == 0.0), "path 1 stays zero");
+    }
+}

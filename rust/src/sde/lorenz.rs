@@ -10,6 +10,7 @@
 //!
 //! Additive noise, so Itô = Stratonovich. θ = [σ, ρ, β, α_x, α_y, α_z].
 
+use super::batch::{BatchSde, BatchSdeVjp};
 use super::traits::{Calculus, Sde, SdeVjp};
 
 /// The stochastic Lorenz system. Parameters live in θ (see module docs).
@@ -104,6 +105,11 @@ impl SdeVjp for StochasticLorenz {
         // Additive noise: c = ½σσ' ≡ 0, so the VJP accumulates nothing.
     }
 }
+
+// Loop-based batch evaluation (d = 3 with fully coupled drift rows — the
+// default per-row kernels are already the natural shape here).
+impl BatchSde for StochasticLorenz {}
+impl BatchSdeVjp for StochasticLorenz {}
 
 #[cfg(test)]
 mod tests {

@@ -23,12 +23,14 @@
 //! [`ExactSolution`] — the pathwise oracle the [`crate::convergence`]
 //! subsystem measures empirical convergence orders against.
 
+pub mod batch;
 pub mod func;
 pub mod lorenz;
 pub mod ou;
 pub mod problems;
 pub mod traits;
 
+pub use batch::{BatchSde, BatchSdeVjp};
 pub use func::{ForwardFunc, SdeFunc};
 pub use problems::{ReplicatedSde, ScalarProblem};
 pub use traits::{Calculus, ExactSolution, ScalarSde, Sde, SdeVjp};

@@ -6,6 +6,7 @@
 //! `dX = κ(μ − X) dt + s dW`, θ = [κ, μ, s].
 //! Transition: `X_t | X_0 = x0 ~ N(μ + (x0 − μ)e^{−κt}, s²(1 − e^{−2κt})/(2κ))`.
 
+use super::batch::{BatchSde, BatchSdeVjp};
 use super::traits::{Calculus, ExactSolution, Sde, SdeVjp};
 use crate::brownian::{weighted_path_integrals, BrownianMotion};
 
@@ -152,6 +153,28 @@ impl SdeVjp for OrnsteinUhlenbeck {
         // Additive noise: c = ½σσ' ≡ 0, so the VJP accumulates nothing.
     }
 }
+
+/// Hand-batched kernels: the OU coefficients are affine with shared θ, so
+/// the batch evaluation is one flat sweep over the `[B×d]` buffer (no
+/// per-row dispatch; identical floats cell-for-cell).
+impl BatchSde for OrnsteinUhlenbeck {
+    fn drift_batch(&self, _t: f64, z: &[f64], th: &[f64], out: &mut [f64]) {
+        let (kappa, mu) = (th[0], th[1]);
+        for (o, zi) in out.iter_mut().zip(z) {
+            *o = kappa * (mu - zi);
+        }
+    }
+
+    fn diffusion_batch(&self, _t: f64, _z: &[f64], th: &[f64], out: &mut [f64]) {
+        out.fill(th[2]);
+    }
+
+    fn diffusion_dz_diag_batch(&self, _t: f64, _z: &[f64], _th: &[f64], out: &mut [f64]) {
+        out.fill(0.0);
+    }
+}
+
+impl BatchSdeVjp for OrnsteinUhlenbeck {}
 
 /// Pathwise exact solution via variation of constants,
 /// `X_{t1} = μ + (x0 − μ)e^{−κT} + s ∫ e^{−κ(t1−u)} dW_u`, with the

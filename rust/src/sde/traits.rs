@@ -39,14 +39,25 @@ pub trait Sde {
 
     /// Stratonovich drift regardless of native calculus:
     /// `b_strat = b − ½ σ σ'` when native form is Itô.
-    fn drift_stratonovich(&self, t: f64, z: &[f64], theta: &[f64], out: &mut [f64]) {
+    ///
+    /// `scratch` must hold at least `2·d` floats (σ and σ′ are evaluated
+    /// into it). The adjoint calls this once per backward stage, so the
+    /// buffer is caller-provided rather than allocated per call.
+    fn drift_stratonovich(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        out: &mut [f64],
+        scratch: &mut [f64],
+    ) {
         self.drift(t, z, theta, out);
         if self.calculus() == Calculus::Ito {
             let d = self.state_dim();
-            let mut sig = vec![0.0; d];
-            let mut dsig = vec![0.0; d];
-            self.diffusion(t, z, theta, &mut sig);
-            self.diffusion_dz_diag(t, z, theta, &mut dsig);
+            let (sig, rest) = scratch.split_at_mut(d);
+            let dsig = &mut rest[..d];
+            self.diffusion(t, z, theta, sig);
+            self.diffusion_dz_diag(t, z, theta, dsig);
             for i in 0..d {
                 out[i] -= 0.5 * sig[i] * dsig[i];
             }
@@ -124,8 +135,8 @@ pub trait SdeVjp: Sde {
         _out_z: &mut [f64],
         _out_theta: &mut [f64],
     ) {
-        // Reached only via the deprecated free-function shims, which skip
-        // the API's construction-time validation.
+        // Unreachable through crate::api::SdeProblem, which performs
+        // construction-time validation via check_adjoint_compatible.
         panic!(
             "ito_correction_vjp not provided: express this SDE in \
              Stratonovich form or supply the correction VJP (and override \
@@ -136,6 +147,11 @@ pub trait SdeVjp: Sde {
 
     /// Accumulate the Stratonovich-form drift VJP: native drift VJP minus
     /// the correction VJP when the native calculus is Itô.
+    ///
+    /// `scratch` must hold at least `d` floats (the negated adjoint is
+    /// staged there — this runs four times per backward Heun step, so the
+    /// buffer is caller-provided rather than allocated per call).
+    #[allow(clippy::too_many_arguments)]
     fn drift_vjp_stratonovich(
         &self,
         t: f64,
@@ -144,12 +160,16 @@ pub trait SdeVjp: Sde {
         a: &[f64],
         out_z: &mut [f64],
         out_theta: &mut [f64],
+        scratch: &mut [f64],
     ) {
         self.drift_vjp(t, z, theta, a, out_z, out_theta);
         if self.calculus() == Calculus::Ito {
             // out += aᵀ ∂(−c)/∂· ⇒ accumulate with negated adjoint.
-            let neg: Vec<f64> = a.iter().map(|x| -x).collect();
-            self.ito_correction_vjp(t, z, theta, &neg, out_z, out_theta);
+            let neg = &mut scratch[..a.len()];
+            for (n, v) in neg.iter_mut().zip(a) {
+                *n = -v;
+            }
+            self.ito_correction_vjp(t, z, theta, &scratch[..a.len()], out_z, out_theta);
         }
     }
 }

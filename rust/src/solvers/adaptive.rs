@@ -63,28 +63,9 @@ pub struct AdaptiveResult {
     pub hit_h_min: bool,
 }
 
-/// Integrate from `t0` to `t1` (either direction) adaptively.
-///
-/// Deprecated shim; new code should solve through
-/// [`crate::api::SdeProblem`] with `StepControl::Adaptive`.
-#[deprecated(
-    since = "0.2.0",
-    note = "use crate::api::SdeProblem::solve with StepControl::Adaptive instead"
-)]
-pub fn integrate_adaptive<S: SdeFunc, B: BrownianMotion>(
-    sys: &mut S,
-    method: Method,
-    y0: &[f64],
-    t0: f64,
-    t1: f64,
-    bm: &mut B,
-    cfg: &AdaptiveConfig,
-) -> AdaptiveResult {
-    adaptive_core(sys, method, y0, t0, t1, bm, cfg)
-}
-
-/// Adaptive-stepping core shared by [`crate::api::SdeProblem::solve`] and
-/// the deprecated [`integrate_adaptive`] shim.
+/// Adaptive-stepping core behind [`crate::api::SdeProblem::solve`] with
+/// `StepControl::Adaptive` (integrates from `t0` to `t1`, either
+/// direction).
 pub(crate) fn adaptive_core<S: SdeFunc, B: BrownianMotion>(
     sys: &mut S,
     method: Method,

@@ -1,0 +1,414 @@
+//! Batched fixed-grid integration: advance B Brownian paths per solver
+//! step over contiguous `[B×d]` state buffers.
+//!
+//! Mirrors the scalar pipeline one level up:
+//!
+//! | scalar                       | batched                                  |
+//! |------------------------------|------------------------------------------|
+//! | [`crate::sde::SdeFunc`]      | [`BatchSdeFunc`]                         |
+//! | [`crate::sde::ForwardFunc`]  | [`BatchForwardFunc`]                     |
+//! | [`super::methods::Stepper`]  | [`BatchStepper`] over a [`Workspace`]    |
+//! | [`super::grid::grid_core`]   | [`batch_grid_core`]                      |
+//!
+//! Every per-path float is computed by the *same expression in the same
+//! order* as the scalar engine, so a batch of B paths equals B scalar
+//! solves exactly (`tests/batch_engine.rs` pins this bit-for-bit). The
+//! payoff is architectural: one virtual call per *stage* instead of per
+//! *path*, coefficients and weight rows hot in cache across all B paths,
+//! and zero heap allocation per step — the [`Workspace`] is sized once.
+//!
+//! NFE accounting stays in per-path units: one batched drift call counts
+//! as one drift evaluation (it is one evaluation *per path*), so the
+//! returned [`SolveStats`] apply to each path and match the scalar
+//! engine's numbers.
+
+use super::grid::SolveStats;
+use super::methods::Method;
+use crate::brownian::{BatchBrownian, BrownianMotion};
+use crate::sde::{BatchSde, Calculus};
+
+/// A flat batched diagonal-noise system as seen by the batched
+/// integrators: all buffers are row-major `[B×d]`.
+pub trait BatchSdeFunc {
+    /// Per-path state dimension d.
+    fn dim(&self) -> usize;
+    /// Batch size B.
+    fn batch(&self) -> usize;
+    /// Calculus in which `drift`/`diffusion` are expressed.
+    fn calculus(&self) -> Calculus;
+    /// Drift of every path into `out`.
+    fn drift(&mut self, t: f64, y: &[f64], out: &mut [f64]);
+    /// Diagonal diffusion of every path into `out`.
+    fn diffusion(&mut self, t: f64, y: &[f64], out: &mut [f64]);
+    /// Whether [`BatchSdeFunc::diffusion_dy_diag`] is available.
+    fn has_diffusion_jacobian(&self) -> bool {
+        false
+    }
+    /// `∂g_i/∂y_i` of every path into `out`.
+    fn diffusion_dy_diag(&mut self, _t: f64, _y: &[f64], _out: &mut [f64]) {
+        unimplemented!("diffusion_dy_diag not provided by this batched system")
+    }
+    /// Drift evaluations performed, in per-path units (one batched call =
+    /// one evaluation).
+    fn nfe_drift(&self) -> u64;
+    /// Diffusion evaluations performed, per-path units.
+    fn nfe_diffusion(&self) -> u64;
+}
+
+/// Batched forward solve of a [`BatchSde`] at fixed parameters, with the
+/// same target-calculus conversion as [`crate::sde::ForwardFunc`]: the
+/// drift is corrected by `±½σσ'` when the scheme's calculus differs from
+/// the SDE's native one, elementwise over the `[B×d]` buffers.
+pub struct BatchForwardFunc<'a, S: BatchSde + ?Sized> {
+    sde: &'a S,
+    theta: &'a [f64],
+    target: Calculus,
+    batch: usize,
+    sig: Vec<f64>,
+    dsig: Vec<f64>,
+    nfe_f: u64,
+    nfe_g: u64,
+}
+
+impl<'a, S: BatchSde + ?Sized> BatchForwardFunc<'a, S> {
+    /// Expose the coefficients converted for `method`'s calculus.
+    pub fn for_method(sde: &'a S, theta: &'a [f64], batch: usize, method: Method) -> Self {
+        Self::in_calculus(sde, theta, batch, method.calculus())
+    }
+
+    /// Expose the coefficients in an explicit target calculus.
+    pub fn in_calculus(sde: &'a S, theta: &'a [f64], batch: usize, target: Calculus) -> Self {
+        assert_eq!(
+            theta.len(),
+            sde.param_dim(),
+            "BatchForwardFunc: theta length {} != param_dim {}",
+            theta.len(),
+            sde.param_dim()
+        );
+        assert!(batch > 0, "BatchForwardFunc: empty batch");
+        let n = batch * sde.state_dim();
+        BatchForwardFunc {
+            sde,
+            theta,
+            target,
+            batch,
+            sig: vec![0.0; n],
+            dsig: vec![0.0; n],
+            nfe_f: 0,
+            nfe_g: 0,
+        }
+    }
+}
+
+impl<'a, S: BatchSde + ?Sized> BatchSdeFunc for BatchForwardFunc<'a, S> {
+    fn dim(&self) -> usize {
+        self.sde.state_dim()
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn calculus(&self) -> Calculus {
+        self.target
+    }
+
+    fn drift(&mut self, t: f64, y: &[f64], out: &mut [f64]) {
+        self.nfe_f += 1;
+        self.sde.drift_batch(t, y, self.theta, out);
+        let native = self.sde.calculus();
+        if native != self.target {
+            self.sde.diffusion_batch(t, y, self.theta, &mut self.sig);
+            self.sde.diffusion_dz_diag_batch(t, y, self.theta, &mut self.dsig);
+            let sign = match (native, self.target) {
+                (Calculus::Ito, Calculus::Stratonovich) => -0.5,
+                (Calculus::Stratonovich, Calculus::Ito) => 0.5,
+                _ => unreachable!(),
+            };
+            for ((o, s), ds) in out.iter_mut().zip(&self.sig).zip(&self.dsig) {
+                *o += sign * s * ds;
+            }
+        }
+    }
+
+    fn diffusion(&mut self, t: f64, y: &[f64], out: &mut [f64]) {
+        self.nfe_g += 1;
+        self.sde.diffusion_batch(t, y, self.theta, out);
+    }
+
+    fn has_diffusion_jacobian(&self) -> bool {
+        true
+    }
+
+    fn diffusion_dy_diag(&mut self, t: f64, y: &[f64], out: &mut [f64]) {
+        self.sde.diffusion_dz_diag_batch(t, y, self.theta, out);
+    }
+
+    fn nfe_drift(&self) -> u64 {
+        self.nfe_f
+    }
+
+    fn nfe_diffusion(&self) -> u64 {
+        self.nfe_g
+    }
+}
+
+/// Preallocated step scratch: six `[B×d]` stage buffers plus the
+/// increment buffer. Sized once per solve; the stepping loop performs no
+/// heap allocation.
+pub struct Workspace {
+    f0: Vec<f64>,
+    g0: Vec<f64>,
+    f1: Vec<f64>,
+    g1: Vec<f64>,
+    ytmp: Vec<f64>,
+    gp: Vec<f64>,
+    /// Brownian increments of the current step (`[B×d]`).
+    pub dw: Vec<f64>,
+}
+
+impl Workspace {
+    pub fn new(dim: usize, batch: usize) -> Self {
+        let n = dim * batch;
+        Workspace {
+            f0: vec![0.0; n],
+            g0: vec![0.0; n],
+            f1: vec![0.0; n],
+            g1: vec![0.0; n],
+            ytmp: vec![0.0; n],
+            gp: vec![0.0; n],
+            dw: vec![0.0; n],
+        }
+    }
+}
+
+/// Batched single-step schemes over a [`Workspace`]. Same update formulas
+/// as [`super::methods::Stepper`], applied elementwise to `[B×d]` rows.
+pub struct BatchStepper {
+    method: Method,
+}
+
+impl BatchStepper {
+    pub fn new(method: Method) -> Self {
+        BatchStepper { method }
+    }
+
+    pub fn method(&self) -> Method {
+        self.method
+    }
+
+    /// Advance all paths at time `t` by a signed step `h` with signed
+    /// per-path increments `ws.dw`. Writes the new states into `out` (may
+    /// not alias `y`).
+    pub fn step<S: BatchSdeFunc>(
+        &self,
+        sys: &mut S,
+        t: f64,
+        h: f64,
+        y: &[f64],
+        ws: &mut Workspace,
+        out: &mut [f64],
+    ) {
+        let n = y.len();
+        debug_assert_eq!(ws.dw.len(), n);
+        debug_assert_eq!(out.len(), n);
+        match self.method {
+            Method::EulerMaruyama => {
+                sys.drift(t, y, &mut ws.f0);
+                sys.diffusion(t, y, &mut ws.g0);
+                for i in 0..n {
+                    out[i] = y[i] + ws.f0[i] * h + ws.g0[i] * ws.dw[i];
+                }
+            }
+            Method::Heun => {
+                sys.drift(t, y, &mut ws.f0);
+                sys.diffusion(t, y, &mut ws.g0);
+                for i in 0..n {
+                    ws.ytmp[i] = y[i] + ws.f0[i] * h + ws.g0[i] * ws.dw[i];
+                }
+                let t1 = t + h;
+                sys.drift(t1, &ws.ytmp, &mut ws.f1);
+                sys.diffusion(t1, &ws.ytmp, &mut ws.g1);
+                for i in 0..n {
+                    out[i] = y[i]
+                        + 0.5 * (ws.f0[i] + ws.f1[i]) * h
+                        + 0.5 * (ws.g0[i] + ws.g1[i]) * ws.dw[i];
+                }
+            }
+            Method::MilsteinIto | Method::MilsteinStrat => {
+                assert!(
+                    sys.has_diffusion_jacobian(),
+                    "Milstein requires diffusion_dy_diag; use Heun instead"
+                );
+                sys.drift(t, y, &mut ws.f0);
+                sys.diffusion(t, y, &mut ws.g0);
+                sys.diffusion_dy_diag(t, y, &mut ws.gp);
+                let ito = self.method == Method::MilsteinIto;
+                for i in 0..n {
+                    let dw = ws.dw[i];
+                    let corr = if ito { dw * dw - h } else { dw * dw };
+                    out[i] =
+                        y[i] + ws.f0[i] * h + ws.g0[i] * dw + 0.5 * ws.g0[i] * ws.gp[i] * corr;
+                }
+            }
+        }
+    }
+}
+
+/// Batched fixed-grid integration core: advance all of `y0` (`[B×d]`)
+/// along `times` (monotone, either direction), one batched step per grid
+/// interval, writing terminal states into `y_out`. Returns per-path solve
+/// statistics (identical for every path — uniform grid, shared scheme).
+pub(crate) fn batch_grid_core<S: BatchSdeFunc, B: BrownianMotion>(
+    sys: &mut S,
+    method: Method,
+    y0: &[f64],
+    times: &[f64],
+    bm: &mut BatchBrownian<B>,
+    y_out: &mut [f64],
+) -> SolveStats {
+    let n = sys.dim() * sys.batch();
+    assert_eq!(y0.len(), n, "batch_grid_core: y0 length mismatch");
+    assert_eq!(y_out.len(), n, "batch_grid_core: y_out length mismatch");
+    assert!(times.len() >= 2, "batch_grid_core: need at least two time points");
+    debug_assert_eq!(bm.dim(), sys.dim(), "batch_grid_core: Brownian dim mismatch");
+    debug_assert_eq!(bm.batch(), sys.batch(), "batch_grid_core: Brownian batch mismatch");
+
+    let stepper = BatchStepper::new(method);
+    let mut ws = Workspace::new(sys.dim(), sys.batch());
+    let mut y = y0.to_vec();
+    let mut ynext = vec![0.0; n];
+
+    let f0 = sys.nfe_drift();
+    let g0 = sys.nfe_diffusion();
+    let mut steps = 0u64;
+
+    bm.begin_sweep(times[0]);
+    for k in 0..times.len() - 1 {
+        let (t, tn) = (times[k], times[k + 1]);
+        bm.sweep_increments(tn, &mut ws.dw);
+        stepper.step(sys, t, tn - t, &y, &mut ws, &mut ynext);
+        std::mem::swap(&mut y, &mut ynext);
+        steps += 1;
+    }
+    y_out.copy_from_slice(&y);
+    SolveStats {
+        steps,
+        rejected: 0,
+        nfe_drift: sys.nfe_drift() - f0,
+        nfe_diffusion: sys.nfe_diffusion() - g0,
+    }
+}
+
+/// Like [`batch_grid_core`] but records every path's state at every grid
+/// point. Returns the trajectories as one flat `(times.len(), B, d)`
+/// buffer — grid point `k`, path `b` at `[(k*B + b)*d .. (k*B + b + 1)*d]`
+/// — plus per-path statistics.
+pub(crate) fn batch_grid_saving_core<S: BatchSdeFunc, B: BrownianMotion>(
+    sys: &mut S,
+    method: Method,
+    y0: &[f64],
+    times: &[f64],
+    bm: &mut BatchBrownian<B>,
+) -> (Vec<f64>, SolveStats) {
+    let n = sys.dim() * sys.batch();
+    let mut traj = vec![0.0; times.len() * n];
+    traj[..n].copy_from_slice(y0);
+
+    let stepper = BatchStepper::new(method);
+    let mut ws = Workspace::new(sys.dim(), sys.batch());
+    let mut y = y0.to_vec();
+    let mut ynext = vec![0.0; n];
+
+    let f0 = sys.nfe_drift();
+    let g0 = sys.nfe_diffusion();
+
+    bm.begin_sweep(times[0]);
+    for k in 0..times.len() - 1 {
+        let (t, tn) = (times[k], times[k + 1]);
+        bm.sweep_increments(tn, &mut ws.dw);
+        stepper.step(sys, t, tn - t, &y, &mut ws, &mut ynext);
+        std::mem::swap(&mut y, &mut ynext);
+        traj[(k + 1) * n..(k + 2) * n].copy_from_slice(&y);
+    }
+    let stats = SolveStats {
+        steps: (times.len() - 1) as u64,
+        rejected: 0,
+        nfe_drift: sys.nfe_drift() - f0,
+        nfe_diffusion: sys.nfe_diffusion() - g0,
+    };
+    (traj, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::brownian::BrownianPath;
+    use crate::prng::PrngKey;
+    use crate::sde::problems::{sample_experiment_setup, Example1};
+    use crate::sde::{ForwardFunc, ReplicatedSde};
+    use crate::solvers::{grid_core, uniform_grid};
+
+    /// The batched kernel must reproduce B scalar solves bit-for-bit for
+    /// every scheme (the integration-level pin; the API-level one lives in
+    /// tests/batch_engine.rs).
+    #[test]
+    fn batch_kernel_equals_scalar_kernel_per_path() {
+        let dim = 3;
+        let bsz = 4;
+        let sde = ReplicatedSde::new(Example1, dim);
+        let key = PrngKey::from_seed(88);
+        let (theta, x0) = sample_experiment_setup(key, dim, 2);
+        let grid = uniform_grid(0.0, 1.0, 64);
+
+        for method in [Method::EulerMaruyama, Method::MilsteinIto, Method::Heun] {
+            let mk = |b: u64| BrownianPath::new(key.fold_in(b), dim, 0.0, 1.0);
+            let mut bm = BatchBrownian::new((0..bsz as u64).map(mk).collect());
+            let mut sys = BatchForwardFunc::for_method(&sde, &theta, bsz, method);
+            let y0: Vec<f64> = (0..bsz).flat_map(|_| x0.clone()).collect();
+            let mut y_batch = vec![0.0; bsz * dim];
+            let stats_b = batch_grid_core(&mut sys, method, &y0, &grid, &mut bm, &mut y_batch);
+
+            for b in 0..bsz {
+                let mut single = mk(b as u64);
+                let mut ssys = ForwardFunc::for_method(&sde, &theta, method);
+                let mut y = vec![0.0; dim];
+                let stats_s = grid_core(&mut ssys, method, &x0, &grid, &mut single, &mut y);
+                assert_eq!(&y_batch[b * dim..(b + 1) * dim], &y[..], "{} path {b}", method.name());
+                assert_eq!(stats_b, stats_s, "{} stats", method.name());
+            }
+        }
+    }
+
+    /// Saving variant: per-path trajectories equal the scalar saving
+    /// driver's, and the terminal row equals the non-saving kernel.
+    #[test]
+    fn batch_saving_matches_scalar_saving() {
+        use crate::solvers::grid::grid_saving_core;
+        let dim = 2;
+        let bsz = 3;
+        let sde = ReplicatedSde::new(Example1, dim);
+        let key = PrngKey::from_seed(99);
+        let (theta, x0) = sample_experiment_setup(key, dim, 2);
+        let grid = uniform_grid(0.0, 1.0, 16);
+        let mk = |b: u64| BrownianPath::new(key.fold_in(100 + b), dim, 0.0, 1.0);
+
+        let mut bm = BatchBrownian::new((0..bsz as u64).map(mk).collect());
+        let mut sys = BatchForwardFunc::for_method(&sde, &theta, bsz, Method::Heun);
+        let y0: Vec<f64> = (0..bsz).flat_map(|_| x0.clone()).collect();
+        let (traj, _) = batch_grid_saving_core(&mut sys, Method::Heun, &y0, &grid, &mut bm);
+
+        for b in 0..bsz {
+            let mut single = mk(b as u64);
+            let mut ssys = ForwardFunc::for_method(&sde, &theta, Method::Heun);
+            let (straj, _) = grid_saving_core(&mut ssys, Method::Heun, &x0, &grid, &mut single);
+            for k in 0..grid.len() {
+                assert_eq!(
+                    &traj[(k * bsz + b) * dim..(k * bsz + b + 1) * dim],
+                    &straj[k * dim..(k + 1) * dim],
+                    "grid point {k} path {b}"
+                );
+            }
+        }
+    }
+}

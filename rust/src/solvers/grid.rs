@@ -42,29 +42,7 @@ pub fn uniform_grid(t0: f64, t1: f64, n_steps: usize) -> Vec<f64> {
     ts
 }
 
-/// Integrate `sys` along `times` (monotone, either direction), starting
-/// from `y0` at `times[0]`. Writes the terminal state into `y_out` and
-/// returns solve statistics.
-///
-/// Deprecated shim over the fixed-grid core; new code should solve through
-/// [`crate::api::SdeProblem`].
-#[deprecated(
-    since = "0.2.0",
-    note = "use crate::api::SdeProblem::solve with SaveAt::Final instead"
-)]
-pub fn integrate_grid<S: SdeFunc, B: BrownianMotion>(
-    sys: &mut S,
-    method: Method,
-    y0: &[f64],
-    times: &[f64],
-    bm: &mut B,
-    y_out: &mut [f64],
-) -> SolveStats {
-    grid_core(sys, method, y0, times, bm, y_out)
-}
-
-/// Fixed-grid integration core shared by [`crate::api::SdeProblem::solve`]
-/// and the deprecated [`integrate_grid`] shim.
+/// Fixed-grid integration core behind [`crate::api::SdeProblem::solve`].
 pub(crate) fn grid_core<S: SdeFunc, B: BrownianMotion>(
     sys: &mut S,
     method: Method,
@@ -112,27 +90,9 @@ pub(crate) fn grid_core<S: SdeFunc, B: BrownianMotion>(
     }
 }
 
-/// Like [`integrate_grid`] but records the state at every grid point.
-/// Returns the trajectory as a flat row-major `(times.len(), d)` matrix.
-///
-/// Deprecated shim; new code should solve through
-/// [`crate::api::SdeProblem`] with `SaveAt::Dense`.
-#[deprecated(
-    since = "0.2.0",
-    note = "use crate::api::SdeProblem::solve with SaveAt::Dense instead"
-)]
-pub fn integrate_grid_saving<S: SdeFunc, B: BrownianMotion>(
-    sys: &mut S,
-    method: Method,
-    y0: &[f64],
-    times: &[f64],
-    bm: &mut B,
-) -> (Vec<f64>, SolveStats) {
-    grid_saving_core(sys, method, y0, times, bm)
-}
-
-/// Trajectory-saving fixed-grid core shared by the API layer and the
-/// deprecated [`integrate_grid_saving`] shim.
+/// Trajectory-saving fixed-grid core behind
+/// [`crate::api::SdeProblem::solve`] with `SaveAt::Dense` (returns the
+/// trajectory as a flat row-major `(times.len(), d)` matrix).
 pub(crate) fn grid_saving_core<S: SdeFunc, B: BrownianMotion>(
     sys: &mut S,
     method: Method,

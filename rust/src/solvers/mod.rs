@@ -11,21 +11,25 @@
 //!   estimation and a PI controller (Burrage–Burrage/Ilie et al., §3.4),
 //!   made possible by Brownian sources that answer bridge-consistent
 //!   queries at arbitrary times.
+//! * [`batch`] — the batched SoA drivers: the same schemes advancing B
+//!   paths per step over `[B×d]` buffers with a preallocated
+//!   [`Workspace`] (zero heap allocation per step), bit-identical per
+//!   path to the scalar drivers.
 //!
-//! All solvers consume a [`crate::sde::SdeFunc`] (flat diagonal-noise
-//! system) and a [`crate::brownian::BrownianMotion`].
+//! Scalar solvers consume a [`crate::sde::SdeFunc`] (flat diagonal-noise
+//! system) and a [`crate::brownian::BrownianMotion`]; batched solvers a
+//! [`BatchSdeFunc`] and a [`crate::brownian::BatchBrownian`].
 
 pub mod adaptive;
+pub mod batch;
 pub mod grid;
 pub mod methods;
 
-#[allow(deprecated)]
-pub use adaptive::integrate_adaptive;
 pub use adaptive::{AdaptiveConfig, AdaptiveResult};
-#[allow(deprecated)]
-pub use grid::{integrate_grid, integrate_grid_saving};
+pub use batch::{BatchForwardFunc, BatchSdeFunc, BatchStepper, Workspace};
 pub use grid::{uniform_grid, SolveStats};
 pub use methods::{Method, Stepper};
 
 pub(crate) use adaptive::adaptive_core;
+pub(crate) use batch::{batch_grid_core, batch_grid_saving_core};
 pub(crate) use grid::{grid_core, grid_saving_core};

@@ -1,0 +1,270 @@
+//! The batched SoA execution engine must be *bit-identical* to the scalar
+//! engine: a batch of one equals a plain [`SdeProblem::solve`] /
+//! [`SdeProblem::sensitivity_sum`], and a batch of B equals a sequential
+//! per-path loop path-for-path — exact f64 equality throughout, for any
+//! thread count (chunk partitioning is fixed and each path's floats are
+//! independent of its neighbours, so thread scheduling cannot change a
+//! single bit; re-running pins run-to-run determinism too).
+
+use sdegrad::adjoint::{AdjointConfig, NoiseMode};
+use sdegrad::api::{
+    sensitivity_batch, sensitivity_batch_per_path, solve_batch, solve_batch_per_path, SaveAt,
+    SdeProblem, SensAlg, SolveOptions, StepControl,
+};
+use sdegrad::prng::PrngKey;
+use sdegrad::sde::ou::OrnsteinUhlenbeck;
+use sdegrad::sde::problems::{sample_experiment_setup, Example1, Example2, Example3};
+use sdegrad::sde::{BatchSdeVjp, ReplicatedSde, ScalarSde};
+use sdegrad::solvers::Method;
+
+// ---------------------------------------------------------------------------
+// Forward solves.
+// ---------------------------------------------------------------------------
+
+/// Batch-of-1 `solve_batch` == scalar `SdeProblem::solve`, bit for bit,
+/// on the §7.1 problems across every scheme.
+#[test]
+fn batch_of_one_solve_is_bit_identical_to_scalar_engine() {
+    fn check<P: ScalarSde + Copy>(problem: P, dim: usize, seed: u64, method: Method) {
+        let sde = ReplicatedSde::new(problem, dim);
+        let key = PrngKey::from_seed(seed);
+        let (theta, x0) = sample_experiment_setup(key, dim, problem.nparams());
+        let prob = SdeProblem::new(&sde, &x0, (0.0, 1.0)).params(&theta).key(key);
+        let opts = SolveOptions::fixed(method, 173);
+
+        let scalar = prob.solve(&opts);
+        let batch = solve_batch(std::slice::from_ref(&prob), &opts);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].states, scalar.states, "{}", method.name());
+        assert_eq!(batch[0].times, scalar.times);
+        assert_eq!(batch[0].stats, scalar.stats);
+    }
+    check(Example1, 3, 11, Method::EulerMaruyama);
+    check(Example1, 3, 12, Method::MilsteinIto);
+    check(Example2, 2, 13, Method::Heun);
+    check(Example3, 4, 14, Method::MilsteinIto);
+}
+
+/// Batch-of-1 on OU (shared-θ, additive noise) including the dense save
+/// path and the replay handle.
+#[test]
+fn batch_of_one_dense_solve_matches_scalar_on_ou() {
+    let ou = OrnsteinUhlenbeck::new(3);
+    let theta = [1.2, 0.4, 0.6];
+    let z0 = [0.1, -0.3, 0.8];
+    let key = PrngKey::from_seed(21);
+    let prob = SdeProblem::new(&ou, &z0, (0.0, 2.0)).params(&theta).key(key);
+    let opts = SolveOptions::fixed(Method::Heun, 128).save(SaveAt::Dense);
+
+    let mut scalar = prob.solve(&opts);
+    let mut batch = solve_batch(std::slice::from_ref(&prob), &opts);
+    assert_eq!(batch[0].states, scalar.states);
+    assert_eq!(batch[0].times, scalar.times);
+    // The replay handle carries the same realized path.
+    assert_eq!(batch[0].w(2.0), scalar.w(2.0));
+    assert_eq!(batch[0].w(0.37), scalar.w(0.37));
+}
+
+/// Batch-of-B equals a sequential per-path loop path-for-path, exactly —
+/// across batch sizes that exercise partial chunks and multiple chunks —
+/// and replicates with distinct keys realize distinct paths.
+#[test]
+fn batch_solve_equals_sequential_loop_path_for_path() {
+    let sde = ReplicatedSde::new(Example1, 3);
+    let key = PrngKey::from_seed(61);
+    let (theta, x0) = sample_experiment_setup(key, 3, 2);
+    let prob = SdeProblem::new(&sde, &x0, (0.0, 1.0)).params(&theta);
+    let opts = SolveOptions::fixed(Method::MilsteinIto, 200);
+
+    for n in [1usize, 5, 32, 33, 97] {
+        let replicates = prob.replicates(PrngKey::from_seed(62), n);
+        let batch_a = solve_batch(&replicates, &opts);
+        let batch_b = solve_batch(&replicates, &opts);
+        let sequential: Vec<_> = replicates.iter().map(|p| p.solve(&opts)).collect();
+        assert_eq!(batch_a.len(), n);
+        for i in 0..n {
+            assert_eq!(batch_a[i].states, batch_b[i].states, "run-to-run at {i} (n={n})");
+            assert_eq!(batch_a[i].states, sequential[i].states, "vs sequential at {i} (n={n})");
+            assert_eq!(batch_a[i].stats, sequential[i].stats, "stats at {i} (n={n})");
+        }
+    }
+    let replicates = prob.replicates(PrngKey::from_seed(62), 4);
+    let sols = solve_batch(&replicates, &opts);
+    assert_ne!(sols[0].states, sols[1].states, "replicates must differ");
+}
+
+/// The per-path engine (thread-per-path baseline) agrees with the batched
+/// engine exactly — the throughput bench's correctness precondition.
+#[test]
+fn per_path_engine_matches_batched_engine() {
+    let sde = ReplicatedSde::new(Example2, 2);
+    let key = PrngKey::from_seed(71);
+    let (theta, x0) = sample_experiment_setup(key, 2, 1);
+    let prob = SdeProblem::new(&sde, &x0, (0.0, 1.0)).params(&theta);
+    let opts = SolveOptions::fixed(Method::Heun, 150);
+    let replicates = prob.replicates(PrngKey::from_seed(72), 23);
+    let batched = solve_batch(&replicates, &opts);
+    let per_path = solve_batch_per_path(&replicates, &opts);
+    for (a, b) in batched.iter().zip(&per_path) {
+        assert_eq!(a.states, b.states);
+        assert_eq!(a.stats, b.stats);
+    }
+}
+
+/// Mixed per-path mirror flags ride the batched kernel (mirroring is a
+/// per-source property); a mirrored batch member realizes the negated
+/// path of its unmirrored twin.
+#[test]
+fn mirrored_paths_batch_with_unmirrored_ones() {
+    let sde = ReplicatedSde::new(Example3, 2);
+    let key = PrngKey::from_seed(81);
+    let (theta, x0) = sample_experiment_setup(key, 2, 2);
+    let base = SdeProblem::new(&sde, &x0, (0.0, 1.0)).params(&theta).key(key);
+    let pair = vec![base.clone(), base.clone().mirror(true)];
+    let opts = SolveOptions::fixed(Method::MilsteinIto, 100);
+
+    let mut batch = solve_batch(&pair, &opts);
+    let seq: Vec<_> = pair.iter().map(|p| p.solve(&opts)).collect();
+    assert_eq!(batch[0].states, seq[0].states);
+    assert_eq!(batch[1].states, seq[1].states);
+    let (w_plus, w_minus) = (batch[0].w(1.0), batch[1].w(1.0));
+    for (a, b) in w_plus.iter().zip(&w_minus) {
+        assert_eq!(*a, -*b, "mirror must negate the realized path");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gradients.
+// ---------------------------------------------------------------------------
+
+fn check_gradient_batch<S>(sde: &S, theta: &[f64], z0: &[f64], seed: u64, noise: NoiseMode)
+where
+    S: BatchSdeVjp + Sync + ?Sized,
+{
+    let prob = SdeProblem::new(sde, z0, (0.0, 1.0)).params(theta).noise(noise);
+    let alg = SensAlg::StochasticAdjoint(AdjointConfig::default());
+    let step = StepControl::Steps(150);
+    for n in [1usize, 9, 40] {
+        let replicates = prob.replicates(PrngKey::from_seed(seed), n);
+        let batch = sensitivity_batch(&replicates, &alg, step);
+        for (i, p) in replicates.iter().enumerate() {
+            let seq = p.sensitivity_sum(&alg, step).unwrap();
+            let b = batch[i].as_ref().unwrap();
+            assert_eq!(b.dtheta, seq.dtheta, "dtheta at {i} (n={n})");
+            assert_eq!(b.dz0, seq.dz0, "dz0 at {i} (n={n})");
+            assert_eq!(b.z_terminal, seq.z_terminal, "z_terminal at {i} (n={n})");
+            assert_eq!(b.z0_reconstructed, seq.z0_reconstructed, "z0_rec at {i} (n={n})");
+            assert_eq!(b.w_terminal, seq.w_terminal, "w_terminal at {i} (n={n})");
+            assert_eq!(b.stats.forward, seq.stats.forward, "fwd stats at {i} (n={n})");
+            assert_eq!(b.stats.backward, seq.stats.backward, "bwd stats at {i} (n={n})");
+            assert_eq!(b.stats.noise_memory, seq.stats.noise_memory, "memory at {i} (n={n})");
+        }
+    }
+}
+
+/// Batched stochastic adjoint == per-path scalar adjoint, exactly, on all
+/// three §7.1 problems (stored-path noise).
+#[test]
+fn batched_adjoint_matches_scalar_adjoint_section71() {
+    let gbm = ReplicatedSde::new(Example1, 3);
+    let key = PrngKey::from_seed(101);
+    let (theta, x0) = sample_experiment_setup(key, 3, 2);
+    check_gradient_batch(&gbm, &theta, &x0, 102, NoiseMode::StoredPath);
+
+    let ex2 = ReplicatedSde::new(Example2, 2);
+    let (theta, x0) = sample_experiment_setup(PrngKey::from_seed(103), 2, 1);
+    check_gradient_batch(&ex2, &theta, &x0, 104, NoiseMode::StoredPath);
+
+    let ex3 = ReplicatedSde::new(Example3, 4);
+    let (theta, x0) = sample_experiment_setup(PrngKey::from_seed(105), 4, 2);
+    check_gradient_batch(&ex3, &theta, &x0, 106, NoiseMode::StoredPath);
+}
+
+/// Same pin on OU (shared θ across dimensions — exercises cross-path
+/// independence of the per-path `a_θ` rows) and under virtual-tree noise
+/// (the O(1)-memory spec flows through the batched kernel unchanged).
+#[test]
+fn batched_adjoint_matches_scalar_on_ou_and_virtual_tree() {
+    let ou = OrnsteinUhlenbeck::new(2);
+    check_gradient_batch(&ou, &[1.5, 0.7, 0.3], &[0.4, -0.2], 111, NoiseMode::StoredPath);
+
+    let gbm = ReplicatedSde::new(Example1, 2);
+    let (theta, x0) = sample_experiment_setup(PrngKey::from_seed(112), 2, 2);
+    check_gradient_batch(&gbm, &theta, &x0, 113, NoiseMode::VirtualTree { tol: 1e-6 });
+}
+
+/// The per-path gradient engine agrees with the batched one, and the
+/// taped estimators (which fall back) still produce per-path results in
+/// input order.
+#[test]
+fn gradient_fallbacks_and_per_path_engine_agree() {
+    let sde = ReplicatedSde::new(Example1, 2);
+    let key = PrngKey::from_seed(121);
+    let (theta, x0) = sample_experiment_setup(key, 2, 2);
+    let prob = SdeProblem::new(&sde, &x0, (0.0, 1.0)).params(&theta);
+    let step = StepControl::Steps(80);
+    let replicates = prob.replicates(PrngKey::from_seed(122), 7);
+
+    for alg in [
+        SensAlg::StochasticAdjoint(AdjointConfig::default()),
+        SensAlg::Backprop { method: Method::MilsteinIto },
+        SensAlg::ForwardPathwise,
+        SensAlg::Antithetic { base: AdjointConfig::default() },
+    ] {
+        let batched = sensitivity_batch(&replicates, &alg, step);
+        let per_path = sensitivity_batch_per_path(&replicates, &alg, step);
+        for (i, (a, b)) in batched.iter().zip(&per_path).enumerate() {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(a.dtheta, b.dtheta, "{} at {i}", alg.name());
+            assert_eq!(a.dz0, b.dz0, "{} at {i}", alg.name());
+        }
+    }
+}
+
+/// Validation errors surface per problem from the batched entry point
+/// exactly as from the scalar one.
+#[test]
+fn batched_sensitivity_propagates_validation_errors() {
+    use sdegrad::api::ProblemError;
+    let sde = ReplicatedSde::new(Example1, 2);
+    let key = PrngKey::from_seed(131);
+    let (theta, x0) = sample_experiment_setup(key, 2, 2);
+    let prob = SdeProblem::new(&sde, &x0, (0.0, 1.0))
+        .params(&theta)
+        .noise(NoiseMode::VirtualTree { tol: 1e-6 });
+    let replicates = prob.replicates(PrngKey::from_seed(132), 3);
+    // Taped estimator + tree spec: every slot reports UnsupportedNoise.
+    let outs = sensitivity_batch(&replicates, &SensAlg::ForwardPathwise, StepControl::Steps(10));
+    assert_eq!(outs.len(), 3);
+    for o in outs {
+        assert!(matches!(o.unwrap_err(), ProblemError::UnsupportedNoise { .. }));
+    }
+    // Adaptive stepping is rejected per problem.
+    let outs = sensitivity_batch(
+        &replicates,
+        &SensAlg::StochasticAdjoint(AdjointConfig::default()),
+        StepControl::Adaptive(Default::default()),
+    );
+    for o in outs {
+        assert!(matches!(o.unwrap_err(), ProblemError::AdaptiveSensitivityUnsupported));
+    }
+}
+
+/// Heterogeneous problem sets (different θ per problem) silently take the
+/// per-path fallback and still match sequential execution exactly.
+#[test]
+fn non_batchable_sets_fall_back_to_per_path_results() {
+    let sde = ReplicatedSde::new(Example1, 2);
+    let key = PrngKey::from_seed(141);
+    let (theta_a, x0) = sample_experiment_setup(key, 2, 2);
+    let theta_b: Vec<f64> = theta_a.iter().map(|v| v * 1.1).collect();
+    let mixed = vec![
+        SdeProblem::new(&sde, &x0, (0.0, 1.0)).params(&theta_a).key(key),
+        SdeProblem::new(&sde, &x0, (0.0, 1.0)).params(&theta_b).key(key.fold_in(1)),
+    ];
+    let opts = SolveOptions::fixed(Method::MilsteinIto, 64);
+    let batch = solve_batch(&mixed, &opts);
+    for (sol, p) in batch.iter().zip(&mixed) {
+        assert_eq!(sol.states, p.solve(&opts).states);
+    }
+}
