@@ -26,9 +26,52 @@
 //! exactly as in the scalar engine.
 
 use super::stochastic::Noise;
-use crate::brownian::BatchBrownian;
+use crate::brownian::{BatchBrownian, BrownianMotion};
 use crate::sde::BatchSdeVjp;
 use crate::solvers::{batch_grid_core, uniform_grid, BatchForwardFunc, Method, SolveStats};
+
+/// Evaluation interface of the batched augmented backward dynamics: what
+/// the batched backward Heun stepper needs per stage, abstracted over
+/// *how* the per-path coefficients/VJPs are produced.
+///
+/// Two implementors: [`BatchAdjointOps`] (one shared θ across the batch —
+/// the Monte Carlo replicate engine behind
+/// [`crate::api::sensitivity_batch`]) and the latent trainer's
+/// per-path-context ops (`latent::posterior`), where a small per-path
+/// parameter tail — the encoder context of each path's sequence — varies
+/// across the batch while the model weights are shared.
+///
+/// Contract (mirrors the scalar [`super::augmented::AdjointOps`], which
+/// defines the float-for-float reference): `eval_drift` writes the
+/// Stratonovich drift `b̃(z_b,t)` plus `−a_bᵀ∂b̃/∂z` and `−a_bᵀ∂b̃/∂θ`
+/// (overwritten); `eval_diffusion` writes `σ(z_b,t)`, `−a_bᵀ∂σ/∂z`, and
+/// the ΔW-contracted `−Σ_i a_{b,i} dw_{b,i} ∂σ_i/∂θ`.
+pub(crate) trait BatchAugmentedOps {
+    fn state_dim(&self) -> usize;
+    fn param_dim(&self) -> usize;
+    fn batch(&self) -> usize;
+    fn eval_drift(
+        &mut self,
+        t: f64,
+        z: &[f64],
+        a: &[f64],
+        b_out: &mut [f64],
+        fa_out: &mut [f64],
+        fth_out: &mut [f64],
+    );
+    #[allow(clippy::too_many_arguments)]
+    fn eval_diffusion(
+        &mut self,
+        t: f64,
+        z: &[f64],
+        a: &[f64],
+        dw: &[f64],
+        s_out: &mut [f64],
+        ga_out: &mut [f64],
+        gth_out: &mut [f64],
+    );
+    fn nfe(&self) -> (u64, u64);
+}
 
 /// Evaluation bundle for the batched augmented backward dynamics —
 /// [`super::augmented::AdjointOps`] lifted to `[B×d]`/`[B×p]` buffers.
@@ -144,6 +187,44 @@ impl<'a, S: BatchSdeVjp + ?Sized> BatchAdjointOps<'a, S> {
     }
 }
 
+impl<'a, S: BatchSdeVjp + ?Sized> BatchAugmentedOps for BatchAdjointOps<'a, S> {
+    fn state_dim(&self) -> usize {
+        self.d
+    }
+    fn param_dim(&self) -> usize {
+        self.sde.param_dim()
+    }
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn eval_drift(
+        &mut self,
+        t: f64,
+        z: &[f64],
+        a: &[f64],
+        b_out: &mut [f64],
+        fa_out: &mut [f64],
+        fth_out: &mut [f64],
+    ) {
+        BatchAdjointOps::eval_drift(self, t, z, a, b_out, fa_out, fth_out);
+    }
+    fn eval_diffusion(
+        &mut self,
+        t: f64,
+        z: &[f64],
+        a: &[f64],
+        dw: &[f64],
+        s_out: &mut [f64],
+        ga_out: &mut [f64],
+        gth_out: &mut [f64],
+    ) {
+        BatchAdjointOps::eval_diffusion(self, t, z, a, dw, s_out, ga_out, gth_out);
+    }
+    fn nfe(&self) -> (u64, u64) {
+        (self.nfe_drift, self.nfe_diffusion)
+    }
+}
+
 /// Stage buffers of the batched backward Heun step (`[B×d]`/`[B×p]`).
 struct BatchBackwardScratch {
     b0: Vec<f64>,
@@ -190,8 +271,8 @@ impl BatchBackwardScratch {
 /// One batched backward Heun step from `t` to `tn` (`tn < t`), updating
 /// the `(z, a, ath)` blocks in place. `sc.dw` must hold
 /// `W_b(tn) − W_b(t)` for every path.
-fn batch_backward_heun_step<S: BatchSdeVjp + ?Sized>(
-    ops: &mut BatchAdjointOps<S>,
+fn batch_backward_heun_step<O: BatchAugmentedOps + ?Sized>(
+    ops: &mut O,
     t: f64,
     tn: f64,
     z: &mut [f64],
@@ -221,6 +302,65 @@ fn batch_backward_heun_step<S: BatchSdeVjp + ?Sized>(
     for j in 0..np {
         // gth already carries the ΔW contraction (see BatchAdjointOps).
         ath[j] += 0.5 * (sc.fth0[j] + sc.fth1[j]) * h + 0.5 * (sc.gth0[j] + sc.gth1[j]);
+    }
+}
+
+/// Reusable batched backward-pass driver — the batch analogue of
+/// [`super::stochastic::BackwardSolver`], for callers that orchestrate
+/// their own forward pass and loss structure (the latent-SDE trainer
+/// integrates interval-by-interval with per-interval, per-path context
+/// parameters).
+///
+/// Holds the stage scratch; `solve_interval` walks one descending grid,
+/// updating the `[B×d]`/`[B×p]` blocks `(z, a, ath)` in place against one
+/// [`BatchBrownian`] (whose per-path sources replay the forward noise).
+/// Per-path floats follow the scalar `BackwardSolver` exactly, so a batch
+/// of B interval solves equals B scalar interval solves bit for bit.
+pub(crate) struct BatchBackwardSolver<O: BatchAugmentedOps> {
+    ops: O,
+    sc: BatchBackwardScratch,
+}
+
+impl<O: BatchAugmentedOps> BatchBackwardSolver<O> {
+    pub(crate) fn new(ops: O) -> Self {
+        let sc = BatchBackwardScratch::new(ops.state_dim(), ops.param_dim(), ops.batch());
+        BatchBackwardSolver { ops, sc }
+    }
+
+    /// Mutable access to the ops (e.g. to swap the per-interval context
+    /// rows) without reallocating scratch.
+    pub(crate) fn ops_mut(&mut self) -> &mut O {
+        &mut self.ops
+    }
+
+    /// Integrate the augmented backward system along `grid` (descending),
+    /// updating `z` (path reconstruction), `a` (state adjoint) and `ath`
+    /// (parameter adjoint, accumulated) in place. Statistics accumulate
+    /// in per-path units (one batched stage = one evaluation per path).
+    pub(crate) fn solve_interval<B: BrownianMotion>(
+        &mut self,
+        grid: &[f64],
+        z: &mut [f64],
+        a: &mut [f64],
+        ath: &mut [f64],
+        bm: &mut BatchBrownian<B>,
+        stats: &mut SolveStats,
+    ) {
+        assert!(
+            grid.len() >= 2 && grid.windows(2).all(|w| w[1] < w[0]),
+            "BatchBackwardSolver: grid must be descending"
+        );
+        let (nf0, ng0) = self.ops.nfe();
+        bm.begin_sweep(grid[0]);
+        for k in 0..grid.len() - 1 {
+            let (t, tn) = (grid[k], grid[k + 1]);
+            bm.sweep_increments(tn, &mut self.sc.dw);
+            batch_backward_heun_step(&mut self.ops, t, tn, z, a, ath, &mut self.sc);
+            stats.steps += 1;
+        }
+        let (nf1, ng1) = self.ops.nfe();
+        stats.nfe_drift += nf1 - nf0;
+        stats.nfe_diffusion += ng1 - ng0;
     }
 }
 

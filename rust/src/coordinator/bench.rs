@@ -14,6 +14,23 @@
 //! numbers compare pure execution strategy. Results are printed as a
 //! table and written to `BENCH_throughput.json` (hand-rolled JSON; the
 //! crate set has no serde) for the CI artifact trajectory.
+//!
+//! `sdegrad bench compare` is the CI regression gate: it diffs a fresh
+//! `BENCH_throughput.json` against the committed `BENCH_baseline.json`,
+//! prints a markdown table (appended to the job summary when
+//! `--summary`/`GITHUB_STEP_SUMMARY` is set), and exits nonzero when a
+//! **batched** paths/sec or grad-paths/sec row regresses by more than the
+//! threshold (default 25%). Refreshing the baseline is a documented
+//! manual step, run on the reference machine:
+//!
+//! ```text
+//! cargo run --release -- bench throughput --quick
+//! cp BENCH_throughput.json BENCH_baseline.json   # then commit
+//! ```
+//!
+//! A baseline carrying `"placeholder": true` (the repo's initial state,
+//! before anyone has measured on the reference machine) is reported but
+//! never fails the job.
 
 use crate::adjoint::AdjointConfig;
 use crate::api::{
@@ -247,6 +264,290 @@ fn write_json(path: &str, quick: bool, rows: &[ThroughputRow]) -> std::io::Resul
     out.flush()
 }
 
+// ---------------------------------------------------------------------
+// `sdegrad bench compare` — the CI bench-regression gate.
+// ---------------------------------------------------------------------
+
+/// One parsed benchmark record from a `BENCH_*.json` file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    pub problem: String,
+    pub metric: String,
+    pub engine: String,
+    pub value_per_sec: f64,
+}
+
+/// A parsed `BENCH_*.json`: records plus the placeholder flag (a
+/// committed baseline that has not been measured yet).
+#[derive(Clone, Debug)]
+pub struct BenchFile {
+    pub placeholder: bool,
+    pub records: Vec<BenchRecord>,
+}
+
+fn json_string_field(block: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\":");
+    let at = block.find(&pat)? + pat.len();
+    let rest = block[at..].trim_start().strip_prefix('"')?;
+    // Values we emit are plain identifiers (no escapes).
+    let end = rest.find('"')?;
+    Some(rest[..end].to_string())
+}
+
+fn json_number_field(block: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\":");
+    let at = block.find(&pat)? + pat.len();
+    let rest = block[at..].trim_start();
+    let end = rest
+        .find(|c: char| c == ',' || c == '}' || c.is_whitespace())
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Parse the hand-rolled throughput JSON (the exact shape [`write_json`]
+/// emits — this is a scanner for our own format, not a general JSON
+/// parser; the crate set has no serde).
+pub fn parse_bench_json(text: &str) -> Result<BenchFile, String> {
+    let placeholder = text.contains("\"placeholder\": true");
+    let at = text.find("\"results\"").ok_or("missing \"results\" array")?;
+    let arr = &text[at..];
+    let open = arr.find('[').ok_or("missing [ after \"results\"")?;
+    let close = arr.rfind(']').ok_or("missing ] closing \"results\"")?;
+    let mut rest = &arr[open + 1..close];
+    let mut records = Vec::new();
+    while let Some(s) = rest.find('{') {
+        let e = rest[s..].find('}').ok_or("unterminated result object")? + s;
+        let block = &rest[s..=e];
+        let get = |key: &str| {
+            json_string_field(block, key).ok_or_else(|| format!("missing {key} in {block}"))
+        };
+        records.push(BenchRecord {
+            problem: get("problem")?,
+            metric: get("metric")?,
+            engine: get("engine")?,
+            value_per_sec: json_number_field(block, "value_per_sec")
+                .ok_or_else(|| format!("missing value_per_sec in {block}"))?,
+        });
+        rest = &rest[e + 1..];
+    }
+    Ok(BenchFile { placeholder, records })
+}
+
+/// One baseline-vs-current comparison row.
+#[derive(Clone, Debug)]
+pub struct CompareRow {
+    pub problem: String,
+    pub metric: String,
+    pub engine: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// Relative change `current/baseline − 1` (negative = regression).
+    pub delta: f64,
+    /// Whether this row can fail the gate (batched paths/grad-paths only;
+    /// the per-path engine rows are informational context).
+    pub gated: bool,
+    pub failed: bool,
+}
+
+/// The gate's verdict over all baseline rows.
+#[derive(Clone, Debug)]
+pub struct CompareReport {
+    pub rows: Vec<CompareRow>,
+    pub failures: Vec<String>,
+    pub placeholder: bool,
+}
+
+impl CompareReport {
+    /// Exit status the CI job should use: failures only count against a
+    /// real (non-placeholder) baseline.
+    pub fn passed(&self) -> bool {
+        self.placeholder || self.failures.is_empty()
+    }
+}
+
+/// Diff `current` against `baseline`: a gated row fails when its
+/// throughput drops by more than `threshold` (e.g. 0.25 = 25%) or is
+/// missing from the current run.
+pub fn compare_throughput(
+    baseline: &BenchFile,
+    current: &BenchFile,
+    threshold: f64,
+) -> CompareReport {
+    let mut rows = Vec::new();
+    let mut failures = Vec::new();
+    for b in &baseline.records {
+        let gated = b.engine == "batched"
+            && (b.metric == "paths_per_sec" || b.metric == "grad_paths_per_sec");
+        let found = current
+            .records
+            .iter()
+            .find(|c| c.problem == b.problem && c.metric == b.metric && c.engine == b.engine);
+        let (current_v, delta, failed) = match found {
+            Some(c) => {
+                let delta = c.value_per_sec / b.value_per_sec - 1.0;
+                let failed = gated && delta < -threshold;
+                if failed {
+                    failures.push(format!(
+                        "{}/{}/{}: {:.1}% regression (max allowed {:.0}%)",
+                        b.problem,
+                        b.metric,
+                        b.engine,
+                        -delta * 100.0,
+                        threshold * 100.0
+                    ));
+                }
+                (c.value_per_sec, delta, failed)
+            }
+            None => {
+                if gated {
+                    failures.push(format!(
+                        "{}/{}/{}: missing from current run",
+                        b.problem, b.metric, b.engine
+                    ));
+                }
+                (f64::NAN, f64::NAN, gated)
+            }
+        };
+        rows.push(CompareRow {
+            problem: b.problem.clone(),
+            metric: b.metric.clone(),
+            engine: b.engine.clone(),
+            baseline: b.value_per_sec,
+            current: current_v,
+            delta,
+            gated,
+            failed,
+        });
+    }
+    // Rows only the current run has (a bench added since the baseline was
+    // recorded): shown as ungated "new" rows so the missing-baseline state
+    // is visible instead of silently dropped — the fix is to refresh the
+    // baseline.
+    for c in &current.records {
+        let known = baseline
+            .records
+            .iter()
+            .any(|b| b.problem == c.problem && b.metric == c.metric && b.engine == c.engine);
+        if !known {
+            rows.push(CompareRow {
+                problem: c.problem.clone(),
+                metric: c.metric.clone(),
+                engine: c.engine.clone(),
+                baseline: f64::NAN,
+                current: c.value_per_sec,
+                delta: f64::NAN,
+                gated: false,
+                failed: false,
+            });
+        }
+    }
+    CompareReport { rows, failures, placeholder: baseline.placeholder }
+}
+
+/// Render the comparison as a markdown table (stdout + CI job summary).
+pub fn markdown_table(report: &CompareReport, threshold: f64) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "## Throughput vs baseline (gate: >{:.0}% regression on batched rows)\n\n",
+        threshold * 100.0
+    ));
+    if report.placeholder {
+        out.push_str(
+            "> **Baseline is a placeholder** — the gate reports but does not fail. \
+             Refresh it on the reference machine: `cargo run --release -- bench \
+             throughput --quick && cp BENCH_throughput.json BENCH_baseline.json`, \
+             then commit.\n\n",
+        );
+    }
+    out.push_str("| problem | metric | engine | baseline/s | current/s | Δ | status |\n");
+    out.push_str("|---|---|---|---:|---:|---:|---|\n");
+    for r in &report.rows {
+        let status = if r.baseline.is_nan() {
+            "new (ungated — refresh baseline)"
+        } else if !r.gated {
+            "info"
+        } else if r.failed {
+            "**FAIL**"
+        } else {
+            "ok"
+        };
+        let base = if r.baseline.is_nan() {
+            "—".to_string()
+        } else {
+            format!("{:.0}", r.baseline)
+        };
+        let (cur, delta) = if r.current.is_nan() {
+            ("missing".to_string(), "—".to_string())
+        } else if r.delta.is_nan() {
+            (format!("{:.0}", r.current), "—".to_string())
+        } else {
+            (format!("{:.0}", r.current), format!("{:+.1}%", r.delta * 100.0))
+        };
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {} |\n",
+            r.problem, r.metric, r.engine, base, cur, delta, status
+        ));
+    }
+    if !report.failures.is_empty() {
+        out.push('\n');
+        for f in &report.failures {
+            out.push_str(&format!("- ❌ {f}\n"));
+        }
+    }
+    out
+}
+
+/// CLI driver for `sdegrad bench compare`: read, diff, print, optionally
+/// append to the job summary; returns the process exit code (0 pass,
+/// 1 regression, 2 usage/io error).
+pub fn run_compare(
+    baseline_path: &str,
+    current_path: &str,
+    threshold: f64,
+    summary_path: Option<&str>,
+) -> i32 {
+    let read_parse = |path: &str| -> Result<BenchFile, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        parse_bench_json(&text).map_err(|e| format!("parsing {path}: {e}"))
+    };
+    let baseline = match read_parse(baseline_path) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("bench compare: {e}");
+            return 2;
+        }
+    };
+    let current = match read_parse(current_path) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("bench compare: {e}");
+            return 2;
+        }
+    };
+    let report = compare_throughput(&baseline, &current, threshold);
+    let table = markdown_table(&report, threshold);
+    println!("{table}");
+    if let Some(p) = summary_path {
+        match std::fs::OpenOptions::new().create(true).append(true).open(p) {
+            Ok(mut f) => {
+                let _ = writeln!(f, "{table}");
+            }
+            Err(e) => eprintln!("bench compare: cannot append summary to {p}: {e}"),
+        }
+    }
+    if report.placeholder {
+        println!("baseline is a placeholder: gate reported, not enforced.");
+        0
+    } else if report.failures.is_empty() {
+        println!("throughput gate: OK ({} rows compared).", report.rows.len());
+        0
+    } else {
+        eprintln!("throughput gate: FAILED ({} regressions).", report.failures.len());
+        1
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -262,5 +563,134 @@ mod tests {
         let json = std::fs::read_to_string("BENCH_throughput.json").expect("artifact written");
         assert!(json.contains("\"bench\": \"throughput\""));
         assert!(json.contains("grad_paths_per_sec"));
+        // The artifact we write must parse back through the gate's
+        // scanner (compare consumes exactly this format).
+        let parsed = parse_bench_json(&json).expect("artifact parses");
+        assert!(!parsed.placeholder);
+        assert_eq!(parsed.records.len(), rows.len());
+        for (rec, row) in parsed.records.iter().zip(&rows) {
+            assert_eq!(rec.problem, row.problem);
+            assert_eq!(rec.metric, row.metric);
+            assert_eq!(rec.engine, row.engine);
+        }
+    }
+
+    fn bench_json(rows: &[(&str, &str, &str, f64)], placeholder: bool) -> String {
+        let mut s = String::from("{\n  \"bench\": \"throughput\",\n  \"quick\": true,\n");
+        if placeholder {
+            s.push_str("  \"placeholder\": true,\n");
+        }
+        s.push_str("  \"results\": [\n");
+        for (i, (p, m, e, v)) in rows.iter().enumerate() {
+            let comma = if i + 1 == rows.len() { "" } else { "," };
+            s.push_str(&format!(
+                "    {{\"problem\": \"{p}\", \"metric\": \"{m}\", \"engine\": \"{e}\", \
+                 \"paths\": 256, \"steps\": 200, \"value_per_sec\": {v}}}{comma}\n"
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    #[test]
+    fn compare_passes_within_threshold() {
+        let base = parse_bench_json(&bench_json(
+            &[
+                ("gbm_d10", "paths_per_sec", "batched", 1000.0),
+                ("gbm_d10", "grad_paths_per_sec", "batched", 500.0),
+                ("gbm_d10", "paths_per_sec", "per_path", 800.0),
+            ],
+            false,
+        ))
+        .unwrap();
+        // 10% slower: inside the 25% budget.
+        let cur = parse_bench_json(&bench_json(
+            &[
+                ("gbm_d10", "paths_per_sec", "batched", 900.0),
+                ("gbm_d10", "grad_paths_per_sec", "batched", 460.0),
+                ("gbm_d10", "paths_per_sec", "per_path", 100.0), // info row: never gates
+            ],
+            false,
+        ))
+        .unwrap();
+        let report = compare_throughput(&base, &cur, 0.25);
+        assert!(report.passed(), "failures: {:?}", report.failures);
+        assert_eq!(report.rows.len(), 3);
+        assert!(report.rows.iter().filter(|r| r.gated).count() == 2);
+        let md = markdown_table(&report, 0.25);
+        assert!(md.contains("| gbm_d10 | paths_per_sec | batched |"), "{md}");
+    }
+
+    /// The acceptance check: an injected >25% synthetic regression on a
+    /// gated row must fail the gate (this is what fails the CI
+    /// `throughput` job).
+    #[test]
+    fn compare_fails_on_injected_regression() {
+        let base = parse_bench_json(&bench_json(
+            &[
+                ("gbm_d10", "paths_per_sec", "batched", 1000.0),
+                ("neural_posterior", "paths_per_sec", "batched", 300.0),
+            ],
+            false,
+        ))
+        .unwrap();
+        let cur = parse_bench_json(&bench_json(
+            &[
+                ("gbm_d10", "paths_per_sec", "batched", 700.0), // −30%
+                ("neural_posterior", "paths_per_sec", "batched", 310.0),
+            ],
+            false,
+        ))
+        .unwrap();
+        let report = compare_throughput(&base, &cur, 0.25);
+        assert!(!report.passed());
+        assert_eq!(report.failures.len(), 1);
+        assert!(report.failures[0].contains("gbm_d10"), "{:?}", report.failures);
+        assert!(markdown_table(&report, 0.25).contains("**FAIL**"));
+        // Exactly at −25%: passes (strictly-greater gate).
+        let cur_edge = parse_bench_json(&bench_json(
+            &[
+                ("gbm_d10", "paths_per_sec", "batched", 750.0),
+                ("neural_posterior", "paths_per_sec", "batched", 300.0),
+            ],
+            false,
+        ))
+        .unwrap();
+        assert!(compare_throughput(&base, &cur_edge, 0.25).passed());
+    }
+
+    #[test]
+    fn compare_fails_on_missing_gated_row_and_skips_placeholder() {
+        let base = parse_bench_json(&bench_json(
+            &[("gbm_d10", "grad_paths_per_sec", "batched", 500.0)],
+            false,
+        ))
+        .unwrap();
+        let cur = parse_bench_json(&bench_json(
+            &[("gbm_d10", "paths_per_sec", "batched", 999.0)],
+            false,
+        ))
+        .unwrap();
+        let report = compare_throughput(&base, &cur, 0.25);
+        assert!(!report.passed());
+        assert!(report.failures[0].contains("missing"));
+        // The current-only row is surfaced as an ungated "new" row rather
+        // than silently dropped.
+        assert!(
+            report.rows.iter().any(|r| r.baseline.is_nan() && r.metric == "paths_per_sec"),
+            "current-only row not surfaced"
+        );
+        assert!(markdown_table(&report, 0.25).contains("refresh baseline"));
+
+        // A placeholder baseline reports but never fails.
+        let base_ph = parse_bench_json(&bench_json(
+            &[("gbm_d10", "grad_paths_per_sec", "batched", 500.0)],
+            true,
+        ))
+        .unwrap();
+        assert!(base_ph.placeholder);
+        let report_ph = compare_throughput(&base_ph, &cur, 0.25);
+        assert!(report_ph.passed());
+        assert!(markdown_table(&report_ph, 0.25).contains("placeholder"));
     }
 }

@@ -1,4 +1,15 @@
-//! Flat-parameter checkpoints: little-endian f64 with a small header.
+//! Checkpoints: little-endian f64 with a small header.
+//!
+//! Two formats:
+//! * `SDEGRAD1` — a bare flat parameter vector ([`save_params`] /
+//!   [`load_params`]): enough for inference/evaluation.
+//! * `SDEGRAD2` — the full [`TrainState`] ([`save_state`] /
+//!   [`load_state`]): parameters **plus the Adam moments, Adam step
+//!   count, and the next training iteration**, so a resumed run takes
+//!   bit-identical optimizer steps to the uninterrupted one (pinned by
+//!   the trainer's resume test). Checkpointing only the parameters resets
+//!   the Adam moments to zero on resume, which visibly kinks the loss
+//!   curve — the bug this format fixes.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -7,6 +18,48 @@ use crate::bail;
 use crate::error::{Context, Result};
 
 const MAGIC: &[u8; 8] = b"SDEGRAD1";
+const MAGIC_STATE: &[u8; 8] = b"SDEGRAD2";
+
+/// Everything a training run needs to continue exactly: parameters, Adam
+/// first/second moments, the Adam step counter, and the next iteration
+/// index (which also drives the minibatch schedule, LR decay, and KL
+/// annealing — all pure functions of the absolute iteration).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainState {
+    pub params: Vec<f64>,
+    pub adam_m: Vec<f64>,
+    pub adam_v: Vec<f64>,
+    pub adam_t: u64,
+    /// Next training iteration (0-based; a run that finished iterations
+    /// `0..n` stores `n`).
+    pub iter: u64,
+    /// Hash of everything that determines the training float stream
+    /// (seed, batch size, substeps, LR schedule, KL schedule, sample
+    /// count, train indices — see the trainer's `schedule_fingerprint`).
+    /// Resuming checks it so a checkpoint cannot silently continue under
+    /// a different seed/config/dataset, which would break the
+    /// bit-identical-resume contract without any visible error.
+    pub fingerprint: u64,
+}
+
+fn write_f64s(f: &mut impl Write, xs: &[f64]) -> Result<()> {
+    for v in xs {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_f64s(f: &mut impl Read, n: usize) -> Result<Vec<f64>> {
+    let mut buf = vec![0u8; n * 8];
+    f.read_exact(&mut buf)?;
+    Ok(buf.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+fn read_u64(f: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
 
 /// Save a flat parameter vector.
 pub fn save_params<P: AsRef<Path>>(path: P, params: &[f64]) -> Result<()> {
@@ -17,10 +70,7 @@ pub fn save_params<P: AsRef<Path>>(path: P, params: &[f64]) -> Result<()> {
         .with_context(|| format!("creating {:?}", path.as_ref()))?;
     f.write_all(MAGIC)?;
     f.write_all(&(params.len() as u64).to_le_bytes())?;
-    for v in params {
-        f.write_all(&v.to_le_bytes())?;
-    }
-    Ok(())
+    write_f64s(&mut f, params)
 }
 
 /// Load a flat parameter vector.
@@ -32,12 +82,52 @@ pub fn load_params<P: AsRef<Path>>(path: P) -> Result<Vec<f64>> {
     if &magic != MAGIC {
         bail!("not an sdegrad checkpoint (bad magic)");
     }
-    let mut len_bytes = [0u8; 8];
-    f.read_exact(&mut len_bytes)?;
-    let n = u64::from_le_bytes(len_bytes) as usize;
-    let mut buf = vec![0u8; n * 8];
-    f.read_exact(&mut buf)?;
-    Ok(buf.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    let n = read_u64(&mut f)? as usize;
+    read_f64s(&mut f, n)
+}
+
+/// Save a full training state (params + optimizer moments + counters).
+pub fn save_state<P: AsRef<Path>>(path: P, state: &TrainState) -> Result<()> {
+    if state.params.len() != state.adam_m.len() || state.params.len() != state.adam_v.len() {
+        bail!(
+            "inconsistent TrainState: {} params vs {}/{} moments",
+            state.params.len(),
+            state.adam_m.len(),
+            state.adam_v.len()
+        );
+    }
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(&path)
+        .with_context(|| format!("creating {:?}", path.as_ref()))?;
+    f.write_all(MAGIC_STATE)?;
+    f.write_all(&state.iter.to_le_bytes())?;
+    f.write_all(&state.adam_t.to_le_bytes())?;
+    f.write_all(&state.fingerprint.to_le_bytes())?;
+    f.write_all(&(state.params.len() as u64).to_le_bytes())?;
+    write_f64s(&mut f, &state.params)?;
+    write_f64s(&mut f, &state.adam_m)?;
+    write_f64s(&mut f, &state.adam_v)
+}
+
+/// Load a full training state.
+pub fn load_state<P: AsRef<Path>>(path: P) -> Result<TrainState> {
+    let mut f =
+        std::fs::File::open(&path).with_context(|| format!("opening {:?}", path.as_ref()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC_STATE {
+        bail!("not an sdegrad training-state checkpoint (bad magic)");
+    }
+    let iter = read_u64(&mut f)?;
+    let adam_t = read_u64(&mut f)?;
+    let fingerprint = read_u64(&mut f)?;
+    let n = read_u64(&mut f)? as usize;
+    let params = read_f64s(&mut f, n)?;
+    let adam_m = read_f64s(&mut f, n)?;
+    let adam_v = read_f64s(&mut f, n)?;
+    Ok(TrainState { params, adam_m, adam_v, adam_t, iter, fingerprint })
 }
 
 #[cfg(test)]
@@ -61,5 +151,86 @@ mod tests {
         let path = dir.join("junk.bin");
         std::fs::write(&path, b"definitely not a checkpoint").unwrap();
         assert!(load_params(&path).is_err());
+        assert!(load_state(&path).is_err());
+    }
+
+    #[test]
+    fn state_roundtrip_is_exact() {
+        let dir = std::env::temp_dir().join("sdegrad_ckpt_test3");
+        let path = dir.join("state.bin");
+        let state = TrainState {
+            params: vec![1.5, -2.25, 1e-300],
+            adam_m: vec![0.125, -3.5, 0.0],
+            adam_v: vec![4.0, 5e-5, 1e300],
+            adam_t: 77,
+            iter: 42,
+            fingerprint: 0xDEAD_BEEF_CAFE_F00D,
+        };
+        save_state(&path, &state).unwrap();
+        let loaded = load_state(&path).unwrap();
+        assert_eq!(state, loaded);
+    }
+
+    #[test]
+    fn formats_are_not_confusable() {
+        let dir = std::env::temp_dir().join("sdegrad_ckpt_test4");
+        let p_params = dir.join("params.bin");
+        let p_state = dir.join("state.bin");
+        save_params(&p_params, &[1.0, 2.0]).unwrap();
+        let state = TrainState {
+            params: vec![1.0],
+            adam_m: vec![0.0],
+            adam_v: vec![0.0],
+            adam_t: 1,
+            iter: 1,
+            fingerprint: 7,
+        };
+        save_state(&p_state, &state).unwrap();
+        assert!(load_state(&p_params).is_err(), "params file read as state");
+        assert!(load_params(&p_state).is_err(), "state file read as params");
+    }
+
+    /// Adam resumed from a saved state takes bit-identical steps —
+    /// "training resumes exactly" at the optimizer level (the trainer-level
+    /// pin lives in tests/trainer_batch.rs).
+    #[test]
+    fn optimizer_resume_via_state_is_exact() {
+        use crate::optim::Adam;
+        let dir = std::env::temp_dir().join("sdegrad_ckpt_test5");
+        let path = dir.join("resume.bin");
+        let g = |i: u64| vec![(i as f64).sin(), (i as f64 * 0.5).cos(), -0.3];
+
+        let mut full = Adam::new(3, 0.02);
+        let mut p_full = vec![0.1, 0.2, 0.3];
+        for i in 0..12 {
+            full.step(&mut p_full, &g(i), 1.0);
+        }
+
+        let mut head = Adam::new(3, 0.02);
+        let mut p_head = vec![0.1, 0.2, 0.3];
+        for i in 0..6 {
+            head.step(&mut p_head, &g(i), 1.0);
+        }
+        let (m, v, t) = head.state();
+        save_state(
+            &path,
+            &TrainState {
+                params: p_head.clone(),
+                adam_m: m.to_vec(),
+                adam_v: v.to_vec(),
+                adam_t: t,
+                iter: 6,
+                fingerprint: 0,
+            },
+        )
+        .unwrap();
+
+        let st = load_state(&path).unwrap();
+        let mut tail = Adam::from_state(0.02, st.adam_m, st.adam_v, st.adam_t);
+        let mut p = st.params;
+        for i in st.iter..12 {
+            tail.step(&mut p, &g(i), 1.0);
+        }
+        assert_eq!(p, p_full, "resumed run diverged from uninterrupted run");
     }
 }

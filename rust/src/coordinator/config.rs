@@ -19,6 +19,11 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Validate every this many iterations (0 = never).
     pub val_every: u64,
+    /// Posterior samples S per sequence in the minibatch ELBO-gradient
+    /// estimate (the batched engine advances all M·S paths together;
+    /// paper training uses 1, larger S tightens the per-iteration
+    /// estimate).
+    pub elbo_samples: usize,
 }
 
 impl Default for TrainConfig {
@@ -35,6 +40,7 @@ impl Default for TrainConfig {
             n_workers: num_threads(),
             seed: 0,
             val_every: 20,
+            elbo_samples: 1,
         }
     }
 }
@@ -87,6 +93,7 @@ impl TrainConfig {
             n_workers: arg(map, "workers", d.n_workers),
             seed: arg(map, "seed", d.seed),
             val_every: arg(map, "val-every", d.val_every),
+            elbo_samples: arg(map, "samples", d.elbo_samples),
         }
     }
 }

@@ -10,6 +10,6 @@ pub mod config;
 pub mod repro;
 pub mod trainer;
 
-pub use checkpoint::{load_params, save_params};
+pub use checkpoint::{load_params, load_state, save_params, save_state, TrainState};
 pub use config::TrainConfig;
-pub use trainer::{train_latent_sde, EvalReport, TrainReport};
+pub use trainer::{train_latent_sde, train_latent_sde_from, EvalReport, TrainReport};

@@ -1,21 +1,28 @@
-//! The latent-SDE trainer: minibatch Adam with data-parallel gradient
-//! averaging across a thread pool, LR decay, KL annealing, validation,
-//! and CSV/JSONL logging.
+//! The latent-SDE trainer: minibatch Adam on the **batched SoA engine**,
+//! with LR decay, KL annealing, validation, CSV/JSONL logging, and exact
+//! resume from a [`TrainState`] checkpoint.
 //!
-//! Parallelism model: each worker thread takes one sequence of the
-//! minibatch at a time from a shared index, computes a full
-//! [`crate::latent::elbo_step`] (forward SDE solve + stochastic adjoint +
-//! encoder/decoder backprop), and the coordinator averages the per-worker
-//! gradient sums (a tree reduction is unnecessary at ≤8 workers; a flat
-//! sum is exact and deterministic given the per-sequence keys). `tokio`
-//! is not in the vendored crate set, so the pool is `std::thread::scope`
-//! (DESIGN.md §3) — the workload is pure CPU compute, not I/O.
+//! Parallelism model: each iteration's minibatch of M sequences × S
+//! posterior samples is one [`crate::latent::elbo_step_batch`] call — the
+//! flattened path list is cut into chunks, each chunk advances all its
+//! paths *together* through batched encoder/solver/adjoint kernels, and
+//! chunks fan across a `std::thread::scope` pool (`tokio`/rayon are not
+//! in the vendored crate set — DESIGN.md §3). Per-path keys are derived
+//! as `key(iter).fold_in(seq_index).fold_in(sample)`, and the engine
+//! reduces per-path gradients in path order, so the batch gradient is a
+//! pure function of (params, minibatch, iter) — independent of worker
+//! count and chunk layout, bit-identical to a sequential scalar
+//! [`crate::latent::elbo_step`] loop (pinned by `tests/trainer_batch.rs`).
+//! The scalar path remains in the tree as that oracle.
+//!
+//! The minibatch schedule, learning-rate decay, and KL annealing are pure
+//! functions of the *absolute* iteration index, which is what makes
+//! resumed runs bit-identical to uninterrupted ones.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-
+use super::checkpoint::TrainState;
 use super::config::TrainConfig;
 use crate::data::TimeSeriesDataset;
-use crate::latent::{elbo_step, ElboConfig, LatentSdeModel};
+use crate::latent::{elbo_step_batch, elbo_value_multi, ElboConfig, LatentSdeModel};
 use crate::metrics::{CsvWriter, OnlineStats, Stopwatch};
 use crate::optim::{clip_grad_norm, Adam, ExponentialDecay, KlAnneal};
 use crate::prng::PrngKey;
@@ -38,6 +45,10 @@ pub struct TrainReport {
     pub history: Vec<IterRecord>,
     pub val_history: Vec<(u64, EvalReport)>,
     pub final_params: Vec<f64>,
+    /// Complete state (params + Adam moments + counters) at the end of
+    /// the run — save with [`super::checkpoint::save_state`] to resume
+    /// exactly via [`train_latent_sde_from`].
+    pub final_state: TrainState,
     pub total_seconds: f64,
 }
 
@@ -49,8 +60,9 @@ pub struct EvalReport {
     pub n_sequences: usize,
 }
 
-/// Sum ELBO gradients over `indices` of `dataset` using `n_workers`
-/// threads. Returns (grad_sum, loss_sum, logpx, klpath, klz0, mse_sum).
+/// One minibatch gradient on the batched engine: sums over all
+/// sequences × samples. Returns (grad_sum, loss_sum, logpx, klpath, klz0,
+/// mse_sum) — the caller divides by `indices.len() * n_samples`.
 #[allow(clippy::too_many_arguments)]
 fn batch_gradients(
     model: &LatentSdeModel,
@@ -59,68 +71,28 @@ fn batch_gradients(
     indices: &[usize],
     key: PrngKey,
     ecfg: &ElboConfig,
+    n_samples: usize,
     n_workers: usize,
 ) -> (Vec<f64>, f64, f64, f64, f64, f64) {
-    let n = indices.len();
-    let next = AtomicUsize::new(0);
-    let workers = n_workers.clamp(1, n.max(1));
-
-    let results: Vec<(Vec<f64>, f64, f64, f64, f64, f64)> = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..workers)
-            .map(|_| {
-                let next = &next;
-                scope.spawn(move || {
-                    let mut grad = vec![0.0; model.n_params];
-                    let (mut loss, mut lpx, mut klp, mut klz, mut mse) =
-                        (0.0, 0.0, 0.0, 0.0, 0.0);
-                    loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= n {
-                            break;
-                        }
-                        let s = indices[i];
-                        let out = elbo_step(
-                            model,
-                            params,
-                            &dataset.times,
-                            dataset.series(s),
-                            key.fold_in(s as u64),
-                            ecfg,
-                        );
-                        for (g, og) in grad.iter_mut().zip(&out.grad) {
-                            *g += og;
-                        }
-                        loss += out.loss;
-                        lpx += out.log_px;
-                        klp += out.kl_path;
-                        klz += out.kl_z0;
-                        mse += out.recon_mse;
-                    }
-                    (grad, loss, lpx, klp, klz, mse)
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
-    });
-
-    let mut grad = vec![0.0; model.n_params];
-    let (mut loss, mut lpx, mut klp, mut klz, mut mse) = (0.0, 0.0, 0.0, 0.0, 0.0);
-    for (g, l, a, b, c, m) in results {
-        for (gi, gv) in grad.iter_mut().zip(&g) {
-            *gi += gv;
-        }
-        loss += l;
-        lpx += a;
-        klp += b;
-        klz += c;
-        mse += m;
-    }
-    (grad, loss, lpx, klp, klz, mse)
+    let obs: Vec<&[f64]> = indices.iter().map(|&s| dataset.series(s)).collect();
+    let keys: Vec<PrngKey> = indices.iter().map(|&s| key.fold_in(s as u64)).collect();
+    let out = elbo_step_batch(
+        model,
+        params,
+        &dataset.times,
+        &obs,
+        &keys,
+        ecfg,
+        n_samples,
+        n_workers,
+    );
+    (out.grad, out.loss, out.log_px, out.kl_path, out.kl_z0, out.recon_mse)
 }
 
-/// Evaluate mean loss / reconstruction MSE over sequences (no gradients —
-/// uses `elbo_step` and discards the gradient; the forward pass dominates
-/// anyway at small substeps).
+/// Evaluate mean loss / reconstruction MSE over sequences — values only,
+/// `n_samples`-sample ELBO estimates on the batched multi-sample
+/// estimator (no gradients are computed, unlike the pre-batched trainer
+/// which ran the full adjoint and threw the gradient away).
 pub fn evaluate(
     model: &LatentSdeModel,
     params: &[f64],
@@ -128,19 +100,74 @@ pub fn evaluate(
     indices: &[usize],
     key: PrngKey,
     ecfg: &ElboConfig,
+    n_samples: usize,
 ) -> EvalReport {
     let mut loss = OnlineStats::new();
     let mut mse = OnlineStats::new();
     for &s in indices {
-        let out = elbo_step(model, params, &dataset.times, dataset.series(s), key.fold_in(s as u64), ecfg);
+        let out = elbo_value_multi(
+            model,
+            params,
+            &dataset.times,
+            dataset.series(s),
+            key.fold_in(s as u64),
+            ecfg,
+            n_samples.max(1),
+        );
         loss.push(out.loss);
         mse.push(out.recon_mse);
     }
     EvalReport { loss: loss.mean(), recon_mse: mse.mean(), n_sequences: indices.len() }
 }
 
+/// The shuffled minibatches of one epoch — a pure function of
+/// `(train_idx, batch_size, key, epoch)`, so resumed runs see the same
+/// schedule (iteration `i` uses epoch `i / bpe`, slot `i % bpe`).
+fn epoch_minibatches(
+    dataset: &TimeSeriesDataset,
+    train_idx: &[usize],
+    batch_size: usize,
+    key: PrngKey,
+    epoch: u64,
+) -> Vec<Vec<usize>> {
+    dataset
+        .minibatches(train_idx, batch_size, key.fold_in(1_000_000 + epoch), epoch)
+        .into_iter()
+        .map(|b| b.indices)
+        .collect()
+}
+
+/// FNV-1a over everything that determines the training float stream:
+/// seed, minibatch geometry, solver substeps, LR/KL schedules, sample
+/// count, and the training indices. Stored in the [`TrainState`] so a
+/// checkpoint refuses to resume under a different seed/config/dataset
+/// split (which would silently void the bit-identical-resume contract).
+/// Worker count is deliberately excluded — it never changes a float.
+fn schedule_fingerprint(cfg: &TrainConfig, train_idx: &[usize]) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let fields = [
+        cfg.seed,
+        cfg.batch_size as u64,
+        cfg.substeps as u64,
+        cfg.lr.to_bits(),
+        cfg.lr_decay.to_bits(),
+        cfg.kl_weight.to_bits(),
+        cfg.kl_anneal_iters,
+        cfg.grad_clip.to_bits(),
+        cfg.elbo_samples.max(1) as u64,
+        train_idx.len() as u64,
+    ];
+    for v in fields.into_iter().chain(train_idx.iter().map(|&i| i as u64)) {
+        h ^= v;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
 /// Train a latent SDE on `train_idx` of `dataset`; optionally log CSV to
-/// `log_path` and validate on `val_idx`.
+/// `log_path` and validate on `val_idx`. Fresh run (see
+/// [`train_latent_sde_from`] for resuming).
 pub fn train_latent_sde(
     model: &LatentSdeModel,
     dataset: &TimeSeriesDataset,
@@ -149,48 +176,99 @@ pub fn train_latent_sde(
     cfg: &TrainConfig,
     log_path: Option<&str>,
 ) -> TrainReport {
+    train_latent_sde_from(model, dataset, train_idx, val_idx, cfg, log_path, None)
+}
+
+/// Train a latent SDE, optionally resuming from a [`TrainState`]. With
+/// `resume` present, the run continues at `resume.iter` for `cfg.iters`
+/// *additional* iterations and is bit-identical to an uninterrupted run
+/// with the larger iteration budget (same seed / config), because the
+/// minibatch schedule, LR decay, KL annealing, and per-path keys are all
+/// pure functions of the absolute iteration, and the checkpoint carries
+/// the Adam moments.
+#[allow(clippy::too_many_arguments)]
+pub fn train_latent_sde_from(
+    model: &LatentSdeModel,
+    dataset: &TimeSeriesDataset,
+    train_idx: &[usize],
+    val_idx: &[usize],
+    cfg: &TrainConfig,
+    log_path: Option<&str>,
+    resume: Option<&TrainState>,
+) -> TrainReport {
     let key = PrngKey::from_seed(cfg.seed);
     let (k_init, k_train) = key.split();
-    let mut params = model.init_params(k_init);
-    let mut adam = Adam::new(params.len(), cfg.lr);
+    let fingerprint = schedule_fingerprint(cfg, train_idx);
+    let (mut params, mut adam, start_iter) = match resume {
+        Some(st) => {
+            assert_eq!(
+                st.params.len(),
+                model.n_params,
+                "resume checkpoint does not match this model"
+            );
+            assert_eq!(
+                st.fingerprint, fingerprint,
+                "resume checkpoint was trained under a different \
+                 seed/config/dataset split — continuing would silently break \
+                 the exact-resume contract"
+            );
+            (
+                st.params.clone(),
+                Adam::from_state(cfg.lr, st.adam_m.clone(), st.adam_v.clone(), st.adam_t),
+                st.iter,
+            )
+        }
+        None => {
+            let params = model.init_params(k_init);
+            let adam = Adam::new(model.n_params, cfg.lr);
+            (params, adam, 0)
+        }
+    };
     let decay = ExponentialDecay::new(cfg.lr_decay);
     let anneal = KlAnneal::new(cfg.kl_weight, cfg.kl_anneal_iters);
+    let n_samples = cfg.elbo_samples.max(1);
 
+    const LOG_HEADER: [&str; 7] =
+        ["iter", "loss", "log_px", "kl_path", "kl_z0", "grad_norm", "seconds"];
     let mut log = log_path.map(|p| {
-        CsvWriter::create(
-            p,
-            &["iter", "loss", "log_px", "kl_path", "kl_z0", "grad_norm", "seconds"],
-        )
-        .expect("creating training log")
+        // A resumed run appends so the earlier segment of the curve
+        // survives; a fresh run truncates.
+        if resume.is_some() {
+            CsvWriter::append_or_create(p, &LOG_HEADER).expect("opening training log")
+        } else {
+            CsvWriter::create(p, &LOG_HEADER).expect("creating training log")
+        }
     });
 
     let total = Stopwatch::new();
     let mut history = Vec::new();
     let mut val_history = Vec::new();
-    let epochs_needed = (cfg.iters as usize * cfg.batch_size).div_ceil(train_idx.len().max(1));
-    let mut batches: Vec<Vec<usize>> = Vec::new();
-    for e in 0..=epochs_needed as u64 {
-        for b in dataset.minibatches(train_idx, cfg.batch_size, k_train.fold_in(1_000_000 + e), e)
-        {
-            batches.push(b.indices);
-        }
-    }
+    let bpe = train_idx.len().div_ceil(cfg.batch_size.max(1)).max(1) as u64;
+    let mut cur_epoch = u64::MAX;
+    let mut epoch_batches: Vec<Vec<usize>> = Vec::new();
 
-    for iter in 0..cfg.iters {
+    for iter in start_iter..start_iter + cfg.iters {
         let sw = Stopwatch::new();
-        let batch = &batches[iter as usize % batches.len()];
+        let epoch = iter / bpe;
+        if epoch != cur_epoch {
+            epoch_batches =
+                epoch_minibatches(dataset, train_idx, cfg.batch_size, k_train, epoch);
+            cur_epoch = epoch;
+        }
+        let batch = epoch_batches[(iter % bpe) as usize].clone();
         let beta = anneal.weight(iter);
         let ecfg = ElboConfig { substeps: cfg.substeps, kl_weight: beta };
         let (mut grad, loss, lpx, klp, klz, _mse) = batch_gradients(
             model,
             &params,
             dataset,
-            batch,
+            &batch,
             k_train.fold_in(iter),
             &ecfg,
+            n_samples,
             cfg.n_workers,
         );
-        let inv = 1.0 / batch.len() as f64;
+        let inv = 1.0 / (batch.len() * n_samples) as f64;
         for g in grad.iter_mut() {
             *g *= inv;
         }
@@ -222,8 +300,9 @@ pub fn train_latent_sde(
 
         if cfg.val_every > 0 && !val_idx.is_empty() && (iter + 1) % cfg.val_every == 0 {
             let ecfg_val = ElboConfig { substeps: cfg.substeps, kl_weight: cfg.kl_weight };
+            let k_val = k_train.fold_in(u64::MAX - iter);
             let report =
-                evaluate(model, &params, dataset, val_idx, k_train.fold_in(u64::MAX - iter), &ecfg_val);
+                evaluate(model, &params, dataset, val_idx, k_val, &ecfg_val, n_samples);
             val_history.push((iter, report));
         }
     }
@@ -231,7 +310,22 @@ pub fn train_latent_sde(
         w.flush().ok();
     }
 
-    TrainReport { history, val_history, final_params: params, total_seconds: total.elapsed_s() }
+    let (m, v, t) = adam.state();
+    let final_state = TrainState {
+        params: params.clone(),
+        adam_m: m.to_vec(),
+        adam_v: v.to_vec(),
+        adam_t: t,
+        iter: start_iter + cfg.iters,
+        fingerprint,
+    };
+    TrainReport {
+        history,
+        val_history,
+        final_params: params,
+        final_state,
+        total_seconds: total.elapsed_s(),
+    }
 }
 
 #[cfg(test)]
@@ -284,23 +378,23 @@ mod tests {
             "training loss did not improve: first5 {first:.2} last5 {last:.2}"
         );
         assert!(report.final_params.iter().all(|p| p.is_finite()));
+        assert_eq!(report.final_state.iter, 25);
+        assert_eq!(report.final_state.adam_t, 25);
     }
 
     #[test]
-    fn parallel_gradients_match_serial() {
-        // Determinism + correctness of the worker pool: the batch gradient
-        // must not depend on the worker count.
+    fn batch_gradient_is_worker_count_independent_exactly() {
+        // Determinism + correctness of the chunked batched engine: the
+        // minibatch gradient must be the same float for any worker count.
         let (model, ds) = tiny_setup();
         let params = model.init_params(PrngKey::from_seed(2));
         let idx: Vec<usize> = (0..6).collect();
         let ecfg = ElboConfig { substeps: 3, kl_weight: 0.5 };
         let key = PrngKey::from_seed(3);
-        let (g1, l1, ..) = batch_gradients(&model, &params, &ds, &idx, key, &ecfg, 1);
-        let (g4, l4, ..) = batch_gradients(&model, &params, &ds, &idx, key, &ecfg, 4);
-        assert!((l1 - l4).abs() < 1e-9, "losses differ: {l1} vs {l4}");
-        for (a, b) in g1.iter().zip(&g4) {
-            assert!((a - b).abs() < 1e-9, "gradient differs across worker counts");
-        }
+        let (g1, l1, ..) = batch_gradients(&model, &params, &ds, &idx, key, &ecfg, 2, 1);
+        let (g4, l4, ..) = batch_gradients(&model, &params, &ds, &idx, key, &ecfg, 2, 4);
+        assert_eq!(l1, l4, "losses differ across worker counts");
+        assert_eq!(g1, g4, "gradient differs across worker counts");
     }
 
     #[test]
@@ -319,5 +413,45 @@ mod tests {
         let report = train_latent_sde(&model, &ds, &idx, &val, &cfg, None);
         assert_eq!(report.val_history.len(), 2);
         assert!(report.val_history[0].1.n_sequences == 2);
+    }
+
+    /// Interrupt + resume must be bit-identical to the uninterrupted run:
+    /// the checkpoint carries the Adam moments and the absolute iteration
+    /// drives every schedule.
+    #[test]
+    fn resumed_training_is_bit_identical() {
+        let (model, ds) = tiny_setup();
+        let idx: Vec<usize> = (0..8).collect();
+        let base = TrainConfig {
+            iters: 8,
+            batch_size: 3,
+            lr: 4e-3,
+            substeps: 2,
+            kl_weight: 0.2,
+            kl_anneal_iters: 6,
+            n_workers: 2,
+            val_every: 0,
+            ..Default::default()
+        };
+        let full = train_latent_sde(&model, &ds, &idx, &[], &base, None);
+
+        let head_cfg = TrainConfig { iters: 3, ..base };
+        let head = train_latent_sde(&model, &ds, &idx, &[], &head_cfg, None);
+        let tail_cfg = TrainConfig { iters: 5, ..base };
+        let tail = train_latent_sde_from(
+            &model,
+            &ds,
+            &idx,
+            &[],
+            &tail_cfg,
+            None,
+            Some(&head.final_state),
+        );
+        assert_eq!(tail.final_params, full.final_params, "resume diverged");
+        assert_eq!(tail.final_state.adam_t, full.final_state.adam_t);
+        assert_eq!(
+            tail.history.iter().map(|r| r.loss).collect::<Vec<_>>(),
+            full.history[3..].iter().map(|r| r.loss).collect::<Vec<_>>(),
+        );
     }
 }

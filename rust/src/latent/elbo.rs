@@ -25,12 +25,16 @@
 //! [`LatentSdeModel::init_params`]'s layout — ready for
 //! [`crate::optim::Adam`].
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 use super::model::{Encoder, LatentSdeModel};
-use super::posterior::PosteriorSde;
+use super::posterior::{CtxAdjointOps, CtxBatchForwardFunc, PosteriorSde};
+use crate::adjoint::batch::BatchBackwardSolver;
 use crate::adjoint::BackwardSolver;
 use crate::api::SdeProblem;
 use crate::brownian::{BatchBrownian, BrownianPath};
-use crate::nn::gru::GruStepCache;
+use crate::nn::gru::{GruBatchCache, GruStepCache};
+use crate::nn::MlpBatchCache;
 use crate::prng::PrngKey;
 use crate::solvers::{batch_grid_core, uniform_grid, BatchForwardFunc, Method, SolveStats};
 
@@ -544,6 +548,563 @@ pub fn elbo_value_multi(
     }
 }
 
+/// Output of [`elbo_step_batch`]: minibatch totals plus per-path
+/// diagnostics. All scalar fields are **sums over paths** (divide by
+/// [`BatchElboOutput::n_paths`] for minibatch means — the trainer owns
+/// the scaling so the unreduced floats stay bit-comparable to a scalar
+/// loop).
+#[derive(Clone, Debug)]
+pub struct BatchElboOutput {
+    /// Σ over paths of the per-path loss.
+    pub loss: f64,
+    pub log_px: f64,
+    pub kl_path: f64,
+    pub kl_z0: f64,
+    pub recon_mse: f64,
+    /// Σ over paths of the per-path flat gradient, reduced in path order —
+    /// bit-identical to summing sequential [`elbo_step`] gradients.
+    pub grad: Vec<f64>,
+    /// Per-path losses; path `m·S + s` is sample `s` of sequence `m`.
+    pub per_path_loss: Vec<f64>,
+    /// Total paths = sequences × samples.
+    pub n_paths: usize,
+    /// Per-path solve statistics (uniform across paths).
+    pub forward_stats: SolveStats,
+    pub backward_stats: SolveStats,
+}
+
+/// Batched encoder results for one chunk of paths (rows are paths).
+struct BatchEncode {
+    /// Context rows, interval-major: interval `k`'s rows at
+    /// `[(k·C + c)·dc ..]`.
+    ctx: Vec<f64>,
+    mu0: Vec<f64>,
+    logvar0: Vec<f64>,
+    /// Encoder hidden rows fed to the q-head (`[C×eh]`).
+    q_in: Vec<f64>,
+    /// GRU step caches in processing order (reverse time), or empty.
+    gru_caches: Vec<GruBatchCache>,
+    /// Hidden rows after each GRU step (`hs[s]: [C×hd]`), or empty.
+    hs: Vec<Vec<f64>>,
+    /// The MLP-encoder input rows, or empty.
+    mlp_input: Vec<f64>,
+}
+
+/// Batched q-head pass over C encoder-state rows: `(μ₀, logvar₀)` rows,
+/// de-interleaved from the head's `[C×2dz]` output.
+fn q_head_batch(
+    model: &LatentSdeModel,
+    params: &[f64],
+    q_in: &[f64],
+    c_n: usize,
+) -> (Vec<f64>, Vec<f64>) {
+    let dz = model.cfg.latent_dim;
+    let mut q_out = vec![0.0; c_n * 2 * dz];
+    model.q_head.forward_batch(params, q_in, &mut q_out);
+    let mut mu0 = vec![0.0; c_n * dz];
+    let mut logvar0 = vec![0.0; c_n * dz];
+    for c in 0..c_n {
+        mu0[c * dz..(c + 1) * dz].copy_from_slice(&q_out[c * 2 * dz..c * 2 * dz + dz]);
+        logvar0[c * dz..(c + 1) * dz].copy_from_slice(&q_out[c * 2 * dz + dz..(c + 1) * 2 * dz]);
+    }
+    (mu0, logvar0)
+}
+
+/// Batched encoder forward over C paths (`rows[c]` is path c's sequence).
+/// Row-for-row bit-identical to the scalar [`encode`].
+fn encode_batch(
+    model: &LatentSdeModel,
+    params: &[f64],
+    rows: &[&[f64]],
+    n_obs: usize,
+) -> BatchEncode {
+    let dx = model.cfg.obs_dim;
+    let dc = model.cfg.context_dim;
+    let c_n = rows.len();
+    match &model.encoder {
+        Encoder::Gru { cell, ctx_head } => {
+            let hd = model.cfg.enc_hidden;
+            let mut h = vec![0.0; c_n * hd];
+            let mut h_next = vec![0.0; c_n * hd];
+            let mut x = vec![0.0; c_n * dx];
+            let mut caches = Vec::with_capacity(n_obs);
+            let mut hs = Vec::with_capacity(n_obs);
+            for s in 0..n_obs {
+                let k = n_obs - 1 - s;
+                for (c, seq) in rows.iter().enumerate() {
+                    x[c * dx..(c + 1) * dx].copy_from_slice(&seq[k * dx..(k + 1) * dx]);
+                }
+                let mut cache = cell.batch_cache(c_n);
+                cell.forward_batch(params, &x, &h, &mut cache, &mut h_next);
+                caches.push(cache);
+                h.copy_from_slice(&h_next);
+                hs.push(h.clone());
+            }
+            let mut ctx = vec![0.0; (n_obs - 1) * c_n * dc];
+            for k in 1..n_obs {
+                let s = n_obs - 1 - k;
+                ctx_head.forward_batch(
+                    params,
+                    &hs[s],
+                    &mut ctx[(k - 1) * c_n * dc..k * c_n * dc],
+                );
+            }
+            let q_in = hs[n_obs - 1].clone();
+            let (mu0, logvar0) = q_head_batch(model, params, &q_in, c_n);
+            BatchEncode { ctx, mu0, logvar0, q_in, gru_caches: caches, hs, mlp_input: Vec::new() }
+        }
+        Encoder::Mlp { net, n_frames } => {
+            let eh = model.cfg.enc_hidden;
+            let n_frames = (*n_frames).min(n_obs);
+            let din = dx * n_frames;
+            let mut input = vec![0.0; c_n * din];
+            for (c, seq) in rows.iter().enumerate() {
+                input[c * din..(c + 1) * din].copy_from_slice(&seq[..din]);
+            }
+            let mut cache = net.batch_cache(c_n);
+            let mut out = vec![0.0; c_n * (eh + dc)];
+            net.forward_batch(params, &input, &mut cache, &mut out);
+            let mut q_in = vec![0.0; c_n * eh];
+            let mut ctx = vec![0.0; (n_obs - 1) * c_n * dc];
+            for c in 0..c_n {
+                q_in[c * eh..(c + 1) * eh].copy_from_slice(&out[c * (eh + dc)..c * (eh + dc) + eh]);
+                let ctx_static = &out[c * (eh + dc) + eh..(c + 1) * (eh + dc)];
+                for k in 0..n_obs - 1 {
+                    ctx[(k * c_n + c) * dc..(k * c_n + c + 1) * dc].copy_from_slice(ctx_static);
+                }
+            }
+            let (mu0, logvar0) = q_head_batch(model, params, &q_in, c_n);
+            BatchEncode {
+                ctx,
+                mu0,
+                logvar0,
+                q_in,
+                gru_caches: Vec::new(),
+                hs: Vec::new(),
+                mlp_input: input,
+            }
+        }
+    }
+}
+
+/// Per-chunk results: per-path rows only — the caller performs the
+/// path-ordered reduction so chunk layout never changes a float.
+struct ChunkOut {
+    /// Per-path flat gradients, `[C × n_params]`.
+    grads: Vec<f64>,
+    loss: Vec<f64>,
+    log_px: Vec<f64>,
+    kl_path: Vec<f64>,
+    kl_z0: Vec<f64>,
+    mse: Vec<f64>,
+    forward_stats: SolveStats,
+    backward_stats: SolveStats,
+}
+
+/// Batched decoder observation-gradient injection at obs time `k`: adds
+/// `∂(−log p(x_k|z_k))/∂z` into the `a_z` rows and the decoder parameter
+/// gradients into each path's gradient block. Mirrors the scalar
+/// `add_obs_grad` float-for-float per row.
+#[allow(clippy::too_many_arguments)]
+fn add_obs_grad_batch(
+    model: &LatentSdeModel,
+    params: &[f64],
+    rows: &[&[f64]],
+    y_obs: &[f64],
+    k: usize,
+    aug: usize,
+    inv_var: f64,
+    dec_cache: &mut MlpBatchCache,
+    z_in: &mut [f64],
+    xhat: &mut [f64],
+    dxh: &mut [f64],
+    dz_buf: &mut [f64],
+    a: &mut [f64],
+    grads: &mut [f64],
+) {
+    let dz = model.cfg.latent_dim;
+    let dx = model.cfg.obs_dim;
+    let c_n = rows.len();
+    for c in 0..c_n {
+        z_in[c * dz..(c + 1) * dz]
+            .copy_from_slice(&y_obs[(k * c_n + c) * aug..(k * c_n + c) * aug + dz]);
+    }
+    model.decoder.forward_batch(params, z_in, dec_cache, xhat);
+    for c in 0..c_n {
+        let x_k = &rows[c][k * dx..(k + 1) * dx];
+        for i in 0..dx {
+            // d(−log N)/dx̂ = (x̂ − x)/s².
+            dxh[c * dx + i] = (xhat[c * dx + i] - x_k[i]) * inv_var;
+        }
+    }
+    dz_buf.fill(0.0);
+    model.decoder.vjp_batch(params, dec_cache, dxh, dz_buf, grads, model.n_params);
+    for c in 0..c_n {
+        for i in 0..dz {
+            a[c * aug + i] += dz_buf[c * dz + i];
+        }
+    }
+}
+
+/// One chunk of the batched ELBO step: paths `p0..p1` of the flattened
+/// (sequence-major) path list advance together through batched encoder,
+/// forward solve, augmented adjoint, and encoder BPTT kernels.
+#[allow(clippy::too_many_arguments)]
+fn elbo_chunk(
+    model: &LatentSdeModel,
+    params: &[f64],
+    times: &[f64],
+    obs_seqs: &[&[f64]],
+    keys: &[PrngKey],
+    cfg: &ElboConfig,
+    n_samples: usize,
+    p0: usize,
+    p1: usize,
+) -> ChunkOut {
+    let dz = model.cfg.latent_dim;
+    let dx = model.cfg.obs_dim;
+    let dc = model.cfg.context_dim;
+    let n_obs = times.len();
+    let aug = dz + 1;
+    let s_obs = model.cfg.obs_noise_std;
+    let beta = cfg.kl_weight;
+    let c_n = p1 - p0;
+    let rows: Vec<&[f64]> = (0..c_n).map(|c| obs_seqs[(p0 + c) / n_samples]).collect();
+
+    // ---- 1. Batched encode + per-path reparameterized z0. ------------
+    let enc = encode_batch(model, params, &rows, n_obs);
+    let sde = PosteriorSde::new(model);
+    let n_sde = sde.sde_param_len();
+
+    let mut y = vec![0.0; c_n * aug];
+    let mut eps = vec![0.0; c_n * dz];
+    let mut bm_sources = Vec::with_capacity(c_n);
+    for c in 0..c_n {
+        let p = p0 + c;
+        let (k_eps, k_bm) = keys[p / n_samples].fold_in((p % n_samples) as u64).split();
+        k_eps.fill_normal(0, &mut eps[c * dz..(c + 1) * dz]);
+        for i in 0..dz {
+            y[c * aug + i] =
+                enc.mu0[c * dz + i] + (0.5 * enc.logvar0[c * dz + i]).exp() * eps[c * dz + i];
+        }
+        bm_sources.push(BrownianPath::new(k_bm, aug, times[0], times[n_obs - 1]));
+    }
+    let mut bm = BatchBrownian::new(bm_sources);
+
+    // ---- 2. Batched piecewise forward solve with running KL. ---------
+    let mut y_obs = vec![0.0; n_obs * c_n * aug];
+    y_obs[..c_n * aug].copy_from_slice(&y);
+    let mut forward_stats = SolveStats::default();
+    let mut y_next = vec![0.0; c_n * aug];
+    for k in 1..n_obs {
+        let ctx_k = &enc.ctx[(k - 1) * c_n * dc..k * c_n * dc];
+        let grid = uniform_grid(times[k - 1], times[k], cfg.substeps.max(1));
+        let mut sys = CtxBatchForwardFunc::new(&sde, &params[..n_sde], ctx_k, c_n);
+        let st = batch_grid_core(&mut sys, Method::Heun, &y, &grid, &mut bm, &mut y_next);
+        forward_stats.steps += st.steps;
+        forward_stats.nfe_drift += st.nfe_drift;
+        forward_stats.nfe_diffusion += st.nfe_diffusion;
+        y.copy_from_slice(&y_next);
+        y_obs[k * c_n * aug..(k + 1) * c_n * aug].copy_from_slice(&y);
+    }
+
+    // ---- 3. Batched decoding + per-path loss components. -------------
+    let mut dec_cache = model.decoder.batch_cache(c_n);
+    let mut z_in = vec![0.0; c_n * dz];
+    let mut xhat = vec![0.0; c_n * dx];
+    let mut log_px = vec![0.0; c_n];
+    let mut sq_err = vec![0.0; c_n];
+    for k in 0..n_obs {
+        for c in 0..c_n {
+            z_in[c * dz..(c + 1) * dz]
+                .copy_from_slice(&y_obs[(k * c_n + c) * aug..(k * c_n + c) * aug + dz]);
+        }
+        model.decoder.forward_batch(params, &z_in, &mut dec_cache, &mut xhat);
+        for c in 0..c_n {
+            let x_k = &rows[c][k * dx..(k + 1) * dx];
+            let xh = &xhat[c * dx..(c + 1) * dx];
+            log_px[c] += gaussian_logpdf(x_k, xh, s_obs);
+            sq_err[c] += x_k.iter().zip(xh).map(|(a, b)| (a - b) * (a - b)).sum::<f64>();
+        }
+    }
+
+    let mu_p = &params[model.pz0_mean_off..model.pz0_mean_off + dz];
+    let lv_p = &params[model.pz0_logvar_off..model.pz0_logvar_off + dz];
+    let mut kl_z0 = vec![0.0; c_n];
+    for c in 0..c_n {
+        for i in 0..dz {
+            let var_q = enc.logvar0[c * dz + i].exp();
+            let var_p = lv_p[i].exp();
+            let dmu = enc.mu0[c * dz + i] - mu_p[i];
+            kl_z0[c] +=
+                0.5 * (lv_p[i] - enc.logvar0[c * dz + i] + (var_q + dmu * dmu) / var_p - 1.0);
+        }
+    }
+    let mut kl_path = vec![0.0; c_n];
+    let mut loss = vec![0.0; c_n];
+    let mut mse = vec![0.0; c_n];
+    for c in 0..c_n {
+        kl_path[c] = y_obs[((n_obs - 1) * c_n + c) * aug + dz];
+        loss[c] = -log_px[c] + beta * (kl_path[c] + kl_z0[c]);
+        mse[c] = sq_err[c] / (n_obs * dx) as f64;
+    }
+
+    // ---- 4. Batched backward pass. -----------------------------------
+    let n_params = model.n_params;
+    let mut grads = vec![0.0; c_n * n_params];
+    let mut dctx = vec![0.0; (n_obs - 1) * c_n * dc];
+    let mut backward_stats = SolveStats::default();
+    let mut a = vec![0.0; c_n * aug];
+    for c in 0..c_n {
+        a[c * aug + dz] = beta; // ∂loss/∂ℓ_T per path
+    }
+    let inv_var = 1.0 / (s_obs * s_obs);
+    let mut dxh = vec![0.0; c_n * dx];
+    let mut dz_buf = vec![0.0; c_n * dz];
+
+    add_obs_grad_batch(
+        model, params, &rows, &y_obs, n_obs - 1, aug, inv_var, &mut dec_cache, &mut z_in,
+        &mut xhat, &mut dxh, &mut dz_buf, &mut a, &mut grads,
+    );
+
+    let mut yb = y_obs[(n_obs - 1) * c_n * aug..].to_vec();
+    let p_aug = n_sde + dc;
+    let mut ath = vec![0.0; c_n * p_aug];
+    // One batched solver for all intervals: scratch is O(B·p) and
+    // reallocating per interval would dominate allocation traffic, as in
+    // the scalar path.
+    let mut solver = BatchBackwardSolver::new(CtxAdjointOps::new(&sde, &params[..n_sde], c_n));
+    for k in (1..n_obs).rev() {
+        solver.ops_mut().set_ctx(&enc.ctx[(k - 1) * c_n * dc..k * c_n * dc]);
+        let grid = uniform_grid(times[k], times[k - 1], cfg.substeps); // descending
+        ath.fill(0.0);
+        // Replay the forward pass's realized paths through the same
+        // per-path Brownian sources.
+        solver.solve_interval(&grid, &mut yb, &mut a, &mut ath, &mut bm, &mut backward_stats);
+        for c in 0..c_n {
+            let g = &mut grads[c * n_params..(c + 1) * n_params];
+            for (gi, ai) in g[..n_sde].iter_mut().zip(&ath[c * p_aug..c * p_aug + n_sde]) {
+                *gi += ai;
+            }
+            dctx[((k - 1) * c_n + c) * dc..((k - 1) * c_n + c + 1) * dc]
+                .copy_from_slice(&ath[c * p_aug + n_sde..(c + 1) * p_aug]);
+        }
+        add_obs_grad_batch(
+            model, params, &rows, &y_obs, k - 1, aug, inv_var, &mut dec_cache, &mut z_in,
+            &mut xhat, &mut dxh, &mut dz_buf, &mut a, &mut grads,
+        );
+        yb.copy_from_slice(&y_obs[(k - 1) * c_n * aug..k * c_n * aug]);
+    }
+
+    // ---- 5. z0 / q(z0) / p(z0) gradients per path. ---------------------
+    let mut dmu0 = vec![0.0; c_n * dz];
+    let mut dlv0 = vec![0.0; c_n * dz];
+    for c in 0..c_n {
+        let g = &mut grads[c * n_params..(c + 1) * n_params];
+        for i in 0..dz {
+            dmu0[c * dz + i] = a[c * aug + i];
+            dlv0[c * dz + i] =
+                a[c * aug + i] * eps[c * dz + i] * 0.5 * (0.5 * enc.logvar0[c * dz + i]).exp();
+        }
+        for i in 0..dz {
+            let var_q = enc.logvar0[c * dz + i].exp();
+            let var_p = lv_p[i].exp();
+            let dmu = enc.mu0[c * dz + i] - mu_p[i];
+            dmu0[c * dz + i] += beta * dmu / var_p;
+            dlv0[c * dz + i] += beta * 0.5 * (var_q / var_p - 1.0);
+            g[model.pz0_mean_off + i] += beta * (-dmu / var_p);
+            g[model.pz0_logvar_off + i] += beta * 0.5 * (1.0 - (var_q + dmu * dmu) / var_p);
+        }
+    }
+
+    // ---- 6. Batched encoder backward. ----------------------------------
+    let eh = enc.q_in.len() / c_n;
+    let mut dq_out = vec![0.0; c_n * 2 * dz];
+    for c in 0..c_n {
+        dq_out[c * 2 * dz..c * 2 * dz + dz].copy_from_slice(&dmu0[c * dz..(c + 1) * dz]);
+        dq_out[c * 2 * dz + dz..(c + 1) * 2 * dz].copy_from_slice(&dlv0[c * dz..(c + 1) * dz]);
+    }
+    let mut dq_in = vec![0.0; c_n * eh];
+    model.q_head.vjp_batch(params, &enc.q_in, &dq_out, &mut dq_in, &mut grads, n_params);
+
+    match &model.encoder {
+        Encoder::Gru { cell, ctx_head } => {
+            let hd = model.cfg.enc_hidden;
+            let mut dh = vec![0.0; c_n * hd];
+            let mut dh_prev = vec![0.0; c_n * hd];
+            let mut dx_sink = vec![0.0; c_n * dx];
+            for s in (0..n_obs).rev() {
+                if s == n_obs - 1 {
+                    for (d, q) in dh.iter_mut().zip(&dq_in) {
+                        *d += q;
+                    }
+                } else {
+                    let k = n_obs - 1 - s;
+                    ctx_head.vjp_batch(
+                        params,
+                        &enc.hs[s],
+                        &dctx[(k - 1) * c_n * dc..k * c_n * dc],
+                        &mut dh,
+                        &mut grads,
+                        n_params,
+                    );
+                }
+                dh_prev.fill(0.0);
+                dx_sink.fill(0.0);
+                cell.vjp_batch(
+                    params,
+                    &enc.gru_caches[s],
+                    &dh,
+                    &mut dx_sink,
+                    &mut dh_prev,
+                    &mut grads,
+                    n_params,
+                );
+                dh.copy_from_slice(&dh_prev);
+            }
+        }
+        Encoder::Mlp { net, .. } => {
+            let mut dout = vec![0.0; c_n * (eh + dc)];
+            for c in 0..c_n {
+                dout[c * (eh + dc)..c * (eh + dc) + eh]
+                    .copy_from_slice(&dq_in[c * eh..(c + 1) * eh]);
+                for k in 0..n_obs - 1 {
+                    for j in 0..dc {
+                        dout[c * (eh + dc) + eh + j] += dctx[(k * c_n + c) * dc + j];
+                    }
+                }
+            }
+            let mut cache = net.batch_cache(c_n);
+            let mut out = vec![0.0; c_n * (eh + dc)];
+            net.forward_batch(params, &enc.mlp_input, &mut cache, &mut out);
+            let mut dx_sink = vec![0.0; enc.mlp_input.len()];
+            net.vjp_batch(params, &mut cache, &dout, &mut dx_sink, &mut grads, n_params);
+        }
+    }
+
+    ChunkOut { grads, loss, log_px, kl_path, kl_z0, mse, forward_stats, backward_stats }
+}
+
+/// One minibatch ELBO step with full gradients on the **batched SoA
+/// engine**: S posterior samples × M sequences advance together — batched
+/// encoder passes ([`crate::nn::GruCell::forward_batch`]), one batched
+/// piecewise forward solve per chunk with per-path encoder context, the
+/// batched augmented stochastic adjoint
+/// ([`crate::adjoint::batch`]), and batched encoder/decoder backprop —
+/// fanned across a scoped thread pool in path chunks.
+///
+/// Path `m·S + s` uses `keys[m].fold_in(s)`, and every per-path float is
+/// computed independently of the batch around it, so the result is
+/// **bit-identical** (exact f64) to the sequential scalar loop
+///
+/// ```ignore
+/// for m in 0..M { for s in 0..S {
+///     elbo_step(model, params, times, obs_seqs[m], keys[m].fold_in(s), cfg)
+/// } }
+/// ```
+///
+/// with gradients summed in path order — for any chunk layout and any
+/// `n_workers` (pinned by `tests/trainer_batch.rs`). [`elbo_step`] remains
+/// the scalar reference oracle.
+#[allow(clippy::too_many_arguments)]
+pub fn elbo_step_batch(
+    model: &LatentSdeModel,
+    params: &[f64],
+    times: &[f64],
+    obs_seqs: &[&[f64]],
+    keys: &[PrngKey],
+    cfg: &ElboConfig,
+    n_samples: usize,
+    n_workers: usize,
+) -> BatchElboOutput {
+    let n_obs = times.len();
+    let dx = model.cfg.obs_dim;
+    assert!(n_obs >= 2, "elbo_step_batch: need at least two observations");
+    assert!(!obs_seqs.is_empty(), "elbo_step_batch: empty minibatch");
+    assert_eq!(obs_seqs.len(), keys.len(), "elbo_step_batch: one key per sequence");
+    assert!(n_samples > 0, "elbo_step_batch: need at least one sample");
+    for obs in obs_seqs {
+        assert_eq!(obs.len(), n_obs * dx, "elbo_step_batch: obs layout mismatch");
+    }
+    let b_total = obs_seqs.len() * n_samples;
+    let workers = n_workers.clamp(1, b_total);
+    // Bigger chunks keep the batched kernels hotter; the cap bounds
+    // per-chunk scratch. Chunk layout never changes a float: every path's
+    // numbers are computed independently and reduced in path order below.
+    let chunk = b_total.div_ceil(workers).clamp(1, 16);
+    let n_chunks = b_total.div_ceil(chunk);
+
+    let run_chunk = |ci: usize| {
+        let lo = ci * chunk;
+        let hi = ((ci + 1) * chunk).min(b_total);
+        elbo_chunk(model, params, times, obs_seqs, keys, cfg, n_samples, lo, hi)
+    };
+    let chunk_outs: Vec<ChunkOut> = if workers == 1 || n_chunks == 1 {
+        (0..n_chunks).map(run_chunk).collect()
+    } else {
+        let next = AtomicUsize::new(0);
+        let mut slots: Vec<Option<ChunkOut>> = (0..n_chunks).map(|_| None).collect();
+        let results: Vec<Vec<(usize, ChunkOut)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers.min(n_chunks))
+                .map(|_| {
+                    let next = &next;
+                    let run_chunk = &run_chunk;
+                    scope.spawn(move || {
+                        let mut done = Vec::new();
+                        loop {
+                            let ci = next.fetch_add(1, Ordering::Relaxed);
+                            if ci >= n_chunks {
+                                break;
+                            }
+                            done.push((ci, run_chunk(ci)));
+                        }
+                        done
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("elbo worker panicked")).collect()
+        });
+        for worker_out in results {
+            for (ci, co) in worker_out {
+                slots[ci] = Some(co);
+            }
+        }
+        slots.into_iter().map(|s| s.expect("chunk not computed")).collect()
+    };
+
+    // Path-ordered reduction — bit-identical to a sequential per-path
+    // accumulation regardless of chunk layout or worker count.
+    let n_params = model.n_params;
+    let mut grad = vec![0.0; n_params];
+    let (mut loss, mut log_px, mut kl_path, mut kl_z0, mut mse) = (0.0, 0.0, 0.0, 0.0, 0.0);
+    let mut per_path_loss = Vec::with_capacity(b_total);
+    for co in &chunk_outs {
+        for c in 0..co.loss.len() {
+            for (g, og) in grad.iter_mut().zip(&co.grads[c * n_params..(c + 1) * n_params]) {
+                *g += og;
+            }
+            loss += co.loss[c];
+            log_px += co.log_px[c];
+            kl_path += co.kl_path[c];
+            kl_z0 += co.kl_z0[c];
+            mse += co.mse[c];
+            per_path_loss.push(co.loss[c]);
+        }
+    }
+    BatchElboOutput {
+        loss,
+        log_px,
+        kl_path,
+        kl_z0,
+        recon_mse: mse,
+        grad,
+        per_path_loss,
+        n_paths: b_total,
+        forward_stats: chunk_outs[0].forward_stats,
+        backward_stats: chunk_outs[0].backward_stats,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -577,7 +1138,8 @@ mod tests {
         let model = LatentSdeModel::new(tiny_cfg());
         let params = model.init_params(PrngKey::from_seed(1));
         let (times, obs) = toy_sequence(5, 2, 2);
-        let out = elbo_step(&model, &params, &times, &obs, PrngKey::from_seed(3), &ElboConfig::default());
+        let out =
+            elbo_step(&model, &params, &times, &obs, PrngKey::from_seed(3), &ElboConfig::default());
         assert!(out.loss.is_finite());
         assert!(out.kl_path >= 0.0, "path KL must be ≥ 0: {}", out.kl_path);
         assert!(out.kl_z0 >= 0.0, "z0 KL must be ≥ 0: {}", out.kl_z0);
@@ -709,6 +1271,42 @@ mod tests {
         let mean: f64 =
             four.per_sample_loss.iter().sum::<f64>() / four.per_sample_loss.len() as f64;
         assert!((four.loss - mean).abs() < 1e-12);
+    }
+
+    /// The batched minibatch step must equal a sequential scalar loop
+    /// float-for-float (the full batch-size × worker-count matrix lives
+    /// in `tests/trainer_batch.rs`).
+    #[test]
+    fn elbo_step_batch_matches_scalar_loop_exactly() {
+        let model = LatentSdeModel::new(tiny_cfg());
+        let params = model.init_params(PrngKey::from_seed(60));
+        let (times, obs_a) = toy_sequence(5, 2, 61);
+        let (_, obs_b) = toy_sequence(5, 2, 62);
+        let key = PrngKey::from_seed(63);
+        let cfg = ElboConfig { substeps: 3, kl_weight: 0.7 };
+        let keys = [key.fold_in(0), key.fold_in(1)];
+        let obs_seqs: Vec<&[f64]> = vec![&obs_a, &obs_b];
+        let n_samples = 2;
+
+        let out = elbo_step_batch(&model, &params, &times, &obs_seqs, &keys, &cfg, n_samples, 1);
+
+        let mut grad_ref = vec![0.0; model.n_params];
+        let mut loss_ref = 0.0;
+        let mut per_path = Vec::new();
+        for (m, obs) in obs_seqs.iter().enumerate() {
+            for s in 0..n_samples {
+                let o = elbo_step(&model, &params, &times, obs, keys[m].fold_in(s as u64), &cfg);
+                for (g, og) in grad_ref.iter_mut().zip(&o.grad) {
+                    *g += og;
+                }
+                loss_ref += o.loss;
+                per_path.push(o.loss);
+            }
+        }
+        assert_eq!(out.grad, grad_ref, "batched gradient != scalar loop");
+        assert_eq!(out.loss, loss_ref);
+        assert_eq!(out.per_path_loss, per_path);
+        assert_eq!(out.n_paths, 4);
     }
 
     #[test]

@@ -25,8 +25,12 @@
 //!   interval-by-interval stochastic adjoint → encoder/decoder backprop →
 //!   one flat gradient. Setting `DiffusionMode::Off` recovers the latent
 //!   ODE baseline of Table 2 (zero diffusion, zero path-KL, ODE adjoint).
-//!   [`elbo_value_multi`] computes S-sample ELBO estimates on the batched
-//!   SoA engine (all S posterior paths advance together per interval).
+//!   [`elbo_step_batch`] is the **batched minibatch engine** the trainer
+//!   runs on: S posterior samples × M sequences advance together through
+//!   batched encoder/solver/adjoint kernels (per-path encoder context in
+//!   the parameter tail), bit-identical to a sequential [`elbo_step`]
+//!   loop. [`elbo_value_multi`] computes S-sample ELBO estimates (values
+//!   only) on the same engine.
 //! * [`sample`] — prior/posterior path sampling for Figures 6/8/9.
 
 pub mod elbo;
@@ -34,7 +38,10 @@ pub mod model;
 pub mod posterior;
 pub mod sample;
 
-pub use elbo::{elbo_step, elbo_value_multi, ElboConfig, ElboOutput, MultiElboOutput};
+pub use elbo::{
+    elbo_step, elbo_step_batch, elbo_value_multi, BatchElboOutput, ElboConfig, ElboOutput,
+    MultiElboOutput,
+};
 pub use model::{DiffusionMode, EncoderKind, LatentSdeConfig, LatentSdeModel};
 pub use posterior::PosteriorSde;
 pub use sample::{decode_path, sample_posterior_path, sample_prior_path};

@@ -21,6 +21,7 @@
 use std::cell::RefCell;
 
 use super::model::{DiffusionMode, LatentSdeModel};
+use crate::adjoint::batch::BatchAugmentedOps;
 use crate::nn::{MlpBatchCache, MlpCache};
 use crate::sde::{BatchSde, BatchSdeVjp, Calculus, Sde, SdeVjp};
 
@@ -236,6 +237,102 @@ impl<'a> PosteriorSde<'a> {
             DiffusionMode::Off => 0.0,
         }
     }
+
+    /// Batched drift core shared by the shared-context and per-path-context
+    /// entry points: `ctx` holds one context row broadcast to every path
+    /// (`ctx_stride == 0`) or B per-path rows (`ctx_stride == dc`). Per
+    /// `(b, i)` cell the floats equal the scalar [`Sde::drift`] with
+    /// `θ_b = [params | ctx_b]`.
+    fn drift_batch_rows(
+        &self,
+        t: f64,
+        y: &[f64],
+        params: &[f64],
+        ctx: &[f64],
+        ctx_stride: usize,
+        out: &mut [f64],
+    ) {
+        let dz = self.dz();
+        let aug = dz + 1;
+        let bsz = y.len() / aug;
+        let dc = self.model.cfg.context_dim;
+        let with_u = self.diffusing();
+        let mut sc = self.ensure_batch_scratch(bsz);
+        let sc = &mut *sc;
+
+        let din = dz + 1 + dc;
+        for b in 0..bsz {
+            let row = &mut sc.post_in[b * din..(b + 1) * din];
+            row[..dz].copy_from_slice(&y[b * aug..b * aug + dz]);
+            row[dz] = t;
+            row[dz + 1..].copy_from_slice(&ctx[b * ctx_stride..b * ctx_stride + dc]);
+        }
+        {
+            let BatchScratch { post_in, post_cache, h_post, .. } = sc;
+            self.model.post_drift.forward_batch(params, post_in, post_cache, h_post);
+        }
+        if with_u {
+            for b in 0..bsz {
+                let row = &mut sc.prior_in[b * (dz + 1)..(b + 1) * (dz + 1)];
+                row[..dz].copy_from_slice(&y[b * aug..b * aug + dz]);
+                row[dz] = t;
+            }
+            {
+                let BatchScratch { prior_in, prior_cache, h_prior, .. } = sc;
+                self.model.prior_drift.forward_batch(params, prior_in, prior_cache, h_prior);
+            }
+            self.eval_sigma_batch(params, y, aug, sc);
+            for i in 0..bsz * dz {
+                sc.u[i] = (sc.h_post[i] - sc.h_prior[i]) / sc.sig[i];
+            }
+        }
+        for b in 0..bsz {
+            out[b * aug..b * aug + dz].copy_from_slice(&sc.h_post[b * dz..(b + 1) * dz]);
+            out[b * aug + dz] = if with_u {
+                0.5 * sc.u[b * dz..(b + 1) * dz].iter().map(|v| v * v).sum::<f64>()
+            } else {
+                0.0
+            };
+        }
+    }
+
+    /// Batched drift with **per-path context rows** (`ctx: [B×dc]`): path
+    /// `b` is evaluated under `θ_b = [params | ctx_b]`. This is the
+    /// minibatch trainer's kernel — different paths belong to different
+    /// sequences, each with its own encoder context.
+    pub(crate) fn drift_batch_ctx(
+        &self,
+        t: f64,
+        y: &[f64],
+        params: &[f64],
+        ctx: &[f64],
+        out: &mut [f64],
+    ) {
+        let bsz = y.len() / (self.dz() + 1);
+        debug_assert_eq!(ctx.len(), bsz * self.model.cfg.context_dim);
+        self.drift_batch_rows(t, y, params, ctx, self.model.cfg.context_dim, out);
+    }
+
+    /// Batched diffusion from the model-parameter prefix alone (σ never
+    /// reads the context).
+    pub(crate) fn diffusion_batch_params(
+        &self,
+        _t: f64,
+        y: &[f64],
+        params: &[f64],
+        out: &mut [f64],
+    ) {
+        let dz = self.dz();
+        let aug = dz + 1;
+        let bsz = y.len() / aug;
+        let mut sc = self.ensure_batch_scratch(bsz);
+        let sc = &mut *sc;
+        self.eval_sigma_batch(params, y, aug, sc);
+        for b in 0..bsz {
+            out[b * aug..b * aug + dz].copy_from_slice(&sc.sig[b * dz..(b + 1) * dz]);
+            out[b * aug + dz] = 0.0;
+        }
+    }
 }
 
 impl<'a> Sde for PosteriorSde<'a> {
@@ -294,7 +391,8 @@ impl<'a> Sde for PosteriorSde<'a> {
                     // Parameter grads of this probe are discarded (cold
                     // path: only Milstein forward stepping uses this).
                     let mut dp = vec![0.0; params.len()];
-                    self.model.diffusion[i].vjp(params, &mut sc.diff_caches[i], &[scale], &mut dx, &mut dp);
+                    self.model.diffusion[i]
+                        .vjp(params, &mut sc.diff_caches[i], &[scale], &mut dx, &mut dp);
                     out[i] = dx[0];
                 }
             }
@@ -432,62 +530,14 @@ impl<'a> SdeVjp for PosteriorSde<'a> {
 /// accumulation order throughout).
 impl<'a> BatchSde for PosteriorSde<'a> {
     fn drift_batch(&self, t: f64, y: &[f64], theta: &[f64], out: &mut [f64]) {
-        let dz = self.dz();
-        let aug = dz + 1;
-        let bsz = y.len() / aug;
         let (params, ctx) = self.split_theta(theta);
-        let with_u = self.diffusing();
-        let mut sc = self.ensure_batch_scratch(bsz);
-        let sc = &mut *sc;
-
-        let din = dz + 1 + ctx.len();
-        for b in 0..bsz {
-            let row = &mut sc.post_in[b * din..(b + 1) * din];
-            row[..dz].copy_from_slice(&y[b * aug..b * aug + dz]);
-            row[dz] = t;
-            row[dz + 1..].copy_from_slice(ctx);
-        }
-        {
-            let BatchScratch { post_in, post_cache, h_post, .. } = sc;
-            self.model.post_drift.forward_batch(params, post_in, post_cache, h_post);
-        }
-        if with_u {
-            for b in 0..bsz {
-                let row = &mut sc.prior_in[b * (dz + 1)..(b + 1) * (dz + 1)];
-                row[..dz].copy_from_slice(&y[b * aug..b * aug + dz]);
-                row[dz] = t;
-            }
-            {
-                let BatchScratch { prior_in, prior_cache, h_prior, .. } = sc;
-                self.model.prior_drift.forward_batch(params, prior_in, prior_cache, h_prior);
-            }
-            self.eval_sigma_batch(params, y, aug, sc);
-            for i in 0..bsz * dz {
-                sc.u[i] = (sc.h_post[i] - sc.h_prior[i]) / sc.sig[i];
-            }
-        }
-        for b in 0..bsz {
-            out[b * aug..b * aug + dz].copy_from_slice(&sc.h_post[b * dz..(b + 1) * dz]);
-            out[b * aug + dz] = if with_u {
-                0.5 * sc.u[b * dz..(b + 1) * dz].iter().map(|v| v * v).sum::<f64>()
-            } else {
-                0.0
-            };
-        }
+        // One shared context row, broadcast to every path (stride 0).
+        self.drift_batch_rows(t, y, params, ctx, 0, out);
     }
 
-    fn diffusion_batch(&self, _t: f64, y: &[f64], theta: &[f64], out: &mut [f64]) {
-        let dz = self.dz();
-        let aug = dz + 1;
-        let bsz = y.len() / aug;
+    fn diffusion_batch(&self, t: f64, y: &[f64], theta: &[f64], out: &mut [f64]) {
         let (params, _) = self.split_theta(theta);
-        let mut sc = self.ensure_batch_scratch(bsz);
-        let sc = &mut *sc;
-        self.eval_sigma_batch(params, y, aug, sc);
-        for b in 0..bsz {
-            out[b * aug..b * aug + dz].copy_from_slice(&sc.sig[b * dz..(b + 1) * dz]);
-            out[b * aug + dz] = 0.0;
-        }
+        self.diffusion_batch_params(t, y, params, out);
     }
 }
 
@@ -495,6 +545,228 @@ impl<'a> BatchSde for PosteriorSde<'a> {
 // per-instance scratch); the solve-side forward passes above are where
 // batching pays in the latent workload (B ELBO samples per step).
 impl<'a> BatchSdeVjp for PosteriorSde<'a> {}
+
+/// Batched forward view of the posterior with **per-path context rows**
+/// (`[B×dc]`): the minibatch trainer's forward kernel, where each path in
+/// the batch belongs to a (possibly different) sequence whose encoder
+/// context rides in its parameter tail. Implements
+/// [`crate::solvers::BatchSdeFunc`] directly in the posterior's native
+/// Stratonovich calculus (the trainer steps with Heun, so no conversion
+/// arises); path `b`'s floats equal a scalar
+/// [`crate::sde::ForwardFunc`] solve with `θ_b = [params | ctx_b]`.
+pub(crate) struct CtxBatchForwardFunc<'a, 'm> {
+    sde: &'a PosteriorSde<'m>,
+    params: &'a [f64],
+    ctx: &'a [f64],
+    batch: usize,
+    nfe_f: u64,
+    nfe_g: u64,
+}
+
+impl<'a, 'm> CtxBatchForwardFunc<'a, 'm> {
+    pub(crate) fn new(
+        sde: &'a PosteriorSde<'m>,
+        params: &'a [f64],
+        ctx: &'a [f64],
+        batch: usize,
+    ) -> Self {
+        assert_eq!(params.len(), sde.sde_param_len(), "CtxBatchForwardFunc: params length");
+        assert_eq!(
+            ctx.len(),
+            batch * sde.model.cfg.context_dim,
+            "CtxBatchForwardFunc: ctx rows mismatch"
+        );
+        CtxBatchForwardFunc { sde, params, ctx, batch, nfe_f: 0, nfe_g: 0 }
+    }
+}
+
+impl<'a, 'm> crate::solvers::BatchSdeFunc for CtxBatchForwardFunc<'a, 'm> {
+    fn dim(&self) -> usize {
+        self.sde.state_dim()
+    }
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn calculus(&self) -> Calculus {
+        Calculus::Stratonovich
+    }
+    fn drift(&mut self, t: f64, y: &[f64], out: &mut [f64]) {
+        self.nfe_f += 1;
+        self.sde.drift_batch_ctx(t, y, self.params, self.ctx, out);
+    }
+    fn diffusion(&mut self, t: f64, y: &[f64], out: &mut [f64]) {
+        self.nfe_g += 1;
+        self.sde.diffusion_batch_params(t, y, self.params, out);
+    }
+    fn nfe_drift(&self) -> u64 {
+        self.nfe_f
+    }
+    fn nfe_diffusion(&self) -> u64 {
+        self.nfe_g
+    }
+}
+
+/// [`BatchAugmentedOps`] over the posterior with per-path context rows:
+/// the batched augmented backward dynamics of the latent trainer's
+/// stochastic adjoint. Coefficient evaluations (`b̃`, `σ`) are
+/// hand-batched — blocked MLP passes with each path's own context — while
+/// the VJPs ride the scalar kernels row-per-row under the path's
+/// `θ_b = [params | ctx_b]`, exactly the call sequence of the scalar
+/// [`crate::adjoint::AdjointOps`], so per-path floats match the scalar
+/// backward solver bit for bit (pinned in the module tests and
+/// `tests/trainer_batch.rs`).
+pub(crate) struct CtxAdjointOps<'a, 'm> {
+    sde: &'a PosteriorSde<'m>,
+    /// One full parameter vector `[params | ctx_b]`; the dc-wide tail is
+    /// rewritten per row before each scalar VJP call (dc is tiny compared
+    /// to re-copying all of θ per row per stage).
+    theta_row: Vec<f64>,
+    /// Current interval's context rows `[B×dc]`.
+    ctx: Vec<f64>,
+    n_model: usize,
+    d: usize,
+    batch: usize,
+    neg_a: Vec<f64>,
+    weighted_a: Vec<f64>,
+    /// Row-level scratch for the Stratonovich drift VJP (len d).
+    vjp_scratch: Vec<f64>,
+    /// Discard buffers for the two one-sided diffusion VJP calls.
+    scratch_z: Vec<f64>,
+    scratch_p: Vec<f64>,
+    nfe_drift: u64,
+    nfe_diffusion: u64,
+}
+
+impl<'a, 'm> CtxAdjointOps<'a, 'm> {
+    pub(crate) fn new(sde: &'a PosteriorSde<'m>, params: &[f64], batch: usize) -> Self {
+        let n_model = sde.sde_param_len();
+        assert_eq!(params.len(), n_model, "CtxAdjointOps: params length");
+        assert!(batch > 0, "CtxAdjointOps: empty batch");
+        let d = sde.state_dim();
+        let dc = sde.model.cfg.context_dim;
+        let p = n_model + dc;
+        let mut theta_row = vec![0.0; p];
+        theta_row[..n_model].copy_from_slice(params);
+        CtxAdjointOps {
+            sde,
+            theta_row,
+            ctx: vec![0.0; batch * dc],
+            n_model,
+            d,
+            batch,
+            neg_a: vec![0.0; batch * d],
+            weighted_a: vec![0.0; batch * d],
+            vjp_scratch: vec![0.0; d],
+            scratch_z: vec![0.0; d],
+            scratch_p: vec![0.0; p],
+            nfe_drift: 0,
+            nfe_diffusion: 0,
+        }
+    }
+
+    /// Swap in the next interval's context rows (`[B×dc]`).
+    pub(crate) fn set_ctx(&mut self, ctx: &[f64]) {
+        assert_eq!(ctx.len(), self.ctx.len(), "set_ctx: rows mismatch");
+        self.ctx.copy_from_slice(ctx);
+    }
+}
+
+impl<'a, 'm> BatchAugmentedOps for CtxAdjointOps<'a, 'm> {
+    fn state_dim(&self) -> usize {
+        self.d
+    }
+    fn param_dim(&self) -> usize {
+        self.theta_row.len()
+    }
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn eval_drift(
+        &mut self,
+        t: f64,
+        z: &[f64],
+        a: &[f64],
+        b_out: &mut [f64],
+        fa_out: &mut [f64],
+        fth_out: &mut [f64],
+    ) {
+        self.nfe_drift += 1;
+        // b̃ is the native-Stratonovich drift — hand-batched per-ctx pass.
+        self.sde.drift_batch_ctx(t, z, &self.theta_row[..self.n_model], &self.ctx, b_out);
+        for (n, v) in self.neg_a.iter_mut().zip(a) {
+            *n = -v;
+        }
+        fa_out.fill(0.0);
+        fth_out.fill(0.0);
+        let d = self.d;
+        let p = self.theta_row.len();
+        let dc = p - self.n_model;
+        for b in 0..self.batch {
+            self.theta_row[self.n_model..].copy_from_slice(&self.ctx[b * dc..(b + 1) * dc]);
+            self.sde.drift_vjp_stratonovich(
+                t,
+                &z[b * d..(b + 1) * d],
+                &self.theta_row,
+                &self.neg_a[b * d..(b + 1) * d],
+                &mut fa_out[b * d..(b + 1) * d],
+                &mut fth_out[b * p..(b + 1) * p],
+                &mut self.vjp_scratch,
+            );
+        }
+    }
+
+    fn eval_diffusion(
+        &mut self,
+        t: f64,
+        z: &[f64],
+        a: &[f64],
+        dw: &[f64],
+        s_out: &mut [f64],
+        ga_out: &mut [f64],
+        gth_out: &mut [f64],
+    ) {
+        self.nfe_diffusion += 1;
+        self.sde.diffusion_batch_params(t, z, &self.theta_row[..self.n_model], s_out);
+        for i in 0..self.batch * self.d {
+            self.neg_a[i] = -a[i];
+            self.weighted_a[i] = -a[i] * dw[i];
+        }
+        ga_out.fill(0.0);
+        gth_out.fill(0.0);
+        let d = self.d;
+        let p = self.theta_row.len();
+        let dc = p - self.n_model;
+        for b in 0..self.batch {
+            self.theta_row[self.n_model..].copy_from_slice(&self.ctx[b * dc..(b + 1) * dc]);
+            // z-VJP with −a (unweighted); θ-VJP with −a⊙ΔW. Side outputs
+            // land in scratch and are discarded — the scalar AdjointOps'
+            // two-call structure, row by row.
+            self.scratch_p.fill(0.0);
+            self.sde.diffusion_vjp(
+                t,
+                &z[b * d..(b + 1) * d],
+                &self.theta_row,
+                &self.neg_a[b * d..(b + 1) * d],
+                &mut ga_out[b * d..(b + 1) * d],
+                &mut self.scratch_p,
+            );
+            self.scratch_z.fill(0.0);
+            self.sde.diffusion_vjp(
+                t,
+                &z[b * d..(b + 1) * d],
+                &self.theta_row,
+                &self.weighted_a[b * d..(b + 1) * d],
+                &mut self.scratch_z,
+                &mut gth_out[b * p..(b + 1) * p],
+            );
+        }
+    }
+
+    fn nfe(&self) -> (u64, u64) {
+        (self.nfe_drift, self.nfe_diffusion)
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -672,6 +944,88 @@ mod tests {
             assert_eq!(&drift_b[b * aug..(b + 1) * aug], &out[..], "drift row {b}");
             sys.diffusion(t, row, &th, &mut out);
             assert_eq!(&diff_b[b * aug..(b + 1) * aug], &out[..], "diffusion row {b}");
+        }
+    }
+
+    /// Per-path-context kernels (the minibatch trainer's forward and
+    /// backward evaluation bundles) must equal the scalar path with
+    /// `θ_b = [params | ctx_b]` row-for-row, exactly.
+    #[test]
+    fn ctx_batched_kernels_match_scalar_rows_exactly() {
+        use crate::adjoint::AdjointOps;
+        use crate::solvers::BatchSdeFunc;
+
+        let model = tiny_model();
+        let all = model.init_params(PrngKey::from_seed(8));
+        let sys = PosteriorSde::new(&model);
+        let n_model = sys.sde_param_len();
+        let params = &all[..n_model];
+        let dc = model.cfg.context_dim;
+        let aug = sys.state_dim();
+        let p = n_model + dc;
+        let bsz = 3;
+        let t = 0.15;
+
+        let key = PrngKey::from_seed(9);
+        let mut ctx = vec![0.0; bsz * dc];
+        key.fill_normal(0, &mut ctx);
+        let mut y = vec![0.0; bsz * aug];
+        key.fill_normal(100, &mut y);
+        let mut a = vec![0.0; bsz * aug];
+        key.fill_normal(200, &mut a);
+        let mut dw = vec![0.0; bsz * aug];
+        key.fill_normal(300, &mut dw);
+        for v in dw.iter_mut() {
+            *v *= 0.05;
+        }
+
+        // Forward func.
+        let mut fwd = CtxBatchForwardFunc::new(&sys, params, &ctx, bsz);
+        let mut drift_b = vec![0.0; bsz * aug];
+        fwd.drift(t, &y, &mut drift_b);
+        let mut diff_b = vec![0.0; bsz * aug];
+        fwd.diffusion(t, &y, &mut diff_b);
+
+        // Adjoint ops.
+        let mut ops = CtxAdjointOps::new(&sys, params, bsz);
+        ops.set_ctx(&ctx);
+        let mut b_out = vec![0.0; bsz * aug];
+        let mut fa = vec![0.0; bsz * aug];
+        let mut fth = vec![0.0; bsz * p];
+        ops.eval_drift(t, &y, &a, &mut b_out, &mut fa, &mut fth);
+        let mut s_out = vec![0.0; bsz * aug];
+        let mut ga = vec![0.0; bsz * aug];
+        let mut gth = vec![0.0; bsz * p];
+        ops.eval_diffusion(t, &y, &a, &dw, &mut s_out, &mut ga, &mut gth);
+
+        for b in 0..bsz {
+            let mut th = params.to_vec();
+            th.extend_from_slice(&ctx[b * dc..(b + 1) * dc]);
+            let yr = &y[b * aug..(b + 1) * aug];
+            let ar = &a[b * aug..(b + 1) * aug];
+            let mut row = vec![0.0; aug];
+            sys.drift(t, yr, &th, &mut row);
+            assert_eq!(&drift_b[b * aug..(b + 1) * aug], &row[..], "fwd drift row {b}");
+            sys.diffusion(t, yr, &th, &mut row);
+            assert_eq!(&diff_b[b * aug..(b + 1) * aug], &row[..], "fwd diffusion row {b}");
+
+            let mut sops = AdjointOps::new(&sys, &th);
+            let mut sb = vec![0.0; aug];
+            let mut sfa = vec![0.0; aug];
+            let mut sfth = vec![0.0; p];
+            sops.eval_drift(t, yr, ar, &mut sb, &mut sfa, &mut sfth);
+            assert_eq!(&b_out[b * aug..(b + 1) * aug], &sb[..], "adj b row {b}");
+            assert_eq!(&fa[b * aug..(b + 1) * aug], &sfa[..], "adj fa row {b}");
+            assert_eq!(&fth[b * p..(b + 1) * p], &sfth[..], "adj fth row {b}");
+
+            let mut ss = vec![0.0; aug];
+            let mut sga = vec![0.0; aug];
+            let mut sgth = vec![0.0; p];
+            let dwr = &dw[b * aug..(b + 1) * aug];
+            sops.eval_diffusion(t, yr, ar, dwr, &mut ss, &mut sga, &mut sgth);
+            assert_eq!(&s_out[b * aug..(b + 1) * aug], &ss[..], "adj σ row {b}");
+            assert_eq!(&ga[b * aug..(b + 1) * aug], &sga[..], "adj ga row {b}");
+            assert_eq!(&gth[b * p..(b + 1) * p], &sgth[..], "adj gth row {b}");
         }
     }
 

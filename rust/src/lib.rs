@@ -84,6 +84,29 @@
 //! loop-based batch kernels that can be overridden with hand-batched ones
 //! where structure allows (see [`sde::batch`]).
 //!
+//! ## Latent-SDE training on the batch engine
+//!
+//! The headline application (§6): gradient-based stochastic variational
+//! inference for latent SDEs. [`coordinator::train_latent_sde`] runs
+//! minibatch Adam where each iteration's M sequences × S posterior
+//! samples form **one batched ELBO-gradient call**
+//! ([`latent::elbo_step_batch`]): a batched encoder pass
+//! ([`nn::GruCell::forward_batch`] / [`nn::Mlp::forward_batch`]), one
+//! batched piecewise forward solve per chunk with each path's encoder
+//! context riding in its parameter tail, the batched augmented stochastic
+//! adjoint ([`adjoint::batch`]), and batched encoder/decoder backprop —
+//! chunks fanned across a scoped thread pool. Per-path keys are
+//! `key.fold_in(sequence).fold_in(sample)` and gradients reduce in path
+//! order, so results are bit-identical to a sequential scalar
+//! [`latent::elbo_step`] loop for any batch size, chunk layout, and
+//! worker count (`tests/trainer_batch.rs`); the scalar path remains as
+//! that oracle. Training resumes exactly from a
+//! [`coordinator::TrainState`] checkpoint (params + Adam moments +
+//! counters; `sdegrad train --state/--resume`), and CI gates both the
+//! trainer (`training-smoke` job: loss must decrease) and the engine's
+//! throughput (`sdegrad bench compare` vs the committed
+//! `BENCH_baseline.json`, >25% regression fails).
+//!
 //! ## Verified convergence orders
 //!
 //! The [`convergence`] subsystem turns the paper's §5 convergence claims

@@ -11,7 +11,7 @@
 
 use sdegrad::coordinator::config::{arg, parse_args, TrainConfig};
 use sdegrad::coordinator::repro;
-use sdegrad::coordinator::{save_params, train_latent_sde};
+use sdegrad::coordinator::{load_state, save_params, save_state, train_latent_sde_from};
 use sdegrad::data::{gbm, lorenz, mocap};
 use sdegrad::latent::{DiffusionMode, EncoderKind, LatentSdeConfig, LatentSdeModel};
 use sdegrad::prng::PrngKey;
@@ -22,10 +22,15 @@ fn usage() -> ! {
 
 USAGE:
     sdegrad train --dataset <gbm|lorenz|mocap> [--mode sde|ode] [--iters N]
-                  [--batch N] [--lr F] [--kl F] [--substeps N] [--seed N]
-                  [--workers N] [--out checkpoint.bin] [--log train.csv]
+                  [--batch N] [--samples N] [--lr F] [--kl F] [--substeps N]
+                  [--seed N] [--workers N] [--out checkpoint.bin]
+                  [--state state.bin] [--resume state.bin] [--log train.csv]
+                  [--smoke-check]
     sdegrad repro <table1|fig2|fig5|fig6|fig9|table2|convergence|all> [--quick]
-    sdegrad bench <throughput> [--quick]
+    sdegrad bench throughput [--quick]
+    sdegrad bench compare [--baseline BENCH_baseline.json]
+                  [--current BENCH_throughput.json] [--threshold 0.25]
+                  [--summary summary.md]
     sdegrad artifacts-check [--dir artifacts]
     sdegrad list",
         sdegrad::version()
@@ -122,20 +127,29 @@ fn cmd_train(rest: &[String]) {
 
     let model = LatentSdeModel::new(model_cfg);
     println!(
-        "training latent {} on {dataset_name}: {} series × {} obs × {}d, {} params, {} iters, {} workers",
+        "training latent {} on {dataset_name}: {} series × {} obs × {}d, {} params, {} iters, \
+         {} samples/seq, {} workers (batched engine)",
         mode.to_uppercase(),
         ds.n_series,
         ds.n_times(),
         ds.dim,
         model.n_params,
         cfg.iters,
+        cfg.elbo_samples,
         cfg.n_workers
     );
     let idx: Vec<usize> = (0..ds.n_series).collect();
     let n_val = (ds.n_series / 8).clamp(1, ds.n_series - 1);
     let (train_idx, val_idx) = idx.split_at(ds.n_series - n_val);
     let log = map.get("log").cloned();
-    let report = train_latent_sde(&model, &ds, train_idx, val_idx, &cfg, log.as_deref());
+    let resume = map.get("resume").map(|p| {
+        let st = load_state(p).expect("loading resume state");
+        println!("resuming from {p} at iteration {}", st.iter);
+        st
+    });
+    let log = log.as_deref();
+    let report =
+        train_latent_sde_from(&model, &ds, train_idx, val_idx, &cfg, log, resume.as_ref());
 
     for r in report.history.iter().step_by((cfg.iters as usize / 20).max(1)) {
         println!(
@@ -150,6 +164,30 @@ fn cmd_train(rest: &[String]) {
     if let Some(out) = map.get("out") {
         save_params(out, &report.final_params).expect("saving checkpoint");
         println!("saved checkpoint to {out}");
+    }
+    if let Some(out) = map.get("state") {
+        save_state(out, &report.final_state).expect("saving training state");
+        println!("saved training state (params + Adam moments) to {out}");
+    }
+    if map.contains_key("smoke-check") {
+        // CI training-smoke gate: the loss must end below where it began.
+        let k = (report.history.len() / 4).clamp(1, 5);
+        let first: f64 =
+            report.history[..k].iter().map(|r| r.loss).sum::<f64>() / k as f64;
+        let last: f64 = report.history[report.history.len() - k..]
+            .iter()
+            .map(|r| r.loss)
+            .sum::<f64>()
+            / k as f64;
+        if last < first {
+            println!("SMOKE OK: mean loss first {k} iters {first:.3} -> last {k} iters {last:.3}");
+        } else {
+            eprintln!(
+                "SMOKE FAILED: loss did not improve (first {k} iters {first:.3}, last {k} \
+                 iters {last:.3})"
+            );
+            std::process::exit(1);
+        }
     }
 }
 
@@ -200,6 +238,26 @@ fn cmd_bench(rest: &[String]) {
     match which {
         "throughput" => {
             sdegrad::coordinator::bench::run_throughput(quick);
+        }
+        "compare" => {
+            let baseline =
+                map.get("baseline").cloned().unwrap_or_else(|| "BENCH_baseline.json".into());
+            let current =
+                map.get("current").cloned().unwrap_or_else(|| "BENCH_throughput.json".into());
+            let threshold: f64 = arg(&map, "threshold", 0.25);
+            // --summary overrides; otherwise append to the GitHub job
+            // summary when running in Actions.
+            let summary = map
+                .get("summary")
+                .cloned()
+                .or_else(|| std::env::var("GITHUB_STEP_SUMMARY").ok());
+            let code = sdegrad::coordinator::bench::run_compare(
+                &baseline,
+                &current,
+                threshold,
+                summary.as_deref(),
+            );
+            std::process::exit(code);
         }
         other => {
             eprintln!("unknown bench {other}");
@@ -259,6 +317,6 @@ fn cmd_list() {
         "experiments:  table1, fig2, fig5 (incl. fig7), fig6 (incl. fig8), fig9, table2, \
          convergence"
     );
-    println!("benches:      throughput (BENCH_throughput.json)");
+    println!("benches:      throughput (BENCH_throughput.json), compare (regression gate)");
     println!("artifacts:    see `sdegrad artifacts-check`");
 }

@@ -23,6 +23,23 @@ impl CsvWriter {
         Ok(CsvWriter { out, n_cols: header.len() })
     }
 
+    /// Open for appending when the file already exists non-empty (its
+    /// header is assumed present), otherwise create it with the header.
+    /// Used by resumed training runs so the earlier segment of the loss
+    /// curve survives instead of being truncated.
+    pub fn append_or_create<P: AsRef<Path>>(
+        path: P,
+        header: &[&str],
+    ) -> std::io::Result<CsvWriter> {
+        let has_content = path.as_ref().exists()
+            && fs::metadata(path.as_ref()).map(|m| m.len() > 0).unwrap_or(false);
+        if !has_content {
+            return CsvWriter::create(path, header);
+        }
+        let out = BufWriter::new(fs::OpenOptions::new().append(true).open(path)?);
+        Ok(CsvWriter { out, n_cols: header.len() })
+    }
+
     /// Write a row of mixed string/number fields (pre-formatted).
     pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
         assert_eq!(fields.len(), self.n_cols, "CSV row width mismatch");

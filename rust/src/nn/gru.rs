@@ -144,6 +144,144 @@ impl GruCell {
             .map(|l| l.param_count())
             .sum()
     }
+
+    /// Allocate a batched step cache for B rows.
+    pub fn batch_cache(&self, batch: usize) -> GruBatchCache {
+        assert!(batch > 0, "GruCell::batch_cache: empty batch");
+        let n = batch * self.hidden;
+        GruBatchCache {
+            x: vec![0.0; batch * self.in_dim],
+            h: vec![0.0; n],
+            r: vec![0.0; n],
+            u: vec![0.0; n],
+            n: vec![0.0; n],
+            hn_lin: vec![0.0; n],
+            tmp_i: vec![0.0; n],
+            tmp_h: vec![0.0; n],
+            batch,
+        }
+    }
+
+    /// Batched step over B rows (`x: [B×in]`, `h: [B×hd]`,
+    /// `h_next: [B×hd]`): each of the six gate linears becomes one blocked
+    /// [`Linear::forward_batch`] pass with the weight rows hot across all
+    /// B rows, followed by elementwise gate math. Per row, bit-identical
+    /// to [`GruCell::forward`] (same per-cell accumulation and gate
+    /// expressions in the same order).
+    pub fn forward_batch(
+        &self,
+        params: &[f64],
+        x: &[f64],
+        h: &[f64],
+        cache: &mut GruBatchCache,
+        h_next: &mut [f64],
+    ) {
+        let n = cache.batch * self.hidden;
+        debug_assert_eq!(x.len(), cache.batch * self.in_dim);
+        debug_assert_eq!(h.len(), n);
+        debug_assert_eq!(h_next.len(), n);
+        cache.x.copy_from_slice(x);
+        cache.h.copy_from_slice(h);
+
+        let GruBatchCache { r, u, n: cand, hn_lin, tmp_i, tmp_h, .. } = cache;
+        // r gate
+        self.w_ir.forward_batch(params, x, tmp_i);
+        self.w_hr.forward_batch(params, h, tmp_h);
+        for i in 0..n {
+            r[i] = sigmoid(tmp_i[i] + tmp_h[i]);
+        }
+        // u gate
+        self.w_iu.forward_batch(params, x, tmp_i);
+        self.w_hu.forward_batch(params, h, tmp_h);
+        for i in 0..n {
+            u[i] = sigmoid(tmp_i[i] + tmp_h[i]);
+        }
+        // candidate
+        self.w_in.forward_batch(params, x, tmp_i);
+        self.w_hn.forward_batch(params, h, hn_lin);
+        for i in 0..n {
+            cand[i] = (tmp_i[i] + r[i] * hn_lin[i]).tanh();
+        }
+        for i in 0..n {
+            h_next[i] = (1.0 - u[i]) * cand[i] + u[i] * h[i];
+        }
+    }
+
+    /// Batched accumulating VJP of one step: given `dh_next: [B×hd]`, adds
+    /// into `dx: [B×in]`, `dh: [B×hd]` (gradient w.r.t. the *incoming*
+    /// hidden state) and each row's parameter-gradient block
+    /// `dparams[b*pstride ..]` (scalar offsets within a block). Per row,
+    /// bit-identical to [`GruCell::vjp`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn vjp_batch(
+        &self,
+        params: &[f64],
+        cache: &GruBatchCache,
+        dh_next: &[f64],
+        dx: &mut [f64],
+        dh: &mut [f64],
+        dparams: &mut [f64],
+        pstride: usize,
+    ) {
+        let n = cache.batch * self.hidden;
+        debug_assert_eq!(dh_next.len(), n);
+        debug_assert_eq!(dh.len(), n);
+        debug_assert_eq!(dx.len(), cache.batch * self.in_dim);
+        debug_assert_eq!(dparams.len(), cache.batch * pstride);
+        let mut du = vec![0.0; n];
+        let mut dn = vec![0.0; n];
+        let mut dr = vec![0.0; n];
+        let mut dn_pre = vec![0.0; n];
+        let mut dhn_lin = vec![0.0; n];
+        let mut du_pre = vec![0.0; n];
+        let mut dr_pre = vec![0.0; n];
+
+        for i in 0..n {
+            du[i] = dh_next[i] * (cache.h[i] - cache.n[i]);
+            dn[i] = dh_next[i] * (1.0 - cache.u[i]);
+            dh[i] += dh_next[i] * cache.u[i];
+        }
+        for i in 0..n {
+            dn_pre[i] = dn[i] * (1.0 - cache.n[i] * cache.n[i]);
+            dr[i] = dn_pre[i] * cache.hn_lin[i];
+            dhn_lin[i] = dn_pre[i] * cache.r[i];
+            du_pre[i] = du[i] * cache.u[i] * (1.0 - cache.u[i]);
+            dr_pre[i] = dr[i] * cache.r[i] * (1.0 - cache.r[i]);
+        }
+        // Input-side linears.
+        self.w_in.vjp_batch(params, &cache.x, &dn_pre, dx, dparams, pstride);
+        self.w_iu.vjp_batch(params, &cache.x, &du_pre, dx, dparams, pstride);
+        self.w_ir.vjp_batch(params, &cache.x, &dr_pre, dx, dparams, pstride);
+        // Hidden-side linears.
+        self.w_hn.vjp_batch(params, &cache.h, &dhn_lin, dh, dparams, pstride);
+        self.w_hu.vjp_batch(params, &cache.h, &du_pre, dh, dparams, pstride);
+        self.w_hr.vjp_batch(params, &cache.h, &dr_pre, dh, dparams, pstride);
+    }
+}
+
+/// Batched per-step cache: `[B×·]` rows of everything [`GruStepCache`]
+/// stores, plus the gate-linear staging buffers — the batch analogue of
+/// one unrolled timestep, allocated once per step (or reused).
+#[derive(Clone, Debug)]
+pub struct GruBatchCache {
+    /// Step input rows `[B×in]`.
+    pub x: Vec<f64>,
+    /// Incoming hidden rows `[B×hd]`.
+    pub h: Vec<f64>,
+    r: Vec<f64>,
+    u: Vec<f64>,
+    n: Vec<f64>,
+    hn_lin: Vec<f64>,
+    tmp_i: Vec<f64>,
+    tmp_h: Vec<f64>,
+    batch: usize,
+}
+
+impl GruBatchCache {
+    /// Batch size B this cache was allocated for.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
 }
 
 #[cfg(test)]
@@ -253,6 +391,56 @@ mod tests {
             let (lo, _) = run(&pp);
             let fd = (hi - lo) / (2.0 * eps);
             assert!((fd - dp[j]).abs() < 1e-6, "dp[{j}]: fd {fd} vs {}", dp[j]);
+        }
+    }
+
+    /// Batched step + VJP must equal B scalar passes bit-for-bit — the
+    /// guarantee that lets the batched latent-SDE trainer's encoder ride
+    /// the batch engine without changing any float.
+    #[test]
+    fn batched_forward_and_vjp_match_scalar_rows_exactly() {
+        let (in_dim, hd, bsz) = (3, 6, 5);
+        let mut pb = ParamBuilder::new();
+        let cell = GruCell::new(&mut pb, in_dim, hd);
+        let params = pb.init(PrngKey::from_seed(50));
+        let key = PrngKey::from_seed(51);
+        let mut x = vec![0.0; bsz * in_dim];
+        key.fill_normal(0, &mut x);
+        let mut h = vec![0.0; bsz * hd];
+        key.fill_normal(100, &mut h);
+        let mut dy = vec![0.0; bsz * hd];
+        key.fill_normal(200, &mut dy);
+
+        let mut bcache = cell.batch_cache(bsz);
+        let mut hn_b = vec![0.0; bsz * hd];
+        cell.forward_batch(&params, &x, &h, &mut bcache, &mut hn_b);
+        let mut dx_b = vec![0.0; bsz * in_dim];
+        let mut dh_b = vec![0.0; bsz * hd];
+        let mut dp_b = vec![0.0; bsz * params.len()];
+        cell.vjp_batch(&params, &bcache, &dy, &mut dx_b, &mut dh_b, &mut dp_b, params.len());
+
+        for b in 0..bsz {
+            let mut cache = GruStepCache::default();
+            let mut hn = vec![0.0; hd];
+            cell.forward(
+                &params,
+                &x[b * in_dim..(b + 1) * in_dim],
+                &h[b * hd..(b + 1) * hd],
+                &mut cache,
+                &mut hn,
+            );
+            assert_eq!(&hn_b[b * hd..(b + 1) * hd], &hn[..], "fwd row {b}");
+            let mut dx = vec![0.0; in_dim];
+            let mut dh = vec![0.0; hd];
+            let mut dp = vec![0.0; params.len()];
+            cell.vjp(&params, &cache, &dy[b * hd..(b + 1) * hd], &mut dx, &mut dh, &mut dp);
+            assert_eq!(&dx_b[b * in_dim..(b + 1) * in_dim], &dx[..], "dx row {b}");
+            assert_eq!(&dh_b[b * hd..(b + 1) * hd], &dh[..], "dh row {b}");
+            assert_eq!(
+                &dp_b[b * params.len()..(b + 1) * params.len()],
+                &dp[..],
+                "dparams row {b}"
+            );
         }
     }
 }

@@ -21,7 +21,7 @@ pub mod mlp;
 pub mod params;
 
 pub use activation::Activation;
-pub use gru::GruCell;
+pub use gru::{GruBatchCache, GruCell};
 pub use linear::Linear;
 pub use mlp::{Mlp, MlpBatchCache, MlpCache};
 pub use params::ParamBuilder;

@@ -1,0 +1,220 @@
+//! Batched-vs-scalar training engine pins.
+//!
+//! The batched minibatch ELBO-gradient engine (`elbo_step_batch`) must be
+//! **bit-identical** (exact f64 equality) to a sequential per-sequence
+//! `elbo_step` loop — for every tested (sequences × samples) shape,
+//! including batches that span the engine's internal chunk boundaries,
+//! for every worker count, and for both encoder flavors and both
+//! diffusion modes. The trainer's resume path must likewise be
+//! bit-identical to an uninterrupted run when routed through a
+//! `TrainState` checkpoint file.
+//!
+//! Per-path keys are `keys[m].fold_in(s)`; gradients reduce in path
+//! order, so the reference is literally
+//! `Σ_{m,s} elbo_step(.., keys[m].fold_in(s), ..).grad`.
+
+use sdegrad::coordinator::{
+    load_state, save_state, train_latent_sde, train_latent_sde_from, TrainConfig,
+};
+use sdegrad::data::gbm::{generate, GbmConfig};
+use sdegrad::latent::{
+    elbo_step, elbo_step_batch, DiffusionMode, ElboConfig, EncoderKind, LatentSdeConfig,
+    LatentSdeModel,
+};
+use sdegrad::prng::PrngKey;
+
+fn tiny_cfg() -> LatentSdeConfig {
+    LatentSdeConfig {
+        obs_dim: 2,
+        latent_dim: 3,
+        context_dim: 2,
+        hidden: 8,
+        diff_hidden: 4,
+        enc_hidden: 6,
+        obs_noise_std: 0.1,
+        ..Default::default()
+    }
+}
+
+fn toy_sequences(n_seqs: usize, n_obs: usize, dx: usize, seed: u64) -> (Vec<f64>, Vec<Vec<f64>>) {
+    let times: Vec<f64> = (0..n_obs).map(|k| 0.1 * k as f64).collect();
+    let seqs: Vec<Vec<f64>> = (0..n_seqs)
+        .map(|m| {
+            let mut obs = vec![0.0; n_obs * dx];
+            PrngKey::from_seed(seed + m as u64).fill_normal(0, &mut obs);
+            for v in obs.iter_mut() {
+                *v *= 0.3;
+            }
+            obs
+        })
+        .collect();
+    (times, seqs)
+}
+
+/// The scalar oracle: sequential per-path `elbo_step` calls, gradients
+/// summed in path order.
+fn scalar_loop(
+    model: &LatentSdeModel,
+    params: &[f64],
+    times: &[f64],
+    obs_seqs: &[&[f64]],
+    keys: &[PrngKey],
+    cfg: &ElboConfig,
+    n_samples: usize,
+) -> (Vec<f64>, f64, f64, Vec<f64>) {
+    let mut grad = vec![0.0; model.n_params];
+    let (mut loss, mut log_px) = (0.0, 0.0);
+    let mut per_path = Vec::new();
+    for (m, obs) in obs_seqs.iter().enumerate() {
+        for s in 0..n_samples {
+            let o = elbo_step(model, params, times, obs, keys[m].fold_in(s as u64), cfg);
+            for (g, og) in grad.iter_mut().zip(&o.grad) {
+                *g += og;
+            }
+            loss += o.loss;
+            log_px += o.log_px;
+            per_path.push(o.loss);
+        }
+    }
+    (grad, loss, log_px, per_path)
+}
+
+fn check_exact(model_cfg: LatentSdeConfig, shapes: &[(usize, usize)], seed: u64) {
+    let model = LatentSdeModel::new(model_cfg);
+    let params = model.init_params(PrngKey::from_seed(seed));
+    let cfg = ElboConfig { substeps: 2, kl_weight: 0.7 };
+    for &(n_seqs, n_samples) in shapes {
+        let (times, seqs) = toy_sequences(n_seqs, 4, model.cfg.obs_dim, seed + 100);
+        let obs_seqs: Vec<&[f64]> = seqs.iter().map(|s| s.as_slice()).collect();
+        let keys: Vec<PrngKey> =
+            (0..n_seqs).map(|m| PrngKey::from_seed(seed + 200).fold_in(m as u64)).collect();
+
+        let (grad_ref, loss_ref, logpx_ref, per_path_ref) =
+            scalar_loop(&model, &params, &times, &obs_seqs, &keys, &cfg, n_samples);
+
+        let out = elbo_step_batch(&model, &params, &times, &obs_seqs, &keys, &cfg, n_samples, 1);
+        assert_eq!(out.n_paths, n_seqs * n_samples);
+        assert_eq!(
+            out.grad, grad_ref,
+            "gradient mismatch at M={n_seqs} S={n_samples}"
+        );
+        assert_eq!(out.loss, loss_ref, "loss mismatch at M={n_seqs} S={n_samples}");
+        assert_eq!(out.log_px, logpx_ref);
+        assert_eq!(out.per_path_loss, per_path_ref);
+    }
+}
+
+/// GRU encoder + learned diffusion (the default model), across shapes
+/// that cover single-path, multi-sequence, multi-sample, and batches
+/// larger than the engine's 16-path chunk cap (so chunks split mid-batch
+/// and mid-sequence).
+#[test]
+fn batched_matches_scalar_loop_exactly_gru_sde() {
+    check_exact(tiny_cfg(), &[(1, 1), (2, 1), (3, 2), (7, 3)], 70);
+}
+
+/// First-frames MLP encoder (the mocap protocol).
+#[test]
+fn batched_matches_scalar_loop_exactly_mlp_encoder() {
+    check_exact(
+        LatentSdeConfig {
+            encoder: EncoderKind::FirstFramesMlp { n_frames: 3 },
+            ..tiny_cfg()
+        },
+        &[(1, 2), (4, 2)],
+        71,
+    );
+}
+
+/// Latent-ODE ablation (σ ≡ 0): zero diffusion, zero path-KL, same
+/// engine.
+#[test]
+fn batched_matches_scalar_loop_exactly_ode_mode() {
+    check_exact(
+        LatentSdeConfig { diffusion: DiffusionMode::Off, ..tiny_cfg() },
+        &[(3, 2)],
+        72,
+    );
+}
+
+/// Worker count and the chunk layout it induces must not change a single
+/// float: per-path numbers are computed independently and reduced in
+/// path order.
+#[test]
+fn worker_count_does_not_change_floats() {
+    let model = LatentSdeModel::new(tiny_cfg());
+    let params = model.init_params(PrngKey::from_seed(80));
+    let (times, seqs) = toy_sequences(5, 4, 2, 81);
+    let obs_seqs: Vec<&[f64]> = seqs.iter().map(|s| s.as_slice()).collect();
+    let keys: Vec<PrngKey> =
+        (0..5).map(|m| PrngKey::from_seed(82).fold_in(m as u64)).collect();
+    let cfg = ElboConfig { substeps: 2, kl_weight: 0.4 };
+
+    let base = elbo_step_batch(&model, &params, &times, &obs_seqs, &keys, &cfg, 2, 1);
+    for workers in [2, 3, 5, 8] {
+        let out = elbo_step_batch(&model, &params, &times, &obs_seqs, &keys, &cfg, 2, workers);
+        assert_eq!(out.grad, base.grad, "gradient differs at {workers} workers");
+        assert_eq!(out.loss, base.loss, "loss differs at {workers} workers");
+        assert_eq!(out.per_path_loss, base.per_path_loss);
+    }
+}
+
+/// Checkpoint → file → resume must reproduce the uninterrupted run
+/// bit-for-bit: the `TrainState` carries the Adam moments and counters,
+/// and every schedule is a pure function of the absolute iteration.
+#[test]
+fn trainer_resume_through_checkpoint_file_is_bit_identical() {
+    let model = LatentSdeModel::new(LatentSdeConfig {
+        obs_dim: 1,
+        latent_dim: 2,
+        context_dim: 1,
+        hidden: 8,
+        diff_hidden: 4,
+        enc_hidden: 8,
+        obs_noise_std: 0.05,
+        ..Default::default()
+    });
+    let ds = generate(
+        PrngKey::from_seed(1),
+        &GbmConfig { n_series: 8, dt_obs: 0.1, ..Default::default() },
+    );
+    let idx: Vec<usize> = (0..8).collect();
+    let base = TrainConfig {
+        iters: 7,
+        batch_size: 3,
+        lr: 4e-3,
+        substeps: 2,
+        kl_weight: 0.2,
+        kl_anneal_iters: 5,
+        n_workers: 2,
+        val_every: 0,
+        ..Default::default()
+    };
+    let full = train_latent_sde(&model, &ds, &idx, &[], &base, None);
+
+    let head = train_latent_sde(
+        &model,
+        &ds,
+        &idx,
+        &[],
+        &TrainConfig { iters: 3, ..base },
+        None,
+    );
+    let path = std::env::temp_dir().join("sdegrad_trainer_batch_resume.bin");
+    save_state(&path, &head.final_state).unwrap();
+    let restored = load_state(&path).unwrap();
+    assert_eq!(restored, head.final_state, "checkpoint roundtrip not exact");
+
+    let tail = train_latent_sde_from(
+        &model,
+        &ds,
+        &idx,
+        &[],
+        &TrainConfig { iters: 4, ..base },
+        None,
+        Some(&restored),
+    );
+    assert_eq!(tail.final_params, full.final_params, "resumed run diverged");
+    assert_eq!(tail.final_state.adam_t, full.final_state.adam_t);
+    assert_eq!(tail.final_state.iter, full.final_state.iter);
+}
