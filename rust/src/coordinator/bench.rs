@@ -21,16 +21,29 @@
 //! `--summary`/`GITHUB_STEP_SUMMARY` is set), and exits nonzero when a
 //! **batched** paths/sec or grad-paths/sec row regresses by more than the
 //! threshold (default 25%). Refreshing the baseline is a documented
-//! manual step, run on the reference machine:
+//! manual step, run on the reference machine — the committed baseline
+//! holds BOTH harnesses' rows (per-record `"bench"` tags), so refresh
+//! MERGES, never replaces with a single harness's file:
 //!
 //! ```text
 //! cargo run --release -- bench throughput --quick
-//! cp BENCH_throughput.json BENCH_baseline.json   # then commit
+//! cargo run --release -- bench serve --quick
+//! # merge BENCH_throughput.json + BENCH_serve.json rows into
+//! # BENCH_baseline.json, tagging each row with its harness
+//! # ("bench": "throughput" / "serve"), drop the placeholder flag, commit.
 //! ```
 //!
 //! A baseline carrying `"placeholder": true` (the repo's initial state,
 //! before anyone has measured on the reference machine) is reported but
 //! never fails the job.
+//!
+//! `sdegrad bench serve` ([`run_serve_bench`]) is the serving load
+//! harness: an in-process `sdegrad serve` instance under concurrent
+//! clients → req/sec + p50/p99 latency → `BENCH_serve.json` (bench tag
+//! "serve"; `req_per_sec` rows are gated like the engine throughput
+//! rows). The committed baseline merges both harnesses' rows with
+//! per-record `"bench"` tags; each CI job gates its own subset via
+//! `bench compare --subset throughput|serve`.
 
 use crate::adjoint::AdjointConfig;
 use crate::api::{
@@ -38,7 +51,7 @@ use crate::api::{
     solve_batch_per_path, SdeProblem, SensAlg, SolveOptions, StepControl,
 };
 use crate::latent::{LatentSdeConfig, LatentSdeModel, PosteriorSde};
-use crate::metrics::writer::{json_num, json_str};
+use crate::metrics::json::{json_num, json_number_field, json_str, json_string_field};
 use crate::metrics::Stopwatch;
 use crate::prng::PrngKey;
 use crate::sde::problems::{sample_experiment_setup, Example1};
@@ -233,15 +246,21 @@ pub fn run_throughput(quick: bool) -> Vec<ThroughputRow> {
         }
     }
 
-    write_json("BENCH_throughput.json", quick, &rows).expect("writing BENCH_throughput.json");
+    write_json("BENCH_throughput.json", "throughput", quick, &rows)
+        .expect("writing BENCH_throughput.json");
     println!("(JSON: BENCH_throughput.json)");
     rows
 }
 
-fn write_json(path: &str, quick: bool, rows: &[ThroughputRow]) -> std::io::Result<()> {
+fn write_json(
+    path: &str,
+    bench: &str,
+    quick: bool,
+    rows: &[ThroughputRow],
+) -> std::io::Result<()> {
     let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
     writeln!(out, "{{")?;
-    writeln!(out, "  \"bench\": \"throughput\",")?;
+    writeln!(out, "  \"bench\": {},", json_str(bench))?;
     writeln!(out, "  \"quick\": {quick},")?;
     writeln!(out, "  \"root_seed\": {},", 0x7140)?;
     writeln!(out, "  \"results\": [")?;
@@ -265,12 +284,182 @@ fn write_json(path: &str, quick: bool, rows: &[ThroughputRow]) -> std::io::Resul
 }
 
 // ---------------------------------------------------------------------
+// `sdegrad bench serve` — the in-process serving load harness.
+// ---------------------------------------------------------------------
+
+/// In-process load harness for `sdegrad serve`: starts a server on an
+/// ephemeral port over a synthetic (untrained — serving does not care)
+/// latent-SDE model, fires N concurrent client threads of simulate and
+/// ELBO-scoring requests, and reports **req/sec** plus p50/p99 latency
+/// per endpoint. Before timing, one response per endpoint is asserted
+/// byte-identical to the per-request scalar engine call (the serving
+/// determinism contract), so the numbers measure a *correct* server.
+///
+/// Results land in `BENCH_serve.json` in the shared BENCH format:
+/// `req_per_sec` rows are gated by `sdegrad bench compare` (engine
+/// "batched"), latency rows ride along ungated (engine "observed",
+/// values in microseconds).
+pub fn run_serve_bench(quick: bool) -> Vec<ThroughputRow> {
+    use crate::latent::{LatentSdeConfig, LatentSdeModel};
+    use crate::serve::batcher::scalar_response;
+    use crate::serve::client::post as http_post;
+    use crate::serve::{protocol, ModelRegistry, ServeConfig, Server};
+    use std::time::Instant;
+
+    super::repro::headline("Serving: dynamic micro-batching load harness");
+    let (n_clients, reqs_per_client) = if quick { (4, 20) } else { (8, 100) };
+
+    let cfg = LatentSdeConfig {
+        obs_dim: 1,
+        latent_dim: 4,
+        context_dim: 1,
+        hidden: 32,
+        diff_hidden: 8,
+        enc_hidden: 32,
+        obs_noise_std: 0.05,
+        ..Default::default()
+    };
+    let model = LatentSdeModel::new(cfg);
+    let params = model.init_params(PrngKey::from_seed(0x5e21));
+    let mut registry = ModelRegistry::new();
+    registry.insert("default", model, params).expect("registering bench model");
+
+    let times: Vec<f64> = (0..12).map(|k| 0.1 * k as f64).collect();
+    let times_json =
+        format!("[{}]", times.iter().map(|t| format!("{t}")).collect::<Vec<_>>().join(","));
+    let mut obs = vec![0.0; times.len()];
+    PrngKey::from_seed(0x5e22).fill_normal(0, &mut obs);
+    let obs_json = format!(
+        "[{}]",
+        obs.iter().map(|x| format!("[{x}]")).collect::<Vec<_>>().join(",")
+    );
+    let simulate_body = |seed: u64| {
+        format!("{{\"seed\": {seed}, \"times\": {times_json}, \"substeps\": 3}}")
+    };
+    let elbo_body = |seed: u64| {
+        format!(
+            "{{\"seed\": {seed}, \"times\": {times_json}, \"obs\": {obs_json}, \
+             \"substeps\": 3, \"samples\": 2, \"kl_weight\": 0.5}}"
+        )
+    };
+
+    // Cache off: the harness measures the engine + batcher, not HashMap
+    // lookups. Each request carries a distinct seed anyway.
+    let server = Server::start(
+        registry,
+        ServeConfig {
+            port: 0,
+            workers: n_clients,
+            max_batch: 16,
+            max_wait_us: 200,
+            cache_capacity: 0,
+            ..Default::default()
+        },
+    )
+    .expect("starting bench server");
+    let addr = server.addr();
+
+    // Correctness gate before timing: served bytes == scalar oracle.
+    {
+        // A throwaway registry clone for the oracle (Server consumed ours).
+        let model = LatentSdeModel::new(cfg);
+        let params = model.init_params(PrngKey::from_seed(0x5e21));
+        let mut oracle_reg = ModelRegistry::new();
+        oracle_reg.insert("default", model, params).unwrap();
+        let entry = oracle_reg.get("default").unwrap();
+        for (path, body) in
+            [("/v1/simulate", simulate_body(99)), ("/v1/elbo", elbo_body(99))]
+        {
+            let (status, served) = http_post(addr, path, &body).expect("bench request failed");
+            assert_eq!(status, 200, "bench {path} request failed: {served:?}");
+            let req = protocol::parse_request(path, &body).unwrap();
+            let expected = scalar_response(entry, &req).unwrap();
+            assert_eq!(served, expected, "served {path} diverged from the scalar oracle");
+        }
+    }
+
+    let mut rows = Vec::new();
+    type BodyFn<'f> = &'f (dyn Fn(u64) -> String + Sync);
+    for (endpoint, path, make_body) in [
+        ("serve_simulate", "/v1/simulate", &simulate_body as BodyFn<'_>),
+        ("serve_elbo", "/v1/elbo", &elbo_body as BodyFn<'_>),
+    ] {
+        let total = n_clients * reqs_per_client;
+        let sw = Stopwatch::new();
+        let latencies: Vec<f64> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n_clients)
+                .map(|c| {
+                    scope.spawn(move || {
+                        let mut lats = Vec::with_capacity(reqs_per_client);
+                        for i in 0..reqs_per_client {
+                            let seed = (c * reqs_per_client + i) as u64;
+                            let body = make_body(seed);
+                            let t0 = Instant::now();
+                            let (status, resp) =
+                                http_post(addr, path, &body).expect("bench request failed");
+                            lats.push(t0.elapsed().as_secs_f64() * 1e6);
+                            // A non-200 mid-run means the server broke; its
+                            // timing must not count as served traffic.
+                            assert_eq!(status, 200, "bench {path} got an error: {resp:?}");
+                            assert!(!resp.is_empty(), "empty response body");
+                        }
+                        lats
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().expect("client panicked")).collect()
+        });
+        let elapsed = sw.elapsed_s();
+        let mut sorted = latencies.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        let p50 = crate::metrics::percentile_of_sorted(&sorted, 0.50);
+        let p99 = crate::metrics::percentile_of_sorted(&sorted, 0.99);
+        println!(
+            "{endpoint}: {total} requests, {n_clients} clients: {:.0} req/s, \
+             p50 {:.0} µs, p99 {:.0} µs",
+            total as f64 / elapsed,
+            p50,
+            p99
+        );
+        rows.push(ThroughputRow {
+            problem: endpoint,
+            metric: "req_per_sec",
+            engine: "batched",
+            paths: total,
+            steps: times.len(),
+            value_per_sec: total as f64 / elapsed,
+        });
+        for (metric, value) in [("p50_us", p50), ("p99_us", p99)] {
+            rows.push(ThroughputRow {
+                problem: endpoint,
+                metric,
+                engine: "observed",
+                paths: total,
+                steps: times.len(),
+                value_per_sec: value,
+            });
+        }
+    }
+    server.shutdown();
+
+    write_json("BENCH_serve.json", "serve", quick, &rows).expect("writing BENCH_serve.json");
+    println!("(JSON: BENCH_serve.json)");
+    rows
+}
+
+// ---------------------------------------------------------------------
 // `sdegrad bench compare` — the CI bench-regression gate.
 // ---------------------------------------------------------------------
 
 /// One parsed benchmark record from a `BENCH_*.json` file.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BenchRecord {
+    /// Which harness produced the row ("throughput", "serve", …): a
+    /// per-record `"bench"` tag when present (the merged committed
+    /// baseline carries one per row), else the file-level `"bench"`
+    /// field. Lets `compare --subset` gate one harness's rows against a
+    /// baseline that holds several.
+    pub bench: String,
     pub problem: String,
     pub metric: String,
     pub engine: String,
@@ -285,31 +474,15 @@ pub struct BenchFile {
     pub records: Vec<BenchRecord>,
 }
 
-fn json_string_field(block: &str, key: &str) -> Option<String> {
-    let pat = format!("\"{key}\":");
-    let at = block.find(&pat)? + pat.len();
-    let rest = block[at..].trim_start().strip_prefix('"')?;
-    // Values we emit are plain identifiers (no escapes).
-    let end = rest.find('"')?;
-    Some(rest[..end].to_string())
-}
-
-fn json_number_field(block: &str, key: &str) -> Option<f64> {
-    let pat = format!("\"{key}\":");
-    let at = block.find(&pat)? + pat.len();
-    let rest = block[at..].trim_start();
-    let end = rest
-        .find(|c: char| c == ',' || c == '}' || c.is_whitespace())
-        .unwrap_or(rest.len());
-    rest[..end].parse().ok()
-}
-
-/// Parse the hand-rolled throughput JSON (the exact shape [`write_json`]
-/// emits — this is a scanner for our own format, not a general JSON
-/// parser; the crate set has no serde).
+/// Parse the hand-rolled bench JSON (the exact shape [`write_json`]
+/// emits — a scan over our own format via the shared
+/// [`crate::metrics::json`] field scanners, not a general JSON parse).
 pub fn parse_bench_json(text: &str) -> Result<BenchFile, String> {
     let placeholder = text.contains("\"placeholder\": true");
     let at = text.find("\"results\"").ok_or("missing \"results\" array")?;
+    // The file-level bench tag must come from the header (scanning the
+    // whole text could hit a per-record tag instead).
+    let file_bench = json_string_field(&text[..at], "bench").unwrap_or_default();
     let arr = &text[at..];
     let open = arr.find('[').ok_or("missing [ after \"results\"")?;
     let close = arr.rfind(']').ok_or("missing ] closing \"results\"")?;
@@ -322,6 +495,7 @@ pub fn parse_bench_json(text: &str) -> Result<BenchFile, String> {
             json_string_field(block, key).ok_or_else(|| format!("missing {key} in {block}"))
         };
         records.push(BenchRecord {
+            bench: json_string_field(block, "bench").unwrap_or_else(|| file_bench.clone()),
             problem: get("problem")?,
             metric: get("metric")?,
             engine: get("engine")?,
@@ -331,6 +505,16 @@ pub fn parse_bench_json(text: &str) -> Result<BenchFile, String> {
         rest = &rest[e + 1..];
     }
     Ok(BenchFile { placeholder, records })
+}
+
+/// Keep only one harness's records (`--subset throughput|serve`), so a
+/// job can gate its own rows against the merged committed baseline
+/// without the other harness's rows reading as "missing".
+pub fn filter_bench(file: &BenchFile, subset: &str) -> BenchFile {
+    BenchFile {
+        placeholder: file.placeholder,
+        records: file.records.iter().filter(|r| r.bench == subset).cloned().collect(),
+    }
 }
 
 /// One baseline-vs-current comparison row.
@@ -377,7 +561,9 @@ pub fn compare_throughput(
     let mut failures = Vec::new();
     for b in &baseline.records {
         let gated = b.engine == "batched"
-            && (b.metric == "paths_per_sec" || b.metric == "grad_paths_per_sec");
+            && (b.metric == "paths_per_sec"
+                || b.metric == "grad_paths_per_sec"
+                || b.metric == "req_per_sec");
         let found = current
             .records
             .iter()
@@ -454,9 +640,11 @@ pub fn markdown_table(report: &CompareReport, threshold: f64) -> String {
     if report.placeholder {
         out.push_str(
             "> **Baseline is a placeholder** — the gate reports but does not fail. \
-             Refresh it on the reference machine: `cargo run --release -- bench \
-             throughput --quick && cp BENCH_throughput.json BENCH_baseline.json`, \
-             then commit.\n\n",
+             Refresh it on the reference machine: run `bench throughput --quick` \
+             and `bench serve --quick`, merge both files' rows into \
+             BENCH_baseline.json with per-row `\"bench\"` tags (do NOT overwrite \
+             with one harness's file — that silently ungates the other), drop \
+             the placeholder flag, commit.\n\n",
         );
     }
     out.push_str("| problem | metric | engine | baseline/s | current/s | Δ | status |\n");
@@ -465,7 +653,13 @@ pub fn markdown_table(report: &CompareReport, threshold: f64) -> String {
         let status = if r.baseline.is_nan() {
             "new (ungated — refresh baseline)"
         } else if !r.gated {
-            "info"
+            // Latency rows carry microseconds in the per-second column:
+            // flag the unit and direction so +Δ% is not misread as a win.
+            if r.metric.ends_with("_us") {
+                "info (latency in µs — lower is better)"
+            } else {
+                "info"
+            }
         } else if r.failed {
             "**FAIL**"
         } else {
@@ -499,32 +693,44 @@ pub fn markdown_table(report: &CompareReport, threshold: f64) -> String {
 
 /// CLI driver for `sdegrad bench compare`: read, diff, print, optionally
 /// append to the job summary; returns the process exit code (0 pass,
-/// 1 regression, 2 usage/io error).
+/// 1 regression, 2 usage/io error). With `subset` (CLI `--subset
+/// throughput|serve`), only that harness's rows participate on both
+/// sides — how each CI job gates its own rows against the one merged
+/// `BENCH_baseline.json`.
 pub fn run_compare(
     baseline_path: &str,
     current_path: &str,
     threshold: f64,
     summary_path: Option<&str>,
+    subset: Option<&str>,
 ) -> i32 {
     let read_parse = |path: &str| -> Result<BenchFile, String> {
         let text =
             std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
         parse_bench_json(&text).map_err(|e| format!("parsing {path}: {e}"))
     };
-    let baseline = match read_parse(baseline_path) {
+    let mut baseline = match read_parse(baseline_path) {
         Ok(b) => b,
         Err(e) => {
             eprintln!("bench compare: {e}");
             return 2;
         }
     };
-    let current = match read_parse(current_path) {
+    let mut current = match read_parse(current_path) {
         Ok(c) => c,
         Err(e) => {
             eprintln!("bench compare: {e}");
             return 2;
         }
     };
+    if let Some(s) = subset {
+        baseline = filter_bench(&baseline, s);
+        current = filter_bench(&current, s);
+        if baseline.records.is_empty() && current.records.is_empty() {
+            eprintln!("bench compare: no rows tagged bench={s:?} on either side");
+            return 2;
+        }
+    }
     let report = compare_throughput(&baseline, &current, threshold);
     let table = markdown_table(&report, threshold);
     println!("{table}");
@@ -657,6 +863,81 @@ mod tests {
         ))
         .unwrap();
         assert!(compare_throughput(&base, &cur_edge, 0.25).passed());
+    }
+
+    /// The serving load harness runs end-to-end (server on an ephemeral
+    /// port, concurrent clients, responses asserted against the scalar
+    /// oracle inside) and leaves a gate-parsable artifact behind.
+    #[test]
+    fn quick_serve_bench_produces_gated_rows_and_artifact() {
+        let rows = run_serve_bench(true);
+        // 2 endpoints × (req/sec + p50 + p99).
+        assert_eq!(rows.len(), 6);
+        assert!(rows.iter().all(|r| r.value_per_sec.is_finite() && r.value_per_sec > 0.0));
+        assert_eq!(
+            rows.iter().filter(|r| r.metric == "req_per_sec" && r.engine == "batched").count(),
+            2
+        );
+        let json = std::fs::read_to_string("BENCH_serve.json").expect("artifact written");
+        let parsed = parse_bench_json(&json).expect("artifact parses");
+        assert!(!parsed.placeholder);
+        assert_eq!(parsed.records.len(), rows.len());
+        assert!(parsed.records.iter().all(|r| r.bench == "serve"), "file-level tag applies");
+        // The gate considers serve req/sec rows gated rows.
+        let report = compare_throughput(&parsed, &parsed, 0.25);
+        assert_eq!(report.rows.iter().filter(|r| r.gated).count(), 2);
+        assert!(report.passed());
+    }
+
+    #[test]
+    fn req_per_sec_regressions_fail_the_gate_and_subset_filters() {
+        // A merged baseline: per-record bench tags, one row per harness.
+        let merged = r#"{
+  "bench": "baseline",
+  "quick": true,
+  "results": [
+    {"bench": "throughput", "problem": "gbm_d10", "metric": "paths_per_sec", "engine": "batched", "paths": 256, "steps": 200, "value_per_sec": 1000},
+    {"bench": "serve", "problem": "serve_simulate", "metric": "req_per_sec", "engine": "batched", "paths": 80, "steps": 12, "value_per_sec": 500},
+    {"bench": "serve", "problem": "serve_simulate", "metric": "p99_us", "engine": "observed", "paths": 80, "steps": 12, "value_per_sec": 900}
+  ]
+}"#;
+        let baseline = parse_bench_json(merged).unwrap();
+        assert_eq!(baseline.records[0].bench, "throughput");
+        assert_eq!(baseline.records[1].bench, "serve");
+
+        // Subset "serve" drops the throughput row, so a serve-only
+        // current file does not read as "missing gbm_d10".
+        let serve_only = filter_bench(&baseline, "serve");
+        assert_eq!(serve_only.records.len(), 2);
+        let current = parse_bench_json(
+            r#"{
+  "bench": "serve",
+  "quick": true,
+  "results": [
+    {"problem": "serve_simulate", "metric": "req_per_sec", "engine": "batched", "paths": 80, "steps": 12, "value_per_sec": 300},
+    {"problem": "serve_simulate", "metric": "p99_us", "engine": "observed", "paths": 80, "steps": 12, "value_per_sec": 2000}
+  ]
+}"#,
+        )
+        .unwrap();
+        // −40% req/sec: fails; the latency row is informational only.
+        let report = compare_throughput(&serve_only, &current, 0.25);
+        assert!(!report.passed());
+        assert_eq!(report.failures.len(), 1);
+        assert!(report.failures[0].contains("serve_simulate/req_per_sec"));
+        // Within budget passes.
+        let ok = parse_bench_json(
+            r#"{
+  "bench": "serve",
+  "quick": true,
+  "results": [
+    {"problem": "serve_simulate", "metric": "req_per_sec", "engine": "batched", "paths": 80, "steps": 12, "value_per_sec": 450},
+    {"problem": "serve_simulate", "metric": "p99_us", "engine": "observed", "paths": 80, "steps": 12, "value_per_sec": 950}
+  ]
+}"#,
+        )
+        .unwrap();
+        assert!(compare_throughput(&serve_only, &ok, 0.25).passed());
     }
 
     #[test]

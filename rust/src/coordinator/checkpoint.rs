@@ -11,7 +11,7 @@
 //!   the Adam moments to zero on resume, which visibly kinks the loss
 //!   curve — the bug this format fixes.
 
-use std::io::{Read, Write};
+use std::io::Write;
 use std::path::Path;
 
 use crate::bail;
@@ -49,16 +49,75 @@ fn write_f64s(f: &mut impl Write, xs: &[f64]) -> Result<()> {
     Ok(())
 }
 
-fn read_f64s(f: &mut impl Read, n: usize) -> Result<Vec<f64>> {
-    let mut buf = vec![0u8; n * 8];
-    f.read_exact(&mut buf)?;
-    Ok(buf.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+/// Cursor over a fully-read checkpoint file. Every read is
+/// bounds-checked against the *actual* file length and returns a typed
+/// error on short files — a truncated or corrupt checkpoint must surface
+/// as a clean `Err` (e.g. at `sdegrad serve` startup), never as a panic
+/// or an attempted huge allocation from a garbage length header.
+struct Cursor<'b> {
+    buf: &'b [u8],
+    pos: usize,
 }
 
-fn read_u64(f: &mut impl Read) -> Result<u64> {
-    let mut b = [0u8; 8];
-    f.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
+impl<'b> Cursor<'b> {
+    fn new(buf: &'b [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'b [u8]> {
+        let left = self.buf.len() - self.pos;
+        if left < n {
+            bail!("truncated checkpoint: {what} needs {n} bytes, {left} left");
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let raw = self.take(8, what)?;
+        let mut b = [0u8; 8];
+        b.copy_from_slice(raw);
+        Ok(u64::from_le_bytes(b))
+    }
+
+    /// Read a `u64` element count and validate it against the bytes that
+    /// are actually left, so a garbage header cannot drive a huge
+    /// allocation.
+    fn len_header(&mut self, what: &str) -> Result<usize> {
+        let n = self.u64(what)?;
+        let left = (self.buf.len() - self.pos) as u64;
+        if n.checked_mul(8).map(|bytes| bytes > left).unwrap_or(true) {
+            bail!(
+                "corrupt checkpoint: {what} claims {n} f64s but only {left} bytes remain"
+            );
+        }
+        Ok(n as usize)
+    }
+
+    fn f64s(&mut self, n: usize, what: &str) -> Result<Vec<f64>> {
+        let raw = self.take(n * 8, what)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| {
+                let mut b = [0u8; 8];
+                b.copy_from_slice(c);
+                f64::from_le_bytes(b)
+            })
+            .collect())
+    }
+
+    fn finish(&self) -> Result<()> {
+        let left = self.buf.len() - self.pos;
+        if left != 0 {
+            bail!("corrupt checkpoint: {left} unexpected trailing bytes");
+        }
+        Ok(())
+    }
+}
+
+fn read_file<P: AsRef<Path>>(path: P) -> Result<Vec<u8>> {
+    std::fs::read(&path).with_context(|| format!("reading {:?}", path.as_ref()))
 }
 
 /// Save a flat parameter vector.
@@ -75,15 +134,18 @@ pub fn save_params<P: AsRef<Path>>(path: P, params: &[f64]) -> Result<()> {
 
 /// Load a flat parameter vector.
 pub fn load_params<P: AsRef<Path>>(path: P) -> Result<Vec<f64>> {
-    let mut f =
-        std::fs::File::open(&path).with_context(|| format!("opening {:?}", path.as_ref()))?;
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
+    parse_params(&read_file(path)?)
+}
+
+fn parse_params(buf: &[u8]) -> Result<Vec<f64>> {
+    let mut c = Cursor::new(buf);
+    if c.take(8, "magic")? != MAGIC {
         bail!("not an sdegrad checkpoint (bad magic)");
     }
-    let n = read_u64(&mut f)? as usize;
-    read_f64s(&mut f, n)
+    let n = c.len_header("parameter count")?;
+    let params = c.f64s(n, "parameters")?;
+    c.finish()?;
+    Ok(params)
 }
 
 /// Save a full training state (params + optimizer moments + counters).
@@ -113,21 +175,49 @@ pub fn save_state<P: AsRef<Path>>(path: P, state: &TrainState) -> Result<()> {
 
 /// Load a full training state.
 pub fn load_state<P: AsRef<Path>>(path: P) -> Result<TrainState> {
-    let mut f =
-        std::fs::File::open(&path).with_context(|| format!("opening {:?}", path.as_ref()))?;
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC_STATE {
+    parse_state(&read_file(path)?)
+}
+
+fn parse_state(buf: &[u8]) -> Result<TrainState> {
+    let mut c = Cursor::new(buf);
+    if c.take(8, "magic")? != MAGIC_STATE {
         bail!("not an sdegrad training-state checkpoint (bad magic)");
     }
-    let iter = read_u64(&mut f)?;
-    let adam_t = read_u64(&mut f)?;
-    let fingerprint = read_u64(&mut f)?;
-    let n = read_u64(&mut f)? as usize;
-    let params = read_f64s(&mut f, n)?;
-    let adam_m = read_f64s(&mut f, n)?;
-    let adam_v = read_f64s(&mut f, n)?;
+    let iter = c.u64("iteration counter")?;
+    let adam_t = c.u64("Adam step counter")?;
+    let fingerprint = c.u64("schedule fingerprint")?;
+    let n = c.u64("parameter count")? as usize;
+    // Three n-long vectors follow; validate the claimed count against the
+    // actual remaining bytes before allocating anything.
+    let left = buf.len() - 40;
+    if (n as u64).checked_mul(24).map(|b| b as usize != left).unwrap_or(true) {
+        bail!(
+            "corrupt training-state checkpoint: {n} params need {} bytes of \
+             vectors, file has {left}",
+            n.saturating_mul(24)
+        );
+    }
+    let params = c.f64s(n, "parameters")?;
+    let adam_m = c.f64s(n, "Adam first moments")?;
+    let adam_v = c.f64s(n, "Adam second moments")?;
+    c.finish()?;
     Ok(TrainState { params, adam_m, adam_v, adam_t, iter, fingerprint })
+}
+
+/// Load the parameter vector from *either* checkpoint format, dispatching
+/// on the magic: `SDEGRAD1` (bare params) or `SDEGRAD2` (full
+/// [`TrainState`], whose params are returned). This is what inference
+/// consumers (`sdegrad serve`) use, so a model can be served from
+/// whichever file a training run left behind. One read; the parse runs
+/// over the in-memory buffer.
+pub fn load_any_params<P: AsRef<Path>>(path: P) -> Result<Vec<f64>> {
+    let buf = read_file(&path)?;
+    match buf.get(..8) {
+        Some(m) if m == MAGIC => parse_params(&buf),
+        Some(m) if m == MAGIC_STATE => Ok(parse_state(&buf)?.params),
+        Some(_) => bail!("not an sdegrad checkpoint (bad magic)"),
+        None => bail!("truncated checkpoint: shorter than the 8-byte magic"),
+    }
 }
 
 #[cfg(test)]
@@ -188,6 +278,103 @@ mod tests {
         save_state(&p_state, &state).unwrap();
         assert!(load_state(&p_params).is_err(), "params file read as state");
         assert!(load_params(&p_state).is_err(), "state file read as params");
+    }
+
+    /// Truncated files must surface as clean typed errors mentioning the
+    /// truncation — the `sdegrad serve` startup path reports these
+    /// instead of panicking.
+    #[test]
+    fn truncated_files_error_cleanly() {
+        let dir = std::env::temp_dir().join("sdegrad_ckpt_trunc");
+        let p_state = dir.join("state.bin");
+        let state = TrainState {
+            params: vec![1.0, 2.0, 3.0],
+            adam_m: vec![0.1, 0.2, 0.3],
+            adam_v: vec![1.0, 1.0, 1.0],
+            adam_t: 5,
+            iter: 5,
+            fingerprint: 9,
+        };
+        save_state(&p_state, &state).unwrap();
+        let full = std::fs::read(&p_state).unwrap();
+        // Cut the file at several depths: inside the header, inside the
+        // params block, and one byte short of complete.
+        for cut in [4, 20, 48, full.len() - 1] {
+            let p_cut = dir.join(format!("cut{cut}.bin"));
+            std::fs::write(&p_cut, &full[..cut]).unwrap();
+            let err = load_state(&p_cut).unwrap_err().to_string();
+            assert!(
+                err.contains("truncated") || err.contains("corrupt"),
+                "cut at {cut}: unhelpful error {err:?}"
+            );
+        }
+        // Same for the bare-params format.
+        let p_params = dir.join("params.bin");
+        save_params(&p_params, &[1.0, 2.0]).unwrap();
+        let full = std::fs::read(&p_params).unwrap();
+        let p_cut = dir.join("params_cut.bin");
+        std::fs::write(&p_cut, &full[..full.len() - 3]).unwrap();
+        let err = load_params(&p_cut).unwrap_err().to_string();
+        assert!(err.contains("corrupt") || err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn wrong_magic_is_reported_as_bad_magic() {
+        let dir = std::env::temp_dir().join("sdegrad_ckpt_magic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("future.bin");
+        let mut bytes = b"SDEGRAD9".to_vec();
+        bytes.extend_from_slice(&1u64.to_le_bytes());
+        bytes.extend_from_slice(&1.5f64.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        for err in [
+            load_params(&p).unwrap_err(),
+            load_state(&p).unwrap_err(),
+            load_any_params(&p).unwrap_err(),
+        ] {
+            assert!(err.to_string().contains("bad magic"), "{err}");
+        }
+    }
+
+    /// A garbage length header must be rejected by comparing against the
+    /// actual file size — not answered with a huge allocation.
+    #[test]
+    fn absurd_length_header_is_rejected_without_allocating() {
+        let dir = std::env::temp_dir().join("sdegrad_ckpt_len");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("huge.bin");
+        let mut bytes = MAGIC.to_vec();
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load_params(&p).unwrap_err().to_string();
+        assert!(err.contains("corrupt"), "{err}");
+
+        let p2 = dir.join("huge_state.bin");
+        let mut bytes = MAGIC_STATE.to_vec();
+        bytes.extend_from_slice(&[0u8; 24]); // iter, adam_t, fingerprint
+        bytes.extend_from_slice(&(u64::MAX / 8).to_le_bytes());
+        std::fs::write(&p2, &bytes).unwrap();
+        let err = load_state(&p2).unwrap_err().to_string();
+        assert!(err.contains("corrupt"), "{err}");
+    }
+
+    #[test]
+    fn load_any_params_reads_both_formats() {
+        let dir = std::env::temp_dir().join("sdegrad_ckpt_any");
+        let p_params = dir.join("params.bin");
+        let p_state = dir.join("state.bin");
+        save_params(&p_params, &[1.5, -2.0]).unwrap();
+        let state = TrainState {
+            params: vec![3.25, 4.5],
+            adam_m: vec![0.0; 2],
+            adam_v: vec![0.0; 2],
+            adam_t: 1,
+            iter: 1,
+            fingerprint: 0,
+        };
+        save_state(&p_state, &state).unwrap();
+        assert_eq!(load_any_params(&p_params).unwrap(), vec![1.5, -2.0]);
+        assert_eq!(load_any_params(&p_state).unwrap(), vec![3.25, 4.5]);
     }
 
     /// Adam resumed from a saved state takes bit-identical steps —

@@ -1,8 +1,10 @@
 //! L3 training coordinator: experiment configs, the multi-worker trainer,
-//! checkpointing, the reproduction harnesses for every table and figure
-//! in the paper (shared by `cargo bench` targets and the `sdegrad repro`
-//! CLI), and the [`bench`] throughput harness (`sdegrad bench
-//! throughput` → `BENCH_throughput.json`).
+//! checkpointing (whose typed-error load path also feeds the
+//! [`crate::serve`] registry at `sdegrad serve` startup), the
+//! reproduction harnesses for every table and figure in the paper
+//! (shared by `cargo bench` targets and the `sdegrad repro` CLI), and
+//! the [`bench`] harnesses (`sdegrad bench throughput|serve` →
+//! `BENCH_*.json`, gated by `sdegrad bench compare`).
 
 pub mod bench;
 pub mod checkpoint;
@@ -10,6 +12,8 @@ pub mod config;
 pub mod repro;
 pub mod trainer;
 
-pub use checkpoint::{load_params, load_state, save_params, save_state, TrainState};
+pub use checkpoint::{
+    load_any_params, load_params, load_state, save_params, save_state, TrainState,
+};
 pub use config::TrainConfig;
 pub use trainer::{train_latent_sde, train_latent_sde_from, EvalReport, TrainReport};

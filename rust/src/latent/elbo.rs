@@ -548,6 +548,237 @@ pub fn elbo_value_multi(
     }
 }
 
+/// Batched posterior reconstruction for the serving subsystem: R
+/// sequences (one per request, each with its own observations and key)
+/// advance together through **one batched engine call** — a batched
+/// encoder pass ([`encode_batch`]), per-path reparameterized z₀ draws,
+/// and a single batched piecewise forward solve with each request's
+/// encoder context riding in its parameter-tail row
+/// ([`CtxBatchForwardFunc`]). Returns each request's latent trajectory
+/// `(K, dz)` (KL row stripped).
+///
+/// Request `r`'s floats are **bit-identical** to
+/// `sample_posterior_path(model, params, times, rows[r], substeps,
+/// keys[r])` for any batch composition: the same key split
+/// (`key.split()` → ε-draw, Brownian), the same per-row encoder floats
+/// (`encode_batch` is pinned row-identical to the scalar encoder), and
+/// the same per-row solver floats (the ctx-batch kernels are pinned
+/// row-identical to the scalar solve in `latent/posterior.rs` and
+/// `tests/trainer_batch.rs`). Pinned again directly in the module tests.
+pub fn sample_posterior_paths_batch(
+    model: &LatentSdeModel,
+    params: &[f64],
+    times: &[f64],
+    rows: &[&[f64]],
+    substeps: usize,
+    keys: &[PrngKey],
+) -> Vec<Vec<f64>> {
+    let dz = model.cfg.latent_dim;
+    let dx = model.cfg.obs_dim;
+    let dc = model.cfg.context_dim;
+    let n_obs = times.len();
+    let aug = dz + 1;
+    let c_n = rows.len();
+    assert!(n_obs >= 2, "sample_posterior_paths_batch: need at least two observations");
+    assert_eq!(rows.len(), keys.len(), "sample_posterior_paths_batch: one key per request");
+    for obs in rows {
+        assert_eq!(obs.len(), n_obs * dx, "sample_posterior_paths_batch: obs layout mismatch");
+    }
+    if c_n == 0 {
+        return Vec::new();
+    }
+
+    let enc = encode_batch(model, params, rows, n_obs);
+    let sde = PosteriorSde::new(model);
+    let n_sde = sde.sde_param_len();
+
+    let mut y = vec![0.0; c_n * aug];
+    let mut eps = vec![0.0; dz];
+    let mut bm_sources = Vec::with_capacity(c_n);
+    for c in 0..c_n {
+        let (k_eps, k_bm) = keys[c].split();
+        k_eps.fill_normal(0, &mut eps);
+        for i in 0..dz {
+            y[c * aug + i] =
+                enc.mu0[c * dz + i] + (0.5 * enc.logvar0[c * dz + i]).exp() * eps[i];
+        }
+        bm_sources.push(BrownianPath::new(k_bm, aug, times[0], times[n_obs - 1]));
+    }
+    let mut bm = BatchBrownian::new(bm_sources);
+
+    let mut out = vec![vec![0.0; n_obs * dz]; c_n];
+    for c in 0..c_n {
+        out[c][..dz].copy_from_slice(&y[c * aug..c * aug + dz]);
+    }
+    let mut y_next = vec![0.0; c_n * aug];
+    for k in 1..n_obs {
+        let ctx_k = &enc.ctx[(k - 1) * c_n * dc..k * c_n * dc];
+        let grid = uniform_grid(times[k - 1], times[k], substeps.max(1));
+        let mut sys = CtxBatchForwardFunc::new(&sde, &params[..n_sde], ctx_k, c_n);
+        batch_grid_core(&mut sys, Method::Heun, &y, &grid, &mut bm, &mut y_next);
+        y.copy_from_slice(&y_next);
+        for c in 0..c_n {
+            out[c][k * dz..(k + 1) * dz].copy_from_slice(&y[c * aug..c * aug + dz]);
+        }
+    }
+    out
+}
+
+/// Batched multi-sequence ELBO scoring for the serving subsystem: R
+/// requests × S samples = one batched engine call. Each request is
+/// encoded in the batched encoder pass; its S posterior sample paths
+/// (keys `keys[r].fold_in(s)`, the same derivation as
+/// [`elbo_value_multi`]) advance together with all other requests'
+/// paths through a single batched piecewise solve with per-path context
+/// rows. Returns one [`MultiElboOutput`] per request.
+///
+/// Request `r`'s loss fields and `per_sample_loss` are **bit-identical**
+/// to `elbo_value_multi(model, params, times, rows[r], keys[r], cfg,
+/// n_samples)` for any batch composition: the shared-context and
+/// per-path-context drift kernels run the same row core
+/// (`latent/posterior.rs`), so broadcasting one context over S rows and
+/// carrying R·S per-path context rows produce the same per-row floats.
+/// (`forward_stats` covers the whole batched solve rather than one
+/// request and is *not* part of the equality contract.) Pinned in the
+/// module tests.
+pub fn elbo_value_multi_batch(
+    model: &LatentSdeModel,
+    params: &[f64],
+    times: &[f64],
+    rows: &[&[f64]],
+    keys: &[PrngKey],
+    cfg: &ElboConfig,
+    n_samples: usize,
+) -> Vec<MultiElboOutput> {
+    let dz = model.cfg.latent_dim;
+    let dx = model.cfg.obs_dim;
+    let dc = model.cfg.context_dim;
+    let n_obs = times.len();
+    let aug = dz + 1;
+    let r_n = rows.len();
+    let s_n = n_samples;
+    assert!(n_obs >= 2, "elbo_value_multi_batch: need at least two observations");
+    assert!(s_n > 0, "elbo_value_multi_batch: need at least one sample");
+    assert_eq!(rows.len(), keys.len(), "elbo_value_multi_batch: one key per request");
+    for obs in rows {
+        assert_eq!(obs.len(), n_obs * dx, "elbo_value_multi_batch: obs layout mismatch");
+    }
+    if r_n == 0 {
+        return Vec::new();
+    }
+    let p_n = r_n * s_n;
+    let s_obs = model.cfg.obs_noise_std;
+    let beta = cfg.kl_weight;
+
+    // ---- 1. Batched encode (R rows); P = R·S reparameterized z0s. ----
+    let enc = encode_batch(model, params, rows, n_obs);
+    let sde = PosteriorSde::new(model);
+    let n_sde = sde.sde_param_len();
+
+    let mut y = vec![0.0; p_n * aug];
+    let mut eps = vec![0.0; dz];
+    let mut bm_sources = Vec::with_capacity(p_n);
+    for r in 0..r_n {
+        for s in 0..s_n {
+            let p = r * s_n + s;
+            let (k_eps, k_bm) = keys[r].fold_in(s as u64).split();
+            k_eps.fill_normal(0, &mut eps);
+            for i in 0..dz {
+                y[p * aug + i] =
+                    enc.mu0[r * dz + i] + (0.5 * enc.logvar0[r * dz + i]).exp() * eps[i];
+            }
+            bm_sources.push(BrownianPath::new(k_bm, aug, times[0], times[n_obs - 1]));
+        }
+    }
+    let mut bm = BatchBrownian::new(bm_sources);
+
+    // ---- 2. One batched piecewise solve over all P paths, each under
+    // its request's context row. --------------------------------------
+    let mut y_obs = vec![0.0; n_obs * p_n * aug];
+    y_obs[..p_n * aug].copy_from_slice(&y);
+    let mut forward_stats = SolveStats::default();
+    let mut y_next = vec![0.0; p_n * aug];
+    let mut ctx_p = vec![0.0; p_n * dc];
+    for k in 1..n_obs {
+        for r in 0..r_n {
+            let src = &enc.ctx[((k - 1) * r_n + r) * dc..((k - 1) * r_n + r + 1) * dc];
+            for s in 0..s_n {
+                ctx_p[(r * s_n + s) * dc..(r * s_n + s + 1) * dc].copy_from_slice(src);
+            }
+        }
+        let grid = uniform_grid(times[k - 1], times[k], cfg.substeps.max(1));
+        let mut sys = CtxBatchForwardFunc::new(&sde, &params[..n_sde], &ctx_p, p_n);
+        let st = batch_grid_core(&mut sys, Method::Heun, &y, &grid, &mut bm, &mut y_next);
+        forward_stats.steps += st.steps;
+        forward_stats.nfe_drift += st.nfe_drift;
+        forward_stats.nfe_diffusion += st.nfe_diffusion;
+        y.copy_from_slice(&y_next);
+        y_obs[k * p_n * aug..(k + 1) * p_n * aug].copy_from_slice(&y);
+    }
+
+    // ---- 3. Batched decoding + per-path loss components. -------------
+    let mut dec_cache = model.decoder.batch_cache(p_n);
+    let mut z_in = vec![0.0; p_n * dz];
+    let mut xhat = vec![0.0; p_n * dx];
+    let mut log_px_p = vec![0.0; p_n];
+    let mut sq_err_p = vec![0.0; p_n];
+    for k in 0..n_obs {
+        for p in 0..p_n {
+            z_in[p * dz..(p + 1) * dz]
+                .copy_from_slice(&y_obs[(k * p_n + p) * aug..(k * p_n + p) * aug + dz]);
+        }
+        model.decoder.forward_batch(params, &z_in, &mut dec_cache, &mut xhat);
+        for r in 0..r_n {
+            let x_k = &rows[r][k * dx..(k + 1) * dx];
+            for s in 0..s_n {
+                let p = r * s_n + s;
+                let xh = &xhat[p * dx..(p + 1) * dx];
+                log_px_p[p] += gaussian_logpdf(x_k, xh, s_obs);
+                sq_err_p[p] +=
+                    x_k.iter().zip(xh).map(|(a, b)| (a - b) * (a - b)).sum::<f64>();
+            }
+        }
+    }
+
+    // ---- 4. Per-request reduction (the scalar estimator's loop). -----
+    let mu_p = &params[model.pz0_mean_off..model.pz0_mean_off + dz];
+    let lv_p = &params[model.pz0_logvar_off..model.pz0_logvar_off + dz];
+    let inv = 1.0 / s_n as f64;
+    (0..r_n)
+        .map(|r| {
+            let mut kl_z0 = 0.0;
+            for i in 0..dz {
+                let var_q = enc.logvar0[r * dz + i].exp();
+                let var_p = lv_p[i].exp();
+                let dmu = enc.mu0[r * dz + i] - mu_p[i];
+                kl_z0 += 0.5
+                    * (lv_p[i] - enc.logvar0[r * dz + i] + (var_q + dmu * dmu) / var_p - 1.0);
+            }
+            let mut per_sample_loss = vec![0.0; s_n];
+            let (mut loss, mut log_px, mut kl_path, mut recon_mse) = (0.0, 0.0, 0.0, 0.0);
+            for s in 0..s_n {
+                let p = r * s_n + s;
+                let kl_s = y_obs[((n_obs - 1) * p_n + p) * aug + dz];
+                let l = -log_px_p[p] + beta * (kl_s + kl_z0);
+                per_sample_loss[s] = l;
+                loss += l;
+                log_px += log_px_p[p];
+                kl_path += kl_s;
+                recon_mse += sq_err_p[p] / (n_obs * dx) as f64;
+            }
+            MultiElboOutput {
+                loss: loss * inv,
+                log_px: log_px * inv,
+                kl_path: kl_path * inv,
+                kl_z0,
+                recon_mse: recon_mse * inv,
+                per_sample_loss,
+                forward_stats,
+            }
+        })
+        .collect()
+}
+
 /// Output of [`elbo_step_batch`]: minibatch totals plus per-path
 /// diagnostics. All scalar fields are **sums over paths** (divide by
 /// [`BatchElboOutput::n_paths`] for minibatch means — the trainer owns
@@ -1307,6 +1538,97 @@ mod tests {
         assert_eq!(out.loss, loss_ref);
         assert_eq!(out.per_path_loss, per_path);
         assert_eq!(out.n_paths, 4);
+    }
+
+    /// The serving batcher's one-call reconstruction rollout must be
+    /// bit-identical to per-request scalar `sample_posterior_path` calls,
+    /// for any batch composition, under both encoder flavors.
+    #[test]
+    fn batched_posterior_paths_bit_identical_to_scalar() {
+        use crate::latent::sample::sample_posterior_path;
+        for cfg in [
+            tiny_cfg(),
+            LatentSdeConfig {
+                encoder: EncoderKind::FirstFramesMlp { n_frames: 3 },
+                ..tiny_cfg()
+            },
+            LatentSdeConfig { diffusion: DiffusionMode::Off, ..tiny_cfg() },
+        ] {
+            let model = LatentSdeModel::new(cfg);
+            let params = model.init_params(PrngKey::from_seed(50));
+            let n_obs = 5;
+            let seqs: Vec<Vec<f64>> =
+                (0..4).map(|r| toy_sequence(n_obs, 2, 60 + r).1).collect();
+            let times = toy_sequence(n_obs, 2, 60).0;
+            let rows: Vec<&[f64]> = seqs.iter().map(|s| s.as_slice()).collect();
+            let keys: Vec<PrngKey> = (0..4).map(|r| PrngKey::from_seed(70 + r)).collect();
+
+            let batch =
+                sample_posterior_paths_batch(&model, &params, &times, &rows, 3, &keys);
+            for r in 0..rows.len() {
+                let scalar =
+                    sample_posterior_path(&model, &params, &times, rows[r], 3, keys[r]);
+                assert_eq!(batch[r], scalar, "request {r} diverged from scalar call");
+            }
+            // Batch composition must not matter.
+            let sub = sample_posterior_paths_batch(
+                &model,
+                &params,
+                &times,
+                &rows[1..3],
+                3,
+                &keys[1..3],
+            );
+            assert_eq!(sub[0], batch[1]);
+            assert_eq!(sub[1], batch[2]);
+        }
+    }
+
+    /// The serving batcher's one-call multi-request scorer must be
+    /// bit-identical (loss fields + per-sample losses) to per-request
+    /// `elbo_value_multi` calls, for any batch composition.
+    #[test]
+    fn batched_multi_request_elbo_bit_identical_to_scalar() {
+        let model = LatentSdeModel::new(tiny_cfg());
+        let params = model.init_params(PrngKey::from_seed(80));
+        let n_obs = 5;
+        let seqs: Vec<Vec<f64>> = (0..3).map(|r| toy_sequence(n_obs, 2, 90 + r).1).collect();
+        let times = toy_sequence(n_obs, 2, 90).0;
+        let rows: Vec<&[f64]> = seqs.iter().map(|s| s.as_slice()).collect();
+        let keys: Vec<PrngKey> = (0..3).map(|r| PrngKey::from_seed(95 + r)).collect();
+        let cfg = ElboConfig { substeps: 3, kl_weight: 0.4 };
+
+        for n_samples in [1, 3] {
+            let batch =
+                elbo_value_multi_batch(&model, &params, &times, &rows, &keys, &cfg, n_samples);
+            assert_eq!(batch.len(), rows.len());
+            for r in 0..rows.len() {
+                let scalar = elbo_value_multi(
+                    &model, &params, &times, rows[r], keys[r], &cfg, n_samples,
+                );
+                assert_eq!(batch[r].loss, scalar.loss, "loss, request {r}");
+                assert_eq!(batch[r].log_px, scalar.log_px, "log_px, request {r}");
+                assert_eq!(batch[r].kl_path, scalar.kl_path, "kl_path, request {r}");
+                assert_eq!(batch[r].kl_z0, scalar.kl_z0, "kl_z0, request {r}");
+                assert_eq!(batch[r].recon_mse, scalar.recon_mse, "mse, request {r}");
+                assert_eq!(
+                    batch[r].per_sample_loss, scalar.per_sample_loss,
+                    "per-sample losses, request {r}"
+                );
+            }
+            // Batch composition must not matter.
+            let solo = elbo_value_multi_batch(
+                &model,
+                &params,
+                &times,
+                &rows[2..3],
+                &keys[2..3],
+                &cfg,
+                n_samples,
+            );
+            assert_eq!(solo[0].loss, batch[2].loss);
+            assert_eq!(solo[0].per_sample_loss, batch[2].per_sample_loss);
+        }
     }
 
     #[test]

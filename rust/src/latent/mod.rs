@@ -30,8 +30,12 @@
 //!   batched encoder/solver/adjoint kernels (per-path encoder context in
 //!   the parameter tail), bit-identical to a sequential [`elbo_step`]
 //!   loop. [`elbo_value_multi`] computes S-sample ELBO estimates (values
-//!   only) on the same engine.
-//! * [`sample`] — prior/posterior path sampling for Figures 6/8/9.
+//!   only) on the same engine; [`elbo_value_multi_batch`] and
+//!   [`sample_posterior_paths_batch`] are its multi-request forms — the
+//!   one-engine-call kernels behind the `sdegrad serve` micro-batcher,
+//!   each request bit-identical to its per-request scalar call.
+//! * [`sample`] — prior/posterior path sampling for Figures 6/8/9, plus
+//!   the batched prior fleet [`sample_prior_paths_batch`] for serving.
 
 pub mod elbo;
 pub mod model;
@@ -39,9 +43,9 @@ pub mod posterior;
 pub mod sample;
 
 pub use elbo::{
-    elbo_step, elbo_step_batch, elbo_value_multi, BatchElboOutput, ElboConfig, ElboOutput,
-    MultiElboOutput,
+    elbo_step, elbo_step_batch, elbo_value_multi, elbo_value_multi_batch,
+    sample_posterior_paths_batch, BatchElboOutput, ElboConfig, ElboOutput, MultiElboOutput,
 };
 pub use model::{DiffusionMode, EncoderKind, LatentSdeConfig, LatentSdeModel};
 pub use posterior::PosteriorSde;
-pub use sample::{decode_path, sample_posterior_path, sample_prior_path};
+pub use sample::{decode_path, sample_posterior_path, sample_prior_path, sample_prior_paths_batch};

@@ -9,11 +9,12 @@
 
 use super::model::{Encoder, LatentSdeModel};
 use super::posterior::PosteriorSde;
-use crate::api::{SaveAt, SdeProblem, SolveOptions, StepControl};
+use crate::api::SdeProblem;
+use crate::brownian::{BatchBrownian, BrownianPath};
 use crate::nn::gru::GruStepCache;
 use crate::prng::PrngKey;
-use crate::sde::{Calculus, Sde};
-use crate::solvers::Method;
+use crate::sde::{BatchSde, Calculus, Sde};
+use crate::solvers::{batch_grid_core, uniform_grid, BatchForwardFunc, Method};
 
 /// The prior latent SDE `dZ = h_θ(z,t) dt + σ(z) ∘ dW` as an [`Sde`]
 /// (no adjoint needed for sampling).
@@ -49,10 +50,19 @@ impl<'a> Sde for PriorSde<'a> {
     }
 }
 
+// Loop-based batch kernels (row-per-row over the scalar impl — the
+// bit-identity-by-construction default), which is what lets the serving
+// batcher advance many simulation requests together per solver step.
+impl<'a> BatchSde for PriorSde<'a> {}
+
 /// Sample a latent path from the prior on the grid `times` (with
-/// `substeps` solver steps per interval). If `z0_override` is given it is
-/// used instead of sampling from `p(z_0)` (Fig 8 row 3: shared initial
-/// state). Returns the latent trajectory row-major `(len(times), dz)`.
+/// `substeps` solver steps per interval, integrated **piecewise** so the
+/// returned rows sit exactly at the requested times — `times` only needs
+/// to be strictly ascending, not uniformly spaced; the serving
+/// `/v1/simulate` endpoint accepts arbitrary grids). If `z0_override` is
+/// given it is used instead of sampling from `p(z_0)` (Fig 8 row 3:
+/// shared initial state). Returns the latent trajectory row-major
+/// `(len(times), dz)`.
 pub fn sample_prior_path(
     model: &LatentSdeModel,
     params: &[f64],
@@ -77,23 +87,72 @@ pub fn sample_prior_path(
         }
     }
     let sde = PriorSde { model };
-    // Fine dense solve covering all obs times; then subsample.
-    let n_total = (times.len() - 1) * substeps;
     let sol = SdeProblem::new(&sde, &z0, (times[0], *times.last().unwrap()))
         .params(params)
         .key(kw)
-        .solve(
-            &SolveOptions {
-                method: Method::Heun,
-                step: StepControl::Steps(n_total.max(1)),
-                save: SaveAt::Dense,
-            },
-        );
-    // Subsample at obs times (uniform spacing assumed within tolerance).
-    let mut out = vec![0.0; times.len() * dz];
-    for (k, _) in times.iter().enumerate() {
-        let src = (k * substeps).min(n_total);
-        out[k * dz..(k + 1) * dz].copy_from_slice(&sol.states[src * dz..(src + 1) * dz]);
+        .solve_intervals(times, substeps.max(1), Method::Heun, |_, _| {});
+    sol.states
+}
+
+/// Batched prior sampling for the serving subsystem: R independent prior
+/// paths (one per request key) advance **together** through one batched
+/// piecewise solve — per interval, a single batched solver call over the
+/// `[R×dz]` state block ([`BatchForwardFunc`] over [`PriorSde`]'s batch
+/// kernels, one Brownian source per path) — so the rows sit exactly at
+/// the requested times for any strictly-ascending grid.
+///
+/// Request `r`'s floats are **bit-identical** to
+/// `sample_prior_path(model, params, times, substeps, keys[r], None)`
+/// for any batch composition (the batch engine computes each path's
+/// floats independently — `tests/batch_engine.rs`; pinned again here in
+/// the module tests), which is what makes cross-request dynamic batching
+/// safe: an answer cannot depend on which strangers' requests shared the
+/// batch.
+pub fn sample_prior_paths_batch(
+    model: &LatentSdeModel,
+    params: &[f64],
+    times: &[f64],
+    substeps: usize,
+    keys: &[PrngKey],
+) -> Vec<Vec<f64>> {
+    let dz = model.cfg.latent_dim;
+    let n_obs = times.len();
+    assert!(n_obs >= 2, "sample_prior_paths_batch: need at least two times");
+    let bsz = keys.len();
+    if bsz == 0 {
+        return Vec::new();
+    }
+    let sde = PriorSde { model };
+
+    // Same per-request derivation as the scalar path: key → (z0 draw, W).
+    let mu = &params[model.pz0_mean_off..model.pz0_mean_off + dz];
+    let lv = &params[model.pz0_logvar_off..model.pz0_logvar_off + dz];
+    let mut y = vec![0.0; bsz * dz];
+    let mut eps = vec![0.0; dz];
+    let mut bm_sources = Vec::with_capacity(bsz);
+    for (r, key) in keys.iter().enumerate() {
+        let (k0, kw) = key.split();
+        k0.fill_normal(0, &mut eps);
+        for i in 0..dz {
+            y[r * dz + i] = mu[i] + (0.5 * lv[i]).exp() * eps[i];
+        }
+        bm_sources.push(BrownianPath::new(kw, dz, times[0], times[n_obs - 1]));
+    }
+    let mut bm = BatchBrownian::new(bm_sources);
+
+    let mut out = vec![vec![0.0; n_obs * dz]; bsz];
+    for r in 0..bsz {
+        out[r][..dz].copy_from_slice(&y[r * dz..(r + 1) * dz]);
+    }
+    let mut y_next = vec![0.0; bsz * dz];
+    for k in 1..n_obs {
+        let grid = uniform_grid(times[k - 1], times[k], substeps.max(1));
+        let mut sys = BatchForwardFunc::for_method(&sde, params, bsz, Method::Heun);
+        batch_grid_core(&mut sys, Method::Heun, &y, &grid, &mut bm, &mut y_next);
+        y.copy_from_slice(&y_next);
+        for r in 0..bsz {
+            out[r][k * dz..(k + 1) * dz].copy_from_slice(&y[r * dz..(r + 1) * dz]);
+        }
     }
     out
 }
@@ -283,6 +342,56 @@ mod tests {
         let dec = decode_path(&m, &params, &lat);
         assert_eq!(dec.len(), 5 * 2);
         assert!(dec.iter().all(|v| v.is_finite()));
+    }
+
+    /// The serving batcher's one-call prior sampler must be bit-identical
+    /// to per-request scalar calls, for any batch composition — including
+    /// non-uniformly spaced time grids (the piecewise solve puts every
+    /// returned row exactly at its requested time).
+    #[test]
+    fn batched_prior_sampling_is_bit_identical_to_scalar() {
+        let m = model();
+        let params = m.init_params(PrngKey::from_seed(20));
+        let uniform: Vec<f64> = (0..7).map(|k| 0.15 * k as f64).collect();
+        let irregular = vec![0.0, 0.05, 0.3, 0.35, 0.9];
+        for times in [&uniform, &irregular] {
+            let keys: Vec<PrngKey> = (0..5).map(|i| PrngKey::from_seed(100 + i)).collect();
+            let batch = sample_prior_paths_batch(&m, &params, times, 3, &keys);
+            assert_eq!(batch.len(), keys.len());
+            for (r, key) in keys.iter().enumerate() {
+                let scalar = sample_prior_path(&m, &params, times, 3, *key, None);
+                assert_eq!(batch[r], scalar, "request {r} diverged from scalar call");
+            }
+            // Batch composition must not matter: the same key in a
+            // different fleet yields the same floats.
+            let sub = sample_prior_paths_batch(&m, &params, times, 3, &keys[2..4]);
+            assert_eq!(sub[0], batch[2]);
+            assert_eq!(sub[1], batch[3]);
+        }
+    }
+
+    /// On a non-uniform grid the prior sampler must respect the interval
+    /// structure: an ODE-mode (deterministic) solve over a *prefix* of
+    /// the grid reproduces the same rows, which fails if rows are
+    /// subsampled from one uniform grid over the whole span.
+    #[test]
+    fn prior_sampling_rows_sit_at_their_requested_times() {
+        let ode = LatentSdeModel::new(LatentSdeConfig {
+            diffusion: DiffusionMode::Off,
+            obs_dim: 2,
+            latent_dim: 3,
+            context_dim: 2,
+            hidden: 8,
+            enc_hidden: 6,
+            ..Default::default()
+        });
+        let params = ode.init_params(PrngKey::from_seed(30));
+        let z0 = [0.2, -0.1, 0.4];
+        let full = vec![0.0, 0.05, 0.3, 0.35, 0.9];
+        let prefix = &full[..3];
+        let a = sample_prior_path(&ode, &params, &full, 4, PrngKey::from_seed(31), Some(&z0));
+        let b = sample_prior_path(&ode, &params, prefix, 4, PrngKey::from_seed(31), Some(&z0));
+        assert_eq!(&a[..3 * 3], &b[..], "prefix rows must agree with the full-grid rows");
     }
 
     #[test]

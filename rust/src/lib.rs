@@ -107,6 +107,36 @@
 //! throughput (`sdegrad bench compare` vs the committed
 //! `BENCH_baseline.json`, >25% regression fails).
 //!
+//! ## Serving a trained latent SDE
+//!
+//! `sdegrad serve --state ckpt.bin --dataset gbm --port 7878` turns a
+//! checkpoint (either format: bare params or full `TrainState`) into an
+//! HTTP inference service ([`serve`]) with **dynamic micro-batching onto
+//! the batched SoA engine**: a dispatcher drains concurrent requests (up
+//! to `--max-batch`, waiting at most `--max-wait-us`) and runs each
+//! compatible group as ONE batched engine call.
+//!
+//! | endpoint | engine call | answer |
+//! |---|---|---|
+//! | `GET /healthz` | — | loaded models + fingerprints |
+//! | `POST /v1/simulate` | [`latent::sample_prior_paths_batch`] prior fleet | prior latent path + decoded obs |
+//! | `POST /v1/reconstruct` | batched encoder + posterior solve + decoder | posterior path + reconstruction |
+//! | `POST /v1/elbo` | [`latent::elbo_value_multi_batch`] | S-sample ELBO estimate |
+//!
+//! **Determinism contract:** every request carries a `seed`, and every
+//! response body is a pure function of (canonical request, model
+//! fingerprint) — bit-identical to a per-request scalar engine call for
+//! any arrival order, batch layout (`--max-batch` 1 vs 16), worker
+//! count, and cache state (`tests/serve.rs`). This is the serving-side
+//! payoff of the engine's bit-identical-batching guarantee: batching
+//! with strangers cannot change your answer. Knobs: `--workers` (HTTP
+//! threads), `--max-batch`/`--max-wait-us` (batcher), `--cache` (LRU
+//! entries, keyed on fingerprint + canonical request bytes; 0 disables),
+//! `--bind` (loopback-only by default — pass `0.0.0.0` to expose).
+//! `sdegrad bench serve` load-tests a synthetic model in-process
+//! (req/sec + p50/p99 → `BENCH_serve.json`, gated by
+//! `sdegrad bench compare`).
+//!
 //! ## Verified convergence orders
 //!
 //! The [`convergence`] subsystem turns the paper's §5 convergence claims
@@ -142,6 +172,7 @@ pub mod optim;
 pub mod prng;
 pub mod runtime;
 pub mod sde;
+pub mod serve;
 pub mod solvers;
 pub mod testing;
 

@@ -2,8 +2,9 @@
 //!
 //! Subcommands:
 //! * `train`            train a latent SDE on a built-in dataset
+//! * `serve`            serve a checkpoint over HTTP (micro-batched inference)
 //! * `repro <id>`       regenerate a paper table/figure (`--quick` trims)
-//! * `bench <id>`       performance harnesses (`throughput` → BENCH_*.json)
+//! * `bench <id>`       performance harnesses (`throughput`/`serve` → BENCH_*.json)
 //! * `artifacts-check`  compile + smoke-run every AOT artifact
 //! * `list`             show datasets / experiments / artifacts
 //!
@@ -13,8 +14,10 @@ use sdegrad::coordinator::config::{arg, parse_args, TrainConfig};
 use sdegrad::coordinator::repro;
 use sdegrad::coordinator::{load_state, save_params, save_state, train_latent_sde_from};
 use sdegrad::data::{gbm, lorenz, mocap};
-use sdegrad::latent::{DiffusionMode, EncoderKind, LatentSdeConfig, LatentSdeModel};
+use sdegrad::latent::LatentSdeModel;
 use sdegrad::prng::PrngKey;
+use sdegrad::serve::registry::{apply_mode, dataset_model_config};
+use sdegrad::serve::{ModelRegistry, ServeConfig, Server};
 
 fn usage() -> ! {
     eprintln!(
@@ -26,11 +29,17 @@ USAGE:
                   [--seed N] [--workers N] [--out checkpoint.bin]
                   [--state state.bin] [--resume state.bin] [--log train.csv]
                   [--smoke-check]
+    sdegrad serve --state <ckpt.bin> [--dataset gbm|lorenz|mocap] [--mode sde|ode]
+                  [--name default] [--port 7878] [--workers N]
+                  [--max-batch 16] [--max-wait-us 500] [--cache 1024]
+                  [--max-body 1048576] [--bind 127.0.0.1]
+                  (loopback-only by default; --bind 0.0.0.0 to expose)
     sdegrad repro <table1|fig2|fig5|fig6|fig9|table2|convergence|all> [--quick]
     sdegrad bench throughput [--quick]
+    sdegrad bench serve [--quick]
     sdegrad bench compare [--baseline BENCH_baseline.json]
                   [--current BENCH_throughput.json] [--threshold 0.25]
-                  [--summary summary.md]
+                  [--summary summary.md] [--subset throughput|serve]
     sdegrad artifacts-check [--dir artifacts]
     sdegrad list",
         sdegrad::version()
@@ -44,6 +53,7 @@ fn main() {
     let rest = &args[1..];
     match cmd.as_str() {
         "train" => cmd_train(rest),
+        "serve" => cmd_serve(rest),
         "repro" => cmd_repro(rest),
         "bench" => cmd_bench(rest),
         "artifacts-check" => cmd_artifacts_check(rest),
@@ -59,70 +69,42 @@ fn cmd_train(rest: &[String]) {
     let mode = map.get("mode").cloned().unwrap_or_else(|| "sde".into());
     let cfg = TrainConfig::from_args(&map);
 
-    let (ds, model_cfg) = match dataset_name.as_str() {
+    // Architecture per dataset: one source of truth shared with
+    // `sdegrad serve` (a checkpoint trained here is served with the same
+    // --dataset/--mode flags).
+    let Some(base_cfg) = dataset_model_config(&dataset_name) else {
+        eprintln!("unknown dataset {dataset_name}");
+        usage()
+    };
+    let ds = match dataset_name.as_str() {
         "gbm" => {
             let n: usize = arg(&map, "series", 256);
-            let ds = gbm::generate(
+            gbm::generate(
                 PrngKey::from_seed(cfg.seed),
                 &gbm::GbmConfig { n_series: n, ..Default::default() },
-            );
-            (
-                ds,
-                LatentSdeConfig {
-                    obs_dim: 1,
-                    latent_dim: 4,
-                    context_dim: 1,
-                    hidden: 64,
-                    enc_hidden: 64,
-                    obs_noise_std: 0.05,
-                    ..Default::default()
-                },
             )
         }
         "lorenz" => {
             let n: usize = arg(&map, "series", 256);
-            let ds = lorenz::generate(
+            lorenz::generate(
                 PrngKey::from_seed(cfg.seed),
                 &lorenz::LorenzConfig { n_series: n, ..Default::default() },
-            );
-            (
-                ds,
-                LatentSdeConfig {
-                    obs_dim: 3,
-                    latent_dim: 4,
-                    context_dim: 1,
-                    hidden: 64,
-                    enc_hidden: 64,
-                    obs_noise_std: 0.05,
-                    ..Default::default()
-                },
             )
         }
-        "mocap" => {
-            let ds = mocap::generate(PrngKey::from_seed(cfg.seed), &mocap::MocapConfig::default());
-            (
-                ds,
-                LatentSdeConfig {
-                    obs_dim: 50,
-                    latent_dim: 6,
-                    context_dim: 3,
-                    hidden: 30,
-                    enc_hidden: 30,
-                    encoder: EncoderKind::FirstFramesMlp { n_frames: 3 },
-                    obs_noise_std: 0.1,
-                    ..Default::default()
-                },
-            )
-        }
+        "mocap" => mocap::generate(PrngKey::from_seed(cfg.seed), &mocap::MocapConfig::default()),
         other => {
-            eprintln!("unknown dataset {other}");
-            usage()
+            // dataset_model_config accepted a dataset this match cannot
+            // generate: the two lists drifted apart.
+            eprintln!("dataset {other} has a model config but no generator in cmd_train");
+            std::process::exit(2);
         }
     };
-    let model_cfg = if mode == "ode" {
-        LatentSdeConfig { diffusion: DiffusionMode::Off, ..model_cfg }
-    } else {
-        model_cfg
+    let model_cfg = match apply_mode(base_cfg, &mode) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("{e}");
+            usage()
+        }
     };
 
     let model = LatentSdeModel::new(model_cfg);
@@ -191,6 +173,67 @@ fn cmd_train(rest: &[String]) {
     }
 }
 
+/// `sdegrad serve`: load checkpoint(s) into a model registry and serve
+/// until killed. A corrupt/truncated checkpoint or an
+/// architecture/parameter-count mismatch is a clean startup error
+/// (exit 1), not a panic.
+fn cmd_serve(rest: &[String]) {
+    let map = parse_args(rest);
+    let Some(state_path) = map.get("state") else {
+        eprintln!("serve: --state <checkpoint> is required");
+        usage()
+    };
+    let dataset = map.get("dataset").cloned().unwrap_or_else(|| "gbm".into());
+    let mode = map.get("mode").cloned().unwrap_or_else(|| "sde".into());
+    let name = map.get("name").cloned().unwrap_or_else(|| "default".into());
+
+    let Some(base_cfg) = dataset_model_config(&dataset) else {
+        eprintln!("serve: unknown dataset {dataset}");
+        usage()
+    };
+    let model_cfg = match apply_mode(base_cfg, &mode) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("serve: {e}");
+            usage()
+        }
+    };
+    let mut registry = ModelRegistry::new();
+    if let Err(e) = registry.load_checkpoint(&name, model_cfg, state_path) {
+        eprintln!("serve: cannot load {state_path}: {e}");
+        std::process::exit(1);
+    }
+
+    let defaults = ServeConfig::default();
+    let cfg = ServeConfig {
+        host: arg(&map, "bind", defaults.host),
+        port: arg(&map, "port", defaults.port),
+        workers: arg(&map, "workers", defaults.workers),
+        max_batch: arg(&map, "max-batch", defaults.max_batch),
+        max_wait_us: arg(&map, "max-wait-us", defaults.max_wait_us),
+        cache_capacity: arg(&map, "cache", defaults.cache_capacity),
+        max_body_bytes: arg(&map, "max-body", defaults.max_body_bytes),
+    };
+    let server = match Server::start(registry, cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("serve: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "sdegrad serve: listening on http://{} (model {name:?} from {state_path}; \
+         {} workers, max-batch {}, max-wait {} µs, cache {})",
+        server.addr(),
+        cfg.workers,
+        cfg.max_batch,
+        cfg.max_wait_us,
+        cfg.cache_capacity
+    );
+    println!("endpoints: GET /healthz, POST /v1/simulate /v1/reconstruct /v1/elbo");
+    server.run();
+}
+
 fn cmd_repro(rest: &[String]) {
     let map = parse_args(rest);
     let quick = map.contains_key("quick");
@@ -239,6 +282,9 @@ fn cmd_bench(rest: &[String]) {
         "throughput" => {
             sdegrad::coordinator::bench::run_throughput(quick);
         }
+        "serve" => {
+            sdegrad::coordinator::bench::run_serve_bench(quick);
+        }
         "compare" => {
             let baseline =
                 map.get("baseline").cloned().unwrap_or_else(|| "BENCH_baseline.json".into());
@@ -251,11 +297,13 @@ fn cmd_bench(rest: &[String]) {
                 .get("summary")
                 .cloned()
                 .or_else(|| std::env::var("GITHUB_STEP_SUMMARY").ok());
+            let subset = map.get("subset").cloned();
             let code = sdegrad::coordinator::bench::run_compare(
                 &baseline,
                 &current,
                 threshold,
                 summary.as_deref(),
+                subset.as_deref(),
             );
             std::process::exit(code);
         }
@@ -317,6 +365,10 @@ fn cmd_list() {
         "experiments:  table1, fig2, fig5 (incl. fig7), fig6 (incl. fig8), fig9, table2, \
          convergence"
     );
-    println!("benches:      throughput (BENCH_throughput.json), compare (regression gate)");
+    println!(
+        "benches:      throughput (BENCH_throughput.json), serve (BENCH_serve.json), \
+         compare (regression gate, --subset per harness)"
+    );
+    println!("serving:      sdegrad serve --state ckpt.bin (healthz/simulate/reconstruct/elbo)");
     println!("artifacts:    see `sdegrad artifacts-check`");
 }

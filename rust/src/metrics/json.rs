@@ -1,0 +1,406 @@
+//! The crate's single JSON implementation (hand-rolled: serde is not in
+//! the hermetic crate set — DESIGN.md §3).
+//!
+//! Three layers, shared by every JSON producer/consumer in the crate:
+//!
+//! * **Emit** — [`json_str`] / [`json_num`] fragment formatters, used by
+//!   [`super::writer::JsonlWriter`], the bench harnesses
+//!   (`coordinator::bench`), and the serving protocol
+//!   (`serve::protocol`). Numbers go through Rust's shortest-roundtrip
+//!   `{}` formatting, so emitting and re-parsing an `f64` is exact —
+//!   the property the serving subsystem's byte-identical response
+//!   contract rests on.
+//! * **Scan** — [`json_string_field`] / [`json_number_field`]: flat
+//!   field scanners for *our own* emitted formats (`BENCH_*.json`),
+//!   where the shape is known and a full parse is overkill.
+//! * **Parse** — [`parse_json`] → [`JsonValue`]: a small recursive-
+//!   descent parser for untrusted input (serving request bodies), with
+//!   a nesting-depth cap so malicious bodies cannot blow the stack.
+
+use std::fmt::Write as _;
+
+/// JSON-escape a string (quotes, backslashes, control chars).
+pub fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Format a number as a JSON value (NaN/inf → null). Finite values use
+/// shortest-roundtrip formatting: parsing the emitted text recovers the
+/// exact same `f64`.
+pub fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Scan `block` for `"key": "value"` and return the value. Values we
+/// emit are plain identifiers (no escapes), which is all this handles —
+/// use [`parse_json`] for untrusted input.
+pub fn json_string_field(block: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\":");
+    let at = block.find(&pat)? + pat.len();
+    let rest = block[at..].trim_start().strip_prefix('"')?;
+    let end = rest.find('"')?;
+    Some(rest[..end].to_string())
+}
+
+/// Scan `block` for `"key": <number>` and parse it.
+pub fn json_number_field(block: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\":");
+    let at = block.find(&pat)? + pat.len();
+    let rest = block[at..].trim_start();
+    let end = rest
+        .find(|c: char| c == ',' || c == '}' || c == ']' || c.is_whitespace())
+        .unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// A parsed JSON value. Objects preserve key order (a `Vec` of pairs —
+/// the payloads this crate parses are small, and order preservation
+/// keeps canonical re-emission deterministic).
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// Object field lookup (first match).
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Integer-valued number in `u64` range (exactly representable —
+    /// restricted to `< 2^53` so no precision was lost in the `f64`).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            JsonValue::Num(v)
+                if v.fract() == 0.0 && *v >= 0.0 && *v < 9_007_199_254_740_992.0 =>
+            {
+                Some(*v as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|v| v as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            JsonValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[JsonValue]> {
+        match self {
+            JsonValue::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+/// Maximum nesting depth accepted by [`parse_json`] (arrays/objects).
+const MAX_DEPTH: usize = 32;
+
+/// Parse one JSON document. Errors carry a byte offset and a short
+/// reason. Accepts a marginal superset of strict JSON numbers (anything
+/// `f64::from_str` takes over the number alphabet), which is harmless
+/// for our use: every number is re-validated by the consumer.
+pub fn parse_json(text: &str) -> Result<JsonValue, String> {
+    let bytes = text.as_bytes();
+    let mut pos = 0usize;
+    let value = parse_value(text, bytes, &mut pos, 0)?;
+    skip_ws(bytes, &mut pos);
+    if pos != bytes.len() {
+        return Err(format!("trailing data at byte {pos}"));
+    }
+    Ok(value)
+}
+
+fn skip_ws(bytes: &[u8], pos: &mut usize) {
+    while *pos < bytes.len() && matches!(bytes[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(bytes: &[u8], pos: &mut usize, c: u8) -> Result<(), String> {
+    if *pos < bytes.len() && bytes[*pos] == c {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(format!("expected '{}' at byte {}", c as char, *pos))
+    }
+}
+
+fn parse_value(
+    text: &str,
+    bytes: &[u8],
+    pos: &mut usize,
+    depth: usize,
+) -> Result<JsonValue, String> {
+    if depth > MAX_DEPTH {
+        return Err(format!("nesting deeper than {MAX_DEPTH}"));
+    }
+    skip_ws(bytes, pos);
+    match bytes.get(*pos) {
+        None => Err("unexpected end of input".to_string()),
+        Some(b'{') => {
+            *pos += 1;
+            let mut pairs = Vec::new();
+            skip_ws(bytes, pos);
+            if bytes.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(JsonValue::Obj(pairs));
+            }
+            loop {
+                skip_ws(bytes, pos);
+                let key = parse_string(text, bytes, pos)?;
+                skip_ws(bytes, pos);
+                expect(bytes, pos, b':')?;
+                let val = parse_value(text, bytes, pos, depth + 1)?;
+                pairs.push((key, val));
+                skip_ws(bytes, pos);
+                match bytes.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(JsonValue::Obj(pairs));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at byte {}", *pos)),
+                }
+            }
+        }
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(bytes, pos);
+            if bytes.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(JsonValue::Arr(items));
+            }
+            loop {
+                items.push(parse_value(text, bytes, pos, depth + 1)?);
+                skip_ws(bytes, pos);
+                match bytes.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(JsonValue::Arr(items));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at byte {}", *pos)),
+                }
+            }
+        }
+        Some(b'"') => parse_string(text, bytes, pos).map(JsonValue::Str),
+        Some(b't') if text[*pos..].starts_with("true") => {
+            *pos += 4;
+            Ok(JsonValue::Bool(true))
+        }
+        Some(b'f') if text[*pos..].starts_with("false") => {
+            *pos += 5;
+            Ok(JsonValue::Bool(false))
+        }
+        Some(b'n') if text[*pos..].starts_with("null") => {
+            *pos += 4;
+            Ok(JsonValue::Null)
+        }
+        Some(c) if matches!(c, b'-' | b'0'..=b'9') => {
+            let start = *pos;
+            while *pos < bytes.len()
+                && matches!(bytes[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                *pos += 1;
+            }
+            text[start..*pos]
+                .parse::<f64>()
+                .map(JsonValue::Num)
+                .map_err(|_| format!("bad number at byte {start}"))
+        }
+        Some(c) => Err(format!("unexpected character '{}' at byte {}", *c as char, *pos)),
+    }
+}
+
+fn parse_string(text: &str, bytes: &[u8], pos: &mut usize) -> Result<String, String> {
+    expect(bytes, pos, b'"')?;
+    let mut out = String::new();
+    loop {
+        match bytes.get(*pos) {
+            None => return Err("unterminated string".to_string()),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match bytes.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => {
+                        let hex = text
+                            .get(*pos + 1..*pos + 5)
+                            .ok_or_else(|| format!("bad \\u escape at byte {}", *pos))?;
+                        let code = u32::from_str_radix(hex, 16)
+                            .map_err(|_| format!("bad \\u escape at byte {}", *pos))?;
+                        // Surrogate pairs are rejected rather than
+                        // combined — our emitters never produce them.
+                        let c = char::from_u32(code)
+                            .ok_or_else(|| format!("invalid \\u code point at byte {}", *pos))?;
+                        out.push(c);
+                        *pos += 4;
+                    }
+                    _ => return Err(format!("bad escape at byte {}", *pos)),
+                }
+                *pos += 1;
+            }
+            Some(&c) if c < 0x20 => {
+                return Err(format!("raw control character at byte {}", *pos));
+            }
+            Some(_) => {
+                // Consume one full UTF-8 scalar (the input is a &str, so
+                // boundaries are valid).
+                let s = &text[*pos..];
+                let ch = s.chars().next().expect("non-empty");
+                out.push(ch);
+                *pos += ch.len_utf8();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escaping_round_trips() {
+        assert_eq!(json_str("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
+        assert_eq!(json_num(f64::NAN), "null");
+        assert_eq!(json_num(2.5), "2.5");
+        let parsed = parse_json(&json_str("a\"b\\c\nπ\t")).unwrap();
+        assert_eq!(parsed, JsonValue::Str("a\"b\\c\nπ\t".to_string()));
+    }
+
+    #[test]
+    fn numbers_round_trip_exactly() {
+        for v in [0.1, -1.5e-300, 1.0 / 3.0, 123456789.123456789, f64::MIN_POSITIVE, -0.0] {
+            let emitted = json_num(v);
+            let back = parse_json(&emitted).unwrap().as_f64().unwrap();
+            assert_eq!(v.to_bits(), back.to_bits(), "{v} → {emitted} → {back}");
+        }
+    }
+
+    #[test]
+    fn parses_nested_document() {
+        let doc = r#"{"model": "m", "seed": 7, "times": [0, 0.5, 1.0],
+                      "obs": [[1, 2], [3, 4]], "flag": true, "none": null}"#;
+        let v = parse_json(doc).unwrap();
+        assert_eq!(v.get("model").unwrap().as_str(), Some("m"));
+        assert_eq!(v.get("seed").unwrap().as_u64(), Some(7));
+        let times = v.get("times").unwrap().as_array().unwrap();
+        assert_eq!(times.len(), 3);
+        assert_eq!(times[1].as_f64(), Some(0.5));
+        let obs = v.get("obs").unwrap().as_array().unwrap();
+        assert_eq!(obs[1].as_array().unwrap()[0].as_f64(), Some(3.0));
+        assert_eq!(v.get("flag").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("none"), Some(&JsonValue::Null));
+        assert_eq!(v.get("missing"), None);
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in [
+            "",
+            "{",
+            "[1, 2",
+            "{\"a\" 1}",
+            "{\"a\": 1,}",
+            "tru",
+            "\"unterminated",
+            "1 2",
+            "{\"a\": 1} trailing",
+            "\"bad \\q escape\"",
+            "nan",
+        ] {
+            assert!(parse_json(bad).is_err(), "accepted: {bad:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_deep_nesting() {
+        let mut doc = String::new();
+        for _ in 0..200 {
+            doc.push('[');
+        }
+        doc.push('1');
+        for _ in 0..200 {
+            doc.push(']');
+        }
+        assert!(parse_json(&doc).is_err());
+    }
+
+    #[test]
+    fn u64_guardrails() {
+        assert_eq!(parse_json("7").unwrap().as_u64(), Some(7));
+        assert_eq!(parse_json("-1").unwrap().as_u64(), None);
+        assert_eq!(parse_json("1.5").unwrap().as_u64(), None);
+        assert_eq!(parse_json("1e300").unwrap().as_u64(), None);
+    }
+
+    #[test]
+    fn field_scanners_match_emitted_shape() {
+        let block = "{\"problem\": \"gbm_d10\", \"value_per_sec\": 123.5, \"steps\": 200}";
+        assert_eq!(json_string_field(block, "problem").as_deref(), Some("gbm_d10"));
+        assert_eq!(json_number_field(block, "value_per_sec"), Some(123.5));
+        assert_eq!(json_number_field(block, "steps"), Some(200.0));
+        assert_eq!(json_string_field(block, "missing"), None);
+        assert_eq!(json_number_field(block, "missing"), None);
+    }
+}

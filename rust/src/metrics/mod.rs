@@ -1,11 +1,15 @@
 //! Measurement utilities shared by the trainer and the bench harnesses:
 //! online statistics, timers, confidence intervals (Table 2 reports
-//! t-statistic 95% CIs), and CSV/JSONL writers for figure data.
+//! t-statistic 95% CIs), CSV/JSONL writers for figure data, and the
+//! crate's single JSON implementation ([`json`] — emit, scan, parse),
+//! shared by the bench artifacts and the serving protocol.
 
+pub mod json;
 pub mod stats;
 pub mod timer;
 pub mod writer;
 
+pub use json::{json_num, json_str, parse_json, JsonValue};
 pub use stats::{
     confidence_interval_95, fit_loglog, percentile_of_sorted, LogLogFit, OnlineStats, Quartiles,
 };

@@ -86,33 +86,10 @@ impl JsonlWriter {
     }
 }
 
-/// JSON-escape a string (quotes, backslashes, control chars).
-pub fn json_str(s: &str) -> String {
-    let mut out = String::with_capacity(s.len() + 2);
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out.push('"');
-    out
-}
-
-/// Format a number as a JSON value (NaN/inf → null).
-pub fn json_num(v: f64) -> String {
-    if v.is_finite() {
-        format!("{v}")
-    } else {
-        "null".to_string()
-    }
-}
+// The JSON fragment formatters moved to the crate's single JSON module;
+// re-exported here so `metrics::writer::{json_str, json_num}` keeps
+// working for existing call sites.
+pub use super::json::{json_num, json_str};
 
 #[cfg(test)]
 mod tests {

@@ -1,0 +1,569 @@
+//! The dynamic micro-batcher: a dispatcher thread drains the request
+//! queue (up to `max_batch` jobs or `max_wait_us`, whichever first),
+//! partitions the drained jobs into **compatibility groups** (same
+//! endpoint, model, time grid, and solve knobs — bit-compared), and
+//! issues **one batched engine call per group**:
+//!
+//! * `/v1/simulate`    → [`sample_prior_paths_batch`] (batched piecewise prior fleet)
+//! * `/v1/reconstruct` → [`sample_posterior_paths_batch`] (batched encoder +
+//!   per-path-context posterior solve + decoder)
+//! * `/v1/elbo`        → [`elbo_value_multi_batch`] (R requests × S samples)
+//!
+//! ## Why cross-request batching is safe
+//!
+//! Every batched kernel computes each path's floats **independently of
+//! its batch neighbours** (the PR 3/4 bit-identical-batching guarantee,
+//! re-pinned for these kernels in `latent/{sample,elbo}.rs`), and every
+//! per-request float stream derives from the request's own `seed`. So a
+//! response is bit-identical to [`scalar_response`] — the per-request
+//! scalar engine call — for ANY arrival order, queue depth, `max_batch`,
+//! and group layout. `tests/serve.rs` pins this end-to-end over HTTP.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::protocol::{self, ApiError, ServeRequest};
+use super::registry::{ModelEntry, ModelRegistry};
+use crate::latent::{
+    decode_path, elbo_value_multi, elbo_value_multi_batch, sample_posterior_path,
+    sample_posterior_paths_batch, sample_prior_path, sample_prior_paths_batch, ElboConfig,
+};
+use crate::prng::PrngKey;
+
+/// Micro-batching knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Maximum jobs per drain (1 = no cross-request batching).
+    pub max_batch: usize,
+    /// How long the dispatcher waits for more jobs after the first one.
+    pub max_wait_us: u64,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 16, max_wait_us: 500 }
+    }
+}
+
+/// One queued request plus its reply channel.
+pub struct Job {
+    pub request: ServeRequest,
+    pub resp: mpsc::Sender<Result<Vec<u8>, ApiError>>,
+}
+
+/// Handle to the dispatcher thread. Cloning [`Batcher::sender`] gives
+/// each server worker its own enqueue handle; the dispatcher exits when
+/// every sender is dropped.
+pub struct Batcher {
+    tx: mpsc::Sender<Job>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Batcher {
+    pub fn start(registry: Arc<ModelRegistry>, cfg: BatcherConfig) -> Batcher {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let max_batch = cfg.max_batch.max(1);
+        let max_wait = Duration::from_micros(cfg.max_wait_us);
+        let handle = std::thread::Builder::new()
+            .name("sdegrad-batcher".into())
+            .spawn(move || dispatcher_loop(rx, &registry, max_batch, max_wait))
+            .expect("spawning batcher thread");
+        Batcher { tx, handle: Some(handle) }
+    }
+
+    /// An enqueue handle for a worker thread.
+    pub fn sender(&self) -> mpsc::Sender<Job> {
+        self.tx.clone()
+    }
+
+    /// Enqueue one request and block for its response (test/bench
+    /// convenience; the HTTP workers use [`Batcher::sender`] + [`submit_via`]).
+    pub fn submit(&self, request: ServeRequest) -> Result<Vec<u8>, ApiError> {
+        submit_via(&self.tx, request)
+    }
+
+    /// Drop the enqueue side and join the dispatcher. Callers must drop
+    /// every cloned sender first or this blocks until they do. (Merely
+    /// dropping the `Batcher` also stops the dispatcher — once all
+    /// senders are gone — but detaches its thread instead of joining.)
+    pub fn shutdown(self) {
+        let Batcher { tx, handle } = self;
+        drop(tx);
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Enqueue on a cloned sender and block for the response.
+pub fn submit_via(
+    tx: &mpsc::Sender<Job>,
+    request: ServeRequest,
+) -> Result<Vec<u8>, ApiError> {
+    let (rtx, rrx) = mpsc::channel();
+    tx.send(Job { request, resp: rtx })
+        .map_err(|_| ApiError::internal("the batcher has stopped"))?;
+    rrx.recv()
+        .unwrap_or_else(|_| Err(ApiError::internal("the batcher dropped the request")))
+}
+
+fn dispatcher_loop(
+    rx: mpsc::Receiver<Job>,
+    registry: &ModelRegistry,
+    max_batch: usize,
+    max_wait: Duration,
+) {
+    loop {
+        // Block for the first job; drain opportunistically after it.
+        let first = match rx.recv() {
+            Ok(j) => j,
+            Err(_) => return, // every sender dropped: clean shutdown
+        };
+        let mut jobs = vec![first];
+        if max_batch > 1 {
+            let deadline = Instant::now() + max_wait;
+            while jobs.len() < max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(j) => jobs.push(j),
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        }
+        process_batch(registry, jobs);
+    }
+}
+
+/// Bit-level equality for the grouping key: `==` would conflate 0.0 and
+/// −0.0, which are different inputs to the engine.
+fn same_bits(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Can these two requests share one batched engine call? Everything the
+/// engine call shares across the batch must match: endpoint, model, the
+/// time grid, and the solve knobs. Per-request data (seed, observations)
+/// varies freely — that is what the batch dimensions carry.
+fn compatible(a: &ServeRequest, b: &ServeRequest) -> bool {
+    match (a, b) {
+        (ServeRequest::Simulate(x), ServeRequest::Simulate(y)) => {
+            x.model == y.model && x.substeps == y.substeps && same_bits(&x.times, &y.times)
+        }
+        (ServeRequest::Reconstruct(x), ServeRequest::Reconstruct(y)) => {
+            x.model == y.model && x.substeps == y.substeps && same_bits(&x.times, &y.times)
+        }
+        (ServeRequest::Elbo(x), ServeRequest::Elbo(y)) => {
+            x.model == y.model
+                && x.substeps == y.substeps
+                && x.samples == y.samples
+                && x.kl_weight.to_bits() == y.kl_weight.to_bits()
+                && same_bits(&x.times, &y.times)
+        }
+        _ => false,
+    }
+}
+
+/// Aggregate size cap for one batched engine call, in "path-observation
+/// cells" (`times × samples` summed over the group — the y_obs state the
+/// batched solves keep is proportional to this × the latent dimension).
+/// [`protocol::MAX_REQUEST_STEPS`] bounds one request's *compute*;
+/// without this, max_batch maximal requests grouped together could
+/// transiently allocate ~1 GB in a single engine call. Splitting a
+/// compatibility group never changes a response byte (batch composition
+/// independence), only how many engine calls serve the drain.
+const MAX_GROUP_CELLS: usize = 1 << 21;
+
+/// A request's contribution to [`MAX_GROUP_CELLS`].
+fn request_cells(r: &ServeRequest) -> usize {
+    match r {
+        ServeRequest::Simulate(x) => x.times.len(),
+        ServeRequest::Reconstruct(x) => x.times.len(),
+        ServeRequest::Elbo(x) => x.times.len() * x.samples,
+    }
+}
+
+/// Partition one drained queue into compatibility groups (arrival order
+/// preserved within each group — not that order matters: every response
+/// is independent of its neighbours), each capped at
+/// [`MAX_GROUP_CELLS`], and run each group as one batched engine call.
+fn process_batch(registry: &ModelRegistry, jobs: Vec<Job>) {
+    let mut groups: Vec<Vec<Job>> = Vec::new();
+    let mut group_cells: Vec<usize> = Vec::new();
+    'outer: for job in jobs {
+        let cells = request_cells(&job.request);
+        for (g, used) in groups.iter_mut().zip(group_cells.iter_mut()) {
+            if compatible(&g[0].request, &job.request) && *used + cells <= MAX_GROUP_CELLS {
+                g.push(job);
+                *used += cells;
+                continue 'outer;
+            }
+        }
+        groups.push(vec![job]);
+        group_cells.push(cells);
+    }
+    for group in groups {
+        run_group(registry, group);
+    }
+}
+
+/// Execute one compatibility group with a single batched engine call and
+/// answer every job. The engine call runs under `catch_unwind`: a panic
+/// (engine invariant violation on some adversarial input) must answer
+/// the group with 500s, not kill the dispatcher thread and brick every
+/// future request into "the batcher has stopped".
+fn run_group(registry: &ModelRegistry, jobs: Vec<Job>) {
+    let name = jobs[0].request.model().to_string();
+    let Some(entry) = registry.get(&name) else {
+        let err = ApiError::unknown_model(&name);
+        for j in &jobs {
+            let _ = j.resp.send(Err(err.clone()));
+        }
+        return;
+    };
+    // Defense in depth for EVERY job — the HTTP worker validates before
+    // enqueueing, but direct `Batcher::submit` callers may not have, and
+    // obs shape is not part of the grouping key. Malformed jobs are
+    // answered individually; the rest proceed as one batch.
+    let (valid, invalid): (Vec<Job>, Vec<Job>) = jobs.into_iter().partition(|j| {
+        protocol::validate_for_model(&j.request, entry.model.cfg.obs_dim).is_ok()
+    });
+    for j in &invalid {
+        let err = protocol::validate_for_model(&j.request, entry.model.cfg.obs_dim)
+            .expect_err("partitioned as invalid");
+        let _ = j.resp.send(Err(err));
+    }
+    if valid.is_empty() {
+        return;
+    }
+
+    let requests: Vec<&ServeRequest> = valid.iter().map(|j| &j.request).collect();
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        // Nothing outlives the closure on panic: the engine works on
+        // per-call state and reads the registry immutably.
+        compute_group(entry, &requests)
+    }));
+    match outcome {
+        Ok(bodies) => {
+            for (j, body) in valid.iter().zip(bodies) {
+                let _ = j.resp.send(Ok(body));
+            }
+        }
+        Err(_) => {
+            let err = ApiError::internal("engine call failed for this batch");
+            for j in &valid {
+                let _ = j.resp.send(Err(err.clone()));
+            }
+        }
+    }
+}
+
+/// The one-batched-engine-call body of [`run_group`]: responses for a
+/// validated compatibility group, in job order.
+fn compute_group(entry: &ModelEntry, requests: &[&ServeRequest]) -> Vec<Vec<u8>> {
+    let dz = entry.model.cfg.latent_dim;
+    let dx = entry.model.cfg.obs_dim;
+    let keys: Vec<PrngKey> = requests.iter().map(|r| r.key()).collect();
+
+    match requests[0] {
+        ServeRequest::Simulate(first) => {
+            let latents = sample_prior_paths_batch(
+                &entry.model,
+                &entry.params,
+                &first.times,
+                first.substeps,
+                &keys,
+            );
+            requests
+                .iter()
+                .zip(&latents)
+                .map(|(req, latent)| {
+                    let ServeRequest::Simulate(r) = req else { unreachable!() };
+                    let decoded = decode_path(&entry.model, &entry.params, latent);
+                    protocol::simulate_response(r, entry.fingerprint, latent, dz, &decoded, dx)
+                })
+                .collect()
+        }
+        ServeRequest::Reconstruct(first) => {
+            let rows: Vec<&[f64]> = requests
+                .iter()
+                .map(|req| {
+                    let ServeRequest::Reconstruct(r) = req else { unreachable!() };
+                    r.obs.as_slice()
+                })
+                .collect();
+            let latents = sample_posterior_paths_batch(
+                &entry.model,
+                &entry.params,
+                &first.times,
+                &rows,
+                first.substeps,
+                &keys,
+            );
+            requests
+                .iter()
+                .zip(&latents)
+                .map(|(req, latent)| {
+                    let ServeRequest::Reconstruct(r) = req else { unreachable!() };
+                    let recon = decode_path(&entry.model, &entry.params, latent);
+                    protocol::reconstruct_response(r, entry.fingerprint, latent, dz, &recon, dx)
+                })
+                .collect()
+        }
+        ServeRequest::Elbo(first) => {
+            let rows: Vec<&[f64]> = requests
+                .iter()
+                .map(|req| {
+                    let ServeRequest::Elbo(r) = req else { unreachable!() };
+                    r.obs.as_slice()
+                })
+                .collect();
+            let cfg = ElboConfig { substeps: first.substeps, kl_weight: first.kl_weight };
+            let outs = elbo_value_multi_batch(
+                &entry.model,
+                &entry.params,
+                &first.times,
+                &rows,
+                &keys,
+                &cfg,
+                first.samples,
+            );
+            requests
+                .iter()
+                .zip(&outs)
+                .map(|(req, out)| {
+                    let ServeRequest::Elbo(r) = req else { unreachable!() };
+                    protocol::elbo_response(r, entry.fingerprint, out)
+                })
+                .collect()
+        }
+    }
+}
+
+/// The per-request **scalar oracle**: the same response computed with
+/// one-request scalar engine calls (no batching anywhere). The serving
+/// determinism contract is that every batched response byte-equals this
+/// — `tests/serve.rs` and `sdegrad bench serve` assert it.
+pub fn scalar_response(entry: &ModelEntry, req: &ServeRequest) -> Result<Vec<u8>, ApiError> {
+    protocol::validate_for_model(req, entry.model.cfg.obs_dim)?;
+    let dz = entry.model.cfg.latent_dim;
+    let dx = entry.model.cfg.obs_dim;
+    match req {
+        ServeRequest::Simulate(r) => {
+            let latent = sample_prior_path(
+                &entry.model,
+                &entry.params,
+                &r.times,
+                r.substeps,
+                req.key(),
+                None,
+            );
+            let decoded = decode_path(&entry.model, &entry.params, &latent);
+            Ok(protocol::simulate_response(r, entry.fingerprint, &latent, dz, &decoded, dx))
+        }
+        ServeRequest::Reconstruct(r) => {
+            let latent = sample_posterior_path(
+                &entry.model,
+                &entry.params,
+                &r.times,
+                &r.obs,
+                r.substeps,
+                req.key(),
+            );
+            let recon = decode_path(&entry.model, &entry.params, &latent);
+            Ok(protocol::reconstruct_response(r, entry.fingerprint, &latent, dz, &recon, dx))
+        }
+        ServeRequest::Elbo(r) => {
+            let cfg = ElboConfig { substeps: r.substeps, kl_weight: r.kl_weight };
+            let out = elbo_value_multi(
+                &entry.model,
+                &entry.params,
+                &r.times,
+                &r.obs,
+                req.key(),
+                &cfg,
+                r.samples,
+            );
+            Ok(protocol::elbo_response(r, entry.fingerprint, &out))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::latent::{LatentSdeConfig, LatentSdeModel};
+
+    fn tiny_registry() -> Arc<ModelRegistry> {
+        let cfg = LatentSdeConfig {
+            obs_dim: 2,
+            latent_dim: 3,
+            context_dim: 2,
+            hidden: 8,
+            diff_hidden: 4,
+            enc_hidden: 6,
+            obs_noise_std: 0.1,
+            ..Default::default()
+        };
+        let mut reg = ModelRegistry::new();
+        let model = LatentSdeModel::new(cfg);
+        let params = model.init_params(PrngKey::from_seed(1));
+        reg.insert("default", model, params).unwrap();
+        Arc::new(reg)
+    }
+
+    fn times() -> Vec<f64> {
+        (0..5).map(|k| 0.1 * k as f64).collect()
+    }
+
+    fn obs(seed: u64) -> Vec<f64> {
+        let mut o = vec![0.0; 5 * 2];
+        PrngKey::from_seed(seed).fill_normal(0, &mut o);
+        o
+    }
+
+    fn sim(seed: u64) -> ServeRequest {
+        ServeRequest::Simulate(protocol::SimulateRequest {
+            model: "default".into(),
+            seed,
+            times: times(),
+            substeps: 3,
+        })
+    }
+
+    fn rec(seed: u64) -> ServeRequest {
+        ServeRequest::Reconstruct(protocol::ReconstructRequest {
+            model: "default".into(),
+            seed,
+            times: times(),
+            obs: obs(seed + 1000),
+            obs_row: 2,
+            substeps: 3,
+        })
+    }
+
+    fn elbo(seed: u64, samples: usize) -> ServeRequest {
+        ServeRequest::Elbo(protocol::ElboRequest {
+            model: "default".into(),
+            seed,
+            times: times(),
+            obs: obs(seed + 2000),
+            obs_row: 2,
+            substeps: 3,
+            samples,
+            kl_weight: 0.4,
+        })
+    }
+
+    #[test]
+    fn compatibility_grouping_rules() {
+        assert!(compatible(&sim(1), &sim(2)));
+        assert!(compatible(&rec(1), &rec(2)));
+        assert!(compatible(&elbo(1, 2), &elbo(9, 2)));
+        assert!(!compatible(&sim(1), &rec(1)));
+        assert!(!compatible(&elbo(1, 2), &elbo(1, 3)), "sample counts differ");
+        let mut other = sim(1);
+        if let ServeRequest::Simulate(r) = &mut other {
+            r.substeps = 4;
+        }
+        assert!(!compatible(&sim(1), &other), "substeps differ");
+        let mut neg_zero = sim(1);
+        if let ServeRequest::Simulate(r) = &mut neg_zero {
+            r.times[0] = -0.0;
+        }
+        assert!(!compatible(&sim(1), &neg_zero), "-0.0 and 0.0 must not group");
+    }
+
+    /// A mixed drained queue, processed as groups of batched engine
+    /// calls, must answer every request byte-identically to the scalar
+    /// oracle — the micro-batcher's core contract.
+    #[test]
+    fn mixed_batch_responses_equal_scalar_oracle_bytes() {
+        let registry = tiny_registry();
+        let requests: Vec<ServeRequest> = vec![
+            sim(1),
+            elbo(2, 2),
+            sim(3),
+            rec(4),
+            elbo(5, 2),
+            rec(6),
+            sim(7),
+            elbo(8, 3), // different sample count: its own group
+        ];
+        let entry = registry.get("default").unwrap();
+        let expected: Vec<Vec<u8>> =
+            requests.iter().map(|r| scalar_response(entry, r).unwrap()).collect();
+
+        let mut rxs = Vec::new();
+        let mut jobs = Vec::new();
+        for r in &requests {
+            let (tx, rx) = mpsc::channel();
+            jobs.push(Job { request: r.clone(), resp: tx });
+            rxs.push(rx);
+        }
+        process_batch(&registry, jobs);
+        for (i, rx) in rxs.iter().enumerate() {
+            let got = rx.recv().expect("no response").expect("error response");
+            assert_eq!(got, expected[i], "request {i} diverged from the scalar oracle");
+        }
+    }
+
+    /// Obs shape is not part of the grouping key, so a malformed request
+    /// can land in a group with valid ones: it must get its own 400 while
+    /// the valid request still gets its oracle-identical answer (and the
+    /// dispatcher survives — no engine assert fires).
+    #[test]
+    fn invalid_job_in_group_gets_400_without_poisoning_the_batch() {
+        let registry = tiny_registry();
+        let good = rec(1);
+        let mut bad = rec(2);
+        if let ServeRequest::Reconstruct(r) = &mut bad {
+            r.obs = vec![0.0; 5 * 3]; // 3-wide rows on a 2-dim model
+            r.obs_row = 3;
+        }
+        let expected = {
+            let entry = registry.get("default").unwrap();
+            scalar_response(entry, &good).unwrap()
+        };
+        let (tx1, rx1) = mpsc::channel();
+        let (tx2, rx2) = mpsc::channel();
+        process_batch(
+            &registry,
+            vec![Job { request: good, resp: tx1 }, Job { request: bad, resp: tx2 }],
+        );
+        assert_eq!(rx1.recv().unwrap().unwrap(), expected);
+        let err = rx2.recv().unwrap().unwrap_err();
+        assert_eq!((err.status, err.code), (400, "bad_request"));
+    }
+
+    #[test]
+    fn unknown_model_answers_every_job_in_the_group() {
+        let registry = tiny_registry();
+        let mut bad = sim(1);
+        if let ServeRequest::Simulate(r) = &mut bad {
+            r.model = "missing".into();
+        }
+        let (tx, rx) = mpsc::channel();
+        process_batch(&registry, vec![Job { request: bad, resp: tx }]);
+        let err = rx.recv().unwrap().unwrap_err();
+        assert_eq!(err.status, 404);
+        assert_eq!(err.code, "unknown_model");
+    }
+
+    #[test]
+    fn batcher_thread_round_trips_and_shuts_down() {
+        let registry = tiny_registry();
+        let entry_bytes = {
+            let entry = registry.get("default").unwrap();
+            scalar_response(entry, &sim(42)).unwrap()
+        };
+        let batcher = Batcher::start(registry, BatcherConfig { max_batch: 4, max_wait_us: 100 });
+        let got = batcher.submit(sim(42)).unwrap();
+        assert_eq!(got, entry_bytes);
+        batcher.shutdown();
+    }
+}

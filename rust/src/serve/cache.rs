@@ -1,0 +1,155 @@
+//! LRU response cache.
+//!
+//! Keyed on `(endpoint, model fingerprint, canonical request bytes)` —
+//! the exact triple a response is a pure function of — and valued with
+//! the **previously computed response bytes**, so a cache hit is
+//! byte-identical to the miss that populated it by construction (pinned
+//! end-to-end in `tests/serve.rs`). The fingerprint in the key means a
+//! checkpoint swap can never serve a stale answer: the new model has a
+//! new fingerprint and misses.
+//!
+//! Recency is a monotonic touch counter per entry; eviction scans for
+//! the minimum (O(capacity), and serving caches are small — the probe
+//! itself is one hash lookup). A capacity of 0 disables caching.
+
+use std::collections::HashMap;
+
+/// A bounded LRU map from request key bytes to response bytes.
+pub struct ResponseCache {
+    capacity: usize,
+    map: HashMap<Vec<u8>, (Vec<u8>, u64)>,
+    clock: u64,
+    hits: u64,
+    misses: u64,
+}
+
+/// Build the cache key for a request.
+pub fn cache_key(endpoint: &str, fingerprint: u64, canonical: &str) -> Vec<u8> {
+    let mut key = Vec::with_capacity(endpoint.len() + 17 + canonical.len());
+    key.extend_from_slice(endpoint.as_bytes());
+    key.push(0);
+    key.extend_from_slice(&fingerprint.to_le_bytes());
+    key.push(0);
+    key.extend_from_slice(canonical.as_bytes());
+    key
+}
+
+impl ResponseCache {
+    pub fn new(capacity: usize) -> Self {
+        ResponseCache { capacity, map: HashMap::new(), clock: 0, hits: 0, misses: 0 }
+    }
+
+    /// Look up a response, refreshing its recency on a hit.
+    pub fn get(&mut self, key: &[u8]) -> Option<Vec<u8>> {
+        if self.capacity == 0 {
+            return None;
+        }
+        self.clock += 1;
+        match self.map.get_mut(key) {
+            Some((bytes, stamp)) => {
+                *stamp = self.clock;
+                self.hits += 1;
+                Some(bytes.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a computed response, evicting the least-recently-used
+    /// entry when full. Responses are deterministic per key, so a racing
+    /// double-insert of the same key writes the same bytes.
+    pub fn put(&mut self, key: Vec<u8>, value: Vec<u8>) {
+        if self.capacity == 0 {
+            return;
+        }
+        self.clock += 1;
+        if !self.map.contains_key(&key) && self.map.len() >= self.capacity {
+            if let Some(oldest) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, stamp))| *stamp)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&oldest);
+            }
+        }
+        self.map.insert(key, (value, self.clock));
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// `(hits, misses)` since construction.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(s: &str) -> Vec<u8> {
+        cache_key("/v1/simulate", 0xfeed, s)
+    }
+
+    #[test]
+    fn hit_returns_the_exact_inserted_bytes() {
+        let mut c = ResponseCache::new(4);
+        assert_eq!(c.get(&k("a")), None);
+        c.put(k("a"), b"response-a".to_vec());
+        assert_eq!(c.get(&k("a")).as_deref(), Some(b"response-a".as_ref()));
+        assert_eq!(c.stats(), (1, 1));
+    }
+
+    #[test]
+    fn distinct_fingerprints_do_not_collide() {
+        let mut c = ResponseCache::new(4);
+        c.put(cache_key("/v1/simulate", 1, "req"), b"m1".to_vec());
+        c.put(cache_key("/v1/simulate", 2, "req"), b"m2".to_vec());
+        c.put(cache_key("/v1/elbo", 1, "req"), b"e1".to_vec());
+        assert_eq!(c.get(&cache_key("/v1/simulate", 1, "req")).as_deref(), Some(b"m1".as_ref()));
+        assert_eq!(c.get(&cache_key("/v1/simulate", 2, "req")).as_deref(), Some(b"m2".as_ref()));
+        assert_eq!(c.get(&cache_key("/v1/elbo", 1, "req")).as_deref(), Some(b"e1".as_ref()));
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = ResponseCache::new(2);
+        c.put(k("a"), b"a".to_vec());
+        c.put(k("b"), b"b".to_vec());
+        assert!(c.get(&k("a")).is_some()); // refresh a; b is now LRU
+        c.put(k("c"), b"c".to_vec());
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&k("a")).is_some());
+        assert!(c.get(&k("b")).is_none(), "b should have been evicted");
+        assert!(c.get(&k("c")).is_some());
+    }
+
+    #[test]
+    fn reinserting_existing_key_does_not_evict() {
+        let mut c = ResponseCache::new(2);
+        c.put(k("a"), b"a".to_vec());
+        c.put(k("b"), b"b".to_vec());
+        c.put(k("a"), b"a2".to_vec());
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&k("b")).is_some());
+        assert_eq!(c.get(&k("a")).as_deref(), Some(b"a2".as_ref()));
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let mut c = ResponseCache::new(0);
+        c.put(k("a"), b"a".to_vec());
+        assert_eq!(c.get(&k("a")), None);
+        assert!(c.is_empty());
+    }
+}

@@ -1,0 +1,50 @@
+//! Minimal blocking HTTP/1.1 client for the serving protocol (one
+//! request per connection, `Connection: close`). One implementation
+//! shared by the `sdegrad bench serve` load harness and the end-to-end
+//! test suite — and handy for scripting against a running server
+//! without curl.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+/// Send one request over a fresh connection; returns `(status, body)`.
+/// A status of 0 means the response head could not be parsed.
+pub fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> std::io::Result<(u16, Vec<u8>)> {
+    let mut s = TcpStream::connect(addr)?;
+    s.write_all(
+        format!(
+            "{method} {path} HTTP/1.1\r\nHost: localhost\r\nContent-Type: application/json\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    )?;
+    let mut raw = Vec::new();
+    s.read_to_end(&mut raw)?;
+    let head_end = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .map(|p| p + 4)
+        .unwrap_or(raw.len());
+    let status = std::str::from_utf8(&raw[..head_end])
+        .ok()
+        .and_then(|h| h.split_whitespace().nth(1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    Ok((status, raw[head_end..].to_vec()))
+}
+
+/// POST a JSON body.
+pub fn post(addr: SocketAddr, path: &str, body: &str) -> std::io::Result<(u16, Vec<u8>)> {
+    request(addr, "POST", path, body)
+}
+
+/// GET (empty body).
+pub fn get(addr: SocketAddr, path: &str) -> std::io::Result<(u16, Vec<u8>)> {
+    request(addr, "GET", path, "")
+}

@@ -1,0 +1,69 @@
+//! Inference serving: `sdegrad serve` — a std-only HTTP server that
+//! answers simulation / reconstruction / scoring requests from trained
+//! latent-SDE checkpoints, with **dynamic micro-batching onto the
+//! batched SoA engine**.
+//!
+//! ## Architecture
+//!
+//! ```text
+//!  TCP accept thread ──► connection queue ──► N worker threads
+//!                                               │  parse HTTP + JSON,
+//!                                               │  validate, cache probe
+//!                                               ▼
+//!                                     micro-batch queue (mpsc)
+//!                                               │
+//!                                    dispatcher thread (batcher):
+//!                                    drain ≤ max_batch within
+//!                                    max_wait_us, group compatible
+//!                                    requests, ONE batched engine
+//!                                    call per group
+//!                                               │
+//!                       ┌───────────────────────┼───────────────────────┐
+//!         sample_prior_paths_batch  sample_posterior_paths_batch   elbo_value_multi_batch
+//!             (prior fleet)         (batched encoder + ctx solve)  (R requests × S samples)
+//! ```
+//!
+//! * [`server`] — TCP listener + minimal HTTP/1.1 parsing on a
+//!   worker-thread pool; endpoints `GET /healthz`, `POST /v1/simulate`,
+//!   `POST /v1/reconstruct`, `POST /v1/elbo`.
+//! * [`protocol`] — JSON request/response types over the crate's single
+//!   JSON module ([`crate::metrics::json`]); every request carries a
+//!   `seed`, so a response is a **pure function of the request and the
+//!   model fingerprint**.
+//! * [`batcher`] — the dynamic micro-batcher. Because the batched
+//!   engine computes each path's floats independently of its batch
+//!   neighbours (PR 3/4's bit-identical-batching guarantee), a
+//!   response is pinned bit-identical to a per-request scalar engine
+//!   call for ANY arrival order, batch size, and group layout — which
+//!   is exactly what makes cross-request batching safe to ship.
+//! * [`registry`] — loads one or more checkpoints (`SDEGRAD1`/`2`),
+//!   fingerprints them, serves multiple named models.
+//! * [`cache`] — LRU response cache keyed on model fingerprint +
+//!   canonical request bytes; hits are byte-identical to misses (the
+//!   cached value IS the previously computed response bytes).
+//!
+//! ## Determinism contract
+//!
+//! For a fixed model checkpoint, every `/v1/*` response body is a pure
+//! function of the canonicalized request: per-request `seed` →
+//! [`crate::prng::PrngKey`], engine floats independent of batching,
+//! shortest-roundtrip float formatting. `tests/serve.rs` pins exact
+//! byte equality across micro-batch layouts (`max_batch` 1 vs 16),
+//! worker counts, concurrent-client arrival orders, and cache state.
+//!
+//! `sdegrad bench serve` is the in-process load harness (concurrent
+//! clients over localhost → req/sec + p50/p99 → `BENCH_serve.json`,
+//! gated by `sdegrad bench compare`).
+
+pub mod batcher;
+pub mod cache;
+pub mod client;
+pub mod protocol;
+pub mod registry;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use cache::ResponseCache;
+pub use protocol::{ApiError, ServeRequest};
+pub use registry::{dataset_model_config, ModelEntry, ModelRegistry};
+pub use server::{Server, ServeConfig};

@@ -1,0 +1,663 @@
+//! The serving wire protocol: JSON request/response types over the
+//! crate's single JSON module ([`crate::metrics::json`]).
+//!
+//! Every request names a model and carries an explicit `seed`; the seed
+//! becomes the request's [`PrngKey`], so a response body is a **pure
+//! function of (canonical request, model fingerprint)** — no server-side
+//! randomness, no clock. Floats are emitted with shortest-roundtrip
+//! formatting ([`json_num`]), so equal floats produce equal bytes and a
+//! parsed response recovers the exact `f64`s the engine computed.
+//!
+//! | endpoint | request fields | response payload |
+//! |---|---|---|
+//! | `POST /v1/simulate` | `model?, seed, times[], substeps?` | prior latent path + decoded observations |
+//! | `POST /v1/reconstruct` | `model?, seed, times[], obs[][], substeps?` | posterior latent path + reconstruction |
+//! | `POST /v1/elbo` | `model?, seed, times[], obs[][], substeps?, samples?, kl_weight?` | S-sample ELBO estimate components |
+//!
+//! Optional fields default to `model="default"`, `substeps=5`,
+//! `samples=1`, `kl_weight=1`. Unknown fields are rejected (a typo'd
+//! knob silently ignored would change what the client *thinks* the
+//! response is a function of). [`ServeRequest::canonical`] re-emits the
+//! parsed request with resolved defaults in a fixed field order — the
+//! cache key, so spelling differences of the same request share an
+//! entry.
+
+use crate::latent::MultiElboOutput;
+use crate::metrics::json::{json_num, json_str, parse_json, JsonValue};
+use crate::prng::PrngKey;
+
+/// Request-shape guardrails (per request; the HTTP layer separately caps
+/// body bytes).
+pub const MAX_TIMES: usize = 4096;
+pub const MAX_SUBSTEPS: usize = 1024;
+pub const MAX_SAMPLES: usize = 256;
+/// Combined work cap: `(times − 1) × substeps × samples` solver steps.
+/// Each knob alone is within reason at its limit, but their product is
+/// ~10⁹ net evaluations — and every engine call runs on the one
+/// dispatcher thread, so an unbounded request head-of-line blocks every
+/// other client for its whole duration. The cap keeps the worst single
+/// request around a million path-steps.
+pub const MAX_REQUEST_STEPS: u64 = 1 << 20;
+
+/// Enforce [`MAX_REQUEST_STEPS`] over the parsed solve geometry.
+fn check_work(n_obs: usize, substeps: usize, samples: usize) -> Result<(), ApiError> {
+    let steps = (n_obs as u64 - 1) * substeps as u64 * samples as u64;
+    if steps > MAX_REQUEST_STEPS {
+        return Err(ApiError::bad_request(format!(
+            "request asks for {steps} solver steps ((times−1)×substeps×samples); \
+             the per-request budget is {MAX_REQUEST_STEPS}"
+        )));
+    }
+    Ok(())
+}
+
+/// A typed serving error: HTTP status + stable machine code + message.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ApiError {
+    pub status: u16,
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl ApiError {
+    pub fn bad_request<M: Into<String>>(message: M) -> Self {
+        ApiError { status: 400, code: "bad_request", message: message.into() }
+    }
+
+    pub fn bad_json<M: Into<String>>(message: M) -> Self {
+        ApiError { status: 400, code: "bad_json", message: message.into() }
+    }
+
+    pub fn unknown_model(name: &str) -> Self {
+        ApiError {
+            status: 404,
+            code: "unknown_model",
+            message: format!("no model named {name:?} is loaded"),
+        }
+    }
+
+    pub fn unknown_endpoint(path: &str) -> Self {
+        ApiError {
+            status: 404,
+            code: "unknown_endpoint",
+            message: format!("no endpoint at {path:?}"),
+        }
+    }
+
+    pub fn method_not_allowed(method: &str, path: &str) -> Self {
+        ApiError {
+            status: 405,
+            code: "method_not_allowed",
+            message: format!("{method} is not supported on {path}"),
+        }
+    }
+
+    pub fn body_too_large(limit: usize) -> Self {
+        ApiError {
+            status: 413,
+            code: "body_too_large",
+            message: format!("request body exceeds the {limit}-byte limit"),
+        }
+    }
+
+    pub fn timeout() -> Self {
+        ApiError {
+            status: 408,
+            code: "timeout",
+            message: "the connection exceeded the per-request deadline".to_string(),
+        }
+    }
+
+    pub fn internal<M: Into<String>>(message: M) -> Self {
+        ApiError { status: 500, code: "internal", message: message.into() }
+    }
+
+    /// The JSON error body.
+    pub fn body(&self) -> Vec<u8> {
+        format!(
+            "{{\"error\":{{\"code\":{},\"message\":{}}}}}",
+            json_str(self.code),
+            json_str(&self.message)
+        )
+        .into_bytes()
+    }
+}
+
+/// `POST /v1/simulate` — sample a prior latent path and decode it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimulateRequest {
+    pub model: String,
+    pub seed: u64,
+    pub times: Vec<f64>,
+    pub substeps: usize,
+}
+
+/// `POST /v1/reconstruct` — encode observations, sample a posterior
+/// latent path, decode the reconstruction.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReconstructRequest {
+    pub model: String,
+    pub seed: u64,
+    pub times: Vec<f64>,
+    /// Observations, row-major `(K, obs_row)`.
+    pub obs: Vec<f64>,
+    pub obs_row: usize,
+    pub substeps: usize,
+}
+
+/// `POST /v1/elbo` — S-sample ELBO estimate of a sequence.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ElboRequest {
+    pub model: String,
+    pub seed: u64,
+    pub times: Vec<f64>,
+    pub obs: Vec<f64>,
+    pub obs_row: usize,
+    pub substeps: usize,
+    pub samples: usize,
+    pub kl_weight: f64,
+}
+
+/// One parsed, validated serving request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeRequest {
+    Simulate(SimulateRequest),
+    Reconstruct(ReconstructRequest),
+    Elbo(ElboRequest),
+}
+
+impl ServeRequest {
+    pub fn model(&self) -> &str {
+        match self {
+            ServeRequest::Simulate(r) => &r.model,
+            ServeRequest::Reconstruct(r) => &r.model,
+            ServeRequest::Elbo(r) => &r.model,
+        }
+    }
+
+    pub fn endpoint(&self) -> &'static str {
+        match self {
+            ServeRequest::Simulate(_) => "/v1/simulate",
+            ServeRequest::Reconstruct(_) => "/v1/reconstruct",
+            ServeRequest::Elbo(_) => "/v1/elbo",
+        }
+    }
+
+    /// The request's PRNG key (every response float derives from it).
+    pub fn key(&self) -> PrngKey {
+        let seed = match self {
+            ServeRequest::Simulate(r) => r.seed,
+            ServeRequest::Reconstruct(r) => r.seed,
+            ServeRequest::Elbo(r) => r.seed,
+        };
+        PrngKey::from_seed(seed)
+    }
+
+    /// Canonical bytes: the parsed request re-emitted compactly with
+    /// resolved defaults in a fixed field order. Two bodies that parse
+    /// to the same request have the same canonical form (the cache key).
+    pub fn canonical(&self) -> String {
+        let mut s = String::new();
+        match self {
+            ServeRequest::Simulate(r) => {
+                s.push_str(&format!(
+                    "{{\"model\":{},\"seed\":{},\"times\":",
+                    json_str(&r.model),
+                    r.seed
+                ));
+                push_vector(&mut s, &r.times);
+                s.push_str(&format!(",\"substeps\":{}}}", r.substeps));
+            }
+            ServeRequest::Reconstruct(r) => {
+                s.push_str(&format!(
+                    "{{\"model\":{},\"seed\":{},\"times\":",
+                    json_str(&r.model),
+                    r.seed
+                ));
+                push_vector(&mut s, &r.times);
+                s.push_str(",\"obs\":");
+                push_matrix(&mut s, &r.obs, r.obs_row);
+                s.push_str(&format!(",\"substeps\":{}}}", r.substeps));
+            }
+            ServeRequest::Elbo(r) => {
+                s.push_str(&format!(
+                    "{{\"model\":{},\"seed\":{},\"times\":",
+                    json_str(&r.model),
+                    r.seed
+                ));
+                push_vector(&mut s, &r.times);
+                s.push_str(",\"obs\":");
+                push_matrix(&mut s, &r.obs, r.obs_row);
+                s.push_str(&format!(
+                    ",\"substeps\":{},\"samples\":{},\"kl_weight\":{}}}",
+                    r.substeps,
+                    r.samples,
+                    json_num(r.kl_weight)
+                ));
+            }
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------
+// Parsing
+// ---------------------------------------------------------------------
+
+fn known_fields(v: &JsonValue, allowed: &[&str]) -> Result<(), ApiError> {
+    let JsonValue::Obj(pairs) = v else {
+        return Err(ApiError::bad_request("request body must be a JSON object"));
+    };
+    for (k, _) in pairs {
+        if !allowed.contains(&k.as_str()) {
+            return Err(ApiError::bad_request(format!(
+                "unknown field {k:?} (allowed: {allowed:?})"
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn field_model(v: &JsonValue) -> Result<String, ApiError> {
+    match v.get("model") {
+        None => Ok("default".to_string()),
+        Some(m) => m
+            .as_str()
+            .map(str::to_string)
+            .ok_or_else(|| ApiError::bad_request("\"model\" must be a string")),
+    }
+}
+
+fn field_seed(v: &JsonValue) -> Result<u64, ApiError> {
+    v.get("seed")
+        .ok_or_else(|| {
+            ApiError::bad_request(
+                "\"seed\" is required: responses are a pure function of it",
+            )
+        })?
+        .as_u64()
+        .ok_or_else(|| ApiError::bad_request("\"seed\" must be an integer in [0, 2^53)"))
+}
+
+fn field_usize(
+    v: &JsonValue,
+    name: &str,
+    default: usize,
+    lo: usize,
+    hi: usize,
+) -> Result<usize, ApiError> {
+    let n = match v.get(name) {
+        None => default,
+        Some(x) => x
+            .as_usize()
+            .ok_or_else(|| ApiError::bad_request(format!("{name:?} must be an integer")))?,
+    };
+    if n < lo || n > hi {
+        return Err(ApiError::bad_request(format!("{name:?} must be in [{lo}, {hi}]")));
+    }
+    Ok(n)
+}
+
+fn field_times(v: &JsonValue) -> Result<Vec<f64>, ApiError> {
+    let arr = v
+        .get("times")
+        .and_then(JsonValue::as_array)
+        .ok_or_else(|| ApiError::bad_request("\"times\" must be an array of numbers"))?;
+    if arr.len() < 2 || arr.len() > MAX_TIMES {
+        return Err(ApiError::bad_request(format!(
+            "\"times\" must have between 2 and {MAX_TIMES} entries"
+        )));
+    }
+    let mut times = Vec::with_capacity(arr.len());
+    for (i, t) in arr.iter().enumerate() {
+        let t = t
+            .as_f64()
+            .filter(|t| t.is_finite())
+            .ok_or_else(|| ApiError::bad_request(format!("times[{i}] must be finite")))?;
+        if let Some(&prev) = times.last() {
+            if t <= prev {
+                return Err(ApiError::bad_request("\"times\" must be strictly ascending"));
+            }
+        }
+        times.push(t);
+    }
+    Ok(times)
+}
+
+/// Parse `obs` as `times.len()` equal-length rows of finite numbers.
+/// The row width is validated against the model later
+/// ([`validate_for_model`] — the parser does not know the model).
+fn field_obs(v: &JsonValue, n_obs: usize) -> Result<(Vec<f64>, usize), ApiError> {
+    let arr = v
+        .get("obs")
+        .and_then(JsonValue::as_array)
+        .ok_or_else(|| ApiError::bad_request("\"obs\" must be an array of number rows"))?;
+    if arr.len() != n_obs {
+        return Err(ApiError::bad_request(format!(
+            "\"obs\" must have one row per time ({n_obs}), got {}",
+            arr.len()
+        )));
+    }
+    let mut obs = Vec::new();
+    let mut row_len = 0usize;
+    for (k, row) in arr.iter().enumerate() {
+        let row = row
+            .as_array()
+            .ok_or_else(|| ApiError::bad_request(format!("obs[{k}] must be an array")))?;
+        if k == 0 {
+            row_len = row.len();
+            if row_len == 0 {
+                return Err(ApiError::bad_request("obs rows must be non-empty"));
+            }
+        } else if row.len() != row_len {
+            return Err(ApiError::bad_request(format!(
+                "obs[{k}] has {} values, expected {row_len}",
+                row.len()
+            )));
+        }
+        for (i, x) in row.iter().enumerate() {
+            obs.push(
+                x.as_f64().filter(|x| x.is_finite()).ok_or_else(|| {
+                    ApiError::bad_request(format!("obs[{k}][{i}] must be finite"))
+                })?,
+            );
+        }
+    }
+    Ok((obs, row_len))
+}
+
+fn field_kl_weight(v: &JsonValue) -> Result<f64, ApiError> {
+    match v.get("kl_weight") {
+        None => Ok(1.0),
+        Some(x) => x
+            .as_f64()
+            .filter(|w| w.is_finite() && *w >= 0.0)
+            .ok_or_else(|| ApiError::bad_request("\"kl_weight\" must be a finite number ≥ 0")),
+    }
+}
+
+/// Parse one request body for an endpoint path. Shape limits are
+/// enforced here; model-dependent checks happen in
+/// [`validate_for_model`].
+pub fn parse_request(path: &str, body: &str) -> Result<ServeRequest, ApiError> {
+    let v = parse_json(body).map_err(ApiError::bad_json)?;
+    match path {
+        "/v1/simulate" => {
+            known_fields(&v, &["model", "seed", "times", "substeps"])?;
+            let times = field_times(&v)?;
+            let substeps = field_usize(&v, "substeps", 5, 1, MAX_SUBSTEPS)?;
+            check_work(times.len(), substeps, 1)?;
+            Ok(ServeRequest::Simulate(SimulateRequest {
+                model: field_model(&v)?,
+                seed: field_seed(&v)?,
+                times,
+                substeps,
+            }))
+        }
+        "/v1/reconstruct" => {
+            known_fields(&v, &["model", "seed", "times", "obs", "substeps"])?;
+            let times = field_times(&v)?;
+            let (obs, obs_row) = field_obs(&v, times.len())?;
+            let substeps = field_usize(&v, "substeps", 5, 1, MAX_SUBSTEPS)?;
+            check_work(times.len(), substeps, 1)?;
+            Ok(ServeRequest::Reconstruct(ReconstructRequest {
+                model: field_model(&v)?,
+                seed: field_seed(&v)?,
+                times,
+                obs,
+                obs_row,
+                substeps,
+            }))
+        }
+        "/v1/elbo" => {
+            known_fields(
+                &v,
+                &["model", "seed", "times", "obs", "substeps", "samples", "kl_weight"],
+            )?;
+            let times = field_times(&v)?;
+            let (obs, obs_row) = field_obs(&v, times.len())?;
+            let substeps = field_usize(&v, "substeps", 5, 1, MAX_SUBSTEPS)?;
+            let samples = field_usize(&v, "samples", 1, 1, MAX_SAMPLES)?;
+            check_work(times.len(), substeps, samples)?;
+            Ok(ServeRequest::Elbo(ElboRequest {
+                model: field_model(&v)?,
+                seed: field_seed(&v)?,
+                times,
+                obs,
+                obs_row,
+                substeps,
+                samples,
+                kl_weight: field_kl_weight(&v)?,
+            }))
+        }
+        _ => Err(ApiError::unknown_endpoint(path)),
+    }
+}
+
+/// Model-dependent validation: the observation row width must equal the
+/// model's observation dimension.
+pub fn validate_for_model(req: &ServeRequest, obs_dim: usize) -> Result<(), ApiError> {
+    let row = match req {
+        ServeRequest::Simulate(_) => return Ok(()),
+        ServeRequest::Reconstruct(r) => r.obs_row,
+        ServeRequest::Elbo(r) => r.obs_row,
+    };
+    if row != obs_dim {
+        return Err(ApiError::bad_request(format!(
+            "obs rows have {row} values but the model observes {obs_dim} dimensions"
+        )));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Response emission
+// ---------------------------------------------------------------------
+
+fn push_vector(s: &mut String, data: &[f64]) {
+    s.push('[');
+    for (i, v) in data.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&json_num(*v));
+    }
+    s.push(']');
+}
+
+fn push_matrix(s: &mut String, data: &[f64], row: usize) {
+    s.push('[');
+    for (k, chunk) in data.chunks_exact(row).enumerate() {
+        if k > 0 {
+            s.push(',');
+        }
+        push_vector(s, chunk);
+    }
+    s.push(']');
+}
+
+fn response_head(s: &mut String, model: &str, fingerprint: u64, seed: u64) {
+    s.push_str(&format!(
+        "{{\"model\":{},\"fingerprint\":\"{fingerprint:016x}\",\"seed\":{seed}",
+        json_str(model)
+    ));
+}
+
+/// `/v1/simulate` response: prior latent path `(K, dz)` + decoded
+/// observation-space path `(K, dx)`.
+pub fn simulate_response(
+    req: &SimulateRequest,
+    fingerprint: u64,
+    latent: &[f64],
+    dz: usize,
+    decoded: &[f64],
+    dx: usize,
+) -> Vec<u8> {
+    let mut s = String::new();
+    response_head(&mut s, &req.model, fingerprint, req.seed);
+    s.push_str(",\"latent\":");
+    push_matrix(&mut s, latent, dz);
+    s.push_str(",\"obs\":");
+    push_matrix(&mut s, decoded, dx);
+    s.push('}');
+    s.into_bytes()
+}
+
+/// `/v1/reconstruct` response: posterior latent path + reconstruction.
+pub fn reconstruct_response(
+    req: &ReconstructRequest,
+    fingerprint: u64,
+    latent: &[f64],
+    dz: usize,
+    recon: &[f64],
+    dx: usize,
+) -> Vec<u8> {
+    let mut s = String::new();
+    response_head(&mut s, &req.model, fingerprint, req.seed);
+    s.push_str(",\"latent\":");
+    push_matrix(&mut s, latent, dz);
+    s.push_str(",\"recon\":");
+    push_matrix(&mut s, recon, dx);
+    s.push('}');
+    s.into_bytes()
+}
+
+/// `/v1/elbo` response: the S-sample estimate's components.
+pub fn elbo_response(req: &ElboRequest, fingerprint: u64, out: &MultiElboOutput) -> Vec<u8> {
+    let mut s = String::new();
+    response_head(&mut s, &req.model, fingerprint, req.seed);
+    s.push_str(&format!(
+        ",\"loss\":{},\"log_px\":{},\"kl_path\":{},\"kl_z0\":{},\"recon_mse\":{},\
+         \"per_sample_loss\":",
+        json_num(out.loss),
+        json_num(out.log_px),
+        json_num(out.kl_path),
+        json_num(out.kl_z0),
+        json_num(out.recon_mse)
+    ));
+    push_vector(&mut s, &out.per_sample_loss);
+    s.push('}');
+    s.into_bytes()
+}
+
+/// `GET /healthz` response: status + the loaded models.
+pub fn healthz_response(models: &[(String, u64)]) -> Vec<u8> {
+    let mut s = String::from("{\"status\":\"ok\",\"models\":[");
+    for (i, (name, fp)) in models.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "{{\"name\":{},\"fingerprint\":\"{fp:016x}\"}}",
+            json_str(name)
+        ));
+    }
+    s.push_str("]}");
+    s.into_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simulate_parses_with_defaults_and_canonicalizes() {
+        let body = r#"{ "seed": 7, "times": [0, 0.5, 1.0] }"#;
+        let req = parse_request("/v1/simulate", body).unwrap();
+        let ServeRequest::Simulate(r) = &req else { panic!("wrong variant") };
+        assert_eq!(r.model, "default");
+        assert_eq!(r.seed, 7);
+        assert_eq!(r.substeps, 5);
+        // Spelling differences collapse to one canonical form.
+        let body2 =
+            r#"{"times": [0.0, 5e-1, 1], "substeps": 5, "seed": 7, "model": "default"}"#;
+        let req2 = parse_request("/v1/simulate", body2).unwrap();
+        assert_eq!(req.canonical(), req2.canonical());
+        assert!(req.canonical().contains("\"seed\":7"));
+    }
+
+    #[test]
+    fn reconstruct_and_elbo_parse_obs_rows() {
+        let body = r#"{"seed": 1, "times": [0, 0.1], "obs": [[1, 2], [3, 4]]}"#;
+        let ServeRequest::Reconstruct(r) = parse_request("/v1/reconstruct", body).unwrap()
+        else {
+            panic!("wrong variant")
+        };
+        assert_eq!(r.obs, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.obs_row, 2);
+
+        let body = r#"{"seed": 1, "times": [0, 0.1], "obs": [[1], [2]],
+                       "samples": 3, "kl_weight": 0.5}"#;
+        let ServeRequest::Elbo(r) = parse_request("/v1/elbo", body).unwrap() else {
+            panic!("wrong variant")
+        };
+        assert_eq!(r.samples, 3);
+        assert_eq!(r.kl_weight, 0.5);
+        assert_eq!(r.obs_row, 1);
+        assert!(validate_for_model(&ServeRequest::Elbo(r.clone()), 1).is_ok());
+        assert_eq!(
+            validate_for_model(&ServeRequest::Elbo(r), 3).unwrap_err().status,
+            400
+        );
+    }
+
+    #[test]
+    fn rejects_bad_requests_with_the_right_codes() {
+        let cases: &[(&str, &str, &str)] = &[
+            ("/v1/simulate", "not json at all", "bad_json"),
+            ("/v1/simulate", r#"{"times": [0, 1]}"#, "bad_request"), // no seed
+            ("/v1/simulate", r#"{"seed": 1, "times": [0]}"#, "bad_request"),
+            ("/v1/simulate", r#"{"seed": 1, "times": [1, 0]}"#, "bad_request"),
+            ("/v1/simulate", r#"{"seed": 1, "times": [0, 1], "typo": 2}"#, "bad_request"),
+            ("/v1/simulate", r#"{"seed": -3, "times": [0, 1]}"#, "bad_request"),
+            ("/v1/simulate", r#"{"seed": 1, "times": [0, 1], "substeps": 0}"#, "bad_request"),
+            (
+                "/v1/reconstruct",
+                r#"{"seed": 1, "times": [0, 1], "obs": [[1, 2], [3]]}"#,
+                "bad_request",
+            ),
+            ("/v1/elbo", r#"{"seed": 1, "times": [0, 1], "obs": [[1], [2]], "samples": 0}"#,
+             "bad_request"),
+            ("/v1/nope", r#"{"seed": 1}"#, "unknown_endpoint"),
+            // Each knob within its own limit, product over the combined
+            // solver-step budget: rejected so one request cannot
+            // head-of-line block the dispatcher for minutes.
+            ("/v1/elbo",
+             r#"{"seed": 1, "times": [0, 1, 2, 3, 4, 5, 6, 7, 8, 9],
+                 "obs": [[1],[1],[1],[1],[1],[1],[1],[1],[1],[1]],
+                 "substeps": 1024, "samples": 256}"#,
+             "bad_request"),
+        ];
+        for (path, body, code) in cases {
+            let err = parse_request(path, body).unwrap_err();
+            assert_eq!(&err.code, code, "{path} {body}");
+        }
+    }
+
+    #[test]
+    fn error_bodies_are_json() {
+        let e = ApiError::unknown_model("nope");
+        let body = String::from_utf8(e.body()).unwrap();
+        let v = parse_json(&body).unwrap();
+        assert_eq!(v.get("error").unwrap().get("code").unwrap().as_str(), Some("unknown_model"));
+    }
+
+    #[test]
+    fn responses_emit_exact_floats() {
+        let req = SimulateRequest {
+            model: "m".into(),
+            seed: 3,
+            times: vec![0.0, 1.0],
+            substeps: 2,
+        };
+        let latent = [0.1, -2.5e-7, 1.0 / 3.0, 4.0];
+        let decoded = [1.5, -0.25];
+        let body =
+            String::from_utf8(simulate_response(&req, 0xabcd, &latent, 2, &decoded, 1)).unwrap();
+        let v = parse_json(&body).unwrap();
+        assert_eq!(v.get("fingerprint").unwrap().as_str(), Some("000000000000abcd"));
+        let lat = v.get("latent").unwrap().as_array().unwrap();
+        let back = lat[1].as_array().unwrap()[0].as_f64().unwrap();
+        assert_eq!(back.to_bits(), (1.0f64 / 3.0).to_bits());
+    }
+}

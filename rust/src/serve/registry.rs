@@ -1,0 +1,288 @@
+//! The model registry: named [`LatentSdeModel`]s + parameter vectors
+//! loaded from checkpoints, each with a **fingerprint** — an FNV-1a hash
+//! over the architecture and every parameter bit. The fingerprint is
+//! echoed in every response and keyed into the response cache, so a
+//! cached answer can never be served across a checkpoint swap or model
+//! mismatch.
+
+use crate::coordinator::checkpoint::load_any_params;
+use crate::error::Result;
+use crate::latent::{DiffusionMode, EncoderKind, LatentSdeConfig, LatentSdeModel};
+use crate::{bail, ensure};
+
+/// One served model.
+pub struct ModelEntry {
+    pub name: String,
+    pub model: LatentSdeModel,
+    pub params: Vec<f64>,
+    pub fingerprint: u64,
+}
+
+/// Named models available to the server.
+#[derive(Default)]
+pub struct ModelRegistry {
+    entries: Vec<ModelEntry>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        ModelRegistry { entries: Vec::new() }
+    }
+
+    /// Register a model under `name` with an in-memory parameter vector
+    /// (tests and the bench harness; checkpoint files go through
+    /// [`ModelRegistry::load_checkpoint`]).
+    pub fn insert(&mut self, name: &str, model: LatentSdeModel, params: Vec<f64>) -> Result<()> {
+        ensure!(!name.is_empty(), "model name must be non-empty");
+        ensure!(
+            self.get(name).is_none(),
+            "a model named {name:?} is already registered"
+        );
+        ensure!(
+            params.len() == model.n_params,
+            "checkpoint has {} parameters but the {name:?} architecture needs {} — \
+             wrong --dataset/--mode for this checkpoint?",
+            params.len(),
+            model.n_params
+        );
+        ensure!(
+            params.iter().all(|p| p.is_finite()),
+            "checkpoint for {name:?} contains non-finite parameters"
+        );
+        let fingerprint = fingerprint_model(&model.cfg, &params);
+        self.entries.push(ModelEntry { name: name.to_string(), model, params, fingerprint });
+        Ok(())
+    }
+
+    /// Load a checkpoint file (either `SDEGRAD1` params or `SDEGRAD2`
+    /// training state) and register it under `name` with the given
+    /// architecture. A corrupt/truncated file or a parameter-count
+    /// mismatch surfaces as a clean `Err` — the `sdegrad serve` startup
+    /// error path.
+    pub fn load_checkpoint(
+        &mut self,
+        name: &str,
+        cfg: LatentSdeConfig,
+        path: &str,
+    ) -> Result<()> {
+        let params = load_any_params(path)?;
+        self.insert(name, LatentSdeModel::new(cfg), params)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ModelEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// `(name, fingerprint)` pairs for `/healthz`.
+    pub fn models(&self) -> Vec<(String, u64)> {
+        self.entries.iter().map(|e| (e.name.clone(), e.fingerprint)).collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// The model architecture each built-in dataset's training run uses —
+/// one source of truth shared by `sdegrad train` and `sdegrad serve`, so
+/// a checkpoint trained with `--dataset X` is served with `--dataset X`
+/// and the architectures cannot drift apart.
+pub fn dataset_model_config(dataset: &str) -> Option<LatentSdeConfig> {
+    match dataset {
+        "gbm" => Some(LatentSdeConfig {
+            obs_dim: 1,
+            latent_dim: 4,
+            context_dim: 1,
+            hidden: 64,
+            enc_hidden: 64,
+            obs_noise_std: 0.05,
+            ..Default::default()
+        }),
+        "lorenz" => Some(LatentSdeConfig {
+            obs_dim: 3,
+            latent_dim: 4,
+            context_dim: 1,
+            hidden: 64,
+            enc_hidden: 64,
+            obs_noise_std: 0.05,
+            ..Default::default()
+        }),
+        "mocap" => Some(LatentSdeConfig {
+            obs_dim: 50,
+            latent_dim: 6,
+            context_dim: 3,
+            hidden: 30,
+            enc_hidden: 30,
+            encoder: EncoderKind::FirstFramesMlp { n_frames: 3 },
+            obs_noise_std: 0.1,
+            ..Default::default()
+        }),
+        _ => None,
+    }
+}
+
+/// Apply a `--mode sde|ode` flag to a dataset architecture.
+pub fn apply_mode(cfg: LatentSdeConfig, mode: &str) -> Result<LatentSdeConfig> {
+    match mode {
+        "sde" => Ok(cfg),
+        "ode" => Ok(LatentSdeConfig { diffusion: DiffusionMode::Off, ..cfg }),
+        other => bail!("unknown mode {other:?} (expected sde or ode)"),
+    }
+}
+
+/// FNV-1a over the architecture hyperparameters and every parameter bit:
+/// two entries share a fingerprint iff they would produce identical
+/// responses.
+pub fn fingerprint_model(cfg: &LatentSdeConfig, params: &[f64]) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(PRIME);
+    };
+    mix(cfg.obs_dim as u64);
+    mix(cfg.latent_dim as u64);
+    mix(cfg.context_dim as u64);
+    mix(cfg.hidden as u64);
+    mix(cfg.diff_hidden as u64);
+    mix(cfg.enc_hidden as u64);
+    match cfg.encoder {
+        EncoderKind::GruBackward => mix(1),
+        EncoderKind::FirstFramesMlp { n_frames } => {
+            mix(2);
+            mix(n_frames as u64);
+        }
+    }
+    match cfg.diffusion {
+        DiffusionMode::PerDimNets { floor, scale } => {
+            mix(1);
+            mix(floor.to_bits());
+            mix(scale.to_bits());
+        }
+        DiffusionMode::Off => mix(2),
+    }
+    mix(cfg.obs_noise_std.to_bits());
+    mix(params.len() as u64);
+    for p in params {
+        mix(p.to_bits());
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::checkpoint::{save_params, save_state, TrainState};
+    use crate::prng::PrngKey;
+
+    fn tiny_cfg() -> LatentSdeConfig {
+        LatentSdeConfig {
+            obs_dim: 2,
+            latent_dim: 3,
+            context_dim: 2,
+            hidden: 8,
+            diff_hidden: 4,
+            enc_hidden: 6,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_sensitive() {
+        let cfg = tiny_cfg();
+        let model = LatentSdeModel::new(cfg);
+        let params = model.init_params(PrngKey::from_seed(1));
+        let a = fingerprint_model(&cfg, &params);
+        assert_eq!(a, fingerprint_model(&cfg, &params), "fingerprint not deterministic");
+        let mut bumped = params.clone();
+        bumped[7] += 1e-12;
+        assert_ne!(a, fingerprint_model(&cfg, &bumped), "parameter bit flip unseen");
+        let other_cfg = LatentSdeConfig { diffusion: DiffusionMode::Off, ..cfg };
+        let ode = LatentSdeModel::new(other_cfg);
+        let p_ode = ode.init_params(PrngKey::from_seed(1));
+        assert_ne!(a, fingerprint_model(&other_cfg, &p_ode), "architecture change unseen");
+    }
+
+    #[test]
+    fn registry_serves_multiple_named_models_and_rejects_mismatches() {
+        let mut reg = ModelRegistry::new();
+        let m1 = LatentSdeModel::new(tiny_cfg());
+        let p1 = m1.init_params(PrngKey::from_seed(2));
+        reg.insert("alpha", m1, p1).unwrap();
+        let m2 = LatentSdeModel::new(tiny_cfg());
+        let p2 = m2.init_params(PrngKey::from_seed(3));
+        reg.insert("beta", m2, p2).unwrap();
+
+        assert!(reg.get("alpha").is_some());
+        assert!(reg.get("beta").is_some());
+        assert!(reg.get("gamma").is_none());
+        assert_ne!(
+            reg.get("alpha").unwrap().fingerprint,
+            reg.get("beta").unwrap().fingerprint
+        );
+        assert_eq!(reg.models().len(), 2);
+
+        // Duplicate name.
+        let m3 = LatentSdeModel::new(tiny_cfg());
+        let p3 = m3.init_params(PrngKey::from_seed(4));
+        assert!(reg.insert("alpha", m3, p3).is_err());
+
+        // Wrong parameter count.
+        let m4 = LatentSdeModel::new(tiny_cfg());
+        assert!(reg.insert("short", m4, vec![1.0; 3]).unwrap_err().to_string().contains("param"));
+    }
+
+    #[test]
+    fn loads_both_checkpoint_formats_and_reports_corruption() {
+        let dir = std::env::temp_dir().join("sdegrad_serve_registry");
+        let model = LatentSdeModel::new(tiny_cfg());
+        let params = model.init_params(PrngKey::from_seed(5));
+
+        let p_params = dir.join("params.bin");
+        save_params(&p_params, &params).unwrap();
+        let p_state = dir.join("state.bin");
+        save_state(
+            &p_state,
+            &TrainState {
+                params: params.clone(),
+                adam_m: vec![0.0; params.len()],
+                adam_v: vec![0.0; params.len()],
+                adam_t: 1,
+                iter: 1,
+                fingerprint: 0,
+            },
+        )
+        .unwrap();
+
+        let mut reg = ModelRegistry::new();
+        reg.load_checkpoint("from-params", tiny_cfg(), p_params.to_str().unwrap()).unwrap();
+        reg.load_checkpoint("from-state", tiny_cfg(), p_state.to_str().unwrap()).unwrap();
+        // Identical params + architecture ⇒ identical fingerprints.
+        assert_eq!(
+            reg.get("from-params").unwrap().fingerprint,
+            reg.get("from-state").unwrap().fingerprint
+        );
+
+        // Truncated checkpoint → clean startup error, not a panic.
+        let full = std::fs::read(&p_state).unwrap();
+        let p_cut = dir.join("cut.bin");
+        std::fs::write(&p_cut, &full[..full.len() / 2]).unwrap();
+        let err = reg
+            .load_checkpoint("corrupt", tiny_cfg(), p_cut.to_str().unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("corrupt") || err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn dataset_configs_cover_the_training_datasets() {
+        for ds in ["gbm", "lorenz", "mocap"] {
+            let cfg = dataset_model_config(ds).expect(ds);
+            // Each config must build a valid model.
+            let _ = LatentSdeModel::new(apply_mode(cfg, "ode").unwrap());
+            let _ = LatentSdeModel::new(cfg);
+        }
+        assert!(dataset_model_config("nope").is_none());
+        assert!(apply_mode(dataset_model_config("gbm").unwrap(), "weird").is_err());
+    }
+}

@@ -1,0 +1,467 @@
+//! The HTTP front end: a TCP listener, a minimal HTTP/1.1 request
+//! parser, and a worker-thread pool, all std-only (the hermetic crate
+//! set has no async runtime — connections are cheap threads + blocking
+//! I/O, the same model as the rest of the crate's parallelism).
+//!
+//! Request flow per connection (one request per connection,
+//! `Connection: close`): worker reads + parses HTTP, parses + validates
+//! the JSON body ([`super::protocol`]), probes the response cache, and
+//! otherwise enqueues the request on the micro-batcher
+//! ([`super::batcher`]) and blocks for the computed bytes. Errors at
+//! every layer map to JSON error bodies with stable codes:
+//!
+//! | status | code | trigger |
+//! |---|---|---|
+//! | 400 | `bad_json` / `bad_request` | malformed JSON / bad fields or shapes |
+//! | 404 | `unknown_endpoint` / `unknown_model` | no such path / no such model |
+//! | 405 | `method_not_allowed` | e.g. GET on a `/v1/*` endpoint |
+//! | 408 | `timeout` | the connection exceeded the per-request deadline |
+//! | 413 | `body_too_large` | body exceeds `max_body_bytes` |
+//! | 500 | `internal` | batcher unavailable / engine call failed |
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use super::batcher::{submit_via, Batcher, BatcherConfig, Job};
+use super::cache::{cache_key, ResponseCache};
+use super::protocol::{self, ApiError};
+use super::registry::ModelRegistry;
+use crate::ensure;
+use crate::error::{Context, Result};
+
+/// Maximum bytes of request line + headers.
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Per-`read()` socket timeout.
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+/// Whole-connection deadline for receiving one request. `IO_TIMEOUT`
+/// bounds each read, but a client trickling one byte per read could
+/// otherwise pin a worker for MAX_HEAD_BYTES reads; this bounds the
+/// total (checked between reads in [`read_request`] and the post-error
+/// drain).
+const CONN_DEADLINE: Duration = Duration::from_secs(30);
+
+/// Server configuration (`sdegrad serve` flags map 1:1 onto these).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Interface to bind. Defaults to loopback — `sdegrad serve` is not
+    /// reachable from other hosts unless `--bind 0.0.0.0` (or a specific
+    /// interface address) is passed explicitly.
+    pub host: std::net::IpAddr,
+    /// Listen port (0 = OS-assigned ephemeral port, reported by
+    /// [`Server::addr`] — how the tests and the load harness bind).
+    pub port: u16,
+    /// HTTP worker threads (concurrent connections in flight).
+    pub workers: usize,
+    /// Micro-batcher: maximum requests per batched engine call.
+    pub max_batch: usize,
+    /// Micro-batcher: how long to wait for more requests after the
+    /// first, in microseconds.
+    pub max_wait_us: u64,
+    /// LRU response-cache entries (0 disables caching).
+    pub cache_capacity: usize,
+    /// Maximum request-body bytes.
+    pub max_body_bytes: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            host: std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+            port: 7878,
+            // Same capped available-parallelism default as the trainer.
+            workers: crate::coordinator::config::num_threads(),
+            max_batch: 16,
+            max_wait_us: 500,
+            cache_capacity: 1024,
+            max_body_bytes: 1 << 20,
+        }
+    }
+}
+
+/// A running server: accept thread + worker pool + batcher.
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    worker_handles: Vec<std::thread::JoinHandle<()>>,
+    batcher: Option<Batcher>,
+}
+
+impl Server {
+    /// Bind, spawn the accept/worker/batcher threads, and return
+    /// immediately. The server answers until [`Server::shutdown`] (or
+    /// process exit; [`Server::run`] blocks for the CLI).
+    pub fn start(registry: ModelRegistry, cfg: ServeConfig) -> Result<Server> {
+        ensure!(cfg.workers > 0, "need at least one worker thread");
+        ensure!(!registry.is_empty(), "no models loaded — nothing to serve");
+        let registry = Arc::new(registry);
+        let listener = TcpListener::bind((cfg.host, cfg.port))
+            .with_context(|| format!("binding {}:{}", cfg.host, cfg.port))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+
+        let batcher = Batcher::start(
+            registry.clone(),
+            BatcherConfig { max_batch: cfg.max_batch, max_wait_us: cfg.max_wait_us },
+        );
+        // None when disabled, so the hot path skips canonicalization, the
+        // shared lock, and the response clone entirely.
+        let cache = (cfg.cache_capacity > 0)
+            .then(|| Arc::new(Mutex::new(ResponseCache::new(cfg.cache_capacity))));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        // Bounded handoff queue: when every worker is busy and the queue
+        // is full, the accept thread blocks in send(), pushing
+        // backpressure into the OS listen backlog instead of buffering
+        // an unbounded pile of open sockets (fd exhaustion under a
+        // connection flood).
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(cfg.workers * 4);
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut worker_handles = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let conn_rx = conn_rx.clone();
+            let registry = registry.clone();
+            let cache = cache.clone();
+            let job_tx = batcher.sender();
+            let max_body = cfg.max_body_bytes;
+            let handle = std::thread::Builder::new()
+                .name(format!("sdegrad-serve-{w}"))
+                .spawn(move || loop {
+                    // Take one connection; exit when the accept thread is
+                    // gone and the queue is drained.
+                    let stream = {
+                        let rx = conn_rx.lock().unwrap_or_else(|e| e.into_inner());
+                        rx.recv()
+                    };
+                    match stream {
+                        Ok(s) => {
+                            handle_connection(s, &registry, cache.as_deref(), &job_tx, max_body)
+                        }
+                        Err(_) => break,
+                    }
+                })
+                .expect("spawning serve worker");
+            worker_handles.push(handle);
+        }
+
+        let accept_stop = stop.clone();
+        let accept_handle = std::thread::Builder::new()
+            .name("sdegrad-serve-accept".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if accept_stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match stream {
+                        Ok(s) => {
+                            if conn_tx.send(s).is_err() {
+                                break;
+                            }
+                        }
+                        // Transient accept errors (EMFILE under load,
+                        // aborted handshakes): back off briefly instead
+                        // of spinning a hot error loop.
+                        Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                    }
+                }
+                // conn_tx drops here: workers drain and exit.
+            })
+            .expect("spawning serve accept thread");
+
+        Ok(Server {
+            addr,
+            stop,
+            accept_handle: Some(accept_handle),
+            worker_handles,
+            batcher: Some(batcher),
+        })
+    }
+
+    /// The bound address (resolves port 0 to the actual ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block on the accept thread — the CLI's serve-forever mode.
+    pub fn run(mut self) {
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting, drain in-flight connections, and join every
+    /// thread (accept → workers → batcher).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        for h in self.worker_handles.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(b) = self.batcher.take() {
+            // All worker-held job senders are gone; this joins cleanly.
+            b.shutdown();
+        }
+    }
+}
+
+fn find_subsequence(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Classify a socket read error: the per-read `IO_TIMEOUT` firing is a
+/// timeout (408, matching the documented error table), not a client
+/// protocol error.
+fn read_error(e: std::io::Error, what: &str) -> ApiError {
+    match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => ApiError::timeout(),
+        _ => ApiError::bad_request(format!("reading {what}: {e}")),
+    }
+}
+
+/// Read, route, and answer one request; always closes the connection.
+fn handle_connection(
+    mut stream: TcpStream,
+    registry: &ModelRegistry,
+    cache: Option<&Mutex<ResponseCache>>,
+    job_tx: &mpsc::Sender<Job>,
+    max_body: usize,
+) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let deadline = std::time::Instant::now() + CONN_DEADLINE;
+    let (status, body, unread_input) = match read_request(&mut stream, max_body, deadline) {
+        Ok(Some((method, path, body))) => {
+            let (status, body) = route(&method, &path, &body, registry, cache, job_tx);
+            (status, body, false)
+        }
+        Ok(None) => return, // client closed before sending a request
+        Err(e) => (e.status, e.body(), true),
+    };
+    write_response(&mut stream, status, &body);
+    if unread_input {
+        // An early error reply (e.g. 413) can leave request bytes unread;
+        // closing then would RST the connection and could destroy the
+        // response before the client reads it. Half-close our side and
+        // drain what the client already sent so the close is clean. The
+        // drain gets its OWN short grace deadline — for a 408 the request
+        // deadline has by definition already passed, and reusing it would
+        // skip the drain exactly when it was needed.
+        let drain_deadline = std::time::Instant::now() + Duration::from_secs(5);
+        let _ = stream.shutdown(std::net::Shutdown::Write);
+        let mut sink = [0u8; 4096];
+        let mut budget: usize = 4 * 1024 * 1024;
+        while budget > 0 && std::time::Instant::now() < drain_deadline {
+            match stream.read(&mut sink) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => budget -= n.min(budget),
+            }
+        }
+    }
+}
+
+/// Parse one HTTP/1.1 request; returns `(method, path, body)`.
+#[allow(clippy::type_complexity)]
+fn read_request(
+    stream: &mut TcpStream,
+    max_body: usize,
+    deadline: std::time::Instant,
+) -> std::result::Result<Option<(String, String, Vec<u8>)>, ApiError> {
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 4096];
+    let head_end = loop {
+        if let Some(pos) = find_subsequence(&buf, b"\r\n\r\n") {
+            break pos + 4;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err(ApiError::bad_request("request head exceeds 16 KiB"));
+        }
+        if std::time::Instant::now() >= deadline {
+            return Err(ApiError::timeout());
+        }
+        let n = stream.read(&mut tmp).map_err(|e| read_error(e, "request"))?;
+        if n == 0 {
+            if buf.is_empty() {
+                return Ok(None);
+            }
+            return Err(ApiError::bad_request("connection closed mid-request"));
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    };
+
+    let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (Some(method), Some(path)) = (parts.next(), parts.next()) else {
+        return Err(ApiError::bad_request("malformed request line"));
+    };
+    let method = method.to_string();
+    let path = path.to_string();
+
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| ApiError::bad_request("bad Content-Length"))?;
+            }
+        }
+    }
+    if content_length > max_body {
+        return Err(ApiError::body_too_large(max_body));
+    }
+
+    let mut body = buf[head_end..].to_vec();
+    while body.len() < content_length {
+        if std::time::Instant::now() >= deadline {
+            return Err(ApiError::timeout());
+        }
+        let n = stream.read(&mut tmp).map_err(|e| read_error(e, "body"))?;
+        if n == 0 {
+            return Err(ApiError::bad_request("connection closed mid-body"));
+        }
+        body.extend_from_slice(&tmp[..n]);
+        if body.len() > max_body {
+            return Err(ApiError::body_too_large(max_body));
+        }
+    }
+    body.truncate(content_length);
+    Ok(Some((method, path, body)))
+}
+
+const API_ENDPOINTS: [&str; 3] = ["/v1/simulate", "/v1/reconstruct", "/v1/elbo"];
+
+fn route(
+    method: &str,
+    path: &str,
+    body: &[u8],
+    registry: &ModelRegistry,
+    cache: Option<&Mutex<ResponseCache>>,
+    job_tx: &mpsc::Sender<Job>,
+) -> (u16, Vec<u8>) {
+    match (method, path) {
+        ("GET", "/healthz") => (200, protocol::healthz_response(&registry.models())),
+        ("POST", p) if API_ENDPOINTS.contains(&p) => {
+            let Ok(body) = std::str::from_utf8(body) else {
+                let e = ApiError::bad_json("request body is not UTF-8");
+                return (e.status, e.body());
+            };
+            match answer_api(p, body, registry, cache, job_tx) {
+                Ok(bytes) => (200, bytes),
+                Err(e) => (e.status, e.body()),
+            }
+        }
+        (_, p) if p == "/healthz" || API_ENDPOINTS.contains(&p) => {
+            let e = ApiError::method_not_allowed(method, p);
+            (e.status, e.body())
+        }
+        (_, p) => {
+            let e = ApiError::unknown_endpoint(p);
+            (e.status, e.body())
+        }
+    }
+}
+
+/// Parse → validate → cache probe → micro-batcher → cache fill.
+fn answer_api(
+    path: &str,
+    body: &str,
+    registry: &ModelRegistry,
+    cache: Option<&Mutex<ResponseCache>>,
+    job_tx: &mpsc::Sender<Job>,
+) -> std::result::Result<Vec<u8>, ApiError> {
+    let req = protocol::parse_request(path, body)?;
+    let entry = registry
+        .get(req.model())
+        .ok_or_else(|| ApiError::unknown_model(req.model()))?;
+    protocol::validate_for_model(&req, entry.model.cfg.obs_dim)?;
+
+    let key =
+        cache.map(|_| cache_key(req.endpoint(), entry.fingerprint, &req.canonical()));
+    if let (Some(c), Some(k)) = (cache, &key) {
+        if let Some(hit) = c.lock().unwrap_or_else(|e| e.into_inner()).get(k) {
+            // Byte-identical to the miss that filled it: the cached value
+            // IS those bytes.
+            return Ok(hit);
+        }
+    }
+    let bytes = submit_via(job_tx, req)?;
+    if let (Some(c), Some(k)) = (cache, key) {
+        c.lock().unwrap_or_else(|e| e.into_inner()).put(k, bytes.clone());
+    }
+    Ok(bytes)
+}
+
+fn write_response(stream: &mut TcpStream, status: u16, body: &[u8]) {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        _ => "Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(body);
+    let _ = stream.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    // The end-to-end suite (concurrent clients over a real socket,
+    // response invariance across batch layouts and cache states, the
+    // full error table) lives in `tests/serve.rs`; here we only pin the
+    // HTTP head parser's plumbing via a loopback socket pair.
+    use super::*;
+
+    #[test]
+    fn read_request_parses_method_path_and_body() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let deadline = std::time::Instant::now() + Duration::from_secs(5);
+            read_request(&mut s, 1024, deadline)
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.write_all(
+            b"POST /v1/simulate HTTP/1.1\r\nHost: x\r\ncontent-length: 4\r\n\r\nbody",
+        )
+        .unwrap();
+        let (method, path, body) = t.join().unwrap().unwrap().unwrap();
+        assert_eq!(method, "POST");
+        assert_eq!(path, "/v1/simulate");
+        assert_eq!(body, b"body");
+    }
+
+    #[test]
+    fn read_request_rejects_oversized_declared_body() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let deadline = std::time::Instant::now() + Duration::from_secs(5);
+            read_request(&mut s, 16, deadline)
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.write_all(b"POST /v1/elbo HTTP/1.1\r\nContent-Length: 99\r\n\r\n").unwrap();
+        let err = t.join().unwrap().unwrap_err();
+        assert_eq!(err.status, 413);
+        assert_eq!(err.code, "body_too_large");
+    }
+}

@@ -1,0 +1,344 @@
+//! End-to-end tests of the `sdegrad serve` subsystem over real
+//! localhost sockets.
+//!
+//! The acceptance pin: for fixed request seeds, every `/v1/*` response
+//! is **byte-identical** to the per-request scalar engine call
+//! ([`sdegrad::serve::batcher::scalar_response`]) regardless of
+//! concurrent-client count, micro-batch layout (`max_batch` 1 vs 16,
+//! workers 1 vs 8), arrival order, and cache state — the serving payoff
+//! of the engine's bit-identical-batching guarantee. Plus the error
+//! table: malformed JSON, unknown endpoint/model, oversized body, wrong
+//! method, and shape mismatches all answer with stable JSON error codes.
+
+use std::net::SocketAddr;
+
+use sdegrad::latent::{LatentSdeConfig, LatentSdeModel};
+use sdegrad::metrics::json::parse_json;
+use sdegrad::prng::PrngKey;
+use sdegrad::serve::batcher::scalar_response;
+use sdegrad::serve::{client, protocol, ModelRegistry, ServeConfig, Server};
+
+fn tiny_cfg() -> LatentSdeConfig {
+    LatentSdeConfig {
+        obs_dim: 2,
+        latent_dim: 3,
+        context_dim: 2,
+        hidden: 8,
+        diff_hidden: 4,
+        enc_hidden: 6,
+        obs_noise_std: 0.1,
+        ..Default::default()
+    }
+}
+
+/// Two named models (different init seeds ⇒ different fingerprints).
+fn registry() -> ModelRegistry {
+    let mut reg = ModelRegistry::new();
+    let alpha = LatentSdeModel::new(tiny_cfg());
+    let p_alpha = alpha.init_params(PrngKey::from_seed(1));
+    reg.insert("alpha", alpha, p_alpha).unwrap();
+    let beta = LatentSdeModel::new(tiny_cfg());
+    let p_beta = beta.init_params(PrngKey::from_seed(2));
+    reg.insert("beta", beta, p_beta).unwrap();
+    reg
+}
+
+fn times_json() -> String {
+    "[0,0.1,0.2,0.3,0.4]".to_string()
+}
+
+fn obs_json(seed: u64) -> String {
+    let mut obs = vec![0.0; 5 * 2];
+    PrngKey::from_seed(seed).fill_normal(0, &mut obs);
+    let rows: Vec<String> =
+        obs.chunks_exact(2).map(|r| format!("[{},{}]", r[0], r[1])).collect();
+    format!("[{}]", rows.join(","))
+}
+
+/// One HTTP request over a fresh connection via the shared serving
+/// client ([`sdegrad::serve::client`]); returns (status, body).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Vec<u8>) {
+    let (status, body) = client::request(addr, method, path, body).expect("http request");
+    assert_ne!(status, 0, "unparseable response head");
+    (status, body)
+}
+
+fn post(addr: SocketAddr, path: &str, body: &str) -> (u16, Vec<u8>) {
+    http(addr, "POST", path, body)
+}
+
+/// The request mix used by the invariance tests: all three endpoints,
+/// both models, distinct seeds. Returns (path, body) pairs.
+fn request_mix() -> Vec<(String, String)> {
+    let mut reqs = Vec::new();
+    for (i, model) in ["alpha", "beta", "alpha", "alpha"].iter().enumerate() {
+        reqs.push((
+            "/v1/simulate".to_string(),
+            format!(
+                "{{\"model\": \"{model}\", \"seed\": {}, \"times\": {}, \"substeps\": 3}}",
+                10 + i,
+                times_json()
+            ),
+        ));
+        reqs.push((
+            "/v1/reconstruct".to_string(),
+            format!(
+                "{{\"model\": \"{model}\", \"seed\": {}, \"times\": {}, \"obs\": {}, \
+                 \"substeps\": 3}}",
+                20 + i,
+                times_json(),
+                obs_json(300 + i as u64)
+            ),
+        ));
+        reqs.push((
+            "/v1/elbo".to_string(),
+            format!(
+                "{{\"model\": \"{model}\", \"seed\": {}, \"times\": {}, \"obs\": {}, \
+                 \"substeps\": 3, \"samples\": 2, \"kl_weight\": 0.4}}",
+                30 + i,
+                times_json(),
+                obs_json(400 + i as u64)
+            ),
+        ));
+    }
+    reqs
+}
+
+/// Per-request scalar oracle bytes, computed without any server.
+fn expected_bytes(reqs: &[(String, String)]) -> Vec<Vec<u8>> {
+    let reg = registry();
+    reqs.iter()
+        .map(|(path, body)| {
+            let req = protocol::parse_request(path, body).expect("oracle parse");
+            let entry = reg.get(req.model()).expect("oracle model");
+            scalar_response(entry, &req).expect("oracle response")
+        })
+        .collect()
+}
+
+/// THE acceptance pin: responses are byte-identical to the scalar
+/// oracle across micro-batch layouts, worker counts, concurrent-client
+/// arrival orders, and repetition (cache hits).
+#[test]
+fn responses_invariant_across_batch_layouts_concurrency_and_cache() {
+    let reqs = request_mix();
+    let expected = expected_bytes(&reqs);
+
+    for (max_batch, workers, n_clients) in [(1usize, 1usize, 2usize), (16, 8, 6)] {
+        let server = Server::start(
+            registry(),
+            ServeConfig {
+                port: 0,
+                workers,
+                max_batch,
+                // Generous window so concurrent requests really coalesce
+                // into shared engine calls on the 16-batch config.
+                max_wait_us: 2000,
+                cache_capacity: 64,
+                ..Default::default()
+            },
+        )
+        .expect("server start");
+        let addr = server.addr();
+
+        // Concurrent clients, interleaved request ownership (client c
+        // takes requests c, c+n_clients, …) so arrival order is
+        // scrambled relative to the request list.
+        let results: Vec<Vec<(usize, Vec<u8>)>> = std::thread::scope(|scope| {
+            let reqs = &reqs;
+            let handles: Vec<_> = (0..n_clients)
+                .map(|c| {
+                    scope.spawn(move || {
+                        let mut out = Vec::new();
+                        let mut i = c;
+                        while i < reqs.len() {
+                            let (path, body) = &reqs[i];
+                            let (status, bytes) = post(addr, path, body);
+                            assert_eq!(status, 200, "request {i} failed: {bytes:?}");
+                            out.push((i, bytes));
+                            i += n_clients;
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("client panicked")).collect()
+        });
+        for (i, bytes) in results.into_iter().flatten() {
+            assert_eq!(
+                bytes, expected[i],
+                "request {i} diverged from the scalar oracle \
+                 (max_batch={max_batch}, workers={workers})"
+            );
+        }
+
+        // Second pass, sequential: every request now hits the cache and
+        // must STILL byte-equal the oracle (hit == miss pin).
+        for (i, (path, body)) in reqs.iter().enumerate() {
+            let (status, bytes) = post(addr, path, body);
+            assert_eq!(status, 200);
+            assert_eq!(bytes, expected[i], "cache hit diverged on request {i}");
+        }
+        server.shutdown();
+    }
+}
+
+/// Cache disabled vs enabled must not change a byte (the cache is an
+/// optimization, never an answer source of its own).
+#[test]
+fn cache_disabled_and_enabled_serve_identical_bytes() {
+    let (path, body) = (
+        "/v1/elbo",
+        format!(
+            "{{\"model\": \"alpha\", \"seed\": 5, \"times\": {}, \"obs\": {}, \
+             \"substeps\": 2, \"samples\": 2}}",
+            times_json(),
+            obs_json(55)
+        ),
+    );
+    let mut bodies = Vec::new();
+    for cache_capacity in [0usize, 128] {
+        let server = Server::start(
+            registry(),
+            ServeConfig { port: 0, workers: 2, cache_capacity, ..Default::default() },
+        )
+        .unwrap();
+        // Twice per server: fresh compute, then (with cache) a hit.
+        let (s1, b1) = post(server.addr(), path, &body);
+        let (s2, b2) = post(server.addr(), path, &body);
+        assert_eq!((s1, s2), (200, 200));
+        assert_eq!(b1, b2);
+        bodies.push(b1);
+        server.shutdown();
+    }
+    assert_eq!(bodies[0], bodies[1], "cache on/off changed response bytes");
+}
+
+#[test]
+fn healthz_lists_models_with_fingerprints() {
+    let server = Server::start(registry(), ServeConfig { port: 0, ..Default::default() })
+        .unwrap();
+    let (status, body) = http(server.addr(), "GET", "/healthz", "");
+    assert_eq!(status, 200);
+    let v = parse_json(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(v.get("status").unwrap().as_str(), Some("ok"));
+    let models = v.get("models").unwrap().as_array().unwrap();
+    assert_eq!(models.len(), 2);
+    let names: Vec<&str> =
+        models.iter().map(|m| m.get("name").unwrap().as_str().unwrap()).collect();
+    assert!(names.contains(&"alpha") && names.contains(&"beta"));
+    let fps: Vec<&str> = models
+        .iter()
+        .map(|m| m.get("fingerprint").unwrap().as_str().unwrap())
+        .collect();
+    assert_ne!(fps[0], fps[1], "distinct checkpoints must have distinct fingerprints");
+    server.shutdown();
+}
+
+/// ELBO responses carry the exact floats of the direct engine call
+/// (shortest-roundtrip formatting both ways).
+#[test]
+fn elbo_response_floats_roundtrip_to_the_engine_values() {
+    use sdegrad::latent::{elbo_value_multi, ElboConfig};
+    let server = Server::start(registry(), ServeConfig { port: 0, ..Default::default() })
+        .unwrap();
+    let body = format!(
+        "{{\"model\": \"beta\", \"seed\": 9, \"times\": {}, \"obs\": {}, \
+         \"substeps\": 3, \"samples\": 3, \"kl_weight\": 0.25}}",
+        times_json(),
+        obs_json(77)
+    );
+    let (status, bytes) = post(server.addr(), "/v1/elbo", &body);
+    assert_eq!(status, 200);
+    server.shutdown();
+
+    let model = LatentSdeModel::new(tiny_cfg());
+    let params = model.init_params(PrngKey::from_seed(2)); // "beta"
+    let req = protocol::parse_request("/v1/elbo", &body).unwrap();
+    let sdegrad::serve::ServeRequest::Elbo(r) = &req else { panic!("wrong variant") };
+    let out = elbo_value_multi(
+        &model,
+        &params,
+        &r.times,
+        &r.obs,
+        PrngKey::from_seed(9),
+        &ElboConfig { substeps: 3, kl_weight: 0.25 },
+        3,
+    );
+    let v = parse_json(std::str::from_utf8(&bytes).unwrap()).unwrap();
+    assert_eq!(v.get("loss").unwrap().as_f64().unwrap().to_bits(), out.loss.to_bits());
+    assert_eq!(v.get("kl_z0").unwrap().as_f64().unwrap().to_bits(), out.kl_z0.to_bits());
+    let per = v.get("per_sample_loss").unwrap().as_array().unwrap();
+    assert_eq!(per.len(), 3);
+    for (got, want) in per.iter().zip(&out.per_sample_loss) {
+        assert_eq!(got.as_f64().unwrap().to_bits(), want.to_bits());
+    }
+}
+
+/// The error table: every failure mode answers with the documented
+/// status + stable JSON error code.
+#[test]
+fn error_responses_have_stable_codes() {
+    let server = Server::start(
+        registry(),
+        ServeConfig { port: 0, workers: 2, max_body_bytes: 4096, ..Default::default() },
+    )
+    .unwrap();
+    let addr = server.addr();
+    let code_of = |body: &[u8]| -> String {
+        parse_json(std::str::from_utf8(body).unwrap())
+            .unwrap()
+            .get("error")
+            .and_then(|e| e.get("code"))
+            .and_then(|c| c.as_str())
+            .unwrap_or("<none>")
+            .to_string()
+    };
+
+    // Malformed JSON.
+    let (status, body) = post(addr, "/v1/simulate", "this is not json");
+    assert_eq!((status, code_of(&body).as_str()), (400, "bad_json"));
+
+    // Unknown endpoint.
+    let (status, body) = post(addr, "/v1/nope", "{}");
+    assert_eq!((status, code_of(&body).as_str()), (404, "unknown_endpoint"));
+
+    // Unknown model.
+    let (status, body) = post(
+        addr,
+        "/v1/simulate",
+        &format!("{{\"model\": \"gamma\", \"seed\": 1, \"times\": {}}}", times_json()),
+    );
+    assert_eq!((status, code_of(&body).as_str()), (404, "unknown_model"));
+
+    // Oversized body (the server caps at 4096 above).
+    let big = format!(
+        "{{\"seed\": 1, \"times\": {}, \"pad\": \"{}\"}}",
+        times_json(),
+        "x".repeat(8192)
+    );
+    let (status, body) = post(addr, "/v1/simulate", &big);
+    assert_eq!((status, code_of(&body).as_str()), (413, "body_too_large"));
+
+    // Wrong method on an API endpoint and on healthz.
+    let (status, body) = http(addr, "GET", "/v1/simulate", "");
+    assert_eq!((status, code_of(&body).as_str()), (405, "method_not_allowed"));
+    let (status, _) = post(addr, "/healthz", "{}");
+    assert_eq!(status, 405);
+
+    // Obs shape mismatch against the model (3-wide rows, 2-dim model).
+    let (status, body) = post(
+        addr,
+        "/v1/reconstruct",
+        r#"{"model": "alpha", "seed": 1, "times": [0, 0.1],
+            "obs": [[1, 2, 3], [4, 5, 6]]}"#,
+    );
+    assert_eq!((status, code_of(&body).as_str()), (400, "bad_request"));
+
+    // Missing seed.
+    let (status, body) =
+        post(addr, "/v1/simulate", &format!("{{\"times\": {}}}", times_json()));
+    assert_eq!((status, code_of(&body).as_str()), (400, "bad_request"));
+
+    server.shutdown();
+}
