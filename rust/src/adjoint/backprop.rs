@@ -17,21 +17,28 @@
 //! the "backpropagating through the Milstein solve requires evaluating
 //! high-order derivatives" cost the paper mentions in §7.1).
 //! ```
+//!
+//! The engine itself lives in [`super::checkpoint`]: the full tape is the
+//! `Checkpointing::Tape` schedule of the checkpointed driver (first
+//! forward pass records everything, nothing is recomputed), and every
+//! other schedule produces bit-identical gradients with less memory. This
+//! module keeps the historical entry point for the classic configuration
+//! (stored path, unmirrored, full tape).
 
-use super::stochastic::GradientOutput;
-use crate::brownian::{BrownianMotion, BrownianPath};
+use super::checkpoint::{checkpointed_backprop_core, Checkpointing};
+use super::stochastic::{GradientOutput, NoiseMode};
 use crate::prng::PrngKey;
-use crate::sde::{Calculus, SdeVjp};
-use crate::solvers::{uniform_grid, Method, SolveStats};
+use crate::sde::SdeVjp;
+use crate::solvers::Method;
 
-/// Backprop-through-the-solver engine behind
-/// [`crate::api::SdeProblem::sensitivity`] with `SensAlg::Backprop`.
-/// `method` must be `EulerMaruyama` or `MilsteinIto` (the two schemes the
-/// paper backpropagates through in Fig 5c); `loss_grad` maps the realized
-/// terminal state to `∂L/∂z_T`. Returns the same [`GradientOutput`] as
-/// the stochastic adjoint; `noise_memory` reports the tape size
-/// (trajectory + increments), the honest analogue of Table 1's O(L)
-/// memory row.
+/// Full-tape backprop-through-the-solver: the `Checkpointing::Tape`
+/// configuration of [`super::checkpoint`] on a stored, unmirrored path.
+/// `method` must be `EulerMaruyama`, `MilsteinIto` (the two schemes the
+/// paper backpropagates through in Fig 5c) or `Heun`; `loss_grad` maps
+/// the realized terminal state to `∂L/∂z_T`. Returns the same
+/// [`GradientOutput`] as the stochastic adjoint; `noise_memory` reports
+/// the tape size (trajectory + increments), the honest analogue of
+/// Table 1's O(L) memory row.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn backprop_core<S, F>(
     sde: &S,
@@ -48,130 +55,20 @@ where
     S: SdeVjp + ?Sized,
     F: FnOnce(&[f64]) -> Vec<f64>,
 {
-    assert!(
-        matches!(method, Method::EulerMaruyama | Method::MilsteinIto),
-        "backprop baseline supports Euler–Maruyama and Milstein (Itô); got {}",
-        method.name()
-    );
-    assert_eq!(
-        sde.calculus(),
-        Calculus::Ito,
-        "backprop baseline integrates the native Itô form"
-    );
-    let d = sde.state_dim();
-    let p = sde.param_dim();
-    let grid = uniform_grid(t0, t1, n_steps);
-    let mut bm = BrownianPath::new(key, d, t0, t1);
-
-    // ---- Forward pass with a full tape. -----------------------------
-    let mut tape_z = vec![0.0; (n_steps + 1) * d]; // states at grid points
-    let mut tape_dw = vec![0.0; n_steps * d]; // increments per step
-    tape_z[..d].copy_from_slice(z0);
-
-    let mut b = vec![0.0; d];
-    let mut s = vec![0.0; d];
-    let mut sp = vec![0.0; d];
-    let mut wa = vec![0.0; d];
-    let mut wb = vec![0.0; d];
-    let mut nfe_f = 0u64;
-    let mut nfe_g = 0u64;
-
-    bm.sample_into(grid[0], &mut wa);
-    for k in 0..n_steps {
-        let (t, tn) = (grid[k], grid[k + 1]);
-        let h = tn - t;
-        bm.sample_into(tn, &mut wb);
-        let (z_prev, z_rest) = tape_z.split_at_mut((k + 1) * d);
-        let z = &z_prev[k * d..];
-        let zn = &mut z_rest[..d];
-        let dw = &mut tape_dw[k * d..(k + 1) * d];
-        for i in 0..d {
-            dw[i] = wb[i] - wa[i];
-        }
-        sde.drift(t, z, theta, &mut b);
-        sde.diffusion(t, z, theta, &mut s);
-        nfe_f += 1;
-        nfe_g += 1;
-        match method {
-            Method::EulerMaruyama => {
-                for i in 0..d {
-                    zn[i] = z[i] + b[i] * h + s[i] * dw[i];
-                }
-            }
-            Method::MilsteinIto => {
-                sde.diffusion_dz_diag(t, z, theta, &mut sp);
-                for i in 0..d {
-                    zn[i] = z[i]
-                        + b[i] * h
-                        + s[i] * dw[i]
-                        + 0.5 * s[i] * sp[i] * (dw[i] * dw[i] - h);
-                }
-            }
-            _ => unreachable!(),
-        }
-        wa.copy_from_slice(&wb);
-    }
-    let z_t = tape_z[n_steps * d..].to_vec();
-
-    // ---- Backward sweep over the tape. ------------------------------
-    let mut a = loss_grad(&z_t); // ∂L/∂z_T
-    assert_eq!(a.len(), d, "loss gradient has wrong dimension");
-    let mut a_new = vec![0.0; d];
-    let mut grad_theta = vec![0.0; p];
-    let mut weighted = vec![0.0; d];
-    let mut nbp = 0u64;
-
-    for k in (0..n_steps).rev() {
-        let t = grid[k];
-        let h = grid[k + 1] - grid[k];
-        let z = &tape_z[k * d..(k + 1) * d];
-        let dw = &tape_dw[k * d..(k + 1) * d];
-
-        // a_new = a + h·(aᵀ∂b/∂z) + (a⊙ΔW)ᵀ∂σ/∂z  (+ Milstein term)
-        a_new.copy_from_slice(&a);
-        // drift contribution: scale adjoint by h.
-        for i in 0..d {
-            weighted[i] = a[i] * h;
-        }
-        sde.drift_vjp(t, z, theta, &weighted, &mut a_new, &mut grad_theta);
-        // diffusion contribution: adjoint weighted by ΔW per channel.
-        for i in 0..d {
-            weighted[i] = a[i] * dw[i];
-        }
-        sde.diffusion_vjp(t, z, theta, &weighted, &mut a_new, &mut grad_theta);
-        if method == Method::MilsteinIto {
-            // correction term c = ½σσ' times (ΔW²−h): adjoint weighted by
-            // (ΔW²−h) pulled through ∂c/∂(z,θ) — second derivatives of σ.
-            for i in 0..d {
-                weighted[i] = a[i] * (dw[i] * dw[i] - h);
-            }
-            sde.ito_correction_vjp(t, z, theta, &weighted, &mut a_new, &mut grad_theta);
-        }
-        std::mem::swap(&mut a, &mut a_new);
-        nbp += 1;
-    }
-
-    GradientOutput {
-        z_terminal: z_t,
-        grad_z0: a,
-        grad_theta,
-        z0_reconstructed: z0.to_vec(), // tape holds z0 exactly
-        forward_stats: SolveStats {
-            steps: n_steps as u64,
-            rejected: 0,
-            nfe_drift: nfe_f,
-            nfe_diffusion: nfe_g,
-        },
-        backward_stats: SolveStats {
-            steps: nbp,
-            rejected: 0,
-            nfe_drift: nbp,
-            nfe_diffusion: nbp,
-        },
-        // Tape: (L+1)·d states + L·d increments + stored noise.
-        noise_memory: tape_z.len() + tape_dw.len() + bm.memory_footprint(),
-        w_terminal: bm.sample(t1),
-    }
+    checkpointed_backprop_core(
+        sde,
+        theta,
+        z0,
+        t0,
+        t1,
+        n_steps,
+        key,
+        method,
+        NoiseMode::StoredPath,
+        false,
+        Checkpointing::Tape,
+        loss_grad,
+    )
 }
 
 #[cfg(test)]
@@ -250,6 +147,14 @@ mod tests {
     fn milstein_backprop_is_exact_gradient_of_discrete_solve() {
         fd_check(Example1, Method::MilsteinIto, 5);
         fd_check(Example2, Method::MilsteinIto, 6);
+    }
+
+    #[test]
+    fn heun_backprop_is_exact_gradient_of_discrete_solve() {
+        // New with the checkpoint subsystem: the predictor-corrector map
+        // is differentiated stage by stage (Stratonovich drift form).
+        fd_check(Example1, Method::Heun, 7);
+        fd_check(Example2, Method::Heun, 11);
     }
 
     #[test]

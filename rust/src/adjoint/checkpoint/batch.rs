@@ -1,0 +1,515 @@
+//! Batched checkpointed backprop: the scalar [`super::driver`] lifted to
+//! `[B×d]` structure-of-arrays buffers, one schedule per chunk.
+//!
+//! Every per-path float follows the scalar [`super::replay::StepKernel`]
+//! exactly — the batched SDE kernels default to row loops over the scalar
+//! VJPs, the [`BatchBrownian`] sweeps query each path's source in the
+//! scalar order, and each path's `grad_theta` row sees the same
+//! accumulation sequence — so a batch of B checkpointed backprops equals
+//! B scalar runs bit for bit, for every schedule (pinned by
+//! `tests/checkpoint_backprop.rs`). Memory accounting is reported in
+//! per-path units so the batched and scalar engines expose identical
+//! `Gradients.stats`.
+
+use super::driver::MemMeter;
+use super::schedule::Checkpointing;
+use crate::adjoint::stochastic::Noise;
+use crate::brownian::{BatchBrownian, BrownianMotion};
+use crate::sde::{BatchSdeVjp, Calculus};
+use crate::solvers::{uniform_grid, Method, SolveStats};
+
+/// Batched forward/backward step kernel — [`super::replay::StepKernel`]
+/// over `[B×d]`/`[B×p]` buffers, NFE counters in per-path units (one
+/// batched call = one evaluation per path).
+struct BatchStepKernel<'a, S: BatchSdeVjp + ?Sized> {
+    sde: &'a S,
+    theta: &'a [f64],
+    method: Method,
+    n: usize, // batch * d
+    b: Vec<f64>,
+    sig: Vec<f64>,
+    sigp: Vec<f64>,
+    b1: Vec<f64>,
+    sig1: Vec<f64>,
+    zp: Vec<f64>,
+    weighted: Vec<f64>,
+    v1: Vec<f64>,
+    scr: Vec<f64>,
+    nfe_f: u64,
+    nfe_g: u64,
+    bnf: u64,
+    bng: u64,
+}
+
+impl<'a, S: BatchSdeVjp + ?Sized> BatchStepKernel<'a, S> {
+    fn new(sde: &'a S, theta: &'a [f64], method: Method, batch: usize) -> Self {
+        assert!(
+            matches!(method, Method::EulerMaruyama | Method::MilsteinIto | Method::Heun),
+            "backprop kernel supports Euler-Maruyama, Milstein (Ito) and Heun, got {:?}",
+            method
+        );
+        if !matches!(method, Method::Heun) {
+            assert!(
+                matches!(sde.calculus(), Calculus::Ito),
+                "Euler/Milstein backprop differentiates the Ito discretization; \
+                 system is Stratonovich-native"
+            );
+        }
+        assert!(batch > 0, "BatchStepKernel: empty batch");
+        let d = sde.state_dim();
+        let n = batch * d;
+        BatchStepKernel {
+            sde,
+            theta,
+            method,
+            n,
+            b: vec![0.0; n],
+            sig: vec![0.0; n],
+            sigp: vec![0.0; n],
+            b1: vec![0.0; n],
+            sig1: vec![0.0; n],
+            zp: vec![0.0; n],
+            weighted: vec![0.0; n],
+            v1: vec![0.0; n],
+            scr: vec![0.0; 2 * d],
+            nfe_f: 0,
+            nfe_g: 0,
+            bnf: 0,
+            bng: 0,
+        }
+    }
+
+    fn forward_step(&mut self, t: f64, tn: f64, z: &[f64], dw: &[f64], zn: &mut [f64]) {
+        let h = tn - t;
+        match self.method {
+            Method::EulerMaruyama => {
+                self.sde.drift_batch(t, z, self.theta, &mut self.b);
+                self.sde.diffusion_batch(t, z, self.theta, &mut self.sig);
+                self.nfe_f += 1;
+                self.nfe_g += 1;
+                for i in 0..self.n {
+                    zn[i] = z[i] + self.b[i] * h + self.sig[i] * dw[i];
+                }
+            }
+            Method::MilsteinIto => {
+                self.sde.drift_batch(t, z, self.theta, &mut self.b);
+                self.sde.diffusion_batch(t, z, self.theta, &mut self.sig);
+                self.sde.diffusion_dz_diag_batch(t, z, self.theta, &mut self.sigp);
+                self.nfe_f += 1;
+                self.nfe_g += 1;
+                for i in 0..self.n {
+                    zn[i] = z[i]
+                        + self.b[i] * h
+                        + self.sig[i] * dw[i]
+                        + 0.5 * self.sig[i] * self.sigp[i] * (dw[i] * dw[i] - h);
+                }
+            }
+            Method::Heun => {
+                self.sde.drift_stratonovich_batch(t, z, self.theta, &mut self.b, &mut self.scr);
+                self.sde.diffusion_batch(t, z, self.theta, &mut self.sig);
+                self.nfe_f += 1;
+                self.nfe_g += 1;
+                for i in 0..self.n {
+                    self.zp[i] = z[i] + self.b[i] * h + self.sig[i] * dw[i];
+                }
+                self.sde.drift_stratonovich_batch(
+                    tn,
+                    &self.zp,
+                    self.theta,
+                    &mut self.b1,
+                    &mut self.scr,
+                );
+                self.sde.diffusion_batch(tn, &self.zp, self.theta, &mut self.sig1);
+                self.nfe_f += 1;
+                self.nfe_g += 1;
+                for i in 0..self.n {
+                    zn[i] = z[i]
+                        + 0.5 * (self.b[i] + self.b1[i]) * h
+                        + 0.5 * (self.sig[i] + self.sig1[i]) * dw[i];
+                }
+            }
+            _ => unreachable!("validated in BatchStepKernel::new"),
+        }
+    }
+
+    fn backward_step(
+        &mut self,
+        t: f64,
+        tn: f64,
+        z: &[f64],
+        dw: &[f64],
+        a: &[f64],
+        a_new: &mut [f64],
+        grad_theta: &mut [f64],
+    ) {
+        let h = tn - t;
+        match self.method {
+            Method::EulerMaruyama | Method::MilsteinIto => {
+                a_new.copy_from_slice(a);
+                for i in 0..self.n {
+                    self.weighted[i] = a[i] * h;
+                }
+                self.sde.drift_vjp_batch(t, z, self.theta, &self.weighted, a_new, grad_theta);
+                for i in 0..self.n {
+                    self.weighted[i] = a[i] * dw[i];
+                }
+                self.sde.diffusion_vjp_batch(t, z, self.theta, &self.weighted, a_new, grad_theta);
+                if matches!(self.method, Method::MilsteinIto) {
+                    for i in 0..self.n {
+                        self.weighted[i] = a[i] * (dw[i] * dw[i] - h);
+                    }
+                    self.sde.ito_correction_vjp_batch(
+                        t,
+                        z,
+                        self.theta,
+                        &self.weighted,
+                        a_new,
+                        grad_theta,
+                    );
+                }
+                self.bnf += 1;
+                self.bng += 1;
+            }
+            Method::Heun => {
+                self.sde.drift_stratonovich_batch(t, z, self.theta, &mut self.b, &mut self.scr);
+                self.sde.diffusion_batch(t, z, self.theta, &mut self.sig);
+                for i in 0..self.n {
+                    self.zp[i] = z[i] + self.b[i] * h + self.sig[i] * dw[i];
+                }
+                self.v1.fill(0.0);
+                for i in 0..self.n {
+                    self.weighted[i] = 0.5 * h * a[i];
+                }
+                self.sde.drift_vjp_stratonovich_batch(
+                    tn,
+                    &self.zp,
+                    self.theta,
+                    &self.weighted,
+                    &mut self.v1,
+                    grad_theta,
+                    &mut self.scr,
+                );
+                for i in 0..self.n {
+                    self.weighted[i] = 0.5 * dw[i] * a[i];
+                }
+                self.sde.diffusion_vjp_batch(
+                    tn,
+                    &self.zp,
+                    self.theta,
+                    &self.weighted,
+                    &mut self.v1,
+                    grad_theta,
+                );
+                for i in 0..self.n {
+                    a_new[i] = a[i] + self.v1[i];
+                }
+                for i in 0..self.n {
+                    self.weighted[i] = 0.5 * h * a[i] + h * self.v1[i];
+                }
+                self.sde.drift_vjp_stratonovich_batch(
+                    t,
+                    z,
+                    self.theta,
+                    &self.weighted,
+                    a_new,
+                    grad_theta,
+                    &mut self.scr,
+                );
+                for i in 0..self.n {
+                    self.weighted[i] = 0.5 * dw[i] * a[i] + dw[i] * self.v1[i];
+                }
+                self.sde.diffusion_vjp_batch(t, z, self.theta, &self.weighted, a_new, grad_theta);
+                self.bnf += 3;
+                self.bng += 3;
+            }
+            _ => unreachable!("validated in BatchStepKernel::new"),
+        }
+    }
+}
+
+/// Local batch tape of one segment: `len+1` batch states and `len` batch
+/// increment rows.
+struct BatchLeafTape {
+    n: usize, // batch * d
+    len: usize,
+    z: Vec<f64>,
+    dw: Vec<f64>,
+}
+
+impl BatchLeafTape {
+    fn new(n: usize, len: usize) -> Self {
+        BatchLeafTape { n, len, z: vec![0.0; (len + 1) * n], dw: vec![0.0; len * n] }
+    }
+
+    /// Tape size in f64s *per path* (the metered unit).
+    fn f64s_per_path(&self, batch: usize) -> usize {
+        (self.z.len() + self.dw.len()) / batch
+    }
+
+    fn state(&self, k: usize) -> &[f64] {
+        &self.z[k * self.n..(k + 1) * self.n]
+    }
+
+    fn dw(&self, k: usize) -> &[f64] {
+        &self.dw[k * self.n..(k + 1) * self.n]
+    }
+
+    fn record_forward<S: BatchSdeVjp + ?Sized>(
+        &mut self,
+        kern: &mut BatchStepKernel<'_, S>,
+        grid: &[f64],
+        lo: usize,
+        z_lo: &[f64],
+        bm: &mut BatchBrownian<Noise>,
+    ) {
+        let n = self.n;
+        self.z[..n].copy_from_slice(z_lo);
+        bm.begin_sweep(grid[lo]);
+        for k in 0..self.len {
+            bm.sweep_increments(grid[lo + k + 1], &mut self.dw[k * n..(k + 1) * n]);
+            let (prev, next) = self.z.split_at_mut((k + 1) * n);
+            kern.forward_step(
+                grid[lo + k],
+                grid[lo + k + 1],
+                &prev[k * n..],
+                &self.dw[k * n..(k + 1) * n],
+                &mut next[..n],
+            );
+        }
+    }
+}
+
+fn integrate_state_only_batch<S: BatchSdeVjp + ?Sized>(
+    kern: &mut BatchStepKernel<'_, S>,
+    grid: &[f64],
+    lo: usize,
+    hi: usize,
+    z_lo: &[f64],
+    bm: &mut BatchBrownian<Noise>,
+    z_out: &mut [f64],
+) {
+    let n = z_lo.len();
+    let mut z = z_lo.to_vec();
+    let mut zn = vec![0.0; n];
+    let mut dw = vec![0.0; n];
+    bm.begin_sweep(grid[lo]);
+    for k in lo..hi {
+        bm.sweep_increments(grid[k + 1], &mut dw);
+        kern.forward_step(grid[k], grid[k + 1], &z, &dw, &mut zn);
+        std::mem::swap(&mut z, &mut zn);
+    }
+    z_out.copy_from_slice(&z);
+}
+
+/// Per-path rows of everything the scalar checkpointed driver reports.
+pub(crate) struct BatchCheckpointOutput {
+    /// Terminal states `[B×d]`.
+    pub z_terminal: Vec<f64>,
+    /// `∂(Σ_i z_T^{(i,b)})/∂z_0` per path, `[B×d]`.
+    pub grad_z0: Vec<f64>,
+    /// `∂(Σ_i z_T^{(i,b)})/∂θ` per path, `[B×p]`.
+    pub grad_theta: Vec<f64>,
+    /// Realized `W_b(t1)` per path, `[B×d]`.
+    pub w_terminal: Vec<f64>,
+    /// Per-path solve statistics (uniform across the batch).
+    pub forward_stats: SolveStats,
+    pub backward_stats: SolveStats,
+    /// Peak live tape/checkpoint f64s per path.
+    pub peak_tape_f64s: usize,
+    /// Replay/recompute evaluations per path (beyond the first pass).
+    pub recompute_nfe: u64,
+}
+
+/// Batched checkpointed backprop for the summed per-path loss
+/// `L_b = Σ_i z_T^{(i,b)}` — the chunk engine behind
+/// [`crate::api::sensitivity_batch`] with `SensAlg::Backprop`. `z0` is
+/// `[B×d]`; `noise` carries one replayable source per path.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn batch_checkpoint_backprop_core<S: BatchSdeVjp + ?Sized>(
+    sde: &S,
+    theta: &[f64],
+    z0: &[f64],
+    t0: f64,
+    t1: f64,
+    n_steps: usize,
+    noise: &mut BatchBrownian<Noise>,
+    method: Method,
+    checkpointing: Checkpointing,
+) -> BatchCheckpointOutput {
+    let d = sde.state_dim();
+    let p = sde.param_dim();
+    let batch = noise.batch();
+    assert_eq!(z0.len(), batch * d, "batch_checkpoint_backprop_core: z0 layout mismatch");
+    let n = batch * d;
+    let grid = uniform_grid(t0, t1, n_steps);
+    let schedule = checkpointing.schedule(n_steps);
+    let mut kern = BatchStepKernel::new(sde, theta, method, batch);
+    let mut meter = MemMeter::default(); // per-path units
+
+    let (z_t, ckpts, bnds);
+    if schedule.is_tape() {
+        let mut tape = BatchLeafTape::new(n, n_steps);
+        meter.alloc(tape.f64s_per_path(batch));
+        tape.record_forward(&mut kern, &grid, 0, z0, noise);
+        let forward_stats = SolveStats {
+            steps: n_steps as u64,
+            rejected: 0,
+            nfe_drift: kern.nfe_f,
+            nfe_diffusion: kern.nfe_g,
+        };
+        let z_term = tape.state(n_steps).to_vec();
+        let mut w_terminal = vec![0.0; n];
+        noise.sample_all(t1, &mut w_terminal);
+
+        let mut a = vec![1.0; n]; // ∂(Σ z_T)/∂z_T per path
+        let mut a_new = vec![0.0; n];
+        let mut grad_theta = vec![0.0; batch * p];
+        for k in (0..n_steps).rev() {
+            kern.backward_step(
+                grid[k],
+                grid[k + 1],
+                tape.state(k),
+                tape.dw(k),
+                &a,
+                &mut a_new,
+                &mut grad_theta,
+            );
+            std::mem::swap(&mut a, &mut a_new);
+        }
+        return BatchCheckpointOutput {
+            z_terminal: z_term,
+            grad_z0: a,
+            grad_theta,
+            w_terminal,
+            forward_stats,
+            backward_stats: SolveStats {
+                steps: n_steps as u64,
+                rejected: 0,
+                nfe_drift: kern.bnf,
+                nfe_diffusion: kern.bng,
+            },
+            peak_tape_f64s: meter.peak,
+            recompute_nfe: 0,
+        };
+    } else {
+        bnds = schedule.boundaries().to_vec();
+        let nseg = bnds.len() - 1;
+        let mut ck = vec![0.0; nseg * n];
+        meter.alloc(nseg * d);
+        let mut z = z0.to_vec();
+        let mut zn = vec![0.0; n];
+        let mut dw = vec![0.0; n];
+        let mut seg = 0usize;
+        noise.begin_sweep(grid[0]);
+        for k in 0..n_steps {
+            if seg < nseg && k == bnds[seg] {
+                ck[seg * n..(seg + 1) * n].copy_from_slice(&z);
+                seg += 1;
+            }
+            noise.sweep_increments(grid[k + 1], &mut dw);
+            kern.forward_step(grid[k], grid[k + 1], &z, &dw, &mut zn);
+            std::mem::swap(&mut z, &mut zn);
+        }
+        z_t = z;
+        ckpts = ck;
+    }
+    let forward_stats = SolveStats {
+        steps: n_steps as u64,
+        rejected: 0,
+        nfe_drift: kern.nfe_f,
+        nfe_diffusion: kern.nfe_g,
+    };
+    let (rf0, rg0) = (kern.nfe_f, kern.nfe_g);
+    let mut w_terminal = vec![0.0; n];
+    noise.sample_all(t1, &mut w_terminal);
+
+    let mut a = vec![1.0; n];
+    let mut a_new = vec![0.0; n];
+    let mut grad_theta = vec![0.0; batch * p];
+    let nseg = bnds.len() - 1;
+    for j in (0..nseg).rev() {
+        backward_span_batch(
+            &mut kern,
+            &grid,
+            bnds[j],
+            bnds[j + 1],
+            &ckpts[j * n..(j + 1) * n],
+            schedule.leaf_cap(),
+            noise,
+            &mut a,
+            &mut a_new,
+            &mut grad_theta,
+            &mut meter,
+            batch,
+        );
+    }
+    let recompute_nfe = (kern.nfe_f - rf0) + (kern.nfe_g - rg0);
+
+    BatchCheckpointOutput {
+        z_terminal: z_t,
+        grad_z0: a,
+        grad_theta,
+        w_terminal,
+        forward_stats,
+        backward_stats: SolveStats {
+            steps: n_steps as u64,
+            rejected: 0,
+            nfe_drift: kern.bnf,
+            nfe_diffusion: kern.bng,
+        },
+        peak_tape_f64s: meter.peak,
+        recompute_nfe,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn backward_span_batch<S: BatchSdeVjp + ?Sized>(
+    kern: &mut BatchStepKernel<'_, S>,
+    grid: &[f64],
+    lo: usize,
+    hi: usize,
+    z_lo: &[f64],
+    leaf_cap: usize,
+    noise: &mut BatchBrownian<Noise>,
+    a: &mut Vec<f64>,
+    a_new: &mut Vec<f64>,
+    grad_theta: &mut [f64],
+    meter: &mut MemMeter,
+    batch: usize,
+) {
+    let n = z_lo.len();
+    let d = n / batch;
+    let len = hi - lo;
+    if len <= leaf_cap {
+        let mut tape = BatchLeafTape::new(n, len);
+        let units = tape.f64s_per_path(batch);
+        meter.alloc(units);
+        tape.record_forward(kern, grid, lo, z_lo, noise);
+        for k in (0..len).rev() {
+            kern.backward_step(
+                grid[lo + k],
+                grid[lo + k + 1],
+                tape.state(k),
+                tape.dw(k),
+                a,
+                a_new,
+                grad_theta,
+            );
+            std::mem::swap(a, a_new);
+        }
+        meter.free(units);
+    } else {
+        let mid = lo + len / 2;
+        let mut z_mid = vec![0.0; n];
+        meter.alloc(d);
+        integrate_state_only_batch(kern, grid, lo, mid, z_lo, noise, &mut z_mid);
+        backward_span_batch(
+            kern, grid, mid, hi, &z_mid, leaf_cap, noise, a, a_new, grad_theta, meter, batch,
+        );
+        drop(z_mid);
+        meter.free(d);
+        backward_span_batch(
+            kern, grid, lo, mid, z_lo, leaf_cap, noise, a, a_new, grad_theta, meter, batch,
+        );
+    }
+}

@@ -1,0 +1,251 @@
+//! The checkpointed-backprop driver: walks a [`Schedule`]'s segments in
+//! reverse, re-integrating each from its stored checkpoint (bisecting
+//! long segments recursively), materializing leaf tapes, and chaining
+//! the adjoint across boundaries with the shared [`StepKernel`].
+//!
+//! With the `Tape` schedule the driver degenerates to the classic
+//! full-tape backprop: the first forward pass records the whole
+//! trajectory and nothing is recomputed. For every other schedule the
+//! *step order of the backward walk is identical* (steps are processed
+//! in strictly descending grid order, each via the same kernel call on
+//! the same `(t, z, ΔW)` triple), so gradients — including the order of
+//! `grad_theta` accumulations — are exact-f64-identical to the tape.
+
+use super::replay::{integrate_state_only, LeafTape, StepKernel};
+use super::schedule::Checkpointing;
+use crate::adjoint::stochastic::{GradientOutput, Noise, NoiseMode};
+use crate::brownian::BrownianMotion;
+use crate::prng::PrngKey;
+use crate::sde::SdeVjp;
+use crate::solvers::{uniform_grid, SolveStats};
+
+/// Running peak of live tape/checkpoint f64s. Counts checkpoint states,
+/// bisection-stack midpoint states, and materialized leaf tapes; the
+/// O(d) working buffers and the noise source's own cache are excluded
+/// (the latter is reported separately via `noise_memory`).
+#[derive(Default)]
+pub(crate) struct MemMeter {
+    live: usize,
+    pub peak: usize,
+}
+
+impl MemMeter {
+    pub fn alloc(&mut self, n: usize) {
+        self.live += n;
+        self.peak = self.peak.max(self.live);
+    }
+    pub fn free(&mut self, n: usize) {
+        self.live -= n;
+    }
+}
+
+/// Checkpointed backprop-through-the-solver engine behind
+/// [`crate::api::SensAlg::Backprop`]. Supports every replayable in-tree
+/// noise source (stored path, virtual tree, mirrored either way) and the
+/// EM / Milstein-Itô / Heun schemes. `checkpointing` selects the
+/// memory/recompute tradeoff; results are identical for every choice.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn checkpointed_backprop_core<S, F>(
+    sde: &S,
+    theta: &[f64],
+    z0: &[f64],
+    t0: f64,
+    t1: f64,
+    n_steps: usize,
+    key: PrngKey,
+    method: crate::solvers::Method,
+    noise_mode: NoiseMode,
+    mirror: bool,
+    checkpointing: Checkpointing,
+    loss_grad: F,
+) -> GradientOutput
+where
+    S: SdeVjp + ?Sized,
+    F: FnOnce(&[f64]) -> Vec<f64>,
+{
+    let d = sde.state_dim();
+    let p = sde.param_dim();
+    let grid = uniform_grid(t0, t1, n_steps);
+    let schedule = checkpointing.schedule(n_steps);
+    let mut noise = Noise::new(noise_mode, key, d, t0, t1, mirror);
+    let mut kern = StepKernel::new(sde, theta, method);
+    let mut meter = MemMeter::default();
+
+    if schedule.is_tape() {
+        // ---- Classic full tape: record everything on the first pass. --
+        let mut tape = LeafTape::new(d, n_steps);
+        meter.alloc(tape.f64s());
+        tape.record_forward(&mut kern, &grid, 0, z0, &mut noise);
+        let forward_stats = SolveStats {
+            steps: n_steps as u64,
+            rejected: 0,
+            nfe_drift: kern.nfe_f,
+            nfe_diffusion: kern.nfe_g,
+        };
+        let z_t = tape.state(n_steps).to_vec();
+        let w_terminal = noise.sample(t1);
+
+        let mut a = loss_grad(&z_t);
+        assert_eq!(a.len(), d, "loss gradient has wrong dimension");
+        let mut a_new = vec![0.0; d];
+        let mut grad_theta = vec![0.0; p];
+        for k in (0..n_steps).rev() {
+            kern.backward_step(
+                grid[k],
+                grid[k + 1],
+                tape.state(k),
+                tape.dw(k),
+                &a,
+                &mut a_new,
+                &mut grad_theta,
+            );
+            std::mem::swap(&mut a, &mut a_new);
+        }
+        return GradientOutput {
+            z_terminal: z_t,
+            grad_z0: a,
+            grad_theta,
+            z0_reconstructed: z0.to_vec(), // tape holds z0 exactly
+            forward_stats,
+            backward_stats: SolveStats {
+                steps: n_steps as u64,
+                rejected: 0,
+                nfe_drift: kern.bnf,
+                nfe_diffusion: kern.bng,
+            },
+            // Tape: (L+1)·d states + L·d increments + stored noise.
+            noise_memory: meter.peak + noise.memory_footprint(),
+            peak_tape_bytes: meter.peak * 8,
+            recompute_nfe: 0,
+            w_terminal,
+        };
+    }
+
+    // ---- First pass: state-only, checkpoint each segment start. -------
+    let bnds = schedule.boundaries().to_vec();
+    let nseg = bnds.len() - 1;
+    let mut ckpts = vec![0.0; nseg * d];
+    meter.alloc(nseg * d);
+    let z_t = {
+        let mut z = z0.to_vec();
+        let mut zn = vec![0.0; d];
+        let mut wa = vec![0.0; d];
+        let mut wb = vec![0.0; d];
+        let mut dw = vec![0.0; d];
+        let mut seg = 0usize;
+        noise.sample_into(grid[0], &mut wa);
+        for k in 0..n_steps {
+            if seg < nseg && k == bnds[seg] {
+                ckpts[seg * d..(seg + 1) * d].copy_from_slice(&z);
+                seg += 1;
+            }
+            noise.sample_into(grid[k + 1], &mut wb);
+            for i in 0..d {
+                dw[i] = wb[i] - wa[i];
+            }
+            kern.forward_step(grid[k], grid[k + 1], &z, &dw, &mut zn);
+            std::mem::swap(&mut z, &mut zn);
+            wa.copy_from_slice(&wb);
+        }
+        z
+    };
+    let forward_stats = SolveStats {
+        steps: n_steps as u64,
+        rejected: 0,
+        nfe_drift: kern.nfe_f,
+        nfe_diffusion: kern.nfe_g,
+    };
+    let (rf0, rg0) = (kern.nfe_f, kern.nfe_g);
+    let w_terminal = noise.sample(t1);
+
+    // ---- Backward: segments in reverse, recursing inside each. --------
+    let mut a = loss_grad(&z_t);
+    assert_eq!(a.len(), d, "loss gradient has wrong dimension");
+    let mut a_new = vec![0.0; d];
+    let mut grad_theta = vec![0.0; p];
+    for j in (0..nseg).rev() {
+        backward_span(
+            &mut kern,
+            &grid,
+            bnds[j],
+            bnds[j + 1],
+            &ckpts[j * d..(j + 1) * d],
+            schedule.leaf_cap(),
+            &mut noise,
+            &mut a,
+            &mut a_new,
+            &mut grad_theta,
+            &mut meter,
+        );
+    }
+    let recompute_nfe = (kern.nfe_f - rf0) + (kern.nfe_g - rg0);
+
+    GradientOutput {
+        z_terminal: z_t,
+        grad_z0: a,
+        grad_theta,
+        z0_reconstructed: z0.to_vec(), // first checkpoint holds z0 exactly
+        forward_stats,
+        backward_stats: SolveStats {
+            steps: n_steps as u64,
+            rejected: 0,
+            nfe_drift: kern.bnf,
+            nfe_diffusion: kern.bng,
+        },
+        noise_memory: meter.peak + noise.memory_footprint(),
+        peak_tape_bytes: meter.peak * 8,
+        recompute_nfe,
+        w_terminal,
+    }
+}
+
+/// Walk `grid[lo]..grid[hi]` backward given the state at `lo`. Leaves
+/// (≤ `leaf_cap` steps) replay into a local tape and sweep it; longer
+/// spans bisect, integrating state-only to the midpoint and processing
+/// the right half first (keeping the global backward order strictly
+/// descending in step index), then releasing the midpoint and recursing
+/// left.
+#[allow(clippy::too_many_arguments)]
+fn backward_span<S: SdeVjp + ?Sized>(
+    kern: &mut StepKernel<'_, S>,
+    grid: &[f64],
+    lo: usize,
+    hi: usize,
+    z_lo: &[f64],
+    leaf_cap: usize,
+    noise: &mut Noise,
+    a: &mut Vec<f64>,
+    a_new: &mut Vec<f64>,
+    grad_theta: &mut [f64],
+    meter: &mut MemMeter,
+) {
+    let d = z_lo.len();
+    let len = hi - lo;
+    if len <= leaf_cap {
+        let mut tape = LeafTape::new(d, len);
+        meter.alloc(tape.f64s());
+        tape.record_forward(kern, grid, lo, z_lo, noise);
+        for k in (0..len).rev() {
+            kern.backward_step(
+                grid[lo + k],
+                grid[lo + k + 1],
+                tape.state(k),
+                tape.dw(k),
+                a,
+                a_new,
+                grad_theta,
+            );
+            std::mem::swap(a, a_new);
+        }
+        meter.free(tape.f64s());
+    } else {
+        let mid = lo + len / 2;
+        let mut z_mid = vec![0.0; d];
+        meter.alloc(d);
+        integrate_state_only(kern, grid, lo, mid, z_lo, noise, &mut z_mid);
+        backward_span(kern, grid, mid, hi, &z_mid, leaf_cap, noise, a, a_new, grad_theta, meter);
+        drop(z_mid);
+        meter.free(d);
+        backward_span(kern, grid, lo, mid, z_lo, leaf_cap, noise, a, a_new, grad_theta, meter);
+    }
+}

@@ -1,0 +1,40 @@
+//! Constant-memory checkpointed backprop-through-the-solver.
+//!
+//! The classic taped backprop ([`super::backprop`]) stores the full
+//! trajectory and every Brownian increment — O(steps) memory, which caps
+//! the horizon long before the paper's 10⁶-step regime. This subsystem
+//! removes the cap without changing a single output bit:
+//!
+//! * `schedule` — checkpoint plans over the fixed grid: the full
+//!   [`Checkpointing::Tape`] (default, backward-compatible), the √n flat
+//!   plan, recursive-bisection O(log n), and an explicit
+//!   [`Checkpointing::Budget`] cap on live steps.
+//! * `replay` — segment replay: any `[t_i, t_j]` span is
+//!   re-integrated forward from its stored checkpoint, drawing noise
+//!   from the original source. Replay is bit-identical to the first
+//!   pass for *every* in-tree source: `BrownianPath` caches each
+//!   queried time, [`crate::brownian::VirtualBrownianTree`] is a pure
+//!   function of `(key, t)` (the paper's "memory-efficient algorithm
+//!   for caching noise"), and mirroring is a deterministic negation —
+//!   which is also why the taped family no longer rejects tree/mirror
+//!   noise specs.
+//! * `driver` — walks segments in reverse, materializes each
+//!   leaf's local tape, runs the shared per-step VJP kernel, and chains
+//!   the adjoint across boundaries in strictly descending step order —
+//!   so gradients (including `grad_theta` accumulation order) are
+//!   **exact-f64-identical** to the full tape for every scheme
+//!   (EM/Milstein-Itô/Heun) and every budget.
+//!
+//! Select via [`crate::api::SensAlg::Backprop`]`{ method, checkpointing }`;
+//! `Gradients.stats` reports the measured `peak_tape_bytes` and
+//! `recompute_nfe` so the memory/recompute tradeoff is observable.
+
+mod batch;
+mod driver;
+mod replay;
+mod schedule;
+
+pub use schedule::{Checkpointing, Schedule};
+
+pub(crate) use batch::batch_checkpoint_backprop_core;
+pub(crate) use driver::checkpointed_backprop_core;

@@ -1,0 +1,341 @@
+//! Segment replay: the shared forward/backward step kernel and the local
+//! tape a leaf segment is materialized into.
+//!
+//! Both the classic full-tape backprop and every checkpointed schedule
+//! run the *same* [`StepKernel`] functions over the *same* grid times and
+//! the *same* Brownian increments (every in-tree noise source replays
+//! bit-identically: `BrownianPath` caches each queried time, the virtual
+//! tree is a pure function of `(key, t)`, and mirroring is a
+//! deterministic negation). Gradients are therefore exact-f64-identical
+//! across schedules by construction — the schedule only changes when a
+//! step's inputs are recomputed, never what is computed.
+
+use crate::brownian::BrownianMotion;
+use crate::sde::{Calculus, SdeVjp};
+use crate::solvers::Method;
+
+/// Forward/backward step kernel for the taped family (EM, Milstein-Itô,
+/// Heun), with scratch buffers and NFE counters.
+///
+/// Expressions are kept bitwise-identical to the historical
+/// `backprop_core` (EM/Milstein) and to `Stepper` (Heun), so swapping the
+/// engine underneath `SensAlg::Backprop` changes no result.
+pub(crate) struct StepKernel<'a, S: SdeVjp + ?Sized> {
+    sde: &'a S,
+    theta: &'a [f64],
+    method: Method,
+    d: usize,
+    // forward scratch
+    b: Vec<f64>,
+    sig: Vec<f64>,
+    sigp: Vec<f64>,
+    b1: Vec<f64>,
+    sig1: Vec<f64>,
+    zp: Vec<f64>,
+    // backward scratch
+    weighted: Vec<f64>,
+    v1: Vec<f64>,
+    scr: Vec<f64>,
+    /// Forward drift / diffusion evaluations (first pass + replays).
+    pub nfe_f: u64,
+    pub nfe_g: u64,
+    /// Backward (VJP-side) evaluation counters, in historical units:
+    /// one per drift-side and one per diffusion-side visit of a step.
+    pub bnf: u64,
+    pub bng: u64,
+}
+
+impl<'a, S: SdeVjp + ?Sized> StepKernel<'a, S> {
+    pub fn new(sde: &'a S, theta: &'a [f64], method: Method) -> Self {
+        assert!(
+            matches!(method, Method::EulerMaruyama | Method::MilsteinIto | Method::Heun),
+            "backprop kernel supports Euler-Maruyama, Milstein (Ito) and Heun, got {:?}",
+            method
+        );
+        if !matches!(method, Method::Heun) {
+            assert!(
+                matches!(sde.calculus(), Calculus::Ito),
+                "Euler/Milstein backprop differentiates the Ito discretization; \
+                 system is Stratonovich-native"
+            );
+        }
+        let d = sde.state_dim();
+        StepKernel {
+            sde,
+            theta,
+            method,
+            d,
+            b: vec![0.0; d],
+            sig: vec![0.0; d],
+            sigp: vec![0.0; d],
+            b1: vec![0.0; d],
+            sig1: vec![0.0; d],
+            zp: vec![0.0; d],
+            weighted: vec![0.0; d],
+            v1: vec![0.0; d],
+            scr: vec![0.0; 2 * d],
+            nfe_f: 0,
+            nfe_g: 0,
+            bnf: 0,
+            bng: 0,
+        }
+    }
+
+    pub fn state_dim(&self) -> usize {
+        self.d
+    }
+
+    /// One forward step of the discrete map: `z` at `t` → `zn` at `tn`
+    /// under increment `dw`.
+    pub fn forward_step(&mut self, t: f64, tn: f64, z: &[f64], dw: &[f64], zn: &mut [f64]) {
+        let h = tn - t;
+        match self.method {
+            Method::EulerMaruyama => {
+                self.sde.drift(t, z, self.theta, &mut self.b);
+                self.sde.diffusion(t, z, self.theta, &mut self.sig);
+                self.nfe_f += 1;
+                self.nfe_g += 1;
+                for i in 0..self.d {
+                    zn[i] = z[i] + self.b[i] * h + self.sig[i] * dw[i];
+                }
+            }
+            Method::MilsteinIto => {
+                self.sde.drift(t, z, self.theta, &mut self.b);
+                self.sde.diffusion(t, z, self.theta, &mut self.sig);
+                self.sde.diffusion_dz_diag(t, z, self.theta, &mut self.sigp);
+                self.nfe_f += 1;
+                self.nfe_g += 1;
+                for i in 0..self.d {
+                    zn[i] = z[i]
+                        + self.b[i] * h
+                        + self.sig[i] * dw[i]
+                        + 0.5 * self.sig[i] * self.sigp[i] * (dw[i] * dw[i] - h);
+                }
+            }
+            Method::Heun => {
+                // Predictor at (t, z), corrector averaging with (tn, zp);
+                // drift in Stratonovich form, matching `Stepper`.
+                self.sde.drift_stratonovich(t, z, self.theta, &mut self.b, &mut self.scr);
+                self.sde.diffusion(t, z, self.theta, &mut self.sig);
+                self.nfe_f += 1;
+                self.nfe_g += 1;
+                for i in 0..self.d {
+                    self.zp[i] = z[i] + self.b[i] * h + self.sig[i] * dw[i];
+                }
+                self.sde.drift_stratonovich(tn, &self.zp, self.theta, &mut self.b1, &mut self.scr);
+                self.sde.diffusion(tn, &self.zp, self.theta, &mut self.sig1);
+                self.nfe_f += 1;
+                self.nfe_g += 1;
+                for i in 0..self.d {
+                    zn[i] = z[i]
+                        + 0.5 * (self.b[i] + self.b1[i]) * h
+                        + 0.5 * (self.sig[i] + self.sig1[i]) * dw[i];
+                }
+            }
+            _ => unreachable!("validated in StepKernel::new"),
+        }
+    }
+
+    /// One backward (VJP) step: pulls the adjoint `a` at `tn` back to
+    /// `a_new` at `t` through the step's discrete map, accumulating the
+    /// parameter gradient into `grad_theta`. `z` is the taped state at
+    /// `t`, `dw` the taped increment.
+    pub fn backward_step(
+        &mut self,
+        t: f64,
+        tn: f64,
+        z: &[f64],
+        dw: &[f64],
+        a: &[f64],
+        a_new: &mut [f64],
+        grad_theta: &mut [f64],
+    ) {
+        let h = tn - t;
+        match self.method {
+            Method::EulerMaruyama | Method::MilsteinIto => {
+                a_new.copy_from_slice(a);
+                for i in 0..self.d {
+                    self.weighted[i] = a[i] * h;
+                }
+                self.sde.drift_vjp(t, z, self.theta, &self.weighted, a_new, grad_theta);
+                for i in 0..self.d {
+                    self.weighted[i] = a[i] * dw[i];
+                }
+                self.sde.diffusion_vjp(t, z, self.theta, &self.weighted, a_new, grad_theta);
+                if matches!(self.method, Method::MilsteinIto) {
+                    for i in 0..self.d {
+                        self.weighted[i] = a[i] * (dw[i] * dw[i] - h);
+                    }
+                    self.sde.ito_correction_vjp(
+                        t,
+                        z,
+                        self.theta,
+                        &self.weighted,
+                        a_new,
+                        grad_theta,
+                    );
+                }
+                self.bnf += 1;
+                self.bng += 1;
+            }
+            Method::Heun => {
+                // Recompute the predictor state from the taped (z, dw).
+                self.sde.drift_stratonovich(t, z, self.theta, &mut self.b, &mut self.scr);
+                self.sde.diffusion(t, z, self.theta, &mut self.sig);
+                for i in 0..self.d {
+                    self.zp[i] = z[i] + self.b[i] * h + self.sig[i] * dw[i];
+                }
+                // u := adjoint on zp, from the corrector's (tn, zp) half.
+                self.v1.fill(0.0);
+                for i in 0..self.d {
+                    self.weighted[i] = 0.5 * h * a[i];
+                }
+                self.sde.drift_vjp_stratonovich(
+                    tn,
+                    &self.zp,
+                    self.theta,
+                    &self.weighted,
+                    &mut self.v1,
+                    grad_theta,
+                    &mut self.scr,
+                );
+                for i in 0..self.d {
+                    self.weighted[i] = 0.5 * dw[i] * a[i];
+                }
+                self.sde.diffusion_vjp(
+                    tn,
+                    &self.zp,
+                    self.theta,
+                    &self.weighted,
+                    &mut self.v1,
+                    grad_theta,
+                );
+                // Pull everything back through the (t, z) stage: the
+                // direct corrector half plus u through the predictor.
+                for i in 0..self.d {
+                    a_new[i] = a[i] + self.v1[i];
+                }
+                for i in 0..self.d {
+                    self.weighted[i] = 0.5 * h * a[i] + h * self.v1[i];
+                }
+                self.sde.drift_vjp_stratonovich(
+                    t,
+                    z,
+                    self.theta,
+                    &self.weighted,
+                    a_new,
+                    grad_theta,
+                    &mut self.scr,
+                );
+                for i in 0..self.d {
+                    self.weighted[i] = 0.5 * dw[i] * a[i] + dw[i] * self.v1[i];
+                }
+                self.sde.diffusion_vjp(t, z, self.theta, &self.weighted, a_new, grad_theta);
+                self.bnf += 3;
+                self.bng += 3;
+            }
+            _ => unreachable!("validated in StepKernel::new"),
+        }
+    }
+}
+
+/// Local tape of one segment: `len+1` states and `len` increments, plus
+/// the rolling noise-sample buffers used while recording.
+pub(crate) struct LeafTape {
+    d: usize,
+    len: usize,
+    z: Vec<f64>,
+    dw: Vec<f64>,
+    wa: Vec<f64>,
+    wb: Vec<f64>,
+}
+
+impl LeafTape {
+    pub fn new(d: usize, len: usize) -> Self {
+        LeafTape {
+            d,
+            len,
+            z: vec![0.0; (len + 1) * d],
+            dw: vec![0.0; len * d],
+            wa: vec![0.0; d],
+            wb: vec![0.0; d],
+        }
+    }
+
+    /// Tape size in f64s (states + increments; the O(d) noise buffers are
+    /// working memory, not tape).
+    pub fn f64s(&self) -> usize {
+        self.z.len() + self.dw.len()
+    }
+
+    pub fn state(&self, k: usize) -> &[f64] {
+        &self.z[k * self.d..(k + 1) * self.d]
+    }
+
+    pub fn dw(&self, k: usize) -> &[f64] {
+        &self.dw[k * self.d..(k + 1) * self.d]
+    }
+
+    /// Integrate `grid[lo]..grid[hi]` forward from `z_lo`, recording
+    /// every state and increment. Queries noise at the exact grid times
+    /// in ascending order, so a replay over a cached path re-reads the
+    /// first pass's values bit-for-bit.
+    pub fn record_forward<S: SdeVjp + ?Sized, B: BrownianMotion + ?Sized>(
+        &mut self,
+        kern: &mut StepKernel<'_, S>,
+        grid: &[f64],
+        lo: usize,
+        z_lo: &[f64],
+        noise: &mut B,
+    ) {
+        let d = self.d;
+        self.z[..d].copy_from_slice(z_lo);
+        noise.sample_into(grid[lo], &mut self.wa);
+        for k in 0..self.len {
+            noise.sample_into(grid[lo + k + 1], &mut self.wb);
+            for i in 0..d {
+                self.dw[k * d + i] = self.wb[i] - self.wa[i];
+            }
+            let (prev, next) = self.z.split_at_mut((k + 1) * d);
+            kern.forward_step(
+                grid[lo + k],
+                grid[lo + k + 1],
+                &prev[k * d..],
+                &self.dw[k * d..(k + 1) * d],
+                &mut next[..d],
+            );
+            self.wa.copy_from_slice(&self.wb);
+        }
+    }
+}
+
+/// Integrate `grid[lo]..grid[hi]` forward from `z_lo`, keeping only the
+/// final state (written into `z_out`). Used to reach a bisection midpoint
+/// without taping the left half.
+pub(crate) fn integrate_state_only<S: SdeVjp + ?Sized, B: BrownianMotion + ?Sized>(
+    kern: &mut StepKernel<'_, S>,
+    grid: &[f64],
+    lo: usize,
+    hi: usize,
+    z_lo: &[f64],
+    noise: &mut B,
+    z_out: &mut [f64],
+) {
+    let d = z_lo.len();
+    let mut z = z_lo.to_vec();
+    let mut zn = vec![0.0; d];
+    let mut wa = vec![0.0; d];
+    let mut wb = vec![0.0; d];
+    let mut dw = vec![0.0; d];
+    noise.sample_into(grid[lo], &mut wa);
+    for k in lo..hi {
+        noise.sample_into(grid[k + 1], &mut wb);
+        for i in 0..d {
+            dw[i] = wb[i] - wa[i];
+        }
+        kern.forward_step(grid[k], grid[k + 1], &z, &dw, &mut zn);
+        std::mem::swap(&mut z, &mut zn);
+        wa.copy_from_slice(&wb);
+    }
+    z_out.copy_from_slice(&z);
+}

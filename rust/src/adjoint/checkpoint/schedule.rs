@@ -1,0 +1,337 @@
+//! Checkpoint schedules: how a fixed grid of `n` solver steps is split
+//! into segments for the recomputation-based backward pass.
+//!
+//! A [`Schedule`] has two knobs:
+//!
+//! * `boundaries` — the top-level segment edges. The forward pass stores
+//!   the state at every segment *start* (the checkpoints); the backward
+//!   pass walks segments in reverse, re-integrating each one from its
+//!   checkpoint.
+//! * `leaf_cap` — the longest span the backward pass may materialize as a
+//!   local tape. Segments longer than `leaf_cap` are bisected
+//!   recursively (storing the midpoint state while the right half is
+//!   processed), so a single long segment costs `O(log len)` live states
+//!   and `O(len · log len)` recomputation instead of `O(len)` memory.
+//!
+//! The presets trade memory for recomputation (`n` steps, state dim `d`,
+//! all counts in "live steps" — one step ≈ one state + one increment):
+//!
+//! | preset | live peak | extra forward steps |
+//! |---|---|---|
+//! | [`Schedule::tape`] | `n` | 0 |
+//! | [`Schedule::sqrt`] | `~2·√n` | `n` |
+//! | [`Schedule::log`] | `~log₂(n)` | `~n·log₂(n)` |
+//! | [`Schedule::budget`] | `≤ max_live_steps`* | schedule-dependent |
+//!
+//! *Budgets below `~log₂(n)+2` cannot be met by any recursive
+//! single-pass schedule; they degrade gracefully to the `log` preset's
+//! footprint (single-step leaves, bisection stack), which is the
+//! best-effort minimum.
+//!
+//! Every schedule yields **bit-identical gradients** — the schedule only
+//! decides *when* a step's inputs are recomputed, never *what* is
+//! computed (noise replay is exact for every in-tree source; see
+//! [`super::driver`]).
+
+/// Checkpointing policy selected on [`crate::api::SensAlg::Backprop`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Checkpointing {
+    /// Store the full trajectory + increments (the classic backprop tape):
+    /// O(n) memory, zero recomputation. The default — fully
+    /// backward-compatible with the pre-checkpointing engine.
+    #[default]
+    Tape,
+    /// `√n` flat segmentation: `~2√n` live steps, one extra forward pass.
+    Sqrt,
+    /// Recursive bisection down to short leaves: `~log₂(n)` live steps,
+    /// `~log₂(n)` extra forward passes.
+    Log,
+    /// Explicit cap on live steps (checkpoint states + bisection stack +
+    /// materialized leaf tape). Honored exactly whenever
+    /// `max_live_steps ≥ ~log₂(n)+2`; smaller budgets degrade to the
+    /// minimal (log-like) footprint. Gradients are exact for any value,
+    /// including the degenerate `1` and `n`.
+    Budget { max_live_steps: usize },
+}
+
+impl Checkpointing {
+    /// Materialize the concrete plan for an `n_steps`-step grid.
+    pub fn schedule(&self, n_steps: usize) -> Schedule {
+        match *self {
+            Checkpointing::Tape => Schedule::tape(n_steps),
+            Checkpointing::Sqrt => Schedule::sqrt(n_steps),
+            Checkpointing::Log => Schedule::log(n_steps),
+            Checkpointing::Budget { max_live_steps } => {
+                Schedule::budget(n_steps, max_live_steps)
+            }
+        }
+    }
+
+    /// Stable identifier for bench rows and harness output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Checkpointing::Tape => "tape",
+            Checkpointing::Sqrt => "sqrt",
+            Checkpointing::Log => "log",
+            Checkpointing::Budget { .. } => "budget",
+        }
+    }
+}
+
+/// Leaf length of the [`Schedule::log`] preset: small enough that the
+/// live tape is negligible next to the bisection stack, large enough
+/// that leaf bookkeeping does not dominate the backward walk.
+const LOG_LEAF: usize = 16;
+
+/// A concrete checkpoint plan over a fixed grid of `n_steps` steps.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Schedule {
+    n_steps: usize,
+    /// Ascending segment edges; first is `0`, last is `n_steps`.
+    boundaries: Vec<usize>,
+    /// Longest span materialized as a local tape; longer spans bisect.
+    leaf_cap: usize,
+}
+
+impl Schedule {
+    /// Full-tape plan: one segment, never bisected.
+    pub fn tape(n_steps: usize) -> Schedule {
+        assert!(n_steps > 0, "Schedule: need at least one step");
+        Schedule { n_steps, boundaries: vec![0, n_steps], leaf_cap: n_steps }
+    }
+
+    /// `√n` flat plan: segments of `⌈√n⌉` steps, each a single leaf.
+    pub fn sqrt(n_steps: usize) -> Schedule {
+        assert!(n_steps > 0, "Schedule: need at least one step");
+        let c = (n_steps as f64).sqrt().ceil() as usize;
+        let c = c.max(1);
+        Schedule { n_steps, boundaries: flat_boundaries(n_steps, c), leaf_cap: c }
+    }
+
+    /// Logarithmic plan: one segment, bisected down to short leaves.
+    pub fn log(n_steps: usize) -> Schedule {
+        assert!(n_steps > 0, "Schedule: need at least one step");
+        Schedule { n_steps, boundaries: vec![0, n_steps], leaf_cap: LOG_LEAF.min(n_steps) }
+    }
+
+    /// Plan honoring an explicit live-step budget where possible.
+    ///
+    /// Prefers (in order): the full tape when it fits (`n+1 ≤ m`, zero
+    /// recomputation); the flat segmentation minimizing peak live steps
+    /// subject to `⌈n/L⌉ + L ≤ m` (one extra forward pass); otherwise a
+    /// single bisected segment with the leaf shrunk so stack + leaf
+    /// stays within `m` when `m ≥ ~log₂(n)+2`, degrading to single-step
+    /// leaves below that.
+    pub fn budget(n_steps: usize, max_live_steps: usize) -> Schedule {
+        assert!(n_steps > 0, "Schedule: need at least one step");
+        let m = max_live_steps.max(1);
+        if n_steps + 1 <= m {
+            return Schedule::tape(n_steps);
+        }
+        // Flat feasibility: k = ⌈n/L⌉ checkpoints + an L-step leaf tape.
+        let mut best: Option<(usize, usize)> = None; // (peak, L)
+        for l in 1..m {
+            let peak = n_steps.div_ceil(l) + l;
+            let better = match best {
+                None => true,
+                Some((bp, _)) => peak < bp,
+            };
+            if peak <= m && better {
+                best = Some((peak, l));
+            }
+        }
+        if let Some((_, l)) = best {
+            return Schedule {
+                n_steps,
+                boundaries: flat_boundaries(n_steps, l),
+                leaf_cap: l,
+            };
+        }
+        // Recursive fallback: bisection stack costs ~⌈log₂ n⌉ live
+        // states; give whatever remains of the budget to the leaf.
+        let stack = ceil_log2(n_steps) + 1;
+        let leaf = m.saturating_sub(stack).max(1);
+        Schedule { n_steps, boundaries: vec![0, n_steps], leaf_cap: leaf }
+    }
+
+    /// Number of solver steps the plan covers.
+    pub fn n_steps(&self) -> usize {
+        self.n_steps
+    }
+
+    /// Ascending segment edges (`boundaries[0] == 0`, last `== n_steps`).
+    pub fn boundaries(&self) -> &[usize] {
+        &self.boundaries
+    }
+
+    /// Longest span materialized as a local tape.
+    pub fn leaf_cap(&self) -> usize {
+        self.leaf_cap
+    }
+
+    /// True when the plan is the classic full tape (single never-bisected
+    /// segment): the driver then tapes during the first forward pass and
+    /// recomputes nothing.
+    pub fn is_tape(&self) -> bool {
+        self.boundaries.len() == 2 && self.leaf_cap >= self.n_steps
+    }
+
+    /// Analytic peak of live steps (checkpoint states + bisection stack +
+    /// leaf tape), in step units. The driver's byte-level meter agrees
+    /// with this up to the `+1` state per materialized leaf.
+    pub fn max_live_steps(&self) -> usize {
+        let ckpts = self.boundaries.len() - 1;
+        let seg_peak = self
+            .boundaries
+            .windows(2)
+            .map(|w| span_live(w[1] - w[0], self.leaf_cap))
+            .max()
+            .unwrap_or(0);
+        ckpts + seg_peak
+    }
+
+    /// Total forward steps integrated beyond the first pass (the
+    /// recomputation cost of the plan, in steps).
+    pub fn recompute_steps(&self) -> usize {
+        if self.is_tape() {
+            return 0;
+        }
+        self.boundaries.windows(2).map(|w| span_recompute(w[1] - w[0], self.leaf_cap)).sum()
+    }
+}
+
+/// Segment edges `0, c, 2c, …, n` (last segment possibly shorter).
+fn flat_boundaries(n: usize, c: usize) -> Vec<usize> {
+    let mut b: Vec<usize> = (0..n).step_by(c).collect();
+    b.push(n);
+    b
+}
+
+/// Live steps while walking one span backward: a leaf holds its whole
+/// tape; a bisected span holds the midpoint state while the right half
+/// is processed, then releases it for the left half.
+fn span_live(len: usize, cap: usize) -> usize {
+    if len <= cap {
+        len
+    } else {
+        let left = len / 2;
+        let right = len - left;
+        (1 + span_live(right, cap)).max(span_live(left, cap))
+    }
+}
+
+/// Forward steps re-integrated while walking one span backward (the span
+/// itself was already integrated once by the caller / first pass).
+fn span_recompute(len: usize, cap: usize) -> usize {
+    if len <= cap {
+        len // one replay into the leaf tape
+    } else {
+        let left = len / 2;
+        let right = len - left;
+        // state-only lo→mid walk, then both halves recurse.
+        left + span_recompute(right, cap) + span_recompute(left, cap)
+    }
+}
+
+/// `⌈log₂ n⌉` for `n ≥ 1`.
+fn ceil_log2(n: usize) -> usize {
+    if n <= 1 {
+        0
+    } else {
+        (usize::BITS - (n - 1).leading_zeros()) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tape_is_single_uncut_segment() {
+        let s = Schedule::tape(1000);
+        assert!(s.is_tape());
+        assert_eq!(s.boundaries(), &[0, 1000]);
+        assert_eq!(s.max_live_steps(), 1001);
+        assert_eq!(s.recompute_steps(), 0);
+    }
+
+    #[test]
+    fn sqrt_peak_scales_as_root_n() {
+        for &n in &[16usize, 256, 4096, 65536] {
+            let s = Schedule::sqrt(n);
+            assert!(!s.is_tape());
+            let root = (n as f64).sqrt();
+            let peak = s.max_live_steps() as f64;
+            assert!(peak <= 2.0 * root + 2.0, "n={n}: peak {peak} vs 2√n {}", 2.0 * root);
+            // One extra forward pass, not more.
+            assert_eq!(s.recompute_steps(), n);
+        }
+    }
+
+    #[test]
+    fn log_peak_scales_logarithmically() {
+        for &n in &[64usize, 1024, 1 << 20] {
+            let s = Schedule::log(n);
+            let peak = s.max_live_steps();
+            let bound = 2 * LOG_LEAF + ceil_log2(n) + 2;
+            assert!(peak <= bound, "n={n}: peak {peak} > bound {bound}");
+        }
+    }
+
+    #[test]
+    fn budget_honored_when_feasible() {
+        for &n in &[100usize, 1000, 100_000] {
+            for &m in &[32usize, 64, 700, 2 * n] {
+                let s = Schedule::budget(n, m);
+                let need = ceil_log2(n) + 2;
+                if m >= need {
+                    assert!(
+                        s.max_live_steps() <= m,
+                        "n={n} m={m}: peak {} exceeds budget",
+                        s.max_live_steps()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn budget_degenerate_extremes() {
+        // budget=1: degrades to single-step leaves, still a valid plan.
+        let s = Schedule::budget(64, 1);
+        assert_eq!(s.leaf_cap(), 1);
+        assert_eq!(s.boundaries(), &[0, 64]);
+        // budget ≥ n+1: the full tape fits, zero recomputation.
+        let s = Schedule::budget(64, 65);
+        assert!(s.is_tape());
+        // budget = n: flat segmentation under the cap.
+        let s = Schedule::budget(64, 64);
+        assert!(!s.is_tape());
+        assert!(s.max_live_steps() <= 64);
+    }
+
+    #[test]
+    fn boundaries_partition_the_grid() {
+        for s in [
+            Schedule::sqrt(1),
+            Schedule::sqrt(7),
+            Schedule::sqrt(1000),
+            Schedule::log(37),
+            Schedule::budget(123, 30),
+        ] {
+            let b = s.boundaries();
+            assert_eq!(b[0], 0);
+            assert_eq!(*b.last().unwrap(), s.n_steps());
+            assert!(b.windows(2).all(|w| w[1] > w[0]), "strictly ascending: {b:?}");
+        }
+    }
+
+    #[test]
+    fn preset_names_are_stable() {
+        assert_eq!(Checkpointing::Tape.name(), "tape");
+        assert_eq!(Checkpointing::Sqrt.name(), "sqrt");
+        assert_eq!(Checkpointing::Log.name(), "log");
+        assert_eq!(Checkpointing::Budget { max_live_steps: 9 }.name(), "budget");
+        assert_eq!(Checkpointing::default(), Checkpointing::Tape);
+    }
+}

@@ -14,6 +14,12 @@
 //!   full Jacobian `∂z_t/∂(z_0, θ)` alongside the state. O(1) memory in L
 //!   but O(L·D) time (Jacobian rows are materialized from VJPs).
 //!
+//! [`checkpoint`] removes the backprop tape's O(L) memory cap without
+//! changing a bit: recursive checkpoint schedules (√n / log / explicit
+//! budget) replay segments from stored states — noise replay is exact for
+//! every in-tree source — and the backward walk is exact-f64-identical to
+//! the full tape for every scheme and budget.
+//!
 //! [`reconstruct`] demonstrates the Figure 2 phenomenon: backward-in-time
 //! simulation reconstructs the forward path only in Stratonovich form.
 //!
@@ -27,6 +33,7 @@ pub mod antithetic;
 pub mod augmented;
 pub mod backprop;
 pub mod batch;
+pub mod checkpoint;
 pub mod pathwise;
 pub mod reconstruct;
 pub mod stochastic;
@@ -35,4 +42,5 @@ pub use adaptive_grad::{AdaptiveGradOutput, ChannelMappedBrownian};
 pub use antithetic::AntitheticOutput;
 pub use augmented::AdjointOps;
 pub use batch::BatchAdjointOps;
+pub use checkpoint::{Checkpointing, Schedule};
 pub use stochastic::{AdjointConfig, BackwardSolver, GradientOutput, NoiseMode};

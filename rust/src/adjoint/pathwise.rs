@@ -16,17 +16,18 @@
 //! replaces (§2.3/§6); it is implemented here as an honest baseline for
 //! Table 1.
 
-use super::stochastic::GradientOutput;
-use crate::brownian::{BrownianMotion, BrownianPath};
+use super::stochastic::{GradientOutput, Noise, NoiseMode};
+use crate::brownian::BrownianMotion;
 use crate::prng::PrngKey;
 use crate::sde::{Calculus, SdeVjp};
 use crate::solvers::{uniform_grid, SolveStats};
 
 /// Forward-sensitivity engine behind
 /// [`crate::api::SdeProblem::sensitivity`] with `SensAlg::ForwardPathwise`
-/// — Euler–Maruyama stepping of the augmented `(z, S)` system.
-/// `loss_grad` maps the realized terminal state to `∂L/∂z_T`, which is
-/// contracted against the propagated sensitivity matrix.
+/// — Euler–Maruyama stepping of the augmented `(z, S)` system against any
+/// replayable noise source (stored path, virtual tree, mirrored either
+/// way). `loss_grad` maps the realized terminal state to `∂L/∂z_T`, which
+/// is contracted against the propagated sensitivity matrix.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn pathwise_core<S, F>(
     sde: &S,
@@ -36,6 +37,8 @@ pub(crate) fn pathwise_core<S, F>(
     t1: f64,
     n_steps: usize,
     key: PrngKey,
+    noise_mode: NoiseMode,
+    mirror: bool,
     loss_grad: F,
 ) -> GradientOutput
 where
@@ -51,7 +54,7 @@ where
     let p = sde.param_dim();
     let cols = d + p;
     let grid = uniform_grid(t0, t1, n_steps);
-    let mut bm = BrownianPath::new(key, d, t0, t1);
+    let mut bm = Noise::new(noise_mode, key, d, t0, t1, mirror);
 
     let mut z = z0.to_vec();
     let mut z_next = vec![0.0; d];
@@ -167,6 +170,9 @@ where
         // Live memory: sensitivity matrix + state (O(1) in L; O(d·D) in
         // problem size), plus the stored noise.
         noise_memory: s_mat.len() + d + bm.memory_footprint(),
+        // The sensitivity matrix is this estimator's tape analogue.
+        peak_tape_bytes: (s_mat.len() + d) * 8,
+        recompute_nfe: 0,
         w_terminal: bm.sample(t1),
     }
 }
@@ -186,7 +192,9 @@ mod tests {
         n: usize,
         key: PrngKey,
     ) -> GradientOutput {
-        pathwise_core(sde, theta, z0, 0.0, 1.0, n, key, |z| vec![1.0; z.len()])
+        pathwise_core(sde, theta, z0, 0.0, 1.0, n, key, NoiseMode::StoredPath, false, |z| {
+            vec![1.0; z.len()]
+        })
     }
 
     fn backprop_sum<S: SdeVjp + ?Sized>(

@@ -69,8 +69,17 @@ pub struct GradientOutput {
     pub z0_reconstructed: Vec<f64>,
     pub forward_stats: SolveStats,
     pub backward_stats: SolveStats,
-    /// Live f64s held by the noise source at the end (Table 1 memory).
+    /// Live f64s held by the noise source at the end, plus — for the
+    /// taped family — the peak live tape/checkpoint f64s (Table 1 memory).
     pub noise_memory: usize,
+    /// Peak bytes of live tape + checkpoint storage. Zero for the
+    /// adjoint family (no tape); for taped estimators this is the
+    /// quantity the checkpoint schedules bound.
+    pub peak_tape_bytes: usize,
+    /// Drift + diffusion evaluations spent *re*-integrating segments
+    /// during the backward pass (zero for the full tape and the adjoint
+    /// family) — the recompute side of the memory/recompute tradeoff.
+    pub recompute_nfe: u64,
     /// The realized Brownian value `W(t1)` of the path that drove the
     /// solve. Exposed because closed-form solutions/gradients of the §7.1
     /// problems are functions of `W_T`, and a stored [`BrownianPath`] is
@@ -335,6 +344,8 @@ where
         forward_stats,
         backward_stats,
         noise_memory: noise.memory_footprint(),
+        peak_tape_bytes: 0,
+        recompute_nfe: 0,
         w_terminal,
     }
 }
@@ -427,6 +438,8 @@ where
         forward_stats,
         backward_stats,
         noise_memory: noise.memory_footprint(),
+        peak_tape_bytes: 0,
+        recompute_nfe: 0,
         w_terminal,
     }
 }

@@ -28,18 +28,24 @@
 //! parameter vector, horizon, and noise-spec kind (per-path initial
 //! states, keys, and mirror flags may vary — that is what replicates
 //! vary). Mixed batches, adaptive stepping, [`SaveAt::Grid`] saves, and
-//! the taped/antithetic estimators fall back to the per-path engine
+//! the pathwise/antithetic estimators fall back to the per-path engine
 //! ([`solve_batch_per_path`] / [`sensitivity_batch_per_path`]), which
 //! remains available directly as the throughput-bench baseline.
+//! [`SensAlg::Backprop`] runs batched (each chunk keeps its own
+//! checkpoint schedule; per-path gradients still reduce in path order).
 
 use super::problem::{ProblemError, SdeProblem};
 use super::sensitivity::{validate_alg, GradStats, Gradients, SensAlg};
 use super::solve::{par_map, NoiseHandle, SaveAt, SdeSolution, SolveOptions, StepControl};
 use crate::adjoint::batch::batch_adjoint_sum_core;
+use crate::adjoint::checkpoint::batch_checkpoint_backprop_core;
 use crate::adjoint::stochastic::Noise;
+use crate::adjoint::{AdjointConfig, Checkpointing};
 use crate::brownian::{BatchBrownian, BrownianMotion};
 use crate::sde::{BatchSde, BatchSdeVjp};
-use crate::solvers::{batch_grid_core, batch_grid_saving_core, uniform_grid, BatchForwardFunc};
+use crate::solvers::{
+    batch_grid_core, batch_grid_saving_core, uniform_grid, BatchForwardFunc, Method,
+};
 
 /// Paths per batched-kernel chunk. Large enough to amortize per-stage
 /// dispatch and keep weight rows hot, small enough that `B×d` stage
@@ -215,12 +221,21 @@ fn solve_chunk<S: BatchSde + ?Sized>(
     }
 }
 
+/// The batched gradient engines and their per-chunk configuration.
+#[derive(Clone, Copy)]
+enum BatchedGradAlg {
+    Adjoint(AdjointConfig),
+    Backprop { method: Method, checkpointing: Checkpointing },
+}
+
 /// Differentiate many problems for the summed loss `L = Σ z_T` on the
 /// batched SoA engine. [`SensAlg::StochasticAdjoint`] runs the batched
-/// augmented adjoint (one `[B×(2d+p+1)]` state per chunk); the taped and
-/// antithetic estimators fall back to the per-path engine. Results are
-/// in input order and bit-identical to per-problem
-/// [`SdeProblem::sensitivity_sum`] calls regardless of thread count.
+/// augmented adjoint (one `[B×(2d+p+1)]` state per chunk);
+/// [`SensAlg::Backprop`] runs the batched checkpointed backprop (each
+/// chunk keeps its own schedule); the pathwise and antithetic estimators
+/// fall back to the per-path engine. Results are in input order and
+/// bit-identical to per-problem [`SdeProblem::sensitivity_sum`] calls
+/// regardless of thread count.
 pub fn sensitivity_batch<'a, S>(
     problems: &[SdeProblem<'a, S>],
     alg: &SensAlg,
@@ -232,8 +247,11 @@ where
     if problems.is_empty() {
         return Vec::new();
     }
-    let cfg = match alg {
-        SensAlg::StochasticAdjoint(cfg) if batchable(problems) => *cfg,
+    let batched = match alg {
+        SensAlg::StochasticAdjoint(cfg) if batchable(problems) => BatchedGradAlg::Adjoint(*cfg),
+        SensAlg::Backprop { method, checkpointing } if batchable(problems) => {
+            BatchedGradAlg::Backprop { method: *method, checkpointing: *checkpointing }
+        }
         _ => return sensitivity_batch_per_path(problems, alg, step),
     };
     // Validation depends only on the shared SDE and the algorithm.
@@ -253,7 +271,12 @@ where
     let ranges = chunks(problems.len());
     par_map(ranges.len(), |c| {
         let (lo, hi) = ranges[c];
-        sensitivity_chunk(&problems[lo..hi], &cfg, n_steps)
+        match batched {
+            BatchedGradAlg::Adjoint(cfg) => sensitivity_chunk(&problems[lo..hi], &cfg, n_steps),
+            BatchedGradAlg::Backprop { method, checkpointing } => {
+                backprop_chunk(&problems[lo..hi], method, checkpointing, n_steps)
+            }
+        }
     })
     .into_iter()
     .flatten()
@@ -316,6 +339,62 @@ fn sensitivity_chunk<S: BatchSdeVjp + ?Sized>(
                 forward: out.forward_stats,
                 backward: out.backward_stats,
                 noise_memory: src.memory_footprint(),
+                peak_tape_bytes: 0,
+                recompute_nfe: 0,
+                hit_h_min: false,
+            },
+        })
+        .collect()
+}
+
+/// One chunk through the batched checkpointed backprop. Stats are in
+/// per-path units so each returned [`Gradients`] — including memory and
+/// recompute accounting — equals the scalar engine's output exactly.
+fn backprop_chunk<S: BatchSdeVjp + ?Sized>(
+    problems: &[SdeProblem<'_, S>],
+    method: Method,
+    checkpointing: Checkpointing,
+    n_steps: usize,
+) -> Vec<Gradients> {
+    let p0 = &problems[0];
+    let d = p0.dim();
+    let p = p0.sde.param_dim();
+    let bsz = problems.len();
+
+    let mut z0 = vec![0.0; bsz * d];
+    for (row, pr) in z0.chunks_exact_mut(d).zip(problems) {
+        row.copy_from_slice(&pr.z0);
+    }
+    let mut bm = noise_fleet(problems, d);
+    let out = batch_checkpoint_backprop_core(
+        p0.sde,
+        &p0.theta,
+        &z0,
+        p0.t0,
+        p0.t1,
+        n_steps,
+        &mut bm,
+        method,
+        checkpointing,
+    );
+
+    bm.into_sources()
+        .into_iter()
+        .enumerate()
+        .map(|(b, src)| Gradients {
+            dz0: out.grad_z0[b * d..(b + 1) * d].to_vec(),
+            dtheta: out.grad_theta[b * p..(b + 1) * p].to_vec(),
+            z_terminal: out.z_terminal[b * d..(b + 1) * d].to_vec(),
+            // The first checkpoint holds z0 exactly (as in the scalar
+            // driver).
+            z0_reconstructed: z0[b * d..(b + 1) * d].to_vec(),
+            w_terminal: out.w_terminal[b * d..(b + 1) * d].to_vec(),
+            stats: GradStats {
+                forward: out.forward_stats,
+                backward: out.backward_stats,
+                noise_memory: out.peak_tape_f64s + src.memory_footprint(),
+                peak_tape_bytes: out.peak_tape_f64s * 8,
+                recompute_nfe: out.recompute_nfe,
                 hit_h_min: false,
             },
         })

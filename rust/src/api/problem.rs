@@ -37,9 +37,11 @@ pub enum ProblemError {
     /// Adaptive stepping is only available for forward solves and (via
     /// `SdeProblem::sensitivity_adaptive`) replicated scalar problems.
     AdaptiveSensitivityUnsupported,
-    /// The requested algorithm only supports the default noise spec
-    /// (stored path, unmirrored): its engine tapes its own path, so a
-    /// virtual-tree or mirrored problem spec cannot be honored.
+    /// The requested algorithm cannot replay the problem's noise source
+    /// deterministically. Every in-tree spec (stored path, virtual tree,
+    /// mirrored either way) *is* replayable, so no current combination
+    /// returns this; it is reserved for genuinely unreplayable sources
+    /// (e.g. externally streamed increments).
     UnsupportedNoise { algorithm: &'static str },
 }
 
@@ -67,9 +69,8 @@ impl fmt::Display for ProblemError {
             ),
             ProblemError::UnsupportedNoise { algorithm } => write!(
                 f,
-                "{algorithm}: only the default noise spec (stored path, \
-                 unmirrored) is supported — this estimator tapes its own \
-                 Brownian path"
+                "{algorithm}: the problem's noise source cannot be \
+                 replayed deterministically by this estimator"
             ),
         }
     }
@@ -168,11 +169,12 @@ impl<'a, S: Sde + ?Sized> SdeProblem<'a, S> {
     }
 
     /// Choose the Brownian source (stored path or virtual tree). This is
-    /// authoritative for [`SdeProblem::solve`] and the adjoint-family
-    /// estimators (it overrides the `noise` field of any `AdjointConfig`
-    /// passed via `SensAlg`). `Backprop`/`ForwardPathwise` tape their own
-    /// stored path and return [`ProblemError::UnsupportedNoise`] for any
-    /// other spec rather than silently diverging from the problem's path.
+    /// authoritative for [`SdeProblem::solve`] and every estimator: the
+    /// adjoint family honors it directly (it overrides the `noise` field
+    /// of any `AdjointConfig` passed via `SensAlg`), and the taped family
+    /// (`Backprop`/`ForwardPathwise`) replays it exactly — the virtual
+    /// tree is a pure function of `(key, t)`, so a replayed segment is
+    /// bit-identical to the first pass by construction.
     pub fn noise(mut self, spec: NoiseSpec) -> Self {
         self.noise = spec;
         self

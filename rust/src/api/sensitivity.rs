@@ -2,22 +2,22 @@
 //!
 //! Estimator choice is orthogonal to everything else: the same
 //! [`SdeProblem`] can be differentiated with the paper's stochastic
-//! adjoint, the backprop-through-solver baseline, forward pathwise
-//! sensitivity, or an antithetic adjoint pair. The problem's key and
-//! noise spec are authoritative: the adjoint family honors them
-//! directly, while `Backprop`/`ForwardPathwise` (which tape their own
-//! stored path) reject any non-default spec with
-//! [`ProblemError::UnsupportedNoise`] rather than silently realizing a
-//! different path.
+//! adjoint, the (checkpointed) backprop-through-solver baseline, forward
+//! pathwise sensitivity, or an antithetic adjoint pair. The problem's
+//! key, noise spec and mirror flag are authoritative for every family:
+//! the taped estimators replay any in-tree source exactly (a stored path
+//! caches queried times, the virtual tree is a pure function of
+//! `(key, t)`, mirroring is a deterministic negation), so they realize
+//! the *same* path the solve APIs would.
 
 use super::problem::{ProblemError, SdeProblem};
 use super::solve::{add_stats, StepControl};
 use crate::adjoint::adaptive_grad::adaptive_adjoint_core;
 use crate::adjoint::antithetic::{antithetic_core, AntitheticOutput};
-use crate::adjoint::backprop::backprop_core;
+use crate::adjoint::checkpoint::checkpointed_backprop_core;
 use crate::adjoint::pathwise::pathwise_core;
 use crate::adjoint::stochastic::{adjoint_multi_obs_core, adjoint_with_loss_core, GradientOutput};
-use crate::adjoint::AdjointConfig;
+use crate::adjoint::{AdjointConfig, Checkpointing};
 use crate::sde::{Calculus, ReplicatedSde, ScalarSde, SdeVjp};
 use crate::solvers::{AdaptiveConfig, Method, SolveStats};
 
@@ -28,8 +28,12 @@ pub enum SensAlg {
     /// with a virtual-tree noise spec, O(L) with a stored path.
     StochasticAdjoint(AdjointConfig),
     /// Reverse-mode differentiation through the solver operations
-    /// (`method` must be `EulerMaruyama` or `MilsteinIto`). O(L) memory.
-    Backprop { method: Method },
+    /// (`method` must be `EulerMaruyama`, `MilsteinIto` or `Heun`).
+    /// `checkpointing` selects the tape's memory/recompute tradeoff —
+    /// O(L) memory for the default full [`Checkpointing::Tape`], down to
+    /// O(log L) with recursive schedules, with bit-identical gradients
+    /// for every choice. See [`crate::adjoint::checkpoint`].
+    Backprop { method: Method, checkpointing: Checkpointing },
     /// Forward sensitivity analysis propagating the full Jacobian.
     /// O(L·D) time.
     ForwardPathwise,
@@ -39,6 +43,12 @@ pub enum SensAlg {
 }
 
 impl SensAlg {
+    /// Full-tape backprop with the given scheme — the historical
+    /// `Backprop { method }` configuration.
+    pub fn backprop(method: Method) -> SensAlg {
+        SensAlg::Backprop { method, checkpointing: Checkpointing::Tape }
+    }
+
     /// Stable identifier used in error messages and harness output (the
     /// convergence tables key their gradient-order rows on it).
     pub fn name(&self) -> &'static str {
@@ -59,6 +69,13 @@ pub struct GradStats {
     /// Live f64s held by the noise source / tape at the end (Table 1's
     /// memory column).
     pub noise_memory: usize,
+    /// Peak bytes of live tape + checkpoint storage (zero for the
+    /// adjoint family) — the quantity `Checkpointing` schedules bound.
+    pub peak_tape_bytes: usize,
+    /// Drift + diffusion evaluations spent re-integrating segments
+    /// during the backward pass (the recompute side of the
+    /// memory/recompute tradeoff; zero for the full tape).
+    pub recompute_nfe: u64,
     /// True if an adaptive controller hit `h_min`.
     pub hit_h_min: bool,
 }
@@ -100,6 +117,8 @@ impl From<GradientOutput> for Gradients {
                 forward: o.forward_stats,
                 backward: o.backward_stats,
                 noise_memory: o.noise_memory,
+                peak_tape_bytes: o.peak_tape_bytes,
+                recompute_nfe: o.recompute_nfe,
                 hit_h_min: false,
             },
         }
@@ -122,6 +141,8 @@ fn from_antithetic(pair: AntitheticOutput) -> Gradients {
             forward,
             backward,
             noise_memory: plus.noise_memory + minus.noise_memory,
+            peak_tape_bytes: plus.peak_tape_bytes + minus.peak_tape_bytes,
+            recompute_nfe: plus.recompute_nfe + minus.recompute_nfe,
             hit_h_min: false,
         },
     }
@@ -135,8 +156,6 @@ pub(crate) fn validate_alg<S: SdeVjp + ?Sized>(
     prob: &SdeProblem<'_, S>,
     alg: &SensAlg,
 ) -> Result<(), ProblemError> {
-    use crate::adjoint::NoiseMode;
-
     let sde = prob.sde();
     let name = alg.name();
     match alg {
@@ -147,22 +166,32 @@ pub(crate) fn validate_alg<S: SdeVjp + ?Sized>(
                 return Err(ProblemError::MissingItoCorrectionVjp { algorithm: name });
             }
         }
-        SensAlg::Backprop { method } => {
-            if !matches!(method, Method::EulerMaruyama | Method::MilsteinIto) {
+        SensAlg::Backprop { method, .. } => match method {
+            Method::EulerMaruyama | Method::MilsteinIto => {
+                if sde.calculus() != Calculus::Ito {
+                    return Err(ProblemError::CalculusMismatch {
+                        algorithm: name,
+                        required: Calculus::Ito,
+                    });
+                }
+                // The Milstein correction term's pullback needs second
+                // derivatives of σ.
+                if *method == Method::MilsteinIto && !sde.has_ito_correction_vjp() {
+                    return Err(ProblemError::MissingItoCorrectionVjp { algorithm: name });
+                }
+            }
+            Method::Heun => {
+                // Heun steps the Stratonovich drift form; for Itô-native
+                // systems the conversion's pullback needs the correction
+                // VJP (same requirement as the adjoint family).
+                if sde.calculus() == Calculus::Ito && !sde.has_ito_correction_vjp() {
+                    return Err(ProblemError::MissingItoCorrectionVjp { algorithm: name });
+                }
+            }
+            _ => {
                 return Err(ProblemError::UnsupportedMethod { algorithm: name, method: *method });
             }
-            if sde.calculus() != Calculus::Ito {
-                return Err(ProblemError::CalculusMismatch {
-                    algorithm: name,
-                    required: Calculus::Ito,
-                });
-            }
-            // The Milstein correction term's pullback needs second
-            // derivatives of σ.
-            if *method == Method::MilsteinIto && !sde.has_ito_correction_vjp() {
-                return Err(ProblemError::MissingItoCorrectionVjp { algorithm: name });
-            }
-        }
+        },
         SensAlg::ForwardPathwise => {
             if sde.calculus() != Calculus::Ito {
                 return Err(ProblemError::CalculusMismatch {
@@ -172,15 +201,10 @@ pub(crate) fn validate_alg<S: SdeVjp + ?Sized>(
             }
         }
     }
-    // Backprop and pathwise tape their own stored Brownian path: a
-    // virtual-tree or mirrored problem spec cannot be honored, so reject
-    // it instead of silently realizing a different path from the same
-    // key.
-    if matches!(alg, SensAlg::Backprop { .. } | SensAlg::ForwardPathwise)
-        && (prob.is_mirrored() || !matches!(prob.noise_spec(), NoiseMode::StoredPath))
-    {
-        return Err(ProblemError::UnsupportedNoise { algorithm: name });
-    }
+    // Every in-tree noise spec (stored path, virtual tree, mirrored
+    // either way) replays deterministically, so the taped family now
+    // honors the problem's spec directly; `ProblemError::UnsupportedNoise`
+    // remains reserved for genuinely unreplayable sources.
     Ok(())
 }
 
@@ -189,11 +213,10 @@ impl<'a, S: SdeVjp + ?Sized> SdeProblem<'a, S> {
     /// `loss_grad` maps the realized terminal state to `∂L/∂z_T`. (For
     /// [`SensAlg::Antithetic`] the closure runs once per branch.)
     ///
-    /// For the adjoint family, the problem's noise spec and mirror flag
-    /// override the corresponding `AdjointConfig` fields.
-    /// `Backprop`/`ForwardPathwise` support only the default spec
-    /// (stored path, unmirrored) and return
-    /// [`ProblemError::UnsupportedNoise`] otherwise.
+    /// The problem's noise spec and mirror flag are honored by every
+    /// family (for the adjoint they override the corresponding
+    /// `AdjointConfig` fields; the taped estimators replay any in-tree
+    /// source exactly).
     pub fn sensitivity<F>(
         &self,
         alg: &SensAlg,
@@ -224,7 +247,7 @@ impl<'a, S: SdeVjp + ?Sized> SdeProblem<'a, S> {
                 )
                 .into()
             }
-            SensAlg::Backprop { method } => backprop_core(
+            SensAlg::Backprop { method, checkpointing } => checkpointed_backprop_core(
                 self.sde,
                 &self.theta,
                 &self.z0,
@@ -233,6 +256,9 @@ impl<'a, S: SdeVjp + ?Sized> SdeProblem<'a, S> {
                 n_steps,
                 self.key,
                 *method,
+                self.noise,
+                self.mirror,
+                *checkpointing,
                 &mut loss_grad,
             )
             .into(),
@@ -244,6 +270,8 @@ impl<'a, S: SdeVjp + ?Sized> SdeProblem<'a, S> {
                 self.t1,
                 n_steps,
                 self.key,
+                self.noise,
+                self.mirror,
                 &mut loss_grad,
             )
             .into(),
@@ -337,6 +365,8 @@ impl<'a, P: ScalarSde> SdeProblem<'a, ReplicatedSde<P>> {
                 forward: out.forward_stats,
                 backward: out.backward_stats,
                 noise_memory: 0,
+                peak_tape_bytes: 0,
+                recompute_nfe: 0,
                 hit_h_min: out.hit_h_min,
             },
         }

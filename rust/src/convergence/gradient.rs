@@ -155,8 +155,8 @@ where
         NoiseSpec::StoredPath => DEFAULT_TREE_TOL,
     };
     // Adjoint family: pin the tree so oracle + all rungs share one path.
-    // Taped family: must stay on the default stored path (anything else
-    // is rejected by the API), replayed per rung for the oracle.
+    // Taped family: pin the stored path (the estimator would honor a tree
+    // spec too, but the oracle replays the realized path per rung).
     let spec = match alg {
         SensAlg::StochasticAdjoint(_) | SensAlg::Antithetic { .. } => {
             NoiseSpec::VirtualTree { tol }
@@ -286,7 +286,7 @@ mod tests {
         let ladder = DtLadder::new(32, 3);
         let res = gradient_orders(
             &prob,
-            &SensAlg::Backprop { method: Method::MilsteinIto },
+            &SensAlg::backprop(Method::MilsteinIto),
             &ladder,
             16,
             50,
@@ -298,12 +298,14 @@ mod tests {
         assert!(res.rungs.iter().all(|r| r.mean_abs_err > 0.0));
     }
 
-    /// A virtual-tree problem spec is propagated for the adjoint but must
-    /// surface the API's UnsupportedNoise for the taped family.
+    /// A virtual-tree problem spec on the input is fine for every family:
+    /// the ladder re-pins the spec per family before running.
     #[test]
     fn taped_family_cannot_honor_tree_spec_is_handled() {
-        // gradient_orders itself resets the spec per family, so both
-        // families succeed even when the input problem asks for a tree.
+        // gradient_orders resets the spec per family (tree for the
+        // adjoint, stored path for the taped baselines, which replay it
+        // for the oracle), so both families succeed even when the input
+        // problem asks for a tree.
         let sde = ReplicatedSde::new(Example1, 1);
         let theta = [0.4, 0.5];
         let z0 = [1.0];
@@ -314,7 +316,7 @@ mod tests {
         let ladder = DtLadder::new(16, 2);
         assert!(gradient_orders(
             &prob,
-            &SensAlg::Backprop { method: Method::EulerMaruyama },
+            &SensAlg::backprop(Method::EulerMaruyama),
             &ladder,
             4,
             20,

@@ -5,7 +5,11 @@
 //! (stochastic-adjoint gradients) on two workloads:
 //!
 //! * the 10-d replicated GBM of §7.1 (cheap coefficients — measures
-//!   engine overhead: dispatch, noise, stepping), and
+//!   engine overhead: dispatch, noise, stepping),
+//! * the same GBM under **checkpointed backprop** (`gbm_d10_ckpt`:
+//!   the O(√n)-memory schedule, gradients asserted identical to the
+//!   full tape; peak-tape-bytes and recompute-NFE ride along as
+//!   ungated "observed" rows), and
 //! * a neural-drift SDE (the latent posterior with MLP drift/diffusion —
 //!   measures the batched matrix–matrix win on net-bound dynamics).
 //!
@@ -48,7 +52,7 @@
 use crate::adjoint::AdjointConfig;
 use crate::api::{
     sensitivity_batch, sensitivity_batch_per_path, solve_batch, solve_batch_local,
-    solve_batch_per_path, SdeProblem, SensAlg, SolveOptions, StepControl,
+    solve_batch_per_path, Checkpointing, SdeProblem, SensAlg, SolveOptions, StepControl,
 };
 use crate::latent::{LatentSdeConfig, LatentSdeModel, PosteriorSde};
 use crate::metrics::json::{json_num, json_number_field, json_str, json_string_field};
@@ -178,6 +182,65 @@ pub fn run_throughput(quick: bool) -> Vec<ThroughputRow> {
         true,
     );
 
+    // 1b. Checkpointed backprop on the same GBM fleet: the O(√n)-memory
+    // taped estimator (`Checkpointing::Sqrt`) whose gradients are
+    // exact-f64-identical to the full tape (asserted below, so the gated
+    // row measures pure recompute overhead, not a different answer). The
+    // schedule's memory/recompute trade rides along as ungated
+    // "observed" rows: peak live tape bytes and backward-pass recompute
+    // NFE per path (raw values in the per-sec column, like the serve
+    // latency rows).
+    {
+        let replicates = prob.replicates(PrngKey::from_seed(0x7142), n_paths);
+        let step = StepControl::Steps(n_steps);
+        let ckpt = SensAlg::Backprop {
+            method: Method::MilsteinIto,
+            checkpointing: Checkpointing::Sqrt,
+        };
+        let g_ckpt = sensitivity_batch(&replicates, &ckpt, step);
+        let g_tape =
+            sensitivity_batch(&replicates, &SensAlg::backprop(Method::MilsteinIto), step);
+        for (a, b) in g_ckpt.iter().zip(&g_tape) {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(a.dtheta, b.dtheta, "checkpointed backprop diverged from the tape");
+        }
+        let g_per_path = sensitivity_batch_per_path(&replicates, &ckpt, step);
+        for (a, b) in g_ckpt.iter().zip(&g_per_path) {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(a.dtheta, b.dtheta, "gradient engines diverged on gbm_d10_ckpt");
+        }
+        let t_batched = time_best_of(reps, || {
+            sensitivity_batch(&replicates, &ckpt, step)[0].as_ref().unwrap().dtheta[0]
+        });
+        let t_scalar = time_best_of(reps, || {
+            sensitivity_batch_per_path(&replicates, &ckpt, step)[0].as_ref().unwrap().dtheta[0]
+        });
+        for (engine, secs) in [("batched", t_batched), ("per_path", t_scalar)] {
+            rows.push(ThroughputRow {
+                problem: "gbm_d10_ckpt",
+                metric: "grad_paths_per_sec",
+                engine,
+                paths: n_paths,
+                steps: n_steps,
+                value_per_sec: n_paths as f64 / secs,
+            });
+        }
+        let stats = &g_ckpt[0].as_ref().unwrap().stats;
+        for (metric, value) in [
+            ("peak_tape_bytes", stats.peak_tape_bytes as f64),
+            ("recompute_nfe", stats.recompute_nfe as f64),
+        ] {
+            rows.push(ThroughputRow {
+                problem: "gbm_d10_ckpt",
+                metric,
+                engine: "observed",
+                paths: n_paths,
+                steps: n_steps,
+                value_per_sec: value,
+            });
+        }
+    }
+
     // 2. Neural-drift SDE: the latent posterior (MLP drift + per-dim
     // diffusion nets) — the workload where batched net evaluation pays.
     let model = LatentSdeModel::new(LatentSdeConfig {
@@ -234,7 +297,7 @@ pub fn run_throughput(quick: bool) -> Vec<ThroughputRow> {
         );
     }
     for metric in ["paths_per_sec", "grad_paths_per_sec"] {
-        for problem in ["gbm_d10", "neural_posterior"] {
+        for problem in ["gbm_d10", "gbm_d10_ckpt", "neural_posterior"] {
             let get = |engine: &str| {
                 rows.iter()
                     .find(|r| r.metric == metric && r.problem == problem && r.engine == engine)
@@ -763,9 +826,17 @@ mod tests {
     #[test]
     fn quick_throughput_produces_rows_and_artifact() {
         let rows = run_throughput(true);
-        // 2 engines × (gbm solve + gbm grad + nn solve) = 6 rows.
-        assert_eq!(rows.len(), 6);
+        // 2 engines × (gbm solve + gbm grad + ckpt grad + nn solve) = 8
+        // timing rows, plus the 2 observed checkpoint memory rows.
+        assert_eq!(rows.len(), 10);
         assert!(rows.iter().all(|r| r.value_per_sec.is_finite() && r.value_per_sec > 0.0));
+        // The checkpointed row is gate-shaped (batched grad_paths_per_sec)
+        // and its observability rows carry the schedule's memory trade.
+        assert!(rows.iter().any(|r| r.problem == "gbm_d10_ckpt"
+            && r.metric == "grad_paths_per_sec"
+            && r.engine == "batched"));
+        assert!(rows.iter().any(|r| r.metric == "peak_tape_bytes" && r.engine == "observed"));
+        assert!(rows.iter().any(|r| r.metric == "recompute_nfe" && r.engine == "observed"));
         let json = std::fs::read_to_string("BENCH_throughput.json").expect("artifact written");
         assert!(json.contains("\"bench\": \"throughput\""));
         assert!(json.contains("grad_paths_per_sec"));

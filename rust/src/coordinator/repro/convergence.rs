@@ -213,8 +213,8 @@ pub fn run(quick: bool) {
         &[
             (SensAlg::StochasticAdjoint(AdjointConfig::default()), 1.0),
             (SensAlg::Antithetic { base: AdjointConfig::default() }, 1.0),
-            (SensAlg::Backprop { method: Method::MilsteinIto }, 1.0),
-            (SensAlg::Backprop { method: Method::EulerMaruyama }, 0.5),
+            (SensAlg::backprop(Method::MilsteinIto), 1.0),
+            (SensAlg::backprop(Method::EulerMaruyama), 0.5),
             (SensAlg::ForwardPathwise, 0.5),
         ],
         &g_ladder,
@@ -252,7 +252,7 @@ pub fn run(quick: bool) {
         &ou_prob,
         &[
             (SensAlg::StochasticAdjoint(AdjointConfig::default()), 1.0),
-            (SensAlg::Backprop { method: Method::MilsteinIto }, 1.0),
+            (SensAlg::backprop(Method::MilsteinIto), 1.0),
         ],
         &g_ladder,
         g_paths,

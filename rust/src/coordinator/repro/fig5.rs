@@ -134,8 +134,8 @@ pub fn panel_c<P: ScalarSde + Copy>(problem: P, quick: bool, csv: &mut CsvWriter
     for &steps in dts {
         let variants: Vec<(&str, SensAlg)> = vec![
             ("adjoint_milstein", SensAlg::StochasticAdjoint(AdjointConfig::default())),
-            ("backprop_euler", SensAlg::Backprop { method: Method::EulerMaruyama }),
-            ("backprop_milstein", SensAlg::Backprop { method: Method::MilsteinIto }),
+            ("backprop_euler", SensAlg::backprop(Method::EulerMaruyama)),
+            ("backprop_milstein", SensAlg::backprop(Method::MilsteinIto)),
         ];
         for (name, alg) in &variants {
             let mut err_acc = 0.0;

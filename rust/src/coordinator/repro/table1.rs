@@ -72,7 +72,7 @@ pub fn run(quick: bool) -> Vec<Row> {
             ("forward_pathwise", SensAlg::ForwardPathwise, NoiseMode::StoredPath),
             (
                 "backprop_solver",
-                SensAlg::Backprop { method: Method::MilsteinIto },
+                SensAlg::backprop(Method::MilsteinIto),
                 NoiseMode::StoredPath,
             ),
             (

@@ -39,11 +39,66 @@
 //! println!("∂L/∂θ = {:?}", g.dtheta);
 //! ```
 //!
-//! Swap `SensAlg::StochasticAdjoint(..)` for `SensAlg::Backprop { .. }`,
+//! Swap `SensAlg::StochasticAdjoint(..)` for `SensAlg::backprop(..)`,
 //! `SensAlg::ForwardPathwise`, or `SensAlg::Antithetic { .. }` to change
 //! the estimator; set `.noise(NoiseSpec::VirtualTree { tol })` for the
-//! paper's O(1)-memory noise source. (The pre-0.2 deprecated free
-//! functions were removed in 0.3; CHANGES.md has the migration table.)
+//! paper's O(1)-memory noise source — every estimator, taped ones
+//! included, honors the spec. (The pre-0.2 deprecated free functions
+//! were removed in 0.3; CHANGES.md has the migration table.)
+//!
+//! ## Constant-memory gradients: checkpointed backprop
+//!
+//! The backprop-through-the-solver baseline no longer has to hold the
+//! whole trajectory: [`adjoint::Checkpointing`] picks a recursive
+//! checkpoint schedule (`Tape` | `Sqrt` | `Log` |
+//! `Budget { max_live_steps }`) and the backward pass re-integrates one
+//! segment at a time from stored checkpoints, replaying the *same*
+//! noise (a stored path caches its queried times; the virtual tree is a
+//! pure function of `(key, t)`). Gradients are **exact-f64-identical**
+//! to the full tape for every schedule — only memory and recompute move
+//! (n = solver steps, per path):
+//!
+//! | schedule | peak live memory | backward-pass recompute |
+//! |---|---|---|
+//! | `Tape` | O(n) | none |
+//! | `Sqrt` | O(√n) | ≈ 1 extra forward pass |
+//! | `Log` | O(log n) | O(n log n) coefficient evals |
+//! | `Budget { max_live_steps: m }` | ≤ ≈ m steps' worth | cheapest plan that fits m |
+//!
+//! Reach for checkpointed backprop when you want *the
+//! backprop-through-the-solver estimator exactly* (its variance
+//! properties, or a pin against the tape) at horizons the tape cannot
+//! hold; the stochastic adjoint remains the O(1)-memory choice when a
+//! different (continuous-adjoint) estimator is acceptable.
+//!
+//! ```no_run
+//! use sdegrad::prelude::*;
+//! use sdegrad::sde::problems::Example1;
+//! use sdegrad::sde::ReplicatedSde;
+//!
+//! let sde = ReplicatedSde::new(Example1, 10);
+//! let prob = SdeProblem::new(&sde, &vec![1.0; 10], (0.0, 1.0))
+//!     .params(&vec![0.5; 20])
+//!     .noise(NoiseSpec::VirtualTree { tol: 1e-8 });
+//! // 10⁵ solver steps under a ~100-live-step cap — far beyond what the
+//! // full tape could hold at this horizon-per-byte budget.
+//! let g = prob
+//!     .sensitivity_sum(
+//!         &SensAlg::Backprop {
+//!             method: Method::MilsteinIto,
+//!             checkpointing: Checkpointing::Budget { max_live_steps: 100 },
+//!         },
+//!         StepControl::Steps(100_000),
+//!     )
+//!     .unwrap();
+//! // Observability: peak live tape bytes + recompute cost of the plan.
+//! println!("peak {} B, recompute {} NFE",
+//!     g.stats.peak_tape_bytes, g.stats.recompute_nfe);
+//! ```
+//!
+//! `tests/checkpoint_backprop.rs` pins the bit-identical claim across
+//! schemes (Euler–Maruyama / Milstein / Heun), schedules, noise specs,
+//! and batch layouts, plus the O(√n) memory-scaling ladder.
 //!
 //! ## Batched Monte Carlo: the SoA execution engine
 //!
@@ -179,7 +234,7 @@ pub mod testing;
 /// Convenience re-exports: the problem–solver–solution API plus the core
 /// trait/config vocabulary it is spoken in.
 pub mod prelude {
-    pub use crate::adjoint::{AdjointConfig, NoiseMode};
+    pub use crate::adjoint::{AdjointConfig, Checkpointing, NoiseMode};
     pub use crate::api::{
         sensitivity_batch, solve_batch, GradStats, Gradients, NoiseSpec, ProblemError, SaveAt,
         SdeProblem, SdeSolution, SensAlg, SolveOptions, StepControl,

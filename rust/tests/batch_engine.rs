@@ -193,9 +193,9 @@ fn batched_adjoint_matches_scalar_on_ou_and_virtual_tree() {
     check_gradient_batch(&gbm, &theta, &x0, 113, NoiseMode::VirtualTree { tol: 1e-6 });
 }
 
-/// The per-path gradient engine agrees with the batched one, and the
-/// taped estimators (which fall back) still produce per-path results in
-/// input order.
+/// The per-path gradient engine agrees with the batched one — for the
+/// batched algorithms (adjoint, backprop) and the per-path fallbacks
+/// (pathwise, antithetic) alike — producing results in input order.
 #[test]
 fn gradient_fallbacks_and_per_path_engine_agree() {
     let sde = ReplicatedSde::new(Example1, 2);
@@ -207,7 +207,7 @@ fn gradient_fallbacks_and_per_path_engine_agree() {
 
     for alg in [
         SensAlg::StochasticAdjoint(AdjointConfig::default()),
-        SensAlg::Backprop { method: Method::MilsteinIto },
+        SensAlg::backprop(Method::MilsteinIto),
         SensAlg::ForwardPathwise,
         SensAlg::Antithetic { base: AdjointConfig::default() },
     ] {
@@ -233,11 +233,16 @@ fn batched_sensitivity_propagates_validation_errors() {
         .params(&theta)
         .noise(NoiseMode::VirtualTree { tol: 1e-6 });
     let replicates = prob.replicates(PrngKey::from_seed(132), 3);
-    // Taped estimator + tree spec: every slot reports UnsupportedNoise.
-    let outs = sensitivity_batch(&replicates, &SensAlg::ForwardPathwise, StepControl::Steps(10));
+    // Backprop through a Stratonovich–Milstein step has no VJP kernel:
+    // every slot reports UnsupportedMethod.
+    let outs = sensitivity_batch(
+        &replicates,
+        &SensAlg::backprop(Method::MilsteinStrat),
+        StepControl::Steps(10),
+    );
     assert_eq!(outs.len(), 3);
     for o in outs {
-        assert!(matches!(o.unwrap_err(), ProblemError::UnsupportedNoise { .. }));
+        assert!(matches!(o.unwrap_err(), ProblemError::UnsupportedMethod { .. }));
     }
     // Adaptive stepping is rejected per problem.
     let outs = sensitivity_batch(

@@ -265,8 +265,8 @@ fn gradient_orders_for_all_estimators_on_gbm() {
     let n = 48;
     let cases: Vec<(SensAlg, f64, f64)> = vec![
         (SensAlg::Antithetic { base: AdjointConfig::default() }, 0.6, 1.4),
-        (SensAlg::Backprop { method: Method::MilsteinIto }, 0.6, 1.4),
-        (SensAlg::Backprop { method: Method::EulerMaruyama }, 0.2, 0.9),
+        (SensAlg::backprop(Method::MilsteinIto), 0.6, 1.4),
+        (SensAlg::backprop(Method::EulerMaruyama), 0.2, 0.9),
         (SensAlg::ForwardPathwise, 0.2, 0.9),
     ];
     for (alg, lo, hi) in &cases {
@@ -293,7 +293,7 @@ fn backprop_gradient_converges_on_ou() {
     let ladder = DtLadder::new(32, 4);
     let res = gradient_orders(
         &prob,
-        &SensAlg::Backprop { method: Method::MilsteinIto },
+        &SensAlg::backprop(Method::MilsteinIto),
         &ladder,
         48, // independent paths per rung: fixed scale, see above
         N_BOOT,

@@ -35,9 +35,9 @@ fn property_gradient_estimators_agree() {
             .sensitivity_sum(&SensAlg::StochasticAdjoint(AdjointConfig::default()), step)
             .unwrap();
         let bp_mil =
-            prob.sensitivity_sum(&SensAlg::Backprop { method: Method::MilsteinIto }, step).unwrap();
+            prob.sensitivity_sum(&SensAlg::backprop(Method::MilsteinIto), step).unwrap();
         let bp_eul = prob
-            .sensitivity_sum(&SensAlg::Backprop { method: Method::EulerMaruyama }, step)
+            .sensitivity_sum(&SensAlg::backprop(Method::EulerMaruyama), step)
             .unwrap();
         let fw = prob.sensitivity_sum(&SensAlg::ForwardPathwise, step).unwrap();
 
@@ -220,7 +220,7 @@ fn nonstandard_time_horizons() {
     // Closed form of Example 3 holds from t0=0; for t0=0.5 compare against
     // backprop (exact for the discretization) instead.
     let bp =
-        prob.sensitivity_sum(&SensAlg::Backprop { method: Method::MilsteinIto }, step).unwrap();
+        prob.sensitivity_sum(&SensAlg::backprop(Method::MilsteinIto), step).unwrap();
     for j in 0..theta.len() {
         let rel = (out.dtheta[j] - bp.dtheta[j]).abs() / bp.dtheta[j].abs().max(1e-2);
         assert!(rel < 0.05, "θ[{j}]: adjoint {} vs backprop {}", out.dtheta[j], bp.dtheta[j]);

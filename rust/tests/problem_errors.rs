@@ -1,7 +1,10 @@
 //! Coverage for every `ProblemError` path of the sensitivity API: the
 //! validation that replaced the legacy mid-solve panics must fire *before
 //! any integration starts*, with the right variant, for every estimator
-//! family and noise spec.
+//! family — plus the acceptance side of the contract: every in-tree noise
+//! spec (stored path, virtual tree, mirrored either way) is deterministic
+//! to replay, so no current estimator/spec combination is rejected for
+//! its noise.
 
 use sdegrad::adjoint::AdjointConfig;
 use sdegrad::api::{NoiseSpec, ProblemError, SdeProblem, SensAlg, StepControl};
@@ -161,47 +164,59 @@ fn milstein_backprop_requires_ito_correction_vjp_but_euler_does_not() {
     let sde = ItoNoCorrection;
     let p = prob(&sde);
     let err = p
-        .sensitivity_sum(&SensAlg::Backprop { method: Method::MilsteinIto }, STEPS)
+        .sensitivity_sum(&SensAlg::backprop(Method::MilsteinIto), STEPS)
         .unwrap_err();
     assert_eq!(err, ProblemError::MissingItoCorrectionVjp { algorithm: "Backprop" });
     // Euler backprop never touches second derivatives of σ: it must run.
-    let ok = p.sensitivity_sum(&SensAlg::Backprop { method: Method::EulerMaruyama }, STEPS);
+    let ok = p.sensitivity_sum(&SensAlg::backprop(Method::EulerMaruyama), STEPS);
     assert!(ok.is_ok(), "euler backprop should not need the correction VJP: {ok:?}");
 }
 
 // ---------------------------------------------------------------------------
-// UnsupportedNoise — the taped family cannot honor tree/mirror specs.
+// Noise replay — every in-tree spec is deterministic, so the taped family
+// honors tree and mirror specs instead of rejecting them.
 // ---------------------------------------------------------------------------
 
 #[test]
-fn taped_estimators_reject_virtual_tree_noise() {
+fn taped_estimators_accept_virtual_tree_noise() {
+    // The virtual tree is a pure function of (key, t): any segment replay
+    // is bit-identical to the first pass by construction, so the taped
+    // family runs on it — and is run-to-run deterministic.
     let sde = ItoNoCorrection;
     let p = prob(&sde).noise(NoiseSpec::VirtualTree { tol: 1e-8 });
     for alg in [
-        SensAlg::Backprop { method: Method::EulerMaruyama },
+        SensAlg::backprop(Method::EulerMaruyama),
         SensAlg::ForwardPathwise,
     ] {
-        let err = p.sensitivity_sum(&alg, STEPS).unwrap_err();
-        assert_eq!(
-            err,
-            ProblemError::UnsupportedNoise { algorithm: alg.name() },
-            "alg {}",
-            alg.name()
-        );
-        assert!(err.to_string().contains("stored path"), "msg: {err}");
+        let a = p
+            .sensitivity_sum(&alg, STEPS)
+            .unwrap_or_else(|e| panic!("{} must accept tree noise: {e}", alg.name()));
+        let b = p.sensitivity_sum(&alg, STEPS).unwrap();
+        assert_eq!(a.dtheta, b.dtheta, "alg {}", alg.name());
+        assert_eq!(a.dz0, b.dz0, "alg {}", alg.name());
     }
 }
 
 #[test]
-fn taped_estimators_reject_mirrored_problems() {
+fn taped_estimators_accept_mirrored_problems() {
+    // Mirroring is a deterministic negation of the realized path — equally
+    // replayable. The mirrored run must realize the negated path (and, in
+    // general, different gradients) while both runs succeed.
     let sde = ItoNoCorrection;
-    let p = prob(&sde).mirror(true);
+    let base = prob(&sde);
+    let mirrored = prob(&sde).mirror(true);
     for alg in [
-        SensAlg::Backprop { method: Method::EulerMaruyama },
+        SensAlg::backprop(Method::EulerMaruyama),
         SensAlg::ForwardPathwise,
     ] {
-        let err = p.sensitivity_sum(&alg, STEPS).unwrap_err();
-        assert_eq!(err, ProblemError::UnsupportedNoise { algorithm: alg.name() });
+        let plus = base
+            .sensitivity_sum(&alg, STEPS)
+            .unwrap_or_else(|e| panic!("{}: {e}", alg.name()));
+        let minus = mirrored
+            .sensitivity_sum(&alg, STEPS)
+            .unwrap_or_else(|e| panic!("{} must accept mirror: {e}", alg.name()));
+        assert_eq!(plus.w_terminal[0], -minus.w_terminal[0], "alg {}", alg.name());
+        assert_ne!(plus.dtheta, minus.dtheta, "alg {}", alg.name());
     }
 }
 
@@ -224,11 +239,25 @@ fn adjoint_family_accepts_virtual_tree_noise() {
 fn backprop_rejects_non_backproppable_schemes() {
     let sde = ItoNoCorrection;
     let p = prob(&sde);
-    for method in [Method::Heun, Method::MilsteinStrat] {
-        let err = p.sensitivity_sum(&SensAlg::Backprop { method }, STEPS).unwrap_err();
-        assert_eq!(err, ProblemError::UnsupportedMethod { algorithm: "Backprop", method });
-        assert!(err.to_string().contains(method.name()), "msg: {err}");
-    }
+    let method = Method::MilsteinStrat;
+    let err = p.sensitivity_sum(&SensAlg::backprop(method), STEPS).unwrap_err();
+    assert_eq!(err, ProblemError::UnsupportedMethod { algorithm: "Backprop", method });
+    assert!(err.to_string().contains(method.name()), "msg: {err}");
+}
+
+#[test]
+fn heun_backprop_needs_correction_vjp_only_for_ito_native_systems() {
+    // Heun steps the Stratonovich form: an Itô-native SDE is first
+    // drift-converted, and differentiating that conversion needs the
+    // Itô-correction VJP.
+    let sde = ItoNoCorrection;
+    let err =
+        prob(&sde).sensitivity_sum(&SensAlg::backprop(Method::Heun), STEPS).unwrap_err();
+    assert_eq!(err, ProblemError::MissingItoCorrectionVjp { algorithm: "Backprop" });
+    // Stratonovich-native systems are Heun's natural pairing: must run.
+    let sde = StratNative;
+    let ok = prob(&sde).sensitivity_sum(&SensAlg::backprop(Method::Heun), STEPS);
+    assert!(ok.is_ok(), "heun backprop on a Stratonovich-native SDE: {ok:?}");
 }
 
 #[test]
@@ -236,7 +265,7 @@ fn taped_estimators_require_ito_native_systems() {
     let sde = StratNative;
     let p = prob(&sde);
     let err = p
-        .sensitivity_sum(&SensAlg::Backprop { method: Method::EulerMaruyama }, STEPS)
+        .sensitivity_sum(&SensAlg::backprop(Method::EulerMaruyama), STEPS)
         .unwrap_err();
     assert_eq!(
         err,
