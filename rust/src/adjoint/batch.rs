@@ -27,7 +27,7 @@
 
 use super::stochastic::Noise;
 use crate::brownian::{BatchBrownian, BrownianMotion};
-use crate::sde::BatchSdeVjp;
+use crate::sde::{BatchSdeVjp, KernelTier};
 use crate::solvers::{batch_grid_core, uniform_grid, BatchForwardFunc, Method, SolveStats};
 
 /// Evaluation interface of the batched augmented backward dynamics: what
@@ -80,6 +80,7 @@ pub struct BatchAdjointOps<'a, S: BatchSdeVjp + ?Sized> {
     theta: Vec<f64>,
     d: usize,
     batch: usize,
+    tier: KernelTier,
     neg_a: Vec<f64>,
     weighted_a: Vec<f64>,
     scratch_z: Vec<f64>,
@@ -95,6 +96,13 @@ pub struct BatchAdjointOps<'a, S: BatchSdeVjp + ?Sized> {
 
 impl<'a, S: BatchSdeVjp + ?Sized> BatchAdjointOps<'a, S> {
     pub fn new(sde: &'a S, theta: &[f64], batch: usize) -> Self {
+        Self::new_tier(sde, theta, batch, KernelTier::Exact)
+    }
+
+    /// Like [`Self::new`] with an explicit kernel tier: the fast tier
+    /// routes the coefficient evaluations and VJP sweeps through the
+    /// `*_fast` kernels of [`BatchSdeVjp`].
+    pub fn new_tier(sde: &'a S, theta: &[f64], batch: usize, tier: KernelTier) -> Self {
         let d = sde.state_dim();
         let p = sde.param_dim();
         assert_eq!(theta.len(), p, "BatchAdjointOps: theta length mismatch");
@@ -104,6 +112,7 @@ impl<'a, S: BatchSdeVjp + ?Sized> BatchAdjointOps<'a, S> {
             theta: theta.to_vec(),
             d,
             batch,
+            tier,
             neg_a: vec![0.0; batch * d],
             weighted_a: vec![0.0; batch * d],
             scratch_z: vec![0.0; batch * d],
@@ -129,21 +138,39 @@ impl<'a, S: BatchSdeVjp + ?Sized> BatchAdjointOps<'a, S> {
         fth_out: &mut [f64],
     ) {
         self.nfe_drift += 1;
-        self.sde.drift_stratonovich_batch(t, z, &self.theta, b_out, &mut self.strat);
+        match self.tier {
+            KernelTier::Exact => {
+                self.sde.drift_stratonovich_batch(t, z, &self.theta, b_out, &mut self.strat)
+            }
+            KernelTier::Fast => {
+                self.sde.drift_stratonovich_batch_fast(t, z, &self.theta, b_out, &mut self.strat)
+            }
+        }
         for (n, v) in self.neg_a.iter_mut().zip(a) {
             *n = -v;
         }
         fa_out.fill(0.0);
         fth_out.fill(0.0);
-        self.sde.drift_vjp_stratonovich_batch(
-            t,
-            z,
-            &self.theta,
-            &self.neg_a,
-            fa_out,
-            fth_out,
-            &mut self.vjp_scratch,
-        );
+        match self.tier {
+            KernelTier::Exact => self.sde.drift_vjp_stratonovich_batch(
+                t,
+                z,
+                &self.theta,
+                &self.neg_a,
+                fa_out,
+                fth_out,
+                &mut self.vjp_scratch,
+            ),
+            KernelTier::Fast => self.sde.drift_vjp_stratonovich_batch_fast(
+                t,
+                z,
+                &self.theta,
+                &self.neg_a,
+                fa_out,
+                fth_out,
+                &mut self.vjp_scratch,
+            ),
+        }
     }
 
     /// Diffusion-side evaluation at `(t, z, a)` with per-path channel
@@ -162,7 +189,10 @@ impl<'a, S: BatchSdeVjp + ?Sized> BatchAdjointOps<'a, S> {
         gth_out: &mut [f64],
     ) {
         self.nfe_diffusion += 1;
-        self.sde.diffusion_batch(t, z, &self.theta, s_out);
+        match self.tier {
+            KernelTier::Exact => self.sde.diffusion_batch(t, z, &self.theta, s_out),
+            KernelTier::Fast => self.sde.diffusion_batch_fast(t, z, &self.theta, s_out),
+        }
         for i in 0..self.batch * self.d {
             self.neg_a[i] = -a[i];
             self.weighted_a[i] = -a[i] * dw[i];
@@ -173,17 +203,45 @@ impl<'a, S: BatchSdeVjp + ?Sized> BatchAdjointOps<'a, S> {
         // each call land in scratch and are discarded — same two-call
         // structure as the scalar AdjointOps.
         self.scratch_p.fill(0.0);
-        self.sde
-            .diffusion_vjp_batch(t, z, &self.theta, &self.neg_a, ga_out, &mut self.scratch_p);
         self.scratch_z.fill(0.0);
-        self.sde.diffusion_vjp_batch(
-            t,
-            z,
-            &self.theta,
-            &self.weighted_a,
-            &mut self.scratch_z,
-            gth_out,
-        );
+        match self.tier {
+            KernelTier::Exact => {
+                self.sde.diffusion_vjp_batch(
+                    t,
+                    z,
+                    &self.theta,
+                    &self.neg_a,
+                    ga_out,
+                    &mut self.scratch_p,
+                );
+                self.sde.diffusion_vjp_batch(
+                    t,
+                    z,
+                    &self.theta,
+                    &self.weighted_a,
+                    &mut self.scratch_z,
+                    gth_out,
+                );
+            }
+            KernelTier::Fast => {
+                self.sde.diffusion_vjp_batch_fast(
+                    t,
+                    z,
+                    &self.theta,
+                    &self.neg_a,
+                    ga_out,
+                    &mut self.scratch_p,
+                );
+                self.sde.diffusion_vjp_batch_fast(
+                    t,
+                    z,
+                    &self.theta,
+                    &self.weighted_a,
+                    &mut self.scratch_z,
+                    gth_out,
+                );
+            }
+        }
     }
 }
 
@@ -399,6 +457,7 @@ pub(crate) fn batch_adjoint_sum_core<S: BatchSdeVjp + ?Sized>(
     n_steps: usize,
     noise: &mut BatchBrownian<Noise>,
     forward_method: Method,
+    tier: KernelTier,
 ) -> BatchGradientOutput {
     let d = sde.state_dim();
     let p = sde.param_dim();
@@ -409,7 +468,7 @@ pub(crate) fn batch_adjoint_sum_core<S: BatchSdeVjp + ?Sized>(
     // Forward pass: terminal states only.
     let mut z_t = vec![0.0; batch * d];
     let forward_stats = {
-        let mut sys = BatchForwardFunc::for_method(sde, theta, batch, forward_method);
+        let mut sys = BatchForwardFunc::for_method_tier(sde, theta, batch, forward_method, tier);
         batch_grid_core(&mut sys, forward_method, z0, &grid, noise, &mut z_t)
     };
 
@@ -429,7 +488,7 @@ pub(crate) fn batch_adjoint_sum_core<S: BatchSdeVjp + ?Sized>(
     }
 
     // Backward pass over the reversed grid.
-    let mut ops = BatchAdjointOps::new(sde, theta, batch);
+    let mut ops = BatchAdjointOps::new_tier(sde, theta, batch, tier);
     let mut sc = BatchBackwardScratch::new(d, p, batch);
     let rgrid: Vec<f64> = grid.iter().rev().copied().collect();
     let mut backward_stats = SolveStats::default();

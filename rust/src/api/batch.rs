@@ -42,7 +42,7 @@ use crate::adjoint::checkpoint::batch_checkpoint_backprop_core;
 use crate::adjoint::stochastic::Noise;
 use crate::adjoint::{AdjointConfig, Checkpointing};
 use crate::brownian::{BatchBrownian, BrownianMotion};
-use crate::sde::{BatchSde, BatchSdeVjp};
+use crate::sde::{BatchSde, BatchSdeVjp, KernelTier};
 use crate::solvers::{
     batch_grid_core, batch_grid_saving_core, uniform_grid, BatchForwardFunc, Method,
 };
@@ -174,7 +174,7 @@ fn solve_chunk<S: BatchSde + ?Sized>(
         row.copy_from_slice(&p.z0);
     }
     let mut bm = noise_fleet(problems, d);
-    let mut sys = BatchForwardFunc::for_method(p0.sde, &p0.theta, bsz, opts.method);
+    let mut sys = BatchForwardFunc::for_method_tier(p0.sde, &p0.theta, bsz, opts.method, opts.tier);
 
     match opts.save {
         SaveAt::Final => {
@@ -244,6 +244,27 @@ pub fn sensitivity_batch<'a, S>(
 where
     S: BatchSdeVjp + Sync + ?Sized,
 {
+    sensitivity_batch_tier(problems, alg, step, KernelTier::Exact)
+}
+
+/// [`sensitivity_batch`] with an explicit kernel tier for the batched
+/// stochastic adjoint. [`KernelTier::Fast`] routes the forward solve and
+/// the augmented backward sweep through the fused/fast VJP kernels
+/// (validated to tolerance in `tests/fast_tier.rs`).
+/// [`SensAlg::Backprop`] always runs the exact tier — the checkpointed
+/// tape is pinned bit-identical to full-tape backprop and serves as a
+/// bit-exactness oracle, so it does not relax float order. The per-path
+/// fallback estimators likewise ignore the tier (the fast tier is a
+/// property of batched sweeps).
+pub fn sensitivity_batch_tier<'a, S>(
+    problems: &[SdeProblem<'a, S>],
+    alg: &SensAlg,
+    step: StepControl,
+    tier: KernelTier,
+) -> Vec<Result<Gradients, ProblemError>>
+where
+    S: BatchSdeVjp + Sync + ?Sized,
+{
     if problems.is_empty() {
         return Vec::new();
     }
@@ -272,7 +293,9 @@ where
     par_map(ranges.len(), |c| {
         let (lo, hi) = ranges[c];
         match batched {
-            BatchedGradAlg::Adjoint(cfg) => sensitivity_chunk(&problems[lo..hi], &cfg, n_steps),
+            BatchedGradAlg::Adjoint(cfg) => {
+                sensitivity_chunk(&problems[lo..hi], &cfg, n_steps, tier)
+            }
             BatchedGradAlg::Backprop { method, checkpointing } => {
                 backprop_chunk(&problems[lo..hi], method, checkpointing, n_steps)
             }
@@ -302,6 +325,7 @@ fn sensitivity_chunk<S: BatchSdeVjp + ?Sized>(
     problems: &[SdeProblem<'_, S>],
     cfg: &crate::adjoint::AdjointConfig,
     n_steps: usize,
+    tier: KernelTier,
 ) -> Vec<Gradients> {
     let p0 = &problems[0];
     let d = p0.dim();
@@ -324,6 +348,7 @@ fn sensitivity_chunk<S: BatchSdeVjp + ?Sized>(
         n_steps,
         &mut bm,
         cfg.forward_method,
+        tier,
     );
 
     bm.into_sources()

@@ -4,7 +4,7 @@
 use super::problem::SdeProblem;
 use crate::adjoint::stochastic::Noise;
 use crate::brownian::BrownianMotion;
-use crate::sde::{ForwardFunc, Sde};
+use crate::sde::{ForwardFunc, KernelTier, Sde};
 use crate::solvers::{
     adaptive_core, grid_core, grid_saving_core, uniform_grid, AdaptiveConfig, Method, SolveStats,
 };
@@ -60,6 +60,14 @@ pub struct SolveOptions<'t> {
     pub method: Method,
     pub step: StepControl,
     pub save: SaveAt<'t>,
+    /// Kernel tier for **batched** execution ([`super::solve_batch`] and
+    /// friends). [`KernelTier::Exact`] (the default) keeps the
+    /// bit-identical-to-scalar guarantee; [`KernelTier::Fast`] routes the
+    /// batch through autovectorization-friendly fused kernels validated
+    /// to tolerance. Scalar (per-path) solves always run the exact
+    /// engine — the tier is a property of the batched sweep, so the
+    /// scalar fallback paths ignore it.
+    pub tier: KernelTier,
 }
 
 impl Default for SolveOptions<'static> {
@@ -68,6 +76,7 @@ impl Default for SolveOptions<'static> {
             method: Method::MilsteinIto,
             step: StepControl::Steps(100),
             save: SaveAt::Final,
+            tier: KernelTier::Exact,
         }
     }
 }
@@ -75,12 +84,22 @@ impl Default for SolveOptions<'static> {
 impl SolveOptions<'static> {
     /// Fixed-grid options: `n_steps` uniform steps, final state only.
     pub fn fixed(method: Method, n_steps: usize) -> Self {
-        SolveOptions { method, step: StepControl::Steps(n_steps), save: SaveAt::Final }
+        SolveOptions {
+            method,
+            step: StepControl::Steps(n_steps),
+            save: SaveAt::Final,
+            tier: KernelTier::Exact,
+        }
     }
 
     /// Adaptive options: PI-controlled stepping, final state only.
     pub fn adaptive(method: Method, cfg: AdaptiveConfig) -> Self {
-        SolveOptions { method, step: StepControl::Adaptive(cfg), save: SaveAt::Final }
+        SolveOptions {
+            method,
+            step: StepControl::Adaptive(cfg),
+            save: SaveAt::Final,
+            tier: KernelTier::Exact,
+        }
     }
 }
 
@@ -88,7 +107,13 @@ impl<'t> SolveOptions<'t> {
     /// Replace the save specification (changes the lifetime parameter, so
     /// it rebuilds rather than mutates).
     pub fn save<'u>(self, save: SaveAt<'u>) -> SolveOptions<'u> {
-        SolveOptions { method: self.method, step: self.step, save }
+        SolveOptions { method: self.method, step: self.step, save, tier: self.tier }
+    }
+
+    /// Select the kernel tier for batched execution.
+    pub fn tier(mut self, tier: KernelTier) -> Self {
+        self.tier = tier;
+        self
     }
 }
 

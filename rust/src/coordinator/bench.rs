@@ -24,22 +24,29 @@
 //! prints a markdown table (appended to the job summary when
 //! `--summary`/`GITHUB_STEP_SUMMARY` is set), and exits nonzero when a
 //! **batched** paths/sec or grad-paths/sec row regresses by more than the
-//! threshold (default 25%). Refreshing the baseline is a documented
-//! manual step, run on the reference machine — the committed baseline
-//! holds BOTH harnesses' rows (per-record `"bench"` tags), so refresh
-//! MERGES, never replaces with a single harness's file:
+//! threshold (default 25%). Refreshing the baseline is one command, run
+//! on the reference machine — the committed baseline holds BOTH
+//! harnesses' rows (per-record `"bench"` tags), and [`run_baseline`]
+//! runs both and writes the merged file directly:
 //!
 //! ```text
-//! cargo run --release -- bench throughput --quick
-//! cargo run --release -- bench serve --quick
-//! # merge BENCH_throughput.json + BENCH_serve.json rows into
-//! # BENCH_baseline.json, tagging each row with its harness
-//! # ("bench": "throughput" / "serve"), drop the placeholder flag, commit.
+//! cargo run --release -- bench baseline --quick
+//! # rewrites BENCH_baseline.json (no placeholder flag) — commit it.
 //! ```
 //!
 //! A baseline carrying `"placeholder": true` (the repo's initial state,
 //! before anyone has measured on the reference machine) is reported but
-//! never fails the job.
+//! never fails the job — and CI fails main outright if the flag is ever
+//! reintroduced there (the `baseline-measured` guard in rust.yml).
+//!
+//! ## Kernel tiers in the bench
+//!
+//! Every batched workload is measured twice: on the default **exact**
+//! tier (bit-identical to the per-path engine — asserted) and on the
+//! opt-in **fast** tier (`{problem}_fast` rows: fused/blocked kernels,
+//! validated against exact to [`FAST_RTOL`] relative before timing).
+//! Fast rows keep engine `"batched"` so `bench compare` gates them
+//! identically.
 //!
 //! `sdegrad bench serve` ([`run_serve_bench`]) is the serving load
 //! harness: an in-process `sdegrad serve` instance under concurrent
@@ -51,17 +58,37 @@
 
 use crate::adjoint::AdjointConfig;
 use crate::api::{
-    sensitivity_batch, sensitivity_batch_per_path, solve_batch, solve_batch_local,
-    solve_batch_per_path, Checkpointing, SdeProblem, SensAlg, SolveOptions, StepControl,
+    sensitivity_batch, sensitivity_batch_per_path, sensitivity_batch_tier, solve_batch,
+    solve_batch_local, solve_batch_per_path, Checkpointing, SdeProblem, SensAlg, SolveOptions,
+    StepControl,
 };
 use crate::latent::{LatentSdeConfig, LatentSdeModel, PosteriorSde};
 use crate::metrics::json::{json_num, json_number_field, json_str, json_string_field};
 use crate::metrics::Stopwatch;
 use crate::prng::PrngKey;
 use crate::sde::problems::{sample_experiment_setup, Example1};
-use crate::sde::{BatchSdeVjp, ReplicatedSde};
+use crate::sde::{BatchSdeVjp, KernelTier, ReplicatedSde};
 use crate::solvers::Method;
 use std::io::Write;
+
+/// Relative agreement the fast tier must show against the exact tier
+/// before its rows are timed. Fast kernels only reassociate and fuse
+/// within-row arithmetic, so per-step drift is O(ulp); over the longest
+/// bench horizon (1000 Milstein steps of multiplicative noise) the
+/// accumulated divergence stays far inside this budget.
+pub const FAST_RTOL: f64 = 1e-6;
+
+/// Elementwise relative comparison for the fast-tier validity gates.
+fn assert_close_rel(a: &[f64], b: &[f64], rtol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = x.abs().max(y.abs()).max(1.0);
+        assert!(
+            (x - y).abs() <= rtol * scale,
+            "{what}[{i}]: exact {x} vs fast {y} (rtol {rtol})"
+        );
+    }
+}
 
 /// One measured configuration.
 #[derive(Clone, Debug)]
@@ -182,6 +209,58 @@ pub fn run_throughput(quick: bool) -> Vec<ThroughputRow> {
         true,
     );
 
+    // 1a. The same GBM fleet through the opt-in fast kernel tier
+    // (`gbm_d10_fast`): fused drift+diffusion and blocked reductions.
+    // Engine stays "batched" so `bench compare` gates these rows like
+    // the exact ones. Validity gate before timing: every saved state and
+    // every gradient must agree with the exact tier to FAST_RTOL.
+    {
+        let replicates = prob.replicates(PrngKey::from_seed(0x7140), n_paths);
+        let opts = SolveOptions::fixed(Method::MilsteinIto, n_steps);
+        let opts_fast = SolveOptions::fixed(Method::MilsteinIto, n_steps).tier(KernelTier::Fast);
+        let exact = solve_batch(&replicates, &opts);
+        let fast = solve_batch(&replicates, &opts_fast);
+        for (a, b) in exact.iter().zip(&fast) {
+            assert_close_rel(&a.states, &b.states, FAST_RTOL, "gbm_d10_fast solve");
+        }
+        let t_fast =
+            time_best_of(reps, || solve_batch(&replicates, &opts_fast)[0].final_state()[0]);
+        rows.push(ThroughputRow {
+            problem: "gbm_d10_fast",
+            metric: "paths_per_sec",
+            engine: "batched",
+            paths: n_paths,
+            steps: n_steps,
+            value_per_sec: n_paths as f64 / t_fast,
+        });
+
+        let alg = SensAlg::StochasticAdjoint(AdjointConfig {
+            forward_method: Method::MilsteinIto,
+            ..Default::default()
+        });
+        let step = StepControl::Steps(n_steps);
+        let g_exact = sensitivity_batch(&replicates, &alg, step);
+        let g_fast = sensitivity_batch_tier(&replicates, &alg, step, KernelTier::Fast);
+        for (a, b) in g_exact.iter().zip(&g_fast) {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_close_rel(&a.dtheta, &b.dtheta, FAST_RTOL, "gbm_d10_fast gradient");
+        }
+        let t_gfast = time_best_of(reps, || {
+            sensitivity_batch_tier(&replicates, &alg, step, KernelTier::Fast)[0]
+                .as_ref()
+                .unwrap()
+                .dtheta[0]
+        });
+        rows.push(ThroughputRow {
+            problem: "gbm_d10_fast",
+            metric: "grad_paths_per_sec",
+            engine: "batched",
+            paths: n_paths,
+            steps: n_steps,
+            value_per_sec: n_paths as f64 / t_gfast,
+        });
+    }
+
     // 1b. Checkpointed backprop on the same GBM fleet: the O(√n)-memory
     // taped estimator (`Checkpointing::Sqrt`) whose gradients are
     // exact-f64-identical to the full tape (asserted below, so the gated
@@ -286,6 +365,28 @@ pub fn run_throughput(quick: bool) -> Vec<ThroughputRow> {
         });
     }
 
+    // 2a. The neural workload on the fast tier (`neural_posterior_fast`):
+    // the blocked matrix–matrix MLP kernels are where the tier earns its
+    // keep. Same validity gate: tolerance against the exact solution.
+    {
+        let nn_opts_fast = SolveOptions::fixed(Method::Heun, nn_steps).tier(KernelTier::Fast);
+        let fast = solve_batch_local(&nn_replicates, &nn_opts_fast);
+        for (a, b) in batched.iter().zip(&fast) {
+            assert_close_rel(&a.states, &b.states, FAST_RTOL, "neural_posterior_fast solve");
+        }
+        let t_fast = time_best_of(reps, || {
+            solve_batch_local(&nn_replicates, &nn_opts_fast)[0].final_state()[0]
+        });
+        rows.push(ThroughputRow {
+            problem: "neural_posterior_fast",
+            metric: "paths_per_sec",
+            engine: "batched",
+            paths: nn_paths,
+            steps: nn_steps,
+            value_per_sec: nn_paths as f64 / t_fast,
+        });
+    }
+
     println!(
         "{:<18} {:>20} {:>10} {:>7} {:>7} {:>14}",
         "problem", "metric", "engine", "paths", "steps", "per_sec"
@@ -306,6 +407,23 @@ pub fn run_throughput(quick: bool) -> Vec<ThroughputRow> {
             if let (Some(b), Some(s)) = (get("batched"), get("per_path")) {
                 println!("speedup {problem}/{metric}: {:.2}x", b / s);
             }
+        }
+    }
+    // Fast-tier acceptance signal: fast vs exact, batched engine on both
+    // sides (the ≥1.5× target for grad paths lives in the CI summary, not
+    // a hard assert — hardware varies).
+    for (fast_p, exact_p, metric) in [
+        ("gbm_d10_fast", "gbm_d10", "paths_per_sec"),
+        ("gbm_d10_fast", "gbm_d10", "grad_paths_per_sec"),
+        ("neural_posterior_fast", "neural_posterior", "paths_per_sec"),
+    ] {
+        let get = |problem: &str| {
+            rows.iter()
+                .find(|r| r.metric == metric && r.problem == problem && r.engine == "batched")
+                .map(|r| r.value_per_sec)
+        };
+        if let (Some(f), Some(e)) = (get(fast_p), get(exact_p)) {
+            println!("fast-tier speedup {exact_p}/{metric}: {:.2}x", f / e);
         }
     }
 
@@ -363,6 +481,13 @@ fn write_json(
 /// "batched"), latency rows ride along ungated (engine "observed",
 /// values in microseconds).
 pub fn run_serve_bench(quick: bool) -> Vec<ThroughputRow> {
+    run_serve_bench_tier(quick, KernelTier::Exact)
+}
+
+/// [`run_serve_bench`] with an explicit kernel tier (`sdegrad bench
+/// serve --tier fast`). The scalar oracle scores under the same tier,
+/// so the byte-identity gate holds on both tiers.
+pub fn run_serve_bench_tier(quick: bool, tier: KernelTier) -> Vec<ThroughputRow> {
     use crate::latent::{LatentSdeConfig, LatentSdeModel};
     use crate::serve::batcher::scalar_response;
     use crate::serve::client::post as http_post;
@@ -370,6 +495,7 @@ pub fn run_serve_bench(quick: bool) -> Vec<ThroughputRow> {
     use std::time::Instant;
 
     super::repro::headline("Serving: dynamic micro-batching load harness");
+    println!("kernel tier: {}", tier.name());
     let (n_clients, reqs_per_client) = if quick { (4, 20) } else { (8, 100) };
 
     let cfg = LatentSdeConfig {
@@ -416,6 +542,7 @@ pub fn run_serve_bench(quick: bool) -> Vec<ThroughputRow> {
             max_batch: 16,
             max_wait_us: 200,
             cache_capacity: 0,
+            tier,
             ..Default::default()
         },
     )
@@ -436,7 +563,7 @@ pub fn run_serve_bench(quick: bool) -> Vec<ThroughputRow> {
             let (status, served) = http_post(addr, path, &body).expect("bench request failed");
             assert_eq!(status, 200, "bench {path} request failed: {served:?}");
             let req = protocol::parse_request(path, &body).unwrap();
-            let expected = scalar_response(entry, &req).unwrap();
+            let expected = scalar_response(entry, &req, tier).unwrap();
             assert_eq!(served, expected, "served {path} diverged from the scalar oracle");
         }
     }
@@ -508,6 +635,69 @@ pub fn run_serve_bench(quick: bool) -> Vec<ThroughputRow> {
     write_json("BENCH_serve.json", "serve", quick, &rows).expect("writing BENCH_serve.json");
     println!("(JSON: BENCH_serve.json)");
     rows
+}
+
+// ---------------------------------------------------------------------
+// `sdegrad bench baseline` — measure + rewrite the regression baseline.
+// ---------------------------------------------------------------------
+
+/// `sdegrad bench baseline`: run BOTH harnesses on this machine and
+/// rewrite the merged committed baseline in one step (per-row `"bench"`
+/// tags, **no** placeholder flag). This replaces the old hand-merge
+/// instructions — refreshing the baseline is now a single command on
+/// the reference machine, so the placeholder state cannot persist for
+/// lack of tooling.
+pub fn run_baseline(quick: bool, out: &str) {
+    super::repro::headline("Measuring the bench regression baseline");
+    let throughput = run_throughput(quick);
+    let serve = run_serve_bench(quick);
+    let parts: [(&str, &[ThroughputRow]); 2] =
+        [("throughput", &throughput), ("serve", &serve)];
+    write_baseline_json(out, quick, &parts).expect("writing baseline");
+    println!(
+        "wrote {} measured rows to {out} (no placeholder flag) — commit it to update \
+         the gate.",
+        throughput.len() + serve.len()
+    );
+}
+
+/// Write the merged baseline file: [`write_json`]'s shape plus a
+/// per-record `"bench"` tag, which is how `bench compare --subset` tells
+/// the harnesses' rows apart in one file.
+pub fn write_baseline_json(
+    path: &str,
+    quick: bool,
+    parts: &[(&str, &[ThroughputRow])],
+) -> std::io::Result<()> {
+    let total: usize = parts.iter().map(|(_, rows)| rows.len()).sum();
+    let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(out, "{{")?;
+    writeln!(out, "  \"bench\": \"baseline\",")?;
+    writeln!(out, "  \"quick\": {quick},")?;
+    writeln!(out, "  \"root_seed\": {},", 0x7140)?;
+    writeln!(out, "  \"results\": [")?;
+    let mut i = 0usize;
+    for (tag, rows) in parts {
+        for r in *rows {
+            i += 1;
+            let comma = if i == total { "" } else { "," };
+            writeln!(
+                out,
+                "    {{\"bench\": {}, \"problem\": {}, \"metric\": {}, \"engine\": {}, \
+                 \"paths\": {}, \"steps\": {}, \"value_per_sec\": {}}}{comma}",
+                json_str(tag),
+                json_str(r.problem),
+                json_str(r.metric),
+                json_str(r.engine),
+                r.paths,
+                r.steps,
+                json_num(r.value_per_sec),
+            )?;
+        }
+    }
+    writeln!(out, "  ]")?;
+    writeln!(out, "}}")?;
+    out.flush()
 }
 
 // ---------------------------------------------------------------------
@@ -827,9 +1017,24 @@ mod tests {
     fn quick_throughput_produces_rows_and_artifact() {
         let rows = run_throughput(true);
         // 2 engines × (gbm solve + gbm grad + ckpt grad + nn solve) = 8
-        // timing rows, plus the 2 observed checkpoint memory rows.
-        assert_eq!(rows.len(), 10);
+        // timing rows, plus the 2 observed checkpoint memory rows, plus
+        // the 3 fast-tier rows (gbm solve + gbm grad + nn solve).
+        assert_eq!(rows.len(), 13);
         assert!(rows.iter().all(|r| r.value_per_sec.is_finite() && r.value_per_sec > 0.0));
+        // The fast-tier rows are gate-shaped: engine "batched" with a
+        // gated metric, under the `{problem}_fast` name.
+        for (problem, metric) in [
+            ("gbm_d10_fast", "paths_per_sec"),
+            ("gbm_d10_fast", "grad_paths_per_sec"),
+            ("neural_posterior_fast", "paths_per_sec"),
+        ] {
+            assert!(
+                rows.iter().any(|r| r.problem == problem
+                    && r.metric == metric
+                    && r.engine == "batched"),
+                "missing fast-tier row {problem}/{metric}"
+            );
+        }
         // The checkpointed row is gate-shaped (batched grad_paths_per_sec)
         // and its observability rows carry the schedule's memory trade.
         assert!(rows.iter().any(|r| r.problem == "gbm_d10_ckpt"
@@ -850,6 +1055,41 @@ mod tests {
             assert_eq!(rec.metric, row.metric);
             assert_eq!(rec.engine, row.engine);
         }
+    }
+
+    /// The baseline writer's output must round-trip through the gate's
+    /// parser with per-row bench tags intact (what `--subset` keys on)
+    /// and must never carry the placeholder flag.
+    #[test]
+    fn baseline_writer_round_trips_with_per_row_tags() {
+        let tp = [ThroughputRow {
+            problem: "gbm_d10",
+            metric: "paths_per_sec",
+            engine: "batched",
+            paths: 256,
+            steps: 200,
+            value_per_sec: 1234.5,
+        }];
+        let sv = [ThroughputRow {
+            problem: "serve_elbo",
+            metric: "req_per_sec",
+            engine: "batched",
+            paths: 80,
+            steps: 12,
+            value_per_sec: 321.0,
+        }];
+        let path = std::env::temp_dir().join("sdegrad_baseline_writer_test.json");
+        let path = path.to_str().unwrap();
+        let parts: [(&str, &[ThroughputRow]); 2] = [("throughput", &tp), ("serve", &sv)];
+        write_baseline_json(path, true, &parts).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        let parsed = parse_bench_json(&text).expect("baseline parses");
+        assert!(!parsed.placeholder);
+        assert_eq!(parsed.records.len(), 2);
+        assert_eq!(parsed.records[0].bench, "throughput");
+        assert_eq!(parsed.records[1].bench, "serve");
+        assert_eq!(filter_bench(&parsed, "serve").records.len(), 1);
+        let _ = std::fs::remove_file(path);
     }
 
     fn bench_json(rows: &[(&str, &str, &str, f64)], placeholder: bool) -> String {

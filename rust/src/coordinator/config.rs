@@ -3,6 +3,8 @@
 
 use std::collections::HashMap;
 
+use crate::sde::KernelTier;
+
 /// Trainer hyperparameters (§7.3 defaults: Adam @ 1e-2, 0.999 decay,
 /// KL annealing, ≤400 iterations).
 #[derive(Clone, Copy, Debug)]
@@ -24,6 +26,11 @@ pub struct TrainConfig {
     /// paper training uses 1, larger S tightens the per-iteration
     /// estimate).
     pub elbo_samples: usize,
+    /// Kernel tier for the batched engine (`--tier exact|fast`). `Exact`
+    /// keeps the bit-identical-to-scalar float stream; `Fast` trades that
+    /// for throughput (tolerance-validated kernels). Part of the schedule
+    /// fingerprint: a checkpoint refuses to resume under the other tier.
+    pub tier: KernelTier,
 }
 
 impl Default for TrainConfig {
@@ -41,6 +48,7 @@ impl Default for TrainConfig {
             seed: 0,
             val_every: 20,
             elbo_samples: 1,
+            tier: KernelTier::Exact,
         }
     }
 }
@@ -94,6 +102,10 @@ impl TrainConfig {
             seed: arg(map, "seed", d.seed),
             val_every: arg(map, "val-every", d.val_every),
             elbo_samples: arg(map, "samples", d.elbo_samples),
+            tier: map
+                .get("tier")
+                .and_then(|v| KernelTier::parse(v))
+                .unwrap_or(d.tier),
         }
     }
 }
@@ -127,5 +139,15 @@ mod tests {
     fn arg_fallback_on_garbage() {
         let m = parse_args(&strs(&["--iters", "not-a-number"]));
         assert_eq!(arg(&m, "iters", 42u64), 42);
+    }
+
+    #[test]
+    fn tier_from_args() {
+        let m = parse_args(&strs(&["--tier", "fast"]));
+        assert_eq!(TrainConfig::from_args(&m).tier, KernelTier::Fast);
+        let m = parse_args(&strs(&["--tier", "bogus"]));
+        assert_eq!(TrainConfig::from_args(&m).tier, KernelTier::Exact);
+        let m = parse_args(&strs(&[]));
+        assert_eq!(TrainConfig::from_args(&m).tier, KernelTier::Exact);
     }
 }

@@ -139,7 +139,7 @@ fn epoch_minibatches(
 
 /// FNV-1a over everything that determines the training float stream:
 /// seed, minibatch geometry, solver substeps, LR/KL schedules, sample
-/// count, and the training indices. Stored in the [`TrainState`] so a
+/// count, kernel tier, and the training indices. Stored in the [`TrainState`] so a
 /// checkpoint refuses to resume under a different seed/config/dataset
 /// split (which would silently void the bit-identical-resume contract).
 /// Worker count is deliberately excluded — it never changes a float.
@@ -156,6 +156,7 @@ fn schedule_fingerprint(cfg: &TrainConfig, train_idx: &[usize]) -> u64 {
         cfg.kl_anneal_iters,
         cfg.grad_clip.to_bits(),
         cfg.elbo_samples.max(1) as u64,
+        cfg.tier as u64,
         train_idx.len() as u64,
     ];
     for v in fields.into_iter().chain(train_idx.iter().map(|&i| i as u64)) {
@@ -257,7 +258,7 @@ pub fn train_latent_sde_from(
         }
         let batch = epoch_batches[(iter % bpe) as usize].clone();
         let beta = anneal.weight(iter);
-        let ecfg = ElboConfig { substeps: cfg.substeps, kl_weight: beta };
+        let ecfg = ElboConfig { substeps: cfg.substeps, kl_weight: beta, tier: cfg.tier };
         let (mut grad, loss, lpx, klp, klz, _mse) = batch_gradients(
             model,
             &params,
@@ -299,7 +300,11 @@ pub fn train_latent_sde_from(
         history.push(rec);
 
         if cfg.val_every > 0 && !val_idx.is_empty() && (iter + 1) % cfg.val_every == 0 {
-            let ecfg_val = ElboConfig { substeps: cfg.substeps, kl_weight: cfg.kl_weight };
+            let ecfg_val = ElboConfig {
+                substeps: cfg.substeps,
+                kl_weight: cfg.kl_weight,
+                tier: cfg.tier,
+            };
             let k_val = k_train.fold_in(u64::MAX - iter);
             let report =
                 evaluate(model, &params, dataset, val_idx, k_val, &ecfg_val, n_samples);
@@ -389,7 +394,7 @@ mod tests {
         let (model, ds) = tiny_setup();
         let params = model.init_params(PrngKey::from_seed(2));
         let idx: Vec<usize> = (0..6).collect();
-        let ecfg = ElboConfig { substeps: 3, kl_weight: 0.5 };
+        let ecfg = ElboConfig { substeps: 3, kl_weight: 0.5, ..ElboConfig::default() };
         let key = PrngKey::from_seed(3);
         let (g1, l1, ..) = batch_gradients(&model, &params, &ds, &idx, key, &ecfg, 2, 1);
         let (g4, l4, ..) = batch_gradients(&model, &params, &ds, &idx, key, &ecfg, 2, 4);

@@ -36,6 +36,7 @@ use crate::brownian::{BatchBrownian, BrownianPath};
 use crate::nn::gru::{GruBatchCache, GruStepCache};
 use crate::nn::MlpBatchCache;
 use crate::prng::PrngKey;
+use crate::sde::KernelTier;
 use crate::solvers::{batch_grid_core, uniform_grid, BatchForwardFunc, Method, SolveStats};
 
 /// Per-step ELBO configuration.
@@ -46,11 +47,18 @@ pub struct ElboConfig {
     pub substeps: usize,
     /// KL weight β (validated over {1, 0.1, 0.01, 0.001} in the paper).
     pub kl_weight: f64,
+    /// Kernel tier for the batched net evaluations (encoder, drift /
+    /// diffusion nets, decoder). `Exact` (the default) keeps the
+    /// bit-identical-to-scalar contract; `Fast` routes through the
+    /// reassociated fast kernels, equal to exact only to relative
+    /// tolerance. The scalar [`elbo_step`] ignores this field — the fast
+    /// tier is a property of batched sweeps.
+    pub tier: KernelTier,
 }
 
 impl Default for ElboConfig {
     fn default() -> Self {
-        ElboConfig { substeps: 5, kl_weight: 1.0 }
+        ElboConfig { substeps: 5, kl_weight: 1.0, tier: KernelTier::Exact }
     }
 }
 
@@ -457,7 +465,11 @@ pub fn elbo_value_multi(
     let bsz = n_samples;
 
     // ---- 1. Encode once; S reparameterized z0 draws. -----------------
-    let enc = encode(model, params, obs, n_obs);
+    // One-row batched encode: bit-identical to the scalar `encode` in the
+    // exact tier (pinned row-identity), and the only way the fast tier
+    // keeps this estimator float-equal to its R-request batched twin
+    // (`elbo_value_multi_batch`) — both then run the same fast kernels.
+    let enc = encode_batch(model, params, &[obs], n_obs, cfg.tier == KernelTier::Fast);
     let sde = PosteriorSde::new(model);
     let n_sde = sde.sde_param_len();
     let aug = dz + 1;
@@ -485,7 +497,8 @@ pub fn elbo_value_multi(
     for k in 1..n_obs {
         theta_full[n_sde..].copy_from_slice(&enc.ctx[(k - 1) * dc..k * dc]);
         let grid = uniform_grid(times[k - 1], times[k], cfg.substeps.max(1));
-        let mut sys = BatchForwardFunc::for_method(&sde, &theta_full, bsz, Method::Heun);
+        let mut sys =
+            BatchForwardFunc::for_method_tier(&sde, &theta_full, bsz, Method::Heun, cfg.tier);
         let st = batch_grid_core(&mut sys, Method::Heun, &y, &grid, &mut bm, &mut y_next);
         forward_stats.steps += st.steps;
         forward_stats.nfe_drift += st.nfe_drift;
@@ -505,7 +518,11 @@ pub fn elbo_value_multi(
             z_in[s * dz..(s + 1) * dz]
                 .copy_from_slice(&y_obs[(k * bsz + s) * aug..(k * bsz + s) * aug + dz]);
         }
-        model.decoder.forward_batch(params, &z_in, &mut dec_cache, &mut xhat);
+        if cfg.tier == KernelTier::Fast {
+            model.decoder.forward_batch_fast(params, &z_in, &mut dec_cache, &mut xhat);
+        } else {
+            model.decoder.forward_batch(params, &z_in, &mut dec_cache, &mut xhat);
+        }
         let x_k = &obs[k * dx..(k + 1) * dx];
         for s in 0..bsz {
             let xh = &xhat[s * dx..(s + 1) * dx];
@@ -588,7 +605,7 @@ pub fn sample_posterior_paths_batch(
         return Vec::new();
     }
 
-    let enc = encode_batch(model, params, rows, n_obs);
+    let enc = encode_batch(model, params, rows, n_obs, false);
     let sde = PosteriorSde::new(model);
     let n_sde = sde.sde_param_len();
 
@@ -671,7 +688,7 @@ pub fn elbo_value_multi_batch(
     let beta = cfg.kl_weight;
 
     // ---- 1. Batched encode (R rows); P = R·S reparameterized z0s. ----
-    let enc = encode_batch(model, params, rows, n_obs);
+    let enc = encode_batch(model, params, rows, n_obs, cfg.tier == KernelTier::Fast);
     let sde = PosteriorSde::new(model);
     let n_sde = sde.sde_param_len();
 
@@ -707,7 +724,7 @@ pub fn elbo_value_multi_batch(
             }
         }
         let grid = uniform_grid(times[k - 1], times[k], cfg.substeps.max(1));
-        let mut sys = CtxBatchForwardFunc::new(&sde, &params[..n_sde], &ctx_p, p_n);
+        let mut sys = CtxBatchForwardFunc::new_tier(&sde, &params[..n_sde], &ctx_p, p_n, cfg.tier);
         let st = batch_grid_core(&mut sys, Method::Heun, &y, &grid, &mut bm, &mut y_next);
         forward_stats.steps += st.steps;
         forward_stats.nfe_drift += st.nfe_drift;
@@ -727,7 +744,11 @@ pub fn elbo_value_multi_batch(
             z_in[p * dz..(p + 1) * dz]
                 .copy_from_slice(&y_obs[(k * p_n + p) * aug..(k * p_n + p) * aug + dz]);
         }
-        model.decoder.forward_batch(params, &z_in, &mut dec_cache, &mut xhat);
+        if cfg.tier == KernelTier::Fast {
+            model.decoder.forward_batch_fast(params, &z_in, &mut dec_cache, &mut xhat);
+        } else {
+            model.decoder.forward_batch(params, &z_in, &mut dec_cache, &mut xhat);
+        }
         for r in 0..r_n {
             let x_k = &rows[r][k * dx..(k + 1) * dx];
             for s in 0..s_n {
@@ -828,10 +849,15 @@ fn q_head_batch(
     params: &[f64],
     q_in: &[f64],
     c_n: usize,
+    fast: bool,
 ) -> (Vec<f64>, Vec<f64>) {
     let dz = model.cfg.latent_dim;
     let mut q_out = vec![0.0; c_n * 2 * dz];
-    model.q_head.forward_batch(params, q_in, &mut q_out);
+    if fast {
+        model.q_head.forward_batch_fast(params, q_in, &mut q_out);
+    } else {
+        model.q_head.forward_batch(params, q_in, &mut q_out);
+    }
     let mut mu0 = vec![0.0; c_n * dz];
     let mut logvar0 = vec![0.0; c_n * dz];
     for c in 0..c_n {
@@ -842,12 +868,15 @@ fn q_head_batch(
 }
 
 /// Batched encoder forward over C paths (`rows[c]` is path c's sequence).
-/// Row-for-row bit-identical to the scalar [`encode`].
+/// With `fast == false`, row-for-row bit-identical to the scalar
+/// [`encode`]; with `fast == true` the GRU/MLP/head passes run through
+/// the fast-tier nn kernels (tolerance-equal only).
 fn encode_batch(
     model: &LatentSdeModel,
     params: &[f64],
     rows: &[&[f64]],
     n_obs: usize,
+    fast: bool,
 ) -> BatchEncode {
     let dx = model.cfg.obs_dim;
     let dc = model.cfg.context_dim;
@@ -866,7 +895,11 @@ fn encode_batch(
                     x[c * dx..(c + 1) * dx].copy_from_slice(&seq[k * dx..(k + 1) * dx]);
                 }
                 let mut cache = cell.batch_cache(c_n);
-                cell.forward_batch(params, &x, &h, &mut cache, &mut h_next);
+                if fast {
+                    cell.forward_batch_fast(params, &x, &h, &mut cache, &mut h_next);
+                } else {
+                    cell.forward_batch(params, &x, &h, &mut cache, &mut h_next);
+                }
                 caches.push(cache);
                 h.copy_from_slice(&h_next);
                 hs.push(h.clone());
@@ -874,14 +907,15 @@ fn encode_batch(
             let mut ctx = vec![0.0; (n_obs - 1) * c_n * dc];
             for k in 1..n_obs {
                 let s = n_obs - 1 - k;
-                ctx_head.forward_batch(
-                    params,
-                    &hs[s],
-                    &mut ctx[(k - 1) * c_n * dc..k * c_n * dc],
-                );
+                let ctx_k = &mut ctx[(k - 1) * c_n * dc..k * c_n * dc];
+                if fast {
+                    ctx_head.forward_batch_fast(params, &hs[s], ctx_k);
+                } else {
+                    ctx_head.forward_batch(params, &hs[s], ctx_k);
+                }
             }
             let q_in = hs[n_obs - 1].clone();
-            let (mu0, logvar0) = q_head_batch(model, params, &q_in, c_n);
+            let (mu0, logvar0) = q_head_batch(model, params, &q_in, c_n, fast);
             BatchEncode { ctx, mu0, logvar0, q_in, gru_caches: caches, hs, mlp_input: Vec::new() }
         }
         Encoder::Mlp { net, n_frames } => {
@@ -894,7 +928,11 @@ fn encode_batch(
             }
             let mut cache = net.batch_cache(c_n);
             let mut out = vec![0.0; c_n * (eh + dc)];
-            net.forward_batch(params, &input, &mut cache, &mut out);
+            if fast {
+                net.forward_batch_fast(params, &input, &mut cache, &mut out);
+            } else {
+                net.forward_batch(params, &input, &mut cache, &mut out);
+            }
             let mut q_in = vec![0.0; c_n * eh];
             let mut ctx = vec![0.0; (n_obs - 1) * c_n * dc];
             for c in 0..c_n {
@@ -904,7 +942,7 @@ fn encode_batch(
                     ctx[(k * c_n + c) * dc..(k * c_n + c + 1) * dc].copy_from_slice(ctx_static);
                 }
             }
-            let (mu0, logvar0) = q_head_batch(model, params, &q_in, c_n);
+            let (mu0, logvar0) = q_head_batch(model, params, &q_in, c_n, fast);
             BatchEncode {
                 ctx,
                 mu0,
@@ -952,6 +990,7 @@ fn add_obs_grad_batch(
     dz_buf: &mut [f64],
     a: &mut [f64],
     grads: &mut [f64],
+    fast: bool,
 ) {
     let dz = model.cfg.latent_dim;
     let dx = model.cfg.obs_dim;
@@ -960,7 +999,11 @@ fn add_obs_grad_batch(
         z_in[c * dz..(c + 1) * dz]
             .copy_from_slice(&y_obs[(k * c_n + c) * aug..(k * c_n + c) * aug + dz]);
     }
-    model.decoder.forward_batch(params, z_in, dec_cache, xhat);
+    if fast {
+        model.decoder.forward_batch_fast(params, z_in, dec_cache, xhat);
+    } else {
+        model.decoder.forward_batch(params, z_in, dec_cache, xhat);
+    }
     for c in 0..c_n {
         let x_k = &rows[c][k * dx..(k + 1) * dx];
         for i in 0..dx {
@@ -969,7 +1012,11 @@ fn add_obs_grad_batch(
         }
     }
     dz_buf.fill(0.0);
-    model.decoder.vjp_batch(params, dec_cache, dxh, dz_buf, grads, model.n_params);
+    if fast {
+        model.decoder.vjp_batch_fast(params, dec_cache, dxh, dz_buf, grads, model.n_params);
+    } else {
+        model.decoder.vjp_batch(params, dec_cache, dxh, dz_buf, grads, model.n_params);
+    }
     for c in 0..c_n {
         for i in 0..dz {
             a[c * aug + i] += dz_buf[c * dz + i];
@@ -1003,7 +1050,8 @@ fn elbo_chunk(
     let rows: Vec<&[f64]> = (0..c_n).map(|c| obs_seqs[(p0 + c) / n_samples]).collect();
 
     // ---- 1. Batched encode + per-path reparameterized z0. ------------
-    let enc = encode_batch(model, params, &rows, n_obs);
+    let fast = cfg.tier == KernelTier::Fast;
+    let enc = encode_batch(model, params, &rows, n_obs, fast);
     let sde = PosteriorSde::new(model);
     let n_sde = sde.sde_param_len();
 
@@ -1030,7 +1078,7 @@ fn elbo_chunk(
     for k in 1..n_obs {
         let ctx_k = &enc.ctx[(k - 1) * c_n * dc..k * c_n * dc];
         let grid = uniform_grid(times[k - 1], times[k], cfg.substeps.max(1));
-        let mut sys = CtxBatchForwardFunc::new(&sde, &params[..n_sde], ctx_k, c_n);
+        let mut sys = CtxBatchForwardFunc::new_tier(&sde, &params[..n_sde], ctx_k, c_n, cfg.tier);
         let st = batch_grid_core(&mut sys, Method::Heun, &y, &grid, &mut bm, &mut y_next);
         forward_stats.steps += st.steps;
         forward_stats.nfe_drift += st.nfe_drift;
@@ -1050,7 +1098,11 @@ fn elbo_chunk(
             z_in[c * dz..(c + 1) * dz]
                 .copy_from_slice(&y_obs[(k * c_n + c) * aug..(k * c_n + c) * aug + dz]);
         }
-        model.decoder.forward_batch(params, &z_in, &mut dec_cache, &mut xhat);
+        if fast {
+            model.decoder.forward_batch_fast(params, &z_in, &mut dec_cache, &mut xhat);
+        } else {
+            model.decoder.forward_batch(params, &z_in, &mut dec_cache, &mut xhat);
+        }
         for c in 0..c_n {
             let x_k = &rows[c][k * dx..(k + 1) * dx];
             let xh = &xhat[c * dx..(c + 1) * dx];
@@ -1095,7 +1147,7 @@ fn elbo_chunk(
 
     add_obs_grad_batch(
         model, params, &rows, &y_obs, n_obs - 1, aug, inv_var, &mut dec_cache, &mut z_in,
-        &mut xhat, &mut dxh, &mut dz_buf, &mut a, &mut grads,
+        &mut xhat, &mut dxh, &mut dz_buf, &mut a, &mut grads, fast,
     );
 
     let mut yb = y_obs[(n_obs - 1) * c_n * aug..].to_vec();
@@ -1104,7 +1156,12 @@ fn elbo_chunk(
     // One batched solver for all intervals: scratch is O(B·p) and
     // reallocating per interval would dominate allocation traffic, as in
     // the scalar path.
-    let mut solver = BatchBackwardSolver::new(CtxAdjointOps::new(&sde, &params[..n_sde], c_n));
+    let mut solver = BatchBackwardSolver::new(CtxAdjointOps::new_tier(
+        &sde,
+        &params[..n_sde],
+        c_n,
+        cfg.tier,
+    ));
     for k in (1..n_obs).rev() {
         solver.ops_mut().set_ctx(&enc.ctx[(k - 1) * c_n * dc..k * c_n * dc]);
         let grid = uniform_grid(times[k], times[k - 1], cfg.substeps); // descending
@@ -1122,7 +1179,7 @@ fn elbo_chunk(
         }
         add_obs_grad_batch(
             model, params, &rows, &y_obs, k - 1, aug, inv_var, &mut dec_cache, &mut z_in,
-            &mut xhat, &mut dxh, &mut dz_buf, &mut a, &mut grads,
+            &mut xhat, &mut dxh, &mut dz_buf, &mut a, &mut grads, fast,
         );
         yb.copy_from_slice(&y_obs[(k - 1) * c_n * aug..k * c_n * aug]);
     }
@@ -1156,7 +1213,11 @@ fn elbo_chunk(
         dq_out[c * 2 * dz + dz..(c + 1) * 2 * dz].copy_from_slice(&dlv0[c * dz..(c + 1) * dz]);
     }
     let mut dq_in = vec![0.0; c_n * eh];
-    model.q_head.vjp_batch(params, &enc.q_in, &dq_out, &mut dq_in, &mut grads, n_params);
+    if fast {
+        model.q_head.vjp_batch_fast(params, &enc.q_in, &dq_out, &mut dq_in, &mut grads, n_params);
+    } else {
+        model.q_head.vjp_batch(params, &enc.q_in, &dq_out, &mut dq_in, &mut grads, n_params);
+    }
 
     match &model.encoder {
         Encoder::Gru { cell, ctx_head } => {
@@ -1171,26 +1232,40 @@ fn elbo_chunk(
                     }
                 } else {
                     let k = n_obs - 1 - s;
-                    ctx_head.vjp_batch(
+                    let dctx_k = &dctx[(k - 1) * c_n * dc..k * c_n * dc];
+                    if fast {
+                        ctx_head.vjp_batch_fast(
+                            params, &enc.hs[s], dctx_k, &mut dh, &mut grads, n_params,
+                        );
+                    } else {
+                        ctx_head.vjp_batch(
+                            params, &enc.hs[s], dctx_k, &mut dh, &mut grads, n_params,
+                        );
+                    }
+                }
+                dh_prev.fill(0.0);
+                dx_sink.fill(0.0);
+                if fast {
+                    cell.vjp_batch_fast(
                         params,
-                        &enc.hs[s],
-                        &dctx[(k - 1) * c_n * dc..k * c_n * dc],
-                        &mut dh,
+                        &enc.gru_caches[s],
+                        &dh,
+                        &mut dx_sink,
+                        &mut dh_prev,
+                        &mut grads,
+                        n_params,
+                    );
+                } else {
+                    cell.vjp_batch(
+                        params,
+                        &enc.gru_caches[s],
+                        &dh,
+                        &mut dx_sink,
+                        &mut dh_prev,
                         &mut grads,
                         n_params,
                     );
                 }
-                dh_prev.fill(0.0);
-                dx_sink.fill(0.0);
-                cell.vjp_batch(
-                    params,
-                    &enc.gru_caches[s],
-                    &dh,
-                    &mut dx_sink,
-                    &mut dh_prev,
-                    &mut grads,
-                    n_params,
-                );
                 dh.copy_from_slice(&dh_prev);
             }
         }
@@ -1207,9 +1282,14 @@ fn elbo_chunk(
             }
             let mut cache = net.batch_cache(c_n);
             let mut out = vec![0.0; c_n * (eh + dc)];
-            net.forward_batch(params, &enc.mlp_input, &mut cache, &mut out);
             let mut dx_sink = vec![0.0; enc.mlp_input.len()];
-            net.vjp_batch(params, &mut cache, &dout, &mut dx_sink, &mut grads, n_params);
+            if fast {
+                net.forward_batch_fast(params, &enc.mlp_input, &mut cache, &mut out);
+                net.vjp_batch_fast(params, &mut cache, &dout, &mut dx_sink, &mut grads, n_params);
+            } else {
+                net.forward_batch(params, &enc.mlp_input, &mut cache, &mut out);
+                net.vjp_batch(params, &mut cache, &dout, &mut dx_sink, &mut grads, n_params);
+            }
         }
     }
 
@@ -1391,7 +1471,7 @@ mod tests {
         let params = model.init_params(PrngKey::from_seed(10));
         let (times, obs) = toy_sequence(4, 2, 11);
         let key = PrngKey::from_seed(12);
-        let cfg = ElboConfig { substeps: 40, kl_weight: 0.7 };
+        let cfg = ElboConfig { substeps: 40, kl_weight: 0.7, ..ElboConfig::default() };
 
         let out = elbo_step(&model, &params, &times, &obs, key, &cfg);
         let loss_at = |p: &[f64]| elbo_step(&model, p, &times, &obs, key, &cfg).loss;
@@ -1429,7 +1509,7 @@ mod tests {
         let params = model.init_params(PrngKey::from_seed(20));
         let (times, obs) = toy_sequence(4, 2, 21);
         let key = PrngKey::from_seed(22);
-        let cfg = ElboConfig { substeps: 30, kl_weight: 0.5 };
+        let cfg = ElboConfig { substeps: 30, kl_weight: 0.5, ..ElboConfig::default() };
         let out = elbo_step(&model, &params, &times, &obs, key, &cfg);
         assert_eq!(out.kl_path, 0.0, "ODE mode has no path KL");
 
@@ -1461,7 +1541,7 @@ mod tests {
         let params = model.init_params(PrngKey::from_seed(30));
         let (times, obs) = toy_sequence(5, 2, 31);
         let key = PrngKey::from_seed(32);
-        let cfg = ElboConfig { substeps: 30, kl_weight: 1.0 };
+        let cfg = ElboConfig { substeps: 30, kl_weight: 1.0, ..ElboConfig::default() };
         let out = elbo_step(&model, &params, &times, &obs, key, &cfg);
         let loss_at = |p: &[f64]| elbo_step(&model, p, &times, &obs, key, &cfg).loss;
         let n = params.len();
@@ -1491,7 +1571,7 @@ mod tests {
         let params = model.init_params(PrngKey::from_seed(50));
         let (times, obs) = toy_sequence(5, 2, 51);
         let key = PrngKey::from_seed(52);
-        let cfg = ElboConfig { substeps: 6, kl_weight: 0.8 };
+        let cfg = ElboConfig { substeps: 6, kl_weight: 0.8, ..ElboConfig::default() };
 
         let one = elbo_value_multi(&model, &params, &times, &obs, key, &cfg, 1);
         let four = elbo_value_multi(&model, &params, &times, &obs, key, &cfg, 4);
@@ -1514,7 +1594,7 @@ mod tests {
         let (times, obs_a) = toy_sequence(5, 2, 61);
         let (_, obs_b) = toy_sequence(5, 2, 62);
         let key = PrngKey::from_seed(63);
-        let cfg = ElboConfig { substeps: 3, kl_weight: 0.7 };
+        let cfg = ElboConfig { substeps: 3, kl_weight: 0.7, ..ElboConfig::default() };
         let keys = [key.fold_in(0), key.fold_in(1)];
         let obs_seqs: Vec<&[f64]> = vec![&obs_a, &obs_b];
         let n_samples = 2;
@@ -1596,7 +1676,7 @@ mod tests {
         let times = toy_sequence(n_obs, 2, 90).0;
         let rows: Vec<&[f64]> = seqs.iter().map(|s| s.as_slice()).collect();
         let keys: Vec<PrngKey> = (0..3).map(|r| PrngKey::from_seed(95 + r)).collect();
-        let cfg = ElboConfig { substeps: 3, kl_weight: 0.4 };
+        let cfg = ElboConfig { substeps: 3, kl_weight: 0.4, ..ElboConfig::default() };
 
         for n_samples in [1, 3] {
             let batch =
@@ -1640,7 +1720,7 @@ mod tests {
         let mut params = model.init_params(PrngKey::from_seed(40));
         let (times, obs) = toy_sequence(5, 2, 41);
         let key = PrngKey::from_seed(42);
-        let cfg = ElboConfig { substeps: 8, kl_weight: 0.1 };
+        let cfg = ElboConfig { substeps: 8, kl_weight: 0.1, ..ElboConfig::default() };
         let mut adam = Adam::new(params.len(), 2e-3);
         let first = elbo_step(&model, &params, &times, &obs, key, &cfg).loss;
         let mut last = first;

@@ -23,7 +23,7 @@ use std::cell::RefCell;
 use super::model::{DiffusionMode, LatentSdeModel};
 use crate::adjoint::batch::BatchAugmentedOps;
 use crate::nn::{MlpBatchCache, MlpCache};
-use crate::sde::{BatchSde, BatchSdeVjp, Calculus, Sde, SdeVjp};
+use crate::sde::{BatchSde, BatchSdeVjp, Calculus, KernelTier, Sde, SdeVjp};
 
 /// Scratch buffers + forward caches (interior-mutable: the `Sde` trait is
 /// `&self`, and each `PosteriorSde` is used by one solver at a time).
@@ -135,8 +135,18 @@ impl<'a> PosteriorSde<'a> {
 
     /// Batched σ into `sc.sig` (`[B×dz]`): per dimension, one `[B×1]`
     /// forward through that dimension's net — weight rows hot across all
-    /// B paths. Values per `(b, i)` cell match the scalar `eval_sigma`.
-    fn eval_sigma_batch(&self, params: &[f64], y: &[f64], aug: usize, sc: &mut BatchScratch) {
+    /// B paths. With `fast == false`, values per `(b, i)` cell match the
+    /// scalar `eval_sigma`; with `fast == true` the nets run through
+    /// [`crate::nn::Mlp::forward_batch_fast`] (reassociated dots, equal to
+    /// exact only to relative tolerance).
+    fn eval_sigma_batch(
+        &self,
+        params: &[f64],
+        y: &[f64],
+        aug: usize,
+        sc: &mut BatchScratch,
+        fast: bool,
+    ) {
         let dz = self.dz();
         let bsz = sc.batch;
         match self.model.cfg.diffusion {
@@ -147,12 +157,21 @@ impl<'a> PosteriorSde<'a> {
                         sc.diff_in[b] = y[b * aug + i];
                     }
                     let BatchScratch { diff_in, diff_out, diff_caches, .. } = sc;
-                    self.model.diffusion[i].forward_batch(
-                        params,
-                        diff_in,
-                        &mut diff_caches[i],
-                        diff_out,
-                    );
+                    if fast {
+                        self.model.diffusion[i].forward_batch_fast(
+                            params,
+                            diff_in,
+                            &mut diff_caches[i],
+                            diff_out,
+                        );
+                    } else {
+                        self.model.diffusion[i].forward_batch(
+                            params,
+                            diff_in,
+                            &mut diff_caches[i],
+                            diff_out,
+                        );
+                    }
                     for b in 0..bsz {
                         sc.sig[b * dz + i] = floor + scale * sc.diff_out[b];
                     }
@@ -240,9 +259,10 @@ impl<'a> PosteriorSde<'a> {
 
     /// Batched drift core shared by the shared-context and per-path-context
     /// entry points: `ctx` holds one context row broadcast to every path
-    /// (`ctx_stride == 0`) or B per-path rows (`ctx_stride == dc`). Per
-    /// `(b, i)` cell the floats equal the scalar [`Sde::drift`] with
-    /// `θ_b = [params | ctx_b]`.
+    /// (`ctx_stride == 0`) or B per-path rows (`ctx_stride == dc`). With
+    /// `fast == false`, per `(b, i)` cell the floats equal the scalar
+    /// [`Sde::drift`] with `θ_b = [params | ctx_b]`; with `fast == true`
+    /// the drift nets run through the fast-tier MLP kernels.
     fn drift_batch_rows(
         &self,
         t: f64,
@@ -251,6 +271,7 @@ impl<'a> PosteriorSde<'a> {
         ctx: &[f64],
         ctx_stride: usize,
         out: &mut [f64],
+        fast: bool,
     ) {
         let dz = self.dz();
         let aug = dz + 1;
@@ -269,7 +290,11 @@ impl<'a> PosteriorSde<'a> {
         }
         {
             let BatchScratch { post_in, post_cache, h_post, .. } = sc;
-            self.model.post_drift.forward_batch(params, post_in, post_cache, h_post);
+            if fast {
+                self.model.post_drift.forward_batch_fast(params, post_in, post_cache, h_post);
+            } else {
+                self.model.post_drift.forward_batch(params, post_in, post_cache, h_post);
+            }
         }
         if with_u {
             for b in 0..bsz {
@@ -279,9 +304,15 @@ impl<'a> PosteriorSde<'a> {
             }
             {
                 let BatchScratch { prior_in, prior_cache, h_prior, .. } = sc;
-                self.model.prior_drift.forward_batch(params, prior_in, prior_cache, h_prior);
+                if fast {
+                    self.model
+                        .prior_drift
+                        .forward_batch_fast(params, prior_in, prior_cache, h_prior);
+                } else {
+                    self.model.prior_drift.forward_batch(params, prior_in, prior_cache, h_prior);
+                }
             }
-            self.eval_sigma_batch(params, y, aug, sc);
+            self.eval_sigma_batch(params, y, aug, sc, fast);
             for i in 0..bsz * dz {
                 sc.u[i] = (sc.h_post[i] - sc.h_prior[i]) / sc.sig[i];
             }
@@ -307,10 +338,19 @@ impl<'a> PosteriorSde<'a> {
         params: &[f64],
         ctx: &[f64],
         out: &mut [f64],
+        tier: KernelTier,
     ) {
         let bsz = y.len() / (self.dz() + 1);
         debug_assert_eq!(ctx.len(), bsz * self.model.cfg.context_dim);
-        self.drift_batch_rows(t, y, params, ctx, self.model.cfg.context_dim, out);
+        self.drift_batch_rows(
+            t,
+            y,
+            params,
+            ctx,
+            self.model.cfg.context_dim,
+            out,
+            tier == KernelTier::Fast,
+        );
     }
 
     /// Batched diffusion from the model-parameter prefix alone (σ never
@@ -321,13 +361,14 @@ impl<'a> PosteriorSde<'a> {
         y: &[f64],
         params: &[f64],
         out: &mut [f64],
+        tier: KernelTier,
     ) {
         let dz = self.dz();
         let aug = dz + 1;
         let bsz = y.len() / aug;
         let mut sc = self.ensure_batch_scratch(bsz);
         let sc = &mut *sc;
-        self.eval_sigma_batch(params, y, aug, sc);
+        self.eval_sigma_batch(params, y, aug, sc, tier == KernelTier::Fast);
         for b in 0..bsz {
             out[b * aug..b * aug + dz].copy_from_slice(&sc.sig[b * dz..(b + 1) * dz]);
             out[b * aug + dz] = 0.0;
@@ -532,12 +573,22 @@ impl<'a> BatchSde for PosteriorSde<'a> {
     fn drift_batch(&self, t: f64, y: &[f64], theta: &[f64], out: &mut [f64]) {
         let (params, ctx) = self.split_theta(theta);
         // One shared context row, broadcast to every path (stride 0).
-        self.drift_batch_rows(t, y, params, ctx, 0, out);
+        self.drift_batch_rows(t, y, params, ctx, 0, out, false);
     }
 
     fn diffusion_batch(&self, t: f64, y: &[f64], theta: &[f64], out: &mut [f64]) {
         let (params, _) = self.split_theta(theta);
-        self.diffusion_batch_params(t, y, params, out);
+        self.diffusion_batch_params(t, y, params, out, KernelTier::Exact);
+    }
+
+    fn drift_batch_fast(&self, t: f64, y: &[f64], theta: &[f64], out: &mut [f64]) {
+        let (params, ctx) = self.split_theta(theta);
+        self.drift_batch_rows(t, y, params, ctx, 0, out, true);
+    }
+
+    fn diffusion_batch_fast(&self, t: f64, y: &[f64], theta: &[f64], out: &mut [f64]) {
+        let (params, _) = self.split_theta(theta);
+        self.diffusion_batch_params(t, y, params, out, KernelTier::Fast);
     }
 }
 
@@ -559,6 +610,7 @@ pub(crate) struct CtxBatchForwardFunc<'a, 'm> {
     params: &'a [f64],
     ctx: &'a [f64],
     batch: usize,
+    tier: KernelTier,
     nfe_f: u64,
     nfe_g: u64,
 }
@@ -570,13 +622,26 @@ impl<'a, 'm> CtxBatchForwardFunc<'a, 'm> {
         ctx: &'a [f64],
         batch: usize,
     ) -> Self {
+        Self::new_tier(sde, params, ctx, batch, KernelTier::Exact)
+    }
+
+    /// Like [`CtxBatchForwardFunc::new`] but with an explicit kernel tier:
+    /// `Fast` routes the drift/diffusion net evaluations through the
+    /// fast-tier MLP kernels (tolerance-equal to exact, not bit-equal).
+    pub(crate) fn new_tier(
+        sde: &'a PosteriorSde<'m>,
+        params: &'a [f64],
+        ctx: &'a [f64],
+        batch: usize,
+        tier: KernelTier,
+    ) -> Self {
         assert_eq!(params.len(), sde.sde_param_len(), "CtxBatchForwardFunc: params length");
         assert_eq!(
             ctx.len(),
             batch * sde.model.cfg.context_dim,
             "CtxBatchForwardFunc: ctx rows mismatch"
         );
-        CtxBatchForwardFunc { sde, params, ctx, batch, nfe_f: 0, nfe_g: 0 }
+        CtxBatchForwardFunc { sde, params, ctx, batch, tier, nfe_f: 0, nfe_g: 0 }
     }
 }
 
@@ -592,11 +657,11 @@ impl<'a, 'm> crate::solvers::BatchSdeFunc for CtxBatchForwardFunc<'a, 'm> {
     }
     fn drift(&mut self, t: f64, y: &[f64], out: &mut [f64]) {
         self.nfe_f += 1;
-        self.sde.drift_batch_ctx(t, y, self.params, self.ctx, out);
+        self.sde.drift_batch_ctx(t, y, self.params, self.ctx, out, self.tier);
     }
     fn diffusion(&mut self, t: f64, y: &[f64], out: &mut [f64]) {
         self.nfe_g += 1;
-        self.sde.diffusion_batch_params(t, y, self.params, out);
+        self.sde.diffusion_batch_params(t, y, self.params, out, self.tier);
     }
     fn nfe_drift(&self) -> u64 {
         self.nfe_f
@@ -633,12 +698,26 @@ pub(crate) struct CtxAdjointOps<'a, 'm> {
     /// Discard buffers for the two one-sided diffusion VJP calls.
     scratch_z: Vec<f64>,
     scratch_p: Vec<f64>,
+    /// Tier for the *batched coefficient evaluations* (`b̃`, `σ`). The
+    /// row-wise scalar VJP calls are tier-agnostic (scalar kernels have no
+    /// fast variant), so fast-tier backward passes differ from exact only
+    /// through the coefficient floats.
+    tier: KernelTier,
     nfe_drift: u64,
     nfe_diffusion: u64,
 }
 
 impl<'a, 'm> CtxAdjointOps<'a, 'm> {
     pub(crate) fn new(sde: &'a PosteriorSde<'m>, params: &[f64], batch: usize) -> Self {
+        Self::new_tier(sde, params, batch, KernelTier::Exact)
+    }
+
+    pub(crate) fn new_tier(
+        sde: &'a PosteriorSde<'m>,
+        params: &[f64],
+        batch: usize,
+        tier: KernelTier,
+    ) -> Self {
         let n_model = sde.sde_param_len();
         assert_eq!(params.len(), n_model, "CtxAdjointOps: params length");
         assert!(batch > 0, "CtxAdjointOps: empty batch");
@@ -659,6 +738,7 @@ impl<'a, 'm> CtxAdjointOps<'a, 'm> {
             vjp_scratch: vec![0.0; d],
             scratch_z: vec![0.0; d],
             scratch_p: vec![0.0; p],
+            tier,
             nfe_drift: 0,
             nfe_diffusion: 0,
         }
@@ -693,7 +773,8 @@ impl<'a, 'm> BatchAugmentedOps for CtxAdjointOps<'a, 'm> {
     ) {
         self.nfe_drift += 1;
         // b̃ is the native-Stratonovich drift — hand-batched per-ctx pass.
-        self.sde.drift_batch_ctx(t, z, &self.theta_row[..self.n_model], &self.ctx, b_out);
+        let params = &self.theta_row[..self.n_model];
+        self.sde.drift_batch_ctx(t, z, params, &self.ctx, b_out, self.tier);
         for (n, v) in self.neg_a.iter_mut().zip(a) {
             *n = -v;
         }
@@ -727,7 +808,7 @@ impl<'a, 'm> BatchAugmentedOps for CtxAdjointOps<'a, 'm> {
         gth_out: &mut [f64],
     ) {
         self.nfe_diffusion += 1;
-        self.sde.diffusion_batch_params(t, z, &self.theta_row[..self.n_model], s_out);
+        self.sde.diffusion_batch_params(t, z, &self.theta_row[..self.n_model], s_out, self.tier);
         for i in 0..self.batch * self.d {
             self.neg_a[i] = -a[i];
             self.weighted_a[i] = -a[i] * dw[i];
@@ -1026,6 +1107,48 @@ mod tests {
             assert_eq!(&s_out[b * aug..(b + 1) * aug], &ss[..], "adj σ row {b}");
             assert_eq!(&ga[b * aug..(b + 1) * aug], &sga[..], "adj ga row {b}");
             assert_eq!(&gth[b * p..(b + 1) * p], &sgth[..], "adj gth row {b}");
+        }
+    }
+
+    /// Fast-tier batched kernels reassociate the MLP dot products, so
+    /// they match the exact batched kernels only to relative tolerance.
+    #[test]
+    fn fast_batched_kernels_match_exact_to_tolerance() {
+        use crate::sde::BatchSde;
+        let model = tiny_model();
+        let th = theta_full(&model, 11);
+        let sys = PosteriorSde::new(&model);
+        let aug = sys.state_dim();
+        let bsz = 4;
+        let mut y = vec![0.0; bsz * aug];
+        PrngKey::from_seed(12).fill_normal(0, &mut y);
+        let t = 0.2;
+
+        let mut drift_exact = vec![0.0; bsz * aug];
+        sys.drift_batch(t, &y, &th, &mut drift_exact);
+        let mut diff_exact = vec![0.0; bsz * aug];
+        sys.diffusion_batch(t, &y, &th, &mut diff_exact);
+
+        let mut drift_fast = vec![0.0; bsz * aug];
+        sys.drift_batch_fast(t, &y, &th, &mut drift_fast);
+        let mut diff_fast = vec![0.0; bsz * aug];
+        sys.diffusion_batch_fast(t, &y, &th, &mut diff_fast);
+
+        for i in 0..bsz * aug {
+            let scale = drift_exact[i].abs().max(1.0);
+            assert!(
+                (drift_exact[i] - drift_fast[i]).abs() <= 1e-10 * scale,
+                "drift[{i}]: {} vs {}",
+                drift_exact[i],
+                drift_fast[i]
+            );
+            let scale = diff_exact[i].abs().max(1.0);
+            assert!(
+                (diff_exact[i] - diff_fast[i]).abs() <= 1e-10 * scale,
+                "diffusion[{i}]: {} vs {}",
+                diff_exact[i],
+                diff_fast[i]
+            );
         }
     }
 

@@ -139,6 +139,35 @@
 //! loop-based batch kernels that can be overridden with hand-batched ones
 //! where structure allows (see [`sde::batch`]).
 //!
+//! ## Kernel tiers: exact (default) vs fast
+//!
+//! The batched engine has two kernel tiers, selected per call by
+//! [`sde::KernelTier`]:
+//!
+//! * **`Exact`** (the default everywhere) keeps the bit-identical-to-
+//!   scalar contract above — every float op in the same order as the
+//!   per-path engine. This is the oracle tier; nothing about it changed
+//!   when the fast tier was added (`tests/fast_tier.rs` pins this).
+//! * **`Fast`** is an opt-in throughput tier: fused drift+diffusion
+//!   steps, flat elementwise kernels for structured systems
+//!   ([`sde::ReplicatedSde`], [`sde::ou::OrnsteinUhlenbeck`]), and
+//!   blocked, reassociation-friendly matrix–matrix kernels for the
+//!   `nn` forward/VJP passes. It trades the bit-identity contract for
+//!   speed and is instead validated against the exact tier to tight
+//!   *relative tolerance* on solves, adjoint gradients, and ELBO steps
+//!   (`tests/fast_tier.rs`; `bench throughput` re-validates to
+//!   [`coordinator::bench::FAST_RTOL`] before timing any fast row).
+//!
+//! Select it with `SolveOptions::fixed(..).tier(KernelTier::Fast)`,
+//! [`api::sensitivity_batch_tier`], [`latent::ElboConfig`]`::tier`, or
+//! `--tier fast` on the `train` / `serve` / `bench serve` CLIs. The
+//! serving byte-determinism contract is *per tier*: the batcher and its
+//! scalar oracle run the same tier, so batching with strangers still
+//! cannot change your answer — but `--tier fast` bytes are not `--tier
+//! exact` bytes. `sdegrad bench throughput` reports paired exact/fast
+//! rows (`gbm_d10` vs `gbm_d10_fast`, …) so the speedup is a measured
+//! number, not a promise.
+//!
 //! ## Latent-SDE training on the batch engine
 //!
 //! The headline application (§6): gradient-based stochastic variational
@@ -236,13 +265,13 @@ pub mod testing;
 pub mod prelude {
     pub use crate::adjoint::{AdjointConfig, Checkpointing, NoiseMode};
     pub use crate::api::{
-        sensitivity_batch, solve_batch, GradStats, Gradients, NoiseSpec, ProblemError, SaveAt,
-        SdeProblem, SdeSolution, SensAlg, SolveOptions, StepControl,
+        sensitivity_batch, sensitivity_batch_tier, solve_batch, GradStats, Gradients, NoiseSpec,
+        ProblemError, SaveAt, SdeProblem, SdeSolution, SensAlg, SolveOptions, StepControl,
     };
     pub use crate::brownian::{BatchBrownian, BrownianMotion, BrownianPath, VirtualBrownianTree};
     pub use crate::prng::PrngKey;
     pub use crate::sde::{
-        BatchSde, BatchSdeVjp, Calculus, ExactSolution, ReplicatedSde, Sde, SdeVjp,
+        BatchSde, BatchSdeVjp, Calculus, ExactSolution, KernelTier, ReplicatedSde, Sde, SdeVjp,
     };
     pub use crate::solvers::{AdaptiveConfig, Method, SolveStats};
 }

@@ -26,17 +26,19 @@ fn usage() -> ! {
 USAGE:
     sdegrad train --dataset <gbm|lorenz|mocap> [--mode sde|ode] [--iters N]
                   [--batch N] [--samples N] [--lr F] [--kl F] [--substeps N]
-                  [--seed N] [--workers N] [--out checkpoint.bin]
-                  [--state state.bin] [--resume state.bin] [--log train.csv]
-                  [--smoke-check]
+                  [--seed N] [--workers N] [--tier exact|fast]
+                  [--out checkpoint.bin] [--state state.bin]
+                  [--resume state.bin] [--log train.csv] [--smoke-check]
     sdegrad serve --state <ckpt.bin> [--dataset gbm|lorenz|mocap] [--mode sde|ode]
                   [--name default] [--port 7878] [--workers N]
                   [--max-batch 16] [--max-wait-us 500] [--cache 1024]
-                  [--max-body 1048576] [--bind 127.0.0.1]
+                  [--max-body 1048576] [--bind 127.0.0.1] [--tier exact|fast]
                   (loopback-only by default; --bind 0.0.0.0 to expose)
     sdegrad repro <table1|fig2|fig5|fig6|fig9|table2|convergence|all> [--quick]
-    sdegrad bench throughput [--quick]
-    sdegrad bench serve [--quick]
+    sdegrad bench throughput [--quick]     (exact + fast kernel-tier rows)
+    sdegrad bench serve [--quick] [--tier exact|fast]
+    sdegrad bench baseline [--quick] [--out BENCH_baseline.json]
+                  (re-measure and rewrite the regression baseline)
     sdegrad bench compare [--baseline BENCH_baseline.json]
                   [--current BENCH_throughput.json] [--threshold 0.25]
                   [--summary summary.md] [--subset throughput|serve]
@@ -213,6 +215,10 @@ fn cmd_serve(rest: &[String]) {
         max_wait_us: arg(&map, "max-wait-us", defaults.max_wait_us),
         cache_capacity: arg(&map, "cache", defaults.cache_capacity),
         max_body_bytes: arg(&map, "max-body", defaults.max_body_bytes),
+        tier: map
+            .get("tier")
+            .and_then(|v| sdegrad::sde::KernelTier::parse(v))
+            .unwrap_or(defaults.tier),
     };
     let server = match Server::start(registry, cfg) {
         Ok(s) => s,
@@ -223,12 +229,13 @@ fn cmd_serve(rest: &[String]) {
     };
     println!(
         "sdegrad serve: listening on http://{} (model {name:?} from {state_path}; \
-         {} workers, max-batch {}, max-wait {} µs, cache {})",
+         {} workers, max-batch {}, max-wait {} µs, cache {}, {} kernels)",
         server.addr(),
         cfg.workers,
         cfg.max_batch,
         cfg.max_wait_us,
-        cfg.cache_capacity
+        cfg.cache_capacity,
+        cfg.tier.name()
     );
     println!("endpoints: GET /healthz, POST /v1/simulate /v1/reconstruct /v1/elbo");
     server.run();
@@ -283,7 +290,16 @@ fn cmd_bench(rest: &[String]) {
             sdegrad::coordinator::bench::run_throughput(quick);
         }
         "serve" => {
-            sdegrad::coordinator::bench::run_serve_bench(quick);
+            let tier = map
+                .get("tier")
+                .and_then(|v| sdegrad::sde::KernelTier::parse(v))
+                .unwrap_or(sdegrad::sde::KernelTier::Exact);
+            sdegrad::coordinator::bench::run_serve_bench_tier(quick, tier);
+        }
+        "baseline" => {
+            let out =
+                map.get("out").cloned().unwrap_or_else(|| "BENCH_baseline.json".into());
+            sdegrad::coordinator::bench::run_baseline(quick, &out);
         }
         "compare" => {
             let baseline =
@@ -366,8 +382,9 @@ fn cmd_list() {
          convergence"
     );
     println!(
-        "benches:      throughput (BENCH_throughput.json), serve (BENCH_serve.json), \
-         compare (regression gate, --subset per harness)"
+        "benches:      throughput (BENCH_throughput.json, exact+fast tiers), serve \
+         (BENCH_serve.json), baseline (rewrites BENCH_baseline.json), compare \
+         (regression gate, --subset per harness)"
     );
     println!("serving:      sdegrad serve --state ckpt.bin (healthz/simulate/reconstruct/elbo)");
     println!("artifacts:    see `sdegrad artifacts-check`");

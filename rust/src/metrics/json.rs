@@ -62,7 +62,9 @@ pub fn json_string_field(block: &str, key: &str) -> Option<String> {
     Some(rest[..end].to_string())
 }
 
-/// Scan `block` for `"key": <number>` and parse it.
+/// Scan `block` for `"key": <number>` and parse it. The literal must be
+/// a strict JSON number ([`is_strict_json_number`]) — which everything
+/// [`json_num`] emits is.
 pub fn json_number_field(block: &str, key: &str) -> Option<f64> {
     let pat = format!("\"{key}\":");
     let at = block.find(&pat)? + pat.len();
@@ -70,7 +72,59 @@ pub fn json_number_field(block: &str, key: &str) -> Option<f64> {
     let end = rest
         .find(|c: char| c == ',' || c == '}' || c == ']' || c.is_whitespace())
         .unwrap_or(rest.len());
-    rest[..end].parse().ok()
+    let lit = &rest[..end];
+    if !is_strict_json_number(lit) {
+        return None;
+    }
+    lit.parse().ok()
+}
+
+/// Exactly one number of the strict JSON grammar:
+/// `-? (0 | [1-9][0-9]*) (\.[0-9]+)? ([eE][+-]?[0-9]+)?`.
+///
+/// `f64::from_str` accepts a superset over the same byte alphabet —
+/// `inf`, `nan`, a leading `+`, leading zeros (`01`), and bare dots
+/// (`1.`, `.5`) — so every number literal is routed through this check
+/// first to keep the wire format strict JSON.
+fn is_strict_json_number(s: &str) -> bool {
+    let b = s.as_bytes();
+    let mut i = 0;
+    if b.first() == Some(&b'-') {
+        i += 1;
+    }
+    match b.get(i) {
+        Some(b'0') => i += 1, // no leading zeros: "0" ends the int part
+        Some(b'1'..=b'9') => {
+            while matches!(b.get(i), Some(b'0'..=b'9')) {
+                i += 1;
+            }
+        }
+        _ => return false,
+    }
+    if b.get(i) == Some(&b'.') {
+        i += 1;
+        let frac = i;
+        while matches!(b.get(i), Some(b'0'..=b'9')) {
+            i += 1;
+        }
+        if i == frac {
+            return false; // "1." — a dot needs digits after it
+        }
+    }
+    if matches!(b.get(i), Some(b'e' | b'E')) {
+        i += 1;
+        if matches!(b.get(i), Some(b'+' | b'-')) {
+            i += 1;
+        }
+        let exp = i;
+        while matches!(b.get(i), Some(b'0'..=b'9')) {
+            i += 1;
+        }
+        if i == exp {
+            return false; // "1e" — an exponent marker needs digits
+        }
+    }
+    i == b.len()
 }
 
 /// A parsed JSON value. Objects preserve key order (a `Vec` of pairs —
@@ -145,9 +199,9 @@ impl JsonValue {
 const MAX_DEPTH: usize = 32;
 
 /// Parse one JSON document. Errors carry a byte offset and a short
-/// reason. Accepts a marginal superset of strict JSON numbers (anything
-/// `f64::from_str` takes over the number alphabet), which is harmless
-/// for our use: every number is re-validated by the consumer.
+/// reason. Numbers follow the strict JSON grammar
+/// ([`is_strict_json_number`]): `inf`, `nan`, leading `+`, leading
+/// zeros, and bare dots are rejected rather than silently coerced.
 pub fn parse_json(text: &str) -> Result<JsonValue, String> {
     let bytes = text.as_bytes();
     let mut pos = 0usize;
@@ -253,8 +307,11 @@ fn parse_value(
             {
                 *pos += 1;
             }
-            text[start..*pos]
-                .parse::<f64>()
+            let lit = &text[start..*pos];
+            if !is_strict_json_number(lit) {
+                return Err(format!("bad number at byte {start}"));
+            }
+            lit.parse::<f64>()
                 .map(JsonValue::Num)
                 .map_err(|_| format!("bad number at byte {start}"))
         }
@@ -371,6 +428,39 @@ mod tests {
         ] {
             assert!(parse_json(bad).is_err(), "accepted: {bad:?}");
         }
+    }
+
+    /// The strict number grammar: `f64::from_str`'s extras must not
+    /// leak through (`inf`, leading `+`, leading zeros, bare dots).
+    #[test]
+    fn number_grammar_is_strict_json() {
+        for bad in [
+            "inf", "-inf", "Infinity", "nan", "+1", "1.", ".5", "-.5", "01", "-01", "0x1",
+            "1e", "1e+", "1.e5", "--1", "1.2.3", "-",
+        ] {
+            assert!(parse_json(bad).is_err(), "accepted non-JSON number: {bad:?}");
+            assert!(
+                parse_json(&format!("[{bad}]")).is_err(),
+                "accepted non-JSON number in array: {bad:?}"
+            );
+        }
+        for (good, want) in [
+            ("0", 0.0),
+            ("-0", -0.0),
+            ("10", 10.0),
+            ("0.5", 0.5),
+            ("1e5", 1e5),
+            ("1E5", 1e5),
+            ("-0.5e-3", -0.5e-3),
+            ("2.25e+2", 225.0),
+        ] {
+            let got = parse_json(good).unwrap().as_f64().unwrap();
+            assert_eq!(got.to_bits(), want.to_bits(), "{good}");
+        }
+        // The field scanner applies the same grammar.
+        assert_eq!(json_number_field("{\"v\": 01}", "v"), None);
+        assert_eq!(json_number_field("{\"v\": inf}", "v"), None);
+        assert_eq!(json_number_field("{\"v\": -2.5e-1}", "v"), Some(-0.25));
     }
 
     #[test]

@@ -207,6 +207,50 @@ impl GruCell {
         }
     }
 
+    /// Fast-tier batched step: the six gate linears run through
+    /// [`Linear::forward_batch_fast`] (unrolled multi-accumulator dot
+    /// products, so the per-cell sums are reassociated); the elementwise
+    /// gate math is identical to [`GruCell::forward_batch`]. Matches the
+    /// exact kernel to relative tolerance, not bit-for-bit.
+    pub fn forward_batch_fast(
+        &self,
+        params: &[f64],
+        x: &[f64],
+        h: &[f64],
+        cache: &mut GruBatchCache,
+        h_next: &mut [f64],
+    ) {
+        let n = cache.batch * self.hidden;
+        debug_assert_eq!(x.len(), cache.batch * self.in_dim);
+        debug_assert_eq!(h.len(), n);
+        debug_assert_eq!(h_next.len(), n);
+        cache.x.copy_from_slice(x);
+        cache.h.copy_from_slice(h);
+
+        let GruBatchCache { r, u, n: cand, hn_lin, tmp_i, tmp_h, .. } = cache;
+        // r gate
+        self.w_ir.forward_batch_fast(params, x, tmp_i);
+        self.w_hr.forward_batch_fast(params, h, tmp_h);
+        for i in 0..n {
+            r[i] = sigmoid(tmp_i[i] + tmp_h[i]);
+        }
+        // u gate
+        self.w_iu.forward_batch_fast(params, x, tmp_i);
+        self.w_hu.forward_batch_fast(params, h, tmp_h);
+        for i in 0..n {
+            u[i] = sigmoid(tmp_i[i] + tmp_h[i]);
+        }
+        // candidate
+        self.w_in.forward_batch_fast(params, x, tmp_i);
+        self.w_hn.forward_batch_fast(params, h, hn_lin);
+        for i in 0..n {
+            cand[i] = (tmp_i[i] + r[i] * hn_lin[i]).tanh();
+        }
+        for i in 0..n {
+            h_next[i] = (1.0 - u[i]) * cand[i] + u[i] * h[i];
+        }
+    }
+
     /// Batched accumulating VJP of one step: given `dh_next: [B×hd]`, adds
     /// into `dx: [B×in]`, `dh: [B×hd]` (gradient w.r.t. the *incoming*
     /// hidden state) and each row's parameter-gradient block
@@ -256,6 +300,56 @@ impl GruCell {
         self.w_hn.vjp_batch(params, &cache.h, &dhn_lin, dh, dparams, pstride);
         self.w_hu.vjp_batch(params, &cache.h, &du_pre, dh, dparams, pstride);
         self.w_hr.vjp_batch(params, &cache.h, &dr_pre, dh, dparams, pstride);
+    }
+
+    /// Fast-tier batched VJP: identical gate backward math, but the six
+    /// gate-linear VJPs run through [`Linear::vjp_batch_fast`] (branchless
+    /// split dx/dW sweeps). Pairs with [`GruCell::forward_batch_fast`]:
+    /// the cache must come from the same tier's forward pass.
+    #[allow(clippy::too_many_arguments)]
+    pub fn vjp_batch_fast(
+        &self,
+        params: &[f64],
+        cache: &GruBatchCache,
+        dh_next: &[f64],
+        dx: &mut [f64],
+        dh: &mut [f64],
+        dparams: &mut [f64],
+        pstride: usize,
+    ) {
+        let n = cache.batch * self.hidden;
+        debug_assert_eq!(dh_next.len(), n);
+        debug_assert_eq!(dh.len(), n);
+        debug_assert_eq!(dx.len(), cache.batch * self.in_dim);
+        debug_assert_eq!(dparams.len(), cache.batch * pstride);
+        let mut du = vec![0.0; n];
+        let mut dn = vec![0.0; n];
+        let mut dr = vec![0.0; n];
+        let mut dn_pre = vec![0.0; n];
+        let mut dhn_lin = vec![0.0; n];
+        let mut du_pre = vec![0.0; n];
+        let mut dr_pre = vec![0.0; n];
+
+        for i in 0..n {
+            du[i] = dh_next[i] * (cache.h[i] - cache.n[i]);
+            dn[i] = dh_next[i] * (1.0 - cache.u[i]);
+            dh[i] += dh_next[i] * cache.u[i];
+        }
+        for i in 0..n {
+            dn_pre[i] = dn[i] * (1.0 - cache.n[i] * cache.n[i]);
+            dr[i] = dn_pre[i] * cache.hn_lin[i];
+            dhn_lin[i] = dn_pre[i] * cache.r[i];
+            du_pre[i] = du[i] * cache.u[i] * (1.0 - cache.u[i]);
+            dr_pre[i] = dr[i] * cache.r[i] * (1.0 - cache.r[i]);
+        }
+        // Input-side linears.
+        self.w_in.vjp_batch_fast(params, &cache.x, &dn_pre, dx, dparams, pstride);
+        self.w_iu.vjp_batch_fast(params, &cache.x, &du_pre, dx, dparams, pstride);
+        self.w_ir.vjp_batch_fast(params, &cache.x, &dr_pre, dx, dparams, pstride);
+        // Hidden-side linears.
+        self.w_hn.vjp_batch_fast(params, &cache.h, &dhn_lin, dh, dparams, pstride);
+        self.w_hu.vjp_batch_fast(params, &cache.h, &du_pre, dh, dparams, pstride);
+        self.w_hr.vjp_batch_fast(params, &cache.h, &dr_pre, dh, dparams, pstride);
     }
 }
 
@@ -442,5 +536,66 @@ mod tests {
                 "dparams row {b}"
             );
         }
+    }
+
+    /// The fast-tier step and VJP reassociate the gate-linear dot
+    /// products, so they are not bit-identical — but they must agree with
+    /// the exact batched kernels to tight relative tolerance.
+    #[test]
+    fn fast_batched_kernels_match_exact_to_tolerance() {
+        let (in_dim, hd, bsz) = (5, 7, 6);
+        let mut pb = ParamBuilder::new();
+        let cell = GruCell::new(&mut pb, in_dim, hd);
+        let params = pb.init(PrngKey::from_seed(60));
+        let key = PrngKey::from_seed(61);
+        let mut x = vec![0.0; bsz * in_dim];
+        key.fill_normal(0, &mut x);
+        let mut h = vec![0.0; bsz * hd];
+        key.fill_normal(100, &mut h);
+        let mut dy = vec![0.0; bsz * hd];
+        key.fill_normal(200, &mut dy);
+
+        let mut exact_cache = cell.batch_cache(bsz);
+        let mut hn_exact = vec![0.0; bsz * hd];
+        cell.forward_batch(&params, &x, &h, &mut exact_cache, &mut hn_exact);
+        let mut dx_exact = vec![0.0; bsz * in_dim];
+        let mut dh_exact = vec![0.0; bsz * hd];
+        let mut dp_exact = vec![0.0; bsz * params.len()];
+        cell.vjp_batch(
+            &params,
+            &exact_cache,
+            &dy,
+            &mut dx_exact,
+            &mut dh_exact,
+            &mut dp_exact,
+            params.len(),
+        );
+
+        let mut fast_cache = cell.batch_cache(bsz);
+        let mut hn_fast = vec![0.0; bsz * hd];
+        cell.forward_batch_fast(&params, &x, &h, &mut fast_cache, &mut hn_fast);
+        let mut dx_fast = vec![0.0; bsz * in_dim];
+        let mut dh_fast = vec![0.0; bsz * hd];
+        let mut dp_fast = vec![0.0; bsz * params.len()];
+        cell.vjp_batch_fast(
+            &params,
+            &fast_cache,
+            &dy,
+            &mut dx_fast,
+            &mut dh_fast,
+            &mut dp_fast,
+            params.len(),
+        );
+
+        let close = |a: &[f64], b: &[f64], what: &str| {
+            for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+                let scale = x.abs().max(y.abs()).max(1.0);
+                assert!((x - y).abs() <= 1e-12 * scale, "{what}[{i}]: {x} vs {y}");
+            }
+        };
+        close(&hn_exact, &hn_fast, "h_next");
+        close(&dx_exact, &dx_fast, "dx");
+        close(&dh_exact, &dh_fast, "dh");
+        close(&dp_exact, &dp_fast, "dparams");
     }
 }

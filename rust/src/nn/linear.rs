@@ -143,6 +143,87 @@ impl Linear {
             }
         }
     }
+
+    /// Fast-tier batched forward: same weight-row blocking as
+    /// [`Linear::forward_batch`], but each dot product runs on four
+    /// independent accumulators (reassociated reduction — the float order
+    /// the exact kernel pins is deliberately given up here, which is what
+    /// lets the compiler keep four FMA chains in flight and vectorize the
+    /// stride-1 lanes). Agrees with the exact kernel to relative rounding
+    /// tolerance, pinned in `tests/fast_tier.rs`.
+    pub fn forward_batch_fast(&self, params: &[f64], x: &[f64], out: &mut [f64]) {
+        let (ni, no) = (self.in_dim, self.out_dim);
+        let bsz = x.len() / ni;
+        debug_assert_eq!(x.len(), bsz * ni);
+        debug_assert_eq!(out.len(), bsz * no);
+        let w = &params[self.w_off..self.w_off + ni * no];
+        let b_vec = &params[self.b_off..self.b_off + no];
+        for o in 0..no {
+            let row = &w[o * ni..(o + 1) * ni];
+            let bias = b_vec[o];
+            for b in 0..bsz {
+                let xr = &x[b * ni..(b + 1) * ni];
+                let mut a0 = 0.0;
+                let mut a1 = 0.0;
+                let mut a2 = 0.0;
+                let mut a3 = 0.0;
+                let mut i = 0;
+                while i + 4 <= ni {
+                    a0 += row[i] * xr[i];
+                    a1 += row[i + 1] * xr[i + 1];
+                    a2 += row[i + 2] * xr[i + 2];
+                    a3 += row[i + 3] * xr[i + 3];
+                    i += 4;
+                }
+                let mut tail = 0.0;
+                while i < ni {
+                    tail += row[i] * xr[i];
+                    i += 1;
+                }
+                out[b * no + o] = bias + ((a0 + a2) + (a1 + a3)) + tail;
+            }
+        }
+    }
+
+    /// Fast-tier batched VJP: the exact kernel's `g == 0` row skip is
+    /// dropped (branchless inner loops vectorize; a multiply by zero is
+    /// cheaper than a mispredicted branch at typical densities) and the
+    /// two accumulation streams (`dx`, `dW`) stay independent stride-1
+    /// sweeps. Gradient values agree with the exact kernel up to the
+    /// `±0.0` of skipped rows and rounding-order tolerance.
+    pub fn vjp_batch_fast(
+        &self,
+        params: &[f64],
+        x: &[f64],
+        dy: &[f64],
+        dx: &mut [f64],
+        dparams: &mut [f64],
+        pstride: usize,
+    ) {
+        let (ni, no) = (self.in_dim, self.out_dim);
+        let bsz = x.len() / ni;
+        debug_assert_eq!(dy.len(), bsz * no);
+        debug_assert_eq!(dx.len(), bsz * ni);
+        debug_assert_eq!(dparams.len(), bsz * pstride);
+        let w = &params[self.w_off..self.w_off + ni * no];
+        for o in 0..no {
+            let row = &w[o * ni..(o + 1) * ni];
+            for b in 0..bsz {
+                let g = dy[b * no + o];
+                let xr = &x[b * ni..(b + 1) * ni];
+                let dxr = &mut dx[b * ni..(b + 1) * ni];
+                let blk = &mut dparams[b * pstride..(b + 1) * pstride];
+                let dw_row = &mut blk[self.w_off + o * ni..self.w_off + (o + 1) * ni];
+                for i in 0..ni {
+                    dxr[i] += row[i] * g;
+                }
+                for i in 0..ni {
+                    dw_row[i] += xr[i] * g;
+                }
+                blk[self.b_off + o] += g;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -212,5 +293,46 @@ mod tests {
         l.vjp(&p, &x, &dy, &mut dx, &mut dp);
         assert!((dx[0] - (10.0 + dx_base[0])).abs() < 1e-12);
         assert!((dx[1] - (20.0 + dx_base[1])).abs() < 1e-12);
+    }
+
+    /// Fast kernels agree with the exact ones to relative rounding
+    /// tolerance — including an in-dim that is not a multiple of the
+    /// unroll width and a dy row containing exact zeros (the fast VJP
+    /// drops the zero-skip).
+    #[test]
+    fn fast_kernels_match_exact_to_tolerance() {
+        let key = PrngKey::from_seed(5);
+        let mut pb = ParamBuilder::new();
+        let l = Linear::new(&mut pb, 7, 3);
+        let p = pb.init(key);
+        let bsz = 9;
+        let mut x = vec![0.0; bsz * 7];
+        key.fill_normal(1, &mut x);
+        let mut dy = vec![0.0; bsz * 3];
+        key.fill_normal(2, &mut dy);
+        dy[4] = 0.0; // exercise the dropped zero-skip
+        let tol = |a: f64, b: f64| (a - b).abs() <= 1e-12 * a.abs().max(1.0);
+
+        let mut y_exact = vec![0.0; bsz * 3];
+        let mut y_fast = vec![0.0; bsz * 3];
+        l.forward_batch(&p, &x, &mut y_exact);
+        l.forward_batch_fast(&p, &x, &mut y_fast);
+        for (a, b) in y_exact.iter().zip(&y_fast) {
+            assert!(tol(*a, *b), "forward {a} vs {b}");
+        }
+
+        let pstride = p.len();
+        let mut dx_e = vec![0.0; bsz * 7];
+        let mut dp_e = vec![0.0; bsz * pstride];
+        l.vjp_batch(&p, &x, &dy, &mut dx_e, &mut dp_e, pstride);
+        let mut dx_f = vec![0.0; bsz * 7];
+        let mut dp_f = vec![0.0; bsz * pstride];
+        l.vjp_batch_fast(&p, &x, &dy, &mut dx_f, &mut dp_f, pstride);
+        for (a, b) in dx_e.iter().zip(&dx_f) {
+            assert!(tol(*a, *b), "dx {a} vs {b}");
+        }
+        for (a, b) in dp_e.iter().zip(&dp_f) {
+            assert!(tol(*a, *b), "dparams {a} vs {b}");
+        }
     }
 }

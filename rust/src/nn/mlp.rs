@@ -133,6 +133,76 @@ impl Mlp {
         }
     }
 
+    /// Fast-tier batched forward: layer matmuls run on
+    /// [`Linear::forward_batch_fast`] (reassociated multi-accumulator
+    /// dots); activations are elementwise and unchanged. Same cache
+    /// contract as [`Mlp::forward_batch`]; agrees with it to relative
+    /// tolerance (`tests/fast_tier.rs`).
+    pub fn forward_batch_fast(
+        &self,
+        params: &[f64],
+        x: &[f64],
+        cache: &mut MlpBatchCache,
+        out: &mut [f64],
+    ) {
+        debug_assert_eq!(x.len(), cache.batch * self.in_dim());
+        cache.act[0].copy_from_slice(x);
+        let n = self.layers.len();
+        for (l, lin) in self.layers.iter().enumerate() {
+            let (lo, hi) = cache.act.split_at_mut(l + 1);
+            lin.forward_batch_fast(params, &lo[l], &mut cache.pre[l]);
+            let act = if l + 1 == n { self.output_act } else { self.hidden_act };
+            for (&pre_v, slot) in cache.pre[l].iter().zip(hi[0].iter_mut()) {
+                *slot = act.apply(pre_v);
+            }
+        }
+        out.copy_from_slice(cache.act.last().unwrap());
+    }
+
+    /// Fast-tier batched VJP following a [`Mlp::forward_batch_fast`]
+    /// with the same inputs: layer backward passes run on
+    /// [`Linear::vjp_batch_fast`] (branchless, no zero-row skip). Same
+    /// cache/per-path-block contract as [`Mlp::vjp_batch`].
+    pub fn vjp_batch_fast(
+        &self,
+        params: &[f64],
+        cache: &mut MlpBatchCache,
+        dy: &[f64],
+        dx: &mut [f64],
+        dparams: &mut [f64],
+        pstride: usize,
+    ) {
+        let n = self.layers.len();
+        let bsz = cache.batch;
+        let no = self.out_dim();
+        {
+            let dlt = &mut cache.delta[..bsz * no];
+            for (i, slot) in dlt.iter_mut().enumerate() {
+                let pre = cache.pre[n - 1][i];
+                let act = cache.act[n][i];
+                *slot = dy[i] * self.output_act.grad(pre, act);
+            }
+        }
+        for l in (0..n).rev() {
+            let lin = &self.layers[l];
+            let dlt_len = bsz * lin.out_dim;
+            if l == 0 {
+                let delta = &cache.delta[..dlt_len];
+                lin.vjp_batch_fast(params, &cache.act[0], delta, dx, dparams, pstride);
+            } else {
+                let MlpBatchCache { pre, act, delta, delta_next, .. } = cache;
+                let dnx = &mut delta_next[..bsz * lin.in_dim];
+                dnx.fill(0.0);
+                lin.vjp_batch_fast(params, &act[l], &delta[..dlt_len], dnx, dparams, pstride);
+                for i in 0..bsz * lin.in_dim {
+                    let p = pre[l - 1][i];
+                    let a = act[l][i];
+                    delta[i] = dnx[i] * self.hidden_act.grad(p, a);
+                }
+            }
+        }
+    }
+
     /// Total parameter count.
     pub fn param_count(&self) -> usize {
         self.layers.iter().map(|l| l.param_count()).sum()
@@ -374,6 +444,53 @@ mod tests {
                     &dp[..],
                     "{sizes:?} dparams row {b}"
                 );
+            }
+        }
+    }
+
+    /// Fast-tier forward/VJP agree with the exact batched kernels to
+    /// relative tolerance across depths, activations, and odd widths.
+    #[test]
+    fn fast_batched_kernels_match_exact_to_tolerance() {
+        for (sizes, hidden, output) in [
+            (&[3usize, 16, 2][..], Activation::Softplus, Activation::Identity),
+            (&[1, 9, 1][..], Activation::Softplus, Activation::Sigmoid),
+            (&[5, 7, 7, 3][..], Activation::Tanh, Activation::Identity),
+        ] {
+            let mut pb = ParamBuilder::new();
+            let mlp = Mlp::new(&mut pb, sizes, hidden, output);
+            let params = pb.init(PrngKey::from_seed(60));
+            let (ni, no) = (mlp.in_dim(), mlp.out_dim());
+            let bsz = 6;
+            let key = PrngKey::from_seed(61);
+            let mut x = vec![0.0; bsz * ni];
+            key.fill_normal(0, &mut x);
+            let mut dy = vec![0.0; bsz * no];
+            key.fill_normal(700, &mut dy);
+            let tol = |a: f64, b: f64| (a - b).abs() <= 1e-10 * a.abs().max(1.0);
+
+            let mut ce = mlp.batch_cache(bsz);
+            let mut out_e = vec![0.0; bsz * no];
+            mlp.forward_batch(&params, &x, &mut ce, &mut out_e);
+            let mut dx_e = vec![0.0; bsz * ni];
+            let mut dp_e = vec![0.0; bsz * params.len()];
+            mlp.vjp_batch(&params, &mut ce, &dy, &mut dx_e, &mut dp_e, params.len());
+
+            let mut cf = mlp.batch_cache(bsz);
+            let mut out_f = vec![0.0; bsz * no];
+            mlp.forward_batch_fast(&params, &x, &mut cf, &mut out_f);
+            let mut dx_f = vec![0.0; bsz * ni];
+            let mut dp_f = vec![0.0; bsz * params.len()];
+            mlp.vjp_batch_fast(&params, &mut cf, &dy, &mut dx_f, &mut dp_f, params.len());
+
+            for (a, b) in out_e.iter().zip(&out_f) {
+                assert!(tol(*a, *b), "{sizes:?} fwd {a} vs {b}");
+            }
+            for (a, b) in dx_e.iter().zip(&dx_f) {
+                assert!(tol(*a, *b), "{sizes:?} dx {a} vs {b}");
+            }
+            for (a, b) in dp_e.iter().zip(&dp_f) {
+                assert!(tol(*a, *b), "{sizes:?} dparams {a} vs {b}");
             }
         }
     }

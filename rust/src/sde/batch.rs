@@ -30,6 +30,51 @@
 
 use super::traits::{Sde, SdeVjp};
 
+/// Which kernel family executes a batched computation.
+///
+/// * [`KernelTier::Exact`] (the default) is the oracle: every per-path
+///   float follows the scalar engine's evaluation order exactly, so a
+///   batch of B paths equals B scalar solves bit for bit. No
+///   reassociation, no fusion that changes rounding.
+/// * [`KernelTier::Fast`] routes batched execution through blocked,
+///   dimension-major sweep kernels shaped for autovectorization: fused
+///   drift+diffusion evaluation, matrix-matrix MLP/GRU passes free to
+///   reassociate accumulations, and flat elementwise kernels for
+///   structured systems. Results are validated against the exact tier to
+///   a stated **relative tolerance** (`tests/fast_tier.rs`), not bit
+///   identity.
+///
+/// The tier is selected per call site ([`crate::api::SolveOptions`], the
+/// trainer/serve configs, and the bench CLI); the exact tier remains the
+/// default everywhere.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelTier {
+    /// Bit-identical to per-path scalar execution (default; the oracle).
+    #[default]
+    Exact,
+    /// Autovectorization-friendly kernels, validated to tolerance.
+    Fast,
+}
+
+impl KernelTier {
+    /// Stable lowercase name (CLI/bench row vocabulary).
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelTier::Exact => "exact",
+            KernelTier::Fast => "fast",
+        }
+    }
+
+    /// Parse a CLI spelling (`"exact"` / `"fast"`).
+    pub fn parse(s: &str) -> Option<KernelTier> {
+        match s {
+            "exact" => Some(KernelTier::Exact),
+            "fast" => Some(KernelTier::Fast),
+            _ => None,
+        }
+    }
+}
+
 /// Batched evaluation of an [`Sde`] over `[B×d]` state buffers.
 ///
 /// Implement with `impl BatchSde for MySde {}` to get the loop-based
@@ -79,6 +124,60 @@ pub trait BatchSde: Sde {
         for (zr, or) in z.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
             self.drift_stratonovich(t, zr, theta, or, scratch);
         }
+    }
+
+    // ── Fast-tier kernels ──────────────────────────────────────────────
+    //
+    // Every `*_fast` method defaults to its exact counterpart, so plain
+    // `impl BatchSde for T {}` systems behave identically on both tiers.
+    // Systems with structure override these with fused / flat /
+    // reassociation-free-of-pinning sweeps; overrides may change the
+    // float evaluation order but must stay within the relative tolerance
+    // pinned by `tests/fast_tier.rs`.
+
+    /// Fast-tier drift. Default: the exact kernel.
+    fn drift_batch_fast(&self, t: f64, z: &[f64], theta: &[f64], out: &mut [f64]) {
+        self.drift_batch(t, z, theta, out);
+    }
+
+    /// Fast-tier diagonal diffusion. Default: the exact kernel.
+    fn diffusion_batch_fast(&self, t: f64, z: &[f64], theta: &[f64], out: &mut [f64]) {
+        self.diffusion_batch(t, z, theta, out);
+    }
+
+    /// Fast-tier `∂σ_i/∂z_i`. Default: the exact kernel.
+    fn diffusion_dz_diag_batch_fast(&self, t: f64, z: &[f64], theta: &[f64], out: &mut [f64]) {
+        self.diffusion_dz_diag_batch(t, z, theta, out);
+    }
+
+    /// Fast-tier Stratonovich drift (same `scratch` contract as the
+    /// exact kernel). Default: the exact kernel.
+    fn drift_stratonovich_batch_fast(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        out: &mut [f64],
+        scratch: &mut [f64],
+    ) {
+        self.drift_stratonovich_batch(t, z, theta, out, scratch);
+    }
+
+    /// Fused fast-tier drift **and** diffusion in one sweep over the
+    /// state buffer — the hot call of every explicit scheme's first
+    /// stage. Default: two separate fast kernels; structured systems
+    /// override with a single pass that keeps each `z` cell hot for both
+    /// coefficients.
+    fn drift_diffusion_batch_fast(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        f_out: &mut [f64],
+        g_out: &mut [f64],
+    ) {
+        self.drift_batch_fast(t, z, theta, f_out);
+        self.diffusion_batch_fast(t, z, theta, g_out);
     }
 }
 
@@ -198,6 +297,68 @@ pub trait BatchSdeVjp: BatchSde + SdeVjp {
             );
         }
     }
+
+    // ── Fast-tier VJP kernels ──────────────────────────────────────────
+    //
+    // Same contract and default-to-exact convention as the forward-side
+    // fast kernels on [`BatchSde`]: per-path `[B×p]` accumulation,
+    // overrides free to hoist scratch and sweep dimension-major.
+
+    /// Fast-tier batched drift VJP. Default: the exact kernel.
+    fn drift_vjp_batch_fast(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+    ) {
+        self.drift_vjp_batch(t, z, theta, a, out_z, out_theta);
+    }
+
+    /// Fast-tier batched diffusion VJP. Default: the exact kernel.
+    fn diffusion_vjp_batch_fast(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+    ) {
+        self.diffusion_vjp_batch(t, z, theta, a, out_z, out_theta);
+    }
+
+    /// Fast-tier batched Itô→Stratonovich correction VJP. Default: the
+    /// exact kernel (panics when the system provides no correction VJP).
+    fn ito_correction_vjp_batch_fast(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+    ) {
+        self.ito_correction_vjp_batch(t, z, theta, a, out_z, out_theta);
+    }
+
+    /// Fast-tier batched Stratonovich drift VJP (same `scratch` contract
+    /// as the exact kernel). Default: the exact kernel.
+    #[allow(clippy::too_many_arguments)]
+    fn drift_vjp_stratonovich_batch_fast(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+        scratch: &mut [f64],
+    ) {
+        self.drift_vjp_stratonovich_batch(t, z, theta, a, out_z, out_theta, scratch);
+    }
 }
 
 #[cfg(test)]
@@ -278,5 +439,46 @@ mod tests {
         sde.drift_vjp_batch(0.0, &z, &theta, &a, &mut vz, &mut vth);
         assert!(vth[..4].iter().any(|v| *v != 0.0), "path 0 gets gradient");
         assert!(vth[4..].iter().all(|v| *v == 0.0), "path 1 stays zero");
+    }
+
+    /// The tier selector's CLI vocabulary round-trips, and Exact is the
+    /// default.
+    #[test]
+    fn kernel_tier_vocabulary() {
+        use crate::sde::KernelTier;
+        assert_eq!(KernelTier::default(), KernelTier::Exact);
+        for tier in [KernelTier::Exact, KernelTier::Fast] {
+            assert_eq!(KernelTier::parse(tier.name()), Some(tier));
+        }
+        assert_eq!(KernelTier::parse("turbo"), None);
+    }
+
+    /// The fused fast-tier kernel agrees with the separate exact kernels
+    /// for the hand-batched problems (their per-cell expressions are the
+    /// same scalar calls; only the sweep is fused).
+    #[test]
+    fn fused_fast_kernel_matches_exact() {
+        let dim = 3;
+        let batch = 5;
+        let sde = ReplicatedSde::new(Example2, dim);
+        let key = PrngKey::from_seed(23);
+        let (theta, _) = sample_experiment_setup(key, dim, 1);
+        let mut z = vec![0.0; batch * dim];
+        key.fill_normal(11, &mut z);
+        let t = 0.4;
+
+        let mut f_exact = vec![0.0; batch * dim];
+        let mut g_exact = vec![0.0; batch * dim];
+        sde.drift_batch(t, &z, &theta, &mut f_exact);
+        sde.diffusion_batch(t, &z, &theta, &mut g_exact);
+
+        let mut f_fast = vec![0.0; batch * dim];
+        let mut g_fast = vec![0.0; batch * dim];
+        sde.drift_diffusion_batch_fast(t, &z, &theta, &mut f_fast, &mut g_fast);
+
+        for i in 0..batch * dim {
+            assert!((f_fast[i] - f_exact[i]).abs() <= 1e-12 * f_exact[i].abs().max(1.0));
+            assert!((g_fast[i] - g_exact[i]).abs() <= 1e-12 * g_exact[i].abs().max(1.0));
+        }
     }
 }

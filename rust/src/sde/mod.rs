@@ -30,7 +30,7 @@ pub mod ou;
 pub mod problems;
 pub mod traits;
 
-pub use batch::{BatchSde, BatchSdeVjp};
+pub use batch::{BatchSde, BatchSdeVjp, KernelTier};
 pub use func::{ForwardFunc, SdeFunc};
 pub use problems::{ReplicatedSde, ScalarProblem};
 pub use traits::{Calculus, ExactSolution, ScalarSde, Sde, SdeVjp};

@@ -172,9 +172,109 @@ impl BatchSde for OrnsteinUhlenbeck {
     fn diffusion_dz_diag_batch(&self, _t: f64, _z: &[f64], _th: &[f64], out: &mut [f64]) {
         out.fill(0.0);
     }
+
+    /// Fast tier: both coefficients in one flat sweep (the diffusion is a
+    /// constant fill fused into the same pass).
+    fn drift_diffusion_batch_fast(
+        &self,
+        _t: f64,
+        z: &[f64],
+        th: &[f64],
+        f_out: &mut [f64],
+        g_out: &mut [f64],
+    ) {
+        let (kappa, mu, s) = (th[0], th[1], th[2]);
+        for ((f, g), zi) in f_out.iter_mut().zip(g_out.iter_mut()).zip(z) {
+            *f = kappa * (mu - zi);
+            *g = s;
+        }
+    }
+
+    /// Fast tier: additive noise means `½σσ′ ≡ 0`, so the Stratonovich
+    /// drift is the drift — one flat sweep, no σ/σ′ staging.
+    fn drift_stratonovich_batch_fast(
+        &self,
+        t: f64,
+        z: &[f64],
+        th: &[f64],
+        out: &mut [f64],
+        _scratch: &mut [f64],
+    ) {
+        self.drift_batch(t, z, th, out);
+    }
 }
 
-impl BatchSdeVjp for OrnsteinUhlenbeck {}
+/// Fast-tier VJP sweeps: the θ-side accumulations are plain row
+/// reductions, free to reassociate into per-path partial sums (the exact
+/// defaults pin the scalar engine's accumulation order instead).
+impl BatchSdeVjp for OrnsteinUhlenbeck {
+    fn drift_vjp_batch_fast(
+        &self,
+        _t: f64,
+        z: &[f64],
+        th: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+    ) {
+        let d = self.dim;
+        let (kappa, mu) = (th[0], th[1]);
+        let bsz = z.len() / d;
+        for b in 0..bsz {
+            let mut gk = 0.0;
+            let mut ga = 0.0;
+            for i in 0..d {
+                let idx = b * d + i;
+                out_z[idx] += -kappa * a[idx];
+                gk += (mu - z[idx]) * a[idx];
+                ga += a[idx];
+            }
+            out_theta[b * 3] += gk;
+            out_theta[b * 3 + 1] += kappa * ga;
+        }
+    }
+
+    fn diffusion_vjp_batch_fast(
+        &self,
+        _t: f64,
+        z: &[f64],
+        _th: &[f64],
+        a: &[f64],
+        _out_z: &mut [f64],
+        out_theta: &mut [f64],
+    ) {
+        let d = self.dim;
+        let bsz = z.len() / d;
+        for b in 0..bsz {
+            out_theta[b * 3 + 2] += a[b * d..(b + 1) * d].iter().sum::<f64>();
+        }
+    }
+
+    fn ito_correction_vjp_batch_fast(
+        &self,
+        _t: f64,
+        _z: &[f64],
+        _th: &[f64],
+        _a: &[f64],
+        _out_z: &mut [f64],
+        _out_theta: &mut [f64],
+    ) {
+        // Additive noise: c ≡ 0.
+    }
+
+    fn drift_vjp_stratonovich_batch_fast(
+        &self,
+        t: f64,
+        z: &[f64],
+        th: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+        _scratch: &mut [f64],
+    ) {
+        self.drift_vjp_batch_fast(t, z, th, a, out_z, out_theta);
+    }
+}
 
 /// Pathwise exact solution via variation of constants,
 /// `X_{t1} = μ + (x0 − μ)e^{−κT} + s ∫ e^{−κ(t1−u)} dW_u`, with the

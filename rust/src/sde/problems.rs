@@ -409,9 +409,188 @@ impl<P: ScalarSde> BatchSde for ReplicatedSde<P> {
             }
         }
     }
+
+    /// Fast tier: one fused dimension-major sweep produces both
+    /// coefficients — each `z` cell is loaded once and the per-dimension
+    /// parameter slice stays hot for drift *and* diffusion.
+    fn drift_diffusion_batch_fast(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        f_out: &mut [f64],
+        g_out: &mut [f64],
+    ) {
+        let d = self.dim;
+        let bsz = z.len() / d;
+        for i in 0..d {
+            let th = self.th(theta, i);
+            for b in 0..bsz {
+                let zi = z[b * d + i];
+                f_out[b * d + i] = self.problem.drift(t, zi, th);
+                g_out[b * d + i] = self.problem.diffusion(t, zi, th);
+            }
+        }
+    }
+
+    /// Fast tier: the Stratonovich drift as one flat per-cell expression
+    /// (`b − ½σσ′` for native-Itô problems) instead of the row-loop with
+    /// σ/σ′ staging — no scratch traffic, one pass over `z`.
+    fn drift_stratonovich_batch_fast(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        out: &mut [f64],
+        _scratch: &mut [f64],
+    ) {
+        let d = self.dim;
+        let bsz = z.len() / d;
+        let ito = self.problem.calculus() == Calculus::Ito;
+        for i in 0..d {
+            let th = self.th(theta, i);
+            for b in 0..bsz {
+                let zi = z[b * d + i];
+                let mut v = self.problem.drift(t, zi, th);
+                if ito {
+                    v -= 0.5 * self.problem.diffusion(t, zi, th) * self.problem.diffusion_dx(t, zi, th);
+                }
+                out[b * d + i] = v;
+            }
+        }
+    }
 }
 
-impl<P: ScalarSde> BatchSdeVjp for ReplicatedSde<P> {}
+impl<P: ScalarSde> ReplicatedSde<P> {
+    /// Shared body of the fast Itô-correction VJP: accumulate
+    /// `sign · a ⊙ ∂c/∂·` with `c_i = ½σ_iσ_i′`, dimension-major with the
+    /// per-dimension derivative scratch hoisted out of the path loop.
+    fn ito_correction_vjp_fast_signed(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        a: &[f64],
+        sign: f64,
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+    ) {
+        let k = self.problem.nparams();
+        let d = self.dim;
+        let bsz = z.len() / d;
+        let mut dsig_dth = vec![0.0; k];
+        let mut dsigx_dth = vec![0.0; k];
+        for i in 0..d {
+            let th = self.th(theta, i);
+            for b in 0..bsz {
+                let zi = z[b * d + i];
+                let ai = sign * a[b * d + i];
+                let sig = self.problem.diffusion(t, zi, th);
+                let sig_x = self.problem.diffusion_dx(t, zi, th);
+                let sig_xx = self.problem.diffusion_dxx(t, zi, th);
+                out_z[b * d + i] += ai * 0.5 * (sig_x * sig_x + sig * sig_xx);
+                self.problem.diffusion_dtheta(t, zi, th, &mut dsig_dth);
+                self.problem.diffusion_dx_dtheta(t, zi, th, &mut dsigx_dth);
+                let row = &mut out_theta[b * d * k + i * k..b * d * k + (i + 1) * k];
+                for j in 0..k {
+                    row[j] += ai * 0.5 * (dsig_dth[j] * sig_x + sig * dsigx_dth[j]);
+                }
+            }
+        }
+    }
+}
+
+/// Fast-tier VJP sweeps: dimension-major with the per-dimension
+/// `∂·/∂θ` scratch hoisted out of the path loop — the loop-based exact
+/// defaults pay one scratch allocation *per path* per call; these pay one
+/// per call.
+impl<P: ScalarSde> BatchSdeVjp for ReplicatedSde<P> {
+    fn drift_vjp_batch_fast(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+    ) {
+        let k = self.problem.nparams();
+        let d = self.dim;
+        let bsz = z.len() / d;
+        let mut dth = vec![0.0; k];
+        for i in 0..d {
+            let th = self.th(theta, i);
+            for b in 0..bsz {
+                let zi = z[b * d + i];
+                let ai = a[b * d + i];
+                out_z[b * d + i] += ai * self.problem.drift_dx(t, zi, th);
+                self.problem.drift_dtheta(t, zi, th, &mut dth);
+                let row = &mut out_theta[b * d * k + i * k..b * d * k + (i + 1) * k];
+                for j in 0..k {
+                    row[j] += ai * dth[j];
+                }
+            }
+        }
+    }
+
+    fn diffusion_vjp_batch_fast(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+    ) {
+        let k = self.problem.nparams();
+        let d = self.dim;
+        let bsz = z.len() / d;
+        let mut dth = vec![0.0; k];
+        for i in 0..d {
+            let th = self.th(theta, i);
+            for b in 0..bsz {
+                let zi = z[b * d + i];
+                let ai = a[b * d + i];
+                out_z[b * d + i] += ai * self.problem.diffusion_dx(t, zi, th);
+                self.problem.diffusion_dtheta(t, zi, th, &mut dth);
+                let row = &mut out_theta[b * d * k + i * k..b * d * k + (i + 1) * k];
+                for j in 0..k {
+                    row[j] += ai * dth[j];
+                }
+            }
+        }
+    }
+
+    fn ito_correction_vjp_batch_fast(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+    ) {
+        self.ito_correction_vjp_fast_signed(t, z, theta, a, 1.0, out_z, out_theta);
+    }
+
+    fn drift_vjp_stratonovich_batch_fast(
+        &self,
+        t: f64,
+        z: &[f64],
+        theta: &[f64],
+        a: &[f64],
+        out_z: &mut [f64],
+        out_theta: &mut [f64],
+        _scratch: &mut [f64],
+    ) {
+        self.drift_vjp_batch_fast(t, z, theta, a, out_z, out_theta);
+        if self.problem.calculus() == Calculus::Ito {
+            // aᵀ∂(b−c)/∂· : the correction accumulates with flipped sign,
+            // folded into the sweep instead of staging −a per row.
+            self.ito_correction_vjp_fast_signed(t, z, theta, a, -1.0, out_z, out_theta);
+        }
+    }
+}
 
 /// Every §7.1 scalar problem's closed-form solution depends on the path
 /// only through `W_{t1}`, so the exact-solution oracle for a replicated

@@ -30,6 +30,7 @@ use crate::latent::{
     sample_posterior_paths_batch, sample_prior_path, sample_prior_paths_batch, ElboConfig,
 };
 use crate::prng::PrngKey;
+use crate::sde::KernelTier;
 
 /// Micro-batching knobs.
 #[derive(Clone, Copy, Debug)]
@@ -38,11 +39,16 @@ pub struct BatcherConfig {
     pub max_batch: usize,
     /// How long the dispatcher waits for more jobs after the first one.
     pub max_wait_us: u64,
+    /// Kernel tier for the ELBO-scoring engine calls (`--tier exact|fast`
+    /// on `sdegrad serve`). The batched-equals-scalar byte contract holds
+    /// *within* a tier: the scalar oracle takes the same tier. Simulate /
+    /// reconstruct solves stay on the exact engine regardless.
+    pub tier: KernelTier,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 16, max_wait_us: 500 }
+        BatcherConfig { max_batch: 16, max_wait_us: 500, tier: KernelTier::Exact }
     }
 }
 
@@ -65,9 +71,10 @@ impl Batcher {
         let (tx, rx) = mpsc::channel::<Job>();
         let max_batch = cfg.max_batch.max(1);
         let max_wait = Duration::from_micros(cfg.max_wait_us);
+        let tier = cfg.tier;
         let handle = std::thread::Builder::new()
             .name("sdegrad-batcher".into())
-            .spawn(move || dispatcher_loop(rx, &registry, max_batch, max_wait))
+            .spawn(move || dispatcher_loop(rx, &registry, max_batch, max_wait, tier))
             .expect("spawning batcher thread");
         Batcher { tx, handle: Some(handle) }
     }
@@ -113,6 +120,7 @@ fn dispatcher_loop(
     registry: &ModelRegistry,
     max_batch: usize,
     max_wait: Duration,
+    tier: KernelTier,
 ) {
     loop {
         // Block for the first job; drain opportunistically after it.
@@ -135,7 +143,7 @@ fn dispatcher_loop(
                 }
             }
         }
-        process_batch(registry, jobs);
+        process_batch(registry, jobs, tier);
     }
 }
 
@@ -191,7 +199,7 @@ fn request_cells(r: &ServeRequest) -> usize {
 /// preserved within each group — not that order matters: every response
 /// is independent of its neighbours), each capped at
 /// [`MAX_GROUP_CELLS`], and run each group as one batched engine call.
-fn process_batch(registry: &ModelRegistry, jobs: Vec<Job>) {
+fn process_batch(registry: &ModelRegistry, jobs: Vec<Job>, tier: KernelTier) {
     let mut groups: Vec<Vec<Job>> = Vec::new();
     let mut group_cells: Vec<usize> = Vec::new();
     'outer: for job in jobs {
@@ -207,7 +215,7 @@ fn process_batch(registry: &ModelRegistry, jobs: Vec<Job>) {
         group_cells.push(cells);
     }
     for group in groups {
-        run_group(registry, group);
+        run_group(registry, group, tier);
     }
 }
 
@@ -216,7 +224,7 @@ fn process_batch(registry: &ModelRegistry, jobs: Vec<Job>) {
 /// (engine invariant violation on some adversarial input) must answer
 /// the group with 500s, not kill the dispatcher thread and brick every
 /// future request into "the batcher has stopped".
-fn run_group(registry: &ModelRegistry, jobs: Vec<Job>) {
+fn run_group(registry: &ModelRegistry, jobs: Vec<Job>, tier: KernelTier) {
     let name = jobs[0].request.model().to_string();
     let Some(entry) = registry.get(&name) else {
         let err = ApiError::unknown_model(&name);
@@ -245,7 +253,7 @@ fn run_group(registry: &ModelRegistry, jobs: Vec<Job>) {
     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         // Nothing outlives the closure on panic: the engine works on
         // per-call state and reads the registry immutably.
-        compute_group(entry, &requests)
+        compute_group(entry, &requests, tier)
     }));
     match outcome {
         Ok(bodies) => {
@@ -264,7 +272,7 @@ fn run_group(registry: &ModelRegistry, jobs: Vec<Job>) {
 
 /// The one-batched-engine-call body of [`run_group`]: responses for a
 /// validated compatibility group, in job order.
-fn compute_group(entry: &ModelEntry, requests: &[&ServeRequest]) -> Vec<Vec<u8>> {
+fn compute_group(entry: &ModelEntry, requests: &[&ServeRequest], tier: KernelTier) -> Vec<Vec<u8>> {
     let dz = entry.model.cfg.latent_dim;
     let dx = entry.model.cfg.obs_dim;
     let keys: Vec<PrngKey> = requests.iter().map(|r| r.key()).collect();
@@ -322,7 +330,7 @@ fn compute_group(entry: &ModelEntry, requests: &[&ServeRequest]) -> Vec<Vec<u8>>
                     r.obs.as_slice()
                 })
                 .collect();
-            let cfg = ElboConfig { substeps: first.substeps, kl_weight: first.kl_weight };
+            let cfg = ElboConfig { substeps: first.substeps, kl_weight: first.kl_weight, tier };
             let outs = elbo_value_multi_batch(
                 &entry.model,
                 &entry.params,
@@ -347,8 +355,14 @@ fn compute_group(entry: &ModelEntry, requests: &[&ServeRequest]) -> Vec<Vec<u8>>
 /// The per-request **scalar oracle**: the same response computed with
 /// one-request scalar engine calls (no batching anywhere). The serving
 /// determinism contract is that every batched response byte-equals this
-/// — `tests/serve.rs` and `sdegrad bench serve` assert it.
-pub fn scalar_response(entry: &ModelEntry, req: &ServeRequest) -> Result<Vec<u8>, ApiError> {
+/// — `tests/serve.rs` and `sdegrad bench serve` assert it. The contract
+/// is per-tier: the oracle must score the ELBO under the same kernel
+/// tier the batcher runs.
+pub fn scalar_response(
+    entry: &ModelEntry,
+    req: &ServeRequest,
+    tier: KernelTier,
+) -> Result<Vec<u8>, ApiError> {
     protocol::validate_for_model(req, entry.model.cfg.obs_dim)?;
     let dz = entry.model.cfg.latent_dim;
     let dx = entry.model.cfg.obs_dim;
@@ -378,7 +392,7 @@ pub fn scalar_response(entry: &ModelEntry, req: &ServeRequest) -> Result<Vec<u8>
             Ok(protocol::reconstruct_response(r, entry.fingerprint, &latent, dz, &recon, dx))
         }
         ServeRequest::Elbo(r) => {
-            let cfg = ElboConfig { substeps: r.substeps, kl_weight: r.kl_weight };
+            let cfg = ElboConfig { substeps: r.substeps, kl_weight: r.kl_weight, tier };
             let out = elbo_value_multi(
                 &entry.model,
                 &entry.params,
@@ -495,8 +509,10 @@ mod tests {
             elbo(8, 3), // different sample count: its own group
         ];
         let entry = registry.get("default").unwrap();
-        let expected: Vec<Vec<u8>> =
-            requests.iter().map(|r| scalar_response(entry, r).unwrap()).collect();
+        let expected: Vec<Vec<u8>> = requests
+            .iter()
+            .map(|r| scalar_response(entry, r, KernelTier::Exact).unwrap())
+            .collect();
 
         let mut rxs = Vec::new();
         let mut jobs = Vec::new();
@@ -505,7 +521,7 @@ mod tests {
             jobs.push(Job { request: r.clone(), resp: tx });
             rxs.push(rx);
         }
-        process_batch(&registry, jobs);
+        process_batch(&registry, jobs, KernelTier::Exact);
         for (i, rx) in rxs.iter().enumerate() {
             let got = rx.recv().expect("no response").expect("error response");
             assert_eq!(got, expected[i], "request {i} diverged from the scalar oracle");
@@ -527,13 +543,14 @@ mod tests {
         }
         let expected = {
             let entry = registry.get("default").unwrap();
-            scalar_response(entry, &good).unwrap()
+            scalar_response(entry, &good, KernelTier::Exact).unwrap()
         };
         let (tx1, rx1) = mpsc::channel();
         let (tx2, rx2) = mpsc::channel();
         process_batch(
             &registry,
             vec![Job { request: good, resp: tx1 }, Job { request: bad, resp: tx2 }],
+            KernelTier::Exact,
         );
         assert_eq!(rx1.recv().unwrap().unwrap(), expected);
         let err = rx2.recv().unwrap().unwrap_err();
@@ -548,7 +565,7 @@ mod tests {
             r.model = "missing".into();
         }
         let (tx, rx) = mpsc::channel();
-        process_batch(&registry, vec![Job { request: bad, resp: tx }]);
+        process_batch(&registry, vec![Job { request: bad, resp: tx }], KernelTier::Exact);
         let err = rx.recv().unwrap().unwrap_err();
         assert_eq!(err.status, 404);
         assert_eq!(err.code, "unknown_model");
@@ -559,9 +576,10 @@ mod tests {
         let registry = tiny_registry();
         let entry_bytes = {
             let entry = registry.get("default").unwrap();
-            scalar_response(entry, &sim(42)).unwrap()
+            scalar_response(entry, &sim(42), KernelTier::Exact).unwrap()
         };
-        let batcher = Batcher::start(registry, BatcherConfig { max_batch: 4, max_wait_us: 100 });
+        let cfg = BatcherConfig { max_batch: 4, max_wait_us: 100, ..Default::default() };
+        let batcher = Batcher::start(registry, cfg);
         let got = batcher.submit(sim(42)).unwrap();
         assert_eq!(got, entry_bytes);
         batcher.shutdown();

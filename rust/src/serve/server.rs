@@ -64,6 +64,9 @@ pub struct ServeConfig {
     pub cache_capacity: usize,
     /// Maximum request-body bytes.
     pub max_body_bytes: usize,
+    /// Kernel tier for the batched ELBO-scoring engine (`--tier
+    /// exact|fast`). Forwarded to [`BatcherConfig::tier`].
+    pub tier: crate::sde::KernelTier,
 }
 
 impl Default for ServeConfig {
@@ -77,6 +80,7 @@ impl Default for ServeConfig {
             max_wait_us: 500,
             cache_capacity: 1024,
             max_body_bytes: 1 << 20,
+            tier: crate::sde::KernelTier::Exact,
         }
     }
 }
@@ -104,7 +108,11 @@ impl Server {
 
         let batcher = Batcher::start(
             registry.clone(),
-            BatcherConfig { max_batch: cfg.max_batch, max_wait_us: cfg.max_wait_us },
+            BatcherConfig {
+                max_batch: cfg.max_batch,
+                max_wait_us: cfg.max_wait_us,
+                tier: cfg.tier,
+            },
         );
         // None when disabled, so the hot path skips canonicalization, the
         // shared lock, and the response clone entirely.

@@ -25,7 +25,7 @@
 use super::grid::SolveStats;
 use super::methods::Method;
 use crate::brownian::{BatchBrownian, BrownianMotion};
-use crate::sde::{BatchSde, Calculus};
+use crate::sde::{BatchSde, Calculus, KernelTier};
 
 /// A flat batched diagonal-noise system as seen by the batched
 /// integrators: all buffers are row-major `[B×d]`.
@@ -48,6 +48,14 @@ pub trait BatchSdeFunc {
     fn diffusion_dy_diag(&mut self, _t: f64, _y: &[f64], _out: &mut [f64]) {
         unimplemented!("diffusion_dy_diag not provided by this batched system")
     }
+    /// Drift **and** diffusion of every path — the first stage of every
+    /// explicit scheme. Default: drift then diffusion, in that order, so
+    /// the exact tier's float sequence is untouched. Fast-tier systems
+    /// override with one fused sweep over the state buffer.
+    fn drift_and_diffusion(&mut self, t: f64, y: &[f64], f_out: &mut [f64], g_out: &mut [f64]) {
+        self.drift(t, y, f_out);
+        self.diffusion(t, y, g_out);
+    }
     /// Drift evaluations performed, in per-path units (one batched call =
     /// one evaluation).
     fn nfe_drift(&self) -> u64;
@@ -64,6 +72,7 @@ pub struct BatchForwardFunc<'a, S: BatchSde + ?Sized> {
     theta: &'a [f64],
     target: Calculus,
     batch: usize,
+    tier: KernelTier,
     sig: Vec<f64>,
     dsig: Vec<f64>,
     nfe_f: u64,
@@ -71,13 +80,37 @@ pub struct BatchForwardFunc<'a, S: BatchSde + ?Sized> {
 }
 
 impl<'a, S: BatchSde + ?Sized> BatchForwardFunc<'a, S> {
-    /// Expose the coefficients converted for `method`'s calculus.
+    /// Expose the coefficients converted for `method`'s calculus, on the
+    /// exact (bit-identical) kernel tier.
     pub fn for_method(sde: &'a S, theta: &'a [f64], batch: usize, method: Method) -> Self {
-        Self::in_calculus(sde, theta, batch, method.calculus())
+        Self::in_calculus_tier(sde, theta, batch, method.calculus(), KernelTier::Exact)
     }
 
-    /// Expose the coefficients in an explicit target calculus.
+    /// Like [`Self::for_method`] with an explicit kernel tier.
+    pub fn for_method_tier(
+        sde: &'a S,
+        theta: &'a [f64],
+        batch: usize,
+        method: Method,
+        tier: KernelTier,
+    ) -> Self {
+        Self::in_calculus_tier(sde, theta, batch, method.calculus(), tier)
+    }
+
+    /// Expose the coefficients in an explicit target calculus on the
+    /// exact tier.
     pub fn in_calculus(sde: &'a S, theta: &'a [f64], batch: usize, target: Calculus) -> Self {
+        Self::in_calculus_tier(sde, theta, batch, target, KernelTier::Exact)
+    }
+
+    /// Expose the coefficients in an explicit target calculus and tier.
+    pub fn in_calculus_tier(
+        sde: &'a S,
+        theta: &'a [f64],
+        batch: usize,
+        target: Calculus,
+        tier: KernelTier,
+    ) -> Self {
         assert_eq!(
             theta.len(),
             sde.param_dim(),
@@ -92,6 +125,7 @@ impl<'a, S: BatchSde + ?Sized> BatchForwardFunc<'a, S> {
             theta,
             target,
             batch,
+            tier,
             sig: vec![0.0; n],
             dsig: vec![0.0; n],
             nfe_f: 0,
@@ -115,11 +149,22 @@ impl<'a, S: BatchSde + ?Sized> BatchSdeFunc for BatchForwardFunc<'a, S> {
 
     fn drift(&mut self, t: f64, y: &[f64], out: &mut [f64]) {
         self.nfe_f += 1;
-        self.sde.drift_batch(t, y, self.theta, out);
+        match self.tier {
+            KernelTier::Exact => self.sde.drift_batch(t, y, self.theta, out),
+            KernelTier::Fast => self.sde.drift_batch_fast(t, y, self.theta, out),
+        }
         let native = self.sde.calculus();
         if native != self.target {
-            self.sde.diffusion_batch(t, y, self.theta, &mut self.sig);
-            self.sde.diffusion_dz_diag_batch(t, y, self.theta, &mut self.dsig);
+            match self.tier {
+                KernelTier::Exact => {
+                    self.sde.diffusion_batch(t, y, self.theta, &mut self.sig);
+                    self.sde.diffusion_dz_diag_batch(t, y, self.theta, &mut self.dsig);
+                }
+                KernelTier::Fast => {
+                    self.sde.diffusion_batch_fast(t, y, self.theta, &mut self.sig);
+                    self.sde.diffusion_dz_diag_batch_fast(t, y, self.theta, &mut self.dsig);
+                }
+            }
             let sign = match (native, self.target) {
                 (Calculus::Ito, Calculus::Stratonovich) => -0.5,
                 (Calculus::Stratonovich, Calculus::Ito) => 0.5,
@@ -133,7 +178,10 @@ impl<'a, S: BatchSde + ?Sized> BatchSdeFunc for BatchForwardFunc<'a, S> {
 
     fn diffusion(&mut self, t: f64, y: &[f64], out: &mut [f64]) {
         self.nfe_g += 1;
-        self.sde.diffusion_batch(t, y, self.theta, out);
+        match self.tier {
+            KernelTier::Exact => self.sde.diffusion_batch(t, y, self.theta, out),
+            KernelTier::Fast => self.sde.diffusion_batch_fast(t, y, self.theta, out),
+        }
     }
 
     fn has_diffusion_jacobian(&self) -> bool {
@@ -141,7 +189,40 @@ impl<'a, S: BatchSde + ?Sized> BatchSdeFunc for BatchForwardFunc<'a, S> {
     }
 
     fn diffusion_dy_diag(&mut self, t: f64, y: &[f64], out: &mut [f64]) {
-        self.sde.diffusion_dz_diag_batch(t, y, self.theta, out);
+        match self.tier {
+            KernelTier::Exact => self.sde.diffusion_dz_diag_batch(t, y, self.theta, out),
+            KernelTier::Fast => self.sde.diffusion_dz_diag_batch_fast(t, y, self.theta, out),
+        }
+    }
+
+    /// Fast tier: one fused sweep produces both stage coefficients; the
+    /// calculus correction reuses `g_out` as σ (it *is* σ) so only σ′
+    /// needs a second pass. Exact tier: the default drift-then-diffusion
+    /// order, bit for bit.
+    fn drift_and_diffusion(&mut self, t: f64, y: &[f64], f_out: &mut [f64], g_out: &mut [f64]) {
+        match self.tier {
+            KernelTier::Exact => {
+                self.drift(t, y, f_out);
+                self.diffusion(t, y, g_out);
+            }
+            KernelTier::Fast => {
+                self.nfe_f += 1;
+                self.nfe_g += 1;
+                self.sde.drift_diffusion_batch_fast(t, y, self.theta, f_out, g_out);
+                let native = self.sde.calculus();
+                if native != self.target {
+                    self.sde.diffusion_dz_diag_batch_fast(t, y, self.theta, &mut self.dsig);
+                    let sign = match (native, self.target) {
+                        (Calculus::Ito, Calculus::Stratonovich) => -0.5,
+                        (Calculus::Stratonovich, Calculus::Ito) => 0.5,
+                        _ => unreachable!(),
+                    };
+                    for ((o, s), ds) in f_out.iter_mut().zip(g_out.iter()).zip(&self.dsig) {
+                        *o += sign * s * ds;
+                    }
+                }
+            }
+        }
     }
 
     fn nfe_drift(&self) -> u64 {
@@ -214,21 +295,18 @@ impl BatchStepper {
         debug_assert_eq!(out.len(), n);
         match self.method {
             Method::EulerMaruyama => {
-                sys.drift(t, y, &mut ws.f0);
-                sys.diffusion(t, y, &mut ws.g0);
+                sys.drift_and_diffusion(t, y, &mut ws.f0, &mut ws.g0);
                 for i in 0..n {
                     out[i] = y[i] + ws.f0[i] * h + ws.g0[i] * ws.dw[i];
                 }
             }
             Method::Heun => {
-                sys.drift(t, y, &mut ws.f0);
-                sys.diffusion(t, y, &mut ws.g0);
+                sys.drift_and_diffusion(t, y, &mut ws.f0, &mut ws.g0);
                 for i in 0..n {
                     ws.ytmp[i] = y[i] + ws.f0[i] * h + ws.g0[i] * ws.dw[i];
                 }
                 let t1 = t + h;
-                sys.drift(t1, &ws.ytmp, &mut ws.f1);
-                sys.diffusion(t1, &ws.ytmp, &mut ws.g1);
+                sys.drift_and_diffusion(t1, &ws.ytmp, &mut ws.f1, &mut ws.g1);
                 for i in 0..n {
                     out[i] = y[i]
                         + 0.5 * (ws.f0[i] + ws.f1[i]) * h
@@ -240,8 +318,7 @@ impl BatchStepper {
                     sys.has_diffusion_jacobian(),
                     "Milstein requires diffusion_dy_diag; use Heun instead"
                 );
-                sys.drift(t, y, &mut ws.f0);
-                sys.diffusion(t, y, &mut ws.g0);
+                sys.drift_and_diffusion(t, y, &mut ws.f0, &mut ws.g0);
                 sys.diffusion_dy_diag(t, y, &mut ws.gp);
                 let ito = self.method == Method::MilsteinIto;
                 for i in 0..n {

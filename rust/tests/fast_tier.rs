@@ -1,0 +1,247 @@
+//! The fast kernel tier's contract, end to end.
+//!
+//! Two pins:
+//!
+//! 1. **Exact is untouched.** `KernelTier::Exact` (the default) stays
+//!    bit-identical to the per-path scalar engine — the same oracle the
+//!    pre-tier engine was pinned to — for solves and gradients. Adding
+//!    the tier machinery must not move a single exact-tier bit.
+//! 2. **Fast is close.** `KernelTier::Fast` (fused drift+diffusion,
+//!    blocked reassociation-free-per-row reductions in the nn kernels)
+//!    agrees with the exact tier to tight relative tolerance on solves,
+//!    stochastic-adjoint gradients, and batched ELBO training steps —
+//!    across schemes (Euler–Maruyama / Heun / Milstein) and batch
+//!    layouts that cross the engine's internal chunk boundary
+//!    (CHUNK = 32: sizes 1, 5, 32, 33, 48).
+
+use sdegrad::adjoint::AdjointConfig;
+use sdegrad::api::{
+    sensitivity_batch, sensitivity_batch_per_path, sensitivity_batch_tier, solve_batch,
+    solve_batch_per_path, SdeProblem, SensAlg, SolveOptions, StepControl,
+};
+use sdegrad::latent::{elbo_step_batch, ElboConfig, LatentSdeConfig, LatentSdeModel};
+use sdegrad::prng::PrngKey;
+use sdegrad::sde::ou::OrnsteinUhlenbeck;
+use sdegrad::sde::problems::{sample_experiment_setup, Example1};
+use sdegrad::sde::{KernelTier, ReplicatedSde};
+use sdegrad::solvers::Method;
+
+/// Batch sizes that exercise the SoA engine's chunk layouts: scalar-like
+/// (1), partial chunk (5), exactly one chunk (32), chunk + remainder
+/// (33), and one-and-a-half chunks (48).
+const BATCH_SIZES: [usize; 5] = [1, 5, 32, 33, 48];
+
+/// Fast-vs-exact relative budget for forward solves (a few hundred
+/// steps of within-row reassociation: O(ulp) per step).
+const SOLVE_RTOL: f64 = 1e-9;
+/// Budget for gradients and ELBO steps — the adjoint sweep squares the
+/// number of reassociated reductions per output.
+const GRAD_RTOL: f64 = 1e-7;
+
+fn assert_close(a: &[f64], b: &[f64], rtol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = x.abs().max(y.abs()).max(1.0);
+        assert!(
+            (x - y).abs() <= rtol * scale,
+            "{what}[{i}]: exact {x} vs fast {y} (rtol {rtol})"
+        );
+    }
+}
+
+/// Fast solves agree with exact to tolerance on the multiplicative-noise
+/// GBM fleet, per scheme × batch layout.
+#[test]
+fn fast_solve_matches_exact_on_gbm_across_methods_and_batch_sizes() {
+    let dim = 10;
+    let gbm = ReplicatedSde::new(Example1, dim);
+    let (theta, x0) = sample_experiment_setup(PrngKey::from_seed(21), dim, 2);
+    let prob = SdeProblem::new(&gbm, &x0, (0.0, 1.0)).params(&theta);
+    for method in [Method::EulerMaruyama, Method::Heun, Method::MilsteinIto] {
+        for bsz in BATCH_SIZES {
+            let replicates = prob.replicates(PrngKey::from_seed(1000 + bsz as u64), bsz);
+            let exact = solve_batch(&replicates, &SolveOptions::fixed(method, 120));
+            let fast = solve_batch(
+                &replicates,
+                &SolveOptions::fixed(method, 120).tier(KernelTier::Fast),
+            );
+            for (a, b) in exact.iter().zip(&fast) {
+                assert_close(
+                    &a.states,
+                    &b.states,
+                    SOLVE_RTOL,
+                    &format!("gbm {method:?} b={bsz}"),
+                );
+            }
+        }
+    }
+}
+
+/// Same pin on the additive-noise OU system (its fast overrides take the
+/// flat-elementwise path rather than the fused GBM kernels).
+#[test]
+fn fast_solve_matches_exact_on_ou() {
+    let ou = OrnsteinUhlenbeck::new(3);
+    let theta = [1.2, 0.3, 0.5];
+    let x0 = [0.9, 0.4, -0.2];
+    let prob = SdeProblem::new(&ou, &x0, (0.0, 1.0)).params(&theta);
+    for method in [Method::EulerMaruyama, Method::Heun, Method::MilsteinIto] {
+        for bsz in BATCH_SIZES {
+            let replicates = prob.replicates(PrngKey::from_seed(2000 + bsz as u64), bsz);
+            let exact = solve_batch(&replicates, &SolveOptions::fixed(method, 120));
+            let fast = solve_batch(
+                &replicates,
+                &SolveOptions::fixed(method, 120).tier(KernelTier::Fast),
+            );
+            for (a, b) in exact.iter().zip(&fast) {
+                assert_close(
+                    &a.states,
+                    &b.states,
+                    SOLVE_RTOL,
+                    &format!("ou {method:?} b={bsz}"),
+                );
+            }
+        }
+    }
+}
+
+/// Fast stochastic-adjoint gradients agree with exact to tolerance,
+/// including on a chunk-crossing batch.
+#[test]
+fn fast_gradients_match_exact_across_methods() {
+    let dim = 10;
+    let gbm = ReplicatedSde::new(Example1, dim);
+    let (theta, x0) = sample_experiment_setup(PrngKey::from_seed(22), dim, 2);
+    let prob = SdeProblem::new(&gbm, &x0, (0.0, 1.0)).params(&theta);
+    let step = StepControl::Steps(100);
+    for method in [Method::EulerMaruyama, Method::Heun, Method::MilsteinIto] {
+        let alg = SensAlg::StochasticAdjoint(AdjointConfig {
+            forward_method: method,
+            ..Default::default()
+        });
+        for bsz in [5usize, 33] {
+            let replicates = prob.replicates(PrngKey::from_seed(3000 + bsz as u64), bsz);
+            let exact = sensitivity_batch(&replicates, &alg, step);
+            let fast = sensitivity_batch_tier(&replicates, &alg, step, KernelTier::Fast);
+            for (a, b) in exact.iter().zip(&fast) {
+                let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+                assert_close(
+                    &a.dtheta,
+                    &b.dtheta,
+                    GRAD_RTOL,
+                    &format!("grad {method:?} b={bsz}"),
+                );
+                assert_close(&a.dz0, &b.dz0, GRAD_RTOL, &format!("dz0 {method:?} b={bsz}"));
+            }
+        }
+    }
+}
+
+fn tiny_latent_model() -> (LatentSdeModel, Vec<f64>) {
+    let model = LatentSdeModel::new(LatentSdeConfig {
+        obs_dim: 2,
+        latent_dim: 3,
+        context_dim: 2,
+        hidden: 8,
+        diff_hidden: 4,
+        enc_hidden: 6,
+        obs_noise_std: 0.1,
+        ..Default::default()
+    });
+    let params = model.init_params(PrngKey::from_seed(40));
+    (model, params)
+}
+
+/// A full batched ELBO training step (encoder → posterior solve →
+/// decoder → adjoint → flat gradient) agrees across tiers to tolerance —
+/// the gate that makes `train --tier fast` a usable estimator.
+#[test]
+fn fast_elbo_step_matches_exact_within_tolerance() {
+    let (model, params) = tiny_latent_model();
+    let times: Vec<f64> = (0..6).map(|k| 0.1 * k as f64).collect();
+    let n_seq = 3;
+    let mut obs = vec![0.0; n_seq * times.len() * 2];
+    PrngKey::from_seed(41).fill_normal(0, &mut obs);
+    let rows: Vec<&[f64]> = obs.chunks(times.len() * 2).collect();
+    let keys: Vec<PrngKey> = (0..n_seq).map(|m| PrngKey::from_seed(50 + m as u64)).collect();
+
+    let exact_cfg = ElboConfig { substeps: 3, kl_weight: 0.7, tier: KernelTier::Exact };
+    let fast_cfg = ElboConfig { substeps: 3, kl_weight: 0.7, tier: KernelTier::Fast };
+    let exact = elbo_step_batch(&model, &params, &times, &rows, &keys, &exact_cfg, 2, 1);
+    let fast = elbo_step_batch(&model, &params, &times, &rows, &keys, &fast_cfg, 2, 1);
+
+    assert_close(&[exact.loss], &[fast.loss], GRAD_RTOL, "elbo loss");
+    assert_close(&exact.per_path_loss, &fast.per_path_loss, GRAD_RTOL, "per-path loss");
+    assert_close(&exact.grad, &fast.grad, GRAD_RTOL, "elbo gradient");
+}
+
+/// THE exact-tier regression pin: with the tier machinery in place,
+/// `KernelTier::Exact` remains bit-identical to the per-path scalar
+/// engine — the same float stream as before the tier existed.
+#[test]
+fn exact_tier_stays_bit_identical_to_per_path_engine() {
+    let dim = 10;
+    let gbm = ReplicatedSde::new(Example1, dim);
+    let (theta, x0) = sample_experiment_setup(PrngKey::from_seed(23), dim, 2);
+    let prob = SdeProblem::new(&gbm, &x0, (0.0, 1.0)).params(&theta);
+    let replicates = prob.replicates(PrngKey::from_seed(4000), 33);
+
+    // An explicit Exact tier and the default options are the same thing.
+    let opts = SolveOptions::fixed(Method::MilsteinIto, 100);
+    let opts_exact = SolveOptions::fixed(Method::MilsteinIto, 100).tier(KernelTier::Exact);
+    let batched = solve_batch(&replicates, &opts_exact);
+    let default_tier = solve_batch(&replicates, &opts);
+    let per_path = solve_batch_per_path(&replicates, &opts);
+    for ((a, b), c) in batched.iter().zip(&default_tier).zip(&per_path) {
+        assert_eq!(a.states, b.states, "explicit Exact differs from default options");
+        assert_eq!(a.states, c.states, "Exact tier diverged from the per-path engine");
+    }
+
+    let alg = SensAlg::StochasticAdjoint(AdjointConfig::default());
+    let step = StepControl::Steps(100);
+    let g_exact = sensitivity_batch_tier(&replicates, &alg, step, KernelTier::Exact);
+    let g_default = sensitivity_batch(&replicates, &alg, step);
+    let g_per_path = sensitivity_batch_per_path(&replicates, &alg, step);
+    for ((a, b), c) in g_exact.iter().zip(&g_default).zip(&g_per_path) {
+        let (a, b, c) = (a.as_ref().unwrap(), b.as_ref().unwrap(), c.as_ref().unwrap());
+        assert_eq!(a.dtheta, b.dtheta, "explicit Exact grad differs from default");
+        assert_eq!(a.dtheta, c.dtheta, "Exact grad diverged from the per-path engine");
+        assert_eq!(a.dz0, c.dz0, "Exact dz0 diverged from the per-path engine");
+    }
+}
+
+/// Fast must actually differ somewhere (otherwise the tier is wired to
+/// nothing and the tolerance suite proves nothing). One reassociated
+/// blocked reduction over a 64-wide hidden layer is enough to move the
+/// last bits on some output.
+#[test]
+fn fast_tier_is_actually_wired_in() {
+    let model = LatentSdeModel::new(LatentSdeConfig {
+        obs_dim: 2,
+        latent_dim: 3,
+        context_dim: 2,
+        hidden: 64,
+        diff_hidden: 16,
+        enc_hidden: 32,
+        obs_noise_std: 0.1,
+        ..Default::default()
+    });
+    let params = model.init_params(PrngKey::from_seed(42));
+    let times: Vec<f64> = (0..6).map(|k| 0.1 * k as f64).collect();
+    let mut obs = vec![0.0; times.len() * 2];
+    PrngKey::from_seed(43).fill_normal(0, &mut obs);
+    let rows: Vec<&[f64]> = vec![obs.as_slice()];
+    let keys = [PrngKey::from_seed(44)];
+
+    let exact_cfg = ElboConfig { substeps: 3, kl_weight: 0.7, tier: KernelTier::Exact };
+    let fast_cfg = ElboConfig { substeps: 3, kl_weight: 0.7, tier: KernelTier::Fast };
+    let exact = elbo_step_batch(&model, &params, &times, &rows, &keys, &exact_cfg, 2, 1);
+    let fast = elbo_step_batch(&model, &params, &times, &rows, &keys, &fast_cfg, 2, 1);
+    let any_bit_moved = exact.loss.to_bits() != fast.loss.to_bits()
+        || exact
+            .grad
+            .iter()
+            .zip(&fast.grad)
+            .any(|(a, b)| a.to_bits() != b.to_bits());
+    assert!(any_bit_moved, "fast tier produced the exact tier's bit stream everywhere");
+}

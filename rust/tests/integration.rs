@@ -178,7 +178,7 @@ fn train_checkpoint_reload_roundtrip() {
     let reloaded = load_params(&path).unwrap();
     assert_eq!(reloaded, report.final_params);
 
-    let ecfg = ElboConfig { substeps: 2, kl_weight: 1.0 };
+    let ecfg = ElboConfig { substeps: 2, kl_weight: 1.0, ..ElboConfig::default() };
     let key = PrngKey::from_seed(99);
     let a = elbo_step(&model, &report.final_params, &ds.times, ds.series(5), key, &ecfg);
     let b = elbo_step(&model, &reloaded, &ds.times, ds.series(5), key, &ecfg);

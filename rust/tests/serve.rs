@@ -15,6 +15,7 @@ use std::net::SocketAddr;
 use sdegrad::latent::{LatentSdeConfig, LatentSdeModel};
 use sdegrad::metrics::json::parse_json;
 use sdegrad::prng::PrngKey;
+use sdegrad::sde::KernelTier;
 use sdegrad::serve::batcher::scalar_response;
 use sdegrad::serve::{client, protocol, ModelRegistry, ServeConfig, Server};
 
@@ -111,7 +112,7 @@ fn expected_bytes(reqs: &[(String, String)]) -> Vec<Vec<u8>> {
         .map(|(path, body)| {
             let req = protocol::parse_request(path, body).expect("oracle parse");
             let entry = reg.get(req.model()).expect("oracle model");
-            scalar_response(entry, &req).expect("oracle response")
+            scalar_response(entry, &req, KernelTier::Exact).expect("oracle response")
         })
         .collect()
 }
@@ -262,7 +263,7 @@ fn elbo_response_floats_roundtrip_to_the_engine_values() {
         &r.times,
         &r.obs,
         PrngKey::from_seed(9),
-        &ElboConfig { substeps: 3, kl_weight: 0.25 },
+        &ElboConfig { substeps: 3, kl_weight: 0.25, ..ElboConfig::default() },
         3,
     );
     let v = parse_json(std::str::from_utf8(&bytes).unwrap()).unwrap();
@@ -340,5 +341,47 @@ fn error_responses_have_stable_codes() {
         post(addr, "/v1/simulate", &format!("{{\"times\": {}}}", times_json()));
     assert_eq!((status, code_of(&body).as_str()), (400, "bad_request"));
 
+    // Non-JSON number literals: the strict JSON number grammar rejects
+    // `inf` and a leading `+` — a 400, never a silently-coerced float.
+    let (status, body) = post(
+        addr,
+        "/v1/simulate",
+        "{\"model\": \"alpha\", \"seed\": 1, \"times\": [0, inf], \"substeps\": 2}",
+    );
+    assert_eq!((status, code_of(&body).as_str()), (400, "bad_json"));
+    let (status, body) = post(
+        addr,
+        "/v1/simulate",
+        "{\"model\": \"alpha\", \"seed\": 1, \"times\": [0, +0.1], \"substeps\": 2}",
+    );
+    assert_eq!((status, code_of(&body).as_str()), (400, "bad_json"));
+
+    server.shutdown();
+}
+
+/// A server started on the fast kernel tier still upholds the
+/// batched-equals-scalar byte contract — against the fast-tier oracle.
+#[test]
+fn fast_tier_server_matches_fast_tier_oracle_bytes() {
+    let body = format!(
+        "{{\"model\": \"alpha\", \"seed\": 31, \"times\": {}, \"obs\": {}, \
+         \"substeps\": 3, \"samples\": 2, \"kl_weight\": 0.4}}",
+        times_json(),
+        obs_json(470)
+    );
+    let expected = {
+        let reg = registry();
+        let req = protocol::parse_request("/v1/elbo", &body).unwrap();
+        let entry = reg.get("alpha").unwrap();
+        scalar_response(entry, &req, KernelTier::Fast).unwrap()
+    };
+    let server = Server::start(
+        registry(),
+        ServeConfig { port: 0, workers: 2, tier: KernelTier::Fast, ..Default::default() },
+    )
+    .unwrap();
+    let (status, bytes) = post(server.addr(), "/v1/elbo", &body);
+    assert_eq!(status, 200);
+    assert_eq!(bytes, expected, "fast-tier served bytes diverged from the fast oracle");
     server.shutdown();
 }

@@ -82,7 +82,7 @@ fn scalar_loop(
 fn check_exact(model_cfg: LatentSdeConfig, shapes: &[(usize, usize)], seed: u64) {
     let model = LatentSdeModel::new(model_cfg);
     let params = model.init_params(PrngKey::from_seed(seed));
-    let cfg = ElboConfig { substeps: 2, kl_weight: 0.7 };
+    let cfg = ElboConfig { substeps: 2, kl_weight: 0.7, ..ElboConfig::default() };
     for &(n_seqs, n_samples) in shapes {
         let (times, seqs) = toy_sequences(n_seqs, 4, model.cfg.obs_dim, seed + 100);
         let obs_seqs: Vec<&[f64]> = seqs.iter().map(|s| s.as_slice()).collect();
@@ -148,7 +148,7 @@ fn worker_count_does_not_change_floats() {
     let obs_seqs: Vec<&[f64]> = seqs.iter().map(|s| s.as_slice()).collect();
     let keys: Vec<PrngKey> =
         (0..5).map(|m| PrngKey::from_seed(82).fold_in(m as u64)).collect();
-    let cfg = ElboConfig { substeps: 2, kl_weight: 0.4 };
+    let cfg = ElboConfig { substeps: 2, kl_weight: 0.4, ..ElboConfig::default() };
 
     let base = elbo_step_batch(&model, &params, &times, &obs_seqs, &keys, &cfg, 2, 1);
     for workers in [2, 3, 5, 8] {
