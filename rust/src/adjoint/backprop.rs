@@ -66,6 +66,7 @@ where
         method,
         NoiseMode::StoredPath,
         false,
+        crate::brownian::DEFAULT_NODE_CACHE,
         Checkpointing::Tape,
         loss_grad,
     )

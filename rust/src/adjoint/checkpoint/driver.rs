@@ -44,6 +44,10 @@ impl MemMeter {
 /// noise source (stored path, virtual tree, mirrored either way) and the
 /// EM / Milstein-Itô / Heun schemes. `checkpointing` selects the
 /// memory/recompute tradeoff; results are identical for every choice.
+/// `tree_cache` is the virtual tree's ancestor-cache capacity (the
+/// segment-replay passes re-query long monotone runs, which the cache
+/// collapses to amortized O(1) bridge draws per step); every capacity —
+/// including 0 — yields bit-identical gradients.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn checkpointed_backprop_core<S, F>(
     sde: &S,
@@ -56,6 +60,7 @@ pub(crate) fn checkpointed_backprop_core<S, F>(
     method: crate::solvers::Method,
     noise_mode: NoiseMode,
     mirror: bool,
+    tree_cache: usize,
     checkpointing: Checkpointing,
     loss_grad: F,
 ) -> GradientOutput
@@ -67,7 +72,7 @@ where
     let p = sde.param_dim();
     let grid = uniform_grid(t0, t1, n_steps);
     let schedule = checkpointing.schedule(n_steps);
-    let mut noise = Noise::new(noise_mode, key, d, t0, t1, mirror);
+    let mut noise = Noise::with_cache(noise_mode, key, d, t0, t1, mirror, tree_cache);
     let mut kern = StepKernel::new(sde, theta, method);
     let mut meter = MemMeter::default();
 

@@ -112,13 +112,40 @@ impl Noise {
         t1: f64,
         mirror: bool,
     ) -> Noise {
+        Self::with_cache(mode, key, d, t0, t1, mirror, crate::brownian::DEFAULT_NODE_CACHE)
+    }
+
+    /// [`Noise::new`] with an explicit virtual-tree ancestor-cache
+    /// capacity (ignored for stored paths). `0` disables the cache; every
+    /// capacity yields bit-identical samples — the knob trades bridge
+    /// draws for O(capacity·d) memory. The problem API threads
+    /// [`crate::api::SdeProblem::tree_cache`] through here.
+    pub(crate) fn with_cache(
+        mode: NoiseMode,
+        key: PrngKey,
+        d: usize,
+        t0: f64,
+        t1: f64,
+        mirror: bool,
+        tree_cache: usize,
+    ) -> Noise {
         let inner = match mode {
             NoiseMode::StoredPath => NoiseInner::Path(BrownianPath::new(key, d, t0, t1)),
-            NoiseMode::VirtualTree { tol } => {
-                NoiseInner::Tree(VirtualBrownianTree::new(key, d, t0, t1, tol))
-            }
+            NoiseMode::VirtualTree { tol } => NoiseInner::Tree(
+                VirtualBrownianTree::with_cache_capacity(key, d, t0, t1, tol, tree_cache),
+            ),
         };
         Noise { inner, mirror }
+    }
+
+    /// Bridge draws performed by the underlying virtual tree over its
+    /// lifetime (0 for stored paths) — the node cache's before/after
+    /// perf counter.
+    pub(crate) fn bridge_calls(&self) -> u64 {
+        match &self.inner {
+            NoiseInner::Path(_) => 0,
+            NoiseInner::Tree(t) => t.bridge_calls(),
+        }
     }
 }
 
@@ -607,8 +634,17 @@ mod tests {
                 StepControl::Steps(512),
             )
             .unwrap();
-        assert!(out_tree.stats.noise_memory < 32, "tree memory {}", out_tree.stats.noise_memory);
+        // Tree memory is bounded by the ancestor cache (base + capacity
+        // nodes of O(d)), constant in the step count; the stored path
+        // scales with the 512-step grid.
+        let tree_bound = 4 * 2 + 2 + crate::brownian::DEFAULT_NODE_CACHE * (2 + 4);
+        assert!(
+            out_tree.stats.noise_memory <= tree_bound,
+            "tree memory {} > bound {tree_bound}",
+            out_tree.stats.noise_memory
+        );
         assert!(out_path.stats.noise_memory > 512, "path memory {}", out_path.stats.noise_memory);
+        assert!(out_tree.stats.noise_memory < out_path.stats.noise_memory / 2);
     }
 
     #[test]

@@ -5,8 +5,10 @@
 //!
 //! A slice of problems (typically [`SdeProblem::replicates`] of one
 //! problem over independent keys) is split into fixed-size **chunks**;
-//! chunks fan out across a scoped thread pool, and each chunk advances
-//! all of its paths *together* through the batched kernels
+//! chunks fan out across the persistent work-stealing pool
+//! ([`crate::runtime::scoped_map`] — workers are spawned once and parked
+//! between calls), and each chunk advances all of its paths *together*
+//! through the batched kernels
 //! ([`crate::solvers::batch`], [`crate::adjoint::batch`]) over
 //! contiguous `[B×d]` buffers. This replaces the pre-0.3 thread-per-path
 //! model: the batched kernel pays one dispatch per solver stage instead
@@ -42,6 +44,7 @@ use crate::adjoint::checkpoint::batch_checkpoint_backprop_core;
 use crate::adjoint::stochastic::Noise;
 use crate::adjoint::{AdjointConfig, Checkpointing};
 use crate::brownian::{BatchBrownian, BrownianMotion};
+use crate::runtime::arena::lease;
 use crate::sde::{BatchSde, BatchSdeVjp, KernelTier};
 use crate::solvers::{
     batch_grid_core, batch_grid_saving_core, uniform_grid, BatchForwardFunc, Method,
@@ -81,7 +84,7 @@ fn noise_fleet<S: BatchSde + ?Sized>(
     BatchBrownian::new(
         problems
             .iter()
-            .map(|p| Noise::new(p.noise, p.key, d, p.t0, p.t1, p.mirror))
+            .map(|p| Noise::with_cache(p.noise, p.key, d, p.t0, p.t1, p.mirror, p.tree_cache))
             .collect(),
     )
 }
@@ -169,7 +172,9 @@ fn solve_chunk<S: BatchSde + ?Sized>(
     let n = opts.step.resolve_steps(t0, t1);
     let grid = uniform_grid(t0, t1, n);
 
-    let mut y0 = vec![0.0; bsz * d];
+    // Staging buffers come from the per-thread arena: pool workers are
+    // persistent, so consecutive chunks on a worker reuse warm buffers.
+    let mut y0 = lease(bsz * d);
     for (row, p) in y0.chunks_exact_mut(d).zip(problems) {
         row.copy_from_slice(&p.z0);
     }
@@ -178,7 +183,7 @@ fn solve_chunk<S: BatchSde + ?Sized>(
 
     match opts.save {
         SaveAt::Final => {
-            let mut y_out = vec![0.0; bsz * d];
+            let mut y_out = lease(bsz * d);
             let stats = batch_grid_core(&mut sys, opts.method, &y0, &grid, &mut bm, &mut y_out);
             bm.into_sources()
                 .into_iter()
@@ -332,7 +337,7 @@ fn sensitivity_chunk<S: BatchSdeVjp + ?Sized>(
     let p = p0.sde.param_dim();
     let bsz = problems.len();
 
-    let mut z0 = vec![0.0; bsz * d];
+    let mut z0 = lease(bsz * d);
     for (row, pr) in z0.chunks_exact_mut(d).zip(problems) {
         row.copy_from_slice(&pr.z0);
     }
@@ -386,7 +391,7 @@ fn backprop_chunk<S: BatchSdeVjp + ?Sized>(
     let p = p0.sde.param_dim();
     let bsz = problems.len();
 
-    let mut z0 = vec![0.0; bsz * d];
+    let mut z0 = lease(bsz * d);
     for (row, pr) in z0.chunks_exact_mut(d).zip(problems) {
         row.copy_from_slice(&pr.z0);
     }

@@ -106,6 +106,7 @@ pub struct SdeProblem<'a, S: Sde + ?Sized> {
     pub(crate) key: PrngKey,
     pub(crate) noise: NoiseSpec,
     pub(crate) mirror: bool,
+    pub(crate) tree_cache: usize,
 }
 
 impl<'a, S: Sde + ?Sized> Clone for SdeProblem<'a, S> {
@@ -119,6 +120,7 @@ impl<'a, S: Sde + ?Sized> Clone for SdeProblem<'a, S> {
             key: self.key,
             noise: self.noise,
             mirror: self.mirror,
+            tree_cache: self.tree_cache,
         }
     }
 }
@@ -145,6 +147,7 @@ impl<'a, S: Sde + ?Sized> SdeProblem<'a, S> {
             key: PrngKey::from_seed(0),
             noise: NoiseSpec::StoredPath,
             mirror: false,
+            tree_cache: crate::brownian::DEFAULT_NODE_CACHE,
         }
     }
 
@@ -184,6 +187,25 @@ impl<'a, S: Sde + ?Sized> SdeProblem<'a, S> {
     pub fn mirror(mut self, mirror: bool) -> Self {
         self.mirror = mirror;
         self
+    }
+
+    /// Ancestor-cache capacity for [`NoiseSpec::VirtualTree`] sources
+    /// (default [`crate::brownian::DEFAULT_NODE_CACHE`]; ignored for
+    /// stored paths). Sequential solver sweeps resume each bisection from
+    /// the deepest cached ancestor instead of the root, cutting bridge
+    /// draws from O(log n) to amortized O(1) per step at the price of
+    /// O(capacity·d) memory. `0` disables the cache. **Results are
+    /// bit-identical for every capacity** — each cached node is the same
+    /// pure function of `(key, path)` a fresh descent computes — so this
+    /// is purely a speed/memory knob.
+    pub fn tree_cache(mut self, capacity: usize) -> Self {
+        self.tree_cache = capacity;
+        self
+    }
+
+    /// The virtual-tree ancestor-cache capacity.
+    pub fn tree_cache_capacity(&self) -> usize {
+        self.tree_cache
     }
 
     /// The underlying SDE.

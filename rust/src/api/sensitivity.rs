@@ -258,6 +258,7 @@ impl<'a, S: SdeVjp + ?Sized> SdeProblem<'a, S> {
                 *method,
                 self.noise,
                 self.mirror,
+                self.tree_cache,
                 *checkpointing,
                 &mut loss_grad,
             )

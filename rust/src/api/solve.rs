@@ -127,6 +127,17 @@ pub struct NoiseHandle {
     pub(crate) inner: Noise,
 }
 
+impl NoiseHandle {
+    /// Total Brownian-bridge draws performed by the underlying virtual
+    /// tree over its lifetime — both passes of a solve/gradient — or 0
+    /// for a stored path. The observable behind the tree node cache's
+    /// amortized-O(1)-draws-per-step contract (see
+    /// [`SdeProblem::tree_cache`]).
+    pub fn bridge_calls(&self) -> u64 {
+        self.inner.bridge_calls()
+    }
+}
+
 impl BrownianMotion for NoiseHandle {
     fn dim(&self) -> usize {
         self.inner.dim()
@@ -220,7 +231,8 @@ impl<'a, S: Sde + ?Sized> SdeProblem<'a, S> {
     /// everything value-dependent was validated at construction.
     pub fn solve(&self, opts: &SolveOptions<'_>) -> SdeSolution {
         let d = self.dim();
-        let mut noise = Noise::new(self.noise, self.key, d, self.t0, self.t1, self.mirror);
+        let mut noise =
+            Noise::with_cache(self.noise, self.key, d, self.t0, self.t1, self.mirror, self.tree_cache);
 
         if let StepControl::Adaptive(cfg) = opts.step {
             assert!(
@@ -331,7 +343,8 @@ impl<'a, S: Sde + ?Sized> SdeProblem<'a, S> {
         assert!(ts.len() >= 2, "solve_intervals: need at least two save times");
         assert_eq!(ts[0], self.t0, "solve_intervals: first save time must be t0");
         assert_eq!(ts[ts.len() - 1], self.t1, "solve_intervals: last save time must be t1");
-        let mut noise = Noise::new(self.noise, self.key, d, self.t0, self.t1, self.mirror);
+        let mut noise =
+            Noise::with_cache(self.noise, self.key, d, self.t0, self.t1, self.mirror, self.tree_cache);
 
         let mut theta = self.theta.clone();
         let mut y = self.z0.clone();
@@ -366,53 +379,16 @@ pub(crate) fn add_stats(total: &mut SolveStats, one: &SolveStats) {
     total.nfe_diffusion += one.nfe_diffusion;
 }
 
-/// Order-preserving parallel map over `0..n` on scoped threads (the
-/// vendored crate set has no rayon; see `coordinator::trainer` for the
-/// same idiom). Used by the batch entry points in [`super::batch`] to
-/// fan chunks — and per-path fallbacks — across cores.
+/// Order-preserving parallel map over `0..n` on the persistent pool
+/// ([`crate::runtime::scoped_map`]; the vendored crate set has no rayon).
+/// Used by the batch entry points in [`super::batch`] to fan chunks —
+/// and per-path fallbacks — across cores. Width comes from
+/// [`crate::runtime::worker_count`]; results are bit-identical for any
+/// width.
 pub(crate) fn par_map<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    use std::sync::atomic::{AtomicUsize, Ordering};
-
-    if n == 0 {
-        return Vec::new();
-    }
-    let workers =
-        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(n);
-    if workers <= 1 {
-        return (0..n).map(f).collect();
-    }
-
-    let next = AtomicUsize::new(0);
-    let results: Vec<Vec<(usize, T)>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..workers)
-            .map(|_| {
-                let next = &next;
-                let f = &f;
-                scope.spawn(move || {
-                    let mut out = Vec::new();
-                    loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= n {
-                            break;
-                        }
-                        out.push((i, f(i)));
-                    }
-                    out
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("batch worker panicked")).collect()
-    });
-
-    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    for chunk in results {
-        for (i, v) in chunk {
-            slots[i] = Some(v);
-        }
-    }
-    slots.into_iter().map(|s| s.expect("batch worker covered every index")).collect()
+    crate::runtime::scoped_map(n, usize::MAX, f)
 }

@@ -33,4 +33,4 @@ pub use bridge::brownian_bridge_sample;
 pub use path::BrownianPath;
 pub use quadrature::weighted_path_integrals;
 pub use traits::BrownianMotion;
-pub use tree::VirtualBrownianTree;
+pub use tree::{VirtualBrownianTree, DEFAULT_NODE_CACHE};

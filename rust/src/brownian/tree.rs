@@ -14,6 +14,23 @@
 //! Because the key of every node is a pure function of the root seed and
 //! the bisection path, any two queries that touch the same node see the
 //! same Gaussian — the tree is consistent without storing anything.
+//!
+//! ## Node cache
+//!
+//! Solver sweeps query the tree at monotonically advancing (or, in the
+//! adjoint's backward pass, receding) times, so consecutive descents
+//! share a long prefix of ancestors. The tree keeps a bounded stack of
+//! the nodes visited by the *previous* query (interval, key, midpoint
+//! draw); a new query replays the bisection decisions down the cached
+//! stack for free and only pays bridge draws from the first divergent
+//! level. On a fixed n-step grid a sequential sweep visits each of the
+//! ~2n tree nodes once, so the amortized cost drops from O(log n) to
+//! O(1) bridge draws per step (`bridge_calls` counts real draws — the
+//! before/after metric). Because every cached value is the same pure
+//! function of `(key, path)` a fresh descent would compute, results are
+//! **bit-identical for any cache capacity**, including 0 (cache off).
+//! Memory stays O(1) in the number of queries and steps: at most
+//! `capacity` nodes of O(dim) each are live.
 
 use super::bridge::bridge_moments;
 use super::traits::BrownianMotion;
@@ -23,6 +40,22 @@ use crate::prng::PrngKey;
 /// by 2^62, far below f64 resolution of any practical horizon, so deeper
 /// recursion cannot make progress.
 const MAX_DEPTH: u32 = 62;
+
+/// Default ancestor-node cache capacity: one more than `MAX_DEPTH`, so a
+/// full root-to-leaf descent path always fits and sequential sweeps hit
+/// the amortized O(1) bridge-draw regime at every tolerance.
+pub const DEFAULT_NODE_CACHE: usize = 64;
+
+/// One cached tree node: the bisection interval, the node's key, which
+/// side of its parent it hangs off, and the midpoint bridge draw.
+#[derive(Clone, Debug)]
+struct CachedNode {
+    ts: f64,
+    te: f64,
+    key: PrngKey,
+    right: bool,
+    wmid: Vec<f64>,
+}
 
 /// O(1)-memory virtual Brownian tree over `[t0, t1]`.
 #[derive(Clone, Debug)]
@@ -37,13 +70,36 @@ pub struct VirtualBrownianTree {
     ws: Vec<f64>,
     we: Vec<f64>,
     wmid: Vec<f64>,
+    // Ancestor stack from the previous query: `nodes[..live]` is the
+    // prefix of the last descent path, root first. Bounded by
+    // `cache_capacity`; slots beyond `live` keep their allocations for
+    // reuse.
+    cache_capacity: usize,
+    nodes: Vec<CachedNode>,
+    live: usize,
     // Instrumentation: bridge draws performed (≙ tree levels visited).
     bridge_calls: u64,
 }
 
 impl VirtualBrownianTree {
-    /// Build a tree with error tolerance `tol` (Algorithm 3's ε).
+    /// Build a tree with error tolerance `tol` (Algorithm 3's ε) and the
+    /// default node-cache capacity ([`DEFAULT_NODE_CACHE`]).
     pub fn new(key: PrngKey, dim: usize, t0: f64, t1: f64, tol: f64) -> Self {
+        Self::with_cache_capacity(key, dim, t0, t1, tol, DEFAULT_NODE_CACHE)
+    }
+
+    /// Build a tree with an explicit ancestor-cache capacity (`0` turns
+    /// the cache off — every query re-descends from the root). Values are
+    /// bit-identical for every capacity; only the bridge-draw count and
+    /// the O(capacity·dim) memory bound change.
+    pub fn with_cache_capacity(
+        key: PrngKey,
+        dim: usize,
+        t0: f64,
+        t1: f64,
+        tol: f64,
+        capacity: usize,
+    ) -> Self {
         assert!(t1 > t0, "VirtualBrownianTree: need t1 > t0 (got [{t0}, {t1}])");
         assert!(tol > 0.0, "VirtualBrownianTree: tolerance must be positive");
         assert!(dim > 0, "VirtualBrownianTree: dim must be positive");
@@ -66,6 +122,9 @@ impl VirtualBrownianTree {
             ws: vec![0.0; dim],
             we: vec![0.0; dim],
             wmid: vec![0.0; dim],
+            cache_capacity: capacity,
+            nodes: Vec::new(),
+            live: 0,
             bridge_calls: 0,
         }
     }
@@ -73,6 +132,11 @@ impl VirtualBrownianTree {
     /// Error tolerance ε.
     pub fn tolerance(&self) -> f64 {
         self.tol
+    }
+
+    /// Ancestor-cache capacity (0 = cache off).
+    pub fn cache_capacity(&self) -> usize {
+        self.cache_capacity
     }
 
     /// Total Brownian-bridge draws performed over the tree's lifetime
@@ -106,43 +170,47 @@ impl VirtualBrownianTree {
             ctr += 1;
         }
     }
-}
 
-impl BrownianMotion for VirtualBrownianTree {
-    fn dim(&self) -> usize {
-        self.dim
+    /// Store `(ts, te, key, right)` + a freshly drawn midpoint at cache
+    /// slot `self.live` (reusing the slot's allocation when present).
+    /// `self.ws` / `self.we` must hold the node's endpoint values.
+    fn draw_into_cache(&mut self, ts: f64, te: f64, tmid: f64, key: PrngKey, right: bool) {
+        let (wa, wb, std) = bridge_moments(ts, te, tmid);
+        if self.live == self.nodes.len() {
+            self.nodes.push(CachedNode { ts, te, key, right, wmid: vec![0.0; self.dim] });
+        } else {
+            let slot = &mut self.nodes[self.live];
+            slot.ts = ts;
+            slot.te = te;
+            slot.key = key;
+            slot.right = right;
+        }
+        Self::bridge_draw(key, wa, wb, std, &self.ws, &self.we, &mut self.nodes[self.live].wmid);
+        self.bridge_calls += 1;
+        self.live += 1;
     }
 
-    fn span(&self) -> (f64, f64) {
-        (self.t0, self.t1)
-    }
-
-    fn sample_into(&mut self, t: f64, out: &mut [f64]) {
-        let t = t.clamp(self.t0, self.t1);
-        // Fast paths: global endpoints are known exactly.
-        if t == self.t0 {
-            out.fill(0.0);
-            return;
-        }
-        if t == self.t1 {
-            out.copy_from_slice(&self.w1);
-            return;
-        }
-
-        // Algorithm 3.
-        let (mut ts, mut te) = (self.t0, self.t1);
-        self.ws.fill(0.0);
-        self.we.copy_from_slice(&self.w1);
-        let mut key = self.key;
-
+    /// Algorithm 3's root-to-leaf bisection from an arbitrary starting
+    /// node `[ts, te]` (key `key`, depth `depth`, endpoint values in
+    /// `self.ws` / `self.we`), with no caching. The cached walk delegates
+    /// here when it runs past its capacity; `sample_into` with the cache
+    /// off delegates here from the root — both replay the exact float
+    /// sequence of the original uncached algorithm.
+    fn descend_uncached(
+        &mut self,
+        t: f64,
+        mut ts: f64,
+        mut te: f64,
+        mut key: PrngKey,
+        mut depth: u32,
+        out: &mut [f64],
+    ) {
         let mut tmid = 0.5 * (ts + te);
         let (wa, wb, std) = bridge_moments(ts, te, tmid);
-        let wmid = std::mem::take(&mut self.wmid);
-        let mut wmid = wmid;
+        let mut wmid = std::mem::take(&mut self.wmid);
         Self::bridge_draw(key, wa, wb, std, &self.ws, &self.we, &mut wmid);
         self.bridge_calls += 1;
 
-        let mut depth = 0u32;
         while (t - tmid).abs() > self.tol && depth < MAX_DEPTH {
             let (kl, kr) = key.split();
             if t < tmid {
@@ -167,10 +235,101 @@ impl BrownianMotion for VirtualBrownianTree {
         self.wmid = wmid;
     }
 
+    /// Cached descent: replay the bisection decision procedure down the
+    /// stored ancestor stack (free), truncate at the first divergent
+    /// level, and pay bridge draws only for new nodes. Every decision
+    /// (termination, side, interval exhaustion) is evaluated on the same
+    /// floats as a fresh root descent, so the returned value is
+    /// bit-identical to the uncached algorithm.
+    fn sample_cached(&mut self, t: f64, out: &mut [f64]) {
+        self.ws.fill(0.0);
+        self.we.copy_from_slice(&self.w1);
+        if self.live == 0 {
+            // Root midpoint: always the first draw of any descent.
+            let tmid = 0.5 * (self.t0 + self.t1);
+            self.draw_into_cache(self.t0, self.t1, tmid, self.key, false);
+        }
+        let mut i = 0usize;
+        loop {
+            let (ts, te) = (self.nodes[i].ts, self.nodes[i].te);
+            let tmid = 0.5 * (ts + te);
+            if (t - tmid).abs() <= self.tol || i as u32 >= MAX_DEPTH {
+                out.copy_from_slice(&self.nodes[i].wmid);
+                return;
+            }
+            let right = t >= tmid;
+            let (c_ts, c_te) = if right { (tmid, te) } else { (ts, tmid) };
+            let c_mid = 0.5 * (c_ts + c_te);
+            if c_mid <= c_ts || c_mid >= c_te {
+                // Interval exhausted at f64 resolution before the child
+                // draw — the uncached loop breaks with the parent value.
+                out.copy_from_slice(&self.nodes[i].wmid);
+                return;
+            }
+            // Descend: the child's far endpoint is this node's midpoint.
+            if right {
+                self.ws.copy_from_slice(&self.nodes[i].wmid);
+            } else {
+                self.we.copy_from_slice(&self.nodes[i].wmid);
+            }
+            if i + 1 < self.live && self.nodes[i + 1].right == right {
+                i += 1; // shared ancestor: free descent, no draw
+                continue;
+            }
+            // First divergent level: drop the stale suffix and extend.
+            self.live = i + 1;
+            let (kl, kr) = self.nodes[i].key.split();
+            let c_key = if right { kr } else { kl };
+            if self.live < self.cache_capacity {
+                self.draw_into_cache(c_ts, c_te, c_mid, c_key, right);
+                i += 1;
+                continue;
+            }
+            // Cache full: finish this descent without storing nodes.
+            self.descend_uncached(t, c_ts, c_te, c_key, (i + 1) as u32, out);
+            return;
+        }
+    }
+}
+
+impl BrownianMotion for VirtualBrownianTree {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn span(&self) -> (f64, f64) {
+        (self.t0, self.t1)
+    }
+
+    fn sample_into(&mut self, t: f64, out: &mut [f64]) {
+        let t = t.clamp(self.t0, self.t1);
+        // Fast paths: global endpoints are known exactly.
+        if t == self.t0 {
+            out.fill(0.0);
+            return;
+        }
+        if t == self.t1 {
+            out.copy_from_slice(&self.w1);
+            return;
+        }
+
+        // Algorithm 3, through the ancestor cache when enabled.
+        if self.cache_capacity == 0 {
+            self.ws.fill(0.0);
+            self.we.copy_from_slice(&self.w1);
+            let key = self.key;
+            self.descend_uncached(t, self.t0, self.t1, key, 0, out);
+        } else {
+            self.sample_cached(t, out);
+        }
+    }
+
     fn memory_footprint(&self) -> usize {
-        // Endpoint value + three scratch buffers + the key: O(dim), constant
-        // in the number of queries and in 1/ε.
-        4 * self.dim + 2
+        // Endpoint value + three scratch buffers + the key, plus the live
+        // ancestor-cache nodes (each an O(dim) midpoint + interval + key):
+        // O(dim · cache_capacity), constant in the number of queries and
+        // in 1/ε.
+        4 * self.dim + 2 + self.live * (self.dim + 4)
     }
 }
 
@@ -206,12 +365,97 @@ mod tests {
 
     #[test]
     fn memory_constant_under_queries() {
-        let mut t = tree(3, 4, 1e-12);
-        let before = t.memory_footprint();
+        // With the node cache off the footprint is exactly the pre-cache
+        // constant; with it on, it is bounded by the capacity — O(1) in
+        // the number of queries either way.
+        let mut plain =
+            VirtualBrownianTree::with_cache_capacity(PrngKey::from_seed(3), 4, 0.0, 1.0, 1e-12, 0);
+        let before = plain.memory_footprint();
         for i in 1..1000 {
-            t.sample(i as f64 / 1001.0);
+            plain.sample(i as f64 / 1001.0);
         }
-        assert_eq!(t.memory_footprint(), before);
+        assert_eq!(plain.memory_footprint(), before);
+
+        let mut cached = tree(3, 4, 1e-12);
+        let bound = 4 * 4 + 2 + cached.cache_capacity() * (4 + 4);
+        for i in 1..1000 {
+            cached.sample(i as f64 / 1001.0);
+            assert!(cached.memory_footprint() <= bound, "footprint grew past the cache bound");
+        }
+    }
+
+    #[test]
+    fn cached_values_bitwise_equal_uncached() {
+        // Same key, every cache capacity, adversarial query order
+        // (forward sweep, backward sweep, repeats, jumps): values must be
+        // bit-identical — the cache replays the same pure function.
+        let queries: Vec<f64> = (1..64)
+            .map(|i| i as f64 / 64.0)
+            .chain((1..64).rev().map(|i| i as f64 / 64.0))
+            .chain([0.3141, 0.9999, 0.0001, 0.5, 0.3141])
+            .collect();
+        for d in [1, 3] {
+            let mut plain = VirtualBrownianTree::with_cache_capacity(
+                PrngKey::from_seed(42),
+                d,
+                0.0,
+                1.0,
+                1e-11,
+                0,
+            );
+            for cap in [1, 4, DEFAULT_NODE_CACHE] {
+                let mut cached = VirtualBrownianTree::with_cache_capacity(
+                    PrngKey::from_seed(42),
+                    d,
+                    0.0,
+                    1.0,
+                    1e-11,
+                    cap,
+                );
+                for &t in &queries {
+                    assert_eq!(cached.sample(t), plain.sample(t), "t={t} cap={cap} d={d}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_query_costs_zero_draws() {
+        let mut t = tree(7, 2, 1e-11);
+        t.sample(0.37);
+        let before = t.bridge_calls();
+        t.sample(0.37);
+        assert_eq!(t.bridge_calls(), before, "identical query must replay the cached path");
+    }
+
+    #[test]
+    fn monotone_sweep_amortizes_to_two_draws_per_step() {
+        // Power-of-2 grid: every grid time is an exact tree midpoint, and
+        // a left-to-right sweep visits each of the ~2n distinct nodes on
+        // the union of descent paths exactly once. Uncached, every query
+        // re-descends ~log2(n) levels from the root.
+        let n = 256;
+        let mut cached = tree(11, 1, 1e-14);
+        for k in 1..n {
+            cached.sample(k as f64 / n as f64);
+        }
+        assert!(
+            cached.bridge_calls() <= 2 * n,
+            "cached sweep: {} draws for {n} steps (want ≤ {})",
+            cached.bridge_calls(),
+            2 * n
+        );
+
+        let mut plain =
+            VirtualBrownianTree::with_cache_capacity(PrngKey::from_seed(11), 1, 0.0, 1.0, 1e-14, 0);
+        for k in 1..n {
+            plain.sample(k as f64 / n as f64);
+        }
+        assert!(
+            plain.bridge_calls() >= 3 * n,
+            "uncached sweep should pay ~log2(n) per step: {} draws",
+            plain.bridge_calls()
+        );
     }
 
     #[test]
@@ -266,7 +510,17 @@ mod tests {
         assert_eq!(t.bridge_calls() - before, 1, "0.5 is the first midpoint");
         let before = t.bridge_calls();
         t.sample(0.25);
-        assert_eq!(t.bridge_calls() - before, 2);
+        // The root is cached from the previous query; only the depth-1
+        // node is drawn.
+        assert_eq!(t.bridge_calls() - before, 1);
+
+        // Uncached, the same pair re-descends from the root each time.
+        let mut u =
+            VirtualBrownianTree::with_cache_capacity(PrngKey::from_seed(5), 1, 0.0, 1.0, 1e-14, 0);
+        u.sample(0.5);
+        let before = u.bridge_calls();
+        u.sample(0.25);
+        assert_eq!(u.bridge_calls() - before, 2);
     }
 
     #[test]

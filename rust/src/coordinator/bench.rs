@@ -10,8 +10,15 @@
 //!   the O(√n)-memory schedule, gradients asserted identical to the
 //!   full tape; peak-tape-bytes and recompute-NFE ride along as
 //!   ungated "observed" rows), and
+//! * the GBM fleet driven by the **virtual Brownian tree** with the
+//!   ancestor node cache (`gbm_d10_cached`: results asserted identical
+//!   to the cache-disabled tree; the observed `bridge_calls_per_step`
+//!   row pins the amortized ≤2-draws/step contract on a dyadic grid),
 //! * a neural-drift SDE (the latent posterior with MLP drift/diffusion —
-//!   measures the batched matrix–matrix win on net-bound dynamics).
+//!   measures the batched matrix–matrix win on net-bound dynamics), and
+//! * the minibatch ELBO engine on the persistent work-stealing pool
+//!   (`neural_posterior_pooled`; the ungated `executor`/`overhead_us`
+//!   row tracks raw dispatch cost).
 //!
 //! Both engines solve the *same problems from the same seeds* and are
 //! bit-identical path-for-path (asserted here on every run), so the
@@ -59,8 +66,8 @@
 use crate::adjoint::AdjointConfig;
 use crate::api::{
     sensitivity_batch, sensitivity_batch_per_path, sensitivity_batch_tier, solve_batch,
-    solve_batch_local, solve_batch_per_path, Checkpointing, SdeProblem, SensAlg, SolveOptions,
-    StepControl,
+    solve_batch_local, solve_batch_per_path, Checkpointing, NoiseSpec, SdeProblem, SensAlg,
+    SolveOptions, StepControl,
 };
 use crate::latent::{LatentSdeConfig, LatentSdeModel, PosteriorSde};
 use crate::metrics::json::{json_num, json_number_field, json_str, json_string_field};
@@ -320,6 +327,79 @@ pub fn run_throughput(quick: bool) -> Vec<ThroughputRow> {
         }
     }
 
+    // 1c. The same GBM fleet driven by the **virtual Brownian tree** with
+    // the ancestor node cache (`gbm_d10_cached`): monotone solver sweeps
+    // resume each bisection from the deepest cached ancestor, so bridge
+    // draws amortize to O(1) per step instead of O(log n). A power-of-two
+    // step count makes the grid dyadic, where the amortized bound is
+    // exactly ≤ 2 draws/step (asserted on the observed row). Correctness
+    // gate before timing: cached results equal the cache-disabled tree
+    // bit-for-bit — the cache is purely a speed/memory knob.
+    {
+        let n_steps_dyadic = if quick { 256 } else { 1024 };
+        let tree_prob = SdeProblem::new(&gbm, &x0, (0.0, 1.0))
+            .params(&theta)
+            .noise(NoiseSpec::VirtualTree { tol: 1e-7 });
+        let replicates = tree_prob.replicates(PrngKey::from_seed(0x7143), n_paths);
+        let uncached: Vec<_> =
+            replicates.iter().map(|p| p.clone().tree_cache(0)).collect();
+        let opts = SolveOptions::fixed(Method::MilsteinIto, n_steps_dyadic);
+        let cached_sols = solve_batch(&replicates, &opts);
+        let uncached_sols = solve_batch(&uncached, &opts);
+        for (a, b) in cached_sols.iter().zip(&uncached_sols) {
+            assert_eq!(a.states, b.states, "node cache changed a gbm_d10_cached result");
+        }
+        let draws_per_step = cached_sols[0].noise.bridge_calls() as f64
+            / cached_sols[0].stats.steps.max(1) as f64;
+        assert!(
+            draws_per_step <= 2.0,
+            "node cache must amortize to ≤2 bridge draws/step on a dyadic sweep \
+             (got {draws_per_step})"
+        );
+        rows.push(ThroughputRow {
+            problem: "gbm_d10_cached",
+            metric: "bridge_calls_per_step",
+            engine: "observed",
+            paths: n_paths,
+            steps: n_steps_dyadic,
+            value_per_sec: draws_per_step,
+        });
+
+        let t_cached =
+            time_best_of(reps, || solve_batch(&replicates, &opts)[0].final_state()[0]);
+        rows.push(ThroughputRow {
+            problem: "gbm_d10_cached",
+            metric: "paths_per_sec",
+            engine: "batched",
+            paths: n_paths,
+            steps: n_steps_dyadic,
+            value_per_sec: n_paths as f64 / t_cached,
+        });
+
+        let alg = SensAlg::StochasticAdjoint(AdjointConfig {
+            forward_method: Method::MilsteinIto,
+            ..Default::default()
+        });
+        let step = StepControl::Steps(n_steps_dyadic);
+        let g_cached = sensitivity_batch(&replicates, &alg, step);
+        let g_uncached = sensitivity_batch(&uncached, &alg, step);
+        for (a, b) in g_cached.iter().zip(&g_uncached) {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(a.dtheta, b.dtheta, "node cache changed a gbm_d10_cached gradient");
+        }
+        let t_gcached = time_best_of(reps, || {
+            sensitivity_batch(&replicates, &alg, step)[0].as_ref().unwrap().dtheta[0]
+        });
+        rows.push(ThroughputRow {
+            problem: "gbm_d10_cached",
+            metric: "grad_paths_per_sec",
+            engine: "batched",
+            paths: n_paths,
+            steps: n_steps_dyadic,
+            value_per_sec: n_paths as f64 / t_gcached,
+        });
+    }
+
     // 2. Neural-drift SDE: the latent posterior (MLP drift + per-dim
     // diffusion nets) — the workload where batched net evaluation pays.
     let model = LatentSdeModel::new(LatentSdeConfig {
@@ -384,6 +464,68 @@ pub fn run_throughput(quick: bool) -> Vec<ThroughputRow> {
             paths: nn_paths,
             steps: nn_steps,
             value_per_sec: nn_paths as f64 / t_fast,
+        });
+    }
+
+    // 2b. The minibatch ELBO engine on the persistent pool
+    // (`neural_posterior_pooled`): chunks of the M·S posterior paths fan
+    // out through `runtime::scoped_map` — the end-to-end trainer
+    // iteration the pool exists for. Correctness gate before timing: the
+    // pooled result equals the single-worker run exactly (path-ordered
+    // reduction; any schedule computes the same floats).
+    {
+        use crate::latent::{elbo_step_batch, ElboConfig};
+        let (m_seqs, s_samples, n_obs) = if quick { (8, 2, 6) } else { (16, 4, 10) };
+        let dx = 3; // matches the model above
+        let e_times: Vec<f64> = (0..n_obs).map(|k| 0.08 * k as f64).collect();
+        let mut obs_data = vec![0.0; m_seqs * n_obs * dx];
+        PrngKey::from_seed(0x7144).fill_normal(0, &mut obs_data);
+        let obs_seqs: Vec<&[f64]> = obs_data.chunks(n_obs * dx).collect();
+        let keys: Vec<PrngKey> =
+            (0..m_seqs).map(|m| PrngKey::from_seed(0x7145).fold_in(m as u64)).collect();
+        let ecfg = ElboConfig::default();
+        let workers = crate::runtime::worker_count();
+        let pooled = elbo_step_batch(
+            &model, &params, &e_times, &obs_seqs, &keys, &ecfg, s_samples, workers,
+        );
+        let solo =
+            elbo_step_batch(&model, &params, &e_times, &obs_seqs, &keys, &ecfg, s_samples, 1);
+        assert_eq!(pooled.loss, solo.loss, "pooled ELBO loss diverged from single-worker");
+        assert_eq!(pooled.grad, solo.grad, "pooled ELBO gradient diverged from single-worker");
+        let elbo_paths = m_seqs * s_samples;
+        let t_pooled = time_best_of(reps, || {
+            elbo_step_batch(&model, &params, &e_times, &obs_seqs, &keys, &ecfg, s_samples, workers)
+                .loss
+        });
+        rows.push(ThroughputRow {
+            problem: "neural_posterior_pooled",
+            metric: "paths_per_sec",
+            engine: "batched",
+            paths: elbo_paths,
+            steps: (n_obs - 1) * ecfg.substeps,
+            value_per_sec: elbo_paths as f64 / t_pooled,
+        });
+    }
+
+    // 3. Executor dispatch overhead: microseconds per `scoped_map`
+    // fan-out of trivial tasks on the persistent pool — what a batched
+    // call pays over a sequential loop now that workers are parked
+    // instead of respawned (observed, not gated).
+    {
+        let n_tasks = crate::runtime::worker_count().max(2) * 4;
+        let exec_reps = 200;
+        let sw = Stopwatch::new();
+        for _ in 0..exec_reps {
+            std::hint::black_box(crate::runtime::scoped_map(n_tasks, usize::MAX, |i| i));
+        }
+        let overhead_us = sw.elapsed_s() * 1e6 / exec_reps as f64;
+        rows.push(ThroughputRow {
+            problem: "executor",
+            metric: "overhead_us",
+            engine: "observed",
+            paths: n_tasks,
+            steps: exec_reps,
+            value_per_sec: overhead_us,
         });
     }
 
@@ -1018,8 +1160,11 @@ mod tests {
         let rows = run_throughput(true);
         // 2 engines × (gbm solve + gbm grad + ckpt grad + nn solve) = 8
         // timing rows, plus the 2 observed checkpoint memory rows, plus
-        // the 3 fast-tier rows (gbm solve + gbm grad + nn solve).
-        assert_eq!(rows.len(), 13);
+        // the 3 fast-tier rows (gbm solve + gbm grad + nn solve), plus
+        // the 3 cached-tree rows (solve + grad + observed draws/step),
+        // plus the pooled-ELBO row and the observed executor-overhead
+        // row.
+        assert_eq!(rows.len(), 18);
         assert!(rows.iter().all(|r| r.value_per_sec.is_finite() && r.value_per_sec > 0.0));
         // The fast-tier rows are gate-shaped: engine "batched" with a
         // gated metric, under the `{problem}_fast` name.
@@ -1042,6 +1187,29 @@ mod tests {
             && r.engine == "batched"));
         assert!(rows.iter().any(|r| r.metric == "peak_tape_bytes" && r.engine == "observed"));
         assert!(rows.iter().any(|r| r.metric == "recompute_nfe" && r.engine == "observed"));
+        // The cached-tree rows are gate-shaped, and the observed draw
+        // rate carries the amortized-O(1) contract (≤2 on a dyadic grid).
+        for metric in ["paths_per_sec", "grad_paths_per_sec"] {
+            assert!(
+                rows.iter().any(|r| r.problem == "gbm_d10_cached"
+                    && r.metric == metric
+                    && r.engine == "batched"),
+                "missing cached-tree row {metric}"
+            );
+        }
+        let draws = rows
+            .iter()
+            .find(|r| r.metric == "bridge_calls_per_step" && r.engine == "observed")
+            .expect("missing bridge_calls_per_step row");
+        assert!(draws.value_per_sec <= 2.0, "cached draw rate {}", draws.value_per_sec);
+        // The pooled-ELBO row is gate-shaped; the executor-overhead row
+        // rides along ungated.
+        assert!(rows.iter().any(|r| r.problem == "neural_posterior_pooled"
+            && r.metric == "paths_per_sec"
+            && r.engine == "batched"));
+        assert!(rows
+            .iter()
+            .any(|r| r.problem == "executor" && r.metric == "overhead_us" && r.engine == "observed"));
         let json = std::fs::read_to_string("BENCH_throughput.json").expect("artifact written");
         assert!(json.contains("\"bench\": \"throughput\""));
         assert!(json.contains("grad_paths_per_sec"));

@@ -53,10 +53,14 @@ impl Default for TrainConfig {
     }
 }
 
-/// Available parallelism (capped: latent models are small; beyond ~8
-/// workers coordination overhead dominates).
+/// The process-wide worker count — delegates to
+/// [`crate::runtime::worker_count`], the single knob every parallel
+/// surface shares (`--threads` flag > `SDEGRAD_THREADS` env >
+/// `available_parallelism`). The old per-subsystem cap at 8 is gone:
+/// the persistent pool parks idle workers, so extra width no longer
+/// costs per-call spawn overhead.
 pub fn num_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8)
+    crate::runtime::worker_count()
 }
 
 /// Parse `--key value` style arguments into a map. Flags without values

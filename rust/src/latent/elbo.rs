@@ -25,8 +25,6 @@
 //! [`LatentSdeModel::init_params`]'s layout — ready for
 //! [`crate::optim::Adam`].
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-
 use super::model::{Encoder, LatentSdeModel};
 use super::posterior::{CtxAdjointOps, CtxBatchForwardFunc, PosteriorSde};
 use crate::adjoint::batch::BatchBackwardSolver;
@@ -1302,7 +1300,8 @@ fn elbo_chunk(
 /// piecewise forward solve per chunk with per-path encoder context, the
 /// batched augmented stochastic adjoint
 /// ([`crate::adjoint::batch`]), and batched encoder/decoder backprop —
-/// fanned across a scoped thread pool in path chunks.
+/// fanned across the persistent work-stealing pool
+/// ([`crate::runtime::scoped_map`]) in path chunks.
 ///
 /// Path `m·S + s` uses `keys[m].fold_in(s)`, and every per-path float is
 /// computed independently of the batch around it, so the result is
@@ -1350,38 +1349,10 @@ pub fn elbo_step_batch(
         let hi = ((ci + 1) * chunk).min(b_total);
         elbo_chunk(model, params, times, obs_seqs, keys, cfg, n_samples, lo, hi)
     };
-    let chunk_outs: Vec<ChunkOut> = if workers == 1 || n_chunks == 1 {
-        (0..n_chunks).map(run_chunk).collect()
-    } else {
-        let next = AtomicUsize::new(0);
-        let mut slots: Vec<Option<ChunkOut>> = (0..n_chunks).map(|_| None).collect();
-        let results: Vec<Vec<(usize, ChunkOut)>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..workers.min(n_chunks))
-                .map(|_| {
-                    let next = &next;
-                    let run_chunk = &run_chunk;
-                    scope.spawn(move || {
-                        let mut done = Vec::new();
-                        loop {
-                            let ci = next.fetch_add(1, Ordering::Relaxed);
-                            if ci >= n_chunks {
-                                break;
-                            }
-                            done.push((ci, run_chunk(ci)));
-                        }
-                        done
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("elbo worker panicked")).collect()
-        });
-        for worker_out in results {
-            for (ci, co) in worker_out {
-                slots[ci] = Some(co);
-            }
-        }
-        slots.into_iter().map(|s| s.expect("chunk not computed")).collect()
-    };
+    // Chunks fan out on the persistent pool (capped at this call's
+    // `workers` budget); the reduction below is path-ordered, so the
+    // schedule never changes a float.
+    let chunk_outs: Vec<ChunkOut> = crate::runtime::scoped_map(n_chunks, workers, run_chunk);
 
     // Path-ordered reduction — bit-identical to a sequential per-path
     // accumulation regardless of chunk layout or worker count.

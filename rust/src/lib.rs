@@ -104,8 +104,9 @@
 //!
 //! Multi-path workloads go through [`api::solve_batch`] /
 //! [`api::sensitivity_batch`], which run on a **batched
-//! structure-of-arrays engine**: the batch is chunked across a scoped
-//! thread pool and each chunk's paths advance *together* through batched
+//! structure-of-arrays engine**: the batch is chunked across the
+//! persistent work-stealing pool ([`runtime::scoped_map`]) and each
+//! chunk's paths advance *together* through batched
 //! solver steps, batched Brownian sampling
 //! ([`brownian::BatchBrownian::fill_increments`]), and a batched
 //! augmented adjoint — over contiguous `[B×d]` buffers with zero heap
@@ -138,6 +139,36 @@
 //! (and `impl BatchSdeVjp for MySde {}` for gradients) — inheriting
 //! loop-based batch kernels that can be overridden with hand-batched ones
 //! where structure allows (see [`sde::batch`]).
+//!
+//! ## Execution model: one pool, one knob, zero bit drift
+//!
+//! All CPU fan-out in the crate — batched solves and gradients, the
+//! minibatch ELBO engine, serving's worker sizing — runs on **one
+//! process-wide persistent work-stealing pool** ([`runtime::pool`]).
+//! Workers spawn lazily up to the configured width, park between calls,
+//! and are *reused* across calls: steady-state training pays zero thread
+//! spawns per iteration (`sdegrad bench throughput` reports the per-call
+//! dispatch overhead in its `executor` row). The caller participates in
+//! its own job, so nested fan-outs cannot deadlock. Scheduling decides
+//! only *who* computes each chunk, never *what*: task `i` always computes
+//! result `i`, so results are bit-identical for any pool width and any
+//! steal interleaving (`tests/executor.rs`).
+//!
+//! The worker count is **one knob** with one precedence everywhere:
+//! `--threads N` (any subcommand) > `SDEGRAD_THREADS` env var >
+//! `std::thread::available_parallelism` — programmatically,
+//! [`runtime::set_worker_count`] / [`runtime::worker_count`].
+//!
+//! Two allocation-recycling layers ride on the same hot path, both
+//! observationally identical to fresh allocation (leases re-zero before
+//! handout): a per-thread buffer arena ([`runtime::arena`]) for `[B×d]`
+//! state staging, and a per-thread [`solvers::batch::Workspace`] pool.
+//! The virtual Brownian tree adds a bounded **ancestor-node cache**
+//! (`SdeProblem::tree_cache(capacity)`, default on): monotone sweeps
+//! resume descent from the deepest cached ancestor instead of the root,
+//! amortizing bridge draws to O(1) per step on dyadic grids — with
+//! *bit-identical* draws for every capacity, since a cached node stores
+//! exactly what a fresh root descent would recompute.
 //!
 //! ## Kernel tiers: exact (default) vs fast
 //!
@@ -179,7 +210,7 @@
 //! batched piecewise forward solve per chunk with each path's encoder
 //! context riding in its parameter tail, the batched augmented stochastic
 //! adjoint ([`adjoint::batch`]), and batched encoder/decoder backprop —
-//! chunks fanned across a scoped thread pool. Per-path keys are
+//! chunks fanned across the persistent work-stealing pool. Per-path keys are
 //! `key.fold_in(sequence).fold_in(sample)` and gradients reduce in path
 //! order, so results are bit-identical to a sequential scalar
 //! [`latent::elbo_step`] loop for any batch size, chunk layout, and

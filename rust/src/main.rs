@@ -23,6 +23,9 @@ fn usage() -> ! {
     eprintln!(
         "sdegrad {} — scalable gradients for stochastic differential equations
 
+All subcommands accept a global --threads N (worker count for the
+persistent pool; overrides the SDEGRAD_THREADS env var).
+
 USAGE:
     sdegrad train --dataset <gbm|lorenz|mocap> [--mode sde|ode] [--iters N]
                   [--batch N] [--samples N] [--lr F] [--kl F] [--substeps N]
@@ -53,6 +56,16 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else { usage() };
     let rest = &args[1..];
+    // Global --threads: sets the process-wide worker count before any
+    // subcommand touches the pool (SDEGRAD_THREADS env is the fallback;
+    // see runtime::worker_count).
+    {
+        let map = parse_args(rest);
+        let threads: usize = arg(&map, "threads", 0);
+        if threads > 0 {
+            sdegrad::runtime::set_worker_count(threads);
+        }
+    }
     match cmd.as_str() {
         "train" => cmd_train(rest),
         "serve" => cmd_serve(rest),

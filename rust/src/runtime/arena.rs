@@ -1,0 +1,98 @@
+//! Per-thread buffer arena: recycled `Vec<f64>` scratch for the batched
+//! hot path.
+//!
+//! Pool workers are persistent (see [`super::pool`]), so a thread-local
+//! free list turns per-chunk staging allocations — which used to hit the
+//! global allocator once per chunk per call — into pointer pops that
+//! reuse the same warm buffers across jobs.
+//!
+//! [`lease`] hands out a zero-filled buffer of exactly the requested
+//! length, *identical in observable state* to a fresh `vec![0.0; n]` —
+//! recycling can never change a computed float, so the crate's
+//! bit-identical determinism contract is unaffected. Dropping the
+//! [`Lease`] returns the buffer to the calling thread's free list (the
+//! list is bounded; excess buffers fall back to the allocator).
+
+use std::cell::RefCell;
+use std::ops::{Deref, DerefMut};
+
+/// Buffers kept per thread. Beyond this the oldest lease simply frees —
+/// a cap, not a correctness boundary. The batched hot path needs ~a
+/// dozen staging buffers live per worker at peak.
+const MAX_FREE: usize = 32;
+
+thread_local! {
+    static FREE: RefCell<Vec<Vec<f64>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// A recycled `Vec<f64>` scratch buffer, zero-filled to the leased
+/// length. Dereferences to the underlying vector; returns it to the
+/// thread-local free list on drop.
+pub struct Lease {
+    buf: Vec<f64>,
+}
+
+/// Lease a zero-filled buffer of length `n` from the calling thread's
+/// free list (allocating only when the list is empty). Observationally
+/// identical to `vec![0.0; n]`.
+pub fn lease(n: usize) -> Lease {
+    let mut buf = FREE
+        .with(|f| f.borrow_mut().pop())
+        .unwrap_or_default();
+    buf.clear();
+    buf.resize(n, 0.0);
+    Lease { buf }
+}
+
+impl Deref for Lease {
+    type Target = Vec<f64>;
+    fn deref(&self) -> &Vec<f64> {
+        &self.buf
+    }
+}
+
+impl DerefMut for Lease {
+    fn deref_mut(&mut self) -> &mut Vec<f64> {
+        &mut self.buf
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        let buf = std::mem::take(&mut self.buf);
+        FREE.with(|f| {
+            let mut free = f.borrow_mut();
+            if free.len() < MAX_FREE {
+                free.push(buf);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lease_is_zero_filled_like_a_fresh_vec() {
+        {
+            let mut a = lease(8);
+            a.iter_mut().for_each(|x| *x = 7.0);
+        } // returned dirty
+        let b = lease(8);
+        assert_eq!(&**b, &vec![0.0; 8], "recycled buffer must be re-zeroed");
+        let c = lease(16);
+        assert_eq!(c.len(), 16);
+        assert!(c.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn buffers_are_reused_on_the_same_thread() {
+        let ptr = {
+            let a = lease(64);
+            a.as_ptr()
+        };
+        let b = lease(64);
+        assert_eq!(b.as_ptr(), ptr, "same-thread same-size lease should recycle");
+    }
+}

@@ -1,5 +1,18 @@
-//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from the
-//! Rust hot path (Python never runs at train/serve time).
+//! Process-wide execution runtime: the persistent work-stealing thread
+//! pool that runs every parallel hot path ([`pool`]), and the PJRT
+//! loader for AOT-compiled HLO artifacts ([`artifact`] / [`client`]).
+//!
+//! ## Thread pool
+//!
+//! [`scoped_map`] is the single parallel-map primitive for the crate
+//! (batch solves, batched sensitivities, the latent-SDE ELBO, serve
+//! engine calls). Workers are spawned once and parked between jobs —
+//! no per-call thread churn — and [`worker_count`] is the one knob
+//! (`--threads` flag via [`set_worker_count`], then `SDEGRAD_THREADS`,
+//! then `available_parallelism`). Results are bit-identical for any
+//! pool size; see [`pool`] for the determinism contract.
+//!
+//! ## PJRT artifacts
 //!
 //! Pipeline: `artifacts/manifest.txt` → [`Manifest`] →
 //! [`ArtifactRegistry`] (compiles each `*.hlo.txt` once on the shared
@@ -9,9 +22,12 @@
 //! image's xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized
 //! protos; the text parser reassigns ids).
 
+pub mod arena;
 pub mod artifact;
 pub mod client;
+pub mod pool;
 
 pub use artifact::{ArtifactRegistry, Executable, Manifest, ManifestEntry};
 #[cfg(feature = "xla")]
 pub use client::pjrt_client;
+pub use pool::{scoped_map, set_worker_count, spawned_workers, worker_count};

@@ -1,0 +1,432 @@
+//! Persistent work-stealing executor for the batched hot path.
+//!
+//! Before this module every [`scoped_map`] call site spawned and joined
+//! fresh OS threads (`std::thread::scope`) — the trainer paid
+//! thread-creation latency every iteration and `sdegrad serve` every
+//! request group. Here, one lazily-initialized process-wide pool of
+//! parked workers serves every call:
+//!
+//! * **Jobs, not threads.** A call packages its closure as a job: the
+//!   index range `0..n` pre-split into per-participant stealable queues
+//!   (packed `hi<<32|lo` atomics: owners pop the front with CAS, thieves
+//!   take half from the back), an erased `unsafe fn(*const (), usize)`
+//!   task shim, and a completion latch. The job is pushed on the global
+//!   injector; parked workers wake, claim a participant slot, and drain.
+//! * **The caller participates.** The calling thread runs tasks like any
+//!   worker and blocks only on the completion latch. This makes borrowed
+//!   closures sound (the closure and result buffer outlive the job: the
+//!   caller cannot return before `remaining == 0`, and workers touch the
+//!   job's context only while executing a claimed task) and makes nested
+//!   calls deadlock-free (an inner call always makes progress on its own
+//!   thread even if every pool worker is busy).
+//! * **Workers are reused, never respawned.** The pool grows lazily up to
+//!   the requested participant count and then parks idle workers on a
+//!   condvar — two consecutive batched calls reuse the same threads
+//!   (pinned by `tests/executor.rs`).
+//!
+//! ## Determinism contract
+//!
+//! Each task writes its result into its own index's slot; the caller
+//! reassembles results in index order. Scheduling decides only *who*
+//! computes an index, never *what* is computed or how results reduce —
+//! results are **bit-identical for any pool size** (including 1) and any
+//! steal interleaving, preserving the repo-wide contract.
+//!
+//! ## Worker-count knob
+//!
+//! [`worker_count`] unifies what used to be two knobs (`par_map` read
+//! `available_parallelism` directly; `coordinator::config::num_threads`
+//! capped its own default at 8): an explicit [`set_worker_count`] (the
+//! `--threads` CLI flag) wins, then the `SDEGRAD_THREADS` env var, then
+//! `available_parallelism`.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Explicit worker-count override (0 = unset). Set by [`set_worker_count`].
+static WORKER_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Process-wide worker-count knob: explicit [`set_worker_count`] value if
+/// set, else the `SDEGRAD_THREADS` env var, else `available_parallelism`.
+/// Every parallel surface (the pool, serve workers, trainer defaults,
+/// bench harnesses) derives from this.
+pub fn worker_count() -> usize {
+    let explicit = WORKER_OVERRIDE.load(Ordering::Relaxed);
+    if explicit > 0 {
+        return explicit;
+    }
+    if let Ok(v) = std::env::var("SDEGRAD_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+/// Set the process-wide worker count (the `--threads` flag). `0` clears
+/// the override, falling back to `SDEGRAD_THREADS` /
+/// `available_parallelism`. Takes effect for subsequent jobs; already
+/// spawned pool workers are never killed (they just idle).
+pub fn set_worker_count(n: usize) {
+    WORKER_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// One participant's index range, packed `end << 32 | start` in a single
+/// atomic so pop/steal race safely. The owner pops the front; thieves
+/// steal half from the back.
+struct PackedRange(AtomicU64);
+
+const LO_MASK: u64 = 0xffff_ffff;
+
+impl PackedRange {
+    fn new(lo: u32, hi: u32) -> Self {
+        PackedRange(AtomicU64::new(((hi as u64) << 32) | lo as u64))
+    }
+
+    /// Owner path: claim the front index, or `None` when empty.
+    fn pop_front(&self) -> Option<usize> {
+        let mut cur = self.0.load(Ordering::Acquire);
+        loop {
+            let (lo, hi) = ((cur & LO_MASK) as u32, (cur >> 32) as u32);
+            if lo >= hi {
+                return None;
+            }
+            match self.0.compare_exchange_weak(
+                cur,
+                ((hi as u64) << 32) | (lo + 1) as u64,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return Some(lo as usize),
+                Err(next) => cur = next,
+            }
+        }
+    }
+
+    /// Thief path: take the back half (at least one index), or `None`
+    /// when empty. The stolen sub-range is returned for local draining.
+    fn steal_half(&self) -> Option<(usize, usize)> {
+        let mut cur = self.0.load(Ordering::Acquire);
+        loop {
+            let (lo, hi) = ((cur & LO_MASK) as u32, (cur >> 32) as u32);
+            if lo >= hi {
+                return None;
+            }
+            let take = ((hi - lo) as usize).div_ceil(2) as u32;
+            let new_hi = hi - take;
+            match self.0.compare_exchange_weak(
+                cur,
+                ((new_hi as u64) << 32) | lo as u64,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return Some((new_hi as usize, hi as usize)),
+                Err(next) => cur = next,
+            }
+        }
+    }
+}
+
+/// A scoped job: lifetime-erased task shim + stealable index queues +
+/// completion latch. Lives in an `Arc` shared by the caller and any pool
+/// workers that joined; the raw context pointers are only dereferenced
+/// while executing a claimed task, and every task completes before the
+/// caller's stack frame (which owns the referents) unwinds.
+struct JobCore {
+    /// Monomorphized shim: `call(ctx, i)` runs task `i` and stores its
+    /// result in slot `i`.
+    call: unsafe fn(*const (), usize),
+    ctx: *const (),
+    /// Pre-split per-participant queues (slot 0 = caller).
+    ranges: Vec<PackedRange>,
+    /// Pool workers that joined (caller holds one share implicitly);
+    /// bounded by `ranges.len()` so a job never oversubscribes its
+    /// requested width.
+    joined: AtomicUsize,
+    /// Tasks not yet *completed* (claimed-but-running tasks count).
+    remaining: AtomicUsize,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+// Safety: `ctx` points at a `RawJob` on the caller's stack. The caller
+// blocks until `remaining == 0`, and `remaining` reaches 0 only after the
+// last task's shim call has returned, so no worker dereferences `ctx`
+// after the referents die. Result slots are disjoint per index.
+unsafe impl Send for JobCore {}
+unsafe impl Sync for JobCore {}
+
+impl JobCore {
+    /// Run tasks until no index is claimable anywhere in the job:
+    /// drain the preferred queue, then steal from the others.
+    fn drain(&self, slot: usize) {
+        let w = self.ranges.len();
+        loop {
+            while let Some(i) = self.ranges[slot].pop_front() {
+                self.run_task(i);
+            }
+            // Own queue empty: steal the back half of the fullest-looking
+            // victim (scan in slot order — determinism is unaffected).
+            let mut stole = false;
+            for v in 0..w {
+                if v == slot {
+                    continue;
+                }
+                if let Some((lo, hi)) = self.ranges[v].steal_half() {
+                    for i in lo..hi {
+                        self.run_task(i);
+                    }
+                    stole = true;
+                    break;
+                }
+            }
+            if !stole {
+                return;
+            }
+        }
+    }
+
+    fn run_task(&self, i: usize) {
+        // Safety: `i` was claimed exactly once (CAS pop/steal), so slot
+        // `i` is written once; `ctx` is alive because `remaining > 0`.
+        unsafe { (self.call)(self.ctx, i) };
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let mut done = self.done.lock().unwrap_or_else(|e| e.into_inner());
+            *done = true;
+            self.done_cv.notify_all();
+        }
+    }
+
+    fn has_work(&self) -> bool {
+        self.ranges.iter().any(|r| {
+            let v = r.0.load(Ordering::Acquire);
+            (v & LO_MASK) < (v >> 32)
+        })
+    }
+}
+
+/// The process-wide pool: an injector of active jobs and a set of parked
+/// workers. Workers never exit; the pool only grows (lazily, up to the
+/// largest participant count ever requested).
+struct Pool {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+}
+
+struct PoolState {
+    /// Active jobs with potentially claimable work (callers push on
+    /// submit, remove on completion).
+    jobs: Vec<Arc<JobCore>>,
+    /// Total workers ever spawned.
+    spawned: usize,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| Pool {
+        state: Mutex::new(PoolState { jobs: Vec::new(), spawned: 0 }),
+        work_cv: Condvar::new(),
+    })
+}
+
+/// Number of pool workers spawned so far over the process lifetime
+/// (monotone; the pool-reuse test pins that consecutive batched calls do
+/// not grow it).
+pub fn spawned_workers() -> usize {
+    pool().state.lock().unwrap_or_else(|e| e.into_inner()).spawned
+}
+
+/// Body of a pool worker: park until a job with claimable work appears,
+/// join it (bounded by its participant width), drain, repeat. Never
+/// returns.
+fn worker_loop() {
+    let p = pool();
+    loop {
+        let job: Arc<JobCore> = {
+            let mut st = p.state.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                // A worker may join a job if it has claimable work and a
+                // free participant slot (slot 0 is the caller's).
+                let candidate = st.jobs.iter().find(|j| {
+                    j.has_work() && j.joined.load(Ordering::Relaxed) + 1 < j.ranges.len()
+                });
+                if let Some(j) = candidate {
+                    j.joined.fetch_add(1, Ordering::Relaxed);
+                    break j.clone();
+                }
+                st = p.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        // Steal-only participant: its "own" slot is chosen as the first
+        // non-empty queue it finds.
+        job.drain(0);
+        job.joined.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Order-preserving parallel map over `0..n` on the persistent pool,
+/// using at most `max_workers` participants (the calling thread is one of
+/// them). Results are bit-identical for any pool size and any steal
+/// schedule: task `i` always computes `f(i)` into slot `i`.
+///
+/// Runs inline when `n <= 1` or the effective width is 1 — sequential
+/// execution is the same computation.
+pub fn scoped_map<T, F>(n: usize, max_workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let width = worker_count().min(max_workers).min(n);
+    if width <= 1 || n == 1 {
+        return (0..n).map(f).collect();
+    }
+    assert!(n <= u32::MAX as usize, "scoped_map: task count exceeds u32 range");
+
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+
+    struct RawJob<'f, T, F> {
+        f: &'f F,
+        slots: *mut Option<T>,
+    }
+    /// Monomorphized task shim behind `JobCore::call`.
+    unsafe fn run_one<T, F: Fn(usize) -> T>(ctx: *const (), i: usize) {
+        let job = unsafe { &*(ctx as *const RawJob<'_, T, F>) };
+        let v = (job.f)(i);
+        unsafe { *job.slots.add(i) = Some(v) };
+    }
+
+    {
+        let raw = RawJob { f: &f, slots: slots.as_mut_ptr() };
+        // Split 0..n into `width` contiguous queues (slot 0 = caller).
+        let per = n.div_ceil(width);
+        let ranges = (0..width)
+            .map(|w| PackedRange::new((w * per).min(n) as u32, ((w + 1) * per).min(n) as u32))
+            .collect();
+        let job = Arc::new(JobCore {
+            call: run_one::<T, F>,
+            ctx: (&raw as *const RawJob<'_, T, F>).cast(),
+            ranges,
+            joined: AtomicUsize::new(0),
+            remaining: AtomicUsize::new(n),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+        });
+
+        // Publish the job and make sure enough workers exist to fill its
+        // participant slots, then wake them.
+        let p = pool();
+        {
+            let mut st = p.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.jobs.push(job.clone());
+            while st.spawned + 1 < width {
+                st.spawned += 1;
+                let name = format!("sdegrad-pool-{}", st.spawned);
+                std::thread::Builder::new()
+                    .name(name)
+                    .spawn(worker_loop)
+                    .expect("spawning pool worker");
+            }
+        }
+        p.work_cv.notify_all();
+
+        // The caller is participant 0.
+        job.drain(0);
+
+        // Wait for stragglers still executing claimed tasks.
+        {
+            let mut done = job.done.lock().unwrap_or_else(|e| e.into_inner());
+            while !*done {
+                done = job.done_cv.wait(done).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+
+        // Retire the job.
+        let mut st = p.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.jobs.retain(|j| !Arc::ptr_eq(j, &job));
+        // `raw` (and the borrow of `slots`) dies here; every task has
+        // completed, so no worker will touch `ctx` again.
+    }
+
+    slots.into_iter().map(|s| s.expect("pool covered every index")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serializes tests that mutate the process-wide worker count.
+    static KNOB: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn maps_in_order_and_covers_every_index() {
+        let out = scoped_map(100, usize::MAX, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(scoped_map(0, usize::MAX, |i| i), Vec::<usize>::new());
+        assert_eq!(scoped_map(1, usize::MAX, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn respects_max_workers_inline_path() {
+        // max_workers = 1 must run inline (no pool interaction at all).
+        let before = spawned_workers();
+        let out = scoped_map(64, 1, |i| i as f64 * 0.5);
+        assert_eq!(out.len(), 64);
+        assert_eq!(spawned_workers(), before);
+    }
+
+    #[test]
+    fn identical_results_across_widths() {
+        let _g = KNOB.lock().unwrap_or_else(|e| e.into_inner());
+        let f = |i: usize| (i as f64).sqrt().sin();
+        let reference: Vec<f64> = (0..257).map(f).collect();
+        for width in [1usize, 2, 3, 8] {
+            set_worker_count(width);
+            assert_eq!(scoped_map(257, usize::MAX, f), reference, "width {width}");
+        }
+        set_worker_count(0);
+    }
+
+    #[test]
+    fn nested_maps_do_not_deadlock() {
+        let out = scoped_map(8, usize::MAX, |i| {
+            scoped_map(8, usize::MAX, move |j| i * 8 + j).iter().sum::<usize>()
+        });
+        let expect: Vec<usize> = (0..8).map(|i| (0..8).map(|j| i * 8 + j).sum()).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn consecutive_calls_reuse_workers() {
+        let _g = KNOB.lock().unwrap_or_else(|e| e.into_inner());
+        set_worker_count(4);
+        let _ = scoped_map(64, usize::MAX, |i| i + 1);
+        let after_first = spawned_workers();
+        for _ in 0..5 {
+            let _ = scoped_map(64, usize::MAX, |i| i + 1);
+        }
+        assert_eq!(spawned_workers(), after_first, "pool must not grow across calls");
+        set_worker_count(0);
+    }
+
+    #[test]
+    fn packed_range_pop_and_steal() {
+        let r = PackedRange::new(0, 10);
+        assert_eq!(r.pop_front(), Some(0));
+        assert_eq!(r.steal_half(), Some((5, 10))); // ceil((10-1)/2)=5 → [5,10)
+        assert_eq!(r.steal_half(), Some((3, 5)));
+        assert_eq!(r.pop_front(), Some(1));
+        assert_eq!(r.pop_front(), Some(2));
+        assert_eq!(r.pop_front(), None);
+        assert_eq!(r.steal_half(), None);
+    }
+}

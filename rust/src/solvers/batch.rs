@@ -15,7 +15,9 @@
 //! solves exactly (`tests/batch_engine.rs` pins this bit-for-bit). The
 //! payoff is architectural: one virtual call per *stage* instead of per
 //! *path*, coefficients and weight rows hot in cache across all B paths,
-//! and zero heap allocation per step — the [`Workspace`] is sized once.
+//! and zero heap allocation per step — the [`Workspace`] is sized once
+//! and recycled across solves through a per-thread pool (persistent pool
+//! workers re-lease the same warm buffers; see [`crate::runtime`]).
 //!
 //! NFE accounting stays in per-path units: one batched drift call counts
 //! as one drift evaluation (it is one evaluation *per path*), so the
@@ -261,6 +263,73 @@ impl Workspace {
             dw: vec![0.0; n],
         }
     }
+
+    /// A workspace from the calling thread's recycle pool (pool workers
+    /// are persistent, so the same buffers serve every chunk a worker
+    /// ever runs). All seven buffers are re-zeroed, making the lease
+    /// observationally identical to [`Workspace::new`] — recycling can
+    /// never change a computed float.
+    pub(crate) fn recycled(dim: usize, batch: usize) -> WorkspaceLease {
+        let n = dim * batch;
+        let ws = WS_POOL.with(|p| {
+            let mut pool = p.borrow_mut();
+            let hit = pool.iter().position(|w| w.f0.len() == n);
+            hit.map(|i| pool.swap_remove(i))
+        });
+        let ws = match ws {
+            Some(mut ws) => {
+                for buf in
+                    [&mut ws.f0, &mut ws.g0, &mut ws.f1, &mut ws.g1, &mut ws.ytmp, &mut ws.gp,
+                     &mut ws.dw]
+                {
+                    buf.fill(0.0);
+                }
+                ws
+            }
+            None => Workspace::new(dim, batch),
+        };
+        WorkspaceLease { ws: Some(ws) }
+    }
+}
+
+thread_local! {
+    static WS_POOL: std::cell::RefCell<Vec<Workspace>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Workspaces kept per thread; excess drops fall back to the allocator.
+const WS_POOL_MAX: usize = 8;
+
+/// RAII handle from [`Workspace::recycled`]: dereferences to the
+/// workspace, returns it to the thread-local pool on drop.
+pub(crate) struct WorkspaceLease {
+    ws: Option<Workspace>,
+}
+
+impl std::ops::Deref for WorkspaceLease {
+    type Target = Workspace;
+    fn deref(&self) -> &Workspace {
+        self.ws.as_ref().expect("workspace leased")
+    }
+}
+
+impl std::ops::DerefMut for WorkspaceLease {
+    fn deref_mut(&mut self) -> &mut Workspace {
+        self.ws.as_mut().expect("workspace leased")
+    }
+}
+
+impl Drop for WorkspaceLease {
+    fn drop(&mut self) {
+        if let Some(ws) = self.ws.take() {
+            WS_POOL.with(|p| {
+                let mut pool = p.borrow_mut();
+                if pool.len() < WS_POOL_MAX {
+                    pool.push(ws);
+                }
+            });
+        }
+    }
 }
 
 /// Batched single-step schemes over a [`Workspace`]. Same update formulas
@@ -352,9 +421,10 @@ pub(crate) fn batch_grid_core<S: BatchSdeFunc, B: BrownianMotion>(
     debug_assert_eq!(bm.batch(), sys.batch(), "batch_grid_core: Brownian batch mismatch");
 
     let stepper = BatchStepper::new(method);
-    let mut ws = Workspace::new(sys.dim(), sys.batch());
-    let mut y = y0.to_vec();
-    let mut ynext = vec![0.0; n];
+    let mut ws = Workspace::recycled(sys.dim(), sys.batch());
+    let mut y = crate::runtime::arena::lease(n);
+    y.copy_from_slice(y0);
+    let mut ynext = crate::runtime::arena::lease(n);
 
     let f0 = sys.nfe_drift();
     let g0 = sys.nfe_diffusion();
@@ -393,9 +463,10 @@ pub(crate) fn batch_grid_saving_core<S: BatchSdeFunc, B: BrownianMotion>(
     traj[..n].copy_from_slice(y0);
 
     let stepper = BatchStepper::new(method);
-    let mut ws = Workspace::new(sys.dim(), sys.batch());
-    let mut y = y0.to_vec();
-    let mut ynext = vec![0.0; n];
+    let mut ws = Workspace::recycled(sys.dim(), sys.batch());
+    let mut y = crate::runtime::arena::lease(n);
+    y.copy_from_slice(y0);
+    let mut ynext = crate::runtime::arena::lease(n);
 
     let f0 = sys.nfe_drift();
     let g0 = sys.nfe_diffusion();

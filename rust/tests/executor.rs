@@ -1,0 +1,279 @@
+//! Persistent-executor and Brownian-tree-cache pins.
+//!
+//! The process-wide work-stealing pool (`runtime::scoped_map`) and the
+//! virtual-tree ancestor node cache are pure *scheduling/speed* layers:
+//! neither may change a single computed bit. This suite pins that
+//! contract from the public API:
+//!
+//! * batched solves and gradients are **exact-f64-identical** to the
+//!   sequential scalar loop for every pool size × every tree-cache
+//!   capacity combination (including capacity 0 = cache disabled);
+//! * checkpointed-backprop segment replay equals the full tape under
+//!   every cache capacity;
+//! * the cache's amortized-draw contract holds on a dyadic sweep
+//!   (`bridge_calls ≤ 2·steps` cached, strictly more uncached);
+//! * the minibatch ELBO engine gives identical results on the pool for
+//!   every worker count;
+//! * consecutive batched calls **reuse** pool workers instead of
+//!   spawning new threads.
+//!
+//! Tests that mutate the process-wide worker count serialize on `KNOB`
+//! (integration tests share one process, hence one pool). Tests that
+//! only *read* results need no lock — any width computes the same bits,
+//! which is exactly what they assert.
+
+use std::sync::Mutex;
+
+use sdegrad::adjoint::AdjointConfig;
+use sdegrad::api::{
+    sensitivity_batch, solve_batch, Checkpointing, NoiseSpec, SdeProblem, SensAlg, SolveOptions,
+    StepControl,
+};
+use sdegrad::latent::{elbo_step_batch, ElboConfig, LatentSdeConfig, LatentSdeModel};
+use sdegrad::prng::PrngKey;
+use sdegrad::runtime::{scoped_map, set_worker_count, spawned_workers, worker_count};
+use sdegrad::sde::problems::{sample_experiment_setup, Example1};
+use sdegrad::sde::ReplicatedSde;
+use sdegrad::solvers::Method;
+
+/// Serializes tests that mutate the process-wide worker count.
+static KNOB: Mutex<()> = Mutex::new(());
+
+const POOL_SIZES: [usize; 3] = [1, 2, 8];
+const CACHE_CAPS: [usize; 3] = [0, 4, 64];
+
+fn gbm_problem(
+    sde: &ReplicatedSde<Example1>,
+    theta: &[f64],
+    x0: &[f64],
+    tol: f64,
+) -> SdeProblem<'_, ReplicatedSde<Example1>> {
+    SdeProblem::new(sde, x0, (0.0, 1.0))
+        .params(theta)
+        .noise(NoiseSpec::VirtualTree { tol })
+}
+
+/// Forward solves: for every (pool size × cache capacity), the batched
+/// engine reproduces the sequential scalar loop bit-for-bit, and every
+/// capacity produces the same bits as every other.
+#[test]
+fn solves_bit_identical_across_pool_sizes_and_cache_capacities() {
+    let _g = KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let dim = 3;
+    let sde = ReplicatedSde::new(Example1, dim);
+    let (theta, x0) = sample_experiment_setup(PrngKey::from_seed(71), dim, 2);
+    let prob = gbm_problem(&sde, &theta, &x0, 1e-7);
+    let opts = SolveOptions::fixed(Method::MilsteinIto, 200);
+    let n_paths = 41; // crosses the 32-path chunk boundary
+
+    // Sequential scalar reference (default capacity, no pool).
+    set_worker_count(1);
+    let replicates = prob.replicates(PrngKey::from_seed(72), n_paths);
+    let reference: Vec<Vec<f64>> =
+        replicates.iter().map(|p| p.solve(&opts).states.clone()).collect();
+
+    for pool in POOL_SIZES {
+        set_worker_count(pool);
+        for cap in CACHE_CAPS {
+            let probs: Vec<_> =
+                replicates.iter().map(|p| p.clone().tree_cache(cap)).collect();
+            let sols = solve_batch(&probs, &opts);
+            assert_eq!(sols.len(), n_paths);
+            for (b, sol) in sols.iter().enumerate() {
+                assert_eq!(
+                    sol.states, reference[b],
+                    "solve diverged at pool={pool} cache={cap} path={b}"
+                );
+            }
+        }
+    }
+    set_worker_count(0);
+}
+
+/// Gradients (stochastic adjoint AND taped backprop): bit-identical to
+/// the scalar `sensitivity_sum` for every pool size × cache capacity.
+#[test]
+fn gradients_bit_identical_across_pool_sizes_and_cache_capacities() {
+    let _g = KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let dim = 2;
+    let sde = ReplicatedSde::new(Example1, dim);
+    let (theta, x0) = sample_experiment_setup(PrngKey::from_seed(73), dim, 2);
+    let prob = gbm_problem(&sde, &theta, &x0, 1e-7);
+    let step = StepControl::Steps(64);
+    let n_paths = 35;
+    let algs = [
+        SensAlg::StochasticAdjoint(AdjointConfig {
+            forward_method: Method::MilsteinIto,
+            ..Default::default()
+        }),
+        SensAlg::Backprop {
+            method: Method::MilsteinIto,
+            checkpointing: Checkpointing::Sqrt,
+        },
+    ];
+    let replicates = prob.replicates(PrngKey::from_seed(74), n_paths);
+
+    for alg in &algs {
+        set_worker_count(1);
+        let reference: Vec<Vec<f64>> = replicates
+            .iter()
+            .map(|p| p.sensitivity_sum(alg, step).unwrap().dtheta)
+            .collect();
+        for pool in POOL_SIZES {
+            set_worker_count(pool);
+            for cap in CACHE_CAPS {
+                let probs: Vec<_> =
+                    replicates.iter().map(|p| p.clone().tree_cache(cap)).collect();
+                let grads = sensitivity_batch(&probs, alg, step);
+                for (b, g) in grads.iter().enumerate() {
+                    assert_eq!(
+                        g.as_ref().unwrap().dtheta,
+                        reference[b],
+                        "{} diverged at pool={pool} cache={cap} path={b}",
+                        alg.name()
+                    );
+                }
+            }
+        }
+    }
+    set_worker_count(0);
+}
+
+/// Checkpointed segment replay must stay exact-f64-identical to the full
+/// tape under every cache capacity: each replayed segment re-queries the
+/// tree through the cache, and a cached node is the same pure function
+/// of `(key, path)` a fresh descent computes.
+#[test]
+fn checkpointed_replay_equals_full_tape_under_every_cache_capacity() {
+    let dim = 2;
+    let sde = ReplicatedSde::new(Example1, dim);
+    let (theta, x0) = sample_experiment_setup(PrngKey::from_seed(75), dim, 2);
+    let prob = gbm_problem(&sde, &theta, &x0, 1e-8);
+    let step = StepControl::Steps(128);
+
+    let tape = prob
+        .clone()
+        .sensitivity_sum(&SensAlg::backprop(Method::MilsteinIto), step)
+        .unwrap();
+    for cap in CACHE_CAPS {
+        let ckpt = prob
+            .clone()
+            .tree_cache(cap)
+            .sensitivity_sum(
+                &SensAlg::Backprop {
+                    method: Method::MilsteinIto,
+                    checkpointing: Checkpointing::Sqrt,
+                },
+                step,
+            )
+            .unwrap();
+        assert_eq!(ckpt.dtheta, tape.dtheta, "checkpointed dtheta diverged at cache={cap}");
+        assert_eq!(ckpt.dz0, tape.dz0, "checkpointed dz0 diverged at cache={cap}");
+    }
+}
+
+/// The amortized-draw contract, from the public API: a monotone sweep
+/// over a dyadic grid costs ≤ 2 bridge draws per step with the cache on
+/// (each tree node is drawn exactly once), while the cache-disabled tree
+/// re-descends from the root and pays ≥ 3 draws per step.
+#[test]
+fn node_cache_amortizes_bridge_draws_on_dyadic_sweep() {
+    let dim = 3;
+    let sde = ReplicatedSde::new(Example1, dim);
+    let (theta, x0) = sample_experiment_setup(PrngKey::from_seed(76), dim, 2);
+    let steps = 256u64; // power of two → dyadic grid on [0, 1]
+    let opts = SolveOptions::fixed(Method::EulerMaruyama, steps as usize);
+
+    let cached = gbm_problem(&sde, &theta, &x0, 1e-9).key(PrngKey::from_seed(77)).solve(&opts);
+    let uncached = gbm_problem(&sde, &theta, &x0, 1e-9)
+        .key(PrngKey::from_seed(77))
+        .tree_cache(0)
+        .solve(&opts);
+    assert_eq!(cached.states, uncached.states, "cache changed the solution");
+
+    let (c, u) = (cached.noise.bridge_calls(), uncached.noise.bridge_calls());
+    assert!(c <= 2 * steps, "cached sweep drew {c} bridges for {steps} steps (want ≤ {})", 2 * steps);
+    assert!(u >= 3 * steps, "uncached sweep drew only {u} bridges for {steps} steps");
+    assert!(c < u, "cache did not reduce draws ({c} vs {u})");
+}
+
+/// The minibatch ELBO engine computes identical losses and gradients on
+/// the pool for every worker count (the trainer's determinism contract,
+/// now routed through `runtime::scoped_map`).
+#[test]
+fn elbo_step_identical_across_pool_worker_counts() {
+    let _g = KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let model = LatentSdeModel::new(LatentSdeConfig {
+        obs_dim: 2,
+        latent_dim: 3,
+        context_dim: 2,
+        hidden: 8,
+        diff_hidden: 4,
+        enc_hidden: 6,
+        obs_noise_std: 0.1,
+        ..Default::default()
+    });
+    let params = model.init_params(PrngKey::from_seed(78));
+    let n_obs = 4;
+    let times: Vec<f64> = (0..n_obs).map(|k| 0.1 * k as f64).collect();
+    let n_seqs = 5;
+    let seqs: Vec<Vec<f64>> = (0..n_seqs)
+        .map(|m| {
+            let mut obs = vec![0.0; n_obs * 2];
+            PrngKey::from_seed(79 + m as u64).fill_normal(0, &mut obs);
+            obs
+        })
+        .collect();
+    let obs_seqs: Vec<&[f64]> = seqs.iter().map(|s| s.as_slice()).collect();
+    let keys: Vec<PrngKey> =
+        (0..n_seqs).map(|m| PrngKey::from_seed(80).fold_in(m as u64)).collect();
+    let cfg = ElboConfig { substeps: 2, ..ElboConfig::default() };
+
+    set_worker_count(1);
+    let reference = elbo_step_batch(&model, &params, &times, &obs_seqs, &keys, &cfg, 2, 1);
+    for pool in POOL_SIZES {
+        set_worker_count(pool);
+        // The engine's own worker knob fans out through the pool too.
+        for elbo_workers in [1, 4] {
+            let out = elbo_step_batch(
+                &model, &params, &times, &obs_seqs, &keys, &cfg, 2, elbo_workers,
+            );
+            assert_eq!(out.loss, reference.loss, "loss at pool={pool} workers={elbo_workers}");
+            assert_eq!(out.grad, reference.grad, "grad at pool={pool} workers={elbo_workers}");
+            assert_eq!(out.per_path_loss, reference.per_path_loss);
+        }
+    }
+    set_worker_count(0);
+}
+
+/// Consecutive batched calls must reuse the persistent workers: after a
+/// warmup call at a fixed width, further calls (batched solves and raw
+/// `scoped_map` fan-outs) spawn no new threads.
+#[test]
+fn consecutive_batched_calls_reuse_pool_workers() {
+    let _g = KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    let dim = 2;
+    let sde = ReplicatedSde::new(Example1, dim);
+    let (theta, x0) = sample_experiment_setup(PrngKey::from_seed(81), dim, 2);
+    let prob = SdeProblem::new(&sde, &x0, (0.0, 1.0)).params(&theta);
+    let replicates = prob.replicates(PrngKey::from_seed(82), 40);
+    let opts = SolveOptions::fixed(Method::EulerMaruyama, 50);
+
+    set_worker_count(4);
+    assert_eq!(worker_count(), 4);
+    // Warmup to full width: the solve fans out only ceil(40/32) = 2
+    // chunks, so a wide raw fan-out is what brings the pool to 4.
+    let _ = solve_batch(&replicates, &opts);
+    let _ = scoped_map(32, usize::MAX, |i| i + 1);
+    let after_warmup = spawned_workers();
+    for _ in 0..3 {
+        let _ = solve_batch(&replicates, &opts);
+        let _ = scoped_map(32, usize::MAX, |i| i * 2);
+    }
+    assert_eq!(
+        spawned_workers(),
+        after_warmup,
+        "pool spawned new workers on consecutive calls"
+    );
+    set_worker_count(0);
+}
