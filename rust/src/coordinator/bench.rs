@@ -1047,6 +1047,11 @@ pub fn markdown_table(report: &CompareReport, threshold: f64) -> String {
     for r in &report.rows {
         let status = if r.baseline.is_nan() {
             "new (ungated — refresh baseline)"
+        } else if report.placeholder {
+            // Placeholder baselines carry fake values (1s): per-row
+            // "ok" would read as a real pass, so flag each row as
+            // unbaselined instead and suppress the meaningless Δ.
+            "unbaselined (placeholder — gate is a no-op)"
         } else if !r.gated {
             // Latency rows carry microseconds in the per-second column:
             // flag the unit and direction so +Δ% is not misread as a win.
@@ -1060,14 +1065,14 @@ pub fn markdown_table(report: &CompareReport, threshold: f64) -> String {
         } else {
             "ok"
         };
-        let base = if r.baseline.is_nan() {
+        let base = if r.baseline.is_nan() || report.placeholder {
             "—".to_string()
         } else {
             format!("{:.0}", r.baseline)
         };
         let (cur, delta) = if r.current.is_nan() {
             ("missing".to_string(), "—".to_string())
-        } else if r.delta.is_nan() {
+        } else if r.delta.is_nan() || report.placeholder {
             (format!("{:.0}", r.current), "—".to_string())
         } else {
             (format!("{:.0}", r.current), format!("{:+.1}%", r.delta * 100.0))
@@ -1451,6 +1456,17 @@ mod tests {
         assert!(base_ph.placeholder);
         let report_ph = compare_throughput(&base_ph, &cur, 0.25);
         assert!(report_ph.passed());
-        assert!(markdown_table(&report_ph, 0.25).contains("placeholder"));
+        let table_ph = markdown_table(&report_ph, 0.25);
+        assert!(table_ph.contains("placeholder"));
+        // Every baselined row is flagged unbaselined — no per-row "ok"
+        // that could be misread as a real pass against fake values.
+        assert!(
+            table_ph.contains("unbaselined"),
+            "placeholder rows not flagged:\n{table_ph}"
+        );
+        assert!(
+            !table_ph.contains("| ok |"),
+            "placeholder row rendered as ok:\n{table_ph}"
+        );
     }
 }

@@ -152,7 +152,11 @@
 //! its own job, so nested fan-outs cannot deadlock. Scheduling decides
 //! only *who* computes each chunk, never *what*: task `i` always computes
 //! result `i`, so results are bit-identical for any pool width and any
-//! steal interleaving (`tests/executor.rs`).
+//! steal interleaving (`tests/executor.rs`). Task panics are contained:
+//! a panicking closure cannot kill a worker or hang the caller — the
+//! payload is re-thrown on the calling thread once the job has fully
+//! retired, and the pool keeps serving (see "Panic containment" in
+//! [`runtime::pool`]).
 //!
 //! The worker count is **one knob** with one precedence everywhere:
 //! `--threads N` (any subcommand) > `SDEGRAD_THREADS` env var >

@@ -10,7 +10,10 @@
 //! no per-call thread churn — and [`worker_count`] is the one knob
 //! (`--threads` flag via [`set_worker_count`], then `SDEGRAD_THREADS`,
 //! then `available_parallelism`). Results are bit-identical for any
-//! pool size; see [`pool`] for the determinism contract.
+//! pool size; see [`pool`] for the determinism contract. Task panics
+//! are contained: workers survive, and the caller re-throws the payload
+//! only after the job has fully retired (see "Panic containment" in
+//! [`pool`]).
 //!
 //! ## PJRT artifacts
 //!
@@ -30,4 +33,6 @@ pub mod pool;
 pub use artifact::{ArtifactRegistry, Executable, Manifest, ManifestEntry};
 #[cfg(feature = "xla")]
 pub use client::pjrt_client;
-pub use pool::{scoped_map, set_worker_count, spawned_workers, worker_count};
+pub use pool::{
+    scoped_map, set_worker_count, spawned_by_this_thread, spawned_workers, worker_count,
+};

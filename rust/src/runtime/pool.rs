@@ -11,7 +11,8 @@
 //!   (packed `hi<<32|lo` atomics: owners pop the front with CAS, thieves
 //!   take half from the back), an erased `unsafe fn(*const (), usize)`
 //!   task shim, and a completion latch. The job is pushed on the global
-//!   injector; parked workers wake, claim a participant slot, and drain.
+//!   injector; parked workers wake, claim a participant slot, and drain
+//!   starting from that slot's queue.
 //! * **The caller participates.** The calling thread runs tasks like any
 //!   worker and blocks only on the completion latch. This makes borrowed
 //!   closures sound (the closure and result buffer outlive the job: the
@@ -32,6 +33,23 @@
 //! results are **bit-identical for any pool size** (including 1) and any
 //! steal interleaving, preserving the repo-wide contract.
 //!
+//! ## Panic containment
+//!
+//! A panicking task closure must not kill a pool worker (the worker
+//! would die with the job's `remaining` latch undecremented and the
+//! caller would block forever) and must not let the caller unwind while
+//! the job is still published (workers could then execute tasks whose
+//! context points into the dead stack frame). So task execution is
+//! wrapped in `catch_unwind`: the first payload is stashed on the job,
+//! every subsequent task of that job is retired without running (the
+//! job is doomed — its results are never read), and the caller re-throws
+//! the payload with `resume_unwind` only *after* the completion latch
+//! has dropped and the job has been retired from the injector. A drop
+//! guard performs that drain/wait/retire sequence even if the caller's
+//! own frame unwinds for some other reason (e.g. worker spawn failure),
+//! so no unwinding path can leak a live job. Workers survive task panics
+//! and keep serving later jobs.
+//!
 //! ## Worker-count knob
 //!
 //! [`worker_count`] unifies what used to be two knobs (`par_map` read
@@ -40,7 +58,10 @@
 //! `--threads` CLI flag) wins, then the `SDEGRAD_THREADS` env var, then
 //! `available_parallelism`.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::any::Any;
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Explicit worker-count override (0 = unset). Set by [`set_worker_count`].
@@ -143,32 +164,42 @@ struct JobCore {
     ranges: Vec<PackedRange>,
     /// Pool workers that joined (caller holds one share implicitly);
     /// bounded by `ranges.len()` so a job never oversubscribes its
-    /// requested width.
+    /// requested width. Also allocates each joiner's starting queue.
     joined: AtomicUsize,
-    /// Tasks not yet *completed* (claimed-but-running tasks count).
+    /// Tasks not yet *retired* (claimed-but-running tasks count). Every
+    /// claimed task is retired exactly once — run, panicked, or skipped
+    /// because the job is already doomed — so this always reaches 0.
     remaining: AtomicUsize,
+    /// Fast flag: some task panicked, the job is doomed; remaining tasks
+    /// are retired without running.
+    panicked: AtomicBool,
+    /// First panic payload; the caller re-throws it after the job has
+    /// fully retired.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
     done: Mutex<bool>,
     done_cv: Condvar,
 }
 
 // Safety: `ctx` points at a `RawJob` on the caller's stack. The caller
-// blocks until `remaining == 0`, and `remaining` reaches 0 only after the
-// last task's shim call has returned, so no worker dereferences `ctx`
-// after the referents die. Result slots are disjoint per index.
+// blocks until `remaining == 0` (the `JobGuard` enforces this on every
+// exit path, including unwinds), and `remaining` reaches 0 only after
+// the last task's shim call has returned, so no worker dereferences
+// `ctx` after the referents die. Result slots are disjoint per index.
 unsafe impl Send for JobCore {}
 unsafe impl Sync for JobCore {}
 
 impl JobCore {
     /// Run tasks until no index is claimable anywhere in the job:
-    /// drain the preferred queue, then steal from the others.
+    /// drain the preferred queue, then steal from the others. Never
+    /// unwinds — task panics are contained by [`JobCore::run_task`].
     fn drain(&self, slot: usize) {
         let w = self.ranges.len();
         loop {
             while let Some(i) = self.ranges[slot].pop_front() {
                 self.run_task(i);
             }
-            // Own queue empty: steal the back half of the fullest-looking
-            // victim (scan in slot order — determinism is unaffected).
+            // Own queue empty: steal the back half of the first victim
+            // with work (scan in slot order — determinism is unaffected).
             let mut stole = false;
             for v in 0..w {
                 if v == slot {
@@ -188,10 +219,27 @@ impl JobCore {
         }
     }
 
+    /// Execute task `i` (unless the job is already doomed) and retire it.
+    /// Panics are caught here so they can neither kill a pool worker nor
+    /// unwind the caller while the job is live; the first payload is
+    /// kept for the caller to re-throw after the job retires.
     fn run_task(&self, i: usize) {
-        // Safety: `i` was claimed exactly once (CAS pop/steal), so slot
-        // `i` is written once; `ctx` is alive because `remaining > 0`.
-        unsafe { (self.call)(self.ctx, i) };
+        if !self.panicked.load(Ordering::Acquire) {
+            // Safety: `i` was claimed exactly once (CAS pop/steal), so
+            // slot `i` is written once; `ctx` is alive because
+            // `remaining > 0`. AssertUnwindSafe: a panicked task leaves
+            // its own slot untouched and every other slot is written by
+            // exactly one task, so no broken invariant is observable —
+            // the payload is re-thrown before the slots are consumed.
+            let result = catch_unwind(AssertUnwindSafe(|| unsafe { (self.call)(self.ctx, i) }));
+            if let Err(payload) = result {
+                let mut first = self.panic.lock().unwrap_or_else(|e| e.into_inner());
+                if first.is_none() {
+                    *first = Some(payload);
+                }
+                self.panicked.store(true, Ordering::Release);
+            }
+        }
         if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
             let mut done = self.done.lock().unwrap_or_else(|e| e.into_inner());
             *done = true;
@@ -233,19 +281,36 @@ fn pool() -> &'static Pool {
 }
 
 /// Number of pool workers spawned so far over the process lifetime
-/// (monotone; the pool-reuse test pins that consecutive batched calls do
-/// not grow it).
+/// (monotone). Process-global: in a multi-threaded test binary, prefer
+/// [`spawned_by_this_thread`] for assertions — concurrent tests share
+/// this one pool and race a global count.
 pub fn spawned_workers() -> usize {
     pool().state.lock().unwrap_or_else(|e| e.into_inner()).spawned
 }
 
+thread_local! {
+    /// Pool workers spawned by `scoped_map` calls made from this thread
+    /// (spawning happens on the calling thread, so attribution is exact).
+    static SPAWNED_HERE: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Number of pool workers spawned by `scoped_map` calls made from the
+/// *current* thread. The race-free counterpart of [`spawned_workers`]
+/// for tests: sibling tests running concurrently spawn on their own
+/// threads and cannot perturb this count, so "consecutive calls reuse
+/// workers" pins stay exact under a parallel test harness.
+pub fn spawned_by_this_thread() -> usize {
+    SPAWNED_HERE.with(|c| c.get())
+}
+
 /// Body of a pool worker: park until a job with claimable work appears,
 /// join it (bounded by its participant width), drain, repeat. Never
-/// returns.
+/// returns; task panics are contained inside `drain`, so a panicking
+/// closure cannot kill the worker.
 fn worker_loop() {
     let p = pool();
     loop {
-        let job: Arc<JobCore> = {
+        let (job, slot): (Arc<JobCore>, usize) = {
             let mut st = p.state.lock().unwrap_or_else(|e| e.into_inner());
             loop {
                 // A worker may join a job if it has claimable work and a
@@ -254,16 +319,47 @@ fn worker_loop() {
                     j.has_work() && j.joined.load(Ordering::Relaxed) + 1 < j.ranges.len()
                 });
                 if let Some(j) = candidate {
-                    j.joined.fetch_add(1, Ordering::Relaxed);
-                    break j.clone();
+                    // Claim a distinct starting queue (joins are
+                    // serialized by the pool lock, so `old + 1` is in
+                    // range). After leave/join churn two live workers
+                    // can transiently share a slot — that only skews
+                    // which queue they drain first; claims stay
+                    // CAS-protected.
+                    let slot = j.joined.fetch_add(1, Ordering::Relaxed) + 1;
+                    break (j.clone(), slot);
                 }
                 st = p.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
             }
         };
-        // Steal-only participant: its "own" slot is chosen as the first
-        // non-empty queue it finds.
-        job.drain(0);
+        job.drain(slot);
         job.joined.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Caller-side cleanup that must run on *every* exit path of
+/// [`scoped_map`] — normal return or unwind — while the job is
+/// published: participate (drain as slot 0), wait out stragglers still
+/// executing claimed tasks, and retire the job from the injector. Only
+/// after this may the caller's stack frame (which owns the closure and
+/// result slots the job's `ctx` points into) die.
+struct JobGuard<'a> {
+    job: &'a Arc<JobCore>,
+    pool: &'static Pool,
+}
+
+impl Drop for JobGuard<'_> {
+    fn drop(&mut self) {
+        // `drain` never unwinds (task panics are caught in `run_task`),
+        // so this cleanup always completes even when invoked mid-unwind.
+        self.job.drain(0);
+        {
+            let mut done = self.job.done.lock().unwrap_or_else(|e| e.into_inner());
+            while !*done {
+                done = self.job.done_cv.wait(done).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+        let mut st = self.pool.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.jobs.retain(|j| !Arc::ptr_eq(j, self.job));
     }
 }
 
@@ -274,6 +370,11 @@ fn worker_loop() {
 ///
 /// Runs inline when `n <= 1` or the effective width is 1 — sequential
 /// execution is the same computation.
+///
+/// If `f` panics, the panic is contained until every claimed task has
+/// retired and the job has been withdrawn from the pool, then re-thrown
+/// on the calling thread (first payload wins when several tasks panic).
+/// Pool workers survive and keep serving later jobs.
 pub fn scoped_map<T, F>(n: usize, max_workers: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -314,16 +415,27 @@ where
             ranges,
             joined: AtomicUsize::new(0),
             remaining: AtomicUsize::new(n),
+            panicked: AtomicBool::new(false),
+            panic: Mutex::new(None),
             done: Mutex::new(false),
             done_cv: Condvar::new(),
         });
 
-        // Publish the job and make sure enough workers exist to fill its
-        // participant slots, then wake them.
+        // Publish the job, then arm the guard: from this point the job
+        // is visible to workers, and no path — including an unwind from
+        // the spawn loop below — may leave this frame before the guard
+        // has drained, waited, and retired it.
         let p = pool();
         {
             let mut st = p.state.lock().unwrap_or_else(|e| e.into_inner());
             st.jobs.push(job.clone());
+        }
+        let guard = JobGuard { job: &job, pool: p };
+
+        // Make sure enough workers exist to fill the job's participant
+        // slots, then wake them.
+        {
+            let mut st = p.state.lock().unwrap_or_else(|e| e.into_inner());
             while st.spawned + 1 < width {
                 st.spawned += 1;
                 let name = format!("sdegrad-pool-{}", st.spawned);
@@ -331,26 +443,21 @@ where
                     .name(name)
                     .spawn(worker_loop)
                     .expect("spawning pool worker");
+                SPAWNED_HERE.with(|c| c.set(c.get() + 1));
             }
         }
         p.work_cv.notify_all();
 
-        // The caller is participant 0.
-        job.drain(0);
+        // The caller is participant 0: drain, wait for stragglers,
+        // retire the job.
+        drop(guard);
 
-        // Wait for stragglers still executing claimed tasks.
-        {
-            let mut done = job.done.lock().unwrap_or_else(|e| e.into_inner());
-            while !*done {
-                done = job.done_cv.wait(done).unwrap_or_else(|e| e.into_inner());
-            }
+        // `raw` (and the borrow of `slots`) is only now allowed to die:
+        // every task has retired, so no worker will touch `ctx` again.
+        // A contained task panic resumes on this thread, after cleanup.
+        if let Some(payload) = job.panic.lock().unwrap_or_else(|e| e.into_inner()).take() {
+            resume_unwind(payload);
         }
-
-        // Retire the job.
-        let mut st = p.state.lock().unwrap_or_else(|e| e.into_inner());
-        st.jobs.retain(|j| !Arc::ptr_eq(j, &job));
-        // `raw` (and the borrow of `slots`) dies here; every task has
-        // completed, so no worker will touch `ctx` again.
     }
 
     slots.into_iter().map(|s| s.expect("pool covered every index")).collect()
@@ -361,6 +468,9 @@ mod tests {
     use super::*;
 
     /// Serializes tests that mutate the process-wide worker count.
+    /// (Spawn-count assertions don't need it — they use the
+    /// thread-attributed [`spawned_by_this_thread`], which sibling tests
+    /// cannot perturb.)
     static KNOB: Mutex<()> = Mutex::new(());
 
     #[test]
@@ -377,11 +487,11 @@ mod tests {
 
     #[test]
     fn respects_max_workers_inline_path() {
-        // max_workers = 1 must run inline (no pool interaction at all).
-        let before = spawned_workers();
+        // max_workers = 1 must run inline: this thread spawns nothing.
+        let before = spawned_by_this_thread();
         let out = scoped_map(64, 1, |i| i as f64 * 0.5);
         assert_eq!(out.len(), 64);
-        assert_eq!(spawned_workers(), before);
+        assert_eq!(spawned_by_this_thread(), before);
     }
 
     #[test]
@@ -410,11 +520,44 @@ mod tests {
         let _g = KNOB.lock().unwrap_or_else(|e| e.into_inner());
         set_worker_count(4);
         let _ = scoped_map(64, usize::MAX, |i| i + 1);
-        let after_first = spawned_workers();
+        let after_first = spawned_by_this_thread();
         for _ in 0..5 {
             let _ = scoped_map(64, usize::MAX, |i| i + 1);
         }
-        assert_eq!(spawned_workers(), after_first, "pool must not grow across calls");
+        assert_eq!(
+            spawned_by_this_thread(),
+            after_first,
+            "pool must not grow across calls"
+        );
+        set_worker_count(0);
+    }
+
+    /// A panicking task must propagate to the caller (not hang it) and
+    /// must not kill pool workers: the pool keeps serving afterwards.
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let _g = KNOB.lock().unwrap_or_else(|e| e.into_inner());
+        set_worker_count(4);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            scoped_map(64, usize::MAX, |i| {
+                if i == 17 {
+                    panic!("task 17 failed");
+                }
+                i
+            })
+        }));
+        let payload = caught.expect_err("task panic must reach the caller");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .map(str::to_owned)
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("task 17 failed"), "wrong payload: {msg:?}");
+        // Workers contained the panic and live on: the pool still works
+        // and produces correct results.
+        let out = scoped_map(64, usize::MAX, |i| i + 1);
+        assert_eq!(out, (1..=64).collect::<Vec<_>>());
         set_worker_count(0);
     }
 

@@ -15,7 +15,10 @@
 //! * the minibatch ELBO engine gives identical results on the pool for
 //!   every worker count;
 //! * consecutive batched calls **reuse** pool workers instead of
-//!   spawning new threads.
+//!   spawning new threads (asserted via the thread-attributed spawn
+//!   counter, so concurrent tests sharing the pool cannot race it);
+//! * a panicking task closure propagates to the caller — no hang, no
+//!   dead workers — and the pool keeps serving.
 //!
 //! Tests that mutate the process-wide worker count serialize on `KNOB`
 //! (integration tests share one process, hence one pool). Tests that
@@ -31,7 +34,7 @@ use sdegrad::api::{
 };
 use sdegrad::latent::{elbo_step_batch, ElboConfig, LatentSdeConfig, LatentSdeModel};
 use sdegrad::prng::PrngKey;
-use sdegrad::runtime::{scoped_map, set_worker_count, spawned_workers, worker_count};
+use sdegrad::runtime::{scoped_map, set_worker_count, spawned_by_this_thread, worker_count};
 use sdegrad::sde::problems::{sample_experiment_setup, Example1};
 use sdegrad::sde::ReplicatedSde;
 use sdegrad::solvers::Method;
@@ -263,17 +266,41 @@ fn consecutive_batched_calls_reuse_pool_workers() {
     assert_eq!(worker_count(), 4);
     // Warmup to full width: the solve fans out only ceil(40/32) = 2
     // chunks, so a wide raw fan-out is what brings the pool to 4.
+    // Spawn counts are thread-attributed (`spawned_by_this_thread`), so
+    // sibling tests sharing the process-wide pool cannot race them.
     let _ = solve_batch(&replicates, &opts);
     let _ = scoped_map(32, usize::MAX, |i| i + 1);
-    let after_warmup = spawned_workers();
+    let after_warmup = spawned_by_this_thread();
     for _ in 0..3 {
         let _ = solve_batch(&replicates, &opts);
         let _ = scoped_map(32, usize::MAX, |i| i * 2);
     }
     assert_eq!(
-        spawned_workers(),
+        spawned_by_this_thread(),
         after_warmup,
         "pool spawned new workers on consecutive calls"
     );
+    set_worker_count(0);
+}
+
+/// A panicking task closure must neither hang the caller (the
+/// completion latch still drops) nor kill pool workers: the panic
+/// resumes on the calling thread after the job retires, and the same
+/// pool keeps producing bit-correct results afterwards.
+#[test]
+fn task_panic_propagates_and_pool_keeps_serving() {
+    let _g = KNOB.lock().unwrap_or_else(|e| e.into_inner());
+    set_worker_count(4);
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        scoped_map(48, usize::MAX, |i| {
+            if i == 13 {
+                panic!("injected task failure");
+            }
+            i * 3
+        })
+    }));
+    assert!(caught.is_err(), "task panic must propagate to the caller");
+    let out = scoped_map(48, usize::MAX, |i| i * 3);
+    assert_eq!(out, (0..48).map(|i| i * 3).collect::<Vec<_>>());
     set_worker_count(0);
 }
