@@ -27,6 +27,7 @@
 
 use super::stochastic::Noise;
 use crate::brownian::{BatchBrownian, BrownianMotion};
+use crate::runtime::ExecConfig;
 use crate::sde::{BatchSdeVjp, KernelTier};
 use crate::solvers::{batch_grid_core, uniform_grid, BatchForwardFunc, Method, SolveStats};
 
@@ -95,14 +96,12 @@ pub struct BatchAdjointOps<'a, S: BatchSdeVjp + ?Sized> {
 }
 
 impl<'a, S: BatchSdeVjp + ?Sized> BatchAdjointOps<'a, S> {
-    pub fn new(sde: &'a S, theta: &[f64], batch: usize) -> Self {
-        Self::new_tier(sde, theta, batch, KernelTier::Exact)
-    }
-
-    /// Like [`Self::new`] with an explicit kernel tier: the fast tier
-    /// routes the coefficient evaluations and VJP sweeps through the
-    /// `*_fast` kernels of [`BatchSdeVjp`].
-    pub fn new_tier(sde: &'a S, theta: &[f64], batch: usize, tier: KernelTier) -> Self {
+    /// `exec.tier == Fast` routes the coefficient evaluations and VJP
+    /// sweeps through the `*_fast` kernels of [`BatchSdeVjp`]; the other
+    /// [`ExecConfig`] knobs do not apply at this level (threads and tree
+    /// caching belong to the callers).
+    pub fn new(sde: &'a S, theta: &[f64], batch: usize, exec: ExecConfig) -> Self {
+        let tier = exec.tier;
         let d = sde.state_dim();
         let p = sde.param_dim();
         assert_eq!(theta.len(), p, "BatchAdjointOps: theta length mismatch");
@@ -122,6 +121,17 @@ impl<'a, S: BatchSdeVjp + ?Sized> BatchAdjointOps<'a, S> {
             nfe_drift: 0,
             nfe_diffusion: 0,
         }
+    }
+
+    /// Deprecated spelling of [`BatchAdjointOps::new`] from before
+    /// [`ExecConfig`] unified the execution knobs; bit-identical to the
+    /// base constructor (pinned in `tests/exec_config.rs`).
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `BatchAdjointOps::new(sde, theta, batch, ExecConfig::new().tier(tier))`"
+    )]
+    pub fn new_tier(sde: &'a S, theta: &[f64], batch: usize, tier: KernelTier) -> Self {
+        Self::new(sde, theta, batch, ExecConfig::new().tier(tier))
     }
 
     /// Drift-side evaluation at `(t, z, a)` for all paths (see the scalar
@@ -488,7 +498,7 @@ pub(crate) fn batch_adjoint_sum_core<S: BatchSdeVjp + ?Sized>(
     }
 
     // Backward pass over the reversed grid.
-    let mut ops = BatchAdjointOps::new_tier(sde, theta, batch, tier);
+    let mut ops = BatchAdjointOps::new(sde, theta, batch, ExecConfig::new().tier(tier));
     let mut sc = BatchBackwardScratch::new(d, p, batch);
     let rgrid: Vec<f64> = grid.iter().rev().copied().collect();
     let mut backward_stats = SolveStats::default();

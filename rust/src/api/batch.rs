@@ -38,13 +38,14 @@
 
 use super::problem::{ProblemError, SdeProblem};
 use super::sensitivity::{validate_alg, GradStats, Gradients, SensAlg};
-use super::solve::{par_map, NoiseHandle, SaveAt, SdeSolution, SolveOptions, StepControl};
+use super::solve::{par_map, par_map_with, NoiseHandle, SaveAt, SdeSolution, SolveOptions, StepControl};
 use crate::adjoint::batch::batch_adjoint_sum_core;
 use crate::adjoint::checkpoint::batch_checkpoint_backprop_core;
 use crate::adjoint::stochastic::Noise;
 use crate::adjoint::{AdjointConfig, Checkpointing};
 use crate::brownian::{BatchBrownian, BrownianMotion};
 use crate::runtime::arena::lease;
+use crate::runtime::ExecConfig;
 use crate::sde::{BatchSde, BatchSdeVjp, KernelTier};
 use crate::solvers::{
     batch_grid_core, batch_grid_saving_core, uniform_grid, BatchForwardFunc, Method,
@@ -112,7 +113,7 @@ where
         return solve_batch_per_path(problems, opts);
     }
     let ranges = chunks(problems.len());
-    par_map(ranges.len(), |c| {
+    par_map_with(ranges.len(), opts.exec.threads, |c| {
         let (lo, hi) = ranges[c];
         solve_chunk(&problems[lo..hi], opts)
     })
@@ -157,7 +158,7 @@ pub fn solve_batch_per_path<'a, S>(
 where
     S: BatchSde + Sync + ?Sized,
 {
-    par_map(problems.len(), |i| problems[i].solve(opts))
+    par_map_with(problems.len(), opts.exec.threads, |i| problems[i].solve(opts))
 }
 
 /// One chunk through the batched forward kernel.
@@ -179,7 +180,8 @@ fn solve_chunk<S: BatchSde + ?Sized>(
         row.copy_from_slice(&p.z0);
     }
     let mut bm = noise_fleet(problems, d);
-    let mut sys = BatchForwardFunc::for_method_tier(p0.sde, &p0.theta, bsz, opts.method, opts.tier);
+    let mut sys =
+        BatchForwardFunc::for_method_tier(p0.sde, &p0.theta, bsz, opts.method, opts.exec.tier);
 
     match opts.save {
         SaveAt::Final => {
@@ -241,35 +243,28 @@ enum BatchedGradAlg {
 /// fall back to the per-path engine. Results are in input order and
 /// bit-identical to per-problem [`SdeProblem::sensitivity_sum`] calls
 /// regardless of thread count.
-pub fn sensitivity_batch<'a, S>(
-    problems: &[SdeProblem<'a, S>],
-    alg: &SensAlg,
-    step: StepControl,
-) -> Vec<Result<Gradients, ProblemError>>
-where
-    S: BatchSdeVjp + Sync + ?Sized,
-{
-    sensitivity_batch_tier(problems, alg, step, KernelTier::Exact)
-}
-
-/// [`sensitivity_batch`] with an explicit kernel tier for the batched
-/// stochastic adjoint. [`KernelTier::Fast`] routes the forward solve and
-/// the augmented backward sweep through the fused/fast VJP kernels
-/// (validated to tolerance in `tests/fast_tier.rs`).
+///
+/// `exec` selects the execution configuration. `exec.tier ==`
+/// [`KernelTier::Fast`] routes the forward solve and the augmented
+/// backward sweep of the stochastic adjoint through the fused/fast VJP
+/// kernels (validated to tolerance in `tests/fast_tier.rs`);
 /// [`SensAlg::Backprop`] always runs the exact tier — the checkpointed
 /// tape is pinned bit-identical to full-tape backprop and serves as a
 /// bit-exactness oracle, so it does not relax float order. The per-path
 /// fallback estimators likewise ignore the tier (the fast tier is a
-/// property of batched sweeps).
-pub fn sensitivity_batch_tier<'a, S>(
+/// property of batched sweeps). `exec.threads` caps the chunk fan-out;
+/// each problem's own `tree_cache` field stays authoritative for its
+/// noise source (it is per-problem state, not call-level config).
+pub fn sensitivity_batch<'a, S>(
     problems: &[SdeProblem<'a, S>],
     alg: &SensAlg,
     step: StepControl,
-    tier: KernelTier,
+    exec: ExecConfig,
 ) -> Vec<Result<Gradients, ProblemError>>
 where
     S: BatchSdeVjp + Sync + ?Sized,
 {
+    let tier = exec.tier;
     if problems.is_empty() {
         return Vec::new();
     }
@@ -295,7 +290,7 @@ where
     };
 
     let ranges = chunks(problems.len());
-    par_map(ranges.len(), |c| {
+    par_map_with(ranges.len(), exec.threads, |c| {
         let (lo, hi) = ranges[c];
         match batched {
             BatchedGradAlg::Adjoint(cfg) => {
@@ -310,6 +305,25 @@ where
     .flatten()
     .map(Ok)
     .collect()
+}
+
+/// Deprecated spelling of [`sensitivity_batch`] from before
+/// [`ExecConfig`] unified the execution knobs; bit-identical to the base
+/// entry point (pinned in `tests/exec_config.rs`).
+#[deprecated(
+    since = "0.2.0",
+    note = "use `sensitivity_batch(problems, alg, step, ExecConfig::new().tier(tier))`"
+)]
+pub fn sensitivity_batch_tier<'a, S>(
+    problems: &[SdeProblem<'a, S>],
+    alg: &SensAlg,
+    step: StepControl,
+    tier: KernelTier,
+) -> Vec<Result<Gradients, ProblemError>>
+where
+    S: BatchSdeVjp + Sync + ?Sized,
+{
+    sensitivity_batch(problems, alg, step, ExecConfig::new().tier(tier))
 }
 
 /// The pre-0.3 thread-per-path gradient engine (scalar adjoint per

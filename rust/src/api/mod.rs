@@ -78,9 +78,11 @@ pub mod sensitivity;
 pub mod solve;
 
 pub use batch::{
-    sensitivity_batch, sensitivity_batch_per_path, sensitivity_batch_tier, solve_batch,
-    solve_batch_local, solve_batch_per_path,
+    sensitivity_batch, sensitivity_batch_per_path, solve_batch, solve_batch_local,
+    solve_batch_per_path,
 };
+#[allow(deprecated)]
+pub use batch::sensitivity_batch_tier;
 pub use crate::adjoint::Checkpointing;
 pub use crate::sde::KernelTier;
 pub use problem::{NoiseSpec, ProblemError, SdeProblem};

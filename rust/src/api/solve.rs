@@ -4,6 +4,7 @@
 use super::problem::SdeProblem;
 use crate::adjoint::stochastic::Noise;
 use crate::brownian::BrownianMotion;
+use crate::runtime::ExecConfig;
 use crate::sde::{ForwardFunc, KernelTier, Sde};
 use crate::solvers::{
     adaptive_core, grid_core, grid_saving_core, uniform_grid, AdaptiveConfig, Method, SolveStats,
@@ -60,14 +61,17 @@ pub struct SolveOptions<'t> {
     pub method: Method,
     pub step: StepControl,
     pub save: SaveAt<'t>,
-    /// Kernel tier for **batched** execution ([`super::solve_batch`] and
-    /// friends). [`KernelTier::Exact`] (the default) keeps the
-    /// bit-identical-to-scalar guarantee; [`KernelTier::Fast`] routes the
-    /// batch through autovectorization-friendly fused kernels validated
-    /// to tolerance. Scalar (per-path) solves always run the exact
-    /// engine — the tier is a property of the batched sweep, so the
-    /// scalar fallback paths ignore it.
-    pub tier: KernelTier,
+    /// Execution configuration ([`crate::runtime::ExecConfig`]). The
+    /// `exec.tier` knob selects the kernel tier for **batched** execution
+    /// ([`super::solve_batch`] and friends): [`KernelTier::Exact`] (the
+    /// default) keeps the bit-identical-to-scalar guarantee;
+    /// [`KernelTier::Fast`] routes the batch through
+    /// autovectorization-friendly fused kernels validated to tolerance.
+    /// Scalar (per-path) solves always run the exact engine — the tier is
+    /// a property of the batched sweep, so the scalar fallback paths
+    /// ignore it. `exec.threads` pins the worker count for the batched
+    /// sweep (`None` defers to the global chain).
+    pub exec: ExecConfig,
 }
 
 impl Default for SolveOptions<'static> {
@@ -76,7 +80,7 @@ impl Default for SolveOptions<'static> {
             method: Method::MilsteinIto,
             step: StepControl::Steps(100),
             save: SaveAt::Final,
-            tier: KernelTier::Exact,
+            exec: ExecConfig::default(),
         }
     }
 }
@@ -88,7 +92,7 @@ impl SolveOptions<'static> {
             method,
             step: StepControl::Steps(n_steps),
             save: SaveAt::Final,
-            tier: KernelTier::Exact,
+            exec: ExecConfig::default(),
         }
     }
 
@@ -98,7 +102,7 @@ impl SolveOptions<'static> {
             method,
             step: StepControl::Adaptive(cfg),
             save: SaveAt::Final,
-            tier: KernelTier::Exact,
+            exec: ExecConfig::default(),
         }
     }
 }
@@ -107,12 +111,19 @@ impl<'t> SolveOptions<'t> {
     /// Replace the save specification (changes the lifetime parameter, so
     /// it rebuilds rather than mutates).
     pub fn save<'u>(self, save: SaveAt<'u>) -> SolveOptions<'u> {
-        SolveOptions { method: self.method, step: self.step, save, tier: self.tier }
+        SolveOptions { method: self.method, step: self.step, save, exec: self.exec }
     }
 
-    /// Select the kernel tier for batched execution.
+    /// Select the kernel tier for batched execution (shorthand for
+    /// setting `exec.tier`).
     pub fn tier(mut self, tier: KernelTier) -> Self {
-        self.tier = tier;
+        self.exec.tier = tier;
+        self
+    }
+
+    /// Replace the whole execution configuration.
+    pub fn exec(mut self, exec: ExecConfig) -> Self {
+        self.exec = exec;
         self
     }
 }
@@ -391,4 +402,15 @@ where
     F: Fn(usize) -> T + Sync,
 {
     crate::runtime::scoped_map(n, usize::MAX, f)
+}
+
+/// [`par_map`] with an optional per-call worker cap
+/// ([`ExecConfig::threads`]); `None` uses the full pool. The cap only
+/// changes scheduling, never a float — results stay bit-identical.
+pub(crate) fn par_map_with<T, F>(n: usize, threads: Option<usize>, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    crate::runtime::scoped_map(n, threads.map_or(usize::MAX, |t| t.max(1)), f)
 }

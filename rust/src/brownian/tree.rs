@@ -58,7 +58,7 @@ struct CachedNode {
 }
 
 /// O(1)-memory virtual Brownian tree over `[t0, t1]`.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct VirtualBrownianTree {
     dim: usize,
     t0: f64,
@@ -79,6 +79,43 @@ pub struct VirtualBrownianTree {
     live: usize,
     // Instrumentation: bridge draws performed (≙ tree levels visited).
     bridge_calls: u64,
+    // Draws already booked to the process-wide total
+    // ([`crate::metrics::counters`]) — the drop glue flushes
+    // `bridge_calls - flushed` so every draw is counted exactly once.
+    flushed: u64,
+}
+
+/// Clone keeps the lifetime `bridge_calls` reading but marks those draws
+/// as already flushed: the original flushes them on ITS drop, and a
+/// derived clone would book the pre-clone draws once per copy.
+impl Clone for VirtualBrownianTree {
+    fn clone(&self) -> Self {
+        VirtualBrownianTree {
+            dim: self.dim,
+            t0: self.t0,
+            t1: self.t1,
+            tol: self.tol,
+            key: self.key,
+            w1: self.w1.clone(),
+            ws: self.ws.clone(),
+            we: self.we.clone(),
+            wmid: self.wmid.clone(),
+            cache_capacity: self.cache_capacity,
+            nodes: self.nodes.clone(),
+            live: self.live,
+            bridge_calls: self.bridge_calls,
+            flushed: self.bridge_calls,
+        }
+    }
+}
+
+/// Flush this tree's unflushed bridge draws into the process-wide
+/// monotone counter that `GET /metrics` reports.
+impl Drop for VirtualBrownianTree {
+    fn drop(&mut self) {
+        crate::metrics::counters::add_bridge_calls(self.bridge_calls - self.flushed);
+        self.flushed = self.bridge_calls;
+    }
 }
 
 impl VirtualBrownianTree {
@@ -126,6 +163,7 @@ impl VirtualBrownianTree {
             nodes: Vec::new(),
             live: 0,
             bridge_calls: 0,
+            flushed: 0,
         }
     }
 

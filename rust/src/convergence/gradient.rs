@@ -24,6 +24,7 @@ use crate::api::solve::par_map;
 use crate::api::{sensitivity_batch, NoiseSpec, ProblemError, SdeProblem, SensAlg, StepControl};
 use crate::brownian::{BrownianMotion, BrownianPath, VirtualBrownianTree};
 use crate::prng::PrngKey;
+use crate::runtime::ExecConfig;
 use crate::sde::{BatchSdeVjp, ExactSolution, SdeVjp};
 use crate::solvers::uniform_grid;
 
@@ -185,7 +186,8 @@ where
     let mut rungs = Vec::with_capacity(ladder.rungs);
     let mut per_path: Vec<Vec<f64>> = Vec::with_capacity(ladder.rungs);
     for (r, &steps) in ladder.step_counts().iter().enumerate() {
-        let grads = sensitivity_batch(&probs, alg, StepControl::Steps(steps));
+        let grads =
+            sensitivity_batch(&probs, alg, StepControl::Steps(steps), ExecConfig::default());
         let mut errs = Vec::with_capacity(n_paths);
         for (i, g) in grads.into_iter().enumerate() {
             let g = g?;

@@ -56,23 +56,29 @@
 //! identically.
 //!
 //! `sdegrad bench serve` ([`run_serve_bench`]) is the serving load
-//! harness: an in-process `sdegrad serve` instance under concurrent
-//! clients → req/sec + p50/p99 latency → `BENCH_serve.json` (bench tag
-//! "serve"; `req_per_sec` rows are gated like the engine throughput
-//! rows). The committed baseline merges both harnesses' rows with
-//! per-record `"bench"` tags; each CI job gates its own subset via
-//! `bench compare --subset throughput|serve`.
+//! harness: an in-process `sdegrad serve` instance under closed-loop
+//! concurrent clients (req/sec + p50/p99 per endpoint) followed by an
+//! **open-loop traffic simulator** — heavy-tail request sizes, bursty
+//! exponential arrivals, and a deliberate overload episode against a
+//! tiny admission budget — emitting `serve_p99_ms` and `shed_rate`
+//! rows. All land in `BENCH_serve.json` (bench tag "serve");
+//! `req_per_sec` rows are gated like the engine throughput rows, and
+//! the open-loop p99/shed-rate rows are gated **lower-is-better** (an
+//! increase past the threshold fails). The committed baseline merges
+//! both harnesses' rows with per-record `"bench"` tags; each CI job
+//! gates its own subset via `bench compare --subset throughput|serve`.
 
 use crate::adjoint::AdjointConfig;
 use crate::api::{
-    sensitivity_batch, sensitivity_batch_per_path, sensitivity_batch_tier, solve_batch,
-    solve_batch_local, solve_batch_per_path, Checkpointing, NoiseSpec, SdeProblem, SensAlg,
-    SolveOptions, StepControl,
+    sensitivity_batch, sensitivity_batch_per_path, solve_batch, solve_batch_local,
+    solve_batch_per_path, Checkpointing, NoiseSpec, SdeProblem, SensAlg, SolveOptions,
+    StepControl,
 };
 use crate::latent::{LatentSdeConfig, LatentSdeModel, PosteriorSde};
 use crate::metrics::json::{json_num, json_number_field, json_str, json_string_field};
 use crate::metrics::Stopwatch;
 use crate::prng::PrngKey;
+use crate::runtime::ExecConfig;
 use crate::sde::problems::{sample_experiment_setup, Example1};
 use crate::sde::{BatchSdeVjp, KernelTier, ReplicatedSde};
 use crate::solvers::Method;
@@ -166,14 +172,17 @@ fn run_problem<S>(
             ..Default::default()
         });
         let step = StepControl::Steps(n_steps);
-        let g_batched = sensitivity_batch(&replicates, &alg, step);
+        let g_batched = sensitivity_batch(&replicates, &alg, step, ExecConfig::default());
         let g_per_path = sensitivity_batch_per_path(&replicates, &alg, step);
         for (a, b) in g_batched.iter().zip(&g_per_path) {
             let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
             assert_eq!(a.dtheta, b.dtheta, "gradient engines diverged on {name}");
         }
         let t_batched = time_best_of(reps, || {
-            sensitivity_batch(&replicates, &alg, step)[0].as_ref().unwrap().dtheta[0]
+            sensitivity_batch(&replicates, &alg, step, ExecConfig::default())[0]
+                .as_ref()
+                .unwrap()
+                .dtheta[0]
         });
         let t_scalar = time_best_of(reps, || {
             sensitivity_batch_per_path(&replicates, &alg, step)[0].as_ref().unwrap().dtheta[0]
@@ -246,14 +255,16 @@ pub fn run_throughput(quick: bool) -> Vec<ThroughputRow> {
             ..Default::default()
         });
         let step = StepControl::Steps(n_steps);
-        let g_exact = sensitivity_batch(&replicates, &alg, step);
-        let g_fast = sensitivity_batch_tier(&replicates, &alg, step, KernelTier::Fast);
+        let g_exact = sensitivity_batch(&replicates, &alg, step, ExecConfig::default());
+        let g_fast =
+            sensitivity_batch(&replicates, &alg, step, ExecConfig::new().tier(KernelTier::Fast));
         for (a, b) in g_exact.iter().zip(&g_fast) {
             let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
             assert_close_rel(&a.dtheta, &b.dtheta, FAST_RTOL, "gbm_d10_fast gradient");
         }
         let t_gfast = time_best_of(reps, || {
-            sensitivity_batch_tier(&replicates, &alg, step, KernelTier::Fast)[0]
+            sensitivity_batch(&replicates, &alg, step, ExecConfig::new().tier(KernelTier::Fast))
+                [0]
                 .as_ref()
                 .unwrap()
                 .dtheta[0]
@@ -283,9 +294,13 @@ pub fn run_throughput(quick: bool) -> Vec<ThroughputRow> {
             method: Method::MilsteinIto,
             checkpointing: Checkpointing::Sqrt,
         };
-        let g_ckpt = sensitivity_batch(&replicates, &ckpt, step);
-        let g_tape =
-            sensitivity_batch(&replicates, &SensAlg::backprop(Method::MilsteinIto), step);
+        let g_ckpt = sensitivity_batch(&replicates, &ckpt, step, ExecConfig::default());
+        let g_tape = sensitivity_batch(
+            &replicates,
+            &SensAlg::backprop(Method::MilsteinIto),
+            step,
+            ExecConfig::default(),
+        );
         for (a, b) in g_ckpt.iter().zip(&g_tape) {
             let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
             assert_eq!(a.dtheta, b.dtheta, "checkpointed backprop diverged from the tape");
@@ -296,7 +311,10 @@ pub fn run_throughput(quick: bool) -> Vec<ThroughputRow> {
             assert_eq!(a.dtheta, b.dtheta, "gradient engines diverged on gbm_d10_ckpt");
         }
         let t_batched = time_best_of(reps, || {
-            sensitivity_batch(&replicates, &ckpt, step)[0].as_ref().unwrap().dtheta[0]
+            sensitivity_batch(&replicates, &ckpt, step, ExecConfig::default())[0]
+                .as_ref()
+                .unwrap()
+                .dtheta[0]
         });
         let t_scalar = time_best_of(reps, || {
             sensitivity_batch_per_path(&replicates, &ckpt, step)[0].as_ref().unwrap().dtheta[0]
@@ -381,14 +399,17 @@ pub fn run_throughput(quick: bool) -> Vec<ThroughputRow> {
             ..Default::default()
         });
         let step = StepControl::Steps(n_steps_dyadic);
-        let g_cached = sensitivity_batch(&replicates, &alg, step);
-        let g_uncached = sensitivity_batch(&uncached, &alg, step);
+        let g_cached = sensitivity_batch(&replicates, &alg, step, ExecConfig::default());
+        let g_uncached = sensitivity_batch(&uncached, &alg, step, ExecConfig::default());
         for (a, b) in g_cached.iter().zip(&g_uncached) {
             let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
             assert_eq!(a.dtheta, b.dtheta, "node cache changed a gbm_d10_cached gradient");
         }
         let t_gcached = time_best_of(reps, || {
-            sensitivity_batch(&replicates, &alg, step)[0].as_ref().unwrap().dtheta[0]
+            sensitivity_batch(&replicates, &alg, step, ExecConfig::default())[0]
+                .as_ref()
+                .unwrap()
+                .dtheta[0]
         });
         rows.push(ThroughputRow {
             problem: "gbm_d10_cached",
@@ -610,26 +631,34 @@ fn write_json(
 // `sdegrad bench serve` — the in-process serving load harness.
 // ---------------------------------------------------------------------
 
-/// In-process load harness for `sdegrad serve`: starts a server on an
-/// ephemeral port over a synthetic (untrained — serving does not care)
-/// latent-SDE model, fires N concurrent client threads of simulate and
-/// ELBO-scoring requests, and reports **req/sec** plus p50/p99 latency
-/// per endpoint. Before timing, one response per endpoint is asserted
-/// byte-identical to the per-request scalar engine call (the serving
-/// determinism contract), so the numbers measure a *correct* server.
+/// In-process load harness for `sdegrad serve`, in two phases:
+///
+/// **Closed loop** — starts a server on an ephemeral port over a
+/// synthetic (untrained — serving does not care) latent-SDE model,
+/// fires N concurrent client threads of simulate and ELBO-scoring
+/// requests, and reports **req/sec** plus p50/p99 latency per endpoint.
+/// Before timing, one response per endpoint is asserted byte-identical
+/// to the per-request scalar engine call (the serving determinism
+/// contract), so the numbers measure a *correct* server.
+///
+/// **Open loop** ([`open_loop_serve_phase`]) — a traffic simulator with
+/// deterministic exponential inter-arrivals, heavy-tail request sizes,
+/// and a deliberate burst overload episode against a small admission
+/// budget. Every 200 is asserted byte-identical to the scalar oracle,
+/// every 429 well-formed (`Retry-After` + `overloaded` body), zero
+/// connection resets tolerated. Emits gated `serve_p99_ms` and
+/// `shed_rate` rows (lower is better — `bench compare` gates them
+/// direction-aware) plus observed p50/offered-rate rows.
 ///
 /// Results land in `BENCH_serve.json` in the shared BENCH format:
-/// `req_per_sec` rows are gated by `sdegrad bench compare` (engine
-/// "batched"), latency rows ride along ungated (engine "observed",
-/// values in microseconds).
-pub fn run_serve_bench(quick: bool) -> Vec<ThroughputRow> {
-    run_serve_bench_tier(quick, KernelTier::Exact)
-}
-
-/// [`run_serve_bench`] with an explicit kernel tier (`sdegrad bench
-/// serve --tier fast`). The scalar oracle scores under the same tier,
-/// so the byte-identity gate holds on both tiers.
-pub fn run_serve_bench_tier(quick: bool, tier: KernelTier) -> Vec<ThroughputRow> {
+/// `req_per_sec` / `serve_p99_ms` / `shed_rate` rows are gated by
+/// `sdegrad bench compare` (engine "batched"), the rest ride along
+/// ungated (engine "observed").
+///
+/// `exec` carries the kernel tier (`sdegrad bench serve --tier fast`);
+/// the scalar oracle scores under the same tier, so the byte-identity
+/// gate holds on both tiers.
+pub fn run_serve_bench(quick: bool, exec: ExecConfig) -> Vec<ThroughputRow> {
     use crate::latent::{LatentSdeConfig, LatentSdeModel};
     use crate::serve::batcher::scalar_response;
     use crate::serve::client::post as http_post;
@@ -637,7 +666,7 @@ pub fn run_serve_bench_tier(quick: bool, tier: KernelTier) -> Vec<ThroughputRow>
     use std::time::Instant;
 
     super::repro::headline("Serving: dynamic micro-batching load harness");
-    println!("kernel tier: {}", tier.name());
+    println!("kernel tier: {}", exec.tier.name());
     let (n_clients, reqs_per_client) = if quick { (4, 20) } else { (8, 100) };
 
     let cfg = LatentSdeConfig {
@@ -684,7 +713,7 @@ pub fn run_serve_bench_tier(quick: bool, tier: KernelTier) -> Vec<ThroughputRow>
             max_batch: 16,
             max_wait_us: 200,
             cache_capacity: 0,
-            tier,
+            exec,
             ..Default::default()
         },
     )
@@ -705,7 +734,7 @@ pub fn run_serve_bench_tier(quick: bool, tier: KernelTier) -> Vec<ThroughputRow>
             let (status, served) = http_post(addr, path, &body).expect("bench request failed");
             assert_eq!(status, 200, "bench {path} request failed: {served:?}");
             let req = protocol::parse_request(path, &body).unwrap();
-            let expected = scalar_response(entry, &req, tier).unwrap();
+            let expected = scalar_response(entry, &req, exec.tier).unwrap();
             assert_eq!(served, expected, "served {path} diverged from the scalar oracle");
         }
     }
@@ -774,9 +803,279 @@ pub fn run_serve_bench_tier(quick: bool, tier: KernelTier) -> Vec<ThroughputRow>
     }
     server.shutdown();
 
+    rows.extend(open_loop_serve_phase(quick, exec));
+
     write_json("BENCH_serve.json", "serve", quick, &rows).expect("writing BENCH_serve.json");
     println!("(JSON: BENCH_serve.json)");
     rows
+}
+
+/// [`run_serve_bench`] with an explicit kernel tier — superseded by the
+/// [`ExecConfig`] parameter on the base name.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `run_serve_bench(quick, ExecConfig::new().tier(tier))`"
+)]
+pub fn run_serve_bench_tier(quick: bool, tier: KernelTier) -> Vec<ThroughputRow> {
+    run_serve_bench(quick, ExecConfig::new().tier(tier))
+}
+
+/// One scheduled open-loop request: fire time (µs from phase start),
+/// endpoint, JSON body.
+struct OpenLoopArrival {
+    at_us: u64,
+    path: &'static str,
+    body: String,
+}
+
+/// Build a deterministic heavy-tail traffic trace: request `i`'s shape
+/// comes from `PrngKey::fold_in(i)`, so the trace is identical on every
+/// run/machine. Lengths are Pareto(α≈1.1) with min 8 / cap 96 obs
+/// points; ~25% of requests are ELBO scores (2 samples), the rest
+/// simulates; arrivals are exponential with `mean_gap_us` (0 = a
+/// simultaneous burst).
+fn open_loop_trace(
+    key: PrngKey,
+    n: usize,
+    first_seed: u64,
+    mean_gap_us: f64,
+) -> Vec<OpenLoopArrival> {
+    let mut clock_us = 0.0f64;
+    (0..n)
+        .map(|i| {
+            let k = key.fold_in(i as u64);
+            if mean_gap_us > 0.0 {
+                clock_us += -mean_gap_us * (1.0 - k.uniform(0)).ln();
+            }
+            let n_times =
+                ((8.0 * (1.0 - k.uniform(1)).powf(-1.0 / 1.1)) as usize).clamp(8, 96);
+            let times_json = format!(
+                "[{}]",
+                (0..n_times)
+                    .map(|j| format!("{}", 0.05 * j as f64))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            );
+            let seed = first_seed + i as u64;
+            if k.uniform(2) < 0.25 {
+                let mut obs = vec![0.0; n_times];
+                k.fill_normal(3, &mut obs);
+                let obs_json = format!(
+                    "[{}]",
+                    obs.iter().map(|x| format!("[{x}]")).collect::<Vec<_>>().join(",")
+                );
+                OpenLoopArrival {
+                    at_us: clock_us as u64,
+                    path: "/v1/elbo",
+                    body: format!(
+                        "{{\"seed\": {seed}, \"times\": {times_json}, \"obs\": {obs_json}, \
+                         \"substeps\": 2, \"samples\": 2, \"kl_weight\": 0.5}}"
+                    ),
+                }
+            } else {
+                OpenLoopArrival {
+                    at_us: clock_us as u64,
+                    path: "/v1/simulate",
+                    body: format!(
+                        "{{\"seed\": {seed}, \"times\": {times_json}, \"substeps\": 2}}"
+                    ),
+                }
+            }
+        })
+        .collect()
+}
+
+/// Fire a trace open-loop (requests launch at their scheduled times,
+/// regardless of completions) and return per-request
+/// `(index, status, headers, decoded body, latency_ms)`. Any transport
+/// error — a connection reset most importantly — panics the bench: the
+/// overload contract is "oracle bytes or a well-formed 429", never a
+/// broken socket.
+fn fire_open_loop(
+    addr: std::net::SocketAddr,
+    arrivals: &[OpenLoopArrival],
+) -> Vec<(usize, u16, String, Vec<u8>, f64)> {
+    use crate::serve::client::request_with_headers;
+    use std::time::{Duration, Instant};
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = arrivals
+            .iter()
+            .enumerate()
+            .map(|(i, a)| {
+                let target = t0 + Duration::from_micros(a.at_us);
+                let now = Instant::now();
+                if target > now {
+                    std::thread::sleep(target - now);
+                }
+                scope.spawn(move || {
+                    let t = Instant::now();
+                    let (status, head, body) =
+                        request_with_headers(addr, "POST", a.path, &a.body)
+                            .expect("open-loop connection failed (reset?)");
+                    (i, status, head, body, t.elapsed().as_secs_f64() * 1e3)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("open-loop client panicked")).collect()
+    })
+}
+
+/// The open-loop phase of [`run_serve_bench`]: steady exponential
+/// traffic, then a deliberate burst overload episode against a tiny
+/// admission budget. Asserts the full overload contract on every
+/// response and emits the gated `serve_p99_ms` / `shed_rate` rows.
+fn open_loop_serve_phase(quick: bool, exec: ExecConfig) -> Vec<ThroughputRow> {
+    use crate::latent::{LatentSdeConfig, LatentSdeModel};
+    use crate::serve::batcher::scalar_response;
+    use crate::serve::{protocol, ModelRegistry, ServeConfig, Server};
+    use std::time::Instant;
+
+    super::repro::headline("Serving: open-loop traffic simulator");
+    let (n_steady, n_burst, mean_gap_us) =
+        if quick { (60, 30, 1500.0) } else { (300, 120, 800.0) };
+
+    let cfg = LatentSdeConfig {
+        obs_dim: 1,
+        latent_dim: 4,
+        context_dim: 1,
+        hidden: 32,
+        diff_hidden: 8,
+        enc_hidden: 32,
+        obs_noise_std: 0.05,
+        ..Default::default()
+    };
+    let build_registry = || {
+        let model = LatentSdeModel::new(cfg);
+        let params = model.init_params(PrngKey::from_seed(0x5e21));
+        let mut reg = ModelRegistry::new();
+        reg.insert("default", model, params).expect("registering bench model");
+        reg
+    };
+
+    // A 12-cell budget: the smallest request is 8 cells, so ANY submit
+    // that finds the shard queue non-empty sheds — the burst episode is
+    // guaranteed to shed as soon as two requests overlap. The
+    // 2 KiB stream threshold makes long simulate responses exercise the
+    // chunked path under load.
+    let server = Server::start(
+        build_registry(),
+        ServeConfig {
+            port: 0,
+            workers: 8,
+            max_batch: 16,
+            max_wait_us: 200,
+            shards: 2,
+            queue_cells: 12,
+            stream_threshold_bytes: 2048,
+            cache_capacity: 0,
+            exec,
+            ..Default::default()
+        },
+    )
+    .expect("starting open-loop bench server");
+    let addr = server.addr();
+
+    let key = PrngKey::from_seed(0x10ad);
+    let steady = open_loop_trace(key, n_steady, 0, mean_gap_us);
+    let t_phase = Instant::now();
+    let mut outcomes = fire_open_loop(addr, &steady);
+    let mut traces = vec![steady];
+
+    // The overload episode: a simultaneous burst. One burst sheds with
+    // near-certainty against the 12-cell budget; retry (fresh seeds —
+    // the trace stays deterministic) in the measure-zero case every
+    // burst request found an empty queue.
+    let mut burst_no = 0u64;
+    loop {
+        let first_seed = 1_000_000 * (burst_no + 1);
+        let burst = open_loop_trace(key.fold_in(100 + burst_no), n_burst, first_seed, 0.0);
+        let burst_out = fire_open_loop(addr, &burst);
+        let shed_here = burst_out.iter().filter(|o| o.1 == 429).count();
+        let offset = traces.iter().map(|t| t.len()).sum::<usize>();
+        outcomes.extend(burst_out.into_iter().map(|(i, s, h, b, l)| (offset + i, s, h, b, l)));
+        traces.push(burst);
+        burst_no += 1;
+        if shed_here > 0 || burst_no >= 3 {
+            break;
+        }
+    }
+    let elapsed_s = t_phase.elapsed().as_secs_f64();
+    server.shutdown();
+    let arrivals: Vec<OpenLoopArrival> = traces.into_iter().flatten().collect();
+
+    // The overload contract, request by request: oracle bytes on 200, a
+    // well-formed 429 (Retry-After + "overloaded" body) on shed, nothing
+    // else.
+    let oracle_reg = build_registry();
+    let entry = oracle_reg.get("default").expect("oracle model");
+    let mut ok_lat_ms: Vec<f64> = Vec::new();
+    let mut shed = 0usize;
+    let mut streamed = 0usize;
+    for (i, status, head, body, lat_ms) in outcomes {
+        match status {
+            200 => {
+                let req = protocol::parse_request(arrivals[i].path, &arrivals[i].body)
+                    .expect("trace request parses");
+                let expected = scalar_response(entry, &req, exec.tier).unwrap();
+                assert_eq!(
+                    body, expected,
+                    "open-loop 200 for request {i} diverged from the scalar oracle"
+                );
+                if head.to_ascii_lowercase().contains("transfer-encoding: chunked") {
+                    streamed += 1;
+                }
+                ok_lat_ms.push(lat_ms);
+            }
+            429 => {
+                assert!(
+                    head.contains("Retry-After:"),
+                    "429 without Retry-After for request {i}:\n{head}"
+                );
+                let text = std::str::from_utf8(&body).expect("429 body is UTF-8");
+                assert!(
+                    text.contains("\"overloaded\""),
+                    "429 body missing the overloaded code: {text}"
+                );
+                shed += 1;
+            }
+            other => panic!(
+                "open-loop request {i} got status {other}: {:?}",
+                String::from_utf8_lossy(&body)
+            ),
+        }
+    }
+    let total = arrivals.len();
+    assert!(!ok_lat_ms.is_empty(), "open-loop phase served nothing");
+    assert!(shed > 0, "the overload episode never shed — admission control inert");
+    assert!(streamed > 0, "no long simulate response streamed chunked");
+    ok_lat_ms.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    let p50 = crate::metrics::percentile_of_sorted(&ok_lat_ms, 0.50);
+    let p99 = crate::metrics::percentile_of_sorted(&ok_lat_ms, 0.99);
+    let shed_rate = shed as f64 / total as f64;
+    println!(
+        "open loop: {total} offered ({:.0}/s), {} served, {shed} shed ({:.1}%), \
+         {streamed} streamed, p50 {p50:.2} ms, p99 {p99:.2} ms",
+        total as f64 / elapsed_s,
+        ok_lat_ms.len(),
+        shed_rate * 100.0
+    );
+    let row = |metric: &'static str, engine: &'static str, value: f64| ThroughputRow {
+        problem: "serve_open_loop",
+        metric,
+        engine,
+        paths: total,
+        steps: 96,
+        value_per_sec: value,
+    };
+    vec![
+        // Gated, lower-is-better (bench compare special-cases both).
+        row("serve_p99_ms", "batched", p99),
+        row("shed_rate", "batched", shed_rate),
+        // Context rows.
+        row("p50_ms", "observed", p50),
+        row("offered_req_per_sec", "observed", total as f64 / elapsed_s),
+    ]
 }
 
 // ---------------------------------------------------------------------
@@ -792,7 +1091,7 @@ pub fn run_serve_bench_tier(quick: bool, tier: KernelTier) -> Vec<ThroughputRow>
 pub fn run_baseline(quick: bool, out: &str) {
     super::repro::headline("Measuring the bench regression baseline");
     let throughput = run_throughput(quick);
-    let serve = run_serve_bench(quick);
+    let serve = run_serve_bench(quick, ExecConfig::default());
     let parts: [(&str, &[ThroughputRow]); 2] =
         [("throughput", &throughput), ("serve", &serve)];
     write_baseline_json(out, quick, &parts).expect("writing baseline");
@@ -958,22 +1257,39 @@ pub fn compare_throughput(
         let gated = b.engine == "batched"
             && (b.metric == "paths_per_sec"
                 || b.metric == "grad_paths_per_sec"
-                || b.metric == "req_per_sec");
+                || b.metric == "req_per_sec"
+                || b.metric == "serve_p99_ms"
+                || b.metric == "shed_rate");
+        // Latency and shed-rate rows gate in the opposite direction: an
+        // INCREASE is the regression.
+        let lower_is_better = matches!(b.metric.as_str(), "serve_p99_ms" | "shed_rate");
         let found = current
             .records
             .iter()
             .find(|c| c.problem == b.problem && c.metric == b.metric && c.engine == b.engine);
         let (current_v, delta, failed) = match found {
             Some(c) => {
-                let delta = c.value_per_sec / b.value_per_sec - 1.0;
-                let failed = gated && delta < -threshold;
+                // Lower-is-better baselines can legitimately sit at ~0
+                // (e.g. a zero shed rate), where a ratio blows up — gate
+                // those on absolute excess instead of a percentage.
+                let delta = if b.value_per_sec > 0.0 {
+                    c.value_per_sec / b.value_per_sec - 1.0
+                } else {
+                    c.value_per_sec - b.value_per_sec
+                };
+                let failed = gated
+                    && if lower_is_better { delta > threshold } else { delta < -threshold };
                 if failed {
+                    let (magnitude, direction) = if lower_is_better {
+                        (delta * 100.0, "increase")
+                    } else {
+                        (-delta * 100.0, "regression")
+                    };
                     failures.push(format!(
-                        "{}/{}/{}: {:.1}% regression (max allowed {:.0}%)",
+                        "{}/{}/{}: {magnitude:.1}% {direction} (max allowed {:.0}%)",
                         b.problem,
                         b.metric,
                         b.engine,
-                        -delta * 100.0,
                         threshold * 100.0
                     ));
                 }
@@ -1350,27 +1666,96 @@ mod tests {
     }
 
     /// The serving load harness runs end-to-end (server on an ephemeral
-    /// port, concurrent clients, responses asserted against the scalar
-    /// oracle inside) and leaves a gate-parsable artifact behind.
+    /// port, concurrent clients, open-loop overload episode, responses
+    /// asserted against the scalar oracle inside) and leaves a
+    /// gate-parsable artifact behind.
     #[test]
     fn quick_serve_bench_produces_gated_rows_and_artifact() {
-        let rows = run_serve_bench(true);
-        // 2 endpoints × (req/sec + p50 + p99).
-        assert_eq!(rows.len(), 6);
+        let rows = run_serve_bench(true, ExecConfig::default());
+        // 2 endpoints × (req/sec + p50 + p99) closed loop, plus the 4
+        // open-loop rows (p99 + shed_rate gated, p50 + offered observed).
+        assert_eq!(rows.len(), 10);
         assert!(rows.iter().all(|r| r.value_per_sec.is_finite() && r.value_per_sec > 0.0));
         assert_eq!(
             rows.iter().filter(|r| r.metric == "req_per_sec" && r.engine == "batched").count(),
             2
         );
+        for metric in ["serve_p99_ms", "shed_rate"] {
+            assert!(
+                rows.iter().any(|r| r.problem == "serve_open_loop"
+                    && r.metric == metric
+                    && r.engine == "batched"),
+                "missing open-loop row {metric}"
+            );
+        }
         let json = std::fs::read_to_string("BENCH_serve.json").expect("artifact written");
         let parsed = parse_bench_json(&json).expect("artifact parses");
         assert!(!parsed.placeholder);
         assert_eq!(parsed.records.len(), rows.len());
         assert!(parsed.records.iter().all(|r| r.bench == "serve"), "file-level tag applies");
-        // The gate considers serve req/sec rows gated rows.
+        // The gate considers serve req/sec + open-loop p99/shed-rate rows
+        // gated rows; self-compare passes (lower-is-better rows at parity).
         let report = compare_throughput(&parsed, &parsed, 0.25);
-        assert_eq!(report.rows.iter().filter(|r| r.gated).count(), 2);
+        assert_eq!(report.rows.iter().filter(|r| r.gated).count(), 4);
         assert!(report.passed());
+    }
+
+    /// Lower-is-better rows gate on INCREASES: a p99 that doubles fails,
+    /// a p99 that halves passes, and a zero-baseline shed rate gates on
+    /// absolute excess instead of a blown-up ratio.
+    #[test]
+    fn lower_is_better_rows_gate_on_increase() {
+        let base = parse_bench_json(&bench_json(
+            &[
+                ("serve_open_loop", "serve_p99_ms", "batched", 10.0),
+                ("serve_open_loop", "shed_rate", "batched", 0.0),
+            ],
+            false,
+        ))
+        .unwrap();
+        // p99 doubled: fails with an "increase" message.
+        let slow = parse_bench_json(&bench_json(
+            &[
+                ("serve_open_loop", "serve_p99_ms", "batched", 20.0),
+                ("serve_open_loop", "shed_rate", "batched", 0.0),
+            ],
+            false,
+        ))
+        .unwrap();
+        let report = compare_throughput(&base, &slow, 0.25);
+        assert!(!report.passed());
+        assert_eq!(report.failures.len(), 1);
+        assert!(report.failures[0].contains("increase"), "{:?}", report.failures);
+        // p99 halved: an improvement, not a failure.
+        let fast = parse_bench_json(&bench_json(
+            &[
+                ("serve_open_loop", "serve_p99_ms", "batched", 5.0),
+                ("serve_open_loop", "shed_rate", "batched", 0.0),
+            ],
+            false,
+        ))
+        .unwrap();
+        assert!(compare_throughput(&base, &fast, 0.25).passed());
+        // Zero baseline: shed rate creeping to 0.2 is within the 0.25
+        // absolute budget; 0.3 is over it.
+        let shed_some = parse_bench_json(&bench_json(
+            &[
+                ("serve_open_loop", "serve_p99_ms", "batched", 10.0),
+                ("serve_open_loop", "shed_rate", "batched", 0.2),
+            ],
+            false,
+        ))
+        .unwrap();
+        assert!(compare_throughput(&base, &shed_some, 0.25).passed());
+        let shed_lots = parse_bench_json(&bench_json(
+            &[
+                ("serve_open_loop", "serve_p99_ms", "batched", 10.0),
+                ("serve_open_loop", "shed_rate", "batched", 0.3),
+            ],
+            false,
+        ))
+        .unwrap();
+        assert!(!compare_throughput(&base, &shed_lots, 0.25).passed());
     }
 
     #[test]

@@ -3,6 +3,7 @@
 
 use std::collections::HashMap;
 
+use crate::runtime::ExecConfig;
 use crate::sde::KernelTier;
 
 /// Trainer hyperparameters (§7.3 defaults: Adam @ 1e-2, 0.999 decay,
@@ -17,7 +18,6 @@ pub struct TrainConfig {
     pub kl_anneal_iters: u64,
     pub substeps: usize,
     pub grad_clip: f64,
-    pub n_workers: usize,
     pub seed: u64,
     /// Validate every this many iterations (0 = never).
     pub val_every: u64,
@@ -26,11 +26,16 @@ pub struct TrainConfig {
     /// paper training uses 1, larger S tightens the per-iteration
     /// estimate).
     pub elbo_samples: usize,
-    /// Kernel tier for the batched engine (`--tier exact|fast`). `Exact`
+    /// Execution configuration ([`ExecConfig`]). `exec.tier` is the
+    /// kernel tier for the batched engine (`--tier exact|fast`): `Exact`
     /// keeps the bit-identical-to-scalar float stream; `Fast` trades that
-    /// for throughput (tolerance-validated kernels). Part of the schedule
-    /// fingerprint: a checkpoint refuses to resume under the other tier.
-    pub tier: KernelTier,
+    /// for throughput (tolerance-validated kernels). The tier is part of
+    /// the schedule fingerprint: a checkpoint refuses to resume under the
+    /// other tier. `exec.threads` is the worker count (`--workers`;
+    /// `None` follows the global `--threads` > `SDEGRAD_THREADS` >
+    /// `available_parallelism` chain) — never part of the fingerprint,
+    /// since worker count never changes a float.
+    pub exec: ExecConfig,
 }
 
 impl Default for TrainConfig {
@@ -44,12 +49,19 @@ impl Default for TrainConfig {
             kl_anneal_iters: 50,
             substeps: 5,
             grad_clip: 10.0,
-            n_workers: num_threads(),
             seed: 0,
             val_every: 20,
             elbo_samples: 1,
-            tier: KernelTier::Exact,
+            exec: ExecConfig::default(),
         }
+    }
+}
+
+impl TrainConfig {
+    /// The effective worker count for the batched minibatch engine
+    /// (`exec.threads`, or the process-wide chain when unpinned).
+    pub fn n_workers(&self) -> usize {
+        self.exec.worker_count()
     }
 }
 
@@ -102,14 +114,20 @@ impl TrainConfig {
             kl_anneal_iters: arg(map, "kl-anneal", d.kl_anneal_iters),
             substeps: arg(map, "substeps", d.substeps),
             grad_clip: arg(map, "clip", d.grad_clip),
-            n_workers: arg(map, "workers", d.n_workers),
             seed: arg(map, "seed", d.seed),
             val_every: arg(map, "val-every", d.val_every),
             elbo_samples: arg(map, "samples", d.elbo_samples),
-            tier: map
-                .get("tier")
-                .and_then(|v| KernelTier::parse(v))
-                .unwrap_or(d.tier),
+            exec: {
+                let mut exec = d.exec;
+                if let Some(w) = map.get("workers").and_then(|v| v.parse().ok()) {
+                    exec.threads = Some(w);
+                }
+                exec.tier = map
+                    .get("tier")
+                    .and_then(|v| KernelTier::parse(v))
+                    .unwrap_or(exec.tier);
+                exec
+            },
         }
     }
 }
@@ -148,10 +166,22 @@ mod tests {
     #[test]
     fn tier_from_args() {
         let m = parse_args(&strs(&["--tier", "fast"]));
-        assert_eq!(TrainConfig::from_args(&m).tier, KernelTier::Fast);
+        assert_eq!(TrainConfig::from_args(&m).exec.tier, KernelTier::Fast);
         let m = parse_args(&strs(&["--tier", "bogus"]));
-        assert_eq!(TrainConfig::from_args(&m).tier, KernelTier::Exact);
+        assert_eq!(TrainConfig::from_args(&m).exec.tier, KernelTier::Exact);
         let m = parse_args(&strs(&[]));
-        assert_eq!(TrainConfig::from_args(&m).tier, KernelTier::Exact);
+        assert_eq!(TrainConfig::from_args(&m).exec.tier, KernelTier::Exact);
+    }
+
+    #[test]
+    fn workers_from_args_pin_exec_threads() {
+        let m = parse_args(&strs(&["--workers", "3"]));
+        let cfg = TrainConfig::from_args(&m);
+        assert_eq!(cfg.exec.threads, Some(3));
+        assert_eq!(cfg.n_workers(), 3);
+        let m = parse_args(&strs(&[]));
+        let cfg = TrainConfig::from_args(&m);
+        assert_eq!(cfg.exec.threads, None);
+        assert_eq!(cfg.n_workers(), num_threads().max(1));
     }
 }

@@ -18,6 +18,7 @@ use crate::adjoint::{AdjointConfig, NoiseMode};
 use crate::api::{sensitivity_batch, SdeProblem, SensAlg, StepControl};
 use crate::metrics::{CsvWriter, Stopwatch};
 use crate::prng::PrngKey;
+use crate::runtime::ExecConfig;
 use crate::sde::problems::{sample_experiment_setup, Example1};
 use crate::sde::ReplicatedSde;
 use crate::solvers::Method;
@@ -91,7 +92,8 @@ pub fn run(quick: bool) -> Vec<Row> {
             let problems: Vec<_> =
                 (0..reps).map(|r| base.clone().key(key.fold_in(1000 + r as u64))).collect();
             let sw = Stopwatch::new();
-            let outs = sensitivity_batch(&problems, alg, StepControl::Steps(steps));
+            let outs =
+                sensitivity_batch(&problems, alg, StepControl::Steps(steps), ExecConfig::default());
             let per_run = sw.elapsed_s() / reps as f64;
             let first = outs[0].as_ref().expect("algorithm validated for this SDE");
             let mem = first.stats.noise_memory;

@@ -26,6 +26,7 @@ use crate::latent::{elbo_step_batch, elbo_value_multi, ElboConfig, LatentSdeMode
 use crate::metrics::{CsvWriter, OnlineStats, Stopwatch};
 use crate::optim::{clip_grad_norm, Adam, ExponentialDecay, KlAnneal};
 use crate::prng::PrngKey;
+use crate::runtime::ExecConfig;
 
 /// Per-iteration record.
 #[derive(Clone, Copy, Debug)]
@@ -156,7 +157,7 @@ fn schedule_fingerprint(cfg: &TrainConfig, train_idx: &[usize]) -> u64 {
         cfg.kl_anneal_iters,
         cfg.grad_clip.to_bits(),
         cfg.elbo_samples.max(1) as u64,
-        cfg.tier as u64,
+        cfg.exec.tier as u64,
         train_idx.len() as u64,
     ];
     for v in fields.into_iter().chain(train_idx.iter().map(|&i| i as u64)) {
@@ -258,7 +259,7 @@ pub fn train_latent_sde_from(
         }
         let batch = epoch_batches[(iter % bpe) as usize].clone();
         let beta = anneal.weight(iter);
-        let ecfg = ElboConfig { substeps: cfg.substeps, kl_weight: beta, tier: cfg.tier };
+        let ecfg = ElboConfig { substeps: cfg.substeps, kl_weight: beta, exec: cfg.exec };
         let (mut grad, loss, lpx, klp, klz, _mse) = batch_gradients(
             model,
             &params,
@@ -267,7 +268,7 @@ pub fn train_latent_sde_from(
             k_train.fold_in(iter),
             &ecfg,
             n_samples,
-            cfg.n_workers,
+            cfg.n_workers(),
         );
         let inv = 1.0 / (batch.len() * n_samples) as f64;
         for g in grad.iter_mut() {
@@ -303,7 +304,7 @@ pub fn train_latent_sde_from(
             let ecfg_val = ElboConfig {
                 substeps: cfg.substeps,
                 kl_weight: cfg.kl_weight,
-                tier: cfg.tier,
+                exec: cfg.exec,
             };
             let k_val = k_train.fold_in(u64::MAX - iter);
             let report =
@@ -368,7 +369,7 @@ mod tests {
             substeps: 3,
             kl_weight: 0.1,
             kl_anneal_iters: 5,
-            n_workers: 2,
+            exec: ExecConfig::new().threads(2),
             val_every: 0,
             ..Default::default()
         };
@@ -412,7 +413,7 @@ mod tests {
             batch_size: 3,
             substeps: 2,
             val_every: 5,
-            n_workers: 2,
+            exec: ExecConfig::new().threads(2),
             ..Default::default()
         };
         let report = train_latent_sde(&model, &ds, &idx, &val, &cfg, None);
@@ -434,7 +435,7 @@ mod tests {
             substeps: 2,
             kl_weight: 0.2,
             kl_anneal_iters: 6,
-            n_workers: 2,
+            exec: ExecConfig::new().threads(2),
             val_every: 0,
             ..Default::default()
         };

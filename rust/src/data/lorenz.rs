@@ -9,7 +9,7 @@ use super::timeseries::TimeSeriesDataset;
 use crate::api::{SaveAt, SdeProblem, SolveOptions, StepControl};
 use crate::prng::PrngKey;
 use crate::sde::lorenz::{paper_theta, StochasticLorenz};
-use crate::sde::KernelTier;
+use crate::runtime::ExecConfig;
 use crate::solvers::Method;
 
 /// Configuration for the Lorenz dataset generator.
@@ -49,7 +49,7 @@ pub fn generate(key: PrngKey, cfg: &LorenzConfig) -> TimeSeriesDataset {
         method: Method::Heun,
         step: StepControl::Steps(n_steps),
         save: SaveAt::Dense,
-        tier: KernelTier::Exact,
+        exec: ExecConfig::default(),
     };
 
     // One problem per series, each on its own Brownian stream; solved via

@@ -34,6 +34,7 @@ use crate::brownian::{BatchBrownian, BrownianPath};
 use crate::nn::gru::{GruBatchCache, GruStepCache};
 use crate::nn::MlpBatchCache;
 use crate::prng::PrngKey;
+use crate::runtime::ExecConfig;
 use crate::sde::KernelTier;
 use crate::solvers::{batch_grid_core, uniform_grid, BatchForwardFunc, Method, SolveStats};
 
@@ -45,18 +46,33 @@ pub struct ElboConfig {
     pub substeps: usize,
     /// KL weight β (validated over {1, 0.1, 0.01, 0.001} in the paper).
     pub kl_weight: f64,
-    /// Kernel tier for the batched net evaluations (encoder, drift /
-    /// diffusion nets, decoder). `Exact` (the default) keeps the
-    /// bit-identical-to-scalar contract; `Fast` routes through the
-    /// reassociated fast kernels, equal to exact only to relative
-    /// tolerance. The scalar [`elbo_step`] ignores this field — the fast
-    /// tier is a property of batched sweeps.
-    pub tier: KernelTier,
+    /// Execution configuration ([`crate::runtime::ExecConfig`]).
+    /// `exec.tier` selects the kernel tier for the batched net
+    /// evaluations (encoder, drift / diffusion nets, decoder): `Exact`
+    /// (the default) keeps the bit-identical-to-scalar contract; `Fast`
+    /// routes through the reassociated fast kernels, equal to exact only
+    /// to relative tolerance. The scalar [`elbo_step`] ignores the tier —
+    /// the fast tier is a property of batched sweeps.
+    pub exec: ExecConfig,
 }
 
 impl Default for ElboConfig {
     fn default() -> Self {
-        ElboConfig { substeps: 5, kl_weight: 1.0, tier: KernelTier::Exact }
+        ElboConfig { substeps: 5, kl_weight: 1.0, exec: ExecConfig::default() }
+    }
+}
+
+impl ElboConfig {
+    /// Select the kernel tier (shorthand for setting `exec.tier`).
+    pub fn tier(mut self, tier: KernelTier) -> Self {
+        self.exec.tier = tier;
+        self
+    }
+
+    /// Replace the whole execution configuration.
+    pub fn exec(mut self, exec: ExecConfig) -> Self {
+        self.exec = exec;
+        self
     }
 }
 
@@ -467,7 +483,7 @@ pub fn elbo_value_multi(
     // exact tier (pinned row-identity), and the only way the fast tier
     // keeps this estimator float-equal to its R-request batched twin
     // (`elbo_value_multi_batch`) — both then run the same fast kernels.
-    let enc = encode_batch(model, params, &[obs], n_obs, cfg.tier == KernelTier::Fast);
+    let enc = encode_batch(model, params, &[obs], n_obs, cfg.exec.tier == KernelTier::Fast);
     let sde = PosteriorSde::new(model);
     let n_sde = sde.sde_param_len();
     let aug = dz + 1;
@@ -495,8 +511,13 @@ pub fn elbo_value_multi(
     for k in 1..n_obs {
         theta_full[n_sde..].copy_from_slice(&enc.ctx[(k - 1) * dc..k * dc]);
         let grid = uniform_grid(times[k - 1], times[k], cfg.substeps.max(1));
-        let mut sys =
-            BatchForwardFunc::for_method_tier(&sde, &theta_full, bsz, Method::Heun, cfg.tier);
+        let mut sys = BatchForwardFunc::for_method_tier(
+            &sde,
+            &theta_full,
+            bsz,
+            Method::Heun,
+            cfg.exec.tier,
+        );
         let st = batch_grid_core(&mut sys, Method::Heun, &y, &grid, &mut bm, &mut y_next);
         forward_stats.steps += st.steps;
         forward_stats.nfe_drift += st.nfe_drift;
@@ -516,7 +537,7 @@ pub fn elbo_value_multi(
             z_in[s * dz..(s + 1) * dz]
                 .copy_from_slice(&y_obs[(k * bsz + s) * aug..(k * bsz + s) * aug + dz]);
         }
-        if cfg.tier == KernelTier::Fast {
+        if cfg.exec.tier == KernelTier::Fast {
             model.decoder.forward_batch_fast(params, &z_in, &mut dec_cache, &mut xhat);
         } else {
             model.decoder.forward_batch(params, &z_in, &mut dec_cache, &mut xhat);
@@ -629,7 +650,8 @@ pub fn sample_posterior_paths_batch(
     for k in 1..n_obs {
         let ctx_k = &enc.ctx[(k - 1) * c_n * dc..k * c_n * dc];
         let grid = uniform_grid(times[k - 1], times[k], substeps.max(1));
-        let mut sys = CtxBatchForwardFunc::new(&sde, &params[..n_sde], ctx_k, c_n);
+        let mut sys =
+            CtxBatchForwardFunc::new(&sde, &params[..n_sde], ctx_k, c_n, ExecConfig::default());
         batch_grid_core(&mut sys, Method::Heun, &y, &grid, &mut bm, &mut y_next);
         y.copy_from_slice(&y_next);
         for c in 0..c_n {
@@ -686,7 +708,7 @@ pub fn elbo_value_multi_batch(
     let beta = cfg.kl_weight;
 
     // ---- 1. Batched encode (R rows); P = R·S reparameterized z0s. ----
-    let enc = encode_batch(model, params, rows, n_obs, cfg.tier == KernelTier::Fast);
+    let enc = encode_batch(model, params, rows, n_obs, cfg.exec.tier == KernelTier::Fast);
     let sde = PosteriorSde::new(model);
     let n_sde = sde.sde_param_len();
 
@@ -722,7 +744,7 @@ pub fn elbo_value_multi_batch(
             }
         }
         let grid = uniform_grid(times[k - 1], times[k], cfg.substeps.max(1));
-        let mut sys = CtxBatchForwardFunc::new_tier(&sde, &params[..n_sde], &ctx_p, p_n, cfg.tier);
+        let mut sys = CtxBatchForwardFunc::new(&sde, &params[..n_sde], &ctx_p, p_n, cfg.exec);
         let st = batch_grid_core(&mut sys, Method::Heun, &y, &grid, &mut bm, &mut y_next);
         forward_stats.steps += st.steps;
         forward_stats.nfe_drift += st.nfe_drift;
@@ -742,7 +764,7 @@ pub fn elbo_value_multi_batch(
             z_in[p * dz..(p + 1) * dz]
                 .copy_from_slice(&y_obs[(k * p_n + p) * aug..(k * p_n + p) * aug + dz]);
         }
-        if cfg.tier == KernelTier::Fast {
+        if cfg.exec.tier == KernelTier::Fast {
             model.decoder.forward_batch_fast(params, &z_in, &mut dec_cache, &mut xhat);
         } else {
             model.decoder.forward_batch(params, &z_in, &mut dec_cache, &mut xhat);
@@ -1048,7 +1070,7 @@ fn elbo_chunk(
     let rows: Vec<&[f64]> = (0..c_n).map(|c| obs_seqs[(p0 + c) / n_samples]).collect();
 
     // ---- 1. Batched encode + per-path reparameterized z0. ------------
-    let fast = cfg.tier == KernelTier::Fast;
+    let fast = cfg.exec.tier == KernelTier::Fast;
     let enc = encode_batch(model, params, &rows, n_obs, fast);
     let sde = PosteriorSde::new(model);
     let n_sde = sde.sde_param_len();
@@ -1076,7 +1098,7 @@ fn elbo_chunk(
     for k in 1..n_obs {
         let ctx_k = &enc.ctx[(k - 1) * c_n * dc..k * c_n * dc];
         let grid = uniform_grid(times[k - 1], times[k], cfg.substeps.max(1));
-        let mut sys = CtxBatchForwardFunc::new_tier(&sde, &params[..n_sde], ctx_k, c_n, cfg.tier);
+        let mut sys = CtxBatchForwardFunc::new(&sde, &params[..n_sde], ctx_k, c_n, cfg.exec);
         let st = batch_grid_core(&mut sys, Method::Heun, &y, &grid, &mut bm, &mut y_next);
         forward_stats.steps += st.steps;
         forward_stats.nfe_drift += st.nfe_drift;
@@ -1154,12 +1176,8 @@ fn elbo_chunk(
     // One batched solver for all intervals: scratch is O(B·p) and
     // reallocating per interval would dominate allocation traffic, as in
     // the scalar path.
-    let mut solver = BatchBackwardSolver::new(CtxAdjointOps::new_tier(
-        &sde,
-        &params[..n_sde],
-        c_n,
-        cfg.tier,
-    ));
+    let mut solver =
+        BatchBackwardSolver::new(CtxAdjointOps::new(&sde, &params[..n_sde], c_n, cfg.exec));
     for k in (1..n_obs).rev() {
         solver.ops_mut().set_ctx(&enc.ctx[(k - 1) * c_n * dc..k * c_n * dc]);
         let grid = uniform_grid(times[k], times[k - 1], cfg.substeps); // descending

@@ -23,6 +23,7 @@ use std::cell::RefCell;
 use super::model::{DiffusionMode, LatentSdeModel};
 use crate::adjoint::batch::BatchAugmentedOps;
 use crate::nn::{MlpBatchCache, MlpCache};
+use crate::runtime::ExecConfig;
 use crate::sde::{BatchSde, BatchSdeVjp, Calculus, KernelTier, Sde, SdeVjp};
 
 /// Scratch buffers + forward caches (interior-mutable: the `Sde` trait is
@@ -616,24 +617,16 @@ pub(crate) struct CtxBatchForwardFunc<'a, 'm> {
 }
 
 impl<'a, 'm> CtxBatchForwardFunc<'a, 'm> {
+    /// `exec.tier == Fast` routes the drift/diffusion net evaluations
+    /// through the fast-tier MLP kernels (tolerance-equal to exact, not
+    /// bit-equal); the other [`ExecConfig`] knobs do not apply at this
+    /// level (threads and tree caching belong to the callers).
     pub(crate) fn new(
         sde: &'a PosteriorSde<'m>,
         params: &'a [f64],
         ctx: &'a [f64],
         batch: usize,
-    ) -> Self {
-        Self::new_tier(sde, params, ctx, batch, KernelTier::Exact)
-    }
-
-    /// Like [`CtxBatchForwardFunc::new`] but with an explicit kernel tier:
-    /// `Fast` routes the drift/diffusion net evaluations through the
-    /// fast-tier MLP kernels (tolerance-equal to exact, not bit-equal).
-    pub(crate) fn new_tier(
-        sde: &'a PosteriorSde<'m>,
-        params: &'a [f64],
-        ctx: &'a [f64],
-        batch: usize,
-        tier: KernelTier,
+        exec: ExecConfig,
     ) -> Self {
         assert_eq!(params.len(), sde.sde_param_len(), "CtxBatchForwardFunc: params length");
         assert_eq!(
@@ -641,7 +634,24 @@ impl<'a, 'm> CtxBatchForwardFunc<'a, 'm> {
             batch * sde.model.cfg.context_dim,
             "CtxBatchForwardFunc: ctx rows mismatch"
         );
-        CtxBatchForwardFunc { sde, params, ctx, batch, tier, nfe_f: 0, nfe_g: 0 }
+        CtxBatchForwardFunc { sde, params, ctx, batch, tier: exec.tier, nfe_f: 0, nfe_g: 0 }
+    }
+
+    /// Deprecated spelling of [`CtxBatchForwardFunc::new`] from before
+    /// [`ExecConfig`] unified the execution knobs.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `CtxBatchForwardFunc::new` with `ExecConfig::new().tier(tier)`"
+    )]
+    #[allow(dead_code)]
+    pub(crate) fn new_tier(
+        sde: &'a PosteriorSde<'m>,
+        params: &'a [f64],
+        ctx: &'a [f64],
+        batch: usize,
+        tier: KernelTier,
+    ) -> Self {
+        Self::new(sde, params, ctx, batch, ExecConfig::new().tier(tier))
     }
 }
 
@@ -708,16 +718,16 @@ pub(crate) struct CtxAdjointOps<'a, 'm> {
 }
 
 impl<'a, 'm> CtxAdjointOps<'a, 'm> {
-    pub(crate) fn new(sde: &'a PosteriorSde<'m>, params: &[f64], batch: usize) -> Self {
-        Self::new_tier(sde, params, batch, KernelTier::Exact)
-    }
-
-    pub(crate) fn new_tier(
+    /// `exec.tier` selects the tier for the batched coefficient
+    /// evaluations (see the `tier` field); the other [`ExecConfig`] knobs
+    /// do not apply at this level.
+    pub(crate) fn new(
         sde: &'a PosteriorSde<'m>,
         params: &[f64],
         batch: usize,
-        tier: KernelTier,
+        exec: ExecConfig,
     ) -> Self {
+        let tier = exec.tier;
         let n_model = sde.sde_param_len();
         assert_eq!(params.len(), n_model, "CtxAdjointOps: params length");
         assert!(batch > 0, "CtxAdjointOps: empty batch");
@@ -742,6 +752,22 @@ impl<'a, 'm> CtxAdjointOps<'a, 'm> {
             nfe_drift: 0,
             nfe_diffusion: 0,
         }
+    }
+
+    /// Deprecated spelling of [`CtxAdjointOps::new`] from before
+    /// [`ExecConfig`] unified the execution knobs.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use `CtxAdjointOps::new` with `ExecConfig::new().tier(tier)`"
+    )]
+    #[allow(dead_code)]
+    pub(crate) fn new_tier(
+        sde: &'a PosteriorSde<'m>,
+        params: &[f64],
+        batch: usize,
+        tier: KernelTier,
+    ) -> Self {
+        Self::new(sde, params, batch, ExecConfig::new().tier(tier))
     }
 
     /// Swap in the next interval's context rows (`[B×dc]`).
@@ -1061,14 +1087,14 @@ mod tests {
         }
 
         // Forward func.
-        let mut fwd = CtxBatchForwardFunc::new(&sys, params, &ctx, bsz);
+        let mut fwd = CtxBatchForwardFunc::new(&sys, params, &ctx, bsz, ExecConfig::default());
         let mut drift_b = vec![0.0; bsz * aug];
         fwd.drift(t, &y, &mut drift_b);
         let mut diff_b = vec![0.0; bsz * aug];
         fwd.diffusion(t, &y, &mut diff_b);
 
         // Adjoint ops.
-        let mut ops = CtxAdjointOps::new(&sys, params, bsz);
+        let mut ops = CtxAdjointOps::new(&sys, params, bsz, ExecConfig::default());
         ops.set_ctx(&ctx);
         let mut b_out = vec![0.0; bsz * aug];
         let mut fa = vec![0.0; bsz * aug];

@@ -158,10 +158,22 @@
 //! retired, and the pool keeps serving (see "Panic containment" in
 //! [`runtime::pool`]).
 //!
-//! The worker count is **one knob** with one precedence everywhere:
-//! `--threads N` (any subcommand) > `SDEGRAD_THREADS` env var >
+//! ### Execution config
+//!
+//! [`runtime::ExecConfig`] is the one value that carries the execution
+//! knobs — `tier` (kernel tier), `threads` (worker-count override), and
+//! `tree_cache` (Brownian-tree node-cache capacity) — through every
+//! layer: [`api::SolveOptions`]`::exec`, [`latent::ElboConfig`]`::exec`,
+//! the trainer's `TrainConfig::exec`, and serving's
+//! `BatcherConfig`/`ServeConfig::exec`. The worker count keeps **one
+//! precedence** everywhere: an explicit `ExecConfig::threads` (the
+//! `--workers`/`--threads N` flags) > `SDEGRAD_THREADS` env var >
 //! `std::thread::available_parallelism` — programmatically,
-//! [`runtime::set_worker_count`] / [`runtime::worker_count`].
+//! [`runtime::set_worker_count`] / [`runtime::worker_count`]. The pre-0.2
+//! per-struct fields and `_tier` entry points
+//! ([`api::sensitivity_batch_tier`] and friends) remain one release as
+//! `#[deprecated]` delegating shims, pinned bit-identical to the base
+//! names in `tests/exec_config.rs`.
 //!
 //! Two allocation-recycling layers ride on the same hot path, both
 //! observationally identical to fresh allocation (leases re-zero before
@@ -193,9 +205,10 @@
 //!   (`tests/fast_tier.rs`; `bench throughput` re-validates to
 //!   [`coordinator::bench::FAST_RTOL`] before timing any fast row).
 //!
-//! Select it with `SolveOptions::fixed(..).tier(KernelTier::Fast)`,
-//! [`api::sensitivity_batch_tier`], [`latent::ElboConfig`]`::tier`, or
-//! `--tier fast` on the `train` / `serve` / `bench serve` CLIs. The
+//! Select it with an [`runtime::ExecConfig`] — e.g.
+//! `SolveOptions::fixed(..).tier(KernelTier::Fast)` (shorthand for
+//! `exec.tier`), `ElboConfig::default().tier(..)`, or `--tier fast` on
+//! the `train` / `serve` / `bench serve` CLIs. The
 //! serving byte-determinism contract is *per tier*: the batcher and its
 //! scalar oracle run the same tier, so batching with strangers still
 //! cannot change your answer — but `--tier fast` bytes are not `--tier
@@ -231,30 +244,49 @@
 //! `sdegrad serve --state ckpt.bin --dataset gbm --port 7878` turns a
 //! checkpoint (either format: bare params or full `TrainState`) into an
 //! HTTP inference service ([`serve`]) with **dynamic micro-batching onto
-//! the batched SoA engine**: a dispatcher drains concurrent requests (up
-//! to `--max-batch`, waiting at most `--max-wait-us`) and runs each
-//! compatible group as ONE batched engine call.
+//! the batched SoA engine**, scaled horizontally across `--shards N`
+//! dispatcher shards: a rendezvous hash of (model fingerprint, endpoint)
+//! routes each request to its home shard ([`serve::Router`]) — the
+//! routing key is coarser than the batching-compatibility key, so
+//! sharding never splits a groupable batch — and each shard's dispatcher
+//! drains its own bounded queue (up to `--max-batch`, waiting at most
+//! `--max-wait-us`) and runs each compatible group as ONE batched engine
+//! call.
 //!
 //! | endpoint | engine call | answer |
 //! |---|---|---|
 //! | `GET /healthz` | — | loaded models + fingerprints |
+//! | `GET /metrics` | — | per-shard queue depth, batch-occupancy histogram, shed/cache/engine counters |
 //! | `POST /v1/simulate` | [`latent::sample_prior_paths_batch`] prior fleet | prior latent path + decoded obs |
 //! | `POST /v1/reconstruct` | batched encoder + posterior solve + decoder | posterior path + reconstruction |
 //! | `POST /v1/elbo` | [`latent::elbo_value_multi_batch`] | S-sample ELBO estimate |
 //!
+//! **Admission control:** each shard's queue carries a cell budget
+//! (`--queue-cells`); a request that would push a non-empty queue over
+//! budget is shed immediately with `429` (`overloaded`, `Retry-After`)
+//! instead of queuing unboundedly. Long `/v1/simulate` responses past
+//! `--stream-threshold` bytes stream back `Transfer-Encoding: chunked` —
+//! framing is transport, never content.
+//!
 //! **Determinism contract:** every request carries a `seed`, and every
-//! response body is a pure function of (canonical request, model
+//! 200 response body is a pure function of (canonical request, model
 //! fingerprint) — bit-identical to a per-request scalar engine call for
 //! any arrival order, batch layout (`--max-batch` 1 vs 16), worker
-//! count, and cache state (`tests/serve.rs`). This is the serving-side
-//! payoff of the engine's bit-identical-batching guarantee: batching
-//! with strangers cannot change your answer. Knobs: `--workers` (HTTP
-//! threads), `--max-batch`/`--max-wait-us` (batcher), `--cache` (LRU
-//! entries, keyed on fingerprint + canonical request bytes; 0 disables),
-//! `--bind` (loopback-only by default — pass `0.0.0.0` to expose).
-//! `sdegrad bench serve` load-tests a synthetic model in-process
-//! (req/sec + p50/p99 → `BENCH_serve.json`, gated by
-//! `sdegrad bench compare`).
+//! count, **shard count (1/2/4)**, queue state, response framing, and
+//! cache state (`tests/serve.rs`). Shedding changes *which* requests get
+//! a 429, never a success byte. This is the serving-side payoff of the
+//! engine's bit-identical-batching guarantee: batching with strangers
+//! cannot change your answer. Knobs: `--workers` (HTTP threads),
+//! `--shards` (dispatcher shards), `--max-batch`/`--max-wait-us`
+//! (batcher), `--queue-cells` (admission budget), `--stream-threshold`
+//! (chunked streaming), `--cache` (LRU entries, keyed on fingerprint +
+//! canonical request bytes; 0 disables), `--bind` (loopback-only by
+//! default — pass `0.0.0.0` to expose). `sdegrad bench serve`
+//! load-tests a synthetic model in-process: closed-loop req/sec +
+//! p50/p99 per endpoint, then an open-loop traffic simulator with
+//! heavy-tail request sizes, bursty arrivals, and a deliberate overload
+//! episode (`serve_p99_ms` + `shed_rate`, gated lower-is-better by
+//! `sdegrad bench compare`) → `BENCH_serve.json`.
 //!
 //! ## Verified convergence orders
 //!
@@ -300,11 +332,14 @@ pub mod testing;
 pub mod prelude {
     pub use crate::adjoint::{AdjointConfig, Checkpointing, NoiseMode};
     pub use crate::api::{
-        sensitivity_batch, sensitivity_batch_tier, solve_batch, GradStats, Gradients, NoiseSpec,
-        ProblemError, SaveAt, SdeProblem, SdeSolution, SensAlg, SolveOptions, StepControl,
+        sensitivity_batch, solve_batch, GradStats, Gradients, NoiseSpec, ProblemError, SaveAt,
+        SdeProblem, SdeSolution, SensAlg, SolveOptions, StepControl,
     };
+    #[allow(deprecated)]
+    pub use crate::api::sensitivity_batch_tier;
     pub use crate::brownian::{BatchBrownian, BrownianMotion, BrownianPath, VirtualBrownianTree};
     pub use crate::prng::PrngKey;
+    pub use crate::runtime::ExecConfig;
     pub use crate::sde::{
         BatchSde, BatchSdeVjp, Calculus, ExactSolution, KernelTier, ReplicatedSde, Sde, SdeVjp,
     };

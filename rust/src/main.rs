@@ -33,8 +33,9 @@ USAGE:
                   [--out checkpoint.bin] [--state state.bin]
                   [--resume state.bin] [--log train.csv] [--smoke-check]
     sdegrad serve --state <ckpt.bin> [--dataset gbm|lorenz|mocap] [--mode sde|ode]
-                  [--name default] [--port 7878] [--workers N]
+                  [--name default] [--port 7878] [--workers N] [--shards N]
                   [--max-batch 16] [--max-wait-us 500] [--cache 1024]
+                  [--queue-cells N] [--stream-threshold BYTES]
                   [--max-body 1048576] [--bind 127.0.0.1] [--tier exact|fast]
                   (loopback-only by default; --bind 0.0.0.0 to expose)
     sdegrad repro <table1|fig2|fig5|fig6|fig9|table2|convergence|all> [--quick]
@@ -133,7 +134,7 @@ fn cmd_train(rest: &[String]) {
         model.n_params,
         cfg.iters,
         cfg.elbo_samples,
-        cfg.n_workers
+        cfg.n_workers()
     );
     let idx: Vec<usize> = (0..ds.n_series).collect();
     let n_val = (ds.n_series / 8).clamp(1, ds.n_series - 1);
@@ -220,18 +221,22 @@ fn cmd_serve(rest: &[String]) {
     }
 
     let defaults = ServeConfig::default();
+    let tier = map
+        .get("tier")
+        .and_then(|v| sdegrad::sde::KernelTier::parse(v))
+        .unwrap_or(defaults.exec.tier);
     let cfg = ServeConfig {
         host: arg(&map, "bind", defaults.host),
         port: arg(&map, "port", defaults.port),
         workers: arg(&map, "workers", defaults.workers),
         max_batch: arg(&map, "max-batch", defaults.max_batch),
         max_wait_us: arg(&map, "max-wait-us", defaults.max_wait_us),
+        shards: arg(&map, "shards", defaults.shards),
+        queue_cells: arg(&map, "queue-cells", defaults.queue_cells),
+        stream_threshold_bytes: arg(&map, "stream-threshold", defaults.stream_threshold_bytes),
         cache_capacity: arg(&map, "cache", defaults.cache_capacity),
         max_body_bytes: arg(&map, "max-body", defaults.max_body_bytes),
-        tier: map
-            .get("tier")
-            .and_then(|v| sdegrad::sde::KernelTier::parse(v))
-            .unwrap_or(defaults.tier),
+        exec: defaults.exec.tier(tier),
     };
     let server = match Server::start(registry, cfg) {
         Ok(s) => s,
@@ -242,15 +247,16 @@ fn cmd_serve(rest: &[String]) {
     };
     println!(
         "sdegrad serve: listening on http://{} (model {name:?} from {state_path}; \
-         {} workers, max-batch {}, max-wait {} µs, cache {}, {} kernels)",
+         {} workers, {} shards, max-batch {}, max-wait {} µs, cache {}, {} kernels)",
         server.addr(),
         cfg.workers,
+        cfg.shards,
         cfg.max_batch,
         cfg.max_wait_us,
         cfg.cache_capacity,
-        cfg.tier.name()
+        cfg.exec.tier.name()
     );
-    println!("endpoints: GET /healthz, POST /v1/simulate /v1/reconstruct /v1/elbo");
+    println!("endpoints: GET /healthz /metrics, POST /v1/simulate /v1/reconstruct /v1/elbo");
     server.run();
 }
 
@@ -307,7 +313,8 @@ fn cmd_bench(rest: &[String]) {
                 .get("tier")
                 .and_then(|v| sdegrad::sde::KernelTier::parse(v))
                 .unwrap_or(sdegrad::sde::KernelTier::Exact);
-            sdegrad::coordinator::bench::run_serve_bench_tier(quick, tier);
+            let exec = sdegrad::runtime::ExecConfig::new().tier(tier);
+            sdegrad::coordinator::bench::run_serve_bench(quick, exec);
         }
         "baseline" => {
             let out =

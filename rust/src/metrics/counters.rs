@@ -1,0 +1,47 @@
+//! Process-wide monotone counters surfaced by the server's
+//! `GET /metrics` endpoint (`serve/server.rs`).
+//!
+//! The crate's instrumentation is otherwise per-object — each
+//! [`crate::brownian::VirtualBrownianTree`] counts its own bridge draws,
+//! each batcher shard its own queue traffic. A serving process wants the
+//! *process totals* too (how much Brownian work has the whole fleet of
+//! engine calls done?), so dropped trees flush their lifetime draw count
+//! here. Counters are monotone by construction: relaxed `fetch_add` of
+//! non-negative deltas, never reset.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static BRIDGE_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// Add `n` Brownian-bridge draws to the process-wide total. Called from
+/// `VirtualBrownianTree`'s drop glue with the tree's unflushed delta —
+/// relaxed ordering is enough for a statistics counter.
+pub fn add_bridge_calls(n: u64) {
+    if n > 0 {
+        BRIDGE_CALLS.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Lifetime Brownian-bridge draws across every dropped tree in this
+/// process. Monotone; live trees' in-progress draws appear once they
+/// drop.
+pub fn bridge_calls_total() -> u64 {
+    BRIDGE_CALLS.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bridge_counter_is_monotone_under_adds() {
+        let before = bridge_calls_total();
+        add_bridge_calls(0); // no-op delta
+        assert_eq!(bridge_calls_total(), before);
+        add_bridge_calls(3);
+        add_bridge_calls(5);
+        // Other tests drop trees concurrently, so assert a lower bound,
+        // not equality.
+        assert!(bridge_calls_total() >= before + 8);
+    }
+}

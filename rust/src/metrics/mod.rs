@@ -4,11 +4,13 @@
 //! crate's single JSON implementation ([`json`] — emit, scan, parse),
 //! shared by the bench artifacts and the serving protocol.
 
+pub mod counters;
 pub mod json;
 pub mod stats;
 pub mod timer;
 pub mod writer;
 
+pub use counters::{add_bridge_calls, bridge_calls_total};
 pub use json::{json_num, json_str, parse_json, JsonValue};
 pub use stats::{
     confidence_interval_95, fit_loglog, percentile_of_sorted, LogLogFit, OnlineStats, Quartiles,

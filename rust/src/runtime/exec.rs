@@ -1,0 +1,109 @@
+//! One execution-config vocabulary for the whole crate.
+//!
+//! PRs 7–8 grew three independent knobs — the kernel tier, the worker
+//! count, and the Brownian-tree node-cache capacity — and re-declared
+//! them field-by-field on [`crate::api::SolveOptions`],
+//! [`crate::latent::ElboConfig`], [`crate::coordinator::config::TrainConfig`],
+//! [`crate::serve::BatcherConfig`], and [`crate::serve::ServeConfig`].
+//! [`ExecConfig`] defines the knob set once; every entry point now embeds
+//! it (the old per-struct fields survive one release as delegating
+//! builders, pinned bit-identical in `tests/exec_config.rs`).
+//!
+//! None of the knobs changes a float in the exact tier: the tier selects
+//! *which* kernels run (`Fast` is tolerance-equal, not bit-equal), the
+//! thread count only partitions work across the pool, and the tree cache
+//! only memoizes Brownian bridge draws that are pure functions of
+//! `(key, t)`.
+
+use crate::brownian::DEFAULT_NODE_CACHE;
+use crate::sde::KernelTier;
+
+/// Execution configuration shared by every batched entry point: kernel
+/// tier, worker count, and Brownian-tree node-cache capacity.
+///
+/// * `tier` — [`KernelTier::Exact`] (default) keeps the bit-identical
+///   contract with the per-path scalar engine; [`KernelTier::Fast`]
+///   routes through the reassociated fast kernels (tolerance-equal).
+/// * `threads` — per-call worker count. `None` (default) defers to the
+///   process-wide precedence chain: the `--threads` CLI flag >
+///   `SDEGRAD_THREADS` > `std::thread::available_parallelism` (see
+///   [`crate::runtime::worker_count`]).
+/// * `tree_cache` — node-cache capacity for virtual Brownian trees
+///   created by entry points that own their noise (0 disables). Entry
+///   points taking an [`crate::api::SdeProblem`] keep the problem's own
+///   `tree_cache` field authoritative, since it is per-problem state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ExecConfig {
+    pub tier: KernelTier,
+    pub threads: Option<usize>,
+    pub tree_cache: usize,
+}
+
+impl Default for ExecConfig {
+    fn default() -> Self {
+        ExecConfig { tier: KernelTier::Exact, threads: None, tree_cache: DEFAULT_NODE_CACHE }
+    }
+}
+
+impl ExecConfig {
+    /// The default configuration (exact tier, global thread precedence,
+    /// default tree cache).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Select the kernel tier.
+    pub fn tier(mut self, tier: KernelTier) -> Self {
+        self.tier = tier;
+        self
+    }
+
+    /// Pin the worker count for calls under this config (`None` defers
+    /// to the global precedence chain).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Set the Brownian-tree node-cache capacity (0 disables caching).
+    pub fn tree_cache(mut self, capacity: usize) -> Self {
+        self.tree_cache = capacity;
+        self
+    }
+
+    /// The effective worker count: `threads` if pinned, otherwise the
+    /// process-wide [`crate::runtime::worker_count`].
+    pub fn worker_count(&self) -> usize {
+        self.threads.unwrap_or_else(super::worker_count).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_exact_with_global_threads_and_default_cache() {
+        let cfg = ExecConfig::default();
+        assert_eq!(cfg.tier, KernelTier::Exact);
+        assert_eq!(cfg.threads, None);
+        assert_eq!(cfg.tree_cache, DEFAULT_NODE_CACHE);
+        assert_eq!(cfg, ExecConfig::new());
+    }
+
+    #[test]
+    fn builders_set_each_knob() {
+        let cfg = ExecConfig::new().tier(KernelTier::Fast).threads(3).tree_cache(7);
+        assert_eq!(cfg.tier, KernelTier::Fast);
+        assert_eq!(cfg.threads, Some(3));
+        assert_eq!(cfg.tree_cache, 7);
+        assert_eq!(cfg.worker_count(), 3);
+    }
+
+    #[test]
+    fn unpinned_worker_count_follows_the_global_chain() {
+        let cfg = ExecConfig::default();
+        assert_eq!(cfg.worker_count(), crate::runtime::worker_count().max(1));
+        assert!(cfg.worker_count() >= 1);
+    }
+}

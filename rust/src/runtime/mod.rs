@@ -1,5 +1,6 @@
 //! Process-wide execution runtime: the persistent work-stealing thread
-//! pool that runs every parallel hot path ([`pool`]), and the PJRT
+//! pool that runs every parallel hot path ([`pool`]), the shared
+//! execution-config vocabulary ([`exec::ExecConfig`]), and the PJRT
 //! loader for AOT-compiled HLO artifacts ([`artifact`] / [`client`]).
 //!
 //! ## Thread pool
@@ -28,9 +29,11 @@
 pub mod arena;
 pub mod artifact;
 pub mod client;
+pub mod exec;
 pub mod pool;
 
 pub use artifact::{ArtifactRegistry, Executable, Manifest, ManifestEntry};
+pub use exec::ExecConfig;
 #[cfg(feature = "xla")]
 pub use client::pjrt_client;
 pub use pool::{

@@ -1,13 +1,27 @@
-//! The dynamic micro-batcher: a dispatcher thread drains the request
-//! queue (up to `max_batch` jobs or `max_wait_us`, whichever first),
-//! partitions the drained jobs into **compatibility groups** (same
-//! endpoint, model, time grid, and solve knobs — bit-compared), and
-//! issues **one batched engine call per group**:
+//! The sharded dynamic micro-batcher: N dispatcher shards behind
+//! consistent-hash routing ([`super::router`]), each with its own
+//! **bounded** queue and dispatcher thread. A shard drains its queue (up
+//! to `max_batch` jobs or `max_wait_us` after the first, whichever
+//! first), partitions the drained jobs into **compatibility groups**
+//! (same endpoint, model, time grid, and solve knobs — bit-compared),
+//! and issues **one batched engine call per group**:
 //!
 //! * `/v1/simulate`    → [`sample_prior_paths_batch`] (batched piecewise prior fleet)
 //! * `/v1/reconstruct` → [`sample_posterior_paths_batch`] (batched encoder +
 //!   per-path-context posterior solve + decoder)
 //! * `/v1/elbo`        → [`elbo_value_multi_batch`] (R requests × S samples)
+//!
+//! ## Sharding and admission control
+//!
+//! Requests route to a shard by rendezvous hash of `(model fingerprint,
+//! endpoint)` — affine, so compatible requests keep meeting in one queue
+//! and cross-request grouping stays effective. Each shard's queue is
+//! bounded by a **cell budget** ([`BatcherConfig::queue_cells`], in the
+//! same `times × samples` units as [`request_cells`]): when admitting a
+//! request would exceed the budget, [`BatcherHandle::submit`] sheds it
+//! with [`ApiError::overloaded`] (HTTP 429 + `Retry-After`) instead of
+//! queueing unbounded work. Shedding changes WHICH requests get a 429 —
+//! never a success byte: every 200 is still the scalar oracle's bytes.
 //!
 //! ## Why cross-request batching is safe
 //!
@@ -17,38 +31,80 @@
 //! per-request float stream derives from the request's own `seed`. So a
 //! response is bit-identical to [`scalar_response`] — the per-request
 //! scalar engine call — for ANY arrival order, queue depth, `max_batch`,
-//! and group layout. `tests/serve.rs` pins this end-to-end over HTTP.
+//! shard count, and group layout. `tests/serve.rs` pins this end-to-end
+//! over HTTP.
 
-use std::sync::mpsc;
-use std::sync::Arc;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use super::protocol::{self, ApiError, ServeRequest};
 use super::registry::{ModelEntry, ModelRegistry};
+use super::router::Router;
 use crate::latent::{
     decode_path, elbo_value_multi, elbo_value_multi_batch, sample_posterior_path,
     sample_posterior_paths_batch, sample_prior_path, sample_prior_paths_batch, ElboConfig,
 };
 use crate::prng::PrngKey;
+use crate::runtime::ExecConfig;
 use crate::sde::KernelTier;
+
+/// Default per-shard admission budget, in request cells. Generous — a
+/// maximal request ([`protocol::MAX_REQUEST_STEPS`]) is ~2²⁰ cells, so
+/// the default holds several of those or thousands of typical requests;
+/// overload tests shrink it to force shedding deterministically.
+pub const DEFAULT_QUEUE_CELLS: usize = 1 << 22;
 
 /// Micro-batching knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
     /// Maximum jobs per drain (1 = no cross-request batching).
     pub max_batch: usize,
-    /// How long the dispatcher waits for more jobs after the first one.
+    /// How long a dispatcher waits for more jobs after the first one.
     pub max_wait_us: u64,
-    /// Kernel tier for the ELBO-scoring engine calls (`--tier exact|fast`
-    /// on `sdegrad serve`). The batched-equals-scalar byte contract holds
-    /// *within* a tier: the scalar oracle takes the same tier. Simulate /
-    /// reconstruct solves stay on the exact engine regardless.
-    pub tier: KernelTier,
+    /// Dispatcher shards (clamped to ≥ 1). Each shard is an independent
+    /// bounded queue + dispatcher thread; requests route by rendezvous
+    /// hash of `(model fingerprint, endpoint)`.
+    pub shards: usize,
+    /// Per-shard admission budget in request cells
+    /// ([`request_cells`]); a request that would push a shard's queued
+    /// cells past this is shed with a 429 (the queue's head-of-line job
+    /// is always admitted so progress is guaranteed).
+    pub queue_cells: usize,
+    /// Execution configuration for the engine calls
+    /// ([`ExecConfig`]): `exec.tier` picks the kernel tier for the
+    /// ELBO-scoring engine (`--tier exact|fast` on `sdegrad serve`; the
+    /// batched-equals-scalar byte contract holds *within* a tier — the
+    /// scalar oracle takes the same tier; simulate / reconstruct solves
+    /// stay on the exact engine regardless).
+    pub exec: ExecConfig,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { max_batch: 16, max_wait_us: 500, tier: KernelTier::Exact }
+        BatcherConfig {
+            max_batch: 16,
+            max_wait_us: 500,
+            shards: 1,
+            queue_cells: DEFAULT_QUEUE_CELLS,
+            exec: ExecConfig::default(),
+        }
+    }
+}
+
+impl BatcherConfig {
+    /// Set the kernel tier (delegates to `exec.tier` — the pre-0.2
+    /// `tier` field's replacement).
+    pub fn tier(mut self, tier: KernelTier) -> Self {
+        self.exec.tier = tier;
+        self
+    }
+
+    /// Replace the whole execution configuration.
+    pub fn exec(mut self, exec: ExecConfig) -> Self {
+        self.exec = exec;
+        self
     }
 }
 
@@ -58,92 +114,291 @@ pub struct Job {
     pub resp: mpsc::Sender<Result<Vec<u8>, ApiError>>,
 }
 
-/// Handle to the dispatcher thread. Cloning [`Batcher::sender`] gives
-/// each server worker its own enqueue handle; the dispatcher exits when
-/// every sender is dropped.
+/// Queue state behind one shard's mutex.
+struct ShardState {
+    queue: VecDeque<Job>,
+    /// Sum of [`request_cells`] over `queue` (the admission meter).
+    queued_cells: usize,
+    /// False once the batcher is shutting down: submits fail fast, the
+    /// dispatcher exits after draining what is already queued.
+    open: bool,
+}
+
+/// Monotone per-shard counters (relaxed atomics — statistics, not
+/// synchronization). `GET /metrics` reports these via
+/// [`BatcherHandle::snapshots`].
+#[derive(Debug, Default)]
+pub struct ShardStats {
+    /// Jobs admitted to the queue.
+    pub submitted: AtomicU64,
+    /// Jobs rejected with a 429 at admission.
+    pub shed: AtomicU64,
+    /// Queue drains processed (each drain = one batch of 1..=max_batch
+    /// jobs, possibly split into several engine-call groups).
+    pub batches: AtomicU64,
+    /// Jobs answered through batch processing.
+    pub jobs: AtomicU64,
+    /// Batch-occupancy histogram over drain sizes; bucket upper bounds
+    /// are [`OCCUPANCY_BUCKETS`].
+    pub occupancy: [AtomicU64; OCCUPANCY_BUCKETS.len()],
+}
+
+/// Inclusive upper bounds of the batch-occupancy histogram buckets
+/// (the last bucket is open-ended: drains larger than 16).
+pub const OCCUPANCY_BUCKETS: [usize; 6] = [1, 2, 4, 8, 16, usize::MAX];
+
+fn occupancy_bucket(n: usize) -> usize {
+    OCCUPANCY_BUCKETS
+        .iter()
+        .position(|&hi| n <= hi)
+        .expect("last bucket is open-ended")
+}
+
+/// One dispatcher shard: bounded queue + wakeup + counters.
+struct Shard {
+    state: Mutex<ShardState>,
+    cv: Condvar,
+    stats: ShardStats,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            state: Mutex::new(ShardState {
+                queue: VecDeque::new(),
+                queued_cells: 0,
+                open: true,
+            }),
+            cv: Condvar::new(),
+            stats: ShardStats::default(),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, ShardState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// A point-in-time reading of one shard, for `GET /metrics`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSnapshot {
+    /// Jobs currently queued (gauge).
+    pub depth: usize,
+    /// Cells currently queued (gauge, the admission meter).
+    pub queued_cells: usize,
+    /// Monotone counters — see [`ShardStats`].
+    pub submitted: u64,
+    pub shed: u64,
+    pub batches: u64,
+    pub jobs: u64,
+    pub occupancy: [u64; OCCUPANCY_BUCKETS.len()],
+}
+
+struct HandleInner {
+    shards: Vec<Arc<Shard>>,
+    router: Router,
+    registry: Arc<ModelRegistry>,
+    queue_cells: usize,
+}
+
+/// A cloneable enqueue handle — each HTTP worker holds one. Routing,
+/// admission control, and the blocking wait for the computed bytes all
+/// live here; the dispatcher threads belong to [`Batcher`].
+#[derive(Clone)]
+pub struct BatcherHandle {
+    inner: Arc<HandleInner>,
+}
+
+impl BatcherHandle {
+    /// Route `request`, admit it (or shed with a 429), and block for its
+    /// response bytes.
+    pub fn submit(&self, request: ServeRequest) -> Result<Vec<u8>, ApiError> {
+        let shard = &self.inner.shards[self.route(&request)];
+        let cells = request_cells(&request);
+        let (rtx, rrx) = mpsc::channel();
+        {
+            let mut st = shard.lock();
+            if !st.open {
+                return Err(ApiError::internal("the batcher has stopped"));
+            }
+            // Admission control: shed when the queue's cell meter would
+            // blow the budget — EXCEPT into an empty queue, so a request
+            // larger than the whole budget can still make progress once
+            // the shard drains (a retry after the 429's Retry-After).
+            if !st.queue.is_empty() && st.queued_cells + cells > self.inner.queue_cells {
+                shard.stats.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(ApiError::overloaded());
+            }
+            st.queue.push_back(Job { request, resp: rtx });
+            st.queued_cells += cells;
+            shard.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        }
+        shard.cv.notify_one();
+        rrx.recv()
+            .unwrap_or_else(|_| Err(ApiError::internal("the batcher dropped the request")))
+    }
+
+    /// The shard `request` routes to.
+    pub fn route(&self, request: &ServeRequest) -> usize {
+        // Unknown models still need a shard (the dispatcher answers the
+        // 404); fingerprint 0 routes them consistently.
+        let fingerprint = self
+            .inner
+            .registry
+            .get(request.model())
+            .map_or(0, |e| e.fingerprint);
+        self.inner.router.route(fingerprint, request.endpoint())
+    }
+
+    /// The shard count.
+    pub fn shards(&self) -> usize {
+        self.inner.shards.len()
+    }
+
+    /// Point-in-time per-shard readings, in shard order.
+    pub fn snapshots(&self) -> Vec<ShardSnapshot> {
+        self.inner
+            .shards
+            .iter()
+            .map(|shard| {
+                let (depth, queued_cells) = {
+                    let st = shard.lock();
+                    (st.queue.len(), st.queued_cells)
+                };
+                let s = &shard.stats;
+                ShardSnapshot {
+                    depth,
+                    queued_cells,
+                    submitted: s.submitted.load(Ordering::Relaxed),
+                    shed: s.shed.load(Ordering::Relaxed),
+                    batches: s.batches.load(Ordering::Relaxed),
+                    jobs: s.jobs.load(Ordering::Relaxed),
+                    occupancy: std::array::from_fn(|i| s.occupancy[i].load(Ordering::Relaxed)),
+                }
+            })
+            .collect()
+    }
+}
+
+/// The sharded dispatcher: owns the shard threads; hand out enqueue
+/// handles with [`Batcher::handle`].
 pub struct Batcher {
-    tx: mpsc::Sender<Job>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    handle: BatcherHandle,
+    threads: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Batcher {
     pub fn start(registry: Arc<ModelRegistry>, cfg: BatcherConfig) -> Batcher {
-        let (tx, rx) = mpsc::channel::<Job>();
+        let n_shards = cfg.shards.max(1);
         let max_batch = cfg.max_batch.max(1);
         let max_wait = Duration::from_micros(cfg.max_wait_us);
-        let tier = cfg.tier;
-        let handle = std::thread::Builder::new()
-            .name("sdegrad-batcher".into())
-            .spawn(move || dispatcher_loop(rx, &registry, max_batch, max_wait, tier))
-            .expect("spawning batcher thread");
-        Batcher { tx, handle: Some(handle) }
+        let shards: Vec<Arc<Shard>> = (0..n_shards).map(|_| Arc::new(Shard::new())).collect();
+        let mut threads = Vec::with_capacity(n_shards);
+        for (i, shard) in shards.iter().enumerate() {
+            let shard = shard.clone();
+            let registry = registry.clone();
+            let exec = cfg.exec;
+            let handle = std::thread::Builder::new()
+                .name(format!("sdegrad-batcher-{i}"))
+                .spawn(move || dispatcher_loop(&shard, &registry, max_batch, max_wait, exec))
+                .expect("spawning batcher shard thread");
+            threads.push(handle);
+        }
+        Batcher {
+            handle: BatcherHandle {
+                inner: Arc::new(HandleInner {
+                    shards,
+                    router: Router::new(n_shards),
+                    registry,
+                    queue_cells: cfg.queue_cells.max(1),
+                }),
+            },
+            threads,
+        }
     }
 
-    /// An enqueue handle for a worker thread.
-    pub fn sender(&self) -> mpsc::Sender<Job> {
-        self.tx.clone()
+    /// A cloneable enqueue handle for a worker thread.
+    pub fn handle(&self) -> BatcherHandle {
+        self.handle.clone()
     }
 
     /// Enqueue one request and block for its response (test/bench
-    /// convenience; the HTTP workers use [`Batcher::sender`] + [`submit_via`]).
+    /// convenience; the HTTP workers each hold a [`BatcherHandle`]).
     pub fn submit(&self, request: ServeRequest) -> Result<Vec<u8>, ApiError> {
-        submit_via(&self.tx, request)
+        self.handle.submit(request)
     }
 
-    /// Drop the enqueue side and join the dispatcher. Callers must drop
-    /// every cloned sender first or this blocks until they do. (Merely
-    /// dropping the `Batcher` also stops the dispatcher — once all
-    /// senders are gone — but detaches its thread instead of joining.)
+    /// Close every shard, let the dispatchers drain what is already
+    /// queued, and join them. Subsequent submits fail with a 500.
     pub fn shutdown(self) {
-        let Batcher { tx, handle } = self;
-        drop(tx);
-        if let Some(h) = handle {
+        for shard in self.handle.inner.shards.iter() {
+            shard.lock().open = false;
+            shard.cv.notify_all();
+        }
+        for h in self.threads {
             let _ = h.join();
         }
     }
 }
 
-/// Enqueue on a cloned sender and block for the response.
-pub fn submit_via(
-    tx: &mpsc::Sender<Job>,
-    request: ServeRequest,
-) -> Result<Vec<u8>, ApiError> {
-    let (rtx, rrx) = mpsc::channel();
-    tx.send(Job { request, resp: rtx })
-        .map_err(|_| ApiError::internal("the batcher has stopped"))?;
-    rrx.recv()
-        .unwrap_or_else(|_| Err(ApiError::internal("the batcher dropped the request")))
-}
-
+/// One shard's dispatcher: block for the first job, drain
+/// opportunistically up to `max_batch` within `max_wait`, process, and
+/// repeat; exits once the shard is closed AND its queue is empty (queued
+/// work is always answered).
 fn dispatcher_loop(
-    rx: mpsc::Receiver<Job>,
+    shard: &Shard,
     registry: &ModelRegistry,
     max_batch: usize,
     max_wait: Duration,
-    tier: KernelTier,
+    exec: ExecConfig,
 ) {
     loop {
-        // Block for the first job; drain opportunistically after it.
-        let first = match rx.recv() {
-            Ok(j) => j,
-            Err(_) => return, // every sender dropped: clean shutdown
-        };
-        let mut jobs = vec![first];
-        if max_batch > 1 {
-            let deadline = Instant::now() + max_wait;
-            while jobs.len() < max_batch {
-                let now = Instant::now();
-                if now >= deadline {
+        let mut jobs = Vec::new();
+        {
+            let mut st = shard.lock();
+            loop {
+                if !st.queue.is_empty() {
                     break;
                 }
-                match rx.recv_timeout(deadline - now) {
-                    Ok(j) => jobs.push(j),
-                    Err(mpsc::RecvTimeoutError::Timeout) => break,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                if !st.open {
+                    return;
+                }
+                st = shard.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            take_queued(&mut st, &mut jobs, max_batch);
+            if max_batch > 1 && jobs.len() < max_batch {
+                let deadline = Instant::now() + max_wait;
+                loop {
+                    let now = Instant::now();
+                    if now >= deadline || !st.open {
+                        break;
+                    }
+                    let (guard, timeout) = shard
+                        .cv
+                        .wait_timeout(st, deadline - now)
+                        .unwrap_or_else(|e| e.into_inner());
+                    st = guard;
+                    take_queued(&mut st, &mut jobs, max_batch);
+                    if jobs.len() >= max_batch || timeout.timed_out() {
+                        break;
+                    }
                 }
             }
         }
-        process_batch(registry, jobs, tier);
+        shard.stats.batches.fetch_add(1, Ordering::Relaxed);
+        shard.stats.jobs.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+        shard.stats.occupancy[occupancy_bucket(jobs.len())].fetch_add(1, Ordering::Relaxed);
+        process_batch(registry, jobs, exec);
+    }
+}
+
+/// Move queued jobs into `jobs` until it holds `max_batch`, keeping the
+/// shard's cell meter in sync.
+fn take_queued(st: &mut ShardState, jobs: &mut Vec<Job>, max_batch: usize) {
+    while jobs.len() < max_batch {
+        let Some(job) = st.queue.pop_front() else { break };
+        st.queued_cells = st.queued_cells.saturating_sub(request_cells(&job.request));
+        jobs.push(job);
     }
 }
 
@@ -186,8 +441,9 @@ fn compatible(a: &ServeRequest, b: &ServeRequest) -> bool {
 /// independence), only how many engine calls serve the drain.
 const MAX_GROUP_CELLS: usize = 1 << 21;
 
-/// A request's contribution to [`MAX_GROUP_CELLS`].
-fn request_cells(r: &ServeRequest) -> usize {
+/// A request's contribution to [`MAX_GROUP_CELLS`] and the shard
+/// admission budget ([`BatcherConfig::queue_cells`]).
+pub fn request_cells(r: &ServeRequest) -> usize {
     match r {
         ServeRequest::Simulate(x) => x.times.len(),
         ServeRequest::Reconstruct(x) => x.times.len(),
@@ -199,7 +455,7 @@ fn request_cells(r: &ServeRequest) -> usize {
 /// preserved within each group — not that order matters: every response
 /// is independent of its neighbours), each capped at
 /// [`MAX_GROUP_CELLS`], and run each group as one batched engine call.
-fn process_batch(registry: &ModelRegistry, jobs: Vec<Job>, tier: KernelTier) {
+fn process_batch(registry: &ModelRegistry, jobs: Vec<Job>, exec: ExecConfig) {
     let mut groups: Vec<Vec<Job>> = Vec::new();
     let mut group_cells: Vec<usize> = Vec::new();
     'outer: for job in jobs {
@@ -215,7 +471,7 @@ fn process_batch(registry: &ModelRegistry, jobs: Vec<Job>, tier: KernelTier) {
         group_cells.push(cells);
     }
     for group in groups {
-        run_group(registry, group, tier);
+        run_group(registry, group, exec);
     }
 }
 
@@ -223,8 +479,8 @@ fn process_batch(registry: &ModelRegistry, jobs: Vec<Job>, tier: KernelTier) {
 /// answer every job. The engine call runs under `catch_unwind`: a panic
 /// (engine invariant violation on some adversarial input) must answer
 /// the group with 500s, not kill the dispatcher thread and brick every
-/// future request into "the batcher has stopped".
-fn run_group(registry: &ModelRegistry, jobs: Vec<Job>, tier: KernelTier) {
+/// future request on its shard into "the batcher has stopped".
+fn run_group(registry: &ModelRegistry, jobs: Vec<Job>, exec: ExecConfig) {
     let name = jobs[0].request.model().to_string();
     let Some(entry) = registry.get(&name) else {
         let err = ApiError::unknown_model(&name);
@@ -253,7 +509,7 @@ fn run_group(registry: &ModelRegistry, jobs: Vec<Job>, tier: KernelTier) {
     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         // Nothing outlives the closure on panic: the engine works on
         // per-call state and reads the registry immutably.
-        compute_group(entry, &requests, tier)
+        compute_group(entry, &requests, exec)
     }));
     match outcome {
         Ok(bodies) => {
@@ -272,7 +528,11 @@ fn run_group(registry: &ModelRegistry, jobs: Vec<Job>, tier: KernelTier) {
 
 /// The one-batched-engine-call body of [`run_group`]: responses for a
 /// validated compatibility group, in job order.
-fn compute_group(entry: &ModelEntry, requests: &[&ServeRequest], tier: KernelTier) -> Vec<Vec<u8>> {
+fn compute_group(
+    entry: &ModelEntry,
+    requests: &[&ServeRequest],
+    exec: ExecConfig,
+) -> Vec<Vec<u8>> {
     let dz = entry.model.cfg.latent_dim;
     let dx = entry.model.cfg.obs_dim;
     let keys: Vec<PrngKey> = requests.iter().map(|r| r.key()).collect();
@@ -330,7 +590,8 @@ fn compute_group(entry: &ModelEntry, requests: &[&ServeRequest], tier: KernelTie
                     r.obs.as_slice()
                 })
                 .collect();
-            let cfg = ElboConfig { substeps: first.substeps, kl_weight: first.kl_weight, tier };
+            let cfg =
+                ElboConfig { substeps: first.substeps, kl_weight: first.kl_weight, exec };
             let outs = elbo_value_multi_batch(
                 &entry.model,
                 &entry.params,
@@ -355,9 +616,9 @@ fn compute_group(entry: &ModelEntry, requests: &[&ServeRequest], tier: KernelTie
 /// The per-request **scalar oracle**: the same response computed with
 /// one-request scalar engine calls (no batching anywhere). The serving
 /// determinism contract is that every batched response byte-equals this
-/// — `tests/serve.rs` and `sdegrad bench serve` assert it. The contract
-/// is per-tier: the oracle must score the ELBO under the same kernel
-/// tier the batcher runs.
+/// — `tests/serve.rs` and `sdegrad bench serve` assert it, across shard
+/// counts and queue states. The contract is per-tier: the oracle must
+/// score the ELBO under the same kernel tier the batcher runs.
 pub fn scalar_response(
     entry: &ModelEntry,
     req: &ServeRequest,
@@ -392,7 +653,11 @@ pub fn scalar_response(
             Ok(protocol::reconstruct_response(r, entry.fingerprint, &latent, dz, &recon, dx))
         }
         ServeRequest::Elbo(r) => {
-            let cfg = ElboConfig { substeps: r.substeps, kl_weight: r.kl_weight, tier };
+            let cfg = ElboConfig {
+                substeps: r.substeps,
+                kl_weight: r.kl_weight,
+                exec: ExecConfig::new().tier(tier),
+            };
             let out = elbo_value_multi(
                 &entry.model,
                 &entry.params,
@@ -521,7 +786,7 @@ mod tests {
             jobs.push(Job { request: r.clone(), resp: tx });
             rxs.push(rx);
         }
-        process_batch(&registry, jobs, KernelTier::Exact);
+        process_batch(&registry, jobs, ExecConfig::default());
         for (i, rx) in rxs.iter().enumerate() {
             let got = rx.recv().expect("no response").expect("error response");
             assert_eq!(got, expected[i], "request {i} diverged from the scalar oracle");
@@ -550,7 +815,7 @@ mod tests {
         process_batch(
             &registry,
             vec![Job { request: good, resp: tx1 }, Job { request: bad, resp: tx2 }],
-            KernelTier::Exact,
+            ExecConfig::default(),
         );
         assert_eq!(rx1.recv().unwrap().unwrap(), expected);
         let err = rx2.recv().unwrap().unwrap_err();
@@ -565,7 +830,7 @@ mod tests {
             r.model = "missing".into();
         }
         let (tx, rx) = mpsc::channel();
-        process_batch(&registry, vec![Job { request: bad, resp: tx }], KernelTier::Exact);
+        process_batch(&registry, vec![Job { request: bad, resp: tx }], ExecConfig::default());
         let err = rx.recv().unwrap().unwrap_err();
         assert_eq!(err.status, 404);
         assert_eq!(err.code, "unknown_model");
@@ -583,5 +848,122 @@ mod tests {
         let got = batcher.submit(sim(42)).unwrap();
         assert_eq!(got, entry_bytes);
         batcher.shutdown();
+    }
+
+    /// Shard count is invisible in response bytes: the same requests
+    /// answered through 1, 2, and 4 shards all byte-equal the scalar
+    /// oracle.
+    #[test]
+    fn responses_are_identical_across_shard_counts() {
+        let registry = tiny_registry();
+        let requests: Vec<ServeRequest> =
+            vec![sim(1), rec(2), elbo(3, 2), sim(4), elbo(5, 1), rec(6)];
+        let expected: Vec<Vec<u8>> = {
+            let entry = registry.get("default").unwrap();
+            requests
+                .iter()
+                .map(|r| scalar_response(entry, r, KernelTier::Exact).unwrap())
+                .collect()
+        };
+        for shards in [1usize, 2, 4] {
+            let cfg = BatcherConfig { shards, max_batch: 4, ..Default::default() };
+            let batcher = Batcher::start(registry.clone(), cfg);
+            for (r, want) in requests.iter().zip(&expected) {
+                let got = batcher.submit(r.clone()).expect("success response");
+                assert_eq!(&got, want, "{shards}-shard response diverged from the oracle");
+            }
+            batcher.shutdown();
+        }
+    }
+
+    /// Routing is a pure function of (model fingerprint, endpoint): every
+    /// simulate request lands on one shard, and the per-shard counters
+    /// account for exactly the submitted jobs.
+    #[test]
+    fn routing_is_affine_and_counters_add_up() {
+        let registry = tiny_registry();
+        let batcher =
+            Batcher::start(registry, BatcherConfig { shards: 4, ..Default::default() });
+        let handle = batcher.handle();
+        let home = handle.route(&sim(0));
+        for seed in 1..10 {
+            assert_eq!(handle.route(&sim(seed)), home, "same (model, endpoint) must co-route");
+        }
+        for seed in 0..6 {
+            batcher.submit(sim(seed)).unwrap();
+        }
+        let snaps = handle.snapshots();
+        assert_eq!(snaps.len(), 4);
+        assert_eq!(snaps.iter().map(|s| s.submitted).sum::<u64>(), 6);
+        assert_eq!(snaps.iter().map(|s| s.jobs).sum::<u64>(), 6, "every job answered");
+        assert_eq!(snaps.iter().map(|s| s.shed).sum::<u64>(), 0);
+        assert_eq!(snaps[home].submitted, 6, "all simulate traffic on the home shard");
+        assert!(
+            snaps.iter().all(|s| s.depth == 0 && s.queued_cells == 0),
+            "queues drained after blocking submits"
+        );
+        batcher.shutdown();
+    }
+
+    /// A queue past its cell budget sheds with 429/overloaded. Uses a
+    /// handle with NO dispatcher threads so the queue occupancy is fully
+    /// deterministic (a live dispatcher could drain it mid-test).
+    #[test]
+    fn admission_control_sheds_when_the_queue_is_over_budget() {
+        let registry = tiny_registry();
+        let handle = BatcherHandle {
+            inner: Arc::new(HandleInner {
+                shards: vec![Arc::new(Shard::new())],
+                router: Router::new(1),
+                registry,
+                queue_cells: 1, // any request into a non-empty queue sheds
+            }),
+        };
+        // Occupy the queue by hand (no dispatcher will drain it).
+        let (tx, _sentinel) = mpsc::channel();
+        {
+            let mut st = handle.inner.shards[0].lock();
+            st.queue.push_back(Job { request: sim(7), resp: tx });
+            st.queued_cells += request_cells(&sim(7));
+        }
+        // 5 queued cells > budget 1: the next submit sheds with 429.
+        let err = handle.submit(sim(8)).unwrap_err();
+        assert_eq!((err.status, err.code), (429, "overloaded"));
+        let snap = handle.snapshots()[0];
+        assert_eq!((snap.shed, snap.submitted), (1, 0));
+        assert_eq!((snap.depth, snap.queued_cells), (1, 5), "shed job never queued");
+    }
+
+    /// The empty-queue admission exception: a request larger than the
+    /// whole budget still succeeds once the shard drains, so shedding
+    /// sheds load — it never starves a request class. And the bytes a
+    /// post-shed retry gets are the oracle's, unchanged by queue history.
+    #[test]
+    fn over_budget_requests_recover_once_the_queue_drains() {
+        let registry = tiny_registry();
+        let cfg = BatcherConfig { shards: 1, queue_cells: 1, ..Default::default() };
+        let batcher = Batcher::start(registry.clone(), cfg);
+        // submit() blocks until the response, so each request meets an
+        // empty queue — every one exceeds the 1-cell budget, every one
+        // is admitted via the empty-queue exception.
+        for seed in [7u64, 8] {
+            let got = batcher.submit(sim(seed)).expect("empty queue admits");
+            let entry = registry.get("default").unwrap();
+            let want = scalar_response(entry, &sim(seed), KernelTier::Exact).unwrap();
+            assert_eq!(got, want, "queue budget must not change success bytes");
+        }
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn occupancy_buckets_partition_batch_sizes() {
+        assert_eq!(occupancy_bucket(1), 0);
+        assert_eq!(occupancy_bucket(2), 1);
+        assert_eq!(occupancy_bucket(3), 2);
+        assert_eq!(occupancy_bucket(4), 2);
+        assert_eq!(occupancy_bucket(8), 3);
+        assert_eq!(occupancy_bucket(16), 4);
+        assert_eq!(occupancy_bucket(17), 5);
+        assert_eq!(occupancy_bucket(10_000), 5);
     }
 }

@@ -2,19 +2,26 @@
 //! request per connection, `Connection: close`). One implementation
 //! shared by the `sdegrad bench serve` load harness and the end-to-end
 //! test suite — and handy for scripting against a running server
-//! without curl.
+//! without curl. Understands both `Content-Length` bodies and the
+//! server's `Transfer-Encoding: chunked` streaming responses (the
+//! decoded payload is byte-identical either way — framing is transport,
+//! not content).
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
 
-/// Send one request over a fresh connection; returns `(status, body)`.
-/// A status of 0 means the response head could not be parsed.
-pub fn request(
+/// Send one request over a fresh connection; returns
+/// `(status, headers, body)` with the chunked framing (if any) already
+/// decoded. `headers` is the raw header block (request line included,
+/// `\r\n`-separated) for callers that assert on `Retry-After` or
+/// `Transfer-Encoding`. A status of 0 means the response head could not
+/// be parsed.
+pub fn request_with_headers(
     addr: SocketAddr,
     method: &str,
     path: &str,
     body: &str,
-) -> std::io::Result<(u16, Vec<u8>)> {
+) -> std::io::Result<(u16, String, Vec<u8>)> {
     let mut s = TcpStream::connect(addr)?;
     s.write_all(
         format!(
@@ -31,12 +38,62 @@ pub fn request(
         .position(|w| w == b"\r\n\r\n")
         .map(|p| p + 4)
         .unwrap_or(raw.len());
-    let status = std::str::from_utf8(&raw[..head_end])
-        .ok()
-        .and_then(|h| h.split_whitespace().nth(1))
+    let head = String::from_utf8_lossy(&raw[..head_end]).into_owned();
+    let status = head
+        .split_whitespace()
+        .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(0);
-    Ok((status, raw[head_end..].to_vec()))
+    let chunked = head
+        .to_ascii_lowercase()
+        .contains("transfer-encoding: chunked");
+    let payload = &raw[head_end..];
+    let body = if chunked {
+        decode_chunked(payload).unwrap_or_else(|| payload.to_vec())
+    } else {
+        payload.to_vec()
+    };
+    Ok((status, head, body))
+}
+
+/// Decode an HTTP/1.1 chunked body; `None` on malformed framing (the
+/// caller falls back to the raw bytes so a truncated read still
+/// surfaces as a comparison failure, not a panic).
+fn decode_chunked(mut rest: &[u8]) -> Option<Vec<u8>> {
+    let mut out = Vec::with_capacity(rest.len());
+    loop {
+        let line_end = rest.windows(2).position(|w| w == b"\r\n")?;
+        let size_str = std::str::from_utf8(&rest[..line_end]).ok()?;
+        // Chunk extensions (";ext=…") are legal; the size is the part
+        // before any semicolon.
+        let size_hex = size_str.split(';').next()?.trim();
+        let size = usize::from_str_radix(size_hex, 16).ok()?;
+        rest = &rest[line_end + 2..];
+        if size == 0 {
+            return Some(out);
+        }
+        if rest.len() < size + 2 {
+            return None;
+        }
+        out.extend_from_slice(&rest[..size]);
+        if &rest[size..size + 2] != b"\r\n" {
+            return None;
+        }
+        rest = &rest[size + 2..];
+    }
+}
+
+/// Send one request over a fresh connection; returns `(status, body)`
+/// (chunked framing decoded). A status of 0 means the response head
+/// could not be parsed.
+pub fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> std::io::Result<(u16, Vec<u8>)> {
+    let (status, _headers, body) = request_with_headers(addr, method, path, body)?;
+    Ok((status, body))
 }
 
 /// POST a JSON body.
@@ -47,4 +104,23 @@ pub fn post(addr: SocketAddr, path: &str, body: &str) -> std::io::Result<(u16, V
 /// GET (empty body).
 pub fn get(addr: SocketAddr, path: &str) -> std::io::Result<(u16, Vec<u8>)> {
     request(addr, "GET", path, "")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_chunked_reassembles_frames() {
+        let wire = b"4\r\nwiki\r\n5\r\npedia\r\n0\r\n\r\n";
+        assert_eq!(decode_chunked(wire).unwrap(), b"wikipedia");
+    }
+
+    #[test]
+    fn decode_chunked_handles_extensions_and_rejects_truncation() {
+        let wire = b"4;name=val\r\nwiki\r\n0\r\n\r\n";
+        assert_eq!(decode_chunked(wire).unwrap(), b"wiki");
+        assert!(decode_chunked(b"ff\r\nshort\r\n").is_none(), "truncated chunk");
+        assert!(decode_chunked(b"zz\r\nwiki\r\n").is_none(), "bad size digits");
+    }
 }

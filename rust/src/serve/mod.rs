@@ -1,41 +1,55 @@
 //! Inference serving: `sdegrad serve` — a std-only HTTP server that
 //! answers simulation / reconstruction / scoring requests from trained
 //! latent-SDE checkpoints, with **dynamic micro-batching onto the
-//! batched SoA engine**.
+//! batched SoA engine** across N dispatcher shards.
 //!
 //! ## Architecture
 //!
 //! ```text
-//!  TCP accept thread ──► connection queue ──► N worker threads
+//!  TCP accept thread ──► connection queue ──► W worker threads
 //!                                               │  parse HTTP + JSON,
 //!                                               │  validate, cache probe
 //!                                               ▼
-//!                                     micro-batch queue (mpsc)
-//!                                               │
-//!                                    dispatcher thread (batcher):
-//!                                    drain ≤ max_batch within
-//!                                    max_wait_us, group compatible
-//!                                    requests, ONE batched engine
-//!                                    call per group
-//!                                               │
-//!                       ┌───────────────────────┼───────────────────────┐
-//!         sample_prior_paths_batch  sample_posterior_paths_batch   elbo_value_multi_batch
-//!             (prior fleet)         (batched encoder + ctx solve)  (R requests × S samples)
+//!                            consistent-hash router (rendezvous over
+//!                            (model fingerprint, endpoint))
+//!                                │
+//!              ┌─────────────────┼─────────────────┐
+//!              ▼                 ▼                 ▼
+//!        shard 0 queue     shard 1 queue  …  shard N−1 queue
+//!        (bounded: cell    admission control sheds over-budget
+//!         budget)          requests with 429 + Retry-After
+//!              │                 │                 │
+//!        dispatcher 0      dispatcher 1      dispatcher N−1
+//!        drain ≤ max_batch within max_wait_us, group compatible
+//!        requests, ONE batched engine call per group
+//!              │
+//!   ┌──────────┼──────────────────────┬──────────────────────────┐
+//!   ▼          ▼                      ▼                          ▼
+//!  sample_prior_paths_batch  sample_posterior_paths_batch  elbo_value_multi_batch
+//!      (prior fleet)         (batched encoder + ctx solve)  (R requests × S samples)
 //! ```
 //!
 //! * [`server`] — TCP listener + minimal HTTP/1.1 parsing on a
-//!   worker-thread pool; endpoints `GET /healthz`, `POST /v1/simulate`,
-//!   `POST /v1/reconstruct`, `POST /v1/elbo`.
+//!   worker-thread pool; endpoints `GET /healthz`, `GET /metrics`,
+//!   `POST /v1/simulate`, `POST /v1/reconstruct`, `POST /v1/elbo`. Long
+//!   `/v1/simulate` bodies stream with `Transfer-Encoding: chunked`.
+//! * [`router`] — rendezvous hashing of `(model fingerprint, endpoint)`
+//!   onto shards: affine (compatible requests keep meeting in one
+//!   queue, so cross-request batching stays effective) and minimally
+//!   disruptive under shard-count changes.
 //! * [`protocol`] — JSON request/response types over the crate's single
 //!   JSON module ([`crate::metrics::json`]); every request carries a
 //!   `seed`, so a response is a **pure function of the request and the
 //!   model fingerprint**.
-//! * [`batcher`] — the dynamic micro-batcher. Because the batched
-//!   engine computes each path's floats independently of its batch
-//!   neighbours (PR 3/4's bit-identical-batching guarantee), a
-//!   response is pinned bit-identical to a per-request scalar engine
-//!   call for ANY arrival order, batch size, and group layout — which
-//!   is exactly what makes cross-request batching safe to ship.
+//! * [`batcher`] — the sharded dynamic micro-batcher: per-shard bounded
+//!   queues + dispatcher threads, admission control (429 `overloaded`
+//!   when a shard's cell budget is exceeded), per-shard monotone
+//!   counters for `GET /metrics`. Because the batched engine computes
+//!   each path's floats independently of its batch neighbours (PR 3/4's
+//!   bit-identical-batching guarantee), a response is pinned
+//!   bit-identical to a per-request scalar engine call for ANY arrival
+//!   order, batch size, shard count, and group layout — which is
+//!   exactly what makes cross-request batching safe to ship.
 //! * [`registry`] — loads one or more checkpoints (`SDEGRAD1`/`2`),
 //!   fingerprints them, serves multiple named models.
 //! * [`cache`] — LRU response cache keyed on model fingerprint +
@@ -44,26 +58,32 @@
 //!
 //! ## Determinism contract
 //!
-//! For a fixed model checkpoint, every `/v1/*` response body is a pure
-//! function of the canonicalized request: per-request `seed` →
+//! For a fixed model checkpoint, every 200 `/v1/*` response body is a
+//! pure function of the canonicalized request: per-request `seed` →
 //! [`crate::prng::PrngKey`], engine floats independent of batching,
 //! shortest-roundtrip float formatting. `tests/serve.rs` pins exact
 //! byte equality across micro-batch layouts (`max_batch` 1 vs 16),
-//! worker counts, concurrent-client arrival orders, and cache state.
+//! shard counts (1/2/4), worker counts, concurrent-client arrival
+//! orders, queue states, and cache states. Load shedding changes WHICH
+//! requests get a 429 — never a success byte.
 //!
-//! `sdegrad bench serve` is the in-process load harness (concurrent
-//! clients over localhost → req/sec + p50/p99 → `BENCH_serve.json`,
-//! gated by `sdegrad bench compare`).
+//! `sdegrad bench serve` is the in-process load harness: closed-loop
+//! concurrent clients (req/sec + p50/p99) plus an open-loop traffic
+//! simulator with heavy-tail request sizes, bursty arrivals, and a
+//! deliberate overload episode (p99 + shed-rate, gated by
+//! `sdegrad bench compare`). Artifacts land in `BENCH_serve.json`.
 
 pub mod batcher;
 pub mod cache;
 pub mod client;
 pub mod protocol;
 pub mod registry;
+pub mod router;
 pub mod server;
 
-pub use batcher::{Batcher, BatcherConfig};
+pub use batcher::{Batcher, BatcherConfig, BatcherHandle, ShardSnapshot};
 pub use cache::ResponseCache;
 pub use protocol::{ApiError, ServeRequest};
 pub use registry::{dataset_model_config, ModelEntry, ModelRegistry};
+pub use router::Router;
 pub use server::{Server, ServeConfig};

@@ -100,6 +100,18 @@ impl ApiError {
         }
     }
 
+    /// Load shedding: the routed shard's queue is over its admission
+    /// budget ([`super::batcher::BatcherConfig::queue_cells`]). The HTTP
+    /// layer adds a `Retry-After` header to 429 responses.
+    pub fn overloaded() -> Self {
+        ApiError {
+            status: 429,
+            code: "overloaded",
+            message: "the server is shedding load; retry after the Retry-After interval"
+                .to_string(),
+        }
+    }
+
     pub fn timeout() -> Self {
         ApiError {
             status: 408,

@@ -1,0 +1,124 @@
+//! Consistent-hash request routing across dispatcher shards.
+//!
+//! The sharded batcher ([`super::batcher`]) runs N independent
+//! dispatcher threads, each with its own bounded queue. The router picks
+//! a shard from the request's **routing key** — `(model fingerprint,
+//! endpoint)` — with rendezvous (highest-random-weight) hashing: score
+//! every shard against the key, take the argmax. Two properties matter
+//! here:
+//!
+//! * **Affinity**: every request for the same `(model, endpoint)` lands
+//!   on the same shard, so compatible requests keep meeting in one queue
+//!   and the micro-batcher's cross-request grouping stays as effective
+//!   as it was with a single dispatcher. (Grouping compatibility is
+//!   strictly finer than the routing key — same endpoint + model plus
+//!   bit-equal grids/knobs — so routing never separates two requests
+//!   that could have shared an engine call.)
+//! * **Minimal disruption**: rendezvous hashing moves only the keys
+//!   whose argmax shard disappears when the shard count changes —
+//!   there is no ring to rebalance.
+//!
+//! Routing never changes a response byte: shards share the registry and
+//! the same per-request scalar-oracle contract, so WHERE a request runs
+//! is invisible in its 200 body (`tests/serve.rs` pins byte-identity
+//! across shard counts 1/2/4).
+
+/// FNV-1a 64-bit, the same hash family the model fingerprint and the
+/// response cache use — tiny, stable across platforms, no dependency.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+fn fnv1a(h: u64, bytes: &[u8]) -> u64 {
+    let mut h = h;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Rendezvous router over a fixed shard count.
+#[derive(Clone, Copy, Debug)]
+pub struct Router {
+    shards: usize,
+}
+
+impl Router {
+    /// A router over `shards` dispatcher shards (clamped to ≥ 1).
+    pub fn new(shards: usize) -> Router {
+        Router { shards: shards.max(1) }
+    }
+
+    /// The shard count this router spreads keys over.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The highest-scoring shard for `(fingerprint, endpoint)`.
+    /// Deterministic: same key → same shard for the lifetime of the
+    /// server, on every platform.
+    pub fn route(&self, fingerprint: u64, endpoint: &str) -> usize {
+        (0..self.shards)
+            .max_by_key(|&shard| Self::score(fingerprint, endpoint, shard))
+            .expect("at least one shard")
+    }
+
+    /// The rendezvous weight of one `(key, shard)` pair.
+    fn score(fingerprint: u64, endpoint: &str, shard: usize) -> u64 {
+        let h = fnv1a(FNV_OFFSET, &fingerprint.to_le_bytes());
+        let h = fnv1a(h, endpoint.as_bytes());
+        fnv1a(h, &(shard as u64).to_le_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_are_stable_and_in_range() {
+        let r = Router::new(4);
+        for fp in [0u64, 1, 0xdead_beef, u64::MAX] {
+            for ep in ["/v1/simulate", "/v1/reconstruct", "/v1/elbo"] {
+                let s = r.route(fp, ep);
+                assert!(s < 4);
+                assert_eq!(s, r.route(fp, ep), "routing must be deterministic");
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_takes_everything_and_zero_clamps() {
+        let r = Router::new(1);
+        assert_eq!(r.route(123, "/v1/elbo"), 0);
+        assert_eq!(Router::new(0).shards(), 1, "0 shards clamps to 1");
+    }
+
+    /// Enough distinct keys must spread over every shard — a router that
+    /// funnels all traffic to one shard silently serializes the server.
+    #[test]
+    fn many_keys_reach_every_shard() {
+        let r = Router::new(4);
+        let mut hit = [false; 4];
+        for fp in 0..256u64 {
+            hit[r.route(fp, "/v1/simulate")] = true;
+        }
+        assert_eq!(hit, [true; 4], "256 fingerprints must cover all 4 shards");
+    }
+
+    /// Rendezvous minimal disruption: growing the shard count only moves
+    /// keys whose new argmax IS the new shard — every other key keeps
+    /// its old assignment.
+    #[test]
+    fn growing_shards_only_moves_keys_to_the_new_shard() {
+        let small = Router::new(3);
+        let big = Router::new(4);
+        for fp in 0..512u64 {
+            let before = small.route(fp, "/v1/elbo");
+            let after = big.route(fp, "/v1/elbo");
+            assert!(
+                after == before || after == 3,
+                "key {fp} moved {before}→{after} without the new shard winning"
+            );
+        }
+    }
+}

@@ -6,9 +6,16 @@
 //! Request flow per connection (one request per connection,
 //! `Connection: close`): worker reads + parses HTTP, parses + validates
 //! the JSON body ([`super::protocol`]), probes the response cache, and
-//! otherwise enqueues the request on the micro-batcher
-//! ([`super::batcher`]) and blocks for the computed bytes. Errors at
-//! every layer map to JSON error bodies with stable codes:
+//! otherwise routes the request to its dispatcher shard through the
+//! sharded micro-batcher ([`super::batcher`]) and blocks for the
+//! computed bytes. Admission control lives in the batcher: a shard over
+//! its queue budget sheds with 429 + `Retry-After` instead of queueing
+//! unbounded work. Long `/v1/simulate` bodies stream back with
+//! `Transfer-Encoding: chunked` (same bytes, framed incrementally).
+//! `GET /metrics` reports per-shard queue counters, the batch-occupancy
+//! histogram, cache hit rates, and process-wide engine counters as
+//! strict JSON. Errors at every layer map to JSON error bodies with
+//! stable codes:
 //!
 //! | status | code | trigger |
 //! |---|---|---|
@@ -17,6 +24,7 @@
 //! | 405 | `method_not_allowed` | e.g. GET on a `/v1/*` endpoint |
 //! | 408 | `timeout` | the connection exceeded the per-request deadline |
 //! | 413 | `body_too_large` | body exceeds `max_body_bytes` |
+//! | 429 | `overloaded` | shard queue over budget — retry per `Retry-After` |
 //! | 500 | `internal` | batcher unavailable / engine call failed |
 
 use std::io::{Read, Write};
@@ -25,12 +33,13 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
 
-use super::batcher::{submit_via, Batcher, BatcherConfig, Job};
+use super::batcher::{Batcher, BatcherConfig, BatcherHandle, OCCUPANCY_BUCKETS};
 use super::cache::{cache_key, ResponseCache};
 use super::protocol::{self, ApiError};
 use super::registry::ModelRegistry;
 use crate::ensure;
 use crate::error::{Context, Result};
+use crate::runtime::ExecConfig;
 
 /// Maximum bytes of request line + headers.
 const MAX_HEAD_BYTES: usize = 16 * 1024;
@@ -42,6 +51,8 @@ const IO_TIMEOUT: Duration = Duration::from_secs(10);
 /// total (checked between reads in [`read_request`] and the post-error
 /// drain).
 const CONN_DEADLINE: Duration = Duration::from_secs(30);
+/// Chunk size for `Transfer-Encoding: chunked` streaming.
+const STREAM_CHUNK_BYTES: usize = 4096;
 
 /// Server configuration (`sdegrad serve` flags map 1:1 onto these).
 #[derive(Clone, Copy, Debug)]
@@ -60,13 +71,25 @@ pub struct ServeConfig {
     /// Micro-batcher: how long to wait for more requests after the
     /// first, in microseconds.
     pub max_wait_us: u64,
+    /// Dispatcher shards (`--shards`); forwarded to
+    /// [`BatcherConfig::shards`].
+    pub shards: usize,
+    /// Per-shard admission budget in request cells (`--queue-cells`);
+    /// forwarded to [`BatcherConfig::queue_cells`]. Over-budget requests
+    /// get 429 + `Retry-After`.
+    pub queue_cells: usize,
+    /// 200 responses on `/v1/simulate` at least this many bytes long
+    /// stream back with `Transfer-Encoding: chunked`
+    /// (`--stream-threshold`). `usize::MAX` disables streaming.
+    pub stream_threshold_bytes: usize,
     /// LRU response-cache entries (0 disables caching).
     pub cache_capacity: usize,
     /// Maximum request-body bytes.
     pub max_body_bytes: usize,
-    /// Kernel tier for the batched ELBO-scoring engine (`--tier
-    /// exact|fast`). Forwarded to [`BatcherConfig::tier`].
-    pub tier: crate::sde::KernelTier,
+    /// Execution configuration for the engine calls (`--tier
+    /// exact|fast`); forwarded to [`BatcherConfig::exec`]. Replaces the
+    /// pre-0.2 `tier` field — [`ServeConfig::tier`] delegates.
+    pub exec: ExecConfig,
 }
 
 impl Default for ServeConfig {
@@ -78,14 +101,32 @@ impl Default for ServeConfig {
             workers: crate::coordinator::config::num_threads(),
             max_batch: 16,
             max_wait_us: 500,
+            shards: 1,
+            queue_cells: super::batcher::DEFAULT_QUEUE_CELLS,
+            stream_threshold_bytes: 64 * 1024,
             cache_capacity: 1024,
             max_body_bytes: 1 << 20,
-            tier: crate::sde::KernelTier::Exact,
+            exec: ExecConfig::default(),
         }
     }
 }
 
-/// A running server: accept thread + worker pool + batcher.
+impl ServeConfig {
+    /// Set the kernel tier (delegates to `exec.tier` — the pre-0.2
+    /// `tier` field's replacement).
+    pub fn tier(mut self, tier: crate::sde::KernelTier) -> Self {
+        self.exec.tier = tier;
+        self
+    }
+
+    /// Replace the whole execution configuration.
+    pub fn exec(mut self, exec: ExecConfig) -> Self {
+        self.exec = exec;
+        self
+    }
+}
+
+/// A running server: accept thread + worker pool + sharded batcher.
 pub struct Server {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
@@ -111,7 +152,9 @@ impl Server {
             BatcherConfig {
                 max_batch: cfg.max_batch,
                 max_wait_us: cfg.max_wait_us,
-                tier: cfg.tier,
+                shards: cfg.shards,
+                queue_cells: cfg.queue_cells,
+                exec: cfg.exec,
             },
         );
         // None when disabled, so the hot path skips canonicalization, the
@@ -132,9 +175,10 @@ impl Server {
             let conn_rx = conn_rx.clone();
             let registry = registry.clone();
             let cache = cache.clone();
-            let job_tx = batcher.sender();
+            let handle = batcher.handle();
             let max_body = cfg.max_body_bytes;
-            let handle = std::thread::Builder::new()
+            let stream_threshold = cfg.stream_threshold_bytes;
+            let worker = std::thread::Builder::new()
                 .name(format!("sdegrad-serve-{w}"))
                 .spawn(move || loop {
                     // Take one connection; exit when the accept thread is
@@ -144,14 +188,19 @@ impl Server {
                         rx.recv()
                     };
                     match stream {
-                        Ok(s) => {
-                            handle_connection(s, &registry, cache.as_deref(), &job_tx, max_body)
-                        }
+                        Ok(s) => handle_connection(
+                            s,
+                            &registry,
+                            cache.as_deref(),
+                            &handle,
+                            max_body,
+                            stream_threshold,
+                        ),
                         Err(_) => break,
                     }
                 })
                 .expect("spawning serve worker");
-            worker_handles.push(handle);
+            worker_handles.push(worker);
         }
 
         let accept_stop = stop.clone();
@@ -200,7 +249,7 @@ impl Server {
     }
 
     /// Stop accepting, drain in-flight connections, and join every
-    /// thread (accept → workers → batcher).
+    /// thread (accept → workers → batcher shards).
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
         // Wake the blocking accept with a throwaway connection.
@@ -212,7 +261,8 @@ impl Server {
             let _ = h.join();
         }
         if let Some(b) = self.batcher.take() {
-            // All worker-held job senders are gone; this joins cleanly.
+            // Workers (and their blocking submits) are done; the shards
+            // drain whatever is left and join cleanly.
             b.shutdown();
         }
     }
@@ -237,21 +287,29 @@ fn handle_connection(
     mut stream: TcpStream,
     registry: &ModelRegistry,
     cache: Option<&Mutex<ResponseCache>>,
-    job_tx: &mpsc::Sender<Job>,
+    handle: &BatcherHandle,
     max_body: usize,
+    stream_threshold: usize,
 ) {
     let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
     let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
     let deadline = std::time::Instant::now() + CONN_DEADLINE;
-    let (status, body, unread_input) = match read_request(&mut stream, max_body, deadline) {
-        Ok(Some((method, path, body))) => {
-            let (status, body) = route(&method, &path, &body, registry, cache, job_tx);
-            (status, body, false)
-        }
-        Ok(None) => return, // client closed before sending a request
-        Err(e) => (e.status, e.body(), true),
-    };
-    write_response(&mut stream, status, &body);
+    let (status, body, streamable, unread_input) =
+        match read_request(&mut stream, max_body, deadline) {
+            Ok(Some((method, path, body))) => {
+                let (status, body) = route(&method, &path, &body, registry, cache, handle);
+                // Only successful simulate payloads stream: they carry
+                // whole decoded paths and dominate long-response traffic.
+                (status, body, path == "/v1/simulate", false)
+            }
+            Ok(None) => return, // client closed before sending a request
+            Err(e) => (e.status, e.body(), false, true),
+        };
+    if streamable && status == 200 && body.len() >= stream_threshold {
+        write_chunked_response(&mut stream, status, &body);
+    } else {
+        write_response(&mut stream, status, &body);
+    }
     if unread_input {
         // An early error reply (e.g. 413) can leave request bytes unread;
         // closing then would RST the connection and could destroy the
@@ -353,21 +411,22 @@ fn route(
     body: &[u8],
     registry: &ModelRegistry,
     cache: Option<&Mutex<ResponseCache>>,
-    job_tx: &mpsc::Sender<Job>,
+    handle: &BatcherHandle,
 ) -> (u16, Vec<u8>) {
     match (method, path) {
         ("GET", "/healthz") => (200, protocol::healthz_response(&registry.models())),
+        ("GET", "/metrics") => (200, metrics_response(handle, cache)),
         ("POST", p) if API_ENDPOINTS.contains(&p) => {
             let Ok(body) = std::str::from_utf8(body) else {
                 let e = ApiError::bad_json("request body is not UTF-8");
                 return (e.status, e.body());
             };
-            match answer_api(p, body, registry, cache, job_tx) {
+            match answer_api(p, body, registry, cache, handle) {
                 Ok(bytes) => (200, bytes),
                 Err(e) => (e.status, e.body()),
             }
         }
-        (_, p) if p == "/healthz" || API_ENDPOINTS.contains(&p) => {
+        (_, p) if p == "/healthz" || p == "/metrics" || API_ENDPOINTS.contains(&p) => {
             let e = ApiError::method_not_allowed(method, p);
             (e.status, e.body())
         }
@@ -378,13 +437,80 @@ fn route(
     }
 }
 
-/// Parse → validate → cache probe → micro-batcher → cache fill.
+/// The `GET /metrics` body: per-shard queue/batch counters, totals,
+/// cache hit statistics, and process-wide engine counters. Built by
+/// hand from integers only (no floats), so the output is strict JSON
+/// by construction and byte-stable for a given counter state.
+fn metrics_response(handle: &BatcherHandle, cache: Option<&Mutex<ResponseCache>>) -> Vec<u8> {
+    let snaps = handle.snapshots();
+    let mut out = String::with_capacity(256 + 160 * snaps.len());
+    out.push_str("{\"shards\":[");
+    for (i, s) in snaps.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"shard\":{i},\"depth\":{},\"queued_cells\":{},\"submitted\":{},\
+             \"shed\":{},\"batches\":{},\"jobs\":{},\"occupancy\":[",
+            s.depth, s.queued_cells, s.submitted, s.shed, s.batches, s.jobs
+        ));
+        for (j, c) in s.occupancy.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            out.push_str(&c.to_string());
+        }
+        out.push_str("]}");
+    }
+    // Bucket upper bounds so a scraper can label the histogram without
+    // hardcoding them (the last bucket is open-ended).
+    out.push_str("],\"occupancy_le\":[");
+    for (j, &hi) in OCCUPANCY_BUCKETS.iter().enumerate() {
+        if j > 0 {
+            out.push(',');
+        }
+        if hi == usize::MAX {
+            out.push_str("null");
+        } else {
+            out.push_str(&hi.to_string());
+        }
+    }
+    let totals = |f: fn(&super::batcher::ShardSnapshot) -> u64| -> u64 {
+        snaps.iter().map(f).sum()
+    };
+    out.push_str(&format!(
+        "],\"totals\":{{\"submitted\":{},\"shed\":{},\"batches\":{},\"jobs\":{}}}",
+        totals(|s| s.submitted),
+        totals(|s| s.shed),
+        totals(|s| s.batches),
+        totals(|s| s.jobs),
+    ));
+    let (hits, misses, entries) = cache
+        .map(|c| {
+            let c = c.lock().unwrap_or_else(|e| e.into_inner());
+            let (h, m) = c.stats();
+            (h, m, c.len() as u64)
+        })
+        .unwrap_or((0, 0, 0));
+    out.push_str(&format!(
+        ",\"cache\":{{\"hits\":{hits},\"misses\":{misses},\"entries\":{entries}}}"
+    ));
+    out.push_str(&format!(
+        ",\"engine\":{{\"bridge_calls\":{},\"pool_workers\":{},\"pool_spawned\":{}}}}}",
+        crate::metrics::counters::bridge_calls_total(),
+        crate::runtime::worker_count(),
+        crate::runtime::spawned_workers(),
+    ));
+    out.into_bytes()
+}
+
+/// Parse → validate → cache probe → sharded micro-batcher → cache fill.
 fn answer_api(
     path: &str,
     body: &str,
     registry: &ModelRegistry,
     cache: Option<&Mutex<ResponseCache>>,
-    job_tx: &mpsc::Sender<Job>,
+    handle: &BatcherHandle,
 ) -> std::result::Result<Vec<u8>, ApiError> {
     let req = protocol::parse_request(path, body)?;
     let entry = registry
@@ -401,27 +527,43 @@ fn answer_api(
             return Ok(hit);
         }
     }
-    let bytes = submit_via(job_tx, req)?;
+    let bytes = handle.submit(req)?;
     if let (Some(c), Some(k)) = (cache, key) {
         c.lock().unwrap_or_else(|e| e.into_inner()).put(k, bytes.clone());
     }
     Ok(bytes)
 }
 
-fn write_response(stream: &mut TcpStream, status: u16, body: &[u8]) {
-    let reason = match status {
+fn status_reason(status: u16) -> &'static str {
+    match status {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
         408 => "Request Timeout",
         413 => "Payload Too Large",
+        429 => "Too Many Requests",
         500 => "Internal Server Error",
         _ => "Error",
-    };
+    }
+}
+
+/// Headers every response shares. 429s carry `Retry-After: 1` — the
+/// admission budget is sized in sub-second queue drains, so "one second"
+/// is an honest earliest-retry hint.
+fn common_headers(status: u16) -> &'static str {
+    if status == 429 {
+        "Content-Type: application/json\r\nRetry-After: 1\r\nConnection: close\r\n"
+    } else {
+        "Content-Type: application/json\r\nConnection: close\r\n"
+    }
+}
+
+fn write_response(stream: &mut TcpStream, status: u16, body: &[u8]) {
     let head = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        "HTTP/1.1 {status} {}\r\n{}Content-Length: {}\r\n\r\n",
+        status_reason(status),
+        common_headers(status),
         body.len()
     );
     let _ = stream.write_all(head.as_bytes());
@@ -429,12 +571,35 @@ fn write_response(stream: &mut TcpStream, status: u16, body: &[u8]) {
     let _ = stream.flush();
 }
 
+/// Stream `body` with `Transfer-Encoding: chunked` in
+/// [`STREAM_CHUNK_BYTES`] frames. The de-chunked payload is the exact
+/// same byte sequence `write_response` would have sent — framing is
+/// transport, not content, so the scalar-oracle byte contract is
+/// unchanged ([`super::client::request`] decodes and the tests compare
+/// the decoded bytes).
+fn write_chunked_response(stream: &mut TcpStream, status: u16, body: &[u8]) {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\n{}Transfer-Encoding: chunked\r\n\r\n",
+        status_reason(status),
+        common_headers(status),
+    );
+    let _ = stream.write_all(head.as_bytes());
+    for chunk in body.chunks(STREAM_CHUNK_BYTES) {
+        let _ = stream.write_all(format!("{:x}\r\n", chunk.len()).as_bytes());
+        let _ = stream.write_all(chunk);
+        let _ = stream.write_all(b"\r\n");
+    }
+    let _ = stream.write_all(b"0\r\n\r\n");
+    let _ = stream.flush();
+}
+
 #[cfg(test)]
 mod tests {
     // The end-to-end suite (concurrent clients over a real socket,
-    // response invariance across batch layouts and cache states, the
-    // full error table) lives in `tests/serve.rs`; here we only pin the
-    // HTTP head parser's plumbing via a loopback socket pair.
+    // response invariance across batch layouts / shard counts / cache
+    // states, the full error table, /metrics, overload shedding) lives
+    // in `tests/serve.rs`; here we only pin the HTTP head parser and the
+    // chunked writer via loopback socket pairs.
     use super::*;
 
     #[test]
@@ -471,5 +636,49 @@ mod tests {
         let err = t.join().unwrap().unwrap_err();
         assert_eq!(err.status, 413);
         assert_eq!(err.code, "body_too_large");
+    }
+
+    /// The chunked writer's framing must decode back to the exact input
+    /// bytes, with a `Retry-After`-free 200 head and chunk sizes capped
+    /// at [`STREAM_CHUNK_BYTES`].
+    #[test]
+    fn chunked_writer_round_trips_exact_bytes() {
+        let body: Vec<u8> = (0..10_000u32).map(|i| (i % 251) as u8).collect();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let body_clone = body.clone();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            write_chunked_response(&mut s, 200, &body_clone);
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        let mut raw = Vec::new();
+        c.read_to_end(&mut raw).unwrap();
+        t.join().unwrap();
+
+        let head_end = raw.windows(4).position(|w| w == b"\r\n\r\n").unwrap() + 4;
+        let head = std::str::from_utf8(&raw[..head_end]).unwrap();
+        assert!(head.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(head.to_ascii_lowercase().contains("transfer-encoding: chunked"));
+        assert!(!head.contains("Content-Length"));
+
+        // Decode the chunk framing by hand.
+        let mut decoded = Vec::new();
+        let mut rest = &raw[head_end..];
+        loop {
+            let line_end = rest.windows(2).position(|w| w == b"\r\n").unwrap();
+            let size =
+                usize::from_str_radix(std::str::from_utf8(&rest[..line_end]).unwrap(), 16)
+                    .unwrap();
+            rest = &rest[line_end + 2..];
+            if size == 0 {
+                break;
+            }
+            assert!(size <= STREAM_CHUNK_BYTES, "chunk larger than the frame cap");
+            decoded.extend_from_slice(&rest[..size]);
+            assert_eq!(&rest[size..size + 2], b"\r\n");
+            rest = &rest[size + 2..];
+        }
+        assert_eq!(decoded, body, "de-chunked payload must be the exact body bytes");
     }
 }

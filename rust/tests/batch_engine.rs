@@ -12,6 +12,7 @@ use sdegrad::api::{
     SdeProblem, SensAlg, SolveOptions, StepControl,
 };
 use sdegrad::prng::PrngKey;
+use sdegrad::runtime::ExecConfig;
 use sdegrad::sde::ou::OrnsteinUhlenbeck;
 use sdegrad::sde::problems::{sample_experiment_setup, Example1, Example2, Example3};
 use sdegrad::sde::{BatchSdeVjp, ReplicatedSde, ScalarSde};
@@ -146,7 +147,7 @@ where
     let step = StepControl::Steps(150);
     for n in [1usize, 9, 40] {
         let replicates = prob.replicates(PrngKey::from_seed(seed), n);
-        let batch = sensitivity_batch(&replicates, &alg, step);
+        let batch = sensitivity_batch(&replicates, &alg, step, ExecConfig::default());
         for (i, p) in replicates.iter().enumerate() {
             let seq = p.sensitivity_sum(&alg, step).unwrap();
             let b = batch[i].as_ref().unwrap();
@@ -211,7 +212,7 @@ fn gradient_fallbacks_and_per_path_engine_agree() {
         SensAlg::ForwardPathwise,
         SensAlg::Antithetic { base: AdjointConfig::default() },
     ] {
-        let batched = sensitivity_batch(&replicates, &alg, step);
+        let batched = sensitivity_batch(&replicates, &alg, step, ExecConfig::default());
         let per_path = sensitivity_batch_per_path(&replicates, &alg, step);
         for (i, (a, b)) in batched.iter().zip(&per_path).enumerate() {
             let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
@@ -239,6 +240,7 @@ fn batched_sensitivity_propagates_validation_errors() {
         &replicates,
         &SensAlg::backprop(Method::MilsteinStrat),
         StepControl::Steps(10),
+        ExecConfig::default(),
     );
     assert_eq!(outs.len(), 3);
     for o in outs {
@@ -249,6 +251,7 @@ fn batched_sensitivity_propagates_validation_errors() {
         &replicates,
         &SensAlg::StochasticAdjoint(AdjointConfig::default()),
         StepControl::Adaptive(Default::default()),
+        ExecConfig::default(),
     );
     for o in outs {
         assert!(matches!(o.unwrap_err(), ProblemError::AdaptiveSensitivityUnsupported));

@@ -13,6 +13,7 @@ use sdegrad::api::{
     sensitivity_batch, Checkpointing, Gradients, NoiseSpec, SdeProblem, SensAlg, StepControl,
 };
 use sdegrad::prng::PrngKey;
+use sdegrad::runtime::ExecConfig;
 use sdegrad::sde::problems::{sample_experiment_setup, Example1, Example2};
 use sdegrad::sde::ReplicatedSde;
 use sdegrad::solvers::Method;
@@ -160,7 +161,7 @@ fn batched_checkpointed_backprop_equals_scalar_per_path() {
             .enumerate()
             .map(|(i, p)| if i % 3 == 0 { p.mirror(true) } else { p })
             .collect();
-        let batch = sensitivity_batch(&probs, &alg, step);
+        let batch = sensitivity_batch(&probs, &alg, step, ExecConfig::default());
         assert_eq!(batch.len(), probs.len());
         for (i, p) in probs.iter().enumerate() {
             let seq = p.sensitivity_sum(&alg, step).unwrap();

@@ -1,0 +1,168 @@
+//! The `ExecConfig` migration contract: every pre-0.2 `_tier` entry
+//! point and `tier` builder is a pure delegating shim over the unified
+//! `exec`-taking base name, pinned **bit-identical** here — solves,
+//! batch sensitivities, ELBO steps, and served response bytes. This is
+//! the one file allowed to call the deprecated spellings; everything
+//! else in the crate and test suite speaks `ExecConfig`.
+
+#![allow(deprecated)]
+
+use sdegrad::adjoint::AdjointConfig;
+use sdegrad::api::{
+    sensitivity_batch, sensitivity_batch_tier, solve_batch, SdeProblem, SensAlg,
+    SolveOptions, StepControl,
+};
+use sdegrad::latent::{
+    elbo_step_batch, ElboConfig, LatentSdeConfig, LatentSdeModel,
+};
+use sdegrad::prng::PrngKey;
+use sdegrad::runtime::ExecConfig;
+use sdegrad::sde::problems::{sample_experiment_setup, Example1};
+use sdegrad::sde::{KernelTier, ReplicatedSde};
+use sdegrad::solvers::Method;
+use sdegrad::serve::{client, ModelRegistry, ServeConfig, Server};
+
+/// `ExecConfig`'s builders compose the same value as a struct literal,
+/// and the defaults match the pre-0.2 behavior (exact tier, global
+/// worker chain, default tree cache).
+#[test]
+fn exec_config_builders_match_literals() {
+    let built = ExecConfig::new().tier(KernelTier::Fast).threads(3);
+    let literal = ExecConfig { tier: KernelTier::Fast, threads: Some(3), ..Default::default() };
+    assert_eq!(built, literal);
+    assert_eq!(ExecConfig::default().tier, KernelTier::Exact);
+    assert_eq!(ExecConfig::default().threads, None);
+    assert_eq!(built.worker_count(), 3, "explicit threads pin the worker count");
+    assert!(ExecConfig::default().worker_count() >= 1);
+}
+
+/// `SolveOptions::tier(t)` is exactly `exec.tier = t`: both spellings
+/// produce the same options value and the same solve bit stream.
+#[test]
+fn solve_options_tier_builder_is_bit_identical_to_exec() {
+    let dim = 6;
+    let gbm = ReplicatedSde::new(Example1, dim);
+    let (theta, x0) = sample_experiment_setup(PrngKey::from_seed(91), dim, 2);
+    let prob = SdeProblem::new(&gbm, &x0, (0.0, 1.0)).params(&theta);
+    let replicates = prob.replicates(PrngKey::from_seed(92), 9);
+    for tier in [KernelTier::Exact, KernelTier::Fast] {
+        let via_tier = SolveOptions::fixed(Method::MilsteinIto, 80).tier(tier);
+        let via_exec =
+            SolveOptions::fixed(Method::MilsteinIto, 80).exec(ExecConfig::new().tier(tier));
+        assert_eq!(via_tier.exec, via_exec.exec);
+        let a = solve_batch(&replicates, &via_tier);
+        let b = solve_batch(&replicates, &via_exec);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.states, y.states, "tier() vs exec() diverged ({tier:?})");
+        }
+    }
+}
+
+/// The deprecated `sensitivity_batch_tier` shim returns the exact bit
+/// stream of `sensitivity_batch` with the equivalent `ExecConfig`.
+#[test]
+fn sensitivity_batch_tier_shim_is_bit_identical() {
+    let dim = 6;
+    let gbm = ReplicatedSde::new(Example1, dim);
+    let (theta, x0) = sample_experiment_setup(PrngKey::from_seed(93), dim, 2);
+    let prob = SdeProblem::new(&gbm, &x0, (0.0, 1.0)).params(&theta);
+    let replicates = prob.replicates(PrngKey::from_seed(94), 7);
+    let alg = SensAlg::StochasticAdjoint(AdjointConfig::default());
+    let step = StepControl::Steps(60);
+    for tier in [KernelTier::Exact, KernelTier::Fast] {
+        let old = sensitivity_batch_tier(&replicates, &alg, step, tier);
+        let new = sensitivity_batch(&replicates, &alg, step, ExecConfig::new().tier(tier));
+        assert_eq!(old.len(), new.len());
+        for (o, n) in old.iter().zip(&new) {
+            let (o, n) = (o.as_ref().unwrap(), n.as_ref().unwrap());
+            assert_eq!(o.dtheta, n.dtheta, "shim dtheta diverged ({tier:?})");
+            assert_eq!(o.dz0, n.dz0, "shim dz0 diverged ({tier:?})");
+        }
+    }
+}
+
+/// `ElboConfig::tier(t)` composes the same config as setting `exec`
+/// directly, and a full batched ELBO step under either spelling is the
+/// same bit stream (this also covers the internal
+/// `BatchAdjointOps::new_tier` / `CtxAdjointOps::new_tier` delegation —
+/// the ELBO step drives both constructors).
+#[test]
+fn elbo_config_tier_builder_is_bit_identical_to_exec() {
+    let model = LatentSdeModel::new(LatentSdeConfig {
+        obs_dim: 2,
+        latent_dim: 3,
+        context_dim: 2,
+        hidden: 8,
+        diff_hidden: 4,
+        enc_hidden: 6,
+        obs_noise_std: 0.1,
+        ..Default::default()
+    });
+    let params = model.init_params(PrngKey::from_seed(95));
+    let times: Vec<f64> = (0..5).map(|k| 0.1 * k as f64).collect();
+    let mut obs = vec![0.0; 2 * times.len() * 2];
+    PrngKey::from_seed(96).fill_normal(0, &mut obs);
+    let rows: Vec<&[f64]> = obs.chunks(times.len() * 2).collect();
+    let keys: Vec<PrngKey> = (0..2).map(|m| PrngKey::from_seed(97 + m as u64)).collect();
+    for tier in [KernelTier::Exact, KernelTier::Fast] {
+        let via_tier = ElboConfig { substeps: 2, kl_weight: 0.6, ..Default::default() }.tier(tier);
+        let via_exec = ElboConfig {
+            substeps: 2,
+            kl_weight: 0.6,
+            exec: ExecConfig::new().tier(tier),
+        };
+        assert_eq!(via_tier.exec, via_exec.exec);
+        let a = elbo_step_batch(&model, &params, &times, &rows, &keys, &via_tier, 2, 1);
+        let b = elbo_step_batch(&model, &params, &times, &rows, &keys, &via_exec, 2, 1);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss diverged ({tier:?})");
+        assert_eq!(a.grad.len(), b.grad.len());
+        for (x, y) in a.grad.iter().zip(&b.grad) {
+            assert_eq!(x.to_bits(), y.to_bits(), "gradient diverged ({tier:?})");
+        }
+    }
+}
+
+/// A server configured through the delegating `ServeConfig::tier`
+/// builder serves the same bytes as one configured through `exec` — the
+/// serving half of the migration contract. (The bench-level shim
+/// `run_serve_bench_tier` is the same one-line delegation; its
+/// signature is pinned here without paying for a full bench run.)
+#[test]
+fn serve_config_tier_builder_serves_identical_bytes() {
+    let _pinned: fn(bool, KernelTier) -> Vec<sdegrad::coordinator::bench::ThroughputRow> =
+        sdegrad::coordinator::bench::run_serve_bench_tier;
+
+    let registry = || {
+        let model = LatentSdeModel::new(LatentSdeConfig {
+            obs_dim: 1,
+            latent_dim: 3,
+            context_dim: 1,
+            hidden: 8,
+            diff_hidden: 4,
+            enc_hidden: 6,
+            obs_noise_std: 0.1,
+            ..Default::default()
+        });
+        let params = model.init_params(PrngKey::from_seed(98));
+        let mut reg = ModelRegistry::new();
+        reg.insert("default", model, params).unwrap();
+        reg
+    };
+    let body = r#"{"seed": 11, "times": [0, 0.1, 0.2, 0.3], "substeps": 3}"#;
+
+    let mut bodies = Vec::new();
+    for via_exec in [false, true] {
+        let base = ServeConfig { port: 0, workers: 2, cache_capacity: 0, ..Default::default() };
+        let cfg = if via_exec {
+            base.exec(ExecConfig::new().tier(KernelTier::Fast))
+        } else {
+            base.tier(KernelTier::Fast)
+        };
+        let server = Server::start(registry(), cfg).unwrap();
+        let (status, bytes) = client::post(server.addr(), "/v1/simulate", body).unwrap();
+        assert_eq!(status, 200);
+        bodies.push(bytes);
+        server.shutdown();
+    }
+    assert_eq!(bodies[0], bodies[1], "tier() vs exec() served different bytes");
+}

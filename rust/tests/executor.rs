@@ -34,7 +34,7 @@ use sdegrad::api::{
 };
 use sdegrad::latent::{elbo_step_batch, ElboConfig, LatentSdeConfig, LatentSdeModel};
 use sdegrad::prng::PrngKey;
-use sdegrad::runtime::{scoped_map, set_worker_count, spawned_by_this_thread, worker_count};
+use sdegrad::runtime::{scoped_map, set_worker_count, spawned_by_this_thread, worker_count, ExecConfig};
 use sdegrad::sde::problems::{sample_experiment_setup, Example1};
 use sdegrad::sde::ReplicatedSde;
 use sdegrad::solvers::Method;
@@ -127,7 +127,7 @@ fn gradients_bit_identical_across_pool_sizes_and_cache_capacities() {
             for cap in CACHE_CAPS {
                 let probs: Vec<_> =
                     replicates.iter().map(|p| p.clone().tree_cache(cap)).collect();
-                let grads = sensitivity_batch(&probs, alg, step);
+                let grads = sensitivity_batch(&probs, alg, step, ExecConfig::default());
                 for (b, g) in grads.iter().enumerate() {
                     assert_eq!(
                         g.as_ref().unwrap().dtheta,

@@ -16,11 +16,12 @@
 
 use sdegrad::adjoint::AdjointConfig;
 use sdegrad::api::{
-    sensitivity_batch, sensitivity_batch_per_path, sensitivity_batch_tier, solve_batch,
+    sensitivity_batch, sensitivity_batch_per_path, solve_batch,
     solve_batch_per_path, SdeProblem, SensAlg, SolveOptions, StepControl,
 };
 use sdegrad::latent::{elbo_step_batch, ElboConfig, LatentSdeConfig, LatentSdeModel};
 use sdegrad::prng::PrngKey;
+use sdegrad::runtime::ExecConfig;
 use sdegrad::sde::ou::OrnsteinUhlenbeck;
 use sdegrad::sde::problems::{sample_experiment_setup, Example1};
 use sdegrad::sde::{KernelTier, ReplicatedSde};
@@ -121,8 +122,13 @@ fn fast_gradients_match_exact_across_methods() {
         });
         for bsz in [5usize, 33] {
             let replicates = prob.replicates(PrngKey::from_seed(3000 + bsz as u64), bsz);
-            let exact = sensitivity_batch(&replicates, &alg, step);
-            let fast = sensitivity_batch_tier(&replicates, &alg, step, KernelTier::Fast);
+            let exact = sensitivity_batch(&replicates, &alg, step, ExecConfig::default());
+            let fast = sensitivity_batch(
+                &replicates,
+                &alg,
+                step,
+                ExecConfig::new().tier(KernelTier::Fast),
+            );
             for (a, b) in exact.iter().zip(&fast) {
                 let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
                 assert_close(
@@ -165,8 +171,9 @@ fn fast_elbo_step_matches_exact_within_tolerance() {
     let rows: Vec<&[f64]> = obs.chunks(times.len() * 2).collect();
     let keys: Vec<PrngKey> = (0..n_seq).map(|m| PrngKey::from_seed(50 + m as u64)).collect();
 
-    let exact_cfg = ElboConfig { substeps: 3, kl_weight: 0.7, tier: KernelTier::Exact };
-    let fast_cfg = ElboConfig { substeps: 3, kl_weight: 0.7, tier: KernelTier::Fast };
+    let exact_cfg = ElboConfig { substeps: 3, kl_weight: 0.7, exec: ExecConfig::default() };
+    let fast_cfg =
+        ElboConfig { substeps: 3, kl_weight: 0.7, exec: ExecConfig::new().tier(KernelTier::Fast) };
     let exact = elbo_step_batch(&model, &params, &times, &rows, &keys, &exact_cfg, 2, 1);
     let fast = elbo_step_batch(&model, &params, &times, &rows, &keys, &fast_cfg, 2, 1);
 
@@ -199,8 +206,9 @@ fn exact_tier_stays_bit_identical_to_per_path_engine() {
 
     let alg = SensAlg::StochasticAdjoint(AdjointConfig::default());
     let step = StepControl::Steps(100);
-    let g_exact = sensitivity_batch_tier(&replicates, &alg, step, KernelTier::Exact);
-    let g_default = sensitivity_batch(&replicates, &alg, step);
+    let g_exact =
+        sensitivity_batch(&replicates, &alg, step, ExecConfig::new().tier(KernelTier::Exact));
+    let g_default = sensitivity_batch(&replicates, &alg, step, ExecConfig::default());
     let g_per_path = sensitivity_batch_per_path(&replicates, &alg, step);
     for ((a, b), c) in g_exact.iter().zip(&g_default).zip(&g_per_path) {
         let (a, b, c) = (a.as_ref().unwrap(), b.as_ref().unwrap(), c.as_ref().unwrap());
@@ -233,8 +241,9 @@ fn fast_tier_is_actually_wired_in() {
     let rows: Vec<&[f64]> = vec![obs.as_slice()];
     let keys = [PrngKey::from_seed(44)];
 
-    let exact_cfg = ElboConfig { substeps: 3, kl_weight: 0.7, tier: KernelTier::Exact };
-    let fast_cfg = ElboConfig { substeps: 3, kl_weight: 0.7, tier: KernelTier::Fast };
+    let exact_cfg = ElboConfig { substeps: 3, kl_weight: 0.7, exec: ExecConfig::default() };
+    let fast_cfg =
+        ElboConfig { substeps: 3, kl_weight: 0.7, exec: ExecConfig::new().tier(KernelTier::Fast) };
     let exact = elbo_step_batch(&model, &params, &times, &rows, &keys, &exact_cfg, 2, 1);
     let fast = elbo_step_batch(&model, &params, &times, &rows, &keys, &fast_cfg, 2, 1);
     let any_bit_moved = exact.loss.to_bits() != fast.loss.to_bits()

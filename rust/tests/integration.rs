@@ -9,6 +9,7 @@ use sdegrad::coordinator::{load_params, save_params, train_latent_sde};
 use sdegrad::data::gbm::{generate as gbm_generate, GbmConfig};
 use sdegrad::latent::{elbo_step, ElboConfig, LatentSdeConfig, LatentSdeModel};
 use sdegrad::prng::PrngKey;
+use sdegrad::runtime::ExecConfig;
 use sdegrad::sde::problems::{sample_experiment_setup, Example1, Example2, Example3};
 use sdegrad::sde::{ReplicatedSde, ScalarSde};
 use sdegrad::solvers::Method;
@@ -166,7 +167,7 @@ fn train_checkpoint_reload_roundtrip() {
         iters: 8,
         batch_size: 3,
         substeps: 2,
-        n_workers: 2,
+        exec: ExecConfig::new().threads(2),
         val_every: 0,
         ..Default::default()
     };

@@ -22,6 +22,7 @@ use sdegrad::latent::{
     LatentSdeModel,
 };
 use sdegrad::prng::PrngKey;
+use sdegrad::runtime::ExecConfig;
 
 fn tiny_cfg() -> LatentSdeConfig {
     LatentSdeConfig {
@@ -186,7 +187,7 @@ fn trainer_resume_through_checkpoint_file_is_bit_identical() {
         substeps: 2,
         kl_weight: 0.2,
         kl_anneal_iters: 5,
-        n_workers: 2,
+        exec: ExecConfig::new().threads(2),
         val_every: 0,
         ..Default::default()
     };
