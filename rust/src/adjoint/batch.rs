@@ -418,6 +418,7 @@ impl<O: BatchAugmentedOps> BatchBackwardSolver<O> {
             grid.len() >= 2 && grid.windows(2).all(|w| w[1] < w[0]),
             "BatchBackwardSolver: grid must be descending"
         );
+        let _span = crate::obs::span!("adjoint.backward");
         let (nf0, ng0) = self.ops.nfe();
         bm.begin_sweep(grid[0]);
         for k in 0..grid.len() - 1 {

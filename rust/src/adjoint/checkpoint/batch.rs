@@ -350,7 +350,10 @@ pub(crate) fn batch_checkpoint_backprop_core<S: BatchSdeVjp + ?Sized>(
     if schedule.is_tape() {
         let mut tape = BatchLeafTape::new(n, n_steps);
         meter.alloc(tape.f64s_per_path(batch));
-        tape.record_forward(&mut kern, &grid, 0, z0, noise);
+        {
+            let _span = crate::obs::span!("ckpt.forward");
+            tape.record_forward(&mut kern, &grid, 0, z0, noise);
+        }
         let forward_stats = SolveStats {
             steps: n_steps as u64,
             rejected: 0,
@@ -364,18 +367,22 @@ pub(crate) fn batch_checkpoint_backprop_core<S: BatchSdeVjp + ?Sized>(
         let mut a = vec![1.0; n]; // ∂(Σ z_T)/∂z_T per path
         let mut a_new = vec![0.0; n];
         let mut grad_theta = vec![0.0; batch * p];
-        for k in (0..n_steps).rev() {
-            kern.backward_step(
-                grid[k],
-                grid[k + 1],
-                tape.state(k),
-                tape.dw(k),
-                &a,
-                &mut a_new,
-                &mut grad_theta,
-            );
-            std::mem::swap(&mut a, &mut a_new);
+        {
+            let _span = crate::obs::span!("ckpt.backward");
+            for k in (0..n_steps).rev() {
+                kern.backward_step(
+                    grid[k],
+                    grid[k + 1],
+                    tape.state(k),
+                    tape.dw(k),
+                    &a,
+                    &mut a_new,
+                    &mut grad_theta,
+                );
+                std::mem::swap(&mut a, &mut a_new);
+            }
         }
+        super::driver::publish_ckpt_gauges(meter.peak * 8, 0);
         return BatchCheckpointOutput {
             z_terminal: z_term,
             grad_z0: a,
@@ -396,6 +403,7 @@ pub(crate) fn batch_checkpoint_backprop_core<S: BatchSdeVjp + ?Sized>(
         let nseg = bnds.len() - 1;
         let mut ck = vec![0.0; nseg * n];
         meter.alloc(nseg * d);
+        let _span = crate::obs::span!("ckpt.forward");
         let mut z = z0.to_vec();
         let mut zn = vec![0.0; n];
         let mut dw = vec![0.0; n];
@@ -427,23 +435,27 @@ pub(crate) fn batch_checkpoint_backprop_core<S: BatchSdeVjp + ?Sized>(
     let mut a_new = vec![0.0; n];
     let mut grad_theta = vec![0.0; batch * p];
     let nseg = bnds.len() - 1;
-    for j in (0..nseg).rev() {
-        backward_span_batch(
-            &mut kern,
-            &grid,
-            bnds[j],
-            bnds[j + 1],
-            &ckpts[j * n..(j + 1) * n],
-            schedule.leaf_cap(),
-            noise,
-            &mut a,
-            &mut a_new,
-            &mut grad_theta,
-            &mut meter,
-            batch,
-        );
+    {
+        let _span = crate::obs::span!("ckpt.backward");
+        for j in (0..nseg).rev() {
+            backward_span_batch(
+                &mut kern,
+                &grid,
+                bnds[j],
+                bnds[j + 1],
+                &ckpts[j * n..(j + 1) * n],
+                schedule.leaf_cap(),
+                noise,
+                &mut a,
+                &mut a_new,
+                &mut grad_theta,
+                &mut meter,
+                batch,
+            );
+        }
     }
     let recompute_nfe = (kern.nfe_f - rf0) + (kern.nfe_g - rg0);
+    super::driver::publish_ckpt_gauges(meter.peak * 8, recompute_nfe);
 
     BatchCheckpointOutput {
         z_terminal: z_t,
@@ -484,7 +496,10 @@ fn backward_span_batch<S: BatchSdeVjp + ?Sized>(
         let mut tape = BatchLeafTape::new(n, len);
         let units = tape.f64s_per_path(batch);
         meter.alloc(units);
-        tape.record_forward(kern, grid, lo, z_lo, noise);
+        {
+            let _span = crate::obs::span!("ckpt.replay");
+            tape.record_forward(kern, grid, lo, z_lo, noise);
+        }
         for k in (0..len).rev() {
             kern.backward_step(
                 grid[lo + k],
@@ -502,7 +517,10 @@ fn backward_span_batch<S: BatchSdeVjp + ?Sized>(
         let mid = lo + len / 2;
         let mut z_mid = vec![0.0; n];
         meter.alloc(d);
-        integrate_state_only_batch(kern, grid, lo, mid, z_lo, noise, &mut z_mid);
+        {
+            let _span = crate::obs::span!("ckpt.replay");
+            integrate_state_only_batch(kern, grid, lo, mid, z_lo, noise, &mut z_mid);
+        }
         backward_span_batch(
             kern, grid, mid, hi, &z_mid, leaf_cap, noise, a, a_new, grad_theta, meter, batch,
         );

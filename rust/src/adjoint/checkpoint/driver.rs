@@ -39,6 +39,18 @@ impl MemMeter {
     }
 }
 
+/// Publish a finished run's memory/recompute stats as registry gauges
+/// (`adjoint.peak_tape_bytes` / `adjoint.recompute_nfe`, last-run-wins;
+/// the per-call numbers stay on [`GradientOutput`]).
+pub(crate) fn publish_ckpt_gauges(peak_tape_bytes: usize, recompute_nfe: u64) {
+    use std::sync::OnceLock;
+    static PEAK: OnceLock<crate::obs::Gauge> = OnceLock::new();
+    static NFE: OnceLock<crate::obs::Gauge> = OnceLock::new();
+    PEAK.get_or_init(|| crate::obs::gauge("adjoint.peak_tape_bytes"))
+        .set(peak_tape_bytes as u64);
+    NFE.get_or_init(|| crate::obs::gauge("adjoint.recompute_nfe")).set(recompute_nfe);
+}
+
 /// Checkpointed backprop-through-the-solver engine behind
 /// [`crate::api::SensAlg::Backprop`]. Supports every replayable in-tree
 /// noise source (stored path, virtual tree, mirrored either way) and the
@@ -80,7 +92,10 @@ where
         // ---- Classic full tape: record everything on the first pass. --
         let mut tape = LeafTape::new(d, n_steps);
         meter.alloc(tape.f64s());
-        tape.record_forward(&mut kern, &grid, 0, z0, &mut noise);
+        {
+            let _span = crate::obs::span!("ckpt.forward");
+            tape.record_forward(&mut kern, &grid, 0, z0, &mut noise);
+        }
         let forward_stats = SolveStats {
             steps: n_steps as u64,
             rejected: 0,
@@ -94,18 +109,22 @@ where
         assert_eq!(a.len(), d, "loss gradient has wrong dimension");
         let mut a_new = vec![0.0; d];
         let mut grad_theta = vec![0.0; p];
-        for k in (0..n_steps).rev() {
-            kern.backward_step(
-                grid[k],
-                grid[k + 1],
-                tape.state(k),
-                tape.dw(k),
-                &a,
-                &mut a_new,
-                &mut grad_theta,
-            );
-            std::mem::swap(&mut a, &mut a_new);
+        {
+            let _span = crate::obs::span!("ckpt.backward");
+            for k in (0..n_steps).rev() {
+                kern.backward_step(
+                    grid[k],
+                    grid[k + 1],
+                    tape.state(k),
+                    tape.dw(k),
+                    &a,
+                    &mut a_new,
+                    &mut grad_theta,
+                );
+                std::mem::swap(&mut a, &mut a_new);
+            }
         }
+        publish_ckpt_gauges(meter.peak * 8, 0);
         return GradientOutput {
             z_terminal: z_t,
             grad_z0: a,
@@ -132,6 +151,7 @@ where
     let mut ckpts = vec![0.0; nseg * d];
     meter.alloc(nseg * d);
     let z_t = {
+        let _span = crate::obs::span!("ckpt.forward");
         let mut z = z0.to_vec();
         let mut zn = vec![0.0; d];
         let mut wa = vec![0.0; d];
@@ -168,22 +188,26 @@ where
     assert_eq!(a.len(), d, "loss gradient has wrong dimension");
     let mut a_new = vec![0.0; d];
     let mut grad_theta = vec![0.0; p];
-    for j in (0..nseg).rev() {
-        backward_span(
-            &mut kern,
-            &grid,
-            bnds[j],
-            bnds[j + 1],
-            &ckpts[j * d..(j + 1) * d],
-            schedule.leaf_cap(),
-            &mut noise,
-            &mut a,
-            &mut a_new,
-            &mut grad_theta,
-            &mut meter,
-        );
+    {
+        let _span = crate::obs::span!("ckpt.backward");
+        for j in (0..nseg).rev() {
+            backward_span(
+                &mut kern,
+                &grid,
+                bnds[j],
+                bnds[j + 1],
+                &ckpts[j * d..(j + 1) * d],
+                schedule.leaf_cap(),
+                &mut noise,
+                &mut a,
+                &mut a_new,
+                &mut grad_theta,
+                &mut meter,
+            );
+        }
     }
     let recompute_nfe = (kern.nfe_f - rf0) + (kern.nfe_g - rg0);
+    publish_ckpt_gauges(meter.peak * 8, recompute_nfe);
 
     GradientOutput {
         z_terminal: z_t,
@@ -229,7 +253,10 @@ fn backward_span<S: SdeVjp + ?Sized>(
     if len <= leaf_cap {
         let mut tape = LeafTape::new(d, len);
         meter.alloc(tape.f64s());
-        tape.record_forward(kern, grid, lo, z_lo, noise);
+        {
+            let _span = crate::obs::span!("ckpt.replay");
+            tape.record_forward(kern, grid, lo, z_lo, noise);
+        }
         for k in (0..len).rev() {
             kern.backward_step(
                 grid[lo + k],
@@ -247,7 +274,10 @@ fn backward_span<S: SdeVjp + ?Sized>(
         let mid = lo + len / 2;
         let mut z_mid = vec![0.0; d];
         meter.alloc(d);
-        integrate_state_only(kern, grid, lo, mid, z_lo, noise, &mut z_mid);
+        {
+            let _span = crate::obs::span!("ckpt.replay");
+            integrate_state_only(kern, grid, lo, mid, z_lo, noise, &mut z_mid);
+        }
         backward_span(kern, grid, mid, hi, &z_mid, leaf_cap, noise, a, a_new, grad_theta, meter);
         drop(z_mid);
         meter.free(d);

@@ -83,6 +83,15 @@ pub struct VirtualBrownianTree {
     // ([`crate::metrics::counters`]) — the drop glue flushes
     // `bridge_calls - flushed` so every draw is counted exactly once.
     flushed: u64,
+    // Cache effectiveness: levels resumed from a shared ancestor without
+    // a draw (hits) vs levels that had to draw and store a fresh node
+    // (misses). Flushed to the registry counters
+    // `brownian.tree_cache_hits` / `brownian.tree_cache_misses` on drop,
+    // with the same delta bookkeeping as `bridge_calls`.
+    cache_hits: u64,
+    cache_misses: u64,
+    hits_flushed: u64,
+    misses_flushed: u64,
 }
 
 /// Clone keeps the lifetime `bridge_calls` reading but marks those draws
@@ -105,6 +114,10 @@ impl Clone for VirtualBrownianTree {
             live: self.live,
             bridge_calls: self.bridge_calls,
             flushed: self.bridge_calls,
+            cache_hits: self.cache_hits,
+            cache_misses: self.cache_misses,
+            hits_flushed: self.cache_hits,
+            misses_flushed: self.cache_misses,
         }
     }
 }
@@ -113,8 +126,18 @@ impl Clone for VirtualBrownianTree {
 /// monotone counter that `GET /metrics` reports.
 impl Drop for VirtualBrownianTree {
     fn drop(&mut self) {
+        use std::sync::OnceLock;
         crate::metrics::counters::add_bridge_calls(self.bridge_calls - self.flushed);
         self.flushed = self.bridge_calls;
+        static HITS: OnceLock<crate::obs::Counter> = OnceLock::new();
+        static MISSES: OnceLock<crate::obs::Counter> = OnceLock::new();
+        HITS.get_or_init(|| crate::obs::counter("brownian.tree_cache_hits"))
+            .add(self.cache_hits - self.hits_flushed);
+        MISSES
+            .get_or_init(|| crate::obs::counter("brownian.tree_cache_misses"))
+            .add(self.cache_misses - self.misses_flushed);
+        self.hits_flushed = self.cache_hits;
+        self.misses_flushed = self.cache_misses;
     }
 }
 
@@ -164,6 +187,10 @@ impl VirtualBrownianTree {
             live: 0,
             bridge_calls: 0,
             flushed: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            hits_flushed: 0,
+            misses_flushed: 0,
         }
     }
 
@@ -181,6 +208,18 @@ impl VirtualBrownianTree {
     /// (per-query cost metric for the Table 1 / perf benches).
     pub fn bridge_calls(&self) -> u64 {
         self.bridge_calls
+    }
+
+    /// Levels resumed from a cached shared ancestor without a bridge
+    /// draw. High hits on monotone sweeps are the cache paying off.
+    pub fn cache_hits(&self) -> u64 {
+        self.cache_hits
+    }
+
+    /// Levels that had to draw (and store) a fresh node during a cached
+    /// descent. Hits + misses ≈ levels visited while the cache is on.
+    pub fn cache_misses(&self) -> u64 {
+        self.cache_misses
     }
 
     /// Draw `d` normals from `key`'s stream, scaled by `std`, writing
@@ -225,6 +264,7 @@ impl VirtualBrownianTree {
         }
         Self::bridge_draw(key, wa, wb, std, &self.ws, &self.we, &mut self.nodes[self.live].wmid);
         self.bridge_calls += 1;
+        self.cache_misses += 1;
         self.live += 1;
     }
 
@@ -311,6 +351,7 @@ impl VirtualBrownianTree {
                 self.we.copy_from_slice(&self.nodes[i].wmid);
             }
             if i + 1 < self.live && self.nodes[i + 1].right == right {
+                self.cache_hits += 1;
                 i += 1; // shared ancestor: free descent, no draw
                 continue;
             }

@@ -550,6 +550,33 @@ pub fn run_throughput(quick: bool) -> Vec<ThroughputRow> {
         });
     }
 
+    // 4. Tracing overhead: the gbm_d10 batched solve timed with span
+    // collection off vs on (observed, not gated — the acceptance target
+    // is < 2% on this problem). A negative reading is timer noise and is
+    // clamped to 0. The prior enabled state is restored afterwards, and
+    // the span sink is drained unless a `--trace-out` run owns it.
+    {
+        let replicates = prob.replicates(PrngKey::from_seed(0x7141), n_paths);
+        let opts = SolveOptions::fixed(Method::MilsteinIto, n_steps);
+        let was_enabled = crate::obs::enabled();
+        crate::obs::set_enabled(false);
+        let t_off = time_best_of(reps, || solve_batch(&replicates, &opts)[0].final_state()[0]);
+        crate::obs::set_enabled(true);
+        let t_on = time_best_of(reps, || solve_batch(&replicates, &opts)[0].final_state()[0]);
+        crate::obs::set_enabled(was_enabled);
+        if !was_enabled {
+            crate::obs::clear_events();
+        }
+        rows.push(ThroughputRow {
+            problem: "tracing",
+            metric: "trace_overhead_pct",
+            engine: "observed",
+            paths: n_paths,
+            steps: n_steps,
+            value_per_sec: ((t_on / t_off - 1.0) * 100.0).max(0.0),
+        });
+    }
+
     println!(
         "{:<18} {:>20} {:>10} {:>7} {:>7} {:>14}",
         "problem", "metric", "engine", "paths", "steps", "per_sec"
@@ -1483,10 +1510,21 @@ mod tests {
         // timing rows, plus the 2 observed checkpoint memory rows, plus
         // the 3 fast-tier rows (gbm solve + gbm grad + nn solve), plus
         // the 3 cached-tree rows (solve + grad + observed draws/step),
-        // plus the pooled-ELBO row and the observed executor-overhead
-        // row.
-        assert_eq!(rows.len(), 18);
-        assert!(rows.iter().all(|r| r.value_per_sec.is_finite() && r.value_per_sec > 0.0));
+        // plus the pooled-ELBO row, the observed executor-overhead row,
+        // and the observed tracing-overhead row.
+        assert_eq!(rows.len(), 19);
+        assert!(rows.iter().all(|r| r.value_per_sec.is_finite()));
+        // Every row is strictly positive except tracing overhead, which
+        // clamps timer noise to exactly 0.
+        assert!(rows
+            .iter()
+            .filter(|r| r.metric != "trace_overhead_pct")
+            .all(|r| r.value_per_sec > 0.0));
+        let trace = rows
+            .iter()
+            .find(|r| r.problem == "tracing" && r.metric == "trace_overhead_pct")
+            .expect("missing trace_overhead_pct row");
+        assert!(trace.engine == "observed" && trace.value_per_sec >= 0.0);
         // The fast-tier rows are gate-shaped: engine "batched" with a
         // gated metric, under the `{problem}_fast` name.
         for (problem, metric) in [

@@ -64,6 +64,21 @@ pub struct EvalReport {
 /// One minibatch gradient on the batched engine: sums over all
 /// sequences × samples. Returns (grad_sum, loss_sum, logpx, klpath, klz0,
 /// mse_sum) — the caller divides by `indices.len() * n_samples`.
+/// Last-iteration phase timings as registry gauges (µs). Seconds→µs is
+/// integer bookkeeping on already-computed wall times — the f64 training
+/// path is untouched.
+fn publish_train_gauges(iter_seconds: f64, grad_seconds: f64) {
+    use std::sync::OnceLock;
+    static ITER_US: OnceLock<crate::obs::Gauge> = OnceLock::new();
+    static GRAD_US: OnceLock<crate::obs::Gauge> = OnceLock::new();
+    ITER_US
+        .get_or_init(|| crate::obs::gauge("train.iter_us"))
+        .set((iter_seconds * 1e6) as u64);
+    GRAD_US
+        .get_or_init(|| crate::obs::gauge("train.grad_us"))
+        .set((grad_seconds * 1e6) as u64);
+}
+
 #[allow(clippy::too_many_arguments)]
 fn batch_gradients(
     model: &LatentSdeModel,
@@ -250,6 +265,7 @@ pub fn train_latent_sde_from(
     let mut epoch_batches: Vec<Vec<usize>> = Vec::new();
 
     for iter in start_iter..start_iter + cfg.iters {
+        let span_iter = crate::obs::span!("train.iter");
         let sw = Stopwatch::new();
         let epoch = iter / bpe;
         if epoch != cur_epoch {
@@ -260,6 +276,8 @@ pub fn train_latent_sde_from(
         let batch = epoch_batches[(iter % bpe) as usize].clone();
         let beta = anneal.weight(iter);
         let ecfg = ElboConfig { substeps: cfg.substeps, kl_weight: beta, exec: cfg.exec };
+        let span_grad = crate::obs::span!("train.grad");
+        let grad_sw = Stopwatch::new();
         let (mut grad, loss, lpx, klp, klz, _mse) = batch_gradients(
             model,
             &params,
@@ -270,12 +288,16 @@ pub fn train_latent_sde_from(
             n_samples,
             cfg.n_workers(),
         );
+        let grad_seconds = grad_sw.elapsed_s();
+        drop(span_grad);
+        let span_optim = crate::obs::span!("train.optim");
         let inv = 1.0 / (batch.len() * n_samples) as f64;
         for g in grad.iter_mut() {
             *g *= inv;
         }
         let grad_norm = clip_grad_norm(&mut grad, cfg.grad_clip);
         adam.step(&mut params, &grad, decay.scale(iter));
+        drop(span_optim);
 
         let rec = IterRecord {
             iter,
@@ -299,8 +321,13 @@ pub fn train_latent_sde_from(
             .ok();
         }
         history.push(rec);
+        // Per-iteration phase breakdown as registry gauges (µs, last
+        // iteration wins): together with the train.iter / train.grad /
+        // train.optim spans this answers "where does a step spend time".
+        publish_train_gauges(sw.elapsed_s(), grad_seconds);
 
         if cfg.val_every > 0 && !val_idx.is_empty() && (iter + 1) % cfg.val_every == 0 {
+            let _span_val = crate::obs::span!("train.validate");
             let ecfg_val = ElboConfig {
                 substeps: cfg.substeps,
                 kl_weight: cfg.kl_weight,
@@ -311,6 +338,7 @@ pub fn train_latent_sde_from(
                 evaluate(model, &params, dataset, val_idx, k_val, &ecfg_val, n_samples);
             val_history.push((iter, report));
         }
+        drop(span_iter);
     }
     if let Some(w) = log.as_mut() {
         w.flush().ok();

@@ -1070,6 +1070,7 @@ fn elbo_chunk(
     let rows: Vec<&[f64]> = (0..c_n).map(|c| obs_seqs[(p0 + c) / n_samples]).collect();
 
     // ---- 1. Batched encode + per-path reparameterized z0. ------------
+    let span_encode = crate::obs::span!("elbo.encode");
     let fast = cfg.exec.tier == KernelTier::Fast;
     let enc = encode_batch(model, params, &rows, n_obs, fast);
     let sde = PosteriorSde::new(model);
@@ -1089,8 +1090,10 @@ fn elbo_chunk(
         bm_sources.push(BrownianPath::new(k_bm, aug, times[0], times[n_obs - 1]));
     }
     let mut bm = BatchBrownian::new(bm_sources);
+    drop(span_encode);
 
     // ---- 2. Batched piecewise forward solve with running KL. ---------
+    let span_solve = crate::obs::span!("elbo.posterior_solve");
     let mut y_obs = vec![0.0; n_obs * c_n * aug];
     y_obs[..c_n * aug].copy_from_slice(&y);
     let mut forward_stats = SolveStats::default();
@@ -1106,8 +1109,10 @@ fn elbo_chunk(
         y.copy_from_slice(&y_next);
         y_obs[k * c_n * aug..(k + 1) * c_n * aug].copy_from_slice(&y);
     }
+    drop(span_solve);
 
     // ---- 3. Batched decoding + per-path loss components. -------------
+    let span_decode = crate::obs::span!("elbo.decode");
     let mut dec_cache = model.decoder.batch_cache(c_n);
     let mut z_in = vec![0.0; c_n * dz];
     let mut xhat = vec![0.0; c_n * dx];
@@ -1151,8 +1156,10 @@ fn elbo_chunk(
         loss[c] = -log_px[c] + beta * (kl_path[c] + kl_z0[c]);
         mse[c] = sq_err[c] / (n_obs * dx) as f64;
     }
+    drop(span_decode);
 
     // ---- 4. Batched backward pass. -----------------------------------
+    let span_backward = crate::obs::span!("elbo.backward");
     let n_params = model.n_params;
     let mut grads = vec![0.0; c_n * n_params];
     let mut dctx = vec![0.0; (n_obs - 1) * c_n * dc];
@@ -1220,8 +1227,10 @@ fn elbo_chunk(
             g[model.pz0_logvar_off + i] += beta * 0.5 * (1.0 - (var_q + dmu * dmu) / var_p);
         }
     }
+    drop(span_backward);
 
     // ---- 6. Batched encoder backward. ----------------------------------
+    let span_bptt = crate::obs::span!("elbo.encoder_bptt");
     let eh = enc.q_in.len() / c_n;
     let mut dq_out = vec![0.0; c_n * 2 * dz];
     for c in 0..c_n {
@@ -1308,6 +1317,7 @@ fn elbo_chunk(
             }
         }
     }
+    drop(span_bptt);
 
     ChunkOut { grads, loss, log_px, kl_path, kl_z0, mse, forward_stats, backward_stats }
 }
@@ -1345,6 +1355,7 @@ pub fn elbo_step_batch(
     n_samples: usize,
     n_workers: usize,
 ) -> BatchElboOutput {
+    let _span = crate::obs::span!("elbo.step");
     let n_obs = times.len();
     let dx = model.cfg.obs_dim;
     assert!(n_obs >= 2, "elbo_step_batch: need at least two observations");

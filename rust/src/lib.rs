@@ -288,6 +288,41 @@
 //! episode (`serve_p99_ms` + `shed_rate`, gated lower-is-better by
 //! `sdegrad bench compare`) → `BENCH_serve.json`.
 //!
+//! ## Observability: spans, metrics registry, Chrome-trace export
+//!
+//! Every hot layer is instrumented through the std-only [`obs`]
+//! subsystem — the solver step loops, the checkpointed adjoint's
+//! forward/replay/backward segments, the ELBO phases
+//! (encode / posterior solve / decode / backward / encoder BPTT), the
+//! trainer's per-iteration phase breakdown, the work-stealing pool's
+//! dispatch/steal/park events, and the serve request lifecycle
+//! (parse → queue wait → batch assembly → engine call → serialize).
+//!
+//! * **Spans** are RAII regions entered with the [`obs::span!`] macro
+//!   (`let _span = obs::span!("adjoint.backward");`), gated by a
+//!   process-wide flag ([`obs::set_enabled`]). Disabled — the default —
+//!   a span site costs one relaxed atomic load + branch.
+//! * **Registry** metrics ([`obs::counter`] / [`obs::gauge`] /
+//!   [`obs::hist`]) are always-on named integer atomics: bridge-call and
+//!   tree-cache hit/miss counters, pool spawn/dispatch/steal/park
+//!   counters, `peak_tape_bytes`/`recompute_nfe` gauges, per-shard
+//!   queue-wait and engine-time histograms (power-of-two buckets,
+//!   [`obs::bucket_index`]).
+//!
+//! | exporter | trigger | format |
+//! |---|---|---|
+//! | Chrome trace | `--trace-out trace.json` on `train`/`bench`/`serve` | trace-event JSON (`chrome://tracing`, Perfetto) |
+//! | registry dump | `GET /metrics` (`"registry"` key) or [`obs::dump_json`] | strict JSON, sorted names |
+//!
+//! **Determinism contract:** instrumentation never touches the `f64`
+//! path — spans and registry metrics are integer-only side channels, so
+//! tracing (on or off) never changes a result byte. `tests/obs.rs` pins
+//! solve/gradient/ELBO bits with tracing enabled vs disabled, the
+//! well-nestedness of exported begin/end pairs per thread, counter
+//! monotonicity under concurrent batched calls, and the histogram
+//! bucket boundaries; `bench throughput` reports the measured
+//! enabled-vs-disabled overhead as its `tracing` row.
+//!
 //! ## Verified convergence orders
 //!
 //! The [`convergence`] subsystem turns the paper's §5 convergence claims
@@ -319,6 +354,7 @@ pub mod error;
 pub mod latent;
 pub mod metrics;
 pub mod nn;
+pub mod obs;
 pub mod optim;
 pub mod prng;
 pub mod runtime;

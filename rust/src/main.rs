@@ -24,7 +24,10 @@ fn usage() -> ! {
         "sdegrad {} — scalable gradients for stochastic differential equations
 
 All subcommands accept a global --threads N (worker count for the
-persistent pool; overrides the SDEGRAD_THREADS env var).
+persistent pool; overrides the SDEGRAD_THREADS env var) and a global
+--trace-out trace.json (enable span collection and write a Chrome
+trace-event file on normal exit — open in chrome://tracing or Perfetto;
+`serve` runs until killed, so use it with train/bench/repro).
 
 USAGE:
     sdegrad train --dataset <gbm|lorenz|mocap> [--mode sde|ode] [--iters N]
@@ -59,14 +62,21 @@ fn main() {
     let rest = &args[1..];
     // Global --threads: sets the process-wide worker count before any
     // subcommand touches the pool (SDEGRAD_THREADS env is the fallback;
-    // see runtime::worker_count).
-    {
+    // see runtime::worker_count). Global --trace-out: turn span
+    // collection on for the whole run and export the Chrome trace once
+    // the subcommand returns.
+    let trace_out = {
         let map = parse_args(rest);
         let threads: usize = arg(&map, "threads", 0);
         if threads > 0 {
             sdegrad::runtime::set_worker_count(threads);
         }
-    }
+        let trace_out = map.get("trace-out").cloned();
+        if trace_out.is_some() {
+            sdegrad::obs::set_enabled(true);
+        }
+        trace_out
+    };
     match cmd.as_str() {
         "train" => cmd_train(rest),
         "serve" => cmd_serve(rest),
@@ -76,6 +86,15 @@ fn main() {
         "list" => cmd_list(),
         "--version" | "-V" => println!("sdegrad {}", sdegrad::version()),
         _ => usage(),
+    }
+    if let Some(path) = trace_out {
+        match sdegrad::obs::export::write_chrome_trace(std::path::Path::new(&path)) {
+            Ok(()) => eprintln!("wrote Chrome trace to {path} (chrome://tracing / Perfetto)"),
+            Err(e) => {
+                eprintln!("failed to write trace to {path}: {e}");
+                std::process::exit(1);
+            }
+        }
     }
 }
 

@@ -1,32 +1,36 @@
 //! Process-wide monotone counters surfaced by the server's
 //! `GET /metrics` endpoint (`serve/server.rs`).
 //!
-//! The crate's instrumentation is otherwise per-object — each
-//! [`crate::brownian::VirtualBrownianTree`] counts its own bridge draws,
-//! each batcher shard its own queue traffic. A serving process wants the
-//! *process totals* too (how much Brownian work has the whole fleet of
-//! engine calls done?), so dropped trees flush their lifetime draw count
-//! here. Counters are monotone by construction: relaxed `fetch_add` of
-//! non-negative deltas, never reset.
+//! Since the observability subsystem landed, the actual storage lives in
+//! the central registry ([`crate::obs::registry`]) under the name
+//! `brownian.bridge_calls`; the functions here are thin delegating shims
+//! kept for the existing call sites and test pins. The semantics are
+//! unchanged: monotone by construction — relaxed `fetch_add` of
+//! non-negative deltas, never reset — and dropped
+//! [`crate::brownian::VirtualBrownianTree`]s flush their lifetime draw
+//! count here so a serving process can report *process totals*.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 
-static BRIDGE_CALLS: AtomicU64 = AtomicU64::new(0);
+use crate::obs;
+
+fn bridge_calls() -> &'static obs::Counter {
+    static COUNTER: OnceLock<obs::Counter> = OnceLock::new();
+    COUNTER.get_or_init(|| obs::counter("brownian.bridge_calls"))
+}
 
 /// Add `n` Brownian-bridge draws to the process-wide total. Called from
 /// `VirtualBrownianTree`'s drop glue with the tree's unflushed delta —
 /// relaxed ordering is enough for a statistics counter.
 pub fn add_bridge_calls(n: u64) {
-    if n > 0 {
-        BRIDGE_CALLS.fetch_add(n, Ordering::Relaxed);
-    }
+    bridge_calls().add(n);
 }
 
 /// Lifetime Brownian-bridge draws across every dropped tree in this
 /// process. Monotone; live trees' in-progress draws appear once they
 /// drop.
 pub fn bridge_calls_total() -> u64 {
-    BRIDGE_CALLS.load(Ordering::Relaxed)
+    bridge_calls().get()
 }
 
 #[cfg(test)]
@@ -43,5 +47,14 @@ mod tests {
         // Other tests drop trees concurrently, so assert a lower bound,
         // not equality.
         assert!(bridge_calls_total() >= before + 8);
+    }
+
+    #[test]
+    fn shim_and_registry_agree() {
+        add_bridge_calls(2);
+        assert_eq!(
+            bridge_calls_total(),
+            crate::obs::counter("brownian.bridge_calls").get()
+        );
     }
 }

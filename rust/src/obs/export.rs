@@ -1,0 +1,58 @@
+//! Exporters: Chrome trace-event JSON for spans, registry dump for
+//! metrics.
+//!
+//! [`chrome_trace_json`] drains the collected span events and renders
+//! them in the Chrome trace-event format — an object with a
+//! `"traceEvents"` array of `ph:"B"` / `ph:"E"` duration events carrying
+//! `name`, `ts` (µs since the trace epoch), `pid`, and `tid`. The file
+//! written by [`write_chrome_trace`] (the `--trace-out` CLI flag) loads
+//! directly in `chrome://tracing` or [Perfetto](https://ui.perfetto.dev).
+//! Output is emitted through the same strict-JSON grammar the rest of the
+//! crate uses (`metrics::json`), and `tests/obs.rs` pins that it parses
+//! back under `metrics::json::parse_json` with well-nested begin/end
+//! pairs per thread.
+//!
+//! The registry exporter is [`crate::obs::dump_json`], merged into the
+//! serving plane's `GET /metrics` response under the `"registry"` key.
+
+use std::io;
+use std::path::Path;
+
+use super::span::{drain_events, Event};
+use crate::metrics::json::json_str;
+
+fn push_event(out: &mut String, ev: &Event) {
+    let ph = if ev.begin { "B" } else { "E" };
+    out.push_str(&format!(
+        "{{\"name\":{},\"cat\":\"sdegrad\",\"ph\":\"{}\",\"ts\":{},\"pid\":1,\"tid\":{}}}",
+        json_str(ev.name),
+        ph,
+        ev.ts_us,
+        ev.tid
+    ));
+}
+
+/// Render a slice of events as Chrome trace-event JSON (does not drain).
+pub fn chrome_trace_from(events: &[Event]) -> String {
+    let mut out = String::from("{\"traceEvents\":[");
+    for (i, ev) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        push_event(&mut out, ev);
+    }
+    out.push_str("],\"displayTimeUnit\":\"ms\"}");
+    out
+}
+
+/// Drain all completed span events and render them as Chrome trace-event
+/// JSON.
+pub fn chrome_trace_json() -> String {
+    chrome_trace_from(&drain_events())
+}
+
+/// Drain all completed span events and write the Chrome trace JSON to
+/// `path` (the `--trace-out` target).
+pub fn write_chrome_trace(path: &Path) -> io::Result<()> {
+    std::fs::write(path, chrome_trace_json())
+}

@@ -1,0 +1,137 @@
+//! Log-bucketed (power-of-two) histograms over relaxed atomics.
+//!
+//! A [`Hist`] is a fixed array of [`BUCKETS`] monotone counters. Bucket 0
+//! holds exactly the value `0`; bucket `i` (for `1 ≤ i < BUCKETS`) holds
+//! values in `[2^(i-1), 2^i)`, except the last bucket which is open-ended
+//! (`[2^(BUCKETS-2), ∞)`). The boundaries are pure integer bit-math
+//! ([`bucket_index`] is one `leading_zeros` + clamp) and are pinned by
+//! `tests/obs.rs`, so exported bucket counts are comparable across builds
+//! and machines.
+//!
+//! Recording is a single relaxed `fetch_add` on one bucket — safe to call
+//! concurrently from any thread, never blocking, and (like everything in
+//! `obs`) never touching an `f64`: instrumentation cannot perturb the
+//! crate's bit-identical numerical contracts.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of buckets in every [`Hist`]. 64 buckets cover the full `u64`
+/// range at power-of-two resolution: microsecond latencies, byte sizes,
+/// and counts all fit without configuration.
+pub const BUCKETS: usize = 64;
+
+/// Map a value to its bucket index.
+///
+/// `0 → 0`; otherwise `v → min(BUCKETS-1, 64 - v.leading_zeros())`, i.e.
+/// bucket `i` holds `[2^(i-1), 2^i)` with the top bucket open-ended.
+#[inline]
+pub fn bucket_index(value: u64) -> usize {
+    if value == 0 {
+        0
+    } else {
+        usize::min(BUCKETS - 1, 64 - value.leading_zeros() as usize)
+    }
+}
+
+/// Inclusive lower bound of a bucket: `0 → 0`, `i → 2^(i-1)`.
+#[inline]
+pub fn bucket_lower_bound(index: usize) -> u64 {
+    if index == 0 {
+        0
+    } else {
+        1u64 << (index - 1)
+    }
+}
+
+/// A concurrent power-of-two histogram. See the module docs for the
+/// bucket layout.
+pub struct Hist {
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl Hist {
+    /// A histogram with every bucket at zero.
+    pub fn new() -> Hist {
+        Hist {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Record one observation (relaxed `fetch_add` on the value's bucket).
+    #[inline]
+    pub fn record(&self, value: u64) {
+        self.buckets[bucket_index(value)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Relaxed snapshot of every bucket count.
+    pub fn counts(&self) -> [u64; BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Bucket counts with trailing zero buckets dropped (compact form for
+    /// JSON export; the index→boundary mapping is unchanged).
+    pub fn counts_trimmed(&self) -> Vec<u64> {
+        let counts = self.counts();
+        let len = BUCKETS - counts.iter().rev().take_while(|&&c| c == 0).count();
+        counts[..len].to_vec()
+    }
+
+    /// Total number of recorded observations.
+    pub fn total(&self) -> u64 {
+        self.counts().iter().sum()
+    }
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist::new()
+    }
+}
+
+impl std::fmt::Debug for Hist {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Hist").field("counts", &self.counts_trimmed()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_powers_of_two() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(7), 3);
+        assert_eq!(bucket_index(8), 4);
+        assert_eq!(bucket_index(1023), 10);
+        assert_eq!(bucket_index(1024), 11);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+        for i in 1..BUCKETS {
+            // Each bucket's lower bound maps into that bucket, and the
+            // value just below it maps into the previous one.
+            assert_eq!(bucket_index(bucket_lower_bound(i)), i.min(BUCKETS - 1));
+            assert_eq!(bucket_index(bucket_lower_bound(i) - 1), i - 1);
+        }
+    }
+
+    #[test]
+    fn record_and_trim() {
+        let h = Hist::new();
+        h.record(0);
+        h.record(1);
+        h.record(1);
+        h.record(5);
+        let counts = h.counts();
+        assert_eq!(counts[0], 1);
+        assert_eq!(counts[1], 2);
+        assert_eq!(counts[3], 1);
+        assert_eq!(h.total(), 4);
+        assert_eq!(h.counts_trimmed(), vec![1, 2, 0, 1]);
+        let empty = Hist::new();
+        assert!(empty.counts_trimmed().is_empty());
+    }
+}

@@ -1,0 +1,80 @@
+//! Crate-wide observability: spans, a metrics registry, and exporters.
+//!
+//! This module is the single instrumentation substrate for the whole
+//! crate — solver step loops, checkpointed adjoints, the latent-SDE
+//! trainer, the work-stealing pool, and the serving plane all report
+//! through it. It is std-only and integer-only: **instrumentation never
+//! touches the `f64` path**, so every bit-identical/byte-identical pin
+//! (batch engine, checkpoint replay, serve oracle bytes) holds with
+//! tracing on or off. That determinism contract is pinned by
+//! `tests/obs.rs`.
+//!
+//! Three pieces:
+//!
+//! * **Spans** ([`span!`] / [`SpanGuard`]) — hierarchical RAII timing
+//!   regions with per-thread stacks and a monotonic clock, gated by a
+//!   process-wide enable flag ([`set_enabled`]). The disabled path (the
+//!   default) is one relaxed atomic load + branch per span site.
+//! * **Registry** ([`counter`] / [`gauge`] / [`hist`]) — named monotone
+//!   counters, gauges, and power-of-two histograms over relaxed atomics.
+//!   Always on; absorbs the crate's former one-off statics (e.g. the
+//!   Brownian-tree bridge-call counter, the pool spawn counter).
+//! * **Exporters** — Chrome trace-event JSON for spans
+//!   ([`export::write_chrome_trace`], the `--trace-out` CLI flag, loads
+//!   in `chrome://tracing`/Perfetto) and a strict-JSON registry dump
+//!   ([`dump_json`]) merged into serve's `GET /metrics`.
+//!
+//! Usage:
+//!
+//! ```
+//! sdegrad::obs::set_enabled(true);
+//! {
+//!     let _span = sdegrad::obs::span!("example.phase");
+//!     // ... timed work ...
+//! }
+//! let trace = sdegrad::obs::export::chrome_trace_json();
+//! assert!(trace.contains("example.phase"));
+//! sdegrad::obs::set_enabled(false);
+//! ```
+
+pub mod export;
+pub mod hist;
+pub mod registry;
+pub mod span;
+
+pub use hist::{bucket_index, bucket_lower_bound, Hist, BUCKETS};
+pub use registry::{
+    counter, dump_json, gauge, hist, snapshot, Counter, Gauge, HistHandle, MetricValue,
+};
+pub use span::{clear_events, drain_events, Event, SpanGuard};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is span collection enabled? One relaxed load — this is the entire
+/// disabled-path cost of a span site (plus a branch).
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn span collection on or off process-wide. Registry metrics are
+/// unaffected (always on). Toggling mid-span is safe: a guard records
+/// its end event iff it recorded its begin.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::SeqCst);
+}
+
+/// Enter a named span; evaluates to a [`SpanGuard`] that must be bound
+/// (`let _span = obs::span!("adjoint.backward");`). The span closes when
+/// the guard drops. Names should be `&'static str` literals in
+/// `subsystem.phase` form.
+#[macro_export]
+macro_rules! obs_span {
+    ($name:expr) => {
+        $crate::obs::SpanGuard::enter($name)
+    };
+}
+
+pub use crate::obs_span as span;

@@ -1,0 +1,209 @@
+//! Central registry of named counters, gauges, and histograms.
+//!
+//! Every metric is registered by a `&'static str` name on first use and
+//! lives for the process. Handles ([`Counter`], [`Gauge`], [`HistHandle`])
+//! are cheap `Arc` clones over relaxed atomics; hot call sites cache one
+//! in a `OnceLock` so the registry lock is taken once per site, not per
+//! event. Unlike spans, registry metrics are always on — they are plain
+//! integer atomics on paths that already pay far more per call, and the
+//! serving plane reports them unconditionally.
+//!
+//! Naming convention: `subsystem.metric` (e.g. `brownian.bridge_calls`,
+//! `runtime.pool.steals`, `serve.queue_wait_us`). [`dump_json`] renders
+//! the whole registry as one strict-JSON object (sorted by name) for
+//! `GET /metrics` and offline inspection; histogram buckets use the
+//! power-of-two layout documented in [`crate::obs::hist`].
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use super::hist::{Hist, BUCKETS};
+use crate::metrics::json::json_str;
+
+/// Handle to a named monotone counter.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Add `n` (relaxed; skips the atomic when `n == 0`).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if n != 0 {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Add 1.
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Current value (relaxed).
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Handle to a named gauge (last-write-wins instantaneous value).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// Overwrite the gauge (relaxed).
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise the gauge to at least `v` (relaxed `fetch_max`).
+    #[inline]
+    pub fn raise(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Current value (relaxed).
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Handle to a named power-of-two histogram.
+#[derive(Clone)]
+pub struct HistHandle(Arc<Hist>);
+
+impl HistHandle {
+    /// Record one observation.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.0.record(v);
+    }
+
+    /// Snapshot of every bucket.
+    pub fn counts(&self) -> [u64; BUCKETS] {
+        self.0.counts()
+    }
+
+    /// Total observations recorded.
+    pub fn total(&self) -> u64 {
+        self.0.total()
+    }
+}
+
+enum Slot {
+    Counter(Arc<AtomicU64>),
+    Gauge(Arc<AtomicU64>),
+    Hist(Arc<Hist>),
+}
+
+fn registry() -> MutexGuard<'static, BTreeMap<&'static str, Slot>> {
+    static REGISTRY: OnceLock<Mutex<BTreeMap<&'static str, Slot>>> = OnceLock::new();
+    match REGISTRY.get_or_init(|| Mutex::new(BTreeMap::new())).lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Get or register the counter named `name`.
+///
+/// Panics if `name` is already registered as a different metric kind —
+/// names are a process-wide namespace and a kind clash is a bug.
+pub fn counter(name: &'static str) -> Counter {
+    let mut reg = registry();
+    match reg
+        .entry(name)
+        .or_insert_with(|| Slot::Counter(Arc::new(AtomicU64::new(0))))
+    {
+        Slot::Counter(c) => Counter(Arc::clone(c)),
+        _ => panic!("metric `{name}` is already registered with a different kind"),
+    }
+}
+
+/// Get or register the gauge named `name` (same kind-clash rule as
+/// [`counter`]).
+pub fn gauge(name: &'static str) -> Gauge {
+    let mut reg = registry();
+    match reg
+        .entry(name)
+        .or_insert_with(|| Slot::Gauge(Arc::new(AtomicU64::new(0))))
+    {
+        Slot::Gauge(g) => Gauge(Arc::clone(g)),
+        _ => panic!("metric `{name}` is already registered with a different kind"),
+    }
+}
+
+/// Get or register the histogram named `name` (same kind-clash rule as
+/// [`counter`]).
+pub fn hist(name: &'static str) -> HistHandle {
+    let mut reg = registry();
+    match reg
+        .entry(name)
+        .or_insert_with(|| Slot::Hist(Arc::new(Hist::new())))
+    {
+        Slot::Hist(h) => HistHandle(Arc::clone(h)),
+        _ => panic!("metric `{name}` is already registered with a different kind"),
+    }
+}
+
+/// A point-in-time metric value, as returned by [`snapshot`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MetricValue {
+    /// Monotone counter value.
+    Counter(u64),
+    /// Gauge value.
+    Gauge(u64),
+    /// Histogram bucket counts, trailing zero buckets trimmed.
+    Hist(Vec<u64>),
+}
+
+/// Relaxed snapshot of every registered metric, sorted by name.
+pub fn snapshot() -> Vec<(&'static str, MetricValue)> {
+    registry()
+        .iter()
+        .map(|(&name, slot)| {
+            let value = match slot {
+                Slot::Counter(c) => MetricValue::Counter(c.load(Ordering::Relaxed)),
+                Slot::Gauge(g) => MetricValue::Gauge(g.load(Ordering::Relaxed)),
+                Slot::Hist(h) => MetricValue::Hist(h.counts_trimmed()),
+            };
+            (name, value)
+        })
+        .collect()
+}
+
+/// Render the registry as one strict-JSON object:
+/// `{"counters":{..},"gauges":{..},"histograms":{"name":[b0,b1,..],..}}`
+/// with names sorted and histogram buckets in the power-of-two layout.
+pub fn dump_json() -> String {
+    let snap = snapshot();
+    let mut counters = String::new();
+    let mut gauges = String::new();
+    let mut hists = String::new();
+    for (name, value) in &snap {
+        match value {
+            MetricValue::Counter(v) => {
+                if !counters.is_empty() {
+                    counters.push(',');
+                }
+                counters.push_str(&format!("{}:{}", json_str(name), v));
+            }
+            MetricValue::Gauge(v) => {
+                if !gauges.is_empty() {
+                    gauges.push(',');
+                }
+                gauges.push_str(&format!("{}:{}", json_str(name), v));
+            }
+            MetricValue::Hist(buckets) => {
+                if !hists.is_empty() {
+                    hists.push(',');
+                }
+                let body: Vec<String> = buckets.iter().map(|b| b.to_string()).collect();
+                hists.push_str(&format!("{}:[{}]", json_str(name), body.join(",")));
+            }
+        }
+    }
+    format!("{{\"counters\":{{{counters}}},\"gauges\":{{{gauges}}},\"histograms\":{{{hists}}}}}")
+}

@@ -1,0 +1,158 @@
+//! Hierarchical RAII spans with per-thread stacks and monotonic timing.
+//!
+//! A span is entered with [`crate::obs::span!`] (or [`SpanGuard::enter`])
+//! and closed when the returned guard drops. Each thread keeps its own
+//! event buffer and depth counter, so begin/end events are well-nested
+//! per thread by construction (RAII guards drop in LIFO order). When a
+//! thread's outermost span closes, its buffer is flushed into a global
+//! sink that [`drain_events`] and the Chrome-trace exporter read.
+//!
+//! Timing uses a process-wide monotonic epoch (`Instant`); timestamps are
+//! microseconds since the first span of the process. Thread ids are small
+//! dense integers assigned on first use (not OS tids) so traces are
+//! stable across runs.
+//!
+//! The disabled path — the default — is one relaxed atomic load and a
+//! branch in [`SpanGuard::enter`]; no timestamp is taken, no allocation
+//! happens, and nothing is written. Enabled or not, spans never touch an
+//! `f64`: every bit-identical pin in the crate holds with tracing on.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// One begin or end record, as collected by [`drain_events`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    /// Dense per-process thread id (assigned on the thread's first span).
+    pub tid: u64,
+    /// Span name (the literal passed to `obs::span!`).
+    pub name: &'static str,
+    /// `true` for a begin event, `false` for the matching end.
+    pub begin: bool,
+    /// Microseconds since the process trace epoch.
+    pub ts_us: u64,
+}
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Microseconds since the process trace epoch (the first call wins the
+/// epoch; it reports 0).
+#[inline]
+pub(crate) fn now_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static SINK: Mutex<Vec<Event>> = Mutex::new(Vec::new());
+
+fn sink() -> MutexGuard<'static, Vec<Event>> {
+    match SINK.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+struct ThreadBuf {
+    tid: u64,
+    depth: usize,
+    events: Vec<Event>,
+}
+
+impl ThreadBuf {
+    fn flush(&mut self) {
+        if !self.events.is_empty() {
+            sink().append(&mut self.events);
+        }
+    }
+}
+
+impl Drop for ThreadBuf {
+    // Thread exit with spans still open (e.g. a panicking worker): don't
+    // lose what was recorded.
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+thread_local! {
+    static BUF: RefCell<ThreadBuf> = RefCell::new(ThreadBuf {
+        tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+        depth: 0,
+        events: Vec::new(),
+    });
+}
+
+/// Record one event on the current thread. Returns `false` when the
+/// thread-local is gone (thread teardown) so the guard can deactivate.
+fn push(name: &'static str, begin: bool) -> bool {
+    let ts_us = now_us();
+    BUF.try_with(|cell| {
+        let mut buf = cell.borrow_mut();
+        let tid = buf.tid;
+        if begin {
+            buf.depth += 1;
+        }
+        buf.events.push(Event {
+            tid,
+            name,
+            begin,
+            ts_us,
+        });
+        if !begin {
+            buf.depth = buf.depth.saturating_sub(1);
+            if buf.depth == 0 {
+                buf.flush();
+            }
+        }
+    })
+    .is_ok()
+}
+
+/// RAII guard for one span: records a begin event on creation (when
+/// tracing is enabled) and the matching end event on drop.
+#[must_use = "a span guard records its end on drop; bind it: `let _span = obs::span!(..)`"]
+pub struct SpanGuard {
+    name: &'static str,
+    active: bool,
+}
+
+impl SpanGuard {
+    /// Enter a span. When tracing is disabled this is one relaxed load
+    /// and a branch; the returned guard is inert.
+    #[inline]
+    pub fn enter(name: &'static str) -> SpanGuard {
+        if !crate::obs::enabled() {
+            return SpanGuard {
+                name,
+                active: false,
+            };
+        }
+        let active = push(name, true);
+        SpanGuard { name, active }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        // The end event is recorded iff the begin was, even if tracing
+        // was toggled mid-span — per-thread nesting stays well-formed.
+        if self.active {
+            push(self.name, false);
+        }
+    }
+}
+
+/// Move all completed events out of the global sink (flushing the calling
+/// thread's buffer first). Other threads' *open* spans stay in their
+/// local buffers until they close or the thread exits.
+pub fn drain_events() -> Vec<Event> {
+    let _ = BUF.try_with(|cell| cell.borrow_mut().flush());
+    std::mem::take(&mut *sink())
+}
+
+/// Discard everything collected so far (calling thread's buffer + sink).
+pub fn clear_events() {
+    drop(drain_events());
+}

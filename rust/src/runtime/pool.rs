@@ -64,6 +64,29 @@ use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
+use crate::obs;
+
+/// Registry counters for the pool's dispatch/steal/park events (always
+/// on — one relaxed add per *event*, never per task index). `spawned`
+/// mirrors `PoolState::spawned` so [`spawned_workers`] can delegate to
+/// the registry while the pool keeps its lock-guarded field for sizing.
+struct PoolCounters {
+    spawned: obs::Counter,
+    dispatches: obs::Counter,
+    steals: obs::Counter,
+    parks: obs::Counter,
+}
+
+fn pool_counters() -> &'static PoolCounters {
+    static COUNTERS: OnceLock<PoolCounters> = OnceLock::new();
+    COUNTERS.get_or_init(|| PoolCounters {
+        spawned: obs::counter("runtime.pool.spawned"),
+        dispatches: obs::counter("runtime.pool.dispatches"),
+        steals: obs::counter("runtime.pool.steals"),
+        parks: obs::counter("runtime.pool.parks"),
+    })
+}
+
 /// Explicit worker-count override (0 = unset). Set by [`set_worker_count`].
 static WORKER_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
 
@@ -206,6 +229,7 @@ impl JobCore {
                     continue;
                 }
                 if let Some((lo, hi)) = self.ranges[v].steal_half() {
+                    pool_counters().steals.inc();
                     for i in lo..hi {
                         self.run_task(i);
                     }
@@ -284,8 +308,12 @@ fn pool() -> &'static Pool {
 /// (monotone). Process-global: in a multi-threaded test binary, prefer
 /// [`spawned_by_this_thread`] for assertions — concurrent tests share
 /// this one pool and race a global count.
+///
+/// Since the observability registry landed this is a thin shim over the
+/// `runtime.pool.spawned` counter, which the spawn loop increments in
+/// lockstep with the pool's internal sizing field.
 pub fn spawned_workers() -> usize {
-    pool().state.lock().unwrap_or_else(|e| e.into_inner()).spawned
+    pool_counters().spawned.get() as usize
 }
 
 thread_local! {
@@ -328,6 +356,7 @@ fn worker_loop() {
                     let slot = j.joined.fetch_add(1, Ordering::Relaxed) + 1;
                     break (j.clone(), slot);
                 }
+                pool_counters().parks.inc();
                 st = p.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
             }
         };
@@ -426,6 +455,7 @@ where
         // the spawn loop below — may leave this frame before the guard
         // has drained, waited, and retired it.
         let p = pool();
+        pool_counters().dispatches.inc();
         {
             let mut st = p.state.lock().unwrap_or_else(|e| e.into_inner());
             st.jobs.push(job.clone());
@@ -443,6 +473,9 @@ where
                     .name(name)
                     .spawn(worker_loop)
                     .expect("spawning pool worker");
+                // Registry mirror + thread-local attribution, both under
+                // the pool lock so `spawned_workers()` tracks exactly.
+                pool_counters().spawned.inc();
                 SPAWNED_HERE.with(|c| c.set(c.get() + 1));
             }
         }

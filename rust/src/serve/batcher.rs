@@ -112,6 +112,16 @@ impl BatcherConfig {
 pub struct Job {
     pub request: ServeRequest,
     pub resp: mpsc::Sender<Result<Vec<u8>, ApiError>>,
+    /// When the job entered its shard queue — the dispatcher records
+    /// `enqueued → drain` into the shard's queue-wait histogram.
+    pub enqueued: Instant,
+}
+
+impl Job {
+    /// A job stamped with the current instant as its enqueue time.
+    pub fn new(request: ServeRequest, resp: mpsc::Sender<Result<Vec<u8>, ApiError>>) -> Job {
+        Job { request, resp, enqueued: Instant::now() }
+    }
 }
 
 /// Queue state behind one shard's mutex.
@@ -141,6 +151,15 @@ pub struct ShardStats {
     /// Batch-occupancy histogram over drain sizes; bucket upper bounds
     /// are [`OCCUPANCY_BUCKETS`].
     pub occupancy: [AtomicU64; OCCUPANCY_BUCKETS.len()],
+    /// Per-request queue wait (enqueue → drain) in microseconds, as a
+    /// power-of-two histogram ([`crate::obs::hist`] bucket layout).
+    pub queue_wait_us: crate::obs::Hist,
+    /// Per-drain engine time (grouping + batched engine calls + replies)
+    /// in microseconds, same bucket layout.
+    pub engine_us: crate::obs::Hist,
+    /// Total microseconds spent assembling batches (first job available
+    /// → drain handed to the engine), a monotone counter.
+    pub assembly_us: AtomicU64,
 }
 
 /// Inclusive upper bounds of the batch-occupancy histogram buckets
@@ -192,6 +211,13 @@ pub struct ShardSnapshot {
     pub batches: u64,
     pub jobs: u64,
     pub occupancy: [u64; OCCUPANCY_BUCKETS.len()],
+    /// Queue-wait histogram bucket counts (microseconds, power-of-two
+    /// buckets — see [`crate::obs::hist`] for the index→bound mapping).
+    pub queue_wait_us: [u64; crate::obs::BUCKETS],
+    /// Engine-time-per-drain histogram bucket counts (microseconds).
+    pub engine_us: [u64; crate::obs::BUCKETS],
+    /// Total microseconds spent assembling batches.
+    pub assembly_us: u64,
 }
 
 struct HandleInner {
@@ -229,7 +255,7 @@ impl BatcherHandle {
                 shard.stats.shed.fetch_add(1, Ordering::Relaxed);
                 return Err(ApiError::overloaded());
             }
-            st.queue.push_back(Job { request, resp: rtx });
+            st.queue.push_back(Job::new(request, rtx));
             st.queued_cells += cells;
             shard.stats.submitted.fetch_add(1, Ordering::Relaxed);
         }
@@ -274,6 +300,9 @@ impl BatcherHandle {
                     batches: s.batches.load(Ordering::Relaxed),
                     jobs: s.jobs.load(Ordering::Relaxed),
                     occupancy: std::array::from_fn(|i| s.occupancy[i].load(Ordering::Relaxed)),
+                    queue_wait_us: s.queue_wait_us.counts(),
+                    engine_us: s.engine_us.counts(),
+                    assembly_us: s.assembly_us.load(Ordering::Relaxed),
                 }
             })
             .collect()
@@ -354,6 +383,7 @@ fn dispatcher_loop(
 ) {
     loop {
         let mut jobs = Vec::new();
+        let assembly_us;
         {
             let mut st = shard.lock();
             loop {
@@ -365,9 +395,13 @@ fn dispatcher_loop(
                 }
                 st = shard.cv.wait(st).unwrap_or_else(|e| e.into_inner());
             }
-            take_queued(&mut st, &mut jobs, max_batch);
+            // Batch assembly starts once the first job is available; the
+            // span covers the drain plus the opportunistic wait window.
+            let _span = crate::obs::span!("serve.assembly");
+            let assembly_start = Instant::now();
+            take_queued(&mut st, &mut jobs, max_batch, &shard.stats);
             if max_batch > 1 && jobs.len() < max_batch {
-                let deadline = Instant::now() + max_wait;
+                let deadline = assembly_start + max_wait;
                 loop {
                     let now = Instant::now();
                     if now >= deadline || !st.open {
@@ -378,26 +412,35 @@ fn dispatcher_loop(
                         .wait_timeout(st, deadline - now)
                         .unwrap_or_else(|e| e.into_inner());
                     st = guard;
-                    take_queued(&mut st, &mut jobs, max_batch);
+                    take_queued(&mut st, &mut jobs, max_batch, &shard.stats);
                     if jobs.len() >= max_batch || timeout.timed_out() {
                         break;
                     }
                 }
             }
+            assembly_us = assembly_start.elapsed().as_micros() as u64;
         }
+        shard.stats.assembly_us.fetch_add(assembly_us, Ordering::Relaxed);
         shard.stats.batches.fetch_add(1, Ordering::Relaxed);
         shard.stats.jobs.fetch_add(jobs.len() as u64, Ordering::Relaxed);
         shard.stats.occupancy[occupancy_bucket(jobs.len())].fetch_add(1, Ordering::Relaxed);
-        process_batch(registry, jobs, exec);
+        let engine_start = Instant::now();
+        {
+            let _span = crate::obs::span!("serve.engine");
+            process_batch(registry, jobs, exec);
+        }
+        shard.stats.engine_us.record(engine_start.elapsed().as_micros() as u64);
     }
 }
 
 /// Move queued jobs into `jobs` until it holds `max_batch`, keeping the
-/// shard's cell meter in sync.
-fn take_queued(st: &mut ShardState, jobs: &mut Vec<Job>, max_batch: usize) {
+/// shard's cell meter in sync and recording each job's queue wait
+/// (enqueue → this drain) into the shard's histogram.
+fn take_queued(st: &mut ShardState, jobs: &mut Vec<Job>, max_batch: usize, stats: &ShardStats) {
     while jobs.len() < max_batch {
         let Some(job) = st.queue.pop_front() else { break };
         st.queued_cells = st.queued_cells.saturating_sub(request_cells(&job.request));
+        stats.queue_wait_us.record(job.enqueued.elapsed().as_micros() as u64);
         jobs.push(job);
     }
 }
@@ -783,7 +826,7 @@ mod tests {
         let mut jobs = Vec::new();
         for r in &requests {
             let (tx, rx) = mpsc::channel();
-            jobs.push(Job { request: r.clone(), resp: tx });
+            jobs.push(Job::new(r.clone(), tx));
             rxs.push(rx);
         }
         process_batch(&registry, jobs, ExecConfig::default());
@@ -814,7 +857,7 @@ mod tests {
         let (tx2, rx2) = mpsc::channel();
         process_batch(
             &registry,
-            vec![Job { request: good, resp: tx1 }, Job { request: bad, resp: tx2 }],
+            vec![Job::new(good, tx1), Job::new(bad, tx2)],
             ExecConfig::default(),
         );
         assert_eq!(rx1.recv().unwrap().unwrap(), expected);
@@ -830,7 +873,7 @@ mod tests {
             r.model = "missing".into();
         }
         let (tx, rx) = mpsc::channel();
-        process_batch(&registry, vec![Job { request: bad, resp: tx }], ExecConfig::default());
+        process_batch(&registry, vec![Job::new(bad, tx)], ExecConfig::default());
         let err = rx.recv().unwrap().unwrap_err();
         assert_eq!(err.status, 404);
         assert_eq!(err.code, "unknown_model");
@@ -923,7 +966,7 @@ mod tests {
         let (tx, _sentinel) = mpsc::channel();
         {
             let mut st = handle.inner.shards[0].lock();
-            st.queue.push_back(Job { request: sim(7), resp: tx });
+            st.queue.push_back(Job::new(sim(7), tx));
             st.queued_cells += request_cells(&sim(7));
         }
         // 5 queued cells > budget 1: the next submit sheds with 429.

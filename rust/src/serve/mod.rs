@@ -72,6 +72,31 @@
 //! simulator with heavy-tail request sizes, bursty arrivals, and a
 //! deliberate overload episode (p99 + shed-rate, gated by
 //! `sdegrad bench compare`). Artifacts land in `BENCH_serve.json`.
+//!
+//! ## `GET /metrics` fields
+//!
+//! Strict JSON, integers only (no floats anywhere in the body). Latency
+//! histograms are arrays of power-of-two bucket counts — index `i ≥ 1`
+//! holds values in `[2^(i-1), 2^i)` microseconds, index 0 holds exactly
+//! 0, trailing zero buckets are dropped (see [`crate::obs::hist`]).
+//!
+//! | field | meaning |
+//! |---|---|
+//! | `shards[].depth` | jobs currently queued on the shard (gauge) |
+//! | `shards[].queued_cells` | queued request cells — the admission meter (gauge) |
+//! | `shards[].submitted` | jobs admitted to the shard queue (counter) |
+//! | `shards[].shed` | jobs rejected 429 at admission (counter) |
+//! | `shards[].batches` | queue drains processed (counter) |
+//! | `shards[].jobs` | jobs answered through batches (counter) |
+//! | `shards[].occupancy` | drain-size histogram; bounds in `occupancy_le` |
+//! | `shards[].assembly_us` | total µs assembling batches (counter) |
+//! | `shards[].queue_wait_us` | per-request enqueue→drain wait histogram (µs) |
+//! | `shards[].engine_us` | per-drain engine-call time histogram (µs) |
+//! | `occupancy_le` | inclusive upper bounds for `occupancy` (`null` = ∞) |
+//! | `totals` | `submitted`/`shed`/`batches`/`jobs` summed over shards |
+//! | `cache` | response-cache `hits`/`misses`/`entries` |
+//! | `engine` | process-wide `bridge_calls`/`pool_workers`/`pool_spawned` |
+//! | `registry` | full [`crate::obs`] registry dump: `counters`, `gauges`, `histograms` |
 
 pub mod batcher;
 pub mod cache;

@@ -13,9 +13,13 @@
 //! unbounded work. Long `/v1/simulate` bodies stream back with
 //! `Transfer-Encoding: chunked` (same bytes, framed incrementally).
 //! `GET /metrics` reports per-shard queue counters, the batch-occupancy
-//! histogram, cache hit rates, and process-wide engine counters as
-//! strict JSON. Errors at every layer map to JSON error bodies with
-//! stable codes:
+//! histogram, per-shard queue-wait / engine-time latency histograms,
+//! cache hit rates, process-wide engine counters, and the whole
+//! [`crate::obs`] metrics registry as strict JSON (field table in the
+//! [`super`] module docs). The request lifecycle is traced with spans
+//! (`serve.parse` → `serve.assembly` → `serve.engine` →
+//! `serve.serialize`) when span collection is on. Errors at every layer
+//! map to JSON error bodies with stable codes:
 //!
 //! | status | code | trigger |
 //! |---|---|---|
@@ -305,10 +309,13 @@ fn handle_connection(
             Ok(None) => return, // client closed before sending a request
             Err(e) => (e.status, e.body(), false, true),
         };
-    if streamable && status == 200 && body.len() >= stream_threshold {
-        write_chunked_response(&mut stream, status, &body);
-    } else {
-        write_response(&mut stream, status, &body);
+    {
+        let _span = crate::obs::span!("serve.serialize");
+        if streamable && status == 200 && body.len() >= stream_threshold {
+            write_chunked_response(&mut stream, status, &body);
+        } else {
+            write_response(&mut stream, status, &body);
+        }
     }
     if unread_input {
         // An early error reply (e.g. 413) can leave request bytes unread;
@@ -437,10 +444,12 @@ fn route(
     }
 }
 
-/// The `GET /metrics` body: per-shard queue/batch counters, totals,
-/// cache hit statistics, and process-wide engine counters. Built by
+/// The `GET /metrics` body: per-shard queue/batch counters and latency
+/// histograms, totals, cache hit statistics, process-wide engine
+/// counters, and the full [`crate::obs`] metrics registry. Built by
 /// hand from integers only (no floats), so the output is strict JSON
-/// by construction and byte-stable for a given counter state.
+/// by construction and byte-stable for a given counter state. The
+/// field-by-field table lives in the [`super`] module docs.
 fn metrics_response(handle: &BatcherHandle, cache: Option<&Mutex<ResponseCache>>) -> Vec<u8> {
     let snaps = handle.snapshots();
     let mut out = String::with_capacity(256 + 160 * snaps.len());
@@ -460,7 +469,11 @@ fn metrics_response(handle: &BatcherHandle, cache: Option<&Mutex<ResponseCache>>
             }
             out.push_str(&c.to_string());
         }
-        out.push_str("]}");
+        out.push_str(&format!("],\"assembly_us\":{},\"queue_wait_us\":", s.assembly_us));
+        push_bucket_counts(&mut out, &s.queue_wait_us);
+        out.push_str(",\"engine_us\":");
+        push_bucket_counts(&mut out, &s.engine_us);
+        out.push('}');
     }
     // Bucket upper bounds so a scraper can label the histogram without
     // hardcoding them (the last bucket is open-ended).
@@ -496,12 +509,32 @@ fn metrics_response(handle: &BatcherHandle, cache: Option<&Mutex<ResponseCache>>
         ",\"cache\":{{\"hits\":{hits},\"misses\":{misses},\"entries\":{entries}}}"
     ));
     out.push_str(&format!(
-        ",\"engine\":{{\"bridge_calls\":{},\"pool_workers\":{},\"pool_spawned\":{}}}}}",
+        ",\"engine\":{{\"bridge_calls\":{},\"pool_workers\":{},\"pool_spawned\":{}}}",
         crate::metrics::counters::bridge_calls_total(),
         crate::runtime::worker_count(),
         crate::runtime::spawned_workers(),
     ));
+    // The whole metrics registry (counters/gauges/histograms from every
+    // subsystem — see [`crate::obs`]), as one nested object.
+    out.push_str(",\"registry\":");
+    out.push_str(&crate::obs::dump_json());
+    out.push('}');
     out.into_bytes()
+}
+
+/// Append histogram bucket counts as a JSON array, trailing zero buckets
+/// dropped (the power-of-two index→bound mapping is unchanged — see
+/// [`crate::obs::hist`]).
+fn push_bucket_counts(out: &mut String, counts: &[u64]) {
+    let len = counts.len() - counts.iter().rev().take_while(|&&c| c == 0).count();
+    out.push('[');
+    for (j, c) in counts[..len].iter().enumerate() {
+        if j > 0 {
+            out.push(',');
+        }
+        out.push_str(&c.to_string());
+    }
+    out.push(']');
 }
 
 /// Parse → validate → cache probe → sharded micro-batcher → cache fill.
@@ -512,11 +545,13 @@ fn answer_api(
     cache: Option<&Mutex<ResponseCache>>,
     handle: &BatcherHandle,
 ) -> std::result::Result<Vec<u8>, ApiError> {
+    let span_parse = crate::obs::span!("serve.parse");
     let req = protocol::parse_request(path, body)?;
     let entry = registry
         .get(req.model())
         .ok_or_else(|| ApiError::unknown_model(req.model()))?;
     protocol::validate_for_model(&req, entry.model.cfg.obs_dim)?;
+    drop(span_parse);
 
     let key =
         cache.map(|_| cache_key(req.endpoint(), entry.fingerprint, &req.canonical()));

@@ -276,6 +276,7 @@ impl Workspace {
             let hit = pool.iter().position(|w| w.f0.len() == n);
             hit.map(|i| pool.swap_remove(i))
         });
+        ws_counters().record(ws.is_some());
         let ws = match ws {
             Some(mut ws) => {
                 for buf in
@@ -295,6 +296,31 @@ impl Workspace {
 thread_local! {
     static WS_POOL: std::cell::RefCell<Vec<Workspace>> =
         const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Registry counters for [`Workspace`] recycling (one relaxed add per
+/// lease — a per-solve-call event, not per step).
+struct WsCounters {
+    recycled: crate::obs::Counter,
+    fresh: crate::obs::Counter,
+}
+
+impl WsCounters {
+    fn record(&self, hit: bool) {
+        if hit {
+            self.recycled.inc();
+        } else {
+            self.fresh.inc();
+        }
+    }
+}
+
+fn ws_counters() -> &'static WsCounters {
+    static COUNTERS: std::sync::OnceLock<WsCounters> = std::sync::OnceLock::new();
+    COUNTERS.get_or_init(|| WsCounters {
+        recycled: crate::obs::counter("solve.workspace_recycled"),
+        fresh: crate::obs::counter("solve.workspace_fresh"),
+    })
 }
 
 /// Workspaces kept per thread; excess drops fall back to the allocator.
@@ -420,6 +446,7 @@ pub(crate) fn batch_grid_core<S: BatchSdeFunc, B: BrownianMotion>(
     debug_assert_eq!(bm.dim(), sys.dim(), "batch_grid_core: Brownian dim mismatch");
     debug_assert_eq!(bm.batch(), sys.batch(), "batch_grid_core: Brownian batch mismatch");
 
+    let _span = crate::obs::span!("solve.batch.grid");
     let stepper = BatchStepper::new(method);
     let mut ws = Workspace::recycled(sys.dim(), sys.batch());
     let mut y = crate::runtime::arena::lease(n);
@@ -458,6 +485,7 @@ pub(crate) fn batch_grid_saving_core<S: BatchSdeFunc, B: BrownianMotion>(
     times: &[f64],
     bm: &mut BatchBrownian<B>,
 ) -> (Vec<f64>, SolveStats) {
+    let _span = crate::obs::span!("solve.batch.grid_saving");
     let n = sys.dim() * sys.batch();
     let mut traj = vec![0.0; times.len() * n];
     traj[..n].copy_from_slice(y0);

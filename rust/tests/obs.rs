@@ -1,0 +1,311 @@
+//! The observability layer's contract, end to end.
+//!
+//! The load-bearing pin: **instrumentation never moves a bit**. Spans
+//! and registry metrics are integer-only, so batched solves, checkpointed
+//! gradients, and ELBO training steps are bit-identical with span
+//! collection off (the default) and on. On top of that: the Chrome-trace
+//! exporter emits strict JSON (parsed back through the crate's own
+//! `metrics::json::parse_json`) whose begin/end events are well-nested
+//! per thread; registry counters are monotone under concurrent updates;
+//! and the power-of-two histogram bucket boundaries are pinned so
+//! exported bucket counts stay comparable across builds.
+//!
+//! Span collection is a process-wide flag, so the tests that toggle it
+//! serialize on a local mutex; none of them asserts exact event or
+//! counter totals (other engine calls in the process legitimately feed
+//! the same registry).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use sdegrad::api::{
+    solve_batch, Checkpointing, NoiseSpec, SdeProblem, SensAlg, SolveOptions, StepControl,
+};
+use sdegrad::latent::{elbo_step_batch, ElboConfig, LatentSdeConfig, LatentSdeModel};
+use sdegrad::metrics::json::{parse_json, JsonValue};
+use sdegrad::obs;
+use sdegrad::prng::PrngKey;
+use sdegrad::sde::problems::{sample_experiment_setup, Example1};
+use sdegrad::sde::ReplicatedSde;
+use sdegrad::solvers::Method;
+
+/// Serializes the tests that toggle the process-wide span flag or drain
+/// the global event sink.
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn obs_lock() -> std::sync::MutexGuard<'static, ()> {
+    OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn assert_same_bits(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+struct Workload {
+    solve_states: Vec<f64>,
+    dtheta: Vec<f64>,
+    dz0: Vec<f64>,
+    z_terminal: Vec<f64>,
+    elbo_loss: f64,
+    elbo_grad: Vec<f64>,
+}
+
+/// One pass over every instrumented layer: a batched solve (solver step
+/// loop + workspace recycling), a checkpointed virtual-tree gradient
+/// (forward / replay / backward spans, peak-tape and recompute gauges,
+/// bridge-call and tree-cache counters), and a batched ELBO step
+/// (encoder / posterior-solve / decoder / BPTT phases on the pool).
+fn run_workload() -> Workload {
+    let dim = 4;
+    let sde = ReplicatedSde::new(Example1, dim);
+    let key = PrngKey::from_seed(9100);
+    let (theta, x0) = sample_experiment_setup(key, dim, 2);
+    let prob = SdeProblem::new(&sde, &x0, (0.0, 1.0)).params(&theta);
+
+    let replicates = prob.replicates(PrngKey::from_seed(9101), 7);
+    let solved = solve_batch(&replicates, &SolveOptions::fixed(Method::MilsteinIto, 48));
+    let solve_states: Vec<f64> = solved.iter().flat_map(|s| s.states.iter().copied()).collect();
+
+    let g = SdeProblem::new(&sde, &x0, (0.0, 1.0))
+        .params(&theta)
+        .key(PrngKey::from_seed(9102))
+        .noise(NoiseSpec::VirtualTree { tol: 1e-8 })
+        .sensitivity_sum(
+            &SensAlg::Backprop {
+                method: Method::MilsteinIto,
+                checkpointing: Checkpointing::Sqrt,
+            },
+            StepControl::Steps(64),
+        )
+        .unwrap();
+
+    let model = LatentSdeModel::new(LatentSdeConfig {
+        obs_dim: 2,
+        latent_dim: 3,
+        context_dim: 2,
+        hidden: 8,
+        diff_hidden: 4,
+        enc_hidden: 6,
+        obs_noise_std: 0.1,
+        ..Default::default()
+    });
+    let params = model.init_params(PrngKey::from_seed(9103));
+    let times: Vec<f64> = (0..5).map(|k| 0.1 * k as f64).collect();
+    let n_seq = 3;
+    let mut obs_data = vec![0.0; n_seq * times.len() * 2];
+    PrngKey::from_seed(9104).fill_normal(0, &mut obs_data);
+    let rows: Vec<&[f64]> = obs_data.chunks(times.len() * 2).collect();
+    let keys: Vec<PrngKey> = (0..n_seq).map(|m| PrngKey::from_seed(9110 + m as u64)).collect();
+    let cfg = ElboConfig { substeps: 2, kl_weight: 0.4, ..Default::default() };
+    let out = elbo_step_batch(&model, &params, &times, &rows, &keys, &cfg, 2, 2);
+
+    Workload {
+        solve_states,
+        dtheta: g.dtheta,
+        dz0: g.dz0,
+        z_terminal: g.z_terminal,
+        elbo_loss: out.loss,
+        elbo_grad: out.grad,
+    }
+}
+
+/// Begin/end events must form a well-nested bracket sequence per thread
+/// id, with matching names — the property that makes the Chrome trace
+/// render as a clean flame graph.
+fn assert_well_nested(events: &[obs::Event]) {
+    let mut stacks: HashMap<u64, Vec<&'static str>> = HashMap::new();
+    for ev in events {
+        let stack = stacks.entry(ev.tid).or_default();
+        if ev.begin {
+            stack.push(ev.name);
+        } else {
+            let open = stack
+                .pop()
+                .unwrap_or_else(|| panic!("end `{}` without begin on tid {}", ev.name, ev.tid));
+            assert_eq!(open, ev.name, "mismatched nesting on tid {}", ev.tid);
+        }
+    }
+    for (tid, stack) in stacks {
+        assert!(stack.is_empty(), "unclosed spans on tid {tid}: {stack:?}");
+    }
+}
+
+/// THE determinism pin: solve states, checkpointed gradients, and ELBO
+/// losses/gradients are bit-identical with span collection off and on.
+#[test]
+fn tracing_on_and_off_is_bit_identical_across_every_layer() {
+    let _guard = obs_lock();
+    obs::set_enabled(false);
+    let off = run_workload();
+    obs::set_enabled(true);
+    let on = run_workload();
+    obs::set_enabled(false);
+    obs::clear_events();
+
+    assert_same_bits(&off.solve_states, &on.solve_states, "batched solve states");
+    assert_same_bits(&off.dtheta, &on.dtheta, "checkpointed dtheta");
+    assert_same_bits(&off.dz0, &on.dz0, "checkpointed dz0");
+    assert_same_bits(&off.z_terminal, &on.z_terminal, "checkpointed z_terminal");
+    assert_same_bits(&[off.elbo_loss], &[on.elbo_loss], "elbo loss");
+    assert_same_bits(&off.elbo_grad, &on.elbo_grad, "elbo gradient");
+}
+
+/// An enabled run produces spans from every instrumented layer, drains
+/// to a well-nested per-thread event stream, and exports Chrome
+/// trace-event JSON that parses under the crate's strict grammar with
+/// one trace event per drained span event.
+#[test]
+fn chrome_trace_is_strict_json_with_well_nested_spans() {
+    let _guard = obs_lock();
+    obs::set_enabled(true);
+    obs::clear_events();
+    let _ = run_workload();
+    obs::set_enabled(false);
+    let events = obs::drain_events();
+
+    assert!(!events.is_empty(), "an enabled run must record spans");
+    assert_well_nested(&events);
+    for prefix in ["solve.batch.", "ckpt.", "elbo."] {
+        assert!(
+            events.iter().any(|e| e.name.starts_with(prefix)),
+            "no `{prefix}*` span recorded; got {:?}",
+            events.iter().map(|e| e.name).collect::<std::collections::BTreeSet<_>>()
+        );
+    }
+
+    let trace = obs::export::chrome_trace_from(&events);
+    let doc = parse_json(&trace).expect("Chrome trace must be strict JSON");
+    let list = doc.get("traceEvents").expect("traceEvents key").as_array().expect("array");
+    assert_eq!(list.len(), events.len(), "one trace event per span event");
+    for (ev, json) in events.iter().zip(list) {
+        let ph = match json.get("ph") {
+            Some(JsonValue::Str(s)) => s.clone(),
+            other => panic!("ph must be a string, got {other:?}"),
+        };
+        assert_eq!(ph, if ev.begin { "B" } else { "E" });
+        assert_eq!(json.get("name"), Some(&JsonValue::Str(ev.name.to_string())));
+        assert_eq!(json.get("ts").and_then(|v| v.as_u64()), Some(ev.ts_us));
+        assert_eq!(json.get("tid").and_then(|v| v.as_u64()), Some(ev.tid));
+    }
+}
+
+/// The instrumented engines feed the always-on registry: the workload
+/// bumps the Brownian bridge-call counter (through the
+/// `metrics::counters` shim and the registry handle in lockstep) and
+/// publishes the checkpoint-schedule gauges.
+#[test]
+fn engine_runs_feed_the_registry() {
+    let _guard = obs_lock();
+    let before = obs::counter("brownian.bridge_calls").get();
+    let _ = run_workload();
+    let after = obs::counter("brownian.bridge_calls").get();
+    assert!(after > before, "virtual-tree gradient must draw bridges ({before} -> {after})");
+    assert_eq!(
+        after,
+        sdegrad::metrics::counters::bridge_calls_total(),
+        "the legacy shim and the registry counter are the same atomic"
+    );
+    let snap: HashMap<&'static str, obs::MetricValue> = obs::snapshot().into_iter().collect();
+    assert!(
+        matches!(snap.get("adjoint.peak_tape_bytes"), Some(obs::MetricValue::Gauge(v)) if *v > 0),
+        "checkpointed run must publish its peak tape gauge; got {:?}",
+        snap.get("adjoint.peak_tape_bytes")
+    );
+}
+
+/// Counters stay exact (no lost updates) under concurrent writers, and
+/// every handle for a name shares one atomic.
+#[test]
+fn registry_counters_are_monotone_under_concurrent_updates() {
+    let c = obs::counter("test.obs.concurrent");
+    let before = c.get();
+    let threads = 8;
+    let per_thread = 10_000u64;
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let c = c.clone();
+            s.spawn(move || {
+                for _ in 0..per_thread {
+                    c.inc();
+                }
+            });
+        }
+    });
+    assert_eq!(
+        obs::counter("test.obs.concurrent").get() - before,
+        threads as u64 * per_thread
+    );
+}
+
+/// Registering one name as two different metric kinds is a bug, caught
+/// loudly.
+#[test]
+#[should_panic(expected = "already registered with a different kind")]
+fn metric_kind_clash_panics() {
+    let _ = obs::counter("test.obs.kind_clash");
+    let _ = obs::gauge("test.obs.kind_clash");
+}
+
+/// The power-of-two bucket boundaries, pinned: bucket 0 holds exactly 0,
+/// bucket i holds [2^(i-1), 2^i), the top bucket is open-ended. Exported
+/// bucket counts (serve `/metrics`, `dump_json`) rely on this mapping
+/// staying fixed.
+#[test]
+fn histogram_bucket_boundaries_are_pinned() {
+    assert_eq!(obs::BUCKETS, 64);
+    for (value, bucket) in [
+        (0u64, 0usize),
+        (1, 1),
+        (2, 2),
+        (3, 2),
+        (4, 3),
+        (7, 3),
+        (8, 4),
+        (1023, 10),
+        (1024, 11),
+        (u64::MAX, 63),
+    ] {
+        assert_eq!(obs::bucket_index(value), bucket, "bucket_index({value})");
+    }
+    for i in 1..obs::BUCKETS {
+        assert_eq!(obs::bucket_lower_bound(i), 1u64 << (i - 1));
+        assert_eq!(obs::bucket_index(obs::bucket_lower_bound(i)), i);
+    }
+    let h = obs::Hist::new();
+    h.record(0);
+    h.record(1000);
+    h.record(1000);
+    let counts = h.counts();
+    assert_eq!((counts[0], counts[10], h.total()), (1, 2, 3));
+}
+
+/// `dump_json` (the `/metrics` `"registry"` payload) is strict JSON with
+/// the three kind maps, and reflects the live values.
+#[test]
+fn registry_dump_is_strict_json() {
+    obs::counter("test.obs.dump").add(3);
+    obs::gauge("test.obs.dump_gauge").set(17);
+    obs::hist("test.obs.dump_hist").record(5);
+    let doc = parse_json(&obs::dump_json()).expect("dump_json must be strict JSON");
+    let counter = doc
+        .get("counters")
+        .and_then(|c| c.get("test.obs.dump"))
+        .and_then(|v| v.as_u64())
+        .expect("counter present");
+    assert!(counter >= 3, "counter at least what we added, got {counter}");
+    assert_eq!(
+        doc.get("gauges").and_then(|g| g.get("test.obs.dump_gauge")).and_then(|v| v.as_u64()),
+        Some(17)
+    );
+    let buckets = doc
+        .get("histograms")
+        .and_then(|h| h.get("test.obs.dump_hist"))
+        .and_then(|v| v.as_array())
+        .expect("histogram present");
+    // 5 lands in bucket 3 ([4, 8)); trailing zeros are trimmed.
+    assert_eq!(buckets.len(), 4);
+    assert!(buckets[3].as_u64().unwrap() >= 1);
+}
